@@ -1,0 +1,37 @@
+//! Ablation study over the design choices DESIGN.md §5 calls out:
+//!
+//! * r-pooling strategy — the paper's conservative `max` vs the `mean` /
+//!   `median` variants it names as future work,
+//! * sampling distribution — the paper's norm-proportional p(i) (Eq. 6) vs
+//!   a uniform baseline (the ablation that motivates Eq. 6).
+//!
+//!     cargo run --release --example ablations
+
+use anyhow::Result;
+use mca::eval::tables::Pipeline;
+use mca::runtime::default_artifacts_dir;
+
+fn main() -> Result<()> {
+    let seeds: u32 = std::env::var("MCA_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(8);
+    let alpha: f64 = std::env::var("MCA_ALPHA").ok().and_then(|s| s.parse().ok()).unwrap_or(0.4);
+    let p = Pipeline::new(default_artifacts_dir());
+    let rows = p.ablations(seeds, alpha)?;
+
+    let mut text = format!(
+        "Ablations (bert_sim / sst2_sim, alpha = {alpha})\n\n| Variant | Accuracy | FLOPS reduction |\n|---|---|---|\n"
+    );
+    for (label, acc, red) in &rows {
+        text.push_str(&format!(
+            "| {label} | {:.2}±{:.2} | {:.2}×±{:.2} |\n",
+            100.0 * acc.mean,
+            100.0 * acc.ci95,
+            red.mean,
+            red.ci95
+        ));
+    }
+    println!("{text}");
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/ablations.md", &text)?;
+    eprintln!("[written to results/ablations.md]");
+    Ok(())
+}

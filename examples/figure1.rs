@@ -1,0 +1,42 @@
+//! Regenerates paper Figure 1: accuracy vs (relative) attention FLOPs for
+//! BERT(sim) and DistilBERT(sim), with and without MCA, in f32 and bf16
+//! (the quantized-weights axis of the paper's FP16 comparison).
+//!
+//!     cargo run --release --example figure1
+
+use anyhow::Result;
+use mca::eval::tables::Pipeline;
+use mca::report;
+use mca::runtime::default_artifacts_dir;
+
+fn main() -> Result<()> {
+    let seeds: u32 = std::env::var("MCA_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let p = Pipeline::new(default_artifacts_dir());
+    let alphas = [0.1, 0.2, 0.3, 0.4, 0.6, 0.8, 1.0];
+    let series = p.figure1(&["bert_sim", "distil_sim"], &alphas, seeds)?;
+
+    let named: Vec<(&str, Vec<(f64, f64)>)> =
+        series.iter().map(|(n, pts)| (n.as_str(), pts.clone())).collect();
+    let mut text = report::render_scatter(
+        "Figure 1: accuracy vs relative attention FLOPs (sst2_sim)",
+        "relative FLOPs (exact f32 = 1.0)",
+        "accuracy",
+        &named,
+        64,
+        20,
+    );
+    text.push_str("\npoints (relative_flops, accuracy):\n");
+    let mut csv = String::from("series,relative_flops,accuracy\n");
+    for (name, pts) in &series {
+        text.push_str(&format!("  {name}: {pts:?}\n"));
+        for (x, y) in pts {
+            csv.push_str(&format!("{name},{x:.4},{y:.4}\n"));
+        }
+    }
+    println!("{text}");
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/figure1.txt", &text)?;
+    std::fs::write("results/figure1.csv", &csv)?;
+    eprintln!("[written to results/figure1.{{txt,csv}}]");
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Regenerates paper Figure 2: model accuracy vs the attention error bound
+//! coefficient α for MCA-BERT(sim) and MCA-DistilBERT(sim), with 95% CIs.
+//!
+//!     cargo run --release --example figure2
+
+use anyhow::Result;
+use mca::eval::tables::Pipeline;
+use mca::report;
+use mca::runtime::default_artifacts_dir;
+
+fn main() -> Result<()> {
+    let seeds: u32 = std::env::var("MCA_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(8);
+    let p = Pipeline::new(default_artifacts_dir());
+    let alphas = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.8, 1.0];
+    let series = p.figure2(&["bert_sim", "distil_sim"], &alphas, seeds)?;
+
+    let mut csv = String::from("model,alpha,accuracy,ci95\n");
+    for (name, pts) in &series {
+        for (alpha, ci) in pts {
+            csv.push_str(&format!("{name},{alpha},{:.4},{:.4}\n", ci.mean, ci.ci95));
+        }
+    }
+    let named: Vec<(&str, Vec<(f64, f64)>)> = series
+        .iter()
+        .map(|(n, pts)| (n.as_str(), pts.iter().map(|&(a, ci)| (a, ci.mean)).collect()))
+        .collect();
+    let plot = report::render_scatter(
+        "Figure 2: accuracy vs alpha (sst2_sim), 95% CI in CSV",
+        "alpha",
+        "accuracy",
+        &named,
+        64,
+        16,
+    );
+    println!("{plot}\n{csv}");
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/figure2.txt", &plot)?;
+    std::fs::write("results/figure2.csv", &csv)?;
+    eprintln!("[written to results/figure2.{{txt,csv}}]");
+    Ok(())
+}

@@ -1,0 +1,262 @@
+"""AOT compiler: lowers every model variant to HLO *text* + manifest.json.
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged). The Rust
+runtime loads the HLO text with ``HloModuleProto::from_text_file`` and
+compiles it on the PJRT CPU client — Python is never on the request path.
+
+HLO text (NOT ``lowered.compile()`` / proto ``.serialize()``) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_structs(cfg: M.ModelConfig):
+    return [_sds(s, jnp.float32) for _, s in M.param_spec(cfg)]
+
+
+# ---------------------------------------------------------------------------
+# Artifact builders
+# ---------------------------------------------------------------------------
+
+
+def build_forward(cfg: M.ModelConfig, batch: int, seq: int, **kw):
+    """Forward artifact: inputs = [*params, ids, alpha, seed]."""
+
+    def fn(flat_params, ids, alpha, seed):
+        return M.forward(flat_params, ids, alpha, seed, cfg=cfg, **kw)
+
+    args = (
+        _param_structs(cfg),
+        _sds((batch, seq), jnp.int32),
+        _sds((), jnp.float32),
+        _sds((), jnp.uint32),
+    )
+    return jax.jit(fn, keep_unused=True).lower(*args)
+
+
+def build_train(cfg: M.ModelConfig, batch: int, seq: int, task: str):
+    """Train-step artifact: inputs = [*params, *m, *v, step, ids, labels, lr];
+    outputs = [*params', *m', *v', step', loss]."""
+
+    label_dtype = jnp.int32 if task == "cls" else jnp.float32
+
+    def fn(flat_params, m, v, step, ids, labels, lr):
+        return M.train_step(flat_params, m, v, step, ids, labels, lr, cfg=cfg, task=task)
+
+    ps = _param_structs(cfg)
+    args = (
+        ps,
+        ps,
+        ps,
+        _sds((), jnp.float32),
+        _sds((batch, seq), jnp.int32),
+        _sds((batch,), label_dtype),
+        _sds((), jnp.float32),
+    )
+    return jax.jit(fn, keep_unused=True).lower(*args)
+
+
+# ---------------------------------------------------------------------------
+# Variant inventory — every artifact the experiments need (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+
+def variant_inventory() -> List[Dict[str, Any]]:
+    out: List[Dict[str, Any]] = []
+
+    def fwd(model, batch, seq, *, mode, kernel="jnp", r_strategy="max",
+            p_strategy="norm", compute_dtype="f32", tag=None):
+        name = tag or f"{model}_fwd_{mode}"
+        if compute_dtype != "f32":
+            name += f"_{compute_dtype}"
+        if kernel != "jnp":
+            name += f"_{kernel}"
+        if r_strategy != "max":
+            name += f"_{r_strategy}"
+        if p_strategy != "norm":
+            name += "_punif"
+        name += f"_b{batch}"
+        out.append(dict(
+            name=name, kind="forward", model=model, batch=batch, seq=seq,
+            mode=mode, kernel=kernel, r_strategy=r_strategy,
+            p_strategy=p_strategy, compute_dtype=compute_dtype,
+        ))
+
+    def train(model, batch, seq, task):
+        out.append(dict(
+            name=f"{model}_train_{task}_b{batch}", kind=f"train_{task}",
+            model=model, batch=batch, seq=seq, mode="exact", kernel="jnp",
+            r_strategy="max", p_strategy="norm", compute_dtype="f32",
+        ))
+
+    for model in ("bert_sim", "distil_sim"):
+        train(model, 32, 64, "cls")
+        train(model, 32, 64, "reg")
+        # Evaluation batch (Tables 1-2, Figures 1-2)
+        fwd(model, 32, 64, mode="exact")
+        fwd(model, 32, 64, mode="mca")
+        # bf16 "quantized" variants (Figure 1)
+        fwd(model, 32, 64, mode="exact", compute_dtype="bf16")
+        fwd(model, 32, 64, mode="mca", compute_dtype="bf16")
+        # Serving shapes (coordinator batch buckets)
+        fwd(model, 1, 64, mode="exact")
+        fwd(model, 1, 64, mode="mca")
+        fwd(model, 8, 64, mode="mca")
+
+    # Ablations on bert_sim: r-pooling strategy + uniform sampling probs
+    fwd("bert_sim", 32, 64, mode="mca", r_strategy="mean")
+    fwd("bert_sim", 32, 64, mode="mca", r_strategy="median")
+    fwd("bert_sim", 32, 64, mode="mca", p_strategy="uniform")
+    # Pallas-kernel variants (L1 on the request path; small batch — the
+    # interpret-mode interpreter is the CPU-side cost, see DESIGN.md §9)
+    fwd("bert_sim", 4, 64, mode="mca", kernel="pallas")
+    fwd("bert_sim", 4, 64, mode="exact", kernel="pallas")
+
+    # Longformer substrate (Table 3): windowed attention, longer sequences
+    train("longformer_sim", 16, 256, "cls")
+    fwd("longformer_sim", 16, 256, mode="exact")
+    fwd("longformer_sim", 16, 256, mode="mca")
+
+    return out
+
+
+def lower_variant(v: Dict[str, Any]):
+    cfg = M.CONFIGS[v["model"]]
+    if v["kind"] == "forward":
+        return build_forward(
+            cfg, v["batch"], v["seq"], mode=v["mode"], kernel=v["kernel"],
+            r_strategy=v["r_strategy"],
+            p_strategy={"norm": "norm", "uniform": "uniform"}[v["p_strategy"]],
+            compute_dtype=v["compute_dtype"],
+        )
+    task = v["kind"].split("_", 1)[1]
+    return build_train(cfg, v["batch"], v["seq"], task)
+
+
+# ---------------------------------------------------------------------------
+# Manifest
+# ---------------------------------------------------------------------------
+
+
+def manifest_entry(v: Dict[str, Any], hlo_file: str, hlo_text: str) -> Dict[str, Any]:
+    cfg = M.CONFIGS[v["model"]]
+    pspec = [[n, list(s)] for n, s in M.param_spec(cfg)]
+    npar = len(pspec)
+    if v["kind"] == "forward":
+        inputs = (
+            [["param", n, list(s), "f32"] for n, s in M.param_spec(cfg)]
+            + [
+                ["ids", "ids", [v["batch"], v["seq"]], "i32"],
+                ["alpha", "alpha", [], "f32"],
+                ["seed", "seed", [], "u32"],
+            ]
+        )
+        outputs = [
+            ["logits", [v["batch"], cfg.n_classes], "f32"],
+            ["r_sum", [v["batch"]], "f32"],
+            ["n_eff", [v["batch"]], "f32"],
+        ]
+    else:
+        label_dtype = "i32" if v["kind"] == "train_cls" else "f32"
+        inputs = (
+            [["param", n, list(s), "f32"] for n, s in M.param_spec(cfg)]
+            + [["m", n, list(s), "f32"] for n, s in M.param_spec(cfg)]
+            + [["v", n, list(s), "f32"] for n, s in M.param_spec(cfg)]
+            + [
+                ["step", "step", [], "f32"],
+                ["ids", "ids", [v["batch"], v["seq"]], "i32"],
+                ["labels", "labels", [v["batch"]], label_dtype],
+                ["lr", "lr", [], "f32"],
+            ]
+        )
+        outputs = (
+            [["param", list(s), "f32"] for _, s in M.param_spec(cfg)]
+            + [["m", list(s), "f32"] for _, s in M.param_spec(cfg)]
+            + [["v", list(s), "f32"] for _, s in M.param_spec(cfg)]
+            + [["step", [], "f32"], ["loss", [], "f32"]]
+        )
+    return dict(
+        v,
+        file=hlo_file,
+        sha256=hashlib.sha256(hlo_text.encode()).hexdigest()[:16],
+        n_params=npar,
+        inputs=inputs,
+        outputs=outputs,
+        config=dict(
+            vocab=cfg.vocab, d_model=cfg.d_model, n_heads=cfg.n_heads,
+            n_layers=cfg.n_layers, d_ff=cfg.d_ff, max_len=cfg.max_len,
+            n_classes=cfg.n_classes, window=cfg.window,
+        ),
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on variant names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = []
+    inventory = variant_inventory()
+    for v in inventory:
+        if args.only and args.only not in v["name"]:
+            continue
+        path = os.path.join(args.out_dir, v["name"] + ".hlo.txt")
+        print(f"[aot] lowering {v['name']} ...", flush=True)
+        text = to_hlo_text(lower_variant(v))
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(manifest_entry(v, v["name"] + ".hlo.txt", text))
+        print(f"[aot]   wrote {path} ({len(text)/1e6:.2f} MB)", flush=True)
+
+    manifest = dict(
+        format=1,
+        models={
+            name: dict(
+                vocab=c.vocab, d_model=c.d_model, n_heads=c.n_heads,
+                n_layers=c.n_layers, d_ff=c.d_ff, max_len=c.max_len,
+                n_classes=c.n_classes, window=c.window,
+                param_spec=[[n, list(s)] for n, s in M.param_spec(c)],
+            )
+            for name, c in M.CONFIGS.items()
+        },
+        artifacts=entries,
+        special_tokens=dict(pad=M.PAD_ID, cls=M.CLS_ID, sep=M.SEP_ID, unk=M.UNK_ID),
+    )
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {mpath} with {len(entries)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Golden-output generator: runs the jitted L2 functions with deterministic
+inputs and dumps (inputs, outputs) to a simple binary format the Rust
+integration tests replay through the AOT artifacts.
+
+This is the cross-language correctness bridge: if `rust/tests` executes the
+HLO artifact with these inputs and reproduces these outputs bit-close, the
+whole Python→HLO-text→PJRT-from-Rust path is verified.
+
+Format (little-endian):
+  magic   b"MCAG"
+  u32     tensor count T
+  T times:
+    u8    dtype (0=f32, 1=i32, 2=u32)
+    u8    rank
+    u32*rank dims
+    bytes row-major data
+Tensors are stored inputs-first then outputs, in executable argument order.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import struct
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+DTYPES = {np.dtype("float32"): 0, np.dtype("int32"): 1, np.dtype("uint32"): 2}
+
+
+def write_golden(path: str, tensors: List[np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(b"MCAG")
+        f.write(struct.pack("<I", len(tensors)))
+        for t in tensors:
+            # NB: np.ascontiguousarray would promote 0-d scalars to 1-d;
+            # asarray preserves rank 0 (the manifest's scalar shape []).
+            t = np.asarray(t)
+            if not t.flags["C_CONTIGUOUS"]:
+                t = np.ascontiguousarray(t)
+            f.write(struct.pack("<BB", DTYPES[t.dtype], t.ndim))
+            for d in t.shape:
+                f.write(struct.pack("<I", d))
+            f.write(t.tobytes())
+
+
+def _flatten(x) -> List[np.ndarray]:
+    return [np.asarray(a) for a in jax.tree_util.tree_leaves(x)]
+
+
+def golden_forward(cfg: M.ModelConfig, batch: int, seq: int, **kw):
+    params = M.init_params(cfg, jax.random.PRNGKey(1234))
+    rng = np.random.default_rng(99)
+    ids = np.zeros((batch, seq), np.int32)
+    for b in range(batch):
+        ln = int(rng.integers(3, seq))
+        ids[b, 0] = M.CLS_ID
+        ids[b, 1 : ln - 1] = rng.integers(M.FIRST_WORD_ID, cfg.vocab, ln - 2)
+        ids[b, ln - 1] = M.SEP_ID
+    alpha, seed = np.float32(0.3), np.uint32(77)
+    out = M.forward(
+        params, jnp.asarray(ids), jnp.float32(alpha), jnp.uint32(seed), cfg=cfg, **kw
+    )
+    inputs = _flatten(params) + [ids, alpha, seed]
+    return inputs + _flatten(out)
+
+
+def golden_train(cfg: M.ModelConfig, batch: int, seq: int, task: str):
+    params = M.init_params(cfg, jax.random.PRNGKey(1234))
+    zeros = [jnp.zeros_like(w) for w in params]
+    rng = np.random.default_rng(7)
+    ids = np.zeros((batch, seq), np.int32)
+    for b in range(batch):
+        ln = int(rng.integers(3, seq))
+        ids[b, 0] = M.CLS_ID
+        ids[b, 1 : ln - 1] = rng.integers(M.FIRST_WORD_ID, cfg.vocab, ln - 2)
+        ids[b, ln - 1] = M.SEP_ID
+    if task == "cls":
+        labels = rng.integers(0, 2, batch).astype(np.int32)
+    else:
+        labels = rng.normal(size=batch).astype(np.float32)
+    step, lr = np.float32(0.0), np.float32(1e-3)
+    out = M.train_step(
+        params, zeros, zeros, jnp.float32(step), jnp.asarray(ids),
+        jnp.asarray(labels), jnp.float32(lr), cfg=cfg, task=task,
+    )
+    inputs = (
+        _flatten(params) + _flatten(zeros) + _flatten(zeros)
+        + [step, ids, labels, lr]
+    )
+    return inputs + _flatten(out)
+
+
+GOLDENS = [
+    ("bert_sim_fwd_exact_b1", lambda: golden_forward(M.BERT_SIM, 1, 64, mode="exact")),
+    ("bert_sim_fwd_mca_b1", lambda: golden_forward(M.BERT_SIM, 1, 64, mode="mca")),
+    (
+        "bert_sim_fwd_mca_pallas_b4",
+        lambda: golden_forward(M.BERT_SIM, 4, 64, mode="mca", kernel="pallas"),
+    ),
+    (
+        "distil_sim_fwd_mca_b1",
+        lambda: golden_forward(M.DISTIL_SIM, 1, 64, mode="mca"),
+    ),
+    (
+        "longformer_sim_fwd_mca_b16",
+        lambda: golden_forward(M.LONGFORMER_SIM, 16, 256, mode="mca"),
+    ),
+    (
+        "bert_sim_train_cls_b32",
+        lambda: golden_train(M.BERT_SIM, 32, 64, "cls"),
+    ),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts/golden")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, fn in GOLDENS:
+        path = os.path.join(args.out_dir, name + ".golden")
+        print(f"[golden] {name} ...", flush=True)
+        write_golden(path, fn())
+        print(f"[golden]   wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Layer-1 Pallas kernels for Monte-Carlo Attention.
+
+Two kernels cover the attention hot path:
+
+* ``mca_encode``         — the paper's contribution: the shared-pool
+                           masked-prefix sampled encoding ``(Xg * S) @ Wg``
+                           (see kernels/ref.py::mca_encode_shared for the
+                           math). This is the matmul the CUDA kernel of the
+                           paper implements; here it is tiled for the TPU
+                           MXU with the dynamic per-token sample count
+                           folded into the *mask operand* instead of control
+                           flow (DESIGN.md §Hardware-Adaptation).
+* ``attention_probs``    — scores + bias + softmax, one (batch, head) row
+                           block at a time (the softmax row must be resident
+                           in VMEM, so the block spans the full key axis).
+
+Both are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret mode lowers the kernel body to plain HLO
+so the same artifact runs everywhere. Real-TPU tiling estimates live in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_tile(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target (tiles must divide the
+    array exactly; shapes in this repo are powers of two so this finds the
+    natural 2^k tile)."""
+    t = min(dim, target)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+# ---------------------------------------------------------------------------
+# MCA sampled-encoding kernel
+# ---------------------------------------------------------------------------
+
+
+def _mca_encode_kernel(xg_ref, scale_ref, wg_ref, o_ref):
+    """One (n_tile, d_tile) output block: (Xg*S)[n_tile, :] @ Wg[:, d_tile].
+
+    The full contraction axis S is resident in VMEM: the sampled weight
+    slice Wg is shared by *every* token tile (the whole point of the shared
+    sample pool — one HBM→VMEM load per layer), and the mask/scale operand
+    carries the per-token prefix length r_i, so there is no data-dependent
+    control flow on the MXU.
+    """
+    x = xg_ref[...] * scale_ref[...]
+    o_ref[...] = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+
+
+def mca_encode(
+    xg: jax.Array,
+    scale: jax.Array,
+    wg: jax.Array,
+    *,
+    n_tile: int = 32,
+    d_tile: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    """Pallas entry point: xg (B, n, S) * scale (B, n, S) @ wg (S, d_out).
+
+    Grid: (B, n/n_tile, d_out/d_tile); contraction axis S is un-tiled (it
+    equals d <= 128 in every model config here, comfortably VMEM-resident;
+    see DESIGN.md §10 for the footprint arithmetic).
+    """
+    b, n, s = xg.shape
+    s2, d_out = wg.shape
+    assert s == s2, (s, s2)
+    nt = _pick_tile(n, n_tile)
+    dt = _pick_tile(d_out, d_tile)
+
+    return pl.pallas_call(
+        _mca_encode_kernel,
+        grid=(b, n // nt, d_out // dt),
+        in_specs=[
+            pl.BlockSpec((1, nt, s), lambda ib, in_, id_: (ib, in_, 0)),
+            pl.BlockSpec((1, nt, s), lambda ib, in_, id_: (ib, in_, 0)),
+            pl.BlockSpec((s, dt), lambda ib, in_, id_: (0, id_)),
+        ],
+        out_specs=pl.BlockSpec((1, nt, dt), lambda ib, in_, id_: (ib, in_, id_)),
+        out_shape=jax.ShapeDtypeStruct((b, n, d_out), jnp.float32),
+        interpret=interpret,
+    )(xg, scale, wg)
+
+
+def mca_encode_jnp(xg: jax.Array, scale: jax.Array, wg: jax.Array) -> jax.Array:
+    """Pure-XLA fallback of ``mca_encode`` (same math, no Pallas). Model
+    variants can select either; tests assert they agree bit-for-bit-ish."""
+    return (xg * scale) @ wg
+
+
+# ---------------------------------------------------------------------------
+# Attention-probability kernel (scores + bias + softmax)
+# ---------------------------------------------------------------------------
+
+
+def _attention_probs_kernel(q_ref, k_ref, bias_ref, o_ref, *, inv_sqrt_dh: float):
+    """One (q_tile, n) row block of softmax(q k^T * inv_sqrt_dh + bias).
+
+    The key axis is un-tiled because the softmax normalizer needs the whole
+    row; q is tiled so arbitrarily long sequences stream through VMEM.
+    """
+    q = q_ref[0, 0]  # (q_tile, dh)
+    k = k_ref[0, 0]  # (n, dh)
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * inv_sqrt_dh
+    scores = scores + bias_ref[0, 0]
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    o_ref[0, 0] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def attention_probs(
+    q: jax.Array,
+    k: jax.Array,
+    bias: jax.Array,
+    *,
+    q_tile: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    """Pallas softmax attention probabilities.
+
+    q, k: (B, H, n, dh); bias: (B, 1, n, n) additive mask (-1e9 for
+    disallowed key positions — padding and, for the Longformer variant,
+    out-of-window). Returns (B, H, n, n).
+    """
+    b, h, n, dh = q.shape
+    qt = _pick_tile(n, q_tile)
+    inv = 1.0 / float(dh) ** 0.5
+    # The model passes a broadcastable bias (e.g. (B,1,1,n) for pure padding
+    # masks); BlockSpecs index concrete shapes, so materialize it.
+    bias = jnp.broadcast_to(bias, (b, 1, n, n))
+
+    return pl.pallas_call(
+        functools.partial(_attention_probs_kernel, inv_sqrt_dh=inv),
+        grid=(b, h, n // qt),
+        in_specs=[
+            pl.BlockSpec((1, 1, qt, dh), lambda ib, ih, iq: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, n, dh), lambda ib, ih, iq: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, qt, n), lambda ib, ih, iq: (ib, 0, iq, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qt, n), lambda ib, ih, iq: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, n, n), jnp.float32),
+        interpret=interpret,
+    )(q, k, bias)
+
+
+def attention_probs_jnp(q: jax.Array, k: jax.Array, bias: jax.Array) -> jax.Array:
+    """Pure-XLA fallback of ``attention_probs``."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(dh))
+    return jax.nn.softmax(scores + bias, axis=-1)

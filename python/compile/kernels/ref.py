@@ -1,0 +1,231 @@
+"""Pure-jnp reference oracles for Monte-Carlo Attention (MCA).
+
+These are the correctness ground truth for both the Pallas kernels
+(python/tests/test_kernel.py checks kernel == oracle) and the Rust host
+estimator (rust/src/mca/ re-implements the same math and is cross-checked
+against artifacts produced from these functions).
+
+Paper: "Fast Monte-Carlo Approximation of the Attention Mechanism",
+Kim & Ko, AAAI 2022. Equation references below follow the paper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Sampling distribution (Eq. 6)
+# ---------------------------------------------------------------------------
+
+
+def sampling_probs(w: jax.Array) -> jax.Array:
+    """Input-independent sampling distribution p(i) = ||W[i]||^2 / ||W||_F^2.
+
+    ``w`` is the (d, d_out) encoding weight matrix; p is over its *rows*
+    (the contraction dimension of X @ W). Computed once per weight matrix
+    and cached in the model artifact — this is the paper's key deviation
+    from the DKM-optimal distribution (Eq. 4), which needs the input X.
+    """
+    row_sq = jnp.sum(w * w, axis=-1)
+    total = jnp.sum(row_sq)
+    # Guard the degenerate all-zero matrix: fall back to uniform.
+    p = jnp.where(total > 0.0, row_sq / jnp.maximum(total, 1e-30), 1.0 / w.shape[0])
+    return p
+
+
+def sampling_probs_uniform(w: jax.Array) -> jax.Array:
+    """Uniform ablation baseline for p(i) (used by the ablation study)."""
+    d = w.shape[0]
+    return jnp.full((d,), 1.0 / d, dtype=w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sample-count rule (Eq. 9)
+# ---------------------------------------------------------------------------
+
+
+def token_importance(attn: jax.Array, query_mask: jax.Array) -> jax.Array:
+    """max_j A[j, i] per key-token i — the paper's conservative importance.
+
+    ``attn``: (..., heads, n, n) softmax attention (rows = queries sum to 1).
+    ``query_mask``: (..., n) 1.0 for real tokens, 0.0 for padding. Padded
+    *query* rows are excluded from the max (their attention is meaningless);
+    padded *key* columns end up with importance 0 and get the minimum r.
+    """
+    masked = attn * query_mask[..., None, :, None]
+    # max over heads and over query rows -> (..., n) per key token.
+    return jnp.max(masked, axis=(-3, -2))
+
+
+def sample_counts(
+    attn: jax.Array,
+    query_mask: jax.Array,
+    alpha: jax.Array,
+    d: int,
+    strategy: str = "max",
+) -> jax.Array:
+    """Per-token sample counts r_i (Eq. 9): sqrt(r_i) = n_eff * imp_i / alpha.
+
+    Clamped to [1, d]; padded tokens are forced to r_i = 1 (they are fully
+    masked out of attention anyway, so one sample is the cheapest no-op).
+
+    ``strategy`` selects how the per-token importance is pooled from the
+    attention column: "max" is the paper's rule; "mean" and "median" are the
+    more aggressive variants the paper names as future work (ablations).
+    """
+    if strategy == "max":
+        imp = token_importance(attn, query_mask)
+    elif strategy == "mean":
+        masked = attn * query_mask[..., None, :, None]
+        n_eff_q = jnp.maximum(jnp.sum(query_mask, axis=-1), 1.0)
+        imp = jnp.max(jnp.sum(masked, axis=-2) / n_eff_q[..., None, None], axis=-2)
+    elif strategy == "median":
+        masked = attn * query_mask[..., None, :, None]
+        imp = jnp.max(jnp.median(masked, axis=-2), axis=-2)
+    else:
+        raise ValueError(f"unknown r-strategy: {strategy}")
+
+    n_eff = jnp.sum(query_mask, axis=-1, keepdims=True)  # (..., 1)
+    sqrt_r = n_eff * imp / alpha
+    r = jnp.square(sqrt_r)
+    r = jnp.clip(jnp.ceil(r), 1.0, float(d))
+    # Padding keys: force to the minimum.
+    r = jnp.where(query_mask > 0.0, r, 1.0)
+    return r.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# DKM estimator (Eq. 2/5) — per-token independent sampling (the literal paper
+# formulation, used as the statistical oracle)
+# ---------------------------------------------------------------------------
+
+
+def dkm_encode_token(
+    key: jax.Array, x: jax.Array, w: jax.Array, p: jax.Array, r: int
+) -> jax.Array:
+    """Approximate x @ w (x: (d,), w: (d, d_out)) with r i.i.d. samples ~ p.
+
+    This is Eq. 5 for a single token with its own index sequence s_j —
+    statistically exact but O(tokens) PRNG streams; the production kernel
+    uses the shared-pool form below.
+    """
+    s = jax.random.categorical(key, jnp.log(p), shape=(r,))
+    scale = x[s] / (r * p[s])  # (r,)
+    return scale @ w[s]  # (d_out,)
+
+
+# ---------------------------------------------------------------------------
+# Shared-pool masked-prefix estimator — what the Pallas kernel computes
+# ---------------------------------------------------------------------------
+
+
+def draw_pool(key: jax.Array, p: jax.Array, pool_size: int) -> jax.Array:
+    """Draw the shared sample pool s[0..S) i.i.d. ~ p (with replacement)."""
+    return jax.random.categorical(key, jnp.log(jnp.maximum(p, 1e-30)), shape=(pool_size,))
+
+
+def mca_scale(pool: jax.Array, p: jax.Array, r: jax.Array, pool_size: int) -> jax.Array:
+    """Mask/scale matrix for the shared-pool estimator.
+
+    ``pool``: (S,) sampled indices; ``r``: (..., n) per-token counts.
+    Returns (..., n, S) with entry [i, k] = 1[k < r_i] / (r_i * p(s_k)).
+    Token i uses the *prefix* s[0..r_i) of the shared pool, so each token's
+    estimator is still an i.i.d. r_i-sample DKM estimator (unbiased,
+    Lemma 1 variance scaling) — tokens are merely correlated with each
+    other, which affects no per-token bound in the paper.
+    """
+    k = jnp.arange(pool_size)
+    mask = (k[None, :] < r[..., :, None]).astype(jnp.float32)  # (..., n, S)
+    inv = 1.0 / (r[..., :, None].astype(jnp.float32) * p[pool][None, :])
+    return mask * inv
+
+
+def mca_encode_shared(
+    key: jax.Array,
+    x: jax.Array,
+    w: jax.Array,
+    r: jax.Array,
+    p: jax.Array | None = None,
+    pool_size: int | None = None,
+    exact_fallback: bool = True,
+) -> jax.Array:
+    """Shared-pool MCA approximation of x @ w.
+
+    x: (..., n, d), w: (d, d_out), r: (..., n) -> (..., n, d_out).
+
+    ``exact_fallback``: tokens whose budget saturates (r_i >= d) are computed
+    *exactly*. Sampling d indices with replacement costs the same FLOPs as
+    the exact product but keeps residual variance, so any real
+    implementation (the paper's CUDA kernel included) switches to the plain
+    row product there — this is also what makes the Theorem 2 error bound
+    vanish as alpha -> 0. Set False to study the raw estimator.
+    """
+    if p is None:
+        p = sampling_probs(w)
+    if pool_size is None:
+        pool_size = w.shape[0]
+    d = w.shape[0]
+    pool = draw_pool(key, p, pool_size)
+    scale = mca_scale(pool, p, r, pool_size)
+    xg = jnp.take(x, pool, axis=-1)  # (..., n, S)
+    wg = jnp.take(w, pool, axis=0)  # (S, d_out)
+    est = (xg * scale) @ wg
+    if not exact_fallback:
+        return est
+    exact = x @ w
+    return jnp.where((r >= d)[..., None], exact, est)
+
+
+# ---------------------------------------------------------------------------
+# Exact attention oracle
+# ---------------------------------------------------------------------------
+
+
+def exact_attention_probs(
+    q: jax.Array, k: jax.Array, key_mask: jax.Array, window: int | None = None
+) -> jax.Array:
+    """softmax(q k^T / sqrt(dh)) with padding (and optional sliding-window +
+    global-CLS sparsity — the Longformer pattern of Table 3).
+
+    q, k: (..., heads, n, dh); key_mask: (..., n). Returns (..., heads, n, n).
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("...hqd,...hkd->...hqk", q, k) / jnp.sqrt(float(dh))
+    neg = jnp.asarray(-1e9, scores.dtype)
+    bias = jnp.where(key_mask[..., None, None, :] > 0.0, 0.0, neg)
+    if window is not None:
+        n = q.shape[-2]
+        idx = jnp.arange(n)
+        band = jnp.abs(idx[:, None] - idx[None, :]) <= window
+        # Global attention for the CLS token (position 0): its row and
+        # column are always visible, as in Longformer's global pattern.
+        glob = (idx[:, None] == 0) | (idx[None, :] == 0)
+        allowed = band | glob
+        bias = bias + jnp.where(allowed[None, :, :], 0.0, neg)
+    return jax.nn.softmax(scores + bias, axis=-1)
+
+
+def exact_encode(x: jax.Array, w: jax.Array) -> jax.Array:
+    """The operation MCA approximates: H = X W."""
+    return x @ w
+
+
+# ---------------------------------------------------------------------------
+# Theoretical bounds (Lemma 1 / Theorem 2) — used by statistical tests
+# ---------------------------------------------------------------------------
+
+
+def lemma1_bound(x_row: jax.Array, w: jax.Array, r: jax.Array) -> jax.Array:
+    """E||H[i] - X[i]W|| <= ||X[i]||_2 ||W||_F / sqrt(r_i)."""
+    return (
+        jnp.linalg.norm(x_row, axis=-1)
+        * jnp.linalg.norm(w)
+        / jnp.sqrt(r.astype(jnp.float32))
+    )
+
+
+def theorem2_bound(x: jax.Array, w: jax.Array, alpha: float) -> jax.Array:
+    """E||Y~[i] - Y[i]|| <= alpha * beta * ||W||_F, beta = mean ||X[i]||_2."""
+    beta = jnp.mean(jnp.linalg.norm(x, axis=-1))
+    return alpha * beta * jnp.linalg.norm(w)

@@ -1,0 +1,337 @@
+"""Layer-2 JAX model: a BERT-style transformer encoder with pluggable
+attention modes, the training step (in-graph Adam), and the flat parameter
+layout shared with the Rust runtime.
+
+Everything here is *build-path only*: `aot.py` lowers these functions to
+HLO text once, and the Rust coordinator drives the compiled executables.
+
+Attention modes
+---------------
+* ``exact``   — vanilla softmax attention (the baseline of every table).
+* ``mca``     — Monte-Carlo Attention: the value encoding ``Xn @ Wv`` is
+                replaced by the shared-pool sampled estimator with
+                per-token sample counts r_i derived from the attention
+                matrix (paper Eq. 5/6/9). The attention *scores* are exact;
+                MCA approximates the encoding step, which dominates FLOPs
+                when d >= n (paper §Background).
+* ``window``  — Longformer-style sliding-window + global-CLS attention
+                (Table 3 substrate); composes with ``mca`` as
+                ``window+mca``.
+
+Model configs (scaled-down substitutes, DESIGN.md §2)
+-----------------------------------------------------
+* ``bert_sim``       d=128, 4 layers, 4 heads, n<=64   (BERT_BASE stand-in)
+* ``distil_sim``     d=128, 2 layers, 4 heads, n<=64   (DistilBERT: ½ depth)
+* ``longformer_sim`` d=128, 4 layers, 4 heads, n<=256, w=32, global CLS
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mca as kernels
+from .kernels import ref
+
+PAD_ID = 0
+CLS_ID = 1
+SEP_ID = 2
+UNK_ID = 3
+FIRST_WORD_ID = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture hyperparameters (baked into each artifact)."""
+
+    name: str
+    vocab: int = 256
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 512
+    max_len: int = 64
+    n_classes: int = 3
+    window: int | None = None  # sliding-window half-width; None = dense
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+BERT_SIM = ModelConfig(name="bert_sim")
+DISTIL_SIM = ModelConfig(name="distil_sim", n_layers=2)
+LONGFORMER_SIM = ModelConfig(name="longformer_sim", max_len=256, window=32)
+
+CONFIGS: Dict[str, ModelConfig] = {
+    c.name: c for c in (BERT_SIM, DISTIL_SIM, LONGFORMER_SIM)
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout — the contract with the Rust side
+# ---------------------------------------------------------------------------
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list. The Rust runtime stores checkpoints and
+    feeds executables in exactly this order; aot.py writes it into
+    manifest.json."""
+    d, ff = cfg.d_model, cfg.d_ff
+    spec: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed", (cfg.vocab, d)),
+        ("pos", (cfg.max_len, d)),
+    ]
+    for i in range(cfg.n_layers):
+        L = f"layer{i}"
+        spec += [
+            (f"{L}.ln1.scale", (d,)),
+            (f"{L}.ln1.bias", (d,)),
+            (f"{L}.wq", (d, d)),
+            (f"{L}.bq", (d,)),
+            (f"{L}.wk", (d, d)),
+            (f"{L}.bk", (d,)),
+            (f"{L}.wv", (d, d)),
+            (f"{L}.bv", (d,)),
+            (f"{L}.wo", (d, d)),
+            (f"{L}.bo", (d,)),
+            (f"{L}.ln2.scale", (d,)),
+            (f"{L}.ln2.bias", (d,)),
+            (f"{L}.w1", (d, ff)),
+            (f"{L}.b1", (ff,)),
+            (f"{L}.w2", (ff, d)),
+            (f"{L}.b2", (d,)),
+        ]
+    spec += [
+        ("ln_f.scale", (d,)),
+        ("ln_f.bias", (d,)),
+        ("head.w", (d, cfg.n_classes)),
+        ("head.b", (cfg.n_classes,)),
+    ]
+    return spec
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> List[jax.Array]:
+    """Truncated-normal-ish init matching the layout of ``param_spec``."""
+    out: List[jax.Array] = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".bias", ".bq", ".bk", ".bv", ".bo", ".b1", ".b2", ".b")):
+            out.append(jnp.zeros(shape, jnp.float32))
+        elif name.endswith(".scale"):
+            out.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = 0.02 if name in ("embed", "pos") else (2.0 / (fan_in + shape[-1])) ** 0.5
+            out.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return out
+
+
+def as_dict(cfg: ModelConfig, flat: List[jax.Array]) -> Dict[str, jax.Array]:
+    names = [n for n, _ in param_spec(cfg)]
+    assert len(names) == len(flat), (len(names), len(flat))
+    return dict(zip(names, flat))
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-6) * scale + bias
+
+
+def _attention_bias(
+    mask: jax.Array, n: int, window: int | None
+) -> jax.Array:
+    """(B, 1, n, n) additive bias: -1e9 on padding keys and, for windowed
+    attention, outside the band unless the query or key is the global CLS."""
+    neg = jnp.float32(-1e9)
+    bias = jnp.where(mask[:, None, None, :] > 0.0, 0.0, neg)
+    if window is not None:
+        idx = jnp.arange(n)
+        band = jnp.abs(idx[:, None] - idx[None, :]) <= window
+        glob = (idx[:, None] == 0) | (idx[None, :] == 0)
+        allowed = band | glob
+        bias = bias + jnp.where(allowed[None, None, :, :], 0.0, neg)
+    return bias
+
+
+def _split_heads(x: jax.Array, h: int) -> jax.Array:
+    b, n, d = x.shape
+    return x.reshape(b, n, h, d // h).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, h, n, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+
+
+def forward(
+    flat_params: List[jax.Array],
+    ids: jax.Array,
+    alpha: jax.Array,
+    seed: jax.Array,
+    *,
+    cfg: ModelConfig,
+    mode: str = "exact",
+    kernel: str = "jnp",
+    r_strategy: str = "max",
+    p_strategy: str = "norm",
+    compute_dtype: str = "f32",
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Run the encoder.
+
+    Inputs (all runtime values — one compiled artifact serves every alpha):
+      ids   (B, n) int32 token ids, PAD_ID-padded
+      alpha scalar f32, the attention-error coefficient (ignored for exact)
+      seed  scalar u32 PRNG seed (ignored for exact)
+
+    Returns (logits (B, n_classes) f32,
+             r_sum  (B,) f32  — Σ_layers Σ_tokens r_i over *real* tokens,
+                                0 for exact mode,
+             n_eff  (B,) f32  — real-token count, for FLOPs accounting).
+    """
+    assert mode in ("exact", "mca"), mode
+    p = as_dict(cfg, flat_params)
+    b, n = ids.shape
+    h = cfg.n_heads
+    d = cfg.d_model
+    mask = (ids != PAD_ID).astype(jnp.float32)  # (B, n)
+    n_eff = jnp.sum(mask, axis=-1)  # (B,)
+
+    cd = jnp.bfloat16 if compute_dtype == "bf16" else jnp.float32
+
+    def mm(a, w):
+        """Matmul in the compute dtype with f32 accumulation (the bf16
+        variant models the FP16-quantized models of Figure 1)."""
+        return jnp.dot(a.astype(cd), w.astype(cd), preferred_element_type=jnp.float32)
+
+    x = p["embed"][ids] + p["pos"][:n][None, :, :]
+    x = x * mask[..., None]
+    bias = _attention_bias(mask, n, cfg.window)
+    key = jax.random.PRNGKey(seed)
+
+    r_sum = jnp.zeros((b,), jnp.float32)
+    for i in range(cfg.n_layers):
+        L = f"layer{i}"
+        xn = _layer_norm(x, p[f"{L}.ln1.scale"], p[f"{L}.ln1.bias"])
+        q = _split_heads(mm(xn, p[f"{L}.wq"]) + p[f"{L}.bq"], h)
+        k = _split_heads(mm(xn, p[f"{L}.wk"]) + p[f"{L}.bk"], h)
+
+        if kernel == "pallas":
+            attn = kernels.attention_probs(q, k, bias)
+        else:
+            attn = kernels.attention_probs_jnp(q, k, bias)
+
+        wv = p[f"{L}.wv"]
+        if mode == "mca":
+            # --- the paper's contribution -----------------------------
+            # 1. importance + sample counts from the (exact) attention
+            r = ref.sample_counts(attn, mask, alpha, d, strategy=r_strategy)
+            # 2. cached, input-independent sampling distribution (Eq. 6)
+            pw = (
+                ref.sampling_probs(wv)
+                if p_strategy == "norm"
+                else ref.sampling_probs_uniform(wv)
+            )
+            # 3. shared pool + masked-prefix estimator (kernel hot-spot)
+            pool = ref.draw_pool(jax.random.fold_in(key, i), pw, d)
+            scale = ref.mca_scale(pool, pw, r, d)
+            xg = jnp.take(xn, pool, axis=-1)
+            wg = jnp.take(wv, pool, axis=0)
+            if kernel == "pallas":
+                v = kernels.mca_encode(xg, scale.astype(jnp.float32), wg)
+            else:
+                v = kernels.mca_encode_jnp(xg, scale.astype(jnp.float32), wg)
+            # Saturated budgets (r_i == d) fall back to the exact product:
+            # sampling d indices with replacement costs the same FLOPs but
+            # keeps variance (see ref.mca_encode_shared docstring). The
+            # FLOPs accounting is unchanged — r_i is already capped at d.
+            v = jnp.where((r >= d)[..., None], mm(xn, wv), v)
+            v = v + p[f"{L}.bv"]
+            r_sum = r_sum + jnp.sum(r.astype(jnp.float32) * mask, axis=-1)
+        else:
+            v = mm(xn, wv) + p[f"{L}.bv"]
+
+        vh = _split_heads(v, h)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", attn, vh)
+        x = x + mm(_merge_heads(ctx), p[f"{L}.wo"]) + p[f"{L}.bo"]
+
+        xn2 = _layer_norm(x, p[f"{L}.ln2.scale"], p[f"{L}.ln2.bias"])
+        hmid = jax.nn.gelu(mm(xn2, p[f"{L}.w1"]) + p[f"{L}.b1"], approximate=True)
+        x = x + mm(hmid, p[f"{L}.w2"]) + p[f"{L}.b2"]
+
+    xf = _layer_norm(x, p["ln_f.scale"], p["ln_f.bias"])
+    cls = xf[:, 0, :]  # CLS pooling
+    logits = (mm(cls, p["head.w"]) + p["head.b"]).astype(jnp.float32)
+    return logits, r_sum, n_eff
+
+
+# ---------------------------------------------------------------------------
+# Losses + in-graph Adam train step
+# ---------------------------------------------------------------------------
+
+
+def loss_cls(flat_params, ids, labels, *, cfg: ModelConfig) -> jax.Array:
+    """Cross-entropy over the n_classes logits (training always runs the
+    exact attention path — the paper applies MCA at inference time)."""
+    logits, _, _ = forward(
+        flat_params, ids, jnp.float32(1.0), jnp.uint32(0), cfg=cfg, mode="exact"
+    )
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def loss_reg(flat_params, ids, targets, *, cfg: ModelConfig) -> jax.Array:
+    """MSE on logit 0 (the STS-B-like regression head)."""
+    logits, _, _ = forward(
+        flat_params, ids, jnp.float32(1.0), jnp.uint32(0), cfg=cfg, mode="exact"
+    )
+    return jnp.mean(jnp.square(logits[:, 0] - targets))
+
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def train_step(
+    flat_params: List[jax.Array],
+    m_state: List[jax.Array],
+    v_state: List[jax.Array],
+    step: jax.Array,
+    ids: jax.Array,
+    labels: jax.Array,
+    lr: jax.Array,
+    *,
+    cfg: ModelConfig,
+    task: str = "cls",
+):
+    """One Adam step, fully in-graph. Returns (params', m', v', step', loss).
+
+    The Rust trainer owns the loop: it feeds the previous outputs back as
+    inputs each step (state lives on the Rust side as literals/buffers).
+    """
+    loss_fn = loss_cls if task == "cls" else loss_reg
+    loss, grads = jax.value_and_grad(lambda fp: loss_fn(fp, ids, labels, cfg=cfg))(
+        flat_params
+    )
+    step = step + 1
+    b1c = 1.0 - ADAM_B1 ** step.astype(jnp.float32)
+    b2c = 1.0 - ADAM_B2 ** step.astype(jnp.float32)
+    new_p, new_m, new_v = [], [], []
+    for w, g, m, v in zip(flat_params, grads, m_state, v_state):
+        m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        new_p.append(w - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+        new_m.append(m)
+        new_v.append(v)
+    return new_p, new_m, new_v, step, loss

@@ -1,0 +1,128 @@
+"""AOT pipeline tests: HLO text round-trips through the XLA parser and the
+compiled executable agrees with the jit-level function (the exact bridge the
+Rust runtime uses)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = M.ModelConfig(
+    name="tiny", vocab=32, d_model=16, n_heads=2, n_layers=1, d_ff=32, max_len=8
+)
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_roundtrip_forward():
+    """HLO text must parse back through the same parser family the Rust
+    runtime uses (text -> HloModule), with the expected entry signature.
+    (Execution-level cross-checking is done from Rust against the golden
+    files emitted by compile/golden.py — see rust/tests/.)"""
+    lowered = aot.build_forward(TINY, 2, 8, mode="mca")
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    mod = xc._xla.hlo_module_from_text(text)
+    # params + ids + alpha + seed parameters in the entry computation
+    n_expected = len(M.param_spec(TINY)) + 3
+    assert text.count("parameter(") >= n_expected
+
+
+def test_hlo_text_parses():
+    """Every generated artifact (if present) must parse as HLO text."""
+    mpath = os.path.join(ART_DIR, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built yet (run `make artifacts`)")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == 1
+    assert len(manifest["artifacts"]) >= 20
+    for entry in manifest["artifacts"][:6]:  # parsing is slow-ish; sample
+        with open(os.path.join(ART_DIR, entry["file"])) as f:
+            text = f.read()
+        mod = xc._xla.hlo_module_from_text(text)
+        assert mod is not None
+
+
+def test_manifest_schema():
+    mpath = os.path.join(ART_DIR, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built yet")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    for entry in manifest["artifacts"]:
+        assert entry["kind"] in ("forward", "train_cls", "train_reg")
+        assert entry["model"] in manifest["models"]
+        npar = entry["n_params"]
+        if entry["kind"] == "forward":
+            assert len(entry["inputs"]) == npar + 3
+            assert len(entry["outputs"]) == 3
+        else:
+            assert len(entry["inputs"]) == 3 * npar + 4
+            assert len(entry["outputs"]) == 3 * npar + 2
+        # param shapes in manifest must match the model spec
+        cfg = M.CONFIGS[entry["model"]]
+        for (name, shape), row in zip(M.param_spec(cfg), entry["inputs"]):
+            assert row[0] == "param" and row[1] == name and tuple(row[2]) == shape
+
+
+def test_variant_inventory_covers_experiments():
+    names = {v["name"] for v in aot.variant_inventory()}
+    # Tables 1 & 2 need exact + mca eval batches for both models
+    for model in ("bert_sim", "distil_sim"):
+        assert f"{model}_fwd_exact_b32" in names
+        assert f"{model}_fwd_mca_b32" in names
+        assert f"{model}_train_cls_b32" in names
+        assert f"{model}_train_reg_b32" in names
+        # Figure 1 quantized variants
+        assert f"{model}_fwd_mca_bf16_b32" in names
+    # Table 3
+    assert "longformer_sim_fwd_mca_b16" in names
+    assert "longformer_sim_train_cls_b16" in names
+    # Ablations + pallas
+    assert "bert_sim_fwd_mca_mean_b32" in names
+    assert "bert_sim_fwd_mca_median_b32" in names
+    assert "bert_sim_fwd_mca_punif_b32" in names
+    assert "bert_sim_fwd_mca_pallas_b4" in names
+
+
+def test_golden_format_roundtrip(tmp_path):
+    """golden.py's binary format must round-trip (the Rust reader mirrors
+    this layout byte-for-byte)."""
+    from compile import golden
+
+    tensors = [
+        np.arange(6, dtype=np.float32).reshape(2, 3),
+        np.array(7, dtype=np.uint32),
+        np.array([[1, 2], [3, 4]], dtype=np.int32),
+    ]
+    path = str(tmp_path / "t.golden")
+    golden.write_golden(path, tensors)
+    with open(path, "rb") as f:
+        blob = f.read()
+    assert blob[:4] == b"MCAG"
+    import struct
+
+    (count,) = struct.unpack_from("<I", blob, 4)
+    assert count == 3
+    # first tensor header: dtype=0 (f32), rank=2, dims 2,3
+    assert blob[8] == 0 and blob[9] == 2
+    assert struct.unpack_from("<II", blob, 10) == (2, 3)
+
+
+def test_golden_inventory_matches_artifacts():
+    """Every golden target must correspond to a generated artifact name."""
+    from compile import golden
+
+    names = {v["name"] for v in aot.variant_inventory()}
+    for gname, _ in golden.GOLDENS:
+        assert gname in names, gname

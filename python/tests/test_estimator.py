@@ -1,0 +1,155 @@
+"""Statistical properties of the MCA estimator beyond the kernel checks:
+hypothesis sweeps over shapes/dtypes, the DKM per-token oracle vs the
+shared-pool form, the mean/median r-strategies, and window masks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([2, 4, 8]),
+    d=st.sampled_from([8, 16, 32]),
+    dout=st.sampled_from([8, 16]),
+    seed=SEEDS,
+)
+def test_estimator_shapes(n, d, dout, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (1, n, d))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d, dout))
+    r = jnp.clip(
+        jax.random.randint(jax.random.fold_in(key, 2), (1, n), 1, d + 1), 1, d
+    )
+    out = ref.mca_encode_shared(key, x, w, r)
+    assert out.shape == (1, n, dout)
+    assert not np.isnan(np.array(out)).any()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=SEEDS)
+def test_dkm_token_oracle_unbiased(seed):
+    """The literal per-token DKM estimator (Eq. 5) is unbiased."""
+    key = jax.random.PRNGKey(seed)
+    d = 8
+    x = jax.random.normal(key, (d,))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d, d))
+    p = ref.sampling_probs(w)
+    exact = np.array(x @ w)
+    ests = np.mean(
+        [
+            np.array(ref.dkm_encode_token(jax.random.PRNGKey(seed + 7 * s), x, w, p, 4))
+            for s in range(3000)
+        ],
+        axis=0,
+    )
+    rel = np.linalg.norm(ests - exact) / np.linalg.norm(exact)
+    assert rel < 0.3, rel
+
+
+def test_shared_pool_matches_dkm_variance_scaling():
+    """Shared-pool and per-token DKM have the same 1/r variance scaling
+    (they are the same estimator per token, just correlated across tokens)."""
+    key = jax.random.PRNGKey(0)
+    d = 32
+    x1 = jax.random.normal(key, (d,))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d, d))
+    p = ref.sampling_probs(w)
+    exact = np.array(x1 @ w)
+
+    def err_at(r, est):
+        errs = []
+        for s in range(250):
+            k = jax.random.PRNGKey(1000 + s)
+            if est == "dkm":
+                h = np.array(ref.dkm_encode_token(k, x1, w, p, r))
+            else:
+                h = np.array(
+                    ref.mca_encode_shared(
+                        k, x1[None, None, :], w, jnp.full((1, 1), r, jnp.int32),
+                        exact_fallback=False,
+                    )
+                )[0, 0]
+            errs.append(np.linalg.norm(h - exact))
+        return np.mean(errs)
+
+    for est in ("dkm", "shared"):
+        e4, e16 = err_at(4, est), err_at(16, est)
+        ratio = e4 / e16
+        # 4x more samples -> ~2x smaller error
+        assert 1.4 < ratio < 3.0, (est, ratio)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=SEEDS, alpha=st.sampled_from([0.2, 0.5, 0.9]))
+def test_sample_counts_scale_invariance(seed, alpha):
+    """r_i depends on attention and n, not on the scale of X or W."""
+    key = jax.random.PRNGKey(seed)
+    n, d = 6, 16
+    attn = jax.nn.softmax(jax.random.normal(key, (1, 2, n, n)), axis=-1)
+    qm = jnp.ones((1, n))
+    r1 = np.array(ref.sample_counts(attn, qm, jnp.float32(alpha), d))
+    r2 = np.array(ref.sample_counts(attn, qm, jnp.float32(alpha), d))
+    np.testing.assert_array_equal(r1, r2)
+
+
+def test_importance_ignores_padded_queries():
+    n = 6
+    attn = jnp.zeros((1, 1, n, n))
+    # padded query row 5 attends hugely to key 3 — must be ignored
+    attn = attn.at[0, 0, 5, 3].set(1.0)
+    attn = attn.at[0, 0, 0, 0].set(0.5)
+    qm = jnp.array([[1.0, 1.0, 1.0, 1.0, 1.0, 0.0]])
+    imp = np.array(ref.token_importance(attn, qm))[0]
+    assert imp[3] == 0.0
+    assert imp[0] == 0.5
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=SEEDS, w=st.sampled_from([1, 2, 4]))
+def test_window_mask_composes_with_padding(seed, w):
+    key = jax.random.PRNGKey(seed)
+    n = 12
+    q = jax.random.normal(key, (1, 2, n, 8))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, n, 8))
+    key_mask = (jnp.arange(n) < 9).astype(jnp.float32)[None]
+    a = np.array(ref.exact_attention_probs(q, k, key_mask, window=w))
+    # padded keys never receive mass, even inside the window
+    assert a[..., 9:].max() < 1e-6
+    # rows sum to 1 for real queries
+    np.testing.assert_allclose(a[0, :, :9].sum(-1), 1.0, atol=1e-5)
+
+
+def test_uniform_vs_norm_sampling_variance():
+    """Norm-proportional p (Eq. 6) must not have higher estimator variance
+    than uniform p when W has skewed row norms (the reason Eq. 6 exists)."""
+    key = jax.random.PRNGKey(3)
+    d = 32
+    x = jax.random.normal(key, (1, 1, d))
+    # strongly skewed row norms
+    scales = jnp.concatenate([jnp.full((4,), 10.0), jnp.full((d - 4,), 0.1)])
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d, d)) * scales[:, None]
+    r = jnp.full((1, 1), 8, jnp.int32)
+    exact = np.array(x[0, 0] @ w)
+
+    def mean_err(p):
+        errs = []
+        for s in range(400):
+            h = np.array(
+                ref.mca_encode_shared(
+                    jax.random.PRNGKey(s), x, w, r, p=p, exact_fallback=False
+                )
+            )[0, 0]
+            errs.append(np.linalg.norm(h - exact))
+        return np.mean(errs)
+
+    err_norm = mean_err(ref.sampling_probs(w))
+    err_unif = mean_err(ref.sampling_probs_uniform(w))
+    assert err_norm < err_unif, (err_norm, err_unif)

@@ -1,0 +1,268 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle.
+
+hypothesis sweeps shapes/seeds; assert_allclose against kernels/ref.py.
+This is the CORE correctness signal for the compute hot-spot.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mca as K
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.sampled_from([4, 8, 16, 32])
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# mca_encode (the paper's hot-spot kernel)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.sampled_from([1, 2, 3]), n=DIMS, s=DIMS, dout=DIMS, seed=SEEDS)
+def test_mca_encode_matches_jnp(b, n, s, dout, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    xg, sc, wg = _rand(k1, b, n, s), _rand(k2, b, n, s), _rand(k3, s, dout)
+    got = K.mca_encode(xg, sc, wg)
+    want = K.mca_encode_jnp(xg, sc, wg)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([8, 16, 64]), seed=SEEDS)
+def test_mca_encode_tile_boundaries(n, seed):
+    """Non-default tile shapes must not change the result."""
+    key = jax.random.PRNGKey(seed)
+    xg, sc, wg = _rand(key, 2, n, 16), _rand(key, 2, n, 16), _rand(key, 16, 32)
+    want = K.mca_encode_jnp(xg, sc, wg)
+    for nt, dt in [(1, 1), (4, 8), (n, 32)]:
+        got = K.mca_encode(xg, sc, wg, n_tile=nt, d_tile=dt)
+        np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-4)
+
+
+def test_mca_encode_zero_scale_is_zero():
+    key = jax.random.PRNGKey(0)
+    xg, wg = _rand(key, 1, 8, 8), _rand(key, 8, 8)
+    out = K.mca_encode(xg, jnp.zeros((1, 8, 8)), wg)
+    assert np.allclose(np.array(out), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# attention_probs
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2]),
+    h=st.sampled_from([1, 2, 4]),
+    n=st.sampled_from([4, 8, 16]),
+    dh=st.sampled_from([4, 8]),
+    seed=SEEDS,
+)
+def test_attention_probs_matches_jnp(b, h, n, dh, seed):
+    key = jax.random.PRNGKey(seed)
+    q, k = _rand(key, b, h, n, dh), _rand(jax.random.fold_in(key, 1), b, h, n, dh)
+    bias = jnp.zeros((b, 1, n, n))
+    got = K.attention_probs(q, k, bias)
+    want = K.attention_probs_jnp(q, k, bias)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([8, 16]), npad=st.integers(1, 6), seed=SEEDS)
+def test_attention_probs_padding_mask(n, npad, seed):
+    """Masked keys must get (numerically) zero probability; rows sum to 1."""
+    key = jax.random.PRNGKey(seed)
+    q, k = _rand(key, 1, 2, n, 8), _rand(jax.random.fold_in(key, 9), 1, 2, n, 8)
+    key_mask = (jnp.arange(n) < n - npad).astype(jnp.float32)
+    bias = jnp.where(key_mask[None, None, None, :] > 0, 0.0, -1e9)
+    got = np.array(K.attention_probs(q, k, bias))
+    assert got[..., n - npad :].max() < 1e-6
+    np.testing.assert_allclose(got.sum(-1), 1.0, atol=1e-5)
+
+
+def test_attention_probs_broadcast_bias():
+    """(B,1,1,n) broadcastable bias (the model's padding mask) is accepted."""
+    key = jax.random.PRNGKey(3)
+    q, k = _rand(key, 2, 2, 8, 4), _rand(key, 2, 2, 8, 4)
+    bias_b = jnp.where(jnp.arange(8) < 5, 0.0, -1e9)[None, None, None, :] * jnp.ones(
+        (2, 1, 1, 1)
+    )
+    got = K.attention_probs(q, k, bias_b)
+    want = K.attention_probs_jnp(q, k, bias_b)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Oracle self-consistency: shared-pool estimator vs exact / DKM statistics
+# ---------------------------------------------------------------------------
+
+
+def test_sampling_probs_is_distribution():
+    w = _rand(jax.random.PRNGKey(0), 32, 16)
+    p = np.array(ref.sampling_probs(w))
+    assert (p >= 0).all()
+    np.testing.assert_allclose(p.sum(), 1.0, atol=1e-6)
+
+
+def test_sampling_probs_zero_matrix_uniform():
+    p = np.array(ref.sampling_probs(jnp.zeros((8, 8))))
+    np.testing.assert_allclose(p, 1.0 / 8, atol=1e-6)
+
+
+def test_full_sample_count_is_exact_with_fallback():
+    """r_i = d triggers the exact-fallback path: zero error, any seed."""
+    key = jax.random.PRNGKey(1)
+    d = 16
+    x = _rand(key, 1, 6, d)
+    w = _rand(jax.random.fold_in(key, 2), d, d)
+    r = jnp.full((1, 6), d, jnp.int32)
+    exact = np.array(x @ w)
+    for s in (0, 1, 2):
+        got = np.array(ref.mca_encode_shared(jax.random.PRNGKey(s), x, w, r))
+        np.testing.assert_allclose(got, exact, atol=1e-5)
+
+
+def test_raw_estimator_unbiased_at_full_budget():
+    """Without the fallback, r = d sampling-with-replacement is still an
+    unbiased (but noisy) estimator — the seed-mean must converge."""
+    key = jax.random.PRNGKey(1)
+    d = 16
+    x = _rand(key, 1, 6, d)
+    w = _rand(jax.random.fold_in(key, 2), d, d)
+    r = jnp.full((1, 6), d, jnp.int32)
+    exact = np.array(x @ w)
+    ests = [
+        np.array(ref.mca_encode_shared(jax.random.PRNGKey(s), x, w, r, exact_fallback=False))
+        for s in range(600)
+    ]
+    mean = np.mean(ests, axis=0)
+    rel = np.linalg.norm(mean - exact) / np.linalg.norm(exact)
+    assert rel < 0.12, rel
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=SEEDS)
+def test_estimator_unbiased_small(seed):
+    """E[H~] == XW for the shared-pool estimator (statistical, coarse)."""
+    key = jax.random.PRNGKey(seed)
+    d = 8
+    x = _rand(key, 1, 3, d)
+    w = _rand(jax.random.fold_in(key, 5), d, d)
+    r = jnp.array([[2, 5, 8]], jnp.int32)
+    exact = np.array(x @ w)
+    ests = np.mean(
+        [
+            np.array(ref.mca_encode_shared(jax.random.PRNGKey(seed * 1000 + s), x, w, r, exact_fallback=False))
+            for s in range(2000)
+        ],
+        axis=0,
+    )
+    rel = np.linalg.norm(ests - exact) / np.linalg.norm(exact)
+    assert rel < 0.25, rel
+
+
+def test_lemma1_error_scaling():
+    """Mean error must decrease ~1/sqrt(r) and respect the Lemma 1 bound."""
+    key = jax.random.PRNGKey(7)
+    d = 64
+    x = _rand(key, 1, 1, d)
+    w = _rand(jax.random.fold_in(key, 1), d, d)
+    exact = np.array(x @ w)[0, 0]
+    errs = {}
+    for r_val in (4, 16, 64):
+        r = jnp.full((1, 1), r_val, jnp.int32)
+        es = [
+            np.linalg.norm(
+                np.array(ref.mca_encode_shared(jax.random.PRNGKey(s), x, w, r, exact_fallback=False))[0, 0]
+                - exact
+            )
+            for s in range(300)
+        ]
+        errs[r_val] = np.mean(es)
+        bound = float(ref.lemma1_bound(x[0, 0], w, jnp.int32(r_val)))
+        assert errs[r_val] <= bound * 1.05, (r_val, errs[r_val], bound)
+    # 16x more samples -> ~4x smaller error (allow 2x slack on 300 seeds)
+    assert errs[64] < errs[4] / 2.0
+
+
+def test_sample_counts_monotone_in_alpha():
+    """Larger alpha (looser error) must never increase any r_i."""
+    key = jax.random.PRNGKey(11)
+    attn = jax.nn.softmax(_rand(key, 1, 2, 8, 8), axis=-1)
+    qm = jnp.ones((1, 8))
+    prev = None
+    for alpha in (0.1, 0.2, 0.4, 0.8, 1.0):
+        r = np.array(ref.sample_counts(attn, qm, jnp.float32(alpha), 64))
+        assert (r >= 1).all() and (r <= 64).all()
+        if prev is not None:
+            assert (r <= prev).all()
+        prev = r
+
+
+def test_sample_counts_padding_gets_minimum():
+    key = jax.random.PRNGKey(13)
+    attn = jax.nn.softmax(_rand(key, 1, 2, 8, 8), axis=-1)
+    qm = (jnp.arange(8) < 5).astype(jnp.float32)[None]
+    r = np.array(ref.sample_counts(attn, qm, jnp.float32(0.5), 64))
+    assert (r[0, 5:] == 1).all()
+
+
+def test_sample_counts_strategies_ordering():
+    """max-pooled importance >= mean-pooled importance => r_max >= r_mean."""
+    key = jax.random.PRNGKey(17)
+    attn = jax.nn.softmax(5.0 * _rand(key, 1, 2, 8, 8), axis=-1)
+    qm = jnp.ones((1, 8))
+    r_max = np.array(ref.sample_counts(attn, qm, jnp.float32(0.4), 64, "max"))
+    r_mean = np.array(ref.sample_counts(attn, qm, jnp.float32(0.4), 64, "mean"))
+    r_med = np.array(ref.sample_counts(attn, qm, jnp.float32(0.4), 64, "median"))
+    assert (r_max >= r_mean).all()
+    assert (r_max >= r_med).all()
+
+
+def test_theorem2_bound_holds_empirically():
+    """Full-pipeline check of Thm 2: E||Y~ - Y|| <= alpha*beta*||W||_F when
+    r_i is chosen by Eq. 9 (with the n_eff scaling)."""
+    key = jax.random.PRNGKey(23)
+    n, d, alpha = 8, 32, 0.5
+    x = _rand(key, 1, n, d)
+    w = _rand(jax.random.fold_in(key, 1), d, d)
+    attn = jax.nn.softmax(_rand(jax.random.fold_in(key, 2), 1, 1, n, n), axis=-1)
+    qm = jnp.ones((1, n))
+    r = ref.sample_counts(attn, qm, jnp.float32(alpha), d)
+    exact_h = np.array(x @ w)
+    exact_y = np.einsum("bhqk,bkd->bqd", np.array(attn), exact_h)
+    errs = []
+    for s in range(200):
+        h = np.array(ref.mca_encode_shared(jax.random.PRNGKey(s), x, w, r))
+        y = np.einsum("bhqk,bkd->bqd", np.array(attn), h)
+        errs.append(np.linalg.norm(y - exact_y, axis=-1).max())
+    bound = float(ref.theorem2_bound(x[0], w, alpha))
+    assert np.mean(errs) <= bound, (np.mean(errs), bound)
+
+
+def test_window_attention_probs_band_structure():
+    """Windowed oracle: probability mass outside band+global must be 0."""
+    key = jax.random.PRNGKey(29)
+    n, w = 16, 3
+    q = _rand(key, 1, 2, n, 8)
+    k = _rand(jax.random.fold_in(key, 1), 1, 2, n, 8)
+    a = np.array(ref.exact_attention_probs(q, k, jnp.ones((1, n)), window=w))
+    idx = np.arange(n)
+    allowed = (np.abs(idx[:, None] - idx[None, :]) <= w) | (idx[:, None] == 0) | (
+        idx[None, :] == 0
+    )
+    assert a[0, :, ~allowed].max() < 1e-6
+    np.testing.assert_allclose(a.sum(-1), 1.0, atol=1e-5)

@@ -1,0 +1,191 @@
+"""L2 model tests: shapes, masking invariance, MCA convergence, training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = M.ModelConfig(
+    name="tiny", vocab=32, d_model=16, n_heads=2, n_layers=2, d_ff=32, max_len=8
+)
+TINY_W = M.ModelConfig(
+    name="tiny_w", vocab=32, d_model=16, n_heads=2, n_layers=2, d_ff=32,
+    max_len=16, window=2,
+)
+
+
+def _params(cfg, seed=0):
+    return M.init_params(cfg, jax.random.PRNGKey(seed))
+
+
+def _ids(rows, n):
+    out = np.zeros((len(rows), n), np.int32)
+    for i, r in enumerate(rows):
+        out[i, : len(r)] = r
+    return jnp.asarray(out)
+
+
+IDS = _ids([[1, 5, 6, 7, 2], [1, 9, 2]], 8)
+
+
+def test_param_spec_matches_init():
+    spec = M.param_spec(TINY)
+    params = _params(TINY)
+    assert len(spec) == len(params)
+    for (name, shape), arr in zip(spec, params):
+        assert tuple(shape) == arr.shape, name
+
+
+def test_forward_shapes_and_counts():
+    logits, r_sum, n_eff = M.forward(
+        _params(TINY), IDS, jnp.float32(1.0), jnp.uint32(0), cfg=TINY, mode="exact"
+    )
+    assert logits.shape == (2, 3)
+    assert np.array(n_eff).tolist() == [5.0, 3.0]
+    assert np.array(r_sum).tolist() == [0.0, 0.0]  # exact mode reports 0
+
+
+def test_mca_r_sum_bounds():
+    """1 <= r_i <= d on real tokens => n_eff*L <= r_sum <= n_eff*L*d."""
+    _, r_sum, n_eff = M.forward(
+        _params(TINY), IDS, jnp.float32(0.3), jnp.uint32(1), cfg=TINY, mode="mca"
+    )
+    r_sum, n_eff = np.array(r_sum), np.array(n_eff)
+    L, d = TINY.n_layers, TINY.d_model
+    assert (r_sum >= n_eff * L).all()
+    assert (r_sum <= n_eff * L * d).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_padding_invariance(seed):
+    """Extending PAD tokens must not change logits (exact mode)."""
+    ids_short = _ids([[1, 5, 6, 2]], 6)
+    ids_long = _ids([[1, 5, 6, 2]], 8)
+    p6 = M.init_params(
+        M.ModelConfig(**{**TINY.__dict__, "name": "t6", "max_len": 8}),
+        jax.random.PRNGKey(seed),
+    )
+    cfg = M.ModelConfig(**{**TINY.__dict__, "name": "t6", "max_len": 8})
+    a = M.forward(p6, ids_short, jnp.float32(1.0), jnp.uint32(0), cfg=cfg)[0]
+    b = M.forward(p6, ids_long, jnp.float32(1.0), jnp.uint32(0), cfg=cfg)[0]
+    np.testing.assert_allclose(np.array(a), np.array(b), atol=1e-4)
+
+
+def test_mca_converges_to_exact_as_alpha_shrinks():
+    """alpha -> 0 forces r_i -> d; the estimator variance shrinks toward the
+    exact encoding, so logits error must decrease monotonically-ish."""
+    params = _params(TINY, 3)
+    exact = np.array(
+        M.forward(params, IDS, jnp.float32(1.0), jnp.uint32(0), cfg=TINY)[0]
+    )
+    errs = []
+    for alpha in (1.0, 0.4, 0.05):
+        runs = [
+            np.array(
+                M.forward(
+                    params, IDS, jnp.float32(alpha), jnp.uint32(s), cfg=TINY, mode="mca"
+                )[0]
+            )
+            for s in range(8)
+        ]
+        errs.append(np.mean([np.abs(r - exact).max() for r in runs]))
+    assert errs[2] <= errs[0] + 1e-6, errs
+    assert errs[2] < 0.15, errs  # alpha=0.05 => near-exact on this scale
+
+
+def test_mca_seed_determinism():
+    params = _params(TINY)
+    a = M.forward(params, IDS, jnp.float32(0.4), jnp.uint32(7), cfg=TINY, mode="mca")[0]
+    b = M.forward(params, IDS, jnp.float32(0.4), jnp.uint32(7), cfg=TINY, mode="mca")[0]
+    c = M.forward(params, IDS, jnp.float32(0.4), jnp.uint32(8), cfg=TINY, mode="mca")[0]
+    np.testing.assert_array_equal(np.array(a), np.array(b))
+    assert np.abs(np.array(a) - np.array(c)).max() > 0  # different seed differs
+
+
+def test_window_mode_runs_and_bounds():
+    ids = _ids([[1] + list(range(4, 14)) + [2]], 16)
+    logits, r_sum, n_eff = M.forward(
+        _params(TINY_W), ids, jnp.float32(0.4), jnp.uint32(0), cfg=TINY_W, mode="mca"
+    )
+    assert not np.isnan(np.array(logits)).any()
+    assert float(n_eff[0]) == 12.0
+
+
+def test_bf16_close_to_f32():
+    params = _params(TINY, 5)
+    a = np.array(M.forward(params, IDS, jnp.float32(1.0), jnp.uint32(0), cfg=TINY)[0])
+    b = np.array(
+        M.forward(
+            params, IDS, jnp.float32(1.0), jnp.uint32(0), cfg=TINY,
+            compute_dtype="bf16",
+        )[0]
+    )
+    assert np.abs(a - b).max() < 0.15, np.abs(a - b).max()
+
+
+def test_train_step_reduces_loss():
+    """A few Adam steps on a fixed batch must reduce the loss (sanity that
+    the in-graph optimizer + grads are wired correctly)."""
+    cfg = TINY
+    params = _params(cfg, 11)
+    m = [jnp.zeros_like(w) for w in params]
+    v = [jnp.zeros_like(w) for w in params]
+    step = jnp.float32(0)
+    labels = jnp.array([0, 1], jnp.int32)
+    losses = []
+    for _ in range(12):
+        params, m, v, step, loss = M.train_step(
+            params, m, v, step, IDS, labels, jnp.float32(3e-3), cfg=cfg, task="cls"
+        )
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_train_step_reg_reduces_loss():
+    cfg = TINY
+    params = _params(cfg, 13)
+    m = [jnp.zeros_like(w) for w in params]
+    v = [jnp.zeros_like(w) for w in params]
+    step = jnp.float32(0)
+    targets = jnp.array([0.3, 0.9], jnp.float32)
+    losses = []
+    for _ in range(12):
+        params, m, v, step, loss = M.train_step(
+            params, m, v, step, IDS, targets, jnp.float32(3e-3), cfg=cfg, task="reg"
+        )
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_pallas_kernel_variant_matches_jnp_variant():
+    params = _params(TINY, 17)
+    for mode in ("exact", "mca"):
+        a = M.forward(
+            params, IDS, jnp.float32(0.3), jnp.uint32(5), cfg=TINY, mode=mode,
+            kernel="jnp",
+        )[0]
+        b = M.forward(
+            params, IDS, jnp.float32(0.3), jnp.uint32(5), cfg=TINY, mode=mode,
+            kernel="pallas",
+        )[0]
+        np.testing.assert_allclose(np.array(a), np.array(b), atol=1e-4)
+
+
+def test_r_strategy_flops_ordering():
+    """mean/median pooling must not use more samples than max pooling."""
+    params = _params(TINY, 19)
+    sums = {}
+    for strat in ("max", "mean", "median"):
+        _, r_sum, _ = M.forward(
+            params, IDS, jnp.float32(0.4), jnp.uint32(3), cfg=TINY, mode="mca",
+            r_strategy=strat,
+        )
+        sums[strat] = float(np.array(r_sum).sum())
+    assert sums["mean"] <= sums["max"]
+    assert sums["median"] <= sums["max"]

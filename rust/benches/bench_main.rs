@@ -1,0 +1,223 @@
+//! `cargo bench` — in-tree harness (criterion is unavailable offline; see
+//! rust/src/bench). Two groups:
+//!
+//! * end-to-end benches, one per paper table/figure shape: the exact vs
+//!   MCA forward executables each experiment drives (Tables 1–3, the bf16
+//!   variants of Figure 1, the Pallas-kernel variant) plus the train step;
+//! * micro benches for the L3 hot paths: batch planning, tokenization,
+//!   alias sampling, the host MCA estimator, FLOPs accounting.
+//!
+//! Set MCA_BENCH_QUICK=1 for a fast pass.
+
+use std::time::Duration;
+
+use mca::bench::Bench;
+use mca::coordinator::{plan_batches, Pending, Request};
+use mca::data;
+use mca::mca::{self as mcacore, flops::AttnDims};
+use mca::model::Params;
+use mca::rng::{AliasTable, Pcg64};
+use mca::runtime::{default_artifacts_dir, HostValue, Runtime};
+use mca::tensor::Tensor;
+use mca::tokenizer::Tokenizer;
+use mca::train::make_batch;
+
+fn bench_cfg() -> Bench {
+    if std::env::var("MCA_BENCH_QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 100_000,
+        }
+    }
+}
+
+/// Build ready-to-run forward inputs for an artifact.
+fn forward_inputs(rt: &Runtime, artifact: &str, alpha: f32) -> (Params, Vec<HostValue>) {
+    let info = rt.manifest.artifact(artifact).unwrap().clone();
+    let model = rt.manifest.model(&info.model).unwrap().clone();
+    let mut rng = Pcg64::new(11);
+    let params = Params::init(&model, &mut rng);
+    let spec = data::task_by_name(if info.seq > 64 { "imdb_sim" } else { "sst2_sim" }).unwrap();
+    let ds = data::generate(&spec, 99);
+    let exs: Vec<&data::Example> = ds.dev.iter().take(info.batch).collect();
+    let (ids, _) = make_batch(&exs, info.batch, info.seq, spec.kind);
+    let mut inputs = params.values.clone();
+    inputs.push(ids);
+    inputs.push(HostValue::scalar_f32(alpha));
+    inputs.push(HostValue::scalar_u32(3));
+    (params, inputs)
+}
+
+fn main() {
+    let b = bench_cfg();
+    let mut results = Vec::new();
+
+    println!("== micro benches (L3 hot paths) ==");
+    // --- batch planner (the serving hot loop) -----------------------------
+    {
+        let now = std::time::Instant::now();
+        let alphas = [0.2f32, 0.4, 0.6];
+        let queue: Vec<Pending> = (0..256)
+            .map(|i| Pending {
+                req: Request {
+                    id: i as u64,
+                    text: String::new(),
+                    alpha: alphas[i % 3],
+                    mode: "mca".into(),
+                },
+                arrived: now,
+            })
+            .collect();
+        results.push(b.run("micro/plan_batches_256req", Some(256.0), || {
+            let plans = plan_batches(&queue, &[1, 8, 32], Duration::from_millis(0), now);
+            std::hint::black_box(plans);
+        }));
+    }
+    // --- tokenizer --------------------------------------------------------
+    {
+        let tok = Tokenizer::new();
+        let text = "n0 v1 a2 f3 n4 v5 a6 f7 n8 v9 a10 f11 n12 v13 a14 f15";
+        results.push(b.run("micro/tokenize_16w", Some(16.0), || {
+            std::hint::black_box(tok.encode(text, 64));
+        }));
+    }
+    // --- alias sampler vs inverse-CDF -------------------------------------
+    {
+        let mut rng = Pcg64::new(5);
+        let weights: Vec<f64> = (0..128).map(|_| rng.gen_f64() + 0.01).collect();
+        let table = AliasTable::new(&weights);
+        let mut r2 = Pcg64::new(6);
+        results.push(b.run("micro/alias_sample_128pool", Some(128.0), || {
+            for _ in 0..128 {
+                std::hint::black_box(table.sample(&mut r2));
+            }
+        }));
+        // inverse-CDF comparison (what a naive host sampler would do)
+        let total: f64 = weights.iter().sum();
+        let cdf: Vec<f64> = weights
+            .iter()
+            .scan(0.0, |acc, w| {
+                *acc += w / total;
+                Some(*acc)
+            })
+            .collect();
+        results.push(b.run("micro/invcdf_sample_128pool", Some(128.0), || {
+            for _ in 0..128 {
+                let u = r2.gen_f64();
+                let idx = cdf.partition_point(|&c| c < u);
+                std::hint::black_box(idx);
+            }
+        }));
+    }
+    // --- host MCA estimator (n=64, d=128, the bert_sim shape) -------------
+    {
+        let mut rng = Pcg64::new(9);
+        let x = Tensor::from_fn(&[64, 128], |_| rng.gen_normal() as f32);
+        let w = Tensor::from_fn(&[128, 128], |_| rng.gen_normal() as f32);
+        let p = mcacore::sampling_probs(&w);
+        let r: Vec<usize> = (0..64).map(|i| 1 + (i % 32)).collect();
+        let mut r3 = Pcg64::new(10);
+        results.push(b.run("micro/host_mca_encode_64x128", Some(64.0), || {
+            std::hint::black_box(mcacore::mca_encode(&mut r3, &x, &w, &r, &p));
+        }));
+        results.push(b.run("micro/host_exact_matmul_64x128", Some(64.0), || {
+            std::hint::black_box(x.matmul(&w).unwrap());
+        }));
+    }
+    // --- FLOPs accounting ---------------------------------------------------
+    {
+        let per_seq: Vec<(usize, u64)> = (0..512).map(|i| (32 + i % 32, 50_000)).collect();
+        let dims = AttnDims { d_model: 128, window: None };
+        results.push(b.run("micro/flops_reduction_512seq", Some(512.0), || {
+            std::hint::black_box(mca::mca::flops::reduction_factor(&per_seq, 4, dims));
+        }));
+    }
+    // --- data generation ----------------------------------------------------
+    {
+        let spec = data::task_by_name("mnli_sim").unwrap();
+        let mut i = 0u64;
+        results.push(b.run("micro/gen_mnli_100ex", Some(100.0), || {
+            let mut s = spec.clone();
+            s.train_size = 100;
+            s.dev_size = 1;
+            i += 1;
+            std::hint::black_box(data::generate(&s, i));
+        }));
+    }
+
+    for r in &results {
+        println!("{}", r.report());
+    }
+
+    // --- end-to-end: one bench per table/figure -----------------------------
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("\n(artifacts not built — skipping end-to-end benches; run `make artifacts`)");
+        return;
+    }
+    println!("\n== end-to-end benches (one per table/figure shape) ==");
+    let mut rt = Runtime::load(&dir).expect("runtime");
+    let mut e2e = Vec::new();
+
+    // Table 1/2 + Figure 1/2 shapes: bert_sim/distil_sim b32 n64.
+    let cells: &[(&str, &str, f32)] = &[
+        ("table1/exact_fwd_b32", "bert_sim_fwd_exact_b32", 1.0),
+        ("table1/mca_fwd_b32_a0.2", "bert_sim_fwd_mca_b32", 0.2),
+        ("table1/mca_fwd_b32_a1.0", "bert_sim_fwd_mca_b32", 1.0),
+        ("table2/mca_fwd_b32_a0.2", "distil_sim_fwd_mca_b32", 0.2),
+        ("figure1/mca_bf16_fwd_b32", "bert_sim_fwd_mca_bf16_b32", 0.4),
+        ("table3/exact_fwd_b16_n256", "longformer_sim_fwd_exact_b16", 1.0),
+        ("table3/mca_fwd_b16_n256", "longformer_sim_fwd_mca_b16", 0.2),
+        ("kernel/pallas_mca_fwd_b4", "bert_sim_fwd_mca_pallas_b4", 0.3),
+        ("kernel/jnp_mca_fwd_b1", "bert_sim_fwd_mca_b1", 0.3),
+        ("ablate/mca_mean_fwd_b32", "bert_sim_fwd_mca_mean_b32", 0.4),
+        ("ablate/mca_punif_fwd_b32", "bert_sim_fwd_mca_punif_b32", 0.4),
+    ];
+    for &(label, artifact, alpha) in cells {
+        if rt.manifest.artifact(artifact).is_err() {
+            println!("  (skipping {label}: artifact {artifact} missing)");
+            continue;
+        }
+        let (_params, inputs) = forward_inputs(&rt, artifact, alpha);
+        rt.warmup(&[artifact]).unwrap();
+        let batch = rt.manifest.artifact(artifact).unwrap().batch as f64;
+        e2e.push(b.run(label, Some(batch), || {
+            std::hint::black_box(rt.run(artifact, &inputs).unwrap());
+        }));
+    }
+
+    // Train-step bench (the e2e trainer hot loop).
+    {
+        let artifact = "bert_sim_train_cls_b32";
+        if rt.manifest.artifact(artifact).is_ok() {
+            let info = rt.manifest.artifact(artifact).unwrap().clone();
+            let model = rt.manifest.model(&info.model).unwrap().clone();
+            let mut rng = Pcg64::new(21);
+            let params = Params::init(&model, &mut rng);
+            let zeros = Params::zeros_like(&model);
+            let spec = data::task_by_name("sst2_sim").unwrap();
+            let ds = data::generate(&spec, 5);
+            let exs: Vec<&data::Example> = ds.train.iter().take(info.batch).collect();
+            let (ids, labels) = make_batch(&exs, info.batch, info.seq, spec.kind);
+            let mut inputs = params.values.clone();
+            inputs.extend(zeros.values.iter().cloned());
+            inputs.extend(zeros.values.iter().cloned());
+            inputs.push(HostValue::scalar_f32(0.0));
+            inputs.push(ids);
+            inputs.push(labels);
+            inputs.push(HostValue::scalar_f32(1e-3));
+            rt.warmup(&[artifact]).unwrap();
+            e2e.push(b.run("train/train_step_b32", Some(32.0), || {
+                std::hint::black_box(rt.run(artifact, &inputs).unwrap());
+            }));
+        }
+    }
+
+    for r in &e2e {
+        println!("{}", r.report());
+    }
+}

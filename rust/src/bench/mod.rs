@@ -1,0 +1,157 @@
+//! Mini-criterion bench harness substrate (criterion is unavailable
+//! offline). Adaptive iteration-count timing with warmup, mean/p50/p99 and
+//! throughput reporting; used by `cargo bench` (rust/benches/bench_main.rs,
+//! a `harness = false` target).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    /// Optional items/sec (set via `throughput`)
+    pub throughput: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let tp = match self.throughput {
+            Some(t) if t >= 1000.0 => format!("  {:>10.1} items/s", t),
+            Some(t) => format!("  {:>10.2} items/s", t),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>10} iters  mean {:>11}  p50 {:>11}  p99 {:>11}{}",
+            self.name,
+            self.iters,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p99),
+            tp
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Bench configuration: target total measurement time and warmup.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(1),
+            min_iters: 5,
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            min_iters: 3,
+            max_iters: 100_000,
+        }
+    }
+
+    /// Time `f` adaptively; `items_per_iter` (if Some) adds throughput.
+    pub fn run<F: FnMut()>(&self, name: &str, items_per_iter: Option<f64>, mut f: F) -> BenchResult {
+        // Warmup + estimate single-iteration cost.
+        let wstart = Instant::now();
+        let mut witers = 0u64;
+        while wstart.elapsed() < self.warmup || witers < 2 {
+            f();
+            witers += 1;
+            if witers >= self.max_iters {
+                break;
+            }
+        }
+        let est = wstart.elapsed().as_secs_f64() / witers as f64;
+        let target = ((self.measure.as_secs_f64() / est.max(1e-9)) as u64)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(target as usize);
+        for _ in 0..target {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        samples.sort_unstable();
+        let total: Duration = samples.iter().sum();
+        let mean = total / target as u32;
+        let p = |q: f64| samples[((q * (target - 1) as f64) as usize).min(samples.len() - 1)];
+        BenchResult {
+            name: name.to_string(),
+            iters: target,
+            mean,
+            p50: p(0.50),
+            p99: p(0.99),
+            throughput: items_per_iter.map(|items| items / mean.as_secs_f64()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bench {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_iters: 3,
+            max_iters: 10_000,
+        };
+        let mut acc = 0u64;
+        let r = b.run("spin", Some(100.0), || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i);
+            }
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.p99 >= r.p50);
+        assert!(r.throughput.unwrap() > 0.0);
+        assert!(acc > 0 || acc == 0); // keep acc alive
+    }
+
+    #[test]
+    fn format_is_stable() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 10,
+            mean: Duration::from_micros(1500),
+            p50: Duration::from_micros(1400),
+            p99: Duration::from_micros(2000),
+            throughput: None,
+        };
+        let s = r.report();
+        assert!(s.contains("1.50 ms"));
+        assert!(s.contains("10"));
+    }
+}

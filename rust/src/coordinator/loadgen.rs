@@ -1,0 +1,153 @@
+//! Open-loop load generation for the serving benchmarks: Poisson arrivals
+//! at a configured offered rate, mixed-α request populations, and a
+//! latency-vs-load sweep used by the serving section of EXPERIMENTS.md.
+//!
+//! Open-loop (arrivals independent of completions) is the honest way to
+//! measure a serving system: a closed loop hides queueing collapse.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::Server;
+use crate::rng::Pcg64;
+use crate::util::timer::LatencyStats;
+
+/// A workload description.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    /// offered request rate (req/s)
+    pub rate: f64,
+    pub duration: Duration,
+    /// (alpha, weight) mixture of request precisions
+    pub alpha_mix: Vec<(f32, f64)>,
+    pub seed: u64,
+}
+
+/// Result of one load-test run.
+#[derive(Debug, Clone)]
+pub struct LoadResult {
+    pub offered: f64,
+    pub completed: usize,
+    pub achieved: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_flops_reduction: f64,
+}
+
+/// Sample inter-arrival gaps ~ Exp(rate) (Poisson process).
+pub fn poisson_gaps(rng: &mut Pcg64, rate: f64, duration: Duration) -> Vec<Duration> {
+    assert!(rate > 0.0);
+    let mut gaps = Vec::new();
+    let mut t = 0.0;
+    let horizon = duration.as_secs_f64();
+    loop {
+        let u = rng.gen_f64().max(1e-12);
+        let gap = -u.ln() / rate;
+        t += gap;
+        if t > horizon {
+            break;
+        }
+        gaps.push(Duration::from_secs_f64(gap));
+    }
+    gaps
+}
+
+/// Pick an α from the mixture.
+pub fn sample_alpha(rng: &mut Pcg64, mix: &[(f32, f64)]) -> f32 {
+    let total: f64 = mix.iter().map(|(_, w)| w).sum();
+    let mut u = rng.gen_f64() * total;
+    for &(a, w) in mix {
+        if u < w {
+            return a;
+        }
+        u -= w;
+    }
+    mix.last().map(|&(a, _)| a).unwrap_or(0.4)
+}
+
+/// Drive the server open-loop with `texts` as the request population.
+pub fn run_load(server: &Server, texts: &[String], wl: &Workload) -> Result<LoadResult> {
+    let mut rng = Pcg64::new(wl.seed);
+    let gaps = poisson_gaps(&mut rng, wl.rate, wl.duration);
+    let mut inflight = Vec::with_capacity(gaps.len());
+    let start = Instant::now();
+    for (i, gap) in gaps.iter().enumerate() {
+        std::thread::sleep(*gap);
+        let text = &texts[i % texts.len()];
+        let alpha = sample_alpha(&mut rng, &wl.alpha_mix);
+        inflight.push(server.submit(text, alpha, "mca"));
+    }
+    let mut lat = LatencyStats::default();
+    let mut flops = 0.0;
+    let mut completed = 0usize;
+    for rx in inflight {
+        if let Ok(resp) = rx.recv() {
+            lat.record(resp.latency);
+            flops += resp.flops_reduction;
+            completed += 1;
+        }
+    }
+    let wall = start.elapsed().as_secs_f64();
+    Ok(LoadResult {
+        offered: wl.rate,
+        completed,
+        achieved: completed as f64 / wall,
+        mean_ms: lat.mean_ms(),
+        p50_ms: lat.p50_ms(),
+        p99_ms: lat.p99_ms(),
+        mean_flops_reduction: if completed > 0 { flops / completed as f64 } else { 0.0 },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn poisson_rate_matches() {
+        let mut rng = Pcg64::new(1);
+        let gaps = poisson_gaps(&mut rng, 100.0, Duration::from_secs(20));
+        // Expect ~2000 arrivals; allow generous tolerance.
+        assert!((1700..2300).contains(&gaps.len()), "{}", gaps.len());
+        let mean_gap: f64 =
+            gaps.iter().map(|g| g.as_secs_f64()).sum::<f64>() / gaps.len() as f64;
+        assert!((mean_gap - 0.01).abs() < 0.002, "{mean_gap}");
+    }
+
+    #[test]
+    fn poisson_is_memoryless_ish() {
+        // CV of exponential gaps should be ~1 (distinguishes from uniform).
+        let mut rng = Pcg64::new(2);
+        let gaps: Vec<f64> = poisson_gaps(&mut rng, 50.0, Duration::from_secs(40))
+            .iter()
+            .map(|g| g.as_secs_f64())
+            .collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!((0.85..1.15).contains(&cv), "cv {cv}");
+    }
+
+    #[test]
+    fn alpha_mixture_proportions() {
+        prop::check(20, |g| {
+            let mix = vec![(0.2f32, 1.0), (0.6f32, 3.0)];
+            let mut rng = Pcg64::new(g.case);
+            let n = 4000;
+            let hits = (0..n)
+                .filter(|_| sample_alpha(&mut rng, &mix) == 0.6f32)
+                .count();
+            let frac = hits as f64 / n as f64;
+            prop::close(frac, 0.75, 0.05, "mixture fraction")
+        });
+    }
+
+    #[test]
+    fn empty_mix_defaults() {
+        let mut rng = Pcg64::new(3);
+        assert_eq!(sample_alpha(&mut rng, &[]), 0.4);
+    }
+}

@@ -1,0 +1,551 @@
+//! Serving coordinator: the L3 system piece. A vLLM-router-style setup
+//! scaled to this paper's contribution: requests carry a per-request α
+//! (the MCA precision knob — "simple dynamic control of the
+//! performance-resource trade-off"), a dynamic batcher groups compatible
+//! requests into the compiled batch buckets, and a model-worker thread
+//! that owns the (non-Send) PJRT runtime executes them.
+//!
+//! Split into a pure, property-testable batching policy ([`plan_batches`])
+//! and the threaded worker ([`Server`]).
+
+pub mod loadgen;
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::mca::flops::{self, AttnDims};
+use crate::model::Params;
+use crate::runtime::{HostValue, Runtime};
+use crate::tokenizer::Tokenizer;
+use crate::util::timer::LatencyStats;
+
+// ---------------------------------------------------------------------------
+// Request / response types (all Send)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub text: String,
+    pub alpha: f32,
+    /// "mca" (default) or "exact"
+    pub mode: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub pred_class: i32,
+    pub logits: Vec<f32>,
+    /// measured FLOPs-reduction factor for this sequence (1.0 for exact)
+    pub flops_reduction: f64,
+    pub latency: Duration,
+    pub batch_size: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Pure batching policy
+// ---------------------------------------------------------------------------
+
+/// A queued request with arrival time.
+#[derive(Debug, Clone)]
+pub struct Pending {
+    pub req: Request,
+    pub arrived: Instant,
+}
+
+/// One planned execution batch: indices into the queue, target bucket size.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchPlan {
+    pub indices: Vec<usize>,
+    pub bucket: usize,
+}
+
+/// Group compatible requests (same mode + α bits) into the largest
+/// available bucket; smaller groups ride a padded bucket when they have
+/// waited past `max_wait`, otherwise stay queued.
+///
+/// Invariants (property-tested): every index appears in at most one batch;
+/// batch size <= bucket; all requests in a batch share (mode, alpha).
+pub fn plan_batches(
+    queue: &[Pending],
+    buckets: &[usize],
+    max_wait: Duration,
+    now: Instant,
+) -> Vec<BatchPlan> {
+    let max_bucket = buckets.iter().copied().max().unwrap_or(1);
+    let mut used = vec![false; queue.len()];
+    let mut plans = Vec::new();
+
+    loop {
+        // Find the first unused request; collect its compatibility group.
+        let Some(head) = (0..queue.len()).find(|&i| !used[i]) else { break };
+        let key = (queue[head].req.mode.clone(), queue[head].req.alpha.to_bits());
+        let group: Vec<usize> = (head..queue.len())
+            .filter(|&i| {
+                !used[i]
+                    && queue[i].req.mode == key.0
+                    && queue[i].req.alpha.to_bits() == key.1
+            })
+            .take(max_bucket)
+            .collect();
+
+        let timed_out = now.duration_since(queue[head].arrived) >= max_wait;
+        if group.len() >= max_bucket || timed_out {
+            // pick the smallest bucket that fits the group
+            let bucket = buckets
+                .iter()
+                .copied()
+                .filter(|&b| b >= group.len())
+                .min()
+                .unwrap_or(max_bucket);
+            let take = group.len().min(bucket);
+            let indices: Vec<usize> = group[..take].to_vec();
+            for &i in &indices {
+                used[i] = true;
+            }
+            plans.push(BatchPlan { indices, bucket });
+        } else {
+            // Head not ready: nothing older is ready either -> stop planning.
+            break;
+        }
+    }
+    plans
+}
+
+// ---------------------------------------------------------------------------
+// Model worker + server
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub model: String,
+    /// checkpoint to serve (pre-trained via `mca train`)
+    pub checkpoint: std::path::PathBuf,
+    pub max_wait: Duration,
+    pub seq: usize,
+}
+
+enum Msg {
+    Req(Pending, mpsc::Sender<Response>),
+    Stats(mpsc::Sender<ServerStats>),
+    Shutdown,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub served: usize,
+    pub batches: usize,
+    pub mean_latency_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_batch_size: f64,
+    pub mean_flops_reduction: f64,
+}
+
+pub struct Server {
+    tx: mpsc::Sender<Msg>,
+    handle: Option<JoinHandle<Result<()>>>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl Server {
+    /// Start the worker thread: loads the runtime + checkpoint, warms up
+    /// the serving artifacts, then enters the batch loop.
+    pub fn start(artifacts_dir: std::path::PathBuf, cfg: ServerConfig) -> Result<Server> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::spawn(move || worker_loop(artifacts_dir, cfg, rx, ready_tx));
+        ready_rx
+            .recv()
+            .context("worker died during startup")?
+            .context("worker startup failed")?;
+        Ok(Server { tx, handle: Some(handle), next_id: std::sync::atomic::AtomicU64::new(1) })
+    }
+
+    /// Submit a request; returns the channel the response arrives on.
+    pub fn submit(&self, text: &str, alpha: f32, mode: &str) -> mpsc::Receiver<Response> {
+        let (rtx, rrx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let pending = Pending {
+            req: Request { id, text: text.to_string(), alpha, mode: mode.to_string() },
+            arrived: Instant::now(),
+        };
+        let _ = self.tx.send(Msg::Req(pending, rtx));
+        rrx
+    }
+
+    pub fn stats(&self) -> Result<ServerStats> {
+        let (stx, srx) = mpsc::channel();
+        self.tx.send(Msg::Stats(stx)).ok().context("server down")?;
+        srx.recv().context("server down")
+    }
+
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct WorkerState {
+    rt: Runtime,
+    params: Params,
+    tok: Tokenizer,
+    cfg: ServerConfig,
+    buckets: Vec<usize>,
+    dims: AttnDims,
+    n_layers: usize,
+    stats_lat: LatencyStats,
+    served: usize,
+    batches: usize,
+    batch_size_sum: usize,
+    flops_sum: f64,
+}
+
+fn worker_loop(
+    artifacts_dir: std::path::PathBuf,
+    cfg: ServerConfig,
+    rx: mpsc::Receiver<Msg>,
+    ready_tx: mpsc::Sender<Result<()>>,
+) -> Result<()> {
+    // --- startup ---------------------------------------------------------
+    let init = (|| -> Result<WorkerState> {
+        let mut rt = Runtime::load(&artifacts_dir)?;
+        let model = rt.manifest.model(&cfg.model)?.clone();
+        let params = Params::load(&cfg.checkpoint, &model)?;
+        // Discover serving buckets: every jnp/f32 mca forward batch size.
+        let mut buckets: Vec<usize> = rt
+            .manifest
+            .artifacts
+            .values()
+            .filter(|a| {
+                a.kind == "forward"
+                    && a.model == cfg.model
+                    && a.mode == "mca"
+                    && a.kernel == "jnp"
+                    && a.compute_dtype == "f32"
+                    && a.r_strategy == "max"
+                    && a.p_strategy == "norm"
+                    && a.seq == cfg.seq
+            })
+            .map(|a| a.batch)
+            .collect();
+        buckets.sort_unstable();
+        buckets.dedup();
+        if buckets.is_empty() {
+            anyhow::bail!("no serving artifacts for model {}", cfg.model);
+        }
+        let names: Vec<String> = buckets
+            .iter()
+            .map(|b| serving_artifact(&rt, &cfg.model, "mca", *b, cfg.seq).unwrap())
+            .collect();
+        rt.warmup(&names.iter().map(|s| s.as_str()).collect::<Vec<_>>())?;
+        Ok(WorkerState {
+            dims: AttnDims { d_model: model.d_model, window: model.window },
+            n_layers: model.n_layers,
+            rt,
+            params,
+            tok: Tokenizer::new(),
+            cfg,
+            buckets,
+            stats_lat: LatencyStats::default(),
+            served: 0,
+            batches: 0,
+            batch_size_sum: 0,
+            flops_sum: 0.0,
+        })
+    })();
+
+    let mut st = match init {
+        Ok(st) => {
+            let _ = ready_tx.send(Ok(()));
+            st
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return Ok(());
+        }
+    };
+
+    // --- serve loop -------------------------------------------------------
+    let mut queue: VecDeque<(Pending, mpsc::Sender<Response>)> = VecDeque::new();
+    loop {
+        // Block briefly for new work, so timeouts fire even when idle.
+        match rx.recv_timeout(st.cfg.max_wait / 2) {
+            Ok(Msg::Req(p, tx)) => queue.push_back((p, tx)),
+            Ok(Msg::Stats(tx)) => {
+                let _ = tx.send(ServerStats {
+                    served: st.served,
+                    batches: st.batches,
+                    mean_latency_ms: st.stats_lat.mean_ms(),
+                    p50_ms: st.stats_lat.p50_ms(),
+                    p99_ms: st.stats_lat.p99_ms(),
+                    mean_batch_size: if st.batches > 0 {
+                        st.batch_size_sum as f64 / st.batches as f64
+                    } else {
+                        0.0
+                    },
+                    mean_flops_reduction: if st.served > 0 {
+                        st.flops_sum / st.served as f64
+                    } else {
+                        0.0
+                    },
+                });
+                continue;
+            }
+            Ok(Msg::Shutdown) => break,
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+        // Drain whatever else is already queued.
+        while let Ok(msg) = rx.try_recv() {
+            match msg {
+                Msg::Req(p, tx) => queue.push_back((p, tx)),
+                Msg::Stats(tx) => {
+                    let _ = tx.send(ServerStats::default());
+                }
+                Msg::Shutdown => return Ok(()),
+            }
+        }
+
+        let pendings: Vec<Pending> = queue.iter().map(|(p, _)| p.clone()).collect();
+        let plans = plan_batches(&pendings, &st.buckets, st.cfg.max_wait, Instant::now());
+        if plans.is_empty() {
+            continue;
+        }
+        // Execute plans; collect served queue indices, then drop them.
+        let mut served_idx: Vec<usize> = Vec::new();
+        for plan in &plans {
+            execute_plan(&mut st, &queue, plan)?;
+            served_idx.extend(plan.indices.iter().copied());
+        }
+        served_idx.sort_unstable_by(|a, b| b.cmp(a));
+        for i in served_idx {
+            queue.remove(i);
+        }
+    }
+    Ok(())
+}
+
+fn serving_artifact(rt: &Runtime, model: &str, mode: &str, batch: usize, seq: usize) -> Result<String> {
+    rt.manifest
+        .find_forward(model, mode, batch, |a| {
+            a.kernel == "jnp" && a.compute_dtype == "f32" && a.r_strategy == "max" && a.p_strategy == "norm" && a.seq == seq
+        })
+        .map(|a| a.name.clone())
+        .with_context(|| format!("no serving artifact {model}/{mode}/b{batch}"))
+}
+
+fn execute_plan(
+    st: &mut WorkerState,
+    queue: &VecDeque<(Pending, mpsc::Sender<Response>)>,
+    plan: &BatchPlan,
+) -> Result<()> {
+    let first = &queue[plan.indices[0]].0.req;
+    let mode = first.mode.as_str();
+    let alpha = first.alpha;
+    let artifact = serving_artifact(&st.rt, &st.cfg.model, mode, plan.bucket, st.cfg.seq)
+        .or_else(|_| serving_artifact(&st.rt, &st.cfg.model, "mca", plan.bucket, st.cfg.seq))?;
+    let info = st.rt.manifest.artifact(&artifact)?.clone();
+    let seq = info.seq;
+
+    // Assemble the padded batch (unused rows repeat row 0 — they are
+    // discarded, the bucket just has a fixed compiled shape).
+    let mut ids = vec![0i32; plan.bucket * seq];
+    for (slot, &qi) in plan.indices.iter().enumerate() {
+        let toks = st.tok.encode(&queue[qi].0.req.text, seq);
+        for (j, &t) in toks.iter().enumerate() {
+            ids[slot * seq + j] = t;
+        }
+    }
+    for slot in plan.indices.len()..plan.bucket {
+        for j in 0..seq {
+            ids[slot * seq + j] = ids[j];
+        }
+    }
+
+    let mut inputs = Vec::with_capacity(st.params.values.len() + 3);
+    inputs.extend(st.params.values.iter().cloned());
+    inputs.push(HostValue::I32 { shape: vec![plan.bucket, seq], data: ids });
+    inputs.push(HostValue::scalar_f32(alpha));
+    inputs.push(HostValue::scalar_u32(first.id as u32));
+
+    let t0 = Instant::now();
+    let outputs = st.rt.run(&artifact, &inputs)?;
+    let elapsed = t0.elapsed();
+
+    let logits = outputs[0].as_f32()?;
+    let r_sum = outputs[1].as_f32()?;
+    let n_eff = outputs[2].as_f32()?;
+    let ncl = info.outputs[0].shape[1];
+
+    for (slot, &qi) in plan.indices.iter().enumerate() {
+        let (pending, tx) = &queue[qi];
+        let row = &logits[slot * ncl..(slot + 1) * ncl];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0 as i32;
+        let reduction = if mode == "exact" || n_eff[slot] == 0.0 {
+            1.0
+        } else {
+            flops::reduction_factor(
+                &[(n_eff[slot] as usize, r_sum[slot] as u64)],
+                st.n_layers,
+                st.dims,
+            )
+        };
+        let latency = pending.arrived.elapsed();
+        st.stats_lat.record(latency);
+        st.served += 1;
+        st.flops_sum += reduction;
+        let _ = tx.send(Response {
+            id: pending.req.id,
+            pred_class: pred,
+            logits: row.to_vec(),
+            flops_reduction: reduction,
+            latency,
+            batch_size: plan.indices.len(),
+        });
+    }
+    st.batches += 1;
+    st.batch_size_sum += plan.indices.len();
+    let _ = elapsed;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn pending(id: u64, alpha: f32, mode: &str, age_ms: u64, now: Instant) -> Pending {
+        Pending {
+            req: Request { id, text: String::new(), alpha, mode: mode.into() },
+            arrived: now - Duration::from_millis(age_ms),
+        }
+    }
+
+    #[test]
+    fn full_bucket_batches_immediately() {
+        let now = Instant::now();
+        let q: Vec<Pending> = (0..8).map(|i| pending(i, 0.2, "mca", 0, now)).collect();
+        let plans = plan_batches(&q, &[1, 8], Duration::from_millis(100), now);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].indices.len(), 8);
+        assert_eq!(plans[0].bucket, 8);
+    }
+
+    #[test]
+    fn young_partial_group_waits() {
+        let now = Instant::now();
+        let q = vec![pending(1, 0.2, "mca", 0, now), pending(2, 0.2, "mca", 0, now)];
+        let plans = plan_batches(&q, &[1, 8], Duration::from_millis(100), now);
+        assert!(plans.is_empty());
+    }
+
+    #[test]
+    fn old_singleton_uses_small_bucket() {
+        let now = Instant::now();
+        let q = vec![pending(1, 0.2, "mca", 500, now)];
+        let plans = plan_batches(&q, &[1, 8], Duration::from_millis(100), now);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].bucket, 1);
+    }
+
+    #[test]
+    fn old_partial_group_uses_padded_bucket() {
+        let now = Instant::now();
+        let q: Vec<Pending> = (0..3).map(|i| pending(i, 0.4, "mca", 500, now)).collect();
+        let plans = plan_batches(&q, &[1, 8], Duration::from_millis(100), now);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].indices.len(), 3);
+        assert_eq!(plans[0].bucket, 8);
+    }
+
+    #[test]
+    fn mixed_alphas_do_not_share_batches() {
+        let now = Instant::now();
+        let mut q = Vec::new();
+        for i in 0..4 {
+            q.push(pending(i, 0.2, "mca", 500, now));
+        }
+        for i in 4..8 {
+            q.push(pending(i, 0.6, "mca", 500, now));
+        }
+        let plans = plan_batches(&q, &[1, 8], Duration::from_millis(100), now);
+        assert_eq!(plans.len(), 2);
+        for plan in &plans {
+            let alphas: std::collections::HashSet<u32> =
+                plan.indices.iter().map(|&i| q[i].req.alpha.to_bits()).collect();
+            assert_eq!(alphas.len(), 1);
+        }
+    }
+
+    #[test]
+    fn batcher_invariants_property() {
+        prop::check(300, |g| {
+            let now = Instant::now();
+            let n = g.usize(0..24);
+            let alphas = [0.2f32, 0.4, 0.6];
+            let modes = ["mca", "exact"];
+            let q: Vec<Pending> = (0..n)
+                .map(|i| {
+                    pending(
+                        i as u64,
+                        *g.choose(&alphas),
+                        *g.choose(&modes),
+                        g.u64(0..300),
+                        now,
+                    )
+                })
+                .collect();
+            let buckets = [1usize, 8];
+            let plans = plan_batches(&q, &buckets, Duration::from_millis(100), now);
+
+            let mut seen = std::collections::HashSet::new();
+            for plan in &plans {
+                if plan.indices.is_empty() {
+                    return Err("empty batch".into());
+                }
+                if plan.indices.len() > plan.bucket {
+                    return Err(format!("batch {} > bucket {}", plan.indices.len(), plan.bucket));
+                }
+                if !buckets.contains(&plan.bucket) {
+                    return Err("unknown bucket".into());
+                }
+                let key = (
+                    q[plan.indices[0]].req.mode.clone(),
+                    q[plan.indices[0]].req.alpha.to_bits(),
+                );
+                for &i in &plan.indices {
+                    if !seen.insert(i) {
+                        return Err(format!("request {i} appears twice"));
+                    }
+                    if (q[i].req.mode.clone(), q[i].req.alpha.to_bits()) != key {
+                        return Err("mixed batch".into());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,268 @@
+//! Synthetic task suite: the offline substitute for GLUE (Tables 1–2) and
+//! the long-document classification datasets (Table 3). See DESIGN.md §2
+//! for the substitution argument; the short version is that MCA needs
+//! (a) attention matrices with realistic, task-dependent skew and (b) task
+//! accuracy that responds to attention error — both of which these planted
+//! structure tasks provide, with task-family-matched metrics.
+
+pub mod docs;
+pub mod glue;
+
+use crate::rng::Pcg64;
+
+/// Which heads/metrics a task uses (mirrors the paper's Table 1 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Binary or 3-way classification; label in {0..n_classes}.
+    Classification,
+    /// Scalar regression in [0, 1] (STS-B analog).
+    Regression,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    Accuracy,
+    F1,
+    Matthews,
+    Pearson,
+    Spearman,
+}
+
+impl Metric {
+    pub fn short(&self) -> &'static str {
+        match self {
+            Metric::Accuracy => "Acc.",
+            Metric::F1 => "F1",
+            Metric::Matthews => "MC",
+            Metric::Pearson => "PC",
+            Metric::Spearman => "SC",
+        }
+    }
+}
+
+/// A labeled example; `ids` is unpadded (CLS ... SEP), padding happens at
+/// batch-assembly time.
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub ids: Vec<i32>,
+    pub label: Label,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Label {
+    Class(i32),
+    Score(f32),
+}
+
+impl Label {
+    pub fn class(&self) -> i32 {
+        match self {
+            Label::Class(c) => *c,
+            Label::Score(_) => panic!("regression label used as class"),
+        }
+    }
+
+    pub fn score(&self) -> f32 {
+        match self {
+            Label::Score(s) => *s,
+            Label::Class(c) => *c as f32,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub train: Vec<Example>,
+    pub dev: Vec<Example>,
+}
+
+/// Task descriptor: everything the trainer/eval harness needs.
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub name: &'static str,
+    pub kind: TaskKind,
+    pub n_classes: i32,
+    pub metrics: &'static [Metric],
+    /// Which model family evaluates this task (64-token GLUE vs 256-token docs).
+    pub max_len: usize,
+    pub train_size: usize,
+    pub dev_size: usize,
+}
+
+/// Generate the dataset for a task by name (deterministic in `seed`).
+pub fn generate(spec: &TaskSpec, seed: u64) -> Dataset {
+    let mut rng = Pcg64::with_stream(seed, fxhash(spec.name));
+    let gen: fn(&TaskSpec, &mut Pcg64, usize) -> Vec<Example> = match spec.name {
+        "cola_sim" => glue::gen_cola,
+        "sst2_sim" => glue::gen_sst2,
+        "mrpc_sim" => glue::gen_mrpc,
+        "stsb_sim" => glue::gen_stsb,
+        "qqp_sim" => glue::gen_qqp,
+        "mnli_sim" => glue::gen_mnli,
+        "qnli_sim" => glue::gen_qnli,
+        "rte_sim" => glue::gen_rte,
+        "wnli_sim" => glue::gen_wnli,
+        "aapd_sim" => docs::gen_aapd,
+        "hnd_sim" => docs::gen_hnd,
+        "imdb_sim" => docs::gen_imdb,
+        other => panic!("unknown task {other}"),
+    };
+    let train = gen(spec, &mut rng, spec.train_size);
+    let dev = gen(spec, &mut rng, spec.dev_size);
+    Dataset { train, dev }
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The nine GLUE-analog tasks of Tables 1–2, in the paper's row order.
+pub fn glue_tasks() -> Vec<TaskSpec> {
+    use Metric::*;
+    let t = |name, kind, n_classes, metrics, train_size| TaskSpec {
+        name,
+        kind,
+        n_classes,
+        metrics,
+        max_len: 64,
+        train_size,
+        dev_size: 512,
+    };
+    vec![
+        t("cola_sim", TaskKind::Classification, 2, &[Matthews][..], 3000),
+        t("sst2_sim", TaskKind::Classification, 2, &[Accuracy][..], 3000),
+        t("mrpc_sim", TaskKind::Classification, 2, &[Accuracy, F1][..], 3000),
+        t("stsb_sim", TaskKind::Regression, 1, &[Pearson, Spearman][..], 3000),
+        t("qqp_sim", TaskKind::Classification, 2, &[Accuracy, F1][..], 3000),
+        t("mnli_sim", TaskKind::Classification, 3, &[Accuracy][..], 4000),
+        t("qnli_sim", TaskKind::Classification, 2, &[Accuracy][..], 3000),
+        t("rte_sim", TaskKind::Classification, 2, &[Accuracy][..], 2000),
+        t("wnli_sim", TaskKind::Classification, 2, &[Accuracy][..], 800),
+    ]
+}
+
+/// The three document-classification tasks of Table 3.
+pub fn doc_tasks() -> Vec<TaskSpec> {
+    use Metric::*;
+    vec![
+        TaskSpec {
+            name: "aapd_sim",
+            kind: TaskKind::Classification,
+            n_classes: 3,
+            metrics: &[Accuracy, F1][..],
+            max_len: 256,
+            train_size: 2000,
+            dev_size: 384,
+        },
+        TaskSpec {
+            name: "hnd_sim",
+            kind: TaskKind::Classification,
+            n_classes: 2,
+            metrics: &[Accuracy, F1][..],
+            max_len: 256,
+            train_size: 2000,
+            dev_size: 384,
+        },
+        TaskSpec {
+            name: "imdb_sim",
+            kind: TaskKind::Classification,
+            n_classes: 2,
+            metrics: &[Accuracy][..],
+            max_len: 256,
+            train_size: 2000,
+            dev_size: 384,
+        },
+    ]
+}
+
+pub fn task_by_name(name: &str) -> Option<TaskSpec> {
+    glue_tasks().into_iter().chain(doc_tasks()).find(|t| t.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::{CLS_ID, PAD_ID, SEP_ID};
+    use std::collections::HashSet;
+
+    fn check_dataset(spec: &TaskSpec) {
+        let ds = generate(spec, 42);
+        assert_eq!(ds.train.len(), spec.train_size, "{}", spec.name);
+        assert_eq!(ds.dev.len(), spec.dev_size, "{}", spec.name);
+        for ex in ds.train.iter().chain(&ds.dev) {
+            assert!(ex.ids.len() >= 3, "{}: too short", spec.name);
+            assert!(ex.ids.len() <= spec.max_len, "{}: too long", spec.name);
+            assert_eq!(ex.ids[0], CLS_ID);
+            assert_eq!(*ex.ids.last().unwrap(), SEP_ID);
+            assert!(!ex.ids.contains(&PAD_ID), "{}: PAD inside example", spec.name);
+            match (spec.kind, ex.label) {
+                (TaskKind::Classification, Label::Class(c)) => {
+                    assert!((0..spec.n_classes).contains(&c), "{}: label {c}", spec.name)
+                }
+                (TaskKind::Regression, Label::Score(s)) => {
+                    assert!((0.0..=1.0).contains(&s), "{}: score {s}", spec.name)
+                }
+                other => panic!("{}: wrong label kind {:?}", spec.name, other.1),
+            }
+        }
+    }
+
+    #[test]
+    fn all_tasks_generate_valid_data() {
+        for spec in glue_tasks().iter().chain(doc_tasks().iter()) {
+            check_dataset(spec);
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let spec = task_by_name("sst2_sim").unwrap();
+        let a = generate(&spec, 7);
+        let b = generate(&spec, 7);
+        assert_eq!(a.train[0].ids, b.train[0].ids);
+        assert_eq!(a.dev[10].ids, b.dev[10].ids);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let spec = task_by_name("sst2_sim").unwrap();
+        let a = generate(&spec, 1);
+        let b = generate(&spec, 2);
+        assert_ne!(
+            a.train.iter().take(8).map(|e| e.ids.clone()).collect::<Vec<_>>(),
+            b.train.iter().take(8).map(|e| e.ids.clone()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn classification_labels_are_balanced_enough() {
+        for spec in glue_tasks() {
+            if spec.kind != TaskKind::Classification {
+                continue;
+            }
+            let ds = generate(&spec, 3);
+            let mut counts = vec![0usize; spec.n_classes as usize];
+            for ex in &ds.train {
+                counts[ex.label.class() as usize] += 1;
+            }
+            let minority = *counts.iter().min().unwrap() as f64 / ds.train.len() as f64;
+            assert!(minority > 0.15, "{}: class balance {:?}", spec.name, counts);
+        }
+    }
+
+    #[test]
+    fn train_dev_do_not_share_examples_verbatim() {
+        let spec = task_by_name("cola_sim").unwrap();
+        let ds = generate(&spec, 5);
+        let train: HashSet<Vec<i32>> = ds.train.iter().map(|e| e.ids.clone()).collect();
+        let overlap = ds.dev.iter().filter(|e| train.contains(&e.ids)).count();
+        // Random generation can collide occasionally; near-total overlap
+        // would mean the split is broken.
+        assert!(overlap < ds.dev.len() / 10, "overlap {overlap}");
+    }
+}

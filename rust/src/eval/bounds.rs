@@ -1,0 +1,134 @@
+//! Empirical validation of the paper's theory (Lemma 1 / Theorem 2): runs
+//! the host-side estimator across an α grid and reports measured error vs
+//! the theoretical bounds — the "bound tightness" experiment referenced in
+//! DESIGN.md §5 (Ablations row). Pure host math; no artifacts needed.
+
+use crate::mca::{self, RStrategy};
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+
+/// One α row of the bound-tightness table.
+#[derive(Debug, Clone)]
+pub struct BoundRow {
+    pub alpha: f64,
+    /// mean measured per-token error E‖Ỹ[i] − Y[i]‖ (max over tokens)
+    pub measured_mean: f64,
+    /// empirical (1-δ)-quantile of the error, δ = 0.1
+    pub measured_q90: f64,
+    /// Theorem 2 mean bound α·β·‖W‖_F
+    pub thm2_mean_bound: f64,
+    /// Theorem 2 tail bound α·β·‖W‖_F/δ
+    pub thm2_tail_bound: f64,
+    /// mean sample fraction Σr_i / (n·d)
+    pub sample_fraction: f64,
+}
+
+/// Run the bound experiment on synthetic Gaussian data.
+pub fn bound_experiment(
+    n: usize,
+    d: usize,
+    alphas: &[f64],
+    runs: usize,
+    seed: u64,
+) -> Vec<BoundRow> {
+    let mut rng = Pcg64::new(seed);
+    let x = Tensor::from_fn(&[n, d], |_| rng.gen_normal() as f32);
+    let w = Tensor::from_fn(&[d, d], |_| rng.gen_normal() as f32);
+    let scores = Tensor::from_fn(&[n, n], |_| (2.0 * rng.gen_normal()) as f32);
+    let attn = vec![scores.softmax_rows().unwrap()];
+    let mask = vec![true; n];
+    let p = mca::sampling_probs(&w);
+    let w_frob = w.frob_norm() as f64;
+
+    let h_exact = x.matmul(&w).unwrap();
+    let y_exact = attn[0].matmul(&h_exact).unwrap();
+    let imp = mca::token_importance(&attn, &mask, RStrategy::Max);
+
+    alphas
+        .iter()
+        .map(|&alpha| {
+            let r = mca::sample_counts(&imp, &mask, alpha, d);
+            let mut max_errs = Vec::with_capacity(runs);
+            for run in 0..runs {
+                let mut rs = Pcg64::new(seed ^ 0xB0D ^ (run as u64 * 7919 + 13));
+                let h = mca::mca_encode(&mut rs, &x, &w, &r, &p);
+                let y = attn[0].matmul(&h).unwrap();
+                let mut worst = 0.0f64;
+                for i in 0..n {
+                    let err: f64 = y
+                        .row(i)
+                        .iter()
+                        .zip(y_exact.row(i))
+                        .map(|(a, b)| ((a - b) * (a - b)) as f64)
+                        .sum::<f64>()
+                        .sqrt();
+                    worst = worst.max(err);
+                }
+                max_errs.push(worst);
+            }
+            max_errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mean = max_errs.iter().sum::<f64>() / max_errs.len() as f64;
+            let q90 = max_errs[((max_errs.len() as f64 * 0.9) as usize).min(max_errs.len() - 1)];
+            let r_total: usize = r.iter().sum();
+            BoundRow {
+                alpha,
+                measured_mean: mean,
+                measured_q90: q90,
+                thm2_mean_bound: mca::theorem2_bound(&x, w_frob, alpha),
+                thm2_tail_bound: mca::theorem2_tail_bound(&x, w_frob, alpha, 0.1),
+                sample_fraction: r_total as f64 / (n * d) as f64,
+            }
+        })
+        .collect()
+}
+
+/// Markdown rendering of the table.
+pub fn render(rows: &[BoundRow]) -> String {
+    let mut s = String::from(
+        "| α | measured mean err | Thm2 mean bound | measured q90 | Thm2 tail bound (δ=0.1) | sample frac |\n|---|---|---|---|---|---|\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "| {:.2} | {:.3} | {:.3} | {:.3} | {:.3} | {:.2} |\n",
+            r.alpha, r.measured_mean, r.thm2_mean_bound, r.measured_q90, r.thm2_tail_bound,
+            r.sample_fraction
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_hold_and_scale() {
+        let rows = bound_experiment(8, 32, &[0.3, 0.6, 1.0], 60, 42);
+        for r in &rows {
+            // Theorem 2 mean bound must hold empirically.
+            assert!(
+                r.measured_mean <= r.thm2_mean_bound,
+                "α={}: {} > {}",
+                r.alpha,
+                r.measured_mean,
+                r.thm2_mean_bound
+            );
+            // Tail bound is looser than the mean bound.
+            assert!(r.thm2_tail_bound > r.thm2_mean_bound);
+            assert!((0.0..=1.0).contains(&r.sample_fraction));
+        }
+        // Larger α -> fewer samples.
+        assert!(rows[2].sample_fraction <= rows[0].sample_fraction);
+        // Bound scales linearly in α.
+        let ratio = rows[2].thm2_mean_bound / rows[0].thm2_mean_bound;
+        assert!((ratio - 1.0 / 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn render_has_rows() {
+        let rows = bound_experiment(4, 16, &[0.5], 10, 7);
+        let s = render(&rows);
+        assert_eq!(s.lines().count(), 3);
+        assert!(s.contains("0.50"));
+    }
+}

@@ -1,0 +1,290 @@
+//! Evaluation harness: reproduces the paper's Tables 1–3 and Figures 1–2.
+//!
+//! For each task: train (or load) a fine-tuned model, evaluate the exact
+//! baseline once, then run the MCA forward artifact over the dev set for a
+//! grid of alpha values × random seeds, reporting the task metric (mean ±
+//! 95% CI over seeds, as the paper does with 128 seeds) and the measured
+//! FLOPs reduction factor computed from the in-graph Σr_i.
+
+pub mod bounds;
+pub mod tables;
+
+use anyhow::{Context, Result};
+
+use crate::data::{Dataset, Example, Label, Metric, TaskKind, TaskSpec};
+use crate::mca::flops::{self, AttnDims};
+use crate::metrics::{self, MeanCi};
+use crate::model::Params;
+use crate::runtime::{HostValue, Runtime};
+use crate::train::make_batch;
+
+/// Predictions + measured FLOPs for one pass over the dev set.
+pub struct PassResult {
+    pub pred_cls: Vec<i32>,
+    pub pred_score: Vec<f64>,
+    /// per-sequence (n_eff, Σ_layers Σ_i r_i) for FLOPs accounting
+    pub per_seq: Vec<(usize, u64)>,
+}
+
+/// One α column of a table row.
+#[derive(Debug, Clone)]
+pub struct AlphaResult {
+    pub alpha: f64,
+    /// per metric: mean ± CI over seeds
+    pub metrics: Vec<(Metric, MeanCi)>,
+    pub flops_reduction: MeanCi,
+}
+
+/// One table row (one task).
+#[derive(Debug, Clone)]
+pub struct TaskRow {
+    pub task: String,
+    pub baseline: Vec<(Metric, f64)>,
+    pub alphas: Vec<AlphaResult>,
+}
+
+/// Run one forward artifact over the whole dev set.
+pub fn run_pass(
+    rt: &mut Runtime,
+    artifact: &str,
+    params: &Params,
+    dev: &[Example],
+    kind: TaskKind,
+    n_classes: i32,
+    alpha: f64,
+    seed: u32,
+) -> Result<PassResult> {
+    let info = rt.manifest.artifact(artifact)?.clone();
+    let (batch, seq) = (info.batch, info.seq);
+    let mut out = PassResult { pred_cls: Vec::new(), pred_score: Vec::new(), per_seq: Vec::new() };
+
+    let mut i = 0;
+    while i < dev.len() {
+        let chunk: Vec<&Example> = dev[i..(i + batch).min(dev.len())].iter().collect();
+        let real = chunk.len();
+        let (ids, _) = make_batch(&chunk, batch, seq, kind);
+        let mut inputs = Vec::with_capacity(params.values.len() + 3);
+        inputs.extend(params.values.iter().cloned());
+        inputs.push(ids);
+        inputs.push(HostValue::scalar_f32(alpha as f32));
+        inputs.push(HostValue::scalar_u32(seed));
+
+        let outputs = rt.run(artifact, &inputs)?;
+        let logits = outputs[0].as_f32()?;
+        let r_sum = outputs[1].as_f32()?;
+        let n_eff = outputs[2].as_f32()?;
+        let ncl = info.outputs[0].shape[1];
+
+        for b in 0..real {
+            let row = &logits[b * ncl..(b + 1) * ncl];
+            match kind {
+                TaskKind::Classification => {
+                    let k = n_classes.min(ncl as i32) as usize;
+                    let pred = row[..k]
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0 as i32;
+                    out.pred_cls.push(pred);
+                }
+                TaskKind::Regression => out.pred_score.push(row[0] as f64),
+            }
+            out.per_seq.push((n_eff[b] as usize, r_sum[b] as u64));
+        }
+        i += real;
+    }
+    Ok(out)
+}
+
+/// Compute a metric value from predictions vs the dev labels.
+pub fn metric_value(metric: Metric, pass: &PassResult, dev: &[Example]) -> f64 {
+    match metric {
+        Metric::Accuracy | Metric::F1 | Metric::Matthews => {
+            let gold: Vec<i32> = dev.iter().map(|e| e.label.class()).collect();
+            match metric {
+                Metric::Accuracy => metrics::accuracy(&pass.pred_cls, &gold),
+                Metric::F1 => metrics::f1_binary(&pass.pred_cls, &gold),
+                Metric::Matthews => metrics::matthews_corr(&pass.pred_cls, &gold),
+                _ => unreachable!(),
+            }
+        }
+        Metric::Pearson | Metric::Spearman => {
+            let gold: Vec<f64> = dev
+                .iter()
+                .map(|e| match e.label {
+                    Label::Score(s) => s as f64,
+                    Label::Class(c) => c as f64,
+                })
+                .collect();
+            match metric {
+                Metric::Pearson => metrics::pearson(&pass.pred_score, &gold),
+                Metric::Spearman => metrics::spearman(&pass.pred_score, &gold),
+                _ => unreachable!(),
+            }
+        }
+    }
+}
+
+/// Measured FLOPs-reduction factor of one MCA pass vs the exact baseline.
+pub fn pass_reduction(pass: &PassResult, n_layers: usize, dims: AttnDims) -> f64 {
+    let per_seq: Vec<(usize, u64)> =
+        pass.per_seq.iter().filter(|&&(n, _)| n > 0).cloned().collect();
+    flops::reduction_factor(&per_seq, n_layers, dims)
+}
+
+/// Options for a task evaluation.
+pub struct EvalOptions {
+    pub alphas: Vec<f64>,
+    pub seeds: u32,
+    /// artifact-name suffix filters
+    pub compute_dtype: String,
+    pub r_strategy: String,
+    pub p_strategy: String,
+}
+
+impl Default for EvalOptions {
+    fn default() -> Self {
+        EvalOptions {
+            alphas: vec![0.2, 0.4, 0.6, 1.0],
+            seeds: 16,
+            compute_dtype: "f32".into(),
+            r_strategy: "max".into(),
+            p_strategy: "norm".into(),
+        }
+    }
+}
+
+/// Locate the eval-batch forward artifact for (model, mode, options).
+pub fn forward_artifact(
+    rt: &Runtime,
+    model: &str,
+    mode: &str,
+    opts: &EvalOptions,
+) -> Result<String> {
+    // Eval uses the largest available batch for the model.
+    rt.manifest
+        .artifacts
+        .values()
+        .filter(|a| {
+            a.kind == "forward"
+                && a.model == model
+                && a.mode == mode
+                && a.kernel == "jnp"
+                && a.compute_dtype == if mode == "exact" && opts.compute_dtype != "f32" { opts.compute_dtype.clone() } else if mode == "mca" { opts.compute_dtype.clone() } else { "f32".into() }
+                && (mode == "exact" || (a.r_strategy == opts.r_strategy && a.p_strategy == opts.p_strategy))
+        })
+        .max_by_key(|a| a.batch)
+        .map(|a| a.name.clone())
+        .with_context(|| format!("no {mode} forward artifact for {model} with {:?}/{}/{}", opts.compute_dtype, opts.r_strategy, opts.p_strategy))
+}
+
+/// Evaluate one task end-to-end: baseline + α grid. `params` must already
+/// be fine-tuned for the task.
+pub fn eval_task(
+    rt: &mut Runtime,
+    model_name: &str,
+    spec: &TaskSpec,
+    params: &Params,
+    ds: &Dataset,
+    opts: &EvalOptions,
+    verbose: bool,
+) -> Result<TaskRow> {
+    let model = rt.manifest.model(model_name)?.clone();
+    let dims = AttnDims { d_model: model.d_model, window: model.window };
+    let exact_name = forward_artifact(rt, model_name, "exact", opts)?;
+    let mca_name = forward_artifact(rt, model_name, "mca", opts)?;
+
+    // Baseline: exact attention, deterministic.
+    let base_pass = run_pass(rt, &exact_name, params, &ds.dev, spec.kind, spec.n_classes, 1.0, 0)?;
+    let baseline: Vec<(Metric, f64)> = spec
+        .metrics
+        .iter()
+        .map(|&m| (m, metric_value(m, &base_pass, &ds.dev)))
+        .collect();
+
+    let mut alphas = Vec::new();
+    for &alpha in &opts.alphas {
+        let mut metric_samples: Vec<Vec<f64>> = vec![Vec::new(); spec.metrics.len()];
+        let mut reductions = Vec::new();
+        for seed in 0..opts.seeds {
+            let pass = run_pass(
+                rt, &mca_name, params, &ds.dev, spec.kind, spec.n_classes, alpha,
+                0xA11CE + seed,
+            )?;
+            for (k, &m) in spec.metrics.iter().enumerate() {
+                metric_samples[k].push(metric_value(m, &pass, &ds.dev));
+            }
+            reductions.push(pass_reduction(&pass, model.n_layers, dims));
+        }
+        let res = AlphaResult {
+            alpha,
+            metrics: spec
+                .metrics
+                .iter()
+                .enumerate()
+                .map(|(k, &m)| (m, metrics::mean_ci(&metric_samples[k])))
+                .collect(),
+            flops_reduction: metrics::mean_ci(&reductions),
+        };
+        if verbose {
+            let m0 = res.metrics[0].1;
+            eprintln!(
+                "[eval {model_name}/{}] alpha={alpha:.1}: {} {:.2}±{:.2} | {:.2}x FLOPs",
+                spec.name,
+                spec.metrics[0].short(),
+                100.0 * m0.mean,
+                100.0 * m0.ci95,
+                res.flops_reduction.mean
+            );
+        }
+        alphas.push(res);
+    }
+
+    Ok(TaskRow { task: spec.name.to_string(), baseline, alphas })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_pass(preds: Vec<i32>, per_seq: Vec<(usize, u64)>) -> PassResult {
+        PassResult { pred_cls: preds, pred_score: vec![], per_seq }
+    }
+
+    #[test]
+    fn metric_value_dispatches() {
+        let dev = vec![
+            Example { ids: vec![1, 2], label: Label::Class(1) },
+            Example { ids: vec![1, 2], label: Label::Class(0) },
+        ];
+        let pass = fake_pass(vec![1, 1], vec![]);
+        assert_eq!(metric_value(Metric::Accuracy, &pass, &dev), 0.5);
+        let f1 = metric_value(Metric::F1, &pass, &dev);
+        assert!(f1 > 0.0 && f1 <= 1.0);
+    }
+
+    #[test]
+    fn metric_value_regression() {
+        let dev = vec![
+            Example { ids: vec![1], label: Label::Score(0.1) },
+            Example { ids: vec![1], label: Label::Score(0.5) },
+            Example { ids: vec![1], label: Label::Score(0.9) },
+        ];
+        let pass = PassResult {
+            pred_cls: vec![],
+            pred_score: vec![0.2, 0.6, 1.0],
+            per_seq: vec![],
+        };
+        assert!((metric_value(Metric::Pearson, &pass, &dev) - 1.0).abs() < 1e-9);
+        assert!((metric_value(Metric::Spearman, &pass, &dev) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pass_reduction_ignores_empty_rows() {
+        let dims = AttnDims { d_model: 128, window: None };
+        let pass = fake_pass(vec![], vec![(0, 0), (32, 32 * 4 * 8)]);
+        let f = pass_reduction(&pass, 4, dims);
+        assert!(f > 1.0);
+    }
+}

@@ -1,0 +1,207 @@
+//! Experiment orchestration: train-or-load checkpoints and produce each
+//! table/figure of the paper from one entry point. Used by the `mca`
+//! binary and by `examples/reproduce_table*.rs` / `figure*.rs`.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use super::{eval_task, forward_artifact, metric_value, pass_reduction, run_pass, EvalOptions, TaskRow};
+use crate::data::{self, TaskSpec};
+use crate::mca::flops::{dtype_factor, AttnDims};
+use crate::metrics::{mean_ci, MeanCi};
+use crate::runtime::Runtime;
+use crate::train::{train_or_load, TrainConfig};
+
+/// Shared experiment context: artifact dir, checkpoint cache, train/eval
+/// configuration.
+pub struct Pipeline {
+    pub artifacts_dir: PathBuf,
+    pub ckpt_root: PathBuf,
+    pub train_cfg: TrainConfig,
+    pub data_seed: u64,
+    pub verbose: bool,
+}
+
+impl Pipeline {
+    pub fn new(artifacts_dir: PathBuf) -> Pipeline {
+        Pipeline {
+            artifacts_dir,
+            ckpt_root: PathBuf::from("checkpoints"),
+            train_cfg: TrainConfig::default(),
+            data_seed: 1234,
+            verbose: true,
+        }
+    }
+
+    /// Evaluate a set of tasks on one model — the generic table driver
+    /// (Table 1 = bert_sim × GLUE, Table 2 = distil_sim × GLUE,
+    /// Table 3 = longformer_sim × doc tasks).
+    pub fn run_table(
+        &self,
+        model: &str,
+        tasks: &[TaskSpec],
+        opts: &EvalOptions,
+    ) -> Result<Vec<TaskRow>> {
+        let mut rt = Runtime::load(&self.artifacts_dir)?;
+        let mut rows = Vec::new();
+        for spec in tasks {
+            if self.verbose {
+                eprintln!("[table] {model} / {} ...", spec.name);
+            }
+            let ds = data::generate(spec, self.data_seed);
+            let params =
+                train_or_load(&mut rt, &self.ckpt_root, model, spec, &ds, &self.train_cfg, self.verbose)?;
+            rows.push(eval_task(&mut rt, model, spec, &params, &ds, opts, self.verbose)?);
+        }
+        Ok(rows)
+    }
+
+    /// Figure 1: FLOPs–accuracy trade-off on the SST-2 analog for
+    /// (model × {f32, bf16} × {exact, mca-α-sweep}). Returns labeled series
+    /// of (relative FLOPs, accuracy) points.
+    pub fn figure1(
+        &self,
+        models: &[&str],
+        alphas: &[f64],
+        seeds: u32,
+    ) -> Result<Vec<(String, Vec<(f64, f64)>)>> {
+        let mut rt = Runtime::load(&self.artifacts_dir)?;
+        let spec = data::task_by_name("sst2_sim").unwrap();
+        let ds = data::generate(&spec, self.data_seed);
+        let mut series = Vec::new();
+
+        for &model_name in models {
+            let model = rt.manifest.model(model_name)?.clone();
+            let dims = AttnDims { d_model: model.d_model, window: model.window };
+            let params = train_or_load(
+                &mut rt, &self.ckpt_root, model_name, &spec, &ds, &self.train_cfg, self.verbose,
+            )?;
+
+            for dtype in ["f32", "bf16"] {
+                let opts = EvalOptions { compute_dtype: dtype.into(), ..Default::default() };
+                let factor = dtype_factor(dtype);
+
+                // Exact baseline point at relative FLOPs = dtype factor.
+                let exact_name = forward_artifact(&rt, model_name, "exact", &opts)?;
+                let base = run_pass(&mut rt, &exact_name, &params, &ds.dev, spec.kind, spec.n_classes, 1.0, 0)?;
+                let base_acc = metric_value(spec.metrics[0], &base, &ds.dev);
+                series.push((format!("{model_name}/{dtype}/exact"), vec![(factor, base_acc)]));
+
+                // MCA sweep.
+                let mca_name = forward_artifact(&rt, model_name, "mca", &opts)?;
+                let mut pts = Vec::new();
+                for &alpha in alphas {
+                    let mut accs = Vec::new();
+                    let mut rels = Vec::new();
+                    for seed in 0..seeds {
+                        let pass = run_pass(
+                            &mut rt, &mca_name, &params, &ds.dev, spec.kind, spec.n_classes,
+                            alpha, 0xF16 + seed,
+                        )?;
+                        accs.push(metric_value(spec.metrics[0], &pass, &ds.dev));
+                        rels.push(factor / pass_reduction(&pass, model.n_layers, dims));
+                    }
+                    let acc = mean_ci(&accs).mean;
+                    let rel = mean_ci(&rels).mean;
+                    pts.push((rel, acc));
+                    if self.verbose {
+                        eprintln!("[fig1] {model_name}/{dtype} α={alpha:.2}: relFLOPs {rel:.3} acc {acc:.4}");
+                    }
+                }
+                series.push((format!("{model_name}/{dtype}/mca"), pts));
+            }
+        }
+        Ok(series)
+    }
+
+    /// Figure 2: accuracy (±CI) vs α for the given models on SST-2.
+    pub fn figure2(
+        &self,
+        models: &[&str],
+        alphas: &[f64],
+        seeds: u32,
+    ) -> Result<Vec<(String, Vec<(f64, MeanCi)>)>> {
+        let mut rt = Runtime::load(&self.artifacts_dir)?;
+        let spec = data::task_by_name("sst2_sim").unwrap();
+        let ds = data::generate(&spec, self.data_seed);
+        let mut out = Vec::new();
+        for &model_name in models {
+            let params = train_or_load(
+                &mut rt, &self.ckpt_root, model_name, &spec, &ds, &self.train_cfg, self.verbose,
+            )?;
+            let opts = EvalOptions::default();
+            let mca_name = forward_artifact(&rt, model_name, "mca", &opts)?;
+            let mut pts = Vec::new();
+            for &alpha in alphas {
+                let mut accs = Vec::new();
+                for seed in 0..seeds {
+                    let pass = run_pass(
+                        &mut rt, &mca_name, &params, &ds.dev, spec.kind, spec.n_classes, alpha,
+                        0xF2 + seed,
+                    )?;
+                    accs.push(metric_value(spec.metrics[0], &pass, &ds.dev));
+                }
+                let ci = mean_ci(&accs);
+                if self.verbose {
+                    eprintln!("[fig2] {model_name} α={alpha:.2}: acc {:.4}±{:.4}", ci.mean, ci.ci95);
+                }
+                pts.push((alpha, ci));
+            }
+            out.push((model_name.to_string(), pts));
+        }
+        Ok(out)
+    }
+
+    /// Ablations (DESIGN.md §5): r-pooling strategy (max/mean/median) and
+    /// sampling distribution (norm vs uniform) on bert_sim / SST-2.
+    /// Returns (label, accuracy ±CI, reduction ±CI).
+    pub fn ablations(&self, seeds: u32, alpha: f64) -> Result<Vec<(String, MeanCi, MeanCi)>> {
+        let mut rt = Runtime::load(&self.artifacts_dir)?;
+        let spec = data::task_by_name("sst2_sim").unwrap();
+        let ds = data::generate(&spec, self.data_seed);
+        let model_name = "bert_sim";
+        let model = rt.manifest.model(model_name)?.clone();
+        let dims = AttnDims { d_model: model.d_model, window: model.window };
+        let params = train_or_load(
+            &mut rt, &self.ckpt_root, model_name, &spec, &ds, &self.train_cfg, self.verbose,
+        )?;
+
+        let variants: Vec<(String, EvalOptions)> = vec![
+            ("r=max, p=norm (paper)".into(), EvalOptions::default()),
+            (
+                "r=mean, p=norm".into(),
+                EvalOptions { r_strategy: "mean".into(), ..Default::default() },
+            ),
+            (
+                "r=median, p=norm".into(),
+                EvalOptions { r_strategy: "median".into(), ..Default::default() },
+            ),
+            (
+                "r=max, p=uniform".into(),
+                EvalOptions { p_strategy: "uniform".into(), ..Default::default() },
+            ),
+        ];
+
+        let mut out = Vec::new();
+        for (label, opts) in variants {
+            let name = forward_artifact(&rt, model_name, "mca", &opts)?;
+            let mut accs = Vec::new();
+            let mut reds = Vec::new();
+            for seed in 0..seeds {
+                let pass = run_pass(
+                    &mut rt, &name, &params, &ds.dev, spec.kind, spec.n_classes, alpha,
+                    0xAB1A + seed,
+                )?;
+                accs.push(metric_value(spec.metrics[0], &pass, &ds.dev));
+                reds.push(pass_reduction(&pass, model.n_layers, dims));
+            }
+            let (acc, red) = (mean_ci(&accs), mean_ci(&reds));
+            if self.verbose {
+                eprintln!("[ablate] {label}: acc {:.4}±{:.4}, {:.2}x", acc.mean, acc.ci95, red.mean);
+            }
+            out.push((label, acc, red));
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,25 @@
+//! # mca — Monte-Carlo Attention (AAAI 2022) reproduction
+//!
+//! Three-layer Rust + JAX + Pallas system: Pallas kernels (L1) and the JAX
+//! transformer (L2) are AOT-lowered to HLO text once (`make artifacts`);
+//! this crate (L3) owns everything on the request path: the PJRT runtime,
+//! the serving coordinator, the trainer, the synthetic task suite, the
+//! evaluation harness reproducing the paper's tables/figures, and the
+//! host-side MCA reference estimator.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for results.
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod mca;
+pub mod metrics;
+pub mod model;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod tokenizer;
+pub mod train;
+pub mod util;

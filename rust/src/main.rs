@@ -1,0 +1,562 @@
+//! `mca` — CLI for the Monte-Carlo Attention reproduction.
+//!
+//! Subcommands map 1:1 onto the paper's experiments (DESIGN.md §5):
+//!   table1 / table2 / table3   reproduce the evaluation tables
+//!   figure1 / figure2          reproduce the figures (ASCII + CSV)
+//!   ablations                  r-strategy + sampling-distribution ablations
+//!   train                      fine-tune one model on one task
+//!   serve                      serving demo (dynamic batching, live α)
+//!   info                       artifact + model inventory
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use mca::data;
+use mca::eval::tables::Pipeline;
+use mca::eval::EvalOptions;
+use mca::report;
+use mca::runtime::{default_artifacts_dir, Runtime};
+use mca::train::TrainConfig;
+use mca::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_help();
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let rest = &argv[1..];
+    let code = match run(&cmd, rest) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    eprintln!(
+        "mca — Monte-Carlo Attention (AAAI 2022) reproduction\n\n\
+         usage: mca <command> [options]\n\n\
+         commands:\n\
+           table1      MCA-BERT on the GLUE-analog suite (paper Table 1)\n\
+           table2      MCA-DistilBERT on the GLUE-analog suite (Table 2)\n\
+           table3      MCA-Longformer on the doc-classification suite (Table 3)\n\
+           figure1     FLOPs-accuracy trade-off incl. bf16 (Figure 1)\n\
+           figure2     accuracy vs alpha (Figure 2)\n\
+           ablations   r-strategy + sampling-distribution ablations\n\
+           train       fine-tune one model on one task\n\
+           serve       serving demo with dynamic batching\n\
+           info        list models + artifacts\n\n\
+         run `mca <command> --help-cmd` for options"
+    );
+}
+
+fn pipeline(args: &Args) -> Result<Pipeline> {
+    let mut p = Pipeline::new(artifacts_dir(args));
+    p.ckpt_root = PathBuf::from(args.get("checkpoints"));
+    p.train_cfg = TrainConfig {
+        steps: args.get_usize("train-steps")?,
+        lr: args.get_f64("lr")?,
+        ..TrainConfig::default()
+    };
+    p.verbose = !args.get_flag("quiet");
+    Ok(p)
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    let d = args.get("artifacts");
+    if d.is_empty() {
+        default_artifacts_dir()
+    } else {
+        PathBuf::from(d)
+    }
+}
+
+fn common(args: Args) -> Args {
+    args.opt("artifacts", "", "artifacts directory (default: repo artifacts/)")
+        .opt("checkpoints", "checkpoints", "checkpoint cache directory")
+        .opt("train-steps", "400", "fine-tuning steps per task")
+        .opt("lr", "0.001", "fine-tuning learning rate")
+        .opt("seeds", "8", "random seeds per (task, alpha) cell")
+        .opt("alphas", "0.2,0.4,0.6,1.0", "alpha grid")
+        .opt("out", "", "also write the table/figure to this file")
+        .flag("csv", "emit CSV instead of a markdown table")
+        .flag("quiet", "suppress progress logs")
+        .flag("help-cmd", "show options for this command")
+}
+
+fn emit(args: &Args, text: &str) -> Result<()> {
+    println!("{text}");
+    let out = args.get("out");
+    if !out.is_empty() {
+        std::fs::write(&out, text)?;
+        eprintln!("[written to {out}]");
+    }
+    Ok(())
+}
+
+fn run(cmd: &str, rest: &[String]) -> Result<()> {
+    match cmd {
+        "table1" | "table2" => {
+            let args = common(Args::new()).parse(rest)?;
+            if args.get_flag("help-cmd") {
+                eprint!("{}", args.usage(cmd));
+                return Ok(());
+            }
+            let model = if cmd == "table1" { "bert_sim" } else { "distil_sim" };
+            let opts = EvalOptions {
+                alphas: args.get_f64_list("alphas")?,
+                seeds: args.get_usize("seeds")? as u32,
+                ..Default::default()
+            };
+            let rows = pipeline(&args)?.run_table(model, &data::glue_tasks(), &opts)?;
+            let title = format!(
+                "{}: MCA-{} on the GLUE-analog suite",
+                if cmd == "table1" { "Table 1" } else { "Table 2" },
+                if cmd == "table1" { "BERT(sim)" } else { "DistilBERT(sim)" }
+            );
+            let text = if args.get_flag("csv") {
+                report::render_csv(&rows)
+            } else {
+                report::render_table(&title, &rows)
+            };
+            emit(&args, &text)
+        }
+        "table3" => {
+            let args = common(Args::new()).parse(rest)?;
+            if args.get_flag("help-cmd") {
+                eprint!("{}", args.usage(cmd));
+                return Ok(());
+            }
+            let opts = EvalOptions {
+                alphas: args.get_f64_list("alphas")?,
+                seeds: args.get_usize("seeds")? as u32,
+                ..Default::default()
+            };
+            let rows = pipeline(&args)?.run_table("longformer_sim", &data::doc_tasks(), &opts)?;
+            let text = if args.get_flag("csv") {
+                report::render_csv(&rows)
+            } else {
+                report::render_table("Table 3: MCA-Longformer(sim) on document classification", &rows)
+            };
+            emit(&args, &text)
+        }
+        "figure1" => {
+            let args = common(Args::new()).parse(rest)?;
+            if args.get_flag("help-cmd") {
+                eprint!("{}", args.usage(cmd));
+                return Ok(());
+            }
+            let alphas = if args.get("alphas") == "0.2,0.4,0.6,1.0" {
+                vec![0.1, 0.2, 0.3, 0.4, 0.6, 0.8, 1.0]
+            } else {
+                args.get_f64_list("alphas")?
+            };
+            let series = pipeline(&args)?.figure1(
+                &["bert_sim", "distil_sim"],
+                &alphas,
+                args.get_usize("seeds")? as u32,
+            )?;
+            let named: Vec<(&str, Vec<(f64, f64)>)> =
+                series.iter().map(|(n, p)| (n.as_str(), p.clone())).collect();
+            let mut text = report::render_scatter(
+                "Figure 1: accuracy vs relative attention FLOPs (sst2_sim)",
+                "relative FLOPs (exact f32 = 1.0)",
+                "accuracy",
+                &named,
+                64,
+                20,
+            );
+            text.push_str("\nseries points (relative_flops, accuracy):\n");
+            for (name, pts) in &series {
+                text.push_str(&format!("  {name}: {pts:?}\n"));
+            }
+            emit(&args, &text)
+        }
+        "figure2" => {
+            let args = common(Args::new()).parse(rest)?;
+            if args.get_flag("help-cmd") {
+                eprint!("{}", args.usage(cmd));
+                return Ok(());
+            }
+            let alphas = if args.get("alphas") == "0.2,0.4,0.6,1.0" {
+                vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.8, 1.0]
+            } else {
+                args.get_f64_list("alphas")?
+            };
+            let series = pipeline(&args)?.figure2(
+                &["bert_sim", "distil_sim"],
+                &alphas,
+                args.get_usize("seeds")? as u32,
+            )?;
+            let mut text = String::from("Figure 2: accuracy vs alpha (sst2_sim), 95% CI\n\n");
+            text.push_str("model,alpha,accuracy,ci95\n");
+            for (name, pts) in &series {
+                for (alpha, ci) in pts {
+                    text.push_str(&format!("{name},{alpha},{:.4},{:.4}\n", ci.mean, ci.ci95));
+                }
+            }
+            let named: Vec<(&str, Vec<(f64, f64)>)> = series
+                .iter()
+                .map(|(n, p)| (n.as_str(), p.iter().map(|&(a, ci)| (a, ci.mean)).collect()))
+                .collect();
+            text.push('\n');
+            text.push_str(&report::render_scatter(
+                "accuracy vs alpha",
+                "alpha",
+                "accuracy",
+                &named,
+                64,
+                16,
+            ));
+            emit(&args, &text)
+        }
+        "ablations" => {
+            let args = common(Args::new())
+                .opt("alpha", "0.4", "alpha for the ablation comparison")
+                .parse(rest)?;
+            if args.get_flag("help-cmd") {
+                eprint!("{}", args.usage(cmd));
+                return Ok(());
+            }
+            let rows = pipeline(&args)?.ablations(
+                args.get_usize("seeds")? as u32,
+                args.get_f64("alpha")?,
+            )?;
+            let mut text = String::from(
+                "Ablations (bert_sim / sst2_sim)\n\n| Variant | Accuracy | FLOPS reduction |\n|---|---|---|\n",
+            );
+            for (label, acc, red) in &rows {
+                text.push_str(&format!(
+                    "| {label} | {:.2}±{:.2} | {:.2}×±{:.2} |\n",
+                    100.0 * acc.mean,
+                    100.0 * acc.ci95,
+                    red.mean,
+                    red.ci95
+                ));
+            }
+            emit(&args, &text)
+        }
+        "train" => {
+            let args = common(Args::new())
+                .opt("model", "bert_sim", "model config")
+                .opt("task", "sst2_sim", "task name")
+                .parse(rest)?;
+            if args.get_flag("help-cmd") {
+                eprint!("{}", args.usage(cmd));
+                return Ok(());
+            }
+            let p = pipeline(&args)?;
+            let spec = data::task_by_name(&args.get("task"))
+                .ok_or_else(|| anyhow::anyhow!("unknown task {}", args.get("task")))?;
+            let ds = data::generate(&spec, p.data_seed);
+            let mut rt = Runtime::load(&p.artifacts_dir)?;
+            let out =
+                mca::train::train_task(&mut rt, &args.get("model"), &spec, &ds, &p.train_cfg, true)?;
+            let path = mca::model::checkpoint_path(&p.ckpt_root, &args.get("model"), spec.name);
+            std::fs::create_dir_all(&p.ckpt_root)?;
+            out.params.save(&path)?;
+            println!("final loss {:.4}; checkpoint saved to {path:?}", out.final_loss);
+            Ok(())
+        }
+        "serve" => {
+            let args = common(Args::new())
+                .opt("model", "bert_sim", "model config")
+                .opt("task", "sst2_sim", "task checkpoint to serve")
+                .opt("requests", "64", "demo request count")
+                .opt("max-wait-ms", "20", "batching window")
+                .parse(rest)?;
+            if args.get_flag("help-cmd") {
+                eprint!("{}", args.usage(cmd));
+                return Ok(());
+            }
+            serve_demo(&args)
+        }
+        "info" => {
+            let args = common(Args::new()).parse(rest)?;
+            let rt = Runtime::load(&artifacts_dir(&args))?;
+            println!("platform: {}", rt.platform());
+            println!("\nmodels:");
+            for m in rt.manifest.models.values() {
+                println!(
+                    "  {:<16} d={} layers={} heads={} max_len={} window={:?} params={}",
+                    m.name,
+                    m.d_model,
+                    m.n_layers,
+                    m.n_heads,
+                    m.max_len,
+                    m.window,
+                    m.param_spec.iter().map(|(_, s)| s.iter().product::<usize>()).sum::<usize>()
+                );
+            }
+            println!("\nartifacts:");
+            for a in rt.manifest.artifacts.values() {
+                println!(
+                    "  {:<40} kind={:<10} b={} n={} mode={} kernel={} dtype={}",
+                    a.name, a.kind, a.batch, a.seq, a.mode, a.kernel, a.compute_dtype
+                );
+            }
+            Ok(())
+        }
+        "project" => {
+            // Project measured FLOPs reductions (results/tableN.csv) to the
+            // paper's d=768 — the §Scale-mapping column of EXPERIMENTS.md.
+            let args = common(Args::new())
+                .opt("table", "results/table1.csv", "measured table CSV")
+                .opt("d-from", "128", "feature dim of the measurement")
+                .opt("d-to", "768", "feature dim to project to")
+                .parse(rest)?;
+            if args.get_flag("help-cmd") {
+                eprint!("{}", args.usage(cmd));
+                return Ok(());
+            }
+            project_cmd(&args)
+        }
+        "validate" => {
+            // Compile every artifact and cross-check manifest shapes — the
+            // deployment preflight.
+            let args = common(Args::new()).parse(rest)?;
+            let mut rt = Runtime::load(&artifacts_dir(&args))?;
+            let names: Vec<String> = rt.manifest.artifacts.keys().cloned().collect();
+            let mut ok = 0;
+            for name in &names {
+                match rt.warmup(&[name.as_str()]) {
+                    Ok(()) => {
+                        ok += 1;
+                        println!("  ok  {name}");
+                    }
+                    Err(e) => println!(" FAIL {name}: {e:#}"),
+                }
+            }
+            println!("{ok}/{} artifacts compile", names.len());
+            if ok != names.len() {
+                bail!("validation failed");
+            }
+            Ok(())
+        }
+        "bounds" => {
+            // Empirical Lemma-1 / Theorem-2 bound-tightness table (host
+            // estimator; no artifacts needed).
+            let args = common(Args::new())
+                .opt("n", "16", "sequence length")
+                .opt("d", "64", "feature dimension")
+                .opt("runs", "200", "monte-carlo runs per alpha")
+                .parse(rest)?;
+            if args.get_flag("help-cmd") {
+                eprint!("{}", args.usage(cmd));
+                return Ok(());
+            }
+            let alphas = args.get_f64_list("alphas")?;
+            let rows = mca::eval::bounds::bound_experiment(
+                args.get_usize("n")?,
+                args.get_usize("d")?,
+                &alphas,
+                args.get_usize("runs")?,
+                42,
+            );
+            let text = format!(
+                "Theorem 2 bound tightness (n={}, d={}, {} runs)\n\n{}",
+                args.get("n"),
+                args.get("d"),
+                args.get("runs"),
+                mca::eval::bounds::render(&rows)
+            );
+            emit(&args, &text)
+        }
+        "loadtest" => {
+            // Open-loop Poisson load sweep against the serving coordinator.
+            let args = common(Args::new())
+                .opt("model", "bert_sim", "model config")
+                .opt("task", "sst2_sim", "task checkpoint to serve")
+                .opt("rates", "20,50,100,200", "offered rates (req/s)")
+                .opt("secs", "3", "duration per rate")
+                .opt("max-wait-ms", "10", "batching window")
+                .parse(rest)?;
+            if args.get_flag("help-cmd") {
+                eprint!("{}", args.usage(cmd));
+                return Ok(());
+            }
+            loadtest(&args)
+        }
+        "--help" | "-h" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (see `mca help`)"),
+    }
+}
+
+fn project_cmd(args: &Args) -> Result<()> {
+    use mca::mca::flops::project_reduction;
+
+    let csv = std::fs::read_to_string(args.get("table"))
+        .map_err(|e| anyhow::anyhow!("{}: {e} (run the table first)", args.get("table")))?;
+    let d_from = args.get_f64("d-from")?;
+    let d_to = args.get_f64("d-to")?;
+
+    // Mean effective length per task, measured from the actual datasets.
+    let mut n_bar: std::collections::BTreeMap<String, f64> = Default::default();
+    for spec in data::glue_tasks().iter().chain(data::doc_tasks().iter()) {
+        let ds = data::generate(spec, 1234);
+        let mean =
+            ds.dev.iter().map(|e| e.ids.len() as f64).sum::<f64>() / ds.dev.len() as f64;
+        n_bar.insert(spec.name.to_string(), mean);
+    }
+
+    let mut text = format!(
+        "Projected FLOPs reduction at d={d_to} (from measurements at d={d_from}; see EXPERIMENTS.md §Scale mapping)\n\n| Task | α | measured ({d_from}) | n̄ | projected ({d_to}) |\n|---|---|---|---|---|\n"
+    );
+    for line in csv.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() < 7 {
+            continue;
+        }
+        let (task, alpha, reduction): (&str, &str, f64) = (f[0], f[2], f[6].parse().unwrap_or(0.0));
+        // one row per (task, alpha): skip duplicate metric rows
+        if f[1] != "Acc." && f[1] != "MC" && f[1] != "PC" {
+            continue;
+        }
+        let nb = *n_bar.get(task).unwrap_or(&24.0);
+        let proj = project_reduction(reduction, nb, d_from, d_to);
+        text.push_str(&format!(
+            "| {task} | {alpha} | {reduction:.2}× | {nb:.1} | {proj:.2}× |\n"
+        ));
+    }
+    emit(args, &text)
+}
+
+fn loadtest(args: &Args) -> Result<()> {
+    use mca::coordinator::loadgen::{run_load, Workload};
+    use mca::coordinator::{Server, ServerConfig};
+    use std::time::Duration;
+
+    let model = args.get("model");
+    let task = args.get("task");
+    let p = pipeline(args)?;
+    let ckpt = mca::model::checkpoint_path(&p.ckpt_root, &model, &task);
+    if !ckpt.exists() {
+        let spec =
+            data::task_by_name(&task).ok_or_else(|| anyhow::anyhow!("unknown task {task}"))?;
+        let ds = data::generate(&spec, p.data_seed);
+        let mut rt = Runtime::load(&p.artifacts_dir)?;
+        let out = mca::train::train_task(&mut rt, &model, &spec, &ds, &p.train_cfg, true)?;
+        std::fs::create_dir_all(&p.ckpt_root)?;
+        out.params.save(&ckpt)?;
+    }
+    let server = Server::start(
+        p.artifacts_dir.clone(),
+        ServerConfig {
+            model: model.clone(),
+            checkpoint: ckpt,
+            max_wait: Duration::from_millis(args.get_u64("max-wait-ms")?),
+            seq: 64,
+        },
+    )?;
+    let spec = data::task_by_name(&task).unwrap();
+    let ds = data::generate(&spec, p.data_seed);
+    let tok = mca::tokenizer::Tokenizer::new();
+    let texts: Vec<String> = ds
+        .dev
+        .iter()
+        .take(128)
+        .map(|e| tok.decode(&e.ids).replace("[CLS] ", "").replace(" [SEP]", ""))
+        .collect();
+
+    let mut text = String::from(
+        "| offered req/s | achieved | mean ms | p50 ms | p99 ms | FLOPs red. |\n|---|---|---|---|---|---|\n",
+    );
+    for rate in args.get_f64_list("rates")? {
+        let wl = Workload {
+            rate,
+            duration: Duration::from_secs(args.get_u64("secs")?),
+            alpha_mix: vec![(0.2, 1.0), (0.4, 1.0), (0.6, 1.0)],
+            seed: 7,
+        };
+        let r = run_load(&server, &texts, &wl)?;
+        eprintln!(
+            "[loadtest] offered {rate:.0}: achieved {:.1}, p99 {:.1}ms",
+            r.achieved, r.p99_ms
+        );
+        text.push_str(&format!(
+            "| {:.0} | {:.1} | {:.1} | {:.1} | {:.1} | {:.2}× |\n",
+            r.offered, r.achieved, r.mean_ms, r.p50_ms, r.p99_ms, r.mean_flops_reduction
+        ));
+    }
+    emit(args, &text)?;
+    server.shutdown()
+}
+
+fn serve_demo(args: &Args) -> Result<()> {
+    use mca::coordinator::{Server, ServerConfig};
+    use std::time::Duration;
+
+    let model = args.get("model");
+    let task = args.get("task");
+    let p = pipeline(args)?;
+
+    // Ensure a checkpoint exists (train on demand).
+    let ckpt = mca::model::checkpoint_path(&p.ckpt_root, &model, &task);
+    if !ckpt.exists() {
+        eprintln!("[serve] no checkpoint for {model}/{task}; training first...");
+        let spec =
+            data::task_by_name(&task).ok_or_else(|| anyhow::anyhow!("unknown task {task}"))?;
+        let ds = data::generate(&spec, p.data_seed);
+        let mut rt = Runtime::load(&p.artifacts_dir)?;
+        let out = mca::train::train_task(&mut rt, &model, &spec, &ds, &p.train_cfg, true)?;
+        std::fs::create_dir_all(&p.ckpt_root)?;
+        out.params.save(&ckpt)?;
+    }
+
+    let server = Server::start(
+        p.artifacts_dir.clone(),
+        ServerConfig {
+            model: model.clone(),
+            checkpoint: ckpt,
+            max_wait: Duration::from_millis(args.get_u64("max-wait-ms")?),
+            seq: 64,
+        },
+    )?;
+
+    // Generate demo traffic from the dev set.
+    let spec = data::task_by_name(&task).unwrap();
+    let ds = data::generate(&spec, p.data_seed);
+    let tok = mca::tokenizer::Tokenizer::new();
+    let n = args.get_usize("requests")?;
+    let alphas = [0.2f32, 0.4, 0.6];
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..n {
+        let ex = &ds.dev[i % ds.dev.len()];
+        let text = tok.decode(&ex.ids).replace("[CLS] ", "").replace(" [SEP]", "");
+        pending.push((server.submit(&text, alphas[i % alphas.len()], "mca"), ex.label.class()));
+    }
+    let mut correct = 0usize;
+    for (rx, gold) in pending {
+        let resp = rx.recv()?;
+        if resp.pred_class == gold {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let stats = server.stats()?;
+    println!(
+        "served {n} requests in {:.2}s ({:.1} req/s)",
+        wall.as_secs_f64(),
+        n as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "latency mean {:.1}ms p50 {:.1}ms p99 {:.1}ms | mean batch {:.2} | mean FLOPs reduction {:.2}x | acc {:.3}",
+        stats.mean_latency_ms,
+        stats.p50_ms,
+        stats.p99_ms,
+        stats.mean_batch_size,
+        stats.mean_flops_reduction,
+        correct as f64 / n as f64
+    );
+    server.shutdown()
+}

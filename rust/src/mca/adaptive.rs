@@ -1,0 +1,153 @@
+//! Adaptive α control — the "simple dynamic control of performance-resource
+//! trade-off" the paper's intro promises, made into a first-class feature.
+//!
+//! Two pieces:
+//!
+//! * [`alpha_for_error_budget`] — invert Theorem 2: given a per-token error
+//!   budget ε (and the model statistics β, ‖W‖_F that the artifact fixes),
+//!   the α that guarantees `E‖Ỹ[i] − Y[i]‖ ≤ ε` is `α = ε / (β‖W‖_F)`.
+//! * [`AlphaController`] — an online controller for serving: it watches a
+//!   quality proxy per batch (e.g. top-logit margin drift, or task
+//!   accuracy on canaries) and walks α multiplicatively toward the largest
+//!   value that keeps the proxy above its floor — AIMD, like congestion
+//!   control, because quality collapses sharply past the knee (Figure 1's
+//!   "logarithmic trade-off").
+
+/// Invert the Theorem-2 mean bound: ε = α·β·‖W‖_F  =>  α = ε / (β·‖W‖_F).
+/// Returns α clamped to (0, 1].
+pub fn alpha_for_error_budget(epsilon: f64, beta: f64, w_frob: f64) -> f64 {
+    if beta <= 0.0 || w_frob <= 0.0 {
+        return 1.0;
+    }
+    (epsilon / (beta * w_frob)).clamp(1e-6, 1.0)
+}
+
+/// Invert the Theorem-2 tail bound (probability ≥ 1−δ):
+/// ε = α·β·‖W‖_F/δ  =>  α = ε·δ / (β·‖W‖_F).
+pub fn alpha_for_tail_budget(epsilon: f64, delta: f64, beta: f64, w_frob: f64) -> f64 {
+    alpha_for_error_budget(epsilon * delta, beta, w_frob)
+}
+
+/// AIMD controller on α: additive increase while the quality proxy holds,
+/// multiplicative decrease when it violates the floor.
+#[derive(Debug, Clone)]
+pub struct AlphaController {
+    pub alpha: f64,
+    pub min_alpha: f64,
+    pub max_alpha: f64,
+    /// additive step on success
+    pub increase: f64,
+    /// multiplicative backoff on violation
+    pub backoff: f64,
+    /// quality floor (proxy units, e.g. minimum acceptable mean margin)
+    pub quality_floor: f64,
+    violations: u64,
+    updates: u64,
+}
+
+impl AlphaController {
+    pub fn new(initial: f64, quality_floor: f64) -> AlphaController {
+        AlphaController {
+            alpha: initial.clamp(0.05, 1.0),
+            min_alpha: 0.05,
+            max_alpha: 1.0,
+            increase: 0.05,
+            backoff: 0.5,
+            quality_floor,
+            violations: 0,
+            updates: 0,
+        }
+    }
+
+    /// Feed one quality observation; returns the α to use next.
+    pub fn observe(&mut self, quality: f64) -> f64 {
+        self.updates += 1;
+        if quality < self.quality_floor {
+            self.violations += 1;
+            self.alpha = (self.alpha * self.backoff).max(self.min_alpha);
+        } else {
+            self.alpha = (self.alpha + self.increase).min(self.max_alpha);
+        }
+        self.alpha
+    }
+
+    pub fn violation_rate(&self) -> f64 {
+        if self.updates == 0 {
+            0.0
+        } else {
+            self.violations as f64 / self.updates as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn budget_inversion_roundtrips() {
+        prop::check(200, |g| {
+            let beta = g.f64(0.1..10.0);
+            let w = g.f64(0.1..50.0);
+            let eps = g.f64(0.001..5.0);
+            let alpha = alpha_for_error_budget(eps, beta, w);
+            // Feeding α back into the bound must not exceed ε (unless clamped).
+            let bound = alpha * beta * w;
+            if alpha < 1.0 - 1e-12 && alpha > 1e-6 + 1e-12 && bound > eps * (1.0 + 1e-9) {
+                return Err(format!("bound {bound} > eps {eps}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tail_budget_is_stricter() {
+        let a_mean = alpha_for_error_budget(1.0, 2.0, 3.0);
+        let a_tail = alpha_for_tail_budget(1.0, 0.1, 2.0, 3.0);
+        assert!(a_tail < a_mean);
+    }
+
+    #[test]
+    fn degenerate_stats_give_full_precision_alpha() {
+        assert_eq!(alpha_for_error_budget(0.5, 0.0, 3.0), 1.0);
+    }
+
+    #[test]
+    fn controller_backs_off_on_violation() {
+        let mut c = AlphaController::new(0.8, 0.5);
+        let a1 = c.observe(0.1); // violation
+        assert!(a1 < 0.8);
+        let a2 = c.observe(0.9); // ok -> additive increase
+        assert!(a2 > a1);
+    }
+
+    #[test]
+    fn controller_converges_to_knee() {
+        // Simulated system: quality = 1 - alpha (knee at quality floor 0.5
+        // => alpha* = 0.5). The controller should oscillate around it.
+        let mut c = AlphaController::new(0.1, 0.5);
+        let mut trace = Vec::new();
+        for _ in 0..200 {
+            let quality = 1.0 - c.alpha;
+            trace.push(c.observe(quality));
+        }
+        let tail: Vec<f64> = trace[100..].to_vec();
+        let mean = tail.iter().sum::<f64>() / tail.len() as f64;
+        assert!((0.3..0.7).contains(&mean), "mean alpha {mean}");
+    }
+
+    #[test]
+    fn controller_stays_in_bounds() {
+        prop::check(100, |g| {
+            let mut c = AlphaController::new(g.f64(0.05..1.0), 0.5);
+            for _ in 0..50 {
+                let a = c.observe(g.f64(0.0..1.0));
+                if !(c.min_alpha..=c.max_alpha).contains(&a) {
+                    return Err(format!("alpha {a} escaped bounds"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,223 @@
+//! FLOPs accounting for the attention operation — the paper's headline
+//! metric. The paper counts only the attention op "A·X·W" (Experiments
+//! §FLOPS Reduction): the encoding X·W plus the weighted sum A·H, per
+//! layer, over real (non-PAD) tokens.
+//!
+//! * exact:    2·n·d² (X·W)  +  2·n²·d (A·H)
+//! * MCA:      Σ_i 2·r_i·d   +  2·n²·d      (sampling overhead amortized
+//!                                           to zero, as in the paper —
+//!                                           p(i) is cached in the model)
+//! * windowed: the A·H term shrinks to the banded + global pattern.
+//!
+//! The MCA Σr_i is *measured in-graph* (the forward artifact returns it),
+//! so reported reductions use the true sampled cost, not an estimate.
+
+/// Static per-layer description needed for accounting.
+#[derive(Debug, Clone, Copy)]
+pub struct AttnDims {
+    pub d_model: usize,
+    /// sliding-window half-width (None = dense attention)
+    pub window: Option<usize>,
+}
+
+/// FLOPs of one layer's exact attention op for a sequence with n_eff real
+/// tokens.
+pub fn exact_layer_flops(n_eff: usize, dims: AttnDims) -> u64 {
+    let n = n_eff as u64;
+    let d = dims.d_model as u64;
+    let encode = 2 * n * d * d;
+    let weighted_sum = 2 * attn_pairs(n_eff, dims) * d;
+    encode + weighted_sum
+}
+
+/// FLOPs of one layer's MCA attention op given the measured Σ_i r_i.
+pub fn mca_layer_flops(n_eff: usize, r_sum: u64, dims: AttnDims) -> u64 {
+    let d = dims.d_model as u64;
+    let encode = 2 * r_sum * d;
+    let weighted_sum = 2 * attn_pairs(n_eff, dims) * d;
+    encode + weighted_sum
+}
+
+/// Number of (query, key) pairs the A·H product touches: n² dense, or the
+/// banded + global-CLS pattern for windowed attention.
+pub fn attn_pairs(n_eff: usize, dims: AttnDims) -> u64 {
+    let n = n_eff as u64;
+    match dims.window {
+        None => n * n,
+        Some(w) => {
+            let w = w as u64;
+            // banded rows: each query sees up to 2w+1 keys (clipped at the
+            // edges), plus the global CLS row and column.
+            let mut pairs = 0u64;
+            for q in 0..n {
+                let lo = q.saturating_sub(w);
+                let hi = (q + w + 1).min(n);
+                pairs += hi - lo;
+            }
+            // global CLS: row 0 sees all n keys; column 0 is seen by all
+            // queries. Avoid double counting entries already in the band.
+            for q in 0..n {
+                let lo = q.saturating_sub(w);
+                if lo > 0 {
+                    pairs += 1; // column 0 for this query
+                }
+            }
+            let row0_extra = n.saturating_sub(w + 1);
+            pairs + row0_extra
+        }
+    }
+}
+
+/// Aggregate reduction factor over a dataset: Σ exact / Σ mca, both summed
+/// over sequences and layers. `per_seq` = (n_eff, measured Σ_layers Σ_i r_i).
+pub fn reduction_factor(per_seq: &[(usize, u64)], n_layers: usize, dims: AttnDims) -> f64 {
+    let mut exact = 0u64;
+    let mut mca = 0u64;
+    for &(n_eff, r_sum_all_layers) in per_seq {
+        exact += n_layers as u64 * exact_layer_flops(n_eff, dims);
+        // r_sum is summed across layers already; the weighted-sum term is
+        // per layer.
+        mca += 2 * r_sum_all_layers * dims.d_model as u64
+            + n_layers as u64 * 2 * attn_pairs(n_eff, dims) * dims.d_model as u64;
+    }
+    if mca == 0 {
+        return 0.0;
+    }
+    exact as f64 / mca as f64
+}
+
+/// Project a reduction factor measured at one feature dimension to another
+/// (EXPERIMENTS.md §Scale mapping). From f = (d + n̄)/(r̄ + n̄) we recover
+/// the (d-independent) mean sample count r̄ = (d_from + n̄)/f − n̄ and
+/// re-evaluate at d_to. Conservative for saturated tokens: at larger d the
+/// cap r_i ≤ d loosens, so true r̄ can only stay equal or grow slower than
+/// d — the projected factor is a *lower bound modulo the cap*.
+pub fn project_reduction(f_measured: f64, n_bar: f64, d_from: f64, d_to: f64) -> f64 {
+    if f_measured <= 0.0 || n_bar < 0.0 {
+        return 0.0;
+    }
+    let r_bar = ((d_from + n_bar) / f_measured - n_bar).max(1.0);
+    (d_to + n_bar) / (r_bar + n_bar)
+}
+
+/// FLOPs multiplier for reduced-precision compute (Figure 1's FP16 axis):
+/// following the paper's convention that FP16 halves the attention FLOPs
+/// cost equivalent.
+pub fn dtype_factor(compute_dtype: &str) -> f64 {
+    match compute_dtype {
+        "bf16" | "f16" => 0.5,
+        _ => 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    const DENSE: AttnDims = AttnDims { d_model: 128, window: None };
+
+    #[test]
+    fn exact_formula() {
+        // n=64, d=128: 2*64*128^2 + 2*64^2*128
+        assert_eq!(exact_layer_flops(64, DENSE), 2 * 64 * 128 * 128 + 2 * 64 * 64 * 128);
+    }
+
+    #[test]
+    fn mca_equals_exact_at_full_budget() {
+        // r_i = d for all i => Σr_i = n*d => identical FLOPs
+        let n = 64u64;
+        let d = 128u64;
+        assert_eq!(mca_layer_flops(64, n * d, DENSE), exact_layer_flops(64, DENSE));
+    }
+
+    #[test]
+    fn mca_reduction_grows_as_r_shrinks() {
+        let hi = mca_layer_flops(64, 64 * 128, DENSE);
+        let lo = mca_layer_flops(64, 64 * 8, DENSE);
+        assert!(lo < hi);
+    }
+
+    #[test]
+    fn windowed_pairs_less_than_dense() {
+        let wdims = AttnDims { d_model: 128, window: Some(32) };
+        assert!(attn_pairs(256, wdims) < attn_pairs(256, AttnDims { d_model: 128, window: None }));
+        // and linear-ish in n: doubling n should much-less-than-quadruple
+        let p1 = attn_pairs(128, wdims);
+        let p2 = attn_pairs(256, wdims);
+        assert!(p2 < 3 * p1, "{p2} vs {p1}");
+    }
+
+    #[test]
+    fn windowed_pairs_small_n_edge_cases() {
+        let wdims = AttnDims { d_model: 16, window: Some(4) };
+        // n smaller than the window: everything is in the band = dense
+        assert_eq!(attn_pairs(3, wdims), 9);
+        assert_eq!(attn_pairs(1, wdims), 1);
+        assert_eq!(attn_pairs(0, wdims), 0);
+    }
+
+    #[test]
+    fn reduction_factor_sane() {
+        prop::check(50, |g| {
+            let n_layers = g.usize(1..6);
+            let mut per_seq = Vec::new();
+            for _ in 0..g.usize(1..10) {
+                let n_eff = g.usize(4..64);
+                // r between the min (n*L, r_i=1) and max (n*L*d)
+                let r_min = (n_eff * n_layers) as u64;
+                let r_max = (n_eff * n_layers * 128) as u64;
+                let r = g.u64(r_min..r_max + 1);
+                per_seq.push((n_eff, r));
+            }
+            let f = reduction_factor(&per_seq, n_layers, DENSE);
+            if f < 1.0 - 1e-9 {
+                return Err(format!("reduction < 1: {f}"));
+            }
+            // upper bound: encode cost can vanish but A·H remains
+            let max_f = 1.0 + 128.0 / 1.0; // loose sanity cap
+            if f > max_f {
+                return Err(format!("reduction absurd: {f}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn reduction_factor_exact_is_one() {
+        // r_sum at the saturated budget (= n*d per layer) gives factor 1.
+        let per_seq: Vec<(usize, u64)> = vec![(32, 32 * 128 * 4)];
+        let f = reduction_factor(&per_seq, 4, DENSE);
+        assert!((f - 1.0).abs() < 1e-9, "{f}");
+    }
+
+    #[test]
+    fn projection_identity_and_monotone() {
+        // projecting to the same d is the identity
+        let f = 3.2;
+        assert!((project_reduction(f, 20.0, 128.0, 128.0) - f).abs() < 1e-9);
+        // projecting to a larger d increases the factor
+        assert!(project_reduction(f, 20.0, 128.0, 768.0) > f);
+        // no-reduction measurement projects to >=1 at any d (r̄ = d_from)
+        let f768 = project_reduction(1.0, 20.0, 128.0, 768.0);
+        assert!(f768 >= 1.0);
+    }
+
+    #[test]
+    fn projection_roundtrip() {
+        prop::check(100, |g| {
+            let n_bar = g.f64(4.0..64.0);
+            let r_bar = g.f64(1.0..128.0);
+            let f128 = (128.0 + n_bar) / (r_bar + n_bar);
+            let f768 = project_reduction(f128, n_bar, 128.0, 768.0);
+            let want = (768.0 + n_bar) / (r_bar + n_bar);
+            prop::close(f768, want, 1e-9, "projection")
+        });
+    }
+
+    #[test]
+    fn dtype_factors() {
+        assert_eq!(dtype_factor("f32"), 1.0);
+        assert_eq!(dtype_factor("bf16"), 0.5);
+    }
+}

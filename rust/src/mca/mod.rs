@@ -1,0 +1,356 @@
+//! Host-side MCA core: the reference estimator (paper Eq. 5/6/9), sample
+//! count rules, theoretical error bounds (Lemma 1 / Theorem 2) and FLOPs
+//! accounting. This is the Rust mirror of `python/compile/kernels/ref.py`:
+//! the in-graph implementation is what runs in production; this module is
+//! the comparator used by integration tests, the serving-side FLOPs
+//! estimator, and the ablation harness.
+
+pub mod adaptive;
+pub mod flops;
+
+use crate::rng::{AliasTable, Pcg64};
+use crate::tensor::Tensor;
+
+/// Pooling strategy for per-token importance (paper: max; mean/median are
+/// the future-work variants our ablation study measures).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RStrategy {
+    Max,
+    Mean,
+    Median,
+}
+
+impl RStrategy {
+    pub fn parse(s: &str) -> Option<RStrategy> {
+        match s {
+            "max" => Some(RStrategy::Max),
+            "mean" => Some(RStrategy::Mean),
+            "median" => Some(RStrategy::Median),
+            _ => None,
+        }
+    }
+}
+
+/// Eq. 6: input-independent sampling distribution p(i) = ||W[i]||^2 / ||W||_F^2.
+pub fn sampling_probs(w: &Tensor) -> Vec<f64> {
+    let d = w.shape()[0];
+    let mut p: Vec<f64> = (0..d).map(|i| (w.row_norm(i) as f64).powi(2)).collect();
+    let total: f64 = p.iter().sum();
+    if total <= 0.0 {
+        return vec![1.0 / d as f64; d];
+    }
+    for x in &mut p {
+        *x /= total;
+    }
+    p
+}
+
+/// Per-token importance from an attention matrix (heads, n, n), pooled by
+/// `strategy` over query rows, max over heads. `query_mask[i]` = token is
+/// real. Mirrors `ref.token_importance` / the mean/median variants.
+pub fn token_importance(attn: &[Tensor], query_mask: &[bool], strategy: RStrategy) -> Vec<f64> {
+    let n = query_mask.len();
+    let mut imp = vec![0.0f64; n];
+    for head in attn {
+        assert_eq!(head.shape(), &[n, n]);
+        for key in 0..n {
+            let mut vals: Vec<f64> = (0..n)
+                .filter(|&q| query_mask[q])
+                .map(|q| head.at(&[q, key]) as f64)
+                .collect();
+            if vals.is_empty() {
+                continue;
+            }
+            let pooled = match strategy {
+                RStrategy::Max => vals.iter().cloned().fold(f64::MIN, f64::max),
+                RStrategy::Mean => vals.iter().sum::<f64>() / vals.len() as f64,
+                RStrategy::Median => {
+                    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    let m = vals.len();
+                    if m % 2 == 1 {
+                        vals[m / 2]
+                    } else {
+                        0.5 * (vals[m / 2 - 1] + vals[m / 2])
+                    }
+                }
+            };
+            imp[key] = imp[key].max(pooled);
+        }
+    }
+    imp
+}
+
+/// Eq. 9: sqrt(r_i) = n_eff * importance_i / alpha, clamped to [1, d].
+/// Padded tokens get the minimum budget of 1.
+pub fn sample_counts(importance: &[f64], query_mask: &[bool], alpha: f64, d: usize) -> Vec<usize> {
+    let n_eff = query_mask.iter().filter(|&&m| m).count() as f64;
+    importance
+        .iter()
+        .zip(query_mask)
+        .map(|(&imp, &real)| {
+            if !real {
+                return 1;
+            }
+            let sqrt_r = n_eff * imp / alpha;
+            (sqrt_r * sqrt_r).ceil().clamp(1.0, d as f64) as usize
+        })
+        .collect()
+}
+
+/// The shared-pool masked-prefix estimator (mirrors `ref.mca_encode_shared`
+/// with `exact_fallback=true`): token i uses the prefix s[0..r_i) of one
+/// pool drawn i.i.d. from `p`; saturated tokens (r_i >= d) are exact.
+pub fn mca_encode(
+    rng: &mut Pcg64,
+    x: &Tensor,          // (n, d)
+    w: &Tensor,          // (d, d_out)
+    r: &[usize],         // (n,)
+    p: &[f64],           // (d,)
+) -> Tensor {
+    let (n, d) = (x.shape()[0], x.shape()[1]);
+    let d_out = w.shape()[1];
+    assert_eq!(w.shape()[0], d);
+    assert_eq!(r.len(), n);
+    assert_eq!(p.len(), d);
+
+    let table = AliasTable::new(p);
+    let pool: Vec<usize> = table.sample_n(rng, d);
+
+    let mut out = Tensor::zeros(&[n, d_out]);
+    for i in 0..n {
+        if r[i] >= d {
+            // exact fallback
+            for k in 0..d {
+                let xv = x.at(&[i, k]);
+                if xv == 0.0 {
+                    continue;
+                }
+                for j in 0..d_out {
+                    let v = out.at(&[i, j]) + xv * w.at(&[k, j]);
+                    out.set(&[i, j], v);
+                }
+            }
+            continue;
+        }
+        let ri = r[i] as f64;
+        for &sk in pool.iter().take(r[i]) {
+            let scale = x.at(&[i, sk]) as f64 / (ri * p[sk]);
+            if scale == 0.0 {
+                continue;
+            }
+            for j in 0..d_out {
+                let v = out.at(&[i, j]) + (scale * w.at(&[sk, j]) as f64) as f32;
+                out.set(&[i, j], v);
+            }
+        }
+    }
+    out
+}
+
+/// Lemma 1: E||H[i] - X[i]W|| <= ||X[i]||_2 ||W||_F / sqrt(r_i).
+pub fn lemma1_bound(x_row_norm: f64, w_frob: f64, r: usize) -> f64 {
+    x_row_norm * w_frob / (r as f64).sqrt()
+}
+
+/// Theorem 2 mean bound: E||Y~[i] - Y[i]|| <= alpha * beta * ||W||_F where
+/// beta = mean_i ||X[i]||_2.
+pub fn theorem2_bound(x: &Tensor, w_frob: f64, alpha: f64) -> f64 {
+    let n = x.shape()[0];
+    let beta: f64 = (0..n).map(|i| x.row_norm(i) as f64).sum::<f64>() / n as f64;
+    alpha * beta * w_frob
+}
+
+/// Theorem 2 tail: with prob >= 1 - delta, ||Y~[i]-Y[i]|| <= alpha*beta*||W||_F/delta.
+pub fn theorem2_tail_bound(x: &Tensor, w_frob: f64, alpha: f64, delta: f64) -> f64 {
+    theorem2_bound(x, w_frob, alpha) / delta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn randn_tensor(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
+        Tensor::from_fn(shape, |_| rng.gen_normal() as f32)
+    }
+
+    #[test]
+    fn probs_sum_to_one_and_weight_by_norm() {
+        let mut rng = Pcg64::new(0);
+        let w = randn_tensor(&mut rng, &[16, 8]);
+        let p = sampling_probs(&w);
+        prop::close(p.iter().sum::<f64>(), 1.0, 1e-9, "sum").unwrap();
+        // row with largest norm gets largest probability
+        let argmax_p = p.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        let argmax_n = (0..16)
+            .max_by(|&a, &b| w.row_norm(a).partial_cmp(&w.row_norm(b)).unwrap())
+            .unwrap();
+        assert_eq!(argmax_p, argmax_n);
+    }
+
+    #[test]
+    fn zero_matrix_probs_uniform() {
+        let p = sampling_probs(&Tensor::zeros(&[8, 4]));
+        for x in p {
+            prop::close(x, 1.0 / 8.0, 1e-12, "uniform").unwrap();
+        }
+    }
+
+    #[test]
+    fn counts_clamped_and_monotone_in_alpha() {
+        prop::check(100, |g| {
+            let n = g.usize(2..12);
+            let d = g.usize(4..64);
+            let imp: Vec<f64> = (0..n).map(|_| g.f64(0.0..1.0)).collect();
+            let mask = vec![true; n];
+            let lo = sample_counts(&imp, &mask, 0.2, d);
+            let hi = sample_counts(&imp, &mask, 0.9, d);
+            for i in 0..n {
+                if !(1..=d).contains(&lo[i]) {
+                    return Err(format!("r out of range: {}", lo[i]));
+                }
+                if hi[i] > lo[i] {
+                    return Err("not monotone in alpha".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn padded_tokens_get_one_sample() {
+        let imp = vec![0.9, 0.9, 0.9];
+        let mask = vec![true, false, true];
+        let r = sample_counts(&imp, &mask, 0.2, 64);
+        assert_eq!(r[1], 1);
+        assert!(r[0] > 1);
+    }
+
+    #[test]
+    fn estimator_exact_at_full_budget() {
+        let mut rng = Pcg64::new(1);
+        let x = randn_tensor(&mut rng, &[4, 8]);
+        let w = randn_tensor(&mut rng, &[8, 6]);
+        let p = sampling_probs(&w);
+        let r = vec![8usize; 4];
+        let got = mca_encode(&mut rng, &x, &w, &r, &p);
+        let want = x.matmul(&w).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-4, "{}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn estimator_unbiased() {
+        // mean over many seeds converges to the exact product
+        let mut rng = Pcg64::new(2);
+        let x = randn_tensor(&mut rng, &[3, 8]);
+        let w = randn_tensor(&mut rng, &[8, 5]);
+        let p = sampling_probs(&w);
+        let r = vec![3usize, 5, 7];
+        let want = x.matmul(&w).unwrap();
+        let mut acc = Tensor::zeros(&[3, 5]);
+        let runs = 4000;
+        for s in 0..runs {
+            let mut rs = Pcg64::new(1000 + s);
+            let est = mca_encode(&mut rs, &x, &w, &r, &p);
+            for (a, e) in acc.data_mut().iter_mut().zip(est.data()) {
+                *a += e / runs as f32;
+            }
+        }
+        let rel = acc
+            .data()
+            .iter()
+            .zip(want.data())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+            / want.frob_norm();
+        assert!(rel < 0.06, "rel err {rel}");
+    }
+
+    #[test]
+    fn estimator_error_respects_lemma1() {
+        let mut rng = Pcg64::new(3);
+        let d = 32;
+        let x = randn_tensor(&mut rng, &[1, d]);
+        let w = randn_tensor(&mut rng, &[d, d]);
+        let p = sampling_probs(&w);
+        let want = x.matmul(&w).unwrap();
+        for r_val in [4usize, 16] {
+            let r = vec![r_val];
+            let mut errs = Vec::new();
+            for s in 0..300 {
+                let mut rs = Pcg64::new(50_000 + s);
+                let est = mca_encode(&mut rs, &x, &w, &r, &p);
+                let err: f32 = est
+                    .data()
+                    .iter()
+                    .zip(want.data())
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f32>()
+                    .sqrt();
+                errs.push(err as f64);
+            }
+            let mean_err = errs.iter().sum::<f64>() / errs.len() as f64;
+            let bound = lemma1_bound(x.row_norm(0) as f64, w.frob_norm() as f64, r_val);
+            assert!(mean_err <= bound * 1.05, "r={r_val}: {mean_err} > {bound}");
+        }
+    }
+
+    #[test]
+    fn importance_pooling_ordering() {
+        prop::check(50, |g| {
+            let n = g.usize(2..8);
+            let scores = Tensor::from_fn(&[n, n], |_| g.f32(-3.0..3.0));
+            let attn = vec![scores.softmax_rows().unwrap()];
+            let mask = vec![true; n];
+            let im = token_importance(&attn, &mask, RStrategy::Max);
+            let ie = token_importance(&attn, &mask, RStrategy::Mean);
+            let id = token_importance(&attn, &mask, RStrategy::Median);
+            for i in 0..n {
+                if im[i] + 1e-12 < ie[i] || im[i] + 1e-12 < id[i] {
+                    return Err(format!("max < mean/median at {i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn theorem2_bound_empirical() {
+        // Full pipeline: r from Eq. 9 with max pooling + bound of Thm 2.
+        let mut rng = Pcg64::new(7);
+        let (n, d, alpha) = (6, 16, 0.5);
+        let x = randn_tensor(&mut rng, &[n, d]);
+        let w = randn_tensor(&mut rng, &[d, d]);
+        let scores = randn_tensor(&mut rng, &[n, n]);
+        let attn = vec![scores.softmax_rows().unwrap()];
+        let mask = vec![true; n];
+        let imp = token_importance(&attn, &mask, RStrategy::Max);
+        let r = sample_counts(&imp, &mask, alpha, d);
+        let p = sampling_probs(&w);
+        let h_exact = x.matmul(&w).unwrap();
+        let y_exact = attn[0].matmul(&h_exact).unwrap();
+        let mut max_row_err_mean = vec![0.0f64; n];
+        let runs = 300;
+        for s in 0..runs {
+            let mut rs = Pcg64::new(90_000 + s);
+            let h = mca_encode(&mut rs, &x, &w, &r, &p);
+            let y = attn[0].matmul(&h).unwrap();
+            for i in 0..n {
+                let err: f64 = y
+                    .row(i)
+                    .iter()
+                    .zip(y_exact.row(i))
+                    .map(|(a, b)| ((a - b) * (a - b)) as f64)
+                    .sum::<f64>()
+                    .sqrt();
+                max_row_err_mean[i] += err / runs as f64;
+            }
+        }
+        let bound = theorem2_bound(&x, w.frob_norm() as f64, alpha);
+        for (i, &err) in max_row_err_mean.iter().enumerate() {
+            assert!(err <= bound, "row {i}: {err} > {bound}");
+        }
+        // tail bound is looser than the mean bound
+        assert!(theorem2_tail_bound(&x, w.frob_norm() as f64, alpha, 0.1) > bound);
+    }
+}

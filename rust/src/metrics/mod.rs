@@ -1,0 +1,215 @@
+//! Evaluation metrics matching the GLUE task families of Tables 1–3:
+//! accuracy, binary F1, Matthews correlation (CoLA), Pearson and Spearman
+//! correlation (STS-B), plus mean ± 95% CI aggregation over random seeds
+//! (the paper reports 95% confidence intervals over 128 seeds).
+
+/// Classification accuracy.
+pub fn accuracy(pred: &[i32], gold: &[i32]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred.iter().zip(gold).filter(|(p, g)| p == g).count();
+    hits as f64 / pred.len() as f64
+}
+
+/// Binary F1 with positive class 1 (MRPC/QQP convention).
+pub fn f1_binary(pred: &[i32], gold: &[i32]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    let (mut tp, mut fp, mut fne) = (0f64, 0f64, 0f64);
+    for (&p, &g) in pred.iter().zip(gold) {
+        match (p == 1, g == 1) {
+            (true, true) => tp += 1.0,
+            (true, false) => fp += 1.0,
+            (false, true) => fne += 1.0,
+            _ => {}
+        }
+    }
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let prec = tp / (tp + fp);
+    let rec = tp / (tp + fne);
+    2.0 * prec * rec / (prec + rec)
+}
+
+/// Matthews correlation coefficient (binary; the CoLA metric).
+pub fn matthews_corr(pred: &[i32], gold: &[i32]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    let (mut tp, mut tn, mut fp, mut fne) = (0f64, 0f64, 0f64, 0f64);
+    for (&p, &g) in pred.iter().zip(gold) {
+        match (p == 1, g == 1) {
+            (true, true) => tp += 1.0,
+            (false, false) => tn += 1.0,
+            (true, false) => fp += 1.0,
+            (false, true) => fne += 1.0,
+        }
+    }
+    let denom = ((tp + fp) * (tp + fne) * (tn + fp) * (tn + fne)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (tp * tn - fp * fne) / denom
+    }
+}
+
+/// Pearson correlation (the STS-B "PC" metric).
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (&a, &b) in x.iter().zip(y) {
+        sxy += (a - mx) * (b - my);
+        sxx += (a - mx) * (a - mx);
+        syy += (b - my) * (b - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        0.0
+    } else {
+        sxy / (sxx * syy).sqrt()
+    }
+}
+
+/// Fractional ranks with tie averaging (for Spearman).
+fn ranks(x: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..x.len()).collect();
+    idx.sort_by(|&a, &b| x[a].partial_cmp(&x[b]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut out = vec![0.0; x.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && x[idx[j + 1]] == x[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            out[k] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Spearman rank correlation (the STS-B "SC" metric).
+pub fn spearman(x: &[f64], y: &[f64]) -> f64 {
+    pearson(&ranks(x), &ranks(y))
+}
+
+/// Mean with a 95% confidence half-width (normal approximation, as the
+/// paper's ±x columns).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MeanCi {
+    pub mean: f64,
+    pub ci95: f64,
+    pub n: usize,
+}
+
+pub fn mean_ci(samples: &[f64]) -> MeanCi {
+    let n = samples.len();
+    if n == 0 {
+        return MeanCi { mean: 0.0, ci95: 0.0, n };
+    }
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    if n == 1 {
+        return MeanCi { mean, ci95: 0.0, n };
+    }
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n as f64 - 1.0);
+    MeanCi { mean, ci95: 1.96 * (var / n as f64).sqrt(), n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn f1_known_case() {
+        // tp=2, fp=1, fn=1 -> p=2/3, r=2/3 -> f1=2/3
+        let pred = [1, 1, 1, 0, 0];
+        let gold = [1, 1, 0, 1, 0];
+        assert!((f1_binary(&pred, &gold) - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn f1_degenerate() {
+        assert_eq!(f1_binary(&[0, 0], &[1, 1]), 0.0);
+        assert_eq!(f1_binary(&[1, 1], &[1, 1]), 1.0);
+    }
+
+    #[test]
+    fn matthews_perfect_and_inverse() {
+        assert!((matthews_corr(&[1, 0, 1, 0], &[1, 0, 1, 0]) - 1.0).abs() < 1e-9);
+        assert!((matthews_corr(&[0, 1, 0, 1], &[1, 0, 1, 0]) + 1.0).abs() < 1e-9);
+        assert_eq!(matthews_corr(&[1, 1], &[1, 1]), 0.0); // degenerate
+    }
+
+    #[test]
+    fn pearson_known() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-9);
+        let yneg = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &yneg) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pearson_invariances() {
+        prop::check(100, |g| {
+            let n = g.usize(3..32);
+            let x: Vec<f64> = (0..n).map(|_| g.f64(-5.0..5.0)).collect();
+            let y: Vec<f64> = (0..n).map(|_| g.f64(-5.0..5.0)).collect();
+            let r = pearson(&x, &y);
+            if !(-1.0 - 1e-9..=1.0 + 1e-9).contains(&r) {
+                return Err(format!("pearson out of range: {r}"));
+            }
+            // scale/shift invariance
+            let a = g.f64(0.1..3.0);
+            let b = g.f64(-2.0..2.0);
+            let xs: Vec<f64> = x.iter().map(|v| a * v + b).collect();
+            prop::close(pearson(&xs, &y), r, 1e-6, "scale invariance")
+        });
+    }
+
+    #[test]
+    fn spearman_monotone_transform_invariant() {
+        prop::check(50, |g| {
+            let n = g.usize(3..24);
+            let x: Vec<f64> = (0..n).map(|_| g.f64(-4.0..4.0)).collect();
+            let y: Vec<f64> = (0..n).map(|_| g.f64(-4.0..4.0)).collect();
+            let s = spearman(&x, &y);
+            // cubing is strictly monotone -> identical ranks
+            let xc: Vec<f64> = x.iter().map(|v| v.powi(3)).collect();
+            prop::close(spearman(&xc, &y), s, 1e-9, "monotone invariance")
+        });
+    }
+
+    #[test]
+    fn spearman_ties() {
+        let x = [1.0, 1.0, 2.0];
+        let y = [1.0, 1.0, 2.0];
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_ci_shrinks_with_n() {
+        let a = mean_ci(&[1.0, 2.0, 3.0, 4.0]);
+        let wide: Vec<f64> = (0..64).map(|i| 1.0 + 3.0 * ((i % 4) as f64) / 3.0).collect();
+        let b = mean_ci(&wide);
+        assert!((a.mean - 2.5).abs() < 1e-9);
+        assert!(b.ci95 < a.ci95);
+        assert_eq!(mean_ci(&[5.0]).ci95, 0.0);
+    }
+}

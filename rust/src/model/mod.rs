@@ -1,0 +1,161 @@
+//! Model parameter store: initialization, checkpoints, and the flat
+//! ordering contract with the AOT artifacts (manifest `param_spec`).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::rng::Pcg64;
+use crate::runtime::{read_mcag, write_mcag, HostValue, ModelInfo};
+
+/// Flat parameter list in manifest order (the feed order of every
+/// executable), plus optimizer state when training.
+#[derive(Debug, Clone)]
+pub struct Params {
+    pub values: Vec<HostValue>,
+}
+
+impl Params {
+    /// Fresh init mirroring python's `init_params`: zeros for biases, ones
+    /// for LN scales, scaled normals elsewhere. (Bit-compat with Python is
+    /// not required — training happens on this side.)
+    pub fn init(model: &ModelInfo, rng: &mut Pcg64) -> Params {
+        let values = model
+            .param_spec
+            .iter()
+            .map(|(name, shape)| {
+                let n: usize = shape.iter().product();
+                if name.ends_with(".scale") {
+                    HostValue::F32 { shape: shape.clone(), data: vec![1.0; n] }
+                } else if is_bias(name) {
+                    HostValue::F32 { shape: shape.clone(), data: vec![0.0; n] }
+                } else {
+                    let fan_in = shape[0] as f64;
+                    let fan_out = *shape.last().unwrap() as f64;
+                    let std = if name == "embed" || name == "pos" {
+                        0.02
+                    } else {
+                        (2.0 / (fan_in + fan_out)).sqrt()
+                    };
+                    HostValue::F32 {
+                        shape: shape.clone(),
+                        data: (0..n).map(|_| (std * rng.gen_normal()) as f32).collect(),
+                    }
+                }
+            })
+            .collect();
+        Params { values }
+    }
+
+    /// Zeroed tensors of the same layout (Adam m/v state).
+    pub fn zeros_like(model: &ModelInfo) -> Params {
+        Params {
+            values: model
+                .param_spec
+                .iter()
+                .map(|(_, shape)| HostValue::zeros_f32(shape))
+                .collect(),
+        }
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        write_mcag(path, &self.values)
+    }
+
+    pub fn load(path: &Path, model: &ModelInfo) -> Result<Params> {
+        let values = read_mcag(path)?;
+        if values.len() != model.param_spec.len() {
+            bail!(
+                "checkpoint {path:?} has {} tensors, model {} expects {}",
+                values.len(),
+                model.name,
+                model.param_spec.len()
+            );
+        }
+        for (hv, (name, shape)) in values.iter().zip(&model.param_spec) {
+            if hv.shape() != shape.as_slice() {
+                bail!("checkpoint tensor {name}: shape {:?} != {:?}", hv.shape(), shape);
+            }
+        }
+        Ok(Params { values })
+    }
+
+    /// Total scalar parameter count.
+    pub fn count(&self) -> usize {
+        self.values.iter().map(|v| v.len()).sum()
+    }
+}
+
+fn is_bias(name: &str) -> bool {
+    name.ends_with(".bias")
+        || name.ends_with(".bq")
+        || name.ends_with(".bk")
+        || name.ends_with(".bv")
+        || name.ends_with(".bo")
+        || name.ends_with(".b1")
+        || name.ends_with(".b2")
+        || name.ends_with(".b")
+}
+
+/// Default checkpoint path for a (model, task) pair.
+pub fn checkpoint_path(root: &Path, model: &str, task: &str) -> std::path::PathBuf {
+    root.join(format!("{model}__{task}.mcag"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_model() -> ModelInfo {
+        ModelInfo {
+            name: "tiny".into(),
+            vocab: 32,
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 1,
+            d_ff: 32,
+            max_len: 8,
+            n_classes: 3,
+            window: None,
+            param_spec: vec![
+                ("embed".into(), vec![32, 16]),
+                ("layer0.ln1.scale".into(), vec![16]),
+                ("layer0.bq".into(), vec![16]),
+                ("layer0.wq".into(), vec![16, 16]),
+            ],
+        }
+    }
+
+    #[test]
+    fn init_respects_roles() {
+        let m = tiny_model();
+        let mut rng = Pcg64::new(0);
+        let p = Params::init(&m, &mut rng);
+        assert_eq!(p.values.len(), 4);
+        // LN scale all ones
+        assert!(p.values[1].as_f32().unwrap().iter().all(|&x| x == 1.0));
+        // bias all zeros
+        assert!(p.values[2].as_f32().unwrap().iter().all(|&x| x == 0.0));
+        // weight matrices non-trivial
+        assert!(p.values[3].as_f32().unwrap().iter().any(|&x| x != 0.0));
+        assert_eq!(p.count(), 32 * 16 + 16 + 16 + 16 * 16);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_and_validation() {
+        let m = tiny_model();
+        let mut rng = Pcg64::new(1);
+        let p = Params::init(&m, &mut rng);
+        let dir = std::env::temp_dir().join("mca_ckpt_test");
+        let path = dir.join("t.mcag");
+        p.save(&path).unwrap();
+        let q = Params::load(&path, &m).unwrap();
+        assert_eq!(p.values, q.values);
+
+        // wrong model shape must be rejected
+        let mut m2 = m.clone();
+        m2.param_spec[0].1 = vec![16, 16];
+        assert!(Params::load(&path, &m2).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

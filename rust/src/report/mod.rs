@@ -1,0 +1,179 @@
+//! Table and ASCII-figure emitters: prints rows in the paper's format
+//! (metric mean ± 95% CI and FLOPS reduction per α column) and simple
+//! scatter plots for the figures, plus CSV output for external plotting.
+
+use std::fmt::Write as _;
+
+use crate::eval::TaskRow;
+
+/// Render a paper-style table (Tables 1–3): one row per (task, metric),
+/// columns = baseline + one (Result, FLOPS) pair per alpha.
+pub fn render_table(title: &str, rows: &[TaskRow]) -> String {
+    let mut s = String::new();
+    let alphas: Vec<f64> = rows
+        .first()
+        .map(|r| r.alphas.iter().map(|a| a.alpha).collect())
+        .unwrap_or_default();
+
+    let _ = writeln!(s, "## {title}\n");
+    let mut header = String::from("| Task | Metric | Baseline |");
+    let mut rule = String::from("|---|---|---|");
+    for a in &alphas {
+        let _ = write!(header, " α={a} | FLOPS |");
+        rule.push_str("---|---|");
+    }
+    let _ = writeln!(s, "{header}");
+    let _ = writeln!(s, "{rule}");
+
+    for row in rows {
+        for (mi, &(metric, base)) in row.baseline.iter().enumerate() {
+            let task_cell = if mi == 0 { row.task.as_str() } else { "" };
+            let mut line = format!("| {} | {} | {:.2} |", task_cell, metric.short(), 100.0 * base);
+            for a in &row.alphas {
+                let (_, ci) = a.metrics[mi];
+                let _ = write!(
+                    line,
+                    " {:.2}±{:.1} | {:.2}× |",
+                    100.0 * ci.mean,
+                    100.0 * ci.ci95,
+                    a.flops_reduction.mean
+                );
+            }
+            let _ = writeln!(s, "{line}");
+        }
+    }
+    s
+}
+
+/// CSV export of the same data (one line per task × metric × alpha).
+pub fn render_csv(rows: &[TaskRow]) -> String {
+    let mut s = String::from("task,metric,alpha,baseline,mean,ci95,flops_reduction,flops_ci95\n");
+    for row in rows {
+        for (mi, &(metric, base)) in row.baseline.iter().enumerate() {
+            for a in &row.alphas {
+                let (_, ci) = a.metrics[mi];
+                let _ = writeln!(
+                    s,
+                    "{},{},{},{:.6},{:.6},{:.6},{:.4},{:.4}",
+                    row.task,
+                    metric.short(),
+                    a.alpha,
+                    base,
+                    ci.mean,
+                    ci.ci95,
+                    a.flops_reduction.mean,
+                    a.flops_reduction.ci95
+                );
+            }
+        }
+    }
+    s
+}
+
+/// ASCII scatter for the figures: x = FLOPs (relative), y = accuracy.
+/// Each series is a labeled set of (x, y) points.
+pub fn render_scatter(
+    title: &str,
+    xlabel: &str,
+    ylabel: &str,
+    series: &[(&str, Vec<(f64, f64)>)],
+    width: usize,
+    height: usize,
+) -> String {
+    let mut pts: Vec<(f64, f64)> = series.iter().flat_map(|(_, p)| p.iter().cloned()).collect();
+    if pts.is_empty() {
+        return format!("## {title}\n(no data)\n");
+    }
+    let (mut xmin, mut xmax) = (f64::MAX, f64::MIN);
+    let (mut ymin, mut ymax) = (f64::MAX, f64::MIN);
+    for &(x, y) in &pts {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['o', 'x', '+', '*', '#', '@'];
+    for (si, (_, points)) in series.iter().enumerate() {
+        for &(x, y) in points {
+            let cx = ((x - xmin) / (xmax - xmin) * (width - 1) as f64).round() as usize;
+            let cy = ((y - ymin) / (ymax - ymin) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx] = marks[si % marks.len()];
+        }
+    }
+    pts.clear();
+
+    let mut s = format!("## {title}\n\n");
+    let _ = writeln!(s, "{ylabel} ({ymin:.3} .. {ymax:.3})");
+    for row in &grid {
+        let _ = writeln!(s, "|{}|", row.iter().collect::<String>());
+    }
+    let _ = writeln!(s, "{xlabel} ({xmin:.3} .. {xmax:.3})");
+    for (si, (name, _)) in series.iter().enumerate() {
+        let _ = writeln!(s, "  {} = {}", marks[si % marks.len()], name);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Metric;
+    use crate::eval::AlphaResult;
+    use crate::metrics::MeanCi;
+
+    fn sample_rows() -> Vec<TaskRow> {
+        vec![TaskRow {
+            task: "cola_sim".into(),
+            baseline: vec![(Metric::Matthews, 0.537)],
+            alphas: vec![AlphaResult {
+                alpha: 0.2,
+                metrics: vec![(Metric::Matthews, MeanCi { mean: 0.530, ci95: 0.002, n: 16 })],
+                flops_reduction: MeanCi { mean: 11.4, ci95: 0.1, n: 16 },
+            }],
+        }]
+    }
+
+    #[test]
+    fn table_contains_cells() {
+        let t = render_table("Table 1", &sample_rows());
+        assert!(t.contains("cola_sim"));
+        assert!(t.contains("53.74") || t.contains("53.70"));
+        assert!(t.contains("11.40×"));
+        assert!(t.contains("α=0.2"));
+    }
+
+    #[test]
+    fn csv_has_rows() {
+        let c = render_csv(&sample_rows());
+        assert_eq!(c.lines().count(), 2);
+        assert!(c.lines().nth(1).unwrap().starts_with("cola_sim,MC,0.2,"));
+    }
+
+    #[test]
+    fn scatter_renders_points() {
+        let s = render_scatter(
+            "Fig",
+            "flops",
+            "acc",
+            &[("a", vec![(1.0, 0.5), (2.0, 0.9)]), ("b", vec![(1.5, 0.7)])],
+            20,
+            10,
+        );
+        assert!(s.contains('o'));
+        assert!(s.contains('x'));
+        assert!(s.contains("a"));
+    }
+
+    #[test]
+    fn scatter_empty() {
+        let s = render_scatter("Fig", "x", "y", &[], 10, 5);
+        assert!(s.contains("no data"));
+    }
+}

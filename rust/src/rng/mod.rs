@@ -1,0 +1,282 @@
+//! Deterministic RNG + categorical-sampling substrate.
+//!
+//! * [`Pcg64`] — PCG-XSH-RR 64/32-based generator with splittable streams
+//!   (`fork`) so data generation, sampling and property tests never share
+//!   state accidentally.
+//! * [`AliasTable`] — Vose's alias method for O(1) categorical sampling:
+//!   the host-side counterpart of the in-graph inverse-CDF sampler, used by
+//!   the Rust reference MCA estimator and the ablation harness.
+
+/// PCG64 (XSL-RR variant) — small, fast, reproducible across platforms.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360ED051FC65DA44385DF649FCCF645;
+
+impl Pcg64 {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xDA3E39CB94B95BDB)
+    }
+
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+        };
+        rng.gen_u64();
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.gen_u64();
+        rng
+    }
+
+    /// Derive an independent stream (for per-task / per-worker RNGs).
+    pub fn fork(&mut self, tag: u64) -> Pcg64 {
+        Pcg64::with_stream(self.gen_u64() ^ tag, tag.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+
+    pub fn gen_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    pub fn gen_u32(&mut self) -> u32 {
+        (self.gen_u64() >> 32) as u32
+    }
+
+    /// Uniform in [lo, hi) without modulo bias (Lemire reduction).
+    pub fn gen_range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo < hi, "empty range {lo}..{hi}");
+        let span = hi - lo;
+        let mut x = self.gen_u64();
+        let mut m = (x as u128) * (span as u128);
+        let mut l = m as u64;
+        if l < span {
+            let t = span.wrapping_neg() % span;
+            while l < t {
+                x = self.gen_u64();
+                m = (x as u128) * (span as u128);
+                l = m as u64;
+            }
+        }
+        lo + (m >> 64) as u64
+    }
+
+    pub fn gen_range(&mut self, lo: usize, hi: usize) -> usize {
+        self.gen_range_u64(lo as u64, hi as u64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.gen_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn gen_f32(&mut self) -> f32 {
+        (self.gen_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn gen_normal(&mut self) -> f64 {
+        let u1 = self.gen_f64().max(1e-300);
+        let u2 = self.gen_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(0, i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Vose's alias method: O(n) build, O(1) sample from a categorical
+/// distribution. This is the host-side sampler the serving path uses when
+/// it pre-draws sample pools, and the comparator for the in-graph sampler.
+#[derive(Debug, Clone)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+}
+
+impl AliasTable {
+    /// Build from (unnormalized) non-negative weights.
+    pub fn new(weights: &[f64]) -> AliasTable {
+        let n = weights.len();
+        assert!(n > 0, "empty weight vector");
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0 && total.is_finite(), "weights must sum to a positive finite value");
+        let scaled: Vec<f64> = weights.iter().map(|w| w * n as f64 / total).collect();
+
+        let mut prob = vec![0.0; n];
+        let mut alias = vec![0usize; n];
+        let mut small: Vec<usize> = Vec::with_capacity(n);
+        let mut large: Vec<usize> = Vec::with_capacity(n);
+        let mut p = scaled.clone();
+        for (i, &x) in p.iter().enumerate() {
+            if x < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s] = p[s];
+            alias[s] = l;
+            p[l] = (p[l] + p[s]) - 1.0;
+            if p[l] < 1.0 {
+                // l moves to the small worklist
+                large.pop();
+                small.push(l);
+            }
+        }
+        for i in small.into_iter().chain(large) {
+            prob[i] = 1.0;
+            alias[i] = i;
+        }
+        AliasTable { prob, alias }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let i = rng.gen_range(0, self.prob.len());
+        if rng.gen_f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+
+    pub fn sample_n(&self, rng: &mut Pcg64, n: usize) -> Vec<usize> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcg_reproducible() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..32 {
+            assert_eq!(a.gen_u64(), b.gen_u64());
+        }
+    }
+
+    #[test]
+    fn pcg_seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.gen_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.gen_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn fork_independent() {
+        let mut root = Pcg64::new(7);
+        let mut c1 = root.fork(1);
+        let mut c2 = root.fork(2);
+        let v1: Vec<u64> = (0..8).map(|_| c1.gen_u64()).collect();
+        let v2: Vec<u64> = (0..8).map(|_| c2.gen_u64()).collect();
+        assert_ne!(v1, v2);
+    }
+
+    #[test]
+    fn uniform_range_bounds() {
+        let mut rng = Pcg64::new(3);
+        for _ in 0..1000 {
+            let x = rng.gen_range(5, 17);
+            assert!((5..17).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut rng = Pcg64::new(11);
+        let n = 20000;
+        let mean: f64 = (0..n).map(|_| rng.gen_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(13);
+        let n = 20000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.gen_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "{mean}");
+        assert!((var - 1.0).abs() < 0.05, "{var}");
+    }
+
+    #[test]
+    fn alias_matches_distribution() {
+        let weights = [1.0, 2.0, 3.0, 4.0];
+        let table = AliasTable::new(&weights);
+        let mut rng = Pcg64::new(17);
+        let n = 100_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            counts[table.sample(&mut rng)] += 1;
+        }
+        let total: f64 = weights.iter().sum();
+        for (i, &w) in weights.iter().enumerate() {
+            let want = w / total;
+            let got = counts[i] as f64 / n as f64;
+            assert!((got - want).abs() < 0.01, "bin {i}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn alias_degenerate_single() {
+        let table = AliasTable::new(&[5.0]);
+        let mut rng = Pcg64::new(19);
+        for _ in 0..10 {
+            assert_eq!(table.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn alias_with_zero_weights() {
+        let table = AliasTable::new(&[0.0, 1.0, 0.0, 1.0]);
+        let mut rng = Pcg64::new(23);
+        for _ in 0..1000 {
+            let s = table.sample(&mut rng);
+            assert!(s == 1 || s == 3, "sampled zero-weight bin {s}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn alias_rejects_all_zero() {
+        AliasTable::new(&[0.0, 0.0]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(29);
+        let mut v: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,243 @@
+//! `HostValue` — plain-data tensors that cross thread boundaries.
+//!
+//! The `xla` crate's `Literal`/`PjRtBuffer` wrap raw pointers and are not
+//! `Send`; the coordinator therefore speaks `HostValue` (Send + Clone) and
+//! only the executor thread that owns the `PjRtClient` converts to/from
+//! literals. This module also implements the `MCAG` binary format shared
+//! with `python/compile/golden.py` (checkpoints and golden files use it).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Dtype;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostValue {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    U32 { shape: Vec<usize>, data: Vec<u32> },
+}
+
+impl HostValue {
+    pub fn scalar_f32(x: f32) -> HostValue {
+        HostValue::F32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn scalar_u32(x: u32) -> HostValue {
+        HostValue::U32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn scalar_i32(x: i32) -> HostValue {
+        HostValue::I32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> HostValue {
+        HostValue::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostValue::F32 { .. } => Dtype::F32,
+            HostValue::I32 { .. } => Dtype::I32,
+            HostValue::U32 { .. } => Dtype::U32,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32 { shape, .. } | HostValue::I32 { shape, .. } | HostValue::U32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostValue::F32 { data, .. } => data.len(),
+            HostValue::I32 { data, .. } => data.len(),
+            HostValue::U32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostValue::F32 { data, .. } => Ok(data),
+            other => bail!("expected f32, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostValue::I32 { data, .. } => Ok(data),
+            other => bail!("expected i32, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn scalar_value_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("not a scalar: {} elements", d.len());
+        }
+        Ok(d[0])
+    }
+
+    // -- xla Literal bridge (executor thread only) -----------------------
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostValue::F32 { data, .. } => xla::Literal::vec1(data),
+            HostValue::I32 { data, .. } => xla::Literal::vec1(data),
+            HostValue::U32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostValue> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        use xla::ElementType as E;
+        Ok(match shape.ty() {
+            E::F32 => HostValue::F32 { shape: dims, data: lit.to_vec::<f32>()? },
+            E::S32 => HostValue::I32 { shape: dims, data: lit.to_vec::<i32>()? },
+            E::U32 => HostValue::U32 { shape: dims, data: lit.to_vec::<u32>()? },
+            // The in-graph r_sum/n_eff are f32; bf16 outputs are cast to
+            // f32 in-graph, so these three cover every artifact.
+            other => bail!("unsupported literal element type {other:?}"),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MCAG binary container (shared with python/compile/golden.py)
+// ---------------------------------------------------------------------------
+
+const MAGIC: &[u8; 4] = b"MCAG";
+
+pub fn write_mcag(path: &Path, tensors: &[HostValue]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for t in tensors {
+        let code: u8 = match t.dtype() {
+            Dtype::F32 => 0,
+            Dtype::I32 => 1,
+            Dtype::U32 => 2,
+        };
+        f.write_all(&[code, t.shape().len() as u8])?;
+        for &d in t.shape() {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        match t {
+            HostValue::F32 { data, .. } => {
+                for x in data {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            HostValue::I32 { data, .. } => {
+                for x in data {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            HostValue::U32 { data, .. } => {
+                for x in data {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn read_mcag(path: &Path) -> Result<Vec<HostValue>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: bad magic {magic:?}");
+    }
+    let mut cnt = [0u8; 4];
+    f.read_exact(&mut cnt)?;
+    let count = u32::from_le_bytes(cnt) as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let mut hdr = [0u8; 2];
+        f.read_exact(&mut hdr)?;
+        let (code, rank) = (hdr[0], hdr[1] as usize);
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            let mut d = [0u8; 4];
+            f.read_exact(&mut d)?;
+            shape.push(u32::from_le_bytes(d) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)?;
+        let hv = match code {
+            0 => HostValue::F32 {
+                shape,
+                data: bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+            },
+            1 => HostValue::I32 {
+                shape,
+                data: bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+            },
+            2 => HostValue::U32 {
+                shape,
+                data: bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect(),
+            },
+            other => bail!("{path:?}: bad dtype code {other}"),
+        };
+        out.push(hv);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mcag_roundtrip() {
+        let dir = std::env::temp_dir().join("mca_test_mcag");
+        let path = dir.join("t.mcag");
+        let tensors = vec![
+            HostValue::F32 { shape: vec![2, 3], data: vec![0., 1., 2., 3., 4., 5.] },
+            HostValue::scalar_u32(7),
+            HostValue::I32 { shape: vec![4], data: vec![-1, 0, 1, 2] },
+        ];
+        write_mcag(&path, &tensors).unwrap();
+        let back = read_mcag(&path).unwrap();
+        assert_eq!(back, tensors);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mcag_rejects_garbage() {
+        let dir = std::env::temp_dir().join("mca_test_mcag2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.mcag");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(read_mcag(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn hostvalue_accessors() {
+        let v = HostValue::scalar_f32(2.5);
+        assert_eq!(v.scalar_value_f32().unwrap(), 2.5);
+        assert_eq!(v.shape(), &[] as &[usize]);
+        assert!(v.as_i32().is_err());
+        let z = HostValue::zeros_f32(&[3, 4]);
+        assert_eq!(z.len(), 12);
+    }
+}

@@ -1,0 +1,311 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parsed from `artifacts/manifest.json` with the in-tree
+//! JSON substrate.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element dtype of an executable input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            "u32" => Dtype::U32,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+}
+
+/// One declared executable input (or output).
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    /// Role: "param", "m", "v", "ids", "alpha", "seed", "step", "labels",
+    /// "lr", "logits", "r_sum", "n_eff", "loss".
+    pub role: String,
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+/// Static model architecture info (mirrors python ModelConfig).
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_len: usize,
+    pub n_classes: usize,
+    pub window: Option<usize>,
+    /// Ordered (name, shape) parameter layout — checkpoint + feed order.
+    pub param_spec: Vec<(String, Vec<usize>)>,
+}
+
+/// One AOT-compiled artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    /// "forward" | "train_cls" | "train_reg"
+    pub kind: String,
+    pub model: String,
+    pub batch: usize,
+    pub seq: usize,
+    /// "exact" | "mca"
+    pub mode: String,
+    /// "jnp" | "pallas"
+    pub kernel: String,
+    pub r_strategy: String,
+    pub p_strategy: String,
+    pub compute_dtype: String,
+    pub n_params: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelInfo>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    pub pad_id: i32,
+    pub cls_id: i32,
+    pub sep_id: i32,
+}
+
+fn parse_shape(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()?.iter().map(|d| d.as_usize()).collect()
+}
+
+fn parse_io(row: &Json, with_name: bool) -> Result<IoSpec> {
+    let a = row.as_arr()?;
+    if with_name {
+        // inputs: [role, name, shape, dtype]
+        Ok(IoSpec {
+            role: a[0].as_str()?.to_string(),
+            name: a[1].as_str()?.to_string(),
+            shape: parse_shape(&a[2])?,
+            dtype: Dtype::parse(a[3].as_str()?)?,
+        })
+    } else {
+        // outputs: [role, shape, dtype]
+        Ok(IoSpec {
+            role: a[0].as_str()?.to_string(),
+            name: a[0].as_str()?.to_string(),
+            shape: parse_shape(&a[1])?,
+            dtype: Dtype::parse(a[2].as_str()?)?,
+        })
+    }
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        if j.get("format")?.as_usize()? != 1 {
+            bail!("unsupported manifest format");
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models")?.as_obj()? {
+            let window = match m.get("window")? {
+                Json::Null => None,
+                w => Some(w.as_usize()?),
+            };
+            let param_spec = m
+                .get("param_spec")?
+                .as_arr()?
+                .iter()
+                .map(|row| {
+                    let a = row.as_arr()?;
+                    Ok((a[0].as_str()?.to_string(), parse_shape(&a[1])?))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    vocab: m.get("vocab")?.as_usize()?,
+                    d_model: m.get("d_model")?.as_usize()?,
+                    n_heads: m.get("n_heads")?.as_usize()?,
+                    n_layers: m.get("n_layers")?.as_usize()?,
+                    d_ff: m.get("d_ff")?.as_usize()?,
+                    max_len: m.get("max_len")?.as_usize()?,
+                    n_classes: m.get("n_classes")?.as_usize()?,
+                    window,
+                    param_spec,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for e in j.get("artifacts")?.as_arr()? {
+            let kind = e.get("kind")?.as_str()?.to_string();
+            let inputs = e
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|r| parse_io(r, true))
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(|r| parse_io(r, false))
+                .collect::<Result<Vec<_>>>()?;
+            let name = e.get("name")?.as_str()?.to_string();
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name,
+                    file: e.get("file")?.as_str()?.to_string(),
+                    kind,
+                    model: e.get("model")?.as_str()?.to_string(),
+                    batch: e.get("batch")?.as_usize()?,
+                    seq: e.get("seq")?.as_usize()?,
+                    mode: e.get("mode")?.as_str()?.to_string(),
+                    kernel: e.get("kernel")?.as_str()?.to_string(),
+                    r_strategy: e.get("r_strategy")?.as_str()?.to_string(),
+                    p_strategy: e.get("p_strategy")?.as_str()?.to_string(),
+                    compute_dtype: e.get("compute_dtype")?.as_str()?.to_string(),
+                    n_params: e.get("n_params")?.as_usize()?,
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        let st = j.get("special_tokens")?;
+        Ok(Manifest {
+            models,
+            artifacts,
+            pad_id: st.get("pad")?.as_usize()? as i32,
+            cls_id: st.get("cls")?.as_usize()? as i32,
+            sep_id: st.get("sep")?.as_usize()? as i32,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model {name:?} not in manifest"))
+    }
+
+    /// Find a forward artifact by attributes (used by the coordinator's
+    /// batch-bucket router).
+    pub fn find_forward(
+        &self,
+        model: &str,
+        mode: &str,
+        batch: usize,
+        extra: impl Fn(&ArtifactInfo) -> bool,
+    ) -> Option<&ArtifactInfo> {
+        self.artifacts.values().find(|a| {
+            a.kind == "forward"
+                && a.model == model
+                && a.mode == mode
+                && a.batch == batch
+                && extra(a)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "models": {
+        "tiny": {"vocab": 32, "d_model": 16, "n_heads": 2, "n_layers": 1,
+                 "d_ff": 32, "max_len": 8, "n_classes": 3, "window": null,
+                 "param_spec": [["embed", [32, 16]], ["pos", [8, 16]]]}
+      },
+      "artifacts": [
+        {"name": "tiny_fwd_exact_b2", "file": "tiny.hlo.txt", "kind": "forward",
+         "model": "tiny", "batch": 2, "seq": 8, "mode": "exact", "kernel": "jnp",
+         "r_strategy": "max", "p_strategy": "norm", "compute_dtype": "f32",
+         "n_params": 2, "sha256": "x",
+         "inputs": [["param", "embed", [32, 16], "f32"],
+                    ["param", "pos", [8, 16], "f32"],
+                    ["ids", "ids", [2, 8], "i32"],
+                    ["alpha", "alpha", [], "f32"],
+                    ["seed", "seed", [], "u32"]],
+         "outputs": [["logits", [2, 3], "f32"], ["r_sum", [2], "f32"],
+                     ["n_eff", [2], "f32"]]}
+      ],
+      "special_tokens": {"pad": 0, "cls": 1, "sep": 2, "unk": 3}
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.models.len(), 1);
+        let model = m.model("tiny").unwrap();
+        assert_eq!(model.d_model, 16);
+        assert_eq!(model.window, None);
+        assert_eq!(model.param_spec.len(), 2);
+        let a = m.artifact("tiny_fwd_exact_b2").unwrap();
+        assert_eq!(a.batch, 2);
+        assert_eq!(a.inputs.len(), 5);
+        assert_eq!(a.inputs[2].dtype, Dtype::I32);
+        assert_eq!(a.outputs[0].shape, vec![2, 3]);
+        assert_eq!(m.pad_id, 0);
+    }
+
+    #[test]
+    fn find_forward_filters() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.find_forward("tiny", "exact", 2, |_| true).is_some());
+        assert!(m.find_forward("tiny", "mca", 2, |_| true).is_none());
+        assert!(m.find_forward("tiny", "exact", 4, |_| true).is_none());
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.len() >= 20, "{}", m.artifacts.len());
+        assert!(m.models.contains_key("bert_sim"));
+        assert!(m.models.contains_key("distil_sim"));
+        assert!(m.models.contains_key("longformer_sim"));
+        // every artifact's file exists
+        for a in m.artifacts.values() {
+            assert!(dir.join(&a.file).exists(), "{}", a.file);
+        }
+    }
+}

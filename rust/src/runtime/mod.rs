@@ -1,0 +1,125 @@
+//! PJRT runtime: loads `artifacts/*.hlo.txt`, compiles them on the CPU
+//! client, and executes them with [`HostValue`] arguments.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format —
+//! see python/compile/aot.py for why.
+
+pub mod hostvalue;
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+pub use hostvalue::{read_mcag, write_mcag, HostValue};
+pub use manifest::{ArtifactInfo, Dtype, Manifest, ModelInfo};
+
+/// Owns the PJRT client + compiled-executable cache. NOT `Send`: create it
+/// on the thread that will execute (see `coordinator::worker`).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load the manifest and create a CPU PJRT client. Executables compile
+    /// lazily on first use (`warmup` compiles eagerly).
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir: artifacts_dir.to_path_buf(), manifest, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let info = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Eagerly compile a set of artifacts (e.g. at server start).
+    pub fn warmup(&mut self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    pub fn is_compiled(&self, name: &str) -> bool {
+        self.cache.contains_key(name)
+    }
+
+    /// Execute an artifact. Inputs are validated against the manifest
+    /// (count, dtype, shape) — shape bugs surface here with context, not as
+    /// an opaque XLA error.
+    pub fn run(&mut self, name: &str, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        self.ensure_compiled(name)?;
+        let info = self.manifest.artifact(name)?;
+        if inputs.len() != info.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                info.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (hv, spec)) in inputs.iter().zip(&info.inputs).enumerate() {
+            if hv.dtype() != spec.dtype {
+                bail!("{name}: input #{i} ({}) dtype {:?} != {:?}", spec.name, hv.dtype(), spec.dtype);
+            }
+            if hv.shape() != spec.shape.as_slice() {
+                bail!(
+                    "{name}: input #{i} ({}) shape {:?} != {:?}",
+                    spec.name,
+                    hv.shape(),
+                    spec.shape
+                );
+            }
+        }
+        let n_outputs = info.outputs.len();
+
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|hv| hv.to_literal()).collect::<Result<_>>()?;
+        let exe = self.cache.get(name).expect("ensured above");
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        // aot.py lowers with return_tuple=True: one tuple output.
+        let mut tuple = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .context("empty execution result")?
+            .to_literal_sync()?;
+        let parts = tuple.decompose_tuple()?;
+        if parts.len() != n_outputs {
+            bail!("{name}: expected {} outputs, got {}", n_outputs, parts.len());
+        }
+        parts.iter().map(HostValue::from_literal).collect()
+    }
+}
+
+/// Standard artifacts directory: `$MCA_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("MCA_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

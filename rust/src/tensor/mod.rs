@@ -1,0 +1,216 @@
+//! Host tensor substrate: a small row-major f32 ndarray with exactly the
+//! operations the host-side oracles, checkpoints and tests need. Device
+//! tensors live in XLA; this type exists so the Rust reference MCA
+//! estimator (rust/src/mca) and the metrics can run without a device.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let want: usize = shape.iter().product();
+        if want != data.len() {
+            bail!("shape {:?} needs {} elements, got {}", shape, want, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: (0..n).map(&mut f).collect() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let o = self.offset(idx);
+        self.data[o] = v;
+    }
+
+    fn offset(&self, idx: &[usize]) -> usize {
+        assert_eq!(idx.len(), self.shape.len(), "rank mismatch");
+        let mut o = 0;
+        for (i, (&x, &d)) in idx.iter().zip(&self.shape).enumerate() {
+            assert!(x < d, "index {x} out of bounds for dim {i} (size {d})");
+            o = o * d + x;
+        }
+        o
+    }
+
+    /// Matrix product for rank-2 tensors: (m,k) @ (k,n) -> (m,n).
+    pub fn matmul(&self, rhs: &Tensor) -> Result<Tensor> {
+        let (&[m, k1], &[k2, n]) = (&self.shape[..], &rhs.shape[..]) else {
+            bail!("matmul needs rank-2 operands, got {:?} @ {:?}", self.shape, rhs.shape);
+        };
+        if k1 != k2 {
+            bail!("matmul contraction mismatch: {:?} @ {:?}", self.shape, rhs.shape);
+        }
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let a_row = &self.data[i * k1..(i + 1) * k1];
+            let o_row = &mut out[i * n..(i + 1) * n];
+            for (ak, b_row) in a_row.iter().zip(rhs.data.chunks_exact(n)) {
+                if *ak == 0.0 {
+                    continue;
+                }
+                for (o, b) in o_row.iter_mut().zip(b_row) {
+                    *o += ak * b;
+                }
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    /// Row-wise softmax for rank-2 tensors.
+    pub fn softmax_rows(&self) -> Result<Tensor> {
+        let &[m, n] = &self.shape[..] else {
+            bail!("softmax_rows needs rank 2, got {:?}", self.shape);
+        };
+        let mut out = self.data.clone();
+        for row in out.chunks_exact_mut(n) {
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut s = 0.0;
+            for x in row.iter_mut() {
+                *x = (*x - mx).exp();
+                s += *x;
+            }
+            for x in row.iter_mut() {
+                *x /= s;
+            }
+        }
+        let _ = m;
+        Tensor::new(&self.shape, out)
+    }
+
+    /// L2 norm of the whole tensor (Frobenius for matrices).
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// L2 norm of row i (rank-2 only).
+    pub fn row_norm(&self, i: usize) -> f32 {
+        let n = self.shape[1];
+        self.data[i * n..(i + 1) * n].iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let n = self.shape[1];
+        &self.data[i * n..(i + 1) * n]
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.at(&[0, 0]), 1.0);
+        assert_eq!(t.at(&[1, 2]), 6.0);
+        assert!(Tensor::new(&[2, 2], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::new(&[2, 2], vec![1., 1., 1., 1.]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_identity_property() {
+        prop::check(50, |g| {
+            let m = g.usize(1..6);
+            let k = g.usize(1..6);
+            let a = Tensor::from_fn(&[m, k], |_| g.f32(-3.0..3.0));
+            let eye = Tensor::from_fn(&[k, k], |i| if i / k == i % k { 1.0 } else { 0.0 });
+            let c = a.matmul(&eye).unwrap();
+            if c.max_abs_diff(&a) < 1e-5 {
+                Ok(())
+            } else {
+                Err("A @ I != A".into())
+            }
+        });
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        prop::check(50, |g| {
+            let m = g.usize(1..5);
+            let n = g.usize(1..8);
+            let t = Tensor::from_fn(&[m, n], |_| g.f32(-5.0..5.0));
+            let s = t.softmax_rows().unwrap();
+            for i in 0..m {
+                let sum: f32 = s.row(i).iter().sum();
+                prop::close(sum as f64, 1.0, 1e-5, "row sum")?;
+                if s.row(i).iter().any(|&x| x < 0.0) {
+                    return Err("negative prob".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant() {
+        let a = Tensor::new(&[1, 3], vec![1., 2., 3.]).unwrap();
+        let b = Tensor::new(&[1, 3], vec![101., 102., 103.]).unwrap();
+        assert!(a.softmax_rows().unwrap().max_abs_diff(&b.softmax_rows().unwrap()) < 1e-6);
+    }
+
+    #[test]
+    fn norms() {
+        let t = Tensor::new(&[2, 2], vec![3., 4., 0., 0.]).unwrap();
+        assert!((t.frob_norm() - 5.0).abs() < 1e-6);
+        assert!((t.row_norm(0) - 5.0).abs() < 1e-6);
+        assert_eq!(t.row_norm(1), 0.0);
+    }
+}

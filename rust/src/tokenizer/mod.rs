@@ -1,0 +1,215 @@
+//! Tokenizer substrate for the synthetic vocabulary.
+//!
+//! The GLUE substitute tasks (DESIGN.md §2) are generated over a synthetic
+//! 256-word vocabulary. Word surface forms are deterministic (`n12`, `v3`,
+//! `a47`, `f9` for nouns / verbs / adjectives / filler), so the serving
+//! path can accept *text* requests and the data generators can emit
+//! readable examples. Special tokens follow the artifact manifest: PAD=0,
+//! CLS=1, SEP=2, UNK=3.
+
+use std::collections::HashMap;
+
+pub const PAD_ID: i32 = 0;
+pub const CLS_ID: i32 = 1;
+pub const SEP_ID: i32 = 2;
+pub const UNK_ID: i32 = 3;
+pub const FIRST_WORD_ID: i32 = 4;
+
+/// Word classes of the synthetic vocabulary — the generators use these to
+/// plant learnable structure (grammar patterns, sentiment words, topics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WordClass {
+    Noun,
+    Verb,
+    Adjective,
+    Filler,
+}
+
+/// Number of word ids per class; 4 classes * 63 + 4 specials = 256 vocab.
+pub const CLASS_SIZE: i32 = 63;
+
+pub fn class_of(id: i32) -> Option<WordClass> {
+    match id {
+        _ if id < FIRST_WORD_ID => None,
+        _ if id < FIRST_WORD_ID + CLASS_SIZE => Some(WordClass::Noun),
+        _ if id < FIRST_WORD_ID + 2 * CLASS_SIZE => Some(WordClass::Verb),
+        _ if id < FIRST_WORD_ID + 3 * CLASS_SIZE => Some(WordClass::Adjective),
+        _ if id < FIRST_WORD_ID + 4 * CLASS_SIZE => Some(WordClass::Filler),
+        _ => None,
+    }
+}
+
+/// First id of a word class.
+pub fn class_base(c: WordClass) -> i32 {
+    match c {
+        WordClass::Noun => FIRST_WORD_ID,
+        WordClass::Verb => FIRST_WORD_ID + CLASS_SIZE,
+        WordClass::Adjective => FIRST_WORD_ID + 2 * CLASS_SIZE,
+        WordClass::Filler => FIRST_WORD_ID + 3 * CLASS_SIZE,
+    }
+}
+
+/// Vocabulary with bidirectional word <-> id maps.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    word_to_id: HashMap<String, i32>,
+    id_to_word: Vec<String>,
+    pub vocab_size: usize,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Tokenizer {
+        let mut id_to_word = vec!["[PAD]".into(), "[CLS]".into(), "[SEP]".into(), "[UNK]".into()];
+        for (prefix, class) in [
+            ("n", WordClass::Noun),
+            ("v", WordClass::Verb),
+            ("a", WordClass::Adjective),
+            ("f", WordClass::Filler),
+        ] {
+            let _ = class;
+            for i in 0..CLASS_SIZE {
+                id_to_word.push(format!("{prefix}{i}"));
+            }
+        }
+        let word_to_id = id_to_word
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as i32))
+            .collect();
+        let vocab_size = id_to_word.len();
+        Tokenizer { word_to_id, id_to_word, vocab_size }
+    }
+
+    /// Encode whitespace-separated text; unknown words map to UNK.
+    /// `[SEP]` in the text is honored (for pair tasks).
+    pub fn encode(&self, text: &str, max_len: usize) -> Vec<i32> {
+        let mut ids = vec![CLS_ID];
+        for w in text.split_whitespace() {
+            if ids.len() >= max_len - 1 {
+                break;
+            }
+            ids.push(*self.word_to_id.get(w).unwrap_or(&UNK_ID));
+        }
+        if ids.len() < max_len {
+            ids.push(SEP_ID);
+        }
+        ids
+    }
+
+    /// Encode a sentence pair as CLS a... SEP b... SEP.
+    pub fn encode_pair(&self, a: &str, b: &str, max_len: usize) -> Vec<i32> {
+        let mut ids = vec![CLS_ID];
+        for w in a.split_whitespace() {
+            if ids.len() >= max_len - 2 {
+                break;
+            }
+            ids.push(*self.word_to_id.get(w).unwrap_or(&UNK_ID));
+        }
+        ids.push(SEP_ID);
+        for w in b.split_whitespace() {
+            if ids.len() >= max_len - 1 {
+                break;
+            }
+            ids.push(*self.word_to_id.get(w).unwrap_or(&UNK_ID));
+        }
+        ids.push(SEP_ID);
+        ids
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter(|&&i| i != PAD_ID)
+            .map(|&i| {
+                self.id_to_word
+                    .get(i as usize)
+                    .cloned()
+                    .unwrap_or_else(|| "[UNK]".into())
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Right-pad (or truncate) to exactly `len` ids.
+    pub fn pad_to(ids: &[i32], len: usize) -> Vec<i32> {
+        let mut out = ids.to_vec();
+        out.truncate(len);
+        out.resize(len, PAD_ID);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_is_256() {
+        let t = Tokenizer::new();
+        assert_eq!(t.vocab_size, 256);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let t = Tokenizer::new();
+        let ids = t.encode("n0 v1 a2 f3", 16);
+        assert_eq!(ids[0], CLS_ID);
+        assert_eq!(*ids.last().unwrap(), SEP_ID);
+        let text = t.decode(&ids);
+        assert_eq!(text, "[CLS] n0 v1 a2 f3 [SEP]");
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let t = Tokenizer::new();
+        let ids = t.encode("n0 zzz", 8);
+        assert_eq!(ids[2], UNK_ID);
+    }
+
+    #[test]
+    fn pair_encoding() {
+        let t = Tokenizer::new();
+        let ids = t.encode_pair("n0 n1", "v0", 16);
+        let text = t.decode(&ids);
+        assert_eq!(text, "[CLS] n0 n1 [SEP] v0 [SEP]");
+    }
+
+    #[test]
+    fn truncation_respects_max_len() {
+        let t = Tokenizer::new();
+        let long: String = (0..100).map(|i| format!("n{} ", i % 60)).collect();
+        let ids = t.encode(&long, 16);
+        assert!(ids.len() <= 16);
+    }
+
+    #[test]
+    fn padding() {
+        let padded = Tokenizer::pad_to(&[1, 5, 2], 6);
+        assert_eq!(padded, vec![1, 5, 2, 0, 0, 0]);
+        let truncated = Tokenizer::pad_to(&[1, 5, 6, 7, 2], 3);
+        assert_eq!(truncated, vec![1, 5, 6]);
+    }
+
+    #[test]
+    fn word_classes_partition_vocab() {
+        let mut counts = [0usize; 4];
+        for id in 0..256 {
+            if let Some(c) = class_of(id) {
+                counts[match c {
+                    WordClass::Noun => 0,
+                    WordClass::Verb => 1,
+                    WordClass::Adjective => 2,
+                    WordClass::Filler => 3,
+                }] += 1;
+            }
+        }
+        assert_eq!(counts, [63, 63, 63, 63]);
+        assert_eq!(class_of(0), None);
+        assert_eq!(class_of(FIRST_WORD_ID), Some(WordClass::Noun));
+    }
+}

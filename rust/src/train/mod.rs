@@ -1,0 +1,227 @@
+//! Training driver: runs the AOT `train_step` executable (fwd + bwd +
+//! in-graph Adam) from Rust. The paper applies MCA at *inference* time to
+//! fine-tuned models; this module produces those fine-tuned models for the
+//! synthetic task suite — parameters and optimizer state live host-side as
+//! [`HostValue`]s and round-trip through the executable each step.
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{Dataset, Example, Label, TaskKind, TaskSpec};
+use crate::model::Params;
+use crate::rng::Pcg64;
+use crate::runtime::{HostValue, Runtime};
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f64,
+    /// linear warmup steps
+    pub warmup: usize,
+    pub log_every: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { steps: 400, lr: 1e-3, warmup: 40, log_every: 50, seed: 0 }
+    }
+}
+
+/// Result of a training run.
+pub struct TrainOutcome {
+    pub params: Params,
+    pub losses: Vec<(usize, f32)>,
+    pub final_loss: f32,
+}
+
+/// Assemble a fixed-shape batch: ids (batch, seq) i32 right-padded, labels
+/// (batch,) i32 or f32. Short batches repeat examples cyclically.
+pub fn make_batch(
+    examples: &[&Example],
+    batch: usize,
+    seq: usize,
+    kind: TaskKind,
+) -> (HostValue, HostValue) {
+    assert!(!examples.is_empty());
+    let mut ids = vec![0i32; batch * seq];
+    let mut labels_i = vec![0i32; batch];
+    let mut labels_f = vec![0f32; batch];
+    for b in 0..batch {
+        let ex = examples[b % examples.len()];
+        for (j, &t) in ex.ids.iter().take(seq).enumerate() {
+            ids[b * seq + j] = t;
+        }
+        match ex.label {
+            Label::Class(c) => labels_i[b] = c,
+            Label::Score(s) => labels_f[b] = s,
+        }
+    }
+    let ids_hv = HostValue::I32 { shape: vec![batch, seq], data: ids };
+    let labels_hv = match kind {
+        TaskKind::Classification => HostValue::I32 { shape: vec![batch], data: labels_i },
+        TaskKind::Regression => HostValue::F32 { shape: vec![batch], data: labels_f },
+    };
+    (ids_hv, labels_hv)
+}
+
+/// Learning rate at a step: linear warmup then cosine decay to 10%.
+pub fn lr_at(cfg: &TrainConfig, step: usize) -> f64 {
+    if step < cfg.warmup {
+        return cfg.lr * (step + 1) as f64 / cfg.warmup as f64;
+    }
+    let t = (step - cfg.warmup) as f64 / (cfg.steps - cfg.warmup).max(1) as f64;
+    let floor = 0.1 * cfg.lr;
+    floor + (cfg.lr - floor) * 0.5 * (1.0 + (std::f64::consts::PI * t).cos())
+}
+
+/// Pick the train artifact for (model, task kind).
+pub fn train_artifact_name(rt: &Runtime, model: &str, kind: TaskKind) -> Result<String> {
+    let suffix = match kind {
+        TaskKind::Classification => "cls",
+        TaskKind::Regression => "reg",
+    };
+    let found = rt
+        .manifest
+        .artifacts
+        .values()
+        .find(|a| a.model == model && a.kind == format!("train_{suffix}"))
+        .map(|a| a.name.clone());
+    found.with_context(|| format!("no train_{suffix} artifact for model {model}"))
+}
+
+/// Train a model on a task dataset. Deterministic in `cfg.seed`.
+pub fn train_task(
+    rt: &mut Runtime,
+    model_name: &str,
+    spec: &TaskSpec,
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    verbose: bool,
+) -> Result<TrainOutcome> {
+    let artifact = train_artifact_name(rt, model_name, spec.kind)?;
+    let info = rt.manifest.artifact(&artifact)?.clone();
+    let model = rt.manifest.model(model_name)?.clone();
+    let (batch, seq) = (info.batch, info.seq);
+    if seq > model.max_len {
+        bail!("artifact seq {seq} > model max_len {}", model.max_len);
+    }
+
+    let mut rng = Pcg64::new(cfg.seed ^ 0x7261696e);
+    let mut params = Params::init(&model, &mut rng);
+    let mut m = Params::zeros_like(&model);
+    let mut v = Params::zeros_like(&model);
+    let mut step_v = HostValue::scalar_f32(0.0);
+
+    let n_train = ds.train.len();
+    let mut order: Vec<usize> = (0..n_train).collect();
+    let mut losses = Vec::new();
+    let mut cursor = n_train; // force shuffle on first step
+
+    for step in 0..cfg.steps {
+        if cursor + batch > n_train {
+            rng.shuffle(&mut order);
+            cursor = 0;
+        }
+        let exs: Vec<&Example> = order[cursor..cursor + batch].iter().map(|&i| &ds.train[i]).collect();
+        cursor += batch;
+        let (ids, labels) = make_batch(&exs, batch, seq, spec.kind);
+
+        let n_par = params.values.len();
+        let mut inputs = Vec::with_capacity(3 * n_par + 4);
+        inputs.extend(params.values.iter().cloned());
+        inputs.extend(m.values.iter().cloned());
+        inputs.extend(v.values.iter().cloned());
+        inputs.push(step_v.clone());
+        inputs.push(ids);
+        inputs.push(labels);
+        inputs.push(HostValue::scalar_f32(lr_at(cfg, step) as f32));
+
+        let mut out = rt.run(&artifact, &inputs)?;
+        let loss = out.pop().context("missing loss")?.scalar_value_f32()?;
+        step_v = out.pop().context("missing step")?;
+        let v_new: Vec<HostValue> = out.split_off(2 * n_par);
+        let m_new: Vec<HostValue> = out.split_off(n_par);
+        params = Params { values: out };
+        m = Params { values: m_new };
+        v = Params { values: v_new };
+
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            losses.push((step, loss));
+            if verbose {
+                eprintln!("[train {model_name}/{}] step {step:4} loss {loss:.4} lr {:.2e}", spec.name, lr_at(cfg, step));
+            }
+        }
+        if !loss.is_finite() {
+            bail!("loss diverged at step {step}: {loss}");
+        }
+    }
+
+    let final_loss = losses.last().map(|&(_, l)| l).unwrap_or(f32::NAN);
+    Ok(TrainOutcome { params, losses, final_loss })
+}
+
+/// Train-or-load with checkpoint caching under `root`.
+pub fn train_or_load(
+    rt: &mut Runtime,
+    root: &std::path::Path,
+    model_name: &str,
+    spec: &TaskSpec,
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    verbose: bool,
+) -> Result<Params> {
+    let path = crate::model::checkpoint_path(root, model_name, spec.name);
+    let model = rt.manifest.model(model_name)?.clone();
+    if path.exists() {
+        match Params::load(&path, &model) {
+            Ok(p) => return Ok(p),
+            Err(e) => eprintln!("[train] stale checkpoint {path:?} ({e}); retraining"),
+        }
+    }
+    let out = train_task(rt, model_name, spec, ds, cfg, verbose)?;
+    std::fs::create_dir_all(root)?;
+    out.params.save(&path)?;
+    Ok(out.params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let cfg = TrainConfig { steps: 100, lr: 1e-3, warmup: 10, ..Default::default() };
+        assert!(lr_at(&cfg, 0) < lr_at(&cfg, 9)); // warming up
+        assert!((lr_at(&cfg, 9) - 1e-3).abs() < 1e-9);
+        assert!(lr_at(&cfg, 99) < lr_at(&cfg, 50)); // decaying
+        assert!(lr_at(&cfg, 99) >= 0.1 * 1e-3 - 1e-12); // floor
+    }
+
+    #[test]
+    fn make_batch_pads_and_wraps() {
+        let e1 = Example { ids: vec![1, 5, 2], label: Label::Class(1) };
+        let e2 = Example { ids: vec![1, 6, 7, 2], label: Label::Class(0) };
+        let (ids, labels) = make_batch(&[&e1, &e2], 4, 6, TaskKind::Classification);
+        let id_data = ids.as_i32().unwrap();
+        assert_eq!(ids.shape(), &[4, 6]);
+        assert_eq!(&id_data[0..6], &[1, 5, 2, 0, 0, 0]);
+        assert_eq!(&id_data[6..12], &[1, 6, 7, 2, 0, 0]);
+        // wraps around
+        assert_eq!(&id_data[12..18], &[1, 5, 2, 0, 0, 0]);
+        assert_eq!(labels.as_i32().unwrap(), &[1, 0, 1, 0]);
+    }
+
+    #[test]
+    fn make_batch_truncates_long() {
+        let long = Example { ids: (0..50).map(|i| (i % 30) + 1).collect(), label: Label::Class(0) };
+        let (ids, _) = make_batch(&[&long], 1, 8, TaskKind::Classification);
+        assert_eq!(ids.shape(), &[1, 8]);
+    }
+
+    #[test]
+    fn make_batch_regression_labels() {
+        let e = Example { ids: vec![1, 2], label: Label::Score(0.7) };
+        let (_, labels) = make_batch(&[&e], 2, 4, TaskKind::Regression);
+        assert_eq!(labels.as_f32().unwrap(), &[0.7, 0.7]);
+    }
+}

@@ -1,0 +1,227 @@
+//! Tiny CLI argument parser substrate (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed accessors, defaults and a generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone)]
+struct Spec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument set for one subcommand.
+#[derive(Debug, Default)]
+pub struct Args {
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare an option with a default value.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a required option.
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self, cmd: &str) -> String {
+        let mut s = format!("usage: mca {cmd} [options]\n");
+        for spec in &self.specs {
+            let d = match (&spec.default, spec.is_flag) {
+                (Some(d), _) => format!(" (default: {d})"),
+                (None, true) => String::new(),
+                (None, false) => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", spec.name, spec.help, d));
+        }
+        s
+    }
+
+    /// Parse a raw argv slice (after the subcommand name).
+    pub fn parse(mut self, argv: &[String]) -> Result<Self> {
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| anyhow!("unknown option --{key}"))?
+                    .clone();
+                let val = if spec.is_flag {
+                    if inline_val.is_some() {
+                        bail!("flag --{key} takes no value");
+                    }
+                    "true".to_string()
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .ok_or_else(|| anyhow!("option --{key} needs a value"))?
+                        .clone()
+                };
+                self.values.insert(key, val);
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // Check required options.
+        for spec in &self.specs {
+            if spec.default.is_none() && !spec.is_flag && !self.values.contains_key(&spec.name) {
+                bail!("missing required option --{}", spec.name);
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        for spec in &self.specs {
+            if spec.name == name {
+                if let Some(d) = &spec.default {
+                    return d.clone();
+                }
+                if spec.is_flag {
+                    return "false".to_string();
+                }
+            }
+        }
+        panic!("option --{name} was never declared");
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.get(name) == "true"
+    }
+
+    /// Comma-separated f64 list, e.g. `--alphas 0.2,0.4`.
+    pub fn get_f64_list(&self, name: &str) -> Result<Vec<f64>> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().map_err(|e| anyhow!("--{name}: {e}")))
+            .collect()
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_defaults_and_overrides() {
+        let a = Args::new()
+            .opt("alpha", "0.2", "error coefficient")
+            .opt("model", "bert_sim", "model name")
+            .parse(&sv(&["--alpha", "0.6"]))
+            .unwrap();
+        assert_eq!(a.get_f64("alpha").unwrap(), 0.6);
+        assert_eq!(a.get("model"), "bert_sim");
+    }
+
+    #[test]
+    fn parse_eq_form_and_flags() {
+        let a = Args::new()
+            .opt("seeds", "32", "")
+            .flag("verbose", "")
+            .parse(&sv(&["--seeds=128", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get_usize("seeds").unwrap(), 128);
+        assert!(a.get_flag("verbose"));
+    }
+
+    #[test]
+    fn required_and_unknown() {
+        let r = Args::new().req("task", "").parse(&sv(&[]));
+        assert!(r.is_err());
+        let r = Args::new().parse(&sv(&["--nope", "1"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn positional_and_lists() {
+        let a = Args::new()
+            .opt("alphas", "0.2,0.4", "")
+            .parse(&sv(&["run", "--alphas", "0.1,0.9"]))
+            .unwrap();
+        assert_eq!(a.positional(), &["run".to_string()]);
+        assert_eq!(a.get_f64_list("alphas").unwrap(), vec![0.1, 0.9]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::new().opt("x", "1", "").parse(&sv(&["--x"]));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! In-tree substrates for crates unavailable in the offline environment
+//! (DESIGN.md §9): JSON, CLI parsing, property testing, thread pool, timing.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod threadpool;
+pub mod timer;

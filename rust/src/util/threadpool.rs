@@ -1,0 +1,98 @@
+//! Fixed-size worker thread pool substrate (tokio is unavailable offline).
+//!
+//! The coordinator uses std threads + channels; this pool covers the
+//! embarrassingly-parallel pieces (per-seed evaluation sweeps, dataset
+//! generation) with a simple scoped `map` API.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Run `f` over `items` on up to `workers` threads, preserving order.
+pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Send + Sync + 'static,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    let f = Arc::new(f);
+    let queue = Arc::new(Mutex::new(
+        items.into_iter().enumerate().collect::<Vec<(usize, T)>>(),
+    ));
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+
+    let mut handles = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let queue = Arc::clone(&queue);
+        let f = Arc::clone(&f);
+        let tx = tx.clone();
+        handles.push(thread::spawn(move || loop {
+            let item = queue.lock().unwrap().pop();
+            match item {
+                Some((i, x)) => {
+                    let r = f(x);
+                    if tx.send((i, r)).is_err() {
+                        return;
+                    }
+                }
+                None => return,
+            }
+        }));
+    }
+    drop(tx);
+
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for (i, r) in rx {
+        out[i] = Some(r);
+    }
+    for h in handles {
+        h.join().expect("worker panicked");
+    }
+    out.into_iter().map(|r| r.expect("missing result")).collect()
+}
+
+/// Default worker count: physical parallelism minus one (leave a core for
+/// the coordinator thread), at least 1.
+pub fn default_workers() -> usize {
+    thread::available_parallelism().map(|n| n.get().saturating_sub(1).max(1)).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let out = parallel_map((0..100).collect(), 4, |x: i32| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_worker_matches() {
+        let a = parallel_map((0..20).collect(), 1, |x: u64| x * x);
+        let b = parallel_map((0..20).collect(), 8, |x: u64| x * x);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn propagates_panics() {
+        parallel_map(vec![1, 2, 3], 2, |x: i32| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+}

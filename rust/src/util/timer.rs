@@ -1,0 +1,108 @@
+//! Timing + latency-statistics substrate used by the serving metrics and
+//! the in-tree bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Streaming latency statistics: count/mean plus exact percentiles over the
+/// recorded samples (we keep all samples; serving runs here are bounded).
+#[derive(Debug, Default, Clone)]
+pub struct LatencyStats {
+    samples_us: Vec<u64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+    }
+
+    pub fn record_ms(&mut self, ms: f64) {
+        self.samples_us.push((ms * 1e3) as u64);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64 / 1e3
+    }
+
+    /// Exact percentile (nearest-rank) in milliseconds.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples_us.clone();
+        v.sort_unstable();
+        let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+        v[rank.clamp(1, v.len()) - 1] as f64 / 1e3
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.percentile_ms(50.0)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.percentile_ms(99.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_exact() {
+        let mut s = LatencyStats::default();
+        for ms in 1..=100 {
+            s.record_ms(ms as f64);
+        }
+        assert_eq!(s.count(), 100);
+        assert!((s.p50_ms() - 50.0).abs() < 1e-9);
+        assert!((s.p99_ms() - 99.0).abs() < 1e-9);
+        assert!((s.percentile_ms(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.mean_ms() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = LatencyStats::default();
+        assert_eq!(s.mean_ms(), 0.0);
+        assert_eq!(s.p99_ms(), 0.0);
+    }
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::new();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+    }
+}

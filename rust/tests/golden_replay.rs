@@ -1,0 +1,117 @@
+//! Cross-language integration tests: replay the golden files emitted by
+//! `python/compile/golden.py` through the AOT artifacts via the Rust PJRT
+//! runtime and require (near-)bitwise agreement. This validates the whole
+//! Python → HLO-text → PJRT-from-Rust bridge, including the in-graph PRNG
+//! (threefry is deterministic, so MCA outputs must match exactly too).
+//!
+//! Requires `make artifacts` to have run; tests skip (pass trivially) when
+//! the artifacts directory is absent so `cargo test` works pre-build.
+
+use std::path::PathBuf;
+
+use mca::runtime::{read_mcag, HostValue, Runtime};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = mca::runtime::default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn max_abs_diff(a: &HostValue, b: &HostValue) -> f32 {
+    let (a, b) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+fn replay(artifact: &str, atol: f32) {
+    let Some(dir) = artifacts_dir() else { return };
+    let golden_path = dir.join("golden").join(format!("{artifact}.golden"));
+    if !golden_path.exists() {
+        eprintln!("skipping: no golden for {artifact}");
+        return;
+    }
+    let tensors = read_mcag(&golden_path).expect("reading golden");
+    let mut rt = Runtime::load(&dir).expect("runtime");
+    let info = rt.manifest.artifact(artifact).expect("artifact").clone();
+    let n_in = info.inputs.len();
+    let n_out = info.outputs.len();
+    assert_eq!(tensors.len(), n_in + n_out, "golden tensor count");
+
+    let outputs = rt.run(artifact, &tensors[..n_in]).expect("execution");
+    for (i, (got, want)) in outputs.iter().zip(&tensors[n_in..]).enumerate() {
+        assert_eq!(got.shape(), want.shape(), "output #{i} shape");
+        let d = max_abs_diff(got, want);
+        assert!(d <= atol, "{artifact} output #{i} ({}): max|Δ| = {d}", info.outputs[i].role);
+    }
+}
+
+#[test]
+fn golden_bert_exact_forward() {
+    replay("bert_sim_fwd_exact_b1", 1e-4);
+}
+
+#[test]
+fn golden_bert_mca_forward() {
+    // MCA path: in-graph threefry sampling must reproduce Python exactly.
+    replay("bert_sim_fwd_mca_b1", 1e-4);
+}
+
+#[test]
+fn golden_bert_mca_pallas_forward() {
+    // The Pallas (interpret) kernel variant — L1 on the request path.
+    replay("bert_sim_fwd_mca_pallas_b4", 1e-4);
+}
+
+#[test]
+fn golden_distil_mca_forward() {
+    replay("distil_sim_fwd_mca_b1", 1e-4);
+}
+
+#[test]
+fn golden_longformer_mca_forward() {
+    replay("longformer_sim_fwd_mca_b16", 1e-4);
+}
+
+#[test]
+fn golden_train_step() {
+    // One Adam step: parameters, optimizer state and loss must match.
+    replay("bert_sim_train_cls_b32", 5e-3);
+}
+
+#[test]
+fn runtime_rejects_bad_inputs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).expect("runtime");
+    // Too few inputs
+    assert!(rt.run("bert_sim_fwd_exact_b1", &[]).is_err());
+    // Unknown artifact
+    assert!(rt.run("nope", &[]).is_err());
+}
+
+#[test]
+fn mca_reduces_measured_flops_vs_exact() {
+    // End-to-end property: the in-graph Σr_i at alpha=0.3 must be well
+    // below the saturated budget n_eff * L * d.
+    let Some(dir) = artifacts_dir() else { return };
+    let golden_path = dir.join("golden/bert_sim_fwd_mca_b1.golden");
+    if !golden_path.exists() {
+        return;
+    }
+    let tensors = read_mcag(&golden_path).unwrap();
+    let mut rt = Runtime::load(&dir).unwrap();
+    let info = rt.manifest.artifact("bert_sim_fwd_mca_b1").unwrap().clone();
+    let model = rt.manifest.model(&info.model).unwrap().clone();
+    let outputs = rt.run("bert_sim_fwd_mca_b1", &tensors[..info.inputs.len()]).unwrap();
+    let r_sum = outputs[1].as_f32().unwrap()[0] as f64;
+    let n_eff = outputs[2].as_f32().unwrap()[0] as f64;
+    let saturated = n_eff * model.n_layers as f64 * model.d_model as f64;
+    assert!(r_sum >= n_eff * model.n_layers as f64, "r_sum {r_sum} below minimum");
+    assert!(
+        r_sum < 0.8 * saturated,
+        "r_sum {r_sum} not meaningfully below saturated {saturated}"
+    );
+}

@@ -1,0 +1,106 @@
+//! Integration tests for the serving coordinator against real artifacts:
+//! start the worker thread, submit mixed-α traffic, verify batching,
+//! responses, stats and clean shutdown. Skips when artifacts are missing.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use mca::coordinator::{Server, ServerConfig};
+use mca::model::Params;
+use mca::rng::Pcg64;
+use mca::runtime::Runtime;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = mca::runtime::default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+/// Write a fresh random checkpoint (serving tests don't need accuracy).
+fn make_checkpoint(dir: &PathBuf, model: &str) -> PathBuf {
+    let rt = Runtime::load(dir).unwrap();
+    let info = rt.manifest.model(model).unwrap().clone();
+    let mut rng = Pcg64::new(77);
+    let params = Params::init(&info, &mut rng);
+    let path = std::env::temp_dir().join(format!("mca_itest_{model}.mcag"));
+    params.save(&path).unwrap();
+    path
+}
+
+#[test]
+fn server_serves_mixed_alpha_traffic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ckpt = make_checkpoint(&dir, "bert_sim");
+    let server = Server::start(
+        dir,
+        ServerConfig {
+            model: "bert_sim".into(),
+            checkpoint: ckpt,
+            max_wait: Duration::from_millis(5),
+            seq: 64,
+        },
+    )
+    .expect("server start");
+
+    let mut rxs = Vec::new();
+    for i in 0..20 {
+        let alpha = [0.2f32, 0.5][i % 2];
+        rxs.push((i, server.submit("n0 v1 n2 v3 a4", alpha, "mca")));
+    }
+    for (i, rx) in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).expect("response");
+        assert!(resp.pred_class >= 0 && resp.pred_class < 3, "req {i}");
+        assert_eq!(resp.logits.len(), 3);
+        assert!(resp.flops_reduction >= 1.0, "req {i}: {}", resp.flops_reduction);
+        assert!(resp.batch_size >= 1);
+    }
+    let stats = server.stats().expect("stats");
+    assert_eq!(stats.served, 20);
+    assert!(stats.batches <= 20);
+    assert!(stats.mean_flops_reduction > 1.0);
+    // batching actually happened (20 reqs, 2 α classes, bucket 8 available)
+    assert!(stats.mean_batch_size > 1.0, "mean batch {}", stats.mean_batch_size);
+    server.shutdown().expect("shutdown");
+}
+
+#[test]
+fn server_same_seed_same_alpha_is_deterministic_per_request() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ckpt = make_checkpoint(&dir, "distil_sim");
+    let server = Server::start(
+        dir,
+        ServerConfig {
+            model: "distil_sim".into(),
+            checkpoint: ckpt,
+            max_wait: Duration::from_millis(1),
+            seq: 64,
+        },
+    )
+    .expect("server start");
+    // Same text twice: predictions must be identical for the exact mode.
+    let r1 = server.submit("n1 v1 n2 v2", 1.0, "exact").recv().unwrap();
+    let r2 = server.submit("n1 v1 n2 v2", 1.0, "exact").recv().unwrap();
+    assert_eq!(r1.pred_class, r2.pred_class);
+    assert_eq!(r1.logits, r2.logits);
+    server.shutdown().expect("shutdown");
+}
+
+#[test]
+fn server_rejects_missing_model() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ckpt = make_checkpoint(&dir, "bert_sim");
+    let r = Server::start(
+        dir,
+        ServerConfig {
+            model: "no_such_model".into(),
+            checkpoint: ckpt,
+            max_wait: Duration::from_millis(5),
+            seq: 64,
+        },
+    );
+    assert!(r.is_err());
+}

@@ -1,0 +1,71 @@
+#!/usr/bin/env python3
+"""Splice measured results from results/ into EXPERIMENTS.md placeholders.
+
+Usage: python scripts/fill_experiments.py  (run from the repo root)
+Idempotent: placeholders are HTML comments that survive each fill.
+"""
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def read(path):
+    p = os.path.join(ROOT, "results", path)
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return f.read().strip()
+
+
+def splice(text, tag, content, label):
+    """Replace `<!-- TAG -->` (and any previously spliced block after it)
+    with the tag + fenced content."""
+    if content is None:
+        return text
+    block = f"<!-- {tag} -->\n\n{content}\n\n<!-- /{tag} -->"
+    # Replace an existing spliced block, or the bare placeholder.
+    pat_full = re.compile(rf"<!-- {tag} -->.*?<!-- /{tag} -->", re.S)
+    if pat_full.search(text):
+        return pat_full.sub(block, text)
+    return text.replace(f"<!-- {tag} -->", block)
+
+
+def main():
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(path) as f:
+        text = f.read()
+
+    for tag, fname in [
+        ("TABLE1", "table1.md"),
+        ("TABLE2", "table2.md"),
+        ("TABLE3", "table3.md"),
+        ("ABLATIONS", "ablations.md"),
+    ]:
+        text = splice(text, tag, read(fname), fname)
+
+    for tag, fname in [
+        ("FIGURE1", "figure1.txt"),
+        ("FIGURE2", "figure2.txt"),
+        ("BOUNDS", "bounds.md"),
+        ("SERVING", "serving.md"),
+        ("PERF_BASELINE", "perf_baseline.txt"),
+        ("PERF_L3", "perf_l3.md"),
+    ]:
+        c = read(fname)
+        if c is not None and not c.startswith("|") and not c.startswith("#"):
+            c = "```\n" + c + "\n```"
+        text = splice(text, tag, c, fname)
+
+    summary = read("summary.md")
+    text = splice(text, "SUMMARY", summary, "summary")
+
+    with open(path, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()
