@@ -9,12 +9,12 @@
 
 use anyhow::Result;
 use mca::eval::tables::Pipeline;
-use mca::runtime::default_artifacts_dir;
+use mca::runtime::{backend_spec_from_cli, default_artifacts_dir};
 
 fn main() -> Result<()> {
     let seeds: u32 = std::env::var("MCA_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(8);
     let alpha: f64 = std::env::var("MCA_ALPHA").ok().and_then(|s| s.parse().ok()).unwrap_or(0.4);
-    let p = Pipeline::new(default_artifacts_dir());
+    let p = Pipeline::new(backend_spec_from_cli("auto", default_artifacts_dir())?);
     let rows = p.ablations(seeds, alpha)?;
 
     let mut text = format!(

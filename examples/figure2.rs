@@ -6,11 +6,11 @@
 use anyhow::Result;
 use mca::eval::tables::Pipeline;
 use mca::report;
-use mca::runtime::default_artifacts_dir;
+use mca::runtime::{backend_spec_from_cli, default_artifacts_dir};
 
 fn main() -> Result<()> {
     let seeds: u32 = std::env::var("MCA_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(8);
-    let p = Pipeline::new(default_artifacts_dir());
+    let p = Pipeline::new(backend_spec_from_cli("auto", default_artifacts_dir())?);
     let alphas = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.8, 1.0];
     let series = p.figure2(&["bert_sim", "distil_sim"], &alphas, seeds)?;
 

@@ -1,29 +1,32 @@
 //! Quickstart: the smallest end-to-end use of the public API.
 //!
-//! Loads the AOT artifacts, runs one MCA forward pass (the Pallas-kernel
-//! variant) next to the exact baseline, and prints the measured FLOPs
-//! reduction plus the Theorem-2 error bound for the chosen α.
+//! Opens an execution backend (native pure-Rust by default — no artifacts
+//! needed; PJRT when built with `--features pjrt` and artifacts exist),
+//! runs one MCA forward pass next to the exact baseline, and prints the
+//! measured FLOPs reduction plus the Theorem-2 error bound for the chosen
+//! α.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 
 use anyhow::Result;
 use mca::mca::flops::{self, AttnDims};
 use mca::model::Params;
 use mca::rng::Pcg64;
-use mca::runtime::{default_artifacts_dir, HostValue, Runtime};
+use mca::runtime::{backend_spec_from_cli, default_artifacts_dir, open_backend, ForwardSpec, HostValue};
 use mca::tokenizer::Tokenizer;
 
 fn main() -> Result<()> {
-    let mut rt = Runtime::load(&default_artifacts_dir())?;
-    println!("PJRT platform: {}", rt.platform());
+    let spec = backend_spec_from_cli("auto", default_artifacts_dir())?;
+    let mut be = open_backend(&spec)?;
+    println!("platform: {}", be.platform());
 
     // A (untrained) bert_sim model — quickstart only demonstrates the
     // mechanics; see examples/train_e2e.rs for a trained model.
-    let model = rt.manifest.model("bert_sim")?.clone();
+    let model = be.model("bert_sim")?;
     let mut rng = Pcg64::new(7);
     let params = Params::init(&model, &mut rng);
 
-    // Tokenize a batch of 4 sentences (the pallas artifact bucket).
+    // Tokenize a batch of 4 sentences.
     let tok = Tokenizer::new();
     let texts = [
         "n0 v1 n2 v3 a4 n5 v6",
@@ -41,31 +44,23 @@ fn main() -> Result<()> {
     let ids = HostValue::I32 { shape: vec![4, seq], data: ids };
 
     let alpha = 0.3f32;
-    let mut inputs: Vec<HostValue> = params.values.clone();
-    inputs.push(ids);
-    inputs.push(HostValue::scalar_f32(alpha));
-    inputs.push(HostValue::scalar_u32(42));
-
-    // The L1 Pallas kernel variant, lowered through interpret mode.
-    let out = rt.run("bert_sim_fwd_mca_pallas_b4", &inputs)?;
-    let logits = out[0].as_f32()?;
-    let r_sum = out[1].as_f32()?;
-    let n_eff = out[2].as_f32()?;
+    let fwd = ForwardSpec::new("bert_sim", "mca", 4, seq);
+    let out = be.forward(&fwd, &params, &ids, alpha, 42)?;
 
     println!("\nper-sequence results (alpha = {alpha}):");
     let dims = AttnDims { d_model: model.d_model, window: model.window };
     for b in 0..4 {
         let reduction = flops::reduction_factor(
-            &[(n_eff[b] as usize, r_sum[b] as u64)],
+            &[(out.n_eff[b] as usize, out.r_sum[b] as u64)],
             model.n_layers,
             dims,
         );
         println!(
             "  \"{}\" -> logits {:?}, n_eff={}, Σr={}, FLOPs reduction {reduction:.2}x",
             texts[b],
-            &logits[b * 3..b * 3 + 3],
-            n_eff[b],
-            r_sum[b],
+            &out.logits[b * out.n_classes..(b + 1) * out.n_classes],
+            out.n_eff[b],
+            out.r_sum[b],
         );
     }
 

@@ -9,11 +9,11 @@ use anyhow::Result;
 use mca::data;
 use mca::eval::{tables::Pipeline, EvalOptions};
 use mca::report;
-use mca::runtime::default_artifacts_dir;
+use mca::runtime::{backend_spec_from_cli, default_artifacts_dir};
 
 fn main() -> Result<()> {
     let seeds: u32 = std::env::var("MCA_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(8);
-    let mut p = Pipeline::new(default_artifacts_dir());
+    let mut p = Pipeline::new(backend_spec_from_cli("auto", default_artifacts_dir())?);
     if let Ok(s) = std::env::var("MCA_TRAIN_STEPS") {
         p.train_cfg.steps = s.parse()?;
     }

@@ -11,12 +11,12 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 use mca::coordinator::{Server, ServerConfig};
 use mca::data;
-use mca::runtime::{default_artifacts_dir, Runtime};
+use mca::runtime::{backend_spec_from_cli, default_artifacts_dir, open_backend};
 use mca::tokenizer::Tokenizer;
 use mca::train::{train_task, TrainConfig};
 
 fn main() -> Result<()> {
-    let artifacts = default_artifacts_dir();
+    let backend = backend_spec_from_cli("auto", default_artifacts_dir())?;
     let n_requests: usize = std::env::var("MCA_REQUESTS").ok().and_then(|s| s.parse().ok()).unwrap_or(96);
 
     // 1. Fine-tune bert_sim on the SST-2 analog (cached).
@@ -25,15 +25,15 @@ fn main() -> Result<()> {
     let ckpt = mca::model::checkpoint_path(std::path::Path::new("checkpoints"), "bert_sim", "sst2_sim");
     if !ckpt.exists() {
         eprintln!("[serve-example] training bert_sim on sst2_sim ...");
-        let mut rt = Runtime::load(&artifacts)?;
-        let out = train_task(&mut rt, "bert_sim", &spec, &ds, &TrainConfig::default(), true)?;
+        let mut be = open_backend(&backend)?;
+        let out = train_task(be.as_mut(), "bert_sim", &spec, &ds, &TrainConfig::default(), true)?;
         std::fs::create_dir_all("checkpoints")?;
         out.params.save(&ckpt)?;
     }
 
-    // 2. Start the coordinator (worker thread owns the PJRT runtime).
+    // 2. Start the coordinator (the worker thread owns the backend).
     let server = Server::start(
-        artifacts,
+        backend,
         ServerConfig {
             model: "bert_sim".into(),
             checkpoint: ckpt,

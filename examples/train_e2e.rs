@@ -1,8 +1,9 @@
 //! End-to-end training driver: fine-tunes the transformer on a synthetic
-//! task via the AOT `train_step` executable (fwd+bwd+Adam fully in-graph,
-//! driven from Rust), logs the loss curve, then shows the paper's core
-//! claim on the freshly trained model: MCA at small α matches the exact
-//! baseline's accuracy at a fraction of the attention FLOPs.
+//! task via `Backend::train_step` (fwd+bwd+Adam — the AOT executable on
+//! PJRT, the manual backward pass on the native backend), logs the loss
+//! curve, then shows the paper's core claim on the freshly trained model:
+//! MCA at small α matches the exact baseline's accuracy at a fraction of
+//! the attention FLOPs.
 //!
 //!     cargo run --release --example train_e2e
 //!
@@ -11,7 +12,7 @@
 use anyhow::Result;
 use mca::data;
 use mca::eval::{eval_task, EvalOptions};
-use mca::runtime::{default_artifacts_dir, Runtime};
+use mca::runtime::{backend_spec_from_cli, default_artifacts_dir, open_backend};
 use mca::train::{train_task, TrainConfig};
 
 fn env_or(name: &str, default: &str) -> String {
@@ -31,10 +32,10 @@ fn main() -> Result<()> {
         ds.dev.len()
     );
 
-    let mut rt = Runtime::load(&default_artifacts_dir())?;
+    let mut be = open_backend(&backend_spec_from_cli("auto", default_artifacts_dir())?)?;
     let cfg = TrainConfig { steps, log_every: 25, ..Default::default() };
     let t0 = std::time::Instant::now();
-    let out = train_task(&mut rt, &model, &spec, &ds, &cfg, false)?;
+    let out = train_task(be.as_mut(), &model, &spec, &ds, &cfg, false)?;
 
     println!("\nloss curve ({} steps in {:.1}s):", steps, t0.elapsed().as_secs_f64());
     for (step, loss) in &out.losses {
@@ -44,7 +45,7 @@ fn main() -> Result<()> {
 
     // Evaluate: exact baseline vs MCA α sweep on the trained model.
     let opts = EvalOptions { alphas: vec![0.2, 0.6, 1.0], seeds: 4, ..Default::default() };
-    let row = eval_task(&mut rt, &model, &spec, &out.params, &ds, &opts, false)?;
+    let row = eval_task(be.as_mut(), &model, &spec, &out.params, &ds, &opts, false)?;
     println!("\nexact baseline: {:.4}", row.baseline[0].1);
     for a in &row.alphas {
         println!(

@@ -1,11 +1,14 @@
 //! `cargo bench` — in-tree harness (criterion is unavailable offline; see
-//! rust/src/bench). Two groups:
+//! rust/src/bench). Three groups:
 //!
-//! * end-to-end benches, one per paper table/figure shape: the exact vs
-//!   MCA forward executables each experiment drives (Tables 1–3, the bf16
-//!   variants of Figure 1, the Pallas-kernel variant) plus the train step;
 //! * micro benches for the L3 hot paths: batch planning, tokenization,
-//!   alias sampling, the host MCA estimator, FLOPs accounting.
+//!   alias sampling, the host MCA estimator vs the exact matmul it
+//!   replaces (the paper's core trade-off, at several α budgets), FLOPs
+//!   accounting;
+//! * native end-to-end benches: the pure-Rust backend's exact vs MCA
+//!   forward at serving shapes (no artifacts needed);
+//! * PJRT end-to-end benches, one per paper table/figure shape (builds
+//!   with `--features pjrt` and a populated artifacts/ directory only).
 //!
 //! Set MCA_BENCH_QUICK=1 for a fast pass.
 
@@ -17,7 +20,7 @@ use mca::data;
 use mca::mca::{self as mcacore, flops::AttnDims};
 use mca::model::Params;
 use mca::rng::{AliasTable, Pcg64};
-use mca::runtime::{default_artifacts_dir, HostValue, Runtime};
+use mca::runtime::{Backend, ForwardSpec, NativeBackend};
 use mca::tensor::Tensor;
 use mca::tokenizer::Tokenizer;
 use mca::train::make_batch;
@@ -33,23 +36,6 @@ fn bench_cfg() -> Bench {
             max_iters: 100_000,
         }
     }
-}
-
-/// Build ready-to-run forward inputs for an artifact.
-fn forward_inputs(rt: &Runtime, artifact: &str, alpha: f32) -> (Params, Vec<HostValue>) {
-    let info = rt.manifest.artifact(artifact).unwrap().clone();
-    let model = rt.manifest.model(&info.model).unwrap().clone();
-    let mut rng = Pcg64::new(11);
-    let params = Params::init(&model, &mut rng);
-    let spec = data::task_by_name(if info.seq > 64 { "imdb_sim" } else { "sst2_sim" }).unwrap();
-    let ds = data::generate(&spec, 99);
-    let exs: Vec<&data::Example> = ds.dev.iter().take(info.batch).collect();
-    let (ids, _) = make_batch(&exs, info.batch, info.seq, spec.kind);
-    let mut inputs = params.values.clone();
-    inputs.push(ids);
-    inputs.push(HostValue::scalar_f32(alpha));
-    inputs.push(HostValue::scalar_u32(3));
-    (params, inputs)
 }
 
 fn main() {
@@ -113,19 +99,33 @@ fn main() {
             }
         }));
     }
-    // --- host MCA estimator (n=64, d=128, the bert_sim shape) -------------
+    // --- host MCA estimator vs the exact product it replaces --------------
+    // (n=64, d=128, the bert_sim shape; r̄ sweeps the α knob: the encode
+    //  cost is the paper's headline FLOPs term)
     {
         let mut rng = Pcg64::new(9);
         let x = Tensor::from_fn(&[64, 128], |_| rng.gen_normal() as f32);
         let w = Tensor::from_fn(&[128, 128], |_| rng.gen_normal() as f32);
         let p = mcacore::sampling_probs(&w);
-        let r: Vec<usize> = (0..64).map(|i| 1 + (i % 32)).collect();
-        let mut r3 = Pcg64::new(10);
-        results.push(b.run("micro/host_mca_encode_64x128", Some(64.0), || {
-            std::hint::black_box(mcacore::mca_encode(&mut r3, &x, &w, &r, &p));
-        }));
-        results.push(b.run("micro/host_exact_matmul_64x128", Some(64.0), || {
+        let pool = mcacore::draw_pool(&mut Pcg64::new(10), &p, 128);
+        results.push(b.run("micro/exact_encode_64x128 (baseline)", Some(64.0), || {
             std::hint::black_box(x.matmul(&w).unwrap());
+        }));
+        for (label, r_val) in [
+            ("micro/mca_encode_64x128_r8   (~a0.2)", 8usize),
+            ("micro/mca_encode_64x128_r32  (~a0.5)", 32),
+            ("micro/mca_encode_64x128_r96  (~a0.8)", 96),
+            ("micro/mca_encode_64x128_r128 (exact fallback)", 128),
+        ] {
+            let r = vec![r_val; 64];
+            results.push(b.run(label, Some(64.0), || {
+                std::hint::black_box(mcacore::mca_encode_pooled(&x, &w, &r, &p, &pool));
+            }));
+        }
+        // mixed budgets as produced by Eq. 9 on a real pass
+        let r_mixed: Vec<usize> = (0..64).map(|i| 1 + (i * 2) % 128).collect();
+        results.push(b.run("micro/mca_encode_64x128_mixed", Some(64.0), || {
+            std::hint::black_box(mcacore::mca_encode_pooled(&x, &w, &r_mixed, &p, &pool));
         }));
     }
     // --- FLOPs accounting ---------------------------------------------------
@@ -153,14 +153,79 @@ fn main() {
         println!("{}", r.report());
     }
 
-    // --- end-to-end: one bench per table/figure -----------------------------
+    // --- native backend end-to-end: exact vs MCA forward --------------------
+    println!("\n== native backend end-to-end (exact vs MCA forward) ==");
+    let mut native = Vec::new();
+    {
+        let mut be = NativeBackend::new();
+        let spec_task = data::task_by_name("sst2_sim").unwrap();
+        let ds = data::generate(&spec_task, 99);
+        for model_name in ["bert_sim", "distil_sim"] {
+            let info = be.model(model_name).unwrap();
+            let mut rng = Pcg64::new(11);
+            let params = Params::init(&info, &mut rng);
+            let batch = 8usize;
+            let seq = 64usize;
+            let exs: Vec<&data::Example> = ds.dev.iter().take(batch).collect();
+            let (ids, _) = make_batch(&exs, batch, seq, spec_task.kind);
+            for (mode, alpha) in [("exact", 1.0f32), ("mca", 0.2), ("mca", 0.6)] {
+                let fspec = ForwardSpec::new(model_name, mode, batch, seq);
+                let label = format!("native/{model_name}_fwd_b{batch}_{mode}_a{alpha:.1}");
+                let mut seed = 0u32;
+                native.push(b.run(&label, Some(batch as f64), || {
+                    seed = seed.wrapping_add(1);
+                    std::hint::black_box(
+                        be.forward(&fspec, &params, &ids, alpha, seed).unwrap(),
+                    );
+                }));
+            }
+        }
+    }
+    for r in &native {
+        println!("{}", r.report());
+    }
+
+    #[cfg(feature = "pjrt")]
+    pjrt_benches(&b);
+    #[cfg(not(feature = "pjrt"))]
+    println!("\n(pjrt feature off — skipping artifact end-to-end benches)");
+}
+
+/// PJRT end-to-end benches, one per paper table/figure shape.
+#[cfg(feature = "pjrt")]
+fn pjrt_benches(b: &Bench) {
+    use mca::runtime::{default_artifacts_dir, HostValue, Runtime};
+
+    /// Build ready-to-run forward inputs for an artifact.
+    fn forward_inputs(rt: &Runtime, artifact: &str, alpha: f32) -> Vec<HostValue> {
+        let info = rt.manifest.artifact(artifact).unwrap().clone();
+        let model = rt.manifest.model(&info.model).unwrap().clone();
+        let mut rng = Pcg64::new(11);
+        let params = Params::init(&model, &mut rng);
+        let spec = data::task_by_name(if info.seq > 64 { "imdb_sim" } else { "sst2_sim" }).unwrap();
+        let ds = data::generate(&spec, 99);
+        let exs: Vec<&data::Example> = ds.dev.iter().take(info.batch).collect();
+        let (ids, _) = make_batch(&exs, info.batch, info.seq, spec.kind);
+        let mut inputs = params.values.clone();
+        inputs.push(ids);
+        inputs.push(HostValue::scalar_f32(alpha));
+        inputs.push(HostValue::scalar_u32(3));
+        inputs
+    }
+
     let dir = default_artifacts_dir();
     if !dir.join("manifest.json").exists() {
-        println!("\n(artifacts not built — skipping end-to-end benches; run `make artifacts`)");
+        println!("\n(artifacts not built — skipping PJRT end-to-end benches; run `make artifacts`)");
         return;
     }
-    println!("\n== end-to-end benches (one per table/figure shape) ==");
-    let mut rt = Runtime::load(&dir).expect("runtime");
+    println!("\n== PJRT end-to-end benches (one per table/figure shape) ==");
+    let mut rt = match Runtime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("(failed to open PJRT runtime: {e:#})");
+            return;
+        }
+    };
     let mut e2e = Vec::new();
 
     // Table 1/2 + Figure 1/2 shapes: bert_sim/distil_sim b32 n64.
@@ -182,8 +247,8 @@ fn main() {
             println!("  (skipping {label}: artifact {artifact} missing)");
             continue;
         }
-        let (_params, inputs) = forward_inputs(&rt, artifact, alpha);
-        rt.warmup(&[artifact]).unwrap();
+        let inputs = forward_inputs(&rt, artifact, alpha);
+        rt.warmup_artifacts(&[artifact]).unwrap();
         let batch = rt.manifest.artifact(artifact).unwrap().batch as f64;
         e2e.push(b.run(label, Some(batch), || {
             std::hint::black_box(rt.run(artifact, &inputs).unwrap());
@@ -210,7 +275,7 @@ fn main() {
             inputs.push(ids);
             inputs.push(labels);
             inputs.push(HostValue::scalar_f32(1e-3));
-            rt.warmup(&[artifact]).unwrap();
+            rt.warmup_artifacts(&[artifact]).unwrap();
             e2e.push(b.run("train/train_step_b32", Some(32.0), || {
                 std::hint::black_box(rt.run(artifact, &inputs).unwrap());
             }));

@@ -2,11 +2,13 @@
 //! scaled to this paper's contribution: requests carry a per-request α
 //! (the MCA precision knob — "simple dynamic control of the
 //! performance-resource trade-off"), a dynamic batcher groups compatible
-//! requests into the compiled batch buckets, and a model-worker thread
-//! that owns the (non-Send) PJRT runtime executes them.
+//! requests into the backend's batch buckets, and a model-worker thread
+//! that owns the (possibly non-Send) execution backend executes them.
 //!
 //! Split into a pure, property-testable batching policy ([`plan_batches`])
-//! and the threaded worker ([`Server`]).
+//! and the threaded worker ([`Server`]). The worker opens its backend from
+//! a [`BackendSpec`], so the same coordinator serves PJRT artifacts or the
+//! native pure-Rust forward.
 
 pub mod loadgen;
 
@@ -19,7 +21,7 @@ use anyhow::{Context, Result};
 
 use crate::mca::flops::{self, AttnDims};
 use crate::model::Params;
-use crate::runtime::{HostValue, Runtime};
+use crate::runtime::{open_backend, Backend, BackendSpec, ForwardSpec, HostValue};
 use crate::tokenizer::Tokenizer;
 use crate::util::timer::LatencyStats;
 
@@ -154,12 +156,12 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the worker thread: loads the runtime + checkpoint, warms up
-    /// the serving artifacts, then enters the batch loop.
-    pub fn start(artifacts_dir: std::path::PathBuf, cfg: ServerConfig) -> Result<Server> {
+    /// Start the worker thread: opens the backend, loads the checkpoint,
+    /// warms up the serving buckets, then enters the batch loop.
+    pub fn start(backend: BackendSpec, cfg: ServerConfig) -> Result<Server> {
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let handle = std::thread::spawn(move || worker_loop(artifacts_dir, cfg, rx, ready_tx));
+        let handle = std::thread::spawn(move || worker_loop(backend, cfg, rx, ready_tx));
         ready_rx
             .recv()
             .context("worker died during startup")?
@@ -204,7 +206,7 @@ impl Drop for Server {
 }
 
 struct WorkerState {
-    rt: Runtime,
+    backend: Box<dyn Backend>,
     params: Params,
     tok: Tokenizer,
     cfg: ServerConfig,
@@ -219,47 +221,24 @@ struct WorkerState {
 }
 
 fn worker_loop(
-    artifacts_dir: std::path::PathBuf,
+    backend_spec: BackendSpec,
     cfg: ServerConfig,
     rx: mpsc::Receiver<Msg>,
     ready_tx: mpsc::Sender<Result<()>>,
 ) -> Result<()> {
     // --- startup ---------------------------------------------------------
     let init = (|| -> Result<WorkerState> {
-        let mut rt = Runtime::load(&artifacts_dir)?;
-        let model = rt.manifest.model(&cfg.model)?.clone();
+        let mut backend = open_backend(&backend_spec)?;
+        let model = backend.model(&cfg.model)?;
         let params = Params::load(&cfg.checkpoint, &model)?;
-        // Discover serving buckets: every jnp/f32 mca forward batch size.
-        let mut buckets: Vec<usize> = rt
-            .manifest
-            .artifacts
-            .values()
-            .filter(|a| {
-                a.kind == "forward"
-                    && a.model == cfg.model
-                    && a.mode == "mca"
-                    && a.kernel == "jnp"
-                    && a.compute_dtype == "f32"
-                    && a.r_strategy == "max"
-                    && a.p_strategy == "norm"
-                    && a.seq == cfg.seq
-            })
-            .map(|a| a.batch)
-            .collect();
-        buckets.sort_unstable();
-        buckets.dedup();
-        if buckets.is_empty() {
-            anyhow::bail!("no serving artifacts for model {}", cfg.model);
+        let buckets = backend.buckets(&cfg.model, cfg.seq)?;
+        for &b in &buckets {
+            backend.warmup(&ForwardSpec::new(&cfg.model, "mca", b, cfg.seq))?;
         }
-        let names: Vec<String> = buckets
-            .iter()
-            .map(|b| serving_artifact(&rt, &cfg.model, "mca", *b, cfg.seq).unwrap())
-            .collect();
-        rt.warmup(&names.iter().map(|s| s.as_str()).collect::<Vec<_>>())?;
         Ok(WorkerState {
             dims: AttnDims { d_model: model.d_model, window: model.window },
             n_layers: model.n_layers,
-            rt,
+            backend,
             params,
             tok: Tokenizer::new(),
             cfg,
@@ -290,23 +269,7 @@ fn worker_loop(
         match rx.recv_timeout(st.cfg.max_wait / 2) {
             Ok(Msg::Req(p, tx)) => queue.push_back((p, tx)),
             Ok(Msg::Stats(tx)) => {
-                let _ = tx.send(ServerStats {
-                    served: st.served,
-                    batches: st.batches,
-                    mean_latency_ms: st.stats_lat.mean_ms(),
-                    p50_ms: st.stats_lat.p50_ms(),
-                    p99_ms: st.stats_lat.p99_ms(),
-                    mean_batch_size: if st.batches > 0 {
-                        st.batch_size_sum as f64 / st.batches as f64
-                    } else {
-                        0.0
-                    },
-                    mean_flops_reduction: if st.served > 0 {
-                        st.flops_sum / st.served as f64
-                    } else {
-                        0.0
-                    },
-                });
+                let _ = tx.send(stats_snapshot(&st));
                 continue;
             }
             Ok(Msg::Shutdown) => break,
@@ -318,7 +281,7 @@ fn worker_loop(
             match msg {
                 Msg::Req(p, tx) => queue.push_back((p, tx)),
                 Msg::Stats(tx) => {
-                    let _ = tx.send(ServerStats::default());
+                    let _ = tx.send(stats_snapshot(&st));
                 }
                 Msg::Shutdown => return Ok(()),
             }
@@ -329,10 +292,15 @@ fn worker_loop(
         if plans.is_empty() {
             continue;
         }
-        // Execute plans; collect served queue indices, then drop them.
+        // Execute plans; collect served queue indices, then drop them. A
+        // failing batch must not kill the worker: log it, drop its
+        // requests (their response senders close, so callers see an
+        // error instead of a hang) and keep serving.
         let mut served_idx: Vec<usize> = Vec::new();
         for plan in &plans {
-            execute_plan(&mut st, &queue, plan)?;
+            if let Err(e) = execute_plan(&mut st, &queue, plan) {
+                eprintln!("[serve] batch of {} failed: {e:#}", plan.indices.len());
+            }
             served_idx.extend(plan.indices.iter().copied());
         }
         served_idx.sort_unstable_by(|a, b| b.cmp(a));
@@ -343,13 +311,24 @@ fn worker_loop(
     Ok(())
 }
 
-fn serving_artifact(rt: &Runtime, model: &str, mode: &str, batch: usize, seq: usize) -> Result<String> {
-    rt.manifest
-        .find_forward(model, mode, batch, |a| {
-            a.kernel == "jnp" && a.compute_dtype == "f32" && a.r_strategy == "max" && a.p_strategy == "norm" && a.seq == seq
-        })
-        .map(|a| a.name.clone())
-        .with_context(|| format!("no serving artifact {model}/{mode}/b{batch}"))
+fn stats_snapshot(st: &WorkerState) -> ServerStats {
+    ServerStats {
+        served: st.served,
+        batches: st.batches,
+        mean_latency_ms: st.stats_lat.mean_ms(),
+        p50_ms: st.stats_lat.p50_ms(),
+        p99_ms: st.stats_lat.p99_ms(),
+        mean_batch_size: if st.batches > 0 {
+            st.batch_size_sum as f64 / st.batches as f64
+        } else {
+            0.0
+        },
+        mean_flops_reduction: if st.served > 0 {
+            st.flops_sum / st.served as f64
+        } else {
+            0.0
+        },
+    }
 }
 
 fn execute_plan(
@@ -360,55 +339,62 @@ fn execute_plan(
     let first = &queue[plan.indices[0]].0.req;
     let mode = first.mode.as_str();
     let alpha = first.alpha;
-    let artifact = serving_artifact(&st.rt, &st.cfg.model, mode, plan.bucket, st.cfg.seq)
-        .or_else(|_| serving_artifact(&st.rt, &st.cfg.model, "mca", plan.bucket, st.cfg.seq))?;
-    let info = st.rt.manifest.artifact(&artifact)?.clone();
-    let seq = info.seq;
+    let seq = st.cfg.seq;
 
-    // Assemble the padded batch (unused rows repeat row 0 — they are
-    // discarded, the bucket just has a fixed compiled shape).
-    let mut ids = vec![0i32; plan.bucket * seq];
+    // Backends with compiled shapes need the full padded bucket (unused
+    // rows repeat row 0 and are discarded); shape-free backends run the
+    // actual group size and skip the padding compute.
+    let run_batch = if st.backend.fixed_batch_shapes() {
+        plan.bucket
+    } else {
+        plan.indices.len()
+    };
+    let mut ids = vec![0i32; run_batch * seq];
     for (slot, &qi) in plan.indices.iter().enumerate() {
         let toks = st.tok.encode(&queue[qi].0.req.text, seq);
         for (j, &t) in toks.iter().enumerate() {
             ids[slot * seq + j] = t;
         }
     }
-    for slot in plan.indices.len()..plan.bucket {
+    for slot in plan.indices.len()..run_batch {
         for j in 0..seq {
             ids[slot * seq + j] = ids[j];
         }
     }
+    let ids_hv = HostValue::I32 { shape: vec![run_batch, seq], data: ids };
 
-    let mut inputs = Vec::with_capacity(st.params.values.len() + 3);
-    inputs.extend(st.params.values.iter().cloned());
-    inputs.push(HostValue::I32 { shape: vec![plan.bucket, seq], data: ids });
-    inputs.push(HostValue::scalar_f32(alpha));
-    inputs.push(HostValue::scalar_u32(first.id as u32));
-
+    let mut spec = ForwardSpec::new(&st.cfg.model, mode, run_batch, seq);
+    // A backend may lack this (mode, batch) combination — e.g. exact
+    // artifacts are only compiled at some batch sizes. `warmup` is the
+    // resolution probe (it compiles the exact shape on PJRT, a no-op on
+    // native): only *unavailability* degrades to MCA like the old router
+    // did; an execution error in `forward` still propagates, so a client
+    // that asked for exact logits is never silently served sampled ones.
+    if mode != "mca" {
+        if let Err(e) = st.backend.warmup(&spec) {
+            eprintln!("[serve] no {mode} path at batch {run_batch} ({e:#}); degrading to mca");
+            spec.mode = "mca".to_string();
+        }
+    }
     let t0 = Instant::now();
-    let outputs = st.rt.run(&artifact, &inputs)?;
+    let fwd = st.backend.forward(&spec, &st.params, &ids_hv, alpha, first.id as u32)?;
     let elapsed = t0.elapsed();
 
-    let logits = outputs[0].as_f32()?;
-    let r_sum = outputs[1].as_f32()?;
-    let n_eff = outputs[2].as_f32()?;
-    let ncl = info.outputs[0].shape[1];
-
+    let ncl = fwd.n_classes;
     for (slot, &qi) in plan.indices.iter().enumerate() {
         let (pending, tx) = &queue[qi];
-        let row = &logits[slot * ncl..(slot + 1) * ncl];
+        let row = &fwd.logits[slot * ncl..(slot + 1) * ncl];
         let pred = row
             .iter()
             .enumerate()
             .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
             .unwrap()
             .0 as i32;
-        let reduction = if mode == "exact" || n_eff[slot] == 0.0 {
+        let reduction = if mode == "exact" || fwd.n_eff[slot] == 0.0 {
             1.0
         } else {
             flops::reduction_factor(
-                &[(n_eff[slot] as usize, r_sum[slot] as u64)],
+                &[(fwd.n_eff[slot] as usize, fwd.r_sum[slot] as u64)],
                 st.n_layers,
                 st.dims,
             )

@@ -1,21 +1,22 @@
-//! Evaluation harness: reproduces the paper's Tables 1–3 and Figures 1–2.
+//! Evaluation harness: reproduces the paper's Tables 1–3 and Figures 1–2
+//! on any execution backend.
 //!
 //! For each task: train (or load) a fine-tuned model, evaluate the exact
-//! baseline once, then run the MCA forward artifact over the dev set for a
-//! grid of alpha values × random seeds, reporting the task metric (mean ±
-//! 95% CI over seeds, as the paper does with 128 seeds) and the measured
-//! FLOPs reduction factor computed from the in-graph Σr_i.
+//! baseline once, then run the MCA forward over the dev set for a grid of
+//! alpha values × random seeds, reporting the task metric (mean ± 95% CI
+//! over seeds, as the paper does with 128 seeds) and the measured FLOPs
+//! reduction factor computed from the in-graph Σr_i.
 
 pub mod bounds;
 pub mod tables;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::data::{Dataset, Example, Label, Metric, TaskKind, TaskSpec};
 use crate::mca::flops::{self, AttnDims};
 use crate::metrics::{self, MeanCi};
 use crate::model::Params;
-use crate::runtime::{HostValue, Runtime};
+use crate::runtime::{Backend, ForwardSpec};
 use crate::train::make_batch;
 
 /// Predictions + measured FLOPs for one pass over the dev set.
@@ -43,10 +44,10 @@ pub struct TaskRow {
     pub alphas: Vec<AlphaResult>,
 }
 
-/// Run one forward artifact over the whole dev set.
+/// Run one forward spec over the whole dev set.
 pub fn run_pass(
-    rt: &mut Runtime,
-    artifact: &str,
+    backend: &mut dyn Backend,
+    spec: &ForwardSpec,
     params: &Params,
     dev: &[Example],
     kind: TaskKind,
@@ -54,29 +55,25 @@ pub fn run_pass(
     alpha: f64,
     seed: u32,
 ) -> Result<PassResult> {
-    let info = rt.manifest.artifact(artifact)?.clone();
-    let (batch, seq) = (info.batch, info.seq);
+    let (batch, seq) = (spec.batch, spec.seq);
+    let fixed_shapes = backend.fixed_batch_shapes();
     let mut out = PassResult { pred_cls: Vec::new(), pred_score: Vec::new(), per_seq: Vec::new() };
 
     let mut i = 0;
     while i < dev.len() {
         let chunk: Vec<&Example> = dev[i..(i + batch).min(dev.len())].iter().collect();
         let real = chunk.len();
-        let (ids, _) = make_batch(&chunk, batch, seq, kind);
-        let mut inputs = Vec::with_capacity(params.values.len() + 3);
-        inputs.extend(params.values.iter().cloned());
-        inputs.push(ids);
-        inputs.push(HostValue::scalar_f32(alpha as f32));
-        inputs.push(HostValue::scalar_u32(seed));
-
-        let outputs = rt.run(artifact, &inputs)?;
-        let logits = outputs[0].as_f32()?;
-        let r_sum = outputs[1].as_f32()?;
-        let n_eff = outputs[2].as_f32()?;
-        let ncl = info.outputs[0].shape[1];
+        // Shape-free backends run the final partial chunk at its real size
+        // instead of padding it with dead rows.
+        let run_batch = if fixed_shapes { batch } else { real };
+        let mut run_spec = spec.clone();
+        run_spec.batch = run_batch;
+        let (ids, _) = make_batch(&chunk, run_batch, seq, kind);
+        let fwd = backend.forward(&run_spec, params, &ids, alpha as f32, seed)?;
+        let ncl = fwd.n_classes;
 
         for b in 0..real {
-            let row = &logits[b * ncl..(b + 1) * ncl];
+            let row = &fwd.logits[b * ncl..(b + 1) * ncl];
             match kind {
                 TaskKind::Classification => {
                     let k = n_classes.min(ncl as i32) as usize;
@@ -90,7 +87,7 @@ pub fn run_pass(
                 }
                 TaskKind::Regression => out.pred_score.push(row[0] as f64),
             }
-            out.per_seq.push((n_eff[b] as usize, r_sum[b] as u64));
+            out.per_seq.push((fwd.n_eff[b] as usize, fwd.r_sum[b] as u64));
         }
         i += real;
     }
@@ -137,7 +134,6 @@ pub fn pass_reduction(pass: &PassResult, n_layers: usize, dims: AttnDims) -> f64
 pub struct EvalOptions {
     pub alphas: Vec<f64>,
     pub seeds: u32,
-    /// artifact-name suffix filters
     pub compute_dtype: String,
     pub r_strategy: String,
     pub p_strategy: String,
@@ -155,34 +151,29 @@ impl Default for EvalOptions {
     }
 }
 
-/// Locate the eval-batch forward artifact for (model, mode, options).
-pub fn forward_artifact(
-    rt: &Runtime,
+/// Build the eval-time forward spec for (model, mode, options): the
+/// model's full sequence length at the backend's largest batch.
+pub fn forward_spec(
+    backend: &dyn Backend,
     model: &str,
     mode: &str,
     opts: &EvalOptions,
-) -> Result<String> {
-    // Eval uses the largest available batch for the model.
-    rt.manifest
-        .artifacts
-        .values()
-        .filter(|a| {
-            a.kind == "forward"
-                && a.model == model
-                && a.mode == mode
-                && a.kernel == "jnp"
-                && a.compute_dtype == if mode == "exact" && opts.compute_dtype != "f32" { opts.compute_dtype.clone() } else if mode == "mca" { opts.compute_dtype.clone() } else { "f32".into() }
-                && (mode == "exact" || (a.r_strategy == opts.r_strategy && a.p_strategy == opts.p_strategy))
-        })
-        .max_by_key(|a| a.batch)
-        .map(|a| a.name.clone())
-        .with_context(|| format!("no {mode} forward artifact for {model} with {:?}/{}/{}", opts.compute_dtype, opts.r_strategy, opts.p_strategy))
+) -> Result<ForwardSpec> {
+    let info = backend.model(model)?;
+    let mut spec = ForwardSpec::new(model, mode, 0, info.max_len);
+    spec.compute_dtype = opts.compute_dtype.clone();
+    if mode == "mca" {
+        spec.r_strategy = opts.r_strategy.clone();
+        spec.p_strategy = opts.p_strategy.clone();
+    }
+    spec.batch = backend.max_batch(&spec)?;
+    Ok(spec)
 }
 
 /// Evaluate one task end-to-end: baseline + α grid. `params` must already
 /// be fine-tuned for the task.
 pub fn eval_task(
-    rt: &mut Runtime,
+    backend: &mut dyn Backend,
     model_name: &str,
     spec: &TaskSpec,
     params: &Params,
@@ -190,13 +181,14 @@ pub fn eval_task(
     opts: &EvalOptions,
     verbose: bool,
 ) -> Result<TaskRow> {
-    let model = rt.manifest.model(model_name)?.clone();
+    let model = backend.model(model_name)?;
     let dims = AttnDims { d_model: model.d_model, window: model.window };
-    let exact_name = forward_artifact(rt, model_name, "exact", opts)?;
-    let mca_name = forward_artifact(rt, model_name, "mca", opts)?;
+    let exact_spec = forward_spec(backend, model_name, "exact", opts)?;
+    let mca_spec = forward_spec(backend, model_name, "mca", opts)?;
 
     // Baseline: exact attention, deterministic.
-    let base_pass = run_pass(rt, &exact_name, params, &ds.dev, spec.kind, spec.n_classes, 1.0, 0)?;
+    let base_pass =
+        run_pass(backend, &exact_spec, params, &ds.dev, spec.kind, spec.n_classes, 1.0, 0)?;
     let baseline: Vec<(Metric, f64)> = spec
         .metrics
         .iter()
@@ -209,7 +201,13 @@ pub fn eval_task(
         let mut reductions = Vec::new();
         for seed in 0..opts.seeds {
             let pass = run_pass(
-                rt, &mca_name, params, &ds.dev, spec.kind, spec.n_classes, alpha,
+                backend,
+                &mca_spec,
+                params,
+                &ds.dev,
+                spec.kind,
+                spec.n_classes,
+                alpha,
                 0xA11CE + seed,
             )?;
             for (k, &m) in spec.metrics.iter().enumerate() {
@@ -286,5 +284,17 @@ mod tests {
         let pass = fake_pass(vec![], vec![(0, 0), (32, 32 * 4 * 8)]);
         let f = pass_reduction(&pass, 4, dims);
         assert!(f > 1.0);
+    }
+
+    #[test]
+    fn forward_spec_on_native_backend() {
+        use crate::runtime::{open_backend, BackendSpec};
+        let be = open_backend(&BackendSpec::Native).unwrap();
+        let opts = EvalOptions::default();
+        let s = forward_spec(be.as_ref(), "bert_sim", "mca", &opts).unwrap();
+        assert_eq!(s.seq, 64);
+        assert!(s.batch >= 1);
+        assert_eq!(s.r_strategy, "max");
+        assert!(forward_spec(be.as_ref(), "nope", "mca", &opts).is_err());
     }
 }

@@ -1,22 +1,23 @@
 //! Experiment orchestration: train-or-load checkpoints and produce each
-//! table/figure of the paper from one entry point. Used by the `mca`
-//! binary and by `examples/reproduce_table*.rs` / `figure*.rs`.
+//! table/figure of the paper from one entry point, on any execution
+//! backend. Used by the `mca` binary and by
+//! `examples/reproduce_table*.rs` / `figure*.rs`.
 
 use std::path::PathBuf;
 
 use anyhow::Result;
 
-use super::{eval_task, forward_artifact, metric_value, pass_reduction, run_pass, EvalOptions, TaskRow};
+use super::{eval_task, forward_spec, metric_value, pass_reduction, run_pass, EvalOptions, TaskRow};
 use crate::data::{self, TaskSpec};
 use crate::mca::flops::{dtype_factor, AttnDims};
 use crate::metrics::{mean_ci, MeanCi};
-use crate::runtime::Runtime;
+use crate::runtime::{open_backend, BackendSpec};
 use crate::train::{train_or_load, TrainConfig};
 
-/// Shared experiment context: artifact dir, checkpoint cache, train/eval
+/// Shared experiment context: backend choice, checkpoint cache, train/eval
 /// configuration.
 pub struct Pipeline {
-    pub artifacts_dir: PathBuf,
+    pub backend: BackendSpec,
     pub ckpt_root: PathBuf,
     pub train_cfg: TrainConfig,
     pub data_seed: u64,
@@ -24,9 +25,9 @@ pub struct Pipeline {
 }
 
 impl Pipeline {
-    pub fn new(artifacts_dir: PathBuf) -> Pipeline {
+    pub fn new(backend: BackendSpec) -> Pipeline {
         Pipeline {
-            artifacts_dir,
+            backend,
             ckpt_root: PathBuf::from("checkpoints"),
             train_cfg: TrainConfig::default(),
             data_seed: 1234,
@@ -43,16 +44,23 @@ impl Pipeline {
         tasks: &[TaskSpec],
         opts: &EvalOptions,
     ) -> Result<Vec<TaskRow>> {
-        let mut rt = Runtime::load(&self.artifacts_dir)?;
+        let mut be = open_backend(&self.backend)?;
         let mut rows = Vec::new();
         for spec in tasks {
             if self.verbose {
                 eprintln!("[table] {model} / {} ...", spec.name);
             }
             let ds = data::generate(spec, self.data_seed);
-            let params =
-                train_or_load(&mut rt, &self.ckpt_root, model, spec, &ds, &self.train_cfg, self.verbose)?;
-            rows.push(eval_task(&mut rt, model, spec, &params, &ds, opts, self.verbose)?);
+            let params = train_or_load(
+                be.as_mut(),
+                &self.ckpt_root,
+                model,
+                spec,
+                &ds,
+                &self.train_cfg,
+                self.verbose,
+            )?;
+            rows.push(eval_task(be.as_mut(), model, spec, &params, &ds, opts, self.verbose)?);
         }
         Ok(rows)
     }
@@ -66,16 +74,22 @@ impl Pipeline {
         alphas: &[f64],
         seeds: u32,
     ) -> Result<Vec<(String, Vec<(f64, f64)>)>> {
-        let mut rt = Runtime::load(&self.artifacts_dir)?;
+        let mut be = open_backend(&self.backend)?;
         let spec = data::task_by_name("sst2_sim").unwrap();
         let ds = data::generate(&spec, self.data_seed);
         let mut series = Vec::new();
 
         for &model_name in models {
-            let model = rt.manifest.model(model_name)?.clone();
+            let model = be.model(model_name)?;
             let dims = AttnDims { d_model: model.d_model, window: model.window };
             let params = train_or_load(
-                &mut rt, &self.ckpt_root, model_name, &spec, &ds, &self.train_cfg, self.verbose,
+                be.as_mut(),
+                &self.ckpt_root,
+                model_name,
+                &spec,
+                &ds,
+                &self.train_cfg,
+                self.verbose,
             )?;
 
             for dtype in ["f32", "bf16"] {
@@ -83,21 +97,36 @@ impl Pipeline {
                 let factor = dtype_factor(dtype);
 
                 // Exact baseline point at relative FLOPs = dtype factor.
-                let exact_name = forward_artifact(&rt, model_name, "exact", &opts)?;
-                let base = run_pass(&mut rt, &exact_name, &params, &ds.dev, spec.kind, spec.n_classes, 1.0, 0)?;
+                let exact_spec = forward_spec(be.as_ref(), model_name, "exact", &opts)?;
+                let base = run_pass(
+                    be.as_mut(),
+                    &exact_spec,
+                    &params,
+                    &ds.dev,
+                    spec.kind,
+                    spec.n_classes,
+                    1.0,
+                    0,
+                )?;
                 let base_acc = metric_value(spec.metrics[0], &base, &ds.dev);
                 series.push((format!("{model_name}/{dtype}/exact"), vec![(factor, base_acc)]));
 
                 // MCA sweep.
-                let mca_name = forward_artifact(&rt, model_name, "mca", &opts)?;
+                let mca_spec = forward_spec(be.as_ref(), model_name, "mca", &opts)?;
                 let mut pts = Vec::new();
                 for &alpha in alphas {
                     let mut accs = Vec::new();
                     let mut rels = Vec::new();
                     for seed in 0..seeds {
                         let pass = run_pass(
-                            &mut rt, &mca_name, &params, &ds.dev, spec.kind, spec.n_classes,
-                            alpha, 0xF16 + seed,
+                            be.as_mut(),
+                            &mca_spec,
+                            &params,
+                            &ds.dev,
+                            spec.kind,
+                            spec.n_classes,
+                            alpha,
+                            0xF16 + seed,
                         )?;
                         accs.push(metric_value(spec.metrics[0], &pass, &ds.dev));
                         rels.push(factor / pass_reduction(&pass, model.n_layers, dims));
@@ -106,7 +135,9 @@ impl Pipeline {
                     let rel = mean_ci(&rels).mean;
                     pts.push((rel, acc));
                     if self.verbose {
-                        eprintln!("[fig1] {model_name}/{dtype} α={alpha:.2}: relFLOPs {rel:.3} acc {acc:.4}");
+                        eprintln!(
+                            "[fig1] {model_name}/{dtype} α={alpha:.2}: relFLOPs {rel:.3} acc {acc:.4}"
+                        );
                     }
                 }
                 series.push((format!("{model_name}/{dtype}/mca"), pts));
@@ -122,22 +153,34 @@ impl Pipeline {
         alphas: &[f64],
         seeds: u32,
     ) -> Result<Vec<(String, Vec<(f64, MeanCi)>)>> {
-        let mut rt = Runtime::load(&self.artifacts_dir)?;
+        let mut be = open_backend(&self.backend)?;
         let spec = data::task_by_name("sst2_sim").unwrap();
         let ds = data::generate(&spec, self.data_seed);
         let mut out = Vec::new();
         for &model_name in models {
             let params = train_or_load(
-                &mut rt, &self.ckpt_root, model_name, &spec, &ds, &self.train_cfg, self.verbose,
+                be.as_mut(),
+                &self.ckpt_root,
+                model_name,
+                &spec,
+                &ds,
+                &self.train_cfg,
+                self.verbose,
             )?;
             let opts = EvalOptions::default();
-            let mca_name = forward_artifact(&rt, model_name, "mca", &opts)?;
+            let mca_spec = forward_spec(be.as_ref(), model_name, "mca", &opts)?;
             let mut pts = Vec::new();
             for &alpha in alphas {
                 let mut accs = Vec::new();
                 for seed in 0..seeds {
                     let pass = run_pass(
-                        &mut rt, &mca_name, &params, &ds.dev, spec.kind, spec.n_classes, alpha,
+                        be.as_mut(),
+                        &mca_spec,
+                        &params,
+                        &ds.dev,
+                        spec.kind,
+                        spec.n_classes,
+                        alpha,
                         0xF2 + seed,
                     )?;
                     accs.push(metric_value(spec.metrics[0], &pass, &ds.dev));
@@ -157,14 +200,20 @@ impl Pipeline {
     /// sampling distribution (norm vs uniform) on bert_sim / SST-2.
     /// Returns (label, accuracy ±CI, reduction ±CI).
     pub fn ablations(&self, seeds: u32, alpha: f64) -> Result<Vec<(String, MeanCi, MeanCi)>> {
-        let mut rt = Runtime::load(&self.artifacts_dir)?;
+        let mut be = open_backend(&self.backend)?;
         let spec = data::task_by_name("sst2_sim").unwrap();
         let ds = data::generate(&spec, self.data_seed);
         let model_name = "bert_sim";
-        let model = rt.manifest.model(model_name)?.clone();
+        let model = be.model(model_name)?;
         let dims = AttnDims { d_model: model.d_model, window: model.window };
         let params = train_or_load(
-            &mut rt, &self.ckpt_root, model_name, &spec, &ds, &self.train_cfg, self.verbose,
+            be.as_mut(),
+            &self.ckpt_root,
+            model_name,
+            &spec,
+            &ds,
+            &self.train_cfg,
+            self.verbose,
         )?;
 
         let variants: Vec<(String, EvalOptions)> = vec![
@@ -185,12 +234,18 @@ impl Pipeline {
 
         let mut out = Vec::new();
         for (label, opts) in variants {
-            let name = forward_artifact(&rt, model_name, "mca", &opts)?;
+            let mca_spec = forward_spec(be.as_ref(), model_name, "mca", &opts)?;
             let mut accs = Vec::new();
             let mut reds = Vec::new();
             for seed in 0..seeds {
                 let pass = run_pass(
-                    &mut rt, &name, &params, &ds.dev, spec.kind, spec.n_classes, alpha,
+                    be.as_mut(),
+                    &mca_spec,
+                    &params,
+                    &ds.dev,
+                    spec.kind,
+                    spec.n_classes,
+                    alpha,
                     0xAB1A + seed,
                 )?;
                 accs.push(metric_value(spec.metrics[0], &pass, &ds.dev));

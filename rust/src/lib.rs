@@ -1,11 +1,16 @@
 //! # mca — Monte-Carlo Attention (AAAI 2022) reproduction
 //!
-//! Three-layer Rust + JAX + Pallas system: Pallas kernels (L1) and the JAX
-//! transformer (L2) are AOT-lowered to HLO text once (`make artifacts`);
-//! this crate (L3) owns everything on the request path: the PJRT runtime,
-//! the serving coordinator, the trainer, the synthetic task suite, the
-//! evaluation harness reproducing the paper's tables/figures, and the
-//! host-side MCA reference estimator.
+//! Three-layer Rust + JAX + Pallas system behind one execution seam: this
+//! crate (L3) owns everything on the request path — the serving
+//! coordinator, the trainer, the synthetic task suite, the evaluation
+//! harness reproducing the paper's tables/figures, and the host-side MCA
+//! reference estimator — all speaking the [`runtime::Backend`] trait.
+//!
+//! Two backends implement it: the default **native** backend (a pure-Rust
+//! transformer forward/backward in [`model::forward`] / [`model::grad`],
+//! no artifacts needed), and the **PJRT** backend (cargo feature `pjrt`),
+//! which executes the Pallas kernels (L1) and JAX transformer (L2)
+//! AOT-lowered to HLO text by `make artifacts`.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for results.
 

@@ -6,7 +6,12 @@
 //!   ablations                  r-strategy + sampling-distribution ablations
 //!   train                      fine-tune one model on one task
 //!   serve                      serving demo (dynamic batching, live α)
-//!   info                       artifact + model inventory
+//!   info                       backend + model inventory
+//!
+//! Every subcommand takes `--backend native|pjrt|auto` (default auto):
+//! the native pure-Rust backend needs no artifacts; PJRT executes the AOT
+//! artifacts when the build has the `pjrt` feature and `make artifacts`
+//! has run.
 
 use std::path::PathBuf;
 
@@ -16,7 +21,7 @@ use mca::data;
 use mca::eval::tables::Pipeline;
 use mca::eval::EvalOptions;
 use mca::report;
-use mca::runtime::{default_artifacts_dir, Runtime};
+use mca::runtime::{backend_spec_from_cli, default_artifacts_dir, open_backend, BackendSpec};
 use mca::train::TrainConfig;
 use mca::util::cli::Args;
 
@@ -51,13 +56,21 @@ fn print_help() {
            ablations   r-strategy + sampling-distribution ablations\n\
            train       fine-tune one model on one task\n\
            serve       serving demo with dynamic batching\n\
-           info        list models + artifacts\n\n\
+           loadtest    open-loop Poisson load sweep against the server\n\
+           bounds      Lemma-1 / Theorem-2 bound-tightness table\n\
+           project     project measured FLOPs reductions to the paper's d\n\
+           validate    compile every artifact (pjrt builds only)\n\
+           info        backend platform + model inventory\n\n\
          run `mca <command> --help-cmd` for options"
     );
 }
 
+fn backend_spec(args: &Args) -> Result<BackendSpec> {
+    backend_spec_from_cli(&args.get("backend"), artifacts_dir(args))
+}
+
 fn pipeline(args: &Args) -> Result<Pipeline> {
-    let mut p = Pipeline::new(artifacts_dir(args));
+    let mut p = Pipeline::new(backend_spec(args)?);
     p.ckpt_root = PathBuf::from(args.get("checkpoints"));
     p.train_cfg = TrainConfig {
         steps: args.get_usize("train-steps")?,
@@ -78,7 +91,8 @@ fn artifacts_dir(args: &Args) -> PathBuf {
 }
 
 fn common(args: Args) -> Args {
-    args.opt("artifacts", "", "artifacts directory (default: repo artifacts/)")
+    args.opt("backend", "auto", "execution backend: native, pjrt or auto")
+        .opt("artifacts", "", "artifacts directory (default: repo artifacts/)")
         .opt("checkpoints", "checkpoints", "checkpoint cache directory")
         .opt("train-steps", "400", "fine-tuning steps per task")
         .opt("lr", "0.001", "fine-tuning learning rate")
@@ -255,9 +269,9 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
             let spec = data::task_by_name(&args.get("task"))
                 .ok_or_else(|| anyhow::anyhow!("unknown task {}", args.get("task")))?;
             let ds = data::generate(&spec, p.data_seed);
-            let mut rt = Runtime::load(&p.artifacts_dir)?;
+            let mut be = open_backend(&p.backend)?;
             let out =
-                mca::train::train_task(&mut rt, &args.get("model"), &spec, &ds, &p.train_cfg, true)?;
+                mca::train::train_task(be.as_mut(), &args.get("model"), &spec, &ds, &p.train_cfg, true)?;
             let path = mca::model::checkpoint_path(&p.ckpt_root, &args.get("model"), spec.name);
             std::fs::create_dir_all(&p.ckpt_root)?;
             out.params.save(&path)?;
@@ -279,10 +293,11 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
         }
         "info" => {
             let args = common(Args::new()).parse(rest)?;
-            let rt = Runtime::load(&artifacts_dir(&args))?;
-            println!("platform: {}", rt.platform());
+            let be = open_backend(&backend_spec(&args)?)?;
+            println!("platform: {}", be.platform());
             println!("\nmodels:");
-            for m in rt.manifest.models.values() {
+            for name in be.models() {
+                let m = be.model(&name)?;
                 println!(
                     "  {:<16} d={} layers={} heads={} max_len={} window={:?} params={}",
                     m.name,
@@ -294,13 +309,7 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
                     m.param_spec.iter().map(|(_, s)| s.iter().product::<usize>()).sum::<usize>()
                 );
             }
-            println!("\nartifacts:");
-            for a in rt.manifest.artifacts.values() {
-                println!(
-                    "  {:<40} kind={:<10} b={} n={} mode={} kernel={} dtype={}",
-                    a.name, a.kind, a.batch, a.seq, a.mode, a.kernel, a.compute_dtype
-                );
-            }
+            info_artifacts(&args);
             Ok(())
         }
         "project" => {
@@ -319,25 +328,9 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
         }
         "validate" => {
             // Compile every artifact and cross-check manifest shapes — the
-            // deployment preflight.
+            // deployment preflight (pjrt builds only).
             let args = common(Args::new()).parse(rest)?;
-            let mut rt = Runtime::load(&artifacts_dir(&args))?;
-            let names: Vec<String> = rt.manifest.artifacts.keys().cloned().collect();
-            let mut ok = 0;
-            for name in &names {
-                match rt.warmup(&[name.as_str()]) {
-                    Ok(()) => {
-                        ok += 1;
-                        println!("  ok  {name}");
-                    }
-                    Err(e) => println!(" FAIL {name}: {e:#}"),
-                }
-            }
-            println!("{ok}/{} artifacts compile", names.len());
-            if ok != names.len() {
-                bail!("validation failed");
-            }
-            Ok(())
+            validate_cmd(&args)
         }
         "bounds" => {
             // Empirical Lemma-1 / Theorem-2 bound-tightness table (host
@@ -389,6 +382,57 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
         }
         other => bail!("unknown command {other:?} (see `mca help`)"),
     }
+}
+
+#[cfg(feature = "pjrt")]
+fn info_artifacts(args: &Args) {
+    use mca::runtime::Runtime;
+    let dir = artifacts_dir(args);
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    match Runtime::load(&dir) {
+        Ok(rt) => {
+            println!("\nartifacts:");
+            for a in rt.manifest.artifacts.values() {
+                println!(
+                    "  {:<40} kind={:<10} b={} n={} mode={} kernel={} dtype={}",
+                    a.name, a.kind, a.batch, a.seq, a.mode, a.kernel, a.compute_dtype
+                );
+            }
+        }
+        Err(e) => eprintln!("(artifacts present but unreadable: {e:#})"),
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn info_artifacts(_args: &Args) {}
+
+#[cfg(feature = "pjrt")]
+fn validate_cmd(args: &Args) -> Result<()> {
+    use mca::runtime::Runtime;
+    let mut rt = Runtime::load(&artifacts_dir(args))?;
+    let names: Vec<String> = rt.manifest.artifacts.keys().cloned().collect();
+    let mut ok = 0;
+    for name in &names {
+        match rt.warmup_artifacts(&[name.as_str()]) {
+            Ok(()) => {
+                ok += 1;
+                println!("  ok  {name}");
+            }
+            Err(e) => println!(" FAIL {name}: {e:#}"),
+        }
+    }
+    println!("{ok}/{} artifacts compile", names.len());
+    if ok != names.len() {
+        bail!("validation failed");
+    }
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn validate_cmd(_args: &Args) -> Result<()> {
+    bail!("`mca validate` checks AOT artifacts and needs a build with `--features pjrt`")
 }
 
 fn project_cmd(args: &Args) -> Result<()> {
@@ -443,13 +487,13 @@ fn loadtest(args: &Args) -> Result<()> {
         let spec =
             data::task_by_name(&task).ok_or_else(|| anyhow::anyhow!("unknown task {task}"))?;
         let ds = data::generate(&spec, p.data_seed);
-        let mut rt = Runtime::load(&p.artifacts_dir)?;
-        let out = mca::train::train_task(&mut rt, &model, &spec, &ds, &p.train_cfg, true)?;
+        let mut be = open_backend(&p.backend)?;
+        let out = mca::train::train_task(be.as_mut(), &model, &spec, &ds, &p.train_cfg, true)?;
         std::fs::create_dir_all(&p.ckpt_root)?;
         out.params.save(&ckpt)?;
     }
     let server = Server::start(
-        p.artifacts_dir.clone(),
+        p.backend.clone(),
         ServerConfig {
             model: model.clone(),
             checkpoint: ckpt,
@@ -506,14 +550,14 @@ fn serve_demo(args: &Args) -> Result<()> {
         let spec =
             data::task_by_name(&task).ok_or_else(|| anyhow::anyhow!("unknown task {task}"))?;
         let ds = data::generate(&spec, p.data_seed);
-        let mut rt = Runtime::load(&p.artifacts_dir)?;
-        let out = mca::train::train_task(&mut rt, &model, &spec, &ds, &p.train_cfg, true)?;
+        let mut be = open_backend(&p.backend)?;
+        let out = mca::train::train_task(be.as_mut(), &model, &spec, &ds, &p.train_cfg, true)?;
         std::fs::create_dir_all(&p.ckpt_root)?;
         out.params.save(&ckpt)?;
     }
 
     let server = Server::start(
-        p.artifacts_dir.clone(),
+        p.backend.clone(),
         ServerConfig {
             model: model.clone(),
             checkpoint: ckpt,

@@ -9,7 +9,7 @@ pub mod adaptive;
 pub mod flops;
 
 use crate::rng::{AliasTable, Pcg64};
-use crate::tensor::Tensor;
+use crate::tensor::{self, Tensor};
 
 /// Pooling strategy for per-token importance (paper: max; mean/median are
 /// the future-work variants our ablation study measures).
@@ -48,33 +48,69 @@ pub fn sampling_probs(w: &Tensor) -> Vec<f64> {
 /// Per-token importance from an attention matrix (heads, n, n), pooled by
 /// `strategy` over query rows, max over heads. `query_mask[i]` = token is
 /// real. Mirrors `ref.token_importance` / the mean/median variants.
+///
+/// Row-major walk over attention rows (one slice per real query) — no
+/// per-key column gathers or temporary allocations on the Max/Mean paths,
+/// which sit on the native backend's request path.
 pub fn token_importance(attn: &[Tensor], query_mask: &[bool], strategy: RStrategy) -> Vec<f64> {
     let n = query_mask.len();
+    let n_real = query_mask.iter().filter(|&&m| m).count();
     let mut imp = vec![0.0f64; n];
+    if n_real == 0 {
+        return imp;
+    }
+    let mut col_buf: Vec<f64> = Vec::new(); // reused per key on the Median path
     for head in attn {
         assert_eq!(head.shape(), &[n, n]);
-        for key in 0..n {
-            let mut vals: Vec<f64> = (0..n)
-                .filter(|&q| query_mask[q])
-                .map(|q| head.at(&[q, key]) as f64)
-                .collect();
-            if vals.is_empty() {
-                continue;
-            }
-            let pooled = match strategy {
-                RStrategy::Max => vals.iter().cloned().fold(f64::MIN, f64::max),
-                RStrategy::Mean => vals.iter().sum::<f64>() / vals.len() as f64,
-                RStrategy::Median => {
-                    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
-                    let m = vals.len();
-                    if m % 2 == 1 {
-                        vals[m / 2]
-                    } else {
-                        0.5 * (vals[m / 2 - 1] + vals[m / 2])
+        match strategy {
+            RStrategy::Max => {
+                let mut pooled = vec![f64::MIN; n];
+                for q in 0..n {
+                    if !query_mask[q] {
+                        continue;
+                    }
+                    for (p, &a) in pooled.iter_mut().zip(head.row(q)) {
+                        if (a as f64) > *p {
+                            *p = a as f64;
+                        }
                     }
                 }
-            };
-            imp[key] = imp[key].max(pooled);
+                for (i, p) in pooled.into_iter().enumerate() {
+                    imp[i] = imp[i].max(p);
+                }
+            }
+            RStrategy::Mean => {
+                let mut sums = vec![0.0f64; n];
+                for q in 0..n {
+                    if !query_mask[q] {
+                        continue;
+                    }
+                    for (s, &a) in sums.iter_mut().zip(head.row(q)) {
+                        *s += a as f64;
+                    }
+                }
+                for (i, s) in sums.into_iter().enumerate() {
+                    imp[i] = imp[i].max(s / n_real as f64);
+                }
+            }
+            RStrategy::Median => {
+                for key in 0..n {
+                    col_buf.clear();
+                    for q in 0..n {
+                        if query_mask[q] {
+                            col_buf.push(head.at(&[q, key]) as f64);
+                        }
+                    }
+                    col_buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    let m = col_buf.len();
+                    let pooled = if m % 2 == 1 {
+                        col_buf[m / 2]
+                    } else {
+                        0.5 * (col_buf[m / 2 - 1] + col_buf[m / 2])
+                    };
+                    imp[key] = imp[key].max(pooled);
+                }
+            }
         }
     }
     imp
@@ -97,9 +133,18 @@ pub fn sample_counts(importance: &[f64], query_mask: &[bool], alpha: f64, d: usi
         .collect()
 }
 
+/// Draw a shared sample pool of `size` indices i.i.d. from `p`.
+pub fn draw_pool(rng: &mut Pcg64, p: &[f64], size: usize) -> Vec<usize> {
+    AliasTable::new(p).sample_n(rng, size)
+}
+
 /// The shared-pool masked-prefix estimator (mirrors `ref.mca_encode_shared`
 /// with `exact_fallback=true`): token i uses the prefix s[0..r_i) of one
 /// pool drawn i.i.d. from `p`; saturated tokens (r_i >= d) are exact.
+///
+/// Draws a fresh pool of size d from `rng`; use [`mca_encode_pooled`] to
+/// share one pool across calls (what the in-graph kernel and the native
+/// backend do — one pool per layer, shared by the whole batch).
 pub fn mca_encode(
     rng: &mut Pcg64,
     x: &Tensor,          // (n, d)
@@ -107,44 +152,59 @@ pub fn mca_encode(
     r: &[usize],         // (n,)
     p: &[f64],           // (d,)
 ) -> Tensor {
+    let d = x.shape()[1];
+    let pool = draw_pool(rng, p, d);
+    mca_encode_pooled(x, w, r, p, &pool)
+}
+
+/// Shared-pool estimator with a caller-provided pool. All inner loops are
+/// row-slice AXPYs (`out_row += s * w_row`) — no per-element offset
+/// recompute or bounds asserts, so the compiler can vectorize; the exact
+/// fallback walks the same slices and matches `Tensor::matmul`'s
+/// accumulation order bit-for-bit.
+pub fn mca_encode_pooled(
+    x: &Tensor,          // (n, d)
+    w: &Tensor,          // (d, d_out)
+    r: &[usize],         // (n,)
+    p: &[f64],           // (d,)
+    pool: &[usize],      // (>= max r_i unsaturated,) shared sample pool
+) -> Tensor {
     let (n, d) = (x.shape()[0], x.shape()[1]);
     let d_out = w.shape()[1];
     assert_eq!(w.shape()[0], d);
     assert_eq!(r.len(), n);
     assert_eq!(p.len(), d);
+    // A short pool would silently truncate a token's sample prefix while
+    // the scale still divides by r_i — a biased, shrunken estimate.
+    let max_unsat = r.iter().filter(|&&ri| ri < d).max().copied().unwrap_or(0);
+    assert!(
+        pool.len() >= max_unsat,
+        "pool length {} < largest unsaturated budget {max_unsat}",
+        pool.len()
+    );
 
-    let table = AliasTable::new(p);
-    let pool: Vec<usize> = table.sample_n(rng, d);
-
-    let mut out = Tensor::zeros(&[n, d_out]);
+    let mut out = vec![0.0f32; n * d_out];
     for i in 0..n {
+        let x_row = x.row(i);
+        let o_row = &mut out[i * d_out..(i + 1) * d_out];
         if r[i] >= d {
-            // exact fallback
-            for k in 0..d {
-                let xv = x.at(&[i, k]);
-                if xv == 0.0 {
-                    continue;
-                }
-                for j in 0..d_out {
-                    let v = out.at(&[i, j]) + xv * w.at(&[k, j]);
-                    out.set(&[i, j], v);
-                }
-            }
+            // exact fallback: token's budget saturates, compute x_row @ W
+            // (bit-identical to Tensor::matmul by the shared helper)
+            tensor::accumulate_row_product(x_row, w, o_row);
             continue;
         }
         let ri = r[i] as f64;
         for &sk in pool.iter().take(r[i]) {
-            let scale = x.at(&[i, sk]) as f64 / (ri * p[sk]);
+            let scale = (x_row[sk] as f64 / (ri * p[sk])) as f32;
             if scale == 0.0 {
                 continue;
             }
-            for j in 0..d_out {
-                let v = out.at(&[i, j]) + (scale * w.at(&[sk, j]) as f64) as f32;
-                out.set(&[i, j], v);
+            for (o, wv) in o_row.iter_mut().zip(w.row(sk)) {
+                *o += scale * wv;
             }
         }
     }
-    out
+    Tensor::new(&[n, d_out], out).expect("shape computed above")
 }
 
 /// Lemma 1: E||H[i] - X[i]W|| <= ||X[i]||_2 ||W||_F / sqrt(r_i).
@@ -236,6 +296,26 @@ mod tests {
         let got = mca_encode(&mut rng, &x, &w, &r, &p);
         let want = x.matmul(&w).unwrap();
         assert!(got.max_abs_diff(&want) < 1e-4, "{}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn pooled_estimator_matches_wrapper_and_exact_fallback() {
+        let mut rng = Pcg64::new(8);
+        let x = randn_tensor(&mut rng, &[5, 16]);
+        let w = randn_tensor(&mut rng, &[16, 7]);
+        let p = sampling_probs(&w);
+        let r = vec![2usize, 16, 5, 16, 9];
+        // Wrapper == pooled with the pool drawn from the same rng state.
+        let mut r1 = Pcg64::new(99);
+        let a = mca_encode(&mut r1, &x, &w, &r, &p);
+        let mut r2 = Pcg64::new(99);
+        let pool = draw_pool(&mut r2, &p, 16);
+        let b = mca_encode_pooled(&x, &w, &r, &p, &pool);
+        assert_eq!(a, b);
+        // Saturated rows are bit-identical to the plain matmul.
+        let exact = x.matmul(&w).unwrap();
+        assert_eq!(a.row(1), exact.row(1));
+        assert_eq!(a.row(3), exact.row(3));
     }
 
     #[test]

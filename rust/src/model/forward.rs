@@ -1,0 +1,599 @@
+//! Native (pure-Rust) transformer encoder forward — the compute core of
+//! [`crate::runtime::NativeBackend`]. Mirrors `python/compile/model.py`'s
+//! `forward` exactly: embed + positional → L × (LN → multi-head attention
+//! with exact or Monte-Carlo value encoding → FFN) → final LN → CLS pooling
+//! → classifier head. Returns per-sequence logits plus the in-graph
+//! Σ_layers Σ_tokens r_i (for FLOPs accounting) and the real-token count.
+//!
+//! MCA (paper Eq. 5/6/9) reuses the host estimator in [`crate::mca`]: the
+//! sampling distribution p(i) = ‖W_v[i]‖²/‖W_v‖²_F is computed once per
+//! layer, one shared sample pool per layer is drawn from the request seed
+//! (so results are deterministic in `seed` and independent of batch
+//! composition), and saturated tokens (r_i ≥ d) fall back to the exact
+//! product — bit-identical to the exact path, which is what makes the
+//! α → 0 limit exact.
+//!
+//! Batch elements are independent; [`forward_batch`] fans them out with
+//! `util::threadpool::parallel_map`, borrowing the unpacked weights from
+//! the caller's stack (scoped threads — no `Arc`, no clones per row).
+
+use anyhow::{bail, Context, Result};
+
+use crate::mca::{self, RStrategy};
+use crate::model::Params;
+use crate::rng::Pcg64;
+use crate::runtime::{ForwardOutput, HostValue, ModelInfo};
+use crate::tensor::{self, Tensor};
+use crate::tokenizer::PAD_ID;
+use crate::util::threadpool;
+
+/// Attention-encoding mode of a forward pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttnMode {
+    Exact,
+    Mca,
+}
+
+/// Validated, backend-native form of a [`crate::runtime::ForwardSpec`].
+#[derive(Debug, Clone)]
+pub struct ForwardCfg {
+    pub mode: AttnMode,
+    pub r_strategy: RStrategy,
+    /// uniform ablation of the Eq. 6 sampling distribution
+    pub uniform_p: bool,
+    /// round matmul operands to bf16 (Figure 1's reduced-precision axis)
+    pub bf16: bool,
+}
+
+impl ForwardCfg {
+    pub fn parse(
+        mode: &str,
+        r_strategy: &str,
+        p_strategy: &str,
+        compute_dtype: &str,
+    ) -> Result<ForwardCfg> {
+        let mode = match mode {
+            "exact" => AttnMode::Exact,
+            "mca" => AttnMode::Mca,
+            other => bail!("unknown mode {other:?} (exact|mca)"),
+        };
+        let r_strategy = RStrategy::parse(r_strategy)
+            .with_context(|| format!("unknown r_strategy {r_strategy:?}"))?;
+        let uniform_p = match p_strategy {
+            "norm" => false,
+            "uniform" => true,
+            other => bail!("unknown p_strategy {other:?} (norm|uniform)"),
+        };
+        let bf16 = match compute_dtype {
+            "f32" => false,
+            "bf16" => true,
+            other => bail!("unknown compute_dtype {other:?} (f32|bf16)"),
+        };
+        Ok(ForwardCfg { mode, r_strategy, uniform_p, bf16 })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Unpacked weights
+// ---------------------------------------------------------------------------
+
+/// One encoder layer's parameters as `Tensor`s / bias vectors.
+pub(crate) struct LayerWeights {
+    pub ln1_scale: Vec<f32>,
+    pub ln1_bias: Vec<f32>,
+    pub wq: Tensor,
+    pub bq: Vec<f32>,
+    pub wk: Tensor,
+    pub bk: Vec<f32>,
+    pub wv: Tensor,
+    pub bv: Vec<f32>,
+    pub wo: Tensor,
+    pub bo: Vec<f32>,
+    pub ln2_scale: Vec<f32>,
+    pub ln2_bias: Vec<f32>,
+    pub w1: Tensor,
+    pub b1: Vec<f32>,
+    pub w2: Tensor,
+    pub b2: Vec<f32>,
+}
+
+/// The whole model unpacked from the flat `Params` list (one unpack per
+/// batched call; shared by reference across the batch workers).
+pub(crate) struct Weights {
+    pub embed: Tensor,
+    pub pos: Tensor,
+    pub layers: Vec<LayerWeights>,
+    pub lnf_scale: Vec<f32>,
+    pub lnf_bias: Vec<f32>,
+    pub head_w: Tensor,
+    pub head_b: Vec<f32>,
+}
+
+/// Entries per layer in the flat param layout (see `param_spec_for`).
+pub(crate) const PARAMS_PER_LAYER: usize = 16;
+
+fn to_tensor(hv: &HostValue) -> Result<Tensor> {
+    Tensor::new(hv.shape(), hv.as_f32()?.to_vec())
+}
+
+fn to_vec(hv: &HostValue) -> Result<Vec<f32>> {
+    Ok(hv.as_f32()?.to_vec())
+}
+
+impl Weights {
+    pub fn unpack(model: &ModelInfo, params: &Params) -> Result<Weights> {
+        let want = 2 + PARAMS_PER_LAYER * model.n_layers + 4;
+        if params.values.len() != want {
+            bail!(
+                "model {} expects {want} parameter tensors, got {}",
+                model.name,
+                params.values.len()
+            );
+        }
+        let v = &params.values;
+        let mut layers = Vec::with_capacity(model.n_layers);
+        for i in 0..model.n_layers {
+            let b = 2 + PARAMS_PER_LAYER * i;
+            layers.push(LayerWeights {
+                ln1_scale: to_vec(&v[b])?,
+                ln1_bias: to_vec(&v[b + 1])?,
+                wq: to_tensor(&v[b + 2])?,
+                bq: to_vec(&v[b + 3])?,
+                wk: to_tensor(&v[b + 4])?,
+                bk: to_vec(&v[b + 5])?,
+                wv: to_tensor(&v[b + 6])?,
+                bv: to_vec(&v[b + 7])?,
+                wo: to_tensor(&v[b + 8])?,
+                bo: to_vec(&v[b + 9])?,
+                ln2_scale: to_vec(&v[b + 10])?,
+                ln2_bias: to_vec(&v[b + 11])?,
+                w1: to_tensor(&v[b + 12])?,
+                b1: to_vec(&v[b + 13])?,
+                w2: to_tensor(&v[b + 14])?,
+                b2: to_vec(&v[b + 15])?,
+            });
+        }
+        let t = 2 + PARAMS_PER_LAYER * model.n_layers;
+        Ok(Weights {
+            embed: to_tensor(&v[0])?,
+            pos: to_tensor(&v[1])?,
+            layers,
+            lnf_scale: to_vec(&v[t])?,
+            lnf_bias: to_vec(&v[t + 1])?,
+            head_w: to_tensor(&v[t + 2])?,
+            head_b: to_vec(&v[t + 3])?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared numeric helpers (also used by the backward pass in `grad`)
+// ---------------------------------------------------------------------------
+
+const LN_EPS: f32 = 1e-6;
+
+/// Row-wise layer norm returning (output, per-row mean, per-row 1/σ).
+pub(crate) fn layer_norm_stats(
+    x: &Tensor,
+    scale: &[f32],
+    bias: &[f32],
+) -> (Tensor, Vec<f32>, Vec<f32>) {
+    let (n, d) = (x.shape()[0], x.shape()[1]);
+    let mut out = Tensor::zeros(&[n, d]);
+    let mut mus = vec![0.0f32; n];
+    let mut istds = vec![0.0f32; n];
+    for i in 0..n {
+        let row = x.row(i);
+        let mu = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let istd = 1.0 / (var + LN_EPS).sqrt();
+        mus[i] = mu;
+        istds[i] = istd;
+        let o = out.row_mut(i);
+        for k in 0..d {
+            o[k] = (row[k] - mu) * istd * scale[k] + bias[k];
+        }
+    }
+    (out, mus, istds)
+}
+
+pub(crate) fn layer_norm(x: &Tensor, scale: &[f32], bias: &[f32]) -> Tensor {
+    layer_norm_stats(x, scale, bias).0
+}
+
+/// tanh-approximate GELU (jax.nn.gelu approximate=True).
+pub(crate) fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// d/dx of the tanh-approximate GELU.
+pub(crate) fn gelu_grad(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6;
+    let u = C * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    let du = C * (1.0 + 3.0 * 0.044715 * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+}
+
+/// Matmul in the configured compute dtype (operands rounded to bf16 when
+/// `bf16`, accumulation always f32 — mirrors the Python `mm`).
+pub(crate) fn mm(a: &Tensor, b: &Tensor, bf16: bool) -> Tensor {
+    if bf16 {
+        a.to_bf16().matmul(&b.to_bf16()).expect("shape-checked matmul")
+    } else {
+        a.matmul(b).expect("shape-checked matmul")
+    }
+}
+
+/// Key/window visibility: can query `qi` attend to key `ki`?
+/// (Padding keys are invisible; windowed attention allows the band plus
+/// the global-CLS row and column — the Longformer pattern.)
+#[inline]
+pub(crate) fn attn_allowed(mask: &[bool], window: Option<usize>, qi: usize, ki: usize) -> bool {
+    if !mask[ki] {
+        return false;
+    }
+    match window {
+        None => true,
+        Some(w) => qi.abs_diff(ki) <= w || qi == 0 || ki == 0,
+    }
+}
+
+const NEG_BIAS: f32 = -1e9;
+
+/// softmax(Q_h K_h^T / sqrt(dh) + bias) for every head. Returns the
+/// per-head attention matrices plus q/k (with bias added), which the
+/// backward pass reuses.
+pub(crate) fn attention_probs(
+    xn: &Tensor,
+    lw: &LayerWeights,
+    mask: &[bool],
+    window: Option<usize>,
+    n_heads: usize,
+    bf16: bool,
+) -> (Vec<Tensor>, Tensor, Tensor) {
+    let n = mask.len();
+    let d = xn.shape()[1];
+    let dh = d / n_heads;
+    let mut q = mm(xn, &lw.wq, bf16);
+    q.add_row_inplace(&lw.bq);
+    let mut k = mm(xn, &lw.wk, bf16);
+    k.add_row_inplace(&lw.bk);
+
+    let inv = 1.0 / (dh as f32).sqrt();
+    let mut attn = Vec::with_capacity(n_heads);
+    for hh in 0..n_heads {
+        let qh = q.col_block(hh * dh, dh);
+        let kh = k.col_block(hh * dh, dh);
+        let mut scores = qh.matmul_nt(&kh).expect("head shapes match");
+        for qi in 0..n {
+            let row = scores.row_mut(qi);
+            for (ki, s) in row.iter_mut().enumerate() {
+                *s *= inv;
+                if !attn_allowed(mask, window, qi, ki) {
+                    *s += NEG_BIAS;
+                }
+            }
+        }
+        attn.push(scores.softmax_rows().expect("rank-2 scores"));
+    }
+    (attn, q, k)
+}
+
+// ---------------------------------------------------------------------------
+// Per-layer MCA context (shared across the batch)
+// ---------------------------------------------------------------------------
+
+/// Per-layer sampling distribution + shared pool (Eq. 6 + the shared-pool
+/// estimator). Computed once per batched call: p depends only on W_v, the
+/// pool only on (seed, layer) — so per-request results are deterministic
+/// in the request seed and independent of batch composition.
+pub(crate) struct McaLayerCtx {
+    pub probs: Vec<f64>,
+    pub pool: Vec<usize>,
+}
+
+pub(crate) fn mca_contexts(w: &Weights, cfg: &ForwardCfg, seed: u32) -> Vec<McaLayerCtx> {
+    w.layers
+        .iter()
+        .enumerate()
+        .map(|(li, lw)| {
+            let d = lw.wv.shape()[0];
+            let probs = if cfg.uniform_p {
+                vec![1.0 / d as f64; d]
+            } else {
+                mca::sampling_probs(&lw.wv)
+            };
+            // Independent stream per layer (mirrors jax.random.fold_in).
+            let mut rng = Pcg64::with_stream(seed as u64, 0x4D43_4100 + li as u64);
+            let pool = mca::draw_pool(&mut rng, &probs, d);
+            McaLayerCtx { probs, pool }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Forward
+// ---------------------------------------------------------------------------
+
+/// Embed + positional encoding, zeroed at padded positions.
+pub(crate) fn embed(model: &ModelInfo, w: &Weights, ids: &[i32]) -> (Tensor, Vec<bool>) {
+    let n = ids.len();
+    let d = model.d_model;
+    let mask: Vec<bool> = ids.iter().map(|&t| t != PAD_ID).collect();
+    let mut x = Tensor::zeros(&[n, d]);
+    for j in 0..n {
+        if !mask[j] {
+            continue;
+        }
+        let tok = (ids[j].max(0) as usize).min(model.vocab - 1);
+        let e = w.embed.row(tok);
+        let p = w.pos.row(j);
+        let row = x.row_mut(j);
+        for k in 0..d {
+            row[k] = e[k] + p[k];
+        }
+    }
+    (x, mask)
+}
+
+/// One sequence through the encoder. Returns (logits, Σr_i, n_eff).
+pub(crate) fn forward_one(
+    model: &ModelInfo,
+    w: &Weights,
+    ids: &[i32],
+    alpha: f32,
+    mca_ctx: Option<&[McaLayerCtx]>,
+    cfg: &ForwardCfg,
+) -> (Vec<f32>, f32, f32) {
+    let d = model.d_model;
+    let h = model.n_heads;
+    let dh = d / h;
+    let (mut x, mask) = embed(model, w, ids);
+    let n = mask.len();
+    let n_eff = mask.iter().filter(|&&m| m).count();
+
+    let mut r_sum = 0u64;
+    for (li, lw) in w.layers.iter().enumerate() {
+        let xn = layer_norm(&x, &lw.ln1_scale, &lw.ln1_bias);
+        let (attn, _q, _k) = attention_probs(&xn, lw, &mask, model.window, h, cfg.bf16);
+
+        // Value encoding: the operation MCA approximates (paper §Background).
+        let mut v = match (cfg.mode, mca_ctx) {
+            (AttnMode::Mca, Some(ctxs)) => {
+                let imp = mca::token_importance(&attn, &mask, cfg.r_strategy);
+                let r = mca::sample_counts(&imp, &mask, alpha as f64, d);
+                for (ri, &real) in r.iter().zip(&mask) {
+                    if real {
+                        r_sum += *ri as u64;
+                    }
+                }
+                let ctx = &ctxs[li];
+                let mut est = mca::mca_encode_pooled(&xn, &lw.wv, &r, &ctx.probs, &ctx.pool);
+                // Under bf16 the exact path rounds its operands (mirrors the
+                // Python `mm`), so saturated tokens must take the *rounded*
+                // exact product too — otherwise the α → 0 limit would not
+                // match the exact-mode baseline. Only the saturated rows are
+                // recomputed, in the same skip-zero accumulation order as
+                // `Tensor::matmul`.
+                if cfg.bf16 && r.iter().any(|&ri| ri >= d) {
+                    let xnb = xn.to_bf16();
+                    let wvb = lw.wv.to_bf16();
+                    for (i, &ri) in r.iter().enumerate() {
+                        if ri < d {
+                            continue;
+                        }
+                        let o_row = est.row_mut(i);
+                        o_row.fill(0.0);
+                        tensor::accumulate_row_product(xnb.row(i), &wvb, o_row);
+                    }
+                }
+                est
+            }
+            _ => mm(&xn, &lw.wv, cfg.bf16),
+        };
+        v.add_row_inplace(&lw.bv);
+
+        // Weighted sum + output projection, head by head.
+        let mut ctx_m = Tensor::zeros(&[n, d]);
+        for hh in 0..h {
+            let vh = v.col_block(hh * dh, dh);
+            let ch = attn[hh].matmul(&vh).expect("attn @ v_h");
+            ctx_m.add_col_block(hh * dh, &ch);
+        }
+        let mut proj = mm(&ctx_m, &lw.wo, cfg.bf16);
+        proj.add_row_inplace(&lw.bo);
+        x.add_inplace(&proj);
+
+        // FFN block.
+        let xn2 = layer_norm(&x, &lw.ln2_scale, &lw.ln2_bias);
+        let mut hmid = mm(&xn2, &lw.w1, cfg.bf16);
+        hmid.add_row_inplace(&lw.b1);
+        for g in hmid.data_mut() {
+            *g = gelu(*g);
+        }
+        let mut ff = mm(&hmid, &lw.w2, cfg.bf16);
+        ff.add_row_inplace(&lw.b2);
+        x.add_inplace(&ff);
+    }
+
+    let xf = layer_norm(&x, &w.lnf_scale, &w.lnf_bias);
+    let cls = Tensor::new(&[1, d], xf.row(0).to_vec()).expect("cls row");
+    let mut logits = mm(&cls, &w.head_w, cfg.bf16);
+    logits.add_row_inplace(&w.head_b);
+    (logits.into_data(), r_sum as f32, n_eff as f32)
+}
+
+/// Batched forward: `ids` is row-major (batch, seq). Fans the independent
+/// sequences out across `workers` threads.
+pub fn forward_batch(
+    model: &ModelInfo,
+    params: &Params,
+    ids: &[i32],
+    batch: usize,
+    seq: usize,
+    alpha: f32,
+    seed: u32,
+    cfg: &ForwardCfg,
+    workers: usize,
+) -> Result<ForwardOutput> {
+    if ids.len() != batch * seq {
+        bail!("ids length {} != batch {batch} * seq {seq}", ids.len());
+    }
+    if seq > model.max_len {
+        bail!("seq {seq} exceeds model {} max_len {}", model.name, model.max_len);
+    }
+    let w = Weights::unpack(model, params)?;
+    let mca_ctx = match cfg.mode {
+        AttnMode::Mca => Some(mca_contexts(&w, cfg, seed)),
+        AttnMode::Exact => None,
+    };
+
+    let rows: Vec<Vec<i32>> = ids.chunks_exact(seq).map(|c| c.to_vec()).collect();
+    let results = threadpool::parallel_map(rows, workers, |row: &Vec<i32>| {
+        forward_one(model, &w, row, alpha, mca_ctx.as_deref(), cfg)
+    });
+
+    let ncl = model.n_classes;
+    let mut out = ForwardOutput {
+        logits: Vec::with_capacity(batch * ncl),
+        n_classes: ncl,
+        r_sum: Vec::with_capacity(batch),
+        n_eff: Vec::with_capacity(batch),
+    };
+    for (logits, r_sum, n_eff) in results {
+        debug_assert_eq!(logits.len(), ncl);
+        out.logits.extend_from_slice(&logits);
+        out.r_sum.push(r_sum);
+        out.n_eff.push(n_eff);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{builtin_model, param_spec_for};
+
+    fn tiny_model() -> ModelInfo {
+        ModelInfo {
+            name: "tiny_native".into(),
+            vocab: 16,
+            d_model: 8,
+            n_heads: 2,
+            n_layers: 1,
+            d_ff: 16,
+            max_len: 6,
+            n_classes: 3,
+            window: None,
+            param_spec: param_spec_for(16, 8, 16, 1, 6, 3),
+        }
+    }
+
+    fn tiny_params(seed: u64) -> (ModelInfo, Params) {
+        let m = tiny_model();
+        let mut rng = Pcg64::new(seed);
+        let p = Params::init(&m, &mut rng);
+        (m, p)
+    }
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let (m, p) = tiny_params(1);
+        let cfg = ForwardCfg::parse("exact", "max", "norm", "f32").unwrap();
+        let ids = vec![1, 5, 6, 2, 0, 0, 1, 7, 2, 0, 0, 0];
+        let a = forward_batch(&m, &p, &ids, 2, 6, 1.0, 0, &cfg, 2).unwrap();
+        assert_eq!(a.logits.len(), 6);
+        assert_eq!(a.n_classes, 3);
+        assert_eq!(a.n_eff, vec![4.0, 3.0]);
+        assert_eq!(a.r_sum, vec![0.0, 0.0]); // exact mode reports 0
+        let b = forward_batch(&m, &p, &ids, 2, 6, 1.0, 0, &cfg, 1).unwrap();
+        assert_eq!(a.logits, b.logits); // worker count must not matter
+    }
+
+    #[test]
+    fn mca_saturates_to_exact_at_tiny_alpha() {
+        let (m, p) = tiny_params(2);
+        let exact = ForwardCfg::parse("exact", "max", "norm", "f32").unwrap();
+        let mca = ForwardCfg::parse("mca", "max", "norm", "f32").unwrap();
+        let ids = vec![1, 5, 6, 7, 8, 2];
+        let e = forward_batch(&m, &p, &ids, 1, 6, 1.0, 3, &exact, 1).unwrap();
+        // alpha so small every real token saturates (r_i = d): exact fallback
+        let s = forward_batch(&m, &p, &ids, 1, 6, 1e-3, 3, &mca, 1).unwrap();
+        for (a, b) in e.logits.iter().zip(&s.logits) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        // Σr saturates at n_eff * L * d exactly
+        assert_eq!(s.r_sum[0], (6 * 1 * 8) as f32);
+    }
+
+    #[test]
+    fn mca_rsum_within_budget_bounds() {
+        let (m, p) = tiny_params(3);
+        let mca = ForwardCfg::parse("mca", "max", "norm", "f32").unwrap();
+        let ids = vec![1, 5, 6, 7, 2, 0];
+        let o = forward_batch(&m, &p, &ids, 1, 6, 0.4, 9, &mca, 1).unwrap();
+        let (n_eff, l, d) = (5.0f32, 1.0f32, 8.0f32);
+        assert!(o.r_sum[0] >= n_eff * l, "r_sum {}", o.r_sum[0]);
+        assert!(o.r_sum[0] <= n_eff * l * d, "r_sum {}", o.r_sum[0]);
+    }
+
+    #[test]
+    fn padded_tail_does_not_change_logits() {
+        // Same sequence at two padded lengths: logits must agree (padding
+        // is masked out of attention; CLS pooling reads row 0).
+        let (m, p) = tiny_params(4);
+        let cfg = ForwardCfg::parse("exact", "max", "norm", "f32").unwrap();
+        let short = forward_batch(&m, &p, &[1, 5, 2, 0], 1, 4, 1.0, 0, &cfg, 1).unwrap();
+        let long = forward_batch(&m, &p, &[1, 5, 2, 0, 0, 0], 1, 6, 1.0, 0, &cfg, 1).unwrap();
+        for (a, b) in short.logits.iter().zip(&long.logits) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn windowed_attention_masks_far_pairs() {
+        // With a window, a far-away key must not influence a middle query,
+        // but the global CLS row/column stays visible.
+        let mut m = tiny_model();
+        m.window = Some(1);
+        m.max_len = 6;
+        m.param_spec = param_spec_for(16, 8, 16, 1, 6, 3);
+        let mut rng = Pcg64::new(5);
+        let p = Params::init(&m, &mut rng);
+        let mask = vec![true; 6];
+        let w = Weights::unpack(&m, &p).unwrap();
+        let (x, _) = embed(&m, &w, &[1, 5, 6, 7, 8, 2]);
+        let xn = layer_norm(&x, &w.layers[0].ln1_scale, &w.layers[0].ln1_bias);
+        let (attn, _, _) = attention_probs(&xn, &w.layers[0], &mask, m.window, 2, false);
+        for head in &attn {
+            // query 3 cannot see key 5 (|3-5| > 1, neither is CLS)
+            assert!(head.at(&[3, 5]) < 1e-6);
+            // but everyone sees CLS (column 0)
+            assert!(head.at(&[3, 0]) > 0.0);
+            // and CLS sees everyone (row 0 sums to 1 over all 6 keys)
+            let s: f32 = head.row(0).iter().sum();
+            assert!((s - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn builtin_bert_sim_runs_end_to_end() {
+        let m = builtin_model("bert_sim").unwrap();
+        let mut rng = Pcg64::new(11);
+        let p = Params::init(&m, &mut rng);
+        let cfg = ForwardCfg::parse("mca", "max", "norm", "f32").unwrap();
+        let mut ids = vec![0i32; 2 * 16];
+        for (j, t) in [1, 10, 20, 30, 2].iter().enumerate() {
+            ids[j] = *t;
+            ids[16 + j] = *t;
+        }
+        let o = forward_batch(&m, &p, &ids, 2, 16, 0.3, 7, &cfg, 2).unwrap();
+        assert_eq!(o.logits.len(), 6);
+        assert!(o.logits.iter().all(|x| x.is_finite()));
+        // identical rows + shared pool => identical outputs
+        assert_eq!(&o.logits[..3], &o.logits[3..]);
+        assert_eq!(o.r_sum[0], o.r_sum[1]);
+    }
+}

@@ -1,0 +1,689 @@
+//! Native train step: manual reverse-mode gradients through the exact
+//! transformer forward of [`super::forward`], plus the in-place Adam
+//! update — the pure-Rust counterpart of the AOT `train_step` executable
+//! (python/compile/model.py). Training always runs the exact attention
+//! path (the paper applies MCA at inference time).
+//!
+//! Layout contract: gradients are accumulated in the same flat
+//! `param_spec` order as [`crate::model::Params`], so the Adam update is a
+//! straight elementwise zip. Correctness is pinned by the finite-difference
+//! test at the bottom of this file (and by the Python/JAX mirror used to
+//! derive the formulas; see DESIGN.md §4).
+
+use anyhow::{bail, Result};
+
+use super::forward::{
+    attention_probs, embed, gelu, gelu_grad, layer_norm_stats, mm, Weights, PARAMS_PER_LAYER,
+};
+use crate::data::TaskKind;
+use crate::runtime::{HostValue, ModelInfo, TrainState};
+use crate::tensor::{self, Tensor};
+use crate::util::threadpool;
+
+// ---------------------------------------------------------------------------
+// Gradient buffer (flat param_spec layout)
+// ---------------------------------------------------------------------------
+
+/// Per-parameter gradient accumulator, same order/shapes as `Params`.
+pub(crate) struct Grads {
+    pub v: Vec<Vec<f32>>,
+    n_layers: usize,
+}
+
+impl Grads {
+    pub fn zeros(model: &ModelInfo) -> Grads {
+        Grads {
+            v: model
+                .param_spec
+                .iter()
+                .map(|(_, shape)| vec![0.0f32; shape.iter().product()])
+                .collect(),
+            n_layers: model.n_layers,
+        }
+    }
+
+    /// Gradient slot for layer `li`, offset `off` in the per-layer block
+    /// (0 ln1.scale, 1 ln1.bias, 2 wq, 3 bq, 4 wk, 5 bk, 6 wv, 7 bv,
+    ///  8 wo, 9 bo, 10 ln2.scale, 11 ln2.bias, 12 w1, 13 b1, 14 w2, 15 b2).
+    fn layer(&mut self, li: usize, off: usize) -> &mut [f32] {
+        &mut self.v[2 + PARAMS_PER_LAYER * li + off]
+    }
+
+    fn tail(&mut self, off: usize) -> &mut [f32] {
+        let t = 2 + PARAMS_PER_LAYER * self.n_layers;
+        &mut self.v[t + off]
+    }
+
+    fn merge(&mut self, other: &Grads) {
+        for (a, b) in self.v.iter_mut().zip(&other.v) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Small backward helpers
+// ---------------------------------------------------------------------------
+
+/// acc += A^T @ B, flattened row-major (m,n); A (r,m), B (r,n).
+/// (One kernel for both the weight-gradient accumulators and
+/// `Tensor::matmul_tn` — see `tensor::accumulate_tn`.)
+fn add_tn(a: &Tensor, b: &Tensor, acc: &mut [f32]) {
+    tensor::accumulate_tn(a, b, acc);
+}
+
+/// acc += column sums of T (the bias gradient).
+fn add_rows(t: &Tensor, acc: &mut [f32]) {
+    let n = t.shape()[1];
+    debug_assert_eq!(acc.len(), n);
+    for row in t.data().chunks_exact(n) {
+        for (a, &x) in acc.iter_mut().zip(row) {
+            *a += x;
+        }
+    }
+}
+
+/// LayerNorm backward. `dy` is the output gradient; returns dx and
+/// accumulates the scale/bias gradients.
+fn ln_backward(
+    dy: &Tensor,
+    x_in: &Tensor,
+    mu: &[f32],
+    istd: &[f32],
+    scale: &[f32],
+    g_scale: &mut [f32],
+    g_bias: &mut [f32],
+) -> Tensor {
+    let (n, d) = (x_in.shape()[0], x_in.shape()[1]);
+    let mut dx = Tensor::zeros(&[n, d]);
+    for i in 0..n {
+        let xr = x_in.row(i);
+        let dyr = dy.row(i);
+        let mut m1 = 0.0f32;
+        let mut m2 = 0.0f32;
+        for k in 0..d {
+            let xhat = (xr[k] - mu[i]) * istd[i];
+            let dxh = dyr[k] * scale[k];
+            g_scale[k] += dyr[k] * xhat;
+            g_bias[k] += dyr[k];
+            m1 += dxh;
+            m2 += dxh * xhat;
+        }
+        m1 /= d as f32;
+        m2 /= d as f32;
+        let dxr = dx.row_mut(i);
+        for k in 0..d {
+            let xhat = (xr[k] - mu[i]) * istd[i];
+            let dxh = dyr[k] * scale[k];
+            dxr[k] = istd[i] * (dxh - m1 - xhat * m2);
+        }
+    }
+    dx
+}
+
+/// A single training label.
+#[derive(Debug, Clone, Copy)]
+enum LabelVal {
+    Class(i32),
+    Score(f32),
+}
+
+// ---------------------------------------------------------------------------
+// One example: forward with caches + full backward
+// ---------------------------------------------------------------------------
+
+struct LayerCache {
+    x_in: Tensor,
+    xn: Tensor,
+    mu1: Vec<f32>,
+    istd1: Vec<f32>,
+    q: Tensor,
+    k: Tensor,
+    attn: Vec<Tensor>,
+    v: Tensor,
+    ctx_m: Tensor,
+    x_attn: Tensor,
+    xn2: Tensor,
+    mu2: Vec<f32>,
+    istd2: Vec<f32>,
+    hpre: Tensor,
+    hact: Tensor,
+}
+
+/// Forward + backward for one sequence; returns the (1/batch-scaled) loss
+/// contribution and accumulates parameter gradients into `g`.
+fn example_loss_grad(
+    model: &ModelInfo,
+    w: &Weights,
+    ids: &[i32],
+    label: LabelVal,
+    inv_batch: f32,
+    g: &mut Grads,
+) -> f32 {
+    let d = model.d_model;
+    let h = model.n_heads;
+    let dh = d / h;
+    let ncl = model.n_classes;
+
+    // ---- forward with caches (exact attention; f32) ----------------------
+    let (x0, mask) = embed(model, w, ids);
+    let n = mask.len();
+    let mut x = x0;
+    let mut caches: Vec<LayerCache> = Vec::with_capacity(model.n_layers);
+    for lw in &w.layers {
+        let (xn, mu1, istd1) = layer_norm_stats(&x, &lw.ln1_scale, &lw.ln1_bias);
+        let (attn, q, k) = attention_probs(&xn, lw, &mask, model.window, h, false);
+        let mut v = mm(&xn, &lw.wv, false);
+        v.add_row_inplace(&lw.bv);
+        let mut ctx_m = Tensor::zeros(&[n, d]);
+        for hh in 0..h {
+            let vh = v.col_block(hh * dh, dh);
+            let ch = attn[hh].matmul(&vh).expect("attn @ v_h");
+            ctx_m.add_col_block(hh * dh, &ch);
+        }
+        let mut proj = mm(&ctx_m, &lw.wo, false);
+        proj.add_row_inplace(&lw.bo);
+        let x_in = x;
+        let mut x_attn = x_in.clone();
+        x_attn.add_inplace(&proj);
+        let (xn2, mu2, istd2) = layer_norm_stats(&x_attn, &lw.ln2_scale, &lw.ln2_bias);
+        let mut hpre = mm(&xn2, &lw.w1, false);
+        hpre.add_row_inplace(&lw.b1);
+        let mut hact = hpre.clone();
+        for a in hact.data_mut() {
+            *a = gelu(*a);
+        }
+        let mut ff = mm(&hact, &lw.w2, false);
+        ff.add_row_inplace(&lw.b2);
+        let mut x_out = x_attn.clone();
+        x_out.add_inplace(&ff);
+        caches.push(LayerCache {
+            x_in,
+            xn,
+            mu1,
+            istd1,
+            q,
+            k,
+            attn,
+            v,
+            ctx_m,
+            x_attn,
+            xn2,
+            mu2,
+            istd2,
+            hpre,
+            hact,
+        });
+        x = x_out;
+    }
+    let (xf, muf, istdf) = layer_norm_stats(&x, &w.lnf_scale, &w.lnf_bias);
+    let cls = xf.row(0);
+    let mut logits = vec![0.0f32; ncl];
+    for (j, l) in logits.iter_mut().enumerate() {
+        let mut acc = w.head_b[j];
+        for k in 0..d {
+            acc += cls[k] * w.head_w.at(&[k, j]);
+        }
+        *l = acc;
+    }
+
+    // ---- loss + dlogits ---------------------------------------------------
+    let mut dlogits = vec![0.0f32; ncl];
+    let loss = match label {
+        LabelVal::Class(c) => {
+            let c = (c.max(0) as usize).min(ncl - 1);
+            let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let sum: f32 = logits.iter().map(|&l| (l - mx).exp()).sum();
+            let log_sum = sum.ln();
+            for (j, dl) in dlogits.iter_mut().enumerate() {
+                let p = (logits[j] - mx).exp() / sum;
+                *dl = (p - if j == c { 1.0 } else { 0.0 }) * inv_batch;
+            }
+            -(logits[c] - mx - log_sum) * inv_batch
+        }
+        LabelVal::Score(t) => {
+            let err = logits[0] - t;
+            dlogits[0] = 2.0 * err * inv_batch;
+            err * err * inv_batch
+        }
+    };
+
+    // ---- backward ---------------------------------------------------------
+    // classifier head
+    {
+        let g_hw = g.tail(2);
+        for (k, &c) in cls.iter().enumerate() {
+            if c == 0.0 {
+                continue;
+            }
+            let row = &mut g_hw[k * ncl..(k + 1) * ncl];
+            for (x_, &dl) in row.iter_mut().zip(&dlogits) {
+                *x_ += c * dl;
+            }
+        }
+    }
+    {
+        let g_hb = g.tail(3);
+        for (x_, &dl) in g_hb.iter_mut().zip(&dlogits) {
+            *x_ += dl;
+        }
+    }
+    let mut dxf = Tensor::zeros(&[n, d]);
+    {
+        let r0 = dxf.row_mut(0);
+        for (k, slot) in r0.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for (j, &dl) in dlogits.iter().enumerate() {
+                acc += w.head_w.at(&[k, j]) * dl;
+            }
+            *slot = acc;
+        }
+    }
+    // final LN
+    let mut dx = {
+        let mut gsc = vec![0.0f32; d];
+        let mut gbi = vec![0.0f32; d];
+        let dx = ln_backward(&dxf, &x, &muf, &istdf, &w.lnf_scale, &mut gsc, &mut gbi);
+        for (a, b) in g.tail(0).iter_mut().zip(&gsc) {
+            *a += b;
+        }
+        for (a, b) in g.tail(1).iter_mut().zip(&gbi) {
+            *a += b;
+        }
+        dx
+    };
+
+    // layers, last to first
+    for li in (0..model.n_layers).rev() {
+        let lw = &w.layers[li];
+        let c = &caches[li];
+        let d_ff_out = dx; // gradient at x_out
+
+        // FFN block
+        add_tn(&c.hact, &d_ff_out, g.layer(li, 14));
+        add_rows(&d_ff_out, g.layer(li, 15));
+        let mut d_act = d_ff_out.matmul_nt(&lw.w2).expect("dact");
+        for (da, &hp) in d_act.data_mut().iter_mut().zip(c.hpre.data()) {
+            *da *= gelu_grad(hp);
+        }
+        add_tn(&c.xn2, &d_act, g.layer(li, 12));
+        add_rows(&d_act, g.layer(li, 13));
+        let d_xn2 = d_act.matmul_nt(&lw.w1).expect("dxn2");
+        let mut d_x_attn = {
+            let mut gsc = vec![0.0f32; d];
+            let mut gbi = vec![0.0f32; d];
+            let r = ln_backward(&d_xn2, &c.x_attn, &c.mu2, &c.istd2, &lw.ln2_scale, &mut gsc, &mut gbi);
+            for (a, b) in g.layer(li, 10).iter_mut().zip(&gsc) {
+                *a += b;
+            }
+            for (a, b) in g.layer(li, 11).iter_mut().zip(&gbi) {
+                *a += b;
+            }
+            r
+        };
+        d_x_attn.add_inplace(&d_ff_out); // residual around the FFN
+
+        // output projection
+        add_tn(&c.ctx_m, &d_x_attn, g.layer(li, 8));
+        add_rows(&d_x_attn, g.layer(li, 9));
+        let d_ctx = d_x_attn.matmul_nt(&lw.wo).expect("dctx");
+
+        // heads: ctx_h = attn_h @ v_h; scores = q_h k_h^T / sqrt(dh)
+        let inv = 1.0 / (dh as f32).sqrt();
+        let mut d_v = Tensor::zeros(&[n, d]);
+        let mut d_q = Tensor::zeros(&[n, d]);
+        let mut d_k = Tensor::zeros(&[n, d]);
+        for hh in 0..h {
+            let d_ctx_h = d_ctx.col_block(hh * dh, dh);
+            let vh = c.v.col_block(hh * dh, dh);
+            let ah = &c.attn[hh];
+            let d_attn = d_ctx_h.matmul_nt(&vh).expect("dattn");
+            let d_vh = ah.matmul_tn(&d_ctx_h).expect("dvh");
+            d_v.add_col_block(hh * dh, &d_vh);
+
+            // softmax backward (bias is constant): ds = a ⊙ (dA − ⟨dA, a⟩)
+            let mut d_scores = Tensor::zeros(&[n, n]);
+            for qi in 0..n {
+                let ar = ah.row(qi);
+                let dr = d_attn.row(qi);
+                let dot: f32 = ar.iter().zip(dr).map(|(a, b)| a * b).sum();
+                let o = d_scores.row_mut(qi);
+                for ki in 0..n {
+                    o[ki] = ar[ki] * (dr[ki] - dot);
+                }
+            }
+            let qh = c.q.col_block(hh * dh, dh);
+            let kh = c.k.col_block(hh * dh, dh);
+            let mut d_qh = d_scores.matmul(&kh).expect("dqh");
+            for v_ in d_qh.data_mut() {
+                *v_ *= inv;
+            }
+            let mut d_kh = d_scores.matmul_tn(&qh).expect("dkh");
+            for v_ in d_kh.data_mut() {
+                *v_ *= inv;
+            }
+            d_q.add_col_block(hh * dh, &d_qh);
+            d_k.add_col_block(hh * dh, &d_kh);
+        }
+
+        // q/k/v projections (all read xn)
+        add_tn(&c.xn, &d_q, g.layer(li, 2));
+        add_rows(&d_q, g.layer(li, 3));
+        add_tn(&c.xn, &d_k, g.layer(li, 4));
+        add_rows(&d_k, g.layer(li, 5));
+        add_tn(&c.xn, &d_v, g.layer(li, 6));
+        add_rows(&d_v, g.layer(li, 7));
+        let mut d_xn = d_q.matmul_nt(&lw.wq).expect("dxn q");
+        d_xn.add_inplace(&d_k.matmul_nt(&lw.wk).expect("dxn k"));
+        d_xn.add_inplace(&d_v.matmul_nt(&lw.wv).expect("dxn v"));
+
+        // LN1 + residual into the layer input
+        let mut d_x_in = {
+            let mut gsc = vec![0.0f32; d];
+            let mut gbi = vec![0.0f32; d];
+            let r = ln_backward(&d_xn, &c.x_in, &c.mu1, &c.istd1, &lw.ln1_scale, &mut gsc, &mut gbi);
+            for (a, b) in g.layer(li, 0).iter_mut().zip(&gsc) {
+                *a += b;
+            }
+            for (a, b) in g.layer(li, 1).iter_mut().zip(&gbi) {
+                *a += b;
+            }
+            r
+        };
+        d_x_in.add_inplace(&d_x_attn);
+        dx = d_x_in;
+    }
+
+    // embedding + positional (padded positions were zeroed by the mask)
+    let vocab_d = d;
+    for (j, &m) in mask.iter().enumerate() {
+        if !m {
+            continue;
+        }
+        let tok = (ids[j].max(0) as usize).min(model.vocab - 1);
+        let dr = dx.row(j).to_vec();
+        {
+            let ge = &mut g.v[0][tok * vocab_d..(tok + 1) * vocab_d];
+            for (a, b) in ge.iter_mut().zip(&dr) {
+                *a += b;
+            }
+        }
+        {
+            let gp = &mut g.v[1][j * vocab_d..(j + 1) * vocab_d];
+            for (a, b) in gp.iter_mut().zip(&dr) {
+                *a += b;
+            }
+        }
+    }
+
+    loss
+}
+
+// ---------------------------------------------------------------------------
+// Batched loss + gradients, and the Adam step
+// ---------------------------------------------------------------------------
+
+fn parse_labels(labels: &HostValue, kind: TaskKind, batch: usize) -> Result<Vec<LabelVal>> {
+    match kind {
+        TaskKind::Classification => {
+            let l = labels.as_i32()?;
+            if l.len() != batch {
+                bail!("labels length {} != batch {batch}", l.len());
+            }
+            Ok(l.iter().map(|&c| LabelVal::Class(c)).collect())
+        }
+        TaskKind::Regression => {
+            let l = labels.as_f32()?;
+            if l.len() != batch {
+                bail!("labels length {} != batch {batch}", l.len());
+            }
+            Ok(l.iter().map(|&s| LabelVal::Score(s)).collect())
+        }
+    }
+}
+
+/// Mean loss + summed gradients over a batch (parallel over examples).
+pub(crate) fn loss_and_grads(
+    model: &ModelInfo,
+    w: &Weights,
+    ids: &[i32],
+    batch: usize,
+    seq: usize,
+    labels: &[LabelVal],
+    workers: usize,
+) -> (f32, Grads) {
+    let inv_batch = 1.0 / batch as f32;
+    let workers = workers.max(1).min(batch);
+    // Fixed-size contiguous chunks, independent of the worker count: each
+    // chunk accumulates sequentially into its own buffer and the buffers
+    // merge in chunk order, so the f32 summation order — and therefore
+    // the training trajectory — is identical on any machine.
+    let per = 2;
+    let chunks: Vec<Vec<usize>> = (0..batch)
+        .collect::<Vec<_>>()
+        .chunks(per)
+        .map(|c| c.to_vec())
+        .collect();
+    let results = threadpool::parallel_map(chunks, workers, |chunk: &Vec<usize>| {
+        let mut g = Grads::zeros(model);
+        let mut loss = 0.0f32;
+        for &bi in chunk {
+            let row = &ids[bi * seq..(bi + 1) * seq];
+            loss += example_loss_grad(model, w, row, labels[bi], inv_batch, &mut g);
+        }
+        (loss, g)
+    });
+    let mut total = Grads::zeros(model);
+    let mut loss = 0.0f32;
+    for (l, g) in &results {
+        loss += l;
+        total.merge(g);
+    }
+    (loss, total)
+}
+
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+/// One native train step: exact-forward loss, manual backward, in-place
+/// Adam with bias correction. Mirrors `model.train_step` on the Python
+/// side; state layout round-trips identically.
+pub fn train_step(
+    model: &ModelInfo,
+    state: &mut TrainState,
+    ids: &HostValue,
+    labels: &HostValue,
+    kind: TaskKind,
+    lr: f32,
+    workers: usize,
+) -> Result<f32> {
+    let shape = ids.shape().to_vec();
+    if shape.len() != 2 {
+        bail!("ids must be rank 2 (batch, seq), got {shape:?}");
+    }
+    let (batch, seq) = (shape[0], shape[1]);
+    if seq > model.max_len {
+        bail!("seq {seq} exceeds model {} max_len {}", model.name, model.max_len);
+    }
+    let ids_data = ids.as_i32()?.to_vec();
+    let labels = parse_labels(labels, kind, batch)?;
+    let w = Weights::unpack(model, &state.params)?;
+    let (loss, grads) = loss_and_grads(model, &w, &ids_data, batch, seq, &labels, workers);
+
+    // Adam with bias correction (step counts from 1).
+    let step = state.step.scalar_value_f32()? + 1.0;
+    let b1c = 1.0 - ADAM_B1.powf(step);
+    let b2c = 1.0 - ADAM_B2.powf(step);
+    for ((p, m), (v, g)) in state
+        .params
+        .values
+        .iter_mut()
+        .zip(state.m.values.iter_mut())
+        .zip(state.v.values.iter_mut().zip(&grads.v))
+    {
+        let (HostValue::F32 { data: pd, .. }, HostValue::F32 { data: md, .. }, HostValue::F32 { data: vd, .. }) =
+            (p, m, v)
+        else {
+            bail!("non-f32 parameter tensor in train state");
+        };
+        for ((pw, mw), (vw, &gw)) in
+            pd.iter_mut().zip(md.iter_mut()).zip(vd.iter_mut().zip(g))
+        {
+            *mw = ADAM_B1 * *mw + (1.0 - ADAM_B1) * gw;
+            *vw = ADAM_B2 * *vw + (1.0 - ADAM_B2) * gw * gw;
+            let mhat = *mw / b1c;
+            let vhat = *vw / b2c;
+            *pw -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+        }
+    }
+    state.step = HostValue::scalar_f32(step);
+    Ok(loss)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{param_spec_for, Params};
+    use crate::rng::Pcg64;
+
+    fn tiny_model() -> ModelInfo {
+        ModelInfo {
+            name: "tiny_grad".into(),
+            vocab: 16,
+            d_model: 8,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 16,
+            max_len: 6,
+            n_classes: 3,
+            window: None,
+            param_spec: param_spec_for(16, 8, 16, 2, 6, 3),
+        }
+    }
+
+    fn batch_loss(model: &ModelInfo, params: &Params, ids: &[i32], seq: usize, labels: &[LabelVal]) -> f32 {
+        let w = Weights::unpack(model, params).unwrap();
+        let batch = ids.len() / seq;
+        loss_and_grads(model, &w, ids, batch, seq, labels, 1).0
+    }
+
+    #[test]
+    fn finite_difference_matches_analytic_gradient() {
+        let model = tiny_model();
+        let mut rng = Pcg64::new(42);
+        let params = Params::init(&model, &mut rng);
+        let ids = vec![1, 5, 6, 7, 2, 0, 1, 9, 10, 2, 0, 0];
+        let labels = [LabelVal::Class(1), LabelVal::Class(0)];
+        let seq = 6;
+
+        let w = Weights::unpack(&model, &params).unwrap();
+        let (_, grads) = loss_and_grads(&model, &w, &ids, 2, seq, &labels, 1);
+
+        // Probe a few coordinates in every parameter class.
+        let n_tensors = params.values.len();
+        let probes: Vec<(usize, usize)> = (0..n_tensors)
+            .map(|t| (t, (7 * t + 3) % params.values[t].len().max(1)))
+            .collect();
+        let h = 1e-2f32;
+        for (t, idx) in probes {
+            let mut plus = params.clone();
+            let mut minus = params.clone();
+            let HostValue::F32 { data, .. } = &mut plus.values[t] else { panic!() };
+            data[idx] += h;
+            let HostValue::F32 { data, .. } = &mut minus.values[t] else { panic!() };
+            data[idx] -= h;
+            let lp = batch_loss(&model, &plus, &ids, seq, &labels);
+            let lm = batch_loss(&model, &minus, &ids, seq, &labels);
+            let fd = (lp - lm) / (2.0 * h);
+            let an = grads.v[t][idx];
+            let tol = 2e-3 + 0.08 * fd.abs().max(an.abs());
+            assert!(
+                (fd - an).abs() < tol,
+                "tensor {t} ({}) idx {idx}: fd {fd} vs analytic {an}",
+                model.param_spec[t].0
+            );
+        }
+    }
+
+    #[test]
+    fn finite_difference_regression_head() {
+        let model = tiny_model();
+        let mut rng = Pcg64::new(7);
+        let params = Params::init(&model, &mut rng);
+        let ids = vec![1, 4, 8, 2, 0, 0];
+        let labels = [LabelVal::Score(0.7)];
+        let w = Weights::unpack(&model, &params).unwrap();
+        let (_, grads) = loss_and_grads(&model, &w, &ids, 1, 6, &labels, 1);
+        // head.w is the last-but-one tensor
+        let t = params.values.len() - 2;
+        let h = 1e-2f32;
+        for idx in [0usize, 5, 10] {
+            let mut plus = params.clone();
+            let mut minus = params.clone();
+            let HostValue::F32 { data, .. } = &mut plus.values[t] else { panic!() };
+            data[idx] += h;
+            let HostValue::F32 { data, .. } = &mut minus.values[t] else { panic!() };
+            data[idx] -= h;
+            let fd = (batch_loss(&model, &plus, &ids, 6, &labels)
+                - batch_loss(&model, &minus, &ids, 6, &labels))
+                / (2.0 * h);
+            let an = grads.v[t][idx];
+            assert!((fd - an).abs() < 2e-3 + 0.08 * fd.abs().max(an.abs()), "idx {idx}: {fd} vs {an}");
+        }
+    }
+
+    #[test]
+    fn gradients_identical_across_worker_counts() {
+        let model = tiny_model();
+        let mut rng = Pcg64::new(9);
+        let params = Params::init(&model, &mut rng);
+        let w = Weights::unpack(&model, &params).unwrap();
+        let ids: Vec<i32> =
+            (0..6).flat_map(|b| vec![1, 4 + b, 5 + b, 2, 0, 0]).collect();
+        let labels: Vec<LabelVal> = (0..6).map(|b| LabelVal::Class(b % 3)).collect();
+        let (l1, g1) = loss_and_grads(&model, &w, &ids, 6, 6, &labels, 1);
+        let (l4, g4) = loss_and_grads(&model, &w, &ids, 6, 6, &labels, 4);
+        assert_eq!(l1, l4);
+        for (a, b) in g1.v.iter().zip(&g4.v) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn adam_training_reduces_loss_on_tiny_task() {
+        let model = tiny_model();
+        let mut rng = Pcg64::new(3);
+        let mut state = TrainState::init(&model, &mut rng);
+        // Learnable rule: class = (first word token == 5) ? 1 : 0.
+        let mut make = |cls: i32| -> (Vec<i32>, i32) {
+            let tok = if cls == 1 { 5 } else { 6 + (rng.gen_u32() % 4) as i32 };
+            (vec![1, tok, 2, 0, 0, 0], cls)
+        };
+        let mut ids = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..8 {
+            let (row, c) = make((i % 2) as i32);
+            ids.extend(row);
+            labels.push(c);
+        }
+        let ids_hv = HostValue::I32 { shape: vec![8, 6], data: ids };
+        let labels_hv = HostValue::I32 { shape: vec![8], data: labels };
+        let first = train_step(
+            &model, &mut state, &ids_hv, &labels_hv, TaskKind::Classification, 5e-3, 2,
+        )
+        .unwrap();
+        let mut last = first;
+        for _ in 0..60 {
+            last = train_step(
+                &model, &mut state, &ids_hv, &labels_hv, TaskKind::Classification, 5e-3, 2,
+            )
+            .unwrap();
+        }
+        assert!(last.is_finite());
+        assert!(last < 0.5 * first, "loss {first} -> {last} did not drop");
+        assert_eq!(state.step.scalar_value_f32().unwrap(), 61.0);
+    }
+}

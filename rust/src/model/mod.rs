@@ -1,5 +1,9 @@
-//! Model parameter store: initialization, checkpoints, and the flat
-//! ordering contract with the AOT artifacts (manifest `param_spec`).
+//! Model parameter store: initialization, checkpoints, the flat ordering
+//! contract with the AOT artifacts (manifest `param_spec`), the built-in
+//! model inventory, and the native (pure-Rust) forward/backward passes.
+
+pub mod forward;
+pub mod grad;
 
 use std::path::Path;
 
@@ -7,6 +11,83 @@ use anyhow::{bail, Result};
 
 use crate::rng::Pcg64;
 use crate::runtime::{read_mcag, write_mcag, HostValue, ModelInfo};
+
+// ---------------------------------------------------------------------------
+// Built-in model inventory (mirrors python/compile/model.py CONFIGS)
+// ---------------------------------------------------------------------------
+
+/// Ordered (name, shape) parameter layout for a transformer encoder —
+/// THE contract shared by checkpoints, the AOT artifacts and the native
+/// backend (mirrors `model.param_spec` on the Python side).
+pub fn param_spec_for(
+    vocab: usize,
+    d_model: usize,
+    d_ff: usize,
+    n_layers: usize,
+    max_len: usize,
+    n_classes: usize,
+) -> Vec<(String, Vec<usize>)> {
+    let d = d_model;
+    let mut spec: Vec<(String, Vec<usize>)> = vec![
+        ("embed".to_string(), vec![vocab, d]),
+        ("pos".to_string(), vec![max_len, d]),
+    ];
+    for i in 0..n_layers {
+        let l = format!("layer{i}");
+        spec.push((format!("{l}.ln1.scale"), vec![d]));
+        spec.push((format!("{l}.ln1.bias"), vec![d]));
+        spec.push((format!("{l}.wq"), vec![d, d]));
+        spec.push((format!("{l}.bq"), vec![d]));
+        spec.push((format!("{l}.wk"), vec![d, d]));
+        spec.push((format!("{l}.bk"), vec![d]));
+        spec.push((format!("{l}.wv"), vec![d, d]));
+        spec.push((format!("{l}.bv"), vec![d]));
+        spec.push((format!("{l}.wo"), vec![d, d]));
+        spec.push((format!("{l}.bo"), vec![d]));
+        spec.push((format!("{l}.ln2.scale"), vec![d]));
+        spec.push((format!("{l}.ln2.bias"), vec![d]));
+        spec.push((format!("{l}.w1"), vec![d, d_ff]));
+        spec.push((format!("{l}.b1"), vec![d_ff]));
+        spec.push((format!("{l}.w2"), vec![d_ff, d]));
+        spec.push((format!("{l}.b2"), vec![d]));
+    }
+    spec.push(("ln_f.scale".to_string(), vec![d]));
+    spec.push(("ln_f.bias".to_string(), vec![d]));
+    spec.push(("head.w".to_string(), vec![d, n_classes]));
+    spec.push(("head.b".to_string(), vec![n_classes]));
+    spec
+}
+
+fn make_builtin(name: &str, n_layers: usize, max_len: usize, window: Option<usize>) -> ModelInfo {
+    let (vocab, d_model, n_heads, d_ff, n_classes) = (256, 128, 4, 512, 3);
+    ModelInfo {
+        name: name.to_string(),
+        vocab,
+        d_model,
+        n_heads,
+        n_layers,
+        d_ff,
+        max_len,
+        n_classes,
+        window,
+        param_spec: param_spec_for(vocab, d_model, d_ff, n_layers, max_len, n_classes),
+    }
+}
+
+/// The scaled-down model family of DESIGN.md §2 — what the native backend
+/// serves without any artifacts.
+pub fn builtin_models() -> Vec<ModelInfo> {
+    vec![
+        make_builtin("bert_sim", 4, 64, None),
+        make_builtin("distil_sim", 2, 64, None),
+        make_builtin("longformer_sim", 4, 256, Some(32)),
+    ]
+}
+
+/// Look up a built-in model by name.
+pub fn builtin_model(name: &str) -> Option<ModelInfo> {
+    builtin_models().into_iter().find(|m| m.name == name)
+}
 
 /// Flat parameter list in manifest order (the feed order of every
 /// executable), plus optimizer state when training.

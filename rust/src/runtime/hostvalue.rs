@@ -85,8 +85,9 @@ impl HostValue {
         Ok(d[0])
     }
 
-    // -- xla Literal bridge (executor thread only) -----------------------
+    // -- xla Literal bridge (executor thread only; pjrt builds) ----------
 
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -97,6 +98,7 @@ impl HostValue {
         Ok(lit.reshape(&dims)?)
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<HostValue> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();

@@ -215,24 +215,6 @@ impl Manifest {
             .get(name)
             .with_context(|| format!("model {name:?} not in manifest"))
     }
-
-    /// Find a forward artifact by attributes (used by the coordinator's
-    /// batch-bucket router).
-    pub fn find_forward(
-        &self,
-        model: &str,
-        mode: &str,
-        batch: usize,
-        extra: impl Fn(&ArtifactInfo) -> bool,
-    ) -> Option<&ArtifactInfo> {
-        self.artifacts.values().find(|a| {
-            a.kind == "forward"
-                && a.model == model
-                && a.mode == mode
-                && a.batch == batch
-                && extra(a)
-        })
-    }
 }
 
 #[cfg(test)]
@@ -276,14 +258,6 @@ mod tests {
         assert_eq!(a.inputs[2].dtype, Dtype::I32);
         assert_eq!(a.outputs[0].shape, vec![2, 3]);
         assert_eq!(m.pad_id, 0);
-    }
-
-    #[test]
-    fn find_forward_filters() {
-        let m = Manifest::parse(SAMPLE).unwrap();
-        assert!(m.find_forward("tiny", "exact", 2, |_| true).is_some());
-        assert!(m.find_forward("tiny", "mca", 2, |_| true).is_none());
-        assert!(m.find_forward("tiny", "exact", 4, |_| true).is_none());
     }
 
     #[test]

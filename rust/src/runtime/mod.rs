@@ -1,118 +1,238 @@
-//! PJRT runtime: loads `artifacts/*.hlo.txt`, compiles them on the CPU
-//! client, and executes them with [`HostValue`] arguments.
+//! Execution backends: the seam between "what to run" (a forward or train
+//! step over a model) and "how to run it" (which substrate executes the
+//! math). See DESIGN.md §4.
 //!
-//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`. HLO *text* is the interchange format —
-//! see python/compile/aot.py for why.
+//! Two implementations:
+//!
+//! * [`native::NativeBackend`] — the default: a pure-Rust transformer
+//!   forward/backward built on [`crate::tensor::Tensor`] and the host MCA
+//!   estimator ([`crate::mca`]), parallelized across the batch. Needs no
+//!   artifacts; serve/eval/train work from a clean checkout.
+//! * `pjrt::Runtime` (cargo feature `pjrt`) — the original PJRT path:
+//!   loads `artifacts/*.hlo.txt` AOT-lowered from the JAX model, compiles
+//!   them on the XLA CPU client, and executes them. The artifact manifest
+//!   ([`manifest`]) is its contract with `python/compile/aot.py`.
+//!
+//! Consumers (coordinator, eval harness, trainer, CLI) speak
+//! [`Backend`] + [`ForwardSpec`] only; `mca serve|table1|train|loadtest`
+//! run identically on either substrate.
 
 pub mod hostvalue;
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 pub use hostvalue::{read_mcag, write_mcag, HostValue};
 pub use manifest::{ArtifactInfo, Dtype, Manifest, ModelInfo};
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::Runtime;
 
-/// Owns the PJRT client + compiled-executable cache. NOT `Send`: create it
-/// on the thread that will execute (see `coordinator::worker`).
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    pub manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+use crate::data::TaskKind;
+use crate::model::Params;
+use crate::rng::Pcg64;
+
+// ---------------------------------------------------------------------------
+// Backend-independent request/response types
+// ---------------------------------------------------------------------------
+
+/// Everything that identifies *which* forward computation to run — the
+/// backend-independent form of what used to be a PJRT artifact name.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ForwardSpec {
+    pub model: String,
+    /// "exact" | "mca"
+    pub mode: String,
+    /// batch bucket (rows in `ids`)
+    pub batch: usize,
+    /// sequence length (columns in `ids`)
+    pub seq: usize,
+    /// importance pooling for Eq. 9: "max" | "mean" | "median"
+    pub r_strategy: String,
+    /// sampling distribution for Eq. 6: "norm" | "uniform"
+    pub p_strategy: String,
+    /// "f32" | "bf16"
+    pub compute_dtype: String,
 }
 
-impl Runtime {
-    /// Load the manifest and create a CPU PJRT client. Executables compile
-    /// lazily on first use (`warmup` compiles eagerly).
-    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { client, dir: artifacts_dir.to_path_buf(), manifest, cache: HashMap::new() })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch from cache) an artifact by manifest name.
-    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
-        if self.cache.contains_key(name) {
-            return Ok(());
+impl ForwardSpec {
+    /// Paper-default spec (max pooling, norm sampling, f32).
+    pub fn new(model: &str, mode: &str, batch: usize, seq: usize) -> ForwardSpec {
+        ForwardSpec {
+            model: model.to_string(),
+            mode: mode.to_string(),
+            batch,
+            seq,
+            r_strategy: "max".to_string(),
+            p_strategy: "norm".to_string(),
+            compute_dtype: "f32".to_string(),
         }
-        let info = self.manifest.artifact(name)?.clone();
-        let path = self.dir.join(&info.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {name}"))?;
-        self.cache.insert(name.to_string(), exe);
+    }
+}
+
+/// Result of one batched forward pass.
+#[derive(Debug, Clone)]
+pub struct ForwardOutput {
+    /// (batch * n_classes) row-major logits
+    pub logits: Vec<f32>,
+    pub n_classes: usize,
+    /// per-sequence Σ_layers Σ_tokens r_i over real tokens (0 for exact)
+    pub r_sum: Vec<f32>,
+    /// per-sequence real-token count
+    pub n_eff: Vec<f32>,
+}
+
+/// Training state that round-trips through [`Backend::train_step`]:
+/// parameters plus Adam moments and the step counter.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub params: Params,
+    pub m: Params,
+    pub v: Params,
+    pub step: HostValue,
+}
+
+impl TrainState {
+    /// Fresh init for a model (deterministic in `rng`).
+    pub fn init(model: &ModelInfo, rng: &mut Pcg64) -> TrainState {
+        TrainState {
+            params: Params::init(model, rng),
+            m: Params::zeros_like(model),
+            v: Params::zeros_like(model),
+            step: HostValue::scalar_f32(0.0),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The Backend trait
+// ---------------------------------------------------------------------------
+
+/// An execution substrate for the MCA transformer: forward passes (exact or
+/// Monte-Carlo, with in-graph Σr_i for FLOPs accounting), train steps, and
+/// the model inventory. Implementations need not be `Send` — the serving
+/// coordinator constructs its backend on the worker thread from a
+/// [`BackendSpec`].
+pub trait Backend {
+    /// Human-readable substrate name (e.g. "native-cpu", "Host").
+    fn platform(&self) -> String;
+
+    /// Names of the models this backend can execute.
+    fn models(&self) -> Vec<String>;
+
+    /// Architecture + parameter layout for a model.
+    fn model(&self, name: &str) -> Result<ModelInfo>;
+
+    /// Batch buckets available for serving (model, seq) — ascending.
+    fn buckets(&self, model: &str, seq: usize) -> Result<Vec<usize>>;
+
+    /// Largest batch this backend can run for the given forward
+    /// description (`spec.batch` is ignored on input).
+    fn max_batch(&self, spec: &ForwardSpec) -> Result<usize>;
+
+    /// Prepare caches for a spec (compile on PJRT; no-op on native).
+    fn warmup(&mut self, spec: &ForwardSpec) -> Result<()> {
+        let _ = spec;
         Ok(())
     }
 
-    /// Eagerly compile a set of artifacts (e.g. at server start).
-    pub fn warmup(&mut self, names: &[&str]) -> Result<()> {
-        for n in names {
-            self.ensure_compiled(n)?;
-        }
-        Ok(())
+    /// Whether batch sizes are fixed compiled shapes (PJRT) or the
+    /// backend can run any batch size (native). When false, the serving
+    /// coordinator skips padding partial buckets.
+    fn fixed_batch_shapes(&self) -> bool {
+        true
     }
 
-    pub fn is_compiled(&self, name: &str) -> bool {
-        self.cache.contains_key(name)
+    /// Run one batched forward. `ids` is i32 (batch, seq), PAD=0-padded;
+    /// `alpha` is the MCA precision knob; `seed` drives the sample pools.
+    fn forward(
+        &mut self,
+        spec: &ForwardSpec,
+        params: &Params,
+        ids: &HostValue,
+        alpha: f32,
+        seed: u32,
+    ) -> Result<ForwardOutput>;
+
+    /// (batch, seq) shape this backend trains the model at.
+    fn train_shape(&self, model: &str, kind: TaskKind) -> Result<(usize, usize)>;
+
+    /// One optimizer step (fwd + bwd + Adam) on the exact-attention path;
+    /// updates `state` in place and returns the loss.
+    fn train_step(
+        &mut self,
+        model: &str,
+        kind: TaskKind,
+        state: &mut TrainState,
+        ids: &HostValue,
+        labels: &HostValue,
+        lr: f32,
+    ) -> Result<f32>;
+}
+
+// ---------------------------------------------------------------------------
+// Backend selection
+// ---------------------------------------------------------------------------
+
+/// Serializable description of which backend to open. `Send + Clone` so
+/// the coordinator can ship it to the worker thread that actually owns the
+/// (possibly non-`Send`) backend.
+#[derive(Debug, Clone)]
+pub enum BackendSpec {
+    /// Pure-Rust host execution (always available).
+    Native,
+    /// PJRT over AOT artifacts (requires the `pjrt` cargo feature).
+    Pjrt { artifacts_dir: PathBuf },
+}
+
+/// Open a backend from its spec.
+pub fn open_backend(spec: &BackendSpec) -> Result<Box<dyn Backend>> {
+    match spec {
+        BackendSpec::Native => Ok(Box::new(NativeBackend::new())),
+        BackendSpec::Pjrt { artifacts_dir } => open_pjrt(artifacts_dir),
     }
+}
 
-    /// Execute an artifact. Inputs are validated against the manifest
-    /// (count, dtype, shape) — shape bugs surface here with context, not as
-    /// an opaque XLA error.
-    pub fn run(&mut self, name: &str, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
-        self.ensure_compiled(name)?;
-        let info = self.manifest.artifact(name)?;
-        if inputs.len() != info.inputs.len() {
-            bail!(
-                "{name}: expected {} inputs, got {}",
-                info.inputs.len(),
-                inputs.len()
-            );
-        }
-        for (i, (hv, spec)) in inputs.iter().zip(&info.inputs).enumerate() {
-            if hv.dtype() != spec.dtype {
-                bail!("{name}: input #{i} ({}) dtype {:?} != {:?}", spec.name, hv.dtype(), spec.dtype);
-            }
-            if hv.shape() != spec.shape.as_slice() {
-                bail!(
-                    "{name}: input #{i} ({}) shape {:?} != {:?}",
-                    spec.name,
-                    hv.shape(),
-                    spec.shape
-                );
-            }
-        }
-        let n_outputs = info.outputs.len();
+#[cfg(feature = "pjrt")]
+fn open_pjrt(dir: &Path) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(pjrt::Runtime::load(dir)?))
+}
 
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(|hv| hv.to_literal()).collect::<Result<_>>()?;
-        let exe = self.cache.get(name).expect("ensured above");
-        let result = exe.execute::<xla::Literal>(&literals)?;
-        // aot.py lowers with return_tuple=True: one tuple output.
-        let mut tuple = result
-            .into_iter()
-            .next()
-            .and_then(|d| d.into_iter().next())
-            .context("empty execution result")?
-            .to_literal_sync()?;
-        let parts = tuple.decompose_tuple()?;
-        if parts.len() != n_outputs {
-            bail!("{name}: expected {} outputs, got {}", n_outputs, parts.len());
+#[cfg(not(feature = "pjrt"))]
+fn open_pjrt(_dir: &Path) -> Result<Box<dyn Backend>> {
+    bail!("this build has no PJRT support (rebuild with `--features pjrt`)")
+}
+
+/// Resolve the `--backend` CLI value: "native", "pjrt", or "auto" (PJRT
+/// when the build has it *and* artifacts exist, else native).
+pub fn backend_spec_from_cli(name: &str, artifacts_dir: PathBuf) -> Result<BackendSpec> {
+    match name {
+        "native" => Ok(BackendSpec::Native),
+        "pjrt" => {
+            if !cfg!(feature = "pjrt") {
+                bail!("this build has no PJRT support (rebuild with `--features pjrt`)");
+            }
+            Ok(BackendSpec::Pjrt { artifacts_dir })
         }
-        parts.iter().map(HostValue::from_literal).collect()
+        "auto" => {
+            if cfg!(feature = "pjrt") && artifacts_dir.join("manifest.json").exists() {
+                // Probe that the PJRT backend actually opens (a pjrt build
+                // may link the compile-only xla stub, or the client may
+                // fail to initialize) — auto degrades to native, it never
+                // hard-fails.
+                match open_pjrt(&artifacts_dir) {
+                    Ok(_) => return Ok(BackendSpec::Pjrt { artifacts_dir }),
+                    Err(e) => eprintln!("[backend] auto: PJRT unavailable ({e:#}); using native"),
+                }
+            }
+            Ok(BackendSpec::Native)
+        }
+        other => bail!("unknown backend {other:?} (expected native, pjrt or auto)"),
     }
 }
 
@@ -122,4 +242,37 @@ pub fn default_artifacts_dir() -> PathBuf {
         return PathBuf::from(dir);
     }
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cli_spec_resolution() {
+        let dir = PathBuf::from("/nonexistent/artifacts");
+        assert!(matches!(
+            backend_spec_from_cli("native", dir.clone()).unwrap(),
+            BackendSpec::Native
+        ));
+        // auto falls back to native when no artifacts are present
+        assert!(matches!(
+            backend_spec_from_cli("auto", dir.clone()).unwrap(),
+            BackendSpec::Native
+        ));
+        assert!(backend_spec_from_cli("gpu", dir).is_err());
+    }
+
+    #[test]
+    fn open_native_backend_lists_models() {
+        let be = open_backend(&BackendSpec::Native).unwrap();
+        let models = be.models();
+        assert!(models.contains(&"bert_sim".to_string()));
+        assert!(models.contains(&"distil_sim".to_string()));
+        assert!(models.contains(&"longformer_sim".to_string()));
+        let m = be.model("bert_sim").unwrap();
+        assert_eq!(m.d_model, 128);
+        assert_eq!(m.n_layers, 4);
+        assert!(be.model("nope").is_err());
+    }
 }

@@ -1,0 +1,195 @@
+//! Native execution backend: the pure-Rust implementation of [`Backend`]
+//! that runs the transformer on the host CPU — no artifacts, no XLA. This
+//! is what makes `mca serve|table1|train|loadtest` (and the integration
+//! tests) work from a clean checkout.
+//!
+//! Forward math lives in [`crate::model::forward`], the train step in
+//! [`crate::model::grad`]; both parallelize across the batch with the
+//! scoped thread pool. Unlike the PJRT backend, any (batch, seq ≤ max_len,
+//! strategy, dtype) combination is accepted — there is no artifact
+//! inventory to consult.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Backend, ForwardOutput, ForwardSpec, HostValue, ModelInfo, TrainState};
+use crate::data::TaskKind;
+use crate::model::forward::{forward_batch, ForwardCfg};
+use crate::model::{builtin_models, grad, Params};
+use crate::util::threadpool;
+
+/// Largest batch the native backend advertises for eval sweeps.
+const EVAL_BATCH: usize = 32;
+
+pub struct NativeBackend {
+    models: BTreeMap<String, ModelInfo>,
+    workers: usize,
+}
+
+impl NativeBackend {
+    /// Backend over the built-in model family, one worker per spare core.
+    pub fn new() -> NativeBackend {
+        Self::with_workers(threadpool::default_workers())
+    }
+
+    pub fn with_workers(workers: usize) -> NativeBackend {
+        let models = builtin_models().into_iter().map(|m| (m.name.clone(), m)).collect();
+        NativeBackend { models, workers: workers.max(1) }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn platform(&self) -> String {
+        format!("native-cpu ({} workers)", self.workers)
+    }
+
+    fn models(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    fn model(&self, name: &str) -> Result<ModelInfo> {
+        self.models
+            .get(name)
+            .cloned()
+            .with_context(|| format!("model {name:?} not in the built-in inventory"))
+    }
+
+    fn buckets(&self, model: &str, seq: usize) -> Result<Vec<usize>> {
+        let info = self.model(model)?;
+        if seq > info.max_len {
+            bail!("seq {seq} exceeds model {model} max_len {}", info.max_len);
+        }
+        Ok(vec![1, 8, EVAL_BATCH])
+    }
+
+    // Batches are not compiled shapes here: the coordinator may run a
+    // partially-filled bucket at its actual group size.
+    fn fixed_batch_shapes(&self) -> bool {
+        false
+    }
+
+    fn max_batch(&self, spec: &ForwardSpec) -> Result<usize> {
+        // Validate the spec is runnable; any batch size is.
+        let info = self.model(&spec.model)?;
+        if spec.seq > info.max_len {
+            bail!("seq {} exceeds model {} max_len {}", spec.seq, spec.model, info.max_len);
+        }
+        ForwardCfg::parse(&spec.mode, &spec.r_strategy, &spec.p_strategy, &spec.compute_dtype)?;
+        Ok(EVAL_BATCH)
+    }
+
+    fn forward(
+        &mut self,
+        spec: &ForwardSpec,
+        params: &Params,
+        ids: &HostValue,
+        alpha: f32,
+        seed: u32,
+    ) -> Result<ForwardOutput> {
+        let info = self.model(&spec.model)?;
+        let cfg = ForwardCfg::parse(&spec.mode, &spec.r_strategy, &spec.p_strategy, &spec.compute_dtype)?;
+        if ids.shape() != &[spec.batch, spec.seq][..] {
+            bail!(
+                "ids shape {:?} != spec batch/seq ({}, {})",
+                ids.shape(),
+                spec.batch,
+                spec.seq
+            );
+        }
+        forward_batch(
+            &info,
+            params,
+            ids.as_i32()?,
+            spec.batch,
+            spec.seq,
+            alpha,
+            seed,
+            &cfg,
+            self.workers,
+        )
+    }
+
+    fn train_shape(&self, model: &str, _kind: TaskKind) -> Result<(usize, usize)> {
+        let info = self.model(model)?;
+        // Long-sequence models train at a smaller batch (attention is n²).
+        if info.max_len > 64 {
+            Ok((8, info.max_len))
+        } else {
+            Ok((32, info.max_len))
+        }
+    }
+
+    fn train_step(
+        &mut self,
+        model: &str,
+        kind: TaskKind,
+        state: &mut TrainState,
+        ids: &HostValue,
+        labels: &HostValue,
+        lr: f32,
+    ) -> Result<f32> {
+        let info = self.model(model)?;
+        grad::train_step(&info, state, ids, labels, kind, lr, self.workers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn native_forward_via_backend_trait() {
+        let mut be = NativeBackend::with_workers(2);
+        let info = be.model("distil_sim").unwrap();
+        let mut rng = Pcg64::new(5);
+        let params = Params::init(&info, &mut rng);
+        let seq = 12;
+        let mut ids = vec![0i32; 2 * seq];
+        for (j, t) in [1i32, 30, 40, 50, 2].iter().enumerate() {
+            ids[j] = *t;
+            ids[seq + j] = *t + 1;
+        }
+        let spec = ForwardSpec::new("distil_sim", "mca", 2, seq);
+        assert!(be.max_batch(&spec).unwrap() >= 2);
+        let hv = HostValue::I32 { shape: vec![2, seq], data: ids };
+        let out = be.forward(&spec, &params, &hv, 0.4, 1).unwrap();
+        assert_eq!(out.logits.len(), 2 * out.n_classes);
+        assert_eq!(out.n_eff, vec![5.0, 5.0]);
+        assert!(out.r_sum.iter().all(|&r| r >= 5.0 * 2.0)); // >= n_eff * layers
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let mut be = NativeBackend::with_workers(1);
+        let spec = ForwardSpec::new("no_such_model", "mca", 1, 8);
+        assert!(be.max_batch(&spec).is_err());
+        let mut spec = ForwardSpec::new("bert_sim", "mca", 1, 8);
+        spec.r_strategy = "bogus".into();
+        assert!(be.max_batch(&spec).is_err());
+        let mut spec = ForwardSpec::new("bert_sim", "mca", 1, 8);
+        spec.seq = 1000;
+        assert!(be.max_batch(&spec).is_err());
+        // shape mismatch caught before compute
+        let info = be.model("bert_sim").unwrap();
+        let mut rng = Pcg64::new(1);
+        let params = Params::init(&info, &mut rng);
+        let spec = ForwardSpec::new("bert_sim", "exact", 2, 8);
+        let hv = HostValue::I32 { shape: vec![1, 8], data: vec![1; 8] };
+        assert!(be.forward(&spec, &params, &hv, 1.0, 0).is_err());
+    }
+
+    #[test]
+    fn train_shapes() {
+        let be = NativeBackend::with_workers(1);
+        assert_eq!(be.train_shape("bert_sim", TaskKind::Classification).unwrap(), (32, 64));
+        assert_eq!(be.train_shape("longformer_sim", TaskKind::Classification).unwrap(), (8, 256));
+    }
+}

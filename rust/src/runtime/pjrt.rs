@@ -1,0 +1,275 @@
+//! PJRT backend: loads `artifacts/*.hlo.txt`, compiles them on the CPU
+//! client, and executes them with [`HostValue`] arguments. Compiled only
+//! under the `pjrt` cargo feature.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format —
+//! see python/compile/aot.py for why.
+//!
+//! [`Runtime`] implements [`Backend`] by resolving each [`ForwardSpec`] /
+//! train request to a manifest artifact; the artifact inventory therefore
+//! bounds which (model, mode, batch, seq, strategy, dtype) combinations
+//! this backend can execute — unlike the native backend, which runs any.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactInfo, Manifest, ModelInfo};
+use super::{Backend, ForwardOutput, ForwardSpec, HostValue, TrainState};
+use crate::data::TaskKind;
+use crate::model::Params;
+
+/// Owns the PJRT client + compiled-executable cache. NOT `Send`: create it
+/// on the thread that will execute (see `coordinator::worker`).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load the manifest and create a CPU PJRT client. Executables compile
+    /// lazily on first use (`warmup` compiles eagerly).
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir: artifacts_dir.to_path_buf(), manifest, cache: HashMap::new() })
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let info = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Eagerly compile a set of artifacts (e.g. at server start).
+    pub fn warmup_artifacts(&mut self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    pub fn is_compiled(&self, name: &str) -> bool {
+        self.cache.contains_key(name)
+    }
+
+    /// Execute an artifact. Inputs are validated against the manifest
+    /// (count, dtype, shape) — shape bugs surface here with context, not as
+    /// an opaque XLA error.
+    pub fn run(&mut self, name: &str, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        self.ensure_compiled(name)?;
+        let info = self.manifest.artifact(name)?;
+        if inputs.len() != info.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                info.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (hv, spec)) in inputs.iter().zip(&info.inputs).enumerate() {
+            if hv.dtype() != spec.dtype {
+                bail!("{name}: input #{i} ({}) dtype {:?} != {:?}", spec.name, hv.dtype(), spec.dtype);
+            }
+            if hv.shape() != spec.shape.as_slice() {
+                bail!(
+                    "{name}: input #{i} ({}) shape {:?} != {:?}",
+                    spec.name,
+                    hv.shape(),
+                    spec.shape
+                );
+            }
+        }
+        let n_outputs = info.outputs.len();
+
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|hv| hv.to_literal()).collect::<Result<_>>()?;
+        let exe = self.cache.get(name).expect("ensured above");
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        // aot.py lowers with return_tuple=True: one tuple output.
+        let mut tuple = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .context("empty execution result")?
+            .to_literal_sync()?;
+        let parts = tuple.decompose_tuple()?;
+        if parts.len() != n_outputs {
+            bail!("{name}: expected {} outputs, got {}", n_outputs, parts.len());
+        }
+        parts.iter().map(HostValue::from_literal).collect()
+    }
+
+    /// Resolve a [`ForwardSpec`] to a manifest artifact. With
+    /// `ignore_batch`, picks the largest-batch match (eval's policy).
+    /// Prefers the `jnp` kernel lowering but falls back to `pallas` when
+    /// that is the only lowering built for the shape (the kernel is an
+    /// implementation detail below the backend seam).
+    fn forward_artifact_for(&self, spec: &ForwardSpec, ignore_batch: bool) -> Result<ArtifactInfo> {
+        self.manifest
+            .artifacts
+            .values()
+            .filter(|a| {
+                a.kind == "forward"
+                    && a.model == spec.model
+                    && a.mode == spec.mode
+                    && a.seq == spec.seq
+                    && a.compute_dtype == spec.compute_dtype
+                    && (ignore_batch || a.batch == spec.batch)
+                    && (spec.mode == "exact"
+                        || (a.r_strategy == spec.r_strategy && a.p_strategy == spec.p_strategy))
+            })
+            .max_by_key(|a| (a.kernel == "jnp", a.batch))
+            .cloned()
+            .with_context(|| {
+                format!(
+                    "no artifact for {}/{} b{} n{} ({}/{}/{}) — run `make artifacts`",
+                    spec.model,
+                    spec.mode,
+                    spec.batch,
+                    spec.seq,
+                    spec.compute_dtype,
+                    spec.r_strategy,
+                    spec.p_strategy
+                )
+            })
+    }
+
+    fn train_artifact_for(&self, model: &str, kind: TaskKind) -> Result<ArtifactInfo> {
+        let suffix = match kind {
+            TaskKind::Classification => "cls",
+            TaskKind::Regression => "reg",
+        };
+        self.manifest
+            .artifacts
+            .values()
+            .find(|a| a.model == model && a.kind == format!("train_{suffix}"))
+            .cloned()
+            .with_context(|| format!("no train_{suffix} artifact for model {model}"))
+    }
+}
+
+impl Backend for Runtime {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn models(&self) -> Vec<String> {
+        self.manifest.models.keys().cloned().collect()
+    }
+
+    fn model(&self, name: &str) -> Result<ModelInfo> {
+        self.manifest.model(name).cloned()
+    }
+
+    fn buckets(&self, model: &str, seq: usize) -> Result<Vec<usize>> {
+        // Serving buckets: every jnp/f32 paper-default MCA forward batch.
+        let mut buckets: Vec<usize> = self
+            .manifest
+            .artifacts
+            .values()
+            .filter(|a| {
+                a.kind == "forward"
+                    && a.model == model
+                    && a.mode == "mca"
+                    && a.kernel == "jnp"
+                    && a.compute_dtype == "f32"
+                    && a.r_strategy == "max"
+                    && a.p_strategy == "norm"
+                    && a.seq == seq
+            })
+            .map(|a| a.batch)
+            .collect();
+        buckets.sort_unstable();
+        buckets.dedup();
+        if buckets.is_empty() {
+            bail!("no serving artifacts for model {model} at seq {seq}");
+        }
+        Ok(buckets)
+    }
+
+    fn max_batch(&self, spec: &ForwardSpec) -> Result<usize> {
+        Ok(self.forward_artifact_for(spec, true)?.batch)
+    }
+
+    fn warmup(&mut self, spec: &ForwardSpec) -> Result<()> {
+        let name = self.forward_artifact_for(spec, false)?.name;
+        self.ensure_compiled(&name)
+    }
+
+    fn forward(
+        &mut self,
+        spec: &ForwardSpec,
+        params: &Params,
+        ids: &HostValue,
+        alpha: f32,
+        seed: u32,
+    ) -> Result<ForwardOutput> {
+        let info = self.forward_artifact_for(spec, false)?;
+        let mut inputs = Vec::with_capacity(params.values.len() + 3);
+        inputs.extend(params.values.iter().cloned());
+        inputs.push(ids.clone());
+        inputs.push(HostValue::scalar_f32(alpha));
+        inputs.push(HostValue::scalar_u32(seed));
+        let outputs = self.run(&info.name, &inputs)?;
+        Ok(ForwardOutput {
+            logits: outputs[0].as_f32()?.to_vec(),
+            n_classes: info.outputs[0].shape[1],
+            r_sum: outputs[1].as_f32()?.to_vec(),
+            n_eff: outputs[2].as_f32()?.to_vec(),
+        })
+    }
+
+    fn train_shape(&self, model: &str, kind: TaskKind) -> Result<(usize, usize)> {
+        let info = self.train_artifact_for(model, kind)?;
+        Ok((info.batch, info.seq))
+    }
+
+    fn train_step(
+        &mut self,
+        model: &str,
+        kind: TaskKind,
+        state: &mut TrainState,
+        ids: &HostValue,
+        labels: &HostValue,
+        lr: f32,
+    ) -> Result<f32> {
+        let info = self.train_artifact_for(model, kind)?;
+        let n_par = state.params.values.len();
+        let mut inputs = Vec::with_capacity(3 * n_par + 4);
+        inputs.extend(state.params.values.iter().cloned());
+        inputs.extend(state.m.values.iter().cloned());
+        inputs.extend(state.v.values.iter().cloned());
+        inputs.push(state.step.clone());
+        inputs.push(ids.clone());
+        inputs.push(labels.clone());
+        inputs.push(HostValue::scalar_f32(lr));
+
+        let mut out = self.run(&info.name, &inputs)?;
+        let loss = out.pop().context("missing loss")?.scalar_value_f32()?;
+        let step = out.pop().context("missing step")?;
+        let v_new: Vec<HostValue> = out.split_off(2 * n_par);
+        let m_new: Vec<HostValue> = out.split_off(n_par);
+        state.params = Params { values: out };
+        state.m = Params { values: m_new };
+        state.v = Params { values: v_new };
+        state.step = step;
+        Ok(loss)
+    }
+}

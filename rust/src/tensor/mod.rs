@@ -83,17 +83,98 @@ impl Tensor {
         let mut out = vec![0.0f32; m * n];
         for i in 0..m {
             let a_row = &self.data[i * k1..(i + 1) * k1];
+            accumulate_row_product(a_row, rhs, &mut out[i * n..(i + 1) * n]);
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    /// `A @ B^T` for rank-2 tensors: (m,k) @ (n,k) -> (m,n). Both operands
+    /// are walked row-major (dot products of rows), so this is the
+    /// cache-friendly form for attention scores `Q K^T`.
+    pub fn matmul_nt(&self, rhs: &Tensor) -> Result<Tensor> {
+        let (&[m, k1], &[n, k2]) = (&self.shape[..], &rhs.shape[..]) else {
+            bail!("matmul_nt needs rank-2 operands, got {:?} @ {:?}", self.shape, rhs.shape);
+        };
+        if k1 != k2 {
+            bail!("matmul_nt contraction mismatch: {:?} @ {:?}^T", self.shape, rhs.shape);
+        }
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let a_row = &self.data[i * k1..(i + 1) * k1];
             let o_row = &mut out[i * n..(i + 1) * n];
-            for (ak, b_row) in a_row.iter().zip(rhs.data.chunks_exact(n)) {
-                if *ak == 0.0 {
-                    continue;
-                }
-                for (o, b) in o_row.iter_mut().zip(b_row) {
-                    *o += ak * b;
-                }
+            for (o, b_row) in o_row.iter_mut().zip(rhs.data.chunks_exact(k1)) {
+                *o = a_row.iter().zip(b_row).map(|(a, b)| a * b).sum();
             }
         }
         Tensor::new(&[m, n], out)
+    }
+
+    /// `A^T @ B` for rank-2 tensors: (r,m)^T @ (r,n) -> (m,n). This is the
+    /// weight-gradient form `X^T dY`; the contraction dimension is walked
+    /// in the outer loop so both operands stream row-major.
+    pub fn matmul_tn(&self, rhs: &Tensor) -> Result<Tensor> {
+        let (&[r1, m], &[r2, n]) = (&self.shape[..], &rhs.shape[..]) else {
+            bail!("matmul_tn needs rank-2 operands, got {:?}^T @ {:?}", self.shape, rhs.shape);
+        };
+        if r1 != r2 {
+            bail!("matmul_tn contraction mismatch: {:?}^T @ {:?}", self.shape, rhs.shape);
+        }
+        let mut out = vec![0.0f32; m * n];
+        accumulate_tn(self, rhs, &mut out);
+        Tensor::new(&[m, n], out)
+    }
+
+    /// Add a (n,)-vector to every row of a rank-2 (m,n) tensor in place.
+    pub fn add_row_inplace(&mut self, row: &[f32]) {
+        let n = *self.shape.last().expect("rank >= 1");
+        assert_eq!(row.len(), n, "bias length mismatch");
+        for chunk in self.data.chunks_exact_mut(n) {
+            for (x, b) in chunk.iter_mut().zip(row) {
+                *x += b;
+            }
+        }
+    }
+
+    /// Element-wise sum in place (shapes must match).
+    pub fn add_inplace(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "add_inplace shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Copy of this tensor with every element rounded to bf16 precision
+    /// (round-to-nearest-even on the top 16 mantissa/exponent bits) — the
+    /// native backend's model of `compute_dtype = "bf16"` artifacts.
+    pub fn to_bf16(&self) -> Tensor {
+        let data = self.data.iter().map(|&x| bf16_round(x)).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    /// Column block copy: columns [start, start+width) of a rank-2 tensor.
+    pub fn col_block(&self, start: usize, width: usize) -> Tensor {
+        let &[m, n] = &self.shape[..] else { panic!("col_block needs rank 2") };
+        assert!(start + width <= n, "col_block out of range");
+        let mut data = Vec::with_capacity(m * width);
+        for i in 0..m {
+            data.extend_from_slice(&self.data[i * n + start..i * n + start + width]);
+        }
+        Tensor { shape: vec![m, width], data }
+    }
+
+    /// Add `block` (m,width) into columns [start, start+width) of self.
+    pub fn add_col_block(&mut self, start: usize, block: &Tensor) {
+        let &[m, n] = &self.shape[..] else { panic!("add_col_block needs rank 2") };
+        let &[bm, width] = &block.shape[..] else { panic!("block needs rank 2") };
+        assert_eq!(m, bm, "row count mismatch");
+        assert!(start + width <= n, "add_col_block out of range");
+        for i in 0..m {
+            let dst = &mut self.data[i * n + start..i * n + start + width];
+            let src = &block.data[i * width..(i + 1) * width];
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        }
     }
 
     /// Row-wise softmax for rank-2 tensors.
@@ -133,6 +214,12 @@ impl Tensor {
         &self.data[i * n..(i + 1) * n]
     }
 
+    /// Mutable view of row i (rank-2 only).
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let n = self.shape[1];
+        &mut self.data[i * n..(i + 1) * n]
+    }
+
     /// Max |a - b| over all elements.
     pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
         assert_eq!(self.shape, other.shape);
@@ -142,6 +229,59 @@ impl Tensor {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
     }
+}
+
+/// `acc += A^T @ B` into a flat row-major (m,n) slice; A is (r,m), B is
+/// (r,n). The transposed-matmul kernel shared by [`Tensor::matmul_tn`] and
+/// the gradient accumulators in `model::grad` — the contraction dimension
+/// is walked in the outer loop so both operands stream row-major.
+pub fn accumulate_tn(a: &Tensor, b: &Tensor, acc: &mut [f32]) {
+    let (r, m) = (a.shape()[0], a.shape()[1]);
+    let n = b.shape()[1];
+    debug_assert_eq!(b.shape()[0], r);
+    debug_assert_eq!(acc.len(), m * n);
+    for t in 0..r {
+        let a_row = &a.data[t * m..(t + 1) * m];
+        let b_row = &b.data[t * n..(t + 1) * n];
+        for (i, &av) in a_row.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let o_row = &mut acc[i * n..(i + 1) * n];
+            for (o, bv) in o_row.iter_mut().zip(b_row) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out_row += x_row @ W` for one row, skipping zero elements of `x_row`,
+/// accumulating over W's rows in ascending index order. This exact loop is
+/// THE accumulation-order contract shared by [`Tensor::matmul`], the MCA
+/// estimator's saturated-token fallback and the native forward's bf16
+/// recompute: all three must stay bit-identical so the α → 0 limit of the
+/// estimator equals the exact baseline exactly.
+pub fn accumulate_row_product(x_row: &[f32], w: &Tensor, out_row: &mut [f32]) {
+    debug_assert_eq!(x_row.len(), w.shape()[0]);
+    debug_assert_eq!(out_row.len(), w.shape()[1]);
+    for (xv, w_row) in x_row.iter().zip(w.data.chunks_exact(w.shape()[1])) {
+        if *xv == 0.0 {
+            continue;
+        }
+        for (o, b) in out_row.iter_mut().zip(w_row) {
+            *o += xv * b;
+        }
+    }
+}
+
+/// Round an f32 to bf16 precision (round-to-nearest-even), returned as f32.
+pub fn bf16_round(x: f32) -> f32 {
+    if !x.is_finite() {
+        return x;
+    }
+    let bits = x.to_bits();
+    let round = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1));
+    f32::from_bits(round & 0xFFFF_0000)
 }
 
 #[cfg(test)]
@@ -204,6 +344,88 @@ mod tests {
         let a = Tensor::new(&[1, 3], vec![1., 2., 3.]).unwrap();
         let b = Tensor::new(&[1, 3], vec![101., 102., 103.]).unwrap();
         assert!(a.softmax_rows().unwrap().max_abs_diff(&b.softmax_rows().unwrap()) < 1e-6);
+    }
+
+    /// Explicit transpose of a rank-2 tensor (test helper).
+    fn transpose(t: &Tensor) -> Tensor {
+        let (m, n) = (t.shape()[0], t.shape()[1]);
+        let mut data = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                data[j * m + i] = t.at(&[i, j]);
+            }
+        }
+        Tensor::new(&[n, m], data).unwrap()
+    }
+
+    #[test]
+    fn matmul_nt_matches_plain() {
+        prop::check(50, |g| {
+            let (m, k, n) = (g.usize(1..6), g.usize(1..6), g.usize(1..6));
+            let a = Tensor::from_fn(&[m, k], |_| g.f32(-2.0..2.0));
+            let b = Tensor::from_fn(&[k, n], |_| g.f32(-2.0..2.0));
+            let want = a.matmul(&b).unwrap();
+            // A @ B == matmul_nt(A, B^T)
+            let got = a.matmul_nt(&transpose(&b)).unwrap();
+            if got.max_abs_diff(&want) > 1e-5 {
+                return Err("matmul_nt mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matmul_tn_matches_plain() {
+        prop::check(50, |g| {
+            let (r, m, n) = (g.usize(1..6), g.usize(1..6), g.usize(1..6));
+            let a = Tensor::from_fn(&[r, m], |_| g.f32(-2.0..2.0));
+            let b = Tensor::from_fn(&[r, n], |_| g.f32(-2.0..2.0));
+            // A^T @ B == matmul_tn(A, B)
+            let want = transpose(&a).matmul(&b).unwrap();
+            let got = a.matmul_tn(&b).unwrap();
+            if got.shape() != [m, n] {
+                return Err("matmul_tn shape".into());
+            }
+            if got.max_abs_diff(&want) > 1e-5 {
+                return Err("matmul_tn mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn row_and_col_helpers() {
+        let mut t = Tensor::new(&[2, 4], vec![1., 2., 3., 4., 5., 6., 7., 8.]).unwrap();
+        let blk = t.col_block(1, 2);
+        assert_eq!(blk.shape(), &[2, 2]);
+        assert_eq!(blk.data(), &[2., 3., 6., 7.]);
+        t.add_col_block(1, &blk);
+        assert_eq!(t.data(), &[1., 4., 6., 4., 5., 12., 14., 8.]);
+        t.add_row_inplace(&[1., 1., 1., 1.]);
+        assert_eq!(t.row(0), &[2., 5., 7., 5.]);
+        t.row_mut(1)[0] = 0.0;
+        assert_eq!(t.at(&[1, 0]), 0.0);
+        let u = t.clone();
+        t.add_inplace(&u);
+        assert_eq!(t.at(&[0, 0]), 4.0);
+    }
+
+    #[test]
+    fn bf16_rounding() {
+        // 1.0 is exactly representable; small deltas round away.
+        assert_eq!(bf16_round(1.0), 1.0);
+        let x = 1.0 + 1e-4;
+        let r = bf16_round(x);
+        assert!(r == 1.0 || (r - 1.0).abs() < 0.01);
+        // relative error bounded by 2^-8 for normal numbers
+        prop::check(200, |g| {
+            let x = g.f32(-100.0..100.0);
+            let r = bf16_round(x);
+            if x != 0.0 && ((r - x) / x).abs() > 1.0 / 128.0 {
+                return Err(format!("bf16 error too large: {x} -> {r}"));
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,15 +1,17 @@
-//! Training driver: runs the AOT `train_step` executable (fwd + bwd +
-//! in-graph Adam) from Rust. The paper applies MCA at *inference* time to
-//! fine-tuned models; this module produces those fine-tuned models for the
-//! synthetic task suite — parameters and optimizer state live host-side as
-//! [`HostValue`]s and round-trip through the executable each step.
+//! Training driver: runs [`Backend::train_step`] (fwd + bwd + Adam) in a
+//! loop. The paper applies MCA at *inference* time to fine-tuned models;
+//! this module produces those fine-tuned models for the synthetic task
+//! suite. Parameters and optimizer state live host-side in a
+//! [`TrainState`] and round-trip through the backend each step — on PJRT
+//! that is the AOT `train_step` executable, on the native backend the
+//! manual backward pass in `model::grad`.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::data::{Dataset, Example, Label, TaskKind, TaskSpec};
 use crate::model::Params;
 use crate::rng::Pcg64;
-use crate::runtime::{HostValue, Runtime};
+use crate::runtime::{Backend, HostValue, TrainState};
 
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -74,43 +76,24 @@ pub fn lr_at(cfg: &TrainConfig, step: usize) -> f64 {
     floor + (cfg.lr - floor) * 0.5 * (1.0 + (std::f64::consts::PI * t).cos())
 }
 
-/// Pick the train artifact for (model, task kind).
-pub fn train_artifact_name(rt: &Runtime, model: &str, kind: TaskKind) -> Result<String> {
-    let suffix = match kind {
-        TaskKind::Classification => "cls",
-        TaskKind::Regression => "reg",
-    };
-    let found = rt
-        .manifest
-        .artifacts
-        .values()
-        .find(|a| a.model == model && a.kind == format!("train_{suffix}"))
-        .map(|a| a.name.clone());
-    found.with_context(|| format!("no train_{suffix} artifact for model {model}"))
-}
-
-/// Train a model on a task dataset. Deterministic in `cfg.seed`.
+/// Train a model on a task dataset. Deterministic in `cfg.seed` (for a
+/// fixed backend and worker count).
 pub fn train_task(
-    rt: &mut Runtime,
+    backend: &mut dyn Backend,
     model_name: &str,
     spec: &TaskSpec,
     ds: &Dataset,
     cfg: &TrainConfig,
     verbose: bool,
 ) -> Result<TrainOutcome> {
-    let artifact = train_artifact_name(rt, model_name, spec.kind)?;
-    let info = rt.manifest.artifact(&artifact)?.clone();
-    let model = rt.manifest.model(model_name)?.clone();
-    let (batch, seq) = (info.batch, info.seq);
+    let model = backend.model(model_name)?;
+    let (batch, seq) = backend.train_shape(model_name, spec.kind)?;
     if seq > model.max_len {
-        bail!("artifact seq {seq} > model max_len {}", model.max_len);
+        bail!("train seq {seq} > model max_len {}", model.max_len);
     }
 
     let mut rng = Pcg64::new(cfg.seed ^ 0x7261696e);
-    let mut params = Params::init(&model, &mut rng);
-    let mut m = Params::zeros_like(&model);
-    let mut v = Params::zeros_like(&model);
-    let mut step_v = HostValue::scalar_f32(0.0);
+    let mut state = TrainState::init(&model, &mut rng);
 
     let n_train = ds.train.len();
     let mut order: Vec<usize> = (0..n_train).collect();
@@ -122,33 +105,28 @@ pub fn train_task(
             rng.shuffle(&mut order);
             cursor = 0;
         }
-        let exs: Vec<&Example> = order[cursor..cursor + batch].iter().map(|&i| &ds.train[i]).collect();
+        let exs: Vec<&Example> =
+            order[cursor..cursor + batch].iter().map(|&i| &ds.train[i]).collect();
         cursor += batch;
         let (ids, labels) = make_batch(&exs, batch, seq, spec.kind);
 
-        let n_par = params.values.len();
-        let mut inputs = Vec::with_capacity(3 * n_par + 4);
-        inputs.extend(params.values.iter().cloned());
-        inputs.extend(m.values.iter().cloned());
-        inputs.extend(v.values.iter().cloned());
-        inputs.push(step_v.clone());
-        inputs.push(ids);
-        inputs.push(labels);
-        inputs.push(HostValue::scalar_f32(lr_at(cfg, step) as f32));
-
-        let mut out = rt.run(&artifact, &inputs)?;
-        let loss = out.pop().context("missing loss")?.scalar_value_f32()?;
-        step_v = out.pop().context("missing step")?;
-        let v_new: Vec<HostValue> = out.split_off(2 * n_par);
-        let m_new: Vec<HostValue> = out.split_off(n_par);
-        params = Params { values: out };
-        m = Params { values: m_new };
-        v = Params { values: v_new };
+        let loss = backend.train_step(
+            model_name,
+            spec.kind,
+            &mut state,
+            &ids,
+            &labels,
+            lr_at(cfg, step) as f32,
+        )?;
 
         if step % cfg.log_every == 0 || step + 1 == cfg.steps {
             losses.push((step, loss));
             if verbose {
-                eprintln!("[train {model_name}/{}] step {step:4} loss {loss:.4} lr {:.2e}", spec.name, lr_at(cfg, step));
+                eprintln!(
+                    "[train {model_name}/{}] step {step:4} loss {loss:.4} lr {:.2e}",
+                    spec.name,
+                    lr_at(cfg, step)
+                );
             }
         }
         if !loss.is_finite() {
@@ -157,12 +135,12 @@ pub fn train_task(
     }
 
     let final_loss = losses.last().map(|&(_, l)| l).unwrap_or(f32::NAN);
-    Ok(TrainOutcome { params, losses, final_loss })
+    Ok(TrainOutcome { params: state.params, losses, final_loss })
 }
 
 /// Train-or-load with checkpoint caching under `root`.
 pub fn train_or_load(
-    rt: &mut Runtime,
+    backend: &mut dyn Backend,
     root: &std::path::Path,
     model_name: &str,
     spec: &TaskSpec,
@@ -171,14 +149,14 @@ pub fn train_or_load(
     verbose: bool,
 ) -> Result<Params> {
     let path = crate::model::checkpoint_path(root, model_name, spec.name);
-    let model = rt.manifest.model(model_name)?.clone();
+    let model = backend.model(model_name)?;
     if path.exists() {
         match Params::load(&path, &model) {
             Ok(p) => return Ok(p),
             Err(e) => eprintln!("[train] stale checkpoint {path:?} ({e}); retraining"),
         }
     }
-    let out = train_task(rt, model_name, spec, ds, cfg, verbose)?;
+    let out = train_task(backend, model_name, spec, ds, cfg, verbose)?;
     std::fs::create_dir_all(root)?;
     out.params.save(&path)?;
     Ok(out.params)
@@ -223,5 +201,22 @@ mod tests {
         let e = Example { ids: vec![1, 2], label: Label::Score(0.7) };
         let (_, labels) = make_batch(&[&e], 2, 4, TaskKind::Regression);
         assert_eq!(labels.as_f32().unwrap(), &[0.7, 0.7]);
+    }
+
+    #[test]
+    fn native_training_runs_and_learns_a_little() {
+        use crate::data;
+        use crate::runtime::{open_backend, BackendSpec};
+
+        let mut be = open_backend(&BackendSpec::Native).unwrap();
+        let spec = data::task_by_name("sst2_sim").unwrap();
+        let mut small = spec.clone();
+        small.train_size = 64;
+        small.dev_size = 8;
+        let ds = data::generate(&small, 123);
+        let cfg = TrainConfig { steps: 6, lr: 1e-3, warmup: 2, log_every: 2, seed: 0 };
+        let out = train_task(be.as_mut(), "distil_sim", &small, &ds, &cfg, false).unwrap();
+        assert!(out.final_loss.is_finite());
+        assert_eq!(out.params.values.len(), be.model("distil_sim").unwrap().param_spec.len());
     }
 }

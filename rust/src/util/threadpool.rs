@@ -1,58 +1,61 @@
 //! Fixed-size worker thread pool substrate (tokio is unavailable offline).
 //!
 //! The coordinator uses std threads + channels; this pool covers the
-//! embarrassingly-parallel pieces (per-seed evaluation sweeps, dataset
-//! generation) with a simple scoped `map` API.
+//! embarrassingly-parallel pieces (the native backend's per-sequence
+//! forward, per-seed evaluation sweeps, dataset generation) with a simple
+//! scoped `map` API.
+//!
+//! Work distribution is a single `AtomicUsize` cursor over a shared slice:
+//! each worker claims the next unclaimed index with `fetch_add`, so items
+//! are served FIFO with no lock contention and uneven item costs balance
+//! across cores. (The previous implementation popped a `Mutex<Vec>` —
+//! LIFO order under a single hot lock.)
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
 use std::thread;
 
 /// Run `f` over `items` on up to `workers` threads, preserving order.
+///
+/// Scoped threads mean `f` and the items may borrow from the caller's
+/// stack — the native backend uses this to share model weights across the
+/// per-sequence workers without `Arc`.
 pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
 where
-    T: Send + 'static,
-    R: Send + 'static,
-    F: Fn(T) -> R + Send + Sync + 'static,
+    T: Send + Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
 {
     let n = items.len();
     if n == 0 {
         return Vec::new();
     }
     let workers = workers.max(1).min(n);
-    let f = Arc::new(f);
-    let queue = Arc::new(Mutex::new(
-        items.into_iter().enumerate().collect::<Vec<(usize, T)>>(),
-    ));
+    let next = AtomicUsize::new(0);
     let (tx, rx) = mpsc::channel::<(usize, R)>();
 
-    let mut handles = Vec::with_capacity(workers);
-    for _ in 0..workers {
-        let queue = Arc::clone(&queue);
-        let f = Arc::clone(&f);
-        let tx = tx.clone();
-        handles.push(thread::spawn(move || loop {
-            let item = queue.lock().unwrap().pop();
-            match item {
-                Some((i, x)) => {
-                    let r = f(x);
-                    if tx.send((i, r)).is_err() {
-                        return;
-                    }
-                }
-                None => return,
-            }
-        }));
-    }
-    drop(tx);
-
     let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    for (i, r) in rx {
-        out[i] = Some(r);
-    }
-    for h in handles {
-        h.join().expect("worker panicked");
-    }
+    thread::scope(|s| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            let items = &items;
+            let f = &f;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    return;
+                }
+                if tx.send((i, f(&items[i]))).is_err() {
+                    return;
+                }
+            });
+        }
+        drop(tx);
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+    });
     out.into_iter().map(|r| r.expect("missing result")).collect()
 }
 
@@ -68,31 +71,51 @@ mod tests {
 
     #[test]
     fn maps_in_order() {
-        let out = parallel_map((0..100).collect(), 4, |x: i32| x * 2);
+        let out = parallel_map((0..100).collect(), 4, |x: &i32| x * 2);
         assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
     }
 
     #[test]
     fn empty_input() {
-        let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
+        let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| *x);
         assert!(out.is_empty());
     }
 
     #[test]
     fn single_worker_matches() {
-        let a = parallel_map((0..20).collect(), 1, |x: u64| x * x);
-        let b = parallel_map((0..20).collect(), 8, |x: u64| x * x);
+        let a = parallel_map((0..20).collect(), 1, |x: &u64| x * x);
+        let b = parallel_map((0..20).collect(), 8, |x: &u64| x * x);
         assert_eq!(a, b);
     }
 
     #[test]
-    #[should_panic(expected = "worker panicked")]
+    fn borrows_from_caller_scope() {
+        // The scoped implementation must allow non-'static captures.
+        let offset = vec![100i32; 1];
+        let out = parallel_map((0..10).collect(), 3, |x: &i32| x + offset[0]);
+        assert_eq!(out[9], 109);
+    }
+
+    #[test]
+    fn uneven_costs_still_complete() {
+        let out = parallel_map((0..64).collect(), 8, |x: &u64| {
+            if x % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            x + 1
+        });
+        assert_eq!(out.len(), 64);
+        assert_eq!(out[63], 64);
+    }
+
+    #[test]
+    #[should_panic]
     fn propagates_panics() {
-        parallel_map(vec![1, 2, 3], 2, |x: i32| {
-            if x == 2 {
+        parallel_map(vec![1, 2, 3], 2, |x: &i32| {
+            if *x == 2 {
                 panic!("boom");
             }
-            x
+            *x
         });
     }
 }

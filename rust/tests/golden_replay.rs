@@ -1,117 +1,250 @@
-//! Cross-language integration tests: replay the golden files emitted by
-//! `python/compile/golden.py` through the AOT artifacts via the Rust PJRT
-//! runtime and require (near-)bitwise agreement. This validates the whole
-//! Python → HLO-text → PJRT-from-Rust bridge, including the in-graph PRNG
-//! (threefry is deterministic, so MCA outputs must match exactly too).
+//! Backend-agreement integration tests.
 //!
-//! Requires `make artifacts` to have run; tests skip (pass trivially) when
-//! the artifacts directory is absent so `cargo test` works pre-build.
+//! Native backend (always runs, no artifacts): the exact and MCA forwards
+//! must agree in the α → 0 limit (every budget saturates, the estimator
+//! falls back to the exact product — this is what makes the Theorem-2
+//! error bound vanish), the logits error must shrink as α does, and the
+//! in-graph Σr_i must obey the Eq. 9 budget bounds and reproduce the
+//! FLOPs accounting in `mca::flops`.
+//!
+//! PJRT golden replay (bottom, `pjrt` feature + artifacts): replays the
+//! golden files emitted by `python/compile/golden.py` through the AOT
+//! artifacts and requires (near-)bitwise agreement, validating the whole
+//! Python → HLO-text → PJRT-from-Rust bridge.
 
-use std::path::PathBuf;
+use mca::mca::flops::{self, AttnDims};
+use mca::model::Params;
+use mca::rng::Pcg64;
+use mca::runtime::{open_backend, Backend, BackendSpec, ForwardSpec, HostValue};
 
-use mca::runtime::{read_mcag, HostValue, Runtime};
+const MODEL: &str = "distil_sim";
+const SEQ: usize = 24;
+const BATCH: usize = 4;
 
-fn artifacts_dir() -> Option<PathBuf> {
-    let dir = mca::runtime::default_artifacts_dir();
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        None
+fn setup() -> (Box<dyn Backend>, Params, HostValue) {
+    let mut be = open_backend(&BackendSpec::Native).unwrap();
+    let info = be.model(MODEL).unwrap();
+    let mut rng = Pcg64::new(1234);
+    let params = Params::init(&info, &mut rng);
+    // 4 sequences of varying real length (CLS ... SEP, PAD tail).
+    let mut ids = vec![0i32; BATCH * SEQ];
+    let lens = [20usize, 14, 9, 5];
+    for (b, &len) in lens.iter().enumerate() {
+        ids[b * SEQ] = 1; // CLS
+        for j in 1..len - 1 {
+            ids[b * SEQ + j] = 4 + ((b * 31 + j * 7) % 250) as i32;
+        }
+        ids[b * SEQ + len - 1] = 2; // SEP
     }
+    let hv = HostValue::I32 { shape: vec![BATCH, SEQ], data: ids };
+    let _ = be.platform();
+    (be, params, hv)
 }
 
-fn max_abs_diff(a: &HostValue, b: &HostValue) -> f32 {
-    let (a, b) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+fn mean_abs_logit_diff(a: &[f32], b: &[f32]) -> f64 {
     assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).sum::<f64>() / a.len() as f64
 }
 
-fn replay(artifact: &str, atol: f32) {
-    let Some(dir) = artifacts_dir() else { return };
-    let golden_path = dir.join("golden").join(format!("{artifact}.golden"));
-    if !golden_path.exists() {
-        eprintln!("skipping: no golden for {artifact}");
-        return;
+#[test]
+fn native_mca_equals_exact_in_the_saturated_limit() {
+    let (mut be, params, ids) = setup();
+    let exact = ForwardSpec::new(MODEL, "exact", BATCH, SEQ);
+    let mca = ForwardSpec::new(MODEL, "mca", BATCH, SEQ);
+    let e = be.forward(&exact, &params, &ids, 1.0, 0).unwrap();
+    // α = 0.01: every real token's budget saturates (r_i = d) and the
+    // estimator takes the exact-fallback path — logits must match exactly.
+    let s = be.forward(&mca, &params, &ids, 0.01, 5).unwrap();
+    for (a, b) in e.logits.iter().zip(&s.logits) {
+        assert!((a - b).abs() < 1e-5, "saturated MCA diverged: {a} vs {b}");
     }
-    let tensors = read_mcag(&golden_path).expect("reading golden");
-    let mut rt = Runtime::load(&dir).expect("runtime");
-    let info = rt.manifest.artifact(artifact).expect("artifact").clone();
-    let n_in = info.inputs.len();
-    let n_out = info.outputs.len();
-    assert_eq!(tensors.len(), n_in + n_out, "golden tensor count");
-
-    let outputs = rt.run(artifact, &tensors[..n_in]).expect("execution");
-    for (i, (got, want)) in outputs.iter().zip(&tensors[n_in..]).enumerate() {
-        assert_eq!(got.shape(), want.shape(), "output #{i} shape");
-        let d = max_abs_diff(got, want);
-        assert!(d <= atol, "{artifact} output #{i} ({}): max|Δ| = {d}", info.outputs[i].role);
+    // At saturation Σr_i = n_eff · L · d exactly, so the measured FLOPs
+    // reduction factor is exactly 1 — MCA charged the full exact cost.
+    let info = be.model(MODEL).unwrap();
+    let dims = AttnDims { d_model: info.d_model, window: info.window };
+    for b in 0..BATCH {
+        let n_eff = s.n_eff[b] as usize;
+        assert_eq!(
+            s.r_sum[b],
+            (n_eff * info.n_layers * info.d_model) as f32,
+            "row {b} not saturated"
+        );
+        let f = flops::reduction_factor(&[(n_eff, s.r_sum[b] as u64)], info.n_layers, dims);
+        assert!((f - 1.0).abs() < 1e-9, "row {b}: saturated reduction {f} != 1");
     }
 }
 
 #[test]
-fn golden_bert_exact_forward() {
-    replay("bert_sim_fwd_exact_b1", 1e-4);
-}
+fn native_logit_error_shrinks_with_alpha() {
+    let (mut be, params, ids) = setup();
+    let exact = ForwardSpec::new(MODEL, "exact", BATCH, SEQ);
+    let mca = ForwardSpec::new(MODEL, "mca", BATCH, SEQ);
+    let e = be.forward(&exact, &params, &ids, 1.0, 0).unwrap();
 
-#[test]
-fn golden_bert_mca_forward() {
-    // MCA path: in-graph threefry sampling must reproduce Python exactly.
-    replay("bert_sim_fwd_mca_b1", 1e-4);
-}
-
-#[test]
-fn golden_bert_mca_pallas_forward() {
-    // The Pallas (interpret) kernel variant — L1 on the request path.
-    replay("bert_sim_fwd_mca_pallas_b4", 1e-4);
-}
-
-#[test]
-fn golden_distil_mca_forward() {
-    replay("distil_sim_fwd_mca_b1", 1e-4);
-}
-
-#[test]
-fn golden_longformer_mca_forward() {
-    replay("longformer_sim_fwd_mca_b16", 1e-4);
-}
-
-#[test]
-fn golden_train_step() {
-    // One Adam step: parameters, optimizer state and loss must match.
-    replay("bert_sim_train_cls_b32", 5e-3);
-}
-
-#[test]
-fn runtime_rejects_bad_inputs() {
-    let Some(dir) = artifacts_dir() else { return };
-    let mut rt = Runtime::load(&dir).expect("runtime");
-    // Too few inputs
-    assert!(rt.run("bert_sim_fwd_exact_b1", &[]).is_err());
-    // Unknown artifact
-    assert!(rt.run("nope", &[]).is_err());
-}
-
-#[test]
-fn mca_reduces_measured_flops_vs_exact() {
-    // End-to-end property: the in-graph Σr_i at alpha=0.3 must be well
-    // below the saturated budget n_eff * L * d.
-    let Some(dir) = artifacts_dir() else { return };
-    let golden_path = dir.join("golden/bert_sim_fwd_mca_b1.golden");
-    if !golden_path.exists() {
-        return;
-    }
-    let tensors = read_mcag(&golden_path).unwrap();
-    let mut rt = Runtime::load(&dir).unwrap();
-    let info = rt.manifest.artifact("bert_sim_fwd_mca_b1").unwrap().clone();
-    let model = rt.manifest.model(&info.model).unwrap().clone();
-    let outputs = rt.run("bert_sim_fwd_mca_b1", &tensors[..info.inputs.len()]).unwrap();
-    let r_sum = outputs[1].as_f32().unwrap()[0] as f64;
-    let n_eff = outputs[2].as_f32().unwrap()[0] as f64;
-    let saturated = n_eff * model.n_layers as f64 * model.d_model as f64;
-    assert!(r_sum >= n_eff * model.n_layers as f64, "r_sum {r_sum} below minimum");
+    // Mean |Δlogit| over seeds at a precise and a loose α. By Lemma 1 the
+    // per-token encode error scales ~ 1/sqrt(r) ∝ α, so the loose setting
+    // must be clearly noisier.
+    let seeds = 12;
+    let mut err = |alpha: f32| -> f64 {
+        let mut acc = 0.0;
+        for seed in 0..seeds {
+            let o = be.forward(&mca, &params, &ids, alpha, 100 + seed).unwrap();
+            acc += mean_abs_logit_diff(&e.logits, &o.logits);
+        }
+        acc / seeds as f64
+    };
+    let tight = err(0.2);
+    let loose = err(0.8);
+    assert!(tight.is_finite() && loose.is_finite());
     assert!(
-        r_sum < 0.8 * saturated,
-        "r_sum {r_sum} not meaningfully below saturated {saturated}"
+        tight < loose,
+        "error not monotone in alpha: tight {tight} vs loose {loose}"
     );
+}
+
+#[test]
+fn native_rsum_matches_flops_accounting() {
+    let (mut be, params, ids) = setup();
+    let mca = ForwardSpec::new(MODEL, "mca", BATCH, SEQ);
+    let o = be.forward(&mca, &params, &ids, 0.3, 17).unwrap();
+    let info = be.model(MODEL).unwrap();
+    let dims = AttnDims { d_model: info.d_model, window: info.window };
+    let (l, d) = (info.n_layers, info.d_model);
+
+    let mut per_seq = Vec::new();
+    for b in 0..BATCH {
+        let n_eff = o.n_eff[b] as usize;
+        let r_sum = o.r_sum[b] as u64;
+        assert!(n_eff > 0);
+        // Eq. 9 bounds: 1 <= r_i <= d per real token per layer.
+        assert!(r_sum >= (n_eff * l) as u64, "row {b}: r_sum {r_sum} below minimum");
+        assert!(r_sum <= (n_eff * l * d) as u64, "row {b}: r_sum {r_sum} above saturation");
+        per_seq.push((n_eff, r_sum));
+    }
+    // At α = 0.3 with random-init (near-uniform) attention the budget sits
+    // well below saturation, so the measured reduction must exceed 1.
+    let f = flops::reduction_factor(&per_seq, l, dims);
+    assert!(f > 1.0, "no measured FLOPs reduction: {f}");
+    // And it can never beat the weighted-sum floor (encode cost -> 0).
+    let ceiling = 1.0 + d as f64;
+    assert!(f < ceiling, "absurd reduction {f}");
+}
+
+#[test]
+fn native_forward_is_deterministic_in_seed() {
+    let (mut be, params, ids) = setup();
+    let mca = ForwardSpec::new(MODEL, "mca", BATCH, SEQ);
+    let a = be.forward(&mca, &params, &ids, 0.4, 42).unwrap();
+    let b = be.forward(&mca, &params, &ids, 0.4, 42).unwrap();
+    assert_eq!(a.logits, b.logits);
+    assert_eq!(a.r_sum, b.r_sum);
+    let c = be.forward(&mca, &params, &ids, 0.4, 43).unwrap();
+    assert!(a.logits != c.logits, "different seeds produced identical MCA logits");
+}
+
+#[test]
+fn native_ablation_strategies_all_run() {
+    let (mut be, params, ids) = setup();
+    for (r, p) in [("max", "norm"), ("mean", "norm"), ("median", "norm"), ("max", "uniform")] {
+        let mut spec = ForwardSpec::new(MODEL, "mca", BATCH, SEQ);
+        spec.r_strategy = r.into();
+        spec.p_strategy = p.into();
+        let o = be.forward(&spec, &params, &ids, 0.4, 3).unwrap();
+        assert!(o.logits.iter().all(|x| x.is_finite()), "{r}/{p} produced non-finite logits");
+    }
+    // bf16 rounding path stays finite too
+    let mut spec = ForwardSpec::new(MODEL, "exact", BATCH, SEQ);
+    spec.compute_dtype = "bf16".into();
+    let o = be.forward(&spec, &params, &ids, 1.0, 0).unwrap();
+    assert!(o.logits.iter().all(|x| x.is_finite()));
+}
+
+// ---------------------------------------------------------------------------
+// PJRT golden replay (needs `--features pjrt` + `make artifacts`)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+mod pjrt_golden {
+    use std::path::PathBuf;
+
+    use mca::runtime::{read_mcag, HostValue, Runtime};
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = mca::runtime::default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(dir)
+        } else {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+
+    fn max_abs_diff(a: &HostValue, b: &HostValue) -> f32 {
+        let (a, b) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    fn replay(artifact: &str, atol: f32) {
+        let Some(dir) = artifacts_dir() else { return };
+        let golden_path = dir.join("golden").join(format!("{artifact}.golden"));
+        if !golden_path.exists() {
+            eprintln!("skipping: no golden for {artifact}");
+            return;
+        }
+        let tensors = read_mcag(&golden_path).expect("reading golden");
+        let mut rt = Runtime::load(&dir).expect("runtime");
+        let info = rt.manifest.artifact(artifact).expect("artifact").clone();
+        let n_in = info.inputs.len();
+        let n_out = info.outputs.len();
+        assert_eq!(tensors.len(), n_in + n_out, "golden tensor count");
+
+        let outputs = rt.run(artifact, &tensors[..n_in]).expect("execution");
+        for (i, (got, want)) in outputs.iter().zip(&tensors[n_in..]).enumerate() {
+            assert_eq!(got.shape(), want.shape(), "output #{i} shape");
+            let d = max_abs_diff(got, want);
+            assert!(d <= atol, "{artifact} output #{i} ({}): max|Δ| = {d}", info.outputs[i].role);
+        }
+    }
+
+    #[test]
+    fn golden_bert_exact_forward() {
+        replay("bert_sim_fwd_exact_b1", 1e-4);
+    }
+
+    #[test]
+    fn golden_bert_mca_forward() {
+        // MCA path: in-graph threefry sampling must reproduce Python exactly.
+        replay("bert_sim_fwd_mca_b1", 1e-4);
+    }
+
+    #[test]
+    fn golden_bert_mca_pallas_forward() {
+        // The Pallas (interpret) kernel variant — L1 on the request path.
+        replay("bert_sim_fwd_mca_pallas_b4", 1e-4);
+    }
+
+    #[test]
+    fn golden_distil_mca_forward() {
+        replay("distil_sim_fwd_mca_b1", 1e-4);
+    }
+
+    #[test]
+    fn golden_longformer_mca_forward() {
+        replay("longformer_sim_fwd_mca_b16", 1e-4);
+    }
+
+    #[test]
+    fn golden_train_step() {
+        // One Adam step: parameters, optimizer state and loss must match.
+        replay("bert_sim_train_cls_b32", 5e-3);
+    }
+
+    #[test]
+    fn runtime_rejects_bad_inputs() {
+        let Some(dir) = artifacts_dir() else { return };
+        let mut rt = Runtime::load(&dir).expect("runtime");
+        assert!(rt.run("bert_sim_fwd_exact_b1", &[]).is_err());
+        assert!(rt.run("nope", &[]).is_err());
+    }
 }

@@ -1,0 +1,209 @@
+//! Offline **stub** of the `xla` crate (PJRT bindings).
+//!
+//! The container this repo grows in has no network and no prebuilt XLA, so
+//! the real bindings cannot be vendored. This stub exposes the exact API
+//! surface `mca`'s PJRT backend uses, with every entry point that would
+//! touch a device returning [`Error::Unavailable`]. That keeps the
+//! `pjrt` cargo feature *compiling* everywhere, so the backend seam stays
+//! honest; on a machine with the real crate, point the `xla` path
+//! dependency in `rust/Cargo.toml` at it and the PJRT backend works
+//! unchanged.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real crate's (std-error-compatible).
+#[derive(Debug)]
+pub enum Error {
+    /// Raised by every stub entry point.
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: XLA/PJRT bindings unavailable in this build (xla-stub); \
+                 link the real `xla` crate to enable the pjrt backend"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(Error::Unavailable(what))
+}
+
+/// Element types a literal can carry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+/// Scalar types a [`Literal`] can be built from / read back as.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+impl NativeType for f64 {
+    const TY: ElementType = ElementType::F64;
+}
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+impl NativeType for u32 {
+    const TY: ElementType = ElementType::U32;
+}
+
+/// Array shape: element type + dimensions.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host-side literal (stub: carries no data).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    shape: ArrayShape,
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { shape: ArrayShape { ty: T::TY, dims: vec![data.len() as i64] } }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        Ok(Literal { shape: ArrayShape { ty: self.shape.ty, dims: dims.to_vec() } })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(self.shape.clone())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        unavailable("Literal::decompose_tuple")
+    }
+}
+
+/// Parsed HLO module (stub: never constructible from real input).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// A computation ready to compile.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let msg = format!("{}", PjRtClient::cpu().unwrap_err());
+        assert!(msg.contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_shapes_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        let s = r.array_shape().unwrap();
+        assert_eq!(s.dims(), &[2, 3]);
+        assert_eq!(s.ty(), ElementType::F32);
+    }
+}
