@@ -31,7 +31,7 @@ fn main() -> Result<()> {
         out.params.save(&ckpt)?;
     }
 
-    // 2. Start the coordinator (the worker thread owns the backend).
+    // 2. Start the coordinator (each pool worker owns a backend instance).
     let server = Server::start(
         backend,
         ServerConfig {
@@ -39,6 +39,8 @@ fn main() -> Result<()> {
             checkpoint: ckpt,
             max_wait: Duration::from_millis(10),
             seq: 64,
+            workers: 2,
+            queue_cap: 1024,
         },
     )?;
 

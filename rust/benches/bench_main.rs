@@ -15,7 +15,7 @@
 use std::time::Duration;
 
 use mca::bench::Bench;
-use mca::coordinator::{plan_batches, Pending, Request};
+use mca::coordinator::{plan_batches, rank_plans, Pending, Request};
 use mca::data;
 use mca::mca::{self as mcacore, flops::AttnDims};
 use mca::model::Params;
@@ -61,6 +61,12 @@ fn main() {
         results.push(b.run("micro/plan_batches_256req", Some(256.0), || {
             let plans = plan_batches(&queue, &[1, 8, 32], Duration::from_millis(0), now);
             std::hint::black_box(plans);
+        }));
+        // α-aware dispatch ordering over the ready plans
+        let plans = plan_batches(&queue, &[1, 8, 32], Duration::from_millis(0), now);
+        results.push(b.run("micro/rank_plans_256req", Some(plans.len() as f64), || {
+            let order = rank_plans(&queue, &plans, Duration::from_millis(10), now);
+            std::hint::black_box(order);
         }));
     }
     // --- tokenizer --------------------------------------------------------
@@ -183,6 +189,55 @@ fn main() {
     }
     for r in &native {
         println!("{}", r.report());
+    }
+
+    // --- serving: worker-pool scaling (closed burst) ------------------------
+    // One burst per worker count on an identical request stream; writes the
+    // machine-readable BENCH_serving.json when MCA_BENCH_OUT is set (the
+    // default emitter is `mca loadtest`).
+    println!("\n== serving: worker-pool scaling (closed burst) ==");
+    {
+        use mca::coordinator::loadgen::{run_burst, write_bench_json};
+        use mca::coordinator::{Server, ServerConfig};
+        use mca::runtime::BackendSpec;
+
+        let be = NativeBackend::new();
+        let info = be.model("distil_sim").unwrap();
+        let mut rng = Pcg64::new(77);
+        let params = Params::init(&info, &mut rng);
+        let ckpt = std::env::temp_dir().join("mca_bench_serving.mcag");
+        params.save(&ckpt).unwrap();
+        let texts: Vec<String> = (0..32)
+            .map(|i| format!("n{} v{} a{} f{}", i % 7, (i + 1) % 7, (i + 2) % 7, (i + 3) % 7))
+            .collect();
+        let n_requests = if std::env::var("MCA_BENCH_QUICK").is_ok() { 32 } else { 96 };
+        let mix = [(0.2f32, 1.0f64), (0.4, 1.0), (0.6, 1.0)];
+        let mut entries = Vec::new();
+        for workers in [1usize, 2, 4] {
+            let server = Server::start(
+                BackendSpec::Native,
+                ServerConfig {
+                    model: "distil_sim".into(),
+                    checkpoint: ckpt.clone(),
+                    max_wait: Duration::from_millis(2),
+                    seq: 32,
+                    workers,
+                    queue_cap: 4096,
+                },
+            )
+            .unwrap();
+            let r = run_burst(&server, &texts, n_requests, &mix, 7).unwrap();
+            println!(
+                "serving/burst_w{workers:<2} ({n_requests} reqs)  {:>8.1} req/s  p50 {:>7.2} ms  p99 {:>7.2} ms",
+                r.achieved, r.p50_ms, r.p99_ms
+            );
+            entries.push((workers, "burst".to_string(), r));
+            server.shutdown().unwrap();
+        }
+        if let Ok(out) = std::env::var("MCA_BENCH_OUT") {
+            write_bench_json(std::path::Path::new(&out), "distil_sim", &entries).unwrap();
+            println!("(wrote {out})");
+        }
     }
 
     #[cfg(feature = "pjrt")]

@@ -1,16 +1,22 @@
-//! Open-loop load generation for the serving benchmarks: Poisson arrivals
-//! at a configured offered rate, mixed-α request populations, and a
-//! latency-vs-load sweep used by the serving section of EXPERIMENTS.md.
+//! Load generation for the serving benchmarks: open-loop Poisson arrivals
+//! at a configured offered rate, mixed-α request populations, a closed
+//! burst driver for worker-pool scaling runs, and the machine-readable
+//! `BENCH_serving.json` emitter used by `mca loadtest` and `cargo bench`.
 //!
 //! Open-loop (arrivals independent of completions) is the honest way to
-//! measure a serving system: a closed loop hides queueing collapse.
+//! measure a serving system: a closed loop hides queueing collapse. The
+//! burst driver is the complement: it measures drain throughput per
+//! worker count on an identical workload.
 
+use std::path::Path;
+use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::Server;
+use super::{Response, Server};
 use crate::rng::Pcg64;
+use crate::util::json::Json;
 use crate::util::timer::LatencyStats;
 
 /// A workload description.
@@ -29,6 +35,8 @@ pub struct Workload {
 pub struct LoadResult {
     pub offered: f64,
     pub completed: usize,
+    /// requests answered with a load-shed response (admission control)
+    pub shed: usize,
     pub achieved: f64,
     pub mean_ms: f64,
     pub p50_ms: f64,
@@ -67,6 +75,37 @@ pub fn sample_alpha(rng: &mut Pcg64, mix: &[(f32, f64)]) -> f32 {
     mix.last().map(|&(a, _)| a).unwrap_or(0.4)
 }
 
+/// Collect all in-flight responses into a [`LoadResult`]; shed responses
+/// are counted separately and excluded from the latency/FLOPs stats.
+fn drain(inflight: Vec<mpsc::Receiver<Response>>, offered: f64, start: Instant) -> LoadResult {
+    let mut lat = LatencyStats::default();
+    let mut flops = 0.0;
+    let mut completed = 0usize;
+    let mut shed = 0usize;
+    for rx in inflight {
+        if let Ok(resp) = rx.recv() {
+            if resp.shed {
+                shed += 1;
+            } else {
+                lat.record(resp.latency);
+                flops += resp.flops_reduction;
+                completed += 1;
+            }
+        }
+    }
+    let wall = start.elapsed().as_secs_f64();
+    LoadResult {
+        offered,
+        completed,
+        shed,
+        achieved: completed as f64 / wall,
+        mean_ms: lat.mean_ms(),
+        p50_ms: lat.p50_ms(),
+        p99_ms: lat.p99_ms(),
+        mean_flops_reduction: if completed > 0 { flops / completed as f64 } else { 0.0 },
+    }
+}
+
 /// Drive the server open-loop with `texts` as the request population.
 pub fn run_load(server: &Server, texts: &[String], wl: &Workload) -> Result<LoadResult> {
     let mut rng = Pcg64::new(wl.seed);
@@ -79,26 +118,65 @@ pub fn run_load(server: &Server, texts: &[String], wl: &Workload) -> Result<Load
         let alpha = sample_alpha(&mut rng, &wl.alpha_mix);
         inflight.push(server.submit(text, alpha, "mca"));
     }
-    let mut lat = LatencyStats::default();
-    let mut flops = 0.0;
-    let mut completed = 0usize;
-    for rx in inflight {
-        if let Ok(resp) = rx.recv() {
-            lat.record(resp.latency);
-            flops += resp.flops_reduction;
-            completed += 1;
-        }
+    Ok(drain(inflight, wl.rate, start))
+}
+
+/// Closed burst: submit `n` requests as fast as possible and drain every
+/// response — the worker-scaling comparator (`offered` is reported as the
+/// achieved drain rate). Identical seeds give identical request streams,
+/// so throughput across worker counts is an apples-to-apples comparison.
+pub fn run_burst(
+    server: &Server,
+    texts: &[String],
+    n: usize,
+    alpha_mix: &[(f32, f64)],
+    seed: u64,
+) -> Result<LoadResult> {
+    let mut rng = Pcg64::new(seed);
+    let start = Instant::now();
+    let mut inflight = Vec::with_capacity(n);
+    for i in 0..n {
+        let text = &texts[i % texts.len()];
+        let alpha = sample_alpha(&mut rng, alpha_mix);
+        inflight.push(server.submit(text, alpha, "mca"));
     }
-    let wall = start.elapsed().as_secs_f64();
-    Ok(LoadResult {
-        offered: wl.rate,
-        completed,
-        achieved: completed as f64 / wall,
-        mean_ms: lat.mean_ms(),
-        p50_ms: lat.p50_ms(),
-        p99_ms: lat.p99_ms(),
-        mean_flops_reduction: if completed > 0 { flops / completed as f64 } else { 0.0 },
-    })
+    let mut r = drain(inflight, 0.0, start);
+    r.offered = r.achieved;
+    Ok(r)
+}
+
+/// Write the machine-readable serving benchmark: one entry per
+/// (worker count, run), with throughput and latency percentiles. `kind`
+/// is the measurement protocol: "open_loop" (Poisson arrivals at the
+/// offered rate) or "burst" (closed drain — the worker-scaling signal).
+pub fn write_bench_json(
+    path: &Path,
+    model: &str,
+    entries: &[(usize, String, LoadResult)],
+) -> Result<()> {
+    use std::collections::BTreeMap;
+
+    let mut arr = Vec::with_capacity(entries.len());
+    for (workers, kind, r) in entries {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("workers".to_string(), Json::Num(*workers as f64));
+        m.insert("kind".to_string(), Json::Str(kind.clone()));
+        m.insert("offered_rps".to_string(), Json::Num(r.offered));
+        m.insert("achieved_rps".to_string(), Json::Num(r.achieved));
+        m.insert("completed".to_string(), Json::Num(r.completed as f64));
+        m.insert("shed".to_string(), Json::Num(r.shed as f64));
+        m.insert("mean_ms".to_string(), Json::Num(r.mean_ms));
+        m.insert("p50_ms".to_string(), Json::Num(r.p50_ms));
+        m.insert("p99_ms".to_string(), Json::Num(r.p99_ms));
+        m.insert("mean_flops_reduction".to_string(), Json::Num(r.mean_flops_reduction));
+        arr.push(Json::Obj(m));
+    }
+    let mut top: BTreeMap<String, Json> = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("serving".to_string()));
+    top.insert("model".to_string(), Json::Str(model.to_string()));
+    top.insert("entries".to_string(), Json::Arr(arr));
+    std::fs::write(path, Json::Obj(top).to_string())?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -149,5 +227,37 @@ mod tests {
     fn empty_mix_defaults() {
         let mut rng = Pcg64::new(3);
         assert_eq!(sample_alpha(&mut rng, &[]), 0.4);
+    }
+
+    #[test]
+    fn bench_json_round_trips() {
+        let r1 = LoadResult {
+            offered: 100.0,
+            completed: 95,
+            shed: 5,
+            achieved: 92.5,
+            mean_ms: 12.0,
+            p50_ms: 10.0,
+            p99_ms: 40.0,
+            mean_flops_reduction: 2.5,
+        };
+        let mut r4 = r1.clone();
+        r4.achieved = 310.0;
+        let path = std::env::temp_dir().join("mca_test_bench_serving.json");
+        let entries =
+            vec![(1usize, "open_loop".to_string(), r1), (4usize, "burst".to_string(), r4)];
+        write_bench_json(&path, "distil_sim", &entries).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str().unwrap(), "serving");
+        assert_eq!(parsed.get("model").unwrap().as_str().unwrap(), "distil_sim");
+        let rows = parsed.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("workers").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(rows[0].get("kind").unwrap().as_str().unwrap(), "open_loop");
+        assert_eq!(rows[0].get("shed").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(rows[1].get("workers").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(rows[1].get("kind").unwrap().as_str().unwrap(), "burst");
+        assert!((rows[1].get("achieved_rps").unwrap().as_f64().unwrap() - 310.0).abs() < 1e-9);
+        let _ = std::fs::remove_file(&path);
     }
 }

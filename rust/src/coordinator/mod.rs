@@ -2,28 +2,43 @@
 //! scaled to this paper's contribution: requests carry a per-request α
 //! (the MCA precision knob — "simple dynamic control of the
 //! performance-resource trade-off"), a dynamic batcher groups compatible
-//! requests into the backend's batch buckets, and a model-worker thread
-//! that owns the (possibly non-Send) execution backend executes them.
+//! requests into the backend's batch buckets, and a sharded pool of model
+//! workers — each owning its own (possibly non-Send) execution backend —
+//! executes them.
 //!
-//! Split into a pure, property-testable batching policy ([`plan_batches`])
-//! and the threaded worker ([`Server`]). The worker opens its backend from
-//! a [`BackendSpec`], so the same coordinator serves PJRT artifacts or the
-//! native pure-Rust forward.
+//! Three pieces, separated for testability:
+//!
+//! * the pure batching policy ([`plan_batches`]) with its property-tested
+//!   invariants, including the head-of-line rule: a ready (full or
+//!   timed-out) compatibility group is planned even when a fresher,
+//!   under-full group sits ahead of it in the queue;
+//! * the pure dispatch policy ([`rank_plans`] over [`batch_cost`]):
+//!   α-aware shortest-job-first with a starvation guard, so a cheap
+//!   high-α batch overtakes an expensive exact batch when a worker frees
+//!   up, but nothing waits forever;
+//! * the threaded [`Server`]: a dispatcher thread owns the bounded
+//!   admission queue (overflow requests get immediate load-shed
+//!   responses) and hands planned batches to idle workers; each worker
+//!   opens its backend from a [`BackendSpec`], so the same coordinator
+//!   serves PJRT artifacts or the native pure-Rust forward.
 
 pub mod loadgen;
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::mca::flops::{self, AttnDims};
+use crate::metrics::serving::{AlphaSummary, ServingMetrics, WorkerSnapshot};
 use crate::model::Params;
-use crate::runtime::{open_backend, Backend, BackendSpec, ForwardSpec, HostValue};
+use crate::runtime::{open_backend_sized, Backend, BackendSpec, ForwardSpec, HostValue};
 use crate::tokenizer::Tokenizer;
-use crate::util::timer::LatencyStats;
+use crate::util::threadpool;
 
 // ---------------------------------------------------------------------------
 // Request / response types (all Send)
@@ -47,6 +62,15 @@ pub struct Response {
     pub flops_reduction: f64,
     pub latency: Duration,
     pub batch_size: usize,
+    /// α of the batch this request executed in (== the requested α: the
+    /// batcher never mixes αs — asserted by the concurrency tests)
+    pub alpha: f32,
+    /// mode the batch actually executed ("exact" may degrade to "mca"
+    /// only when the backend lacks the exact shape entirely)
+    pub mode: String,
+    /// true when admission control rejected the request (queue at cap);
+    /// no forward ran and `pred_class` is -1
+    pub shed: bool,
 }
 
 // ---------------------------------------------------------------------------
@@ -68,11 +92,17 @@ pub struct BatchPlan {
 }
 
 /// Group compatible requests (same mode + α bits) into the largest
-/// available bucket; smaller groups ride a padded bucket when they have
-/// waited past `max_wait`, otherwise stay queued.
+/// available bucket; smaller groups ride a padded bucket when their oldest
+/// member has waited past `max_wait`, otherwise stay queued.
+///
+/// A group that is not yet ready does NOT block the scan: later groups
+/// that are full or timed out are still planned (no head-of-line blocking
+/// behind a fresh under-full group).
 ///
 /// Invariants (property-tested): every index appears in at most one batch;
-/// batch size <= bucket; all requests in a batch share (mode, alpha).
+/// batch size <= bucket; all requests in a batch share (mode, alpha);
+/// indices within a batch are in queue (FIFO) order; no ready group is
+/// left unplanned.
 pub fn plan_batches(
     queue: &[Pending],
     buckets: &[usize],
@@ -81,22 +111,28 @@ pub fn plan_batches(
 ) -> Vec<BatchPlan> {
     let max_bucket = buckets.iter().copied().max().unwrap_or(1);
     let mut used = vec![false; queue.len()];
+    // Groups inspected this round and found not ready: skipped (not
+    // planned), so they cannot block ready groups queued behind them.
+    let mut waiting = vec![false; queue.len()];
     let mut plans = Vec::new();
 
     loop {
-        // Find the first unused request; collect its compatibility group.
-        let Some(head) = (0..queue.len()).find(|&i| !used[i]) else { break };
+        let Some(head) = (0..queue.len()).find(|&i| !used[i] && !waiting[i]) else { break };
         let key = (queue[head].req.mode.clone(), queue[head].req.alpha.to_bits());
         let group: Vec<usize> = (head..queue.len())
             .filter(|&i| {
                 !used[i]
+                    && !waiting[i]
                     && queue[i].req.mode == key.0
                     && queue[i].req.alpha.to_bits() == key.1
             })
             .take(max_bucket)
             .collect();
 
-        let timed_out = now.duration_since(queue[head].arrived) >= max_wait;
+        // Ready when the group fills the largest bucket or its oldest
+        // member (min arrival instant = longest waiter) timed out.
+        let oldest = group.iter().map(|&i| queue[i].arrived).min().expect("nonempty group");
+        let timed_out = now.saturating_duration_since(oldest) >= max_wait;
         if group.len() >= max_bucket || timed_out {
             // pick the smallest bucket that fits the group
             let bucket = buckets
@@ -112,15 +148,79 @@ pub fn plan_batches(
             }
             plans.push(BatchPlan { indices, bucket });
         } else {
-            // Head not ready: nothing older is ready either -> stop planning.
-            break;
+            for &i in &group {
+                waiting[i] = true;
+            }
         }
     }
     plans
 }
 
 // ---------------------------------------------------------------------------
-// Model worker + server
+// Pure dispatch policy (α-aware scheduling)
+// ---------------------------------------------------------------------------
+
+/// Batches whose oldest member has waited this many batching windows are
+/// overdue: the starvation guard dispatches them FIFO ahead of everything.
+const OVERDUE_WINDOWS: u32 = 4;
+
+/// Relative execution-cost estimate for a planned batch. Exact rows cost
+/// 1 each; Monte-Carlo rows scale as (0.5/α)² clamped to 1 — Eq. 9 makes
+/// r_i ∝ 1/α², so a high-α batch runs proportionally fewer samples and
+/// should overtake an expensive exact batch when a worker frees up.
+pub fn batch_cost(mode: &str, alpha: f32, rows: usize) -> f64 {
+    let per_row = if mode == "exact" || alpha <= 0.0 {
+        1.0
+    } else {
+        let a = 0.5 / alpha as f64;
+        (a * a).min(1.0)
+    };
+    rows as f64 * per_row
+}
+
+/// Dispatch priority over ready plans: overdue batches first (longest
+/// wait first), then cheaper batches first ([`batch_cost`]), ties broken
+/// toward the longer waiter. Returns plan indices in dispatch order.
+pub fn rank_plans(
+    queue: &[Pending],
+    plans: &[BatchPlan],
+    max_wait: Duration,
+    now: Instant,
+) -> Vec<usize> {
+    let overdue_after = max_wait * OVERDUE_WINDOWS;
+    let mut keyed: Vec<(bool, f64, Duration, usize)> = plans
+        .iter()
+        .enumerate()
+        .map(|(k, plan)| {
+            let head = &queue[plan.indices[0]].req;
+            let oldest = plan.indices.iter().map(|&i| queue[i].arrived).min().expect("nonempty");
+            let waited = now.saturating_duration_since(oldest);
+            let cost = batch_cost(&head.mode, head.alpha, plan.indices.len());
+            (waited >= overdue_after, cost, waited, k)
+        })
+        .collect();
+    keyed.sort_by(|a, b| match (a.0, b.0) {
+        (true, false) => std::cmp::Ordering::Less,
+        (false, true) => std::cmp::Ordering::Greater,
+        (true, true) => b.2.cmp(&a.2),
+        (false, false) => a.1.total_cmp(&b.1).then(b.2.cmp(&a.2)),
+    });
+    keyed.into_iter().map(|(_, _, _, k)| k).collect()
+}
+
+/// NaN-safe argmax over a logit row. Uses the IEEE total order
+/// (`f32::total_cmp`), so a non-finite logit yields a deterministic
+/// prediction instead of panicking the worker thread; -1 on an empty row.
+pub fn argmax_logit(row: &[f32]) -> i32 {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i as i32)
+        .unwrap_or(-1)
+}
+
+// ---------------------------------------------------------------------------
+// Worker pool + server
 // ---------------------------------------------------------------------------
 
 #[derive(Debug, Clone)]
@@ -130,49 +230,77 @@ pub struct ServerConfig {
     pub checkpoint: std::path::PathBuf,
     pub max_wait: Duration,
     pub seq: usize,
+    /// worker pool size; each worker opens its own backend instance
+    pub workers: usize,
+    /// bounded admission: requests beyond this queue depth are shed
+    pub queue_cap: usize,
 }
 
 enum Msg {
     Req(Pending, mpsc::Sender<Response>),
     Stats(mpsc::Sender<ServerStats>),
+    Done(BatchReport),
     Shutdown,
+}
+
+/// One batch handed to a worker: the owned queue entries plus the planned
+/// bucket capacity.
+struct Job {
+    entries: Vec<(Pending, mpsc::Sender<Response>)>,
+    bucket: usize,
+}
+
+enum WorkerMsg {
+    Job(Job),
+    Stop,
+}
+
+/// What a worker reports back to the dispatcher after a batch.
+struct BatchReport {
+    worker: usize,
+    alpha: f32,
+    bucket: usize,
+    latencies: Vec<Duration>,
+    flops: Vec<f64>,
+    exec: Duration,
+    ok: bool,
 }
 
 #[derive(Debug, Clone, Default)]
 pub struct ServerStats {
     pub served: usize,
+    /// requests rejected by admission control (queue at cap)
+    pub shed: usize,
     pub batches: usize,
+    /// admission-queue depth at snapshot time
+    pub queue_depth: usize,
+    /// high-water mark of the admission queue
+    pub queue_peak: usize,
     pub mean_latency_ms: f64,
     pub p50_ms: f64,
     pub p99_ms: f64,
     pub mean_batch_size: f64,
     pub mean_flops_reduction: f64,
+    pub workers: Vec<WorkerSnapshot>,
+    pub per_alpha: Vec<AlphaSummary>,
 }
 
-pub struct Server {
+/// Cloneable, thread-safe submission handle — the multi-producer ingress
+/// to the dispatcher (one `Submitter` clone per client thread).
+#[derive(Clone)]
+pub struct Submitter {
     tx: mpsc::Sender<Msg>,
-    handle: Option<JoinHandle<Result<()>>>,
-    next_id: std::sync::atomic::AtomicU64,
+    next_id: Arc<AtomicU64>,
 }
 
-impl Server {
-    /// Start the worker thread: opens the backend, loads the checkpoint,
-    /// warms up the serving buckets, then enters the batch loop.
-    pub fn start(backend: BackendSpec, cfg: ServerConfig) -> Result<Server> {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let handle = std::thread::spawn(move || worker_loop(backend, cfg, rx, ready_tx));
-        ready_rx
-            .recv()
-            .context("worker died during startup")?
-            .context("worker startup failed")?;
-        Ok(Server { tx, handle: Some(handle), next_id: std::sync::atomic::AtomicU64::new(1) })
-    }
-
+impl Submitter {
     /// Submit a request; returns the channel the response arrives on.
+    /// Exactly one response arrives per request (a load-shed response if
+    /// admission control rejects it); the channel closes with no response
+    /// only if the server shuts down or the batch fails mid-flight.
     pub fn submit(&self, text: &str, alpha: f32, mode: &str) -> mpsc::Receiver<Response> {
         let (rtx, rrx) = mpsc::channel();
-        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let pending = Pending {
             req: Request { id, text: text.to_string(), alpha, mode: mode.to_string() },
             arrived: Instant::now(),
@@ -180,17 +308,87 @@ impl Server {
         let _ = self.tx.send(Msg::Req(pending, rtx));
         rrx
     }
+}
+
+pub struct Server {
+    sub: Submitter,
+    handle: Option<JoinHandle<Result<()>>>,
+}
+
+impl Server {
+    /// Start the pool: spawns `cfg.workers` model workers (each opens the
+    /// backend, loads the checkpoint and warms up the serving buckets),
+    /// then the dispatcher thread. Fails if any worker fails to start.
+    pub fn start(backend: BackendSpec, cfg: ServerConfig) -> Result<Server> {
+        let n_workers = cfg.workers.max(1);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        // Divide host cores among the workers so N native backend
+        // instances don't oversubscribe the machine.
+        let intra = (threadpool::default_workers() / n_workers).max(1);
+        let mut job_txs = Vec::with_capacity(n_workers);
+        let mut ready_rxs = Vec::with_capacity(n_workers);
+        let mut handles = Vec::with_capacity(n_workers);
+        for id in 0..n_workers {
+            let (jtx, jrx) = mpsc::channel::<WorkerMsg>();
+            let (rtx, rrx) = mpsc::channel::<Result<Vec<usize>>>();
+            let spec = backend.clone();
+            let wcfg = cfg.clone();
+            let events = tx.clone();
+            let h =
+                std::thread::spawn(move || worker_loop(id, spec, wcfg, intra, jrx, events, rtx));
+            handles.push(h);
+            job_txs.push(jtx);
+            ready_rxs.push(rrx);
+        }
+        let mut buckets = Vec::new();
+        for (id, rrx) in ready_rxs.into_iter().enumerate() {
+            match rrx.recv() {
+                Ok(Ok(b)) => buckets = b,
+                Ok(Err(e)) => {
+                    drop(job_txs); // surviving workers exit on channel close
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(e.context(format!("worker {id} failed to start")));
+                }
+                Err(_) => {
+                    drop(job_txs);
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    bail!("worker {id} died during startup");
+                }
+            }
+        }
+        let dcfg = cfg;
+        let handle =
+            std::thread::spawn(move || dispatcher_loop(dcfg, buckets, rx, job_txs, handles));
+        Ok(Server {
+            sub: Submitter { tx, next_id: Arc::new(AtomicU64::new(1)) },
+            handle: Some(handle),
+        })
+    }
+
+    /// Submit a request; returns the channel the response arrives on.
+    pub fn submit(&self, text: &str, alpha: f32, mode: &str) -> mpsc::Receiver<Response> {
+        self.sub.submit(text, alpha, mode)
+    }
+
+    /// A cloneable handle for submitting from other threads.
+    pub fn submitter(&self) -> Submitter {
+        self.sub.clone()
+    }
 
     pub fn stats(&self) -> Result<ServerStats> {
         let (stx, srx) = mpsc::channel();
-        self.tx.send(Msg::Stats(stx)).ok().context("server down")?;
+        self.sub.tx.send(Msg::Stats(stx)).ok().context("server down")?;
         srx.recv().context("server down")
     }
 
     pub fn shutdown(mut self) -> Result<()> {
-        let _ = self.tx.send(Msg::Shutdown);
+        let _ = self.sub.tx.send(Msg::Shutdown);
         if let Some(h) = self.handle.take() {
-            h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+            h.join().map_err(|_| anyhow::anyhow!("dispatcher panicked"))??;
         }
         Ok(())
     }
@@ -198,14 +396,204 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
+        let _ = self.sub.tx.send(Msg::Shutdown);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
     }
 }
 
+// ---------------------------------------------------------------------------
+// Dispatcher
+// ---------------------------------------------------------------------------
+
+fn dispatcher_loop(
+    cfg: ServerConfig,
+    buckets: Vec<usize>,
+    rx: mpsc::Receiver<Msg>,
+    job_txs: Vec<mpsc::Sender<WorkerMsg>>,
+    worker_handles: Vec<JoinHandle<()>>,
+) -> Result<()> {
+    let n_workers = job_txs.len();
+    let queue_cap = cfg.queue_cap.max(1);
+    let mut metrics = ServingMetrics::new(n_workers);
+    let mut queue: VecDeque<(Pending, mpsc::Sender<Response>)> = VecDeque::new();
+    let mut idle: Vec<usize> = (0..n_workers).rev().collect();
+    let mut alive = n_workers;
+
+    'serve: loop {
+        // Block briefly for the next event so batching windows fire even
+        // when idle, then drain whatever else is already queued.
+        let mut msgs: Vec<Msg> = Vec::new();
+        match rx.recv_timeout(cfg.max_wait / 2) {
+            Ok(m) => msgs.push(m),
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break 'serve,
+        }
+        while let Ok(m) = rx.try_recv() {
+            msgs.push(m);
+        }
+        for msg in msgs {
+            match msg {
+                Msg::Req(p, rtx) => {
+                    if queue.len() >= queue_cap {
+                        // Admission control: shed instead of queueing
+                        // unboundedly; the caller gets an immediate
+                        // load-shed response.
+                        metrics.on_shed();
+                        let _ = rtx.send(shed_response(&p));
+                    } else {
+                        queue.push_back((p, rtx));
+                        metrics.on_queue_depth(queue.len());
+                    }
+                }
+                Msg::Stats(stx) => {
+                    let _ = stx.send(stats_snapshot(&metrics, queue.len()));
+                }
+                Msg::Done(report) => {
+                    idle.push(report.worker);
+                    if report.ok {
+                        metrics.on_batch(
+                            report.worker,
+                            report.alpha,
+                            report.bucket,
+                            &report.latencies,
+                            &report.flops,
+                            report.exec,
+                        );
+                    } else {
+                        metrics.on_failed_batch(report.worker);
+                    }
+                }
+                Msg::Shutdown => break 'serve,
+            }
+        }
+        dispatch(&mut queue, &mut idle, &mut alive, &job_txs, &buckets, &cfg);
+        if alive == 0 {
+            // Every worker is gone: dropping the queued entries closes
+            // their response channels, so clients get an error instead of
+            // blocking forever on a queue nobody will ever drain.
+            queue.clear();
+        }
+    }
+
+    // Drain the pool: undispatched queue entries are dropped (their
+    // response senders close), workers finish any in-flight batch first.
+    for tx in &job_txs {
+        let _ = tx.send(WorkerMsg::Stop);
+    }
+    let mut worker_panicked = false;
+    for h in worker_handles {
+        if h.join().is_err() {
+            worker_panicked = true;
+        }
+    }
+    if worker_panicked {
+        bail!("a worker thread panicked");
+    }
+    Ok(())
+}
+
+/// Hand ready batches to idle workers, cheapest-ready-first. All ready
+/// plans from one queue snapshot (they are disjoint by construction) are
+/// dispatched before re-planning, so the snapshot clone happens once per
+/// round rather than once per batch.
+fn dispatch(
+    queue: &mut VecDeque<(Pending, mpsc::Sender<Response>)>,
+    idle: &mut Vec<usize>,
+    alive: &mut usize,
+    job_txs: &[mpsc::Sender<WorkerMsg>],
+    buckets: &[usize],
+    cfg: &ServerConfig,
+) {
+    loop {
+        if idle.is_empty() || queue.is_empty() {
+            return;
+        }
+        let pendings: Vec<Pending> = queue.iter().map(|(p, _)| p.clone()).collect();
+        let now = Instant::now();
+        let plans = plan_batches(&pendings, buckets, cfg.max_wait, now);
+        if plans.is_empty() {
+            return;
+        }
+        let order = rank_plans(&pendings, &plans, cfg.max_wait, now);
+        let take = order.len().min(idle.len());
+        let chosen: Vec<&BatchPlan> = order[..take].iter().map(|&k| &plans[k]).collect();
+        // Extract every chosen entry in one pass: the plans are disjoint,
+        // so removing in globally descending queue-index order keeps all
+        // remaining indices valid.
+        let mut flat: Vec<(usize, usize)> = Vec::new(); // (queue index, chosen slot)
+        for (slot, plan) in chosen.iter().enumerate() {
+            for &i in &plan.indices {
+                flat.push((i, slot));
+            }
+        }
+        flat.sort_unstable_by(|a, b| b.0.cmp(&a.0));
+        let mut per_plan: Vec<Vec<(Pending, mpsc::Sender<Response>)>> =
+            chosen.iter().map(|p| Vec::with_capacity(p.indices.len())).collect();
+        for (i, slot) in flat {
+            per_plan[slot].push(queue.remove(i).expect("planned index in range"));
+        }
+        for (slot, mut entries) in per_plan.into_iter().enumerate() {
+            entries.reverse(); // descending extraction -> FIFO order
+            let wid = idle.pop().expect("take sized by idle.len()");
+            let job = WorkerMsg::Job(Job { entries, bucket: chosen[slot].bucket });
+            if job_txs[wid].send(job).is_err() {
+                // Worker died outside the per-job panic guard: its
+                // requests are dropped (response senders close, clients
+                // error out) and the slot is permanently retired.
+                *alive = alive.saturating_sub(1);
+            }
+        }
+        // Loop: more plans may be ready than workers were idle, or new
+        // plans may have become ready against the shrunk queue.
+    }
+}
+
+fn shed_response(p: &Pending) -> Response {
+    Response {
+        id: p.req.id,
+        pred_class: -1,
+        logits: Vec::new(),
+        flops_reduction: 1.0,
+        latency: Duration::ZERO,
+        batch_size: 0,
+        alpha: p.req.alpha,
+        mode: p.req.mode.clone(),
+        shed: true,
+    }
+}
+
+fn stats_snapshot(metrics: &ServingMetrics, queue_depth: usize) -> ServerStats {
+    let lat = metrics.total_lat();
+    let served = metrics.served();
+    let batches = metrics.batches();
+    ServerStats {
+        served,
+        shed: metrics.shed,
+        batches,
+        queue_depth,
+        queue_peak: metrics.queue_peak,
+        mean_latency_ms: lat.mean_ms(),
+        p50_ms: lat.p50_ms(),
+        p99_ms: lat.p99_ms(),
+        mean_batch_size: if batches > 0 {
+            metrics.batch_size_sum() as f64 / batches as f64
+        } else {
+            0.0
+        },
+        mean_flops_reduction: if served > 0 { metrics.flops_sum() / served as f64 } else { 0.0 },
+        workers: metrics.worker_snapshots(),
+        per_alpha: metrics.alpha_summaries(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model worker
+// ---------------------------------------------------------------------------
+
 struct WorkerState {
+    id: usize,
     backend: Box<dyn Backend>,
     params: Params,
     tok: Tokenizer,
@@ -213,22 +601,20 @@ struct WorkerState {
     buckets: Vec<usize>,
     dims: AttnDims,
     n_layers: usize,
-    stats_lat: LatencyStats,
-    served: usize,
-    batches: usize,
-    batch_size_sum: usize,
-    flops_sum: f64,
 }
 
 fn worker_loop(
+    id: usize,
     backend_spec: BackendSpec,
     cfg: ServerConfig,
-    rx: mpsc::Receiver<Msg>,
-    ready_tx: mpsc::Sender<Result<()>>,
-) -> Result<()> {
+    intra_threads: usize,
+    jobs: mpsc::Receiver<WorkerMsg>,
+    events: mpsc::Sender<Msg>,
+    ready: mpsc::Sender<Result<Vec<usize>>>,
+) {
     // --- startup ---------------------------------------------------------
     let init = (|| -> Result<WorkerState> {
-        let mut backend = open_backend(&backend_spec)?;
+        let mut backend = open_backend_sized(&backend_spec, Some(intra_threads))?;
         let model = backend.model(&cfg.model)?;
         let params = Params::load(&cfg.checkpoint, &model)?;
         let buckets = backend.buckets(&cfg.model, cfg.seq)?;
@@ -236,6 +622,7 @@ fn worker_loop(
             backend.warmup(&ForwardSpec::new(&cfg.model, "mca", b, cfg.seq))?;
         }
         Ok(WorkerState {
+            id,
             dims: AttnDims { d_model: model.d_model, window: model.window },
             n_layers: model.n_layers,
             backend,
@@ -243,127 +630,92 @@ fn worker_loop(
             tok: Tokenizer::new(),
             cfg,
             buckets,
-            stats_lat: LatencyStats::default(),
-            served: 0,
-            batches: 0,
-            batch_size_sum: 0,
-            flops_sum: 0.0,
         })
     })();
 
     let mut st = match init {
         Ok(st) => {
-            let _ = ready_tx.send(Ok(()));
+            let _ = ready.send(Ok(st.buckets.clone()));
             st
         }
         Err(e) => {
-            let _ = ready_tx.send(Err(e));
-            return Ok(());
+            let _ = ready.send(Err(e));
+            return;
         }
     };
 
     // --- serve loop -------------------------------------------------------
-    let mut queue: VecDeque<(Pending, mpsc::Sender<Response>)> = VecDeque::new();
-    loop {
-        // Block briefly for new work, so timeouts fire even when idle.
-        match rx.recv_timeout(st.cfg.max_wait / 2) {
-            Ok(Msg::Req(p, tx)) => queue.push_back((p, tx)),
-            Ok(Msg::Stats(tx)) => {
-                let _ = tx.send(stats_snapshot(&st));
-                continue;
-            }
-            Ok(Msg::Shutdown) => break,
-            Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => break,
-        }
-        // Drain whatever else is already queued.
-        while let Ok(msg) = rx.try_recv() {
-            match msg {
-                Msg::Req(p, tx) => queue.push_back((p, tx)),
-                Msg::Stats(tx) => {
-                    let _ = tx.send(stats_snapshot(&st));
+    while let Ok(msg) = jobs.recv() {
+        match msg {
+            WorkerMsg::Job(job) => {
+                // A panicking batch must not kill the worker (a dead pool
+                // would strand the admission queue and hang clients): the
+                // unwound job drops its response senders (clients see an
+                // error) and the worker reports a failed batch.
+                let alpha = job.entries[0].0.req.alpha;
+                let bucket = job.bucket;
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    execute_job(&mut st, job)
+                }));
+                let (report, deliveries) = outcome.unwrap_or_else(|_| {
+                    eprintln!("[serve:w{id}] batch panicked; its requests are dropped");
+                    let report = BatchReport {
+                        worker: id,
+                        alpha,
+                        bucket,
+                        latencies: Vec::new(),
+                        flops: Vec::new(),
+                        exec: Duration::ZERO,
+                        ok: false,
+                    };
+                    (report, Vec::new())
+                });
+                // Report to the dispatcher BEFORE delivering responses:
+                // a client that sees its response and immediately asks
+                // for stats then observes this batch in the counters
+                // (mpsc dequeue order respects cross-thread causality).
+                let dispatcher_alive = events.send(Msg::Done(report)).is_ok();
+                for (rtx, resp) in deliveries {
+                    let _ = rtx.send(resp);
                 }
-                Msg::Shutdown => return Ok(()),
+                if !dispatcher_alive {
+                    break;
+                }
             }
+            WorkerMsg::Stop => break,
         }
-
-        let pendings: Vec<Pending> = queue.iter().map(|(p, _)| p.clone()).collect();
-        let plans = plan_batches(&pendings, &st.buckets, st.cfg.max_wait, Instant::now());
-        if plans.is_empty() {
-            continue;
-        }
-        // Execute plans; collect served queue indices, then drop them. A
-        // failing batch must not kill the worker: log it, drop its
-        // requests (their response senders close, so callers see an
-        // error instead of a hang) and keep serving.
-        let mut served_idx: Vec<usize> = Vec::new();
-        for plan in &plans {
-            if let Err(e) = execute_plan(&mut st, &queue, plan) {
-                eprintln!("[serve] batch of {} failed: {e:#}", plan.indices.len());
-            }
-            served_idx.extend(plan.indices.iter().copied());
-        }
-        served_idx.sort_unstable_by(|a, b| b.cmp(a));
-        for i in served_idx {
-            queue.remove(i);
-        }
-    }
-    Ok(())
-}
-
-fn stats_snapshot(st: &WorkerState) -> ServerStats {
-    ServerStats {
-        served: st.served,
-        batches: st.batches,
-        mean_latency_ms: st.stats_lat.mean_ms(),
-        p50_ms: st.stats_lat.p50_ms(),
-        p99_ms: st.stats_lat.p99_ms(),
-        mean_batch_size: if st.batches > 0 {
-            st.batch_size_sum as f64 / st.batches as f64
-        } else {
-            0.0
-        },
-        mean_flops_reduction: if st.served > 0 {
-            st.flops_sum / st.served as f64
-        } else {
-            0.0
-        },
     }
 }
 
-fn execute_plan(
-    st: &mut WorkerState,
-    queue: &VecDeque<(Pending, mpsc::Sender<Response>)>,
-    plan: &BatchPlan,
-) -> Result<()> {
-    let first = &queue[plan.indices[0]].0.req;
-    let mode = first.mode.as_str();
-    let alpha = first.alpha;
+type Deliveries = Vec<(mpsc::Sender<Response>, Response)>;
+
+fn execute_job(st: &mut WorkerState, job: Job) -> (BatchReport, Deliveries) {
     let seq = st.cfg.seq;
+    let first = job.entries[0].0.req.clone();
+    let alpha = first.alpha;
+    let first_id = first.id;
+    let mut mode = first.mode.clone();
+    let n = job.entries.len();
 
     // Backends with compiled shapes need the full padded bucket (unused
     // rows repeat row 0 and are discarded); shape-free backends run the
     // actual group size and skip the padding compute.
-    let run_batch = if st.backend.fixed_batch_shapes() {
-        plan.bucket
-    } else {
-        plan.indices.len()
-    };
+    let run_batch = if st.backend.fixed_batch_shapes() { job.bucket } else { n };
     let mut ids = vec![0i32; run_batch * seq];
-    for (slot, &qi) in plan.indices.iter().enumerate() {
-        let toks = st.tok.encode(&queue[qi].0.req.text, seq);
+    for (slot, (pending, _)) in job.entries.iter().enumerate() {
+        let toks = st.tok.encode(&pending.req.text, seq);
         for (j, &t) in toks.iter().enumerate() {
             ids[slot * seq + j] = t;
         }
     }
-    for slot in plan.indices.len()..run_batch {
+    for slot in n..run_batch {
         for j in 0..seq {
             ids[slot * seq + j] = ids[j];
         }
     }
     let ids_hv = HostValue::I32 { shape: vec![run_batch, seq], data: ids };
 
-    let mut spec = ForwardSpec::new(&st.cfg.model, mode, run_batch, seq);
+    let mut spec = ForwardSpec::new(&st.cfg.model, &mode, run_batch, seq);
     // A backend may lack this (mode, batch) combination — e.g. exact
     // artifacts are only compiled at some batch sizes. `warmup` is the
     // resolution probe (it compiles the exact shape on PJRT, a no-op on
@@ -372,24 +724,43 @@ fn execute_plan(
     // that asked for exact logits is never silently served sampled ones.
     if mode != "mca" {
         if let Err(e) = st.backend.warmup(&spec) {
-            eprintln!("[serve] no {mode} path at batch {run_batch} ({e:#}); degrading to mca");
+            eprintln!(
+                "[serve:w{}] no {mode} path at batch {run_batch} ({e:#}); degrading to mca",
+                st.id
+            );
             spec.mode = "mca".to_string();
+            mode = "mca".to_string();
         }
     }
     let t0 = Instant::now();
-    let fwd = st.backend.forward(&spec, &st.params, &ids_hv, alpha, first.id as u32)?;
-    let elapsed = t0.elapsed();
+    let fwd = match st.backend.forward(&spec, &st.params, &ids_hv, alpha, first_id as u32) {
+        Ok(f) => f,
+        Err(e) => {
+            // A failing batch must not kill the worker: drop its requests
+            // (their response senders close, so callers see an error
+            // instead of a hang) and keep serving.
+            eprintln!("[serve:w{}] batch of {n} failed: {e:#}", st.id);
+            let report = BatchReport {
+                worker: st.id,
+                alpha,
+                bucket: job.bucket,
+                latencies: Vec::new(),
+                flops: Vec::new(),
+                exec: t0.elapsed(),
+                ok: false,
+            };
+            return (report, Vec::new());
+        }
+    };
+    let exec = t0.elapsed();
 
     let ncl = fwd.n_classes;
-    for (slot, &qi) in plan.indices.iter().enumerate() {
-        let (pending, tx) = &queue[qi];
+    let mut latencies = Vec::with_capacity(n);
+    let mut flops_red = Vec::with_capacity(n);
+    let mut deliveries: Deliveries = Vec::with_capacity(n);
+    for (slot, (pending, rtx)) in job.entries.into_iter().enumerate() {
         let row = &fwd.logits[slot * ncl..(slot + 1) * ncl];
-        let pred = row
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0 as i32;
+        let pred = argmax_logit(row);
         let reduction = if mode == "exact" || fwd.n_eff[slot] == 0.0 {
             1.0
         } else {
@@ -400,22 +771,31 @@ fn execute_plan(
             )
         };
         let latency = pending.arrived.elapsed();
-        st.stats_lat.record(latency);
-        st.served += 1;
-        st.flops_sum += reduction;
-        let _ = tx.send(Response {
+        latencies.push(latency);
+        flops_red.push(reduction);
+        let resp = Response {
             id: pending.req.id,
             pred_class: pred,
             logits: row.to_vec(),
             flops_reduction: reduction,
             latency,
-            batch_size: plan.indices.len(),
-        });
+            batch_size: n,
+            alpha,
+            mode: mode.clone(),
+            shed: false,
+        };
+        deliveries.push((rtx, resp));
     }
-    st.batches += 1;
-    st.batch_size_sum += plan.indices.len();
-    let _ = elapsed;
-    Ok(())
+    let report = BatchReport {
+        worker: st.id,
+        alpha,
+        bucket: job.bucket,
+        latencies,
+        flops: flops_red,
+        exec,
+        ok: true,
+    };
+    (report, deliveries)
 }
 
 #[cfg(test)]
@@ -487,6 +867,34 @@ mod tests {
     }
 
     #[test]
+    fn ready_group_behind_fresh_head_is_planned() {
+        // Regression: a lone fresh request at the head must not block a
+        // complete compatibility bucket queued behind it.
+        let now = Instant::now();
+        let mut q = vec![pending(0, 0.2, "mca", 0, now)];
+        for i in 1..=8 {
+            q.push(pending(i, 0.6, "mca", 50, now));
+        }
+        let plans = plan_batches(&q, &[1, 8], Duration::from_millis(100), now);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].indices, (1..=8).collect::<Vec<usize>>());
+        assert_eq!(plans[0].bucket, 8);
+    }
+
+    #[test]
+    fn timed_out_group_behind_fresh_head_is_planned() {
+        let now = Instant::now();
+        let q = vec![
+            pending(0, 0.2, "mca", 0, now),
+            pending(1, 0.6, "mca", 500, now),
+            pending(2, 0.6, "mca", 500, now),
+        ];
+        let plans = plan_batches(&q, &[1, 8], Duration::from_millis(100), now);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].indices, vec![1, 2]);
+    }
+
+    #[test]
     fn batcher_invariants_property() {
         prop::check(300, |g| {
             let now = Instant::now();
@@ -533,5 +941,141 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn no_ready_group_left_unplanned_property() {
+        // The head-of-line regression, pinned as an invariant: after
+        // planning, every remaining compatibility group must be under-full
+        // with no timed-out member, and FIFO order holds within batches.
+        prop::check(300, |g| {
+            let now = Instant::now();
+            let n = g.usize(0..24);
+            let alphas = [0.2f32, 0.4, 0.6];
+            let modes = ["mca", "exact"];
+            let max_wait = Duration::from_millis(100);
+            let q: Vec<Pending> = (0..n)
+                .map(|i| {
+                    pending(
+                        i as u64,
+                        *g.choose(&alphas),
+                        *g.choose(&modes),
+                        g.u64(0..300),
+                        now,
+                    )
+                })
+                .collect();
+            let buckets = [1usize, 8];
+            let max_bucket = 8usize;
+            let plans = plan_batches(&q, &buckets, max_wait, now);
+
+            let mut used = vec![false; n];
+            for plan in &plans {
+                if plan.indices.windows(2).any(|w| w[0] >= w[1]) {
+                    return Err("batch not in FIFO (queue) order".into());
+                }
+                for &i in &plan.indices {
+                    if used[i] {
+                        return Err(format!("request {i} planned twice"));
+                    }
+                    used[i] = true;
+                }
+            }
+            let mut rest: std::collections::BTreeMap<(String, u32), (usize, Duration)> =
+                Default::default();
+            for i in 0..n {
+                if used[i] {
+                    continue;
+                }
+                let key = (q[i].req.mode.clone(), q[i].req.alpha.to_bits());
+                let waited = now.saturating_duration_since(q[i].arrived);
+                let e = rest.entry(key).or_insert((0, Duration::ZERO));
+                e.0 += 1;
+                e.1 = e.1.max(waited);
+            }
+            for ((mode, bits), (count, waited)) in rest {
+                if count >= max_bucket {
+                    return Err(format!(
+                        "full group ({mode}, {:.2}) of {count} left unplanned",
+                        f32::from_bits(bits)
+                    ));
+                }
+                if waited >= max_wait {
+                    return Err(format!(
+                        "timed-out group ({mode}, {:.2}) left unplanned",
+                        f32::from_bits(bits)
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn argmax_is_nan_safe_and_deterministic() {
+        // A non-finite logit must give a deterministic prediction, not a
+        // worker-thread panic (regression for partial_cmp().unwrap()).
+        let with_nan = [f32::NAN, 1.0, 2.0];
+        let a = argmax_logit(&with_nan);
+        for _ in 0..10 {
+            assert_eq!(argmax_logit(&with_nan), a);
+        }
+        assert!((0..3).contains(&a));
+        // total order: +NaN sorts above +inf, so index 0 here
+        assert_eq!(a, 0);
+        assert_eq!(argmax_logit(&[1.0, f32::INFINITY, 0.0]), 1);
+        assert_eq!(argmax_logit(&[f32::NEG_INFINITY, -1.0]), 1);
+        assert_eq!(argmax_logit(&[3.0, 1.0, 2.0]), 0);
+        assert_eq!(argmax_logit(&[]), -1);
+    }
+
+    #[test]
+    fn batch_cost_alpha_aware() {
+        // exact is the most expensive at equal rows
+        assert!(batch_cost("exact", 1.0, 8) > batch_cost("mca", 0.8, 8));
+        // monotone: higher α -> cheaper
+        assert!(batch_cost("mca", 0.4, 8) > batch_cost("mca", 0.8, 8));
+        // clamped: very low α approaches the exact cost, never exceeds it
+        assert!(batch_cost("mca", 0.1, 8) <= batch_cost("exact", 0.1, 8) + 1e-12);
+        // scales with rows
+        assert!(batch_cost("mca", 0.6, 8) > batch_cost("mca", 0.6, 2));
+    }
+
+    #[test]
+    fn rank_plans_cheap_batches_overtake_exact() {
+        let now = Instant::now();
+        let max_wait = Duration::from_millis(100);
+        let mut q = Vec::new();
+        for i in 0..8 {
+            q.push(pending(i, 1.0, "exact", 150, now));
+        }
+        for i in 8..16 {
+            q.push(pending(i, 0.8, "mca", 150, now));
+        }
+        let plans = plan_batches(&q, &[1, 8], max_wait, now);
+        assert_eq!(plans.len(), 2);
+        let order = rank_plans(&q, &plans, max_wait, now);
+        // the cheap high-α MCA batch dispatches before the exact batch
+        let first = &plans[order[0]];
+        assert_eq!(q[first.indices[0]].req.mode, "mca");
+    }
+
+    #[test]
+    fn rank_plans_starvation_guard_beats_cost() {
+        let now = Instant::now();
+        let max_wait = Duration::from_millis(100);
+        let mut q = Vec::new();
+        // exact batch overdue (≥ 4 windows), cheap mca batch merely ready
+        for i in 0..8 {
+            q.push(pending(i, 1.0, "exact", 500, now));
+        }
+        for i in 8..16 {
+            q.push(pending(i, 0.8, "mca", 150, now));
+        }
+        let plans = plan_batches(&q, &[1, 8], max_wait, now);
+        assert_eq!(plans.len(), 2);
+        let order = rank_plans(&q, &plans, max_wait, now);
+        let first = &plans[order[0]];
+        assert_eq!(q[first.indices[0]].req.mode, "exact");
     }
 }

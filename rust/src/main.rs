@@ -55,8 +55,10 @@ fn print_help() {
            figure2     accuracy vs alpha (Figure 2)\n\
            ablations   r-strategy + sampling-distribution ablations\n\
            train       fine-tune one model on one task\n\
-           serve       serving demo with dynamic batching\n\
-           loadtest    open-loop Poisson load sweep against the server\n\
+           serve       serving demo (worker pool, dynamic batching, live α;\n\
+                       --workers N --queue-cap M select pool size + admission cap)\n\
+           loadtest    open-loop Poisson load sweep against the worker pool\n\
+                       (sweeps --workers, writes BENCH_serving.json)\n\
            bounds      Lemma-1 / Theorem-2 bound-tightness table\n\
            project     project measured FLOPs reductions to the paper's d\n\
            validate    compile every artifact (pjrt builds only)\n\
@@ -284,6 +286,8 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
                 .opt("task", "sst2_sim", "task checkpoint to serve")
                 .opt("requests", "64", "demo request count")
                 .opt("max-wait-ms", "20", "batching window")
+                .opt("workers", "2", "worker pool size (backend instances)")
+                .opt("queue-cap", "512", "admission queue cap (requests beyond it are shed)")
                 .parse(rest)?;
             if args.get_flag("help-cmd") {
                 eprint!("{}", args.usage(cmd));
@@ -362,13 +366,18 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
             emit(&args, &text)
         }
         "loadtest" => {
-            // Open-loop Poisson load sweep against the serving coordinator.
+            // Open-loop Poisson load sweep against the serving worker pool.
             let args = common(Args::new())
                 .opt("model", "bert_sim", "model config")
                 .opt("task", "sst2_sim", "task checkpoint to serve")
                 .opt("rates", "20,50,100,200", "offered rates (req/s)")
                 .opt("secs", "3", "duration per rate")
                 .opt("max-wait-ms", "10", "batching window")
+                .opt("workers", "1,4", "worker pool sizes to sweep (comma list)")
+                .opt("queue-cap", "512", "admission queue cap (requests beyond it are shed)")
+                .opt("seed", "7", "workload seed (arrivals + α mixture)")
+                .opt("burst", "128", "closed-burst size per worker count (0 to skip)")
+                .opt("json", "BENCH_serving.json", "machine-readable results (empty to skip)")
                 .parse(rest)?;
             if args.get_flag("help-cmd") {
                 eprint!("{}", args.usage(cmd));
@@ -475,7 +484,7 @@ fn project_cmd(args: &Args) -> Result<()> {
 }
 
 fn loadtest(args: &Args) -> Result<()> {
-    use mca::coordinator::loadgen::{run_load, Workload};
+    use mca::coordinator::loadgen::{run_burst, run_load, write_bench_json, LoadResult, Workload};
     use mca::coordinator::{Server, ServerConfig};
     use std::time::Duration;
 
@@ -492,15 +501,6 @@ fn loadtest(args: &Args) -> Result<()> {
         std::fs::create_dir_all(&p.ckpt_root)?;
         out.params.save(&ckpt)?;
     }
-    let server = Server::start(
-        p.backend.clone(),
-        ServerConfig {
-            model: model.clone(),
-            checkpoint: ckpt,
-            max_wait: Duration::from_millis(args.get_u64("max-wait-ms")?),
-            seq: 64,
-        },
-    )?;
     let spec = data::task_by_name(&task).unwrap();
     let ds = data::generate(&spec, p.data_seed);
     let tok = mca::tokenizer::Tokenizer::new();
@@ -511,28 +511,71 @@ fn loadtest(args: &Args) -> Result<()> {
         .map(|e| tok.decode(&e.ids).replace("[CLS] ", "").replace(" [SEP]", ""))
         .collect();
 
+    let worker_counts = args.get_usize_list("workers")?;
+    let rates = args.get_f64_list("rates")?;
+    let seed = args.get_u64("seed")?;
     let mut text = String::from(
-        "| offered req/s | achieved | mean ms | p50 ms | p99 ms | FLOPs red. |\n|---|---|---|---|---|---|\n",
+        "| workers | offered req/s | achieved | shed | mean ms | p50 ms | p99 ms | FLOPs red. |\n|---|---|---|---|---|---|---|---|\n",
     );
-    for rate in args.get_f64_list("rates")? {
-        let wl = Workload {
-            rate,
-            duration: Duration::from_secs(args.get_u64("secs")?),
-            alpha_mix: vec![(0.2, 1.0), (0.4, 1.0), (0.6, 1.0)],
-            seed: 7,
-        };
-        let r = run_load(&server, &texts, &wl)?;
-        eprintln!(
-            "[loadtest] offered {rate:.0}: achieved {:.1}, p99 {:.1}ms",
-            r.achieved, r.p99_ms
-        );
-        text.push_str(&format!(
-            "| {:.0} | {:.1} | {:.1} | {:.1} | {:.1} | {:.2}× |\n",
-            r.offered, r.achieved, r.mean_ms, r.p50_ms, r.p99_ms, r.mean_flops_reduction
-        ));
+    let alpha_mix = vec![(0.2f32, 1.0f64), (0.4, 1.0), (0.6, 1.0)];
+    let burst = args.get_usize("burst")?;
+    let mut entries: Vec<(usize, String, LoadResult)> = Vec::new();
+    for &workers in &worker_counts {
+        // Same seed per worker count: identical arrival process and α
+        // mixture, so throughput deltas are attributable to the pool.
+        let server = Server::start(
+            p.backend.clone(),
+            ServerConfig {
+                model: model.clone(),
+                checkpoint: ckpt.clone(),
+                max_wait: Duration::from_millis(args.get_u64("max-wait-ms")?),
+                seq: 64,
+                workers,
+                queue_cap: args.get_usize("queue-cap")?,
+            },
+        )?;
+        for &rate in &rates {
+            let wl = Workload {
+                rate,
+                duration: Duration::from_secs(args.get_u64("secs")?),
+                alpha_mix: alpha_mix.clone(),
+                seed,
+            };
+            let r = run_load(&server, &texts, &wl)?;
+            eprintln!(
+                "[loadtest] w={workers} offered {rate:.0}: achieved {:.1}, p99 {:.1}ms, shed {}",
+                r.achieved, r.p99_ms, r.shed
+            );
+            text.push_str(&format!(
+                "| {workers} | {:.0} | {:.1} | {} | {:.1} | {:.1} | {:.1} | {:.2}× |\n",
+                r.offered, r.achieved, r.shed, r.mean_ms, r.p50_ms, r.p99_ms,
+                r.mean_flops_reduction
+            ));
+            entries.push((workers, "open_loop".to_string(), r));
+        }
+        if burst > 0 {
+            // Closed burst: the drain rate is the saturated-throughput
+            // signal that separates worker counts even when the open-loop
+            // rates sit below saturation.
+            let r = run_burst(&server, &texts, burst, &alpha_mix, seed)?;
+            eprintln!(
+                "[loadtest] w={workers} burst({burst}): drained at {:.1} req/s, p99 {:.1}ms",
+                r.achieved, r.p99_ms
+            );
+            text.push_str(&format!(
+                "| {workers} | burst({burst}) | {:.1} | {} | {:.1} | {:.1} | {:.1} | {:.2}× |\n",
+                r.achieved, r.shed, r.mean_ms, r.p50_ms, r.p99_ms, r.mean_flops_reduction
+            ));
+            entries.push((workers, "burst".to_string(), r));
+        }
+        server.shutdown()?;
     }
-    emit(args, &text)?;
-    server.shutdown()
+    let json_path = args.get("json");
+    if !json_path.is_empty() {
+        write_bench_json(std::path::Path::new(&json_path), &model, &entries)?;
+        eprintln!("[loadtest] wrote {json_path}");
+    }
+    emit(args, &text)
 }
 
 fn serve_demo(args: &Args) -> Result<()> {
@@ -556,6 +599,8 @@ fn serve_demo(args: &Args) -> Result<()> {
         out.params.save(&ckpt)?;
     }
 
+    let workers = args.get_usize("workers")?;
+    eprintln!("[serve] pool: {workers} workers on the {} backend", p.backend);
     let server = Server::start(
         p.backend.clone(),
         ServerConfig {
@@ -563,6 +608,8 @@ fn serve_demo(args: &Args) -> Result<()> {
             checkpoint: ckpt,
             max_wait: Duration::from_millis(args.get_u64("max-wait-ms")?),
             seq: 64,
+            workers,
+            queue_cap: args.get_usize("queue-cap")?,
         },
     )?;
 
@@ -602,5 +649,18 @@ fn serve_demo(args: &Args) -> Result<()> {
         stats.mean_flops_reduction,
         correct as f64 / n as f64
     );
+    println!("admission: queue peak {} | shed {}", stats.queue_peak, stats.shed);
+    for w in &stats.workers {
+        println!(
+            "  worker {}: {} reqs / {} batches (occupancy {:.2}), busy {:.0}ms, p99 {:.1}ms",
+            w.worker, w.served, w.batches, w.occupancy, w.busy_ms, w.p99_ms
+        );
+    }
+    for a in &stats.per_alpha {
+        println!(
+            "  α={:.2}: n={} p50 {:.1}ms p99 {:.1}ms",
+            a.alpha, a.count, a.p50_ms, a.p99_ms
+        );
+    }
     server.shutdown()
 }

@@ -2,6 +2,11 @@
 //! accuracy, binary F1, Matthews correlation (CoLA), Pearson and Spearman
 //! correlation (STS-B), plus mean ± 95% CI aggregation over random seeds
 //! (the paper reports 95% confidence intervals over 128 seeds).
+//!
+//! Serving-side metrics (worker pool, admission control, per-α latency)
+//! live in [`serving`].
+
+pub mod serving;
 
 /// Classification accuracy.
 pub fn accuracy(pred: &[i32], gold: &[i32]) -> f64 {

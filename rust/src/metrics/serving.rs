@@ -1,0 +1,246 @@
+//! Serving-side metrics for the sharded coordinator: per-worker and
+//! aggregate accumulators (queue admission counters, batch occupancy,
+//! per-α latency histograms), built on
+//! [`crate::util::timer::LatencyStats`]. The eval-quality metrics for the
+//! paper tables live in the parent module ([`crate::metrics`]).
+//!
+//! All state is owned by the dispatcher thread; workers report batches via
+//! `BatchReport` events and the dispatcher folds them in here, so nothing
+//! in this module needs interior mutability.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::util::timer::LatencyStats;
+
+/// Accumulators for one pool worker.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerMetrics {
+    pub served: usize,
+    pub batches: usize,
+    pub failed_batches: usize,
+    /// Σ actual batch sizes (occupancy numerator).
+    pub batch_size_sum: usize,
+    /// Σ planned bucket capacities (occupancy denominator).
+    pub bucket_sum: usize,
+    pub flops_sum: f64,
+    /// Wall-clock spent inside `Backend::forward`.
+    pub busy_ms: f64,
+    pub lat: LatencyStats,
+}
+
+impl WorkerMetrics {
+    /// Mean fraction of the planned bucket actually filled.
+    pub fn occupancy(&self) -> f64 {
+        if self.bucket_sum == 0 {
+            0.0
+        } else {
+            self.batch_size_sum as f64 / self.bucket_sum as f64
+        }
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_size_sum as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Read-only snapshot of one worker, embedded in server stats.
+#[derive(Debug, Clone)]
+pub struct WorkerSnapshot {
+    pub worker: usize,
+    pub served: usize,
+    pub batches: usize,
+    pub failed_batches: usize,
+    pub mean_batch_size: f64,
+    pub occupancy: f64,
+    pub busy_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Per-α latency summary row (one per distinct requested α).
+#[derive(Debug, Clone)]
+pub struct AlphaSummary {
+    pub alpha: f32,
+    pub count: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Aggregate serving metrics: admission-control counters plus per-worker
+/// and per-α breakdowns.
+#[derive(Debug, Clone, Default)]
+pub struct ServingMetrics {
+    /// Requests rejected by admission control (queue at cap).
+    pub shed: usize,
+    /// High-water mark of the admission queue.
+    pub queue_peak: usize,
+    pub workers: Vec<WorkerMetrics>,
+    per_alpha: BTreeMap<u32, LatencyStats>,
+}
+
+impl ServingMetrics {
+    pub fn new(workers: usize) -> ServingMetrics {
+        ServingMetrics { workers: vec![WorkerMetrics::default(); workers], ..Default::default() }
+    }
+
+    pub fn on_shed(&mut self) {
+        self.shed += 1;
+    }
+
+    pub fn on_queue_depth(&mut self, depth: usize) {
+        self.queue_peak = self.queue_peak.max(depth);
+    }
+
+    /// Record one executed batch: per-request latencies land in the
+    /// worker's histogram and in the batch α's histogram.
+    pub fn on_batch(
+        &mut self,
+        worker: usize,
+        alpha: f32,
+        bucket: usize,
+        latencies: &[Duration],
+        flops: &[f64],
+        exec: Duration,
+    ) {
+        let w = &mut self.workers[worker];
+        w.batches += 1;
+        w.served += latencies.len();
+        w.batch_size_sum += latencies.len();
+        w.bucket_sum += bucket;
+        w.busy_ms += exec.as_secs_f64() * 1e3;
+        w.flops_sum += flops.iter().sum::<f64>();
+        let hist = self.per_alpha.entry(alpha.to_bits()).or_default();
+        for &l in latencies {
+            w.lat.record(l);
+            hist.record(l);
+        }
+    }
+
+    pub fn on_failed_batch(&mut self, worker: usize) {
+        self.workers[worker].failed_batches += 1;
+    }
+
+    pub fn served(&self) -> usize {
+        self.workers.iter().map(|w| w.served).sum()
+    }
+
+    pub fn batches(&self) -> usize {
+        self.workers.iter().map(|w| w.batches).sum()
+    }
+
+    pub fn batch_size_sum(&self) -> usize {
+        self.workers.iter().map(|w| w.batch_size_sum).sum()
+    }
+
+    pub fn flops_sum(&self) -> f64 {
+        self.workers.iter().map(|w| w.flops_sum).sum()
+    }
+
+    /// Pool-wide latency histogram (merged per-worker histograms).
+    pub fn total_lat(&self) -> LatencyStats {
+        let mut all = LatencyStats::default();
+        for w in &self.workers {
+            all.merge(&w.lat);
+        }
+        all
+    }
+
+    pub fn worker_snapshots(&self) -> Vec<WorkerSnapshot> {
+        self.workers
+            .iter()
+            .enumerate()
+            .map(|(i, w)| WorkerSnapshot {
+                worker: i,
+                served: w.served,
+                batches: w.batches,
+                failed_batches: w.failed_batches,
+                mean_batch_size: w.mean_batch_size(),
+                occupancy: w.occupancy(),
+                busy_ms: w.busy_ms,
+                p50_ms: w.lat.p50_ms(),
+                p99_ms: w.lat.p99_ms(),
+            })
+            .collect()
+    }
+
+    pub fn alpha_summaries(&self) -> Vec<AlphaSummary> {
+        self.per_alpha
+            .iter()
+            .map(|(&bits, h)| AlphaSummary {
+                alpha: f32::from_bits(bits),
+                count: h.count(),
+                mean_ms: h.mean_ms(),
+                p50_ms: h.p50_ms(),
+                p99_ms: h.p99_ms(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    #[test]
+    fn batches_fold_into_worker_and_alpha_histograms() {
+        let mut m = ServingMetrics::new(2);
+        m.on_batch(0, 0.2, 8, &[ms(10), ms(20)], &[2.0, 4.0], ms(5));
+        m.on_batch(1, 0.6, 8, &[ms(30)], &[1.5], ms(3));
+        m.on_batch(0, 0.2, 1, &[ms(40)], &[3.0], ms(2));
+
+        assert_eq!(m.served(), 4);
+        assert_eq!(m.batches(), 3);
+        assert_eq!(m.batch_size_sum(), 4);
+        assert!((m.flops_sum() - 10.5).abs() < 1e-9);
+        assert_eq!(m.workers[0].served, 3);
+        assert_eq!(m.workers[1].served, 1);
+        // worker 0 planned capacity 8+1, filled 2+1
+        assert!((m.workers[0].occupancy() - 3.0 / 9.0).abs() < 1e-9);
+        assert!((m.workers[0].mean_batch_size() - 1.5).abs() < 1e-9);
+
+        let alphas = m.alpha_summaries();
+        assert_eq!(alphas.len(), 2);
+        let a02 = alphas.iter().find(|a| (a.alpha - 0.2).abs() < 1e-6).unwrap();
+        assert_eq!(a02.count, 3);
+        let a06 = alphas.iter().find(|a| (a.alpha - 0.6).abs() < 1e-6).unwrap();
+        assert_eq!(a06.count, 1);
+        assert!((a06.p50_ms - 30.0).abs() < 1e-9);
+
+        let all = m.total_lat();
+        assert_eq!(all.count(), 4);
+    }
+
+    #[test]
+    fn admission_counters() {
+        let mut m = ServingMetrics::new(1);
+        m.on_queue_depth(3);
+        m.on_queue_depth(7);
+        m.on_queue_depth(2);
+        m.on_shed();
+        m.on_shed();
+        assert_eq!(m.queue_peak, 7);
+        assert_eq!(m.shed, 2);
+    }
+
+    #[test]
+    fn failed_batches_counted_but_not_served() {
+        let mut m = ServingMetrics::new(1);
+        m.on_failed_batch(0);
+        assert_eq!(m.workers[0].failed_batches, 1);
+        assert_eq!(m.served(), 0);
+        assert_eq!(m.batches(), 0);
+        let snap = m.worker_snapshots();
+        assert_eq!(snap[0].failed_batches, 1);
+        assert_eq!(snap[0].worker, 0);
+    }
+}

@@ -190,10 +190,33 @@ pub enum BackendSpec {
     Pjrt { artifacts_dir: PathBuf },
 }
 
+impl std::fmt::Display for BackendSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendSpec::Native => write!(f, "native"),
+            BackendSpec::Pjrt { artifacts_dir } => write!(f, "pjrt({})", artifacts_dir.display()),
+        }
+    }
+}
+
 /// Open a backend from its spec.
 pub fn open_backend(spec: &BackendSpec) -> Result<Box<dyn Backend>> {
+    open_backend_sized(spec, None)
+}
+
+/// Open a backend, optionally capping the native backend's intra-batch
+/// thread count. The serving coordinator divides the host cores among its
+/// pool workers (`cores / pool size`) so N backend instances don't
+/// oversubscribe the machine; other backends ignore the hint.
+pub fn open_backend_sized(
+    spec: &BackendSpec,
+    intra_threads: Option<usize>,
+) -> Result<Box<dyn Backend>> {
     match spec {
-        BackendSpec::Native => Ok(Box::new(NativeBackend::new())),
+        BackendSpec::Native => Ok(Box::new(match intra_threads {
+            Some(n) => NativeBackend::with_workers(n),
+            None => NativeBackend::new(),
+        })),
         BackendSpec::Pjrt { artifacts_dir } => open_pjrt(artifacts_dir),
     }
 }
@@ -261,6 +284,19 @@ mod tests {
             BackendSpec::Native
         ));
         assert!(backend_spec_from_cli("gpu", dir).is_err());
+    }
+
+    #[test]
+    fn backend_spec_displays() {
+        assert_eq!(format!("{}", BackendSpec::Native), "native");
+        let spec = BackendSpec::Pjrt { artifacts_dir: PathBuf::from("/tmp/a") };
+        assert_eq!(format!("{spec}"), "pjrt(/tmp/a)");
+    }
+
+    #[test]
+    fn sized_native_backend_opens() {
+        let be = open_backend_sized(&BackendSpec::Native, Some(1)).unwrap();
+        assert!(be.platform().contains("1 workers"));
     }
 
     #[test]

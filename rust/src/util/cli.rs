@@ -166,6 +166,15 @@ impl Args {
             .collect()
     }
 
+    /// Comma-separated usize list, e.g. `--workers 1,4`.
+    pub fn get_usize_list(&self, name: &str) -> Result<Vec<usize>> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().map_err(|e| anyhow!("--{name}: {e}")))
+            .collect()
+    }
+
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
@@ -217,6 +226,25 @@ mod tests {
             .unwrap();
         assert_eq!(a.positional(), &["run".to_string()]);
         assert_eq!(a.get_f64_list("alphas").unwrap(), vec![0.1, 0.9]);
+    }
+
+    #[test]
+    fn usize_lists() {
+        let a = Args::new()
+            .opt("workers", "1,4", "")
+            .parse(&sv(&[]))
+            .unwrap();
+        assert_eq!(a.get_usize_list("workers").unwrap(), vec![1, 4]);
+        let b = Args::new()
+            .opt("workers", "1,4", "")
+            .parse(&sv(&["--workers", "2"]))
+            .unwrap();
+        assert_eq!(b.get_usize_list("workers").unwrap(), vec![2]);
+        let c = Args::new()
+            .opt("workers", "1,4", "")
+            .parse(&sv(&["--workers", "two"]))
+            .unwrap();
+        assert!(c.get_usize_list("workers").is_err());
     }
 
     #[test]

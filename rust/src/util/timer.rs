@@ -48,6 +48,12 @@ impl LatencyStats {
         self.samples_us.len()
     }
 
+    /// Fold another histogram's samples into this one (per-worker →
+    /// aggregate rollup in the serving metrics).
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
+
     pub fn mean_ms(&self) -> f64 {
         if self.samples_us.is_empty() {
             return 0.0;
@@ -90,6 +96,22 @@ mod tests {
         assert!((s.p99_ms() - 99.0).abs() < 1e-9);
         assert!((s.percentile_ms(100.0) - 100.0).abs() < 1e-9);
         assert!((s.mean_ms() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_combines_samples() {
+        let mut a = LatencyStats::default();
+        let mut b = LatencyStats::default();
+        for ms in 1..=50 {
+            a.record_ms(ms as f64);
+        }
+        for ms in 51..=100 {
+            b.record_ms(ms as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 100);
+        assert!((a.p50_ms() - 50.0).abs() < 1e-9);
+        assert!((a.mean_ms() - 50.5).abs() < 1e-9);
     }
 
     #[test]

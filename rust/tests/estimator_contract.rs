@@ -1,0 +1,157 @@
+//! Statistical contract of the MCA estimator, pinned as an integration
+//! test battery so estimator refactors can't silently break unbiasedness
+//! or the variance bound: seeded runs of `mca_encode` over many
+//! sample-pool draws, with empirical per-token error means and tail
+//! quantiles checked against Lemma 1 (`‖X[i]‖‖W‖_F/√r_i`) and the
+//! end-to-end Theorem 2 bounds (`α·β·‖W‖_F`, tail `/δ` via Markov).
+
+use mca::mca as mcacore;
+use mca::mca::RStrategy;
+use mca::rng::Pcg64;
+use mca::tensor::Tensor;
+
+fn randn(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
+    Tensor::from_fn(shape, |_| rng.gen_normal() as f32)
+}
+
+fn row_err(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| ((x - y) * (x - y)) as f64).sum::<f64>().sqrt()
+}
+
+/// Empirical quantile of a sorted sample.
+fn quantile(sorted: &[f64], frac: f64) -> f64 {
+    sorted[((frac * (sorted.len() - 1) as f64) as usize).min(sorted.len() - 1)]
+}
+
+#[test]
+fn lemma1_mean_and_tail_quantiles_per_token() {
+    let (n, d) = (4usize, 32usize);
+    let mut rng = Pcg64::new(1234);
+    let x = randn(&mut rng, &[n, d]);
+    let w = randn(&mut rng, &[d, d]);
+    let p = mcacore::sampling_probs(&w);
+    // one distinct budget per token, spanning the α-typical range
+    let r = vec![4usize, 8, 16, 24];
+    let want = x.matmul(&w).unwrap();
+    let w_frob = w.frob_norm() as f64;
+
+    let runs = 800usize;
+    let mut errs: Vec<Vec<f64>> = vec![Vec::with_capacity(runs); n];
+    let mut mean_est = Tensor::zeros(&[n, d]);
+    for s in 0..runs {
+        let mut rs = Pcg64::new(7_000 + s as u64);
+        let est = mcacore::mca_encode(&mut rs, &x, &w, &r, &p);
+        for i in 0..n {
+            errs[i].push(row_err(est.row(i), want.row(i)));
+        }
+        for (a, e) in mean_est.data_mut().iter_mut().zip(est.data()) {
+            *a += e / runs as f32;
+        }
+    }
+
+    for i in 0..n {
+        errs[i].sort_by(|a, b| a.total_cmp(b));
+        let mean = errs[i].iter().sum::<f64>() / runs as f64;
+        let bound = mcacore::lemma1_bound(x.row_norm(i) as f64, w_frob, r[i]);
+        // Lemma 1 mean bound (5% slack for finite-sample noise).
+        assert!(mean <= bound * 1.05, "token {i}: mean err {mean} > Lemma-1 bound {bound}");
+        // Markov tail from the mean bound: P(err ≥ bound/δ) ≤ δ, so the
+        // empirical (1−δ)-quantile must sit below bound/δ.
+        for delta in [0.25f64, 0.10] {
+            let q = quantile(&errs[i], 1.0 - delta);
+            let tail = bound / delta;
+            assert!(q <= tail, "token {i}, δ={delta}: q{} {q} > {tail}", 1.0 - delta);
+        }
+    }
+
+    // Unbiasedness: the seed-averaged estimate converges on X·W.
+    let rel = mean_est
+        .data()
+        .iter()
+        .zip(want.data())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max)
+        / want.frob_norm();
+    assert!(rel < 0.08, "seed-averaged estimate drifted from exact: rel {rel}");
+}
+
+#[test]
+fn theorem2_end_to_end_mean_and_tail() {
+    // Full Eq. 9 pipeline: attention-derived importance → per-token
+    // budgets → encode → attention-weighted output, vs Theorem 2.
+    let (n, d, alpha) = (6usize, 24usize, 0.4f64);
+    let mut rng = Pcg64::new(4321);
+    let x = randn(&mut rng, &[n, d]);
+    let w = randn(&mut rng, &[d, d]);
+    let scores = randn(&mut rng, &[n, n]);
+    let attn = vec![scores.softmax_rows().unwrap()];
+    let mask = vec![true; n];
+    let imp = mcacore::token_importance(&attn, &mask, RStrategy::Max);
+    let r = mcacore::sample_counts(&imp, &mask, alpha, d);
+    let p = mcacore::sampling_probs(&w);
+    let w_frob = w.frob_norm() as f64;
+    let h_exact = x.matmul(&w).unwrap();
+    let y_exact = attn[0].matmul(&h_exact).unwrap();
+
+    let runs = 500usize;
+    let mut errs: Vec<Vec<f64>> = vec![Vec::with_capacity(runs); n];
+    for s in 0..runs {
+        let mut rs = Pcg64::new(90_000 + s as u64);
+        let h = mcacore::mca_encode(&mut rs, &x, &w, &r, &p);
+        let y = attn[0].matmul(&h).unwrap();
+        for i in 0..n {
+            errs[i].push(row_err(y.row(i), y_exact.row(i)));
+        }
+    }
+
+    let mean_bound = mcacore::theorem2_bound(&x, w_frob, alpha);
+    let tail_bound = mcacore::theorem2_tail_bound(&x, w_frob, alpha, 0.1);
+    assert!(tail_bound > mean_bound);
+    for i in 0..n {
+        errs[i].sort_by(|a, b| a.total_cmp(b));
+        let mean = errs[i].iter().sum::<f64>() / runs as f64;
+        assert!(mean <= mean_bound, "token {i}: mean err {mean} > Thm-2 bound {mean_bound}");
+        let q90 = quantile(&errs[i], 0.9);
+        assert!(q90 <= tail_bound, "token {i}: q90 {q90} > Thm-2 tail bound {tail_bound}");
+    }
+}
+
+#[test]
+fn error_scales_down_as_alpha_tightens() {
+    // α is the precision knob: tightening it (smaller α → more samples)
+    // must shrink the measured end-to-end error. Guards against budget
+    // plumbing regressions that the bound checks alone could miss.
+    let (n, d) = (6usize, 24usize);
+    let mut rng = Pcg64::new(99);
+    let x = randn(&mut rng, &[n, d]);
+    let w = randn(&mut rng, &[d, d]);
+    let scores = randn(&mut rng, &[n, n]);
+    let attn = vec![scores.softmax_rows().unwrap()];
+    let mask = vec![true; n];
+    let imp = mcacore::token_importance(&attn, &mask, RStrategy::Max);
+    let p = mcacore::sampling_probs(&w);
+    let h_exact = x.matmul(&w).unwrap();
+    let y_exact = attn[0].matmul(&h_exact).unwrap();
+
+    let mean_err = |alpha: f64| -> f64 {
+        let r = mcacore::sample_counts(&imp, &mask, alpha, d);
+        let runs = 200usize;
+        let mut total = 0.0f64;
+        for s in 0..runs {
+            let mut rs = Pcg64::new(55_000 + s as u64);
+            let h = mcacore::mca_encode(&mut rs, &x, &w, &r, &p);
+            let y = attn[0].matmul(&h).unwrap();
+            for i in 0..n {
+                total += row_err(y.row(i), y_exact.row(i));
+            }
+        }
+        total / (runs * n) as f64
+    };
+
+    let tight = mean_err(0.25);
+    let loose = mean_err(0.8);
+    assert!(
+        tight <= loose,
+        "error not monotone in α: mean err(α=0.25) {tight} > mean err(α=0.8) {loose}"
+    );
+}

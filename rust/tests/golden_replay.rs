@@ -15,7 +15,7 @@
 use mca::mca::flops::{self, AttnDims};
 use mca::model::Params;
 use mca::rng::Pcg64;
-use mca::runtime::{open_backend, Backend, BackendSpec, ForwardSpec, HostValue};
+use mca::runtime::{open_backend, open_backend_sized, Backend, BackendSpec, ForwardSpec, HostValue};
 
 const MODEL: &str = "distil_sim";
 const SEQ: usize = 24;
@@ -140,6 +140,26 @@ fn native_forward_is_deterministic_in_seed() {
     assert_eq!(a.r_sum, b.r_sum);
     let c = be.forward(&mca, &params, &ids, 0.4, 43).unwrap();
     assert!(a.logits != c.logits, "different seeds produced identical MCA logits");
+}
+
+#[test]
+fn native_forward_invariant_to_intra_thread_count() {
+    // The serving pool opens one backend instance per worker, each sized
+    // to cores / pool-size intra-batch threads (open_backend_sized). The
+    // forward must be bit-identical across thread splits, or responses
+    // would depend on which worker a batch landed on.
+    let (mut be_default, params, ids) = setup();
+    let mut be_one = open_backend_sized(&BackendSpec::Native, Some(1)).unwrap();
+    let mca = ForwardSpec::new(MODEL, "mca", BATCH, SEQ);
+    let a = be_default.forward(&mca, &params, &ids, 0.4, 42).unwrap();
+    let b = be_one.forward(&mca, &params, &ids, 0.4, 42).unwrap();
+    assert_eq!(a.logits, b.logits, "MCA logits depend on intra-thread split");
+    assert_eq!(a.r_sum, b.r_sum);
+    assert_eq!(a.n_eff, b.n_eff);
+    let exact = ForwardSpec::new(MODEL, "exact", BATCH, SEQ);
+    let ea = be_default.forward(&exact, &params, &ids, 1.0, 0).unwrap();
+    let eb = be_one.forward(&exact, &params, &ids, 1.0, 0).unwrap();
+    assert_eq!(ea.logits, eb.logits, "exact logits depend on intra-thread split");
 }
 
 #[test]

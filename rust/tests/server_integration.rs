@@ -1,6 +1,7 @@
 //! Integration tests for the serving coordinator on the native backend:
-//! start the worker thread, submit mixed-α traffic, verify batching,
-//! responses, stats and clean shutdown — the full submit → batch →
+//! start the worker pool, submit mixed-α traffic (single- and
+//! multi-producer), verify batching, responses, admission control, stats
+//! and clean shutdown — the full submit → admit → batch → dispatch →
 //! forward → response path, with no artifacts required (so nothing here
 //! ever skips). PJRT-artifact variants live at the bottom behind the
 //! `pjrt` feature.
@@ -24,21 +25,24 @@ fn make_checkpoint(backend: &BackendSpec, model: &str, tag: &str) -> PathBuf {
     path
 }
 
+fn config(model: &str, ckpt: PathBuf, max_wait_ms: u64, workers: usize) -> ServerConfig {
+    ServerConfig {
+        model: model.into(),
+        checkpoint: ckpt,
+        max_wait: Duration::from_millis(max_wait_ms),
+        seq: 32,
+        workers,
+        queue_cap: 4096,
+    }
+}
+
 #[test]
 fn server_serves_mixed_alpha_traffic_end_to_end() {
     // distil_sim at a short seq keeps the native forward fast in test builds.
     let backend = BackendSpec::Native;
     let ckpt = make_checkpoint(&backend, "distil_sim", "native");
-    let server = Server::start(
-        backend,
-        ServerConfig {
-            model: "distil_sim".into(),
-            checkpoint: ckpt,
-            max_wait: Duration::from_millis(5),
-            seq: 32,
-        },
-    )
-    .expect("server start");
+    let server =
+        Server::start(backend, config("distil_sim", ckpt, 5, 2)).expect("server start");
 
     let mut rxs = Vec::new();
     for i in 0..16 {
@@ -51,13 +55,21 @@ fn server_serves_mixed_alpha_traffic_end_to_end() {
         assert_eq!(resp.logits.len(), 3);
         assert!(resp.flops_reduction >= 1.0, "req {i}: {}", resp.flops_reduction);
         assert!(resp.batch_size >= 1);
+        assert!(!resp.shed);
     }
     let stats = server.stats().expect("stats");
     assert_eq!(stats.served, 16);
+    assert_eq!(stats.shed, 0);
     assert!(stats.batches <= 16);
     assert!(stats.mean_flops_reduction > 1.0);
     // batching actually happened (16 reqs, 2 α classes, bucket 8 available)
     assert!(stats.mean_batch_size > 1.0, "mean batch {}", stats.mean_batch_size);
+    // per-α latency histograms cover both requested αs
+    assert_eq!(stats.per_alpha.len(), 2);
+    assert_eq!(stats.per_alpha.iter().map(|a| a.count).sum::<usize>(), 16);
+    // pool metrics are per worker and account for every request
+    assert_eq!(stats.workers.len(), 2);
+    assert_eq!(stats.workers.iter().map(|w| w.served).sum::<usize>(), 16);
     server.shutdown().expect("shutdown");
 }
 
@@ -65,16 +77,8 @@ fn server_serves_mixed_alpha_traffic_end_to_end() {
 fn server_exact_mode_is_deterministic_per_request() {
     let backend = BackendSpec::Native;
     let ckpt = make_checkpoint(&backend, "distil_sim", "native_det");
-    let server = Server::start(
-        backend,
-        ServerConfig {
-            model: "distil_sim".into(),
-            checkpoint: ckpt,
-            max_wait: Duration::from_millis(1),
-            seq: 32,
-        },
-    )
-    .expect("server start");
+    let server =
+        Server::start(backend, config("distil_sim", ckpt, 1, 2)).expect("server start");
     // Same text twice: predictions must be identical for the exact mode.
     let r1 = server.submit("n1 v1 n2 v2", 1.0, "exact").recv().unwrap();
     let r2 = server.submit("n1 v1 n2 v2", 1.0, "exact").recv().unwrap();
@@ -82,6 +86,7 @@ fn server_exact_mode_is_deterministic_per_request() {
     assert_eq!(r1.logits, r2.logits);
     // exact mode reports no FLOPs reduction
     assert_eq!(r1.flops_reduction, 1.0);
+    assert_eq!(r1.mode, "exact");
     server.shutdown().expect("shutdown");
 }
 
@@ -91,19 +96,12 @@ fn server_exact_responses_are_batch_invariant() {
     // the bucket. (MCA responses are NOT batch-invariant at the server
     // level by design: the shared sample pool is seeded from the head
     // request id, exactly like the PJRT artifacts' seed input.) Submit
-    // the same text alone and amid other traffic.
+    // the same text alone and amid other traffic; a single worker keeps
+    // the batch compositions deterministic.
     let backend = BackendSpec::Native;
     let ckpt = make_checkpoint(&backend, "distil_sim", "native_inv");
-    let server = Server::start(
-        backend,
-        ServerConfig {
-            model: "distil_sim".into(),
-            checkpoint: ckpt,
-            max_wait: Duration::from_millis(2),
-            seq: 32,
-        },
-    )
-    .expect("server start");
+    let server =
+        Server::start(backend, config("distil_sim", ckpt, 2, 1)).expect("server start");
     let alone = server.submit("n3 v3 a3", 1.0, "exact").recv().unwrap();
     let mut rxs = Vec::new();
     for _ in 0..5 {
@@ -118,18 +116,115 @@ fn server_exact_responses_are_batch_invariant() {
 }
 
 #[test]
+fn multi_worker_pool_stress_mixed_traffic() {
+    // Several producer threads against a 4-worker pool: every request
+    // gets exactly one response, batches stay (mode, α)-homogeneous, and
+    // the work spreads across workers.
+    let backend = BackendSpec::Native;
+    let ckpt = make_checkpoint(&backend, "distil_sim", "native_pool");
+    let server =
+        Server::start(backend, config("distil_sim", ckpt, 3, 4)).expect("server start");
+
+    let combos: [(f32, &str); 6] =
+        [(0.2, "mca"), (0.4, "mca"), (0.8, "mca"), (1.0, "exact"), (0.4, "exact"), (0.6, "mca")];
+    let threads = 4usize;
+    let per_thread = 60usize;
+    let submitter = server.submitter();
+    let mut all = Vec::new();
+    std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for t in 0..threads {
+            let sub = submitter.clone();
+            joins.push(s.spawn(move || {
+                let mut rxs = Vec::with_capacity(per_thread);
+                for i in 0..per_thread {
+                    let (alpha, mode) = combos[(t * per_thread + i) % combos.len()];
+                    rxs.push((alpha, mode, sub.submit("n0 v1 n2 v3", alpha, mode)));
+                }
+                rxs.into_iter()
+                    .map(|(a, m, rx)| (a, m, rx.recv_timeout(Duration::from_secs(120))))
+                    .collect::<Vec<_>>()
+            }));
+        }
+        for j in joins {
+            all.extend(j.join().unwrap());
+        }
+    });
+
+    let total = threads * per_thread;
+    let mut ids = std::collections::HashSet::new();
+    for (alpha, mode, resp) in all {
+        let resp = resp.expect("every request gets exactly one response");
+        assert!(!resp.shed, "no shedding below the queue cap");
+        assert!(ids.insert(resp.id), "duplicate response id {}", resp.id);
+        // the batch this request rode in shares its (mode, α)
+        assert_eq!(resp.alpha.to_bits(), alpha.to_bits(), "α homogeneity");
+        assert_eq!(resp.mode, mode, "mode homogeneity");
+        assert!(resp.pred_class >= 0 && resp.pred_class < 3);
+        assert!(resp.batch_size >= 1);
+    }
+    assert_eq!(ids.len(), total);
+
+    let stats = server.stats().expect("stats");
+    assert_eq!(stats.served, total);
+    assert_eq!(stats.shed, 0);
+    assert_eq!(stats.workers.len(), 4);
+    assert_eq!(stats.workers.iter().map(|w| w.served).sum::<usize>(), total);
+    let active = stats.workers.iter().filter(|w| w.served > 0).count();
+    assert!(active >= 2, "work stuck on {active} of 4 workers");
+    assert!(stats.queue_peak <= 4096);
+    server.shutdown().expect("shutdown");
+}
+
+#[test]
+fn queue_cap_sheds_only_when_exceeded() {
+    // A burst far above a tiny queue cap: shed responses arrive for the
+    // overflow, the rest are served, and the counters agree. The peak
+    // queue depth proves shedding only happened at the cap.
+    let backend = BackendSpec::Native;
+    let ckpt = make_checkpoint(&backend, "distil_sim", "native_shed");
+    let cap = 4usize;
+    let mut cfg = config("distil_sim", ckpt, 2, 2);
+    cfg.queue_cap = cap;
+    let server = Server::start(backend, cfg).expect("server start");
+
+    let sub = server.submitter();
+    let total = 200usize;
+    let mut rxs = Vec::with_capacity(total);
+    for _ in 0..total {
+        rxs.push(sub.submit("n0 v1 n2 v3", 0.2, "mca"));
+    }
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        if r.shed {
+            shed += 1;
+            assert_eq!(r.pred_class, -1);
+            assert!(r.logits.is_empty());
+        } else {
+            ok += 1;
+            assert!(r.pred_class >= 0);
+        }
+    }
+    assert_eq!(ok + shed, total);
+    assert!(shed > 0, "a burst of {total} against cap {cap} must shed");
+    assert!(ok > 0, "admitted requests must still be served");
+
+    let stats = server.stats().expect("stats");
+    assert_eq!(stats.shed, shed);
+    assert_eq!(stats.served, ok);
+    // shedding only happens once the queue actually reached the cap, and
+    // admission never lets the queue grow beyond it
+    assert_eq!(stats.queue_peak, cap);
+    server.shutdown().expect("shutdown");
+}
+
+#[test]
 fn server_rejects_missing_model() {
     let backend = BackendSpec::Native;
     let ckpt = make_checkpoint(&backend, "bert_sim", "native_rej");
-    let r = Server::start(
-        backend,
-        ServerConfig {
-            model: "no_such_model".into(),
-            checkpoint: ckpt,
-            max_wait: Duration::from_millis(5),
-            seq: 32,
-        },
-    );
+    let r = Server::start(backend, config("no_such_model", ckpt, 5, 2));
     assert!(r.is_err());
 }
 
@@ -138,15 +233,7 @@ fn server_rejects_wrong_checkpoint_shape() {
     // A bert_sim checkpoint (4 layers) must not load as distil_sim (2).
     let backend = BackendSpec::Native;
     let ckpt = make_checkpoint(&backend, "bert_sim", "native_shape");
-    let r = Server::start(
-        backend,
-        ServerConfig {
-            model: "distil_sim".into(),
-            checkpoint: ckpt,
-            max_wait: Duration::from_millis(5),
-            seq: 32,
-        },
-    );
+    let r = Server::start(backend, config("distil_sim", ckpt, 5, 2));
     assert!(r.is_err());
 }
 
@@ -179,6 +266,8 @@ mod pjrt_artifacts {
                 checkpoint: ckpt,
                 max_wait: Duration::from_millis(5),
                 seq: 64,
+                workers: 2,
+                queue_cap: 4096,
             },
         )
         .expect("server start");
