@@ -32,6 +32,9 @@ fn main() -> Result<()> {
     }
 
     // 2. Start the coordinator (each pool worker owns a backend instance).
+    // canary_rate: a slice of MCA batches is replayed exactly to feed the
+    // AIMD α controller; brownout_watermark arms the admit → degrade →
+    // shed ladder for ε-budget requests (DESIGN.md §6).
     let server = Server::start(
         backend,
         ServerConfig {
@@ -41,29 +44,47 @@ fn main() -> Result<()> {
             seq: 64,
             workers: 2,
             queue_cap: 1024,
+            brownout_watermark: 768,
+            canary_rate: 0.1,
+            quality_floor: 0.5,
         },
     )?;
 
-    // 3. Drive it: mixed α traffic — the per-request precision knob.
+    // 3. Drive it: mixed traffic. Raw-α requests pick the precision knob
+    // directly; ε-budget requests instead say "any precision whose
+    // Theorem-2 error bound stays within ε" and let the server resolve
+    // the cheapest α that honors it (the CLI equivalent is
+    // `mca serve --error-budget 8,32`).
     let tok = Tokenizer::new();
     let alphas = [0.2f32, 0.4, 0.8];
+    let epsilons = [8.0f64, 32.0];
     let t0 = Instant::now();
     let mut inflight = Vec::new();
     for i in 0..n_requests {
         let ex = &ds.dev[i % ds.dev.len()];
         let text = tok.decode(&ex.ids).replace("[CLS] ", "").replace(" [SEP]", "");
-        let alpha = alphas[i % alphas.len()];
-        inflight.push((server.submit(&text, alpha, "mca"), ex.label.class(), alpha));
+        let rx = if i % 3 == 2 {
+            server.submit_budget(&text, epsilons[(i / 3) % epsilons.len()], None)
+        } else {
+            server.submit(&text, alphas[i % alphas.len()], "mca")
+        };
+        inflight.push((rx, ex.label.class()));
     }
 
     let mut correct = 0usize;
+    // keyed by the α each request actually executed at (budget requests
+    // echo their resolved α)
     let mut by_alpha: std::collections::BTreeMap<u32, (usize, f64)> = Default::default();
-    for (rx, gold, alpha) in inflight {
+    let mut budget_served = 0usize;
+    for (rx, gold) in inflight {
         let resp = rx.recv()?;
         if resp.pred_class == gold {
             correct += 1;
         }
-        let e = by_alpha.entry(alpha.to_bits()).or_insert((0, 0.0));
+        if resp.budget {
+            budget_served += 1;
+        }
+        let e = by_alpha.entry(resp.alpha.to_bits()).or_insert((0, 0.0));
         e.0 += 1;
         e.1 += resp.flops_reduction;
     }
@@ -82,9 +103,25 @@ fn main() -> Result<()> {
     );
     println!("batching: {} batches, mean size {:.2}", stats.batches, stats.mean_batch_size);
     println!("accuracy under MCA: {:.3}", correct as f64 / n_requests as f64);
-    println!("FLOPs reduction by requested alpha:");
+    println!("FLOPs reduction by executed alpha:");
     for (bits, (n, sum)) in by_alpha {
         println!("  alpha={:.1}: {:.2}x (n={})", f32::from_bits(bits), sum / n as f64, n);
+    }
+    println!(
+        "epsilon budgets: {budget_served} served ({} resolved exact); resolved alpha histogram: {}",
+        stats.budget_exact,
+        stats
+            .resolved_alphas
+            .iter()
+            .map(|(a, c)| format!("{a:.2}x{c}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    if stats.canaries > 0 {
+        println!(
+            "canary loop: {} exact replays, {} floor violations, controller alpha {:.2}",
+            stats.canaries, stats.canary_violations, stats.controller_alpha
+        );
     }
     server.shutdown()
 }

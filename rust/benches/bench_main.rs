@@ -54,6 +54,7 @@ fn main() {
                     text: String::new(),
                     alpha: alphas[i % 3],
                     mode: "mca".into(),
+                    budget: None,
                 },
                 arrived: now,
             })
@@ -223,6 +224,7 @@ fn main() {
                     seq: 32,
                     workers,
                     queue_cap: 4096,
+                    ..ServerConfig::default()
                 },
             )
             .unwrap();
@@ -235,7 +237,7 @@ fn main() {
             server.shutdown().unwrap();
         }
         if let Ok(out) = std::env::var("MCA_BENCH_OUT") {
-            write_bench_json(std::path::Path::new(&out), "distil_sim", &entries).unwrap();
+            write_bench_json(std::path::Path::new(&out), "distil_sim", &entries, None).unwrap();
             println!("(wrote {out})");
         }
     }

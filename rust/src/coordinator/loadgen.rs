@@ -1,12 +1,16 @@
 //! Load generation for the serving benchmarks: open-loop Poisson arrivals
-//! at a configured offered rate, mixed-α request populations, a closed
-//! burst driver for worker-pool scaling runs, and the machine-readable
-//! `BENCH_serving.json` emitter used by `mca loadtest` and `cargo bench`.
+//! at a configured offered rate, mixed-α and ε-budget request populations,
+//! a lockstep replay driver for determinism regression + worker-pool
+//! scaling runs, and the machine-readable `BENCH_serving.json` emitter
+//! used by `mca loadtest` and `cargo bench`.
 //!
 //! Open-loop (arrivals independent of completions) is the honest way to
 //! measure a serving system: a closed loop hides queueing collapse. The
-//! burst driver is the complement: it measures drain throughput per
-//! worker count on an identical workload.
+//! replay driver is the complement: it pauses dispatch, queues the whole
+//! seeded workload, then resumes — so batch composition (and with it
+//! every MCA sample pool and the shed set) is a pure function of the
+//! workload, and two runs with the same seed and worker count produce
+//! identical request-level outcomes.
 
 use std::path::Path;
 use std::sync::mpsc;
@@ -14,7 +18,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::{Response, Server};
+use super::{Response, Server, ServerStats};
 use crate::rng::Pcg64;
 use crate::util::json::Json;
 use crate::util::timer::LatencyStats;
@@ -25,8 +29,13 @@ pub struct Workload {
     /// offered request rate (req/s)
     pub rate: f64,
     pub duration: Duration,
-    /// (alpha, weight) mixture of request precisions
+    /// (alpha, weight) mixture of raw-α request precisions
     pub alpha_mix: Vec<(f32, f64)>,
+    /// fraction of requests that carry a Theorem-2 ε budget instead of a
+    /// raw α (only effective when `epsilon_mix` is non-empty)
+    pub budget_frac: f64,
+    /// (ε, weight) mixture for budget-carrying requests
+    pub epsilon_mix: Vec<(f64, f64)>,
     pub seed: u64,
 }
 
@@ -42,6 +51,50 @@ pub struct LoadResult {
     pub p50_ms: f64,
     pub p99_ms: f64,
     pub mean_flops_reduction: f64,
+    /// responses that carried an ε budget (including shed ones)
+    pub budget_requests: usize,
+    /// responses served at their budget ceiling by precision brownout
+    pub degraded: usize,
+    /// mean α the server resolved for served budget responses (0 if none)
+    pub mean_resolved_alpha: f64,
+    /// FNV-1a digest of the id-sorted request-level outcomes; only replay
+    /// runs set this (open-loop timing makes the digest meaningless)
+    pub outcome_digest: Option<u64>,
+}
+
+/// One request-level outcome from a lockstep replay run — the unit the
+/// determinism regression test compares across runs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestOutcome {
+    pub id: u64,
+    pub shed: bool,
+    pub pred_class: i32,
+    /// bits of the α the batch executed at (resolved α for budgets)
+    pub alpha_bits: u32,
+    pub mode: String,
+    /// bits of the per-request Σ_layers Σ_tokens r_i
+    pub r_sum_bits: u64,
+}
+
+/// FNV-1a over the (id-sorted) outcome stream — one u64 that two loadtest
+/// runs can diff at a glance (written to `BENCH_serving.json`).
+pub fn outcome_digest(outcomes: &[RequestOutcome]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for o in outcomes {
+        eat(&o.id.to_le_bytes());
+        eat(&[o.shed as u8]);
+        eat(&o.pred_class.to_le_bytes());
+        eat(&o.alpha_bits.to_le_bytes());
+        eat(o.mode.as_bytes());
+        eat(&o.r_sum_bits.to_le_bytes());
+    }
+    h
 }
 
 /// Sample inter-arrival gaps ~ Exp(rate) (Poisson process).
@@ -75,26 +128,87 @@ pub fn sample_alpha(rng: &mut Pcg64, mix: &[(f32, f64)]) -> f32 {
     mix.last().map(|&(a, _)| a).unwrap_or(0.4)
 }
 
-/// Collect all in-flight responses into a [`LoadResult`]; shed responses
-/// are counted separately and excluded from the latency/FLOPs stats.
-fn drain(inflight: Vec<mpsc::Receiver<Response>>, offered: f64, start: Instant) -> LoadResult {
+/// Pick an ε from the budget mixture.
+pub fn sample_epsilon(rng: &mut Pcg64, mix: &[(f64, f64)]) -> f64 {
+    let total: f64 = mix.iter().map(|(_, w)| w).sum();
+    let mut u = rng.gen_f64() * total;
+    for &(e, w) in mix {
+        if u < w {
+            return e;
+        }
+        u -= w;
+    }
+    mix.last().map(|&(e, _)| e).unwrap_or(1.0)
+}
+
+/// Submit one workload request: an ε budget with probability
+/// `budget_frac` (when the ε mixture is non-empty), a raw α otherwise.
+/// RNG consumption is identical for every pure-α workload, so seeds stay
+/// comparable with pre-budget runs.
+fn submit_one(
+    server: &Server,
+    rng: &mut Pcg64,
+    wl: &Workload,
+    text: &str,
+) -> mpsc::Receiver<Response> {
+    if !wl.epsilon_mix.is_empty() && wl.budget_frac > 0.0 && rng.gen_f64() < wl.budget_frac {
+        let eps = sample_epsilon(rng, &wl.epsilon_mix);
+        server.submit_budget(text, eps, None)
+    } else {
+        let alpha = sample_alpha(rng, &wl.alpha_mix);
+        server.submit(text, alpha, "mca")
+    }
+}
+
+/// Collect all in-flight responses into a [`LoadResult`] plus per-request
+/// outcomes; shed responses are counted separately and excluded from the
+/// latency/FLOPs stats.
+fn collect(
+    inflight: Vec<mpsc::Receiver<Response>>,
+    offered: f64,
+    start: Instant,
+) -> (LoadResult, Vec<RequestOutcome>) {
     let mut lat = LatencyStats::default();
     let mut flops = 0.0;
     let mut completed = 0usize;
     let mut shed = 0usize;
+    let mut budget = 0usize;
+    let mut degraded = 0usize;
+    let mut alpha_sum = 0.0f64;
+    let mut budget_served = 0usize;
+    let mut outcomes = Vec::with_capacity(inflight.len());
     for rx in inflight {
         if let Ok(resp) = rx.recv() {
+            if resp.budget {
+                budget += 1;
+            }
+            if resp.degraded {
+                degraded += 1;
+            }
             if resp.shed {
                 shed += 1;
             } else {
                 lat.record(resp.latency);
                 flops += resp.flops_reduction;
                 completed += 1;
+                if resp.budget {
+                    budget_served += 1;
+                    alpha_sum += resp.alpha as f64;
+                }
             }
+            outcomes.push(RequestOutcome {
+                id: resp.id,
+                shed: resp.shed,
+                pred_class: resp.pred_class,
+                alpha_bits: resp.alpha.to_bits(),
+                mode: resp.mode.clone(),
+                r_sum_bits: resp.r_sum.to_bits(),
+            });
         }
     }
+    outcomes.sort_by_key(|o| o.id);
     let wall = start.elapsed().as_secs_f64();
-    LoadResult {
+    let result = LoadResult {
         offered,
         completed,
         shed,
@@ -103,7 +217,16 @@ fn drain(inflight: Vec<mpsc::Receiver<Response>>, offered: f64, start: Instant) 
         p50_ms: lat.p50_ms(),
         p99_ms: lat.p99_ms(),
         mean_flops_reduction: if completed > 0 { flops / completed as f64 } else { 0.0 },
-    }
+        budget_requests: budget,
+        degraded,
+        mean_resolved_alpha: if budget_served > 0 { alpha_sum / budget_served as f64 } else { 0.0 },
+        outcome_digest: None,
+    };
+    (result, outcomes)
+}
+
+fn drain(inflight: Vec<mpsc::Receiver<Response>>, offered: f64, start: Instant) -> LoadResult {
+    collect(inflight, offered, start).0
 }
 
 /// Drive the server open-loop with `texts` as the request population.
@@ -115,8 +238,7 @@ pub fn run_load(server: &Server, texts: &[String], wl: &Workload) -> Result<Load
     for (i, gap) in gaps.iter().enumerate() {
         std::thread::sleep(*gap);
         let text = &texts[i % texts.len()];
-        let alpha = sample_alpha(&mut rng, &wl.alpha_mix);
-        inflight.push(server.submit(text, alpha, "mca"));
+        inflight.push(submit_one(server, &mut rng, wl, text));
     }
     Ok(drain(inflight, wl.rate, start))
 }
@@ -145,14 +267,49 @@ pub fn run_burst(
     Ok(r)
 }
 
+/// Lockstep replay burst: pause dispatch, queue the entire seeded
+/// workload, then resume and drain. With the whole workload queued before
+/// the first batch plan, batch composition, every MCA sample pool (seeded
+/// from batch head ids) and the admission/shed set are pure functions of
+/// (workload seed, worker count, queue cap) — the determinism regression
+/// test runs this twice and compares outcomes. Budget resolution is
+/// deterministic too: all admissions complete before dispatch resumes, so
+/// the canary controller cannot move mid-workload — but on a server that
+/// has already served canary traffic, the controller's starting point (and
+/// with it the digest) depends on that history.
+pub fn run_replay(
+    server: &Server,
+    texts: &[String],
+    n: usize,
+    wl: &Workload,
+) -> Result<(LoadResult, Vec<RequestOutcome>)> {
+    let mut rng = Pcg64::new(wl.seed);
+    server.pause();
+    let start = Instant::now();
+    let mut inflight = Vec::with_capacity(n);
+    for i in 0..n {
+        let text = &texts[i % texts.len()];
+        inflight.push(submit_one(server, &mut rng, wl, text));
+    }
+    server.resume();
+    let (mut result, outcomes) = collect(inflight, 0.0, start);
+    result.offered = result.achieved;
+    result.outcome_digest = Some(outcome_digest(&outcomes));
+    Ok((result, outcomes))
+}
+
 /// Write the machine-readable serving benchmark: one entry per
 /// (worker count, run), with throughput and latency percentiles. `kind`
 /// is the measurement protocol: "open_loop" (Poisson arrivals at the
-/// offered rate) or "burst" (closed drain — the worker-scaling signal).
+/// offered rate), "burst" (closed drain — the worker-scaling signal) or
+/// "replay" (lockstep burst with an outcome digest). `server` optionally
+/// appends the final coordinator counters (brownout ladder, budget
+/// resolution, canary loop) so the perf trajectory records them.
 pub fn write_bench_json(
     path: &Path,
     model: &str,
     entries: &[(usize, String, LoadResult)],
+    server: Option<&ServerStats>,
 ) -> Result<()> {
     use std::collections::BTreeMap;
 
@@ -169,12 +326,34 @@ pub fn write_bench_json(
         m.insert("p50_ms".to_string(), Json::Num(r.p50_ms));
         m.insert("p99_ms".to_string(), Json::Num(r.p99_ms));
         m.insert("mean_flops_reduction".to_string(), Json::Num(r.mean_flops_reduction));
+        m.insert("budget_requests".to_string(), Json::Num(r.budget_requests as f64));
+        m.insert("degraded".to_string(), Json::Num(r.degraded as f64));
+        m.insert("mean_resolved_alpha".to_string(), Json::Num(r.mean_resolved_alpha));
+        if let Some(d) = r.outcome_digest {
+            // hex string: Json numbers are f64 and would lose u64 bits
+            m.insert("outcome_digest".to_string(), Json::Str(format!("{d:016x}")));
+        }
         arr.push(Json::Obj(m));
     }
     let mut top: BTreeMap<String, Json> = BTreeMap::new();
     top.insert("bench".to_string(), Json::Str("serving".to_string()));
     top.insert("model".to_string(), Json::Str(model.to_string()));
     top.insert("entries".to_string(), Json::Arr(arr));
+    if let Some(st) = server {
+        let mut s: BTreeMap<String, Json> = BTreeMap::new();
+        s.insert("served".to_string(), Json::Num(st.served as f64));
+        s.insert("shed".to_string(), Json::Num(st.shed as f64));
+        s.insert("queue_peak".to_string(), Json::Num(st.queue_peak as f64));
+        s.insert("brownout_entries".to_string(), Json::Num(st.brownout_entries as f64));
+        s.insert("brownout_exits".to_string(), Json::Num(st.brownout_exits as f64));
+        s.insert("degraded".to_string(), Json::Num(st.degraded as f64));
+        s.insert("budget_requests".to_string(), Json::Num(st.budget_requests as f64));
+        s.insert("budget_exact".to_string(), Json::Num(st.budget_exact as f64));
+        s.insert("canaries".to_string(), Json::Num(st.canaries as f64));
+        s.insert("canary_violations".to_string(), Json::Num(st.canary_violations as f64));
+        s.insert("controller_alpha".to_string(), Json::Num(st.controller_alpha));
+        top.insert("server".to_string(), Json::Obj(s));
+    }
     std::fs::write(path, Json::Obj(top).to_string())?;
     Ok(())
 }
@@ -209,6 +388,57 @@ mod tests {
         assert!((0.85..1.15).contains(&cv), "cv {cv}");
     }
 
+    /// KS statistic of a sorted sample against a CDF.
+    fn ks_stat(sorted: &[f64], cdf: impl Fn(f64) -> f64) -> f64 {
+        let n = sorted.len() as f64;
+        let mut d = 0.0f64;
+        for (i, &t) in sorted.iter().enumerate() {
+            let f = cdf(t);
+            d = d.max((f - i as f64 / n).abs()).max(((i + 1) as f64 / n - f).abs());
+        }
+        d
+    }
+
+    #[test]
+    fn poisson_interarrival_ks_against_exponential() {
+        // Seeded KS-style check: the empirical CDF of the generator's
+        // gaps must track 1 − e^{−rate·t}. For n ≈ 2000+ the 1%-level KS
+        // threshold is ~0.036; the 0.05 gate leaves headroom while still
+        // rejecting matched-mean alternatives (uniform gaps score ~0.15,
+        // constant gaps ~0.63). Seeds are fixed, so this is deterministic.
+        let rate = 150.0f64;
+        for seed in [1u64, 2, 3, 7, 42] {
+            let mut rng = Pcg64::new(seed);
+            let mut g: Vec<f64> = poisson_gaps(&mut rng, rate, Duration::from_secs(15))
+                .iter()
+                .map(|d| d.as_secs_f64())
+                .collect();
+            assert!(g.len() > 1500, "seed {seed}: only {} gaps", g.len());
+            g.sort_by(f64::total_cmp);
+            let d = ks_stat(&g, |t| 1.0 - (-rate * t).exp());
+            assert!(d < 0.05, "seed {seed}: KS D = {d}");
+            // Decile quantile cross-check: the empirical q-quantile must
+            // sit near the exponential quantile −ln(1−q)/rate.
+            let n = g.len();
+            for q in [0.1, 0.25, 0.5, 0.75, 0.9] {
+                let t_emp = g[((n as f64 * q) as usize).min(n - 1)];
+                let t_th = -(1.0 - q).ln() / rate;
+                assert!(
+                    (t_emp - t_th).abs() <= 0.25 * t_th + 2e-4,
+                    "seed {seed} q={q}: {t_emp} vs {t_th}"
+                );
+            }
+        }
+        // Power check: a uniform-gap process with the same mean must fail
+        // the same gate decisively (analytic D ≈ 0.153).
+        let mut rng = Pcg64::new(9);
+        let mean = 1.0 / rate;
+        let mut u: Vec<f64> = (0..2000).map(|_| rng.gen_f64() * 2.0 * mean).collect();
+        u.sort_by(f64::total_cmp);
+        let d_alt = ks_stat(&u, |t| 1.0 - (-rate * t).exp());
+        assert!(d_alt > 0.12, "uniform alternative scored {d_alt}");
+    }
+
     #[test]
     fn alpha_mixture_proportions() {
         prop::check(20, |g| {
@@ -224,9 +454,48 @@ mod tests {
     }
 
     #[test]
+    fn epsilon_mixture_proportions() {
+        prop::check(20, |g| {
+            let mix = vec![(4.0f64, 1.0), (32.0f64, 1.0)];
+            let mut rng = Pcg64::new(g.case ^ 0xE95);
+            let n = 4000;
+            let hits = (0..n)
+                .filter(|_| sample_epsilon(&mut rng, &mix) == 32.0)
+                .count();
+            prop::close(hits as f64 / n as f64, 0.5, 0.05, "epsilon mixture")
+        });
+    }
+
+    #[test]
     fn empty_mix_defaults() {
         let mut rng = Pcg64::new(3);
         assert_eq!(sample_alpha(&mut rng, &[]), 0.4);
+        assert_eq!(sample_epsilon(&mut rng, &[]), 1.0);
+    }
+
+    #[test]
+    fn outcome_digest_is_order_stable_and_content_sensitive() {
+        let o = |id: u64, shed: bool, pred: i32| RequestOutcome {
+            id,
+            shed,
+            pred_class: pred,
+            alpha_bits: 0.4f32.to_bits(),
+            mode: "mca".into(),
+            r_sum_bits: 123.0f64.to_bits(),
+        };
+        let a = vec![o(1, false, 2), o(2, true, -1)];
+        let b = a.clone();
+        assert_eq!(outcome_digest(&a), outcome_digest(&b));
+        // any field change moves the digest
+        let mut c = a.clone();
+        c[0].pred_class = 1;
+        assert_ne!(outcome_digest(&a), outcome_digest(&c));
+        let mut d = a.clone();
+        d[1].shed = false;
+        assert_ne!(outcome_digest(&a), outcome_digest(&d));
+        let mut e = a;
+        e[0].r_sum_bits = 124.0f64.to_bits();
+        assert_ne!(outcome_digest(&d), outcome_digest(&e));
     }
 
     #[test]
@@ -240,13 +509,24 @@ mod tests {
             p50_ms: 10.0,
             p99_ms: 40.0,
             mean_flops_reduction: 2.5,
+            budget_requests: 40,
+            degraded: 7,
+            mean_resolved_alpha: 0.55,
+            outcome_digest: None,
         };
         let mut r4 = r1.clone();
         r4.achieved = 310.0;
+        r4.outcome_digest = Some(0xdead_beef_0123_4567);
+        let mut st = ServerStats::default();
+        st.shed = 5;
+        st.brownout_entries = 2;
+        st.degraded = 7;
+        st.canaries = 3;
+        st.controller_alpha = 0.6;
         let path = std::env::temp_dir().join("mca_test_bench_serving.json");
         let entries =
-            vec![(1usize, "open_loop".to_string(), r1), (4usize, "burst".to_string(), r4)];
-        write_bench_json(&path, "distil_sim", &entries).unwrap();
+            vec![(1usize, "open_loop".to_string(), r1), (4usize, "replay".to_string(), r4)];
+        write_bench_json(&path, "distil_sim", &entries, Some(&st)).unwrap();
         let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(parsed.get("bench").unwrap().as_str().unwrap(), "serving");
         assert_eq!(parsed.get("model").unwrap().as_str().unwrap(), "distil_sim");
@@ -255,9 +535,16 @@ mod tests {
         assert_eq!(rows[0].get("workers").unwrap().as_usize().unwrap(), 1);
         assert_eq!(rows[0].get("kind").unwrap().as_str().unwrap(), "open_loop");
         assert_eq!(rows[0].get("shed").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(rows[0].get("budget_requests").unwrap().as_usize().unwrap(), 40);
+        assert!(rows[0].opt("outcome_digest").is_none());
         assert_eq!(rows[1].get("workers").unwrap().as_usize().unwrap(), 4);
-        assert_eq!(rows[1].get("kind").unwrap().as_str().unwrap(), "burst");
+        assert_eq!(rows[1].get("kind").unwrap().as_str().unwrap(), "replay");
         assert!((rows[1].get("achieved_rps").unwrap().as_f64().unwrap() - 310.0).abs() < 1e-9);
+        assert_eq!(rows[1].get("outcome_digest").unwrap().as_str().unwrap(), "deadbeef01234567");
+        let server = parsed.get("server").unwrap();
+        assert_eq!(server.get("brownout_entries").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(server.get("canaries").unwrap().as_usize().unwrap(), 3);
+        assert!((server.get("controller_alpha").unwrap().as_f64().unwrap() - 0.6).abs() < 1e-9);
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,12 +1,13 @@
 //! Serving coordinator: the L3 system piece. A vLLM-router-style setup
 //! scaled to this paper's contribution: requests carry a per-request α
 //! (the MCA precision knob — "simple dynamic control of the
-//! performance-resource trade-off"), a dynamic batcher groups compatible
+//! performance-resource trade-off") *or* a Theorem-2 error budget ε that
+//! the dispatcher resolves to an α, a dynamic batcher groups compatible
 //! requests into the backend's batch buckets, and a sharded pool of model
 //! workers — each owning its own (possibly non-Send) execution backend —
 //! executes them.
 //!
-//! Three pieces, separated for testability:
+//! Pieces, separated for testability:
 //!
 //! * the pure batching policy ([`plan_batches`]) with its property-tested
 //!   invariants, including the head-of-line rule: a ready (full or
@@ -16,7 +17,13 @@
 //!   α-aware shortest-job-first with a starvation guard, so a cheap
 //!   high-α batch overtakes an expensive exact batch when a worker frees
 //!   up, but nothing waits forever;
-//! * the threaded [`Server`]: a dispatcher thread owns the bounded
+//! * SLO-driven precision: ε-budget requests resolve through the model's
+//!   [`ModelStats`] (`α = ε / β‖W‖_F`, Theorem 2 inverted) onto the
+//!   serving α grid; a canary stream of exact replays feeds an AIMD
+//!   [`AlphaController`] whose target caps how cheap budget requests are
+//!   served; and the admission ladder is admit → degrade (precision
+//!   brownout toward each budget's α ceiling) → shed;
+//! * the threaded [`Server`]: a dispatcher thread owns the cost-bounded
 //!   admission queue (overflow requests get immediate load-shed
 //!   responses) and hands planned batches to idle workers; each worker
 //!   opens its backend from a [`BackendSpec`], so the same coordinator
@@ -33,10 +40,15 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::mca::adaptive::{
+    alpha_for_error_budget, alpha_for_tail_budget, quantize_alpha, AlphaController, ALPHA_GRID,
+};
 use crate::mca::flops::{self, AttnDims};
 use crate::metrics::serving::{AlphaSummary, ServingMetrics, WorkerSnapshot};
 use crate::model::Params;
-use crate::runtime::{open_backend_sized, Backend, BackendSpec, ForwardSpec, HostValue};
+use crate::runtime::{
+    open_backend_sized, Backend, BackendSpec, ForwardSpec, HostValue, ModelStats,
+};
 use crate::tokenizer::Tokenizer;
 use crate::util::threadpool;
 
@@ -44,13 +56,35 @@ use crate::util::threadpool;
 // Request / response types (all Send)
 // ---------------------------------------------------------------------------
 
+/// A per-request Theorem-2 error budget: "serve me at any precision whose
+/// guaranteed mean per-token error stays within ε" (with probability
+/// ≥ 1−δ when `delta` is given). The dispatcher resolves it against the
+/// model's [`ModelStats`] to the cheapest grid α that honors it
+/// ([`Budget::alpha_max`]); the α actually served may be lower (more
+/// precise) when the canary controller's global quality target demands
+/// it, and is raised back to `alpha_max` under precision brownout.
+#[derive(Debug, Clone)]
+pub struct Budget {
+    pub epsilon: f64,
+    /// tail probability for the (1−δ) Theorem-2 tail bound; `None` = mean bound
+    pub delta: Option<f64>,
+    /// cheapest grid α within the budget (resolved at admission)
+    pub alpha_max: f32,
+    /// true once brownout raised this request's α to `alpha_max`
+    pub degraded: bool,
+}
+
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
     pub text: String,
+    /// effective precision knob: the requested α for raw-α requests, the
+    /// resolved grid α for ε-budget requests
     pub alpha: f32,
     /// "mca" (default) or "exact"
     pub mode: String,
+    /// present iff this is an ε-budget request (SLO-driven precision)
+    pub budget: Option<Budget>,
 }
 
 #[derive(Debug, Clone)]
@@ -60,14 +94,23 @@ pub struct Response {
     pub logits: Vec<f32>,
     /// measured FLOPs-reduction factor for this sequence (1.0 for exact)
     pub flops_reduction: f64,
+    /// Σ_layers Σ_tokens r_i for this sequence (0 in exact mode / shed)
+    pub r_sum: f64,
     pub latency: Duration,
     pub batch_size: usize,
-    /// α of the batch this request executed in (== the requested α: the
-    /// batcher never mixes αs — asserted by the concurrency tests)
+    /// α of the batch this request executed in (== the requested α for
+    /// raw-α requests — the batcher never mixes αs, asserted by the
+    /// concurrency tests; the resolved α for ε-budget requests)
     pub alpha: f32,
     /// mode the batch actually executed ("exact" may degrade to "mca"
-    /// only when the backend lacks the exact shape entirely)
+    /// only when the backend lacks the exact shape entirely; an ε budget
+    /// below the α-grid floor resolves to "exact")
     pub mode: String,
+    /// true for ε-budget requests (`alpha` echoes the resolution)
+    pub budget: bool,
+    /// true when precision brownout served this request at its budget
+    /// ceiling `alpha_max` instead of the controller target
+    pub degraded: bool,
     /// true when admission control rejected the request (queue at cap);
     /// no forward ran and `pred_class` is -1
     pub shed: bool,
@@ -178,6 +221,15 @@ pub fn batch_cost(mode: &str, alpha: f32, rows: usize) -> f64 {
     rows as f64 * per_row
 }
 
+/// Eq.-9 cost of one queued request — the unit the admission cap bounds.
+/// For exact and α ≤ 0.5 traffic this is exactly 1 (a request count);
+/// cheap high-α rows cost less, which is what gives the precision
+/// brownout its headroom: degrading queued budget requests toward their
+/// α ceiling shrinks the queue's cost without dropping anything.
+pub fn row_cost(req: &Request) -> f64 {
+    batch_cost(&req.mode, req.alpha, 1)
+}
+
 /// Dispatch priority over ready plans: overdue batches first (longest
 /// wait first), then cheaper batches first ([`batch_cost`]), ties broken
 /// toward the longer waiter. Returns plan indices in dispatch order.
@@ -219,6 +271,26 @@ pub fn argmax_logit(row: &[f32]) -> i32 {
         .unwrap_or(-1)
 }
 
+/// Top-logit margin (top1 − top2) under the IEEE total order; 0.0 for
+/// rows with fewer than two classes. The canary quality proxy is
+/// `1 − |margin_mca − margin_exact|`: a drifting margin is the earliest
+/// sign that sampled value encodings are eroding the decision.
+pub fn logit_margin(row: &[f32]) -> f64 {
+    if row.len() < 2 {
+        return 0.0;
+    }
+    let (mut best, mut second) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+    for &v in row {
+        if v.total_cmp(&best).is_gt() {
+            second = best;
+            best = v;
+        } else if v.total_cmp(&second).is_gt() {
+            second = v;
+        }
+    }
+    (best - second) as f64
+}
+
 // ---------------------------------------------------------------------------
 // Worker pool + server
 // ---------------------------------------------------------------------------
@@ -232,27 +304,91 @@ pub struct ServerConfig {
     pub seq: usize,
     /// worker pool size; each worker opens its own backend instance
     pub workers: usize,
-    /// bounded admission: requests beyond this queue depth are shed
+    /// bounded admission: requests beyond this queue cost are shed. The
+    /// cap is in Eq.-9 cost units ([`row_cost`]): identical to a request
+    /// count for exact/α ≤ 0.5 traffic, larger for cheap high-α rows.
     pub queue_cap: usize,
+    /// queue depth that triggers precision brownout (degrade queued
+    /// ε-budget requests to their α ceiling before shedding); recovery at
+    /// half this depth. 0 disables the brownout stage.
+    pub brownout_watermark: usize,
+    /// fraction of dispatched MCA batches replayed exactly as canaries to
+    /// feed the AIMD α controller (0 disables the canary loop)
+    pub canary_rate: f64,
+    /// quality floor for the canary margin-drift proxy
+    pub quality_floor: f64,
 }
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            model: "bert_sim".to_string(),
+            checkpoint: std::path::PathBuf::new(),
+            max_wait: Duration::from_millis(10),
+            seq: 64,
+            workers: 1,
+            queue_cap: 512,
+            brownout_watermark: 0,
+            canary_rate: 0.0,
+            quality_floor: 0.5,
+        }
+    }
+}
+
+/// Where the AIMD controller starts: mid-grid, so budget requests are
+/// served more precisely than their ceiling until canaries prove the
+/// cheap end of the grid holds quality.
+const INITIAL_CONTROLLER_ALPHA: f64 = 0.4;
+
+/// Synthetic request ids for canary replays (disjoint from client ids,
+/// which count up from 1).
+const CANARY_ID_BASE: u64 = 1 << 62;
+
+/// How long a shutting-down dispatcher keeps draining admitted requests
+/// before dropping the remainder (a safety valve, not a target).
+const DRAIN_DEADLINE: Duration = Duration::from_secs(120);
+
+/// Slack on the admission cost comparison. Row costs like (0.5/0.6)² are
+/// not exact binary fractions, so the incremental `queued_cost` total can
+/// drift by ~1 ulp per add/remove between snap-to-zero points (every time
+/// the client queue empties); 1e-6 absorbs ~1e7 such operations while
+/// staying far below the smallest row cost (0.25).
+const COST_EPS: f64 = 1e-6;
 
 enum Msg {
     Req(Pending, mpsc::Sender<Response>),
     Stats(mpsc::Sender<ServerStats>),
     Done(BatchReport),
+    Pause,
+    Resume,
+    /// Graceful: drain every admitted request before stopping workers.
     Shutdown,
+    /// Fast: drop the undispatched queue (response channels close), wait
+    /// only for in-flight batches. What `Drop` uses — an unwinding client
+    /// must not block behind minutes of queued forwards.
+    Abort,
 }
 
 /// One batch handed to a worker: the owned queue entries plus the planned
-/// bucket capacity.
+/// bucket capacity. `canary` asks the worker to snapshot the head row for
+/// an exact replay.
 struct Job {
     entries: Vec<(Pending, mpsc::Sender<Response>)>,
     bucket: usize,
+    canary: bool,
 }
 
 enum WorkerMsg {
     Job(Job),
     Stop,
+}
+
+/// Snapshot of one served MCA request that the canary loop replays
+/// exactly: the dispatcher compares the exact logits against these to
+/// compute the controller's quality proxy.
+struct CanarySample {
+    text: String,
+    mca_logits: Vec<f32>,
 }
 
 /// What a worker reports back to the dispatcher after a batch.
@@ -264,6 +400,7 @@ struct BatchReport {
     flops: Vec<f64>,
     exec: Duration,
     ok: bool,
+    canary: Option<CanarySample>,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -272,15 +409,32 @@ pub struct ServerStats {
     /// requests rejected by admission control (queue at cap)
     pub shed: usize,
     pub batches: usize,
-    /// admission-queue depth at snapshot time
+    /// admission-queue depth at snapshot time (client requests; canary
+    /// probes are invisible to admission)
     pub queue_depth: usize,
-    /// high-water mark of the admission queue
+    /// high-water mark of the admission queue (client requests)
     pub queue_peak: usize,
     pub mean_latency_ms: f64,
     pub p50_ms: f64,
     pub p99_ms: f64,
     pub mean_batch_size: f64,
     pub mean_flops_reduction: f64,
+    /// whether the dispatcher is currently in the precision-brownout stage
+    pub brownout_active: bool,
+    pub brownout_entries: usize,
+    pub brownout_exits: usize,
+    /// requests served at their budget ceiling because of brownout
+    pub degraded: usize,
+    /// admitted ε-budget requests
+    pub budget_requests: usize,
+    /// budgets below the α-grid floor, resolved to the exact path
+    pub budget_exact: usize,
+    pub canaries: usize,
+    pub canary_violations: usize,
+    /// the AIMD controller's current α target
+    pub controller_alpha: f64,
+    /// (α, count) histogram of budget resolutions (α actually served)
+    pub resolved_alphas: Vec<(f32, usize)>,
     pub workers: Vec<WorkerSnapshot>,
     pub per_alpha: Vec<AlphaSummary>,
 }
@@ -294,19 +448,47 @@ pub struct Submitter {
 }
 
 impl Submitter {
-    /// Submit a request; returns the channel the response arrives on.
-    /// Exactly one response arrives per request (a load-shed response if
-    /// admission control rejects it); the channel closes with no response
-    /// only if the server shuts down or the batch fails mid-flight.
-    pub fn submit(&self, text: &str, alpha: f32, mode: &str) -> mpsc::Receiver<Response> {
+    fn send(&self, req: Request) -> mpsc::Receiver<Response> {
         let (rtx, rrx) = mpsc::channel();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let pending = Pending {
-            req: Request { id, text: text.to_string(), alpha, mode: mode.to_string() },
-            arrived: Instant::now(),
-        };
+        let pending = Pending { req, arrived: Instant::now() };
         let _ = self.tx.send(Msg::Req(pending, rtx));
         rrx
+    }
+
+    /// Submit a raw-α request; returns the channel the response arrives
+    /// on. Exactly one response arrives per request (a load-shed response
+    /// if admission control rejects it); the channel closes with no
+    /// response only if the server shuts down or the batch fails
+    /// mid-flight.
+    pub fn submit(&self, text: &str, alpha: f32, mode: &str) -> mpsc::Receiver<Response> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.send(Request {
+            id,
+            text: text.to_string(),
+            alpha,
+            mode: mode.to_string(),
+            budget: None,
+        })
+    }
+
+    /// Submit an ε-budget request: the server resolves the cheapest grid
+    /// α whose Theorem-2 bound (mean, or the (1−δ) tail when `delta` is
+    /// given) stays within `epsilon`; budgets below the grid floor run on
+    /// the exact path. The response echoes the α actually served.
+    pub fn submit_budget(
+        &self,
+        text: &str,
+        epsilon: f64,
+        delta: Option<f64>,
+    ) -> mpsc::Receiver<Response> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.send(Request {
+            id,
+            text: text.to_string(),
+            alpha: 1.0,
+            mode: "mca".to_string(),
+            budget: Some(Budget { epsilon, delta, alpha_max: 1.0, degraded: false }),
+        })
     }
 }
 
@@ -317,8 +499,9 @@ pub struct Server {
 
 impl Server {
     /// Start the pool: spawns `cfg.workers` model workers (each opens the
-    /// backend, loads the checkpoint and warms up the serving buckets),
-    /// then the dispatcher thread. Fails if any worker fails to start.
+    /// backend, loads the checkpoint, computes the model's Theorem-2
+    /// statistics and warms up the serving buckets), then the dispatcher
+    /// thread. Fails if any worker fails to start.
     pub fn start(backend: BackendSpec, cfg: ServerConfig) -> Result<Server> {
         let n_workers = cfg.workers.max(1);
         let (tx, rx) = mpsc::channel::<Msg>();
@@ -330,7 +513,7 @@ impl Server {
         let mut handles = Vec::with_capacity(n_workers);
         for id in 0..n_workers {
             let (jtx, jrx) = mpsc::channel::<WorkerMsg>();
-            let (rtx, rrx) = mpsc::channel::<Result<Vec<usize>>>();
+            let (rtx, rrx) = mpsc::channel::<Result<(Vec<usize>, ModelStats)>>();
             let spec = backend.clone();
             let wcfg = cfg.clone();
             let events = tx.clone();
@@ -341,9 +524,13 @@ impl Server {
             ready_rxs.push(rrx);
         }
         let mut buckets = Vec::new();
+        let mut stats = ModelStats { beta: 0.0, w_frob: 0.0 };
         for (id, rrx) in ready_rxs.into_iter().enumerate() {
             match rrx.recv() {
-                Ok(Ok(b)) => buckets = b,
+                Ok(Ok((b, st))) => {
+                    buckets = b;
+                    stats = st;
+                }
                 Ok(Err(e)) => {
                     drop(job_txs); // surviving workers exit on channel close
                     for h in handles {
@@ -361,22 +548,47 @@ impl Server {
             }
         }
         let dcfg = cfg;
-        let handle =
-            std::thread::spawn(move || dispatcher_loop(dcfg, buckets, rx, job_txs, handles));
+        let handle = std::thread::spawn(move || {
+            dispatcher_loop(dcfg, buckets, stats, rx, job_txs, handles)
+        });
         Ok(Server {
             sub: Submitter { tx, next_id: Arc::new(AtomicU64::new(1)) },
             handle: Some(handle),
         })
     }
 
-    /// Submit a request; returns the channel the response arrives on.
+    /// Submit a raw-α request; returns the channel the response arrives on.
     pub fn submit(&self, text: &str, alpha: f32, mode: &str) -> mpsc::Receiver<Response> {
         self.sub.submit(text, alpha, mode)
+    }
+
+    /// Submit an ε-budget request (see [`Submitter::submit_budget`]).
+    pub fn submit_budget(
+        &self,
+        text: &str,
+        epsilon: f64,
+        delta: Option<f64>,
+    ) -> mpsc::Receiver<Response> {
+        self.sub.submit_budget(text, epsilon, delta)
     }
 
     /// A cloneable handle for submitting from other threads.
     pub fn submitter(&self) -> Submitter {
         self.sub.clone()
+    }
+
+    /// Pause dispatch: requests are still admitted (and shed at the cost
+    /// cap) but no batch leaves the queue until [`Server::resume`]. Used
+    /// by lockstep replay: with the whole workload queued before the
+    /// first plan, batch composition — and with it every MCA sample
+    /// pool — is a pure function of the workload, not of arrival timing.
+    pub fn pause(&self) {
+        let _ = self.sub.tx.send(Msg::Pause);
+    }
+
+    /// Resume dispatch after [`Server::pause`].
+    pub fn resume(&self) {
+        let _ = self.sub.tx.send(Msg::Resume);
     }
 
     pub fn stats(&self) -> Result<ServerStats> {
@@ -385,6 +597,10 @@ impl Server {
         srx.recv().context("server down")
     }
 
+    /// Graceful shutdown: the dispatcher first drains every admitted
+    /// request (so each one still gets exactly one response), then stops
+    /// and joins the workers. Requests arriving after shutdown begins get
+    /// immediate load-shed responses.
     pub fn shutdown(mut self) -> Result<()> {
         let _ = self.sub.tx.send(Msg::Shutdown);
         if let Some(h) = self.handle.take() {
@@ -395,8 +611,12 @@ impl Server {
 }
 
 impl Drop for Server {
+    /// Fast abort (unlike [`Server::shutdown`], which drains): queued
+    /// requests are dropped so their response channels close, and only
+    /// in-flight batches are waited for — an unwinding client thread must
+    /// not block behind minutes of queued forwards.
     fn drop(&mut self) {
-        let _ = self.sub.tx.send(Msg::Shutdown);
+        let _ = self.sub.tx.send(Msg::Abort);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -407,79 +627,117 @@ impl Drop for Server {
 // Dispatcher
 // ---------------------------------------------------------------------------
 
+/// All state owned by the dispatcher thread. The admission ladder, budget
+/// resolution, brownout stage and canary loop live here — single-threaded
+/// over the queue, so none of it needs interior mutability.
+struct Dispatcher {
+    cfg: ServerConfig,
+    buckets: Vec<usize>,
+    /// Theorem-2 statistics of the loaded checkpoint (from the workers).
+    stats: ModelStats,
+    job_txs: Vec<mpsc::Sender<WorkerMsg>>,
+    metrics: ServingMetrics,
+    queue: VecDeque<(Pending, mpsc::Sender<Response>)>,
+    /// Running Σ [`row_cost`] of queued *client* requests (canary probes
+    /// are excluded: they must never displace paying traffic). Kept
+    /// incrementally — admission is on the dispatcher hot path — and
+    /// snapped back to 0 whenever the queue empties so float drift
+    /// cannot accumulate.
+    queued_cost: f64,
+    /// Queued client-request count (canaries excluded) — what the
+    /// brownout watermark and the queue-depth metric measure.
+    client_depth: usize,
+    idle: Vec<usize>,
+    alive: usize,
+    paused: bool,
+    brownout: bool,
+    draining: bool,
+    controller: AlphaController,
+    canary_acc: f64,
+    canaries: Vec<(mpsc::Receiver<Response>, CanarySample)>,
+    next_canary_id: u64,
+}
+
+/// Canary replays carry synthetic ids above [`CANARY_ID_BASE`].
+fn is_canary(req: &Request) -> bool {
+    req.id >= CANARY_ID_BASE
+}
+
 fn dispatcher_loop(
     cfg: ServerConfig,
     buckets: Vec<usize>,
+    stats: ModelStats,
     rx: mpsc::Receiver<Msg>,
     job_txs: Vec<mpsc::Sender<WorkerMsg>>,
     worker_handles: Vec<JoinHandle<()>>,
 ) -> Result<()> {
     let n_workers = job_txs.len();
-    let queue_cap = cfg.queue_cap.max(1);
-    let mut metrics = ServingMetrics::new(n_workers);
-    let mut queue: VecDeque<(Pending, mpsc::Sender<Response>)> = VecDeque::new();
-    let mut idle: Vec<usize> = (0..n_workers).rev().collect();
-    let mut alive = n_workers;
+    let controller = AlphaController::new(INITIAL_CONTROLLER_ALPHA, cfg.quality_floor);
+    let mut d = Dispatcher {
+        metrics: ServingMetrics::new(n_workers),
+        queue: VecDeque::new(),
+        queued_cost: 0.0,
+        client_depth: 0,
+        idle: (0..n_workers).rev().collect(),
+        alive: n_workers,
+        paused: false,
+        brownout: false,
+        draining: false,
+        canary_acc: 0.0,
+        canaries: Vec::new(),
+        next_canary_id: 0,
+        controller,
+        stats,
+        buckets,
+        job_txs,
+        cfg,
+    };
+    d.metrics.controller_alpha = d.controller.alpha;
+    let mut drain_deadline: Option<Instant> = None;
 
-    'serve: loop {
+    loop {
         // Block briefly for the next event so batching windows fire even
         // when idle, then drain whatever else is already queued.
         let mut msgs: Vec<Msg> = Vec::new();
-        match rx.recv_timeout(cfg.max_wait / 2) {
+        match rx.recv_timeout(d.cfg.max_wait / 2) {
             Ok(m) => msgs.push(m),
             Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => break 'serve,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // Only possible once every worker event sender is gone;
+                // treat it as a shutdown request.
+                d.begin_drain(&mut drain_deadline);
+            }
         }
         while let Ok(m) = rx.try_recv() {
             msgs.push(m);
         }
         for msg in msgs {
-            match msg {
-                Msg::Req(p, rtx) => {
-                    if queue.len() >= queue_cap {
-                        // Admission control: shed instead of queueing
-                        // unboundedly; the caller gets an immediate
-                        // load-shed response.
-                        metrics.on_shed();
-                        let _ = rtx.send(shed_response(&p));
-                    } else {
-                        queue.push_back((p, rtx));
-                        metrics.on_queue_depth(queue.len());
-                    }
-                }
-                Msg::Stats(stx) => {
-                    let _ = stx.send(stats_snapshot(&metrics, queue.len()));
-                }
-                Msg::Done(report) => {
-                    idle.push(report.worker);
-                    if report.ok {
-                        metrics.on_batch(
-                            report.worker,
-                            report.alpha,
-                            report.bucket,
-                            &report.latencies,
-                            &report.flops,
-                            report.exec,
-                        );
-                    } else {
-                        metrics.on_failed_batch(report.worker);
-                    }
-                }
-                Msg::Shutdown => break 'serve,
-            }
+            d.handle(msg, &mut drain_deadline);
         }
-        dispatch(&mut queue, &mut idle, &mut alive, &job_txs, &buckets, &cfg);
-        if alive == 0 {
+        d.poll_canaries();
+        if !d.paused {
+            d.dispatch();
+            d.maybe_recover();
+        }
+        if d.alive == 0 {
             // Every worker is gone: dropping the queued entries closes
             // their response channels, so clients get an error instead of
             // blocking forever on a queue nobody will ever drain.
-            queue.clear();
+            d.queue.clear();
+            d.queued_cost = 0.0;
+            d.client_depth = 0;
+        }
+        if d.draining {
+            let all_idle = d.idle.len() >= d.alive;
+            let expired = drain_deadline.map_or(false, |t| Instant::now() >= t);
+            if (d.queue.is_empty() && all_idle) || expired {
+                break;
+            }
         }
     }
 
-    // Drain the pool: undispatched queue entries are dropped (their
-    // response senders close), workers finish any in-flight batch first.
-    for tx in &job_txs {
+    // The queue is drained (or the deadline expired): stop the workers.
+    for tx in &d.job_txs {
         let _ = tx.send(WorkerMsg::Stop);
     }
     let mut worker_panicked = false;
@@ -494,60 +752,371 @@ fn dispatcher_loop(
     Ok(())
 }
 
-/// Hand ready batches to idle workers, cheapest-ready-first. All ready
-/// plans from one queue snapshot (they are disjoint by construction) are
-/// dispatched before re-planning, so the snapshot clone happens once per
-/// round rather than once per batch.
-fn dispatch(
-    queue: &mut VecDeque<(Pending, mpsc::Sender<Response>)>,
-    idle: &mut Vec<usize>,
-    alive: &mut usize,
-    job_txs: &[mpsc::Sender<WorkerMsg>],
-    buckets: &[usize],
-    cfg: &ServerConfig,
-) {
-    loop {
-        if idle.is_empty() || queue.is_empty() {
-            return;
-        }
-        let pendings: Vec<Pending> = queue.iter().map(|(p, _)| p.clone()).collect();
-        let now = Instant::now();
-        let plans = plan_batches(&pendings, buckets, cfg.max_wait, now);
-        if plans.is_empty() {
-            return;
-        }
-        let order = rank_plans(&pendings, &plans, cfg.max_wait, now);
-        let take = order.len().min(idle.len());
-        let chosen: Vec<&BatchPlan> = order[..take].iter().map(|&k| &plans[k]).collect();
-        // Extract every chosen entry in one pass: the plans are disjoint,
-        // so removing in globally descending queue-index order keeps all
-        // remaining indices valid.
-        let mut flat: Vec<(usize, usize)> = Vec::new(); // (queue index, chosen slot)
-        for (slot, plan) in chosen.iter().enumerate() {
-            for &i in &plan.indices {
-                flat.push((i, slot));
+impl Dispatcher {
+    fn handle(&mut self, msg: Msg, drain_deadline: &mut Option<Instant>) {
+        match msg {
+            Msg::Req(p, rtx) => self.admit(p, rtx),
+            Msg::Stats(stx) => {
+                let _ = stx.send(self.snapshot());
+            }
+            Msg::Done(report) => {
+                self.idle.push(report.worker);
+                if report.ok {
+                    self.metrics.on_batch(
+                        report.worker,
+                        report.alpha,
+                        report.bucket,
+                        &report.latencies,
+                        &report.flops,
+                        report.exec,
+                    );
+                } else {
+                    self.metrics.on_failed_batch(report.worker);
+                }
+                if let Some(sample) = report.canary {
+                    if !self.draining {
+                        self.spawn_canary(sample);
+                    }
+                }
+            }
+            Msg::Pause => self.paused = true,
+            Msg::Resume => self.paused = false,
+            Msg::Shutdown => self.begin_drain(drain_deadline),
+            Msg::Abort => {
+                self.begin_drain(drain_deadline);
+                // Dropping the undispatched entries closes their response
+                // channels — the fast-abort contract of `Drop`.
+                self.queue.clear();
+                self.queued_cost = 0.0;
+                self.client_depth = 0;
             }
         }
-        flat.sort_unstable_by(|a, b| b.0.cmp(&a.0));
-        let mut per_plan: Vec<Vec<(Pending, mpsc::Sender<Response>)>> =
-            chosen.iter().map(|p| Vec::with_capacity(p.indices.len())).collect();
-        for (i, slot) in flat {
-            per_plan[slot].push(queue.remove(i).expect("planned index in range"));
-        }
-        for (slot, mut entries) in per_plan.into_iter().enumerate() {
-            entries.reverse(); // descending extraction -> FIFO order
-            let wid = idle.pop().expect("take sized by idle.len()");
-            let job = WorkerMsg::Job(Job { entries, bucket: chosen[slot].bucket });
-            if job_txs[wid].send(job).is_err() {
-                // Worker died outside the per-job panic guard: its
-                // requests are dropped (response senders close, clients
-                // error out) and the slot is permanently retired.
-                *alive = alive.saturating_sub(1);
-            }
-        }
-        // Loop: more plans may be ready than workers were idle, or new
-        // plans may have become ready against the shrunk queue.
     }
+
+    fn begin_drain(&mut self, drain_deadline: &mut Option<Instant>) {
+        self.draining = true;
+        self.paused = false;
+        if drain_deadline.is_none() {
+            *drain_deadline = Some(Instant::now() + DRAIN_DEADLINE);
+        }
+    }
+
+    /// Admission ladder: resolve any ε budget, then admit within the cost
+    /// cap; at the cap, try the precision-brownout stage (degrade queued
+    /// budget requests to their α ceiling) before shedding.
+    fn admit(&mut self, mut p: Pending, rtx: mpsc::Sender<Response>) {
+        if self.draining {
+            self.metrics.on_shed();
+            let _ = rtx.send(shed_response(&p));
+            return;
+        }
+        self.resolve(&mut p);
+        let cap = self.cfg.queue_cap.max(1) as f64;
+        if self.queued_cost + row_cost(&p.req) > cap + COST_EPS {
+            // Ladder step 2 (only when the brownout stage is enabled):
+            // degrade before shedding.
+            if self.cfg.brownout_watermark > 0 {
+                self.enter_brownout();
+                degrade_to_ceiling(&mut p.req);
+            }
+            if self.queued_cost + row_cost(&p.req) > cap + COST_EPS {
+                self.metrics.on_shed();
+                let _ = rtx.send(shed_response(&p));
+                return;
+            }
+        }
+        let is_budget = p.req.budget.is_some();
+        let is_exact_budget = is_budget && p.req.mode == "exact";
+        let alpha = p.req.alpha;
+        let was_degraded = p.req.budget.as_ref().map_or(false, |b| b.degraded);
+        self.queued_cost += row_cost(&p.req);
+        self.client_depth += 1;
+        self.queue.push_back((p, rtx));
+        self.metrics.on_queue_depth(self.client_depth);
+        if is_budget {
+            self.metrics.on_budget_resolved(alpha, is_exact_budget);
+        }
+        if was_degraded {
+            self.metrics.on_degraded(1);
+        }
+        // High-water mark: the queue may have crossed it on this admission.
+        if self.cfg.brownout_watermark > 0
+            && !self.brownout
+            && self.client_depth >= self.cfg.brownout_watermark
+        {
+            self.enter_brownout();
+        }
+    }
+
+    /// Resolve an ε budget against the model statistics onto the serving
+    /// α grid. The request's ceiling (`alpha_max`) is the cheapest grid α
+    /// whose Theorem-2 bound stays within ε; the α actually served is
+    /// capped by the canary controller's target unless brownout is on.
+    /// Budgets below the grid floor — and any budget against degenerate
+    /// statistics — run on the exact path (zero error honors every ε).
+    fn resolve(&mut self, p: &mut Pending) {
+        let Some(b) = p.req.budget.as_mut() else { return };
+        let raw = if self.stats.usable() {
+            match b.delta {
+                Some(delta) => {
+                    alpha_for_tail_budget(b.epsilon, delta, self.stats.beta, self.stats.w_frob)
+                }
+                None => alpha_for_error_budget(b.epsilon, self.stats.beta, self.stats.w_frob),
+            }
+        } else {
+            0.0
+        };
+        match quantize_alpha(raw) {
+            Some(ceiling) => {
+                b.alpha_max = ceiling;
+                let target = quantize_alpha(self.controller.alpha).unwrap_or(ALPHA_GRID[0]);
+                let normal = if ceiling < target { ceiling } else { target };
+                if self.brownout && normal.to_bits() != ceiling.to_bits() {
+                    p.req.alpha = ceiling;
+                    b.degraded = true;
+                } else {
+                    p.req.alpha = normal;
+                }
+            }
+            None => {
+                p.req.mode = "exact".to_string();
+                p.req.alpha = 1.0;
+                b.alpha_max = 1.0;
+            }
+        }
+    }
+
+    /// Enter the brownout stage (if enabled and not already on): degrade
+    /// every queued, not-yet-dispatched ε-budget MCA request to its α
+    /// ceiling — still within each request's Theorem-2 budget, but as
+    /// cheap as that budget allows. The running queue cost is rebuilt
+    /// from scratch afterwards (degradation changes row costs; this is a
+    /// rare transition, not the admission hot path).
+    fn enter_brownout(&mut self) -> bool {
+        if self.cfg.brownout_watermark == 0 || self.brownout {
+            return false;
+        }
+        self.brownout = true;
+        self.metrics.on_brownout_enter();
+        let mut degraded = 0usize;
+        for (p, _) in self.queue.iter_mut() {
+            let before = p.req.alpha;
+            if degrade_to_ceiling(&mut p.req) {
+                degraded += 1;
+                // keep the resolved-α histogram keyed by the α actually
+                // served, not the admission-time target
+                self.metrics.on_budget_realpha(before, p.req.alpha);
+            }
+        }
+        self.metrics.on_degraded(degraded);
+        self.queued_cost = self
+            .queue
+            .iter()
+            .filter(|(p, _)| !is_canary(&p.req))
+            .map(|(p, _)| row_cost(&p.req))
+            .sum();
+        true
+    }
+
+    /// Recover from brownout once the client queue drains to the
+    /// low-water marks: half the depth watermark AND half the cost cap.
+    /// The cost condition matters when the cap binds at a depth below the
+    /// depth low-water (cap ≪ watermark): without it, a cap-triggered
+    /// brownout would exit on the very next loop iteration and re-enter
+    /// on the next over-cap admission — flapping through the O(queue)
+    /// degrade pass once per arrival. Requests already degraded stay at
+    /// their ceiling — re-tightening precision mid-queue would split
+    /// batches for no client-visible benefit.
+    fn maybe_recover(&mut self) {
+        if !self.brownout {
+            return;
+        }
+        let cap = self.cfg.queue_cap.max(1) as f64;
+        if self.client_depth <= self.cfg.brownout_watermark / 2 && self.queued_cost <= cap / 2.0 {
+            self.brownout = false;
+            self.metrics.on_brownout_exit();
+        }
+    }
+
+    /// Hand ready batches to idle workers, cheapest-ready-first. All ready
+    /// plans from one queue snapshot (they are disjoint by construction)
+    /// are dispatched before re-planning, so the snapshot clone happens
+    /// once per round rather than once per batch.
+    fn dispatch(&mut self) {
+        loop {
+            if self.idle.is_empty() || self.queue.is_empty() {
+                return;
+            }
+            let pendings: Vec<Pending> = self.queue.iter().map(|(p, _)| p.clone()).collect();
+            let now = Instant::now();
+            let plans = plan_batches(&pendings, &self.buckets, self.cfg.max_wait, now);
+            if plans.is_empty() {
+                return;
+            }
+            let order = rank_plans(&pendings, &plans, self.cfg.max_wait, now);
+            let take = order.len().min(self.idle.len());
+            let chosen: Vec<&BatchPlan> = order[..take].iter().map(|&k| &plans[k]).collect();
+            // Extract every chosen entry in one pass: the plans are
+            // disjoint, so removing in globally descending queue-index
+            // order keeps all remaining indices valid.
+            let mut flat: Vec<(usize, usize)> = Vec::new(); // (queue index, chosen slot)
+            for (slot, plan) in chosen.iter().enumerate() {
+                for &i in &plan.indices {
+                    flat.push((i, slot));
+                }
+            }
+            flat.sort_unstable_by(|a, b| b.0.cmp(&a.0));
+            let mut per_plan: Vec<Vec<(Pending, mpsc::Sender<Response>)>> =
+                chosen.iter().map(|p| Vec::with_capacity(p.indices.len())).collect();
+            for (i, slot) in flat {
+                let entry = self.queue.remove(i).expect("planned index in range");
+                if !is_canary(&entry.0.req) {
+                    self.queued_cost -= row_cost(&entry.0.req);
+                    self.client_depth -= 1;
+                }
+                per_plan[slot].push(entry);
+            }
+            if self.client_depth == 0 {
+                // No clients queued (canaries carry no cost): snap the
+                // running cost so float drift cannot accumulate.
+                self.queued_cost = 0.0;
+            }
+            let buckets: Vec<usize> = chosen.iter().map(|p| p.bucket).collect();
+            for (slot, mut entries) in per_plan.into_iter().enumerate() {
+                entries.reverse(); // descending extraction -> FIFO order
+                let canary = self.mark_canary(&entries[0].0.req);
+                let wid = self.idle.pop().expect("take sized by idle.len()");
+                let job = WorkerMsg::Job(Job { entries, bucket: buckets[slot], canary });
+                if self.job_txs[wid].send(job).is_err() {
+                    // Worker died outside the per-job panic guard: its
+                    // requests are dropped (response senders close,
+                    // clients error out) and the slot is permanently
+                    // retired.
+                    self.alive = self.alive.saturating_sub(1);
+                }
+            }
+            // Loop: more plans may be ready than workers were idle, or new
+            // plans may have become ready against the shrunk queue.
+        }
+    }
+
+    /// Deterministic canary pacing: accumulate `canary_rate` per
+    /// dispatched MCA batch, fire on overflow. Suppressed under brownout
+    /// (the canary would amplify the overload it is meant to survive)
+    /// and while draining.
+    fn mark_canary(&mut self, head: &Request) -> bool {
+        if self.cfg.canary_rate <= 0.0 || self.brownout || self.draining || head.mode != "mca" {
+            return false;
+        }
+        self.canary_acc += self.cfg.canary_rate;
+        if self.canary_acc >= 1.0 {
+            self.canary_acc -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Enqueue an exact replay of a sampled served request. It rides the
+    /// normal queue (batching with other exact traffic) but is invisible
+    /// to admission: probes contribute neither to the queue cost nor to
+    /// the brownout watermark depth, so canary traffic can never shed a
+    /// client request or trigger the brownout it is meant to observe.
+    /// The rate limiter above bounds canary volume.
+    fn spawn_canary(&mut self, sample: CanarySample) {
+        let (ctx, crx) = mpsc::channel();
+        self.next_canary_id += 1;
+        let req = Request {
+            id: CANARY_ID_BASE + self.next_canary_id,
+            text: sample.text.clone(),
+            alpha: 1.0,
+            mode: "exact".to_string(),
+            budget: None,
+        };
+        self.queue.push_back((Pending { req, arrived: Instant::now() }, ctx));
+        self.canaries.push((crx, sample));
+    }
+
+    /// Fold completed canary replays into the controller: quality proxy
+    /// = 1 − |top-logit margin drift| between the served MCA logits and
+    /// the exact replay.
+    fn poll_canaries(&mut self) {
+        if self.canaries.is_empty() {
+            return;
+        }
+        let mut keep = Vec::with_capacity(self.canaries.len());
+        for (crx, sample) in std::mem::take(&mut self.canaries) {
+            match crx.try_recv() {
+                Ok(resp) => {
+                    if resp.mode != "exact" {
+                        // The replay degraded to MCA (backend without the
+                        // exact shape): MCA-vs-MCA drift is noise, not a
+                        // quality signal — never feed it to the controller.
+                        continue;
+                    }
+                    let drift = (logit_margin(&resp.logits) - logit_margin(&sample.mca_logits))
+                        .abs();
+                    let quality = 1.0 - drift;
+                    let violation = quality < self.controller.quality_floor;
+                    let next = self.controller.observe(quality);
+                    self.metrics.on_canary(violation, next);
+                }
+                Err(mpsc::TryRecvError::Empty) => keep.push((crx, sample)),
+                Err(mpsc::TryRecvError::Disconnected) => {} // replay failed; drop
+            }
+        }
+        self.canaries = keep;
+    }
+
+    fn snapshot(&self) -> ServerStats {
+        let m = &self.metrics;
+        let lat = m.total_lat();
+        let served = m.served();
+        let batches = m.batches();
+        ServerStats {
+            served,
+            shed: m.shed,
+            batches,
+            queue_depth: self.client_depth,
+            queue_peak: m.queue_peak,
+            mean_latency_ms: lat.mean_ms(),
+            p50_ms: lat.p50_ms(),
+            p99_ms: lat.p99_ms(),
+            mean_batch_size: if batches > 0 {
+                m.batch_size_sum() as f64 / batches as f64
+            } else {
+                0.0
+            },
+            mean_flops_reduction: if served > 0 { m.flops_sum() / served as f64 } else { 0.0 },
+            brownout_active: self.brownout,
+            brownout_entries: m.brownout_entries,
+            brownout_exits: m.brownout_exits,
+            degraded: m.degraded,
+            budget_requests: m.budget_requests,
+            budget_exact: m.budget_exact,
+            canaries: m.canaries,
+            canary_violations: m.canary_violations,
+            controller_alpha: m.controller_alpha,
+            resolved_alphas: m.resolved_alpha_counts(),
+            workers: m.worker_snapshots(),
+            per_alpha: m.alpha_summaries(),
+        }
+    }
+}
+
+/// Raise an ε-budget MCA request to its resolved α ceiling (the cheapest
+/// precision its Theorem-2 budget allows). Returns whether α changed.
+fn degrade_to_ceiling(req: &mut Request) -> bool {
+    if req.mode != "mca" {
+        return false;
+    }
+    let Some(b) = req.budget.as_mut() else { return false };
+    if req.alpha.to_bits() == b.alpha_max.to_bits() {
+        return false;
+    }
+    req.alpha = b.alpha_max;
+    b.degraded = true;
+    true
 }
 
 fn shed_response(p: &Pending) -> Response {
@@ -556,35 +1125,14 @@ fn shed_response(p: &Pending) -> Response {
         pred_class: -1,
         logits: Vec::new(),
         flops_reduction: 1.0,
+        r_sum: 0.0,
         latency: Duration::ZERO,
         batch_size: 0,
         alpha: p.req.alpha,
         mode: p.req.mode.clone(),
+        budget: p.req.budget.is_some(),
+        degraded: false,
         shed: true,
-    }
-}
-
-fn stats_snapshot(metrics: &ServingMetrics, queue_depth: usize) -> ServerStats {
-    let lat = metrics.total_lat();
-    let served = metrics.served();
-    let batches = metrics.batches();
-    ServerStats {
-        served,
-        shed: metrics.shed,
-        batches,
-        queue_depth,
-        queue_peak: metrics.queue_peak,
-        mean_latency_ms: lat.mean_ms(),
-        p50_ms: lat.p50_ms(),
-        p99_ms: lat.p99_ms(),
-        mean_batch_size: if batches > 0 {
-            metrics.batch_size_sum() as f64 / batches as f64
-        } else {
-            0.0
-        },
-        mean_flops_reduction: if served > 0 { metrics.flops_sum() / served as f64 } else { 0.0 },
-        workers: metrics.worker_snapshots(),
-        per_alpha: metrics.alpha_summaries(),
     }
 }
 
@@ -610,32 +1158,36 @@ fn worker_loop(
     intra_threads: usize,
     jobs: mpsc::Receiver<WorkerMsg>,
     events: mpsc::Sender<Msg>,
-    ready: mpsc::Sender<Result<Vec<usize>>>,
+    ready: mpsc::Sender<Result<(Vec<usize>, ModelStats)>>,
 ) {
     // --- startup ---------------------------------------------------------
-    let init = (|| -> Result<WorkerState> {
+    let init = (|| -> Result<(WorkerState, ModelStats)> {
         let mut backend = open_backend_sized(&backend_spec, Some(intra_threads))?;
         let model = backend.model(&cfg.model)?;
         let params = Params::load(&cfg.checkpoint, &model)?;
+        let stats = backend.model_stats(&cfg.model, &params)?;
         let buckets = backend.buckets(&cfg.model, cfg.seq)?;
         for &b in &buckets {
             backend.warmup(&ForwardSpec::new(&cfg.model, "mca", b, cfg.seq))?;
         }
-        Ok(WorkerState {
-            id,
-            dims: AttnDims { d_model: model.d_model, window: model.window },
-            n_layers: model.n_layers,
-            backend,
-            params,
-            tok: Tokenizer::new(),
-            cfg,
-            buckets,
-        })
+        Ok((
+            WorkerState {
+                id,
+                dims: AttnDims { d_model: model.d_model, window: model.window },
+                n_layers: model.n_layers,
+                backend,
+                params,
+                tok: Tokenizer::new(),
+                cfg,
+                buckets,
+            },
+            stats,
+        ))
     })();
 
     let mut st = match init {
-        Ok(st) => {
-            let _ = ready.send(Ok(st.buckets.clone()));
+        Ok((st, stats)) => {
+            let _ = ready.send(Ok((st.buckets.clone(), stats)));
             st
         }
         Err(e) => {
@@ -667,6 +1219,7 @@ fn worker_loop(
                         flops: Vec::new(),
                         exec: Duration::ZERO,
                         ok: false,
+                        canary: None,
                     };
                     (report, Vec::new())
                 });
@@ -696,6 +1249,7 @@ fn execute_job(st: &mut WorkerState, job: Job) -> (BatchReport, Deliveries) {
     let first_id = first.id;
     let mut mode = first.mode.clone();
     let n = job.entries.len();
+    let want_canary = job.canary;
 
     // Backends with compiled shapes need the full padded bucket (unused
     // rows repeat row 0 and are discarded); shape-free backends run the
@@ -748,6 +1302,7 @@ fn execute_job(st: &mut WorkerState, job: Job) -> (BatchReport, Deliveries) {
                 flops: Vec::new(),
                 exec: t0.elapsed(),
                 ok: false,
+                canary: None,
             };
             return (report, Vec::new());
         }
@@ -755,6 +1310,13 @@ fn execute_job(st: &mut WorkerState, job: Job) -> (BatchReport, Deliveries) {
     let exec = t0.elapsed();
 
     let ncl = fwd.n_classes;
+    // Canary snapshot of the head row: the dispatcher replays this text
+    // exactly and compares margins to feed the AIMD controller.
+    let canary = if want_canary && mode == "mca" {
+        Some(CanarySample { text: first.text.clone(), mca_logits: fwd.logits[..ncl].to_vec() })
+    } else {
+        None
+    };
     let mut latencies = Vec::with_capacity(n);
     let mut flops_red = Vec::with_capacity(n);
     let mut deliveries: Deliveries = Vec::with_capacity(n);
@@ -778,10 +1340,13 @@ fn execute_job(st: &mut WorkerState, job: Job) -> (BatchReport, Deliveries) {
             pred_class: pred,
             logits: row.to_vec(),
             flops_reduction: reduction,
+            r_sum: fwd.r_sum[slot] as f64,
             latency,
             batch_size: n,
             alpha,
             mode: mode.clone(),
+            budget: pending.req.budget.is_some(),
+            degraded: pending.req.budget.as_ref().map_or(false, |b| b.degraded),
             shed: false,
         };
         deliveries.push((rtx, resp));
@@ -794,6 +1359,7 @@ fn execute_job(st: &mut WorkerState, job: Job) -> (BatchReport, Deliveries) {
         flops: flops_red,
         exec,
         ok: true,
+        canary,
     };
     (report, deliveries)
 }
@@ -805,7 +1371,7 @@ mod tests {
 
     fn pending(id: u64, alpha: f32, mode: &str, age_ms: u64, now: Instant) -> Pending {
         Pending {
-            req: Request { id, text: String::new(), alpha, mode: mode.into() },
+            req: Request { id, text: String::new(), alpha, mode: mode.into(), budget: None },
             arrived: now - Duration::from_millis(age_ms),
         }
     }
@@ -1030,6 +1596,20 @@ mod tests {
     }
 
     #[test]
+    fn logit_margin_is_top_two_gap_and_nan_safe() {
+        assert!((logit_margin(&[3.0, 1.0, 2.5]) - 0.5).abs() < 1e-6);
+        assert!((logit_margin(&[1.0, 1.0]) - 0.0).abs() < 1e-9);
+        assert_eq!(logit_margin(&[7.0]), 0.0);
+        assert_eq!(logit_margin(&[]), 0.0);
+        // order invariance
+        assert!((logit_margin(&[1.0, 2.5, 3.0]) - logit_margin(&[3.0, 1.0, 2.5])).abs() < 1e-9);
+        // NaN rows go through the total order: the result is deterministic
+        // (and the downstream controller ignores non-finite proxies)
+        let m = logit_margin(&[f32::NAN, 1.0]);
+        assert_eq!(m.is_nan(), logit_margin(&[f32::NAN, 1.0]).is_nan());
+    }
+
+    #[test]
     fn batch_cost_alpha_aware() {
         // exact is the most expensive at equal rows
         assert!(batch_cost("exact", 1.0, 8) > batch_cost("mca", 0.8, 8));
@@ -1039,6 +1619,64 @@ mod tests {
         assert!(batch_cost("mca", 0.1, 8) <= batch_cost("exact", 0.1, 8) + 1e-12);
         // scales with rows
         assert!(batch_cost("mca", 0.6, 8) > batch_cost("mca", 0.6, 2));
+    }
+
+    #[test]
+    fn row_cost_matches_request_count_for_cheap_alphas() {
+        // The admission cap must keep its historical "request count"
+        // reading for exact and α ≤ 0.5 traffic.
+        for (alpha, mode) in [(0.2f32, "mca"), (0.4, "mca"), (0.5, "mca"), (1.0, "exact")] {
+            let req = Request {
+                id: 0,
+                text: String::new(),
+                alpha,
+                mode: mode.into(),
+                budget: None,
+            };
+            assert!((row_cost(&req) - 1.0).abs() < 1e-12, "alpha {alpha}");
+        }
+        // ...and give headroom above it.
+        let cheap = Request {
+            id: 0,
+            text: String::new(),
+            alpha: 1.0,
+            mode: "mca".into(),
+            budget: None,
+        };
+        assert!((row_cost(&cheap) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degrade_to_ceiling_only_moves_budget_mca_requests() {
+        let mk = |alpha: f32, mode: &str, budget: Option<Budget>| Request {
+            id: 1,
+            text: String::new(),
+            alpha,
+            mode: mode.into(),
+            budget,
+        };
+        // raw-α request: untouched
+        let mut raw = mk(0.2, "mca", None);
+        assert!(!degrade_to_ceiling(&mut raw));
+        assert_eq!(raw.alpha, 0.2);
+        // exact-resolved budget: untouched
+        let mut ex = mk(
+            1.0,
+            "exact",
+            Some(Budget { epsilon: 0.1, delta: None, alpha_max: 1.0, degraded: false }),
+        );
+        assert!(!degrade_to_ceiling(&mut ex));
+        // budget below its ceiling: raised and flagged
+        let mut b = mk(
+            0.4,
+            "mca",
+            Some(Budget { epsilon: 5.0, delta: None, alpha_max: 0.8, degraded: false }),
+        );
+        assert!(degrade_to_ceiling(&mut b));
+        assert_eq!(b.alpha, 0.8);
+        assert!(b.budget.as_ref().unwrap().degraded);
+        // already at the ceiling: a second degrade is a no-op
+        assert!(!degrade_to_ceiling(&mut b));
     }
 
     #[test]

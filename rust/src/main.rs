@@ -56,9 +56,12 @@ fn print_help() {
            ablations   r-strategy + sampling-distribution ablations\n\
            train       fine-tune one model on one task\n\
            serve       serving demo (worker pool, dynamic batching, live α;\n\
-                       --workers N --queue-cap M select pool size + admission cap)\n\
+                       --workers/--queue-cap size the pool, --error-budget\n\
+                       serves Theorem-2 ε budgets, --brownout-watermark and\n\
+                       --canary-rate drive the adaptive-precision loop)\n\
            loadtest    open-loop Poisson load sweep against the worker pool\n\
-                       (sweeps --workers, writes BENCH_serving.json)\n\
+                       (sweeps --workers, mixes --error-budget workloads,\n\
+                       writes BENCH_serving.json incl. brownout counters)\n\
            bounds      Lemma-1 / Theorem-2 bound-tightness table\n\
            project     project measured FLOPs reductions to the paper's d\n\
            validate    compile every artifact (pjrt builds only)\n\
@@ -287,7 +290,23 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
                 .opt("requests", "64", "demo request count")
                 .opt("max-wait-ms", "20", "batching window")
                 .opt("workers", "2", "worker pool size (backend instances)")
-                .opt("queue-cap", "512", "admission queue cap (requests beyond it are shed)")
+                .opt("queue-cap", "512", "admission cap in Eq.-9 cost units (overflow is shed)")
+                .opt(
+                    "error-budget",
+                    "",
+                    "ε list: demo requests alternate Theorem-2 error budgets with raw α (empty = raw α only)",
+                )
+                .opt(
+                    "brownout-watermark",
+                    "0",
+                    "queue depth that triggers precision brownout (0 = disabled)",
+                )
+                .opt(
+                    "canary-rate",
+                    "0.1",
+                    "fraction of MCA batches replayed exactly to feed the α controller",
+                )
+                .opt("quality-floor", "0.5", "canary margin-drift quality floor")
                 .parse(rest)?;
             if args.get_flag("help-cmd") {
                 eprint!("{}", args.usage(cmd));
@@ -374,9 +393,22 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
                 .opt("secs", "3", "duration per rate")
                 .opt("max-wait-ms", "10", "batching window")
                 .opt("workers", "1,4", "worker pool sizes to sweep (comma list)")
-                .opt("queue-cap", "512", "admission queue cap (requests beyond it are shed)")
-                .opt("seed", "7", "workload seed (arrivals + α mixture)")
-                .opt("burst", "128", "closed-burst size per worker count (0 to skip)")
+                .opt("queue-cap", "512", "admission cap in Eq.-9 cost units (overflow is shed)")
+                .opt("seed", "7", "workload seed (arrivals + α/ε mixtures)")
+                .opt("burst", "128", "lockstep replay-burst size per worker count (0 to skip)")
+                .opt(
+                    "error-budget",
+                    "",
+                    "ε list for budget-carrying requests (empty = raw-α workload only)",
+                )
+                .opt("budget-frac", "0.5", "fraction of requests that carry an ε budget")
+                .opt(
+                    "brownout-watermark",
+                    "0",
+                    "queue depth that triggers precision brownout (0 = disabled)",
+                )
+                .opt("canary-rate", "0", "fraction of MCA batches replayed exactly as canaries")
+                .opt("quality-floor", "0.5", "canary margin-drift quality floor")
                 .opt("json", "BENCH_serving.json", "machine-readable results (empty to skip)")
                 .parse(rest)?;
             if args.get_flag("help-cmd") {
@@ -484,7 +516,7 @@ fn project_cmd(args: &Args) -> Result<()> {
 }
 
 fn loadtest(args: &Args) -> Result<()> {
-    use mca::coordinator::loadgen::{run_burst, run_load, write_bench_json, LoadResult, Workload};
+    use mca::coordinator::loadgen::{run_load, run_replay, write_bench_json, LoadResult, Workload};
     use mca::coordinator::{Server, ServerConfig};
     use std::time::Duration;
 
@@ -515,14 +547,18 @@ fn loadtest(args: &Args) -> Result<()> {
     let rates = args.get_f64_list("rates")?;
     let seed = args.get_u64("seed")?;
     let mut text = String::from(
-        "| workers | offered req/s | achieved | shed | mean ms | p50 ms | p99 ms | FLOPs red. |\n|---|---|---|---|---|---|---|---|\n",
+        "| workers | offered req/s | achieved | shed | mean ms | p50 ms | p99 ms | FLOPs red. | ᾱ(budget) |\n|---|---|---|---|---|---|---|---|---|\n",
     );
     let alpha_mix = vec![(0.2f32, 1.0f64), (0.4, 1.0), (0.6, 1.0)];
+    let epsilon_mix: Vec<(f64, f64)> =
+        args.get_f64_list("error-budget")?.into_iter().map(|e| (e, 1.0)).collect();
+    let budget_frac = if epsilon_mix.is_empty() { 0.0 } else { args.get_f64("budget-frac")? };
     let burst = args.get_usize("burst")?;
     let mut entries: Vec<(usize, String, LoadResult)> = Vec::new();
+    let mut last_stats = None;
     for &workers in &worker_counts {
-        // Same seed per worker count: identical arrival process and α
-        // mixture, so throughput deltas are attributable to the pool.
+        // Same seed per worker count: identical arrival process and α/ε
+        // mixtures, so throughput deltas are attributable to the pool.
         let server = Server::start(
             p.backend.clone(),
             ServerConfig {
@@ -532,47 +568,63 @@ fn loadtest(args: &Args) -> Result<()> {
                 seq: 64,
                 workers,
                 queue_cap: args.get_usize("queue-cap")?,
+                brownout_watermark: args.get_usize("brownout-watermark")?,
+                canary_rate: args.get_f64("canary-rate")?,
+                quality_floor: args.get_f64("quality-floor")?,
             },
         )?;
-        for &rate in &rates {
-            let wl = Workload {
-                rate,
-                duration: Duration::from_secs(args.get_u64("secs")?),
-                alpha_mix: alpha_mix.clone(),
-                seed,
-            };
-            let r = run_load(&server, &texts, &wl)?;
+        let wl_base = Workload {
+            rate: 0.0,
+            duration: Duration::from_secs(args.get_u64("secs")?),
+            alpha_mix: alpha_mix.clone(),
+            budget_frac,
+            epsilon_mix: epsilon_mix.clone(),
+            seed,
+        };
+        if burst > 0 {
+            // Lockstep replay burst, run FIRST on the fresh server: the
+            // drain rate is the saturated-throughput signal that separates
+            // worker counts, and the outcome digest pins request-level
+            // determinism — two runs with the same seed and worker count
+            // must produce identical served/shed sets, pred classes and
+            // Σr_i. Running it before any open-loop (canary-bearing)
+            // traffic keeps the controller at its seed-independent initial
+            // state, so the digest is reproducible even with
+            // --canary-rate > 0.
+            let (r, _) = run_replay(&server, &texts, burst, &wl_base)?;
             eprintln!(
-                "[loadtest] w={workers} offered {rate:.0}: achieved {:.1}, p99 {:.1}ms, shed {}",
-                r.achieved, r.p99_ms, r.shed
+                "[loadtest] w={workers} replay({burst}): drained at {:.1} req/s, p99 {:.1}ms, digest {}",
+                r.achieved,
+                r.p99_ms,
+                r.outcome_digest.map(|d| format!("{d:016x}")).unwrap_or_default()
             );
             text.push_str(&format!(
-                "| {workers} | {:.0} | {:.1} | {} | {:.1} | {:.1} | {:.1} | {:.2}× |\n",
+                "| {workers} | replay({burst}) | {:.1} | {} | {:.1} | {:.1} | {:.1} | {:.2}× | {:.2} |\n",
+                r.achieved, r.shed, r.mean_ms, r.p50_ms, r.p99_ms, r.mean_flops_reduction,
+                r.mean_resolved_alpha
+            ));
+            entries.push((workers, "replay".to_string(), r));
+        }
+        for &rate in &rates {
+            let wl = Workload { rate, ..wl_base.clone() };
+            let r = run_load(&server, &texts, &wl)?;
+            eprintln!(
+                "[loadtest] w={workers} offered {rate:.0}: achieved {:.1}, p99 {:.1}ms, shed {}, degraded {}",
+                r.achieved, r.p99_ms, r.shed, r.degraded
+            );
+            text.push_str(&format!(
+                "| {workers} | {:.0} | {:.1} | {} | {:.1} | {:.1} | {:.1} | {:.2}× | {:.2} |\n",
                 r.offered, r.achieved, r.shed, r.mean_ms, r.p50_ms, r.p99_ms,
-                r.mean_flops_reduction
+                r.mean_flops_reduction, r.mean_resolved_alpha
             ));
             entries.push((workers, "open_loop".to_string(), r));
         }
-        if burst > 0 {
-            // Closed burst: the drain rate is the saturated-throughput
-            // signal that separates worker counts even when the open-loop
-            // rates sit below saturation.
-            let r = run_burst(&server, &texts, burst, &alpha_mix, seed)?;
-            eprintln!(
-                "[loadtest] w={workers} burst({burst}): drained at {:.1} req/s, p99 {:.1}ms",
-                r.achieved, r.p99_ms
-            );
-            text.push_str(&format!(
-                "| {workers} | burst({burst}) | {:.1} | {} | {:.1} | {:.1} | {:.1} | {:.2}× |\n",
-                r.achieved, r.shed, r.mean_ms, r.p50_ms, r.p99_ms, r.mean_flops_reduction
-            ));
-            entries.push((workers, "burst".to_string(), r));
-        }
+        last_stats = Some(server.stats()?);
         server.shutdown()?;
     }
     let json_path = args.get("json");
     if !json_path.is_empty() {
-        write_bench_json(std::path::Path::new(&json_path), &model, &entries)?;
+        write_bench_json(std::path::Path::new(&json_path), &model, &entries, last_stats.as_ref())?;
         eprintln!("[loadtest] wrote {json_path}");
     }
     emit(args, &text)
@@ -610,21 +662,32 @@ fn serve_demo(args: &Args) -> Result<()> {
             seq: 64,
             workers,
             queue_cap: args.get_usize("queue-cap")?,
+            brownout_watermark: args.get_usize("brownout-watermark")?,
+            canary_rate: args.get_f64("canary-rate")?,
+            quality_floor: args.get_f64("quality-floor")?,
         },
     )?;
 
-    // Generate demo traffic from the dev set.
+    // Generate demo traffic from the dev set: raw-α requests, alternated
+    // with ε-budget requests when --error-budget is given (the server
+    // resolves ε -> α through Theorem 2; see DESIGN.md §6).
     let spec = data::task_by_name(&task).unwrap();
     let ds = data::generate(&spec, p.data_seed);
     let tok = mca::tokenizer::Tokenizer::new();
     let n = args.get_usize("requests")?;
     let alphas = [0.2f32, 0.4, 0.6];
+    let budgets = args.get_f64_list("error-budget")?;
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
     for i in 0..n {
         let ex = &ds.dev[i % ds.dev.len()];
         let text = tok.decode(&ex.ids).replace("[CLS] ", "").replace(" [SEP]", "");
-        pending.push((server.submit(&text, alphas[i % alphas.len()], "mca"), ex.label.class()));
+        let rx = if !budgets.is_empty() && i % 2 == 1 {
+            server.submit_budget(&text, budgets[(i / 2) % budgets.len()], None)
+        } else {
+            server.submit(&text, alphas[i % alphas.len()], "mca")
+        };
+        pending.push((rx, ex.label.class()));
     }
     let mut correct = 0usize;
     for (rx, gold) in pending {
@@ -650,6 +713,31 @@ fn serve_demo(args: &Args) -> Result<()> {
         correct as f64 / n as f64
     );
     println!("admission: queue peak {} | shed {}", stats.queue_peak, stats.shed);
+    if stats.budget_requests > 0 {
+        println!(
+            "budgets: {} requests ({} resolved exact) | resolved α histogram: {}",
+            stats.budget_requests,
+            stats.budget_exact,
+            stats
+                .resolved_alphas
+                .iter()
+                .map(|(a, c)| format!("{a:.2}×{c}"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+    }
+    if stats.brownout_entries > 0 || stats.degraded > 0 {
+        println!(
+            "brownout: {} entries / {} exits | degraded {}",
+            stats.brownout_entries, stats.brownout_exits, stats.degraded
+        );
+    }
+    if stats.canaries > 0 {
+        println!(
+            "canaries: {} observed, {} floor violations | controller α target {:.2}",
+            stats.canaries, stats.canary_violations, stats.controller_alpha
+        );
+    }
     for w in &stats.workers {
         println!(
             "  worker {}: {} reqs / {} batches (occupancy {:.2}), busy {:.0}ms, p99 {:.1}ms",

@@ -1,35 +1,94 @@
 //! Adaptive α control — the "simple dynamic control of performance-resource
 //! trade-off" the paper's intro promises, made into a first-class feature.
 //!
-//! Two pieces:
+//! Three pieces:
 //!
-//! * [`alpha_for_error_budget`] — invert Theorem 2: given a per-token error
-//!   budget ε (and the model statistics β, ‖W‖_F that the artifact fixes),
-//!   the α that guarantees `E‖Ỹ[i] − Y[i]‖ ≤ ε` is `α = ε / (β‖W‖_F)`.
+//! * [`alpha_for_error_budget`] / [`alpha_for_tail_budget`] — invert
+//!   Theorem 2: given a per-token error budget ε (and the model statistics
+//!   β, ‖W‖_F that the checkpoint fixes), the α that guarantees
+//!   `E‖Ỹ[i] − Y[i]‖ ≤ ε` is `α = ε / (β‖W‖_F)` (mean bound), or
+//!   `α = ε·δ / (β‖W‖_F)` for the (1−δ) tail bound.
+//! * [`ALPHA_GRID`] / [`quantize_alpha`] — the serving α ladder: resolved
+//!   budgets snap *down* onto a small grid so budget-carrying requests
+//!   still share batches (batch compatibility is keyed on α bits), and
+//!   snapping down can only shrink the Theorem-2 bound.
 //! * [`AlphaController`] — an online controller for serving: it watches a
-//!   quality proxy per batch (e.g. top-logit margin drift, or task
-//!   accuracy on canaries) and walks α multiplicatively toward the largest
-//!   value that keeps the proxy above its floor — AIMD, like congestion
-//!   control, because quality collapses sharply past the knee (Figure 1's
+//!   quality proxy per canary (e.g. top-logit margin drift vs an exact
+//!   replay) and walks α multiplicatively toward the largest value that
+//!   keeps the proxy above its floor — AIMD, like congestion control,
+//!   because quality collapses sharply past the knee (Figure 1's
 //!   "logarithmic trade-off").
+//!
+//! Every entry point is total over degenerate inputs (NaN/∞ budgets and
+//! observations, δ outside (0, 1], non-positive statistics): resolution
+//! always returns a finite α in [[`MIN_RESOLVED_ALPHA`], 1] and the
+//! controller never leaves `[min_alpha, max_alpha]` — property-tested
+//! below, because a poisoned canary must not poison the serving knob.
+
+/// Floor of the resolved-α range (an α this small saturates every token's
+/// budget, so the estimator falls back to the exact product everywhere).
+pub const MIN_RESOLVED_ALPHA: f64 = 1e-6;
+
+/// The serving α grid. Budget resolution snaps down onto this ladder so
+/// budget-carrying requests batch together; `ALPHA_GRID[0]` is the
+/// precision floor below which only the exact path can honor a budget.
+pub const ALPHA_GRID: [f32; 8] = [0.05, 0.1, 0.2, 0.3, 0.4, 0.6, 0.8, 1.0];
+
+/// Snap a resolved α down to the serving grid. Snapping down only shrinks
+/// the Theorem-2 bound, so the quantized α still honors the ε that
+/// produced `alpha` (a 1e-6 comparison slack absorbs f32↔f64 rounding of
+/// the grid points themselves). `None` when α falls below the grid floor:
+/// the budget is tighter than the cheapest grid point can guarantee and
+/// the caller must fall back to the exact path.
+pub fn quantize_alpha(alpha: f64) -> Option<f32> {
+    if !alpha.is_finite() {
+        return None;
+    }
+    let mut out = None;
+    for &g in ALPHA_GRID.iter() {
+        if (g as f64) <= alpha + 1e-6 {
+            out = Some(g);
+        }
+    }
+    out
+}
 
 /// Invert the Theorem-2 mean bound: ε = α·β·‖W‖_F  =>  α = ε / (β·‖W‖_F).
-/// Returns α clamped to (0, 1].
+/// Returns α clamped to [[`MIN_RESOLVED_ALPHA`], 1]. Degenerate statistics
+/// (β or ‖W‖_F non-positive or non-finite) disable the inversion and
+/// return full range (α = 1); a NaN budget fails to the most precise α —
+/// garbage must not be served at low precision.
 pub fn alpha_for_error_budget(epsilon: f64, beta: f64, w_frob: f64) -> f64 {
-    if beta <= 0.0 || w_frob <= 0.0 {
+    if !(beta > 0.0 && beta.is_finite() && w_frob > 0.0 && w_frob.is_finite()) {
         return 1.0;
     }
-    (epsilon / (beta * w_frob)).clamp(1e-6, 1.0)
+    if !epsilon.is_finite() {
+        // NaN and −∞ fail to the most precise α; +∞ is an unbounded budget.
+        return if epsilon == f64::INFINITY { 1.0 } else { MIN_RESOLVED_ALPHA };
+    }
+    // β·‖W‖ can still under/overflow even with finite positive factors;
+    // keep the ratio NaN-free (±∞/∞ and 0/0 are the escapes clamp misses).
+    let denom = beta * w_frob;
+    if denom == 0.0 {
+        return if epsilon > 0.0 { 1.0 } else { MIN_RESOLVED_ALPHA };
+    }
+    (epsilon / denom).clamp(MIN_RESOLVED_ALPHA, 1.0)
 }
 
 /// Invert the Theorem-2 tail bound (probability ≥ 1−δ):
-/// ε = α·β·‖W‖_F/δ  =>  α = ε·δ / (β·‖W‖_F).
+/// ε = α·β·‖W‖_F/δ  =>  α = ε·δ / (β·‖W‖_F). δ ≥ 1 degrades to the mean
+/// bound; δ ≤ 0 or NaN resolves to the most precise α (strictest reading).
 pub fn alpha_for_tail_budget(epsilon: f64, delta: f64, beta: f64, w_frob: f64) -> f64 {
-    alpha_for_error_budget(epsilon * delta, beta, w_frob)
+    if delta.is_nan() {
+        return alpha_for_error_budget(f64::NAN, beta, w_frob);
+    }
+    alpha_for_error_budget(epsilon * delta.clamp(0.0, 1.0), beta, w_frob)
 }
 
 /// AIMD controller on α: additive increase while the quality proxy holds,
-/// multiplicative decrease when it violates the floor.
+/// multiplicative decrease when it violates the floor. Non-finite
+/// observations are ignored (no signal), so the knob cannot be walked by
+/// a poisoned proxy.
 #[derive(Debug, Clone)]
 pub struct AlphaController {
     pub alpha: f64,
@@ -47,6 +106,7 @@ pub struct AlphaController {
 
 impl AlphaController {
     pub fn new(initial: f64, quality_floor: f64) -> AlphaController {
+        let initial = if initial.is_finite() { initial } else { 0.5 };
         AlphaController {
             alpha: initial.clamp(0.05, 1.0),
             min_alpha: 0.05,
@@ -60,15 +120,29 @@ impl AlphaController {
     }
 
     /// Feed one quality observation; returns the α to use next.
+    /// Non-finite observations leave the controller untouched.
     pub fn observe(&mut self, quality: f64) -> f64 {
+        if !quality.is_finite() {
+            return self.alpha;
+        }
         self.updates += 1;
         if quality < self.quality_floor {
             self.violations += 1;
-            self.alpha = (self.alpha * self.backoff).max(self.min_alpha);
+            self.alpha = self.alpha * self.backoff;
         } else {
-            self.alpha = (self.alpha + self.increase).min(self.max_alpha);
+            self.alpha += self.increase;
         }
+        // Belt and braces: even degenerate step/bound fields must not let
+        // α escape or go NaN (the serving dispatcher trusts this value).
+        if !self.alpha.is_finite() {
+            self.alpha = self.min_alpha;
+        }
+        self.alpha = self.alpha.clamp(self.min_alpha, self.max_alpha);
         self.alpha
+    }
+
+    pub fn updates(&self) -> u64 {
+        self.updates
     }
 
     pub fn violation_rate(&self) -> f64 {
@@ -94,7 +168,10 @@ mod tests {
             let alpha = alpha_for_error_budget(eps, beta, w);
             // Feeding α back into the bound must not exceed ε (unless clamped).
             let bound = alpha * beta * w;
-            if alpha < 1.0 - 1e-12 && alpha > 1e-6 + 1e-12 && bound > eps * (1.0 + 1e-9) {
+            if alpha < 1.0 - 1e-12
+                && alpha > MIN_RESOLVED_ALPHA + 1e-12
+                && bound > eps * (1.0 + 1e-9)
+            {
                 return Err(format!("bound {bound} > eps {eps}"));
             }
             Ok(())
@@ -111,6 +188,102 @@ mod tests {
     #[test]
     fn degenerate_stats_give_full_precision_alpha() {
         assert_eq!(alpha_for_error_budget(0.5, 0.0, 3.0), 1.0);
+        assert_eq!(alpha_for_error_budget(0.5, 3.0, 0.0), 1.0);
+        assert_eq!(alpha_for_error_budget(0.5, f64::NAN, 3.0), 1.0);
+        assert_eq!(alpha_for_error_budget(0.5, f64::INFINITY, 3.0), 1.0);
+        assert_eq!(alpha_for_error_budget(0.5, -1.0, 3.0), 1.0);
+    }
+
+    #[test]
+    fn degenerate_budgets_resolve_safely() {
+        // ε = 0 or negative: tightest budget -> the α floor (exact-ish).
+        assert_eq!(alpha_for_error_budget(0.0, 2.0, 3.0), MIN_RESOLVED_ALPHA);
+        assert_eq!(alpha_for_error_budget(-4.0, 2.0, 3.0), MIN_RESOLVED_ALPHA);
+        // ε = NaN: garbage fails precise, never cheap.
+        assert_eq!(alpha_for_error_budget(f64::NAN, 2.0, 3.0), MIN_RESOLVED_ALPHA);
+        // ε = ∞: unbounded budget -> cheapest α.
+        assert_eq!(alpha_for_error_budget(f64::INFINITY, 2.0, 3.0), 1.0);
+        // δ ≥ 1 degrades to the mean bound; δ ≤ 0 / NaN to the floor.
+        let mean = alpha_for_error_budget(1.0, 2.0, 3.0);
+        assert_eq!(alpha_for_tail_budget(1.0, 1.0, 2.0, 3.0), mean);
+        assert_eq!(alpha_for_tail_budget(1.0, 7.5, 2.0, 3.0), mean);
+        assert_eq!(alpha_for_tail_budget(1.0, 0.0, 2.0, 3.0), MIN_RESOLVED_ALPHA);
+        assert_eq!(alpha_for_tail_budget(1.0, -0.5, 2.0, 3.0), MIN_RESOLVED_ALPHA);
+        assert_eq!(alpha_for_tail_budget(1.0, f64::NAN, 2.0, 3.0), MIN_RESOLVED_ALPHA);
+    }
+
+    #[test]
+    fn inversion_is_always_finite_and_in_range() {
+        // Property over a grid of degenerate and finite inputs: the
+        // resolved α is always finite and within [MIN_RESOLVED_ALPHA, 1].
+        let specials = [
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            0.0,
+            -1.0,
+            1e-300,
+            1e300,
+        ];
+        prop::check(300, |g| {
+            let pick = |g: &mut prop::Gen, specials: &[f64]| -> f64 {
+                if g.bool() {
+                    *g.choose(specials)
+                } else {
+                    g.f64(-10.0..100.0)
+                }
+            };
+            let eps = pick(g, &specials);
+            let delta = pick(g, &specials);
+            let beta = pick(g, &specials);
+            let w = pick(g, &specials);
+            for a in [
+                alpha_for_error_budget(eps, beta, w),
+                alpha_for_tail_budget(eps, delta, beta, w),
+            ] {
+                if !a.is_finite() || !(MIN_RESOLVED_ALPHA..=1.0).contains(&a) {
+                    return Err(format!(
+                        "alpha {a} escaped for eps={eps} delta={delta} beta={beta} w={w}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantize_snaps_down_onto_the_grid() {
+        assert_eq!(quantize_alpha(1.0), Some(1.0));
+        assert_eq!(quantize_alpha(0.95), Some(0.8));
+        assert_eq!(quantize_alpha(0.25), Some(0.2));
+        // exact grid points survive the f32 round-trip
+        for &g in ALPHA_GRID.iter() {
+            assert_eq!(quantize_alpha(g as f64), Some(g), "grid point {g}");
+        }
+        // below the floor: only exact can honor the budget
+        assert_eq!(quantize_alpha(0.049), None);
+        assert_eq!(quantize_alpha(MIN_RESOLVED_ALPHA), None);
+        assert_eq!(quantize_alpha(0.0), None);
+        assert_eq!(quantize_alpha(f64::NAN), None);
+        assert_eq!(quantize_alpha(f64::NEG_INFINITY), None);
+        // quantized bound never exceeds the raw bound (monotone down)
+        prop::check(200, |g| {
+            let a = g.f64(0.0..1.5);
+            match quantize_alpha(a) {
+                Some(q) => {
+                    if q as f64 > a + 1e-6 {
+                        return Err(format!("quantize({a}) = {q} overshoots"));
+                    }
+                    Ok(())
+                }
+                None => {
+                    if a >= ALPHA_GRID[0] as f64 + 1e-6 {
+                        return Err(format!("quantize({a}) lost a grid point"));
+                    }
+                    Ok(())
+                }
+            }
+        });
     }
 
     #[test]
@@ -120,6 +293,8 @@ mod tests {
         assert!(a1 < 0.8);
         let a2 = c.observe(0.9); // ok -> additive increase
         assert!(a2 > a1);
+        assert_eq!(c.updates(), 2);
+        assert!((c.violation_rate() - 0.5).abs() < 1e-12);
     }
 
     #[test]
@@ -138,6 +313,32 @@ mod tests {
     }
 
     #[test]
+    fn controller_converges_to_knee_under_noise() {
+        // The canary-fed shape: quality falls off in α² past the knee and
+        // each observation carries seeded noise. The α trace must still
+        // settle into a band around the knee — the acceptance criterion
+        // for the serving loop, pinned here at the controller level where
+        // the knee is known exactly.
+        for seed in [3u64, 17, 99] {
+            let mut rng = crate::rng::Pcg64::new(seed);
+            let knee = 0.6f64; // quality crosses the 0.5 floor at α = 0.6
+            let mut c = AlphaController::new(0.1, 0.5);
+            let mut trace = Vec::new();
+            for _ in 0..400 {
+                let noise = 0.04 * (rng.gen_f64() - 0.5);
+                let quality = 1.0 - 0.5 * (c.alpha / knee) * (c.alpha / knee) + noise;
+                trace.push(c.observe(quality));
+            }
+            let tail = &trace[200..];
+            let mean = tail.iter().sum::<f64>() / tail.len() as f64;
+            assert!(
+                (knee - 0.25..knee + 0.25).contains(&mean),
+                "seed {seed}: mean alpha {mean} not in the knee band"
+            );
+        }
+    }
+
+    #[test]
     fn controller_stays_in_bounds() {
         prop::check(100, |g| {
             let mut c = AlphaController::new(g.f64(0.05..1.0), 0.5);
@@ -146,6 +347,43 @@ mod tests {
                 if !(c.min_alpha..=c.max_alpha).contains(&a) {
                     return Err(format!("alpha {a} escaped bounds"));
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn controller_survives_degenerate_observations_and_floors() {
+        // NaN/±∞ observations, floors outside the proxy range, and NaN
+        // initial α: the controller must stay finite in [min, max] and
+        // never count a non-finite observation.
+        let specials = [f64::NAN, f64::INFINITY, f64::NEG_INFINITY];
+        prop::check(300, |g| {
+            let initial = if g.bool() { *g.choose(&specials) } else { g.f64(-2.0..2.0) };
+            let floor = if g.bool() { *g.choose(&specials) } else { g.f64(-5.0..5.0) };
+            let mut c = AlphaController::new(initial, floor);
+            if !c.alpha.is_finite() {
+                return Err(format!("initial alpha {} not finite", c.alpha));
+            }
+            let mut fed = 0u64;
+            for _ in 0..60 {
+                let q = if g.bool() { *g.choose(&specials) } else { g.f64(-2.0..2.0) };
+                if q.is_finite() {
+                    fed += 1;
+                }
+                let a = c.observe(q);
+                if !a.is_finite() || !(c.min_alpha..=c.max_alpha).contains(&a) {
+                    return Err(format!("alpha {a} escaped (floor {floor})"));
+                }
+            }
+            if c.updates() != fed {
+                return Err(format!(
+                    "non-finite observations were counted: {} != {fed}",
+                    c.updates()
+                ));
+            }
+            if !c.violation_rate().is_finite() || !(0.0..=1.0).contains(&c.violation_rate()) {
+                return Err(format!("violation rate {}", c.violation_rate()));
             }
             Ok(())
         });

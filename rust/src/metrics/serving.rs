@@ -72,16 +72,36 @@ pub struct AlphaSummary {
     pub p99_ms: f64,
 }
 
-/// Aggregate serving metrics: admission-control counters plus per-worker
-/// and per-α breakdowns.
+/// Aggregate serving metrics: admission-control counters, the precision
+/// brownout ladder, the ε-budget resolution histogram and the canary
+/// loop, plus per-worker and per-α breakdowns.
 #[derive(Debug, Clone, Default)]
 pub struct ServingMetrics {
-    /// Requests rejected by admission control (queue at cap).
+    /// Requests rejected by admission control (queue cost at cap).
     pub shed: usize,
-    /// High-water mark of the admission queue.
+    /// High-water mark of the admission queue (request count).
     pub queue_peak: usize,
+    /// Times the dispatcher entered the precision-brownout stage.
+    pub brownout_entries: usize,
+    /// Times it recovered (queue drained below the low-water mark).
+    pub brownout_exits: usize,
+    /// Requests whose α was raised to their budget ceiling by brownout.
+    pub degraded: usize,
+    /// Admitted ε-budget requests.
+    pub budget_requests: usize,
+    /// Budgets below the α-grid floor, resolved to the exact path.
+    pub budget_exact: usize,
+    /// Canary exact replays observed by the controller.
+    pub canaries: usize,
+    /// Canary observations that violated the quality floor.
+    pub canary_violations: usize,
+    /// The AIMD controller's current α target.
+    pub controller_alpha: f64,
     pub workers: Vec<WorkerMetrics>,
     per_alpha: BTreeMap<u32, LatencyStats>,
+    /// Per-α-resolution counts for admitted ε-budget requests (keyed by
+    /// the α actually served; exact resolutions count under α = 1.0).
+    resolved_alpha: BTreeMap<u32, usize>,
 }
 
 impl ServingMetrics {
@@ -95,6 +115,55 @@ impl ServingMetrics {
 
     pub fn on_queue_depth(&mut self, depth: usize) {
         self.queue_peak = self.queue_peak.max(depth);
+    }
+
+    pub fn on_brownout_enter(&mut self) {
+        self.brownout_entries += 1;
+    }
+
+    pub fn on_brownout_exit(&mut self) {
+        self.brownout_exits += 1;
+    }
+
+    pub fn on_degraded(&mut self, n: usize) {
+        self.degraded += n;
+    }
+
+    /// Record one admitted ε-budget request: `alpha` is the α it will be
+    /// served at, `exact` marks budgets below the grid floor.
+    pub fn on_budget_resolved(&mut self, alpha: f32, exact: bool) {
+        self.budget_requests += 1;
+        if exact {
+            self.budget_exact += 1;
+        }
+        *self.resolved_alpha.entry(alpha.to_bits()).or_default() += 1;
+    }
+
+    /// Move one budget-resolution count between α keys — used when
+    /// brownout raises an already-admitted request to its ceiling, so the
+    /// histogram stays keyed by the α actually served.
+    pub fn on_budget_realpha(&mut self, from: f32, to: f32) {
+        if let Some(c) = self.resolved_alpha.get_mut(&from.to_bits()) {
+            *c -= 1;
+            if *c == 0 {
+                self.resolved_alpha.remove(&from.to_bits());
+            }
+        }
+        *self.resolved_alpha.entry(to.to_bits()).or_default() += 1;
+    }
+
+    /// Record one observed canary replay and the controller's new target.
+    pub fn on_canary(&mut self, violation: bool, controller_alpha: f64) {
+        self.canaries += 1;
+        if violation {
+            self.canary_violations += 1;
+        }
+        self.controller_alpha = controller_alpha;
+    }
+
+    /// (α, count) rows of the budget-resolution histogram, ascending α.
+    pub fn resolved_alpha_counts(&self) -> Vec<(f32, usize)> {
+        self.resolved_alpha.iter().map(|(&bits, &n)| (f32::from_bits(bits), n)).collect()
     }
 
     /// Record one executed batch: per-request latencies land in the
@@ -230,6 +299,40 @@ mod tests {
         m.on_shed();
         assert_eq!(m.queue_peak, 7);
         assert_eq!(m.shed, 2);
+    }
+
+    #[test]
+    fn brownout_budget_and_canary_counters() {
+        let mut m = ServingMetrics::new(1);
+        m.on_brownout_enter();
+        m.on_degraded(5);
+        m.on_brownout_exit();
+        assert_eq!((m.brownout_entries, m.degraded, m.brownout_exits), (1, 5, 1));
+
+        m.on_budget_resolved(0.4, false);
+        m.on_budget_resolved(0.4, false);
+        m.on_budget_resolved(1.0, true);
+        assert_eq!(m.budget_requests, 3);
+        assert_eq!(m.budget_exact, 1);
+        let rows = m.resolved_alpha_counts();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0], (0.4, 2));
+        assert_eq!(rows[1], (1.0, 1));
+
+        // brownout re-keys an in-queue degradation to the α actually served
+        m.on_budget_realpha(0.4, 1.0);
+        let rows = m.resolved_alpha_counts();
+        assert_eq!(rows, vec![(0.4, 1), (1.0, 2)]);
+        m.on_budget_realpha(0.4, 1.0);
+        assert_eq!(m.resolved_alpha_counts(), vec![(1.0, 3)]);
+        // total count is conserved under re-keying
+        assert_eq!(m.budget_requests, 3);
+
+        m.on_canary(false, 0.45);
+        m.on_canary(true, 0.225);
+        assert_eq!(m.canaries, 2);
+        assert_eq!(m.canary_violations, 1);
+        assert!((m.controller_alpha - 0.225).abs() < 1e-12);
     }
 
     #[test]

@@ -110,6 +110,83 @@ impl TrainState {
 }
 
 // ---------------------------------------------------------------------------
+// Per-model Theorem-2 statistics
+// ---------------------------------------------------------------------------
+
+/// The per-model statistics that fix the Theorem-2 error bound at serving
+/// time: `ε = α · β · ‖W‖_F`. Computed once from a loaded checkpoint
+/// (each serving worker computes them at startup and ships them to the
+/// dispatcher), so ε-budget requests resolve to an α without touching the
+/// checkpoint again. Both factors are conservative maxima over layers:
+///
+/// * `beta` estimates the post-LN row norm `‖X[i]‖₂` entering each value
+///   encoding as `sqrt(Σ scale² + Σ bias²)` — LayerNorm emits zero-mean,
+///   unit-variance features before its affine, so the affine alone sets
+///   the row norm scale;
+/// * `w_frob` is the Frobenius norm of the layer's value projection
+///   `W_v`, the matrix the MCA estimator samples (Eq. 5/6).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelStats {
+    /// mean per-token input norm bound (Theorem 2's β), max over layers
+    pub beta: f64,
+    /// ‖W_v‖_F, max over layers
+    pub w_frob: f64,
+}
+
+impl ModelStats {
+    /// Theorem-2 mean error bound at precision α: `α · β · ‖W‖_F`.
+    pub fn bound(&self, alpha: f64) -> f64 {
+        alpha * self.beta * self.w_frob
+    }
+
+    /// Whether the statistics can back a budget resolution (positive and
+    /// finite; an all-zero or corrupted checkpoint yields degenerate
+    /// stats, and only the exact path can then honor any budget).
+    pub fn usable(&self) -> bool {
+        self.beta > 0.0 && self.beta.is_finite() && self.w_frob > 0.0 && self.w_frob.is_finite()
+    }
+}
+
+/// Compute [`ModelStats`] from the flat parameter layout — the default
+/// [`Backend::model_stats`] implementation, valid for every backend that
+/// honors the shared `param_spec` contract (DESIGN.md §4).
+pub fn compute_model_stats(model: &ModelInfo, params: &Params) -> Result<ModelStats> {
+    if params.values.len() != model.param_spec.len() {
+        bail!(
+            "params have {} tensors, model {} expects {}",
+            params.values.len(),
+            model.name,
+            model.param_spec.len()
+        );
+    }
+    let sq = |xs: &[f32]| xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+    let mut scale_sq = vec![0.0f64; model.n_layers];
+    let mut bias_sq = vec![0.0f64; model.n_layers];
+    let mut wv_sq = vec![0.0f64; model.n_layers];
+    for ((name, _), hv) in model.param_spec.iter().zip(&params.values) {
+        let Some(rest) = name.strip_prefix("layer") else { continue };
+        let Some((idx, field)) = rest.split_once('.') else { continue };
+        let Ok(l) = idx.parse::<usize>() else { continue };
+        if l >= model.n_layers {
+            continue;
+        }
+        match field {
+            "ln1.scale" => scale_sq[l] = sq(hv.as_f32()?),
+            "ln1.bias" => bias_sq[l] = sq(hv.as_f32()?),
+            "wv" => wv_sq[l] = sq(hv.as_f32()?),
+            _ => {}
+        }
+    }
+    let mut beta = 0.0f64;
+    let mut w_frob = 0.0f64;
+    for l in 0..model.n_layers {
+        beta = beta.max((scale_sq[l] + bias_sq[l]).sqrt());
+        w_frob = w_frob.max(wv_sq[l].sqrt());
+    }
+    Ok(ModelStats { beta, w_frob })
+}
+
+// ---------------------------------------------------------------------------
 // The Backend trait
 // ---------------------------------------------------------------------------
 
@@ -158,6 +235,14 @@ pub trait Backend {
         alpha: f32,
         seed: u32,
     ) -> Result<ForwardOutput>;
+
+    /// Theorem-2 statistics (β, ‖W‖_F) for a loaded checkpoint — the
+    /// ε → α resolution contract of SLO-driven serving. The default reads
+    /// the shared flat parameter layout, which every backend honors
+    /// (DESIGN.md §4 parity contract).
+    fn model_stats(&self, model: &str, params: &Params) -> Result<ModelStats> {
+        compute_model_stats(&self.model(model)?, params)
+    }
 
     /// (batch, seq) shape this backend trains the model at.
     fn train_shape(&self, model: &str, kind: TaskKind) -> Result<(usize, usize)>;
@@ -297,6 +382,30 @@ mod tests {
     fn sized_native_backend_opens() {
         let be = open_backend_sized(&BackendSpec::Native, Some(1)).unwrap();
         assert!(be.platform().contains("1 workers"));
+    }
+
+    #[test]
+    fn model_stats_from_checkpoint_layout() {
+        use crate::rng::Pcg64;
+        let be = open_backend(&BackendSpec::Native).unwrap();
+        let info = be.model("distil_sim").unwrap();
+        let mut rng = Pcg64::new(5);
+        let params = Params::init(&info, &mut rng);
+        let st = be.model_stats("distil_sim", &params).unwrap();
+        assert!(st.usable(), "{st:?}");
+        // Fresh init: LN scales are all ones, biases zero -> β = sqrt(d).
+        assert!((st.beta - (info.d_model as f64).sqrt()).abs() < 1e-9, "beta {}", st.beta);
+        assert!(st.w_frob > 0.0);
+        // The bound is linear in α.
+        assert!((st.bound(0.4) - 2.0 * st.bound(0.2)).abs() < 1e-12);
+        // An all-zero checkpoint yields degenerate (unusable) stats
+        // rather than an error.
+        let zeros = Params::zeros_like(&info);
+        let st0 = be.model_stats("distil_sim", &zeros).unwrap();
+        assert!(!st0.usable());
+        // Mismatched layout is an error, not a panic.
+        let tiny = Params { values: Vec::new() };
+        assert!(be.model_stats("distil_sim", &tiny).is_err());
     }
 
     #[test]

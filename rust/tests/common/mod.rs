@@ -1,0 +1,25 @@
+//! Helpers shared by the integration-test binaries (pulled in with
+//! `mod common;` — `tests/common/` is not itself a test target).
+
+use std::path::PathBuf;
+
+use mca::model::Params;
+use mca::rng::Pcg64;
+use mca::runtime::{open_backend, BackendSpec, ModelStats};
+
+/// Write a fresh random checkpoint (fixed seed — serving tests need a
+/// valid parameter file, not accuracy) and return its path plus the
+/// Theorem-2 statistics the serving workers will compute from it. Tags
+/// must stay unique across test binaries: they run concurrently and the
+/// file lands in the shared temp dir.
+pub fn make_checkpoint(backend: &BackendSpec, model: &str, tag: &str) -> (PathBuf, ModelStats) {
+    let be = open_backend(backend).unwrap();
+    let info = be.model(model).unwrap();
+    let mut rng = Pcg64::new(77);
+    let params = Params::init(&info, &mut rng);
+    let stats = be.model_stats(model, &params).unwrap();
+    assert!(stats.usable(), "fresh init must give usable stats: {stats:?}");
+    let path = std::env::temp_dir().join(format!("mca_itest_{tag}_{model}.mcag"));
+    params.save(&path).unwrap();
+    (path, stats)
+}

@@ -1,0 +1,92 @@
+//! Deterministic-replay regression test: two lockstep `loadtest` replay
+//! runs with the same seed, worker count and queue cap must produce
+//! identical request-level outcomes — the served/shed sets, predicted
+//! classes and per-request Σr_i. This pins the whole serve path (id
+//! assignment → admission ladder → budget resolution → batching → MCA
+//! sample pools seeded from batch head ids → forward) against
+//! nondeterminism regressions.
+//!
+//! The lockstep protocol (pause → queue the whole workload → resume) is
+//! what removes arrival timing from the picture; see
+//! `coordinator::loadgen::run_replay`.
+
+mod common;
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use mca::coordinator::loadgen::{run_replay, RequestOutcome, Workload};
+use mca::coordinator::{Server, ServerConfig};
+use mca::runtime::BackendSpec;
+
+fn make_checkpoint(model: &str) -> (PathBuf, f64) {
+    let (path, stats) = common::make_checkpoint(&BackendSpec::Native, model, "replay_det");
+    (path, stats.beta * stats.w_frob)
+}
+
+fn run_once(ckpt: &PathBuf, wl: &Workload, texts: &[String]) -> (u64, Vec<RequestOutcome>) {
+    let server = Server::start(
+        BackendSpec::Native,
+        ServerConfig {
+            model: "distil_sim".into(),
+            checkpoint: ckpt.clone(),
+            max_wait: Duration::from_millis(2),
+            seq: 32,
+            workers: 2,
+            queue_cap: 24,
+            brownout_watermark: 12,
+            ..ServerConfig::default()
+        },
+    )
+    .expect("server start");
+    let (result, outcomes) = run_replay(&server, texts, 64, wl).expect("replay run");
+    server.shutdown().expect("shutdown");
+    (result.outcome_digest.expect("replay sets a digest"), outcomes)
+}
+
+#[test]
+fn lockstep_replay_runs_are_identical() {
+    let (ckpt, bw) = make_checkpoint("distil_sim");
+    let texts: Vec<String> = (0..12)
+        .map(|i| format!("n{} v{} a{} f{}", i % 7, (i + 2) % 7, (i + 3) % 5, (i + 5) % 5))
+        .collect();
+    // Mixed workload: raw-α requests plus ε budgets that exercise both a
+    // tight ceiling (α 0.3) and a cheap one (α 1.0, the brownout target).
+    let wl = Workload {
+        rate: 0.0,
+        duration: Duration::from_secs(1),
+        alpha_mix: vec![(0.2f32, 1.0f64), (0.4, 1.0), (0.6, 1.0)],
+        budget_frac: 0.5,
+        epsilon_mix: vec![(0.3 * bw, 1.0), (2.0 * bw, 1.0)],
+        seed: 4242,
+    };
+
+    let (digest_a, outcomes_a) = run_once(&ckpt, &wl, &texts);
+    let (digest_b, outcomes_b) = run_once(&ckpt, &wl, &texts);
+
+    assert_eq!(outcomes_a.len(), 64);
+    assert_eq!(outcomes_b.len(), 64, "every request gets exactly one response");
+    assert_eq!(digest_a, digest_b, "replay digests diverged");
+    assert_eq!(outcomes_a, outcomes_b, "request-level outcomes diverged");
+
+    // The workload is big enough to exercise every regime this test is
+    // meant to pin: some requests shed at the cost cap, some served, and
+    // real MCA sampling (nonzero Σr_i) in the served set.
+    let shed = outcomes_a.iter().filter(|o| o.shed).count();
+    assert!(shed > 0, "cap 24 against 64 requests must shed");
+    assert!(shed < 64, "admitted requests must be served");
+    assert!(
+        outcomes_a.iter().any(|o| !o.shed && f64::from_bits(o.r_sum_bits) > 0.0),
+        "served set contains no MCA work"
+    );
+    assert!(
+        outcomes_a.iter().filter(|o| !o.shed).all(|o| o.pred_class >= 0),
+        "served responses must carry predictions"
+    );
+
+    // A different seed must change the outcome stream (the digest is not
+    // a constant).
+    let wl2 = Workload { seed: 999, ..wl };
+    let (digest_c, _) = run_once(&ckpt, &wl2, &texts);
+    assert_ne!(digest_a, digest_c, "digest ignores the workload seed");
+}

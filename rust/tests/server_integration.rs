@@ -6,23 +6,17 @@
 //! ever skips). PJRT-artifact variants live at the bottom behind the
 //! `pjrt` feature.
 
+mod common;
+
 use std::path::PathBuf;
 use std::time::Duration;
 
 use mca::coordinator::{Server, ServerConfig};
-use mca::model::Params;
-use mca::rng::Pcg64;
-use mca::runtime::{open_backend, BackendSpec};
+use mca::runtime::BackendSpec;
 
 /// Write a fresh random checkpoint (serving tests don't need accuracy).
 fn make_checkpoint(backend: &BackendSpec, model: &str, tag: &str) -> PathBuf {
-    let be = open_backend(backend).unwrap();
-    let info = be.model(model).unwrap();
-    let mut rng = Pcg64::new(77);
-    let params = Params::init(&info, &mut rng);
-    let path = std::env::temp_dir().join(format!("mca_itest_{tag}_{model}.mcag"));
-    params.save(&path).unwrap();
-    path
+    common::make_checkpoint(backend, model, tag).0
 }
 
 fn config(model: &str, ckpt: PathBuf, max_wait_ms: u64, workers: usize) -> ServerConfig {
@@ -33,6 +27,7 @@ fn config(model: &str, ckpt: PathBuf, max_wait_ms: u64, workers: usize) -> Serve
         seq: 32,
         workers,
         queue_cap: 4096,
+        ..ServerConfig::default()
     }
 }
 
@@ -221,6 +216,41 @@ fn queue_cap_sheds_only_when_exceeded() {
 }
 
 #[test]
+fn shutdown_drains_admitted_requests_and_joins() {
+    // The drop-the-last-Submitter-mid-burst scenario: after the external
+    // submitter is gone and shutdown is requested with the burst still
+    // queued, every admitted request must still get exactly one response
+    // (graceful drain), and shutdown must join all workers — no hang, no
+    // dropped response channels.
+    let backend = BackendSpec::Native;
+    let ckpt = make_checkpoint(&backend, "distil_sim", "native_drain");
+    let server =
+        Server::start(backend, config("distil_sim", ckpt, 2, 2)).expect("server start");
+
+    let sub = server.submitter();
+    let total = 48usize;
+    let mut rxs = Vec::with_capacity(total);
+    for i in 0..total {
+        rxs.push(sub.submit("n0 v1 n2 v3", [0.2f32, 0.6][i % 2], "mca"));
+    }
+    drop(sub); // last external Submitter gone mid-burst
+    server.shutdown().expect("shutdown drains and joins");
+
+    // Every response was delivered before shutdown returned; the channels
+    // still buffer them.
+    let mut ids = std::collections::HashSet::new();
+    for rx in rxs {
+        let r = rx
+            .recv_timeout(Duration::from_secs(1))
+            .expect("admitted request lost its response in shutdown");
+        assert!(!r.shed, "admitted request shed during drain");
+        assert!(r.pred_class >= 0);
+        assert!(ids.insert(r.id), "duplicate response id {}", r.id);
+    }
+    assert_eq!(ids.len(), total);
+}
+
+#[test]
 fn server_rejects_missing_model() {
     let backend = BackendSpec::Native;
     let ckpt = make_checkpoint(&backend, "bert_sim", "native_rej");
@@ -268,6 +298,7 @@ mod pjrt_artifacts {
                 seq: 64,
                 workers: 2,
                 queue_cap: 4096,
+                ..ServerConfig::default()
             },
         )
         .expect("server start");
