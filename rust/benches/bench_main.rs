@@ -1,12 +1,16 @@
 //! `cargo bench` — in-tree harness (criterion is unavailable offline; see
-//! rust/src/bench). Three groups:
+//! rust/src/bench). Four groups:
 //!
 //! * micro benches for the L3 hot paths: batch planning, tokenization,
-//!   alias sampling, the host MCA estimator vs the exact matmul it
-//!   replaces (the paper's core trade-off, at several α budgets), FLOPs
-//!   accounting;
+//!   alias sampling, FLOPs accounting;
+//! * kernel benches: the blocked `tensor::kernel` GEMM vs the naive
+//!   reference loops, the fused epilogues, and the MCA encode vs the
+//!   exact product it replaces at r ∈ {8, 32, 96, 128} (the paper's core
+//!   trade-off) — written to `BENCH_kernels.json` when
+//!   `MCA_BENCH_KERNELS_OUT` is set (schema in BENCHMARKS.md);
 //! * native end-to-end benches: the pure-Rust backend's exact vs MCA
-//!   forward at serving shapes (no artifacts needed);
+//!   forward at serving shapes (no artifacts needed), also recorded into
+//!   `BENCH_kernels.json`;
 //! * PJRT end-to-end benches, one per paper table/figure shape (builds
 //!   with `--features pjrt` and a populated artifacts/ directory only).
 //!
@@ -14,14 +18,14 @@
 
 use std::time::Duration;
 
-use mca::bench::Bench;
+use mca::bench::{write_kernel_bench_json, Bench, KernelBenchEntry};
 use mca::coordinator::{plan_batches, rank_plans, Pending, Request};
 use mca::data;
 use mca::mca::{self as mcacore, flops::AttnDims};
 use mca::model::Params;
 use mca::rng::{AliasTable, Pcg64};
 use mca::runtime::{Backend, ForwardSpec, NativeBackend};
-use mca::tensor::Tensor;
+use mca::tensor::{kernel, reference, Tensor};
 use mca::tokenizer::Tokenizer;
 use mca::train::make_batch;
 
@@ -106,35 +110,6 @@ fn main() {
             }
         }));
     }
-    // --- host MCA estimator vs the exact product it replaces --------------
-    // (n=64, d=128, the bert_sim shape; r̄ sweeps the α knob: the encode
-    //  cost is the paper's headline FLOPs term)
-    {
-        let mut rng = Pcg64::new(9);
-        let x = Tensor::from_fn(&[64, 128], |_| rng.gen_normal() as f32);
-        let w = Tensor::from_fn(&[128, 128], |_| rng.gen_normal() as f32);
-        let p = mcacore::sampling_probs(&w);
-        let pool = mcacore::draw_pool(&mut Pcg64::new(10), &p, 128);
-        results.push(b.run("micro/exact_encode_64x128 (baseline)", Some(64.0), || {
-            std::hint::black_box(x.matmul(&w).unwrap());
-        }));
-        for (label, r_val) in [
-            ("micro/mca_encode_64x128_r8   (~a0.2)", 8usize),
-            ("micro/mca_encode_64x128_r32  (~a0.5)", 32),
-            ("micro/mca_encode_64x128_r96  (~a0.8)", 96),
-            ("micro/mca_encode_64x128_r128 (exact fallback)", 128),
-        ] {
-            let r = vec![r_val; 64];
-            results.push(b.run(label, Some(64.0), || {
-                std::hint::black_box(mcacore::mca_encode_pooled(&x, &w, &r, &p, &pool));
-            }));
-        }
-        // mixed budgets as produced by Eq. 9 on a real pass
-        let r_mixed: Vec<usize> = (0..64).map(|i| 1 + (i * 2) % 128).collect();
-        results.push(b.run("micro/mca_encode_64x128_mixed", Some(64.0), || {
-            std::hint::black_box(mcacore::mca_encode_pooled(&x, &w, &r_mixed, &p, &pool));
-        }));
-    }
     // --- FLOPs accounting ---------------------------------------------------
     {
         let per_seq: Vec<(usize, u64)> = (0..512).map(|i| (32 + i % 32, 50_000)).collect();
@@ -160,6 +135,86 @@ fn main() {
         println!("{}", r.report());
     }
 
+    // --- tensor::kernel layer: blocked GEMM vs reference, fused epilogues,
+    //     and the MCA encode vs the exact product it replaces -------------
+    // (n=64, d=128, the bert_sim value-encode shape; r sweeps the Eq. 9
+    //  budget: the encode cost is the paper's headline FLOPs term)
+    println!("\n== tensor::kernel (blocked GEMM + MCA encode, BENCH_kernels.json) ==");
+    let mut kernel_results = Vec::new();
+    let mut kentries: Vec<KernelBenchEntry> = Vec::new();
+    {
+        type Meta<'a> = (&'a str, &'a str, &'a str, Option<usize>, Option<f64>);
+        let mut push = |meta: Meta, res: mca::bench::BenchResult| {
+            let (group, shape, mode, r, alpha) = meta;
+            kernel_results.push(res.clone());
+            kentries.push(KernelBenchEntry {
+                group: group.to_string(),
+                name: res.name.clone(),
+                shape: shape.to_string(),
+                mode: mode.to_string(),
+                r,
+                alpha,
+                result: res,
+            });
+        };
+        let mut rng = Pcg64::new(9);
+        let x = Tensor::from_fn(&[64, 128], |_| rng.gen_normal() as f32);
+        let w = Tensor::from_fn(&[128, 128], |_| rng.gen_normal() as f32);
+        let res = b.run("kernel/gemm_64x128x128 (reference loops)", Some(64.0), || {
+            std::hint::black_box(reference::matmul(&x, &w).unwrap());
+        });
+        push(("gemm", "64x128x128", "reference", None, None), res);
+        let res = b.run("kernel/gemm_64x128x128 (blocked)", Some(64.0), || {
+            std::hint::black_box(kernel::matmul(&x, &w, 1).unwrap());
+        });
+        push(("gemm", "64x128x128", "kernel", None, None), res);
+        // FFN up-projection with the fused bias+GELU epilogue (d_ff=512)
+        let w1 = Tensor::from_fn(&[128, 512], |_| rng.gen_normal() as f32);
+        let bias = vec![0.01f32; 512];
+        let res = b.run("kernel/gemm_bias_gelu_64x128x512 (fused)", Some(64.0), || {
+            std::hint::black_box(kernel::matmul_bias_gelu(&x, &w1, &bias, 1).unwrap());
+        });
+        push(("gemm", "64x128x512", "kernel", None, None), res);
+        // Attention scores with the fused scale+mask+softmax epilogue
+        let qh = Tensor::from_fn(&[64, 32], |_| rng.gen_normal() as f32);
+        let kh = Tensor::from_fn(&[64, 32], |_| rng.gen_normal() as f32);
+        let visible = |_: usize, _: usize| true;
+        let res = b.run("kernel/attn_softmax_64x32x64 (fused)", Some(64.0), || {
+            let s = kernel::attn_scores_softmax(&qh, &kh, 0.17, -1e9, &visible, 1);
+            std::hint::black_box(s.unwrap());
+        });
+        push(("gemm", "64x32x64", "kernel", None, None), res);
+
+        // MCA encode: exact baseline, then the Eq. 9 r sweep.
+        let p = mcacore::sampling_probs(&w);
+        let pool = mcacore::draw_pool(&mut Pcg64::new(10), &p, 128);
+        let res = b.run("kernel/exact_encode_64x128 (baseline)", Some(64.0), || {
+            std::hint::black_box(x.matmul(&w).unwrap());
+        });
+        push(("encode", "64x128x128", "exact", None, None), res);
+        for (label, r_val, alpha) in [
+            ("kernel/mca_encode_64x128_r8   (~a0.2)", 8usize, 0.2f64),
+            ("kernel/mca_encode_64x128_r32  (~a0.5)", 32, 0.5),
+            ("kernel/mca_encode_64x128_r96  (~a0.8)", 96, 0.8),
+            ("kernel/mca_encode_64x128_r128 (exact fallback)", 128, 1.0),
+        ] {
+            let r = vec![r_val; 64];
+            let res = b.run(label, Some(64.0), || {
+                std::hint::black_box(mcacore::mca_encode_pooled(&x, &w, &r, &p, &pool));
+            });
+            push(("encode", "64x128x128", "mca", Some(r_val), Some(alpha)), res);
+        }
+        // mixed budgets as produced by Eq. 9 on a real pass
+        let r_mixed: Vec<usize> = (0..64).map(|i| 1 + (i * 2) % 128).collect();
+        let res = b.run("kernel/mca_encode_64x128_mixed", Some(64.0), || {
+            std::hint::black_box(mcacore::mca_encode_pooled(&x, &w, &r_mixed, &p, &pool));
+        });
+        push(("encode", "64x128x128", "mca", None, None), res);
+    }
+    for r in &kernel_results {
+        println!("{}", r.report());
+    }
+
     // --- native backend end-to-end: exact vs MCA forward --------------------
     println!("\n== native backend end-to-end (exact vs MCA forward) ==");
     let mut native = Vec::new();
@@ -179,17 +234,31 @@ fn main() {
                 let fspec = ForwardSpec::new(model_name, mode, batch, seq);
                 let label = format!("native/{model_name}_fwd_b{batch}_{mode}_a{alpha:.1}");
                 let mut seed = 0u32;
-                native.push(b.run(&label, Some(batch as f64), || {
+                let res = b.run(&label, Some(batch as f64), || {
                     seed = seed.wrapping_add(1);
                     std::hint::black_box(
                         be.forward(&fspec, &params, &ids, alpha, seed).unwrap(),
                     );
-                }));
+                });
+                native.push(res.clone());
+                kentries.push(KernelBenchEntry {
+                    group: "forward".to_string(),
+                    name: label,
+                    shape: format!("b{batch}xn{seq}"),
+                    mode: mode.to_string(),
+                    r: None,
+                    alpha: Some(alpha as f64),
+                    result: res,
+                });
             }
         }
     }
     for r in &native {
         println!("{}", r.report());
+    }
+    if let Ok(out) = std::env::var("MCA_BENCH_KERNELS_OUT") {
+        write_kernel_bench_json(std::path::Path::new(&out), &kentries).unwrap();
+        println!("(wrote {out})");
     }
 
     // --- serving: worker-pool scaling (closed burst) ------------------------

@@ -1,22 +1,37 @@
 //! Mini-criterion bench harness substrate (criterion is unavailable
 //! offline). Adaptive iteration-count timing with warmup, mean/p50/p99 and
 //! throughput reporting; used by `cargo bench` (rust/benches/bench_main.rs,
-//! a `harness = false` target).
+//! a `harness = false` target). Also home of the machine-readable
+//! `BENCH_kernels.json` emitter ([`write_kernel_bench_json`]) — see
+//! BENCHMARKS.md for the full catalog of `BENCH_*.json` producers.
 
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Timing summary of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// benchmark label
     pub name: String,
+    /// measured iterations (after warmup)
     pub iters: u64,
+    /// mean iteration time
     pub mean: Duration,
+    /// median iteration time
     pub p50: Duration,
+    /// 99th-percentile iteration time
     pub p99: Duration,
     /// Optional items/sec (set via `throughput`)
     pub throughput: Option<f64>,
 }
 
 impl BenchResult {
+    /// One-line human-readable report (what `cargo bench` prints).
     pub fn report(&self) -> String {
         let tp = match self.throughput {
             Some(t) if t >= 1000.0 => format!("  {:>10.1} items/s", t),
@@ -51,9 +66,13 @@ fn fmt_dur(d: Duration) -> String {
 /// Bench configuration: target total measurement time and warmup.
 #[derive(Debug, Clone)]
 pub struct Bench {
+    /// warmup phase duration (also estimates per-iteration cost)
     pub warmup: Duration,
+    /// target total measurement time
     pub measure: Duration,
+    /// lower clamp on the measured iteration count
     pub min_iters: u64,
+    /// upper clamp on the measured iteration count
     pub max_iters: u64,
 }
 
@@ -69,6 +88,7 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// Fast profile for CI smoke runs (`MCA_BENCH_QUICK=1`).
     pub fn quick() -> Self {
         Bench {
             warmup: Duration::from_millis(50),
@@ -115,6 +135,65 @@ impl Bench {
     }
 }
 
+// ---------------------------------------------------------------------------
+// BENCH_kernels.json emitter
+// ---------------------------------------------------------------------------
+
+/// One row of `BENCH_kernels.json`: a kernel- or forward-level timing
+/// with enough metadata (shape, mode, the Eq. 9 `r` budget or the α knob)
+/// to plot the exact-vs-MCA trade-off across commits. Schema in
+/// BENCHMARKS.md.
+#[derive(Debug, Clone)]
+pub struct KernelBenchEntry {
+    /// entry family: `"gemm"`, `"encode"` or `"forward"`
+    pub group: String,
+    /// benchmark label (matches the human-readable report line)
+    pub name: String,
+    /// problem shape, e.g. `"64x128x128"` or `"b8xn64"`
+    pub shape: String,
+    /// code path: `"kernel"`, `"reference"`, `"exact"` or `"mca"`
+    pub mode: String,
+    /// per-token Eq. 9 sample budget for encode entries
+    pub r: Option<usize>,
+    /// MCA precision knob for forward entries
+    pub alpha: Option<f64>,
+    /// the measured timing
+    pub result: BenchResult,
+}
+
+/// Write `BENCH_kernels.json` (the kernel-layer perf trajectory CI
+/// uploads next to `BENCH_serving.json`): a `{"bench": "kernels",
+/// "entries": [...]}` object with one row per [`KernelBenchEntry`].
+pub fn write_kernel_bench_json(path: &Path, entries: &[KernelBenchEntry]) -> Result<()> {
+    let mut rows = Vec::with_capacity(entries.len());
+    for e in entries {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("group".to_string(), Json::Str(e.group.clone()));
+        m.insert("name".to_string(), Json::Str(e.name.clone()));
+        m.insert("shape".to_string(), Json::Str(e.shape.clone()));
+        m.insert("mode".to_string(), Json::Str(e.mode.clone()));
+        if let Some(r) = e.r {
+            m.insert("r".to_string(), Json::Num(r as f64));
+        }
+        if let Some(a) = e.alpha {
+            m.insert("alpha".to_string(), Json::Num(a));
+        }
+        m.insert("iters".to_string(), Json::Num(e.result.iters as f64));
+        m.insert("mean_ns".to_string(), Json::Num(e.result.mean.as_nanos() as f64));
+        m.insert("p50_ns".to_string(), Json::Num(e.result.p50.as_nanos() as f64));
+        m.insert("p99_ns".to_string(), Json::Num(e.result.p99.as_nanos() as f64));
+        if let Some(t) = e.result.throughput {
+            m.insert("items_per_s".to_string(), Json::Num(t));
+        }
+        rows.push(Json::Obj(m));
+    }
+    let mut top: BTreeMap<String, Json> = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("kernels".to_string()));
+    top.insert("entries".to_string(), Json::Arr(rows));
+    std::fs::write(path, Json::Obj(top).to_string())?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,6 +217,51 @@ mod tests {
         assert!(r.p99 >= r.p50);
         assert!(r.throughput.unwrap() > 0.0);
         assert!(acc > 0 || acc == 0); // keep acc alive
+    }
+
+    #[test]
+    fn kernel_bench_json_roundtrips() {
+        let res = BenchResult {
+            name: "gemm/64x128x128 kernel".into(),
+            iters: 42,
+            mean: Duration::from_micros(120),
+            p50: Duration::from_micros(110),
+            p99: Duration::from_micros(300),
+            throughput: Some(512.0),
+        };
+        let entries = vec![
+            KernelBenchEntry {
+                group: "gemm".into(),
+                name: res.name.clone(),
+                shape: "64x128x128".into(),
+                mode: "kernel".into(),
+                r: None,
+                alpha: None,
+                result: res.clone(),
+            },
+            KernelBenchEntry {
+                group: "encode".into(),
+                name: "encode/r8".into(),
+                shape: "64x128x128".into(),
+                mode: "mca".into(),
+                r: Some(8),
+                alpha: Some(0.2),
+                result: res,
+            },
+        ];
+        let path = std::env::temp_dir().join("mca_bench_kernels_test.json");
+        write_kernel_bench_json(&path, &entries).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str().unwrap(), "kernels");
+        let rows = parsed.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("group").unwrap().as_str().unwrap(), "gemm");
+        assert!(rows[0].opt("r").is_none());
+        assert_eq!(rows[0].get("mean_ns").unwrap().as_usize().unwrap(), 120_000);
+        assert_eq!(rows[1].get("r").unwrap().as_usize().unwrap(), 8);
+        assert!((rows[1].get("alpha").unwrap().as_f64().unwrap() - 0.2).abs() < 1e-12);
+        assert_eq!(rows[1].get("iters").unwrap().as_usize().unwrap(), 42);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

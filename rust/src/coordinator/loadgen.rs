@@ -28,6 +28,7 @@ use crate::util::timer::LatencyStats;
 pub struct Workload {
     /// offered request rate (req/s)
     pub rate: f64,
+    /// how long to offer load
     pub duration: Duration,
     /// (alpha, weight) mixture of raw-α request precisions
     pub alpha_mix: Vec<(f32, f64)>,
@@ -36,20 +37,28 @@ pub struct Workload {
     pub budget_frac: f64,
     /// (ε, weight) mixture for budget-carrying requests
     pub epsilon_mix: Vec<(f64, f64)>,
+    /// arrival-process / mixture seed (runs are deterministic in it)
     pub seed: u64,
 }
 
 /// Result of one load-test run.
 #[derive(Debug, Clone)]
 pub struct LoadResult {
+    /// offered rate (req/s)
     pub offered: f64,
+    /// requests that received a non-shed response
     pub completed: usize,
     /// requests answered with a load-shed response (admission control)
     pub shed: usize,
+    /// achieved completion rate (req/s)
     pub achieved: f64,
+    /// mean request latency
     pub mean_ms: f64,
+    /// median request latency
     pub p50_ms: f64,
+    /// 99th-percentile request latency
     pub p99_ms: f64,
+    /// mean per-request FLOPs-reduction factor
     pub mean_flops_reduction: f64,
     /// responses that carried an ε budget (including shed ones)
     pub budget_requests: usize,
@@ -66,11 +75,15 @@ pub struct LoadResult {
 /// determinism regression test compares across runs.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RequestOutcome {
+    /// request id
     pub id: u64,
+    /// whether admission control shed it
     pub shed: bool,
+    /// argmax class (-1 when shed)
     pub pred_class: i32,
     /// bits of the α the batch executed at (resolved α for budgets)
     pub alpha_bits: u32,
+    /// mode the batch actually executed
     pub mode: String,
     /// bits of the per-request Σ_layers Σ_tokens r_i
     pub r_sum_bits: u64,

@@ -65,6 +65,7 @@ use crate::util::threadpool;
 /// it, and is raised back to `alpha_max` under precision brownout.
 #[derive(Debug, Clone)]
 pub struct Budget {
+    /// the requested Theorem-2 error budget ε
     pub epsilon: f64,
     /// tail probability for the (1−δ) Theorem-2 tail bound; `None` = mean bound
     pub delta: Option<f64>,
@@ -74,9 +75,12 @@ pub struct Budget {
     pub degraded: bool,
 }
 
+/// One inference request as it travels through the queue.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// unique request id (echoed in the response)
     pub id: u64,
+    /// whitespace-tokenized input text
     pub text: String,
     /// effective precision knob: the requested α for raw-α requests, the
     /// resolved grid α for ε-budget requests
@@ -87,16 +91,22 @@ pub struct Request {
     pub budget: Option<Budget>,
 }
 
+/// What every submitted request eventually receives, exactly once.
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// id of the request this answers
     pub id: u64,
+    /// argmax class (-1 when shed)
     pub pred_class: i32,
+    /// raw classifier logits (empty when shed)
     pub logits: Vec<f32>,
     /// measured FLOPs-reduction factor for this sequence (1.0 for exact)
     pub flops_reduction: f64,
     /// Σ_layers Σ_tokens r_i for this sequence (0 in exact mode / shed)
     pub r_sum: f64,
+    /// submit-to-response wall clock
     pub latency: Duration,
+    /// size of the executed batch this request rode in
     pub batch_size: usize,
     /// α of the batch this request executed in (== the requested α for
     /// raw-α requests — the batcher never mixes αs, asserted by the
@@ -123,14 +133,18 @@ pub struct Response {
 /// A queued request with arrival time.
 #[derive(Debug, Clone)]
 pub struct Pending {
+    /// the queued request
     pub req: Request,
+    /// when it entered the queue
     pub arrived: Instant,
 }
 
 /// One planned execution batch: indices into the queue, target bucket size.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BatchPlan {
+    /// queue indices of the member requests
     pub indices: Vec<usize>,
+    /// planned bucket capacity (>= indices.len())
     pub bucket: usize,
 }
 
@@ -295,12 +309,16 @@ pub fn logit_margin(row: &[f32]) -> f64 {
 // Worker pool + server
 // ---------------------------------------------------------------------------
 
+/// Everything a [`Server`] needs to start its dispatcher + worker pool.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
+    /// model to serve (must be in the backend inventory)
     pub model: String,
     /// checkpoint to serve (pre-trained via `mca train`)
     pub checkpoint: std::path::PathBuf,
+    /// max time an under-full batch group waits before riding padded
     pub max_wait: Duration,
+    /// serving sequence length (requests are tokenized/padded to this)
     pub seq: usize,
     /// worker pool size; each worker opens its own backend instance
     pub workers: usize,
@@ -403,25 +421,35 @@ struct BatchReport {
     canary: Option<CanarySample>,
 }
 
+/// Point-in-time server statistics (see [`Server::stats`]).
 #[derive(Debug, Clone, Default)]
 pub struct ServerStats {
+    /// requests answered (excludes shed)
     pub served: usize,
     /// requests rejected by admission control (queue at cap)
     pub shed: usize,
+    /// batches executed across the pool
     pub batches: usize,
     /// admission-queue depth at snapshot time (client requests; canary
     /// probes are invisible to admission)
     pub queue_depth: usize,
     /// high-water mark of the admission queue (client requests)
     pub queue_peak: usize,
+    /// mean request latency
     pub mean_latency_ms: f64,
+    /// median request latency
     pub p50_ms: f64,
+    /// 99th-percentile request latency
     pub p99_ms: f64,
+    /// mean executed batch size
     pub mean_batch_size: f64,
+    /// mean per-request FLOPs-reduction factor
     pub mean_flops_reduction: f64,
     /// whether the dispatcher is currently in the precision-brownout stage
     pub brownout_active: bool,
+    /// times the dispatcher entered brownout
     pub brownout_entries: usize,
+    /// times it recovered
     pub brownout_exits: usize,
     /// requests served at their budget ceiling because of brownout
     pub degraded: usize,
@@ -429,13 +457,17 @@ pub struct ServerStats {
     pub budget_requests: usize,
     /// budgets below the α-grid floor, resolved to the exact path
     pub budget_exact: usize,
+    /// canary exact replays observed
     pub canaries: usize,
+    /// canary observations below the quality floor
     pub canary_violations: usize,
     /// the AIMD controller's current α target
     pub controller_alpha: f64,
     /// (α, count) histogram of budget resolutions (α actually served)
     pub resolved_alphas: Vec<(f32, usize)>,
+    /// per-worker breakdowns
     pub workers: Vec<WorkerSnapshot>,
+    /// per-α latency summaries
     pub per_alpha: Vec<AlphaSummary>,
 }
 
@@ -492,6 +524,8 @@ impl Submitter {
     }
 }
 
+/// The sharded serving coordinator: a dispatcher thread plus a pool of
+/// model workers (see module docs for the architecture).
 pub struct Server {
     sub: Submitter,
     handle: Option<JoinHandle<Result<()>>>,
@@ -591,6 +625,7 @@ impl Server {
         let _ = self.sub.tx.send(Msg::Resume);
     }
 
+    /// Snapshot the server's aggregate + per-worker statistics.
     pub fn stats(&self) -> Result<ServerStats> {
         let (stx, srx) = mpsc::channel();
         self.sub.tx.send(Msg::Stats(stx)).ok().context("server down")?;

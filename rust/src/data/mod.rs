@@ -19,16 +19,23 @@ pub enum TaskKind {
     Regression,
 }
 
+/// Task metric families (matching the paper's Table 1 columns).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Metric {
+    /// classification accuracy
     Accuracy,
+    /// binary F1 (MRPC/QQP)
     F1,
+    /// Matthews correlation (CoLA)
     Matthews,
+    /// Pearson correlation (STS-B)
     Pearson,
+    /// Spearman correlation (STS-B)
     Spearman,
 }
 
 impl Metric {
+    /// Short column header as the paper prints it.
     pub fn short(&self) -> &'static str {
         match self {
             Metric::Accuracy => "Acc.",
@@ -44,17 +51,23 @@ impl Metric {
 /// batch-assembly time.
 #[derive(Debug, Clone)]
 pub struct Example {
+    /// token ids, CLS-prefixed, unpadded
     pub ids: Vec<i32>,
+    /// gold label
     pub label: Label,
 }
 
+/// A gold label: a class id or a regression score.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Label {
+    /// classification label
     Class(i32),
+    /// regression score in [0, 1]
     Score(f32),
 }
 
 impl Label {
+    /// The class id (panics on regression labels).
     pub fn class(&self) -> i32 {
         match self {
             Label::Class(c) => *c,
@@ -62,6 +75,7 @@ impl Label {
         }
     }
 
+    /// The score (class labels cast to f32).
     pub fn score(&self) -> f32 {
         match self {
             Label::Score(s) => *s,
@@ -70,22 +84,31 @@ impl Label {
     }
 }
 
+/// A generated train/dev split.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// training examples
     pub train: Vec<Example>,
+    /// evaluation examples
     pub dev: Vec<Example>,
 }
 
 /// Task descriptor: everything the trainer/eval harness needs.
 #[derive(Debug, Clone)]
 pub struct TaskSpec {
+    /// task name, e.g. `"sst2_sim"`
     pub name: &'static str,
+    /// classification or regression
     pub kind: TaskKind,
+    /// classifier width (1 for regression)
     pub n_classes: i32,
+    /// metrics this task reports
     pub metrics: &'static [Metric],
     /// Which model family evaluates this task (64-token GLUE vs 256-token docs).
     pub max_len: usize,
+    /// generated training set size
     pub train_size: usize,
+    /// generated dev set size
     pub dev_size: usize,
 }
 
@@ -180,6 +203,7 @@ pub fn doc_tasks() -> Vec<TaskSpec> {
     ]
 }
 
+/// Look up a task descriptor by name.
 pub fn task_by_name(name: &str) -> Option<TaskSpec> {
     glue_tasks().into_iter().chain(doc_tasks()).find(|t| t.name == name)
 }

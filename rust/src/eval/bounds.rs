@@ -10,6 +10,7 @@ use crate::tensor::Tensor;
 /// One α row of the bound-tightness table.
 #[derive(Debug, Clone)]
 pub struct BoundRow {
+    /// the MCA precision knob this row was measured at
     pub alpha: f64,
     /// mean measured per-token error E‖Ỹ[i] − Y[i]‖ (max over tokens)
     pub measured_mean: f64,

@@ -21,7 +21,9 @@ use crate::train::make_batch;
 
 /// Predictions + measured FLOPs for one pass over the dev set.
 pub struct PassResult {
+    /// per-example argmax class (classification tasks)
     pub pred_cls: Vec<i32>,
+    /// per-example score (regression tasks)
     pub pred_score: Vec<f64>,
     /// per-sequence (n_eff, Σ_layers Σ_i r_i) for FLOPs accounting
     pub per_seq: Vec<(usize, u64)>,
@@ -30,17 +32,22 @@ pub struct PassResult {
 /// One α column of a table row.
 #[derive(Debug, Clone)]
 pub struct AlphaResult {
+    /// the MCA precision knob of this column
     pub alpha: f64,
     /// per metric: mean ± CI over seeds
     pub metrics: Vec<(Metric, MeanCi)>,
+    /// measured FLOPs-reduction factor, mean ± CI over seeds
     pub flops_reduction: MeanCi,
 }
 
 /// One table row (one task).
 #[derive(Debug, Clone)]
 pub struct TaskRow {
+    /// task name
     pub task: String,
+    /// exact-attention metric values
     pub baseline: Vec<(Metric, f64)>,
+    /// one column per evaluated α
     pub alphas: Vec<AlphaResult>,
 }
 
@@ -132,10 +139,15 @@ pub fn pass_reduction(pass: &PassResult, n_layers: usize, dims: AttnDims) -> f64
 
 /// Options for a task evaluation.
 pub struct EvalOptions {
+    /// α grid to sweep
     pub alphas: Vec<f64>,
+    /// random seeds per α (the paper uses 128)
     pub seeds: u32,
+    /// "f32" | "bf16"
     pub compute_dtype: String,
+    /// importance pooling for Eq. 9
     pub r_strategy: String,
+    /// sampling distribution for Eq. 6
     pub p_strategy: String,
 }
 

@@ -17,14 +17,20 @@ use crate::train::{train_or_load, TrainConfig};
 /// Shared experiment context: backend choice, checkpoint cache, train/eval
 /// configuration.
 pub struct Pipeline {
+    /// which execution backend to evaluate on
     pub backend: BackendSpec,
+    /// checkpoint cache directory
     pub ckpt_root: PathBuf,
+    /// fine-tuning hyperparameters
     pub train_cfg: TrainConfig,
+    /// dataset generation seed
     pub data_seed: u64,
+    /// print per-task progress
     pub verbose: bool,
 }
 
 impl Pipeline {
+    /// Pipeline with default training config and checkpoint root.
     pub fn new(backend: BackendSpec) -> Pipeline {
         Pipeline {
             backend,

@@ -12,7 +12,13 @@
 //! which executes the Pallas kernels (L1) and JAX transformer (L2)
 //! AOT-lowered to HLO text by `make artifacts`.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for results.
+//! The paper's machinery lives in [`mca`] (Eq. 5/6/9 estimator, Lemma 1 /
+//! Theorem 2 bounds, FLOPs accounting), the math substrate in [`tensor`]
+//! (blocked/SIMD kernels + naive reference oracle), the serving system in
+//! [`coordinator`], and the backend seam in [`runtime`]. See DESIGN.md
+//! for the system inventory, BENCHMARKS.md for the perf surface, and
+//! EXPERIMENTS.md for results.
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod coordinator;

@@ -58,6 +58,22 @@ pub fn quantize_alpha(alpha: f64) -> Option<f32> {
 /// (β or ‖W‖_F non-positive or non-finite) disable the inversion and
 /// return full range (α = 1); a NaN budget fails to the most precise α —
 /// garbage must not be served at low precision.
+///
+/// The ε → α resolution the serving dispatcher performs for
+/// budget-carrying requests (then snapped down onto the grid so they
+/// still batch):
+///
+/// ```
+/// use mca::mca::adaptive::{alpha_for_error_budget, quantize_alpha};
+///
+/// // Checkpoint statistics: β = 2 (mean row norm), ‖W_v‖_F = 3.
+/// let alpha = alpha_for_error_budget(1.2, 2.0, 3.0);
+/// assert!((alpha - 0.2).abs() < 1e-12); // ε / (β‖W‖_F) = 1.2 / 6
+/// assert_eq!(quantize_alpha(alpha), Some(0.2)); // grid α that honors ε
+///
+/// // A budget looser than any error the model can make runs cheapest.
+/// assert_eq!(alpha_for_error_budget(100.0, 2.0, 3.0), 1.0);
+/// ```
 pub fn alpha_for_error_budget(epsilon: f64, beta: f64, w_frob: f64) -> f64 {
     if !(beta > 0.0 && beta.is_finite() && w_frob > 0.0 && w_frob.is_finite()) {
         return 1.0;
@@ -78,6 +94,16 @@ pub fn alpha_for_error_budget(epsilon: f64, beta: f64, w_frob: f64) -> f64 {
 /// Invert the Theorem-2 tail bound (probability ≥ 1−δ):
 /// ε = α·β·‖W‖_F/δ  =>  α = ε·δ / (β·‖W‖_F). δ ≥ 1 degrades to the mean
 /// bound; δ ≤ 0 or NaN resolves to the most precise α (strictest reading).
+///
+/// ```
+/// use mca::mca::adaptive::{alpha_for_error_budget, alpha_for_tail_budget};
+///
+/// // "within ε = 1.2 with probability ≥ 90%" costs a 10× smaller α than
+/// // "within ε = 1.2 on average":
+/// let mean = alpha_for_error_budget(1.2, 2.0, 3.0);
+/// let tail = alpha_for_tail_budget(1.2, 0.1, 2.0, 3.0);
+/// assert!((tail - mean * 0.1).abs() < 1e-12);
+/// ```
 pub fn alpha_for_tail_budget(epsilon: f64, delta: f64, beta: f64, w_frob: f64) -> f64 {
     if delta.is_nan() {
         return alpha_for_error_budget(f64::NAN, beta, w_frob);
@@ -91,8 +117,11 @@ pub fn alpha_for_tail_budget(epsilon: f64, delta: f64, beta: f64, w_frob: f64) -
 /// a poisoned proxy.
 #[derive(Debug, Clone)]
 pub struct AlphaController {
+    /// current α target (what the dispatcher caps budget requests at)
     pub alpha: f64,
+    /// lower clamp of the walk
     pub min_alpha: f64,
+    /// upper clamp of the walk
     pub max_alpha: f64,
     /// additive step on success
     pub increase: f64,
@@ -105,6 +134,8 @@ pub struct AlphaController {
 }
 
 impl AlphaController {
+    /// Controller starting at `initial` (clamped to [0.05, 1]; non-finite
+    /// falls back to 0.5) with the given quality floor.
     pub fn new(initial: f64, quality_floor: f64) -> AlphaController {
         let initial = if initial.is_finite() { initial } else { 0.5 };
         AlphaController {
@@ -141,10 +172,12 @@ impl AlphaController {
         self.alpha
     }
 
+    /// Number of finite observations fed so far.
     pub fn updates(&self) -> u64 {
         self.updates
     }
 
+    /// Fraction of observations that violated the quality floor.
     pub fn violation_rate(&self) -> f64 {
         if self.updates == 0 {
             0.0

@@ -15,6 +15,7 @@
 /// Static per-layer description needed for accounting.
 #[derive(Debug, Clone, Copy)]
 pub struct AttnDims {
+    /// hidden width d of the encode X·W
     pub d_model: usize,
     /// sliding-window half-width (None = dense attention)
     pub window: Option<usize>,

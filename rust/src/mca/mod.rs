@@ -1,26 +1,48 @@
-//! Host-side MCA core: the reference estimator (paper Eq. 5/6/9), sample
-//! count rules, theoretical error bounds (Lemma 1 / Theorem 2) and FLOPs
-//! accounting. This is the Rust mirror of `python/compile/kernels/ref.py`:
-//! the in-graph implementation is what runs in production; this module is
-//! the comparator used by integration tests, the serving-side FLOPs
-//! estimator, and the ablation harness.
+//! Host-side MCA core — the paper's contribution in executable form.
+//!
+//! The pieces map onto the paper one-to-one:
+//!
+//! * [`sampling_probs`] — Eq. 6, the input-independent sampling
+//!   distribution `p(i) ∝ ‖W_v[i]‖²`;
+//! * [`token_importance`] + [`sample_counts`] — Eq. 9, the per-token
+//!   sample budgets `r_i` that make total encode cost track attention
+//!   importance at precision knob α;
+//! * [`mca_encode`] / [`mca_encode_pooled`] — Eq. 5, the unbiased
+//!   row-sampled estimator of `X W_v` (saturated tokens fall back to the
+//!   exact product, bit-identical to `Tensor::matmul`);
+//! * [`lemma1_bound`] / [`theorem2_bound`] / [`theorem2_tail_bound`] —
+//!   the error guarantees, inverted at serving time by
+//!   [`adaptive::alpha_for_error_budget`];
+//! * [`flops`] — the Eq. 9 cost accounting behind the reported FLOPs
+//!   reduction factors.
+//!
+//! This is the Rust mirror of `python/compile/kernels/ref.py` and the
+//! compute core of the native backend's MCA path (DESIGN.md §3/§4). The
+//! estimator's inner loops are batched AXPYs on the blocked kernel layer
+//! ([`crate::tensor::kernel`]), so measured encode time scales with Σrᵢ
+//! the way Eq. 9 says it should — see BENCHMARKS.md for the measured
+//! trajectory.
 
 pub mod adaptive;
 pub mod flops;
 
 use crate::rng::{AliasTable, Pcg64};
-use crate::tensor::{self, Tensor};
+use crate::tensor::{self, kernel, Tensor};
 
 /// Pooling strategy for per-token importance (paper: max; mean/median are
 /// the future-work variants our ablation study measures).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RStrategy {
+    /// Max over query rows (the paper's choice).
     Max,
+    /// Mean over query rows.
     Mean,
+    /// Median over query rows.
     Median,
 }
 
 impl RStrategy {
+    /// Parse `"max" | "mean" | "median"` (the `ForwardSpec` encoding).
     pub fn parse(s: &str) -> Option<RStrategy> {
         match s {
             "max" => Some(RStrategy::Max),
@@ -145,6 +167,24 @@ pub fn draw_pool(rng: &mut Pcg64, p: &[f64], size: usize) -> Vec<usize> {
 /// Draws a fresh pool of size d from `rng`; use [`mca_encode_pooled`] to
 /// share one pool across calls (what the in-graph kernel and the native
 /// backend do — one pool per layer, shared by the whole batch).
+///
+/// ```
+/// use mca::mca::{mca_encode, sampling_probs};
+/// use mca::rng::Pcg64;
+/// use mca::tensor::Tensor;
+///
+/// // Two tokens of width 4, projected to 3 output features.
+/// let x = Tensor::new(&[2, 4], vec![0.5, -1.0, 2.0, 0.25, 1.0, 0.0, -0.5, 3.0]).unwrap();
+/// let w = Tensor::new(&[4, 3], (0..12).map(|i| i as f32 / 6.0).collect()).unwrap();
+/// let p = sampling_probs(&w); // Eq. 6: p(i) ∝ ‖W[i]‖²
+/// let r = vec![2, 4]; // token 0 samples 2 rows; token 1 saturates (r ≥ d)
+/// let mut rng = Pcg64::new(7);
+/// let h = mca_encode(&mut rng, &x, &w, &r, &p);
+/// assert_eq!(h.shape(), &[2, 3]);
+/// // A saturated token falls back to the exact product, bit-for-bit.
+/// let exact = x.matmul(&w).unwrap();
+/// assert_eq!(h.row(1), exact.row(1));
+/// ```
 pub fn mca_encode(
     rng: &mut Pcg64,
     x: &Tensor,          // (n, d)
@@ -157,11 +197,14 @@ pub fn mca_encode(
     mca_encode_pooled(x, w, r, p, &pool)
 }
 
-/// Shared-pool estimator with a caller-provided pool. All inner loops are
-/// row-slice AXPYs (`out_row += s * w_row`) — no per-element offset
-/// recompute or bounds asserts, so the compiler can vectorize; the exact
-/// fallback walks the same slices and matches `Tensor::matmul`'s
-/// accumulation order bit-for-bit.
+/// Shared-pool estimator with a caller-provided pool. The inner loops run
+/// on the kernel layer's batched AXPY path ([`crate::tensor::kernel::axpy4`]):
+/// four sampled rows of W are folded into the output row per pass, with
+/// the same left-to-right accumulation order as four sequential AXPYs, so
+/// the cost of a token is O(r_i · d_out) with one output load/store per
+/// four samples — measured encode time tracks Σrᵢ (Eq. 9). The exact
+/// fallback for saturated tokens matches `Tensor::matmul`'s accumulation
+/// order bit-for-bit.
 pub fn mca_encode_pooled(
     x: &Tensor,          // (n, d)
     w: &Tensor,          // (d, d_out)
@@ -194,14 +237,26 @@ pub fn mca_encode_pooled(
             continue;
         }
         let ri = r[i] as f64;
-        for &sk in pool.iter().take(r[i]) {
-            let scale = (x_row[sk] as f64 / (ri * p[sk])) as f32;
+        let scale_of = |sk: usize| (x_row[sk] as f64 / (ri * p[sk])) as f32;
+        let prefix = &pool[..r[i]];
+        let mut chunks = prefix.chunks_exact(4);
+        for four in &mut chunks {
+            let s = [scale_of(four[0]), scale_of(four[1]), scale_of(four[2]), scale_of(four[3])];
+            kernel::axpy4(
+                o_row,
+                &s,
+                w.row(four[0]),
+                w.row(four[1]),
+                w.row(four[2]),
+                w.row(four[3]),
+            );
+        }
+        for &sk in chunks.remainder() {
+            let scale = scale_of(sk);
             if scale == 0.0 {
                 continue;
             }
-            for (o, wv) in o_row.iter_mut().zip(w.row(sk)) {
-                *o += scale * wv;
-            }
+            kernel::axpy(o_row, scale, w.row(sk));
         }
     }
     Tensor::new(&[n, d_out], out).expect("shape computed above")

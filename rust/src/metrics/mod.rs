@@ -111,11 +111,15 @@ pub fn spearman(x: &[f64], y: &[f64]) -> f64 {
 /// paper's ±x columns).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MeanCi {
+    /// sample mean
     pub mean: f64,
+    /// 95% confidence half-width
     pub ci95: f64,
+    /// sample count
     pub n: usize,
 }
 
+/// Mean ± 95% CI of a sample set (normal approximation).
 pub fn mean_ci(samples: &[f64]) -> MeanCi {
     let n = samples.len();
     if n == 0 {

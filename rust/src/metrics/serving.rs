@@ -16,16 +16,21 @@ use crate::util::timer::LatencyStats;
 /// Accumulators for one pool worker.
 #[derive(Debug, Clone, Default)]
 pub struct WorkerMetrics {
+    /// requests this worker answered
     pub served: usize,
+    /// batches this worker executed
     pub batches: usize,
+    /// batches whose forward errored
     pub failed_batches: usize,
     /// Σ actual batch sizes (occupancy numerator).
     pub batch_size_sum: usize,
     /// Σ planned bucket capacities (occupancy denominator).
     pub bucket_sum: usize,
+    /// Σ per-request FLOPs-reduction factors (mean numerator)
     pub flops_sum: f64,
     /// Wall-clock spent inside `Backend::forward`.
     pub busy_ms: f64,
+    /// per-batch forward latency histogram
     pub lat: LatencyStats,
 }
 
@@ -39,6 +44,7 @@ impl WorkerMetrics {
         }
     }
 
+    /// Mean executed batch size.
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches == 0 {
             0.0
@@ -51,24 +57,38 @@ impl WorkerMetrics {
 /// Read-only snapshot of one worker, embedded in server stats.
 #[derive(Debug, Clone)]
 pub struct WorkerSnapshot {
+    /// worker index within the pool
     pub worker: usize,
+    /// requests answered
     pub served: usize,
+    /// batches executed
     pub batches: usize,
+    /// batches whose forward errored
     pub failed_batches: usize,
+    /// mean executed batch size
     pub mean_batch_size: f64,
+    /// mean fraction of planned bucket filled
     pub occupancy: f64,
+    /// wall-clock inside `Backend::forward`
     pub busy_ms: f64,
+    /// median per-batch forward latency
     pub p50_ms: f64,
+    /// 99th-percentile per-batch forward latency
     pub p99_ms: f64,
 }
 
 /// Per-α latency summary row (one per distinct requested α).
 #[derive(Debug, Clone)]
 pub struct AlphaSummary {
+    /// the requested (or resolved) α
     pub alpha: f32,
+    /// requests served at this α
     pub count: usize,
+    /// mean request latency
     pub mean_ms: f64,
+    /// median request latency
     pub p50_ms: f64,
+    /// 99th-percentile request latency
     pub p99_ms: f64,
 }
 
@@ -97,6 +117,7 @@ pub struct ServingMetrics {
     pub canary_violations: usize,
     /// The AIMD controller's current α target.
     pub controller_alpha: f64,
+    /// per-worker accumulators (index = worker id)
     pub workers: Vec<WorkerMetrics>,
     per_alpha: BTreeMap<u32, LatencyStats>,
     /// Per-α-resolution counts for admitted ε-budget requests (keyed by
@@ -105,26 +126,32 @@ pub struct ServingMetrics {
 }
 
 impl ServingMetrics {
+    /// Fresh accumulators for a pool of `workers` workers.
     pub fn new(workers: usize) -> ServingMetrics {
         ServingMetrics { workers: vec![WorkerMetrics::default(); workers], ..Default::default() }
     }
 
+    /// Record one load-shed rejection.
     pub fn on_shed(&mut self) {
         self.shed += 1;
     }
 
+    /// Track the admission-queue high-water mark.
     pub fn on_queue_depth(&mut self, depth: usize) {
         self.queue_peak = self.queue_peak.max(depth);
     }
 
+    /// Record entering the precision-brownout stage.
     pub fn on_brownout_enter(&mut self) {
         self.brownout_entries += 1;
     }
 
+    /// Record recovering from the precision-brownout stage.
     pub fn on_brownout_exit(&mut self) {
         self.brownout_exits += 1;
     }
 
+    /// Record `n` queued requests degraded to their α ceiling.
     pub fn on_degraded(&mut self, n: usize) {
         self.degraded += n;
     }
@@ -191,22 +218,27 @@ impl ServingMetrics {
         }
     }
 
+    /// Record a batch whose forward errored on `worker`.
     pub fn on_failed_batch(&mut self, worker: usize) {
         self.workers[worker].failed_batches += 1;
     }
 
+    /// Total requests answered across the pool.
     pub fn served(&self) -> usize {
         self.workers.iter().map(|w| w.served).sum()
     }
 
+    /// Total batches executed across the pool.
     pub fn batches(&self) -> usize {
         self.workers.iter().map(|w| w.batches).sum()
     }
 
+    /// Σ executed batch sizes across the pool.
     pub fn batch_size_sum(&self) -> usize {
         self.workers.iter().map(|w| w.batch_size_sum).sum()
     }
 
+    /// Σ per-request FLOPs-reduction factors across the pool.
     pub fn flops_sum(&self) -> f64 {
         self.workers.iter().map(|w| w.flops_sum).sum()
     }
@@ -220,6 +252,7 @@ impl ServingMetrics {
         all
     }
 
+    /// Read-only per-worker snapshots for server stats.
     pub fn worker_snapshots(&self) -> Vec<WorkerSnapshot> {
         self.workers
             .iter()
@@ -238,6 +271,7 @@ impl ServingMetrics {
             .collect()
     }
 
+    /// Per-α latency summary rows, ascending in α.
     pub fn alpha_summaries(&self) -> Vec<AlphaSummary> {
         self.per_alpha
             .iter()

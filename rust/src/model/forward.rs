@@ -16,6 +16,11 @@
 //! Batch elements are independent; [`forward_batch`] fans them out with
 //! `util::threadpool::parallel_map`, borrowing the unpacked weights from
 //! the caller's stack (scoped threads — no `Arc`, no clones per row).
+//! Every matrix product runs on the blocked [`crate::tensor::kernel`]
+//! layer with fused bias/GELU/softmax epilogues; when the batch is
+//! smaller than the worker budget, the spare threads are handed down to
+//! the kernel's panel splitter, so a single-request forward still uses
+//! the cores `runtime::open_backend_sized` budgeted to this backend.
 
 use anyhow::{bail, Context, Result};
 
@@ -23,21 +28,27 @@ use crate::mca::{self, RStrategy};
 use crate::model::Params;
 use crate::rng::Pcg64;
 use crate::runtime::{ForwardOutput, HostValue, ModelInfo};
-use crate::tensor::{self, Tensor};
+use crate::tensor::{self, kernel, Tensor};
 use crate::tokenizer::PAD_ID;
 use crate::util::threadpool;
+
+pub(crate) use crate::tensor::kernel::{gelu, gelu_grad};
 
 /// Attention-encoding mode of a forward pass.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AttnMode {
+    /// Exact value encoding: the plain `X W_v` product.
     Exact,
+    /// Monte-Carlo value encoding (paper Eq. 5/6/9).
     Mca,
 }
 
 /// Validated, backend-native form of a [`crate::runtime::ForwardSpec`].
 #[derive(Debug, Clone)]
 pub struct ForwardCfg {
+    /// exact or Monte-Carlo value encoding
     pub mode: AttnMode,
+    /// importance pooling for the Eq. 9 sample counts
     pub r_strategy: RStrategy,
     /// uniform ablation of the Eq. 6 sampling distribution
     pub uniform_p: bool,
@@ -46,6 +57,7 @@ pub struct ForwardCfg {
 }
 
 impl ForwardCfg {
+    /// Validate the string-typed knobs of a `ForwardSpec` into a config.
     pub fn parse(
         mode: &str,
         r_strategy: &str,
@@ -201,28 +213,41 @@ pub(crate) fn layer_norm(x: &Tensor, scale: &[f32], bias: &[f32]) -> Tensor {
     layer_norm_stats(x, scale, bias).0
 }
 
-/// tanh-approximate GELU (jax.nn.gelu approximate=True).
-pub(crate) fn gelu(x: f32) -> f32 {
-    const C: f32 = 0.797_884_6; // sqrt(2/pi)
-    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
-}
-
-/// d/dx of the tanh-approximate GELU.
-pub(crate) fn gelu_grad(x: f32) -> f32 {
-    const C: f32 = 0.797_884_6;
-    let u = C * (x + 0.044715 * x * x * x);
-    let t = u.tanh();
-    let du = C * (1.0 + 3.0 * 0.044715 * x * x);
-    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
-}
-
 /// Matmul in the configured compute dtype (operands rounded to bf16 when
-/// `bf16`, accumulation always f32 — mirrors the Python `mm`).
-pub(crate) fn mm(a: &Tensor, b: &Tensor, bf16: bool) -> Tensor {
+/// `bf16`, accumulation always f32 — mirrors the Python `mm`). Runs on
+/// the blocked kernel layer with `threads`-way panel splitting.
+pub(crate) fn mm(a: &Tensor, b: &Tensor, bf16: bool, threads: usize) -> Tensor {
     if bf16 {
-        a.to_bf16().matmul(&b.to_bf16()).expect("shape-checked matmul")
+        kernel::matmul(&a.to_bf16(), &b.to_bf16(), threads).expect("shape-checked matmul")
     } else {
-        a.matmul(b).expect("shape-checked matmul")
+        kernel::matmul(a, b, threads).expect("shape-checked matmul")
+    }
+}
+
+/// `a @ b + bias` with the row-broadcast bias fused into the kernel
+/// epilogue (the bias stays f32 even under bf16, as the unfused path did).
+pub(crate) fn mm_bias(a: &Tensor, b: &Tensor, bias: &[f32], bf16: bool, threads: usize) -> Tensor {
+    if bf16 {
+        kernel::matmul_bias(&a.to_bf16(), &b.to_bf16(), bias, threads).expect("shape-checked mm")
+    } else {
+        kernel::matmul_bias(a, b, bias, threads).expect("shape-checked mm")
+    }
+}
+
+/// `gelu(a @ b + bias)` — the FFN up-projection with bias and activation
+/// fused into the kernel epilogue.
+pub(crate) fn mm_bias_gelu(
+    a: &Tensor,
+    b: &Tensor,
+    bias: &[f32],
+    bf16: bool,
+    threads: usize,
+) -> Tensor {
+    if bf16 {
+        kernel::matmul_bias_gelu(&a.to_bf16(), &b.to_bf16(), bias, threads)
+            .expect("shape-checked mm")
+    } else {
+        kernel::matmul_bias_gelu(a, b, bias, threads).expect("shape-checked mm")
     }
 }
 
@@ -244,7 +269,8 @@ const NEG_BIAS: f32 = -1e9;
 
 /// softmax(Q_h K_h^T / sqrt(dh) + bias) for every head. Returns the
 /// per-head attention matrices plus q/k (with bias added), which the
-/// backward pass reuses.
+/// backward pass reuses. The scale, visibility mask and row softmax are
+/// fused into the score GEMM's epilogue ([`kernel::attn_scores_softmax`]).
 pub(crate) fn attention_probs(
     xn: &Tensor,
     lw: &LayerWeights,
@@ -252,31 +278,22 @@ pub(crate) fn attention_probs(
     window: Option<usize>,
     n_heads: usize,
     bf16: bool,
+    threads: usize,
 ) -> (Vec<Tensor>, Tensor, Tensor) {
-    let n = mask.len();
     let d = xn.shape()[1];
     let dh = d / n_heads;
-    let mut q = mm(xn, &lw.wq, bf16);
-    q.add_row_inplace(&lw.bq);
-    let mut k = mm(xn, &lw.wk, bf16);
-    k.add_row_inplace(&lw.bk);
+    let q = mm_bias(xn, &lw.wq, &lw.bq, bf16, threads);
+    let k = mm_bias(xn, &lw.wk, &lw.bk, bf16, threads);
 
     let inv = 1.0 / (dh as f32).sqrt();
+    let allowed = |qi: usize, ki: usize| attn_allowed(mask, window, qi, ki);
     let mut attn = Vec::with_capacity(n_heads);
     for hh in 0..n_heads {
         let qh = q.col_block(hh * dh, dh);
         let kh = k.col_block(hh * dh, dh);
-        let mut scores = qh.matmul_nt(&kh).expect("head shapes match");
-        for qi in 0..n {
-            let row = scores.row_mut(qi);
-            for (ki, s) in row.iter_mut().enumerate() {
-                *s *= inv;
-                if !attn_allowed(mask, window, qi, ki) {
-                    *s += NEG_BIAS;
-                }
-            }
-        }
-        attn.push(scores.softmax_rows().expect("rank-2 scores"));
+        let probs = kernel::attn_scores_softmax(&qh, &kh, inv, NEG_BIAS, &allowed, threads)
+            .expect("head shapes match");
+        attn.push(probs);
     }
     (attn, q, k)
 }
@@ -339,6 +356,8 @@ pub(crate) fn embed(model: &ModelInfo, w: &Weights, ids: &[i32]) -> (Tensor, Vec
 }
 
 /// One sequence through the encoder. Returns (logits, Σr_i, n_eff).
+/// `threads` is the kernel-level panel-split budget for this sequence's
+/// matrix products (1 when the batch itself saturates the worker pool).
 pub(crate) fn forward_one(
     model: &ModelInfo,
     w: &Weights,
@@ -346,6 +365,7 @@ pub(crate) fn forward_one(
     alpha: f32,
     mca_ctx: Option<&[McaLayerCtx]>,
     cfg: &ForwardCfg,
+    threads: usize,
 ) -> (Vec<f32>, f32, f32) {
     let d = model.d_model;
     let h = model.n_heads;
@@ -357,7 +377,7 @@ pub(crate) fn forward_one(
     let mut r_sum = 0u64;
     for (li, lw) in w.layers.iter().enumerate() {
         let xn = layer_norm(&x, &lw.ln1_scale, &lw.ln1_bias);
-        let (attn, _q, _k) = attention_probs(&xn, lw, &mask, model.window, h, cfg.bf16);
+        let (attn, _q, _k) = attention_probs(&xn, lw, &mask, model.window, h, cfg.bf16, threads);
 
         // Value encoding: the operation MCA approximates (paper §Background).
         let mut v = match (cfg.mode, mca_ctx) {
@@ -391,37 +411,31 @@ pub(crate) fn forward_one(
                 }
                 est
             }
-            _ => mm(&xn, &lw.wv, cfg.bf16),
+            _ => mm(&xn, &lw.wv, cfg.bf16, threads),
         };
         v.add_row_inplace(&lw.bv);
 
-        // Weighted sum + output projection, head by head.
+        // Weighted sum + output projection, head by head. (The weighted
+        // sum stays f32 even under bf16, matching the Python model.)
         let mut ctx_m = Tensor::zeros(&[n, d]);
         for hh in 0..h {
             let vh = v.col_block(hh * dh, dh);
-            let ch = attn[hh].matmul(&vh).expect("attn @ v_h");
+            let ch = kernel::matmul(&attn[hh], &vh, threads).expect("attn @ v_h");
             ctx_m.add_col_block(hh * dh, &ch);
         }
-        let mut proj = mm(&ctx_m, &lw.wo, cfg.bf16);
-        proj.add_row_inplace(&lw.bo);
+        let proj = mm_bias(&ctx_m, &lw.wo, &lw.bo, cfg.bf16, threads);
         x.add_inplace(&proj);
 
-        // FFN block.
+        // FFN block: bias + GELU fused into the up-projection epilogue.
         let xn2 = layer_norm(&x, &lw.ln2_scale, &lw.ln2_bias);
-        let mut hmid = mm(&xn2, &lw.w1, cfg.bf16);
-        hmid.add_row_inplace(&lw.b1);
-        for g in hmid.data_mut() {
-            *g = gelu(*g);
-        }
-        let mut ff = mm(&hmid, &lw.w2, cfg.bf16);
-        ff.add_row_inplace(&lw.b2);
+        let hmid = mm_bias_gelu(&xn2, &lw.w1, &lw.b1, cfg.bf16, threads);
+        let ff = mm_bias(&hmid, &lw.w2, &lw.b2, cfg.bf16, threads);
         x.add_inplace(&ff);
     }
 
     let xf = layer_norm(&x, &w.lnf_scale, &w.lnf_bias);
     let cls = Tensor::new(&[1, d], xf.row(0).to_vec()).expect("cls row");
-    let mut logits = mm(&cls, &w.head_w, cfg.bf16);
-    logits.add_row_inplace(&w.head_b);
+    let logits = mm_bias(&cls, &w.head_w, &w.head_b, cfg.bf16, 1);
     (logits.into_data(), r_sum as f32, n_eff as f32)
 }
 
@@ -451,8 +465,16 @@ pub fn forward_batch(
     };
 
     let rows: Vec<Vec<i32>> = ids.chunks_exact(seq).map(|c| c.to_vec()).collect();
-    let results = threadpool::parallel_map(rows, workers, |row: &Vec<i32>| {
-        forward_one(model, &w, row, alpha, mca_ctx.as_deref(), cfg)
+    // Split the worker budget between batch fan-out and kernel-level
+    // panel parallelism: a full batch keeps one thread per sequence
+    // (kernels run single-threaded), while a small batch — the serving
+    // pool's common case after `open_backend_sized` divides the host
+    // cores — hands its spare threads down to the GEMM panel splitter.
+    // Either way results are bit-identical for any worker count.
+    let fanout = workers.max(1).min(rows.len().max(1));
+    let intra = (workers.max(1) / fanout).max(1);
+    let results = threadpool::parallel_map(rows, fanout, |row: &Vec<i32>| {
+        forward_one(model, &w, row, alpha, mca_ctx.as_deref(), cfg, intra)
     });
 
     let ncl = model.n_classes;
@@ -566,7 +588,7 @@ mod tests {
         let w = Weights::unpack(&m, &p).unwrap();
         let (x, _) = embed(&m, &w, &[1, 5, 6, 7, 8, 2]);
         let xn = layer_norm(&x, &w.layers[0].ln1_scale, &w.layers[0].ln1_bias);
-        let (attn, _, _) = attention_probs(&xn, &w.layers[0], &mask, m.window, 2, false);
+        let (attn, _, _) = attention_probs(&xn, &w.layers[0], &mask, m.window, 2, false, 1);
         for head in &attn {
             // query 3 cannot see key 5 (|3-5| > 1, neither is CLS)
             assert!(head.at(&[3, 5]) < 1e-6);

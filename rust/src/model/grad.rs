@@ -17,7 +17,7 @@ use super::forward::{
 };
 use crate::data::TaskKind;
 use crate::runtime::{HostValue, ModelInfo, TrainState};
-use crate::tensor::{self, Tensor};
+use crate::tensor::{kernel, Tensor};
 use crate::util::threadpool;
 
 // ---------------------------------------------------------------------------
@@ -68,10 +68,10 @@ impl Grads {
 // ---------------------------------------------------------------------------
 
 /// acc += A^T @ B, flattened row-major (m,n); A (r,m), B (r,n).
-/// (One kernel for both the weight-gradient accumulators and
-/// `Tensor::matmul_tn` — see `tensor::accumulate_tn`.)
+/// Runs on the blocked kernel layer (`tensor::kernel::matmul_tn_acc`),
+/// which is bit-identical to the naive `tensor::accumulate_tn` loop.
 fn add_tn(a: &Tensor, b: &Tensor, acc: &mut [f32]) {
-    tensor::accumulate_tn(a, b, acc);
+    kernel::matmul_tn_acc(a, b, acc, 1);
 }
 
 /// acc += column sums of T (the bias gradient).
@@ -174,8 +174,8 @@ fn example_loss_grad(
     let mut caches: Vec<LayerCache> = Vec::with_capacity(model.n_layers);
     for lw in &w.layers {
         let (xn, mu1, istd1) = layer_norm_stats(&x, &lw.ln1_scale, &lw.ln1_bias);
-        let (attn, q, k) = attention_probs(&xn, lw, &mask, model.window, h, false);
-        let mut v = mm(&xn, &lw.wv, false);
+        let (attn, q, k) = attention_probs(&xn, lw, &mask, model.window, h, false, 1);
+        let mut v = mm(&xn, &lw.wv, false, 1);
         v.add_row_inplace(&lw.bv);
         let mut ctx_m = Tensor::zeros(&[n, d]);
         for hh in 0..h {
@@ -183,19 +183,19 @@ fn example_loss_grad(
             let ch = attn[hh].matmul(&vh).expect("attn @ v_h");
             ctx_m.add_col_block(hh * dh, &ch);
         }
-        let mut proj = mm(&ctx_m, &lw.wo, false);
+        let mut proj = mm(&ctx_m, &lw.wo, false, 1);
         proj.add_row_inplace(&lw.bo);
         let x_in = x;
         let mut x_attn = x_in.clone();
         x_attn.add_inplace(&proj);
         let (xn2, mu2, istd2) = layer_norm_stats(&x_attn, &lw.ln2_scale, &lw.ln2_bias);
-        let mut hpre = mm(&xn2, &lw.w1, false);
+        let mut hpre = mm(&xn2, &lw.w1, false, 1);
         hpre.add_row_inplace(&lw.b1);
         let mut hact = hpre.clone();
         for a in hact.data_mut() {
             *a = gelu(*a);
         }
-        let mut ff = mm(&hact, &lw.w2, false);
+        let mut ff = mm(&hact, &lw.w2, false, 1);
         ff.add_row_inplace(&lw.b2);
         let mut x_out = x_attn.clone();
         x_out.add_inplace(&ff);

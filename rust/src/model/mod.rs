@@ -93,6 +93,7 @@ pub fn builtin_model(name: &str) -> Option<ModelInfo> {
 /// executable), plus optimizer state when training.
 #[derive(Debug, Clone)]
 pub struct Params {
+    /// one tensor per `param_spec` entry, in layout order
     pub values: Vec<HostValue>,
 }
 
@@ -139,10 +140,12 @@ impl Params {
         }
     }
 
+    /// Write the checkpoint as an `MCAG` container.
     pub fn save(&self, path: &Path) -> Result<()> {
         write_mcag(path, &self.values)
     }
 
+    /// Load a checkpoint and validate it against the model's layout.
     pub fn load(path: &Path, model: &ModelInfo) -> Result<Params> {
         let values = read_mcag(path)?;
         if values.len() != model.param_spec.len() {

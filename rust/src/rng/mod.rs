@@ -17,10 +17,12 @@ pub struct Pcg64 {
 const PCG_MULT: u128 = 0x2360ED051FC65DA44385DF649FCCF645;
 
 impl Pcg64 {
+    /// Generator on the default stream.
     pub fn new(seed: u64) -> Self {
         Self::with_stream(seed, 0xDA3E39CB94B95BDB)
     }
 
+    /// Generator on an explicit stream (independent sequences per stream).
     pub fn with_stream(seed: u64, stream: u64) -> Self {
         let mut rng = Pcg64 {
             state: 0,
@@ -37,6 +39,7 @@ impl Pcg64 {
         Pcg64::with_stream(self.gen_u64() ^ tag, tag.wrapping_mul(0x9E3779B97F4A7C15) | 1)
     }
 
+    /// Next uniform u64.
     pub fn gen_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
         let rot = (self.state >> 122) as u32;
@@ -44,6 +47,7 @@ impl Pcg64 {
         xored.rotate_right(rot)
     }
 
+    /// Next uniform u32 (high bits of `gen_u64`).
     pub fn gen_u32(&mut self) -> u32 {
         (self.gen_u64() >> 32) as u32
     }
@@ -66,6 +70,7 @@ impl Pcg64 {
         lo + (m >> 64) as u64
     }
 
+    /// Uniform usize in [lo, hi) without modulo bias.
     pub fn gen_range(&mut self, lo: usize, hi: usize) -> usize {
         self.gen_range_u64(lo as u64, hi as u64) as usize
     }
@@ -144,14 +149,17 @@ impl AliasTable {
         AliasTable { prob, alias }
     }
 
+    /// Number of categories.
     pub fn len(&self) -> usize {
         self.prob.len()
     }
 
+    /// Whether the table has no categories.
     pub fn is_empty(&self) -> bool {
         self.prob.is_empty()
     }
 
+    /// Draw one category index in O(1).
     pub fn sample(&self, rng: &mut Pcg64) -> usize {
         let i = rng.gen_range(0, self.prob.len());
         if rng.gen_f64() < self.prob[i] {
@@ -161,6 +169,7 @@ impl AliasTable {
         }
     }
 
+    /// Draw `n` i.i.d. category indices.
     pub fn sample_n(&self, rng: &mut Pcg64, n: usize) -> Vec<usize> {
         (0..n).map(|_| self.sample(rng)).collect()
     }

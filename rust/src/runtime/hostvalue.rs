@@ -13,30 +13,55 @@ use anyhow::{bail, Context, Result};
 
 use super::manifest::Dtype;
 
+/// A shape-tagged host tensor (Send + Clone): the currency of the
+/// [`super::Backend`] trait, checkpoints and golden files.
 #[derive(Debug, Clone, PartialEq)]
 pub enum HostValue {
-    F32 { shape: Vec<usize>, data: Vec<f32> },
-    I32 { shape: Vec<usize>, data: Vec<i32> },
-    U32 { shape: Vec<usize>, data: Vec<u32> },
+    /// f32 tensor
+    F32 {
+        /// row-major shape
+        shape: Vec<usize>,
+        /// flat row-major elements
+        data: Vec<f32>,
+    },
+    /// i32 tensor (token ids, class labels)
+    I32 {
+        /// row-major shape
+        shape: Vec<usize>,
+        /// flat row-major elements
+        data: Vec<i32>,
+    },
+    /// u32 tensor (seeds, step counters)
+    U32 {
+        /// row-major shape
+        shape: Vec<usize>,
+        /// flat row-major elements
+        data: Vec<u32>,
+    },
 }
 
 impl HostValue {
+    /// Rank-0 f32 scalar.
     pub fn scalar_f32(x: f32) -> HostValue {
         HostValue::F32 { shape: vec![], data: vec![x] }
     }
 
+    /// Rank-0 u32 scalar.
     pub fn scalar_u32(x: u32) -> HostValue {
         HostValue::U32 { shape: vec![], data: vec![x] }
     }
 
+    /// Rank-0 i32 scalar.
     pub fn scalar_i32(x: i32) -> HostValue {
         HostValue::I32 { shape: vec![], data: vec![x] }
     }
 
+    /// All-zero f32 tensor of the given shape.
     pub fn zeros_f32(shape: &[usize]) -> HostValue {
         HostValue::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
     }
 
+    /// Element dtype tag.
     pub fn dtype(&self) -> Dtype {
         match self {
             HostValue::F32 { .. } => Dtype::F32,
@@ -45,12 +70,14 @@ impl HostValue {
         }
     }
 
+    /// The tensor's shape.
     pub fn shape(&self) -> &[usize] {
         match self {
             HostValue::F32 { shape, .. } | HostValue::I32 { shape, .. } | HostValue::U32 { shape, .. } => shape,
         }
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         match self {
             HostValue::F32 { data, .. } => data.len(),
@@ -59,10 +86,12 @@ impl HostValue {
         }
     }
 
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Borrow the elements as f32 (errors on other dtypes).
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             HostValue::F32 { data, .. } => Ok(data),
@@ -70,6 +99,7 @@ impl HostValue {
         }
     }
 
+    /// Borrow the elements as i32 (errors on other dtypes).
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             HostValue::I32 { data, .. } => Ok(data),
@@ -77,6 +107,7 @@ impl HostValue {
         }
     }
 
+    /// The single element of a rank-0/length-1 f32 tensor.
     pub fn scalar_value_f32(&self) -> Result<f32> {
         let d = self.as_f32()?;
         if d.len() != 1 {
@@ -87,6 +118,7 @@ impl HostValue {
 
     // -- xla Literal bridge (executor thread only; pjrt builds) ----------
 
+    /// Convert to an `xla::Literal` (executor thread only).
     #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
@@ -98,6 +130,7 @@ impl HostValue {
         Ok(lit.reshape(&dims)?)
     }
 
+    /// Convert from an `xla::Literal` (executor thread only).
     #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<HostValue> {
         let shape = lit.array_shape()?;
@@ -120,6 +153,7 @@ impl HostValue {
 
 const MAGIC: &[u8; 4] = b"MCAG";
 
+/// Write a tensor list to an `MCAG` container (creates parent dirs).
 pub fn write_mcag(path: &Path, tensors: &[HostValue]) -> Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
@@ -158,6 +192,7 @@ pub fn write_mcag(path: &Path, tensors: &[HostValue]) -> Result<()> {
     Ok(())
 }
 
+/// Read a tensor list back from an `MCAG` container.
 pub fn read_mcag(path: &Path) -> Result<Vec<HostValue>> {
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,

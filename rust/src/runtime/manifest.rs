@@ -12,12 +12,16 @@ use crate::util::json::Json;
 /// Element dtype of an executable input/output.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dtype {
+    /// 32-bit float
     F32,
+    /// 32-bit signed integer
     I32,
+    /// 32-bit unsigned integer
     U32,
 }
 
 impl Dtype {
+    /// Parse the manifest encoding `"f32" | "i32" | "u32"`.
     pub fn parse(s: &str) -> Result<Dtype> {
         Ok(match s {
             "f32" => Dtype::F32,
@@ -34,22 +38,34 @@ pub struct IoSpec {
     /// Role: "param", "m", "v", "ids", "alpha", "seed", "step", "labels",
     /// "lr", "logits", "r_sum", "n_eff", "loss".
     pub role: String,
+    /// parameter/tensor name (inputs only; outputs reuse the role)
     pub name: String,
+    /// declared shape
     pub shape: Vec<usize>,
+    /// declared element dtype
     pub dtype: Dtype,
 }
 
 /// Static model architecture info (mirrors python ModelConfig).
 #[derive(Debug, Clone)]
 pub struct ModelInfo {
+    /// model name (inventory key)
     pub name: String,
+    /// vocabulary size
     pub vocab: usize,
+    /// hidden width
     pub d_model: usize,
+    /// attention heads per layer
     pub n_heads: usize,
+    /// encoder layers
     pub n_layers: usize,
+    /// FFN inner width
     pub d_ff: usize,
+    /// maximum sequence length (positional table size)
     pub max_len: usize,
+    /// classifier head width
     pub n_classes: usize,
+    /// half-width of the attention band (None = full attention)
     pub window: Option<usize>,
     /// Ordered (name, shape) parameter layout — checkpoint + feed order.
     pub param_spec: Vec<(String, Vec<usize>)>,
@@ -58,31 +74,49 @@ pub struct ModelInfo {
 /// One AOT-compiled artifact.
 #[derive(Debug, Clone)]
 pub struct ArtifactInfo {
+    /// artifact name (manifest key)
     pub name: String,
+    /// HLO text file relative to the artifacts directory
     pub file: String,
     /// "forward" | "train_cls" | "train_reg"
     pub kind: String,
+    /// model this artifact was lowered for
     pub model: String,
+    /// compiled batch size
     pub batch: usize,
+    /// compiled sequence length
     pub seq: usize,
     /// "exact" | "mca"
     pub mode: String,
     /// "jnp" | "pallas"
     pub kernel: String,
+    /// importance pooling for Eq. 9: "max" | "mean" | "median"
     pub r_strategy: String,
+    /// sampling distribution for Eq. 6: "norm" | "uniform"
     pub p_strategy: String,
+    /// "f32" | "bf16"
     pub compute_dtype: String,
+    /// number of leading parameter inputs
     pub n_params: usize,
+    /// declared inputs, feed order
     pub inputs: Vec<IoSpec>,
+    /// declared outputs, fetch order
     pub outputs: Vec<IoSpec>,
 }
 
+/// The parsed `artifacts/manifest.json`: model inventory, artifact
+/// inventory and the special-token ids the tokenizer must agree on.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// model architecture inventory, by name
     pub models: BTreeMap<String, ModelInfo>,
+    /// compiled artifact inventory, by name
     pub artifacts: BTreeMap<String, ArtifactInfo>,
+    /// padding token id (must match `tokenizer::PAD_ID`)
     pub pad_id: i32,
+    /// CLS token id
     pub cls_id: i32,
+    /// SEP token id
     pub sep_id: i32,
 }
 
@@ -112,6 +146,7 @@ fn parse_io(row: &Json, with_name: bool) -> Result<IoSpec> {
 }
 
 impl Manifest {
+    /// Load and parse `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -119,6 +154,7 @@ impl Manifest {
         Self::parse(&text)
     }
 
+    /// Parse manifest JSON text (format version 1).
     pub fn parse(text: &str) -> Result<Manifest> {
         let j = Json::parse(text)?;
         if j.get("format")?.as_usize()? != 1 {
@@ -204,12 +240,14 @@ impl Manifest {
         })
     }
 
+    /// Look up an artifact by name (error lists it as missing).
     pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
         self.artifacts
             .get(name)
             .with_context(|| format!("artifact {name:?} not in manifest"))
     }
 
+    /// Look up a model by name (error lists it as missing).
     pub fn model(&self, name: &str) -> Result<&ModelInfo> {
         self.models
             .get(name)

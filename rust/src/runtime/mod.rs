@@ -45,6 +45,7 @@ use crate::rng::Pcg64;
 /// backend-independent form of what used to be a PJRT artifact name.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ForwardSpec {
+    /// model name (must be in the backend's inventory)
     pub model: String,
     /// "exact" | "mca"
     pub mode: String,
@@ -80,6 +81,7 @@ impl ForwardSpec {
 pub struct ForwardOutput {
     /// (batch * n_classes) row-major logits
     pub logits: Vec<f32>,
+    /// classifier width (row stride of `logits`)
     pub n_classes: usize,
     /// per-sequence Σ_layers Σ_tokens r_i over real tokens (0 for exact)
     pub r_sum: Vec<f32>,
@@ -91,9 +93,13 @@ pub struct ForwardOutput {
 /// parameters plus Adam moments and the step counter.
 #[derive(Debug, Clone)]
 pub struct TrainState {
+    /// model parameters (flat `param_spec` layout)
     pub params: Params,
+    /// Adam first-moment state, same layout
     pub m: Params,
+    /// Adam second-moment state, same layout
     pub v: Params,
+    /// scalar step counter (f32, counts from 0)
     pub step: HostValue,
 }
 

@@ -4,10 +4,14 @@
 //! tests) work from a clean checkout.
 //!
 //! Forward math lives in [`crate::model::forward`], the train step in
-//! [`crate::model::grad`]; both parallelize across the batch with the
-//! scoped thread pool. Unlike the PJRT backend, any (batch, seq ≤ max_len,
-//! strategy, dtype) combination is accepted — there is no artifact
-//! inventory to consult.
+//! [`crate::model::grad`]; every matrix product runs on the blocked
+//! kernel layer ([`crate::tensor::kernel`]). The `workers` budget set by
+//! [`super::open_backend_sized`] is spent adaptively: a full batch fans
+//! out one sequence per thread, while a small batch (the serving pool's
+//! common case) hands its spare threads down to the kernel's panel
+//! splitter — results are bit-identical either way. Unlike the PJRT
+//! backend, any (batch, seq ≤ max_len, strategy, dtype) combination is
+//! accepted — there is no artifact inventory to consult.
 
 use std::collections::BTreeMap;
 
@@ -22,6 +26,7 @@ use crate::util::threadpool;
 /// Largest batch the native backend advertises for eval sweeps.
 const EVAL_BATCH: usize = 32;
 
+/// The pure-Rust execution backend (see module docs).
 pub struct NativeBackend {
     models: BTreeMap<String, ModelInfo>,
     workers: usize,
@@ -33,6 +38,10 @@ impl NativeBackend {
         Self::with_workers(threadpool::default_workers())
     }
 
+    /// Backend with an explicit thread budget (batch fan-out + kernel
+    /// panel splitting combined never exceed it) — what
+    /// [`super::open_backend_sized`] uses to divide cores among serving
+    /// pool workers.
     pub fn with_workers(workers: usize) -> NativeBackend {
         let models = builtin_models().into_iter().map(|m| (m.name.clone(), m)).collect();
         NativeBackend { models, workers: workers.max(1) }

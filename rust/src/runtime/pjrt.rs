@@ -27,6 +27,7 @@ use crate::model::Params;
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
+    /// the parsed artifact manifest (inventory + special tokens)
     pub manifest: Manifest,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
@@ -66,6 +67,7 @@ impl Runtime {
         Ok(())
     }
 
+    /// Whether an artifact has already been compiled into the cache.
     pub fn is_compiled(&self, name: &str) -> bool {
         self.cache.contains_key(name)
     }

@@ -1,0 +1,774 @@
+//! Blocked, register-tiled f32 compute kernels — the layer that turns the
+//! paper's Eq. 9 FLOP model into measured wall-clock time.
+//!
+//! Every matrix product on the native backend's request path (forward,
+//! backward, and the Monte-Carlo value encode) runs through this module.
+//! The design is the classic BLIS decomposition scaled to this crate's
+//! shapes (d_model = 128, d_ff = 512, sequences ≤ 256):
+//!
+//! * **MC/KC/NC blocking.** Output rows are processed in [`MC`]-row
+//!   panels, the contraction dimension in [`KC`]-element blocks, and
+//!   columns in [`NC`]-column blocks of [`NR`]-wide strips, so the packed
+//!   operands stay L1/L2-resident while they are reused.
+//! * **Panel packing.** B is packed once per call into [`NR`]-wide
+//!   zero-padded strips (`[strip][k][NR]`, contiguous in the micro-kernel's
+//!   walk order); transposed-A operands (the `A^T B` gradient form) are
+//!   packed per panel so the micro-kernel always streams unit-stride.
+//! * **[`MR`]×[`NR`] micro-kernel.** An 8×8 register tile written as
+//!   plain indexed loops over fixed-size arrays so the autovectorizer
+//!   emits SIMD; the micro-tile is runtime-dispatched to an AVX2
+//!   instantiation (`target_feature`) where the CPU has it, so the same
+//!   source compiles to 256-bit vectors without raising the crate's
+//!   baseline target.
+//! * **Fused epilogues.** Bias add, bias + tanh-GELU, and the attention
+//!   `softmax(scale · QKᵀ + mask)` run on each completed row panel while
+//!   it is cache-hot, eliminating the separate full-tensor passes the
+//!   naive path made. The mask predicate is a monomorphized generic, so
+//!   the visibility test inlines into the epilogue loop.
+//! * **Panel-level threading.** Callers pass a thread budget; panels are
+//!   split into contiguous row chunks, which is how the native backend's
+//!   intra-batch parallelism composes with the serving pool's core
+//!   budgeting (`runtime::open_backend_sized` divides the host cores among
+//!   pool workers, and each worker's forward hands its share down here).
+//!
+//! **Bit-exactness contract.** For every output element the products are
+//! accumulated in ascending contraction order starting from 0.0 (partial
+//! KC blocks park the running sum in the output buffer, which is exact),
+//! and zero left-operand elements are skipped exactly where the naive
+//! loops skipped them. The results are therefore bit-identical to the
+//! [`super::reference`] loops — and hence to the MCA estimator's
+//! saturated-token fallback — for any shape and any thread count. The
+//! property tests below assert `==`, not approximate closeness.
+
+use anyhow::{bail, Result};
+
+use super::Tensor;
+
+/// Micro-kernel rows: the register tile is `MR × NR`.
+pub const MR: usize = 8;
+/// Micro-kernel columns (one strip of packed B).
+pub const NR: usize = 8;
+/// Rows per cache panel; also the granularity of the thread split.
+pub const MC: usize = 64;
+/// Contraction block: `MR×KC` of A and `KC×NR` of B stay L1-resident.
+pub const KC: usize = 256;
+/// Columns per B block visited before moving down the panel.
+pub const NC: usize = 128;
+
+/// Never split a GEMM across threads below this many output rows.
+const PAR_MIN_ROWS: usize = 2 * MC;
+/// Never split a GEMM across threads below this many multiply-adds.
+const PAR_MIN_WORK: usize = 1 << 20;
+
+/// Mask type instantiated for the epilogues that have no mask.
+type NoMask = fn(usize, usize) -> bool;
+
+// ---------------------------------------------------------------------------
+// Public entry points
+// ---------------------------------------------------------------------------
+
+/// Validate `a (m,k) @ b (k,n)` operands (`b (n,k)` when `b_trans`);
+/// returns `(m, k, n)`. The one shape-check shared by every entry point.
+fn check_mm(name: &str, a: &Tensor, b: &Tensor, b_trans: bool) -> Result<(usize, usize, usize)> {
+    let (&[m, k1], &[b0, b1]) = (&a.shape()[..], &b.shape()[..]) else {
+        bail!("{name} needs rank-2 operands, got {:?} and {:?}", a.shape(), b.shape());
+    };
+    let (k2, n) = if b_trans { (b1, b0) } else { (b0, b1) };
+    if k1 != k2 {
+        bail!("{name} contraction mismatch: {:?} vs {:?}", a.shape(), b.shape());
+    }
+    Ok((m, k1, n))
+}
+
+/// Validated [`Gemm`] for the fused-bias entry points.
+fn check_mm_bias(
+    name: &str,
+    a: &Tensor,
+    b: &Tensor,
+    bias: &[f32],
+) -> Result<(usize, usize, usize)> {
+    let (m, k, n) = check_mm(name, a, b, false)?;
+    if bias.len() != n {
+        bail!("{name}: bias length {} != {n}", bias.len());
+    }
+    Ok((m, k, n))
+}
+
+/// The standard (non-transposed, zero-skipping, overwriting) GEMM spec.
+fn nn_spec<'a>(a: &'a Tensor, b: &'a Tensor, m: usize, k: usize, n: usize) -> Gemm<'a> {
+    Gemm {
+        m,
+        n,
+        k,
+        a: a.data(),
+        a_trans: false,
+        b: b.data(),
+        b_trans: false,
+        skip_zero_a: true,
+        accumulate: false,
+    }
+}
+
+/// Blocked `(m,k) @ (k,n) -> (m,n)`. Bit-identical to
+/// [`super::reference::matmul`] (ascending-k accumulation, zero elements
+/// of `a` skipped) for any `threads`.
+pub fn matmul(a: &Tensor, b: &Tensor, threads: usize) -> Result<Tensor> {
+    let (m, k, n) = check_mm("matmul", a, b, false)?;
+    let mut out = vec![0.0f32; m * n];
+    gemm_driver(&nn_spec(a, b, m, k, n), &mut out, &Epilogue::<NoMask>::None, threads);
+    Tensor::new(&[m, n], out)
+}
+
+/// Blocked `(m,k) @ (k,n) + bias -> (m,n)` with the row-broadcast bias
+/// add fused into the panel epilogue. Bit-identical to `matmul` followed
+/// by [`Tensor::add_row_inplace`].
+pub fn matmul_bias(a: &Tensor, b: &Tensor, bias: &[f32], threads: usize) -> Result<Tensor> {
+    let (m, k, n) = check_mm_bias("matmul_bias", a, b, bias)?;
+    let mut out = vec![0.0f32; m * n];
+    gemm_driver(&nn_spec(a, b, m, k, n), &mut out, &Epilogue::<NoMask>::Bias(bias), threads);
+    Tensor::new(&[m, n], out)
+}
+
+/// Blocked `gelu((m,k) @ (k,n) + bias) -> (m,n)` — the FFN up-projection
+/// with bias and tanh-GELU fused into the panel epilogue. Bit-identical
+/// to the unfused matmul → bias → [`gelu`] sequence.
+pub fn matmul_bias_gelu(a: &Tensor, b: &Tensor, bias: &[f32], threads: usize) -> Result<Tensor> {
+    let (m, k, n) = check_mm_bias("matmul_bias_gelu", a, b, bias)?;
+    let mut out = vec![0.0f32; m * n];
+    gemm_driver(&nn_spec(a, b, m, k, n), &mut out, &Epilogue::<NoMask>::BiasGelu(bias), threads);
+    Tensor::new(&[m, n], out)
+}
+
+/// Blocked `(m,k) @ (n,k)^T -> (m,n)`. Bit-identical to
+/// [`super::reference::matmul_nt`] (no zero skipping) for any `threads`.
+pub fn matmul_nt(a: &Tensor, b: &Tensor, threads: usize) -> Result<Tensor> {
+    let (m, k, n) = check_mm("matmul_nt", a, b, true)?;
+    let mut out = vec![0.0f32; m * n];
+    let spec = Gemm { b_trans: true, skip_zero_a: false, ..nn_spec(a, b, m, k, n) };
+    gemm_driver(&spec, &mut out, &Epilogue::<NoMask>::None, threads);
+    Tensor::new(&[m, n], out)
+}
+
+/// The attention-score kernel: `softmax(scale · Q Kᵀ + mask)` with the
+/// scale, additive mask and row softmax fused into the panel epilogue.
+///
+/// `q` is `(m, dh)`, `k` is `(n, dh)`; entry `(qi, ki)` gets `mask_bias`
+/// added when `!allowed(qi, ki)` before the row softmax (the native
+/// forward passes the padding/window visibility rule and a large negative
+/// bias). `allowed` is monomorphized — no indirect call in the epilogue
+/// loop. Bit-identical to `matmul_nt` → scale → mask → row softmax.
+pub fn attn_scores_softmax<F>(
+    q: &Tensor,
+    k: &Tensor,
+    scale: f32,
+    mask_bias: f32,
+    allowed: &F,
+    threads: usize,
+) -> Result<Tensor>
+where
+    F: Fn(usize, usize) -> bool + Sync,
+{
+    let (m, kd, n) = check_mm("attn_scores_softmax", q, k, true)?;
+    let mut out = vec![0.0f32; m * n];
+    let spec = Gemm { b_trans: true, skip_zero_a: false, ..nn_spec(q, k, m, kd, n) };
+    let epi = Epilogue::ScaleMaskSoftmax { scale, mask_bias, allowed };
+    gemm_driver(&spec, &mut out, &epi, threads);
+    Tensor::new(&[m, n], out)
+}
+
+/// Blocked `acc += A^T @ B`; A is `(r,m)`, B is `(r,n)`, `acc` a flat
+/// row-major `(m,n)` slice — the weight-gradient accumulator form.
+/// Bit-identical to [`super::reference::accumulate_tn`] (ascending-r
+/// accumulation, zero elements of A skipped) for any `threads`.
+pub fn matmul_tn_acc(a: &Tensor, b: &Tensor, acc: &mut [f32], threads: usize) {
+    let (r1, m) = (a.shape()[0], a.shape()[1]);
+    let (r2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(r1, r2, "matmul_tn_acc contraction mismatch");
+    assert_eq!(acc.len(), m * n, "matmul_tn_acc output size mismatch");
+    let spec = Gemm {
+        m,
+        n,
+        k: r1,
+        a: a.data(),
+        a_trans: true,
+        b: b.data(),
+        b_trans: false,
+        skip_zero_a: true,
+        accumulate: true,
+    };
+    gemm_driver(&spec, acc, &Epilogue::<NoMask>::None, threads);
+}
+
+/// `o += s · w` over the leading `o.len()` elements of `w` — the
+/// single-row AXPY the Monte-Carlo encode is built from.
+pub fn axpy(o: &mut [f32], s: f32, w: &[f32]) {
+    for (x, wv) in o.iter_mut().zip(w) {
+        *x += s * wv;
+    }
+}
+
+/// Four-way batched AXPY: `o += s[0]·w0 + s[1]·w1 + s[2]·w2 + s[3]·w3`,
+/// evaluated left-to-right per element so the accumulation order matches
+/// four sequential [`axpy`] calls bit-for-bit while `o` is loaded and
+/// stored once per element instead of four times. This is the inner loop
+/// of [`crate::mca::mca_encode_pooled`]; its cost is what makes the
+/// encode track Σrᵢ (Eq. 9) in wall-clock time. All `w*` must have at
+/// least `o.len()` elements.
+pub fn axpy4(o: &mut [f32], s: &[f32; 4], w0: &[f32], w1: &[f32], w2: &[f32], w3: &[f32]) {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if is_x86_feature_detected!("avx2") {
+            // SAFETY: reached only when the CPU reports AVX2 support.
+            unsafe { axpy4_avx2(o, s, w0, w1, w2, w3) };
+            return;
+        }
+    }
+    axpy4_impl(o, s, w0, w1, w2, w3);
+}
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy4_avx2(o: &mut [f32], s: &[f32; 4], w0: &[f32], w1: &[f32], w2: &[f32], w3: &[f32]) {
+    axpy4_impl(o, s, w0, w1, w2, w3);
+}
+
+#[inline(always)]
+fn axpy4_impl(o: &mut [f32], s: &[f32; 4], w0: &[f32], w1: &[f32], w2: &[f32], w3: &[f32]) {
+    let d = o.len();
+    let (w0, w1, w2, w3) = (&w0[..d], &w1[..d], &w2[..d], &w3[..d]);
+    for j in 0..d {
+        o[j] = o[j] + s[0] * w0[j] + s[1] * w1[j] + s[2] * w2[j] + s[3] * w3[j];
+    }
+}
+
+/// tanh-approximate GELU (`jax.nn.gelu approximate=True`) — the FFN
+/// activation, also available fused via [`matmul_bias_gelu`].
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// d/dx of the tanh-approximate GELU (used by the backward pass).
+pub fn gelu_grad(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6;
+    let u = C * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    let du = C * (1.0 + 3.0 * 0.044715 * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+/// One GEMM problem: `C = op(A) @ op(B)` with the flags below.
+#[derive(Clone, Copy)]
+struct Gemm<'a> {
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &'a [f32],
+    /// when set, `a` is `(k, m)` row-major and used as `A^T`
+    a_trans: bool,
+    b: &'a [f32],
+    /// when set, `b` is `(n, k)` row-major and used as `B^T`
+    b_trans: bool,
+    /// skip zero elements of A (the naive-loop parity rule for NN/TN)
+    skip_zero_a: bool,
+    /// `c += result` instead of `c = result`
+    accumulate: bool,
+}
+
+/// Operation fused onto each completed row panel while it is cache-hot.
+/// Generic over the mask predicate so it inlines (no dyn dispatch).
+enum Epilogue<'a, F> {
+    /// plain GEMM
+    None,
+    /// `row += bias`
+    Bias(&'a [f32]),
+    /// `row = gelu(row + bias)`
+    BiasGelu(&'a [f32]),
+    /// `row = softmax(scale * row + mask)` (mask adds `mask_bias` where
+    /// `!allowed(query_row, key_col)`)
+    ScaleMaskSoftmax {
+        /// score scale (1/sqrt(dh))
+        scale: f32,
+        /// additive bias for masked entries
+        mask_bias: f32,
+        /// visibility predicate over (query row, key column)
+        allowed: &'a F,
+    },
+}
+
+fn gemm_driver<F>(spec: &Gemm<'_>, c: &mut [f32], epi: &Epilogue<'_, F>, threads: usize)
+where
+    F: Fn(usize, usize) -> bool + Sync,
+{
+    debug_assert_eq!(c.len(), spec.m * spec.n);
+    if spec.m == 0 || spec.n == 0 {
+        return;
+    }
+    if spec.k == 0 {
+        if !spec.accumulate {
+            c.fill(0.0);
+        }
+        apply_epilogue(epi, c, spec.n, 0, 0, spec.m);
+        return;
+    }
+    let pb = pack_b(spec);
+    let work = spec.m * spec.n * spec.k;
+    let eff = if threads <= 1 || spec.m < PAR_MIN_ROWS || work < PAR_MIN_WORK {
+        1
+    } else {
+        threads.min(spec.m / MC).max(1)
+    };
+    if eff <= 1 {
+        gemm_rows(spec, &pb, 0, spec.m, c, epi);
+        return;
+    }
+    // Contiguous row chunks in MC multiples: every output row is computed
+    // by exactly one thread with the same instruction sequence as the
+    // single-threaded path, so the result is bit-identical for any split.
+    let per = (spec.m + eff - 1) / eff;
+    let per = ((per + MC - 1) / MC) * MC;
+    std::thread::scope(|s| {
+        let mut rest = c;
+        let mut start = 0usize;
+        while start < spec.m {
+            let len = per.min(spec.m - start);
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(len * spec.n);
+            rest = tail;
+            let pb_ref = &pb;
+            s.spawn(move || gemm_rows(spec, pb_ref, start, start + len, head, epi));
+            start += len;
+        }
+    });
+}
+
+/// Pack B into NR-wide zero-padded strips: element `(t, jb + jj)` of the
+/// logical B lands at `pb[strip * k * NR + t * NR + jj]`, so the
+/// micro-kernel reads one contiguous `NR`-row per contraction step.
+fn pack_b(spec: &Gemm<'_>) -> Vec<f32> {
+    let (n, k) = (spec.n, spec.k);
+    let n_strips = (n + NR - 1) / NR;
+    let mut pb = vec![0.0f32; n_strips * k * NR];
+    if spec.b_trans {
+        // b is (n, k) row-major; logical B[t][j] = b[j*k + t]
+        for s in 0..n_strips {
+            let jb = s * NR;
+            let nw = NR.min(n - jb);
+            let dst_base = s * k * NR;
+            for jj in 0..nw {
+                let src = &spec.b[(jb + jj) * k..(jb + jj) * k + k];
+                for (t, &v) in src.iter().enumerate() {
+                    pb[dst_base + t * NR + jj] = v;
+                }
+            }
+        }
+    } else {
+        // b is (k, n) row-major
+        for t in 0..k {
+            let src = &spec.b[t * n..(t + 1) * n];
+            for s in 0..n_strips {
+                let jb = s * NR;
+                let nw = NR.min(n - jb);
+                let dst = &mut pb[s * k * NR + t * NR..s * k * NR + t * NR + nw];
+                dst.copy_from_slice(&src[jb..jb + nw]);
+            }
+        }
+    }
+    pb
+}
+
+/// Compute rows `[r0, r1)` of the problem into `c` (whose row 0 is global
+/// row `r0`): MC-row panels × KC contraction blocks × NC column blocks of
+/// NR strips, MR×NR micro-tiles inside. Partial KC sums are parked in `c`
+/// (exact — f32 stores don't round), so per-element accumulation order is
+/// ascending k regardless of blocking.
+fn gemm_rows<F>(
+    spec: &Gemm<'_>,
+    pb: &[f32],
+    r0: usize,
+    r1: usize,
+    c: &mut [f32],
+    epi: &Epilogue<'_, F>,
+) where
+    F: Fn(usize, usize) -> bool + Sync,
+{
+    let (n, k) = (spec.n, spec.k);
+    let mut pa = vec![0.0f32; if spec.a_trans { MC * KC.min(k) } else { 0 }];
+    let empty: &[f32] = &[];
+    let mut i0 = r0;
+    while i0 < r1 {
+        let i1 = (i0 + MC).min(r1);
+        let rows = i1 - i0;
+        let mut k0 = 0usize;
+        while k0 < k {
+            let k1 = (k0 + KC).min(k);
+            let kc = k1 - k0;
+            let first = k0 == 0;
+            if spec.a_trans {
+                // Pack the panel's transposed-A columns contiguously.
+                for i in 0..rows {
+                    for kk in 0..kc {
+                        pa[i * kc + kk] = spec.a[(k0 + kk) * spec.m + (i0 + i)];
+                    }
+                }
+            }
+            let mut j0 = 0usize;
+            while j0 < n {
+                let j1 = (j0 + NC).min(n);
+                let s0 = j0 / NR;
+                let s1 = (j1 + NR - 1) / NR;
+                for s in s0..s1 {
+                    let jb = s * NR;
+                    let nw = NR.min(n - jb);
+                    let strip = &pb[s * k * NR + k0 * NR..s * k * NR + k1 * NR];
+                    let mut ib = 0usize;
+                    while ib < rows {
+                        let mr = MR.min(rows - ib);
+                        // Gather the A row slices for this micro-tile.
+                        let mut ar = [empty; MR];
+                        for (i, slot) in ar.iter_mut().enumerate().take(mr) {
+                            *slot = if spec.a_trans {
+                                &pa[(ib + i) * kc..(ib + i) * kc + kc]
+                            } else {
+                                let base = (i0 + ib + i) * k + k0;
+                                &spec.a[base..base + kc]
+                            };
+                        }
+                        let mut acc = [[0.0f32; NR]; MR];
+                        if spec.accumulate || !first {
+                            for i in 0..mr {
+                                let crow = &c[(i0 - r0 + ib + i) * n + jb..];
+                                acc[i][..nw].copy_from_slice(&crow[..nw]);
+                            }
+                        }
+                        micro_tile(&ar, mr, strip, spec.skip_zero_a, &mut acc);
+                        for i in 0..mr {
+                            let crow = &mut c[(i0 - r0 + ib + i) * n + jb..];
+                            crow[..nw].copy_from_slice(&acc[i][..nw]);
+                        }
+                        ib += mr;
+                    }
+                }
+                j0 = j1;
+            }
+            k0 = k1;
+        }
+        apply_epilogue(epi, c, n, r0, i0 - r0, i1 - r0);
+        i0 = i1;
+    }
+}
+
+/// The MR×NR micro-tile: `acc[i][j] += Σ_kk ar[i][kk] · strip[kk][j]`,
+/// ascending kk, dispatched to the widest instantiation the CPU supports.
+/// The AVX2 path is the same source compiled with 256-bit vectors enabled;
+/// the math is identical (no FMA contraction — Rust never fuses mul+add),
+/// so both paths are bit-identical.
+fn micro_tile(ar: &[&[f32]; MR], mr: usize, strip: &[f32], skip: bool, acc: &mut [[f32; NR]; MR]) {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if is_x86_feature_detected!("avx2") {
+            // SAFETY: reached only when the CPU reports AVX2 support.
+            unsafe { micro_tile_avx2(ar, mr, strip, skip, acc) };
+            return;
+        }
+    }
+    micro_tile_impl(ar, mr, strip, skip, acc);
+}
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn micro_tile_avx2(
+    ar: &[&[f32]; MR],
+    mr: usize,
+    strip: &[f32],
+    skip: bool,
+    acc: &mut [[f32; NR]; MR],
+) {
+    micro_tile_impl(ar, mr, strip, skip, acc);
+}
+
+#[inline(always)]
+fn micro_tile_impl(
+    ar: &[&[f32]; MR],
+    mr: usize,
+    strip: &[f32],
+    skip: bool,
+    acc: &mut [[f32; NR]; MR],
+) {
+    for (kk, brow) in strip.chunks_exact(NR).enumerate() {
+        for i in 0..mr {
+            let av = ar[i][kk];
+            if skip && av == 0.0 {
+                continue;
+            }
+            let a_i = &mut acc[i];
+            for j in 0..NR {
+                a_i[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Apply the fused epilogue to completed local rows `[lr0, lr1)` of `c`;
+/// `chunk_base + local row` is the global (query) row index.
+fn apply_epilogue<F>(
+    epi: &Epilogue<'_, F>,
+    c: &mut [f32],
+    n: usize,
+    chunk_base: usize,
+    lr0: usize,
+    lr1: usize,
+) where
+    F: Fn(usize, usize) -> bool + Sync,
+{
+    match epi {
+        Epilogue::None => {}
+        Epilogue::Bias(bias) => {
+            for i in lr0..lr1 {
+                let row = &mut c[i * n..(i + 1) * n];
+                for (x, b) in row.iter_mut().zip(*bias) {
+                    *x += b;
+                }
+            }
+        }
+        Epilogue::BiasGelu(bias) => {
+            for i in lr0..lr1 {
+                let row = &mut c[i * n..(i + 1) * n];
+                for (x, b) in row.iter_mut().zip(*bias) {
+                    *x = gelu(*x + b);
+                }
+            }
+        }
+        Epilogue::ScaleMaskSoftmax { scale, mask_bias, allowed } => {
+            for i in lr0..lr1 {
+                let qi = chunk_base + i;
+                let row = &mut c[i * n..(i + 1) * n];
+                for (ki, x) in row.iter_mut().enumerate() {
+                    *x *= scale;
+                    if !allowed(qi, ki) {
+                        *x += mask_bias;
+                    }
+                }
+                // Same op order as Tensor::softmax_rows (bit parity).
+                let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut sum = 0.0;
+                for x in row.iter_mut() {
+                    *x = (*x - mx).exp();
+                    sum += *x;
+                }
+                for x in row.iter_mut() {
+                    *x /= sum;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::reference;
+    use crate::util::prop;
+
+    fn rand_tensor(g: &mut prop::Gen, shape: &[usize]) -> Tensor {
+        Tensor::from_fn(shape, |_| g.f32(-2.0..2.0))
+    }
+
+    /// Random tensor with ~25% exact zeros (exercises the skip-zero rule).
+    fn rand_sparse(g: &mut prop::Gen, shape: &[usize]) -> Tensor {
+        Tensor::from_fn(shape, |_| if g.bool() && g.bool() { 0.0 } else { g.f32(-2.0..2.0) })
+    }
+
+    #[test]
+    fn matmul_bit_identical_to_reference_on_ragged_shapes() {
+        prop::check(120, |g| {
+            let (m, k, n) = (g.usize(1..70), g.usize(1..70), g.usize(1..70));
+            let a = rand_sparse(g, &[m, k]);
+            let b = rand_tensor(g, &[k, n]);
+            let want = reference::matmul(&a, &b).unwrap();
+            let got = matmul(&a, &b, 1).unwrap();
+            if got.data() != want.data() {
+                return Err(format!("bit mismatch at ({m},{k},{n})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matmul_nt_bit_identical_to_reference() {
+        prop::check(120, |g| {
+            let (m, k, n) = (g.usize(1..40), g.usize(1..40), g.usize(1..40));
+            let a = rand_tensor(g, &[m, k]);
+            let b = rand_tensor(g, &[n, k]);
+            let want = reference::matmul_nt(&a, &b).unwrap();
+            let got = matmul_nt(&a, &b, 1).unwrap();
+            if got.data() != want.data() {
+                return Err(format!("bit mismatch at ({m},{k},{n})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matmul_tn_acc_bit_identical_to_reference() {
+        prop::check(120, |g| {
+            let (r, m, n) = (g.usize(1..40), g.usize(1..40), g.usize(1..40));
+            let a = rand_sparse(g, &[r, m]);
+            let b = rand_tensor(g, &[r, n]);
+            // Accumulate into a non-zero buffer: parity must hold for +=.
+            let init: Vec<f32> = (0..m * n).map(|_| g.f32(-1.0..1.0)).collect();
+            let mut want = init.clone();
+            reference::accumulate_tn(&a, &b, &mut want);
+            let mut got = init;
+            matmul_tn_acc(&a, &b, &mut got, 1);
+            if got != want {
+                return Err(format!("bit mismatch at ({r},{m},{n})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn multi_kc_block_is_still_bit_identical() {
+        // k > KC exercises the partial-sum parking path.
+        let mut g = prop::Gen::new(7, 0);
+        let k = KC + 37;
+        let a = rand_sparse(&mut g, &[3, k]);
+        let b = rand_tensor(&mut g, &[k, 5]);
+        let want = reference::matmul(&a, &b).unwrap();
+        let got = matmul(&a, &b, 1).unwrap();
+        assert_eq!(got.data(), want.data());
+    }
+
+    #[test]
+    fn threaded_split_is_bit_identical() {
+        // Big enough to clear both parallelism gates.
+        let mut g = prop::Gen::new(11, 0);
+        let (m, k, n) = (4 * MC + 13, 64, 64);
+        let a = rand_sparse(&mut g, &[m, k]);
+        let b = rand_tensor(&mut g, &[k, n]);
+        let single = matmul(&a, &b, 1).unwrap();
+        for threads in [2usize, 3, 8] {
+            let multi = matmul(&a, &b, threads).unwrap();
+            assert_eq!(single.data(), multi.data(), "threads={threads}");
+        }
+        // And against the naive loops.
+        let want = reference::matmul(&a, &b).unwrap();
+        assert_eq!(single.data(), want.data());
+    }
+
+    #[test]
+    fn fused_bias_matches_unfused() {
+        prop::check(60, |g| {
+            let (m, k, n) = (g.usize(1..20), g.usize(1..20), g.usize(1..20));
+            let a = rand_tensor(g, &[m, k]);
+            let b = rand_tensor(g, &[k, n]);
+            let bias: Vec<f32> = (0..n).map(|_| g.f32(-1.0..1.0)).collect();
+            let mut want = matmul(&a, &b, 1).unwrap();
+            want.add_row_inplace(&bias);
+            let got = matmul_bias(&a, &b, &bias, 1).unwrap();
+            if got.data() != want.data() {
+                return Err("fused bias mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_bias_gelu_matches_unfused() {
+        prop::check(60, |g| {
+            let (m, k, n) = (g.usize(1..20), g.usize(1..20), g.usize(1..20));
+            let a = rand_tensor(g, &[m, k]);
+            let b = rand_tensor(g, &[k, n]);
+            let bias: Vec<f32> = (0..n).map(|_| g.f32(-1.0..1.0)).collect();
+            let mut want = matmul(&a, &b, 1).unwrap();
+            want.add_row_inplace(&bias);
+            for x in want.data_mut() {
+                *x = gelu(*x);
+            }
+            let got = matmul_bias_gelu(&a, &b, &bias, 1).unwrap();
+            if got.data() != want.data() {
+                return Err("fused bias+gelu mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_attention_softmax_matches_unfused() {
+        prop::check(60, |g| {
+            let n = g.usize(2..12);
+            let dh = g.usize(1..10);
+            let q = rand_tensor(g, &[n, dh]);
+            let k = rand_tensor(g, &[n, dh]);
+            let scale = 1.0 / (dh as f32).sqrt();
+            // A banded mask like the windowed-attention rule.
+            let w = g.usize(1..4);
+            let allowed = |qi: usize, ki: usize| qi.abs_diff(ki) <= w || qi == 0 || ki == 0;
+            let mut want = matmul_nt(&q, &k, 1).unwrap();
+            for qi in 0..n {
+                let row = want.row_mut(qi);
+                for (ki, x) in row.iter_mut().enumerate() {
+                    *x *= scale;
+                    if !allowed(qi, ki) {
+                        *x += -1e9;
+                    }
+                }
+            }
+            let want = want.softmax_rows().unwrap();
+            let got = attn_scores_softmax(&q, &k, scale, -1e9, &allowed, 1).unwrap();
+            if got.data() != want.data() {
+                return Err("fused softmax mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn axpy4_matches_sequential_axpy() {
+        prop::check(60, |g| {
+            let d = g.usize(1..40);
+            let s = [g.f32(-2.0..2.0), 0.0, g.f32(-2.0..2.0), g.f32(-2.0..2.0)];
+            let rows: Vec<Vec<f32>> =
+                (0..4).map(|_| (0..d).map(|_| g.f32(-2.0..2.0)).collect()).collect();
+            let init: Vec<f32> = (0..d).map(|_| g.f32(-1.0..1.0)).collect();
+            let mut want = init.clone();
+            for (sv, row) in s.iter().zip(&rows) {
+                axpy(&mut want, *sv, row);
+            }
+            let mut got = init;
+            axpy4(&mut got, &s, &rows[0], &rows[1], &rows[2], &rows[3]);
+            if got != want {
+                return Err("axpy4 mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shape_errors_are_reported() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 5]);
+        assert!(matmul(&a, &b, 1).is_err());
+        assert!(matmul_nt(&a, &b, 1).is_err());
+        assert!(matmul_bias(&a, &Tensor::zeros(&[3, 5]), &[0.0; 4], 1).is_err());
+        let never = |_: usize, _: usize| true;
+        assert!(attn_scores_softmax(&a, &b, 1.0, -1e9, &never, 1).is_err());
+    }
+
+    #[test]
+    fn gelu_matches_known_values() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(100.0) - 100.0).abs() < 1e-3);
+        assert!(gelu(-100.0).abs() < 1e-3);
+        // derivative by central difference
+        for x in [-2.0f32, -0.5, 0.0, 0.7, 3.0] {
+            let h = 1e-3f32;
+            let fd = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
+            assert!((fd - gelu_grad(x)).abs() < 1e-3, "x={x}: {fd} vs {}", gelu_grad(x));
+        }
+    }
+}

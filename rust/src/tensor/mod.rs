@@ -1,10 +1,31 @@
-//! Host tensor substrate: a small row-major f32 ndarray with exactly the
-//! operations the host-side oracles, checkpoints and tests need. Device
-//! tensors live in XLA; this type exists so the Rust reference MCA
-//! estimator (rust/src/mca) and the metrics can run without a device.
+//! Host tensor substrate: a small row-major f32 ndarray plus the compute
+//! kernels behind it — DESIGN.md's L3 math layer.
+//!
+//! Three pieces:
+//!
+//! * [`Tensor`] — shape-checked storage with the exact set of operations
+//!   the native backend, the host MCA estimator ([`crate::mca`], paper
+//!   Eq. 5/6/9) and the metrics need.
+//! * [`kernel`] — the blocked, register-tiled kernels every matrix
+//!   product routes through: MC/KC/NC cache blocking, packed panels, an
+//!   8×8 micro-kernel with a runtime-dispatched AVX2 path, fused
+//!   bias/GELU/softmax epilogues, and the batched-AXPY path of the
+//!   Monte-Carlo encode. This is what makes the paper's Eq. 9 cost model
+//!   visible in wall-clock time (see BENCHMARKS.md).
+//! * [`reference`] — the original naive loops, kept as the bit-exactness
+//!   oracle: kernel results are asserted *equal* (not merely close) to
+//!   the reference accumulation order, which is the property that makes
+//!   the MCA estimator's α → 0 limit coincide with the exact baseline.
+
+pub mod kernel;
+pub mod reference;
+
+pub use reference::{accumulate_row_product, accumulate_tn};
 
 use anyhow::{bail, Result};
 
+/// A row-major f32 tensor with explicit shape checks. Rank-2 is the
+/// workhorse; a few helpers exist for rank-1 views of rank-2 data.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
     shape: Vec<usize>,
@@ -12,6 +33,7 @@ pub struct Tensor {
 }
 
 impl Tensor {
+    /// Build a tensor from a shape and row-major data (length-checked).
     pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
         let want: usize = shape.iter().product();
         if want != data.len() {
@@ -20,43 +42,53 @@ impl Tensor {
         Ok(Tensor { shape: shape.to_vec(), data })
     }
 
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Tensor {
         Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
     }
 
+    /// Tensor filled by calling `f` with each flat (row-major) index.
     pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Tensor {
         let n = shape.iter().product();
         Tensor { shape: shape.to_vec(), data: (0..n).map(&mut f).collect() }
     }
 
+    /// The tensor's shape (row-major dimension sizes).
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// The flat row-major element slice.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable flat row-major element slice.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume the tensor, returning its flat data.
     pub fn into_data(self) -> Vec<f32> {
         self.data
     }
 
+    /// Element at a full multi-dimensional index (bounds-asserted).
     pub fn at(&self, idx: &[usize]) -> f32 {
         self.data[self.offset(idx)]
     }
 
+    /// Overwrite the element at a full multi-dimensional index.
     pub fn set(&mut self, idx: &[usize], v: f32) {
         let o = self.offset(idx);
         self.data[o] = v;
@@ -72,46 +104,24 @@ impl Tensor {
         o
     }
 
-    /// Matrix product for rank-2 tensors: (m,k) @ (k,n) -> (m,n).
+    /// Matrix product for rank-2 tensors: (m,k) @ (k,n) -> (m,n). Runs on
+    /// the blocked [`kernel`] layer; bit-identical to
+    /// [`reference::matmul`].
     pub fn matmul(&self, rhs: &Tensor) -> Result<Tensor> {
-        let (&[m, k1], &[k2, n]) = (&self.shape[..], &rhs.shape[..]) else {
-            bail!("matmul needs rank-2 operands, got {:?} @ {:?}", self.shape, rhs.shape);
-        };
-        if k1 != k2 {
-            bail!("matmul contraction mismatch: {:?} @ {:?}", self.shape, rhs.shape);
-        }
-        let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            let a_row = &self.data[i * k1..(i + 1) * k1];
-            accumulate_row_product(a_row, rhs, &mut out[i * n..(i + 1) * n]);
-        }
-        Tensor::new(&[m, n], out)
+        kernel::matmul(self, rhs, 1)
     }
 
-    /// `A @ B^T` for rank-2 tensors: (m,k) @ (n,k) -> (m,n). Both operands
-    /// are walked row-major (dot products of rows), so this is the
-    /// cache-friendly form for attention scores `Q K^T`.
+    /// `A @ B^T` for rank-2 tensors: (m,k) @ (n,k) -> (m,n) — the
+    /// cache-friendly form for attention scores `Q K^T`. Runs on the
+    /// blocked [`kernel`] layer; bit-identical to
+    /// [`reference::matmul_nt`].
     pub fn matmul_nt(&self, rhs: &Tensor) -> Result<Tensor> {
-        let (&[m, k1], &[n, k2]) = (&self.shape[..], &rhs.shape[..]) else {
-            bail!("matmul_nt needs rank-2 operands, got {:?} @ {:?}", self.shape, rhs.shape);
-        };
-        if k1 != k2 {
-            bail!("matmul_nt contraction mismatch: {:?} @ {:?}^T", self.shape, rhs.shape);
-        }
-        let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            let a_row = &self.data[i * k1..(i + 1) * k1];
-            let o_row = &mut out[i * n..(i + 1) * n];
-            for (o, b_row) in o_row.iter_mut().zip(rhs.data.chunks_exact(k1)) {
-                *o = a_row.iter().zip(b_row).map(|(a, b)| a * b).sum();
-            }
-        }
-        Tensor::new(&[m, n], out)
+        kernel::matmul_nt(self, rhs, 1)
     }
 
-    /// `A^T @ B` for rank-2 tensors: (r,m)^T @ (r,n) -> (m,n). This is the
-    /// weight-gradient form `X^T dY`; the contraction dimension is walked
-    /// in the outer loop so both operands stream row-major.
+    /// `A^T @ B` for rank-2 tensors: (r,m)^T @ (r,n) -> (m,n) — the
+    /// weight-gradient form `X^T dY`. Runs on the blocked [`kernel`]
+    /// layer; bit-identical to [`reference::matmul_tn`].
     pub fn matmul_tn(&self, rhs: &Tensor) -> Result<Tensor> {
         let (&[r1, m], &[r2, n]) = (&self.shape[..], &rhs.shape[..]) else {
             bail!("matmul_tn needs rank-2 operands, got {:?}^T @ {:?}", self.shape, rhs.shape);
@@ -120,7 +130,7 @@ impl Tensor {
             bail!("matmul_tn contraction mismatch: {:?}^T @ {:?}", self.shape, rhs.shape);
         }
         let mut out = vec![0.0f32; m * n];
-        accumulate_tn(self, rhs, &mut out);
+        kernel::matmul_tn_acc(self, rhs, &mut out, 1);
         Tensor::new(&[m, n], out)
     }
 
@@ -177,7 +187,8 @@ impl Tensor {
         }
     }
 
-    /// Row-wise softmax for rank-2 tensors.
+    /// Row-wise softmax for rank-2 tensors. The fused attention path
+    /// ([`kernel::attn_scores_softmax`]) reproduces this op order exactly.
     pub fn softmax_rows(&self) -> Result<Tensor> {
         let &[m, n] = &self.shape[..] else {
             bail!("softmax_rows needs rank 2, got {:?}", self.shape);
@@ -209,6 +220,7 @@ impl Tensor {
         self.data[i * n..(i + 1) * n].iter().map(|x| x * x).sum::<f32>().sqrt()
     }
 
+    /// Borrow row i of a rank-2 tensor.
     pub fn row(&self, i: usize) -> &[f32] {
         let n = self.shape[1];
         &self.data[i * n..(i + 1) * n]
@@ -228,49 +240,6 @@ impl Tensor {
             .zip(&other.data)
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
-    }
-}
-
-/// `acc += A^T @ B` into a flat row-major (m,n) slice; A is (r,m), B is
-/// (r,n). The transposed-matmul kernel shared by [`Tensor::matmul_tn`] and
-/// the gradient accumulators in `model::grad` — the contraction dimension
-/// is walked in the outer loop so both operands stream row-major.
-pub fn accumulate_tn(a: &Tensor, b: &Tensor, acc: &mut [f32]) {
-    let (r, m) = (a.shape()[0], a.shape()[1]);
-    let n = b.shape()[1];
-    debug_assert_eq!(b.shape()[0], r);
-    debug_assert_eq!(acc.len(), m * n);
-    for t in 0..r {
-        let a_row = &a.data[t * m..(t + 1) * m];
-        let b_row = &b.data[t * n..(t + 1) * n];
-        for (i, &av) in a_row.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let o_row = &mut acc[i * n..(i + 1) * n];
-            for (o, bv) in o_row.iter_mut().zip(b_row) {
-                *o += av * bv;
-            }
-        }
-    }
-}
-
-/// `out_row += x_row @ W` for one row, skipping zero elements of `x_row`,
-/// accumulating over W's rows in ascending index order. This exact loop is
-/// THE accumulation-order contract shared by [`Tensor::matmul`], the MCA
-/// estimator's saturated-token fallback and the native forward's bf16
-/// recompute: all three must stay bit-identical so the α → 0 limit of the
-/// estimator equals the exact baseline exactly.
-pub fn accumulate_row_product(x_row: &[f32], w: &Tensor, out_row: &mut [f32]) {
-    debug_assert_eq!(x_row.len(), w.shape()[0]);
-    debug_assert_eq!(out_row.len(), w.shape()[1]);
-    for (xv, w_row) in x_row.iter().zip(w.data.chunks_exact(w.shape()[1])) {
-        if *xv == 0.0 {
-            continue;
-        }
-        for (o, b) in out_row.iter_mut().zip(w_row) {
-            *o += xv * b;
-        }
     }
 }
 

@@ -1,0 +1,117 @@
+//! Naive triple-loop reference kernels — the exactness oracle for
+//! [`super::kernel`].
+//!
+//! These are the original scalar loops the native backend ran before the
+//! blocked kernel layer existed. They stay in-tree for two reasons:
+//!
+//! * **Accumulation-order contract.** [`accumulate_row_product`] defines
+//!   THE per-element accumulation order (ascending contraction index,
+//!   zero operands of the left factor skipped) that the MCA estimator's
+//!   saturated-token fallback, the bf16 recompute in the native forward
+//!   and the blocked kernel all reproduce bit-for-bit. That shared order
+//!   is what makes the α → 0 limit of the estimator *equal* the exact
+//!   baseline, not merely approximate it (paper Eq. 5: saturated tokens
+//!   take the exact product).
+//! * **Property-test oracle.** The kernel layer's exactness tests compare
+//!   every blocked/threaded path against these loops across ragged
+//!   shapes; see `tensor::kernel::tests`.
+//!
+//! Nothing on the request path calls these directly — [`crate::tensor::Tensor`]
+//! routes through `kernel` — so they are free to stay simple.
+
+use anyhow::{bail, Result};
+
+use super::Tensor;
+
+/// Naive matrix product for rank-2 tensors: `(m,k) @ (k,n) -> (m,n)`.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (&[m, k1], &[k2, n]) = (&a.shape()[..], &b.shape()[..]) else {
+        bail!("matmul needs rank-2 operands, got {:?} @ {:?}", a.shape(), b.shape());
+    };
+    if k1 != k2 {
+        bail!("matmul contraction mismatch: {:?} @ {:?}", a.shape(), b.shape());
+    }
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let a_row = &a.data()[i * k1..(i + 1) * k1];
+        accumulate_row_product(a_row, b, &mut out[i * n..(i + 1) * n]);
+    }
+    Tensor::new(&[m, n], out)
+}
+
+/// Naive `A @ B^T` for rank-2 tensors: `(m,k) @ (n,k) -> (m,n)`. Both
+/// operands are walked row-major (dot products of rows).
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (&[m, k1], &[n, k2]) = (&a.shape()[..], &b.shape()[..]) else {
+        bail!("matmul_nt needs rank-2 operands, got {:?} @ {:?}", a.shape(), b.shape());
+    };
+    if k1 != k2 {
+        bail!("matmul_nt contraction mismatch: {:?} @ {:?}^T", a.shape(), b.shape());
+    }
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let a_row = &a.data()[i * k1..(i + 1) * k1];
+        let o_row = &mut out[i * n..(i + 1) * n];
+        for (o, b_row) in o_row.iter_mut().zip(b.data().chunks_exact(k1)) {
+            *o = a_row.iter().zip(b_row).map(|(x, y)| x * y).sum();
+        }
+    }
+    Tensor::new(&[m, n], out)
+}
+
+/// Naive `A^T @ B` for rank-2 tensors: `(r,m)^T @ (r,n) -> (m,n)`.
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (&[r1, m], &[r2, n]) = (&a.shape()[..], &b.shape()[..]) else {
+        bail!("matmul_tn needs rank-2 operands, got {:?}^T @ {:?}", a.shape(), b.shape());
+    };
+    if r1 != r2 {
+        bail!("matmul_tn contraction mismatch: {:?}^T @ {:?}", a.shape(), b.shape());
+    }
+    let mut out = vec![0.0f32; m * n];
+    accumulate_tn(a, b, &mut out);
+    Tensor::new(&[m, n], out)
+}
+
+/// `acc += A^T @ B` into a flat row-major (m,n) slice; A is (r,m), B is
+/// (r,n). The contraction dimension is walked in the outer loop so both
+/// operands stream row-major; zero elements of A are skipped. The blocked
+/// kernel (`tensor::kernel::matmul_tn_acc`) reproduces this accumulation
+/// order bit-for-bit.
+pub fn accumulate_tn(a: &Tensor, b: &Tensor, acc: &mut [f32]) {
+    let (r, m) = (a.shape()[0], a.shape()[1]);
+    let n = b.shape()[1];
+    debug_assert_eq!(b.shape()[0], r);
+    debug_assert_eq!(acc.len(), m * n);
+    for t in 0..r {
+        let a_row = &a.data()[t * m..(t + 1) * m];
+        let b_row = &b.data()[t * n..(t + 1) * n];
+        for (i, &av) in a_row.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let o_row = &mut acc[i * n..(i + 1) * n];
+            for (o, bv) in o_row.iter_mut().zip(b_row) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out_row += x_row @ W` for one row, skipping zero elements of `x_row`,
+/// accumulating over W's rows in ascending index order. This exact loop is
+/// THE accumulation-order contract shared by [`Tensor::matmul`], the MCA
+/// estimator's saturated-token fallback and the native forward's bf16
+/// recompute: all three must stay bit-identical so the α → 0 limit of the
+/// estimator equals the exact baseline exactly.
+pub fn accumulate_row_product(x_row: &[f32], w: &Tensor, out_row: &mut [f32]) {
+    debug_assert_eq!(x_row.len(), w.shape()[0]);
+    debug_assert_eq!(out_row.len(), w.shape()[1]);
+    for (xv, w_row) in x_row.iter().zip(w.data().chunks_exact(w.shape()[1])) {
+        if *xv == 0.0 {
+            continue;
+        }
+        for (o, b) in out_row.iter_mut().zip(w_row) {
+            *o += xv * b;
+        }
+    }
+}

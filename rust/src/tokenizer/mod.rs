@@ -9,25 +9,35 @@
 
 use std::collections::HashMap;
 
+/// Padding token id (masked out of attention).
 pub const PAD_ID: i32 = 0;
+/// Classification token id (sequence row 0, pooled by the head).
 pub const CLS_ID: i32 = 1;
+/// Separator token id (pair tasks).
 pub const SEP_ID: i32 = 2;
+/// Unknown-word token id.
 pub const UNK_ID: i32 = 3;
+/// First non-special word id.
 pub const FIRST_WORD_ID: i32 = 4;
 
 /// Word classes of the synthetic vocabulary — the generators use these to
 /// plant learnable structure (grammar patterns, sentiment words, topics).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WordClass {
+    /// surface form `n<i>`
     Noun,
+    /// surface form `v<i>`
     Verb,
+    /// surface form `a<i>`
     Adjective,
+    /// surface form `f<i>`
     Filler,
 }
 
 /// Number of word ids per class; 4 classes * 63 + 4 specials = 256 vocab.
 pub const CLASS_SIZE: i32 = 63;
 
+/// Word class of a token id (None for specials / out of range).
 pub fn class_of(id: i32) -> Option<WordClass> {
     match id {
         _ if id < FIRST_WORD_ID => None,
@@ -54,6 +64,7 @@ pub fn class_base(c: WordClass) -> i32 {
 pub struct Tokenizer {
     word_to_id: HashMap<String, i32>,
     id_to_word: Vec<String>,
+    /// total vocabulary size (specials + word classes)
     pub vocab_size: usize,
 }
 
@@ -64,6 +75,7 @@ impl Default for Tokenizer {
 }
 
 impl Tokenizer {
+    /// Build the fixed synthetic vocabulary (deterministic).
     pub fn new() -> Tokenizer {
         let mut id_to_word = vec!["[PAD]".into(), "[CLS]".into(), "[SEP]".into(), "[UNK]".into()];
         for (prefix, class) in [
@@ -122,6 +134,7 @@ impl Tokenizer {
         ids
     }
 
+    /// Decode ids back to surface forms (PAD dropped, unknowns as [UNK]).
     pub fn decode(&self, ids: &[i32]) -> String {
         ids.iter()
             .filter(|&&i| i != PAD_ID)

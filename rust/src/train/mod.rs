@@ -13,13 +13,18 @@ use crate::model::Params;
 use crate::rng::Pcg64;
 use crate::runtime::{Backend, HostValue, TrainState};
 
+/// Hyperparameters of one training run.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
+    /// optimizer steps
     pub steps: usize,
+    /// peak learning rate (after warmup)
     pub lr: f64,
     /// linear warmup steps
     pub warmup: usize,
+    /// loss-log cadence (steps)
     pub log_every: usize,
+    /// data-order / init seed
     pub seed: u64,
 }
 
@@ -31,8 +36,11 @@ impl Default for TrainConfig {
 
 /// Result of a training run.
 pub struct TrainOutcome {
+    /// fine-tuned parameters
     pub params: Params,
+    /// sampled (step, loss) trajectory
     pub losses: Vec<(usize, f32)>,
+    /// loss at the final step
     pub final_loss: f32,
 }
 

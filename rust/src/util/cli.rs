@@ -24,6 +24,7 @@ pub struct Args {
 }
 
 impl Args {
+    /// Empty argument set (declare options with `opt`/`req`/`flag`).
     pub fn new() -> Self {
         Self::default()
     }
@@ -61,6 +62,7 @@ impl Args {
         self
     }
 
+    /// Generated usage text for the subcommand.
     pub fn usage(&self, cmd: &str) -> String {
         let mut s = format!("usage: mca {cmd} [options]\n");
         for spec in &self.specs {
@@ -118,6 +120,7 @@ impl Args {
         Ok(self)
     }
 
+    /// Value of an option (its default when unset; panics if undeclared).
     pub fn get(&self, name: &str) -> String {
         if let Some(v) = self.values.get(name) {
             return v.clone();
@@ -135,24 +138,28 @@ impl Args {
         panic!("option --{name} was never declared");
     }
 
+    /// Parse an option value as usize.
     pub fn get_usize(&self, name: &str) -> Result<usize> {
         self.get(name)
             .parse()
             .map_err(|e| anyhow!("--{name}: {e}"))
     }
 
+    /// Parse an option value as u64.
     pub fn get_u64(&self, name: &str) -> Result<u64> {
         self.get(name)
             .parse()
             .map_err(|e| anyhow!("--{name}: {e}"))
     }
 
+    /// Parse an option value as f64.
     pub fn get_f64(&self, name: &str) -> Result<f64> {
         self.get(name)
             .parse()
             .map_err(|e| anyhow!("--{name}: {e}"))
     }
 
+    /// Whether a boolean flag was passed.
     pub fn get_flag(&self, name: &str) -> bool {
         self.get(name) == "true"
     }
@@ -175,6 +182,7 @@ impl Args {
             .collect()
     }
 
+    /// Positional (non-option) arguments, in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }

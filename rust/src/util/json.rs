@@ -15,15 +15,22 @@ use anyhow::{anyhow, bail, Result};
 /// integers small enough for exact f64 representation).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// any JSON number
     Num(f64),
+    /// string
     Str(String),
+    /// array
     Arr(Vec<Json>),
+    /// object (sorted keys — deterministic output)
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();
@@ -36,6 +43,7 @@ impl Json {
     }
 
     // -- typed accessors -------------------------------------------------
+    /// Object field lookup (error when missing or not an object).
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
             Json::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key {key:?}")),
@@ -43,6 +51,7 @@ impl Json {
         }
     }
 
+    /// Optional object field lookup.
     pub fn opt(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -50,6 +59,7 @@ impl Json {
         }
     }
 
+    /// Borrow as a string (error otherwise).
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -57,6 +67,7 @@ impl Json {
         }
     }
 
+    /// Read as a number (error otherwise).
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -64,6 +75,7 @@ impl Json {
         }
     }
 
+    /// Read as a non-negative integer (error otherwise).
     pub fn as_usize(&self) -> Result<usize> {
         let n = self.as_f64()?;
         if n < 0.0 || n.fract() != 0.0 {
@@ -72,6 +84,7 @@ impl Json {
         Ok(n as usize)
     }
 
+    /// Borrow as an array (error otherwise).
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -79,6 +92,7 @@ impl Json {
         }
     }
 
+    /// Borrow as an object map (error otherwise).
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -86,11 +100,13 @@ impl Json {
         }
     }
 
+    /// Whether this is JSON `null`.
     pub fn is_null(&self) -> bool {
         matches!(self, Json::Null)
     }
 
     // -- writer ----------------------------------------------------------
+    /// Serialize back to compact JSON text.
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);
@@ -321,14 +337,17 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Shorthand number value.
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
 
+/// Shorthand string value.
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }
 
+/// Shorthand array value.
 pub fn arr(v: Vec<Json>) -> Json {
     Json::Arr(v)
 }

@@ -18,39 +18,48 @@ use crate::rng::Pcg64;
 /// Case generator handed to each property invocation.
 pub struct Gen {
     rng: Pcg64,
+    /// index of the current case (for failure reports)
     pub case: u64,
 }
 
 impl Gen {
+    /// Generator for one (seed, case) pair — fully deterministic.
     pub fn new(seed: u64, case: u64) -> Self {
         Gen { rng: Pcg64::new(seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15))), case }
     }
 
+    /// Uniform u64 in `range`.
     pub fn u64(&mut self, range: Range<u64>) -> u64 {
         self.rng.gen_range_u64(range.start, range.end)
     }
 
+    /// Uniform usize in `range`.
     pub fn usize(&mut self, range: Range<usize>) -> usize {
         self.u64(range.start as u64..range.end as u64) as usize
     }
 
+    /// Uniform f32 in `range`.
     pub fn f32(&mut self, range: Range<f32>) -> f32 {
         range.start + self.rng.gen_f32() * (range.end - range.start)
     }
 
+    /// Uniform f64 in `range`.
     pub fn f64(&mut self, range: Range<f64>) -> f64 {
         range.start + self.rng.gen_f64() * (range.end - range.start)
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.gen_u64() & 1 == 1
     }
 
+    /// Vector of uniform f32s with length drawn from `len`.
     pub fn vec_f32(&mut self, len: Range<usize>, vals: Range<f32>) -> Vec<f32> {
         let n = self.usize(len);
         (0..n).map(|_| self.f32(vals.clone())).collect()
     }
 
+    /// Vector of uniform usizes with length drawn from `len`.
     pub fn vec_usize(&mut self, len: Range<usize>, vals: Range<usize>) -> Vec<usize> {
         let n = self.usize(len);
         (0..n).map(|_| self.usize(vals.clone())).collect()

@@ -15,14 +15,17 @@ impl Default for Timer {
 }
 
 impl Timer {
+    /// Start timing now.
     pub fn new() -> Timer {
         Timer { start: Instant::now() }
     }
 
+    /// Time since construction.
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
 
+    /// Time since construction, in milliseconds.
     pub fn elapsed_ms(&self) -> f64 {
         self.start.elapsed().as_secs_f64() * 1e3
     }
@@ -36,14 +39,17 @@ pub struct LatencyStats {
 }
 
 impl LatencyStats {
+    /// Record one latency sample.
     pub fn record(&mut self, d: Duration) {
         self.samples_us.push(d.as_micros() as u64);
     }
 
+    /// Record one latency sample given in milliseconds.
     pub fn record_ms(&mut self, ms: f64) {
         self.samples_us.push((ms * 1e3) as u64);
     }
 
+    /// Number of recorded samples.
     pub fn count(&self) -> usize {
         self.samples_us.len()
     }
@@ -54,6 +60,7 @@ impl LatencyStats {
         self.samples_us.extend_from_slice(&other.samples_us);
     }
 
+    /// Mean latency in milliseconds (0 when empty).
     pub fn mean_ms(&self) -> f64 {
         if self.samples_us.is_empty() {
             return 0.0;
@@ -72,10 +79,12 @@ impl LatencyStats {
         v[rank.clamp(1, v.len()) - 1] as f64 / 1e3
     }
 
+    /// Median latency in milliseconds.
     pub fn p50_ms(&self) -> f64 {
         self.percentile_ms(50.0)
     }
 
+    /// 99th-percentile latency in milliseconds.
     pub fn p99_ms(&self) -> f64 {
         self.percentile_ms(99.0)
     }
