@@ -16,8 +16,8 @@ Two kernels cover the attention hot path:
 
 Both are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
 Mosaic custom-calls, and interpret mode lowers the kernel body to plain HLO
-so the same artifact runs everywhere. Real-TPU tiling estimates live in
-EXPERIMENTS.md §Perf.
+so the same artifact runs everywhere. Measured perf lives in the
+BENCH_*.json artifacts cataloged in BENCHMARKS.md.
 """
 
 from __future__ import annotations

@@ -104,6 +104,9 @@ pub struct Response {
     pub flops_reduction: f64,
     /// Σ_layers Σ_tokens r_i for this sequence (0 in exact mode / shed)
     pub r_sum: f64,
+    /// real (non-PAD) token count of this sequence (0 when shed) — with
+    /// `r_sum`, everything Eq. 9 needs to account this request's FLOPs
+    pub n_eff: usize,
     /// submit-to-response wall clock
     pub latency: Duration,
     /// size of the executed batch this request rode in
@@ -764,7 +767,7 @@ fn dispatcher_loop(
         }
         if d.draining {
             let all_idle = d.idle.len() >= d.alive;
-            let expired = drain_deadline.map_or(false, |t| Instant::now() >= t);
+            let expired = drain_deadline.is_some_and(|t| Instant::now() >= t);
             if (d.queue.is_empty() && all_idle) || expired {
                 break;
             }
@@ -863,7 +866,7 @@ impl Dispatcher {
         let is_budget = p.req.budget.is_some();
         let is_exact_budget = is_budget && p.req.mode == "exact";
         let alpha = p.req.alpha;
-        let was_degraded = p.req.budget.as_ref().map_or(false, |b| b.degraded);
+        let was_degraded = p.req.budget.as_ref().is_some_and(|b| b.degraded);
         self.queued_cost += row_cost(&p.req);
         self.client_depth += 1;
         self.queue.push_back((p, rtx));
@@ -1161,6 +1164,7 @@ fn shed_response(p: &Pending) -> Response {
         logits: Vec::new(),
         flops_reduction: 1.0,
         r_sum: 0.0,
+        n_eff: 0,
         latency: Duration::ZERO,
         batch_size: 0,
         alpha: p.req.alpha,
@@ -1376,12 +1380,13 @@ fn execute_job(st: &mut WorkerState, job: Job) -> (BatchReport, Deliveries) {
             logits: row.to_vec(),
             flops_reduction: reduction,
             r_sum: fwd.r_sum[slot] as f64,
+            n_eff: fwd.n_eff[slot] as usize,
             latency,
             batch_size: n,
             alpha,
             mode: mode.clone(),
             budget: pending.req.budget.is_some(),
-            degraded: pending.req.budget.as_ref().map_or(false, |b| b.degraded),
+            degraded: pending.req.budget.as_ref().is_some_and(|b| b.degraded),
             shed: false,
         };
         deliveries.push((rtx, resp));

@@ -325,6 +325,101 @@ pub fn gen_rte(_spec: &TaskSpec, rng: &mut Pcg64, count: usize) -> Vec<Example> 
         .collect()
 }
 
+// ---------------------------------------------------------------------------
+// Harness extras (eval::harness sweep inventory; not Table-1/2 rows)
+// ---------------------------------------------------------------------------
+
+/// PAWS analog: adversarial paraphrase pairs where lexical overlap is an
+/// *anti*-signal. Sentence `a` alternates noun/verb; a paraphrase (label 1)
+/// keeps the alignment and substitutes at most one word with a fresh
+/// same-class word, while a non-paraphrase (label 0) swaps two distinct
+/// nouns — the bag of words is identical to `a`, only the order differs.
+/// Deciding therefore requires position-aligned cross-segment comparison
+/// (dense attention, low FLOPs reduction — the harness's hard end).
+pub fn gen_paws(_spec: &TaskSpec, rng: &mut Pcg64, count: usize) -> Vec<Example> {
+    (0..count)
+        .map(|_| {
+            let len = rng.gen_range(8, 16);
+            let mut a: Vec<i32> = (0..len)
+                .map(|i| if i % 2 == 0 { noun(rng) } else { verb(rng) })
+                .collect();
+            // Guarantee a swappable pair exists: the first two noun slots
+            // must hold distinct nouns.
+            while a[2] == a[0] {
+                a[2] = noun(rng);
+            }
+            let paraphrase = rng.gen_f64() < 0.5;
+            let mut b = a.clone();
+            if paraphrase {
+                // Substitute one aligned word with a fresh same-class word.
+                if rng.gen_f64() < 0.8 {
+                    let i = rng.gen_range(0, b.len());
+                    let mut w = if i % 2 == 0 { noun(rng) } else { verb(rng) };
+                    while w == a[i] {
+                        w = if i % 2 == 0 { noun(rng) } else { verb(rng) };
+                    }
+                    b[i] = w;
+                }
+            } else {
+                // Swap two distinct nouns: same multiset, different order.
+                let evens = len.div_ceil(2);
+                let mut i = 2 * rng.gen_range(0, evens);
+                let mut j = 2 * rng.gen_range(0, evens);
+                while b[j] == b[i] {
+                    // A distinct pair exists by construction (slots 0, 2).
+                    i = 2 * rng.gen_range(0, evens);
+                    j = 2 * rng.gen_range(0, evens);
+                }
+                b.swap(i, j);
+            }
+            Example { ids: wrap_pair(a, b), label: Label::Class(paraphrase as i32) }
+        })
+        .collect()
+}
+
+/// Topic analog (AG-News style, 3-way): the noun id range is split into
+/// three disjoint "topic" thirds; each body plants a strict majority of
+/// nouns from the label topic, diluted with off-topic nouns and filler.
+/// The CLS token aggregates a distribution over many positions — the
+/// multi-class row of the harness sweep.
+pub fn gen_topic(spec: &TaskSpec, rng: &mut Pcg64, count: usize) -> Vec<Example> {
+    let n_topics = spec.n_classes.max(2);
+    let slice = CLASS_SIZE / n_topics;
+    let topic_noun = |t: i32, rng: &mut Pcg64| {
+        class_base(WordClass::Noun) + t * slice + rng.gen_range(0, slice as usize) as i32
+    };
+    (0..count)
+        .map(|_| {
+            let topic = rng.gen_range(0, n_topics as usize) as i32;
+            let content = rng.gen_range(6, 13);
+            // Strict majority by construction: >half on-topic, the rest
+            // split over the other topics.
+            let on_topic = content / 2 + 1;
+            let mut words = Vec::with_capacity(content + 6);
+            for _ in 0..on_topic {
+                words.push(topic_noun(topic, rng));
+            }
+            for _ in on_topic..content {
+                let mut other = rng.gen_range(0, n_topics as usize) as i32;
+                while other == topic {
+                    other = rng.gen_range(0, n_topics as usize) as i32;
+                }
+                words.push(topic_noun(other, rng));
+            }
+            // Dilute with filler at random positions.
+            let mut body = Vec::with_capacity(words.len() * 2);
+            for w in words {
+                if rng.gen_f64() < 0.35 {
+                    body.push(filler(rng));
+                }
+                let pos = rng.gen_range(0, body.len() + 1);
+                body.insert(pos, w);
+            }
+            Example { ids: wrap(body), label: Label::Class(topic) }
+        })
+        .collect()
+}
+
 /// WNLI analog: coreference with only a *weak* statistical signal plus
 /// label noise — deliberately near-unlearnable, like the real WNLI (the
 /// paper's baseline sits at the 56.3 majority rate).
@@ -405,6 +500,66 @@ mod tests {
             let rest = &ex.ids[3..];
             let contains = rest.contains(&q);
             assert_eq!(contains, ex.label == Label::Class(1));
+        }
+    }
+
+    #[test]
+    fn paws_order_vs_substitution_invariants() {
+        let spec = task_by_name("paws_sim").unwrap();
+        let mut rng = Pcg64::new(11);
+        for ex in gen_paws(&spec, &mut rng, 300) {
+            let seps: Vec<usize> = ex
+                .ids
+                .iter()
+                .enumerate()
+                .filter(|(_, &w)| w == SEP_ID)
+                .map(|(i, _)| i)
+                .collect();
+            let a = &ex.ids[1..seps[0]];
+            let b = &ex.ids[seps[0] + 1..seps[1]];
+            assert_eq!(a.len(), b.len());
+            let hamming = a.iter().zip(b).filter(|(x, y)| x != y).count();
+            if ex.label == Label::Class(0) {
+                // non-paraphrase: a two-noun swap — same multiset, two
+                // aligned mismatches
+                let mut sa = a.to_vec();
+                let mut sb = b.to_vec();
+                sa.sort_unstable();
+                sb.sort_unstable();
+                assert_eq!(sa, sb);
+                assert_eq!(hamming, 2);
+            } else {
+                // paraphrase: at most one aligned substitution
+                assert!(hamming <= 1, "hamming {hamming}");
+            }
+        }
+    }
+
+    #[test]
+    fn topic_label_is_majority_topic() {
+        use crate::tokenizer::{class_base, class_of, WordClass};
+        let spec = task_by_name("topic_sim").unwrap();
+        let mut rng = Pcg64::new(12);
+        let slice = crate::tokenizer::CLASS_SIZE / spec.n_classes;
+        for ex in gen_topic(&spec, &mut rng, 300) {
+            let mut counts = vec![0usize; spec.n_classes as usize];
+            for &w in &ex.ids[1..ex.ids.len() - 1] {
+                if class_of(w) == Some(WordClass::Noun) {
+                    let t = ((w - class_base(WordClass::Noun)) / slice)
+                        .min(spec.n_classes - 1);
+                    counts[t as usize] += 1;
+                }
+            }
+            let argmax = counts
+                .iter()
+                .enumerate()
+                .max_by_key(|&(_, c)| c)
+                .unwrap()
+                .0 as i32;
+            assert_eq!(argmax, ex.label.class(), "counts {counts:?}");
+            // strict majority, not just plurality
+            let lab = counts[ex.label.class() as usize];
+            assert!(lab * 2 > counts.iter().sum::<usize>(), "counts {counts:?}");
         }
     }
 

@@ -125,6 +125,8 @@ pub fn generate(spec: &TaskSpec, seed: u64) -> Dataset {
         "qnli_sim" => glue::gen_qnli,
         "rte_sim" => glue::gen_rte,
         "wnli_sim" => glue::gen_wnli,
+        "paws_sim" => glue::gen_paws,
+        "topic_sim" => glue::gen_topic,
         "aapd_sim" => docs::gen_aapd,
         "hnd_sim" => docs::gen_hnd,
         "imdb_sim" => docs::gen_imdb,
@@ -203,9 +205,50 @@ pub fn doc_tasks() -> Vec<TaskSpec> {
     ]
 }
 
+/// GLUE-style additions for the `eval::harness` sweep (not rows of the
+/// paper's Tables 1–2): an adversarial paraphrase-pair task and a 3-way
+/// topic task, chosen to bracket the attention-sparsity axis the sweep
+/// measures FLOPs along.
+pub fn extra_tasks() -> Vec<TaskSpec> {
+    use Metric::*;
+    vec![
+        TaskSpec {
+            name: "paws_sim",
+            kind: TaskKind::Classification,
+            n_classes: 2,
+            metrics: &[Accuracy, F1][..],
+            max_len: 64,
+            train_size: 3000,
+            dev_size: 512,
+        },
+        TaskSpec {
+            name: "topic_sim",
+            kind: TaskKind::Classification,
+            n_classes: 3,
+            metrics: &[Accuracy][..],
+            max_len: 64,
+            train_size: 3000,
+            dev_size: 512,
+        },
+    ]
+}
+
+/// The default `mca eval` harness inventory: sst2_sim (the paper's anchor
+/// task) plus the [`extra_tasks`].
+pub fn harness_tasks() -> Vec<TaskSpec> {
+    let mut v: Vec<TaskSpec> =
+        glue_tasks().into_iter().filter(|t| t.name == "sst2_sim").collect();
+    v.extend(extra_tasks());
+    v
+}
+
 /// Look up a task descriptor by name.
 pub fn task_by_name(name: &str) -> Option<TaskSpec> {
-    glue_tasks().into_iter().chain(doc_tasks()).find(|t| t.name == name)
+    glue_tasks()
+        .into_iter()
+        .chain(doc_tasks())
+        .chain(extra_tasks())
+        .find(|t| t.name == name)
 }
 
 #[cfg(test)]
@@ -238,8 +281,20 @@ mod tests {
 
     #[test]
     fn all_tasks_generate_valid_data() {
-        for spec in glue_tasks().iter().chain(doc_tasks().iter()) {
+        for spec in glue_tasks().iter().chain(doc_tasks().iter()).chain(extra_tasks().iter()) {
             check_dataset(spec);
+        }
+    }
+
+    #[test]
+    fn harness_inventory_is_classification_only() {
+        let tasks = harness_tasks();
+        assert!(tasks.iter().any(|t| t.name == "sst2_sim"));
+        assert!(tasks.iter().any(|t| t.name == "paws_sim"));
+        assert!(tasks.iter().any(|t| t.name == "topic_sim"));
+        for t in &tasks {
+            assert_eq!(t.kind, TaskKind::Classification, "{}", t.name);
+            assert!(task_by_name(t.name).is_some(), "{}", t.name);
         }
     }
 
@@ -265,7 +320,7 @@ mod tests {
 
     #[test]
     fn classification_labels_are_balanced_enough() {
-        for spec in glue_tasks() {
+        for spec in glue_tasks().into_iter().chain(extra_tasks()) {
             if spec.kind != TaskKind::Classification {
                 continue;
             }

@@ -1,0 +1,848 @@
+//! Table-1 evaluation harness at serving scale: the accuracy-vs-FLOPs
+//! Pareto sweep behind `mca eval`.
+//!
+//! For every (model, task) pair in the inventory the harness trains (or
+//! loads) a checkpoint, stands up the *real* serving coordinator pool
+//! ([`crate::coordinator::Server`] — so the sweep also exercises dynamic
+//! batching, the brownout admission ladder and the canary loop), and
+//! replays the task's dev slice through it once per sweep knob:
+//!
+//! * **exact** — the deterministic baseline every other point is compared
+//!   against (prediction agreement is measured per example);
+//! * **α grid** — raw-precision MCA points ([`Knob::Alpha`]);
+//! * **ε budgets** — Theorem-2 error budgets the dispatcher resolves to a
+//!   grid α ([`Knob::Epsilon`]; the point records the mean α actually
+//!   served, including brownout degradations).
+//!
+//! Each point records the task metric, exact-vs-MCA agreement, the
+//! measured Σrᵢ and the Eq.-9 FLOPs-reduction factor (via
+//! [`crate::mca::flops::reduction_factor`] — the same accounting the
+//! paper's tables use). Per model, the knob points are macro-averaged
+//! across tasks and reduced to the accuracy-vs-FLOPs **Pareto frontier**
+//! ([`pareto_indices`]): along the frontier, accuracy is non-increasing as
+//! the FLOPs budget shrinks — the trade-off curve of the paper's Figure 1,
+//! measured end-to-end through the serving stack.
+//!
+//! Passes run in lockstep-replay mode (dispatch paused while the slice is
+//! queued, as in `loadgen::run_replay`), so batch composition — and with
+//! it every MCA sample pool — is a pure function of the workload and the
+//! sweep is reproducible. Results serialize to `BENCH_eval.json`
+//! ([`write_bench_eval_json`], schema in BENCHMARKS.md) and render as a
+//! Table-1-style markdown report via [`crate::report::render_eval_report`].
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{Response, Server, ServerConfig};
+use crate::data::{self, Example, TaskKind, TaskSpec};
+use crate::mca::flops::{self, AttnDims};
+use crate::runtime::{open_backend, BackendSpec, ModelInfo};
+use crate::tokenizer::Tokenizer;
+use crate::train::{train_or_load, TrainConfig};
+use crate::util::json::Json;
+
+use super::{metric_value, PassResult};
+
+// ---------------------------------------------------------------------------
+// Options
+// ---------------------------------------------------------------------------
+
+/// Everything one sweep run needs (the `mca eval` CLI maps onto this).
+#[derive(Debug, Clone)]
+pub struct HarnessOptions {
+    /// models to sweep (each gets its own frontier)
+    pub models: Vec<String>,
+    /// task names (must be classification tasks with a serving head)
+    pub tasks: Vec<String>,
+    /// raw-α sweep points
+    pub alphas: Vec<f64>,
+    /// Theorem-2 ε budgets to sweep (empty skips the budget pass)
+    pub epsilons: Vec<f64>,
+    /// serving pool size per (model, task)
+    pub workers: usize,
+    /// admission cap in Eq.-9 cost units; 0 sizes it to the dev slice so
+    /// a lockstep replay pass is never shed
+    pub queue_cap: usize,
+    /// brownout watermark forwarded to the pool (0 disables)
+    pub brownout_watermark: usize,
+    /// canary replay rate forwarded to the pool
+    pub canary_rate: f64,
+    /// batching window
+    pub max_wait_ms: u64,
+    /// dev examples per task (caps the slice; the full dev set when larger)
+    pub dev_limit: usize,
+    /// checkpoint cache root (train-on-miss via [`train_or_load`])
+    pub ckpt_root: PathBuf,
+    /// fine-tuning hyperparameters for train-on-miss
+    pub train_cfg: TrainConfig,
+    /// dataset generation seed
+    pub data_seed: u64,
+    /// print per-point progress
+    pub verbose: bool,
+}
+
+impl Default for HarnessOptions {
+    fn default() -> HarnessOptions {
+        HarnessOptions {
+            models: vec!["bert_sim".to_string(), "distil_sim".to_string()],
+            tasks: data::harness_tasks().iter().map(|t| t.name.to_string()).collect(),
+            alphas: vec![0.2, 0.4, 0.6, 1.0],
+            epsilons: vec![8.0, 32.0],
+            workers: 2,
+            queue_cap: 0,
+            brownout_watermark: 0,
+            canary_rate: 0.1,
+            max_wait_ms: 10,
+            dev_limit: 256,
+            ckpt_root: PathBuf::from("checkpoints"),
+            train_cfg: TrainConfig::default(),
+            data_seed: 1234,
+            verbose: true,
+        }
+    }
+}
+
+impl HarnessOptions {
+    /// The CI smoke profile behind `mca eval --quick`: one model, two
+    /// tasks, a 2-point α grid, one ε budget, a short dev slice and quick
+    /// fine-tuning — small enough for a per-push CI job while still
+    /// crossing the brownout watermark and firing canaries.
+    pub fn quick() -> HarnessOptions {
+        HarnessOptions {
+            models: vec!["distil_sim".to_string()],
+            tasks: vec!["sst2_sim".to_string(), "paws_sim".to_string()],
+            alphas: vec![0.3, 1.0],
+            epsilons: vec![16.0],
+            canary_rate: 0.2,
+            brownout_watermark: 48,
+            dev_limit: 96,
+            train_cfg: TrainConfig { steps: 40, ..TrainConfig::default() },
+            ..HarnessOptions::default()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sweep result types
+// ---------------------------------------------------------------------------
+
+/// One sweep knob: which precision setting a pass ran at.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Knob {
+    /// the exact-attention baseline pass
+    Exact,
+    /// a raw-α MCA pass
+    Alpha(f64),
+    /// a Theorem-2 ε-budget pass (the server resolves ε → α)
+    Epsilon(f64),
+}
+
+impl std::fmt::Display for Knob {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Knob::Exact => write!(f, "exact"),
+            Knob::Alpha(a) => write!(f, "α={a}"),
+            Knob::Epsilon(e) => write!(f, "ε={e}"),
+        }
+    }
+}
+
+/// One (model, task, knob) measurement of the sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepPoint {
+    /// model evaluated
+    pub model: String,
+    /// task evaluated
+    pub task: String,
+    /// short name of the task's primary metric (`Metric::short`)
+    pub metric: String,
+    /// the precision knob of this pass
+    pub knob: Knob,
+    /// primary-metric value of this pass (shed requests count as wrong)
+    pub accuracy: f64,
+    /// primary-metric value of the exact baseline pass
+    pub baseline: f64,
+    /// fraction of (mutually non-shed) examples whose prediction matches
+    /// the exact baseline's
+    pub agreement: f64,
+    /// mean α actually served (1.0 for exact; for ε knobs this reflects
+    /// resolution + any brownout degradation)
+    pub resolved_alpha: f64,
+    /// measured Σ_layers Σ_tokens rᵢ over the completed slice (0 for exact)
+    pub r_sum: u64,
+    /// Eq.-9 aggregate FLOPs-reduction factor over the completed slice
+    /// (1.0 for exact; budget requests resolved to the exact path charge
+    /// the full encode budget)
+    pub flops_reduction: f64,
+    /// requests that received a non-shed response
+    pub completed: usize,
+    /// requests shed by admission control
+    pub shed: usize,
+    /// responses served at their budget ceiling by precision brownout
+    pub degraded: usize,
+}
+
+/// One point of a model's accuracy-vs-FLOPs Pareto frontier
+/// (macro-averaged over the model's tasks at that knob).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontierPoint {
+    /// the knob this frontier point came from
+    pub knob: Knob,
+    /// macro-averaged Eq.-9 FLOPs-reduction factor
+    pub flops_reduction: f64,
+    /// macro-averaged primary-metric value
+    pub accuracy: f64,
+}
+
+/// A model's Pareto frontier, sorted by ascending FLOPs reduction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelFrontier {
+    /// the model
+    pub model: String,
+    /// non-dominated (FLOPs reduction, accuracy) points; accuracy is
+    /// non-increasing along the vector
+    pub points: Vec<FrontierPoint>,
+}
+
+/// Final serving-pool counters of one (model, task) sweep — proof the
+/// sweep actually stressed the coordinator paths it routes through.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolCounters {
+    /// model served
+    pub model: String,
+    /// task served
+    pub task: String,
+    /// requests answered (excludes shed)
+    pub served: usize,
+    /// requests shed by admission control
+    pub shed: usize,
+    /// batches executed across the pool
+    pub batches: usize,
+    /// canary exact replays observed
+    pub canaries: usize,
+    /// canary observations below the quality floor
+    pub canary_violations: usize,
+    /// times the dispatcher entered precision brownout
+    pub brownout_entries: usize,
+    /// responses degraded to their budget ceiling
+    pub degraded: usize,
+    /// the AIMD controller's final α target
+    pub controller_alpha: f64,
+}
+
+/// Everything one sweep run produces (serializes to `BENCH_eval.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HarnessReport {
+    /// every (model, task, knob) measurement
+    pub points: Vec<SweepPoint>,
+    /// one Pareto frontier per model
+    pub frontiers: Vec<ModelFrontier>,
+    /// final pool counters per (model, task)
+    pub pools: Vec<PoolCounters>,
+}
+
+// ---------------------------------------------------------------------------
+// Pareto frontier (pure)
+// ---------------------------------------------------------------------------
+
+/// Indices of the Pareto-optimal points when *maximizing both* coordinates
+/// (x = FLOPs-reduction factor, y = accuracy), sorted by ascending x. A
+/// point is dominated when another point is ≥ in both coordinates and
+/// strictly greater in at least one.
+///
+/// Along the returned frontier y is non-increasing: two optimal points
+/// with x₁ < x₂ must have y₁ > y₂, else the second would dominate the
+/// first. O(n²), which is fine at sweep-knob counts.
+pub fn pareto_indices(points: &[(f64, f64)]) -> Vec<usize> {
+    let dominates = |a: (f64, f64), b: (f64, f64)| {
+        a.0 >= b.0 && a.1 >= b.1 && (a.0 > b.0 || a.1 > b.1)
+    };
+    let mut out: Vec<usize> = (0..points.len())
+        .filter(|&i| !(0..points.len()).any(|j| j != i && dominates(points[j], points[i])))
+        .collect();
+    out.sort_by(|&a, &b| {
+        points[a].0.total_cmp(&points[b].0).then(points[b].1.total_cmp(&points[a].1))
+    });
+    out
+}
+
+/// Macro-average the sweep points of one model per knob and reduce them to
+/// the Pareto frontier. Knobs keep their first-appearance order before the
+/// frontier sort; knobs with no completed requests are skipped.
+pub fn model_frontier(points: &[SweepPoint], model: &str) -> Vec<FrontierPoint> {
+    let mine: Vec<&SweepPoint> =
+        points.iter().filter(|p| p.model == model && p.completed > 0).collect();
+    let mut knobs: Vec<Knob> = Vec::new();
+    for p in &mine {
+        if !knobs.contains(&p.knob) {
+            knobs.push(p.knob);
+        }
+    }
+    let cands: Vec<FrontierPoint> = knobs
+        .iter()
+        .map(|&knob| {
+            let of_knob: Vec<&&SweepPoint> = mine.iter().filter(|p| p.knob == knob).collect();
+            let n = of_knob.len() as f64;
+            FrontierPoint {
+                knob,
+                flops_reduction: of_knob.iter().map(|p| p.flops_reduction).sum::<f64>() / n,
+                accuracy: of_knob.iter().map(|p| p.accuracy).sum::<f64>() / n,
+            }
+        })
+        .collect();
+    let coords: Vec<(f64, f64)> =
+        cands.iter().map(|c| (c.flops_reduction, c.accuracy)).collect();
+    pareto_indices(&coords).into_iter().map(|i| cands[i].clone()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// The sweep
+// ---------------------------------------------------------------------------
+
+/// Run the full sweep: every (model, task) pair through the serving pool,
+/// one lockstep-replay pass per knob, Pareto frontiers per model.
+pub fn run_sweep(backend: &BackendSpec, opts: &HarnessOptions) -> Result<HarnessReport> {
+    if opts.models.is_empty() || opts.tasks.is_empty() {
+        bail!("eval sweep needs at least one model and one task");
+    }
+    let mut points = Vec::new();
+    let mut pools = Vec::new();
+    for model in &opts.models {
+        for task in &opts.tasks {
+            let spec = data::task_by_name(task)
+                .with_context(|| format!("unknown task {task:?}"))?;
+            if spec.kind != TaskKind::Classification {
+                bail!("eval sweep serves classification heads only; {task} is regression");
+            }
+            let (pts, counters) = sweep_pair(backend, opts, model, &spec)?;
+            points.extend(pts);
+            pools.push(counters);
+        }
+    }
+    let frontiers = opts
+        .models
+        .iter()
+        .map(|m| ModelFrontier { model: m.clone(), points: model_frontier(&points, m) })
+        .collect();
+    Ok(HarnessReport { points, frontiers, pools })
+}
+
+/// Sweep one (model, task) pair: train-or-load the checkpoint, start the
+/// pool, run the exact baseline and every knob pass, read the counters.
+fn sweep_pair(
+    backend: &BackendSpec,
+    opts: &HarnessOptions,
+    model_name: &str,
+    spec: &TaskSpec,
+) -> Result<(Vec<SweepPoint>, PoolCounters)> {
+    let ds = data::generate(spec, opts.data_seed);
+    let dev: Vec<Example> =
+        ds.dev.iter().take(opts.dev_limit.max(1)).cloned().collect();
+
+    // Train-or-load on a directly-opened backend; the pool workers then
+    // load the same checkpoint file.
+    let info: ModelInfo = {
+        let mut be = open_backend(backend)?;
+        let info = be.model(model_name)?;
+        let cfg = &opts.train_cfg;
+        train_or_load(be.as_mut(), &opts.ckpt_root, model_name, spec, &ds, cfg, opts.verbose)?;
+        info
+    };
+    let ckpt = crate::model::checkpoint_path(&opts.ckpt_root, model_name, spec.name);
+
+    let seq = info.max_len.min(spec.max_len);
+    // Lockstep replay queues the whole slice before dispatch resumes, so
+    // the auto-sized cap must cover it (row cost ≤ 1 per request).
+    let queue_cap = if opts.queue_cap == 0 { dev.len() + 8 } else { opts.queue_cap };
+    let server = Server::start(
+        backend.clone(),
+        ServerConfig {
+            model: model_name.to_string(),
+            checkpoint: ckpt,
+            max_wait: Duration::from_millis(opts.max_wait_ms),
+            seq,
+            workers: opts.workers,
+            queue_cap,
+            brownout_watermark: opts.brownout_watermark,
+            canary_rate: opts.canary_rate,
+            quality_floor: 0.5,
+        },
+    )?;
+
+    let tok = Tokenizer::new();
+    let texts: Vec<String> = dev
+        .iter()
+        .map(|e| {
+            // Strip the outer CLS/SEP only: inner [SEP] tokens of pair
+            // tasks must survive the round trip through the server's
+            // tokenizer.
+            let t = tok.decode(&e.ids);
+            let t = t.strip_prefix("[CLS] ").unwrap_or(&t);
+            t.strip_suffix(" [SEP]").unwrap_or(t).to_string()
+        })
+        .collect();
+
+    let exact = run_point(&server, &texts, Knob::Exact)?;
+    let exact_preds: Vec<i32> =
+        exact.iter().map(|r| if r.shed { -1 } else { r.pred_class }).collect();
+
+    let mut knobs = vec![Knob::Exact];
+    knobs.extend(opts.alphas.iter().map(|&a| Knob::Alpha(a)));
+    knobs.extend(opts.epsilons.iter().map(|&e| Knob::Epsilon(e)));
+
+    let mut points = Vec::with_capacity(knobs.len());
+    for knob in knobs {
+        let outcomes = match knob {
+            Knob::Exact => exact.clone(),
+            _ => run_point(&server, &texts, knob)?,
+        };
+        let point =
+            summarize(model_name, spec, knob, &outcomes, &exact_preds, &dev, &info)?;
+        if opts.verbose {
+            eprintln!(
+                "[eval {model_name}/{}] {}: {} {:.2} | agree {:.3} | {:.2}x FLOPs | shed {}",
+                spec.name,
+                point.knob,
+                point.metric,
+                100.0 * point.accuracy,
+                point.agreement,
+                point.flops_reduction,
+                point.shed
+            );
+        }
+        points.push(point);
+    }
+
+    let stats = server.stats()?;
+    let counters = PoolCounters {
+        model: model_name.to_string(),
+        task: spec.name.to_string(),
+        served: stats.served,
+        shed: stats.shed,
+        batches: stats.batches,
+        canaries: stats.canaries,
+        canary_violations: stats.canary_violations,
+        brownout_entries: stats.brownout_entries,
+        degraded: stats.degraded,
+        controller_alpha: stats.controller_alpha,
+    };
+    server.shutdown()?;
+    Ok((points, counters))
+}
+
+/// One lockstep-replay pass: pause dispatch, queue the whole slice, resume
+/// and collect responses in submission order.
+fn run_point(server: &Server, texts: &[String], knob: Knob) -> Result<Vec<Response>> {
+    server.pause();
+    let mut rxs = Vec::with_capacity(texts.len());
+    for t in texts {
+        rxs.push(match knob {
+            Knob::Exact => server.submit(t, 1.0, "exact"),
+            Knob::Alpha(a) => server.submit(t, a as f32, "mca"),
+            Knob::Epsilon(e) => server.submit_budget(t, e, None),
+        });
+    }
+    server.resume();
+    let mut out = Vec::with_capacity(rxs.len());
+    for rx in rxs {
+        out.push(rx.recv().context("server dropped a sweep request")?);
+    }
+    Ok(out)
+}
+
+/// Reduce one pass's responses to a [`SweepPoint`].
+fn summarize(
+    model: &str,
+    spec: &TaskSpec,
+    knob: Knob,
+    outcomes: &[Response],
+    exact_preds: &[i32],
+    dev: &[Example],
+    info: &ModelInfo,
+) -> Result<SweepPoint> {
+    let dims = AttnDims { d_model: info.d_model, window: info.window };
+    let mut pred_cls = Vec::with_capacity(outcomes.len());
+    let mut per_seq: Vec<(usize, u64)> = Vec::new();
+    let mut r_sum_total = 0.0f64;
+    let (mut completed, mut shed, mut degraded) = (0usize, 0usize, 0usize);
+    let mut alpha_sum = 0.0f64;
+    for r in outcomes {
+        if r.shed {
+            shed += 1;
+            pred_cls.push(-1);
+            continue;
+        }
+        completed += 1;
+        pred_cls.push(r.pred_class);
+        alpha_sum += r.alpha as f64;
+        if r.degraded {
+            degraded += 1;
+        }
+        if knob != Knob::Exact && r.n_eff > 0 {
+            // A budget resolved to the exact path charges the full encode
+            // budget (n·d per layer), keeping Eq. 9 honest: its factor
+            // contribution is exactly 1.
+            let r_rows = if r.mode == "exact" {
+                (r.n_eff * info.d_model * info.n_layers) as u64
+            } else {
+                r.r_sum.round() as u64
+            };
+            per_seq.push((r.n_eff, r_rows));
+            r_sum_total += r.r_sum;
+        }
+    }
+    let flops_reduction = if knob == Knob::Exact || per_seq.is_empty() {
+        1.0
+    } else {
+        flops::reduction_factor(&per_seq, info.n_layers, dims)
+    };
+
+    // Agreement over examples where neither this pass nor the baseline
+    // shed.
+    let mut pairs = 0usize;
+    let mut matches = 0usize;
+    for (p, e) in pred_cls.iter().zip(exact_preds) {
+        if *p >= 0 && *e >= 0 {
+            pairs += 1;
+            if p == e {
+                matches += 1;
+            }
+        }
+    }
+    let agreement = if pairs > 0 { matches as f64 / pairs as f64 } else { 0.0 };
+
+    let metric = spec.metrics[0];
+    let pass = PassResult { pred_cls, pred_score: Vec::new(), per_seq: Vec::new() };
+    let accuracy = metric_value(metric, &pass, dev);
+    let exact_pass = PassResult {
+        pred_cls: exact_preds.to_vec(),
+        pred_score: Vec::new(),
+        per_seq: Vec::new(),
+    };
+    let baseline = metric_value(metric, &exact_pass, dev);
+
+    Ok(SweepPoint {
+        model: model.to_string(),
+        task: spec.name.to_string(),
+        metric: metric.short().to_string(),
+        knob,
+        accuracy,
+        baseline,
+        agreement,
+        resolved_alpha: if completed > 0 { alpha_sum / completed as f64 } else { 0.0 },
+        r_sum: r_sum_total.round() as u64,
+        flops_reduction,
+        completed,
+        shed,
+        degraded,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// BENCH_eval.json
+// ---------------------------------------------------------------------------
+
+fn knob_to_json(knob: Knob, m: &mut std::collections::BTreeMap<String, Json>) {
+    match knob {
+        Knob::Exact => {
+            m.insert("knob".to_string(), Json::Str("exact".to_string()));
+        }
+        Knob::Alpha(a) => {
+            m.insert("knob".to_string(), Json::Str("alpha".to_string()));
+            m.insert("alpha".to_string(), Json::Num(a));
+        }
+        Knob::Epsilon(e) => {
+            m.insert("knob".to_string(), Json::Str("epsilon".to_string()));
+            m.insert("epsilon".to_string(), Json::Num(e));
+        }
+    }
+}
+
+fn knob_from_json(j: &Json) -> Result<Knob> {
+    Ok(match j.get("knob")?.as_str()? {
+        "exact" => Knob::Exact,
+        "alpha" => Knob::Alpha(j.get("alpha")?.as_f64()?),
+        "epsilon" => Knob::Epsilon(j.get("epsilon")?.as_f64()?),
+        other => bail!("unknown knob kind {other:?}"),
+    })
+}
+
+/// Serialize a [`HarnessReport`] to the `BENCH_eval.json` value (schema in
+/// BENCHMARKS.md §4).
+pub fn bench_eval_to_json(rep: &HarnessReport) -> Json {
+    use std::collections::BTreeMap;
+    let entries: Vec<Json> = rep
+        .points
+        .iter()
+        .map(|p| {
+            let mut m: BTreeMap<String, Json> = BTreeMap::new();
+            m.insert("model".to_string(), Json::Str(p.model.clone()));
+            m.insert("task".to_string(), Json::Str(p.task.clone()));
+            m.insert("metric".to_string(), Json::Str(p.metric.clone()));
+            knob_to_json(p.knob, &mut m);
+            m.insert("accuracy".to_string(), Json::Num(p.accuracy));
+            m.insert("baseline".to_string(), Json::Num(p.baseline));
+            m.insert("agreement".to_string(), Json::Num(p.agreement));
+            m.insert("resolved_alpha".to_string(), Json::Num(p.resolved_alpha));
+            m.insert("r_sum".to_string(), Json::Num(p.r_sum as f64));
+            m.insert("flops_reduction".to_string(), Json::Num(p.flops_reduction));
+            m.insert("completed".to_string(), Json::Num(p.completed as f64));
+            m.insert("shed".to_string(), Json::Num(p.shed as f64));
+            m.insert("degraded".to_string(), Json::Num(p.degraded as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    let frontiers: Vec<Json> = rep
+        .frontiers
+        .iter()
+        .map(|f| {
+            let pts: Vec<Json> = f
+                .points
+                .iter()
+                .map(|p| {
+                    let mut m: BTreeMap<String, Json> = BTreeMap::new();
+                    knob_to_json(p.knob, &mut m);
+                    m.insert("flops_reduction".to_string(), Json::Num(p.flops_reduction));
+                    m.insert("accuracy".to_string(), Json::Num(p.accuracy));
+                    Json::Obj(m)
+                })
+                .collect();
+            let mut m: BTreeMap<String, Json> = BTreeMap::new();
+            m.insert("model".to_string(), Json::Str(f.model.clone()));
+            m.insert("points".to_string(), Json::Arr(pts));
+            Json::Obj(m)
+        })
+        .collect();
+    let pools: Vec<Json> = rep
+        .pools
+        .iter()
+        .map(|c| {
+            let mut m: BTreeMap<String, Json> = BTreeMap::new();
+            m.insert("model".to_string(), Json::Str(c.model.clone()));
+            m.insert("task".to_string(), Json::Str(c.task.clone()));
+            m.insert("served".to_string(), Json::Num(c.served as f64));
+            m.insert("shed".to_string(), Json::Num(c.shed as f64));
+            m.insert("batches".to_string(), Json::Num(c.batches as f64));
+            m.insert("canaries".to_string(), Json::Num(c.canaries as f64));
+            m.insert(
+                "canary_violations".to_string(),
+                Json::Num(c.canary_violations as f64),
+            );
+            m.insert("brownout_entries".to_string(), Json::Num(c.brownout_entries as f64));
+            m.insert("degraded".to_string(), Json::Num(c.degraded as f64));
+            m.insert("controller_alpha".to_string(), Json::Num(c.controller_alpha));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top: std::collections::BTreeMap<String, Json> = Default::default();
+    top.insert("bench".to_string(), Json::Str("eval".to_string()));
+    top.insert("entries".to_string(), Json::Arr(entries));
+    top.insert("frontiers".to_string(), Json::Arr(frontiers));
+    top.insert("pools".to_string(), Json::Arr(pools));
+    Json::Obj(top)
+}
+
+/// Parse a `BENCH_eval.json` value back into a [`HarnessReport`] — the
+/// schema round-trip the regression tests (and the CI bench gate's
+/// consumers) rely on.
+pub fn bench_eval_from_json(j: &Json) -> Result<HarnessReport> {
+    if j.get("bench")?.as_str()? != "eval" {
+        bail!("not a BENCH_eval.json document");
+    }
+    let mut points = Vec::new();
+    for e in j.get("entries")?.as_arr()? {
+        points.push(SweepPoint {
+            model: e.get("model")?.as_str()?.to_string(),
+            task: e.get("task")?.as_str()?.to_string(),
+            metric: e.get("metric")?.as_str()?.to_string(),
+            knob: knob_from_json(e)?,
+            accuracy: e.get("accuracy")?.as_f64()?,
+            baseline: e.get("baseline")?.as_f64()?,
+            agreement: e.get("agreement")?.as_f64()?,
+            resolved_alpha: e.get("resolved_alpha")?.as_f64()?,
+            r_sum: e.get("r_sum")?.as_f64()? as u64,
+            flops_reduction: e.get("flops_reduction")?.as_f64()?,
+            completed: e.get("completed")?.as_usize()?,
+            shed: e.get("shed")?.as_usize()?,
+            degraded: e.get("degraded")?.as_usize()?,
+        });
+    }
+    let mut frontiers = Vec::new();
+    for f in j.get("frontiers")?.as_arr()? {
+        let mut pts = Vec::new();
+        for p in f.get("points")?.as_arr()? {
+            pts.push(FrontierPoint {
+                knob: knob_from_json(p)?,
+                flops_reduction: p.get("flops_reduction")?.as_f64()?,
+                accuracy: p.get("accuracy")?.as_f64()?,
+            });
+        }
+        frontiers.push(ModelFrontier {
+            model: f.get("model")?.as_str()?.to_string(),
+            points: pts,
+        });
+    }
+    let mut pools = Vec::new();
+    for c in j.get("pools")?.as_arr()? {
+        pools.push(PoolCounters {
+            model: c.get("model")?.as_str()?.to_string(),
+            task: c.get("task")?.as_str()?.to_string(),
+            served: c.get("served")?.as_usize()?,
+            shed: c.get("shed")?.as_usize()?,
+            batches: c.get("batches")?.as_usize()?,
+            canaries: c.get("canaries")?.as_usize()?,
+            canary_violations: c.get("canary_violations")?.as_usize()?,
+            brownout_entries: c.get("brownout_entries")?.as_usize()?,
+            degraded: c.get("degraded")?.as_usize()?,
+            controller_alpha: c.get("controller_alpha")?.as_f64()?,
+        });
+    }
+    Ok(HarnessReport { points, frontiers, pools })
+}
+
+/// Write `BENCH_eval.json` to `path`.
+pub fn write_bench_eval_json(path: &Path, rep: &HarnessReport) -> Result<()> {
+    std::fs::write(path, bench_eval_to_json(rep).to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn pt(model: &str, task: &str, knob: Knob, acc: f64, red: f64) -> SweepPoint {
+        SweepPoint {
+            model: model.to_string(),
+            task: task.to_string(),
+            metric: "Acc.".to_string(),
+            knob,
+            accuracy: acc,
+            baseline: 0.9,
+            agreement: 0.95,
+            resolved_alpha: 0.4,
+            r_sum: 1000,
+            flops_reduction: red,
+            completed: 64,
+            shed: 0,
+            degraded: 0,
+        }
+    }
+
+    #[test]
+    fn pareto_drops_dominated_points_and_sorts() {
+        // (reduction, accuracy): (2, 0.8) dominates (1.5, 0.7); (1, 0.9)
+        // and (3, 0.6) are incomparable corners.
+        let pts = vec![(1.0, 0.9), (1.5, 0.7), (2.0, 0.8), (3.0, 0.6)];
+        let idx = pareto_indices(&pts);
+        assert_eq!(idx, vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn pareto_frontier_is_monotone_property() {
+        prop::check(200, |g| {
+            let n = g.usize(1..24);
+            let pts: Vec<(f64, f64)> =
+                (0..n).map(|_| (g.f64(1.0..12.0), g.f64(0.0..1.0))).collect();
+            let idx = pareto_indices(&pts);
+            if idx.is_empty() {
+                return Err("frontier empty".to_string());
+            }
+            for w in idx.windows(2) {
+                let (x1, y1) = pts[w[0]];
+                let (x2, y2) = pts[w[1]];
+                if x2 < x1 {
+                    return Err(format!("x not ascending: {x1} {x2}"));
+                }
+                if y2 > y1 {
+                    return Err(format!("accuracy increased along frontier: {y1} {y2}"));
+                }
+            }
+            // no frontier point is dominated by any input point
+            for &i in &idx {
+                for (j, &(x, y)) in pts.iter().enumerate() {
+                    if j != i
+                        && x >= pts[i].0
+                        && y >= pts[i].1
+                        && (x > pts[i].0 || y > pts[i].1)
+                    {
+                        return Err(format!("frontier point {i} dominated by {j}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn model_frontier_macro_averages_across_tasks() {
+        let points = vec![
+            pt("m", "t1", Knob::Exact, 0.9, 1.0),
+            pt("m", "t2", Knob::Exact, 0.8, 1.0),
+            pt("m", "t1", Knob::Alpha(0.2), 0.7, 4.0),
+            pt("m", "t2", Knob::Alpha(0.2), 0.5, 6.0),
+            pt("other", "t1", Knob::Alpha(0.2), 0.0, 100.0), // ignored
+        ];
+        let f = model_frontier(&points, "m");
+        assert_eq!(f.len(), 2);
+        assert_eq!(f[0].knob, Knob::Exact);
+        assert!((f[0].accuracy - 0.85).abs() < 1e-12);
+        assert_eq!(f[1].knob, Knob::Alpha(0.2));
+        assert!((f[1].flops_reduction - 5.0).abs() < 1e-12);
+        assert!((f[1].accuracy - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_eval_json_round_trips() {
+        let rep = HarnessReport {
+            points: vec![
+                pt("m", "t1", Knob::Exact, 0.91, 1.0),
+                pt("m", "t1", Knob::Alpha(0.3), 0.885, 3.25),
+                pt("m", "t1", Knob::Epsilon(16.0), 0.87, 4.5),
+            ],
+            frontiers: vec![ModelFrontier {
+                model: "m".to_string(),
+                points: vec![
+                    FrontierPoint { knob: Knob::Exact, flops_reduction: 1.0, accuracy: 0.91 },
+                    FrontierPoint {
+                        knob: Knob::Epsilon(16.0),
+                        flops_reduction: 4.5,
+                        accuracy: 0.87,
+                    },
+                ],
+            }],
+            pools: vec![PoolCounters {
+                model: "m".to_string(),
+                task: "t1".to_string(),
+                served: 192,
+                shed: 3,
+                batches: 12,
+                canaries: 4,
+                canary_violations: 1,
+                brownout_entries: 2,
+                degraded: 5,
+                controller_alpha: 0.55,
+            }],
+        };
+        let text = bench_eval_to_json(&rep).to_string();
+        let parsed = bench_eval_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, rep);
+        // and the document self-identifies for the bench gate
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "eval");
+        assert_eq!(j.get("entries").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn knob_display_and_json_errors() {
+        assert_eq!(Knob::Exact.to_string(), "exact");
+        assert_eq!(Knob::Alpha(0.3).to_string(), "α=0.3");
+        assert_eq!(Knob::Epsilon(16.0).to_string(), "ε=16");
+        let j = Json::parse(r#"{"knob": "nope"}"#).unwrap();
+        assert!(knob_from_json(&j).is_err());
+        let j = Json::parse(r#"{"bench": "kernels"}"#).unwrap();
+        assert!(bench_eval_from_json(&j).is_err());
+    }
+}

@@ -8,6 +8,7 @@
 //! reduction factor computed from the in-graph Σr_i.
 
 pub mod bounds;
+pub mod harness;
 pub mod tables;
 
 use anyhow::Result;

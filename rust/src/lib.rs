@@ -16,8 +16,8 @@
 //! Theorem 2 bounds, FLOPs accounting), the math substrate in [`tensor`]
 //! (blocked/SIMD kernels + naive reference oracle), the serving system in
 //! [`coordinator`], and the backend seam in [`runtime`]. See DESIGN.md
-//! for the system inventory, BENCHMARKS.md for the perf surface, and
-//! EXPERIMENTS.md for results.
+//! for the system inventory and BENCHMARKS.md for the perf surface and
+//! its CI gating.
 #![warn(missing_docs)]
 
 pub mod bench;

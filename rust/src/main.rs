@@ -62,6 +62,11 @@ fn print_help() {
            loadtest    open-loop Poisson load sweep against the worker pool\n\
                        (sweeps --workers, mixes --error-budget workloads,\n\
                        writes BENCH_serving.json incl. brownout counters)\n\
+           eval        accuracy-vs-FLOPs Pareto sweep through the serving\n\
+                       pool: exact baseline + α grid + Theorem-2 ε budgets\n\
+                       per (model, task), Eq.-9 FLOPs accounting, writes\n\
+                       BENCH_eval.json + a Table-1-style report\n\
+                       (--quick = the CI smoke profile)\n\
            bounds      Lemma-1 / Theorem-2 bound-tightness table\n\
            project     project measured FLOPs reductions to the paper's d\n\
            validate    compile every artifact (pjrt builds only)\n\
@@ -337,7 +342,7 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
         }
         "project" => {
             // Project measured FLOPs reductions (results/tableN.csv) to the
-            // paper's d=768 — the §Scale-mapping column of EXPERIMENTS.md.
+            // paper's d=768 (the scale-mapping argument on `project_reduction`).
             let args = common(Args::new())
                 .opt("table", "results/table1.csv", "measured table CSV")
                 .opt("d-from", "128", "feature dim of the measurement")
@@ -383,6 +388,49 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
                 mca::eval::bounds::render(&rows)
             );
             emit(&args, &text)
+        }
+        "eval" => {
+            // CLI defaults derive from HarnessOptions::default() so the
+            // sweep defaults live in exactly one place (the shared
+            // --alphas/--train-steps/--lr defaults in `common()` match
+            // TrainConfig::default() and the harness α grid).
+            let d = mca::eval::harness::HarnessOptions::default();
+            let join_f64 =
+                |v: &[f64]| v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",");
+            let args = common(Args::new())
+                .opt("models", &d.models.join(","), "comma list of models to sweep")
+                .opt("tasks", "", "comma list of tasks (default: the harness inventory)")
+                .opt(
+                    "error-budget",
+                    &join_f64(&d.epsilons),
+                    "Theorem-2 ε budgets to sweep (empty to skip the budget pass)",
+                )
+                .opt("workers", &d.workers.to_string(), "serving pool size per (model, task)")
+                .opt(
+                    "queue-cap",
+                    &d.queue_cap.to_string(),
+                    "admission cap in Eq.-9 cost units (0 = sized to the dev slice)",
+                )
+                .opt(
+                    "brownout-watermark",
+                    &d.brownout_watermark.to_string(),
+                    "queue depth that triggers precision brownout (0 = disabled)",
+                )
+                .opt(
+                    "canary-rate",
+                    &d.canary_rate.to_string(),
+                    "fraction of MCA batches replayed exactly as canaries",
+                )
+                .opt("dev-limit", &d.dev_limit.to_string(), "dev examples per task")
+                .opt("max-wait-ms", &d.max_wait_ms.to_string(), "batching window")
+                .opt("json", "BENCH_eval.json", "machine-readable sweep output (empty to skip)")
+                .flag("quick", "CI smoke profile: distil_sim, 2 tasks, small grids, 40 train steps")
+                .parse(rest)?;
+            if args.get_flag("help-cmd") {
+                eprint!("{}", args.usage(cmd));
+                return Ok(());
+            }
+            eval_cmd(&args)
         }
         "loadtest" => {
             // Open-loop Poisson load sweep against the serving worker pool.
@@ -494,7 +542,7 @@ fn project_cmd(args: &Args) -> Result<()> {
     }
 
     let mut text = format!(
-        "Projected FLOPs reduction at d={d_to} (from measurements at d={d_from}; see EXPERIMENTS.md §Scale mapping)\n\n| Task | α | measured ({d_from}) | n̄ | projected ({d_to}) |\n|---|---|---|---|---|\n"
+        "Projected FLOPs reduction at d={d_to} (from measurements at d={d_from}; see mca::flops::project_reduction)\n\n| Task | α | measured ({d_from}) | n̄ | projected ({d_to}) |\n|---|---|---|---|---|\n"
     );
     for line in csv.lines().skip(1) {
         let f: Vec<&str> = line.split(',').collect();
@@ -513,6 +561,75 @@ fn project_cmd(args: &Args) -> Result<()> {
         ));
     }
     emit(args, &text)
+}
+
+fn eval_cmd(args: &Args) -> Result<()> {
+    use mca::eval::harness::{self, HarnessOptions};
+
+    let quick = args.get_flag("quick");
+    // --quick swaps in the CI smoke profile; anything the user passed
+    // explicitly still wins.
+    let base = if quick { HarnessOptions::quick() } else { HarnessOptions::default() };
+    let mut opts = HarnessOptions {
+        ckpt_root: PathBuf::from(args.get("checkpoints")),
+        verbose: !args.get_flag("quiet"),
+        ..base
+    };
+    if args.was_set("models") || !quick {
+        opts.models = args.get_str_list("models");
+    }
+    if args.was_set("tasks") {
+        opts.tasks = args.get_str_list("tasks");
+    }
+    if args.was_set("alphas") || !quick {
+        opts.alphas = args.get_f64_list("alphas")?;
+    }
+    if args.was_set("error-budget") || !quick {
+        opts.epsilons = args.get_f64_list("error-budget")?;
+    }
+    if args.was_set("workers") || !quick {
+        opts.workers = args.get_usize("workers")?;
+    }
+    if args.was_set("queue-cap") || !quick {
+        opts.queue_cap = args.get_usize("queue-cap")?;
+    }
+    if args.was_set("brownout-watermark") || !quick {
+        opts.brownout_watermark = args.get_usize("brownout-watermark")?;
+    }
+    if args.was_set("canary-rate") || !quick {
+        opts.canary_rate = args.get_f64("canary-rate")?;
+    }
+    if args.was_set("dev-limit") || !quick {
+        opts.dev_limit = args.get_usize("dev-limit")?;
+    }
+    if args.was_set("max-wait-ms") || !quick {
+        opts.max_wait_ms = args.get_u64("max-wait-ms")?;
+    }
+    if args.was_set("train-steps") || !quick {
+        opts.train_cfg.steps = args.get_usize("train-steps")?;
+    }
+    if args.was_set("lr") || !quick {
+        opts.train_cfg.lr = args.get_f64("lr")?;
+    }
+    if opts.verbose {
+        eprintln!(
+            "[eval] sweep: {:?} × {:?} | α {:?} | ε {:?} | {} workers{}",
+            opts.models,
+            opts.tasks,
+            opts.alphas,
+            opts.epsilons,
+            opts.workers,
+            if quick { " (quick profile)" } else { "" }
+        );
+    }
+
+    let rep = harness::run_sweep(&backend_spec(args)?, &opts)?;
+    let json_path = args.get("json");
+    if !json_path.is_empty() {
+        harness::write_bench_eval_json(std::path::Path::new(&json_path), &rep)?;
+        eprintln!("[eval] wrote {json_path}");
+    }
+    emit(args, &report::render_eval_report(&rep))
 }
 
 fn loadtest(args: &Args) -> Result<()> {

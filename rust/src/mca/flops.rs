@@ -88,7 +88,7 @@ pub fn reduction_factor(per_seq: &[(usize, u64)], n_layers: usize, dims: AttnDim
 }
 
 /// Project a reduction factor measured at one feature dimension to another
-/// (EXPERIMENTS.md §Scale mapping). From f = (d + n̄)/(r̄ + n̄) we recover
+/// (the `mca project` scale mapping). From f = (d + n̄)/(r̄ + n̄) we recover
 /// the (d-independent) mean sample count r̄ = (d_from + n̄)/f − n̄ and
 /// re-evaluate at d_to. Conservative for saturated tokens: at larger d the
 /// cap r_i ≤ d loosens, so true r̄ can only stay equal or grow slower than

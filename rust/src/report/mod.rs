@@ -70,6 +70,116 @@ pub fn render_csv(rows: &[TaskRow]) -> String {
     s
 }
 
+/// Render the `mca eval` harness sweep as a Table-1-style markdown
+/// report: one table per model (rows = tasks, one accuracy/agreement +
+/// FLOPs column pair per sweep knob), followed by the model's
+/// accuracy-vs-FLOPs Pareto frontier and the serving-pool counters the
+/// sweep accumulated (batching/brownout/canary evidence).
+pub fn render_eval_report(rep: &crate::eval::harness::HarnessReport) -> String {
+    use crate::eval::harness::Knob;
+
+    let mut s = String::from("## MCA evaluation sweep (accuracy vs FLOPs, served)\n");
+    let mut models: Vec<&str> = Vec::new();
+    for p in &rep.points {
+        if !models.contains(&p.model.as_str()) {
+            models.push(&p.model);
+        }
+    }
+    for model in models {
+        let mine: Vec<_> = rep.points.iter().filter(|p| p.model == model).collect();
+        let mut knobs: Vec<Knob> = Vec::new();
+        for p in &mine {
+            if p.knob != Knob::Exact && !knobs.contains(&p.knob) {
+                knobs.push(p.knob);
+            }
+        }
+        let mut tasks: Vec<&str> = Vec::new();
+        for p in &mine {
+            if !tasks.contains(&p.task.as_str()) {
+                tasks.push(&p.task);
+            }
+        }
+
+        let _ = writeln!(s, "\n### {model}\n");
+        let mut header = String::from("| Task | Metric | Baseline |");
+        let mut rule = String::from("|---|---|---|");
+        for k in &knobs {
+            let _ = write!(header, " {k} | FLOPS |");
+            rule.push_str("---|---|");
+        }
+        let _ = writeln!(s, "{header}");
+        let _ = writeln!(s, "{rule}");
+        for task in &tasks {
+            let base = mine
+                .iter()
+                .find(|p| p.task == *task && p.knob == Knob::Exact);
+            let Some(base) = base else { continue };
+            let mut line = format!(
+                "| {} | {} | {:.2} |",
+                task,
+                base.metric,
+                100.0 * base.baseline
+            );
+            for k in &knobs {
+                match mine.iter().find(|p| p.task == *task && p.knob == *k) {
+                    Some(p) => {
+                        let _ = write!(
+                            line,
+                            " {:.2} ·agr {:.2} | {:.2}× |",
+                            100.0 * p.accuracy,
+                            p.agreement,
+                            p.flops_reduction
+                        );
+                    }
+                    None => line.push_str(" – | – |"),
+                }
+            }
+            let _ = writeln!(s, "{line}");
+        }
+
+        if let Some(f) = rep.frontiers.iter().find(|f| f.model == model) {
+            let _ = writeln!(s, "\nPareto frontier (macro-averaged over tasks):\n");
+            let _ = writeln!(s, "| Knob | FLOPS reduction | Accuracy |");
+            let _ = writeln!(s, "|---|---|---|");
+            for p in &f.points {
+                let _ = writeln!(
+                    s,
+                    "| {} | {:.2}× | {:.2} |",
+                    p.knob,
+                    p.flops_reduction,
+                    100.0 * p.accuracy
+                );
+            }
+        }
+    }
+
+    if !rep.pools.is_empty() {
+        let _ = writeln!(s, "\n### Serving-pool counters\n");
+        let _ = writeln!(
+            s,
+            "| Model | Task | Served | Shed | Batches | Canaries (viol.) | Brownouts | Degraded | α target |"
+        );
+        let _ = writeln!(s, "|---|---|---|---|---|---|---|---|---|");
+        for c in &rep.pools {
+            let _ = writeln!(
+                s,
+                "| {} | {} | {} | {} | {} | {} ({}) | {} | {} | {:.2} |",
+                c.model,
+                c.task,
+                c.served,
+                c.shed,
+                c.batches,
+                c.canaries,
+                c.canary_violations,
+                c.brownout_entries,
+                c.degraded,
+                c.controller_alpha
+            );
+        }
+    }
+    s
+}
+
 /// ASCII scatter for the figures: x = FLOPs (relative), y = accuracy.
 /// Each series is a labeled set of (x, y) points.
 pub fn render_scatter(
@@ -175,5 +285,64 @@ mod tests {
     fn scatter_empty() {
         let s = render_scatter("Fig", "x", "y", &[], 10, 5);
         assert!(s.contains("no data"));
+    }
+
+    #[test]
+    fn eval_report_renders_tables_frontier_and_pools() {
+        use crate::eval::harness::{
+            FrontierPoint, HarnessReport, Knob, ModelFrontier, PoolCounters, SweepPoint,
+        };
+        let pt = |knob: Knob, acc: f64, red: f64| SweepPoint {
+            model: "distil_sim".into(),
+            task: "sst2_sim".into(),
+            metric: "Acc.".into(),
+            knob,
+            accuracy: acc,
+            baseline: 0.92,
+            agreement: if knob == Knob::Exact { 1.0 } else { 0.97 },
+            resolved_alpha: 0.4,
+            r_sum: 4096,
+            flops_reduction: red,
+            completed: 96,
+            shed: 0,
+            degraded: 0,
+        };
+        let rep = HarnessReport {
+            points: vec![
+                pt(Knob::Exact, 0.92, 1.0),
+                pt(Knob::Alpha(0.3), 0.9, 3.5),
+                pt(Knob::Epsilon(16.0), 0.89, 4.25),
+            ],
+            frontiers: vec![ModelFrontier {
+                model: "distil_sim".into(),
+                points: vec![FrontierPoint {
+                    knob: Knob::Alpha(0.3),
+                    flops_reduction: 3.5,
+                    accuracy: 0.9,
+                }],
+            }],
+            pools: vec![PoolCounters {
+                model: "distil_sim".into(),
+                task: "sst2_sim".into(),
+                served: 384,
+                shed: 1,
+                batches: 20,
+                canaries: 5,
+                canary_violations: 0,
+                brownout_entries: 1,
+                degraded: 3,
+                controller_alpha: 0.6,
+            }],
+        };
+        let s = render_eval_report(&rep);
+        assert!(s.contains("### distil_sim"));
+        assert!(s.contains("sst2_sim"));
+        assert!(s.contains("92.00")); // baseline
+        assert!(s.contains("3.50×"));
+        assert!(s.contains("α=0.3"));
+        assert!(s.contains("ε=16"));
+        assert!(s.contains("Pareto frontier"));
+        assert!(s.contains("Serving-pool counters"));
+        assert!(s.contains("| 384 | 1 | 20 | 5 (0) | 1 | 3 | 0.60 |"));
     }
 }

@@ -164,6 +164,22 @@ impl Args {
         self.get(name) == "true"
     }
 
+    /// Whether the user explicitly passed `--name` (as opposed to the
+    /// declared default applying). Lets profile flags like `--quick`
+    /// override defaults without clobbering explicit choices.
+    pub fn was_set(&self, name: &str) -> bool {
+        self.values.contains_key(name)
+    }
+
+    /// Comma-separated string list, e.g. `--models bert_sim,distil_sim`.
+    pub fn get_str_list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    }
+
     /// Comma-separated f64 list, e.g. `--alphas 0.2,0.4`.
     pub fn get_f64_list(&self, name: &str) -> Result<Vec<f64>> {
         self.get(name)
@@ -253,6 +269,21 @@ mod tests {
             .parse(&sv(&["--workers", "two"]))
             .unwrap();
         assert!(c.get_usize_list("workers").is_err());
+    }
+
+    #[test]
+    fn was_set_and_str_lists() {
+        let a = Args::new()
+            .opt("models", "bert_sim,distil_sim", "")
+            .opt("tasks", "", "")
+            .parse(&sv(&["--tasks", "sst2_sim, paws_sim,"]))
+            .unwrap();
+        assert!(!a.was_set("models"));
+        assert!(a.was_set("tasks"));
+        assert_eq!(a.get_str_list("models"), vec!["bert_sim", "distil_sim"]);
+        assert_eq!(a.get_str_list("tasks"), vec!["sst2_sim", "paws_sim"]);
+        let b = Args::new().opt("tasks", "", "").parse(&sv(&[])).unwrap();
+        assert!(b.get_str_list("tasks").is_empty());
     }
 
     #[test]

@@ -1,0 +1,155 @@
+//! Acceptance tests for the `eval::harness` sweep (tentpole of the
+//! Table-1 evaluation PR), on the native backend with a fixed-seed random
+//! checkpoint (accuracy values are chance-level; the contracts under test
+//! — frontier shape, saturated-α exactness, schema round-trip, Eq.-9
+//! consistency — do not depend on task skill):
+//!
+//! * the per-model Pareto frontier is monotone: accuracy non-increasing
+//!   as the FLOPs budget shrinks along the frontier;
+//! * an α deep in the saturated regime (every token's Eq.-9 budget clamps
+//!   to d, so the estimator takes the exact-fallback path) reproduces the
+//!   exact pass bit-for-bit at the prediction level: agreement 1.0 and an
+//!   identical metric value;
+//! * `BENCH_eval.json` round-trips through its schema parser.
+
+mod common;
+
+use mca::eval::harness::{self, HarnessOptions, Knob};
+use mca::model::checkpoint_path;
+use mca::runtime::BackendSpec;
+use mca::train::TrainConfig;
+
+/// A sweep over one model/three tasks (incl. the 3-class topic head) with
+/// a random (untrained) checkpoint
+/// pre-seeded into the cache, so no training runs in the test.
+fn run_small_sweep(tag: &str, alphas: Vec<f64>, epsilons: Vec<f64>) -> harness::HarnessReport {
+    let backend = BackendSpec::Native;
+    let model = "distil_sim";
+    let root = std::env::temp_dir().join(format!("mca_eval_harness_{tag}"));
+    std::fs::create_dir_all(&root).unwrap();
+    for task in ["sst2_sim", "paws_sim", "topic_sim"] {
+        let (src, _) = common::make_checkpoint(&backend, model, &format!("evh_{tag}_{task}"));
+        std::fs::copy(&src, checkpoint_path(&root, model, task)).unwrap();
+    }
+    let opts = HarnessOptions {
+        models: vec![model.to_string()],
+        tasks: vec![
+            "sst2_sim".to_string(),
+            "paws_sim".to_string(),
+            "topic_sim".to_string(),
+        ],
+        alphas,
+        epsilons,
+        workers: 2,
+        queue_cap: 0, // sized to the dev slice: lockstep passes never shed
+        brownout_watermark: 0,
+        canary_rate: 0.0,
+        max_wait_ms: 5,
+        dev_limit: 24,
+        ckpt_root: root,
+        train_cfg: TrainConfig { steps: 1, ..TrainConfig::default() },
+        data_seed: 4242,
+        verbose: false,
+    };
+    harness::run_sweep(&backend, &opts).unwrap()
+}
+
+#[test]
+fn sweep_contracts_on_the_native_pool() {
+    let rep = run_small_sweep("main", vec![1e-6, 0.4], vec![1e6]);
+
+    // Every (task, knob) pair produced a point, nothing was shed, every
+    // request completed.
+    assert_eq!(rep.points.len(), 3 * 4); // 3 tasks × (exact + 2 α + 1 ε)
+    for p in &rep.points {
+        assert_eq!(p.completed, 24, "{p:?}");
+        assert_eq!(p.shed, 0, "{p:?}");
+    }
+
+    for task in ["sst2_sim", "paws_sim", "topic_sim"] {
+        let find = |knob: Knob| {
+            rep.points
+                .iter()
+                .find(|p| p.task == task && p.knob == knob)
+                .unwrap_or_else(|| panic!("missing point {task}/{knob}"))
+        };
+        let exact = find(Knob::Exact);
+        assert_eq!(exact.agreement, 1.0);
+        assert_eq!(exact.flops_reduction, 1.0);
+        assert_eq!(exact.r_sum, 0);
+        assert_eq!(exact.accuracy, exact.baseline);
+
+        // α deep in the saturated regime: every token's budget clamps to
+        // d and the estimator falls back to the exact product, so the
+        // served predictions must match the exact pass bit-for-bit.
+        let sat = find(Knob::Alpha(1e-6));
+        assert_eq!(sat.agreement, 1.0, "saturated pass diverged: {sat:?}");
+        assert_eq!(sat.accuracy, sat.baseline, "saturated accuracy drifted");
+        // ... and Eq. 9 then charges the full encode budget: factor 1.
+        assert!(
+            (sat.flops_reduction - 1.0).abs() < 1e-9,
+            "saturated factor {}",
+            sat.flops_reduction
+        );
+        assert!(sat.r_sum > 0);
+
+        // A real MCA point samples fewer rows than the budget cap and
+        // must report a measured reduction > 1 with a positive Σrᵢ.
+        let mca = find(Knob::Alpha(0.4));
+        assert!(mca.flops_reduction >= 1.0, "{}", mca.flops_reduction);
+        assert!(mca.r_sum > 0);
+        assert!(mca.r_sum < sat.r_sum, "α=0.4 should sample under the cap");
+
+        // A huge ε budget resolves to the cheap end of the α grid.
+        let eps = find(Knob::Epsilon(1e6));
+        assert!(eps.resolved_alpha > 0.0 && eps.resolved_alpha <= 1.0, "{eps:?}");
+    }
+
+    // Frontier: one per model, non-empty, monotone (accuracy
+    // non-increasing as FLOPs reduction grows), and only sweep knobs.
+    assert_eq!(rep.frontiers.len(), 1);
+    let frontier = &rep.frontiers[0].points;
+    assert!(!frontier.is_empty());
+    for w in frontier.windows(2) {
+        assert!(w[1].flops_reduction >= w[0].flops_reduction, "{frontier:?}");
+        assert!(w[1].accuracy <= w[0].accuracy, "frontier not monotone: {frontier:?}");
+    }
+    let knob_set = [Knob::Exact, Knob::Alpha(1e-6), Knob::Alpha(0.4), Knob::Epsilon(1e6)];
+    for p in frontier {
+        assert!(knob_set.contains(&p.knob), "{:?}", p.knob);
+    }
+
+    // Pool counters: every pair served the full 4-pass workload.
+    assert_eq!(rep.pools.len(), 3);
+    for c in &rep.pools {
+        assert_eq!(c.served, 4 * 24, "{c:?}");
+        assert_eq!(c.shed, 0);
+        assert!(c.batches > 0);
+    }
+
+    // BENCH_eval.json round-trips through the schema parser.
+    let path = std::env::temp_dir().join("mca_eval_harness_roundtrip.json");
+    harness::write_bench_eval_json(&path, &rep).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let parsed =
+        harness::bench_eval_from_json(&mca::util::json::Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(parsed, rep);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn unknown_task_and_regression_tasks_are_rejected() {
+    let opts = HarnessOptions {
+        tasks: vec!["nope_sim".to_string()],
+        ..HarnessOptions::default()
+    };
+    assert!(harness::run_sweep(&BackendSpec::Native, &opts).is_err());
+    let opts = HarnessOptions {
+        tasks: vec!["stsb_sim".to_string()],
+        ..HarnessOptions::default()
+    };
+    let err = harness::run_sweep(&BackendSpec::Native, &opts).unwrap_err();
+    assert!(format!("{err:#}").contains("regression"), "{err:#}");
+    let opts = HarnessOptions { models: vec![], ..HarnessOptions::default() };
+    assert!(harness::run_sweep(&BackendSpec::Native, &opts).is_err());
+}

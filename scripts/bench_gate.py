@@ -1,0 +1,325 @@
+#!/usr/bin/env python3
+"""CI bench-regression gate: diff fresh BENCH_*.json artifacts against the
+committed baselines in bench/baselines/ and fail on regressions.
+
+Usage (from the repo root):
+
+    python3 scripts/bench_gate.py [--baselines bench/baselines] \
+        [--update] [--self-test] BENCH_kernels.json BENCH_serving.json ...
+
+Behavior:
+
+* Each fresh file is compared to the baseline of the same filename.
+* A missing baseline is *seeded*: the fresh file is copied into the
+  baselines directory and that file passes with a note. (CI runs on a
+  clean checkout, so an un-committed baseline is seeded fresh on every
+  run and gates nothing; committing the seeded file arms the gate. See
+  BENCHMARKS.md "Bench-regression gating".)
+* Entries are matched by a per-schema key; a baseline entry with no
+  fresh counterpart is a failure (a benchmark silently disappeared), and
+  so is a gated metric vanishing from a matched entry.
+* Metrics compare direction-aware with per-metric relative tolerances
+  (see TOLERANCES): latency-like metrics fail when the fresh value is
+  too far *above* baseline, throughput/quality-like metrics when too far
+  *below*. Unlisted metrics are informational and never gate.
+* --update rewrites every baseline from the fresh files (the documented
+  refresh procedure after an intentional perf change).
+* --self-test runs the built-in unit test (no files needed): identical
+  artifacts must pass, a deliberate 2x latency perturbation and a
+  quality drop must both be caught, and sub-tolerance jitter must pass.
+
+Exit code 0 = gate passed, 1 = regression (or self-test failure),
+2 = usage/schema error. Stdlib only.
+"""
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+# metric -> (direction, relative tolerance). Direction "up" = larger is a
+# regression (times), "down" = smaller is a regression (throughput and
+# quality). Tolerances are deliberately loose for wall-clock metrics: CI
+# runners are noisy, and the gate must only catch step-change regressions
+# (the acceptance bar is catching a 2x latency jump).
+TOLERANCES = {
+    # timings (ns from cargo bench, ms from the serving loadtest)
+    "mean_ns": ("up", 0.75),
+    "p50_ns": ("up", 0.75),
+    "p99_ns": ("up", 0.90),
+    "mean_ms": ("up", 0.75),
+    "p50_ms": ("up", 0.75),
+    "p99_ms": ("up", 0.90),
+    # throughput
+    "items_per_s": ("down", 0.45),
+    "achieved_rps": ("down", 0.45),
+    # quality / accounting (BENCH_eval.json) — these are seeded-determinism
+    # metrics, so the tolerances are tight
+    "accuracy": ("down", 0.08),
+    "agreement": ("down", 0.10),
+    "flops_reduction": ("down", 0.25),
+}
+
+
+def entry_key(bench_kind, entry, ordinal):
+    """Stable identity of one entry within its artifact."""
+    if bench_kind == "kernels":
+        return (entry.get("group"), entry.get("name"))
+    if bench_kind == "serving":
+        # offered_rps of replay/burst entries is a measured drain rate, so
+        # identity is (workers, kind, per-group ordinal).
+        return (entry.get("workers"), entry.get("kind"), ordinal)
+    if bench_kind == "eval":
+        return (
+            entry.get("model"),
+            entry.get("task"),
+            entry.get("knob"),
+            entry.get("alpha"),
+            entry.get("epsilon"),
+        )
+    return (ordinal,)
+
+
+def load_entries(doc):
+    """(bench kind, {key: entry}) for one BENCH_*.json document."""
+    kind = doc.get("bench")
+    if kind is None or "entries" not in doc:
+        raise ValueError("not a BENCH_*.json document (missing bench/entries)")
+    out = {}
+    group_counts = {}
+    for entry in doc["entries"]:
+        group = (entry.get("workers"), entry.get("kind"))
+        ordinal = group_counts.get(group, 0)
+        group_counts[group] = ordinal + 1
+        key = entry_key(kind, entry, ordinal)
+        out[key] = entry
+    return kind, out
+
+
+def compare_entry(key, base, fresh, rows):
+    """Append delta rows for one matched entry; return regression count."""
+    regressions = 0
+    for metric, (direction, tol) in TOLERANCES.items():
+        if metric not in base:
+            continue  # metric newly added in fresh: informational
+        if metric not in fresh:
+            # A gated metric disappearing from the fresh artifact is the
+            # same silent-regression class as a disappearing entry.
+            rows.append((key, metric, None, None, None, "FAIL (metric missing from fresh run)"))
+            regressions += 1
+            continue
+        b, f = float(base[metric]), float(fresh[metric])
+        if b == 0.0:
+            continue  # nothing to scale against; informational
+        delta = (f - b) / abs(b)
+        worse = delta > tol if direction == "up" else delta < -tol
+        if worse:
+            regressions += 1
+        rows.append((key, metric, b, f, delta, "FAIL" if worse else "ok"))
+    return regressions
+
+
+def gate_file(fresh_path, baseline_dir, update, report):
+    """Gate one artifact; returns the number of regressions."""
+    name = os.path.basename(fresh_path)
+    base_path = os.path.join(baseline_dir, name)
+    with open(fresh_path) as f:
+        fresh_kind, fresh = load_entries(json.load(f))
+
+    if update or not os.path.exists(base_path):
+        os.makedirs(baseline_dir, exist_ok=True)
+        shutil.copyfile(fresh_path, base_path)
+        verb = "updated" if update else "seeded"
+        report.append(f"{name}: baseline {verb} from fresh run ({len(fresh)} entries) — pass")
+        return 0
+
+    with open(base_path) as f:
+        base_kind, base = load_entries(json.load(f))
+    if base_kind != fresh_kind:
+        report.append(f"{name}: FAIL — bench kind changed ({base_kind} -> {fresh_kind})")
+        return 1
+
+    regressions = 0
+    rows = []
+    for key, base_entry in base.items():
+        if key not in fresh:
+            rows.append((key, "<entry>", None, None, None, "FAIL (missing from fresh run)"))
+            regressions += 1
+            continue
+        regressions += compare_entry(key, base_entry, fresh[key], rows)
+    added = [k for k in fresh if k not in base]
+
+    report.append(f"{name}: {len(base)} baseline entries, {len(added)} new (informational)")
+    width = max((len(str(k)) for k, *_ in rows), default=10)
+    for key, metric, b, f, delta, verdict in rows:
+        if b is None:
+            report.append(f"  {str(key):<{width}}  {metric:<16} {verdict}")
+        elif verdict == "FAIL" or os.environ.get("BENCH_GATE_VERBOSE"):
+            report.append(
+                f"  {str(key):<{width}}  {metric:<16} {b:>12.4g} -> {f:>12.4g}"
+                f"  ({delta:+.1%})  {verdict}"
+            )
+    fails = sum(1 for r in rows if r[-1].startswith("FAIL"))
+    report.append(f"  -> {fails} failing metric(s)" if regressions else "  -> ok")
+    return regressions
+
+
+def self_test():
+    """Built-in unit test of the gate logic (the acceptance check: a 2x
+    latency perturbation of a baseline metric must be caught)."""
+    base = {
+        "bench": "kernels",
+        "entries": [
+            {
+                "group": "gemm",
+                "name": "gemm/64x128x128 kernel",
+                "mean_ns": 100000.0,
+                "p50_ns": 90000.0,
+                "p99_ns": 200000.0,
+                "items_per_s": 640.0,
+            }
+        ],
+    }
+    import copy
+    import tempfile
+
+    def run(fresh_doc, base_doc=base):
+        with tempfile.TemporaryDirectory() as d:
+            bdir = os.path.join(d, "baselines")
+            os.makedirs(bdir)
+            fp = os.path.join(d, "BENCH_kernels.json")
+            with open(fp, "w") as f:
+                json.dump(fresh_doc, f)
+            with open(os.path.join(bdir, "BENCH_kernels.json"), "w") as f:
+                json.dump(base_doc, f)
+            report = []
+            n = gate_file(fp, bdir, update=False, report=report)
+            return n, report
+
+    failures = []
+
+    def check(cond, what):
+        if not cond:
+            failures.append(what)
+
+    # identical artifacts pass
+    n, _ = run(copy.deepcopy(base))
+    check(n == 0, f"identical artifact flagged ({n} regressions)")
+
+    # a deliberate 2x latency perturbation is caught
+    slow = copy.deepcopy(base)
+    slow["entries"][0]["p50_ns"] *= 2.0
+    n, report = run(slow)
+    check(n >= 1, "2x p50_ns perturbation not caught")
+    check(any("FAIL" in line for line in report), "2x perturbation not reported")
+
+    # sub-tolerance jitter passes
+    jitter = copy.deepcopy(base)
+    jitter["entries"][0]["mean_ns"] *= 1.3
+    jitter["entries"][0]["items_per_s"] *= 0.8
+    n, _ = run(jitter)
+    check(n == 0, f"sub-tolerance jitter flagged ({n} regressions)")
+
+    # a throughput collapse is caught
+    slow_tp = copy.deepcopy(base)
+    slow_tp["entries"][0]["items_per_s"] *= 0.4
+    n, _ = run(slow_tp)
+    check(n >= 1, "throughput collapse not caught")
+
+    # a disappeared entry is caught
+    n, _ = run({"bench": "kernels", "entries": []})
+    check(n >= 1, "disappeared entry not caught")
+
+    # a disappeared *metric* is caught too (same silent-regression class)
+    dropped = copy.deepcopy(base)
+    del dropped["entries"][0]["p99_ns"]
+    n, report = run(dropped)
+    check(n >= 1, "disappeared metric not caught")
+    check(any("metric missing" in line for line in report), "metric loss not reported")
+
+    # an eval accuracy drop beyond tolerance is caught; matching is by
+    # (model, task, knob, alpha, epsilon)
+    ebase = {
+        "bench": "eval",
+        "entries": [
+            {
+                "model": "distil_sim",
+                "task": "sst2_sim",
+                "knob": "alpha",
+                "alpha": 0.3,
+                "accuracy": 0.90,
+                "agreement": 0.97,
+                "flops_reduction": 3.2,
+            }
+        ],
+    }
+    edrop = copy.deepcopy(ebase)
+    edrop["entries"][0]["accuracy"] = 0.70
+    with tempfile.TemporaryDirectory() as d:
+        bdir = os.path.join(d, "baselines")
+        os.makedirs(bdir)
+        fp = os.path.join(d, "BENCH_eval.json")
+        with open(fp, "w") as f:
+            json.dump(edrop, f)
+        with open(os.path.join(bdir, "BENCH_eval.json"), "w") as f:
+            json.dump(ebase, f)
+        report = []
+        n = gate_file(fp, bdir, update=False, report=report)
+        check(n >= 1, "eval accuracy drop not caught")
+
+    # seeding: a missing baseline is copied and passes
+    with tempfile.TemporaryDirectory() as d:
+        bdir = os.path.join(d, "baselines")
+        fp = os.path.join(d, "BENCH_kernels.json")
+        with open(fp, "w") as f:
+            json.dump(base, f)
+        report = []
+        n = gate_file(fp, bdir, update=False, report=report)
+        check(n == 0, "seeding flagged a regression")
+        check(os.path.exists(os.path.join(bdir, "BENCH_kernels.json")), "baseline not seeded")
+        check(any("seeded" in line for line in report), "seeding not reported")
+
+    if failures:
+        print("bench_gate self-test FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("bench_gate self-test ok (8 scenarios)")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", nargs="*", help="fresh BENCH_*.json files to gate")
+    ap.add_argument("--baselines", default="bench/baselines", help="committed baseline dir")
+    ap.add_argument("--update", action="store_true", help="rewrite baselines from fresh files")
+    ap.add_argument("--self-test", action="store_true", help="run the built-in unit test")
+    args = ap.parse_args()
+
+    if args.self_test:
+        sys.exit(self_test())
+    if not args.fresh:
+        ap.error("no fresh BENCH_*.json files given (or use --self-test)")
+
+    total = 0
+    report = []
+    for path in args.fresh:
+        if not os.path.exists(path):
+            print(f"error: {path} does not exist", file=sys.stderr)
+            sys.exit(2)
+        try:
+            total += gate_file(path, args.baselines, args.update, report)
+        except (ValueError, KeyError, json.JSONDecodeError) as e:
+            print(f"error: {path}: {e}", file=sys.stderr)
+            sys.exit(2)
+
+    print("\n".join(report))
+    if total:
+        print(f"\nbench gate: {total} regression(s) vs {args.baselines} — failing")
+        sys.exit(1)
+    print("\nbench gate: pass")
+
+
+if __name__ == "__main__":
+    main()
