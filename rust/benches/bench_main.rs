@@ -25,7 +25,7 @@ use mca::mca::{self as mcacore, flops::AttnDims};
 use mca::model::Params;
 use mca::rng::{AliasTable, Pcg64};
 use mca::runtime::{Backend, ForwardSpec, NativeBackend};
-use mca::tensor::{kernel, reference, Tensor};
+use mca::tensor::{kernel, reference, PackedB, Precision, Tensor};
 use mca::tokenizer::Tokenizer;
 use mca::train::make_batch;
 
@@ -59,6 +59,8 @@ fn main() {
                     alpha: alphas[i % 3],
                     mode: "mca".into(),
                     budget: None,
+                    precision: Precision::F32,
+                    quantized: false,
                 },
                 arrived: now,
             })
@@ -143,9 +145,9 @@ fn main() {
     let mut kernel_results = Vec::new();
     let mut kentries: Vec<KernelBenchEntry> = Vec::new();
     {
-        type Meta<'a> = (&'a str, &'a str, &'a str, Option<usize>, Option<f64>);
+        type Meta<'a> = (&'a str, &'a str, &'a str, Option<usize>, Option<f64>, Option<&'a str>);
         let mut push = |meta: Meta, res: mca::bench::BenchResult| {
-            let (group, shape, mode, r, alpha) = meta;
+            let (group, shape, mode, r, alpha, precision) = meta;
             kernel_results.push(res.clone());
             kentries.push(KernelBenchEntry {
                 group: group.to_string(),
@@ -154,6 +156,7 @@ fn main() {
                 mode: mode.to_string(),
                 r,
                 alpha,
+                precision: precision.map(str::to_string),
                 result: res,
             });
         };
@@ -163,18 +166,18 @@ fn main() {
         let res = b.run("kernel/gemm_64x128x128 (reference loops)", Some(64.0), || {
             std::hint::black_box(reference::matmul(&x, &w).unwrap());
         });
-        push(("gemm", "64x128x128", "reference", None, None), res);
+        push(("gemm", "64x128x128", "reference", None, None, None), res);
         let res = b.run("kernel/gemm_64x128x128 (blocked)", Some(64.0), || {
             std::hint::black_box(kernel::matmul(&x, &w, 1).unwrap());
         });
-        push(("gemm", "64x128x128", "kernel", None, None), res);
+        push(("gemm", "64x128x128", "kernel", None, None, None), res);
         // FFN up-projection with the fused bias+GELU epilogue (d_ff=512)
         let w1 = Tensor::from_fn(&[128, 512], |_| rng.gen_normal() as f32);
         let bias = vec![0.01f32; 512];
         let res = b.run("kernel/gemm_bias_gelu_64x128x512 (fused)", Some(64.0), || {
             std::hint::black_box(kernel::matmul_bias_gelu(&x, &w1, &bias, 1).unwrap());
         });
-        push(("gemm", "64x128x512", "kernel", None, None), res);
+        push(("gemm", "64x128x512", "kernel", None, None, None), res);
         // Attention scores with the fused scale+mask+softmax epilogue
         let qh = Tensor::from_fn(&[64, 32], |_| rng.gen_normal() as f32);
         let kh = Tensor::from_fn(&[64, 32], |_| rng.gen_normal() as f32);
@@ -183,7 +186,28 @@ fn main() {
             let s = kernel::attn_scores_softmax(&qh, &kh, 0.17, -1e9, &visible, 1);
             std::hint::black_box(s.unwrap());
         });
-        push(("gemm", "64x32x64", "kernel", None, None), res);
+        push(("gemm", "64x32x64", "kernel", None, None, None), res);
+
+        // Prepacked B-strip cache vs per-call packing: the checkpoint
+        // weight-cache win — steady-state forwards reuse the packed strips
+        // and never touch pack_b. The two f32 entries are the acceptance
+        // evidence; the bf16/int8 entries time the quantized GEMM paths on
+        // the same prepacked route.
+        let res = b.run("kernel/gemm_64x128x128 (per-call pack)", Some(64.0), || {
+            std::hint::black_box(kernel::matmul(&x, &w, 1).unwrap());
+        });
+        push(("gemm_prepack", "64x128x128", "kernel", None, None, Some("f32")), res);
+        for prec in [Precision::F32, Precision::Bf16, Precision::Int8] {
+            let pb = PackedB::pack(&w, prec).unwrap();
+            let label = format!("kernel/gemm_64x128x128 (prepacked {})", prec);
+            let res = b.run(&label, Some(64.0), || {
+                std::hint::black_box(kernel::matmul_prepacked(&x, &pb, 1).unwrap());
+            });
+            push(
+                ("gemm_prepack", "64x128x128", "prepacked", None, None, Some(prec.as_str())),
+                res,
+            );
+        }
 
         // MCA encode: exact baseline, then the Eq. 9 r sweep.
         let p = mcacore::sampling_probs(&w);
@@ -191,7 +215,7 @@ fn main() {
         let res = b.run("kernel/exact_encode_64x128 (baseline)", Some(64.0), || {
             std::hint::black_box(x.matmul(&w).unwrap());
         });
-        push(("encode", "64x128x128", "exact", None, None), res);
+        push(("encode", "64x128x128", "exact", None, None, None), res);
         for (label, r_val, alpha) in [
             ("kernel/mca_encode_64x128_r8   (~a0.2)", 8usize, 0.2f64),
             ("kernel/mca_encode_64x128_r32  (~a0.5)", 32, 0.5),
@@ -202,14 +226,25 @@ fn main() {
             let res = b.run(label, Some(64.0), || {
                 std::hint::black_box(mcacore::mca_encode_pooled(&x, &w, &r, &p, &pool));
             });
-            push(("encode", "64x128x128", "mca", Some(r_val), Some(alpha)), res);
+            push(("encode", "64x128x128", "mca", Some(r_val), Some(alpha), None), res);
         }
         // mixed budgets as produced by Eq. 9 on a real pass
         let r_mixed: Vec<usize> = (0..64).map(|i| 1 + (i * 2) % 128).collect();
         let res = b.run("kernel/mca_encode_64x128_mixed", Some(64.0), || {
             std::hint::black_box(mcacore::mca_encode_pooled(&x, &w, &r_mixed, &p, &pool));
         });
-        push(("encode", "64x128x128", "mca", None, None), res);
+        push(("encode", "64x128x128", "mca", None, None, None), res);
+        // Quantized value rows: the int8/bf16 encode paths dequantize the
+        // sampled rows on the fly inside the batched-AXPY loop.
+        let r32 = vec![32usize; 64];
+        for prec in [Precision::Bf16, Precision::Int8] {
+            let rows = mcacore::EncodeRows::quantize(&w, prec).unwrap();
+            let label = format!("kernel/mca_encode_64x128_r32 ({} rows)", prec);
+            let res = b.run(&label, Some(64.0), || {
+                std::hint::black_box(mcacore::mca_encode_pooled_quant(&x, &rows, &r32, &p, &pool));
+            });
+            push(("encode", "64x128x128", "mca", Some(32), Some(0.5), Some(prec.as_str())), res);
+        }
     }
     for r in &kernel_results {
         println!("{}", r.report());
@@ -248,6 +283,7 @@ fn main() {
                     mode: mode.to_string(),
                     r: None,
                     alpha: Some(alpha as f64),
+                    precision: None,
                     result: res,
                 });
             }

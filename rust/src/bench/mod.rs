@@ -157,6 +157,9 @@ pub struct KernelBenchEntry {
     pub r: Option<usize>,
     /// MCA precision knob for forward entries
     pub alpha: Option<f64>,
+    /// compute precision ("f32" | "bf16" | "int8") for entries on the
+    /// quantized GEMM paths; `None` for precision-agnostic entries
+    pub precision: Option<String>,
     /// the measured timing
     pub result: BenchResult,
 }
@@ -177,6 +180,9 @@ pub fn write_kernel_bench_json(path: &Path, entries: &[KernelBenchEntry]) -> Res
         }
         if let Some(a) = e.alpha {
             m.insert("alpha".to_string(), Json::Num(a));
+        }
+        if let Some(p) = &e.precision {
+            m.insert("precision".to_string(), Json::Str(p.clone()));
         }
         m.insert("iters".to_string(), Json::Num(e.result.iters as f64));
         m.insert("mean_ns".to_string(), Json::Num(e.result.mean.as_nanos() as f64));
@@ -237,6 +243,7 @@ mod tests {
                 mode: "kernel".into(),
                 r: None,
                 alpha: None,
+                precision: None,
                 result: res.clone(),
             },
             KernelBenchEntry {
@@ -246,6 +253,7 @@ mod tests {
                 mode: "mca".into(),
                 r: Some(8),
                 alpha: Some(0.2),
+                precision: Some("int8".into()),
                 result: res,
             },
         ];
@@ -257,8 +265,10 @@ mod tests {
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0].get("group").unwrap().as_str().unwrap(), "gemm");
         assert!(rows[0].opt("r").is_none());
+        assert!(rows[0].opt("precision").is_none());
         assert_eq!(rows[0].get("mean_ns").unwrap().as_usize().unwrap(), 120_000);
         assert_eq!(rows[1].get("r").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(rows[1].get("precision").unwrap().as_str().unwrap(), "int8");
         assert!((rows[1].get("alpha").unwrap().as_f64().unwrap() - 0.2).abs() < 1e-12);
         assert_eq!(rows[1].get("iters").unwrap().as_usize().unwrap(), 42);
         let _ = std::fs::remove_file(&path);

@@ -49,6 +49,7 @@ use crate::model::Params;
 use crate::runtime::{
     open_backend_sized, Backend, BackendSpec, ForwardSpec, HostValue, ModelStats,
 };
+use crate::tensor::Precision;
 use crate::tokenizer::Tokenizer;
 use crate::util::threadpool;
 
@@ -87,6 +88,13 @@ pub struct Request {
     pub alpha: f32,
     /// "mca" (default) or "exact"
     pub mode: String,
+    /// compute precision the request is served at (the kernel's
+    /// f32/bf16/int8 GEMM paths); the admission ladder's quantized rung
+    /// may lower this to [`Precision::Int8`] instead of shedding
+    pub precision: Precision,
+    /// true once the admission ladder's quantized rung rerouted this
+    /// request to the int8 path (set alongside `precision`)
+    pub quantized: bool,
     /// present iff this is an ε-budget request (SLO-driven precision)
     pub budget: Option<Budget>,
 }
@@ -121,6 +129,11 @@ pub struct Response {
     pub mode: String,
     /// true for ε-budget requests (`alpha` echoes the resolution)
     pub budget: bool,
+    /// compute precision this request was actually served at
+    pub precision: Precision,
+    /// true when the admission ladder's quantized rung rerouted this
+    /// request to int8 instead of shedding it
+    pub quantized: bool,
     /// true when precision brownout served this request at its budget
     /// ceiling `alpha_max` instead of the controller target
     pub degraded: bool,
@@ -151,18 +164,19 @@ pub struct BatchPlan {
     pub bucket: usize,
 }
 
-/// Group compatible requests (same mode + α bits) into the largest
-/// available bucket; smaller groups ride a padded bucket when their oldest
-/// member has waited past `max_wait`, otherwise stay queued.
+/// Group compatible requests (same mode + α bits + compute precision)
+/// into the largest available bucket; smaller groups ride a padded bucket
+/// when their oldest member has waited past `max_wait`, otherwise stay
+/// queued.
 ///
 /// A group that is not yet ready does NOT block the scan: later groups
 /// that are full or timed out are still planned (no head-of-line blocking
 /// behind a fresh under-full group).
 ///
 /// Invariants (property-tested): every index appears in at most one batch;
-/// batch size <= bucket; all requests in a batch share (mode, alpha);
-/// indices within a batch are in queue (FIFO) order; no ready group is
-/// left unplanned.
+/// batch size <= bucket; all requests in a batch share (mode, alpha,
+/// precision); indices within a batch are in queue (FIFO) order; no ready
+/// group is left unplanned.
 pub fn plan_batches(
     queue: &[Pending],
     buckets: &[usize],
@@ -178,13 +192,18 @@ pub fn plan_batches(
 
     loop {
         let Some(head) = (0..queue.len()).find(|&i| !used[i] && !waiting[i]) else { break };
-        let key = (queue[head].req.mode.clone(), queue[head].req.alpha.to_bits());
+        let key = (
+            queue[head].req.mode.clone(),
+            queue[head].req.alpha.to_bits(),
+            queue[head].req.precision,
+        );
         let group: Vec<usize> = (head..queue.len())
             .filter(|&i| {
                 !used[i]
                     && !waiting[i]
                     && queue[i].req.mode == key.0
                     && queue[i].req.alpha.to_bits() == key.1
+                    && queue[i].req.precision == key.2
             })
             .take(max_bucket)
             .collect();
@@ -238,13 +257,27 @@ pub fn batch_cost(mode: &str, alpha: f32, rows: usize) -> f64 {
     rows as f64 * per_row
 }
 
+/// Relative cost multiplier of a compute precision. The quantized kernel
+/// paths move fewer bytes per multiply (int8 panels are a quarter of the
+/// f32 footprint, bf16 half), so routing a request down the precision
+/// ladder shrinks its admission cost instead of shedding it — the
+/// quantized rung's headroom.
+pub fn precision_cost_factor(prec: Precision) -> f64 {
+    match prec {
+        Precision::F32 => 1.0,
+        Precision::Bf16 => 0.75,
+        Precision::Int8 => 0.5,
+    }
+}
+
 /// Eq.-9 cost of one queued request — the unit the admission cap bounds.
-/// For exact and α ≤ 0.5 traffic this is exactly 1 (a request count);
-/// cheap high-α rows cost less, which is what gives the precision
+/// For exact and α ≤ 0.5 f32 traffic this is exactly 1 (a request
+/// count); cheap high-α rows cost less, which is what gives the precision
 /// brownout its headroom: degrading queued budget requests toward their
-/// α ceiling shrinks the queue's cost without dropping anything.
+/// α ceiling shrinks the queue's cost without dropping anything. Quantized
+/// precisions scale the cost down by [`precision_cost_factor`].
 pub fn row_cost(req: &Request) -> f64 {
-    batch_cost(&req.mode, req.alpha, 1)
+    batch_cost(&req.mode, req.alpha, 1) * precision_cost_factor(req.precision)
 }
 
 /// Dispatch priority over ready plans: overdue batches first (longest
@@ -264,7 +297,8 @@ pub fn rank_plans(
             let head = &queue[plan.indices[0]].req;
             let oldest = plan.indices.iter().map(|&i| queue[i].arrived).min().expect("nonempty");
             let waited = now.saturating_duration_since(oldest);
-            let cost = batch_cost(&head.mode, head.alpha, plan.indices.len());
+            let cost = batch_cost(&head.mode, head.alpha, plan.indices.len())
+                * precision_cost_factor(head.precision);
             (waited >= overdue_after, cost, waited, k)
         })
         .collect();
@@ -456,6 +490,9 @@ pub struct ServerStats {
     pub brownout_exits: usize,
     /// requests served at their budget ceiling because of brownout
     pub degraded: usize,
+    /// requests rerouted to the quantized (int8) precision rung — the
+    /// admission ladder's last stop before shedding
+    pub quantized: usize,
     /// admitted ε-budget requests
     pub budget_requests: usize,
     /// budgets below the α-grid floor, resolved to the exact path
@@ -496,12 +533,27 @@ impl Submitter {
     /// response only if the server shuts down or the batch fails
     /// mid-flight.
     pub fn submit(&self, text: &str, alpha: f32, mode: &str) -> mpsc::Receiver<Response> {
+        self.submit_with_precision(text, alpha, mode, Precision::F32)
+    }
+
+    /// [`Submitter::submit`] with an explicit compute precision: the
+    /// request batches only with same-precision traffic and runs on the
+    /// kernel's matching f32/bf16/int8 GEMM path.
+    pub fn submit_with_precision(
+        &self,
+        text: &str,
+        alpha: f32,
+        mode: &str,
+        precision: Precision,
+    ) -> mpsc::Receiver<Response> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.send(Request {
             id,
             text: text.to_string(),
             alpha,
             mode: mode.to_string(),
+            precision,
+            quantized: false,
             budget: None,
         })
     }
@@ -516,12 +568,25 @@ impl Submitter {
         epsilon: f64,
         delta: Option<f64>,
     ) -> mpsc::Receiver<Response> {
+        self.submit_budget_with_precision(text, epsilon, delta, Precision::F32)
+    }
+
+    /// [`Submitter::submit_budget`] with an explicit compute precision.
+    pub fn submit_budget_with_precision(
+        &self,
+        text: &str,
+        epsilon: f64,
+        delta: Option<f64>,
+        precision: Precision,
+    ) -> mpsc::Receiver<Response> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.send(Request {
             id,
             text: text.to_string(),
             alpha: 1.0,
             mode: "mca".to_string(),
+            precision,
+            quantized: false,
             budget: Some(Budget { epsilon, delta, alpha_max: 1.0, degraded: false }),
         })
     }
@@ -841,7 +906,9 @@ impl Dispatcher {
 
     /// Admission ladder: resolve any ε budget, then admit within the cost
     /// cap; at the cap, try the precision-brownout stage (degrade queued
-    /// budget requests to their α ceiling) before shedding.
+    /// budget requests to their α ceiling), then the quantized rung
+    /// (reroute the arriving request to the int8 GEMM path at half the
+    /// row cost), before shedding.
     fn admit(&mut self, mut p: Pending, rtx: mpsc::Sender<Response>) {
         if self.draining {
             self.metrics.on_shed();
@@ -851,11 +918,16 @@ impl Dispatcher {
         self.resolve(&mut p);
         let cap = self.cfg.queue_cap.max(1) as f64;
         if self.queued_cost + row_cost(&p.req) > cap + COST_EPS {
-            // Ladder step 2 (only when the brownout stage is enabled):
-            // degrade before shedding.
+            // Ladder steps 2–3 (only when the brownout stage is enabled):
+            // degrade, then quantize, before shedding.
             if self.cfg.brownout_watermark > 0 {
                 self.enter_brownout();
                 degrade_to_ceiling(&mut p.req);
+                if self.queued_cost + row_cost(&p.req) > cap + COST_EPS
+                    && quantize_to_int8(&mut p.req)
+                {
+                    self.metrics.on_quantized();
+                }
             }
             if self.queued_cost + row_cost(&p.req) > cap + COST_EPS {
                 self.metrics.on_shed();
@@ -1069,6 +1141,8 @@ impl Dispatcher {
             text: sample.text.clone(),
             alpha: 1.0,
             mode: "exact".to_string(),
+            precision: Precision::F32,
+            quantized: false,
             budget: None,
         };
         self.queue.push_back((Pending { req, arrived: Instant::now() }, ctx));
@@ -1130,6 +1204,7 @@ impl Dispatcher {
             brownout_entries: m.brownout_entries,
             brownout_exits: m.brownout_exits,
             degraded: m.degraded,
+            quantized: m.quantized,
             budget_requests: m.budget_requests,
             budget_exact: m.budget_exact,
             canaries: m.canaries,
@@ -1140,6 +1215,19 @@ impl Dispatcher {
             per_alpha: m.alpha_summaries(),
         }
     }
+}
+
+/// Ladder step 3: reroute an MCA request still over the cost cap to the
+/// int8 GEMM path — the quantized rung between degrade and shed. Exact
+/// requests are never rerouted (exact means bit-exact f32 logits).
+/// Returns whether the precision changed.
+fn quantize_to_int8(req: &mut Request) -> bool {
+    if req.mode != "mca" || req.precision == Precision::Int8 {
+        return false;
+    }
+    req.precision = Precision::Int8;
+    req.quantized = true;
+    true
 }
 
 /// Raise an ε-budget MCA request to its resolved α ceiling (the cheapest
@@ -1170,6 +1258,8 @@ fn shed_response(p: &Pending) -> Response {
         alpha: p.req.alpha,
         mode: p.req.mode.clone(),
         budget: p.req.budget.is_some(),
+        precision: p.req.precision,
+        quantized: p.req.quantized,
         degraded: false,
         shed: true,
     }
@@ -1309,6 +1399,9 @@ fn execute_job(st: &mut WorkerState, job: Job) -> (BatchReport, Deliveries) {
     let ids_hv = HostValue::I32 { shape: vec![run_batch, seq], data: ids };
 
     let mut spec = ForwardSpec::new(&st.cfg.model, &mode, run_batch, seq);
+    // The batcher never mixes precisions, so the head request's
+    // precision is the batch's: it selects the backend's GEMM path.
+    spec.compute_dtype = first.precision.as_str().to_string();
     // A backend may lack this (mode, batch) combination — e.g. exact
     // artifacts are only compiled at some batch sizes. `warmup` is the
     // resolution probe (it compiles the exact shape on PJRT, a no-op on
@@ -1386,6 +1479,8 @@ fn execute_job(st: &mut WorkerState, job: Job) -> (BatchReport, Deliveries) {
             alpha,
             mode: mode.clone(),
             budget: pending.req.budget.is_some(),
+            precision: pending.req.precision,
+            quantized: pending.req.quantized,
             degraded: pending.req.budget.as_ref().is_some_and(|b| b.degraded),
             shed: false,
         };
@@ -1410,8 +1505,27 @@ mod tests {
     use crate::util::prop;
 
     fn pending(id: u64, alpha: f32, mode: &str, age_ms: u64, now: Instant) -> Pending {
+        pending_p(id, alpha, mode, Precision::F32, age_ms, now)
+    }
+
+    fn pending_p(
+        id: u64,
+        alpha: f32,
+        mode: &str,
+        precision: Precision,
+        age_ms: u64,
+        now: Instant,
+    ) -> Pending {
         Pending {
-            req: Request { id, text: String::new(), alpha, mode: mode.into(), budget: None },
+            req: Request {
+                id,
+                text: String::new(),
+                alpha,
+                mode: mode.into(),
+                precision,
+                quantized: false,
+                budget: None,
+            },
             arrived: now - Duration::from_millis(age_ms),
         }
     }
@@ -1473,6 +1587,25 @@ mod tests {
     }
 
     #[test]
+    fn mixed_precisions_do_not_share_batches() {
+        let now = Instant::now();
+        let mut q = Vec::new();
+        for i in 0..4 {
+            q.push(pending_p(i, 0.4, "mca", Precision::F32, 500, now));
+        }
+        for i in 4..8 {
+            q.push(pending_p(i, 0.4, "mca", Precision::Int8, 500, now));
+        }
+        let plans = plan_batches(&q, &[1, 8], Duration::from_millis(100), now);
+        assert_eq!(plans.len(), 2);
+        for plan in &plans {
+            let precs: std::collections::HashSet<Precision> =
+                plan.indices.iter().map(|&i| q[i].req.precision).collect();
+            assert_eq!(precs.len(), 1);
+        }
+    }
+
+    #[test]
     fn ready_group_behind_fresh_head_is_planned() {
         // Regression: a lone fresh request at the head must not block a
         // complete compatibility bucket queued behind it.
@@ -1507,12 +1640,14 @@ mod tests {
             let n = g.usize(0..24);
             let alphas = [0.2f32, 0.4, 0.6];
             let modes = ["mca", "exact"];
+            let precs = [Precision::F32, Precision::Bf16, Precision::Int8];
             let q: Vec<Pending> = (0..n)
                 .map(|i| {
-                    pending(
+                    pending_p(
                         i as u64,
                         *g.choose(&alphas),
                         *g.choose(&modes),
+                        *g.choose(&precs),
                         g.u64(0..300),
                         now,
                     )
@@ -1535,12 +1670,15 @@ mod tests {
                 let key = (
                     q[plan.indices[0]].req.mode.clone(),
                     q[plan.indices[0]].req.alpha.to_bits(),
+                    q[plan.indices[0]].req.precision,
                 );
                 for &i in &plan.indices {
                     if !seen.insert(i) {
                         return Err(format!("request {i} appears twice"));
                     }
-                    if (q[i].req.mode.clone(), q[i].req.alpha.to_bits()) != key {
+                    if (q[i].req.mode.clone(), q[i].req.alpha.to_bits(), q[i].req.precision)
+                        != key
+                    {
                         return Err("mixed batch".into());
                     }
                 }
@@ -1559,13 +1697,15 @@ mod tests {
             let n = g.usize(0..24);
             let alphas = [0.2f32, 0.4, 0.6];
             let modes = ["mca", "exact"];
+            let precs = [Precision::F32, Precision::Int8];
             let max_wait = Duration::from_millis(100);
             let q: Vec<Pending> = (0..n)
                 .map(|i| {
-                    pending(
+                    pending_p(
                         i as u64,
                         *g.choose(&alphas),
                         *g.choose(&modes),
+                        *g.choose(&precs),
                         g.u64(0..300),
                         now,
                     )
@@ -1587,28 +1727,28 @@ mod tests {
                     used[i] = true;
                 }
             }
-            let mut rest: std::collections::BTreeMap<(String, u32), (usize, Duration)> =
+            let mut rest: std::collections::BTreeMap<(String, u32, Precision), (usize, Duration)> =
                 Default::default();
             for i in 0..n {
                 if used[i] {
                     continue;
                 }
-                let key = (q[i].req.mode.clone(), q[i].req.alpha.to_bits());
+                let key = (q[i].req.mode.clone(), q[i].req.alpha.to_bits(), q[i].req.precision);
                 let waited = now.saturating_duration_since(q[i].arrived);
                 let e = rest.entry(key).or_insert((0, Duration::ZERO));
                 e.0 += 1;
                 e.1 = e.1.max(waited);
             }
-            for ((mode, bits), (count, waited)) in rest {
+            for ((mode, bits, prec), (count, waited)) in rest {
                 if count >= max_bucket {
                     return Err(format!(
-                        "full group ({mode}, {:.2}) of {count} left unplanned",
+                        "full group ({mode}, {:.2}, {prec}) of {count} left unplanned",
                         f32::from_bits(bits)
                     ));
                 }
                 if waited >= max_wait {
                     return Err(format!(
-                        "timed-out group ({mode}, {:.2}) left unplanned",
+                        "timed-out group ({mode}, {:.2}, {prec}) left unplanned",
                         f32::from_bits(bits)
                     ));
                 }
@@ -1671,6 +1811,8 @@ mod tests {
                 text: String::new(),
                 alpha,
                 mode: mode.into(),
+                precision: Precision::F32,
+                quantized: false,
                 budget: None,
             };
             assert!((row_cost(&req) - 1.0).abs() < 1e-12, "alpha {alpha}");
@@ -1681,9 +1823,57 @@ mod tests {
             text: String::new(),
             alpha: 1.0,
             mode: "mca".into(),
+            precision: Precision::F32,
+            quantized: false,
             budget: None,
         };
         assert!((row_cost(&cheap) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_cost_scales_down_with_quantized_precision() {
+        let mk = |precision: Precision| Request {
+            id: 0,
+            text: String::new(),
+            alpha: 0.4,
+            mode: "mca".into(),
+            precision,
+            quantized: false,
+            budget: None,
+        };
+        assert!((row_cost(&mk(Precision::F32)) - 1.0).abs() < 1e-12);
+        assert!((row_cost(&mk(Precision::Bf16)) - 0.75).abs() < 1e-12);
+        assert!((row_cost(&mk(Precision::Int8)) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantize_to_int8_only_moves_mca_requests_down() {
+        let mk = |mode: &str, precision: Precision| Request {
+            id: 0,
+            text: String::new(),
+            alpha: 0.4,
+            mode: mode.into(),
+            precision,
+            quantized: false,
+            budget: None,
+        };
+        // exact requests keep their bit-exact f32 contract
+        let mut ex = mk("exact", Precision::F32);
+        assert!(!quantize_to_int8(&mut ex));
+        assert_eq!(ex.precision, Precision::F32);
+        assert!(!ex.quantized);
+        // mca f32 (and bf16) reroute to the int8 rung, halving row cost
+        for start in [Precision::F32, Precision::Bf16] {
+            let mut q = mk("mca", start);
+            let before = row_cost(&q);
+            assert!(quantize_to_int8(&mut q));
+            assert_eq!(q.precision, Precision::Int8);
+            assert!(q.quantized);
+            assert!(row_cost(&q) < before);
+        }
+        // already int8: a second pass is a no-op
+        let mut q = mk("mca", Precision::Int8);
+        assert!(!quantize_to_int8(&mut q));
     }
 
     #[test]
@@ -1693,6 +1883,8 @@ mod tests {
             text: String::new(),
             alpha,
             mode: mode.into(),
+            precision: Precision::F32,
+            quantized: false,
             budget,
         };
         // raw-α request: untouched

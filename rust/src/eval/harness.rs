@@ -39,6 +39,7 @@ use crate::coordinator::{Response, Server, ServerConfig};
 use crate::data::{self, Example, TaskKind, TaskSpec};
 use crate::mca::flops::{self, AttnDims};
 use crate::runtime::{open_backend, BackendSpec, ModelInfo};
+use crate::tensor::Precision;
 use crate::tokenizer::Tokenizer;
 use crate::train::{train_or_load, TrainConfig};
 use crate::util::json::Json;
@@ -60,6 +61,11 @@ pub struct HarnessOptions {
     pub alphas: Vec<f64>,
     /// Theorem-2 ε budgets to sweep (empty skips the budget pass)
     pub epsilons: Vec<f64>,
+    /// compute precisions to sweep ("f32" | "bf16" | "int8"): every α/ε
+    /// knob runs once per precision, so the Pareto frontier gets points
+    /// from the kernel's quantized GEMM paths too. The exact baseline
+    /// always runs at f32.
+    pub precisions: Vec<String>,
     /// serving pool size per (model, task)
     pub workers: usize,
     /// admission cap in Eq.-9 cost units; 0 sizes it to the dev slice so
@@ -90,6 +96,7 @@ impl Default for HarnessOptions {
             tasks: data::harness_tasks().iter().map(|t| t.name.to_string()).collect(),
             alphas: vec![0.2, 0.4, 0.6, 1.0],
             epsilons: vec![8.0, 32.0],
+            precisions: vec!["f32".to_string()],
             workers: 2,
             queue_cap: 0,
             brownout_watermark: 0,
@@ -160,6 +167,8 @@ pub struct SweepPoint {
     pub metric: String,
     /// the precision knob of this pass
     pub knob: Knob,
+    /// compute precision this pass ran at ("f32" | "bf16" | "int8")
+    pub precision: String,
     /// primary-metric value of this pass (shed requests count as wrong)
     pub accuracy: f64,
     /// primary-metric value of the exact baseline pass
@@ -190,6 +199,8 @@ pub struct SweepPoint {
 pub struct FrontierPoint {
     /// the knob this frontier point came from
     pub knob: Knob,
+    /// compute precision of the pass behind this point
+    pub precision: String,
     /// macro-averaged Eq.-9 FLOPs-reduction factor
     pub flops_reduction: f64,
     /// macro-averaged primary-metric value
@@ -228,6 +239,8 @@ pub struct PoolCounters {
     pub brownout_entries: usize,
     /// responses degraded to their budget ceiling
     pub degraded: usize,
+    /// requests rerouted to the quantized (int8) rung by admission
+    pub quantized: usize,
     /// the AIMD controller's final α target
     pub controller_alpha: f64,
 }
@@ -268,25 +281,31 @@ pub fn pareto_indices(points: &[(f64, f64)]) -> Vec<usize> {
     out
 }
 
-/// Macro-average the sweep points of one model per knob and reduce them to
-/// the Pareto frontier. Knobs keep their first-appearance order before the
-/// frontier sort; knobs with no completed requests are skipped.
+/// Macro-average the sweep points of one model per (knob, precision) and
+/// reduce them to the Pareto frontier. Settings keep their
+/// first-appearance order before the frontier sort; settings with no
+/// completed requests are skipped.
 pub fn model_frontier(points: &[SweepPoint], model: &str) -> Vec<FrontierPoint> {
     let mine: Vec<&SweepPoint> =
         points.iter().filter(|p| p.model == model && p.completed > 0).collect();
-    let mut knobs: Vec<Knob> = Vec::new();
+    let mut settings: Vec<(Knob, String)> = Vec::new();
     for p in &mine {
-        if !knobs.contains(&p.knob) {
-            knobs.push(p.knob);
+        let s = (p.knob, p.precision.clone());
+        if !settings.contains(&s) {
+            settings.push(s);
         }
     }
-    let cands: Vec<FrontierPoint> = knobs
+    let cands: Vec<FrontierPoint> = settings
         .iter()
-        .map(|&knob| {
-            let of_knob: Vec<&&SweepPoint> = mine.iter().filter(|p| p.knob == knob).collect();
+        .map(|(knob, prec)| {
+            let of_knob: Vec<&&SweepPoint> = mine
+                .iter()
+                .filter(|p| p.knob == *knob && p.precision == *prec)
+                .collect();
             let n = of_knob.len() as f64;
             FrontierPoint {
-                knob,
+                knob: *knob,
+                precision: prec.clone(),
                 flops_reduction: of_knob.iter().map(|p| p.flops_reduction).sum::<f64>() / n,
                 accuracy: of_knob.iter().map(|p| p.accuracy).sum::<f64>() / n,
             }
@@ -384,27 +403,43 @@ fn sweep_pair(
         })
         .collect();
 
-    let exact = run_point(&server, &texts, Knob::Exact)?;
+    let precisions: Vec<Precision> = opts
+        .precisions
+        .iter()
+        .map(|s| {
+            Precision::parse(s)
+                .with_context(|| format!("unknown sweep precision {s:?} (f32|bf16|int8)"))
+        })
+        .collect::<Result<_>>()?;
+    if precisions.is_empty() {
+        bail!("eval sweep needs at least one precision");
+    }
+
+    // The exact f32 pass is the agreement baseline for every precision.
+    let exact = run_point(&server, &texts, Knob::Exact, Precision::F32)?;
     let exact_preds: Vec<i32> =
         exact.iter().map(|r| if r.shed { -1 } else { r.pred_class }).collect();
 
-    let mut knobs = vec![Knob::Exact];
-    knobs.extend(opts.alphas.iter().map(|&a| Knob::Alpha(a)));
-    knobs.extend(opts.epsilons.iter().map(|&e| Knob::Epsilon(e)));
+    let mut settings = vec![(Knob::Exact, Precision::F32)];
+    for &prec in &precisions {
+        settings.extend(opts.alphas.iter().map(|&a| (Knob::Alpha(a), prec)));
+        settings.extend(opts.epsilons.iter().map(|&e| (Knob::Epsilon(e), prec)));
+    }
 
-    let mut points = Vec::with_capacity(knobs.len());
-    for knob in knobs {
+    let mut points = Vec::with_capacity(settings.len());
+    for (knob, prec) in settings {
         let outcomes = match knob {
             Knob::Exact => exact.clone(),
-            _ => run_point(&server, &texts, knob)?,
+            _ => run_point(&server, &texts, knob, prec)?,
         };
         let point =
-            summarize(model_name, spec, knob, &outcomes, &exact_preds, &dev, &info)?;
+            summarize(model_name, spec, knob, prec, &outcomes, &exact_preds, &dev, &info)?;
         if opts.verbose {
             eprintln!(
-                "[eval {model_name}/{}] {}: {} {:.2} | agree {:.3} | {:.2}x FLOPs | shed {}",
+                "[eval {model_name}/{}] {}@{}: {} {:.2} | agree {:.3} | {:.2}x FLOPs | shed {}",
                 spec.name,
                 point.knob,
+                point.precision,
                 point.metric,
                 100.0 * point.accuracy,
                 point.agreement,
@@ -426,6 +461,7 @@ fn sweep_pair(
         canary_violations: stats.canary_violations,
         brownout_entries: stats.brownout_entries,
         degraded: stats.degraded,
+        quantized: stats.quantized,
         controller_alpha: stats.controller_alpha,
     };
     server.shutdown()?;
@@ -434,14 +470,20 @@ fn sweep_pair(
 
 /// One lockstep-replay pass: pause dispatch, queue the whole slice, resume
 /// and collect responses in submission order.
-fn run_point(server: &Server, texts: &[String], knob: Knob) -> Result<Vec<Response>> {
+fn run_point(
+    server: &Server,
+    texts: &[String],
+    knob: Knob,
+    precision: Precision,
+) -> Result<Vec<Response>> {
+    let sub = server.submitter();
     server.pause();
     let mut rxs = Vec::with_capacity(texts.len());
     for t in texts {
         rxs.push(match knob {
-            Knob::Exact => server.submit(t, 1.0, "exact"),
-            Knob::Alpha(a) => server.submit(t, a as f32, "mca"),
-            Knob::Epsilon(e) => server.submit_budget(t, e, None),
+            Knob::Exact => sub.submit_with_precision(t, 1.0, "exact", precision),
+            Knob::Alpha(a) => sub.submit_with_precision(t, a as f32, "mca", precision),
+            Knob::Epsilon(e) => sub.submit_budget_with_precision(t, e, None, precision),
         });
     }
     server.resume();
@@ -453,10 +495,12 @@ fn run_point(server: &Server, texts: &[String], knob: Knob) -> Result<Vec<Respon
 }
 
 /// Reduce one pass's responses to a [`SweepPoint`].
+#[allow(clippy::too_many_arguments)]
 fn summarize(
     model: &str,
     spec: &TaskSpec,
     knob: Knob,
+    precision: Precision,
     outcomes: &[Response],
     exact_preds: &[i32],
     dev: &[Example],
@@ -528,6 +572,7 @@ fn summarize(
         task: spec.name.to_string(),
         metric: metric.short().to_string(),
         knob,
+        precision: precision.as_str().to_string(),
         accuracy,
         baseline,
         agreement,
@@ -569,6 +614,15 @@ fn knob_from_json(j: &Json) -> Result<Knob> {
     })
 }
 
+/// The entry's `"precision"` field; `"f32"` when absent (documents written
+/// before the precision axis existed are all-f32 by construction).
+fn precision_from_json(j: &Json) -> Result<String> {
+    match j.get("precision") {
+        Ok(p) => Ok(p.as_str()?.to_string()),
+        Err(_) => Ok("f32".to_string()),
+    }
+}
+
 /// Serialize a [`HarnessReport`] to the `BENCH_eval.json` value (schema in
 /// BENCHMARKS.md §4).
 pub fn bench_eval_to_json(rep: &HarnessReport) -> Json {
@@ -582,6 +636,7 @@ pub fn bench_eval_to_json(rep: &HarnessReport) -> Json {
             m.insert("task".to_string(), Json::Str(p.task.clone()));
             m.insert("metric".to_string(), Json::Str(p.metric.clone()));
             knob_to_json(p.knob, &mut m);
+            m.insert("precision".to_string(), Json::Str(p.precision.clone()));
             m.insert("accuracy".to_string(), Json::Num(p.accuracy));
             m.insert("baseline".to_string(), Json::Num(p.baseline));
             m.insert("agreement".to_string(), Json::Num(p.agreement));
@@ -604,6 +659,7 @@ pub fn bench_eval_to_json(rep: &HarnessReport) -> Json {
                 .map(|p| {
                     let mut m: BTreeMap<String, Json> = BTreeMap::new();
                     knob_to_json(p.knob, &mut m);
+                    m.insert("precision".to_string(), Json::Str(p.precision.clone()));
                     m.insert("flops_reduction".to_string(), Json::Num(p.flops_reduction));
                     m.insert("accuracy".to_string(), Json::Num(p.accuracy));
                     Json::Obj(m)
@@ -632,6 +688,7 @@ pub fn bench_eval_to_json(rep: &HarnessReport) -> Json {
             );
             m.insert("brownout_entries".to_string(), Json::Num(c.brownout_entries as f64));
             m.insert("degraded".to_string(), Json::Num(c.degraded as f64));
+            m.insert("quantized".to_string(), Json::Num(c.quantized as f64));
             m.insert("controller_alpha".to_string(), Json::Num(c.controller_alpha));
             Json::Obj(m)
         })
@@ -658,6 +715,7 @@ pub fn bench_eval_from_json(j: &Json) -> Result<HarnessReport> {
             task: e.get("task")?.as_str()?.to_string(),
             metric: e.get("metric")?.as_str()?.to_string(),
             knob: knob_from_json(e)?,
+            precision: precision_from_json(e)?,
             accuracy: e.get("accuracy")?.as_f64()?,
             baseline: e.get("baseline")?.as_f64()?,
             agreement: e.get("agreement")?.as_f64()?,
@@ -675,6 +733,7 @@ pub fn bench_eval_from_json(j: &Json) -> Result<HarnessReport> {
         for p in f.get("points")?.as_arr()? {
             pts.push(FrontierPoint {
                 knob: knob_from_json(p)?,
+                precision: precision_from_json(p)?,
                 flops_reduction: p.get("flops_reduction")?.as_f64()?,
                 accuracy: p.get("accuracy")?.as_f64()?,
             });
@@ -696,6 +755,10 @@ pub fn bench_eval_from_json(j: &Json) -> Result<HarnessReport> {
             canary_violations: c.get("canary_violations")?.as_usize()?,
             brownout_entries: c.get("brownout_entries")?.as_usize()?,
             degraded: c.get("degraded")?.as_usize()?,
+            quantized: match c.get("quantized") {
+                Ok(v) => v.as_usize()?,
+                Err(_) => 0,
+            },
             controller_alpha: c.get("controller_alpha")?.as_f64()?,
         });
     }
@@ -719,6 +782,7 @@ mod tests {
             task: task.to_string(),
             metric: "Acc.".to_string(),
             knob,
+            precision: "f32".to_string(),
             accuracy: acc,
             baseline: 0.9,
             agreement: 0.95,
@@ -795,6 +859,27 @@ mod tests {
     }
 
     #[test]
+    fn model_frontier_separates_precisions() {
+        let a = pt("m", "t1", Knob::Alpha(0.4), 0.8, 3.0);
+        let mut b = pt("m", "t1", Knob::Alpha(0.4), 0.7, 5.0);
+        b.precision = "int8".to_string();
+        // same knob, different precision: two candidates, neither
+        // dominated (higher accuracy vs higher reduction)
+        let f = model_frontier(&[a, b], "m");
+        assert_eq!(f.len(), 2);
+        assert!(f.iter().any(|p| p.precision == "f32"));
+        assert!(f.iter().any(|p| p.precision == "int8"));
+    }
+
+    #[test]
+    fn precision_field_defaults_to_f32_for_old_documents() {
+        let j = Json::parse(r#"{"knob": "exact"}"#).unwrap();
+        assert_eq!(precision_from_json(&j).unwrap(), "f32");
+        let j = Json::parse(r#"{"knob": "exact", "precision": "int8"}"#).unwrap();
+        assert_eq!(precision_from_json(&j).unwrap(), "int8");
+    }
+
+    #[test]
     fn bench_eval_json_round_trips() {
         let rep = HarnessReport {
             points: vec![
@@ -805,9 +890,15 @@ mod tests {
             frontiers: vec![ModelFrontier {
                 model: "m".to_string(),
                 points: vec![
-                    FrontierPoint { knob: Knob::Exact, flops_reduction: 1.0, accuracy: 0.91 },
+                    FrontierPoint {
+                        knob: Knob::Exact,
+                        precision: "f32".to_string(),
+                        flops_reduction: 1.0,
+                        accuracy: 0.91,
+                    },
                     FrontierPoint {
                         knob: Knob::Epsilon(16.0),
+                        precision: "int8".to_string(),
                         flops_reduction: 4.5,
                         accuracy: 0.87,
                     },
@@ -823,6 +914,7 @@ mod tests {
                 canary_violations: 1,
                 brownout_entries: 2,
                 degraded: 5,
+                quantized: 7,
                 controller_alpha: 0.55,
             }],
         };

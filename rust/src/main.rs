@@ -405,6 +405,11 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
                     &join_f64(&d.epsilons),
                     "Theorem-2 ε budgets to sweep (empty to skip the budget pass)",
                 )
+                .opt(
+                    "precision",
+                    &d.precisions.join(","),
+                    "compute precisions to sweep (comma list of f32|bf16|int8)",
+                )
                 .opt("workers", &d.workers.to_string(), "serving pool size per (model, task)")
                 .opt(
                     "queue-cap",
@@ -587,6 +592,9 @@ fn eval_cmd(args: &Args) -> Result<()> {
     if args.was_set("error-budget") || !quick {
         opts.epsilons = args.get_f64_list("error-budget")?;
     }
+    if args.was_set("precision") || !quick {
+        opts.precisions = args.get_str_list("precision");
+    }
     if args.was_set("workers") || !quick {
         opts.workers = args.get_usize("workers")?;
     }
@@ -613,11 +621,12 @@ fn eval_cmd(args: &Args) -> Result<()> {
     }
     if opts.verbose {
         eprintln!(
-            "[eval] sweep: {:?} × {:?} | α {:?} | ε {:?} | {} workers{}",
+            "[eval] sweep: {:?} × {:?} | α {:?} | ε {:?} | prec {:?} | {} workers{}",
             opts.models,
             opts.tasks,
             opts.alphas,
             opts.epsilons,
+            opts.precisions,
             opts.workers,
             if quick { " (quick profile)" } else { "" }
         );

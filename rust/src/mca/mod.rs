@@ -262,6 +262,155 @@ pub fn mca_encode_pooled(
     Tensor::new(&[n, d_out], out).expect("shape computed above")
 }
 
+// ---------------------------------------------------------------------------
+// Quantized encode rows (the precision axis pushed into the estimator)
+// ---------------------------------------------------------------------------
+
+/// Value-weight rows quantized once per checkpoint for the MCA encode —
+/// the arithmetic half of the precision axis: sampled rows are
+/// dequantized on the fly inside the batched-AXPY estimator
+/// ([`mca_encode_pooled_quant`]) instead of materializing an f32 copy of
+/// `W_v` per call. `None`-equivalent for f32 (the exact rows are sampled
+/// directly; see [`EncodeRows::quantize`]).
+#[derive(Debug, Clone)]
+pub enum EncodeRows {
+    /// bf16 rows: the top 16 bits of each round-to-nearest-even element
+    /// of `W_v`, row-major over the `(d, d_out)` weight. Expansion back
+    /// to f32 is exact, so sampling these rows is bit-identical to
+    /// sampling `W_v.to_bf16()`.
+    Bf16 {
+        /// packed row data, `d * d_out` elements
+        bits: Vec<u16>,
+        /// output width (row stride)
+        d_out: usize,
+    },
+    /// int8 rows with one symmetric per-row scale
+    /// (`scales[i] = max|W_v[i]| / 127`, 0 for an all-zero row).
+    Int8 {
+        /// quantized row data, `d * d_out` elements
+        q: Vec<i8>,
+        /// per-row dequantization scales, `d` elements
+        scales: Vec<f32>,
+        /// output width (row stride)
+        d_out: usize,
+    },
+}
+
+impl EncodeRows {
+    /// Quantize the value weight `w` (shape `(d, d_out)`) for `prec`.
+    /// Returns `None` for [`kernel::Precision::F32`]: the exact f32 rows
+    /// are used directly and the estimator keeps its bit-exact saturated
+    /// fallback.
+    pub fn quantize(w: &Tensor, prec: kernel::Precision) -> Option<EncodeRows> {
+        let (d, d_out) = (w.shape()[0], w.shape()[1]);
+        match prec {
+            kernel::Precision::F32 => None,
+            kernel::Precision::Bf16 => {
+                let bits = w
+                    .data()
+                    .iter()
+                    .map(|&v| (tensor::bf16_round(v).to_bits() >> 16) as u16)
+                    .collect();
+                Some(EncodeRows::Bf16 { bits, d_out })
+            }
+            kernel::Precision::Int8 => {
+                let mut q = vec![0i8; d * d_out];
+                let mut scales = vec![0.0f32; d];
+                for i in 0..d {
+                    let row = w.row(i);
+                    let amax = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                    if amax > 0.0 {
+                        scales[i] = amax / 127.0;
+                        let inv = 127.0 / amax;
+                        for (qv, &v) in q[i * d_out..(i + 1) * d_out].iter_mut().zip(row) {
+                            *qv = (v * inv).round().clamp(-127.0, 127.0) as i8;
+                        }
+                    }
+                }
+                Some(EncodeRows::Int8 { q, scales, d_out })
+            }
+        }
+    }
+}
+
+/// Quantized-row variant of [`mca_encode_pooled`]: sampled rows of `W_v`
+/// are dequantized on the fly inside the AXPY loop
+/// ([`crate::tensor::kernel::axpy_bf16`] / [`crate::tensor::kernel::axpy_i8`]),
+/// with the int8 per-row scale folded into the Eq.-5 importance-sampling
+/// scale — no f32 copy of the weight is ever materialized. Saturated
+/// tokens (`r_i >= d`) accumulate the full product over the dequantized
+/// rows in the same ascending-row skip-zero order as
+/// [`crate::tensor::accumulate_row_product`], so a caller that recomputes
+/// bf16-saturated rows from rounded activations lands bit-identical to
+/// the rounded-operand exact kernel; int8 carries the kernel layer's
+/// quantization envelope instead of an exactness contract.
+pub fn mca_encode_pooled_quant(
+    x: &Tensor,          // (n, d)
+    rows: &EncodeRows,   // quantized W_v, (d, d_out)
+    r: &[usize],         // (n,)
+    p: &[f64],           // (d,)
+    pool: &[usize],      // (>= max r_i unsaturated,) shared sample pool
+) -> Tensor {
+    let (n, d) = (x.shape()[0], x.shape()[1]);
+    let d_out = match rows {
+        EncodeRows::Bf16 { bits, d_out } => {
+            assert_eq!(bits.len(), d * d_out, "bf16 rows shape mismatch");
+            *d_out
+        }
+        EncodeRows::Int8 { q, scales, d_out } => {
+            assert_eq!(q.len(), d * d_out, "int8 rows shape mismatch");
+            assert_eq!(scales.len(), d, "int8 scales shape mismatch");
+            *d_out
+        }
+    };
+    assert_eq!(r.len(), n);
+    assert_eq!(p.len(), d);
+    let max_unsat = r.iter().filter(|&&ri| ri < d).max().copied().unwrap_or(0);
+    assert!(
+        pool.len() >= max_unsat,
+        "pool length {} < largest unsaturated budget {max_unsat}",
+        pool.len()
+    );
+
+    // One dequantizing AXPY per sampled row; `scale` is the Eq.-5
+    // importance-sampling weight (or the raw x element on the saturated
+    // path), with the int8 row scale folded in here.
+    let axpy_row = |o_row: &mut [f32], scale: f32, sk: usize| match rows {
+        EncodeRows::Bf16 { bits, d_out } => {
+            kernel::axpy_bf16(o_row, scale, &bits[sk * d_out..(sk + 1) * d_out]);
+        }
+        EncodeRows::Int8 { q, scales, d_out } => {
+            kernel::axpy_i8(o_row, scale * scales[sk], &q[sk * d_out..(sk + 1) * d_out]);
+        }
+    };
+
+    let mut out = vec![0.0f32; n * d_out];
+    for i in 0..n {
+        let x_row = x.row(i);
+        let o_row = &mut out[i * d_out..(i + 1) * d_out];
+        if r[i] >= d {
+            // exact-over-dequantized-rows fallback, in the ascending-row
+            // skip-zero order shared with `accumulate_row_product`
+            for (sk, &xv) in x_row.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                axpy_row(o_row, xv, sk);
+            }
+            continue;
+        }
+        let ri = r[i] as f64;
+        for &sk in &pool[..r[i]] {
+            let scale = (x_row[sk] as f64 / (ri * p[sk])) as f32;
+            if scale == 0.0 {
+                continue;
+            }
+            axpy_row(o_row, scale, sk);
+        }
+    }
+    Tensor::new(&[n, d_out], out).expect("shape computed above")
+}
+
 /// Lemma 1: E||H[i] - X[i]W|| <= ||X[i]||_2 ||W||_F / sqrt(r_i).
 pub fn lemma1_bound(x_row_norm: f64, w_frob: f64, r: usize) -> f64 {
     x_row_norm * w_frob / (r as f64).sqrt()
@@ -487,5 +636,81 @@ mod tests {
         }
         // tail bound is looser than the mean bound
         assert!(theorem2_tail_bound(&x, w.frob_norm() as f64, alpha, 0.1) > bound);
+    }
+
+    #[test]
+    fn bf16_quant_encode_is_bitwise_equal_to_rounded_f32_encode() {
+        // Expanding bf16 row bits back to f32 is exact, and the per-row
+        // dequantizing AXPY shares the f32 estimator's accumulation
+        // order, so the quantized encode must equal running the f32
+        // estimator on the pre-rounded weight bit-for-bit (mixed
+        // saturated + unsaturated budgets included).
+        let mut rng = Pcg64::new(21);
+        let x = randn_tensor(&mut rng, &[5, 16]);
+        let w = randn_tensor(&mut rng, &[16, 7]);
+        let p = sampling_probs(&w);
+        let r = vec![2usize, 16, 5, 16, 9];
+        let pool = draw_pool(&mut Pcg64::new(4), &p, 16);
+        let rows = EncodeRows::quantize(&w, kernel::Precision::Bf16).unwrap();
+        let got = mca_encode_pooled_quant(&x, &rows, &r, &p, &pool);
+        let want = mca_encode_pooled(&x, &w.to_bf16(), &r, &p, &pool);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn int8_quant_encode_tracks_f32_encode_within_row_scale_envelope() {
+        // Each int8 row is off its f32 row by at most scale/2 per element
+        // (symmetric round-to-nearest), so any output element built from
+        // sampled rows {sk} with AXPY scales {s_k} errs by at most
+        // Σ_k |s_k| · scales[sk] / 2 vs the f32 estimator on the same
+        // pool — plus rounding slack for the different product order.
+        let mut rng = Pcg64::new(22);
+        let x = randn_tensor(&mut rng, &[4, 12]);
+        let w = randn_tensor(&mut rng, &[12, 6]);
+        let p = sampling_probs(&w);
+        let r = vec![3usize, 12, 7, 12];
+        let pool = draw_pool(&mut Pcg64::new(5), &p, 12);
+        let Some(rows @ EncodeRows::Int8 { .. }) =
+            EncodeRows::quantize(&w, kernel::Precision::Int8)
+        else {
+            panic!("int8 quantize returned wrong variant")
+        };
+        let EncodeRows::Int8 { scales, .. } = &rows else { unreachable!() };
+        let got = mca_encode_pooled_quant(&x, &rows, &r, &p, &pool);
+        let want = mca_encode_pooled(&x, &w, &r, &p, &pool);
+        for i in 0..4 {
+            let x_row = x.row(i);
+            let bound: f64 = if r[i] >= 12 {
+                (0..12).map(|sk| (x_row[sk].abs() * scales[sk]) as f64 * 0.5).sum()
+            } else {
+                pool[..r[i]]
+                    .iter()
+                    .map(|&sk| {
+                        let s = (x_row[sk] as f64 / (r[i] as f64 * p[sk])).abs();
+                        s * scales[sk] as f64 * 0.5
+                    })
+                    .sum()
+            };
+            for (a, b) in got.row(i).iter().zip(want.row(i)) {
+                let diff = (a - b).abs() as f64;
+                assert!(diff <= 1.02 * bound + 1e-6, "row {i}: |{a} - {b}| > {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_precision_has_no_quantized_rows() {
+        let w = Tensor::from_fn(&[8, 4], |i| i as f32 * 0.1);
+        assert!(EncodeRows::quantize(&w, kernel::Precision::F32).is_none());
+        // an all-zero row quantizes to scale 0 and contributes nothing
+        let mut wz = w.clone();
+        wz.row_mut(3).fill(0.0);
+        let Some(EncodeRows::Int8 { scales, q, .. }) =
+            EncodeRows::quantize(&wz, kernel::Precision::Int8)
+        else {
+            panic!("int8 quantize failed")
+        };
+        assert_eq!(scales[3], 0.0);
+        assert!(q[3 * 4..4 * 4].iter().all(|&v| v == 0));
     }
 }

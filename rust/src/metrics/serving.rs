@@ -107,6 +107,9 @@ pub struct ServingMetrics {
     pub brownout_exits: usize,
     /// Requests whose α was raised to their budget ceiling by brownout.
     pub degraded: usize,
+    /// Requests routed to the quantized (int8) precision rung — the
+    /// brownout ladder's last stop before shedding.
+    pub quantized: usize,
     /// Admitted ε-budget requests.
     pub budget_requests: usize,
     /// Budgets below the α-grid floor, resolved to the exact path.
@@ -154,6 +157,12 @@ impl ServingMetrics {
     /// Record `n` queued requests degraded to their α ceiling.
     pub fn on_degraded(&mut self, n: usize) {
         self.degraded += n;
+    }
+
+    /// Record one request routed to the quantized precision rung instead
+    /// of being shed.
+    pub fn on_quantized(&mut self) {
+        self.quantized += 1;
     }
 
     /// Record one admitted ε-budget request: `alpha` is the α it will be
@@ -340,8 +349,11 @@ mod tests {
         let mut m = ServingMetrics::new(1);
         m.on_brownout_enter();
         m.on_degraded(5);
+        m.on_quantized();
+        m.on_quantized();
         m.on_brownout_exit();
         assert_eq!((m.brownout_entries, m.degraded, m.brownout_exits), (1, 5, 1));
+        assert_eq!(m.quantized, 2);
 
         m.on_budget_resolved(0.4, false);
         m.on_budget_resolved(0.4, false);

@@ -28,6 +28,7 @@ use crate::mca::{self, RStrategy};
 use crate::model::Params;
 use crate::rng::Pcg64;
 use crate::runtime::{ForwardOutput, HostValue, ModelInfo};
+use crate::tensor::kernel::{PackedB, Precision};
 use crate::tensor::{self, kernel, Tensor};
 use crate::tokenizer::PAD_ID;
 use crate::util::threadpool;
@@ -52,8 +53,9 @@ pub struct ForwardCfg {
     pub r_strategy: RStrategy,
     /// uniform ablation of the Eq. 6 sampling distribution
     pub uniform_p: bool,
-    /// round matmul operands to bf16 (Figure 1's reduced-precision axis)
-    pub bf16: bool,
+    /// arithmetic precision of the weight-side matmul operands (Figure
+    /// 1's reduced-precision axis, extended to int8 — DESIGN.md §3)
+    pub prec: Precision,
 }
 
 impl ForwardCfg {
@@ -76,12 +78,10 @@ impl ForwardCfg {
             "uniform" => true,
             other => bail!("unknown p_strategy {other:?} (norm|uniform)"),
         };
-        let bf16 = match compute_dtype {
-            "f32" => false,
-            "bf16" => true,
-            other => bail!("unknown compute_dtype {other:?} (f32|bf16)"),
-        };
-        Ok(ForwardCfg { mode, r_strategy, uniform_p, bf16 })
+        let prec = Precision::parse(compute_dtype).with_context(|| {
+            format!("unknown compute_dtype {compute_dtype:?} (f32|bf16|int8)")
+        })?;
+        Ok(ForwardCfg { mode, r_strategy, uniform_p, prec })
     }
 }
 
@@ -179,6 +179,78 @@ impl Weights {
 }
 
 // ---------------------------------------------------------------------------
+// Prepacked weights (the per-checkpoint weight cache, DESIGN.md §3)
+// ---------------------------------------------------------------------------
+
+/// One layer's GEMM weights prepacked (and, for bf16/int8, quantized)
+/// into the kernel's blocked B-strip layout. Built once per checkpoint
+/// load by [`PackedWeights::build`]; steady-state forwards reuse these
+/// panels, so no B-side packing work happens per call.
+pub(crate) struct PackedLayer {
+    pub wq: PackedB,
+    pub wk: PackedB,
+    pub wv: PackedB,
+    pub wo: PackedB,
+    pub w1: PackedB,
+    pub w2: PackedB,
+    /// quantized value-weight rows for the MCA encode (`None` for f32,
+    /// which samples the exact rows)
+    pub vrows: Option<mca::EncodeRows>,
+}
+
+/// Every prepacked GEMM weight of one (checkpoint, precision) pair — the
+/// unit the native backend caches per loaded checkpoint.
+pub(crate) struct PackedWeights {
+    /// precision the panels were packed/quantized for; a forward must
+    /// request the same precision or the cache entry is unusable
+    pub prec: Precision,
+    pub layers: Vec<PackedLayer>,
+    pub head_w: PackedB,
+}
+
+impl PackedWeights {
+    /// Pack every weight-side GEMM operand of `params` for `prec`.
+    pub fn build(model: &ModelInfo, params: &Params, prec: Precision) -> Result<PackedWeights> {
+        let w = Weights::unpack(model, params)?;
+        let layers = w
+            .layers
+            .iter()
+            .map(|lw| {
+                Ok(PackedLayer {
+                    wq: PackedB::pack(&lw.wq, prec)?,
+                    wk: PackedB::pack(&lw.wk, prec)?,
+                    wv: PackedB::pack(&lw.wv, prec)?,
+                    wo: PackedB::pack(&lw.wo, prec)?,
+                    w1: PackedB::pack(&lw.w1, prec)?,
+                    w2: PackedB::pack(&lw.w2, prec)?,
+                    vrows: mca::EncodeRows::quantize(&lw.wv, prec),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PackedWeights { prec, layers, head_w: PackedB::pack(&w.head_w, prec)? })
+    }
+}
+
+/// A GEMM weight operand: either a plain f32 tensor (packed — and under
+/// a quantized precision, rounded/quantized — per call) or a prepacked
+/// panel from the per-checkpoint cache. Both routes produce bit-identical
+/// results at every precision; only the packing cost moves.
+#[derive(Clone, Copy)]
+pub(crate) enum WeightRef<'a> {
+    /// plain tensor; the kernel packs per call
+    Plain(&'a Tensor),
+    /// prepacked blocked panels from [`PackedWeights`]
+    Packed(&'a PackedB),
+}
+
+fn wref<'a>(plain: &'a Tensor, packed: Option<&'a PackedB>) -> WeightRef<'a> {
+    match packed {
+        Some(pb) => WeightRef::Packed(pb),
+        None => WeightRef::Plain(plain),
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Shared numeric helpers (also used by the backward pass in `grad`)
 // ---------------------------------------------------------------------------
 
@@ -213,24 +285,56 @@ pub(crate) fn layer_norm(x: &Tensor, scale: &[f32], bias: &[f32]) -> Tensor {
     layer_norm_stats(x, scale, bias).0
 }
 
-/// Matmul in the configured compute dtype (operands rounded to bf16 when
-/// `bf16`, accumulation always f32 — mirrors the Python `mm`). Runs on
-/// the blocked kernel layer with `threads`-way panel splitting.
-pub(crate) fn mm(a: &Tensor, b: &Tensor, bf16: bool, threads: usize) -> Tensor {
-    if bf16 {
-        kernel::matmul(&a.to_bf16(), &b.to_bf16(), threads).expect("shape-checked matmul")
-    } else {
-        kernel::matmul(a, b, threads).expect("shape-checked matmul")
+/// Matmul in the configured precision (operands rounded to bf16 /
+/// quantized to int8, accumulation f32 — or i32 within a KC block on the
+/// int8 path; mirrors the Python `mm`). Runs on the blocked kernel layer
+/// with `threads`-way panel splitting. A [`WeightRef::Packed`] operand
+/// skips per-call B packing entirely; a plain operand under int8
+/// quantizes on the fly (the slow fallback, bit-identical results to the
+/// cached route).
+pub(crate) fn mm(a: &Tensor, w: WeightRef<'_>, prec: Precision, threads: usize) -> Tensor {
+    match (w, prec) {
+        (WeightRef::Packed(pb), _) => {
+            kernel::matmul_prepacked(a, pb, threads).expect("shape-checked matmul")
+        }
+        (WeightRef::Plain(b), Precision::F32) => {
+            kernel::matmul(a, b, threads).expect("shape-checked matmul")
+        }
+        (WeightRef::Plain(b), Precision::Bf16) => {
+            kernel::matmul(&a.to_bf16(), &b.to_bf16(), threads).expect("shape-checked matmul")
+        }
+        (WeightRef::Plain(b), Precision::Int8) => {
+            let pb = PackedB::pack(b, Precision::Int8).expect("shape-checked pack");
+            kernel::matmul_prepacked(a, &pb, threads).expect("shape-checked matmul")
+        }
     }
 }
 
 /// `a @ b + bias` with the row-broadcast bias fused into the kernel
-/// epilogue (the bias stays f32 even under bf16, as the unfused path did).
-pub(crate) fn mm_bias(a: &Tensor, b: &Tensor, bias: &[f32], bf16: bool, threads: usize) -> Tensor {
-    if bf16 {
-        kernel::matmul_bias(&a.to_bf16(), &b.to_bf16(), bias, threads).expect("shape-checked mm")
-    } else {
-        kernel::matmul_bias(a, b, bias, threads).expect("shape-checked mm")
+/// epilogue (the bias stays f32 at every precision, as the unfused path
+/// did; on the int8 path it applies after the dequantized full-k sum).
+pub(crate) fn mm_bias(
+    a: &Tensor,
+    w: WeightRef<'_>,
+    bias: &[f32],
+    prec: Precision,
+    threads: usize,
+) -> Tensor {
+    match (w, prec) {
+        (WeightRef::Packed(pb), _) => {
+            kernel::matmul_bias_prepacked(a, pb, bias, threads).expect("shape-checked mm")
+        }
+        (WeightRef::Plain(b), Precision::F32) => {
+            kernel::matmul_bias(a, b, bias, threads).expect("shape-checked mm")
+        }
+        (WeightRef::Plain(b), Precision::Bf16) => {
+            kernel::matmul_bias(&a.to_bf16(), &b.to_bf16(), bias, threads)
+                .expect("shape-checked mm")
+        }
+        (WeightRef::Plain(b), Precision::Int8) => {
+            let pb = PackedB::pack(b, Precision::Int8).expect("shape-checked pack");
+            kernel::matmul_bias_prepacked(a, &pb, bias, threads).expect("shape-checked mm")
+        }
     }
 }
 
@@ -238,16 +342,26 @@ pub(crate) fn mm_bias(a: &Tensor, b: &Tensor, bias: &[f32], bf16: bool, threads:
 /// fused into the kernel epilogue.
 pub(crate) fn mm_bias_gelu(
     a: &Tensor,
-    b: &Tensor,
+    w: WeightRef<'_>,
     bias: &[f32],
-    bf16: bool,
+    prec: Precision,
     threads: usize,
 ) -> Tensor {
-    if bf16 {
-        kernel::matmul_bias_gelu(&a.to_bf16(), &b.to_bf16(), bias, threads)
-            .expect("shape-checked mm")
-    } else {
-        kernel::matmul_bias_gelu(a, b, bias, threads).expect("shape-checked mm")
+    match (w, prec) {
+        (WeightRef::Packed(pb), _) => {
+            kernel::matmul_bias_gelu_prepacked(a, pb, bias, threads).expect("shape-checked mm")
+        }
+        (WeightRef::Plain(b), Precision::F32) => {
+            kernel::matmul_bias_gelu(a, b, bias, threads).expect("shape-checked mm")
+        }
+        (WeightRef::Plain(b), Precision::Bf16) => {
+            kernel::matmul_bias_gelu(&a.to_bf16(), &b.to_bf16(), bias, threads)
+                .expect("shape-checked mm")
+        }
+        (WeightRef::Plain(b), Precision::Int8) => {
+            let pb = PackedB::pack(b, Precision::Int8).expect("shape-checked pack");
+            kernel::matmul_bias_gelu_prepacked(a, &pb, bias, threads).expect("shape-checked mm")
+        }
     }
 }
 
@@ -274,16 +388,17 @@ const NEG_BIAS: f32 = -1e9;
 pub(crate) fn attention_probs(
     xn: &Tensor,
     lw: &LayerWeights,
+    packed: Option<&PackedLayer>,
     mask: &[bool],
     window: Option<usize>,
     n_heads: usize,
-    bf16: bool,
+    prec: Precision,
     threads: usize,
 ) -> (Vec<Tensor>, Tensor, Tensor) {
     let d = xn.shape()[1];
     let dh = d / n_heads;
-    let q = mm_bias(xn, &lw.wq, &lw.bq, bf16, threads);
-    let k = mm_bias(xn, &lw.wk, &lw.bk, bf16, threads);
+    let q = mm_bias(xn, wref(&lw.wq, packed.map(|p| &p.wq)), &lw.bq, prec, threads);
+    let k = mm_bias(xn, wref(&lw.wk, packed.map(|p| &p.wk)), &lw.bk, prec, threads);
 
     let inv = 1.0 / (dh as f32).sqrt();
     let allowed = |qi: usize, ki: usize| attn_allowed(mask, window, qi, ki);
@@ -309,9 +424,18 @@ pub(crate) fn attention_probs(
 pub(crate) struct McaLayerCtx {
     pub probs: Vec<f64>,
     pub pool: Vec<usize>,
+    /// quantized W_v rows for the encode when no prepacked cache is in
+    /// play (`None` for f32, or when [`PackedLayer::vrows`] supplies the
+    /// bit-identical cached rows)
+    pub rows: Option<mca::EncodeRows>,
 }
 
-pub(crate) fn mca_contexts(w: &Weights, cfg: &ForwardCfg, seed: u32) -> Vec<McaLayerCtx> {
+pub(crate) fn mca_contexts(
+    w: &Weights,
+    cfg: &ForwardCfg,
+    seed: u32,
+    need_rows: bool,
+) -> Vec<McaLayerCtx> {
     w.layers
         .iter()
         .enumerate()
@@ -325,7 +449,12 @@ pub(crate) fn mca_contexts(w: &Weights, cfg: &ForwardCfg, seed: u32) -> Vec<McaL
             // Independent stream per layer (mirrors jax.random.fold_in).
             let mut rng = Pcg64::with_stream(seed as u64, 0x4D43_4100 + li as u64);
             let pool = mca::draw_pool(&mut rng, &probs, d);
-            McaLayerCtx { probs, pool }
+            let rows = if need_rows {
+                mca::EncodeRows::quantize(&lw.wv, cfg.prec)
+            } else {
+                None
+            };
+            McaLayerCtx { probs, pool, rows }
         })
         .collect()
 }
@@ -358,9 +487,11 @@ pub(crate) fn embed(model: &ModelInfo, w: &Weights, ids: &[i32]) -> (Tensor, Vec
 /// One sequence through the encoder. Returns (logits, Σr_i, n_eff).
 /// `threads` is the kernel-level panel-split budget for this sequence's
 /// matrix products (1 when the batch itself saturates the worker pool).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn forward_one(
     model: &ModelInfo,
     w: &Weights,
+    packed: Option<&PackedWeights>,
     ids: &[i32],
     alpha: f32,
     mca_ctx: Option<&[McaLayerCtx]>,
@@ -376,8 +507,10 @@ pub(crate) fn forward_one(
 
     let mut r_sum = 0u64;
     for (li, lw) in w.layers.iter().enumerate() {
+        let pl = packed.map(|p| &p.layers[li]);
         let xn = layer_norm(&x, &lw.ln1_scale, &lw.ln1_bias);
-        let (attn, _q, _k) = attention_probs(&xn, lw, &mask, model.window, h, cfg.bf16, threads);
+        let (attn, _q, _k) =
+            attention_probs(&xn, lw, pl, &mask, model.window, h, cfg.prec, threads);
 
         // Value encoding: the operation MCA approximates (paper §Background).
         let mut v = match (cfg.mode, mca_ctx) {
@@ -390,14 +523,26 @@ pub(crate) fn forward_one(
                     }
                 }
                 let ctx = &ctxs[li];
-                let mut est = mca::mca_encode_pooled(&xn, &lw.wv, &r, &ctx.probs, &ctx.pool);
+                // Quantized precisions sample the checkpoint's quantized
+                // W_v rows (prepacked cache when present, else the
+                // bit-identical per-call copy), dequantizing inside the
+                // AXPY loop; f32 samples the exact rows.
+                let vrows = pl.and_then(|p| p.vrows.as_ref()).or(ctx.rows.as_ref());
+                let mut est = match vrows {
+                    Some(rows) => {
+                        mca::mca_encode_pooled_quant(&xn, rows, &r, &ctx.probs, &ctx.pool)
+                    }
+                    None => mca::mca_encode_pooled(&xn, &lw.wv, &r, &ctx.probs, &ctx.pool),
+                };
                 // Under bf16 the exact path rounds its operands (mirrors the
                 // Python `mm`), so saturated tokens must take the *rounded*
                 // exact product too — otherwise the α → 0 limit would not
                 // match the exact-mode baseline. Only the saturated rows are
                 // recomputed, in the same skip-zero accumulation order as
-                // `Tensor::matmul`.
-                if cfg.bf16 && r.iter().any(|&ri| ri >= d) {
+                // `Tensor::matmul`. (int8 has no exactness contract, only
+                // the quantization envelope, so it keeps the estimator's
+                // dequantized fallback.)
+                if cfg.prec == Precision::Bf16 && r.iter().any(|&ri| ri >= d) {
                     let xnb = xn.to_bf16();
                     let wvb = lw.wv.to_bf16();
                     for (i, &ri) in r.iter().enumerate() {
@@ -411,7 +556,7 @@ pub(crate) fn forward_one(
                 }
                 est
             }
-            _ => mm(&xn, &lw.wv, cfg.bf16, threads),
+            _ => mm(&xn, wref(&lw.wv, pl.map(|p| &p.wv)), cfg.prec, threads),
         };
         v.add_row_inplace(&lw.bv);
 
@@ -423,27 +568,53 @@ pub(crate) fn forward_one(
             let ch = kernel::matmul(&attn[hh], &vh, threads).expect("attn @ v_h");
             ctx_m.add_col_block(hh * dh, &ch);
         }
-        let proj = mm_bias(&ctx_m, &lw.wo, &lw.bo, cfg.bf16, threads);
+        let proj = mm_bias(&ctx_m, wref(&lw.wo, pl.map(|p| &p.wo)), &lw.bo, cfg.prec, threads);
         x.add_inplace(&proj);
 
         // FFN block: bias + GELU fused into the up-projection epilogue.
         let xn2 = layer_norm(&x, &lw.ln2_scale, &lw.ln2_bias);
-        let hmid = mm_bias_gelu(&xn2, &lw.w1, &lw.b1, cfg.bf16, threads);
-        let ff = mm_bias(&hmid, &lw.w2, &lw.b2, cfg.bf16, threads);
+        let hmid =
+            mm_bias_gelu(&xn2, wref(&lw.w1, pl.map(|p| &p.w1)), &lw.b1, cfg.prec, threads);
+        let ff = mm_bias(&hmid, wref(&lw.w2, pl.map(|p| &p.w2)), &lw.b2, cfg.prec, threads);
         x.add_inplace(&ff);
     }
 
     let xf = layer_norm(&x, &w.lnf_scale, &w.lnf_bias);
     let cls = Tensor::new(&[1, d], xf.row(0).to_vec()).expect("cls row");
-    let logits = mm_bias(&cls, &w.head_w, &w.head_b, cfg.bf16, 1);
+    let head = wref(&w.head_w, packed.map(|p| &p.head_w));
+    let logits = mm_bias(&cls, head, &w.head_b, cfg.prec, 1);
     (logits.into_data(), r_sum as f32, n_eff as f32)
 }
 
 /// Batched forward: `ids` is row-major (batch, seq). Fans the independent
-/// sequences out across `workers` threads.
+/// sequences out across `workers` threads. Packs weight panels per call;
+/// the serving path goes through [`forward_batch_packed`] with the
+/// backend's per-checkpoint cache instead.
+#[allow(clippy::too_many_arguments)]
 pub fn forward_batch(
     model: &ModelInfo,
     params: &Params,
+    ids: &[i32],
+    batch: usize,
+    seq: usize,
+    alpha: f32,
+    seed: u32,
+    cfg: &ForwardCfg,
+    workers: usize,
+) -> Result<ForwardOutput> {
+    forward_batch_packed(model, params, None, ids, batch, seq, alpha, seed, cfg, workers)
+}
+
+/// [`forward_batch`] with an optional prepacked-weight cache entry. When
+/// `packed` is `Some`, no B-panel packing (or weight quantization) work
+/// runs on this call — every GEMM reuses the checkpoint's blocked panels,
+/// with results bit-identical to the pack-per-call route at every
+/// precision.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_batch_packed(
+    model: &ModelInfo,
+    params: &Params,
+    packed: Option<&PackedWeights>,
     ids: &[i32],
     batch: usize,
     seq: usize,
@@ -458,9 +629,14 @@ pub fn forward_batch(
     if seq > model.max_len {
         bail!("seq {seq} exceeds model {} max_len {}", model.name, model.max_len);
     }
+    if let Some(p) = packed {
+        if p.prec != cfg.prec {
+            bail!("prepacked weights are {} but the request wants {}", p.prec, cfg.prec);
+        }
+    }
     let w = Weights::unpack(model, params)?;
     let mca_ctx = match cfg.mode {
-        AttnMode::Mca => Some(mca_contexts(&w, cfg, seed)),
+        AttnMode::Mca => Some(mca_contexts(&w, cfg, seed, packed.is_none())),
         AttnMode::Exact => None,
     };
 
@@ -474,7 +650,7 @@ pub fn forward_batch(
     let fanout = workers.max(1).min(rows.len().max(1));
     let intra = (workers.max(1) / fanout).max(1);
     let results = threadpool::parallel_map(rows, fanout, |row: &Vec<i32>| {
-        forward_one(model, &w, row, alpha, mca_ctx.as_deref(), cfg, intra)
+        forward_one(model, &w, packed, row, alpha, mca_ctx.as_deref(), cfg, intra)
     });
 
     let ncl = model.n_classes;
@@ -588,7 +764,8 @@ mod tests {
         let w = Weights::unpack(&m, &p).unwrap();
         let (x, _) = embed(&m, &w, &[1, 5, 6, 7, 8, 2]);
         let xn = layer_norm(&x, &w.layers[0].ln1_scale, &w.layers[0].ln1_bias);
-        let (attn, _, _) = attention_probs(&xn, &w.layers[0], &mask, m.window, 2, false, 1);
+        let (attn, _, _) =
+            attention_probs(&xn, &w.layers[0], None, &mask, m.window, 2, Precision::F32, 1);
         for head in &attn {
             // query 3 cannot see key 5 (|3-5| > 1, neither is CLS)
             assert!(head.at(&[3, 5]) < 1e-6);
@@ -598,6 +775,55 @@ mod tests {
             let s: f32 = head.row(0).iter().sum();
             assert!((s - 1.0).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn packed_forward_is_bit_identical_to_per_call_packing() {
+        // The per-checkpoint cache must be a pure perf change: for every
+        // precision × mode, the cached route reproduces the pack-per-call
+        // route bit-for-bit (f32 packs the same panels; bf16 expands the
+        // same rounded bits; int8 shares quantized panels and encode rows).
+        let (m, p) = tiny_params(6);
+        let ids = vec![1, 5, 6, 2, 0, 0, 1, 7, 2, 0, 0, 0];
+        for dtype in ["f32", "bf16", "int8"] {
+            for mode in ["exact", "mca"] {
+                let cfg = ForwardCfg::parse(mode, "max", "norm", dtype).unwrap();
+                let packed = PackedWeights::build(&m, &p, cfg.prec).unwrap();
+                let a = forward_batch_packed(&m, &p, Some(&packed), &ids, 2, 6, 0.4, 7, &cfg, 2)
+                    .unwrap();
+                let b = forward_batch(&m, &p, &ids, 2, 6, 0.4, 7, &cfg, 2).unwrap();
+                assert_eq!(a.logits, b.logits, "{dtype}/{mode} cached forward diverged");
+                assert_eq!(a.r_sum, b.r_sum, "{dtype}/{mode} r accounting diverged");
+                assert!(a.logits.iter().all(|x| x.is_finite()), "{dtype}/{mode}");
+            }
+        }
+        // a precision mismatch between cache entry and request is rejected
+        let cfg = ForwardCfg::parse("exact", "max", "norm", "f32").unwrap();
+        let packed = PackedWeights::build(&m, &p, Precision::Int8).unwrap();
+        assert!(forward_batch_packed(&m, &p, Some(&packed), &ids, 2, 6, 1.0, 0, &cfg, 1).is_err());
+    }
+
+    #[test]
+    fn quantized_mca_saturates_to_its_own_exact_path_under_bf16() {
+        // The α → 0 contract per precision: bf16 saturated MCA must match
+        // the bf16 exact forward bit-for-bit (saturated rows recompute
+        // the rounded product); int8 must stay finite within its envelope
+        // but carries no bitwise contract.
+        let (m, p) = tiny_params(7);
+        let ids = vec![1, 5, 6, 7, 8, 2];
+        let exact = ForwardCfg::parse("exact", "max", "norm", "bf16").unwrap();
+        let mca = ForwardCfg::parse("mca", "max", "norm", "bf16").unwrap();
+        let e = forward_batch(&m, &p, &ids, 1, 6, 1.0, 3, &exact, 1).unwrap();
+        let s = forward_batch(&m, &p, &ids, 1, 6, 1e-3, 3, &mca, 1).unwrap();
+        assert_eq!(e.logits, s.logits, "bf16 saturated MCA diverged from bf16 exact");
+        // ... and the same through the prepacked cache.
+        let packed = PackedWeights::build(&m, &p, Precision::Bf16).unwrap();
+        let sp =
+            forward_batch_packed(&m, &p, Some(&packed), &ids, 1, 6, 1e-3, 3, &mca, 1).unwrap();
+        assert_eq!(e.logits, sp.logits);
+        let int8 = ForwardCfg::parse("mca", "max", "norm", "int8").unwrap();
+        let q = forward_batch(&m, &p, &ids, 1, 6, 0.4, 3, &int8, 1).unwrap();
+        assert!(q.logits.iter().all(|x| x.is_finite()));
     }
 
     #[test]

@@ -13,11 +13,12 @@
 use anyhow::{bail, Result};
 
 use super::forward::{
-    attention_probs, embed, gelu, gelu_grad, layer_norm_stats, mm, Weights, PARAMS_PER_LAYER,
+    attention_probs, embed, gelu, gelu_grad, layer_norm_stats, mm, WeightRef, Weights,
+    PARAMS_PER_LAYER,
 };
 use crate::data::TaskKind;
 use crate::runtime::{HostValue, ModelInfo, TrainState};
-use crate::tensor::{kernel, Tensor};
+use crate::tensor::{kernel, Precision, Tensor};
 use crate::util::threadpool;
 
 // ---------------------------------------------------------------------------
@@ -174,8 +175,9 @@ fn example_loss_grad(
     let mut caches: Vec<LayerCache> = Vec::with_capacity(model.n_layers);
     for lw in &w.layers {
         let (xn, mu1, istd1) = layer_norm_stats(&x, &lw.ln1_scale, &lw.ln1_bias);
-        let (attn, q, k) = attention_probs(&xn, lw, &mask, model.window, h, false, 1);
-        let mut v = mm(&xn, &lw.wv, false, 1);
+        let (attn, q, k) =
+            attention_probs(&xn, lw, None, &mask, model.window, h, Precision::F32, 1);
+        let mut v = mm(&xn, WeightRef::Plain(&lw.wv), Precision::F32, 1);
         v.add_row_inplace(&lw.bv);
         let mut ctx_m = Tensor::zeros(&[n, d]);
         for hh in 0..h {
@@ -183,19 +185,19 @@ fn example_loss_grad(
             let ch = attn[hh].matmul(&vh).expect("attn @ v_h");
             ctx_m.add_col_block(hh * dh, &ch);
         }
-        let mut proj = mm(&ctx_m, &lw.wo, false, 1);
+        let mut proj = mm(&ctx_m, WeightRef::Plain(&lw.wo), Precision::F32, 1);
         proj.add_row_inplace(&lw.bo);
         let x_in = x;
         let mut x_attn = x_in.clone();
         x_attn.add_inplace(&proj);
         let (xn2, mu2, istd2) = layer_norm_stats(&x_attn, &lw.ln2_scale, &lw.ln2_bias);
-        let mut hpre = mm(&xn2, &lw.w1, false, 1);
+        let mut hpre = mm(&xn2, WeightRef::Plain(&lw.w1), Precision::F32, 1);
         hpre.add_row_inplace(&lw.b1);
         let mut hact = hpre.clone();
         for a in hact.data_mut() {
             *a = gelu(*a);
         }
-        let mut ff = mm(&hact, &lw.w2, false, 1);
+        let mut ff = mm(&hact, WeightRef::Plain(&lw.w2), Precision::F32, 1);
         ff.add_row_inplace(&lw.b2);
         let mut x_out = x_attn.clone();
         x_out.add_inplace(&ff);

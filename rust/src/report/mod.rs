@@ -87,10 +87,13 @@ pub fn render_eval_report(rep: &crate::eval::harness::HarnessReport) -> String {
     }
     for model in models {
         let mine: Vec<_> = rep.points.iter().filter(|p| p.model == model).collect();
-        let mut knobs: Vec<Knob> = Vec::new();
+        // one column per (knob, precision) setting; f32 columns keep the
+        // bare knob label so single-precision reports look as before
+        let mut knobs: Vec<(Knob, &str)> = Vec::new();
         for p in &mine {
-            if p.knob != Knob::Exact && !knobs.contains(&p.knob) {
-                knobs.push(p.knob);
+            let setting = (p.knob, p.precision.as_str());
+            if p.knob != Knob::Exact && !knobs.contains(&setting) {
+                knobs.push(setting);
             }
         }
         let mut tasks: Vec<&str> = Vec::new();
@@ -103,8 +106,12 @@ pub fn render_eval_report(rep: &crate::eval::harness::HarnessReport) -> String {
         let _ = writeln!(s, "\n### {model}\n");
         let mut header = String::from("| Task | Metric | Baseline |");
         let mut rule = String::from("|---|---|---|");
-        for k in &knobs {
-            let _ = write!(header, " {k} | FLOPS |");
+        for (k, prec) in &knobs {
+            if *prec == "f32" {
+                let _ = write!(header, " {k} | FLOPS |");
+            } else {
+                let _ = write!(header, " {k} [{prec}] | FLOPS |");
+            }
             rule.push_str("---|---|");
         }
         let _ = writeln!(s, "{header}");
@@ -120,8 +127,11 @@ pub fn render_eval_report(rep: &crate::eval::harness::HarnessReport) -> String {
                 base.metric,
                 100.0 * base.baseline
             );
-            for k in &knobs {
-                match mine.iter().find(|p| p.task == *task && p.knob == *k) {
+            for (k, prec) in &knobs {
+                match mine
+                    .iter()
+                    .find(|p| p.task == *task && p.knob == *k && p.precision == *prec)
+                {
                     Some(p) => {
                         let _ = write!(
                             line,
@@ -139,13 +149,14 @@ pub fn render_eval_report(rep: &crate::eval::harness::HarnessReport) -> String {
 
         if let Some(f) = rep.frontiers.iter().find(|f| f.model == model) {
             let _ = writeln!(s, "\nPareto frontier (macro-averaged over tasks):\n");
-            let _ = writeln!(s, "| Knob | FLOPS reduction | Accuracy |");
-            let _ = writeln!(s, "|---|---|---|");
+            let _ = writeln!(s, "| Knob | Precision | FLOPS reduction | Accuracy |");
+            let _ = writeln!(s, "|---|---|---|---|");
             for p in &f.points {
                 let _ = writeln!(
                     s,
-                    "| {} | {:.2}× | {:.2} |",
+                    "| {} | {} | {:.2}× | {:.2} |",
                     p.knob,
+                    p.precision,
                     p.flops_reduction,
                     100.0 * p.accuracy
                 );
@@ -157,13 +168,13 @@ pub fn render_eval_report(rep: &crate::eval::harness::HarnessReport) -> String {
         let _ = writeln!(s, "\n### Serving-pool counters\n");
         let _ = writeln!(
             s,
-            "| Model | Task | Served | Shed | Batches | Canaries (viol.) | Brownouts | Degraded | α target |"
+            "| Model | Task | Served | Shed | Batches | Canaries (viol.) | Brownouts | Degraded | Quantized | α target |"
         );
-        let _ = writeln!(s, "|---|---|---|---|---|---|---|---|---|");
+        let _ = writeln!(s, "|---|---|---|---|---|---|---|---|---|---|");
         for c in &rep.pools {
             let _ = writeln!(
                 s,
-                "| {} | {} | {} | {} | {} | {} ({}) | {} | {} | {:.2} |",
+                "| {} | {} | {} | {} | {} | {} ({}) | {} | {} | {} | {:.2} |",
                 c.model,
                 c.task,
                 c.served,
@@ -173,6 +184,7 @@ pub fn render_eval_report(rep: &crate::eval::harness::HarnessReport) -> String {
                 c.canary_violations,
                 c.brownout_entries,
                 c.degraded,
+                c.quantized,
                 c.controller_alpha
             );
         }
@@ -297,6 +309,7 @@ mod tests {
             task: "sst2_sim".into(),
             metric: "Acc.".into(),
             knob,
+            precision: "f32".into(),
             accuracy: acc,
             baseline: 0.92,
             agreement: if knob == Knob::Exact { 1.0 } else { 0.97 },
@@ -317,6 +330,7 @@ mod tests {
                 model: "distil_sim".into(),
                 points: vec![FrontierPoint {
                     knob: Knob::Alpha(0.3),
+                    precision: "f32".into(),
                     flops_reduction: 3.5,
                     accuracy: 0.9,
                 }],
@@ -331,6 +345,7 @@ mod tests {
                 canary_violations: 0,
                 brownout_entries: 1,
                 degraded: 3,
+                quantized: 2,
                 controller_alpha: 0.6,
             }],
         };
@@ -343,6 +358,6 @@ mod tests {
         assert!(s.contains("ε=16"));
         assert!(s.contains("Pareto frontier"));
         assert!(s.contains("Serving-pool counters"));
-        assert!(s.contains("| 384 | 1 | 20 | 5 (0) | 1 | 3 | 0.60 |"));
+        assert!(s.contains("| 384 | 1 | 20 | 5 (0) | 1 | 3 | 2 | 0.60 |"));
     }
 }

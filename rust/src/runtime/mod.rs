@@ -57,7 +57,9 @@ pub struct ForwardSpec {
     pub r_strategy: String,
     /// sampling distribution for Eq. 6: "norm" | "uniform"
     pub p_strategy: String,
-    /// "f32" | "bf16"
+    /// "f32" | "bf16" | "int8" — the arithmetic-precision axis; quantized
+    /// dtypes run on the kernel's bf16/int8 GEMM paths with prepacked
+    /// per-checkpoint weights on the native backend
     pub compute_dtype: String,
 }
 

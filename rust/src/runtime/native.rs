@@ -19,17 +19,49 @@ use anyhow::{bail, Context, Result};
 
 use super::{Backend, ForwardOutput, ForwardSpec, HostValue, ModelInfo, TrainState};
 use crate::data::TaskKind;
-use crate::model::forward::{forward_batch, ForwardCfg};
+use crate::model::forward::{forward_batch_packed, ForwardCfg, PackedWeights};
 use crate::model::{builtin_models, grad, Params};
+use crate::tensor::Precision;
 use crate::util::threadpool;
 
 /// Largest batch the native backend advertises for eval sweeps.
 const EVAL_BATCH: usize = 32;
 
+/// One entry of the per-checkpoint prepacked-weight cache: the blocked
+/// (and, for bf16/int8, quantized) weight panels plus a fingerprint of
+/// the parameters they were packed from. The fingerprint guards against
+/// in-place checkpoint mutation (the trainer updates `Params` between
+/// forwards) — a mismatch repacks.
+struct PackRecord {
+    fingerprint: u64,
+    packed: PackedWeights,
+}
+
+/// FNV-1a over every parameter element's bits (plus per-tensor lengths).
+/// One streaming read of the checkpoint — orders of magnitude cheaper
+/// than the blocked re-pack it saves, and collision-safe enough that a
+/// trainer step (which perturbs essentially every element) always misses.
+fn params_fingerprint(params: &Params) -> u64 {
+    const FNV_PRIME: u64 = 0x100_0000_01b3;
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for hv in &params.values {
+        if let Ok(xs) = hv.as_f32() {
+            h = (h ^ xs.len() as u64).wrapping_mul(FNV_PRIME);
+            for &x in xs {
+                h = (h ^ x.to_bits() as u64).wrapping_mul(FNV_PRIME);
+            }
+        }
+    }
+    h
+}
+
 /// The pure-Rust execution backend (see module docs).
 pub struct NativeBackend {
     models: BTreeMap<String, ModelInfo>,
     workers: usize,
+    /// per-(model, precision) prepacked weights: packed once per loaded
+    /// checkpoint, reused by every steady-state forward (DESIGN.md §3)
+    packs: BTreeMap<(String, Precision), PackRecord>,
 }
 
 impl NativeBackend {
@@ -44,7 +76,25 @@ impl NativeBackend {
     /// pool workers.
     pub fn with_workers(workers: usize) -> NativeBackend {
         let models = builtin_models().into_iter().map(|m| (m.name.clone(), m)).collect();
-        NativeBackend { models, workers: workers.max(1) }
+        NativeBackend { models, workers: workers.max(1), packs: BTreeMap::new() }
+    }
+
+    /// Return the cached prepacked weights for `(model, prec)`, packing
+    /// (once) if absent or if `params` changed since the entry was built.
+    fn ensure_packed(
+        &mut self,
+        info: &ModelInfo,
+        params: &Params,
+        prec: Precision,
+    ) -> Result<&PackedWeights> {
+        let fp = params_fingerprint(params);
+        let key = (info.name.clone(), prec);
+        let stale = self.packs.get(&key).map(|r| r.fingerprint != fp).unwrap_or(true);
+        if stale {
+            let packed = PackedWeights::build(info, params, prec)?;
+            self.packs.insert(key.clone(), PackRecord { fingerprint: fp, packed });
+        }
+        Ok(&self.packs.get(&key).expect("inserted above").packed)
     }
 }
 
@@ -103,7 +153,8 @@ impl Backend for NativeBackend {
         seed: u32,
     ) -> Result<ForwardOutput> {
         let info = self.model(&spec.model)?;
-        let cfg = ForwardCfg::parse(&spec.mode, &spec.r_strategy, &spec.p_strategy, &spec.compute_dtype)?;
+        let cfg =
+            ForwardCfg::parse(&spec.mode, &spec.r_strategy, &spec.p_strategy, &spec.compute_dtype)?;
         if ids.shape() != &[spec.batch, spec.seq][..] {
             bail!(
                 "ids shape {:?} != spec batch/seq ({}, {})",
@@ -112,16 +163,19 @@ impl Backend for NativeBackend {
                 spec.seq
             );
         }
-        forward_batch(
+        let workers = self.workers;
+        let packed = self.ensure_packed(&info, params, cfg.prec)?;
+        forward_batch_packed(
             &info,
             params,
+            Some(packed),
             ids.as_i32()?,
             spec.batch,
             spec.seq,
             alpha,
             seed,
             &cfg,
-            self.workers,
+            workers,
         )
     }
 
@@ -176,6 +230,38 @@ mod tests {
     }
 
     #[test]
+    fn quantized_dtypes_run_and_cache_stays_checkpoint_coherent() {
+        let mut be = NativeBackend::with_workers(2);
+        let info = be.model("distil_sim").unwrap();
+        let mut rng = Pcg64::new(9);
+        let params = Params::init(&info, &mut rng);
+        let seq = 10;
+        let mut ids = vec![0i32; seq];
+        for (j, t) in [1i32, 30, 40, 2].iter().enumerate() {
+            ids[j] = *t;
+        }
+        let hv = HostValue::I32 { shape: vec![1, seq], data: ids };
+        for dtype in ["f32", "bf16", "int8"] {
+            let mut spec = ForwardSpec::new("distil_sim", "mca", 1, seq);
+            spec.compute_dtype = dtype.into();
+            assert!(be.max_batch(&spec).unwrap() >= 1);
+            // first call packs, second hits the cache — results identical
+            let a = be.forward(&spec, &params, &hv, 0.4, 7).unwrap();
+            let b = be.forward(&spec, &params, &hv, 0.4, 7).unwrap();
+            assert_eq!(a.logits, b.logits, "{dtype} cache hit diverged");
+            assert!(a.logits.iter().all(|x| x.is_finite()), "{dtype}");
+        }
+        // an in-place checkpoint change must repack, not serve stale
+        // panels: results through the warm backend match a cold one.
+        let params2 = Params::init(&info, &mut Pcg64::new(10));
+        let spec = ForwardSpec::new("distil_sim", "exact", 1, seq);
+        let warm = be.forward(&spec, &params2, &hv, 1.0, 0).unwrap();
+        let mut cold = NativeBackend::with_workers(2);
+        let fresh = cold.forward(&spec, &params2, &hv, 1.0, 0).unwrap();
+        assert_eq!(warm.logits, fresh.logits, "stale prepacked weights served");
+    }
+
+    #[test]
     fn bad_specs_are_rejected() {
         let mut be = NativeBackend::with_workers(1);
         let spec = ForwardSpec::new("no_such_model", "mca", 1, 8);
@@ -185,6 +271,9 @@ mod tests {
         assert!(be.max_batch(&spec).is_err());
         let mut spec = ForwardSpec::new("bert_sim", "mca", 1, 8);
         spec.seq = 1000;
+        assert!(be.max_batch(&spec).is_err());
+        let mut spec = ForwardSpec::new("bert_sim", "mca", 1, 8);
+        spec.compute_dtype = "fp64".into();
         assert!(be.max_batch(&spec).is_err());
         // shape mismatch caught before compute
         let info = be.model("bert_sim").unwrap();

@@ -39,6 +39,19 @@
 //! [`super::reference`] loops — and hence to the MCA estimator's
 //! saturated-token fallback — for any shape and any thread count. The
 //! property tests below assert `==`, not approximate closeness.
+//!
+//! **Precision paths.** Alongside the f32 kernels, a weight can be packed
+//! once per checkpoint into a [`PackedB`] panel at [`Precision::Bf16`]
+//! (operands rounded to bf16, f32 accumulate) or [`Precision::Int8`]
+//! (symmetric per-panel scales, i32 accumulate, fused dequant) and reused
+//! across every forward via the `*_prepacked` entry points — no B-panel
+//! packing on the steady-state path. f32 panels keep the bit-exactness
+//! contract above; bf16 panels are bit-identical to the f32 kernel
+//! applied to bf16-rounded operands; int8 panels only promise the
+//! relative-error envelope documented on [`PackedB::pack_int8`] and
+//! asserted by the property tests.
+
+use std::cell::RefCell;
 
 use anyhow::{bail, Result};
 
@@ -62,6 +75,50 @@ const PAR_MIN_WORK: usize = 1 << 20;
 
 /// Mask type instantiated for the epilogues that have no mask.
 type NoMask = fn(usize, usize) -> bool;
+
+/// Arithmetic precision of a GEMM / encode path. The serving stack
+/// threads this through as a first-class axis: the kernel's [`PackedB`]
+/// panels, the forward config, the coordinator's brownout ladder and the
+/// eval sweep all key on it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Precision {
+    /// Full f32 — bit-exact against [`super::reference`].
+    F32,
+    /// bf16-rounded operands with f32 accumulation (half the B-panel
+    /// memory traffic; bit-identical to the f32 kernel on bf16-rounded
+    /// operands).
+    Bf16,
+    /// Symmetric per-panel int8 with i32 accumulation (a quarter of the
+    /// B-panel traffic; envelope-only accuracy contract).
+    Int8,
+}
+
+impl Precision {
+    /// Parse the CLI/wire spelling (`"f32" | "bf16" | "int8"`).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f32" => Some(Precision::F32),
+            "bf16" => Some(Precision::Bf16),
+            "int8" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    /// The canonical spelling (inverse of [`Precision::parse`]).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+            Precision::Int8 => "int8",
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
 
 // ---------------------------------------------------------------------------
 // Public entry points
@@ -199,6 +256,261 @@ pub fn matmul_tn_acc(a: &Tensor, b: &Tensor, acc: &mut [f32], threads: usize) {
     gemm_driver(&spec, acc, &Epilogue::<NoMask>::None, threads);
 }
 
+/// A weight matrix packed once into the kernel's blocked B-strip layout
+/// (and, for the quantized precisions, quantized there) for reuse across
+/// many GEMM calls — the storage type of the per-checkpoint
+/// prepacked-weight cache. The layout matches the per-call packing:
+/// element `(t, jb + jj)` of the logical `(k, n)` B lands at
+/// `pb[strip * k * NR + t * NR + jj]` in NR-wide zero-padded strips.
+#[derive(Debug, Clone)]
+pub enum PackedB {
+    /// Full-precision strips; GEMMs are bit-identical to the per-call
+    /// packing path.
+    F32 {
+        /// contraction length (rows of the logical B)
+        k: usize,
+        /// output columns
+        n: usize,
+        /// packed strips, `[strip][k][NR]`
+        pb: Vec<f32>,
+    },
+    /// bf16 strips stored as the top 16 bits of the RNE-rounded f32
+    /// pattern; expanded exactly back to f32 inside the kernel.
+    Bf16 {
+        /// contraction length (rows of the logical B)
+        k: usize,
+        /// output columns
+        n: usize,
+        /// packed bf16 bit patterns, `[strip][k][NR]`
+        pb: Vec<u16>,
+    },
+    /// int8 strips with one symmetric scale per (strip, KC-block) panel;
+    /// i32 accumulation, dequantized at each KC-block boundary.
+    Int8 {
+        /// contraction length (rows of the logical B)
+        k: usize,
+        /// output columns
+        n: usize,
+        /// packed quantized strips, `[strip][k][NR]`
+        pb: Vec<i8>,
+        /// `scales[strip * n_kblocks + kb]` dequantizes strip `strip`,
+        /// contraction block `kb` (`n_kblocks = ceil(k / KC)`)
+        scales: Vec<f32>,
+    },
+}
+
+impl PackedB {
+    /// Pack a rank-2 `(k, n)` weight at full f32 precision.
+    pub fn pack_f32(b: &Tensor) -> Result<PackedB> {
+        let (k, n) = Self::check(b)?;
+        let pb = pack_weight(b, k, n);
+        Ok(PackedB::F32 { k, n, pb })
+    }
+
+    /// Pack a rank-2 `(k, n)` weight rounded to bf16
+    /// (round-to-nearest-even, stored as the top 16 bits of the f32
+    /// pattern). GEMMs expand the strips exactly back to f32, so results
+    /// are bit-identical to the f32 kernel applied to bf16-rounded
+    /// operands.
+    pub fn pack_bf16(b: &Tensor) -> Result<PackedB> {
+        let (k, n) = Self::check(b)?;
+        let pf = pack_weight(b, k, n);
+        let pb = pf.iter().map(|&v| (super::bf16_round(v).to_bits() >> 16) as u16).collect();
+        Ok(PackedB::Bf16 { k, n, pb })
+    }
+
+    /// Quantize and pack a rank-2 `(k, n)` weight to int8 with one
+    /// symmetric scale `max|panel| / 127` per (strip, KC-block) panel.
+    ///
+    /// **Error envelope.** Each operand of a product carries at most half
+    /// a quantization step, so the per-element absolute error of a GEMM
+    /// against the packed weight is bounded by
+    /// `1.05 · k · max|A| · max|B| / 127` (the 5% margin covers the
+    /// cross term and f32 dequant rounding). The property tests assert
+    /// this envelope; there is no bit-exactness promise at int8.
+    pub fn pack_int8(b: &Tensor) -> Result<PackedB> {
+        let (k, n) = Self::check(b)?;
+        let pf = pack_weight(b, k, n);
+        let n_strips = (n + NR - 1) / NR;
+        let n_kblocks = (k + KC - 1) / KC;
+        let mut pb = vec![0i8; pf.len()];
+        let mut scales = vec![0.0f32; n_strips * n_kblocks];
+        for s in 0..n_strips {
+            let base = s * k * NR;
+            for kb in 0..n_kblocks {
+                let t0 = kb * KC;
+                let t1 = (t0 + KC).min(k);
+                let panel = &pf[base + t0 * NR..base + t1 * NR];
+                let mut amax = 0.0f32;
+                for &v in panel {
+                    amax = amax.max(v.abs());
+                }
+                let scale = amax / 127.0;
+                scales[s * n_kblocks + kb] = scale;
+                if scale > 0.0 {
+                    let inv = 1.0 / scale;
+                    let qpanel = &mut pb[base + t0 * NR..base + t1 * NR];
+                    for (q, &v) in qpanel.iter_mut().zip(panel) {
+                        *q = (v * inv).round().clamp(-127.0, 127.0) as i8;
+                    }
+                }
+            }
+        }
+        Ok(PackedB::Int8 { k, n, pb, scales })
+    }
+
+    /// Pack at the given precision.
+    pub fn pack(b: &Tensor, prec: Precision) -> Result<PackedB> {
+        match prec {
+            Precision::F32 => Self::pack_f32(b),
+            Precision::Bf16 => Self::pack_bf16(b),
+            Precision::Int8 => Self::pack_int8(b),
+        }
+    }
+
+    fn check(b: &Tensor) -> Result<(usize, usize)> {
+        let &[k, n] = &b.shape()[..] else {
+            bail!("PackedB::pack needs a rank-2 weight, got {:?}", b.shape());
+        };
+        Ok((k, n))
+    }
+
+    /// Contraction length (rows of the logical B).
+    pub fn k(&self) -> usize {
+        match self {
+            PackedB::F32 { k, .. } | PackedB::Bf16 { k, .. } | PackedB::Int8 { k, .. } => *k,
+        }
+    }
+
+    /// Output columns.
+    pub fn n(&self) -> usize {
+        match self {
+            PackedB::F32 { n, .. } | PackedB::Bf16 { n, .. } | PackedB::Int8 { n, .. } => *n,
+        }
+    }
+
+    /// The precision the panel was packed at.
+    pub fn precision(&self) -> Precision {
+        match self {
+            PackedB::F32 { .. } => Precision::F32,
+            PackedB::Bf16 { .. } => Precision::Bf16,
+            PackedB::Int8 { .. } => Precision::Int8,
+        }
+    }
+}
+
+/// Pack a `(k, n)` weight tensor into NR-wide zero-padded f32 strips —
+/// the shared first step of every [`PackedB`] constructor.
+fn pack_weight(b: &Tensor, k: usize, n: usize) -> Vec<f32> {
+    let spec = Gemm {
+        m: 0,
+        n,
+        k,
+        a: &[],
+        a_trans: false,
+        b: b.data(),
+        b_trans: false,
+        skip_zero_a: true,
+        accumulate: false,
+    };
+    pack_b(&spec)
+}
+
+/// Blocked `(m,k) @ packed -> (m,n)` against a [`PackedB`] panel — the
+/// steady-state forward path, with no B packing per call. f32 panels are
+/// bit-identical to [`matmul`]; bf16 panels to `matmul` on bf16-rounded
+/// operands; int8 panels satisfy the envelope on [`PackedB::pack_int8`].
+pub fn matmul_prepacked(a: &Tensor, pb: &PackedB, threads: usize) -> Result<Tensor> {
+    prepacked_impl("matmul_prepacked", a, pb, &Epilogue::<NoMask>::None, threads)
+}
+
+/// [`matmul_prepacked`] with the row-broadcast bias add fused into the
+/// panel epilogue (the bias stays f32 at every precision).
+pub fn matmul_bias_prepacked(
+    a: &Tensor,
+    pb: &PackedB,
+    bias: &[f32],
+    threads: usize,
+) -> Result<Tensor> {
+    if bias.len() != pb.n() {
+        bail!("matmul_bias_prepacked: bias length {} != {}", bias.len(), pb.n());
+    }
+    prepacked_impl("matmul_bias_prepacked", a, pb, &Epilogue::<NoMask>::Bias(bias), threads)
+}
+
+/// [`matmul_prepacked`] with bias + tanh-GELU fused into the panel
+/// epilogue — the FFN up-projection against a cached panel.
+pub fn matmul_bias_gelu_prepacked(
+    a: &Tensor,
+    pb: &PackedB,
+    bias: &[f32],
+    threads: usize,
+) -> Result<Tensor> {
+    if bias.len() != pb.n() {
+        bail!("matmul_bias_gelu_prepacked: bias length {} != {}", bias.len(), pb.n());
+    }
+    let epi = Epilogue::<NoMask>::BiasGelu(bias);
+    prepacked_impl("matmul_bias_gelu_prepacked", a, pb, &epi, threads)
+}
+
+/// Shared driver behind the `*_prepacked` entry points: validate shapes,
+/// then dispatch on the panel's precision.
+fn prepacked_impl(
+    name: &str,
+    a: &Tensor,
+    pb: &PackedB,
+    epi: &Epilogue<'_, NoMask>,
+    threads: usize,
+) -> Result<Tensor> {
+    let &[m, k] = &a.shape()[..] else {
+        bail!("{name} needs a rank-2 activation, got {:?}", a.shape());
+    };
+    if k != pb.k() {
+        bail!("{name} contraction mismatch: {:?} vs packed ({}, {})", a.shape(), pb.k(), pb.n());
+    }
+    let n = pb.n();
+    let mut out = vec![0.0f32; m * n];
+    if m == 0 || n == 0 {
+        return Tensor::new(&[m, n], out);
+    }
+    if k == 0 {
+        apply_epilogue(epi, &mut out, n, 0, 0, m);
+        return Tensor::new(&[m, n], out);
+    }
+    match pb {
+        PackedB::F32 { pb, .. } => {
+            let spec = Gemm {
+                m,
+                n,
+                k,
+                a: a.data(),
+                a_trans: false,
+                b: &[],
+                b_trans: false,
+                skip_zero_a: true,
+                accumulate: false,
+            };
+            split_rows(m, n, k, &mut out, threads, |r0, r1, chunk| {
+                gemm_rows(&spec, pb, r0, r1, chunk, epi)
+            });
+        }
+        PackedB::Bf16 { pb, .. } => {
+            let ra = a.to_bf16();
+            let a_rows = ra.data();
+            split_rows(m, n, k, &mut out, threads, |r0, r1, chunk| {
+                gemm_rows_bf16(a_rows, k, n, pb, r0, r1, chunk, epi)
+            });
+        }
+        PackedB::Int8 { pb, scales, .. } => {
+            let a_rows = a.data();
+            split_rows(m, n, k, &mut out, threads, |r0, r1, chunk| {
+                gemm_rows_int8(a_rows, k, n, pb, scales, r0, r1, chunk, epi)
+            });
+        }
+    }
+    Tensor::new(&[m, n], out)
+}
+
 /// `o += s · w` over the leading `o.len()` elements of `w` — the
 /// single-row AXPY the Monte-Carlo encode is built from.
 pub fn axpy(o: &mut [f32], s: f32, w: &[f32]) {
@@ -238,6 +550,24 @@ fn axpy4_impl(o: &mut [f32], s: &[f32; 4], w0: &[f32], w1: &[f32], w2: &[f32], w
     let (w0, w1, w2, w3) = (&w0[..d], &w1[..d], &w2[..d], &w3[..d]);
     for j in 0..d {
         o[j] = o[j] + s[0] * w0[j] + s[1] * w1[j] + s[2] * w2[j] + s[3] * w3[j];
+    }
+}
+
+/// `o += s · wq` over one int8-quantized row. `s` must already include
+/// the row's dequantization scale — the Monte-Carlo encode folds its
+/// sampling scale and the quant scale into one multiplier, so dequant is
+/// fused into the AXPY instead of materializing an f32 row.
+pub fn axpy_i8(o: &mut [f32], s: f32, wq: &[i8]) {
+    for (x, &q) in o.iter_mut().zip(wq) {
+        *x += s * q as f32;
+    }
+}
+
+/// `o += s · w` over one bf16 row stored as the top 16 bits of the f32
+/// bit pattern; the expansion back to f32 is exact.
+pub fn axpy_bf16(o: &mut [f32], s: f32, w: &[u16]) {
+    for (x, &bits) in o.iter_mut().zip(w) {
+        *x += s * f32::from_bits((bits as u32) << 16);
     }
 }
 
@@ -316,30 +646,42 @@ where
         return;
     }
     let pb = pack_b(spec);
-    let work = spec.m * spec.n * spec.k;
-    let eff = if threads <= 1 || spec.m < PAR_MIN_ROWS || work < PAR_MIN_WORK {
+    split_rows(spec.m, spec.n, spec.k, c, threads, |r0, r1, chunk| {
+        gemm_rows(spec, &pb, r0, r1, chunk, epi)
+    });
+}
+
+/// Split output rows `[0, m)` into contiguous MC-multiple chunks across
+/// up to `threads` threads and run `run(r0, r1, chunk)` on each — the one
+/// thread-split rule shared by every precision path. Chunks being MC
+/// multiples means every output row is computed by exactly one thread
+/// with the same instruction sequence as the single-threaded path, so
+/// results are bit-identical for any thread count.
+fn split_rows<R>(m: usize, n: usize, k: usize, c: &mut [f32], threads: usize, run: R)
+where
+    R: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    let work = m * n * k;
+    let eff = if threads <= 1 || m < PAR_MIN_ROWS || work < PAR_MIN_WORK {
         1
     } else {
-        threads.min(spec.m / MC).max(1)
+        threads.min(m / MC).max(1)
     };
     if eff <= 1 {
-        gemm_rows(spec, &pb, 0, spec.m, c, epi);
+        run(0, m, c);
         return;
     }
-    // Contiguous row chunks in MC multiples: every output row is computed
-    // by exactly one thread with the same instruction sequence as the
-    // single-threaded path, so the result is bit-identical for any split.
-    let per = (spec.m + eff - 1) / eff;
+    let per = (m + eff - 1) / eff;
     let per = ((per + MC - 1) / MC) * MC;
     std::thread::scope(|s| {
         let mut rest = c;
         let mut start = 0usize;
-        while start < spec.m {
-            let len = per.min(spec.m - start);
-            let (head, tail) = std::mem::take(&mut rest).split_at_mut(len * spec.n);
+        while start < m {
+            let len = per.min(m - start);
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(len * n);
             rest = tail;
-            let pb_ref = &pb;
-            s.spawn(move || gemm_rows(spec, pb_ref, start, start + len, head, epi));
+            let run_ref = &run;
+            s.spawn(move || run_ref(start, start + len, head));
             start += len;
         }
     });
@@ -380,11 +722,17 @@ fn pack_b(spec: &Gemm<'_>) -> Vec<f32> {
     pb
 }
 
+thread_local! {
+    /// Per-thread scratch for the transposed-A panel packing: one
+    /// long-lived buffer per thread instead of a fresh allocation on
+    /// every [`gemm_rows`] call (the gradient path hits this on every
+    /// weight-gradient GEMM of every training step).
+    static PA_SCRATCH: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+}
+
 /// Compute rows `[r0, r1)` of the problem into `c` (whose row 0 is global
-/// row `r0`): MC-row panels × KC contraction blocks × NC column blocks of
-/// NR strips, MR×NR micro-tiles inside. Partial KC sums are parked in `c`
-/// (exact — f32 stores don't round), so per-element accumulation order is
-/// ascending k regardless of blocking.
+/// row `r0`); borrows the thread-local A-packing scratch when the spec
+/// needs one and delegates to [`gemm_rows_inner`].
 fn gemm_rows<F>(
     spec: &Gemm<'_>,
     pb: &[f32],
@@ -395,8 +743,39 @@ fn gemm_rows<F>(
 ) where
     F: Fn(usize, usize) -> bool + Sync,
 {
+    if spec.a_trans {
+        PA_SCRATCH.with(|cell| {
+            let mut pa = cell.borrow_mut();
+            let need = MC * KC.min(spec.k);
+            if pa.len() < need {
+                pa.resize(need, 0.0);
+            }
+            gemm_rows_inner(spec, pb, r0, r1, c, epi, &mut pa[..]);
+        });
+    } else {
+        gemm_rows_inner(spec, pb, r0, r1, c, epi, &mut []);
+    }
+}
+
+/// The body of [`gemm_rows`]: MC-row panels × KC contraction blocks × NC
+/// column blocks of NR strips, MR×NR micro-tiles inside. Partial KC sums
+/// are parked in `c` (exact — f32 stores don't round), so per-element
+/// accumulation order is ascending k regardless of blocking. `pa` is the
+/// transposed-A packing scratch (unused, may be empty, when
+/// `!spec.a_trans`).
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows_inner<F>(
+    spec: &Gemm<'_>,
+    pb: &[f32],
+    r0: usize,
+    r1: usize,
+    c: &mut [f32],
+    epi: &Epilogue<'_, F>,
+    pa: &mut [f32],
+) where
+    F: Fn(usize, usize) -> bool + Sync,
+{
     let (n, k) = (spec.n, spec.k);
-    let mut pa = vec![0.0f32; if spec.a_trans { MC * KC.min(k) } else { 0 }];
     let empty: &[f32] = &[];
     let mut i0 = r0;
     while i0 < r1 {
@@ -458,6 +837,201 @@ fn gemm_rows<F>(
         }
         apply_epilogue(epi, c, n, r0, i0 - r0, i1 - r0);
         i0 = i1;
+    }
+}
+
+/// bf16 analogue of [`gemm_rows`] for prepacked panels: B strips are
+/// stored as bf16 bit patterns and expanded exactly back to f32 one
+/// (strip × KC-block) at a time into a stack scratch, then fed through
+/// the same f32 micro-kernel with f32 accumulation. With `a` already
+/// bf16-rounded by the caller, the result is bit-identical to running
+/// the f32 kernel on bf16-rounded operands.
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows_bf16(
+    a: &[f32],
+    k: usize,
+    n: usize,
+    pb: &[u16],
+    r0: usize,
+    r1: usize,
+    c: &mut [f32],
+    epi: &Epilogue<'_, NoMask>,
+) {
+    let empty: &[f32] = &[];
+    let mut bexp = [0.0f32; KC * NR];
+    let mut i0 = r0;
+    while i0 < r1 {
+        let i1 = (i0 + MC).min(r1);
+        let rows = i1 - i0;
+        let mut k0 = 0usize;
+        while k0 < k {
+            let k1 = (k0 + KC).min(k);
+            let kc = k1 - k0;
+            let first = k0 == 0;
+            let mut j0 = 0usize;
+            while j0 < n {
+                let j1 = (j0 + NC).min(n);
+                let s0 = j0 / NR;
+                let s1 = (j1 + NR - 1) / NR;
+                for s in s0..s1 {
+                    let jb = s * NR;
+                    let nw = NR.min(n - jb);
+                    let strip_bits = &pb[s * k * NR + k0 * NR..s * k * NR + k1 * NR];
+                    for (x, &bits) in bexp.iter_mut().zip(strip_bits) {
+                        *x = f32::from_bits((bits as u32) << 16);
+                    }
+                    let strip = &bexp[..kc * NR];
+                    let mut ib = 0usize;
+                    while ib < rows {
+                        let mr = MR.min(rows - ib);
+                        let mut ar = [empty; MR];
+                        for (i, slot) in ar.iter_mut().enumerate().take(mr) {
+                            let base = (i0 + ib + i) * k + k0;
+                            *slot = &a[base..base + kc];
+                        }
+                        let mut acc = [[0.0f32; NR]; MR];
+                        if !first {
+                            for i in 0..mr {
+                                let crow = &c[(i0 - r0 + ib + i) * n + jb..];
+                                acc[i][..nw].copy_from_slice(&crow[..nw]);
+                            }
+                        }
+                        micro_tile(&ar, mr, strip, true, &mut acc);
+                        for i in 0..mr {
+                            let crow = &mut c[(i0 - r0 + ib + i) * n + jb..];
+                            crow[..nw].copy_from_slice(&acc[i][..nw]);
+                        }
+                        ib += mr;
+                    }
+                }
+                j0 = j1;
+            }
+            k0 = k1;
+        }
+        apply_epilogue(epi, c, n, r0, i0 - r0, i1 - r0);
+        i0 = i1;
+    }
+}
+
+/// int8 analogue of [`gemm_rows`] for prepacked panels: B strips are
+/// symmetric-quantized i8 with one scale per (strip, KC-block); A rows
+/// are quantized on the fly per (row, KC-block); products accumulate
+/// exactly in i32 inside each KC block (`256 · 127 · 127 ≪ i32::MAX`)
+/// and are dequantized into `c` at the block boundary. The fused bias
+/// epilogues run after the full contraction, like the f32 path.
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows_int8(
+    a: &[f32],
+    k: usize,
+    n: usize,
+    pb: &[i8],
+    scales: &[f32],
+    r0: usize,
+    r1: usize,
+    c: &mut [f32],
+    epi: &Epilogue<'_, NoMask>,
+) {
+    let n_kblocks = (k + KC - 1) / KC;
+    let mut qa = vec![0i8; MC * KC.min(k)];
+    let empty: &[i8] = &[];
+    let mut i0 = r0;
+    while i0 < r1 {
+        let i1 = (i0 + MC).min(r1);
+        let rows = i1 - i0;
+        let mut k0 = 0usize;
+        let mut kb = 0usize;
+        while k0 < k {
+            let k1 = (k0 + KC).min(k);
+            let kc = k1 - k0;
+            // Quantize the A panel: one symmetric scale per (row, block).
+            let mut a_scales = [0.0f32; MC];
+            for i in 0..rows {
+                let arow = &a[(i0 + i) * k + k0..(i0 + i) * k + k1];
+                let mut amax = 0.0f32;
+                for &v in arow {
+                    amax = amax.max(v.abs());
+                }
+                let scale = amax / 127.0;
+                a_scales[i] = scale;
+                let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+                for (kk, &v) in arow.iter().enumerate() {
+                    qa[i * kc + kk] = (v * inv).round().clamp(-127.0, 127.0) as i8;
+                }
+            }
+            let mut j0 = 0usize;
+            while j0 < n {
+                let j1 = (j0 + NC).min(n);
+                let s0 = j0 / NR;
+                let s1 = (j1 + NR - 1) / NR;
+                for s in s0..s1 {
+                    let jb = s * NR;
+                    let nw = NR.min(n - jb);
+                    let strip = &pb[s * k * NR + k0 * NR..s * k * NR + k1 * NR];
+                    let b_scale = scales[s * n_kblocks + kb];
+                    let mut ib = 0usize;
+                    while ib < rows {
+                        let mr = MR.min(rows - ib);
+                        let mut ar = [empty; MR];
+                        for (i, slot) in ar.iter_mut().enumerate().take(mr) {
+                            *slot = &qa[(ib + i) * kc..(ib + i) * kc + kc];
+                        }
+                        let mut acc = [[0i32; NR]; MR];
+                        micro_tile_i8(&ar, mr, strip, &mut acc);
+                        for i in 0..mr {
+                            let d = a_scales[ib + i] * b_scale;
+                            let crow = &mut c[(i0 - r0 + ib + i) * n + jb..];
+                            for (cv, &av) in crow.iter_mut().zip(&acc[i]).take(nw) {
+                                *cv += av as f32 * d;
+                            }
+                        }
+                        ib += mr;
+                    }
+                }
+                j0 = j1;
+            }
+            k0 = k1;
+            kb += 1;
+        }
+        apply_epilogue(epi, c, n, r0, i0 - r0, i1 - r0);
+        i0 = i1;
+    }
+}
+
+/// int8 micro-tile: `acc[i][j] += Σ_kk ar[i][kk] · strip[kk][j]` in i32,
+/// dispatched to an AVX2 instantiation where the CPU has it (same
+/// source; integer accumulation is exact on both paths, so dispatch
+/// cannot change results).
+fn micro_tile_i8(ar: &[&[i8]; MR], mr: usize, strip: &[i8], acc: &mut [[i32; NR]; MR]) {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if is_x86_feature_detected!("avx2") {
+            // SAFETY: reached only when the CPU reports AVX2 support.
+            unsafe { micro_tile_i8_avx2(ar, mr, strip, acc) };
+            return;
+        }
+    }
+    micro_tile_i8_impl(ar, mr, strip, acc);
+}
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn micro_tile_i8_avx2(ar: &[&[i8]; MR], mr: usize, strip: &[i8], acc: &mut [[i32; NR]; MR]) {
+    micro_tile_i8_impl(ar, mr, strip, acc);
+}
+
+#[inline(always)]
+fn micro_tile_i8_impl(ar: &[&[i8]; MR], mr: usize, strip: &[i8], acc: &mut [[i32; NR]; MR]) {
+    for (kk, brow) in strip.chunks_exact(NR).enumerate() {
+        for i in 0..mr {
+            let av = ar[i][kk] as i32;
+            if av == 0 {
+                continue;
+            }
+            let a_i = &mut acc[i];
+            for j in 0..NR {
+                a_i[j] += av * brow[j] as i32;
+            }
+        }
     }
 }
 
@@ -757,6 +1331,192 @@ mod tests {
         assert!(matmul_bias(&a, &Tensor::zeros(&[3, 5]), &[0.0; 4], 1).is_err());
         let never = |_: usize, _: usize| true;
         assert!(attn_scores_softmax(&a, &b, 1.0, -1e9, &never, 1).is_err());
+    }
+
+    #[test]
+    fn prepacked_f32_is_bit_identical_to_per_call_packing() {
+        prop::check(60, |g| {
+            let (m, k, n) = (g.usize(1..70), g.usize(1..70), g.usize(1..70));
+            let a = rand_sparse(g, &[m, k]);
+            let b = rand_tensor(g, &[k, n]);
+            let packed = PackedB::pack_f32(&b).unwrap();
+            let want = matmul(&a, &b, 1).unwrap();
+            let got = matmul_prepacked(&a, &packed, 1).unwrap();
+            if got.data() != want.data() {
+                return Err(format!("prepacked f32 mismatch at ({m},{k},{n})"));
+            }
+            let bias: Vec<f32> = (0..n).map(|_| g.f32(-1.0..1.0)).collect();
+            let want = matmul_bias(&a, &b, &bias, 1).unwrap();
+            let got = matmul_bias_prepacked(&a, &packed, &bias, 1).unwrap();
+            if got.data() != want.data() {
+                return Err("prepacked f32 bias mismatch".into());
+            }
+            let want = matmul_bias_gelu(&a, &b, &bias, 1).unwrap();
+            let got = matmul_bias_gelu_prepacked(&a, &packed, &bias, 1).unwrap();
+            if got.data() != want.data() {
+                return Err("prepacked f32 bias+gelu mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prepacked_threaded_split_is_bit_identical_per_precision() {
+        // Big enough to clear both parallelism gates; every precision
+        // must give the same bits at any thread count (the split is in
+        // MC multiples, and A quantization is per (row, KC-block), so
+        // chunking cannot change any per-element computation).
+        let mut g = prop::Gen::new(13, 0);
+        let (m, k, n) = (4 * MC + 13, 64, 64);
+        let a = rand_sparse(&mut g, &[m, k]);
+        let b = rand_tensor(&mut g, &[k, n]);
+        for prec in [Precision::F32, Precision::Bf16, Precision::Int8] {
+            let packed = PackedB::pack(&b, prec).unwrap();
+            let single = matmul_prepacked(&a, &packed, 1).unwrap();
+            for threads in [2usize, 3, 8] {
+                let multi = matmul_prepacked(&a, &packed, threads).unwrap();
+                assert_eq!(single.data(), multi.data(), "{prec} threads={threads}");
+            }
+        }
+        // ... and the f32 route stays on the `==` oracle contract.
+        let want = reference::matmul(&a, &b).unwrap();
+        let packed = PackedB::pack_f32(&b).unwrap();
+        assert_eq!(matmul_prepacked(&a, &packed, 2).unwrap().data(), want.data());
+    }
+
+    #[test]
+    fn prepacked_bf16_matches_rounded_operand_kernel_bitwise() {
+        prop::check(60, |g| {
+            let (m, k, n) = (g.usize(1..50), g.usize(1..50), g.usize(1..50));
+            let a = rand_sparse(g, &[m, k]);
+            let b = rand_tensor(g, &[k, n]);
+            let packed = PackedB::pack_bf16(&b).unwrap();
+            let want = matmul(&a.to_bf16(), &b.to_bf16(), 1).unwrap();
+            let got = matmul_prepacked(&a, &packed, 1).unwrap();
+            if got.data() != want.data() {
+                return Err(format!("bf16 prepacked mismatch at ({m},{k},{n})"));
+            }
+            Ok(())
+        });
+    }
+
+    /// Documented per-precision error envelopes (DESIGN.md §3): each
+    /// bf16 operand carries ≤ half an ulp of an 8-bit mantissa, so per
+    /// element `|err| ≤ 1.02 · k · max|A| · max|B| / 128`; each int8
+    /// operand carries ≤ half a quantization step, so
+    /// `|err| ≤ 1.05 · k · max|A| · max|B| / 127`.
+    fn envelope_bounds(k: usize, a: &Tensor, b: &Tensor) -> [(Precision, f32); 2] {
+        let amax = a.data().iter().fold(0.0f32, |x, v| x.max(v.abs()));
+        let bmax = b.data().iter().fold(0.0f32, |x, v| x.max(v.abs()));
+        [
+            (Precision::Bf16, 1.02 * k as f32 * amax * bmax / 128.0),
+            (Precision::Int8, 1.05 * k as f32 * amax * bmax / 127.0),
+        ]
+    }
+
+    #[test]
+    fn quantized_paths_meet_reference_envelopes_on_ragged_shapes() {
+        prop::check(80, |g| {
+            let (m, k, n) = (g.usize(1..60), g.usize(1..60), g.usize(1..60));
+            let a = rand_sparse(g, &[m, k]);
+            let b = rand_tensor(g, &[k, n]);
+            let want = reference::matmul(&a, &b).unwrap();
+            for (prec, bound) in envelope_bounds(k, &a, &b) {
+                let packed = PackedB::pack(&b, prec).unwrap();
+                let got = matmul_prepacked(&a, &packed, 1).unwrap();
+                for (x, y) in got.data().iter().zip(want.data()) {
+                    if (x - y).abs() > bound + 1e-6 {
+                        return Err(format!(
+                            "{prec} error {} > {bound} at ({m},{k},{n})",
+                            (x - y).abs()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantized_paths_hold_envelopes_past_one_kc_block() {
+        // k > KC exercises per-block B scales, per-block A requant and
+        // the partial-sum parking of the bf16 path.
+        let mut g = prop::Gen::new(17, 0);
+        let k = KC + 37;
+        let a = rand_sparse(&mut g, &[3, k]);
+        let b = rand_tensor(&mut g, &[k, 5]);
+        let want = reference::matmul(&a, &b).unwrap();
+        for (prec, bound) in envelope_bounds(k, &a, &b) {
+            let packed = PackedB::pack(&b, prec).unwrap();
+            let got = matmul_prepacked(&a, &packed, 1).unwrap();
+            for (x, y) in got.data().iter().zip(want.data()) {
+                assert!((x - y).abs() <= bound + 1e-6, "{prec}: {} > {bound}", (x - y).abs());
+            }
+        }
+        // bf16 stays bit-identical to the rounded-operand kernel across
+        // KC blocks, not just within one.
+        let packed = PackedB::pack_bf16(&b).unwrap();
+        let rounded = matmul(&a.to_bf16(), &b.to_bf16(), 1).unwrap();
+        assert_eq!(matmul_prepacked(&a, &packed, 1).unwrap().data(), rounded.data());
+    }
+
+    #[test]
+    fn quantized_axpy_matches_dequantized_axpy() {
+        prop::check(40, |g| {
+            let d = g.usize(1..40);
+            let s = g.f32(-2.0..2.0);
+            let row: Vec<f32> = (0..d).map(|_| g.f32(-2.0..2.0)).collect();
+            let init: Vec<f32> = (0..d).map(|_| g.f32(-1.0..1.0)).collect();
+            // bf16: the expansion is exact, so parity with an f32 AXPY
+            // over the rounded row is bitwise.
+            let bits: Vec<u16> = row
+                .iter()
+                .map(|&v| (crate::tensor::bf16_round(v).to_bits() >> 16) as u16)
+                .collect();
+            let rounded: Vec<f32> =
+                bits.iter().map(|&b| f32::from_bits((b as u32) << 16)).collect();
+            let mut want = init.clone();
+            axpy(&mut want, s, &rounded);
+            let mut got = init.clone();
+            axpy_bf16(&mut got, s, &bits);
+            if got != want {
+                return Err("axpy_bf16 mismatch".into());
+            }
+            // int8: fold the row's dequant scale into s; parity with an
+            // f32 AXPY over the dequantized integers is bitwise.
+            let amax = row.iter().fold(0.0f32, |x, v| x.max(v.abs()));
+            let scale = amax / 127.0;
+            let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+            let q: Vec<i8> =
+                row.iter().map(|&v| (v * inv).round().clamp(-127.0, 127.0) as i8).collect();
+            let deq: Vec<f32> = q.iter().map(|&x| x as f32).collect();
+            let mut want = init.clone();
+            axpy(&mut want, s * scale, &deq);
+            let mut got = init;
+            axpy_i8(&mut got, s * scale, &q);
+            if got != want {
+                return Err("axpy_i8 mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prepacked_shape_errors_and_accessors() {
+        let b = Tensor::zeros(&[3, 5]);
+        for prec in [Precision::F32, Precision::Bf16, Precision::Int8] {
+            let p = PackedB::pack(&b, prec).unwrap();
+            assert_eq!((p.k(), p.n(), p.precision()), (3, 5, prec));
+        }
+        let p = PackedB::pack_f32(&b).unwrap();
+        assert!(matmul_prepacked(&Tensor::zeros(&[2, 4]), &p, 1).is_err());
+        assert!(matmul_bias_prepacked(&Tensor::zeros(&[2, 3]), &p, &[0.0; 4], 1).is_err());
+        assert!(matmul_bias_gelu_prepacked(&Tensor::zeros(&[2, 3]), &p, &[0.0; 4], 1).is_err());
+        assert!(PackedB::pack_f32(&Tensor::zeros(&[3])).is_err());
+        assert_eq!(Precision::parse("bf16"), Some(Precision::Bf16));
+        assert_eq!(Precision::parse("fp64"), None);
+        assert_eq!(Precision::Int8.as_str(), "int8");
+        assert_eq!(Precision::Bf16.to_string(), "bf16");
     }
 
     #[test]

@@ -20,6 +20,7 @@
 pub mod kernel;
 pub mod reference;
 
+pub use kernel::{PackedB, Precision};
 pub use reference::{accumulate_row_product, accumulate_tn};
 
 use anyhow::{bail, Result};

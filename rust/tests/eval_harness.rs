@@ -40,6 +40,7 @@ fn run_small_sweep(tag: &str, alphas: Vec<f64>, epsilons: Vec<f64>) -> harness::
         ],
         alphas,
         epsilons,
+        precisions: vec!["f32".to_string()],
         workers: 2,
         queue_cap: 0, // sized to the dev slice: lockstep passes never shed
         brownout_watermark: 0,

@@ -71,12 +71,16 @@ def entry_key(bench_kind, entry, ordinal):
         # identity is (workers, kind, per-group ordinal).
         return (entry.get("workers"), entry.get("kind"), ordinal)
     if bench_kind == "eval":
+        # precision is a first-class sweep axis; pre-precision baselines
+        # carry no field, which normalizes to the f32 rung so their
+        # entries keep matching fresh f32 rows.
         return (
             entry.get("model"),
             entry.get("task"),
             entry.get("knob"),
             entry.get("alpha"),
             entry.get("epsilon"),
+            entry.get("precision", "f32"),
         )
     return (ordinal,)
 
@@ -134,8 +138,16 @@ def gate_file(fresh_path, baseline_dir, update, report):
         report.append(f"{name}: baseline {verb} from fresh run ({len(fresh)} entries) — pass")
         return 0
 
-    with open(base_path) as f:
-        base_kind, base = load_entries(json.load(f))
+    try:
+        with open(base_path) as f:
+            base_kind, base = load_entries(json.load(f))
+    except (ValueError, json.JSONDecodeError) as e:
+        # A baseline that exists but is empty/unparseable must fail loudly:
+        # silently reseeding it would disarm the gate on every later run.
+        raise ValueError(
+            f"baseline {base_path} exists but is not a valid BENCH_*.json "
+            f"document ({e}); fix it or delete it to reseed"
+        ) from None
     if base_kind != fresh_kind:
         report.append(f"{name}: FAIL — bench kind changed ({base_kind} -> {fresh_kind})")
         return 1
@@ -239,7 +251,9 @@ def self_test():
     check(any("metric missing" in line for line in report), "metric loss not reported")
 
     # an eval accuracy drop beyond tolerance is caught; matching is by
-    # (model, task, knob, alpha, epsilon)
+    # (model, task, knob, alpha, epsilon, precision) — the fresh file
+    # carries the precision field, the pre-precision baseline does not,
+    # and the rows must still match on the f32 rung
     ebase = {
         "bench": "eval",
         "entries": [
@@ -256,6 +270,7 @@ def self_test():
     }
     edrop = copy.deepcopy(ebase)
     edrop["entries"][0]["accuracy"] = 0.70
+    edrop["entries"][0]["precision"] = "f32"
     with tempfile.TemporaryDirectory() as d:
         bdir = os.path.join(d, "baselines")
         os.makedirs(bdir)
@@ -280,12 +295,30 @@ def self_test():
         check(os.path.exists(os.path.join(bdir, "BENCH_kernels.json")), "baseline not seeded")
         check(any("seeded" in line for line in report), "seeding not reported")
 
+    # a baseline that exists but is empty/unparseable fails loudly and
+    # names the baseline file (it must NOT be silently reseeded)
+    with tempfile.TemporaryDirectory() as d:
+        bdir = os.path.join(d, "baselines")
+        os.makedirs(bdir)
+        fp = os.path.join(d, "BENCH_kernels.json")
+        with open(fp, "w") as f:
+            json.dump(base, f)
+        bp = os.path.join(bdir, "BENCH_kernels.json")
+        with open(bp, "w") as f:
+            f.write("")  # exists, but empty: not valid JSON
+        try:
+            gate_file(fp, bdir, update=False, report=[])
+            check(False, "empty baseline not rejected")
+        except ValueError as e:
+            check(bp in str(e), "empty-baseline error does not name the baseline file")
+        check(os.path.getsize(bp) == 0, "empty baseline was overwritten")
+
     if failures:
         print("bench_gate self-test FAILED:")
         for f in failures:
             print(f"  - {f}")
         return 1
-    print("bench_gate self-test ok (8 scenarios)")
+    print("bench_gate self-test ok (9 scenarios)")
     return 0
 
 
