@@ -20,8 +20,19 @@ use anyhow::Result;
 
 use super::{Response, Server, ServerStats};
 use crate::rng::Pcg64;
+use crate::tensor::Precision;
 use crate::util::json::Json;
 use crate::util::timer::LatencyStats;
+
+/// Upper bucket edges (milliseconds) of the per-token latency histogram
+/// emitted to `BENCH_serving.json`; the final bucket is the overflow, so
+/// the histogram has `TOKEN_HIST_EDGES_MS.len() + 1` counts.
+pub const TOKEN_HIST_EDGES_MS: [f64; 7] = [0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0];
+
+/// Bucket index of one inter-token latency in the fixed histogram.
+fn token_hist_bucket(ms: f64) -> usize {
+    TOKEN_HIST_EDGES_MS.iter().position(|&edge| ms <= edge).unwrap_or(TOKEN_HIST_EDGES_MS.len())
+}
 
 /// A workload description.
 #[derive(Debug, Clone)]
@@ -69,6 +80,17 @@ pub struct LoadResult {
     /// FNV-1a digest of the id-sorted request-level outcomes; only replay
     /// runs set this (open-loop timing makes the digest meaningless)
     pub outcome_digest: Option<u64>,
+    /// generated tokens across all decode responses (0 for batch-only runs)
+    pub decode_tokens: usize,
+    /// decode throughput: generated tokens per wall-clock second of the run
+    pub tokens_per_s: f64,
+    /// median inter-token latency across all decode steps
+    pub token_p50_ms: f64,
+    /// 99th-percentile inter-token latency across all decode steps
+    pub token_p99_ms: f64,
+    /// per-token latency counts bucketed by [`TOKEN_HIST_EDGES_MS`]
+    /// (last count is the overflow bucket); empty for batch-only runs
+    pub token_hist: Vec<usize>,
 }
 
 /// One request-level outcome from a lockstep replay run — the unit the
@@ -189,6 +211,9 @@ fn collect(
     let mut degraded = 0usize;
     let mut alpha_sum = 0.0f64;
     let mut budget_served = 0usize;
+    let mut decode_tokens = 0usize;
+    let mut token_lat = LatencyStats::default();
+    let mut token_hist = vec![0usize; TOKEN_HIST_EDGES_MS.len() + 1];
     let mut outcomes = Vec::with_capacity(inflight.len());
     for rx in inflight {
         if let Ok(resp) = rx.recv() {
@@ -207,6 +232,11 @@ fn collect(
                 if resp.budget {
                     budget_served += 1;
                     alpha_sum += resp.alpha as f64;
+                }
+                decode_tokens += resp.decode_tokens;
+                for &ms in &resp.token_ms {
+                    token_lat.record(Duration::from_secs_f64(ms / 1e3));
+                    token_hist[token_hist_bucket(ms)] += 1;
                 }
             }
             outcomes.push(RequestOutcome {
@@ -234,6 +264,11 @@ fn collect(
         degraded,
         mean_resolved_alpha: if budget_served > 0 { alpha_sum / budget_served as f64 } else { 0.0 },
         outcome_digest: None,
+        decode_tokens,
+        tokens_per_s: decode_tokens as f64 / wall,
+        token_p50_ms: token_lat.p50_ms(),
+        token_p99_ms: token_lat.p99_ms(),
+        token_hist: if decode_tokens > 0 { token_hist } else { Vec::new() },
     };
     (result, outcomes)
 }
@@ -311,6 +346,36 @@ pub fn run_replay(
     Ok((result, outcomes))
 }
 
+/// Lockstep decode burst: pause dispatch, queue `n` autoregressive decode
+/// requests with seeded ragged generation lengths (1..=`max_new`), then
+/// resume and drain. Ragged lengths are the point — sequences retire from
+/// the workers' continuous batches at different steps, so the drain
+/// exercises token-granularity join/leave rather than a fixed-size batch.
+/// α comes from the workload's mixture; the length stream runs on its own
+/// RNG stream so decode runs don't perturb seed-comparable batch runs.
+pub fn run_decode(
+    server: &Server,
+    texts: &[String],
+    n: usize,
+    wl: &Workload,
+    max_new: usize,
+) -> Result<LoadResult> {
+    let mut rng = Pcg64::with_stream(wl.seed, 77);
+    server.pause();
+    let start = Instant::now();
+    let mut inflight = Vec::with_capacity(n);
+    for i in 0..n {
+        let text = &texts[i % texts.len()];
+        let alpha = sample_alpha(&mut rng, &wl.alpha_mix);
+        let new_tokens = rng.gen_range(1, max_new.max(1) + 1);
+        inflight.push(server.submit_decode(text, alpha, "mca", Precision::F32, new_tokens));
+    }
+    server.resume();
+    let mut r = drain(inflight, 0.0, start);
+    r.offered = r.achieved;
+    Ok(r)
+}
+
 /// Write the machine-readable serving benchmark: one entry per
 /// (worker count, run), with throughput and latency percentiles. `kind`
 /// is the measurement protocol: "open_loop" (Poisson arrivals at the
@@ -342,6 +407,20 @@ pub fn write_bench_json(
         m.insert("budget_requests".to_string(), Json::Num(r.budget_requests as f64));
         m.insert("degraded".to_string(), Json::Num(r.degraded as f64));
         m.insert("mean_resolved_alpha".to_string(), Json::Num(r.mean_resolved_alpha));
+        if r.decode_tokens > 0 {
+            m.insert("decode_tokens".to_string(), Json::Num(r.decode_tokens as f64));
+            m.insert("tokens_per_s".to_string(), Json::Num(r.tokens_per_s));
+            m.insert("token_p50_ms".to_string(), Json::Num(r.token_p50_ms));
+            m.insert("token_p99_ms".to_string(), Json::Num(r.token_p99_ms));
+            m.insert(
+                "token_hist_edges_ms".to_string(),
+                Json::Arr(TOKEN_HIST_EDGES_MS.iter().map(|&e| Json::Num(e)).collect()),
+            );
+            m.insert(
+                "token_hist".to_string(),
+                Json::Arr(r.token_hist.iter().map(|&c| Json::Num(c as f64)).collect()),
+            );
+        }
         if let Some(d) = r.outcome_digest {
             // hex string: Json numbers are f64 and would lose u64 bits
             m.insert("outcome_digest".to_string(), Json::Str(format!("{d:016x}")));
@@ -365,6 +444,11 @@ pub fn write_bench_json(
         s.insert("canaries".to_string(), Json::Num(st.canaries as f64));
         s.insert("canary_violations".to_string(), Json::Num(st.canary_violations as f64));
         s.insert("controller_alpha".to_string(), Json::Num(st.controller_alpha));
+        s.insert("decode_requests".to_string(), Json::Num(st.decode_requests as f64));
+        s.insert("decode_tokens".to_string(), Json::Num(st.decode_tokens as f64));
+        s.insert("token_mean_ms".to_string(), Json::Num(st.token_mean_ms));
+        s.insert("token_p50_ms".to_string(), Json::Num(st.token_p50_ms));
+        s.insert("token_p99_ms".to_string(), Json::Num(st.token_p99_ms));
         top.insert("server".to_string(), Json::Obj(s));
     }
     std::fs::write(path, Json::Obj(top).to_string())?;
@@ -526,16 +610,29 @@ mod tests {
             degraded: 7,
             mean_resolved_alpha: 0.55,
             outcome_digest: None,
+            decode_tokens: 0,
+            tokens_per_s: 0.0,
+            token_p50_ms: 0.0,
+            token_p99_ms: 0.0,
+            token_hist: Vec::new(),
         };
         let mut r4 = r1.clone();
         r4.achieved = 310.0;
         r4.outcome_digest = Some(0xdead_beef_0123_4567);
+        r4.decode_tokens = 48;
+        r4.tokens_per_s = 96.0;
+        r4.token_p50_ms = 1.5;
+        r4.token_p99_ms = 9.0;
+        r4.token_hist = vec![0, 10, 30, 6, 2, 0, 0, 0];
         let mut st = ServerStats::default();
         st.shed = 5;
         st.brownout_entries = 2;
         st.degraded = 7;
         st.canaries = 3;
         st.controller_alpha = 0.6;
+        st.decode_requests = 4;
+        st.decode_tokens = 48;
+        st.token_p50_ms = 1.5;
         let path = std::env::temp_dir().join("mca_test_bench_serving.json");
         let entries =
             vec![(1usize, "open_loop".to_string(), r1), (4usize, "replay".to_string(), r4)];
@@ -550,14 +647,39 @@ mod tests {
         assert_eq!(rows[0].get("shed").unwrap().as_usize().unwrap(), 5);
         assert_eq!(rows[0].get("budget_requests").unwrap().as_usize().unwrap(), 40);
         assert!(rows[0].opt("outcome_digest").is_none());
+        assert!(rows[0].opt("decode_tokens").is_none(), "batch rows carry no decode keys");
         assert_eq!(rows[1].get("workers").unwrap().as_usize().unwrap(), 4);
         assert_eq!(rows[1].get("kind").unwrap().as_str().unwrap(), "replay");
         assert!((rows[1].get("achieved_rps").unwrap().as_f64().unwrap() - 310.0).abs() < 1e-9);
         assert_eq!(rows[1].get("outcome_digest").unwrap().as_str().unwrap(), "deadbeef01234567");
+        assert_eq!(rows[1].get("decode_tokens").unwrap().as_usize().unwrap(), 48);
+        assert!((rows[1].get("tokens_per_s").unwrap().as_f64().unwrap() - 96.0).abs() < 1e-9);
+        assert!((rows[1].get("token_p99_ms").unwrap().as_f64().unwrap() - 9.0).abs() < 1e-9);
+        let edges = rows[1].get("token_hist_edges_ms").unwrap().as_arr().unwrap();
+        assert_eq!(edges.len(), TOKEN_HIST_EDGES_MS.len());
+        let hist = rows[1].get("token_hist").unwrap().as_arr().unwrap();
+        assert_eq!(hist.len(), TOKEN_HIST_EDGES_MS.len() + 1);
+        assert_eq!(hist[2].as_usize().unwrap(), 30);
         let server = parsed.get("server").unwrap();
         assert_eq!(server.get("brownout_entries").unwrap().as_usize().unwrap(), 2);
         assert_eq!(server.get("canaries").unwrap().as_usize().unwrap(), 3);
         assert!((server.get("controller_alpha").unwrap().as_f64().unwrap() - 0.6).abs() < 1e-9);
+        assert_eq!(server.get("decode_requests").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(server.get("decode_tokens").unwrap().as_usize().unwrap(), 48);
+        assert!((server.get("token_p50_ms").unwrap().as_f64().unwrap() - 1.5).abs() < 1e-9);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn token_hist_buckets_cover_the_line() {
+        // at/below each edge lands in that bucket; past the last edge
+        // lands in the overflow bucket
+        assert_eq!(token_hist_bucket(0.1), 0);
+        assert_eq!(token_hist_bucket(0.5), 0);
+        assert_eq!(token_hist_bucket(0.51), 1);
+        assert_eq!(token_hist_bucket(5.0), 3);
+        assert_eq!(token_hist_bucket(50.0), 6);
+        assert_eq!(token_hist_bucket(51.0), 7);
+        assert_eq!(token_hist_bucket(f64::INFINITY), TOKEN_HIST_EDGES_MS.len());
     }
 }

@@ -31,8 +31,8 @@
 
 pub mod loadgen;
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -50,7 +50,7 @@ use crate::runtime::{
     open_backend_sized, Backend, BackendSpec, ForwardSpec, HostValue, ModelStats,
 };
 use crate::tensor::Precision;
-use crate::tokenizer::Tokenizer;
+use crate::tokenizer::{Tokenizer, PAD_ID};
 use crate::util::threadpool;
 
 // ---------------------------------------------------------------------------
@@ -76,6 +76,17 @@ pub struct Budget {
     pub degraded: bool,
 }
 
+/// Parameters of an autoregressive decode request: prefill the prompt
+/// once, then generate up to `max_new` tokens one KV-cached step at a
+/// time, feeding each step's argmax prediction back as the next input
+/// token. Decode sessions join and leave a worker's continuous batch at
+/// *token* granularity (see the worker's decode round loop).
+#[derive(Debug, Clone)]
+pub struct DecodeParams {
+    /// maximum generated tokens (clamped to the model's KV-cache headroom)
+    pub max_new: usize,
+}
+
 /// One inference request as it travels through the queue.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -97,6 +108,9 @@ pub struct Request {
     pub quantized: bool,
     /// present iff this is an ε-budget request (SLO-driven precision)
     pub budget: Option<Budget>,
+    /// present iff this is an autoregressive decode request (prefill +
+    /// per-token KV-cached steps instead of one batched forward)
+    pub decode: Option<DecodeParams>,
 }
 
 /// What every submitted request eventually receives, exactly once.
@@ -140,6 +154,12 @@ pub struct Response {
     /// true when admission control rejected the request (queue at cap);
     /// no forward ran and `pred_class` is -1
     pub shed: bool,
+    /// generated token count for decode requests (0 for batch requests);
+    /// `pred_class`/`logits` are the final step's
+    pub decode_tokens: usize,
+    /// per-token decode-step latencies in milliseconds (empty for batch
+    /// requests) — the inter-token latency trace
+    pub token_ms: Vec<f64>,
 }
 
 // ---------------------------------------------------------------------------
@@ -414,6 +434,9 @@ enum Msg {
     Req(Pending, mpsc::Sender<Response>),
     Stats(mpsc::Sender<ServerStats>),
     Done(BatchReport),
+    /// A decode session left a worker's continuous batch (finished,
+    /// failed or aborted): release its admission cost and worker slot.
+    DecodeDone(DecodeReport),
     Pause,
     Resume,
     /// Graceful: drain every admitted request before stopping workers.
@@ -433,9 +456,43 @@ struct Job {
     canary: bool,
 }
 
+/// A decode request routed to a worker: the worker prefills it and adds
+/// it to its continuous batch of live decode sessions.
+struct DecodeJob {
+    pending: Pending,
+    rtx: mpsc::Sender<Response>,
+}
+
 enum WorkerMsg {
     Job(Job),
+    Decode(DecodeJob),
     Stop,
+}
+
+/// What a worker reports when a decode session leaves its continuous
+/// batch: the dispatcher releases the session's admission cost and
+/// folds the per-token trace into the serving metrics.
+struct DecodeReport {
+    worker: usize,
+    id: u64,
+    alpha: f32,
+    tokens: usize,
+    token_lat: Vec<Duration>,
+    total: Duration,
+    flops: f64,
+    ok: bool,
+}
+
+/// Pack the dispatcher's per-step precision knobs into one atomic word
+/// the workers read every decode round: the controller's α target (f32
+/// bits, high 32) and the exact-refresh interval in steps (low 32).
+fn pack_knobs(alpha: f32, refresh_steps: u64) -> u64 {
+    ((alpha.to_bits() as u64) << 32) | (refresh_steps.clamp(1, u32::MAX as u64) & 0xffff_ffff)
+}
+
+/// Inverse of [`pack_knobs`].
+fn unpack_knobs(bits: u64) -> (f32, u64) {
+    (f32::from_bits((bits >> 32) as u32), (bits & 0xffff_ffff).max(1))
 }
 
 /// Snapshot of one served MCA request that the canary loop replays
@@ -505,6 +562,16 @@ pub struct ServerStats {
     pub controller_alpha: f64,
     /// (α, count) histogram of budget resolutions (α actually served)
     pub resolved_alphas: Vec<(f32, usize)>,
+    /// completed decode requests (KV-cached continuous-batching sessions)
+    pub decode_requests: usize,
+    /// tokens generated across all completed decode requests
+    pub decode_tokens: usize,
+    /// mean per-token decode-step (inter-token) latency
+    pub token_mean_ms: f64,
+    /// median per-token decode-step latency
+    pub token_p50_ms: f64,
+    /// 99th-percentile per-token decode-step latency
+    pub token_p99_ms: f64,
     /// per-worker breakdowns
     pub workers: Vec<WorkerSnapshot>,
     /// per-α latency summaries
@@ -555,6 +622,36 @@ impl Submitter {
             precision,
             quantized: false,
             budget: None,
+            decode: None,
+        })
+    }
+
+    /// Submit an autoregressive decode request: the worker prefills the
+    /// prompt once into a per-sequence KV cache, then generates up to
+    /// `max_new` tokens one step at a time, feeding each step's argmax
+    /// class (mapped through the `lm_sim` symbol bands) back as the next
+    /// input token. The session joins the worker pool's continuous batch
+    /// at token granularity. Exactly one response arrives, carrying the
+    /// final step's logits, the cumulative Σr_i, the generated-token
+    /// count and the per-token latency trace.
+    pub fn submit_decode(
+        &self,
+        text: &str,
+        alpha: f32,
+        mode: &str,
+        precision: Precision,
+        max_new: usize,
+    ) -> mpsc::Receiver<Response> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.send(Request {
+            id,
+            text: text.to_string(),
+            alpha,
+            mode: mode.to_string(),
+            precision,
+            quantized: false,
+            budget: None,
+            decode: Some(DecodeParams { max_new: max_new.max(1) }),
         })
     }
 
@@ -588,6 +685,7 @@ impl Submitter {
             precision,
             quantized: false,
             budget: Some(Budget { epsilon, delta, alpha_max: 1.0, degraded: false }),
+            decode: None,
         })
     }
 }
@@ -607,6 +705,14 @@ impl Server {
     pub fn start(backend: BackendSpec, cfg: ServerConfig) -> Result<Server> {
         let n_workers = cfg.workers.max(1);
         let (tx, rx) = mpsc::channel::<Msg>();
+        // Shared per-step precision knobs (controller α + exact-refresh
+        // interval, packed — see `pack_knobs`) and the fast-abort flag
+        // that tears down live decode sessions.
+        let knobs = Arc::new(AtomicU64::new(pack_knobs(
+            INITIAL_CONTROLLER_ALPHA as f32,
+            AlphaController::new(INITIAL_CONTROLLER_ALPHA, cfg.quality_floor).refresh_steps(),
+        )));
+        let abort = Arc::new(AtomicBool::new(false));
         // Divide host cores among the workers so N native backend
         // instances don't oversubscribe the machine.
         let intra = (threadpool::default_workers() / n_workers).max(1);
@@ -619,8 +725,11 @@ impl Server {
             let spec = backend.clone();
             let wcfg = cfg.clone();
             let events = tx.clone();
-            let h =
-                std::thread::spawn(move || worker_loop(id, spec, wcfg, intra, jrx, events, rtx));
+            let wknobs = knobs.clone();
+            let wabort = abort.clone();
+            let h = std::thread::spawn(move || {
+                worker_loop(id, spec, wcfg, intra, jrx, events, rtx, wknobs, wabort)
+            });
             handles.push(h);
             job_txs.push(jtx);
             ready_rxs.push(rrx);
@@ -650,8 +759,10 @@ impl Server {
             }
         }
         let dcfg = cfg;
+        let dknobs = knobs;
+        let dabort = abort;
         let handle = std::thread::spawn(move || {
-            dispatcher_loop(dcfg, buckets, stats, rx, job_txs, handles)
+            dispatcher_loop(dcfg, buckets, stats, rx, job_txs, handles, dknobs, dabort)
         });
         Ok(Server {
             sub: Submitter { tx, next_id: Arc::new(AtomicU64::new(1)) },
@@ -672,6 +783,19 @@ impl Server {
         delta: Option<f64>,
     ) -> mpsc::Receiver<Response> {
         self.sub.submit_budget(text, epsilon, delta)
+    }
+
+    /// Submit an autoregressive decode request (see
+    /// [`Submitter::submit_decode`]).
+    pub fn submit_decode(
+        &self,
+        text: &str,
+        alpha: f32,
+        mode: &str,
+        precision: Precision,
+        max_new: usize,
+    ) -> mpsc::Receiver<Response> {
+        self.sub.submit_decode(text, alpha, mode, precision, max_new)
     }
 
     /// A cloneable handle for submitting from other threads.
@@ -759,6 +883,23 @@ struct Dispatcher {
     canary_acc: f64,
     canaries: Vec<(mpsc::Receiver<Response>, CanarySample)>,
     next_canary_id: u64,
+    /// Live decode sessions per worker — the routing signal for new
+    /// decode requests (join the least-loaded continuous batch).
+    decode_live: Vec<usize>,
+    /// Running Σ [`row_cost`] of live decode sessions across the pool.
+    /// Each live sequence holds its Eq.-9 row cost against the admission
+    /// cap until its `DecodeDone` arrives, so decode load and queued
+    /// batch load share one cap (and one brownout ladder).
+    decode_cost: f64,
+    /// Admission cost held per live decode session (by request id), so
+    /// `DecodeDone` releases exactly what admission charged even if the
+    /// request was degraded or quantized on the way in.
+    decode_costs: BTreeMap<u64, f64>,
+    /// Shared per-step precision knobs the workers read every decode
+    /// round (see [`pack_knobs`]).
+    knobs: Arc<AtomicU64>,
+    /// Fast-abort flag: workers drop their live decode sessions.
+    abort: Arc<AtomicBool>,
 }
 
 /// Canary replays carry synthetic ids above [`CANARY_ID_BASE`].
@@ -766,6 +907,7 @@ fn is_canary(req: &Request) -> bool {
     req.id >= CANARY_ID_BASE
 }
 
+#[allow(clippy::too_many_arguments)]
 fn dispatcher_loop(
     cfg: ServerConfig,
     buckets: Vec<usize>,
@@ -773,6 +915,8 @@ fn dispatcher_loop(
     rx: mpsc::Receiver<Msg>,
     job_txs: Vec<mpsc::Sender<WorkerMsg>>,
     worker_handles: Vec<JoinHandle<()>>,
+    knobs: Arc<AtomicU64>,
+    abort: Arc<AtomicBool>,
 ) -> Result<()> {
     let n_workers = job_txs.len();
     let controller = AlphaController::new(INITIAL_CONTROLLER_ALPHA, cfg.quality_floor);
@@ -789,6 +933,11 @@ fn dispatcher_loop(
         canary_acc: 0.0,
         canaries: Vec::new(),
         next_canary_id: 0,
+        decode_live: vec![0; n_workers],
+        decode_cost: 0.0,
+        decode_costs: BTreeMap::new(),
+        knobs,
+        abort,
         controller,
         stats,
         buckets,
@@ -796,6 +945,7 @@ fn dispatcher_loop(
         cfg,
     };
     d.metrics.controller_alpha = d.controller.alpha;
+    d.publish_knobs();
     let mut drain_deadline: Option<Instant> = None;
 
     loop {
@@ -825,15 +975,19 @@ fn dispatcher_loop(
         if d.alive == 0 {
             // Every worker is gone: dropping the queued entries closes
             // their response channels, so clients get an error instead of
-            // blocking forever on a queue nobody will ever drain.
+            // blocking forever on a queue nobody will ever drain. Live
+            // decode sessions died with their workers.
             d.queue.clear();
             d.queued_cost = 0.0;
             d.client_depth = 0;
+            d.decode_costs.clear();
+            d.decode_cost = 0.0;
+            d.decode_live.iter_mut().for_each(|c| *c = 0);
         }
         if d.draining {
             let all_idle = d.idle.len() >= d.alive;
             let expired = drain_deadline.is_some_and(|t| Instant::now() >= t);
-            if (d.queue.is_empty() && all_idle) || expired {
+            if (d.queue.is_empty() && all_idle && d.decode_costs.is_empty()) || expired {
                 break;
             }
         }
@@ -882,18 +1036,49 @@ impl Dispatcher {
                     }
                 }
             }
+            Msg::DecodeDone(r) => {
+                if let Some(cost) = self.decode_costs.remove(&r.id) {
+                    self.decode_cost -= cost;
+                    if self.decode_costs.is_empty() {
+                        // Snap to zero so float drift cannot accumulate.
+                        self.decode_cost = 0.0;
+                    }
+                }
+                if let Some(live) = self.decode_live.get_mut(r.worker) {
+                    *live = live.saturating_sub(1);
+                }
+                self.metrics.on_decode(
+                    r.worker,
+                    r.alpha,
+                    r.tokens,
+                    &r.token_lat,
+                    r.total,
+                    r.flops,
+                    r.ok,
+                );
+            }
             Msg::Pause => self.paused = true,
             Msg::Resume => self.paused = false,
             Msg::Shutdown => self.begin_drain(drain_deadline),
             Msg::Abort => {
                 self.begin_drain(drain_deadline);
                 // Dropping the undispatched entries closes their response
-                // channels — the fast-abort contract of `Drop`.
+                // channels — the fast-abort contract of `Drop`. Live
+                // decode sessions are torn down by the workers when they
+                // see the abort flag (each reports a `DecodeDone`).
+                self.abort.store(true, Ordering::Relaxed);
                 self.queue.clear();
                 self.queued_cost = 0.0;
                 self.client_depth = 0;
             }
         }
+    }
+
+    /// Publish the controller's current α target and exact-refresh
+    /// interval to the workers' decode rounds.
+    fn publish_knobs(&self) {
+        let bits = pack_knobs(self.controller.alpha as f32, self.controller.refresh_steps());
+        self.knobs.store(bits, Ordering::Relaxed);
     }
 
     fn begin_drain(&mut self, drain_deadline: &mut Option<Instant>) {
@@ -908,7 +1093,9 @@ impl Dispatcher {
     /// cap; at the cap, try the precision-brownout stage (degrade queued
     /// budget requests to their α ceiling), then the quantized rung
     /// (reroute the arriving request to the int8 GEMM path at half the
-    /// row cost), before shedding.
+    /// row cost), before shedding. Live decode sessions hold their row
+    /// cost against the same cap, so batch and decode traffic share one
+    /// admission budget.
     fn admit(&mut self, mut p: Pending, rtx: mpsc::Sender<Response>) {
         if self.draining {
             self.metrics.on_shed();
@@ -917,19 +1104,25 @@ impl Dispatcher {
         }
         self.resolve(&mut p);
         let cap = self.cfg.queue_cap.max(1) as f64;
-        if self.queued_cost + row_cost(&p.req) > cap + COST_EPS {
-            // Ladder steps 2–3 (only when the brownout stage is enabled):
-            // degrade, then quantize, before shedding.
-            if self.cfg.brownout_watermark > 0 {
+        // Whether the ladder's quantized rung fired for THIS request:
+        // counted only if the request is actually admitted afterwards —
+        // a quantized-then-shed arrival must not inflate the `quantized`
+        // stat (it was shed, not served on the int8 path).
+        let mut quantized_now = false;
+        if self.queued_cost + self.decode_cost + row_cost(&p.req) > cap + COST_EPS {
+            // Ladder steps 2–3, only when the brownout stage is enabled
+            // AND degrading/quantizing can actually shrink this arrival:
+            // an over-cap exact (or already-quantized budgetless) request
+            // gains nothing from the ladder, so entering brownout for it
+            // would only flap the queue-wide degrade pass.
+            if self.cfg.brownout_watermark > 0 && ladder_can_reduce(&p.req) {
                 self.enter_brownout();
                 degrade_to_ceiling(&mut p.req);
-                if self.queued_cost + row_cost(&p.req) > cap + COST_EPS
-                    && quantize_to_int8(&mut p.req)
-                {
-                    self.metrics.on_quantized();
+                if self.queued_cost + self.decode_cost + row_cost(&p.req) > cap + COST_EPS {
+                    quantized_now = quantize_to_int8(&mut p.req);
                 }
             }
-            if self.queued_cost + row_cost(&p.req) > cap + COST_EPS {
+            if self.queued_cost + self.decode_cost + row_cost(&p.req) > cap + COST_EPS {
                 self.metrics.on_shed();
                 let _ = rtx.send(shed_response(&p));
                 return;
@@ -939,16 +1132,23 @@ impl Dispatcher {
         let is_exact_budget = is_budget && p.req.mode == "exact";
         let alpha = p.req.alpha;
         let was_degraded = p.req.budget.as_ref().is_some_and(|b| b.degraded);
-        self.queued_cost += row_cost(&p.req);
-        self.client_depth += 1;
-        self.queue.push_back((p, rtx));
-        self.metrics.on_queue_depth(self.client_depth);
+        if quantized_now {
+            self.metrics.on_quantized();
+        }
         if is_budget {
             self.metrics.on_budget_resolved(alpha, is_exact_budget);
         }
         if was_degraded {
             self.metrics.on_degraded(1);
         }
+        if p.req.decode.is_some() {
+            self.admit_decode(p, rtx);
+            return;
+        }
+        self.queued_cost += row_cost(&p.req);
+        self.client_depth += 1;
+        self.queue.push_back((p, rtx));
+        self.metrics.on_queue_depth(self.client_depth);
         // High-water mark: the queue may have crossed it on this admission.
         if self.cfg.brownout_watermark > 0
             && !self.brownout
@@ -956,6 +1156,28 @@ impl Dispatcher {
         {
             self.enter_brownout();
         }
+    }
+
+    /// Route an admitted decode request to the worker with the fewest
+    /// live decode sessions. The session joins that worker's continuous
+    /// batch at its next round; its row cost stays charged against the
+    /// admission cap until the worker's `DecodeDone` releases it.
+    fn admit_decode(&mut self, p: Pending, rtx: mpsc::Sender<Response>) {
+        let cost = row_cost(&p.req);
+        let id = p.req.id;
+        let wid = (0..self.decode_live.len())
+            .filter(|&w| self.job_txs.get(w).is_some())
+            .min_by_key(|&w| self.decode_live[w])
+            .unwrap_or(0);
+        if self.job_txs[wid].send(WorkerMsg::Decode(DecodeJob { pending: p, rtx })).is_err() {
+            // The worker died outside the per-job guard: the request is
+            // dropped (its response sender closed with the channel).
+            self.alive = self.alive.saturating_sub(1);
+            return;
+        }
+        self.decode_cost += cost;
+        self.decode_costs.insert(id, cost);
+        self.decode_live[wid] += 1;
     }
 
     /// Resolve an ε budget against the model statistics onto the serving
@@ -1042,7 +1264,9 @@ impl Dispatcher {
             return;
         }
         let cap = self.cfg.queue_cap.max(1) as f64;
-        if self.client_depth <= self.cfg.brownout_watermark / 2 && self.queued_cost <= cap / 2.0 {
+        if self.client_depth <= self.cfg.brownout_watermark / 2
+            && self.queued_cost + self.decode_cost <= cap / 2.0
+        {
             self.brownout = false;
             self.metrics.on_brownout_exit();
         }
@@ -1144,6 +1368,7 @@ impl Dispatcher {
             precision: Precision::F32,
             quantized: false,
             budget: None,
+            decode: None,
         };
         self.queue.push_back((Pending { req, arrived: Instant::now() }, ctx));
         self.canaries.push((crx, sample));
@@ -1172,6 +1397,9 @@ impl Dispatcher {
                     let violation = quality < self.controller.quality_floor;
                     let next = self.controller.observe(quality);
                     self.metrics.on_canary(violation, next);
+                    // Both actuators (α target + exact-refresh interval)
+                    // may have moved: republish for the decode rounds.
+                    self.publish_knobs();
                 }
                 Err(mpsc::TryRecvError::Empty) => keep.push((crx, sample)),
                 Err(mpsc::TryRecvError::Disconnected) => {} // replay failed; drop
@@ -1211,10 +1439,29 @@ impl Dispatcher {
             canary_violations: m.canary_violations,
             controller_alpha: m.controller_alpha,
             resolved_alphas: m.resolved_alpha_counts(),
+            decode_requests: m.decode_requests,
+            decode_tokens: m.decode_tokens,
+            token_mean_ms: m.token_lat().mean_ms(),
+            token_p50_ms: m.token_lat().p50_ms(),
+            token_p99_ms: m.token_lat().p99_ms(),
             workers: m.worker_snapshots(),
             per_alpha: m.alpha_summaries(),
         }
     }
+}
+
+/// Whether the admission ladder's degrade/quantize rungs can shrink this
+/// request's row cost at all. Probed on a clone before entering brownout:
+/// an exact request (bit-exact contract), or an MCA request already at
+/// its α ceiling on the int8 path, cannot be made cheaper — shedding it
+/// without flapping the queue-wide brownout degrade pass is the right
+/// call.
+fn ladder_can_reduce(req: &Request) -> bool {
+    let before = row_cost(req);
+    let mut probe = req.clone();
+    degrade_to_ceiling(&mut probe);
+    quantize_to_int8(&mut probe);
+    row_cost(&probe) < before - COST_EPS
 }
 
 /// Ladder step 3: reroute an MCA request still over the cost cap to the
@@ -1262,6 +1509,8 @@ fn shed_response(p: &Pending) -> Response {
         quantized: p.req.quantized,
         degraded: false,
         shed: true,
+        decode_tokens: 0,
+        token_ms: Vec::new(),
     }
 }
 
@@ -1278,8 +1527,43 @@ struct WorkerState {
     buckets: Vec<usize>,
     dims: AttnDims,
     n_layers: usize,
+    /// KV-cache capacity per decode session (the model's max_len)
+    max_len: usize,
 }
 
+/// One live autoregressive decode session in a worker's continuous
+/// batch. The worker advances every live session by one KV-cached step
+/// per round, so sequences of different lengths join and leave the batch
+/// at token granularity.
+struct LiveDecode {
+    req: Request,
+    rtx: mpsc::Sender<Response>,
+    arrived: Instant,
+    /// backend decode-session handle (from `Backend::decode_prefill`)
+    session: u64,
+    /// generation budget after clamping to the KV-cache headroom
+    max_new: usize,
+    produced: usize,
+    /// token fed at the next step: the previous step's argmax class
+    /// mapped through the `lm_sim` symbol bands
+    next_token: i32,
+    last_logits: Vec<f32>,
+    /// α the most recent step ran at (echoed in the response)
+    last_alpha: f32,
+    token_lat: Vec<Duration>,
+    /// MCA steps since the last exact-refresh step (the controller's
+    /// second actuator resets accumulated sampling drift)
+    steps_since_refresh: u64,
+    /// cumulative Σ_layers Σ_tokens r_i over prefill + all steps
+    r_sum: f64,
+    /// current cache position (prompt + generated tokens)
+    n_eff: usize,
+    /// high-water mark of concurrent live sessions while this one ran
+    /// (echoed as the response's `batch_size`)
+    max_live: usize,
+}
+
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     id: usize,
     backend_spec: BackendSpec,
@@ -1288,6 +1572,8 @@ fn worker_loop(
     jobs: mpsc::Receiver<WorkerMsg>,
     events: mpsc::Sender<Msg>,
     ready: mpsc::Sender<Result<(Vec<usize>, ModelStats)>>,
+    knobs: Arc<AtomicU64>,
+    abort: Arc<AtomicBool>,
 ) {
     // --- startup ---------------------------------------------------------
     let init = (|| -> Result<(WorkerState, ModelStats)> {
@@ -1304,6 +1590,7 @@ fn worker_loop(
                 id,
                 dims: AttnDims { d_model: model.d_model, window: model.window },
                 n_layers: model.n_layers,
+                max_len: model.max_len,
                 backend,
                 params,
                 tok: Tokenizer::new(),
@@ -1326,9 +1613,27 @@ fn worker_loop(
     };
 
     // --- serve loop -------------------------------------------------------
-    while let Ok(msg) = jobs.recv() {
+    // Live decode sessions form the worker's continuous batch: while any
+    // are live, the worker polls for new work without blocking and runs
+    // one decode round (one step per live session) per iteration, so
+    // arriving requests join — and finished ones leave — between steps.
+    let mut live: Vec<LiveDecode> = Vec::new();
+    loop {
+        let msg = if live.is_empty() {
+            match jobs.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break,
+            }
+        } else {
+            match jobs.try_recv() {
+                Ok(m) => Some(m),
+                Err(mpsc::TryRecvError::Empty) => None,
+                Err(mpsc::TryRecvError::Disconnected) => break,
+            }
+        };
+        let mut stop = false;
         match msg {
-            WorkerMsg::Job(job) => {
+            Some(WorkerMsg::Job(job)) => {
                 // A panicking batch must not kill the worker (a dead pool
                 // would strand the admission queue and hang clients): the
                 // unwound job drops its response senders (clients see an
@@ -1364,9 +1669,239 @@ fn worker_loop(
                     break;
                 }
             }
-            WorkerMsg::Stop => break,
+            Some(WorkerMsg::Decode(dj)) => {
+                // Prefill failures tear the session down immediately: the
+                // dropped response sender errors the client out, and the
+                // DecodeDone releases the admission cost it held.
+                let arrived = dj.pending.arrived;
+                match decode_join(&mut st, dj.pending, dj.rtx) {
+                    Ok(ld) => live.push(ld),
+                    Err((req_id, e)) => {
+                        eprintln!("[serve:w{id}] decode prefill {req_id} failed: {e:#}");
+                        let report = DecodeReport {
+                            worker: id,
+                            id: req_id,
+                            alpha: 0.0,
+                            tokens: 0,
+                            token_lat: Vec::new(),
+                            total: arrived.elapsed(),
+                            flops: 1.0,
+                            ok: false,
+                        };
+                        if events.send(Msg::DecodeDone(report)).is_err() {
+                            break;
+                        }
+                    }
+                }
+            }
+            Some(WorkerMsg::Stop) => stop = true,
+            None => {}
+        }
+        if abort.load(Ordering::Relaxed) && !live.is_empty() {
+            // Fast abort: drop every live session (response channels
+            // close) but still report each DecodeDone so the dispatcher's
+            // cost accounting drains.
+            for ld in live.drain(..) {
+                st.backend.decode_finish(ld.session);
+                let report = DecodeReport {
+                    worker: id,
+                    id: ld.req.id,
+                    alpha: ld.last_alpha,
+                    tokens: ld.produced,
+                    token_lat: Vec::new(),
+                    total: ld.arrived.elapsed(),
+                    flops: 1.0,
+                    ok: false,
+                };
+                let _ = events.send(Msg::DecodeDone(report));
+            }
+        }
+        if !live.is_empty() && !decode_round(&mut st, &mut live, &knobs, &events) {
+            break;
+        }
+        if stop {
+            break;
         }
     }
+}
+
+/// Deterministic surface token for a predicted class: the first member of
+/// the class's `lm_sim` symbol band (any member has the same class, so
+/// the canonical one keeps decode replayable). Out-of-range predictions
+/// (tasks with fewer classes, or the -1 shed sentinel) clamp into band 0.
+fn class_to_token(pred: i32) -> i32 {
+    use crate::data::lm::{LM_CLASS_SIZE, LM_N_CLASSES, LM_SYMBOL_BASE};
+    LM_SYMBOL_BASE + pred.clamp(0, LM_N_CLASSES - 1) * LM_CLASS_SIZE
+}
+
+/// The α one decode step runs at: raw-α requests keep their requested α;
+/// ε-budget requests track the controller's live target, capped by their
+/// resolved ceiling (brownout degradation raised `alpha` to the ceiling
+/// already, and the ceiling cap keeps every step within the budget).
+fn step_alpha(req: &Request, knob_alpha: f32) -> f32 {
+    match req.budget.as_ref() {
+        Some(b) if req.mode == "mca" => {
+            let target = quantize_alpha(knob_alpha as f64).unwrap_or(ALPHA_GRID[0]);
+            if b.degraded || b.alpha_max < target {
+                b.alpha_max
+            } else {
+                target
+            }
+        }
+        _ => req.alpha,
+    }
+}
+
+/// Prefill a decode request into a new backend KV-cache session. The
+/// prompt is the tokenized text with trailing padding stripped; `max_new`
+/// is clamped to the cache headroom left above the prompt.
+fn decode_join(
+    st: &mut WorkerState,
+    pending: Pending,
+    rtx: mpsc::Sender<Response>,
+) -> std::result::Result<LiveDecode, (u64, anyhow::Error)> {
+    let req = pending.req;
+    let req_id = req.id;
+    let mut spec = ForwardSpec::new(&st.cfg.model, &req.mode, 1, st.cfg.seq);
+    spec.compute_dtype = req.precision.as_str().to_string();
+    spec.causal = true;
+    let mut prompt = st.tok.encode(&req.text, st.cfg.seq);
+    while prompt.last() == Some(&PAD_ID) {
+        prompt.pop();
+    }
+    let (session, out) = st
+        .backend
+        .decode_prefill(&spec, &st.params, &prompt, req.alpha, req_id as u32)
+        .map_err(|e| (req_id, e))?;
+    let ncl = out.n_classes;
+    let first_pred = argmax_logit(&out.logits[..ncl]);
+    let max_new = req.decode.as_ref().map_or(1, |d| d.max_new);
+    let alpha = req.alpha;
+    Ok(LiveDecode {
+        session,
+        max_new: max_new.min(st.max_len.saturating_sub(prompt.len())),
+        produced: 0,
+        next_token: class_to_token(first_pred),
+        last_logits: out.logits[..ncl].to_vec(),
+        last_alpha: alpha,
+        token_lat: Vec::new(),
+        steps_since_refresh: 0,
+        r_sum: out.r_sum.first().copied().unwrap_or(0.0) as f64,
+        n_eff: out.n_eff.first().copied().unwrap_or(0.0) as usize,
+        max_live: 0,
+        arrived: pending.arrived,
+        req,
+        rtx,
+    })
+}
+
+/// Advance every live decode session by one KV-cached step — one round
+/// of the continuous batch — delivering responses and `DecodeDone`
+/// reports for the sessions that finish (budget reached, zero headroom,
+/// or a step error). Returns false once the dispatcher is gone.
+fn decode_round(
+    st: &mut WorkerState,
+    live: &mut Vec<LiveDecode>,
+    knobs: &AtomicU64,
+    events: &mpsc::Sender<Msg>,
+) -> bool {
+    let (knob_alpha, refresh) = unpack_knobs(knobs.load(Ordering::Relaxed));
+    let n_live = live.len();
+    let mut failed: Vec<u64> = Vec::new();
+    for ld in live.iter_mut() {
+        ld.max_live = ld.max_live.max(n_live);
+        if ld.produced >= ld.max_new {
+            continue; // finishes below without another step
+        }
+        let alpha = step_alpha(&ld.req, knob_alpha);
+        // The controller's second actuator: every `refresh` MCA steps run
+        // one exact step, resetting the sampling drift the per-step α
+        // lets accumulate across the autoregressive rollout.
+        ld.steps_since_refresh += 1;
+        let force_exact = ld.req.mode == "exact" || ld.steps_since_refresh >= refresh;
+        if force_exact {
+            ld.steps_since_refresh = 0;
+        }
+        let t0 = Instant::now();
+        match st.backend.decode_step(ld.session, ld.next_token, alpha, force_exact) {
+            Ok(out) => {
+                ld.token_lat.push(t0.elapsed());
+                ld.produced += 1;
+                ld.last_alpha = alpha;
+                let ncl = out.n_classes;
+                let pred = argmax_logit(&out.logits[..ncl]);
+                ld.last_logits = out.logits[..ncl].to_vec();
+                ld.next_token = class_to_token(pred);
+                ld.r_sum = out.r_sum.first().copied().unwrap_or(0.0) as f64;
+                ld.n_eff = out.n_eff.first().copied().unwrap_or(0.0) as usize;
+            }
+            Err(e) => {
+                eprintln!("[serve:w{}] decode step {} failed: {e:#}", st.id, ld.req.id);
+                failed.push(ld.req.id);
+            }
+        }
+    }
+    // Retire finished and failed sessions (iterate back-to-front so
+    // swap_remove keeps remaining indices valid).
+    for i in (0..live.len()).rev() {
+        let done = live[i].produced >= live[i].max_new || failed.contains(&live[i].req.id);
+        if !done {
+            continue;
+        }
+        let ld = live.swap_remove(i);
+        st.backend.decode_finish(ld.session);
+        let ok = !failed.contains(&ld.req.id);
+        let total = ld.arrived.elapsed();
+        let flops = if !ok || ld.req.mode == "exact" || ld.n_eff == 0 {
+            1.0
+        } else {
+            flops::reduction_factor_prec(
+                &[(ld.n_eff, ld.r_sum as u64)],
+                st.n_layers,
+                st.dims,
+                precision_cost_factor(ld.req.precision),
+            )
+        };
+        let report = DecodeReport {
+            worker: st.id,
+            id: ld.req.id,
+            alpha: ld.last_alpha,
+            tokens: ld.produced,
+            token_lat: ld.token_lat.clone(),
+            total,
+            flops,
+            ok,
+        };
+        // Same causality rule as batches: report to the dispatcher
+        // before the client can observe its response.
+        let dispatcher_alive = events.send(Msg::DecodeDone(report)).is_ok();
+        if ok {
+            let resp = Response {
+                id: ld.req.id,
+                pred_class: argmax_logit(&ld.last_logits),
+                logits: ld.last_logits,
+                flops_reduction: flops,
+                r_sum: ld.r_sum,
+                n_eff: ld.n_eff,
+                latency: total,
+                batch_size: ld.max_live,
+                alpha: ld.last_alpha,
+                mode: ld.req.mode.clone(),
+                budget: ld.req.budget.is_some(),
+                precision: ld.req.precision,
+                quantized: ld.req.quantized,
+                degraded: ld.req.budget.as_ref().is_some_and(|b| b.degraded),
+                shed: false,
+                decode_tokens: ld.produced,
+                token_ms: ld.token_lat.iter().map(|d| d.as_secs_f64() * 1e3).collect(),
+            };
+            let _ = ld.rtx.send(resp);
+        }
+        if !dispatcher_alive {
+            return false;
+        }
+    }
+    true
 }
 
 type Deliveries = Vec<(mpsc::Sender<Response>, Response)>;
@@ -1458,10 +1993,14 @@ fn execute_job(st: &mut WorkerState, job: Job) -> (BatchReport, Deliveries) {
         let reduction = if mode == "exact" || fwd.n_eff[slot] == 0.0 {
             1.0
         } else {
-            flops::reduction_factor(
+            // Fold the compute precision into the per-request accounting:
+            // an int8 row costs half an f32 row, so the quantized rung's
+            // savings show up in the reported reduction.
+            flops::reduction_factor_prec(
                 &[(fwd.n_eff[slot] as usize, fwd.r_sum[slot] as u64)],
                 st.n_layers,
                 st.dims,
+                precision_cost_factor(pending.req.precision),
             )
         };
         let latency = pending.arrived.elapsed();
@@ -1483,6 +2022,8 @@ fn execute_job(st: &mut WorkerState, job: Job) -> (BatchReport, Deliveries) {
             quantized: pending.req.quantized,
             degraded: pending.req.budget.as_ref().is_some_and(|b| b.degraded),
             shed: false,
+            decode_tokens: 0,
+            token_ms: Vec::new(),
         };
         deliveries.push((rtx, resp));
     }
@@ -1525,6 +2066,7 @@ mod tests {
                 precision,
                 quantized: false,
                 budget: None,
+                decode: None,
             },
             arrived: now - Duration::from_millis(age_ms),
         }
@@ -1814,6 +2356,7 @@ mod tests {
                 precision: Precision::F32,
                 quantized: false,
                 budget: None,
+                decode: None,
             };
             assert!((row_cost(&req) - 1.0).abs() < 1e-12, "alpha {alpha}");
         }
@@ -1826,6 +2369,7 @@ mod tests {
             precision: Precision::F32,
             quantized: false,
             budget: None,
+            decode: None,
         };
         assert!((row_cost(&cheap) - 0.25).abs() < 1e-12);
     }
@@ -1840,6 +2384,7 @@ mod tests {
             precision,
             quantized: false,
             budget: None,
+            decode: None,
         };
         assert!((row_cost(&mk(Precision::F32)) - 1.0).abs() < 1e-12);
         assert!((row_cost(&mk(Precision::Bf16)) - 0.75).abs() < 1e-12);
@@ -1856,6 +2401,7 @@ mod tests {
             precision,
             quantized: false,
             budget: None,
+            decode: None,
         };
         // exact requests keep their bit-exact f32 contract
         let mut ex = mk("exact", Precision::F32);
@@ -1886,6 +2432,7 @@ mod tests {
             precision: Precision::F32,
             quantized: false,
             budget,
+            decode: None,
         };
         // raw-α request: untouched
         let mut raw = mk(0.2, "mca", None);
@@ -1947,5 +2494,89 @@ mod tests {
         let order = rank_plans(&q, &plans, max_wait, now);
         let first = &plans[order[0]];
         assert_eq!(q[first.indices[0]].req.mode, "exact");
+    }
+
+    #[test]
+    fn ladder_can_reduce_matches_the_rungs() {
+        let mk = |alpha: f32, mode: &str, precision: Precision, budget: Option<Budget>| Request {
+            id: 9,
+            text: String::new(),
+            alpha,
+            mode: mode.into(),
+            precision,
+            quantized: false,
+            budget,
+            decode: None,
+        };
+        // exact: neither rung applies — the ladder cannot help
+        assert!(!ladder_can_reduce(&mk(1.0, "exact", Precision::F32, None)));
+        // raw-α mca f32: the quantized rung halves the row cost
+        assert!(ladder_can_reduce(&mk(0.4, "mca", Precision::F32, None)));
+        // mca already on int8 with no budget: fully degraded, nothing left
+        assert!(!ladder_can_reduce(&mk(0.4, "mca", Precision::Int8, None)));
+        // int8 budget request below its ceiling: degrade still helps
+        let b = Budget { epsilon: 5.0, delta: None, alpha_max: 1.0, degraded: false };
+        assert!(ladder_can_reduce(&mk(0.4, "mca", Precision::Int8, Some(b.clone()))));
+        // ...but not once it already sits at the ceiling
+        let mut at_ceiling = mk(1.0, "mca", Precision::Int8, Some(b));
+        at_ceiling.budget.as_mut().unwrap().degraded = true;
+        assert!(!ladder_can_reduce(&at_ceiling));
+        // probing must not mutate the candidate
+        let probe = mk(0.4, "mca", Precision::F32, None);
+        let before = probe.clone();
+        let _ = ladder_can_reduce(&probe);
+        assert_eq!(probe.precision, before.precision);
+        assert_eq!(probe.alpha, before.alpha);
+    }
+
+    #[test]
+    fn step_alpha_tracks_the_controller_under_the_ceiling() {
+        let mk = |alpha: f32, mode: &str, budget: Option<Budget>| Request {
+            id: 3,
+            text: String::new(),
+            alpha,
+            mode: mode.into(),
+            precision: Precision::F32,
+            quantized: false,
+            budget,
+            decode: Some(DecodeParams { max_new: 4 }),
+        };
+        // raw-α requests pin their requested α regardless of the knob
+        assert_eq!(step_alpha(&mk(0.4, "mca", None), 0.9), 0.4);
+        // budget requests follow the (grid-quantized) controller target...
+        let b = |alpha_max: f32, degraded: bool| {
+            Some(Budget { epsilon: 1.0, delta: None, alpha_max, degraded })
+        };
+        assert_eq!(step_alpha(&mk(0.4, "mca", b(0.8, false)), 0.65), 0.6);
+        // ...capped at the resolved ceiling...
+        assert_eq!(step_alpha(&mk(0.4, "mca", b(0.3, false)), 0.9), 0.3);
+        // ...and stay at the ceiling once brownout degraded them
+        assert_eq!(step_alpha(&mk(0.8, "mca", b(0.8, true)), 0.1), 0.8);
+        // exact-resolved budgets keep α=1 (the mode forces exact steps)
+        assert_eq!(step_alpha(&mk(1.0, "exact", b(1.0, false)), 0.2), 1.0);
+    }
+
+    #[test]
+    fn class_tokens_live_in_their_symbol_bands() {
+        use crate::data::lm::token_class;
+        for class in 0..3 {
+            assert_eq!(token_class(class_to_token(class)), Some(class));
+        }
+        // out-of-range predictions clamp into a valid band
+        assert_eq!(token_class(class_to_token(-1)), Some(0));
+        assert_eq!(token_class(class_to_token(7)), Some(2));
+    }
+
+    #[test]
+    fn knob_word_round_trips() {
+        for (alpha, refresh) in [(0.05f32, 1u64), (0.4, 8), (1.0, 64), (0.87, 12345)] {
+            let (a, r) = unpack_knobs(pack_knobs(alpha, refresh));
+            assert_eq!(a.to_bits(), alpha.to_bits());
+            assert_eq!(r, refresh);
+        }
+        // a refresh interval of 0 (or a torn read of 0) still forces
+        // at least one step between refreshes
+        let (_, r) = unpack_knobs(pack_knobs(0.4, 0));
+        assert_eq!(r, 1);
     }
 }

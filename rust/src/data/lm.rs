@@ -1,0 +1,105 @@
+//! LM-style next-token task for the autoregressive decode path.
+//!
+//! `lm_sim` plants a 3-symbol recurrence: every token belongs to one of
+//! three symbol classes, and the class of token *k* is determined by the
+//! classes of tokens *k−1* and *k−2* (`c_k = (c_{k−1} + c_{k−2}) mod 3`).
+//! The gold label is the class of the token that *would* come next — so a
+//! causal model that attends to the last two real tokens solves the task,
+//! while attention error at the sequence tail directly costs accuracy.
+//! This is the decode-serving analog of the classification suite: short
+//! local structure, skewed causal attention, and a label the coordinator's
+//! token-level decode loop can check one step at a time.
+
+use super::{Example, Label, TaskSpec};
+use crate::rng::Pcg64;
+use crate::tokenizer::{CLS_ID, SEP_ID};
+
+/// First vocabulary id of symbol class 0. Classes occupy three disjoint
+/// 8-id bands starting here, clear of PAD/CLS/SEP.
+pub const LM_SYMBOL_BASE: i32 = 8;
+/// Number of interchangeable surface forms per symbol class.
+pub const LM_CLASS_SIZE: i32 = 8;
+/// Number of symbol classes (== the task's `n_classes`).
+pub const LM_N_CLASSES: i32 = 3;
+
+/// A random surface token of symbol class `class` (0..3).
+pub fn class_token(class: i32, rng: &mut Pcg64) -> i32 {
+    LM_SYMBOL_BASE + class * LM_CLASS_SIZE + rng.gen_range(0, LM_CLASS_SIZE as usize) as i32
+}
+
+/// The symbol class of a vocabulary id, or `None` for ids outside the
+/// three symbol bands (CLS/SEP/filler).
+pub fn token_class(id: i32) -> Option<i32> {
+    let off = id - LM_SYMBOL_BASE;
+    if (0..LM_N_CLASSES * LM_CLASS_SIZE).contains(&off) {
+        Some(off / LM_CLASS_SIZE)
+    } else {
+        None
+    }
+}
+
+/// The planted recurrence: class of the next symbol given the last two.
+pub fn next_class(prev2: i32, prev1: i32) -> i32 {
+    (prev1 + prev2) % LM_N_CLASSES
+}
+
+/// Generate `count` examples of the `lm_sim` next-token task. Sequences
+/// are `CLS s_0 .. s_{L-1} SEP` with classes following [`next_class`];
+/// the label is the class of the (unseen) symbol `s_L`.
+pub fn gen_lm(spec: &TaskSpec, rng: &mut Pcg64, count: usize) -> Vec<Example> {
+    (0..count)
+        .map(|_| {
+            // Leave room for CLS and SEP; vary length so decode serving
+            // sees ragged prompts.
+            let len = rng.gen_range(4, spec.max_len - 2);
+            let mut classes = Vec::with_capacity(len + 1);
+            classes.push(rng.gen_range(0, LM_N_CLASSES as usize) as i32);
+            classes.push(rng.gen_range(0, LM_N_CLASSES as usize) as i32);
+            while classes.len() <= len {
+                let k = classes.len();
+                classes.push(next_class(classes[k - 2], classes[k - 1]));
+            }
+            let mut ids = Vec::with_capacity(len + 2);
+            ids.push(CLS_ID);
+            for &c in &classes[..len] {
+                ids.push(class_token(c, rng));
+            }
+            ids.push(SEP_ID);
+            Example { ids, label: Label::Class(classes[len]) }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symbol_bands_roundtrip_and_avoid_specials() {
+        let mut rng = Pcg64::new(3);
+        for class in 0..LM_N_CLASSES {
+            for _ in 0..32 {
+                let t = class_token(class, &mut rng);
+                assert!(t > SEP_ID && t >= LM_SYMBOL_BASE);
+                assert_eq!(token_class(t), Some(class));
+            }
+        }
+        assert_eq!(token_class(CLS_ID), None);
+        assert_eq!(token_class(LM_SYMBOL_BASE + LM_N_CLASSES * LM_CLASS_SIZE), None);
+    }
+
+    #[test]
+    fn labels_follow_the_planted_recurrence() {
+        let spec = super::super::task_by_name("lm_sim").unwrap();
+        let mut rng = Pcg64::new(7);
+        for ex in gen_lm(&spec, &mut rng, 64) {
+            let classes: Vec<i32> =
+                ex.ids[1..ex.ids.len() - 1].iter().map(|&t| token_class(t).unwrap()).collect();
+            let n = classes.len();
+            for k in 2..n {
+                assert_eq!(classes[k], next_class(classes[k - 2], classes[k - 1]));
+            }
+            assert_eq!(ex.label, Label::Class(next_class(classes[n - 2], classes[n - 1])));
+        }
+    }
+}

@@ -7,6 +7,7 @@
 
 pub mod docs;
 pub mod glue;
+pub mod lm;
 
 use crate::rng::Pcg64;
 
@@ -130,6 +131,7 @@ pub fn generate(spec: &TaskSpec, seed: u64) -> Dataset {
         "aapd_sim" => docs::gen_aapd,
         "hnd_sim" => docs::gen_hnd,
         "imdb_sim" => docs::gen_imdb,
+        "lm_sim" => lm::gen_lm,
         other => panic!("unknown task {other}"),
     };
     let train = gen(spec, &mut rng, spec.train_size);
@@ -233,6 +235,23 @@ pub fn extra_tasks() -> Vec<TaskSpec> {
     ]
 }
 
+/// The decode-serving task family: next-token prediction with planted
+/// local structure (see [`lm`]). Trained like any classification task
+/// (the head predicts the next symbol's class from the last real token),
+/// served through the autoregressive KV-cache decode path. Not part of
+/// the default eval-harness inventory.
+pub fn lm_tasks() -> Vec<TaskSpec> {
+    vec![TaskSpec {
+        name: "lm_sim",
+        kind: TaskKind::Classification,
+        n_classes: lm::LM_N_CLASSES,
+        metrics: &[Metric::Accuracy][..],
+        max_len: 64,
+        train_size: 3000,
+        dev_size: 512,
+    }]
+}
+
 /// The default `mca eval` harness inventory: sst2_sim (the paper's anchor
 /// task) plus the [`extra_tasks`].
 pub fn harness_tasks() -> Vec<TaskSpec> {
@@ -248,6 +267,7 @@ pub fn task_by_name(name: &str) -> Option<TaskSpec> {
         .into_iter()
         .chain(doc_tasks())
         .chain(extra_tasks())
+        .chain(lm_tasks())
         .find(|t| t.name == name)
 }
 
@@ -281,7 +301,12 @@ mod tests {
 
     #[test]
     fn all_tasks_generate_valid_data() {
-        for spec in glue_tasks().iter().chain(doc_tasks().iter()).chain(extra_tasks().iter()) {
+        for spec in glue_tasks()
+            .iter()
+            .chain(doc_tasks().iter())
+            .chain(extra_tasks().iter())
+            .chain(lm_tasks().iter())
+        {
             check_dataset(spec);
         }
     }

@@ -16,8 +16,10 @@
 //!
 //! Each point records the task metric, exact-vs-MCA agreement, the
 //! measured Σrᵢ and the Eq.-9 FLOPs-reduction factor (via
-//! [`crate::mca::flops::reduction_factor`] — the same accounting the
-//! paper's tables use). Per model, the knob points are macro-averaged
+//! [`crate::mca::flops::reduction_factor_prec`] with the coordinator's
+//! precision cost factor folded in — the same accounting the paper's
+//! tables use, extended along the precision axis). Per model, the knob
+//! points are macro-averaged
 //! across tasks and reduced to the accuracy-vs-FLOPs **Pareto frontier**
 //! ([`pareto_indices`]): along the frontier, accuracy is non-increasing as
 //! the FLOPs budget shrinks — the trade-off curve of the paper's Figure 1,
@@ -540,7 +542,16 @@ fn summarize(
     let flops_reduction = if knob == Knob::Exact || per_seq.is_empty() {
         1.0
     } else {
-        flops::reduction_factor(&per_seq, info.n_layers, dims)
+        // The exact baseline is always the f32 forward; the approximate
+        // pass's rows cost `precision_cost_factor` each (int8 rows are
+        // half-price), including budget rows that resolved to the exact
+        // path — those still ran on the reduced-precision GEMMs.
+        flops::reduction_factor_prec(
+            &per_seq,
+            info.n_layers,
+            dims,
+            crate::coordinator::precision_cost_factor(precision),
+        )
     };
 
     // Agreement over examples where neither this pass nor the baseline

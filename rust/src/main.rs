@@ -450,6 +450,13 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
                 .opt("seed", "7", "workload seed (arrivals + α/ε mixtures)")
                 .opt("burst", "128", "lockstep replay-burst size per worker count (0 to skip)")
                 .opt(
+                    "decode-burst",
+                    "0",
+                    "decode-session burst size per worker count (0 to skip): seeded ragged \
+                     autoregressive KV-cache sessions on the continuous batch",
+                )
+                .opt("decode-max-new", "16", "max generated tokens per decode session")
+                .opt(
                     "error-budget",
                     "",
                     "ε list for budget-carrying requests (empty = raw-α workload only)",
@@ -642,7 +649,9 @@ fn eval_cmd(args: &Args) -> Result<()> {
 }
 
 fn loadtest(args: &Args) -> Result<()> {
-    use mca::coordinator::loadgen::{run_load, run_replay, write_bench_json, LoadResult, Workload};
+    use mca::coordinator::loadgen::{
+        run_decode, run_load, run_replay, write_bench_json, LoadResult, Workload,
+    };
     use mca::coordinator::{Server, ServerConfig};
     use std::time::Duration;
 
@@ -680,6 +689,8 @@ fn loadtest(args: &Args) -> Result<()> {
         args.get_f64_list("error-budget")?.into_iter().map(|e| (e, 1.0)).collect();
     let budget_frac = if epsilon_mix.is_empty() { 0.0 } else { args.get_f64("budget-frac")? };
     let burst = args.get_usize("burst")?;
+    let decode_burst = args.get_usize("decode-burst")?;
+    let decode_max_new = args.get_usize("decode-max-new")?;
     let mut entries: Vec<(usize, String, LoadResult)> = Vec::new();
     let mut last_stats = None;
     for &workers in &worker_counts {
@@ -730,6 +741,23 @@ fn loadtest(args: &Args) -> Result<()> {
                 r.mean_resolved_alpha
             ));
             entries.push((workers, "replay".to_string(), r));
+        }
+        if decode_burst > 0 {
+            // Decode burst: seeded ragged generation lengths exercise
+            // token-level join/leave on the workers' continuous batches;
+            // tokens/s and the inter-token percentiles are the serving
+            // decode signal `scripts/bench_gate.py` gates on.
+            let r = run_decode(&server, &texts, decode_burst, &wl_base, decode_max_new)?;
+            eprintln!(
+                "[loadtest] w={workers} decode({decode_burst}): {} tokens at {:.1} tok/s, inter-token p50 {:.2}ms p99 {:.2}ms",
+                r.decode_tokens, r.tokens_per_s, r.token_p50_ms, r.token_p99_ms
+            );
+            text.push_str(&format!(
+                "| {workers} | decode({decode_burst}) | {:.1} | {} | {:.1} | {:.2} | {:.2} | {:.2}× | {:.2} |\n",
+                r.tokens_per_s, r.shed, r.mean_ms, r.token_p50_ms, r.token_p99_ms,
+                r.mean_flops_reduction, r.mean_resolved_alpha
+            ));
+            entries.push((workers, "decode".to_string(), r));
         }
         for &rate in &rates {
             let wl = Workload { rate, ..wl_base.clone() };

@@ -115,6 +115,15 @@ pub fn alpha_for_tail_budget(epsilon: f64, delta: f64, beta: f64, w_frob: f64) -
 /// multiplicative decrease when it violates the floor. Non-finite
 /// observations are ignored (no signal), so the knob cannot be walked by
 /// a poisoned proxy.
+///
+/// For the autoregressive decode path the controller drives a *second*
+/// actuator in lockstep: `refresh_steps`, the number of decode steps a
+/// session may take between forced exact refreshes (steps whose Eq.-9
+/// budget is pinned to the saturated r = d). Good quality stretches the
+/// refresh interval additively (+1 step, cheaper decode); a violation
+/// halves it (floor 1 = refresh every step), the same AIMD shape as α —
+/// drift accumulates across the KV cache just like α error accumulates
+/// across tokens, so both knobs want sharp backoff past the knee.
 #[derive(Debug, Clone)]
 pub struct AlphaController {
     /// current α target (what the dispatcher caps budget requests at)
@@ -129,6 +138,12 @@ pub struct AlphaController {
     pub backoff: f64,
     /// quality floor (proxy units, e.g. minimum acceptable mean margin)
     pub quality_floor: f64,
+    /// decode steps between forced exact refreshes (second actuator)
+    pub refresh_steps: u64,
+    /// lower clamp of the refresh interval (1 = refresh every step)
+    pub min_refresh: u64,
+    /// upper clamp of the refresh interval
+    pub max_refresh: u64,
     violations: u64,
     updates: u64,
 }
@@ -145,6 +160,9 @@ impl AlphaController {
             increase: 0.05,
             backoff: 0.5,
             quality_floor,
+            refresh_steps: 8,
+            min_refresh: 1,
+            max_refresh: 64,
             violations: 0,
             updates: 0,
         }
@@ -160,8 +178,10 @@ impl AlphaController {
         if quality < self.quality_floor {
             self.violations += 1;
             self.alpha = self.alpha * self.backoff;
+            self.refresh_steps /= 2;
         } else {
             self.alpha += self.increase;
+            self.refresh_steps = self.refresh_steps.saturating_add(1);
         }
         // Belt and braces: even degenerate step/bound fields must not let
         // α escape or go NaN (the serving dispatcher trusts this value).
@@ -169,7 +189,15 @@ impl AlphaController {
             self.alpha = self.min_alpha;
         }
         self.alpha = self.alpha.clamp(self.min_alpha, self.max_alpha);
+        let (lo, hi) = (self.min_refresh.max(1), self.max_refresh.max(1));
+        self.refresh_steps = self.refresh_steps.clamp(lo.min(hi), hi);
         self.alpha
+    }
+
+    /// Current decode refresh interval (steps between forced exact
+    /// refreshes), always ≥ 1.
+    pub fn refresh_steps(&self) -> u64 {
+        self.refresh_steps.max(1)
     }
 
     /// Number of finite observations fed so far.
@@ -328,6 +356,28 @@ mod tests {
         assert!(a2 > a1);
         assert_eq!(c.updates(), 2);
         assert!((c.violation_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn refresh_actuator_walks_with_quality() {
+        let mut c = AlphaController::new(0.5, 0.5);
+        assert_eq!(c.refresh_steps(), 8);
+        c.observe(0.9); // good -> stretch the interval
+        assert_eq!(c.refresh_steps(), 9);
+        c.observe(0.1); // violation -> halve
+        assert_eq!(c.refresh_steps(), 4);
+        for _ in 0..8 {
+            c.observe(0.1);
+        }
+        assert_eq!(c.refresh_steps(), 1, "refresh interval must floor at 1");
+        for _ in 0..200 {
+            c.observe(0.9);
+        }
+        assert_eq!(c.refresh_steps(), c.max_refresh, "refresh interval must cap");
+        // non-finite observations move neither actuator
+        let before = (c.alpha, c.refresh_steps());
+        c.observe(f64::NAN);
+        assert_eq!((c.alpha, c.refresh_steps()), before);
     }
 
     #[test]

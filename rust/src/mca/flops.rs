@@ -71,7 +71,24 @@ pub fn attn_pairs(n_eff: usize, dims: AttnDims) -> u64 {
 
 /// Aggregate reduction factor over a dataset: Σ exact / Σ mca, both summed
 /// over sequences and layers. `per_seq` = (n_eff, measured Σ_layers Σ_i r_i).
+/// Both sides are f32 costs — see [`reduction_factor_prec`] for runs where
+/// the approximate path computes at reduced precision.
 pub fn reduction_factor(per_seq: &[(usize, u64)], n_layers: usize, dims: AttnDims) -> f64 {
+    reduction_factor_prec(per_seq, n_layers, dims, 1.0)
+}
+
+/// [`reduction_factor`] with the compute-precision cost factor folded into
+/// the approximate side: the exact baseline is always the f32 forward, while
+/// the MCA cost is scaled by `prec_factor` (1.0 f32, 0.75 bf16, 0.5 int8 —
+/// the coordinator's `precision_cost_factor`). Without this an int8 sweep
+/// reports the same FLOPs-equivalents as f32 even though each sampled row
+/// costs half as much, understating the measured reduction.
+pub fn reduction_factor_prec(
+    per_seq: &[(usize, u64)],
+    n_layers: usize,
+    dims: AttnDims,
+    prec_factor: f64,
+) -> f64 {
     let mut exact = 0u64;
     let mut mca = 0u64;
     for &(n_eff, r_sum_all_layers) in per_seq {
@@ -81,10 +98,10 @@ pub fn reduction_factor(per_seq: &[(usize, u64)], n_layers: usize, dims: AttnDim
         mca += 2 * r_sum_all_layers * dims.d_model as u64
             + n_layers as u64 * 2 * attn_pairs(n_eff, dims) * dims.d_model as u64;
     }
-    if mca == 0 {
+    if mca == 0 || prec_factor <= 0.0 {
         return 0.0;
     }
-    exact as f64 / mca as f64
+    exact as f64 / (mca as f64 * prec_factor)
 }
 
 /// Project a reduction factor measured at one feature dimension to another
@@ -190,6 +207,24 @@ mod tests {
         let per_seq: Vec<(usize, u64)> = vec![(32, 32 * 128 * 4)];
         let f = reduction_factor(&per_seq, 4, DENSE);
         assert!((f - 1.0).abs() < 1e-9, "{f}");
+    }
+
+    #[test]
+    fn precision_factor_scales_the_mca_side_only() {
+        // Saturated budget at int8 (factor 0.5): the sampled work is the
+        // same row count as exact, but each row costs half — the measured
+        // reduction must read 2×, not 1×.
+        let per_seq: Vec<(usize, u64)> = vec![(32, 32 * 128 * 4)];
+        let f_int8 = reduction_factor_prec(&per_seq, 4, DENSE, 0.5);
+        assert!((f_int8 - 2.0).abs() < 1e-9, "{f_int8}");
+        let f_bf16 = reduction_factor_prec(&per_seq, 4, DENSE, 0.75);
+        assert!((f_bf16 - 1.0 / 0.75).abs() < 1e-9, "{f_bf16}");
+        // factor 1.0 is exactly the legacy path
+        let a = reduction_factor(&per_seq, 4, DENSE);
+        let b = reduction_factor_prec(&per_seq, 4, DENSE, 1.0);
+        assert_eq!(a, b);
+        // degenerate factors don't divide by zero
+        assert_eq!(reduction_factor_prec(&per_seq, 4, DENSE, 0.0), 0.0);
     }
 
     #[test]

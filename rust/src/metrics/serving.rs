@@ -120,8 +120,16 @@ pub struct ServingMetrics {
     pub canary_violations: usize,
     /// The AIMD controller's current α target.
     pub controller_alpha: f64,
+    /// Completed decode requests (KV-cached continuous-batching sessions).
+    pub decode_requests: usize,
+    /// Tokens generated across all completed decode requests.
+    pub decode_tokens: usize,
+    /// Decode sessions torn down by a prefill/step failure or abort.
+    pub decode_failed: usize,
     /// per-worker accumulators (index = worker id)
     pub workers: Vec<WorkerMetrics>,
+    /// per-token decode-step (inter-token) latency histogram
+    token_lat: LatencyStats,
     per_alpha: BTreeMap<u32, LatencyStats>,
     /// Per-α-resolution counts for admitted ε-budget requests (keyed by
     /// the α actually served; exact resolutions count under α = 1.0).
@@ -230,6 +238,48 @@ impl ServingMetrics {
     /// Record a batch whose forward errored on `worker`.
     pub fn on_failed_batch(&mut self, worker: usize) {
         self.workers[worker].failed_batches += 1;
+    }
+
+    /// Record one decode session leaving `worker`'s continuous batch:
+    /// the per-token step latencies land in the inter-token histogram,
+    /// the end-to-end latency in the worker's and the last-served α's
+    /// histograms. Failed sessions (prefill/step error, abort) count as
+    /// `decode_failed`, not as served traffic.
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_decode(
+        &mut self,
+        worker: usize,
+        alpha: f32,
+        tokens: usize,
+        token_lat: &[Duration],
+        total: Duration,
+        flops: f64,
+        ok: bool,
+    ) {
+        if !ok {
+            self.decode_failed += 1;
+            if let Some(w) = self.workers.get_mut(worker) {
+                w.failed_batches += 1;
+            }
+            return;
+        }
+        self.decode_requests += 1;
+        self.decode_tokens += tokens;
+        for &l in token_lat {
+            self.token_lat.record(l);
+        }
+        if let Some(w) = self.workers.get_mut(worker) {
+            w.served += 1;
+            w.flops_sum += flops;
+            w.busy_ms += token_lat.iter().map(|l| l.as_secs_f64() * 1e3).sum::<f64>();
+            w.lat.record(total);
+        }
+        self.per_alpha.entry(alpha.to_bits()).or_default().record(total);
+    }
+
+    /// The pool-wide per-token decode-step latency histogram.
+    pub fn token_lat(&self) -> &LatencyStats {
+        &self.token_lat
     }
 
     /// Total requests answered across the pool.
@@ -379,6 +429,31 @@ mod tests {
         assert_eq!(m.canaries, 2);
         assert_eq!(m.canary_violations, 1);
         assert!((m.controller_alpha - 0.225).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decode_sessions_fold_into_token_and_request_histograms() {
+        let mut m = ServingMetrics::new(2);
+        m.on_decode(0, 0.4, 3, &[ms(2), ms(4), ms(6)], ms(30), 2.5, true);
+        m.on_decode(1, 0.4, 1, &[ms(8)], ms(12), 1.5, true);
+        assert_eq!(m.decode_requests, 2);
+        assert_eq!(m.decode_tokens, 4);
+        assert_eq!(m.decode_failed, 0);
+        assert_eq!(m.served(), 2);
+        assert!((m.flops_sum() - 4.0).abs() < 1e-9);
+        // inter-token histogram holds every step latency
+        assert_eq!(m.token_lat().count(), 4);
+        assert!((m.token_lat().mean_ms() - 5.0).abs() < 1e-9);
+        // end-to-end latency lands in the per-α rows like batch traffic
+        let a = m.alpha_summaries();
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].count, 2);
+        // a failed session counts as failed, never as served
+        m.on_decode(0, 0.4, 2, &[], ms(5), 1.0, false);
+        assert_eq!(m.decode_failed, 1);
+        assert_eq!(m.decode_requests, 2);
+        assert_eq!(m.workers[0].failed_batches, 1);
+        assert_eq!(m.token_lat().count(), 4);
     }
 
     #[test]

@@ -56,6 +56,12 @@ pub struct ForwardCfg {
     /// arithmetic precision of the weight-side matmul operands (Figure
     /// 1's reduced-precision axis, extended to int8 — DESIGN.md §3)
     pub prec: Precision,
+    /// causal (autoregressive LM) attention: query i sees keys ≤ i only,
+    /// Eq.-9 budgets use the causally-visible prefix length, and the
+    /// classifier head reads the *last* real token instead of CLS. This
+    /// is the full-sequence twin of the incremental decode path
+    /// ([`decode_prefill`]/[`decode_step`]) — the two are bit-identical.
+    pub causal: bool,
 }
 
 impl ForwardCfg {
@@ -81,7 +87,7 @@ impl ForwardCfg {
         let prec = Precision::parse(compute_dtype).with_context(|| {
             format!("unknown compute_dtype {compute_dtype:?} (f32|bf16|int8)")
         })?;
-        Ok(ForwardCfg { mode, r_strategy, uniform_p, prec })
+        Ok(ForwardCfg { mode, r_strategy, uniform_p, prec, causal: false })
     }
 }
 
@@ -379,18 +385,35 @@ pub(crate) fn attn_allowed(mask: &[bool], window: Option<usize>, qi: usize, ki: 
     }
 }
 
+/// Causal visibility: the plain [`attn_allowed`] rule intersected with
+/// `ki <= qi` — under a window this overrides the Longformer global-CLS
+/// *row* (query 0 sees only key 0), while the global-CLS *column* stays
+/// visible to later queries. Decode steps evaluate the same predicate
+/// with `qi` fixed to the new token's position.
+#[inline]
+pub(crate) fn causal_allowed(
+    mask: &[bool],
+    window: Option<usize>,
+    qi: usize,
+    ki: usize,
+) -> bool {
+    ki <= qi && attn_allowed(mask, window, qi, ki)
+}
+
 const NEG_BIAS: f32 = -1e9;
 
 /// softmax(Q_h K_h^T / sqrt(dh) + bias) for every head. Returns the
 /// per-head attention matrices plus q/k (with bias added), which the
 /// backward pass reuses. The scale, visibility mask and row softmax are
 /// fused into the score GEMM's epilogue ([`kernel::attn_scores_softmax`]).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn attention_probs(
     xn: &Tensor,
     lw: &LayerWeights,
     packed: Option<&PackedLayer>,
     mask: &[bool],
     window: Option<usize>,
+    causal: bool,
     n_heads: usize,
     prec: Precision,
     threads: usize,
@@ -401,7 +424,13 @@ pub(crate) fn attention_probs(
     let k = mm_bias(xn, wref(&lw.wk, packed.map(|p| &p.wk)), &lw.bk, prec, threads);
 
     let inv = 1.0 / (dh as f32).sqrt();
-    let allowed = |qi: usize, ki: usize| attn_allowed(mask, window, qi, ki);
+    let allowed = |qi: usize, ki: usize| {
+        if causal {
+            causal_allowed(mask, window, qi, ki)
+        } else {
+            attn_allowed(mask, window, qi, ki)
+        }
+    };
     let mut attn = Vec::with_capacity(n_heads);
     for hh in 0..n_heads {
         let qh = q.col_block(hh * dh, dh);
@@ -460,6 +489,45 @@ pub(crate) fn mca_contexts(
 }
 
 // ---------------------------------------------------------------------------
+// Causal Eq.-9 budgets (shared by the causal prefill and decode steps)
+// ---------------------------------------------------------------------------
+
+/// Causal importance of one token: its *diagonal* attention weight, maxed
+/// over heads. Unlike [`mca::token_importance`] (which pools each key's
+/// column over all queries, including future ones), the diagonal is
+/// computable online at decode time — token i's importance depends only
+/// on the prefix it can see — so the causal prefill and the per-token
+/// decode steps sample identical Eq.-9 budgets.
+fn causal_importance(attn: &[Tensor], i: usize) -> f64 {
+    attn.iter().map(|h| h.at(&[i, i]) as f64).fold(0.0, f64::max)
+}
+
+/// One token's Eq.-9 budget under causal masking: `sqrt(r) = n·imp/α`
+/// with n the causally-visible real-token count (the prefix length),
+/// mirroring [`mca::sample_counts`]'s clamp to [1, d] exactly.
+fn causal_budget(seen: usize, imp: f64, alpha: f64, d: usize) -> usize {
+    let sqrt_r = seen as f64 * imp / alpha;
+    (sqrt_r * sqrt_r).ceil().clamp(1.0, d as f64) as usize
+}
+
+/// Per-token causal budgets for a full sequence: token i uses the number
+/// of real tokens at positions ≤ i as its Eq.-9 `n` (what a decode step
+/// at position i knows), padded tokens get the minimum budget of 1.
+fn causal_sample_counts(attn: &[Tensor], mask: &[bool], alpha: f64, d: usize) -> Vec<usize> {
+    let mut seen = 0usize;
+    mask.iter()
+        .enumerate()
+        .map(|(i, &real)| {
+            if !real {
+                return 1;
+            }
+            seen += 1;
+            causal_budget(seen, causal_importance(attn, i), alpha, d)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
 // Forward
 // ---------------------------------------------------------------------------
 
@@ -487,6 +555,8 @@ pub(crate) fn embed(model: &ModelInfo, w: &Weights, ids: &[i32]) -> (Tensor, Vec
 /// One sequence through the encoder. Returns (logits, Σr_i, n_eff).
 /// `threads` is the kernel-level panel-split budget for this sequence's
 /// matrix products (1 when the batch itself saturates the worker pool).
+/// When `kv_out` is `Some`, each layer's post-bias K and V matrices are
+/// appended to it — the KV-cache capture of [`decode_prefill`].
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn forward_one(
     model: &ModelInfo,
@@ -497,6 +567,7 @@ pub(crate) fn forward_one(
     mca_ctx: Option<&[McaLayerCtx]>,
     cfg: &ForwardCfg,
     threads: usize,
+    mut kv_out: Option<&mut Vec<LayerKV>>,
 ) -> (Vec<f32>, f32, f32) {
     let d = model.d_model;
     let h = model.n_heads;
@@ -509,14 +580,21 @@ pub(crate) fn forward_one(
     for (li, lw) in w.layers.iter().enumerate() {
         let pl = packed.map(|p| &p.layers[li]);
         let xn = layer_norm(&x, &lw.ln1_scale, &lw.ln1_bias);
-        let (attn, _q, _k) =
-            attention_probs(&xn, lw, pl, &mask, model.window, h, cfg.prec, threads);
+        let (attn, _q, k) =
+            attention_probs(&xn, lw, pl, &mask, model.window, cfg.causal, h, cfg.prec, threads);
 
         // Value encoding: the operation MCA approximates (paper §Background).
         let mut v = match (cfg.mode, mca_ctx) {
             (AttnMode::Mca, Some(ctxs)) => {
-                let imp = mca::token_importance(&attn, &mask, cfg.r_strategy);
-                let r = mca::sample_counts(&imp, &mask, alpha as f64, d);
+                // Causal passes budget each token from its visible prefix
+                // (the decode-step rule); bidirectional passes pool each
+                // key's column over the whole batch of queries (Eq. 9).
+                let r = if cfg.causal {
+                    causal_sample_counts(&attn, &mask, alpha as f64, d)
+                } else {
+                    let imp = mca::token_importance(&attn, &mask, cfg.r_strategy);
+                    mca::sample_counts(&imp, &mask, alpha as f64, d)
+                };
                 for (ri, &real) in r.iter().zip(&mask) {
                     if real {
                         r_sum += *ri as u64;
@@ -559,6 +637,9 @@ pub(crate) fn forward_one(
             _ => mm(&xn, wref(&lw.wv, pl.map(|p| &p.wv)), cfg.prec, threads),
         };
         v.add_row_inplace(&lw.bv);
+        if let Some(cache) = kv_out.as_deref_mut() {
+            cache.push(LayerKV { k: k.data().to_vec(), v: v.data().to_vec() });
+        }
 
         // Weighted sum + output projection, head by head. (The weighted
         // sum stays f32 even under bf16, matching the Python model.)
@@ -580,7 +661,10 @@ pub(crate) fn forward_one(
     }
 
     let xf = layer_norm(&x, &w.lnf_scale, &w.lnf_bias);
-    let cls = Tensor::new(&[1, d], xf.row(0).to_vec()).expect("cls row");
+    // LM-style causal passes read the last real token (the next-token
+    // prediction state); encoder passes read CLS row 0.
+    let pool_row = if cfg.causal { mask.iter().rposition(|&m| m).unwrap_or(0) } else { 0 };
+    let cls = Tensor::new(&[1, d], xf.row(pool_row).to_vec()).expect("pooled row");
     let head = wref(&w.head_w, packed.map(|p| &p.head_w));
     let logits = mm_bias(&cls, head, &w.head_b, cfg.prec, 1);
     (logits.into_data(), r_sum as f32, n_eff as f32)
@@ -650,7 +734,7 @@ pub(crate) fn forward_batch_packed(
     let fanout = workers.max(1).min(rows.len().max(1));
     let intra = (workers.max(1) / fanout).max(1);
     let results = threadpool::parallel_map(rows, fanout, |row: &Vec<i32>| {
-        forward_one(model, &w, packed, row, alpha, mca_ctx.as_deref(), cfg, intra)
+        forward_one(model, &w, packed, row, alpha, mca_ctx.as_deref(), cfg, intra, None)
     });
 
     let ncl = model.n_classes;
@@ -667,6 +751,275 @@ pub(crate) fn forward_batch_packed(
         out.n_eff.push(n_eff);
     }
     Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Incremental decode: prefill once, then per-token KV-cache steps
+// ---------------------------------------------------------------------------
+
+/// One layer's KV cache: row-major post-bias K and V rows (`pos` × d),
+/// grown by one row per decode step.
+pub(crate) struct LayerKV {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// Per-sequence autoregressive decode state: the growing per-layer KV
+/// cache plus everything a step reuses unchanged — the unpacked weights,
+/// the per-layer MCA sampling contexts (Eq.-6 distribution + shared
+/// pool), and the validated causal config. Created by [`decode_prefill`],
+/// advanced by [`decode_step`]; prefill-then-N-steps is bit-identical to
+/// the full-sequence causal forward at every `Precision`
+/// (`tests/decode_equivalence.rs`).
+pub struct DecodeState {
+    model: ModelInfo,
+    w: Weights,
+    cfg: ForwardCfg,
+    ctx: Option<Vec<McaLayerCtx>>,
+    layers: Vec<LayerKV>,
+    pos: usize,
+    r_sum: u64,
+}
+
+impl DecodeState {
+    /// Tokens currently in the cache (prompt + decoded so far).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Decode steps left before the cache reaches the model's `max_len`.
+    pub fn remaining(&self) -> usize {
+        self.model.max_len - self.pos
+    }
+
+    /// Cumulative Σ_layers Σ_tokens r_i over prefill plus every step
+    /// taken (0 in exact mode).
+    pub fn r_sum(&self) -> u64 {
+        self.r_sum
+    }
+}
+
+/// Causal prefill for one unpadded prompt: a full-sequence causal forward
+/// (the config's `causal` flag is forced on) that captures each layer's
+/// post-bias K/V rows into a fresh [`DecodeState`]. The returned output
+/// carries the last token's logits — the next-token prediction — plus
+/// the prefill Σr_i and real-token count.
+pub fn decode_prefill(
+    model: &ModelInfo,
+    params: &Params,
+    ids: &[i32],
+    alpha: f32,
+    seed: u32,
+    cfg: &ForwardCfg,
+    threads: usize,
+) -> Result<(DecodeState, ForwardOutput)> {
+    decode_prefill_packed(model, params, None, ids, alpha, seed, cfg, threads)
+}
+
+/// [`decode_prefill`] reusing a prepacked-weight cache entry (the serving
+/// route) — bit-identical to the plain route at every precision.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn decode_prefill_packed(
+    model: &ModelInfo,
+    params: &Params,
+    packed: Option<&PackedWeights>,
+    ids: &[i32],
+    alpha: f32,
+    seed: u32,
+    cfg: &ForwardCfg,
+    threads: usize,
+) -> Result<(DecodeState, ForwardOutput)> {
+    if ids.is_empty() {
+        bail!("decode prefill needs a non-empty prompt");
+    }
+    if ids.len() > model.max_len {
+        bail!(
+            "prompt length {} exceeds model {} max_len {}",
+            ids.len(),
+            model.name,
+            model.max_len
+        );
+    }
+    if ids.contains(&PAD_ID) {
+        bail!("decode prompts must be unpadded (PAD inside prompt)");
+    }
+    if let Some(p) = packed {
+        if p.prec != cfg.prec {
+            bail!("prepacked weights are {} but the request wants {}", p.prec, cfg.prec);
+        }
+    }
+    let mut cfg = cfg.clone();
+    cfg.causal = true;
+    let w = Weights::unpack(model, params)?;
+    let ctx = match cfg.mode {
+        AttnMode::Mca => Some(mca_contexts(&w, &cfg, seed, packed.is_none())),
+        AttnMode::Exact => None,
+    };
+    let mut kv = Vec::with_capacity(model.n_layers);
+    let (logits, r_sum, n_eff) =
+        forward_one(model, &w, packed, ids, alpha, ctx.as_deref(), &cfg, threads, Some(&mut kv));
+    let out = ForwardOutput {
+        logits,
+        n_classes: model.n_classes,
+        r_sum: vec![r_sum],
+        n_eff: vec![n_eff],
+    };
+    let state = DecodeState {
+        model: model.clone(),
+        w,
+        cfg,
+        ctx,
+        layers: kv,
+        pos: ids.len(),
+        r_sum: r_sum as u64,
+    };
+    Ok((state, out))
+}
+
+/// Advance one decode step: embed `token` at the next position, attend
+/// causally over the cached K/V rows plus the new one, append the new
+/// K/V rows, and return the next-token logits. MCA value encoding gives
+/// the new row an Eq.-9 budget from its diagonal attention weight (the
+/// causally-computable importance); `force_exact` clamps the budget to d
+/// — the saturated exact-fallback path, which is what the controller's
+/// periodic exact-refresh actuator drives. The output's `r_sum`/`n_eff`
+/// report *cumulative* totals, so the final step of a sequence carries
+/// its complete FLOPs accounting.
+pub fn decode_step(
+    state: &mut DecodeState,
+    token: i32,
+    alpha: f32,
+    force_exact: bool,
+    threads: usize,
+) -> Result<ForwardOutput> {
+    decode_step_packed(state, None, token, alpha, force_exact, threads)
+}
+
+/// [`decode_step`] reusing a prepacked-weight cache entry (the serving
+/// route) — bit-identical to the plain route at every precision.
+pub(crate) fn decode_step_packed(
+    state: &mut DecodeState,
+    packed: Option<&PackedWeights>,
+    token: i32,
+    alpha: f32,
+    force_exact: bool,
+    threads: usize,
+) -> Result<ForwardOutput> {
+    let d = state.model.d_model;
+    let h = state.model.n_heads;
+    let dh = d / h;
+    if state.pos >= state.model.max_len {
+        bail!("KV cache full: position {} at model max_len {}", state.pos, state.model.max_len);
+    }
+    if token == PAD_ID {
+        bail!("cannot decode a PAD token");
+    }
+    if let Some(p) = packed {
+        if p.prec != state.cfg.prec {
+            bail!(
+                "prepacked weights are {} but the decode session is {}",
+                p.prec,
+                state.cfg.prec
+            );
+        }
+    }
+    let j = state.pos;
+    let t1 = j + 1;
+    let prec = state.cfg.prec;
+    let window = state.model.window;
+    let w = &state.w;
+
+    // Embed the single new row at absolute position j (same clamp as
+    // the batch `embed`; PAD was rejected above, so the row is real).
+    let tok = (token.max(0) as usize).min(state.model.vocab - 1);
+    let mut xd = vec![0.0f32; d];
+    let e = w.embed.row(tok);
+    let p = w.pos.row(j);
+    for c in 0..d {
+        xd[c] = e[c] + p[c];
+    }
+    let mut x = Tensor::new(&[1, d], xd).expect("step row");
+
+    let mask = vec![true; t1];
+    let inv = 1.0 / (dh as f32).sqrt();
+    for (li, lw) in w.layers.iter().enumerate() {
+        let pl = packed.map(|pk| &pk.layers[li]);
+        let xn = layer_norm(&x, &lw.ln1_scale, &lw.ln1_bias);
+        let q = mm_bias(&xn, wref(&lw.wq, pl.map(|pk| &pk.wq)), &lw.bq, prec, threads);
+        let k_new = mm_bias(&xn, wref(&lw.wk, pl.map(|pk| &pk.wk)), &lw.bk, prec, threads);
+        state.layers[li].k.extend_from_slice(k_new.row(0));
+        let kc = Tensor::new(&[t1, d], state.layers[li].k.clone()).expect("k cache");
+
+        // The new token is query row j of the virtual full sequence; the
+        // 1-row score matrix evaluates the same visibility predicate.
+        let allowed = |_q: usize, ki: usize| causal_allowed(&mask, window, j, ki);
+        let mut attn = Vec::with_capacity(h);
+        for hh in 0..h {
+            let qh = q.col_block(hh * dh, dh);
+            let kh = kc.col_block(hh * dh, dh);
+            let probs = kernel::attn_scores_softmax(&qh, &kh, inv, NEG_BIAS, &allowed, threads)
+                .expect("head shapes match");
+            attn.push(probs);
+        }
+
+        // Value-encode the new row only (cached V rows are final).
+        let mut v_new = match (state.cfg.mode, state.ctx.as_ref()) {
+            (AttnMode::Mca, Some(ctxs)) => {
+                let imp = attn.iter().map(|hd| hd.at(&[0, j]) as f64).fold(0.0, f64::max);
+                let r_i = if force_exact { d } else { causal_budget(t1, imp, alpha as f64, d) };
+                state.r_sum += r_i as u64;
+                let ctx = &ctxs[li];
+                let r = vec![r_i];
+                let vrows = pl.and_then(|pk| pk.vrows.as_ref()).or(ctx.rows.as_ref());
+                let mut est = match vrows {
+                    Some(rows) => {
+                        mca::mca_encode_pooled_quant(&xn, rows, &r, &ctx.probs, &ctx.pool)
+                    }
+                    None => mca::mca_encode_pooled(&xn, &lw.wv, &r, &ctx.probs, &ctx.pool),
+                };
+                // Same bf16 saturated-row contract as `forward_one`: the
+                // exact fallback takes the rounded product.
+                if prec == Precision::Bf16 && r_i >= d {
+                    let xnb = xn.to_bf16();
+                    let wvb = lw.wv.to_bf16();
+                    let o_row = est.row_mut(0);
+                    o_row.fill(0.0);
+                    tensor::accumulate_row_product(xnb.row(0), &wvb, o_row);
+                }
+                est
+            }
+            _ => mm(&xn, wref(&lw.wv, pl.map(|pk| &pk.wv)), prec, threads),
+        };
+        v_new.add_row_inplace(&lw.bv);
+        state.layers[li].v.extend_from_slice(v_new.row(0));
+        let vc = Tensor::new(&[t1, d], state.layers[li].v.clone()).expect("v cache");
+
+        let mut ctx_m = Tensor::zeros(&[1, d]);
+        for hh in 0..h {
+            let vh = vc.col_block(hh * dh, dh);
+            let ch = kernel::matmul(&attn[hh], &vh, threads).expect("attn @ v_h");
+            ctx_m.add_col_block(hh * dh, &ch);
+        }
+        let proj = mm_bias(&ctx_m, wref(&lw.wo, pl.map(|pk| &pk.wo)), &lw.bo, prec, threads);
+        x.add_inplace(&proj);
+
+        let xn2 = layer_norm(&x, &lw.ln2_scale, &lw.ln2_bias);
+        let hmid =
+            mm_bias_gelu(&xn2, wref(&lw.w1, pl.map(|pk| &pk.w1)), &lw.b1, prec, threads);
+        let ff = mm_bias(&hmid, wref(&lw.w2, pl.map(|pk| &pk.w2)), &lw.b2, prec, threads);
+        x.add_inplace(&ff);
+    }
+
+    let xf = layer_norm(&x, &w.lnf_scale, &w.lnf_bias);
+    let head = wref(&w.head_w, packed.map(|pk| &pk.head_w));
+    let logits = mm_bias(&xf, head, &w.head_b, prec, 1);
+    state.pos += 1;
+    Ok(ForwardOutput {
+        logits: logits.into_data(),
+        n_classes: state.model.n_classes,
+        r_sum: vec![state.r_sum as f32],
+        n_eff: vec![state.pos as f32],
+    })
 }
 
 #[cfg(test)]
@@ -765,7 +1118,7 @@ mod tests {
         let (x, _) = embed(&m, &w, &[1, 5, 6, 7, 8, 2]);
         let xn = layer_norm(&x, &w.layers[0].ln1_scale, &w.layers[0].ln1_bias);
         let (attn, _, _) =
-            attention_probs(&xn, &w.layers[0], None, &mask, m.window, 2, Precision::F32, 1);
+            attention_probs(&xn, &w.layers[0], None, &mask, m.window, false, 2, Precision::F32, 1);
         for head in &attn {
             // query 3 cannot see key 5 (|3-5| > 1, neither is CLS)
             assert!(head.at(&[3, 5]) < 1e-6);
@@ -843,5 +1196,109 @@ mod tests {
         // identical rows + shared pool => identical outputs
         assert_eq!(&o.logits[..3], &o.logits[3..]);
         assert_eq!(o.r_sum[0], o.r_sum[1]);
+    }
+
+    #[test]
+    fn causal_attention_hides_the_future() {
+        let (m, p) = tiny_params(8);
+        let mask = vec![true; 6];
+        let w = Weights::unpack(&m, &p).unwrap();
+        let (x, _) = embed(&m, &w, &[1, 5, 6, 7, 8, 2]);
+        let xn = layer_norm(&x, &w.layers[0].ln1_scale, &w.layers[0].ln1_bias);
+        let (attn, _, _) =
+            attention_probs(&xn, &w.layers[0], None, &mask, None, true, 2, Precision::F32, 1);
+        for head in &attn {
+            for qi in 0..6 {
+                for ki in 0..6 {
+                    if ki > qi {
+                        assert!(head.at(&[qi, ki]).abs() < 1e-12, "future leak {qi}->{ki}");
+                    }
+                }
+                let s: f32 = head.row(qi).iter().sum();
+                assert!((s - 1.0).abs() < 1e-4, "row {qi} not a distribution");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_steps_match_full_causal_forward_every_precision() {
+        // The tentpole contract: prefill + N decode steps reproduce the
+        // full-sequence causal forward bit-for-bit at every precision, in
+        // exact mode and at a real (unsaturated) MCA α, through both the
+        // plain and the prepacked-weight routes.
+        let (m, p) = tiny_params(9);
+        let ids = [1i32, 5, 6, 7, 8, 2];
+        for dtype in ["f32", "bf16", "int8"] {
+            for (mode, alpha) in [("exact", 1.0f32), ("mca", 0.4), ("mca", 1e-3)] {
+                let mut cfg = ForwardCfg::parse(mode, "max", "norm", dtype).unwrap();
+                cfg.causal = true;
+                let full = forward_batch(&m, &p, &ids, 1, 6, alpha, 3, &cfg, 1).unwrap();
+                for use_packed in [false, true] {
+                    let packed = if use_packed {
+                        Some(PackedWeights::build(&m, &p, cfg.prec).unwrap())
+                    } else {
+                        None
+                    };
+                    let (mut st, pre) = decode_prefill_packed(
+                        &m, &p, packed.as_ref(), &ids[..3], alpha, 3, &cfg, 1,
+                    )
+                    .unwrap();
+                    assert_eq!(pre.logits.len(), 3);
+                    let mut last = None;
+                    for &t in &ids[3..] {
+                        last = Some(
+                            decode_step_packed(&mut st, packed.as_ref(), t, alpha, false, 1)
+                                .unwrap(),
+                        );
+                    }
+                    let out = last.unwrap();
+                    assert_eq!(
+                        out.logits, full.logits,
+                        "{dtype}/{mode}/α={alpha}/packed={use_packed} decode diverged"
+                    );
+                    assert_eq!(
+                        out.r_sum, full.r_sum,
+                        "{dtype}/{mode}/α={alpha}/packed={use_packed} r accounting diverged"
+                    );
+                    assert_eq!(out.n_eff, vec![6.0]);
+                    assert_eq!(st.pos(), 6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_exact_refresh_saturates_the_step_budget() {
+        let (m, p) = tiny_params(10);
+        let cfg = ForwardCfg::parse("mca", "max", "norm", "f32").unwrap();
+        let (mut st, _) = decode_prefill(&m, &p, &[1, 5, 6], 0.4, 1, &cfg, 1).unwrap();
+        let before = st.r_sum();
+        decode_step(&mut st, 7, 0.4, true, 1).unwrap();
+        // force_exact charges the full d per layer for the new token
+        assert_eq!(st.r_sum(), before + (m.n_layers * m.d_model) as u64);
+        // ... and a forced-exact step at tiny α equals the plain step at
+        // tiny α (both saturate to the exact fallback).
+        let (mut a, _) = decode_prefill(&m, &p, &[1, 5, 6], 1e-3, 2, &cfg, 1).unwrap();
+        let (mut b, _) = decode_prefill(&m, &p, &[1, 5, 6], 1e-3, 2, &cfg, 1).unwrap();
+        let oa = decode_step(&mut a, 7, 1e-3, false, 1).unwrap();
+        let ob = decode_step(&mut b, 7, 1e-3, true, 1).unwrap();
+        assert_eq!(oa.logits, ob.logits);
+    }
+
+    #[test]
+    fn decode_guards_reject_bad_inputs() {
+        let (m, p) = tiny_params(11);
+        let cfg = ForwardCfg::parse("exact", "max", "norm", "f32").unwrap();
+        assert!(decode_prefill(&m, &p, &[], 1.0, 0, &cfg, 1).is_err());
+        assert!(decode_prefill(&m, &p, &[1, 0, 2], 1.0, 0, &cfg, 1).is_err());
+        assert!(decode_prefill(&m, &p, &[1; 7], 1.0, 0, &cfg, 1).is_err());
+        let (mut st, _) = decode_prefill(&m, &p, &[1, 5, 6, 7, 8], 1.0, 0, &cfg, 1).unwrap();
+        assert!(decode_step(&mut st, 0, 1.0, false, 1).is_err()); // PAD
+        assert_eq!(st.remaining(), 1);
+        decode_step(&mut st, 2, 1.0, false, 1).unwrap();
+        assert!(decode_step(&mut st, 2, 1.0, false, 1).is_err()); // cache full
+        // precision mismatch between session and prepacked cache
+        let packed = PackedWeights::build(&m, &p, Precision::Int8).unwrap();
+        assert!(decode_prefill_packed(&m, &p, Some(&packed), &[1, 5], 1.0, 0, &cfg, 1).is_err());
     }
 }

@@ -176,7 +176,7 @@ fn example_loss_grad(
     for lw in &w.layers {
         let (xn, mu1, istd1) = layer_norm_stats(&x, &lw.ln1_scale, &lw.ln1_bias);
         let (attn, q, k) =
-            attention_probs(&xn, lw, None, &mask, model.window, h, Precision::F32, 1);
+            attention_probs(&xn, lw, None, &mask, model.window, false, h, Precision::F32, 1);
         let mut v = mm(&xn, WeightRef::Plain(&lw.wv), Precision::F32, 1);
         v.add_row_inplace(&lw.bv);
         let mut ctx_m = Tensor::zeros(&[n, d]);

@@ -61,10 +61,15 @@ pub struct ForwardSpec {
     /// dtypes run on the kernel's bf16/int8 GEMM paths with prepacked
     /// per-checkpoint weights on the native backend
     pub compute_dtype: String,
+    /// causal (autoregressive LM) attention: queries see only earlier
+    /// keys and the head reads the last real token. The full-sequence
+    /// twin of the incremental decode path (`decode_prefill`/
+    /// `decode_step`); encoder classification uses `false`.
+    pub causal: bool,
 }
 
 impl ForwardSpec {
-    /// Paper-default spec (max pooling, norm sampling, f32).
+    /// Paper-default spec (max pooling, norm sampling, f32, encoder).
     pub fn new(model: &str, mode: &str, batch: usize, seq: usize) -> ForwardSpec {
         ForwardSpec {
             model: model.to_string(),
@@ -74,6 +79,7 @@ impl ForwardSpec {
             r_strategy: "max".to_string(),
             p_strategy: "norm".to_string(),
             compute_dtype: "f32".to_string(),
+            causal: false,
         }
     }
 }
@@ -250,6 +256,46 @@ pub trait Backend {
     /// (DESIGN.md §4 parity contract).
     fn model_stats(&self, model: &str, params: &Params) -> Result<ModelStats> {
         compute_model_stats(&self.model(model)?, params)
+    }
+
+    /// Open an autoregressive decode session: run the causal prefill over
+    /// one *unpadded* prompt, cache every layer's K/V rows, and return an
+    /// opaque session id plus the prefill output (last-token logits —
+    /// the first next-token prediction). The session pins the checkpoint
+    /// as of prefill; `spec.batch`/`spec.seq` are ignored. Backends
+    /// without a decode path (PJRT) report an error.
+    fn decode_prefill(
+        &mut self,
+        spec: &ForwardSpec,
+        params: &Params,
+        prompt: &[i32],
+        alpha: f32,
+        seed: u32,
+    ) -> Result<(u64, ForwardOutput)> {
+        let _ = (spec, params, prompt, alpha, seed);
+        bail!("backend {} has no decode path", self.platform())
+    }
+
+    /// Advance a decode session by one token: causal attention over the
+    /// cached K/V plus the new row, appending to the cache. `alpha` is
+    /// this step's MCA precision (the per-step adaptive knob);
+    /// `exact_refresh` forces the step's Eq.-9 budget to d — the
+    /// saturated exact-fallback path the drift controller schedules.
+    /// The output's `r_sum`/`n_eff` are cumulative over the session.
+    fn decode_step(
+        &mut self,
+        session: u64,
+        token: i32,
+        alpha: f32,
+        exact_refresh: bool,
+    ) -> Result<ForwardOutput> {
+        let _ = (session, token, alpha, exact_refresh);
+        bail!("backend {} has no decode path", self.platform())
+    }
+
+    /// Drop a decode session's KV cache. Unknown ids are a no-op.
+    fn decode_finish(&mut self, session: u64) {
+        let _ = session;
     }
 
     /// (batch, seq) shape this backend trains the model at.

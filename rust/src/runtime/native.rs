@@ -19,7 +19,10 @@ use anyhow::{bail, Context, Result};
 
 use super::{Backend, ForwardOutput, ForwardSpec, HostValue, ModelInfo, TrainState};
 use crate::data::TaskKind;
-use crate::model::forward::{forward_batch_packed, ForwardCfg, PackedWeights};
+use crate::model::forward::{
+    decode_prefill_packed, decode_step_packed, forward_batch_packed, DecodeState, ForwardCfg,
+    PackedWeights,
+};
 use crate::model::{builtin_models, grad, Params};
 use crate::tensor::Precision;
 use crate::util::threadpool;
@@ -55,6 +58,16 @@ fn params_fingerprint(params: &Params) -> u64 {
     h
 }
 
+/// One live autoregressive decode session: the per-layer KV cache plus
+/// the (model, precision) key that pins which prepacked weights the
+/// session was prefilled against. Sessions are created by
+/// [`Backend::decode_prefill`] and dropped by [`Backend::decode_finish`].
+struct DecodeSession {
+    model: String,
+    prec: Precision,
+    state: DecodeState,
+}
+
 /// The pure-Rust execution backend (see module docs).
 pub struct NativeBackend {
     models: BTreeMap<String, ModelInfo>,
@@ -62,6 +75,10 @@ pub struct NativeBackend {
     /// per-(model, precision) prepacked weights: packed once per loaded
     /// checkpoint, reused by every steady-state forward (DESIGN.md §3)
     packs: BTreeMap<(String, Precision), PackRecord>,
+    /// live autoregressive decode sessions, keyed by the id handed out
+    /// at prefill time
+    sessions: BTreeMap<u64, DecodeSession>,
+    next_session: u64,
 }
 
 impl NativeBackend {
@@ -76,7 +93,13 @@ impl NativeBackend {
     /// pool workers.
     pub fn with_workers(workers: usize) -> NativeBackend {
         let models = builtin_models().into_iter().map(|m| (m.name.clone(), m)).collect();
-        NativeBackend { models, workers: workers.max(1), packs: BTreeMap::new() }
+        NativeBackend {
+            models,
+            workers: workers.max(1),
+            packs: BTreeMap::new(),
+            sessions: BTreeMap::new(),
+            next_session: 0,
+        }
     }
 
     /// Return the cached prepacked weights for `(model, prec)`, packing
@@ -153,8 +176,9 @@ impl Backend for NativeBackend {
         seed: u32,
     ) -> Result<ForwardOutput> {
         let info = self.model(&spec.model)?;
-        let cfg =
+        let mut cfg =
             ForwardCfg::parse(&spec.mode, &spec.r_strategy, &spec.p_strategy, &spec.compute_dtype)?;
+        cfg.causal = spec.causal;
         if ids.shape() != &[spec.batch, spec.seq][..] {
             bail!(
                 "ids shape {:?} != spec batch/seq ({}, {})",
@@ -177,6 +201,51 @@ impl Backend for NativeBackend {
             &cfg,
             workers,
         )
+    }
+
+    fn decode_prefill(
+        &mut self,
+        spec: &ForwardSpec,
+        params: &Params,
+        prompt: &[i32],
+        alpha: f32,
+        seed: u32,
+    ) -> Result<(u64, ForwardOutput)> {
+        let info = self.model(&spec.model)?;
+        let cfg =
+            ForwardCfg::parse(&spec.mode, &spec.r_strategy, &spec.p_strategy, &spec.compute_dtype)?;
+        let workers = self.workers;
+        let prec = cfg.prec;
+        let packed = self.ensure_packed(&info, params, prec)?;
+        let (state, out) =
+            decode_prefill_packed(&info, params, Some(packed), prompt, alpha, seed, &cfg, workers)?;
+        let id = self.next_session;
+        self.next_session += 1;
+        self.sessions.insert(id, DecodeSession { model: spec.model.clone(), prec, state });
+        Ok((id, out))
+    }
+
+    fn decode_step(
+        &mut self,
+        session: u64,
+        token: i32,
+        alpha: f32,
+        exact_refresh: bool,
+    ) -> Result<ForwardOutput> {
+        let workers = self.workers;
+        let sess = self
+            .sessions
+            .get_mut(&session)
+            .with_context(|| format!("unknown decode session {session}"))?;
+        // Disjoint field borrows: the packed panels are read-only while the
+        // session's KV cache mutates. The pack entry is guaranteed present —
+        // prefill created it and nothing evicts between steps.
+        let packed = self.packs.get(&(sess.model.clone(), sess.prec)).map(|r| &r.packed);
+        decode_step_packed(&mut sess.state, packed, token, alpha, exact_refresh, workers)
+    }
+
+    fn decode_finish(&mut self, session: u64) {
+        self.sessions.remove(&session);
     }
 
     fn train_shape(&self, model: &str, _kind: TaskKind) -> Result<(usize, usize)> {
@@ -282,6 +351,46 @@ mod tests {
         let spec = ForwardSpec::new("bert_sim", "exact", 2, 8);
         let hv = HostValue::I32 { shape: vec![1, 8], data: vec![1; 8] };
         assert!(be.forward(&spec, &params, &hv, 1.0, 0).is_err());
+    }
+
+    #[test]
+    fn decode_sessions_match_the_full_causal_forward() {
+        let mut be = NativeBackend::with_workers(2);
+        let info = be.model("distil_sim").unwrap();
+        let params = Params::init(&info, &mut Pcg64::new(11));
+        let ids = [1i32, 21, 22, 23, 24, 2];
+        for dtype in ["f32", "bf16", "int8"] {
+            let mut spec = ForwardSpec::new("distil_sim", "mca", 1, ids.len());
+            spec.compute_dtype = dtype.into();
+            spec.causal = true;
+            let hv = HostValue::I32 { shape: vec![1, ids.len()], data: ids.to_vec() };
+            let full = be.forward(&spec, &params, &hv, 0.4, 3).unwrap();
+
+            let (id, _prefill) = be.decode_prefill(&spec, &params, &ids[..3], 0.4, 3).unwrap();
+            let mut last = None;
+            for &t in &ids[3..] {
+                last = Some(be.decode_step(id, t, 0.4, false).unwrap());
+            }
+            let out = last.unwrap();
+            assert_eq!(out.logits, full.logits, "{dtype} decode diverged from causal forward");
+            assert_eq!(out.r_sum, full.r_sum, "{dtype} budget accounting diverged");
+            be.decode_finish(id);
+            assert!(be.decode_step(id, 5, 0.4, false).is_err(), "finished session still live");
+        }
+    }
+
+    #[test]
+    fn decode_rejects_unknown_sessions_and_bad_specs() {
+        let mut be = NativeBackend::with_workers(1);
+        assert!(be.decode_step(99, 5, 0.4, false).is_err());
+        be.decode_finish(99); // unknown id is a no-op
+        let info = be.model("distil_sim").unwrap();
+        let params = Params::init(&info, &mut Pcg64::new(2));
+        let mut spec = ForwardSpec::new("distil_sim", "mca", 1, 4);
+        spec.compute_dtype = "fp64".into();
+        assert!(be.decode_prefill(&spec, &params, &[1, 5, 2], 0.4, 0).is_err());
+        let spec = ForwardSpec::new("no_such_model", "mca", 1, 4);
+        assert!(be.decode_prefill(&spec, &params, &[1, 5, 2], 0.4, 0).is_err());
     }
 
     #[test]

@@ -124,6 +124,9 @@ impl Runtime {
     /// that is the only lowering built for the shape (the kernel is an
     /// implementation detail below the backend seam).
     fn forward_artifact_for(&self, spec: &ForwardSpec, ignore_batch: bool) -> Result<ArtifactInfo> {
+        if spec.causal {
+            bail!("the PJRT artifact inventory has no causal (LM) forwards — use the native backend");
+        }
         self.manifest
             .artifacts
             .values()

@@ -1,0 +1,137 @@
+//! Decode-path equivalence through the `runtime::Backend` seam: the
+//! incremental KV-cache decode (prefill + per-token steps) must reproduce
+//! the full-sequence causal forward **bit-for-bit** — at every prefix, at
+//! every compute precision, and for windowed (longformer) attention with
+//! the cache grown all the way to the model's max_len (256, the kernels'
+//! KC contraction block). This is the contract that makes continuous
+//! batching safe: a sequence's logits cannot depend on when it joined or
+//! left the batch, only on its own token prefix.
+
+use mca::model::Params;
+use mca::rng::Pcg64;
+use mca::runtime::{open_backend, Backend, BackendSpec, ForwardOutput, ForwardSpec, HostValue};
+
+fn causal_spec(model: &str, dtype: &str, seq: usize) -> ForwardSpec {
+    let mut spec = ForwardSpec::new(model, "mca", 1, seq);
+    spec.compute_dtype = dtype.to_string();
+    spec.causal = true;
+    spec
+}
+
+/// Full-sequence causal forward over an unpadded prompt.
+fn full_causal(
+    be: &mut Box<dyn Backend>,
+    model: &str,
+    dtype: &str,
+    params: &Params,
+    ids: &[i32],
+    alpha: f32,
+    seed: u32,
+) -> ForwardOutput {
+    let spec = causal_spec(model, dtype, ids.len());
+    let hv = HostValue::I32 { shape: vec![1, ids.len()], data: ids.to_vec() };
+    be.forward(&spec, params, &hv, alpha, seed).unwrap()
+}
+
+/// ‖a−b‖₂ / ‖b‖₂ (0 when b is all-zero, which random init never is).
+fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    let diff: f64 = a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+    let norm: f64 = b.iter().map(|y| (*y as f64).powi(2)).sum();
+    if norm == 0.0 {
+        0.0
+    } else {
+        (diff / norm).sqrt()
+    }
+}
+
+#[test]
+fn decode_steps_match_the_full_causal_forward_at_every_prefix() {
+    let mut be = open_backend(&BackendSpec::Native).unwrap();
+    let info = be.model("distil_sim").unwrap();
+    let params = Params::init(&info, &mut Pcg64::new(31));
+    let ids: Vec<i32> = vec![1, 9, 10, 17, 25, 12, 30, 11, 19, 2];
+    let prefill_len = 4usize;
+    let alpha = 0.4f32;
+    let seed = 3u32;
+
+    let spec = causal_spec("distil_sim", "f32", ids.len());
+    let (sid, prefill) =
+        be.decode_prefill(&spec, &params, &ids[..prefill_len], alpha, seed).unwrap();
+    // The prefill output IS the causal forward over the prompt.
+    let full =
+        full_causal(&mut be, "distil_sim", "f32", &params, &ids[..prefill_len], alpha, seed);
+    assert_eq!(prefill.logits, full.logits, "prefill diverged from the causal forward");
+    assert_eq!(prefill.r_sum, full.r_sum);
+    assert_eq!(prefill.n_eff, full.n_eff);
+
+    // Every step must equal the causal forward over exactly its prefix:
+    // causal masking means row k depends only on tokens ≤ k, and the
+    // prefix rule gives both paths the same Eq.-9 budgets.
+    for k in prefill_len..ids.len() {
+        let out = be.decode_step(sid, ids[k], alpha, false).unwrap();
+        let full = full_causal(&mut be, "distil_sim", "f32", &params, &ids[..=k], alpha, seed);
+        assert_eq!(out.logits, full.logits, "step {k} logits diverged");
+        assert_eq!(out.r_sum, full.r_sum, "step {k} cumulative budget diverged");
+        assert_eq!(out.n_eff, vec![(k + 1) as f32], "step {k} n_eff");
+    }
+    be.decode_finish(sid);
+    assert!(be.decode_step(sid, 5, alpha, false).is_err(), "finished session still live");
+}
+
+#[test]
+fn quantized_decode_matches_its_own_full_forward_and_stays_near_f32() {
+    let mut be = open_backend(&BackendSpec::Native).unwrap();
+    let info = be.model("distil_sim").unwrap();
+    let params = Params::init(&info, &mut Pcg64::new(32));
+    let ids: Vec<i32> = vec![1, 20, 21, 22, 23, 24, 25, 2];
+    let alpha = 0.4f32;
+    let f32_full = full_causal(&mut be, "distil_sim", "f32", &params, &ids, alpha, 5);
+    for dtype in ["bf16", "int8"] {
+        let spec = causal_spec("distil_sim", dtype, ids.len());
+        let (sid, _) = be.decode_prefill(&spec, &params, &ids[..2], alpha, 5).unwrap();
+        let mut last = None;
+        for &t in &ids[2..] {
+            last = Some(be.decode_step(sid, t, alpha, false).unwrap());
+        }
+        be.decode_finish(sid);
+        let out = last.unwrap();
+        // Bit-identical to the same-precision full causal forward...
+        let full = full_causal(&mut be, "distil_sim", dtype, &params, &ids, alpha, 5);
+        assert_eq!(out.logits, full.logits, "{dtype} decode != {dtype} causal forward");
+        assert_eq!(out.r_sum, full.r_sum, "{dtype} budget accounting diverged");
+        // ...and inside a coarse envelope of the f32 reference (the
+        // quantized GEMM paths round, they don't wander).
+        assert!(out.logits.iter().all(|x| x.is_finite()), "{dtype} logits not finite");
+        let rel = rel_l2(&out.logits, &f32_full.logits);
+        assert!(rel < 0.5, "{dtype} drifted rel-L2 {rel} from the f32 forward");
+    }
+}
+
+#[test]
+fn longformer_cache_grows_to_max_len_across_the_kc_block() {
+    let mut be = open_backend(&BackendSpec::Native).unwrap();
+    let info = be.model("longformer_sim").unwrap();
+    assert_eq!(info.max_len, 256, "KC-boundary test assumes max_len 256");
+    let params = Params::init(&info, &mut Pcg64::new(33));
+    let mut ids = vec![1i32];
+    let mut rng = Pcg64::new(99);
+    while ids.len() < info.max_len {
+        ids.push(rng.gen_range(3, 250) as i32); // deterministic, PAD-free
+    }
+    let alpha = 0.6f32;
+    let prompt = 8usize;
+    let spec = causal_spec("longformer_sim", "f32", ids.len());
+    let (sid, _) = be.decode_prefill(&spec, &params, &ids[..prompt], alpha, 7).unwrap();
+    let mut last = None;
+    for &t in &ids[prompt..] {
+        last = Some(be.decode_step(sid, t, alpha, false).unwrap());
+    }
+    // The cache is now exactly full: one more step must fail cleanly.
+    assert!(be.decode_step(sid, 5, alpha, false).is_err(), "cache overran max_len");
+    be.decode_finish(sid);
+    let out = last.unwrap();
+    let full = full_causal(&mut be, "longformer_sim", "f32", &params, &ids, alpha, 7);
+    assert_eq!(out.logits, full.logits, "windowed decode diverged at max_len");
+    assert_eq!(out.r_sum, full.r_sum);
+    assert_eq!(out.n_eff, vec![256.0]);
+}

@@ -1,0 +1,142 @@
+//! Serving-level decode tests: autoregressive KV-cache sessions riding
+//! the native worker pool's **token-level continuous batching**. Ragged
+//! generation lengths force sequences to join and leave the running batch
+//! at different steps; every request must still get exactly one response,
+//! with a per-token latency trace and honest decode accounting in the
+//! server stats.
+
+mod common;
+
+use std::collections::HashSet;
+use std::time::Duration;
+
+use mca::coordinator::{Server, ServerConfig};
+use mca::runtime::BackendSpec;
+use mca::tensor::Precision;
+
+fn config(ckpt: std::path::PathBuf, workers: usize) -> ServerConfig {
+    ServerConfig {
+        model: "distil_sim".into(),
+        checkpoint: ckpt,
+        max_wait: Duration::from_millis(2),
+        seq: 32,
+        workers,
+        queue_cap: 4096,
+        ..ServerConfig::default()
+    }
+}
+
+#[test]
+fn ragged_decode_sessions_batch_continuously_across_two_workers() {
+    let backend = BackendSpec::Native;
+    let (ckpt, _) = common::make_checkpoint(&backend, "distil_sim", "decode_ragged");
+    let server = Server::start(backend, config(ckpt, 2)).expect("server start");
+
+    // Ragged lengths: sessions retire from the continuous batch at
+    // different rounds, so the pool exercises token-level join/leave.
+    let lens = [1usize, 7, 2, 6, 3, 5, 4, 8];
+    let mut rxs = Vec::new();
+    for (i, &n) in lens.iter().enumerate() {
+        rxs.push((
+            i,
+            n,
+            server.submit_decode("n0 v1 n2", 0.4, "mca", Precision::F32, n),
+        ));
+    }
+
+    let mut ids = HashSet::new();
+    let mut max_overlap = 0usize;
+    for (i, want, rx) in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        assert!(!resp.shed, "decode request {i} shed below the cap");
+        assert!(ids.insert(resp.id), "duplicate response id {}", resp.id);
+        // seq=32 leaves room for every requested length: the session
+        // generates exactly what it asked for.
+        assert_eq!(resp.decode_tokens, want, "request {i} token count");
+        assert_eq!(resp.token_ms.len(), want, "request {i} latency trace length");
+        assert!(resp.token_ms.iter().all(|&ms| ms > 0.0), "request {i} zero-latency step");
+        assert_eq!(resp.logits.len(), 3, "request {i} final-step logits");
+        assert!((0..3).contains(&resp.pred_class), "request {i}");
+        assert!(resp.r_sum > 0.0, "request {i} lost its budget accounting");
+        // batch_size reports the max concurrent live sessions this
+        // sequence ever shared a worker with.
+        max_overlap = max_overlap.max(resp.batch_size);
+    }
+    assert_eq!(ids.len(), lens.len(), "exactly one response per request");
+    assert!(
+        max_overlap >= 2,
+        "no session ever overlapped another: continuous batching did not happen"
+    );
+
+    let stats = server.stats().expect("stats");
+    assert_eq!(stats.decode_requests, lens.len());
+    assert_eq!(stats.decode_tokens, lens.iter().sum::<usize>());
+    assert!(stats.token_p50_ms > 0.0);
+    assert!(stats.token_p99_ms >= stats.token_p50_ms);
+    assert_eq!(stats.served, lens.len(), "decode sessions count as served");
+    assert_eq!(stats.shed, 0);
+    // least-loaded routing spreads the eight sessions over both workers
+    assert_eq!(stats.workers.len(), 2);
+    assert!(
+        stats.workers.iter().all(|w| w.served >= 1),
+        "a worker sat idle through eight decode sessions: {:?}",
+        stats.workers
+    );
+    server.shutdown().expect("shutdown");
+}
+
+#[test]
+fn decode_and_batch_traffic_share_the_pool() {
+    // Decode sessions and classification batches interleave on the same
+    // workers; both kinds complete and the counters stay disjoint.
+    let backend = BackendSpec::Native;
+    let (ckpt, _) = common::make_checkpoint(&backend, "distil_sim", "decode_mixed");
+    let server = Server::start(backend, config(ckpt, 2)).expect("server start");
+
+    let mut decode_rxs = Vec::new();
+    let mut batch_rxs = Vec::new();
+    for i in 0..6 {
+        decode_rxs.push(server.submit_decode("n1 v2 n3", 0.4, "mca", Precision::F32, 3 + i));
+        batch_rxs.push(server.submit("n0 v1 n2 v3", 0.4, "mca"));
+    }
+    let mut decode_tokens = 0usize;
+    for rx in decode_rxs {
+        let r = rx.recv_timeout(Duration::from_secs(120)).expect("decode response");
+        assert!(!r.shed);
+        assert!(r.decode_tokens >= 3);
+        decode_tokens += r.decode_tokens;
+    }
+    for rx in batch_rxs {
+        let r = rx.recv_timeout(Duration::from_secs(120)).expect("batch response");
+        assert!(!r.shed);
+        assert_eq!(r.decode_tokens, 0, "batch responses carry no decode fields");
+        assert!(r.token_ms.is_empty());
+        assert!(r.pred_class >= 0);
+    }
+    let stats = server.stats().expect("stats");
+    assert_eq!(stats.decode_requests, 6);
+    assert_eq!(stats.decode_tokens, decode_tokens);
+    assert_eq!(stats.served, 12, "six decode sessions + six batch requests");
+    server.shutdown().expect("shutdown");
+}
+
+#[test]
+fn shutdown_drains_live_decode_sessions() {
+    // Shutdown requested while sessions are mid-generation: every session
+    // still delivers its single response before shutdown returns.
+    let backend = BackendSpec::Native;
+    let (ckpt, _) = common::make_checkpoint(&backend, "distil_sim", "decode_drain");
+    let server = Server::start(backend, config(ckpt, 2)).expect("server start");
+    let mut rxs = Vec::new();
+    for _ in 0..4 {
+        rxs.push(server.submit_decode("n2 v2", 0.4, "mca", Precision::F32, 6));
+    }
+    server.shutdown().expect("shutdown drains decode sessions");
+    for rx in rxs {
+        let r = rx
+            .recv_timeout(Duration::from_secs(1))
+            .expect("decode session lost its response in shutdown");
+        assert!(!r.shed);
+        assert_eq!(r.decode_tokens, 6);
+    }
+}

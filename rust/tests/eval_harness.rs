@@ -22,7 +22,12 @@ use mca::train::TrainConfig;
 /// A sweep over one model/three tasks (incl. the 3-class topic head) with
 /// a random (untrained) checkpoint
 /// pre-seeded into the cache, so no training runs in the test.
-fn run_small_sweep(tag: &str, alphas: Vec<f64>, epsilons: Vec<f64>) -> harness::HarnessReport {
+fn run_small_sweep(
+    tag: &str,
+    alphas: Vec<f64>,
+    epsilons: Vec<f64>,
+    precisions: Vec<String>,
+) -> harness::HarnessReport {
     let backend = BackendSpec::Native;
     let model = "distil_sim";
     let root = std::env::temp_dir().join(format!("mca_eval_harness_{tag}"));
@@ -40,7 +45,7 @@ fn run_small_sweep(tag: &str, alphas: Vec<f64>, epsilons: Vec<f64>) -> harness::
         ],
         alphas,
         epsilons,
-        precisions: vec!["f32".to_string()],
+        precisions,
         workers: 2,
         queue_cap: 0, // sized to the dev slice: lockstep passes never shed
         brownout_watermark: 0,
@@ -57,7 +62,7 @@ fn run_small_sweep(tag: &str, alphas: Vec<f64>, epsilons: Vec<f64>) -> harness::
 
 #[test]
 fn sweep_contracts_on_the_native_pool() {
-    let rep = run_small_sweep("main", vec![1e-6, 0.4], vec![1e6]);
+    let rep = run_small_sweep("main", vec![1e-6, 0.4], vec![1e6], vec!["f32".to_string()]);
 
     // Every (task, knob) pair produced a point, nothing was shed, every
     // request completed.
@@ -136,6 +141,48 @@ fn sweep_contracts_on_the_native_pool() {
         harness::bench_eval_from_json(&mca::util::json::Json::parse(&text).unwrap()).unwrap();
     assert_eq!(parsed, rep);
     let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn int8_points_report_the_precision_scaled_reduction() {
+    // Regression (Eq.-9 accounting): `flops_reduction` used to ignore the
+    // compute precision, so an int8 sweep reported the same
+    // FLOPs-equivalents as f32 even though each sampled row costs half.
+    // Pin: at the same α, the int8 point's factor is ≈2× the f32 point's
+    // (not exactly 2× — the quantized attention probabilities can nudge a
+    // few Eq.-9 budgets across an integer boundary).
+    let rep = run_small_sweep(
+        "prec",
+        vec![0.4],
+        vec![],
+        vec!["f32".to_string(), "int8".to_string()],
+    );
+    for task in ["sst2_sim", "paws_sim", "topic_sim"] {
+        let point = |prec: &str| {
+            rep.points
+                .iter()
+                .find(|p| p.task == task && p.knob == Knob::Alpha(0.4) && p.precision == prec)
+                .unwrap_or_else(|| panic!("missing point {task}/{prec}"))
+        };
+        let f32p = point("f32");
+        let int8p = point("int8");
+        assert!(f32p.flops_reduction >= 1.0, "{}", f32p.flops_reduction);
+        let ratio = int8p.flops_reduction / f32p.flops_reduction;
+        assert!(
+            (1.4..2.6).contains(&ratio),
+            "{task}: int8/f32 reduction ratio {ratio} (f32 {}, int8 {})",
+            f32p.flops_reduction,
+            int8p.flops_reduction
+        );
+        // The exact baseline stays the f32 forward: the exact point is
+        // still factor 1 regardless of the sweep's precision axis.
+        let exact = rep
+            .points
+            .iter()
+            .find(|p| p.task == task && p.knob == Knob::Exact)
+            .expect("exact point");
+        assert_eq!(exact.flops_reduction, 1.0);
+    }
 }
 
 #[test]

@@ -13,6 +13,7 @@ use std::time::Duration;
 
 use mca::coordinator::{Server, ServerConfig};
 use mca::runtime::BackendSpec;
+use mca::tensor::Precision;
 
 /// Write a fresh random checkpoint (serving tests don't need accuracy).
 fn make_checkpoint(backend: &BackendSpec, model: &str, tag: &str) -> PathBuf {
@@ -248,6 +249,89 @@ fn shutdown_drains_admitted_requests_and_joins() {
         assert!(ids.insert(r.id), "duplicate response id {}", r.id);
     }
     assert_eq!(ids.len(), total);
+}
+
+#[test]
+fn quantized_stat_counts_only_admitted_requests() {
+    // Regression: the ladder's int8 rung used to count `on_quantized()`
+    // before the final cost re-check, so a quantized-then-shed arrival
+    // inflated the stat. Pin: `stats.quantized` equals the number of
+    // quantized (non-shed) responses actually delivered.
+    let backend = BackendSpec::Native;
+    let ckpt = make_checkpoint(&backend, "distil_sim", "native_quant_count");
+    let mut cfg = config("distil_sim", ckpt, 2, 2);
+    cfg.queue_cap = 1; // cost cap 1.0
+    cfg.brownout_watermark = 100; // ladder enabled; depth never triggers
+    let server = Server::start(backend, cfg).expect("server start");
+    server.pause();
+    let sub = server.submitter();
+    // α=1.0 MCA costs 0.25: admitted outright.
+    let r1 = sub.submit("n0 v1", 1.0, "mca");
+    // α=0.4 costs 1.0: over cap → int8 rung halves it (total 0.75) →
+    // admitted, and this one IS a quantized serve.
+    let r2 = sub.submit("n0 v1", 0.4, "mca");
+    // Same again: even at int8 the total would be 1.25 → shed; the rung
+    // fired but must NOT count.
+    let r3 = sub.submit("n0 v1", 0.4, "mca");
+    server.resume();
+    let a = r1.recv_timeout(Duration::from_secs(120)).expect("response");
+    let b = r2.recv_timeout(Duration::from_secs(120)).expect("response");
+    let c = r3.recv_timeout(Duration::from_secs(120)).expect("response");
+    assert!(!a.shed && !a.quantized);
+    assert!(!b.shed, "laddered request must be admitted");
+    assert!(b.quantized, "laddered request must carry the int8 reroute flag");
+    assert_eq!(b.precision, Precision::Int8);
+    assert!(c.shed, "third arrival exceeds the cap even at int8");
+
+    let stats = server.stats().expect("stats");
+    let delivered_quantized =
+        [&a, &b, &c].iter().filter(|r| !r.shed && r.quantized).count();
+    assert_eq!(
+        stats.quantized, delivered_quantized,
+        "quantized stat must equal quantized responses delivered"
+    );
+    assert_eq!(stats.quantized, 1);
+    assert_eq!(stats.shed, 1);
+    server.shutdown().expect("shutdown");
+}
+
+#[test]
+fn over_cap_arrivals_the_ladder_cannot_help_do_not_flap_brownout() {
+    // Regression: over-cap arrivals used to enter brownout even when no
+    // ladder rung could shrink them (exact requests), flapping the
+    // queue-wide degrade pass once per arrival. Pin the entry count.
+    let backend = BackendSpec::Native;
+    let ckpt = make_checkpoint(&backend, "distil_sim", "native_flap");
+    let mut cfg = config("distil_sim", ckpt, 2, 2);
+    cfg.queue_cap = 1;
+    cfg.brownout_watermark = 100;
+    let server = Server::start(backend, cfg).expect("server start");
+    server.pause();
+    let sub = server.submitter();
+    let first = sub.submit("n0 v1", 1.0, "mca"); // cost 0.25, admitted
+    // Exact arrivals over the cap: no rung applies → shed, no brownout.
+    let mut shed_rxs = Vec::new();
+    for _ in 0..5 {
+        shed_rxs.push(sub.submit("n0 v1", 1.0, "exact")); // cost 1.0 each
+    }
+    {
+        let stats = server.stats().expect("stats");
+        assert_eq!(stats.brownout_entries, 0, "un-laddered arrivals flapped brownout");
+        assert_eq!(stats.shed, 5);
+    }
+    // ...whereas an over-cap arrival the ladder CAN shrink enters once.
+    let laddered = sub.submit("n0 v1", 0.4, "mca"); // 1.0 → int8 0.5: fits
+    server.resume();
+    let f = first.recv_timeout(Duration::from_secs(120)).expect("response");
+    assert!(!f.shed);
+    for rx in shed_rxs {
+        assert!(rx.recv_timeout(Duration::from_secs(120)).expect("response").shed);
+    }
+    let lr = laddered.recv_timeout(Duration::from_secs(120)).expect("response");
+    assert!(!lr.shed && lr.quantized);
+    let stats = server.stats().expect("stats");
+    assert_eq!(stats.brownout_entries, 1, "the reducible arrival enters brownout once");
+    server.shutdown().expect("shutdown");
 }
 
 #[test]

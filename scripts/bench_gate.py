@@ -54,6 +54,11 @@ TOLERANCES = {
     # throughput
     "items_per_s": ("down", 0.45),
     "achieved_rps": ("down", 0.45),
+    # decode serving (the loadtest's seeded decode burst): generated
+    # tokens per second and the inter-token latency quantiles
+    "tokens_per_s": ("down", 0.45),
+    "token_p50_ms": ("up", 0.75),
+    "token_p99_ms": ("up", 0.90),
     # quality / accounting (BENCH_eval.json) — these are seeded-determinism
     # metrics, so the tolerances are tight
     "accuracy": ("down", 0.08),
@@ -250,6 +255,51 @@ def self_test():
     check(n >= 1, "disappeared metric not caught")
     check(any("metric missing" in line for line in report), "metric loss not reported")
 
+    # decode serving entries gate on tokens/s and inter-token latency:
+    # a token-throughput collapse and an inter-token p99 jump must both
+    # be caught, and sub-tolerance decode jitter must pass
+    dbase = {
+        "bench": "serving",
+        "entries": [
+            {
+                "workers": 2,
+                "kind": "decode",
+                "decode_tokens": 160,
+                "tokens_per_s": 4000.0,
+                "token_p50_ms": 0.8,
+                "token_p99_ms": 4.0,
+            }
+        ],
+    }
+
+    def run_serving(fresh_doc, base_doc):
+        with tempfile.TemporaryDirectory() as d:
+            bdir = os.path.join(d, "baselines")
+            os.makedirs(bdir)
+            fp = os.path.join(d, "BENCH_serving.json")
+            with open(fp, "w") as f:
+                json.dump(fresh_doc, f)
+            with open(os.path.join(bdir, "BENCH_serving.json"), "w") as f:
+                json.dump(base_doc, f)
+            report = []
+            return gate_file(fp, bdir, update=False, report=report), report
+
+    slow_decode = copy.deepcopy(dbase)
+    slow_decode["entries"][0]["tokens_per_s"] *= 0.4
+    n, _ = run_serving(slow_decode, dbase)
+    check(n >= 1, "decode token-throughput collapse not caught")
+
+    lag_decode = copy.deepcopy(dbase)
+    lag_decode["entries"][0]["token_p99_ms"] *= 2.5
+    n, _ = run_serving(lag_decode, dbase)
+    check(n >= 1, "inter-token p99 jump not caught")
+
+    jitter_decode = copy.deepcopy(dbase)
+    jitter_decode["entries"][0]["tokens_per_s"] *= 0.8
+    jitter_decode["entries"][0]["token_p50_ms"] *= 1.3
+    n, _ = run_serving(jitter_decode, dbase)
+    check(n == 0, f"sub-tolerance decode jitter flagged ({n} regressions)")
+
     # an eval accuracy drop beyond tolerance is caught; matching is by
     # (model, task, knob, alpha, epsilon, precision) — the fresh file
     # carries the precision field, the pre-precision baseline does not,
@@ -318,7 +368,7 @@ def self_test():
         for f in failures:
             print(f"  - {f}")
         return 1
-    print("bench_gate self-test ok (9 scenarios)")
+    print("bench_gate self-test ok (12 scenarios)")
     return 0
 
 
