@@ -1,0 +1,1005 @@
+//! Multi-process replica fleet: a front-end that spawns M `mca worker`
+//! child processes (each a full [`super::Server`] pool behind the
+//! [`super::wire`] protocol on its stdin/stdout) and routes requests
+//! across them.
+//!
+//! * **Cost-aware routing** — each replica advertises its Eq.-9 load
+//!   (queued cost + decode-ledger cost) in every `Pong`; the front-end
+//!   adds the cost of requests it has routed but not yet seen answered
+//!   and picks the cheapest Ready replica. Overload *within* a replica
+//!   still runs that replica's own admission ladder (brownout → int8 →
+//!   shed); the fleet sheds only when no Ready replica exists at all.
+//! * **Health** — replicas move through `Warming → Ready → (Draining) →
+//!   Dead`. A replica that misses its heartbeat deadline (no frame of any
+//!   kind) is killed and — when respawn is on — replaced by a fresh
+//!   Warming child. In-flight requests of a dead replica are re-routed to
+//!   a surviving replica exactly once, then shed: every submitted request
+//!   still resolves to exactly one response.
+//! * **Rolling restarts** — [`Fleet::drain_replica`] sends `Drain` (the
+//!   replica sheds new work, finishes in-flight), then the front-end
+//!   shuts it down and respawns it warm.
+//!
+//! Fleet-level latency quantiles reuse the merged-histogram path
+//! ([`crate::util::timer::LatencyStats::merge`]): per-replica histograms
+//! recorded at the front-end are merged, so fleet p50/p99 agree with the
+//! pooled per-replica samples to within one bucket width.
+
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::wire::{self, Frame, LoadReport, WireRequest, WIRE_VERSION};
+use super::{batch_cost, precision_cost_factor, Response};
+use crate::tensor::Precision;
+use crate::util::timer::LatencyStats;
+
+/// How requests are spread across Ready replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Routing {
+    /// Cheapest-feasible by advertised Eq.-9 cost + locally routed cost.
+    CostAware,
+    /// Ignore cost; rotate. The experimental control for the routing
+    /// comparison in `mca loadtest`.
+    RoundRobin,
+}
+
+/// Everything [`Fleet::start`] needs.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// the `mca` binary to spawn replicas from
+    pub worker_bin: PathBuf,
+    /// argv passed to each replica after `worker` (model, checkpoint, …)
+    pub worker_args: Vec<String>,
+    /// replica process count
+    pub replicas: usize,
+    /// routing policy
+    pub routing: Routing,
+    /// health-probe interval
+    pub heartbeat: Duration,
+    /// no frame for this long ⇒ the replica is unhealthy (killed, and
+    /// respawned when `respawn` is on)
+    pub heartbeat_timeout: Duration,
+    /// how long a Warming replica may take to send its `Hello` (model
+    /// load + bucket warm-up happen before it)
+    pub warmup_timeout: Duration,
+    /// replace dead replicas with fresh Warming children
+    pub respawn: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            worker_bin: PathBuf::new(),
+            worker_args: Vec::new(),
+            replicas: 2,
+            routing: Routing::CostAware,
+            heartbeat: Duration::from_millis(200),
+            heartbeat_timeout: Duration::from_secs(5),
+            warmup_timeout: Duration::from_secs(120),
+            respawn: true,
+        }
+    }
+}
+
+/// A replica's lifecycle state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// spawned; waiting for its `Hello`
+    Warming,
+    /// serving traffic
+    Ready,
+    /// draining for a rolling restart (no new work routed)
+    Draining,
+    /// gone (killed, crashed or drained out); a respawned slot starts a
+    /// fresh `Warming` entry
+    Dead,
+}
+
+impl ReplicaState {
+    /// Stable lowercase name (stats + logs).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ReplicaState::Warming => "warming",
+            ReplicaState::Ready => "ready",
+            ReplicaState::Draining => "draining",
+            ReplicaState::Dead => "dead",
+        }
+    }
+}
+
+/// Point-in-time view of one replica slot.
+#[derive(Debug, Clone)]
+pub struct ReplicaSnapshot {
+    /// slot index
+    pub slot: usize,
+    /// lifecycle state
+    pub state: ReplicaState,
+    /// last advertised load (from its most recent `Pong`)
+    pub load: LoadReport,
+    /// requests routed to it and not yet answered
+    pub inflight: usize,
+    /// Eq.-9 cost of those in-flight requests (the local routing signal
+    /// added on top of the advertised load)
+    pub routed_cost: f64,
+    /// cumulative Eq.-9 cost ever routed to this slot — the
+    /// routing-balance signal the cost-aware-vs-round-robin comparison
+    /// measures (round-robin balances counts; this exposes whether cost
+    /// balanced too)
+    pub routed_cost_total: f64,
+    /// responses the front-end has received from this slot
+    pub served: u64,
+    /// front-end-measured p99 of those responses (ms)
+    pub p99_ms: f64,
+}
+
+/// Fleet-level statistics ([`Fleet::stats`]).
+#[derive(Debug, Clone)]
+pub struct FleetStats {
+    /// per-slot snapshots
+    pub replicas: Vec<ReplicaSnapshot>,
+    /// responses delivered to clients (shed included)
+    pub served: u64,
+    /// fleet-level sheds (no Ready replica existed)
+    pub fleet_shed: u64,
+    /// in-flight requests re-routed off a dead replica
+    pub rerouted: u64,
+    /// replicas respawned after death
+    pub respawns: u64,
+    /// replicas refused at `Hello` (version/fingerprint mismatch)
+    pub rejected_hellos: u64,
+    /// checkpoint fingerprint the fleet serves (0 until the first Hello)
+    pub fingerprint: u64,
+    /// model name the fleet serves (from the first accepted Hello)
+    pub model: String,
+    /// merged front-end latency: mean (ms)
+    pub mean_ms: f64,
+    /// merged front-end latency: p50 (ms)
+    pub p50_ms: f64,
+    /// merged front-end latency: p99 (ms)
+    pub p99_ms: f64,
+}
+
+// ---------------------------------------------------------------------------
+// Pure routing policy (unit-tested without processes)
+// ---------------------------------------------------------------------------
+
+/// Pick the cheapest Ready replica: `costs[i]` is `Some(total Eq.-9
+/// cost)` for Ready slots, `None` otherwise. Ties break toward the lower
+/// slot index (deterministic).
+pub fn pick_cheapest(costs: &[Option<f64>]) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, c) in costs.iter().enumerate() {
+        if let Some(c) = c {
+            match best {
+                Some((_, bc)) if bc <= *c => {}
+                _ => best = Some((i, *c)),
+            }
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Round-robin over Ready slots: first Ready slot strictly after
+/// `cursor`, wrapping.
+pub fn pick_round_robin(ready: &[bool], cursor: usize) -> Option<usize> {
+    let n = ready.len();
+    if n == 0 {
+        return None;
+    }
+    (1..=n).map(|k| (cursor + k) % n).find(|&i| ready[i])
+}
+
+/// Face-value Eq.-9 cost of one wire request — what the front-end adds
+/// to a replica's advertised load while the request is in flight. Budget
+/// requests resolve replica-side, so their α here is the submit-time
+/// face value (a conservative-enough routing signal, not billing).
+pub fn wire_cost(req: &WireRequest) -> f64 {
+    batch_cost(&req.mode, req.alpha, 1) * precision_cost_factor(req.precision)
+}
+
+// ---------------------------------------------------------------------------
+// Router internals
+// ---------------------------------------------------------------------------
+
+enum ReplicaEv {
+    Frame(Frame),
+    /// stdout closed (process exit or crash)
+    Closed,
+}
+
+enum RouterMsg {
+    Submit { wire: WireRequest, session: Option<u64>, rtx: mpsc::Sender<Response> },
+    Stats(mpsc::Sender<FleetStats>),
+    Kill(usize),
+    Drain(usize),
+    /// graceful: answer everything in flight, then stop the replicas
+    Shutdown,
+    /// fast: kill children now (what `Drop` uses)
+    Abort,
+    Replica(usize, u64, ReplicaEv),
+}
+
+struct Pend {
+    wire: WireRequest,
+    rtx: mpsc::Sender<Response>,
+    submitted: Instant,
+    replica: usize,
+    rerouted: bool,
+}
+
+struct Replica {
+    state: ReplicaState,
+    child: Child,
+    stdin: ChildStdin,
+    /// spawn generation: events from a previous occupant of this slot
+    /// (its reader thread may outlive the respawn) are ignored
+    gen: u64,
+    load: LoadReport,
+    last_seen: Instant,
+    spawned: Instant,
+    inflight: BTreeMap<u64, f64>,
+    routed_cost: f64,
+    routed_cost_total: f64,
+    served: u64,
+    lat: LatencyStats,
+}
+
+struct Router {
+    cfg: FleetConfig,
+    tx: mpsc::Sender<RouterMsg>,
+    replicas: Vec<Replica>,
+    pending: BTreeMap<u64, Pend>,
+    affinity: BTreeMap<u64, usize>,
+    rr_cursor: usize,
+    next_nonce: u64,
+    next_gen: u64,
+    served: u64,
+    fleet_shed: u64,
+    rerouted: u64,
+    respawns: u64,
+    rejected_hellos: u64,
+    fingerprint: u64,
+    model: String,
+    draining: bool,
+    aborting: bool,
+}
+
+/// Everything queued for a shut-down fleet resolves to a shed response —
+/// the fleet keeps the coordinator's exactly-one-response contract.
+fn wire_shed(wire: &WireRequest) -> Response {
+    Response {
+        id: wire.id,
+        pred_class: -1,
+        logits: Vec::new(),
+        flops_reduction: 1.0,
+        r_sum: 0.0,
+        n_eff: 0,
+        latency: Duration::ZERO,
+        batch_size: 0,
+        alpha: wire.alpha,
+        mode: wire.mode.clone(),
+        budget: wire.budget.is_some(),
+        precision: wire.precision,
+        quantized: false,
+        degraded: false,
+        shed: true,
+        decode_tokens: 0,
+        token_ms: Vec::new(),
+    }
+}
+
+impl Router {
+    fn spawn_replica(&mut self, slot: usize) -> Result<Replica> {
+        let gen = self.next_gen;
+        self.next_gen += 1;
+        let mut child = Command::new(&self.cfg.worker_bin)
+            .arg("worker")
+            .args(&self.cfg.worker_args)
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawning replica {slot} ({:?})", self.cfg.worker_bin))?;
+        let stdin = child.stdin.take().expect("piped stdin");
+        let stdout = child.stdout.take().expect("piped stdout");
+        let tx = self.tx.clone();
+        std::thread::spawn(move || {
+            let mut r = BufReader::new(stdout);
+            loop {
+                match wire::read_frame(&mut r) {
+                    Ok(Some(frame)) => {
+                        if tx.send(RouterMsg::Replica(slot, gen, ReplicaEv::Frame(frame))).is_err()
+                        {
+                            return;
+                        }
+                    }
+                    Ok(None) | Err(_) => {
+                        let _ = tx.send(RouterMsg::Replica(slot, gen, ReplicaEv::Closed));
+                        return;
+                    }
+                }
+            }
+        });
+        let now = Instant::now();
+        Ok(Replica {
+            state: ReplicaState::Warming,
+            child,
+            stdin,
+            gen,
+            load: LoadReport::default(),
+            last_seen: now,
+            spawned: now,
+            inflight: BTreeMap::new(),
+            routed_cost: 0.0,
+            routed_cost_total: 0.0,
+            served: 0,
+            lat: LatencyStats::default(),
+        })
+    }
+
+    /// Retire a replica slot: kill + reap the child, re-route (once) or
+    /// shed its in-flight requests, and respawn the slot when configured.
+    fn on_replica_down(&mut self, slot: usize, why: &str) {
+        if self.replicas[slot].state == ReplicaState::Dead {
+            return;
+        }
+        eprintln!("[fleet] replica {slot} down ({why})");
+        self.replicas[slot].state = ReplicaState::Dead;
+        let _ = self.replicas[slot].child.kill();
+        let _ = self.replicas[slot].child.wait();
+        self.replicas[slot].routed_cost = 0.0;
+        self.affinity.retain(|_, &mut r| r != slot);
+        let orphaned: Vec<u64> = self.replicas[slot].inflight.keys().copied().collect();
+        self.replicas[slot].inflight.clear();
+        for id in orphaned {
+            if let Some(mut p) = self.pending.remove(&id) {
+                if p.rerouted {
+                    // Second death for the same request: shed, don't bounce
+                    // around a collapsing fleet forever.
+                    self.deliver(slot, p, None);
+                } else {
+                    p.rerouted = true;
+                    self.rerouted += 1;
+                    self.dispatch(p, None);
+                }
+            }
+        }
+        if self.cfg.respawn && !self.draining && !self.aborting {
+            match self.spawn_replica(slot) {
+                Ok(r) => {
+                    self.replicas[slot] = r;
+                    self.respawns += 1;
+                }
+                Err(e) => eprintln!("[fleet] respawn of replica {slot} failed: {e:#}"),
+            }
+        }
+    }
+
+    /// Deliver a response (or a shed, when `resp` is `None`) for a
+    /// pending request and account it.
+    fn deliver(&mut self, slot: usize, p: Pend, resp: Option<Response>) {
+        let resp = match resp {
+            Some(r) => r,
+            None => {
+                self.fleet_shed += 1;
+                wire_shed(&p.wire)
+            }
+        };
+        self.served += 1;
+        if let Some(r) = self.replicas.get_mut(slot) {
+            r.served += 1;
+            r.lat.record(p.submitted.elapsed());
+        }
+        let _ = p.rtx.send(resp);
+    }
+
+    /// Route one request to a replica (or shed it at fleet level). The
+    /// session key pins decode traffic to its previous replica while that
+    /// replica stays Ready.
+    fn dispatch(&mut self, p: Pend, session: Option<u64>) {
+        let ready: Vec<bool> =
+            self.replicas.iter().map(|r| r.state == ReplicaState::Ready).collect();
+        let chosen = session
+            .and_then(|s| self.affinity.get(&s).copied())
+            .filter(|&r| ready.get(r).copied().unwrap_or(false))
+            .or_else(|| match self.cfg.routing {
+                Routing::CostAware => {
+                    let costs: Vec<Option<f64>> = self
+                        .replicas
+                        .iter()
+                        .map(|r| {
+                            if r.state == ReplicaState::Ready {
+                                Some(r.load.queued_cost + r.load.decode_cost + r.routed_cost)
+                            } else {
+                                None
+                            }
+                        })
+                        .collect();
+                    pick_cheapest(&costs)
+                }
+                Routing::RoundRobin => {
+                    let pick = pick_round_robin(&ready, self.rr_cursor);
+                    if let Some(i) = pick {
+                        self.rr_cursor = i;
+                    }
+                    pick
+                }
+            });
+        let Some(slot) = chosen else {
+            // No Ready replica at all: fleet-level shed. (A loaded-but-
+            // Ready replica still takes the request — its own admission
+            // ladder degrades, quantizes or sheds with full knowledge of
+            // its queue.)
+            self.fleet_shed += 1;
+            self.served += 1;
+            let _ = p.rtx.send(wire_shed(&p.wire));
+            return;
+        };
+        if let Some(s) = session {
+            self.affinity.insert(s, slot);
+        }
+        let cost = wire_cost(&p.wire);
+        let frame = Frame::Submit(p.wire.clone());
+        let id = p.wire.id;
+        let mut p = p;
+        p.replica = slot;
+        self.replicas[slot].inflight.insert(id, cost);
+        self.replicas[slot].routed_cost += cost;
+        self.replicas[slot].routed_cost_total += cost;
+        self.pending.insert(id, p);
+        if wire::write_frame(&mut self.replicas[slot].stdin, &frame).is_err() {
+            // Its stdin pipe is gone: the down path re-routes this very
+            // request (and everything else in flight there).
+            self.on_replica_down(slot, "stdin closed");
+        }
+    }
+
+    fn on_frame(&mut self, slot: usize, frame: Frame) {
+        self.replicas[slot].last_seen = Instant::now();
+        match frame {
+            Frame::Hello { version, model, fingerprint, .. } => {
+                if version != WIRE_VERSION {
+                    eprintln!(
+                        "[fleet] replica {slot} speaks wire v{version}, want v{WIRE_VERSION}; rejecting"
+                    );
+                    self.rejected_hellos += 1;
+                    self.on_replica_down(slot, "wire version mismatch");
+                    return;
+                }
+                if self.fingerprint == 0 {
+                    self.fingerprint = fingerprint;
+                    self.model = model;
+                } else if fingerprint != self.fingerprint {
+                    // A replica serving different weights would silently
+                    // answer with different logits behind the same FE.
+                    eprintln!("[fleet] replica {slot} checkpoint fingerprint mismatch; rejecting");
+                    self.rejected_hellos += 1;
+                    self.on_replica_down(slot, "checkpoint fingerprint mismatch");
+                    return;
+                }
+                if self.replicas[slot].state == ReplicaState::Warming {
+                    self.replicas[slot].state = ReplicaState::Ready;
+                }
+            }
+            Frame::Response(wr) => {
+                let id = wr.id;
+                if let Some(cost) = self.replicas[slot].inflight.remove(&id) {
+                    self.replicas[slot].routed_cost = (self.replicas[slot].routed_cost - cost)
+                        .max(0.0);
+                }
+                if let Some(p) = self.pending.remove(&id) {
+                    self.deliver(slot, p, Some(wr.into_response()));
+                }
+            }
+            Frame::Pong { load, .. } => {
+                self.replicas[slot].load = load;
+            }
+            // FE-direction frames arriving from a replica are protocol
+            // errors; drop them (the heartbeat will catch a replica that
+            // has gone insane enough to stop answering).
+            Frame::Submit(_) | Frame::Ping { .. } | Frame::Drain | Frame::Shutdown => {}
+        }
+    }
+
+    fn heartbeat(&mut self) {
+        let now = Instant::now();
+        for slot in 0..self.replicas.len() {
+            match self.replicas[slot].state {
+                ReplicaState::Ready | ReplicaState::Draining => {
+                    if now.duration_since(self.replicas[slot].last_seen)
+                        > self.cfg.heartbeat_timeout
+                    {
+                        self.on_replica_down(slot, "heartbeat deadline missed");
+                        continue;
+                    }
+                    self.next_nonce += 1;
+                    let ping = Frame::Ping { nonce: self.next_nonce };
+                    if wire::write_frame(&mut self.replicas[slot].stdin, &ping).is_err() {
+                        self.on_replica_down(slot, "stdin closed");
+                    }
+                }
+                ReplicaState::Warming => {
+                    if now.duration_since(self.replicas[slot].spawned) > self.cfg.warmup_timeout {
+                        self.on_replica_down(slot, "warmup deadline missed");
+                    }
+                }
+                ReplicaState::Dead => {}
+            }
+        }
+    }
+
+    /// A Draining replica with nothing left in flight gets its Shutdown
+    /// and a warm replacement — the rolling-restart tail.
+    fn finish_drains(&mut self) {
+        for slot in 0..self.replicas.len() {
+            if self.replicas[slot].state == ReplicaState::Draining
+                && self.replicas[slot].inflight.is_empty()
+            {
+                let _ = wire::write_frame(&mut self.replicas[slot].stdin, &Frame::Shutdown);
+                self.on_replica_down(slot, "drained for rolling restart");
+            }
+        }
+    }
+
+    fn snapshot(&self) -> FleetStats {
+        let mut merged = LatencyStats::default();
+        let replicas: Vec<ReplicaSnapshot> = self
+            .replicas
+            .iter()
+            .enumerate()
+            .map(|(slot, r)| {
+                // Fleet quantiles reuse the fixed merged-histogram path:
+                // per-replica histograms add, they are never re-sampled.
+                merged.merge(&r.lat);
+                ReplicaSnapshot {
+                    slot,
+                    state: r.state,
+                    load: r.load,
+                    inflight: r.inflight.len(),
+                    routed_cost: r.routed_cost,
+                    routed_cost_total: r.routed_cost_total,
+                    served: r.served,
+                    p99_ms: r.lat.p99_ms(),
+                }
+            })
+            .collect();
+        FleetStats {
+            replicas,
+            served: self.served,
+            fleet_shed: self.fleet_shed,
+            rerouted: self.rerouted,
+            respawns: self.respawns,
+            rejected_hellos: self.rejected_hellos,
+            fingerprint: self.fingerprint,
+            model: self.model.clone(),
+            mean_ms: merged.mean_ms(),
+            p50_ms: merged.p50_ms(),
+            p99_ms: merged.p99_ms(),
+        }
+    }
+}
+
+/// How long a shutting-down fleet waits for in-flight responses before
+/// killing the remaining replicas.
+const FLEET_DRAIN_DEADLINE: Duration = Duration::from_secs(120);
+
+fn router_loop(cfg: FleetConfig, tx: mpsc::Sender<RouterMsg>, rx: mpsc::Receiver<RouterMsg>) {
+    let n = cfg.replicas.max(1);
+    let heartbeat = cfg.heartbeat;
+    let mut router = Router {
+        cfg,
+        tx,
+        replicas: Vec::with_capacity(n),
+        pending: BTreeMap::new(),
+        affinity: BTreeMap::new(),
+        rr_cursor: 0,
+        next_nonce: 0,
+        next_gen: 0,
+        served: 0,
+        fleet_shed: 0,
+        rerouted: 0,
+        respawns: 0,
+        rejected_hellos: 0,
+        fingerprint: 0,
+        model: String::new(),
+        draining: false,
+        aborting: false,
+    };
+    for slot in 0..n {
+        match router.spawn_replica(slot) {
+            Ok(r) => router.replicas.push(r),
+            Err(e) => {
+                // Nothing to route to and nothing to recover: exiting drops
+                // the channel, so clients see "fleet down" instead of
+                // hanging on receivers.
+                eprintln!("[fleet] replica {slot} failed to spawn: {e:#}");
+                for r in router.replicas.iter_mut() {
+                    let _ = r.child.kill();
+                    let _ = r.child.wait();
+                }
+                return;
+            }
+        }
+    }
+    let mut last_beat = Instant::now();
+    let mut drain_deadline: Option<Instant> = None;
+    loop {
+        let msg = rx.recv_timeout(heartbeat.min(Duration::from_millis(100)));
+        match msg {
+            Ok(RouterMsg::Submit { wire, session, rtx }) => {
+                if router.draining || router.aborting {
+                    router.served += 1;
+                    router.fleet_shed += 1;
+                    let _ = rtx.send(wire_shed(&wire));
+                } else {
+                    let p = Pend {
+                        wire,
+                        rtx,
+                        submitted: Instant::now(),
+                        replica: 0,
+                        rerouted: false,
+                    };
+                    router.dispatch(p, session);
+                }
+            }
+            Ok(RouterMsg::Stats(stx)) => {
+                let _ = stx.send(router.snapshot());
+            }
+            Ok(RouterMsg::Kill(slot)) => {
+                // Chaos hook: SIGKILL the child. The reader thread's
+                // Closed event (or a failed write) triggers the full
+                // down/re-route/respawn path.
+                if let Some(r) = router.replicas.get_mut(slot) {
+                    if r.state != ReplicaState::Dead {
+                        let _ = r.child.kill();
+                    }
+                }
+            }
+            Ok(RouterMsg::Drain(slot)) => {
+                let write_ok = match router.replicas.get_mut(slot) {
+                    Some(r) if r.state == ReplicaState::Ready => {
+                        r.state = ReplicaState::Draining;
+                        wire::write_frame(&mut r.stdin, &Frame::Drain).is_ok()
+                    }
+                    _ => true,
+                };
+                if !write_ok {
+                    router.on_replica_down(slot, "stdin closed");
+                }
+            }
+            Ok(RouterMsg::Shutdown) => {
+                router.draining = true;
+                if drain_deadline.is_none() {
+                    drain_deadline = Some(Instant::now() + FLEET_DRAIN_DEADLINE);
+                }
+            }
+            Ok(RouterMsg::Abort) => {
+                router.aborting = true;
+            }
+            Ok(RouterMsg::Replica(slot, gen, ev)) => {
+                // Events must come from the slot's *current* occupant — a
+                // respawned slot ignores its predecessor's late frames.
+                let current = matches!(router.replicas.get(slot), Some(r) if r.gen == gen);
+                if current {
+                    match ev {
+                        ReplicaEv::Frame(f) => router.on_frame(slot, f),
+                        ReplicaEv::Closed => router.on_replica_down(slot, "process exited"),
+                    }
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                router.aborting = true;
+            }
+        }
+        if last_beat.elapsed() >= heartbeat {
+            router.heartbeat();
+            last_beat = Instant::now();
+        }
+        router.finish_drains();
+        if router.aborting {
+            break;
+        }
+        if router.draining {
+            let expired = drain_deadline.is_some_and(|t| Instant::now() >= t);
+            if router.pending.is_empty() || expired {
+                break;
+            }
+        }
+    }
+    // Teardown: anything still pending is shed (exactly-one-response),
+    // then every surviving child gets a Shutdown and is reaped.
+    let still_pending: Vec<u64> = router.pending.keys().copied().collect();
+    for id in still_pending {
+        if let Some(p) = router.pending.remove(&id) {
+            let slot = p.replica;
+            router.deliver(slot, p, None);
+        }
+    }
+    for r in router.replicas.iter_mut() {
+        if r.state != ReplicaState::Dead {
+            let _ = wire::write_frame(&mut r.stdin, &Frame::Shutdown);
+        }
+    }
+    for r in router.replicas.iter_mut() {
+        if r.state != ReplicaState::Dead {
+            if router.aborting {
+                let _ = r.child.kill();
+            }
+            let _ = r.child.wait();
+        }
+    }
+}
+
+/// Handle to a running replica fleet.
+pub struct Fleet {
+    tx: mpsc::Sender<RouterMsg>,
+    next_id: Arc<AtomicU64>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Fleet {
+    /// Spawn the replica processes and the router thread. Returns
+    /// immediately — replicas warm up in the background; use
+    /// [`Fleet::wait_ready`] to block until they serve.
+    pub fn start(cfg: FleetConfig) -> Result<Fleet> {
+        if cfg.worker_bin.as_os_str().is_empty() {
+            bail!("FleetConfig.worker_bin is empty");
+        }
+        let (tx, rx) = mpsc::channel();
+        let rtx = tx.clone();
+        let handle = std::thread::spawn(move || router_loop(cfg, rtx, rx));
+        Ok(Fleet { tx, next_id: Arc::new(AtomicU64::new(1)), handle: Some(handle) })
+    }
+
+    /// Block until at least `min_ready` replicas are Ready (or the
+    /// deadline passes — an error, with the state dump in the message).
+    pub fn wait_ready(&self, min_ready: usize, deadline: Duration) -> Result<()> {
+        let t0 = Instant::now();
+        loop {
+            let st = self.stats()?;
+            let ready =
+                st.replicas.iter().filter(|r| r.state == ReplicaState::Ready).count();
+            if ready >= min_ready {
+                return Ok(());
+            }
+            if t0.elapsed() > deadline {
+                let states: Vec<&str> =
+                    st.replicas.iter().map(|r| r.state.as_str()).collect();
+                bail!("fleet not ready after {deadline:?}: {states:?}");
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    fn send(&self, wire: WireRequest, session: Option<u64>) -> mpsc::Receiver<Response> {
+        let (rtx, rrx) = mpsc::channel();
+        let _ = self.tx.send(RouterMsg::Submit { wire, session, rtx });
+        rrx
+    }
+
+    /// Submit a raw-α request (see [`super::Submitter::submit`]).
+    pub fn submit(&self, text: &str, alpha: f32, mode: &str) -> mpsc::Receiver<Response> {
+        self.submit_with_precision(text, alpha, mode, Precision::F32)
+    }
+
+    /// [`Fleet::submit`] with an explicit compute precision.
+    pub fn submit_with_precision(
+        &self,
+        text: &str,
+        alpha: f32,
+        mode: &str,
+        precision: Precision,
+    ) -> mpsc::Receiver<Response> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.send(
+            WireRequest {
+                id,
+                text: text.to_string(),
+                alpha,
+                mode: mode.to_string(),
+                precision,
+                budget: None,
+                decode: None,
+            },
+            None,
+        )
+    }
+
+    /// Submit a Theorem-2 ε-budget request (resolved replica-side).
+    pub fn submit_budget(
+        &self,
+        text: &str,
+        epsilon: f64,
+        delta: Option<f64>,
+    ) -> mpsc::Receiver<Response> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.send(
+            WireRequest {
+                id,
+                text: text.to_string(),
+                alpha: 1.0,
+                mode: "mca".to_string(),
+                precision: Precision::F32,
+                budget: Some((epsilon, delta)),
+                decode: None,
+            },
+            None,
+        )
+    }
+
+    /// Submit an autoregressive decode request. `session` is the
+    /// affinity key: requests sharing it ride the same replica while it
+    /// stays Ready, so a conversation's KV-cache locality survives the
+    /// fleet hop.
+    pub fn submit_decode(
+        &self,
+        text: &str,
+        alpha: f32,
+        mode: &str,
+        precision: Precision,
+        max_new: usize,
+        session: u64,
+    ) -> mpsc::Receiver<Response> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.send(
+            WireRequest {
+                id,
+                text: text.to_string(),
+                alpha,
+                mode: mode.to_string(),
+                precision,
+                budget: None,
+                decode: Some(max_new.max(1)),
+            },
+            Some(session),
+        )
+    }
+
+    /// Fleet statistics snapshot.
+    pub fn stats(&self) -> Result<FleetStats> {
+        let (stx, srx) = mpsc::channel();
+        self.tx.send(RouterMsg::Stats(stx)).ok().context("fleet down")?;
+        srx.recv().context("fleet down")
+    }
+
+    /// Chaos hook: SIGKILL replica `slot`. Its in-flight requests
+    /// re-route (exactly-one-response preserved) and the slot respawns
+    /// when the fleet's respawn policy is on.
+    pub fn kill_replica(&self, slot: usize) {
+        let _ = self.tx.send(RouterMsg::Kill(slot));
+    }
+
+    /// A detachable [`Fleet::kill_replica`] trigger. `mpsc::Sender` is
+    /// `Send` but not `Sync`, so a chaos timer thread can't call
+    /// `kill_replica` through a shared `&Fleet`; it owns a switch instead.
+    pub fn kill_switch(&self, slot: usize) -> KillSwitch {
+        KillSwitch { tx: self.tx.clone(), slot }
+    }
+
+    /// Rolling restart, step 1: stop routing to replica `slot` and send
+    /// it `Drain`. Once its in-flight work completes the router shuts it
+    /// down and respawns it warm.
+    pub fn drain_replica(&self, slot: usize) {
+        let _ = self.tx.send(RouterMsg::Drain(slot));
+    }
+
+    /// Graceful shutdown: every in-flight request is answered (or shed
+    /// at the drain deadline), then the replicas exit.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(RouterMsg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            h.join().map_err(|_| anyhow::anyhow!("fleet router panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Owned, `Send` trigger for killing one replica from another thread
+/// (see [`Fleet::kill_switch`]). Firing after the fleet is gone is a
+/// harmless no-op.
+pub struct KillSwitch {
+    tx: mpsc::Sender<RouterMsg>,
+    slot: usize,
+}
+
+impl KillSwitch {
+    /// SIGKILL the target replica.
+    pub fn fire(self) {
+        let _ = self.tx.send(RouterMsg::Kill(self.slot));
+    }
+}
+
+impl Drop for Fleet {
+    /// Fast abort: pending requests get shed responses and the replica
+    /// processes are killed — an unwinding client must not block behind a
+    /// drain.
+    fn drop(&mut self) {
+        let _ = self.tx.send(RouterMsg::Abort);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_cheapest_prefers_low_cost_ready_slots() {
+        assert_eq!(pick_cheapest(&[Some(3.0), Some(1.0), Some(2.0)]), Some(1));
+        // dead / warming slots (None) are skipped
+        assert_eq!(pick_cheapest(&[None, Some(5.0), None]), Some(1));
+        assert_eq!(pick_cheapest(&[None, None]), None);
+        assert_eq!(pick_cheapest(&[]), None);
+        // ties break toward the lower slot (deterministic routing)
+        assert_eq!(pick_cheapest(&[Some(1.0), Some(1.0)]), Some(0));
+    }
+
+    #[test]
+    fn round_robin_rotates_over_ready_slots() {
+        let ready = [true, false, true, true];
+        let mut cursor = 0;
+        let mut seen = Vec::new();
+        for _ in 0..6 {
+            let i = pick_round_robin(&ready, cursor).unwrap();
+            seen.push(i);
+            cursor = i;
+        }
+        assert_eq!(seen, vec![2, 3, 0, 2, 3, 0]);
+        assert_eq!(pick_round_robin(&[false, false], 0), None);
+        assert_eq!(pick_round_robin(&[], 0), None);
+    }
+
+    #[test]
+    fn wire_cost_matches_eq9_row_cost() {
+        let mk = |alpha: f32, mode: &str, precision: Precision| WireRequest {
+            id: 0,
+            text: String::new(),
+            alpha,
+            mode: mode.to_string(),
+            precision,
+            budget: None,
+            decode: None,
+        };
+        assert!((wire_cost(&mk(0.4, "mca", Precision::F32)) - 1.0).abs() < 1e-12);
+        assert!((wire_cost(&mk(1.0, "mca", Precision::F32)) - 0.25).abs() < 1e-12);
+        assert!((wire_cost(&mk(1.0, "exact", Precision::F32)) - 1.0).abs() < 1e-12);
+        assert!((wire_cost(&mk(0.4, "mca", Precision::Int8)) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replica_states_have_stable_names() {
+        assert_eq!(ReplicaState::Warming.as_str(), "warming");
+        assert_eq!(ReplicaState::Ready.as_str(), "ready");
+        assert_eq!(ReplicaState::Draining.as_str(), "draining");
+        assert_eq!(ReplicaState::Dead.as_str(), "dead");
+    }
+
+    #[test]
+    fn wire_shed_preserves_request_identity() {
+        let wr = WireRequest {
+            id: 99,
+            text: "x".to_string(),
+            alpha: 0.6,
+            mode: "mca".to_string(),
+            precision: Precision::Bf16,
+            budget: Some((0.5, None)),
+            decode: None,
+        };
+        let resp = wire_shed(&wr);
+        assert_eq!(resp.id, 99);
+        assert!(resp.shed);
+        assert!(resp.budget);
+        assert_eq!(resp.pred_class, -1);
+        assert_eq!(resp.precision, Precision::Bf16);
+    }
+}

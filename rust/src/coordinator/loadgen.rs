@@ -1,8 +1,11 @@
 //! Load generation for the serving benchmarks: open-loop Poisson arrivals
 //! at a configured offered rate, mixed-α and ε-budget request populations,
 //! a lockstep replay driver for determinism regression + worker-pool
-//! scaling runs, and the machine-readable `BENCH_serving.json` emitter
-//! used by `mca loadtest` and `cargo bench`.
+//! scaling runs, a seeded trace generator (diurnal + flash-crowd arrival
+//! curves, Zipf-distributed request mixes, decode session affinity) that
+//! drives any [`Ingress`] — an in-process [`Server`] or a multi-process
+//! replica [`Fleet`] — and the machine-readable `BENCH_serving.json`
+//! emitter used by `mca loadtest` and `cargo bench`.
 //!
 //! Open-loop (arrivals independent of completions) is the honest way to
 //! measure a serving system: a closed loop hides queueing collapse. The
@@ -18,6 +21,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use super::fleet::Fleet;
 use super::{Response, Server, ServerStats};
 use crate::rng::Pcg64;
 use crate::tensor::Precision;
@@ -91,6 +95,34 @@ pub struct LoadResult {
     /// per-token latency counts bucketed by [`TOKEN_HIST_EDGES_MS`]
     /// (last count is the overflow bucket); empty for batch-only runs
     pub token_hist: Vec<usize>,
+    /// requests whose response channel closed with no response at all.
+    /// Must be 0 — the exactly-one-response contract; counted (instead of
+    /// silently dropped) so harnesses can assert it across replica kills
+    pub lost: usize,
+    /// fleet-level counters, set only on fleet-trace runs
+    pub fleet: Option<FleetCounters>,
+}
+
+/// Fleet-level counters attached to a fleet-trace [`LoadResult`] and
+/// emitted to `BENCH_serving.json` (gated by `scripts/bench_gate.py`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetCounters {
+    /// replica process count the run was driven against
+    pub replicas: usize,
+    /// replicas respawned after death during the run
+    pub respawns: u64,
+    /// in-flight requests re-routed off a dead replica
+    pub rerouted: u64,
+    /// fleet-level sheds (no Ready replica existed)
+    pub fleet_shed: u64,
+    /// achieved(M) / (M × achieved(1)) — 1.0 is perfect linear scaling;
+    /// 0.0 when the single-replica baseline is unknown
+    pub scaling_efficiency: f64,
+    /// max − min per-replica share of cumulative routed Eq.-9 cost
+    /// (0 = perfectly balanced) — the routing-policy comparison signal:
+    /// round-robin balances request *counts*, this measures whether the
+    /// *cost* balanced too
+    pub cost_imbalance: f64,
 }
 
 /// One request-level outcome from a lockstep replay run — the unit the
@@ -214,6 +246,7 @@ fn collect(
     let mut decode_tokens = 0usize;
     let mut token_lat = LatencyStats::default();
     let mut token_hist = vec![0usize; TOKEN_HIST_EDGES_MS.len() + 1];
+    let mut lost = 0usize;
     let mut outcomes = Vec::with_capacity(inflight.len());
     for rx in inflight {
         if let Ok(resp) = rx.recv() {
@@ -247,6 +280,8 @@ fn collect(
                 mode: resp.mode.clone(),
                 r_sum_bits: resp.r_sum.to_bits(),
             });
+        } else {
+            lost += 1;
         }
     }
     outcomes.sort_by_key(|o| o.id);
@@ -269,6 +304,8 @@ fn collect(
         token_p50_ms: token_lat.p50_ms(),
         token_p99_ms: token_lat.p99_ms(),
         token_hist: if decode_tokens > 0 { token_hist } else { Vec::new() },
+        lost,
+        fleet: None,
     };
     (result, outcomes)
 }
@@ -376,6 +413,264 @@ pub fn run_decode(
     Ok(r)
 }
 
+// ---------------------------------------------------------------------------
+// Trace-driven fleet traffic
+// ---------------------------------------------------------------------------
+
+/// Seeded arrival-curve + request-mix description for trace-driven load.
+/// The instantaneous rate is
+/// `base_rate · (1 + diurnal_amp·sin(2π·diurnal_periods·t/T))`, times
+/// `flash_boost` inside the flash-crowd window — a compressed diurnal
+/// cycle with a superimposed flash crowd, the canonical serving stressor.
+#[derive(Debug, Clone)]
+pub struct TraceCfg {
+    /// trace length
+    pub duration: Duration,
+    /// baseline offered rate (req/s)
+    pub base_rate: f64,
+    /// diurnal modulation amplitude, clamped to [0, 1]
+    pub diurnal_amp: f64,
+    /// full sine periods across the trace window
+    pub diurnal_periods: f64,
+    /// flash-crowd start, as a fraction of the window (≥ 1 disables)
+    pub flash_at: f64,
+    /// flash-crowd length, as a fraction of the window
+    pub flash_len: f64,
+    /// rate multiplier inside the flash-crowd window (clamped ≥ 1)
+    pub flash_boost: f64,
+    /// Zipf exponent for text popularity (0 = uniform); request texts are
+    /// rank-ordered, so low indices are the hot set
+    pub zipf_s: f64,
+    /// fraction of non-budget requests that are autoregressive decodes
+    pub decode_frac: f64,
+    /// fraction of requests carrying a Theorem-2 ε budget
+    pub budget_frac: f64,
+    /// (α, weight) mixture for raw-α and decode requests
+    pub alpha_mix: Vec<(f32, f64)>,
+    /// (ε, weight) mixture for budget requests
+    pub epsilon_mix: Vec<(f64, f64)>,
+    /// decode generation-length cap (lengths are seeded 1..=max_new)
+    pub max_new: usize,
+    /// decode session-affinity key space (conversations per trace)
+    pub sessions: usize,
+    /// trace seed — the event stream is a pure function of (cfg, n_texts)
+    pub seed: u64,
+}
+
+impl Default for TraceCfg {
+    fn default() -> TraceCfg {
+        TraceCfg {
+            duration: Duration::from_secs(2),
+            base_rate: 150.0,
+            diurnal_amp: 0.5,
+            diurnal_periods: 1.0,
+            flash_at: 0.55,
+            flash_len: 0.15,
+            flash_boost: 3.0,
+            zipf_s: 1.1,
+            decode_frac: 0.0,
+            budget_frac: 0.0,
+            alpha_mix: vec![(0.4, 1.0)],
+            epsilon_mix: Vec::new(),
+            max_new: 8,
+            sessions: 16,
+            seed: 7,
+        }
+    }
+}
+
+/// What one trace event submits.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceKind {
+    /// raw-α batch request
+    Batch {
+        /// requested α
+        alpha: f32,
+    },
+    /// Theorem-2 ε-budget request
+    Budget {
+        /// requested ε
+        epsilon: f64,
+    },
+    /// autoregressive decode request
+    Decode {
+        /// requested α
+        alpha: f32,
+        /// generation length
+        max_new: usize,
+        /// session-affinity key (fleet routing pins it to a replica)
+        session: u64,
+    },
+}
+
+/// One scheduled arrival.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// arrival offset from the trace start
+    pub at: Duration,
+    /// index into the request-text population (Zipf rank)
+    pub text: usize,
+    /// request payload
+    pub kind: TraceKind,
+}
+
+/// Instantaneous offered rate at window fraction `frac` ∈ [0, 1].
+pub fn trace_rate_at(cfg: &TraceCfg, frac: f64) -> f64 {
+    let amp = cfg.diurnal_amp.clamp(0.0, 1.0);
+    let mut rate =
+        cfg.base_rate * (1.0 + amp * (2.0 * std::f64::consts::PI * cfg.diurnal_periods * frac).sin());
+    if frac >= cfg.flash_at && frac < cfg.flash_at + cfg.flash_len {
+        rate *= cfg.flash_boost.max(1.0);
+    }
+    rate.max(0.0)
+}
+
+/// Cumulative (unnormalized) Zipf weights `Σ 1/k^s` for ranks 1..=n.
+fn zipf_cum(n: usize, s: f64) -> Vec<f64> {
+    let mut cum = Vec::with_capacity(n);
+    let mut total = 0.0;
+    for k in 1..=n {
+        total += 1.0 / (k as f64).powf(s.max(0.0));
+        cum.push(total);
+    }
+    cum
+}
+
+fn zipf_sample(cum: &[f64], u: f64) -> usize {
+    let target = u * cum.last().copied().unwrap_or(1.0);
+    cum.partition_point(|&c| c < target).min(cum.len().saturating_sub(1))
+}
+
+/// Build the seeded event stream: a Poisson process at the peak rate,
+/// thinned to the diurnal + flash-crowd curve (Lewis–Shedler), with
+/// Zipf-ranked texts and the configured request-kind mixture. Same
+/// (cfg, n_texts) ⇒ identical trace, so routing policies and replica
+/// counts are compared on byte-identical workloads.
+pub fn build_trace(cfg: &TraceCfg, n_texts: usize) -> Vec<TraceEvent> {
+    assert!(cfg.base_rate > 0.0 && n_texts > 0);
+    let mut rng = Pcg64::with_stream(cfg.seed, 31);
+    let horizon = cfg.duration.as_secs_f64();
+    let peak =
+        cfg.base_rate * (1.0 + cfg.diurnal_amp.clamp(0.0, 1.0)) * cfg.flash_boost.max(1.0);
+    let zipf = zipf_cum(n_texts, cfg.zipf_s);
+    let mut events = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        let u = rng.gen_f64().max(1e-12);
+        t += -u.ln() / peak;
+        if t > horizon {
+            break;
+        }
+        if rng.gen_f64() * peak > trace_rate_at(cfg, t / horizon) {
+            continue; // thinned away: outside the instantaneous rate
+        }
+        let text = zipf_sample(&zipf, rng.gen_f64());
+        let kind = if !cfg.epsilon_mix.is_empty()
+            && cfg.budget_frac > 0.0
+            && rng.gen_f64() < cfg.budget_frac
+        {
+            TraceKind::Budget { epsilon: sample_epsilon(&mut rng, &cfg.epsilon_mix) }
+        } else if cfg.decode_frac > 0.0 && rng.gen_f64() < cfg.decode_frac {
+            TraceKind::Decode {
+                alpha: sample_alpha(&mut rng, &cfg.alpha_mix),
+                max_new: rng.gen_range(1, cfg.max_new.max(1) + 1),
+                session: rng.gen_range(0, cfg.sessions.max(1)) as u64,
+            }
+        } else {
+            TraceKind::Batch { alpha: sample_alpha(&mut rng, &cfg.alpha_mix) }
+        };
+        events.push(TraceEvent { at: Duration::from_secs_f64(t), text, kind });
+    }
+    events
+}
+
+/// Anything the trace driver can offer load to: the in-process
+/// [`Server`] or the multi-process replica [`Fleet`] behind one
+/// interface, so scaling-efficiency runs hold the workload fixed while
+/// swapping the serving topology.
+pub trait Ingress {
+    /// Submit a raw-α batch request.
+    fn ingress_submit(&self, text: &str, alpha: f32) -> mpsc::Receiver<Response>;
+    /// Submit an ε-budget request.
+    fn ingress_budget(&self, text: &str, epsilon: f64) -> mpsc::Receiver<Response>;
+    /// Submit a decode request. `session` is an affinity hint; in-process
+    /// servers may ignore it.
+    fn ingress_decode(
+        &self,
+        text: &str,
+        alpha: f32,
+        max_new: usize,
+        session: u64,
+    ) -> mpsc::Receiver<Response>;
+}
+
+impl Ingress for Server {
+    fn ingress_submit(&self, text: &str, alpha: f32) -> mpsc::Receiver<Response> {
+        self.submit(text, alpha, "mca")
+    }
+    fn ingress_budget(&self, text: &str, epsilon: f64) -> mpsc::Receiver<Response> {
+        self.submit_budget(text, epsilon, None)
+    }
+    fn ingress_decode(
+        &self,
+        text: &str,
+        alpha: f32,
+        max_new: usize,
+        _session: u64,
+    ) -> mpsc::Receiver<Response> {
+        self.submit_decode(text, alpha, "mca", Precision::F32, max_new)
+    }
+}
+
+impl Ingress for Fleet {
+    fn ingress_submit(&self, text: &str, alpha: f32) -> mpsc::Receiver<Response> {
+        self.submit(text, alpha, "mca")
+    }
+    fn ingress_budget(&self, text: &str, epsilon: f64) -> mpsc::Receiver<Response> {
+        self.submit_budget(text, epsilon, None)
+    }
+    fn ingress_decode(
+        &self,
+        text: &str,
+        alpha: f32,
+        max_new: usize,
+        session: u64,
+    ) -> mpsc::Receiver<Response> {
+        self.submit_decode(text, alpha, "mca", Precision::F32, max_new, session)
+    }
+}
+
+/// Offer a seeded trace to an ingress open-loop (arrivals keyed to the
+/// trace clock, independent of completions) and drain every response.
+/// `LoadResult.lost` counts requests whose channel closed with no
+/// response — the exactly-one-response regression signal; the fleet
+/// harness asserts it stays 0 across forced replica kills.
+pub fn run_trace(
+    ingress: &dyn Ingress,
+    texts: &[String],
+    cfg: &TraceCfg,
+) -> Result<LoadResult> {
+    let trace = build_trace(cfg, texts.len());
+    let offered = trace.len() as f64 / cfg.duration.as_secs_f64().max(1e-9);
+    let start = Instant::now();
+    let mut inflight = Vec::with_capacity(trace.len());
+    for ev in &trace {
+        let now = start.elapsed();
+        if ev.at > now {
+            std::thread::sleep(ev.at - now);
+        }
+        let text = &texts[ev.text % texts.len()];
+        inflight.push(match &ev.kind {
+            TraceKind::Batch { alpha } => ingress.ingress_submit(text, *alpha),
+            TraceKind::Budget { epsilon } => ingress.ingress_budget(text, *epsilon),
+            TraceKind::Decode { alpha, max_new, session } => {
+                ingress.ingress_decode(text, *alpha, *max_new, *session)
+            }
+        });
+    }
+    Ok(drain(inflight, offered, start))
+}
+
 /// Write the machine-readable serving benchmark: one entry per
 /// (worker count, run), with throughput and latency percentiles. `kind`
 /// is the measurement protocol: "open_loop" (Poisson arrivals at the
@@ -407,6 +702,15 @@ pub fn write_bench_json(
         m.insert("budget_requests".to_string(), Json::Num(r.budget_requests as f64));
         m.insert("degraded".to_string(), Json::Num(r.degraded as f64));
         m.insert("mean_resolved_alpha".to_string(), Json::Num(r.mean_resolved_alpha));
+        m.insert("lost".to_string(), Json::Num(r.lost as f64));
+        if let Some(f) = &r.fleet {
+            m.insert("replicas".to_string(), Json::Num(f.replicas as f64));
+            m.insert("respawns".to_string(), Json::Num(f.respawns as f64));
+            m.insert("rerouted".to_string(), Json::Num(f.rerouted as f64));
+            m.insert("fleet_shed".to_string(), Json::Num(f.fleet_shed as f64));
+            m.insert("scaling_efficiency".to_string(), Json::Num(f.scaling_efficiency));
+            m.insert("cost_imbalance".to_string(), Json::Num(f.cost_imbalance));
+        }
         if r.decode_tokens > 0 {
             m.insert("decode_tokens".to_string(), Json::Num(r.decode_tokens as f64));
             m.insert("tokens_per_s".to_string(), Json::Num(r.tokens_per_s));
@@ -615,6 +919,8 @@ mod tests {
             token_p50_ms: 0.0,
             token_p99_ms: 0.0,
             token_hist: Vec::new(),
+            lost: 0,
+            fleet: None,
         };
         let mut r4 = r1.clone();
         r4.achieved = 310.0;
@@ -624,6 +930,14 @@ mod tests {
         r4.token_p50_ms = 1.5;
         r4.token_p99_ms = 9.0;
         r4.token_hist = vec![0, 10, 30, 6, 2, 0, 0, 0];
+        r4.fleet = Some(FleetCounters {
+            replicas: 2,
+            respawns: 1,
+            rerouted: 3,
+            fleet_shed: 0,
+            scaling_efficiency: 0.87,
+            cost_imbalance: 0.06,
+        });
         let mut st = ServerStats::default();
         st.shed = 5;
         st.brownout_entries = 2;
@@ -648,6 +962,8 @@ mod tests {
         assert_eq!(rows[0].get("budget_requests").unwrap().as_usize().unwrap(), 40);
         assert!(rows[0].opt("outcome_digest").is_none());
         assert!(rows[0].opt("decode_tokens").is_none(), "batch rows carry no decode keys");
+        assert_eq!(rows[0].get("lost").unwrap().as_usize().unwrap(), 0);
+        assert!(rows[0].opt("scaling_efficiency").is_none(), "non-fleet rows skip fleet keys");
         assert_eq!(rows[1].get("workers").unwrap().as_usize().unwrap(), 4);
         assert_eq!(rows[1].get("kind").unwrap().as_str().unwrap(), "replay");
         assert!((rows[1].get("achieved_rps").unwrap().as_f64().unwrap() - 310.0).abs() < 1e-9);
@@ -660,6 +976,13 @@ mod tests {
         let hist = rows[1].get("token_hist").unwrap().as_arr().unwrap();
         assert_eq!(hist.len(), TOKEN_HIST_EDGES_MS.len() + 1);
         assert_eq!(hist[2].as_usize().unwrap(), 30);
+        assert_eq!(rows[1].get("replicas").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(rows[1].get("respawns").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(rows[1].get("rerouted").unwrap().as_usize().unwrap(), 3);
+        assert!(
+            (rows[1].get("scaling_efficiency").unwrap().as_f64().unwrap() - 0.87).abs() < 1e-9
+        );
+        assert!((rows[1].get("cost_imbalance").unwrap().as_f64().unwrap() - 0.06).abs() < 1e-9);
         let server = parsed.get("server").unwrap();
         assert_eq!(server.get("brownout_entries").unwrap().as_usize().unwrap(), 2);
         assert_eq!(server.get("canaries").unwrap().as_usize().unwrap(), 3);
@@ -681,5 +1004,126 @@ mod tests {
         assert_eq!(token_hist_bucket(50.0), 6);
         assert_eq!(token_hist_bucket(51.0), 7);
         assert_eq!(token_hist_bucket(f64::INFINITY), TOKEN_HIST_EDGES_MS.len());
+    }
+
+    #[test]
+    fn trace_is_deterministic() {
+        let cfg = TraceCfg {
+            duration: Duration::from_secs(4),
+            decode_frac: 0.3,
+            budget_frac: 0.2,
+            epsilon_mix: vec![(4.0, 1.0), (32.0, 1.0)],
+            ..TraceCfg::default()
+        };
+        let a = build_trace(&cfg, 64);
+        let b = build_trace(&cfg, 64);
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "same (cfg, n_texts) must give an identical trace");
+        let mut other = cfg.clone();
+        other.seed ^= 1;
+        assert_ne!(a, build_trace(&other, 64));
+    }
+
+    #[test]
+    fn trace_follows_the_diurnal_curve() {
+        // One sine period, no flash crowd: the first half-window (sin > 0)
+        // must carry visibly more arrivals than the second (sin < 0).
+        let cfg = TraceCfg {
+            duration: Duration::from_secs(30),
+            base_rate: 120.0,
+            diurnal_amp: 0.8,
+            diurnal_periods: 1.0,
+            flash_at: 2.0, // disabled
+            ..TraceCfg::default()
+        };
+        let trace = build_trace(&cfg, 32);
+        let half = cfg.duration / 2;
+        let first = trace.iter().filter(|e| e.at < half).count();
+        let second = trace.len() - first;
+        assert!(second > 0, "empty second half");
+        let ratio = first as f64 / second as f64;
+        assert!(ratio > 1.5, "diurnal modulation invisible: {first} vs {second}");
+        // Arrivals are sorted by construction (open-loop clock).
+        assert!(trace.windows(2).all(|w| w[0].at <= w[1].at));
+    }
+
+    #[test]
+    fn flash_crowd_boosts_its_window() {
+        let cfg = TraceCfg {
+            duration: Duration::from_secs(30),
+            base_rate: 100.0,
+            diurnal_amp: 0.0,
+            flash_at: 0.4,
+            flash_len: 0.2,
+            flash_boost: 4.0,
+            ..TraceCfg::default()
+        };
+        let trace = build_trace(&cfg, 32);
+        let horizon = cfg.duration.as_secs_f64();
+        let in_window = trace
+            .iter()
+            .filter(|e| {
+                let f = e.at.as_secs_f64() / horizon;
+                (0.4..0.6).contains(&f)
+            })
+            .count();
+        let outside = trace.len() - in_window;
+        // Window is 20% of the span at 4× rate: expected in/out density
+        // ratio is 4; demand at least 2.5 to stay robust to seed noise.
+        let density_ratio = (in_window as f64 / 0.2) / (outside as f64 / 0.8);
+        assert!(density_ratio > 2.5, "flash crowd invisible: ratio {density_ratio}");
+    }
+
+    #[test]
+    fn zipf_mix_is_head_heavy_and_kinds_are_mixed() {
+        let cfg = TraceCfg {
+            duration: Duration::from_secs(20),
+            base_rate: 150.0,
+            zipf_s: 1.2,
+            decode_frac: 0.3,
+            budget_frac: 0.2,
+            epsilon_mix: vec![(4.0, 1.0)],
+            sessions: 8,
+            ..TraceCfg::default()
+        };
+        let n_texts = 50;
+        let trace = build_trace(&cfg, n_texts);
+        let mut counts = vec![0usize; n_texts];
+        let (mut batch, mut budget, mut decode) = (0, 0, 0);
+        for e in &trace {
+            counts[e.text] += 1;
+            match &e.kind {
+                TraceKind::Batch { .. } => batch += 1,
+                TraceKind::Budget { .. } => budget += 1,
+                TraceKind::Decode { session, .. } => {
+                    assert!(*session < cfg.sessions as u64);
+                    decode += 1;
+                }
+            }
+        }
+        assert!(batch > 0 && budget > 0 && decode > 0, "{batch}/{budget}/{decode}");
+        // Zipf(1.2) over 50 ranks: rank 1 holds ~22% of the mass and the
+        // top five ~50%; the uniform alternative puts 2% / 10% there.
+        let head: usize = counts[..5].iter().sum();
+        assert!(counts[0] * 10 > trace.len(), "rank-1 share too small: {}", counts[0]);
+        assert!(head * 3 > trace.len(), "top-5 share too small: {head}");
+        assert!(counts[0] > counts[25].max(1) * 3, "no rank skew");
+    }
+
+    #[test]
+    fn trace_rate_never_exceeds_thinning_peak() {
+        let cfg = TraceCfg {
+            diurnal_amp: 0.9,
+            flash_at: 0.5,
+            flash_len: 0.3,
+            flash_boost: 5.0,
+            ..TraceCfg::default()
+        };
+        let peak =
+            cfg.base_rate * (1.0 + cfg.diurnal_amp.clamp(0.0, 1.0)) * cfg.flash_boost.max(1.0);
+        for i in 0..=1000 {
+            let f = i as f64 / 1000.0;
+            assert!(trace_rate_at(&cfg, f) <= peak + 1e-9, "rate exceeds peak at {f}");
+        }
     }
 }

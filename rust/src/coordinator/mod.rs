@@ -29,7 +29,9 @@
 //!   opens its backend from a [`BackendSpec`], so the same coordinator
 //!   serves PJRT artifacts or the native pure-Rust forward.
 
+pub mod fleet;
 pub mod loadgen;
+pub mod wire;
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -439,6 +441,11 @@ enum Msg {
     DecodeDone(DecodeReport),
     Pause,
     Resume,
+    /// Fault injection: stop one worker as if it had crashed (regression
+    /// tests + fleet chaos hooks). The worker exits without reporting its
+    /// live decode sessions; the dispatcher retires the slot — decode
+    /// ledger entries included — via `on_worker_down`.
+    KillWorker(usize),
     /// Graceful: drain every admitted request before stopping workers.
     Shutdown,
     /// Fast: drop the undispatched queue (response channels close), wait
@@ -529,6 +536,15 @@ pub struct ServerStats {
     pub queue_depth: usize,
     /// high-water mark of the admission queue (client requests)
     pub queue_peak: usize,
+    /// Σ Eq.-9 row cost of queued client requests — the running total
+    /// admission compares against the cap, and (with `decode_cost`) the
+    /// load signal a fleet front-end routes on
+    pub queued_cost: f64,
+    /// Σ Eq.-9 row cost held by live decode sessions (released when each
+    /// session's `DecodeDone` retires its ledger entry)
+    pub decode_cost: f64,
+    /// workers still alive — a dead worker's slot is retired permanently
+    pub alive_workers: usize,
     /// mean request latency
     pub mean_latency_ms: f64,
     /// median request latency
@@ -721,7 +737,7 @@ impl Server {
         let mut handles = Vec::with_capacity(n_workers);
         for id in 0..n_workers {
             let (jtx, jrx) = mpsc::channel::<WorkerMsg>();
-            let (rtx, rrx) = mpsc::channel::<Result<(Vec<usize>, ModelStats)>>();
+            let (rtx, rrx) = mpsc::channel::<Result<(Vec<usize>, ModelStats, usize)>>();
             let spec = backend.clone();
             let wcfg = cfg.clone();
             let events = tx.clone();
@@ -736,11 +752,13 @@ impl Server {
         }
         let mut buckets = Vec::new();
         let mut stats = ModelStats { beta: 0.0, w_frob: 0.0 };
+        let mut max_len = 0usize;
         for (id, rrx) in ready_rxs.into_iter().enumerate() {
             match rrx.recv() {
-                Ok(Ok((b, st))) => {
+                Ok(Ok((b, st, ml))) => {
                     buckets = b;
                     stats = st;
+                    max_len = ml;
                 }
                 Ok(Err(e)) => {
                     drop(job_txs); // surviving workers exit on channel close
@@ -762,7 +780,7 @@ impl Server {
         let dknobs = knobs;
         let dabort = abort;
         let handle = std::thread::spawn(move || {
-            dispatcher_loop(dcfg, buckets, stats, rx, job_txs, handles, dknobs, dabort)
+            dispatcher_loop(dcfg, buckets, stats, max_len, rx, job_txs, handles, dknobs, dabort)
         });
         Ok(Server {
             sub: Submitter { tx, next_id: Arc::new(AtomicU64::new(1)) },
@@ -815,6 +833,17 @@ impl Server {
     /// Resume dispatch after [`Server::pause`].
     pub fn resume(&self) {
         let _ = self.sub.tx.send(Msg::Resume);
+    }
+
+    /// Fault injection: stop worker `worker` as if it had crashed. The
+    /// worker thread exits without reporting its live decode sessions
+    /// (their response channels close), and the dispatcher immediately
+    /// retires the slot — releasing the decode-ledger cost those sessions
+    /// held, so admission headroom recovers instead of leaking. Used by
+    /// the kill-a-worker regression tests and the fleet chaos hooks; a
+    /// no-op for out-of-range or already-dead workers.
+    pub fn kill_worker(&self, worker: usize) {
+        let _ = self.sub.tx.send(Msg::KillWorker(worker));
     }
 
     /// Snapshot the server's aggregate + per-worker statistics.
@@ -876,6 +905,20 @@ struct Dispatcher {
     client_depth: usize,
     idle: Vec<usize>,
     alive: usize,
+    /// Per-worker death flags. A slot is retired at most once (see
+    /// `on_worker_down`): repeated send failures against the same dead
+    /// worker must not decrement `alive` twice, and routing skips dead
+    /// slots outright.
+    dead: Vec<bool>,
+    /// KV-cache capacity of the served model (from the workers). Decode
+    /// admission rejects prompts that already fill it — such a session
+    /// could never emit a token, so charging + prefilling it would bill
+    /// the client for nothing.
+    max_len: usize,
+    /// Dispatcher-side tokenizer for the admission-time prompt-length
+    /// check; shares `decode_prompt` with the worker prefill so the
+    /// length admission measures is exactly the length prefill uses.
+    tok: Tokenizer,
     paused: bool,
     brownout: bool,
     draining: bool,
@@ -891,10 +934,12 @@ struct Dispatcher {
     /// cap until its `DecodeDone` arrives, so decode load and queued
     /// batch load share one cap (and one brownout ladder).
     decode_cost: f64,
-    /// Admission cost held per live decode session (by request id), so
-    /// `DecodeDone` releases exactly what admission charged even if the
-    /// request was degraded or quantized on the way in.
-    decode_costs: BTreeMap<u64, f64>,
+    /// Admission cost held per live decode session, keyed by request id
+    /// and tagged with the owning worker: `DecodeDone` releases exactly
+    /// what admission charged even if the request was degraded or
+    /// quantized on the way in, and `on_worker_down` retires every entry
+    /// a dead worker still held (its sessions will never report).
+    decode_costs: BTreeMap<u64, (usize, f64)>,
     /// Shared per-step precision knobs the workers read every decode
     /// round (see [`pack_knobs`]).
     knobs: Arc<AtomicU64>,
@@ -912,6 +957,7 @@ fn dispatcher_loop(
     cfg: ServerConfig,
     buckets: Vec<usize>,
     stats: ModelStats,
+    max_len: usize,
     rx: mpsc::Receiver<Msg>,
     job_txs: Vec<mpsc::Sender<WorkerMsg>>,
     worker_handles: Vec<JoinHandle<()>>,
@@ -927,6 +973,9 @@ fn dispatcher_loop(
         client_depth: 0,
         idle: (0..n_workers).rev().collect(),
         alive: n_workers,
+        dead: vec![false; n_workers],
+        max_len,
+        tok: Tokenizer::new(),
         paused: false,
         brownout: false,
         draining: false,
@@ -1017,7 +1066,12 @@ impl Dispatcher {
                 let _ = stx.send(self.snapshot());
             }
             Msg::Done(report) => {
-                self.idle.push(report.worker);
+                // A report can race a kill: the worker finishes its batch,
+                // reports, then sees Stop. Never hand a retired slot back
+                // to the idle pool.
+                if !self.dead.get(report.worker).copied().unwrap_or(true) {
+                    self.idle.push(report.worker);
+                }
                 if report.ok {
                     self.metrics.on_batch(
                         report.worker,
@@ -1037,7 +1091,11 @@ impl Dispatcher {
                 }
             }
             Msg::DecodeDone(r) => {
-                if let Some(cost) = self.decode_costs.remove(&r.id) {
+                // `remove` returning None is fine: `on_worker_down`
+                // already retired this entry (a session finishing in a
+                // killed worker's final round), and a double release
+                // would corrupt the admission total.
+                if let Some((_, cost)) = self.decode_costs.remove(&r.id) {
                     self.decode_cost -= cost;
                     if self.decode_costs.is_empty() {
                         // Snap to zero so float drift cannot accumulate.
@@ -1059,6 +1117,18 @@ impl Dispatcher {
             }
             Msg::Pause => self.paused = true,
             Msg::Resume => self.paused = false,
+            Msg::KillWorker(wid) => {
+                if wid < self.job_txs.len() && !self.dead[wid] {
+                    // Ask the thread to exit (it abandons unfinished live
+                    // sessions — the crash being simulated), cut its
+                    // channel so nothing more routes to it, then retire
+                    // the slot, decode-ledger entries included.
+                    let (dead_tx, _) = mpsc::channel();
+                    let old = std::mem::replace(&mut self.job_txs[wid], dead_tx);
+                    let _ = old.send(WorkerMsg::Stop);
+                    self.on_worker_down(wid);
+                }
+            }
             Msg::Shutdown => self.begin_drain(drain_deadline),
             Msg::Abort => {
                 self.begin_drain(drain_deadline);
@@ -1098,6 +1168,18 @@ impl Dispatcher {
     /// admission budget.
     fn admit(&mut self, mut p: Pending, rtx: mpsc::Sender<Response>) {
         if self.draining {
+            self.metrics.on_shed();
+            let _ = rtx.send(shed_response(&p));
+            return;
+        }
+        if p.req.decode.is_some()
+            && decode_prompt(&self.tok, &p.req.text, self.cfg.seq).len() >= self.max_len
+        {
+            // The prompt already fills the KV cache: the session could
+            // never emit a token (`max_new` would clamp to zero), so
+            // admitting it would charge the client — and hold admission
+            // headroom — for a prefill that produces nothing. Reject with
+            // an explicit shed response instead.
             self.metrics.on_shed();
             let _ = rtx.send(shed_response(&p));
             return;
@@ -1158,26 +1240,42 @@ impl Dispatcher {
         }
     }
 
-    /// Route an admitted decode request to the worker with the fewest
-    /// live decode sessions. The session joins that worker's continuous
+    /// Route an admitted decode request to the live worker with the
+    /// fewest decode sessions. The session joins that worker's continuous
     /// batch at its next round; its row cost stays charged against the
-    /// admission cap until the worker's `DecodeDone` releases it.
+    /// admission cap until the worker's `DecodeDone` (or the worker-death
+    /// path) releases it. A send failure retires the dead slot and
+    /// re-routes; with no live worker left the request is shed — every
+    /// admitted request still resolves to exactly one outcome.
     fn admit_decode(&mut self, p: Pending, rtx: mpsc::Sender<Response>) {
         let cost = row_cost(&p.req);
         let id = p.req.id;
-        let wid = (0..self.decode_live.len())
-            .filter(|&w| self.job_txs.get(w).is_some())
-            .min_by_key(|&w| self.decode_live[w])
-            .unwrap_or(0);
-        if self.job_txs[wid].send(WorkerMsg::Decode(DecodeJob { pending: p, rtx })).is_err() {
-            // The worker died outside the per-job guard: the request is
-            // dropped (its response sender closed with the channel).
-            self.alive = self.alive.saturating_sub(1);
-            return;
+        let mut job = DecodeJob { pending: p, rtx };
+        loop {
+            let Some(wid) = (0..self.decode_live.len())
+                .filter(|&w| !self.dead[w])
+                .min_by_key(|&w| self.decode_live[w])
+            else {
+                self.metrics.on_shed();
+                let _ = job.rtx.send(shed_response(&job.pending));
+                return;
+            };
+            match self.job_txs[wid].send(WorkerMsg::Decode(job)) {
+                Ok(()) => {
+                    self.decode_cost += cost;
+                    self.decode_costs.insert(id, (wid, cost));
+                    self.decode_live[wid] += 1;
+                    return;
+                }
+                Err(mpsc::SendError(msg)) => {
+                    // Died outside the per-job guard: retire the slot and
+                    // try the next-least-loaded worker.
+                    self.on_worker_down(wid);
+                    let WorkerMsg::Decode(j) = msg else { unreachable!("sent a Decode") };
+                    job = j;
+                }
+            }
         }
-        self.decode_cost += cost;
-        self.decode_costs.insert(id, cost);
-        self.decode_live[wid] += 1;
     }
 
     /// Resolve an ε budget against the model statistics onto the serving
@@ -1321,12 +1419,21 @@ impl Dispatcher {
                 let canary = self.mark_canary(&entries[0].0.req);
                 let wid = self.idle.pop().expect("take sized by idle.len()");
                 let job = WorkerMsg::Job(Job { entries, bucket: buckets[slot], canary });
-                if self.job_txs[wid].send(job).is_err() {
-                    // Worker died outside the per-job panic guard: its
-                    // requests are dropped (response senders close,
-                    // clients error out) and the slot is permanently
-                    // retired.
-                    self.alive = self.alive.saturating_sub(1);
+                if let Err(mpsc::SendError(msg)) = self.job_txs[wid].send(job) {
+                    // Worker died outside the per-job panic guard: retire
+                    // the slot (decode-ledger entries included) and put
+                    // the batch back at the head of the queue — the
+                    // entries' response channels stay open, so a
+                    // surviving worker still answers them.
+                    self.on_worker_down(wid);
+                    let WorkerMsg::Job(job) = msg else { unreachable!("sent a Job") };
+                    for entry in job.entries.into_iter().rev() {
+                        if !is_canary(&entry.0.req) {
+                            self.queued_cost += row_cost(&entry.0.req);
+                            self.client_depth += 1;
+                        }
+                        self.queue.push_front(entry);
+                    }
                 }
             }
             // Loop: more plans may be ready than workers were idle, or new
@@ -1408,6 +1515,40 @@ impl Dispatcher {
         self.canaries = keep;
     }
 
+    /// Retire worker `wid` after its job channel closed (a panic outside
+    /// the per-job guard, or a forced kill). Idempotent: `dead[wid]`
+    /// guards the `alive` decrement, so repeated send failures against
+    /// the same slot cannot drive `alive` to zero early. Every decode
+    /// ledger entry the worker still held is released here — its live
+    /// sessions died with it and will never send `DecodeDone`, and
+    /// without this release their cost would shrink admission headroom
+    /// until shutdown.
+    fn on_worker_down(&mut self, wid: usize) {
+        if self.dead.get(wid).copied().unwrap_or(true) {
+            return;
+        }
+        self.dead[wid] = true;
+        self.alive = self.alive.saturating_sub(1);
+        self.idle.retain(|&w| w != wid);
+        let orphaned: Vec<u64> = self
+            .decode_costs
+            .iter()
+            .filter(|&(_, &(w, _))| w == wid)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in orphaned {
+            if let Some((_, cost)) = self.decode_costs.remove(&id) {
+                self.decode_cost -= cost;
+            }
+        }
+        if self.decode_costs.is_empty() {
+            self.decode_cost = 0.0;
+        }
+        if let Some(live) = self.decode_live.get_mut(wid) {
+            *live = 0;
+        }
+    }
+
     fn snapshot(&self) -> ServerStats {
         let m = &self.metrics;
         let lat = m.total_lat();
@@ -1419,6 +1560,9 @@ impl Dispatcher {
             batches,
             queue_depth: self.client_depth,
             queue_peak: m.queue_peak,
+            queued_cost: self.queued_cost,
+            decode_cost: self.decode_cost,
+            alive_workers: self.alive,
             mean_latency_ms: lat.mean_ms(),
             p50_ms: lat.p50_ms(),
             p99_ms: lat.p99_ms(),
@@ -1571,7 +1715,7 @@ fn worker_loop(
     intra_threads: usize,
     jobs: mpsc::Receiver<WorkerMsg>,
     events: mpsc::Sender<Msg>,
-    ready: mpsc::Sender<Result<(Vec<usize>, ModelStats)>>,
+    ready: mpsc::Sender<Result<(Vec<usize>, ModelStats, usize)>>,
     knobs: Arc<AtomicU64>,
     abort: Arc<AtomicBool>,
 ) {
@@ -1603,7 +1747,7 @@ fn worker_loop(
 
     let mut st = match init {
         Ok((st, stats)) => {
-            let _ = ready.send(Ok((st.buckets.clone(), stats)));
+            let _ = ready.send(Ok((st.buckets.clone(), stats, st.max_len)));
             st
         }
         Err(e) => {
@@ -1752,9 +1896,23 @@ fn step_alpha(req: &Request, knob_alpha: f32) -> f32 {
     }
 }
 
+/// Tokenize a decode prompt at serving length `seq` with trailing
+/// padding stripped — the rows that actually prefix the KV cache.
+/// Admission's prompt-length check and the worker prefill both use this,
+/// so the length admission rejects on is exactly the length prefill
+/// would consume.
+fn decode_prompt(tok: &Tokenizer, text: &str, seq: usize) -> Vec<i32> {
+    let mut prompt = tok.encode(text, seq);
+    while prompt.last() == Some(&PAD_ID) {
+        prompt.pop();
+    }
+    prompt
+}
+
 /// Prefill a decode request into a new backend KV-cache session. The
 /// prompt is the tokenized text with trailing padding stripped; `max_new`
-/// is clamped to the cache headroom left above the prompt.
+/// is clamped to the cache headroom left above the prompt (admission
+/// rejects zero-headroom prompts, so the clamp is a backstop).
 fn decode_join(
     st: &mut WorkerState,
     pending: Pending,
@@ -1765,10 +1923,7 @@ fn decode_join(
     let mut spec = ForwardSpec::new(&st.cfg.model, &req.mode, 1, st.cfg.seq);
     spec.compute_dtype = req.precision.as_str().to_string();
     spec.causal = true;
-    let mut prompt = st.tok.encode(&req.text, st.cfg.seq);
-    while prompt.last() == Some(&PAD_ID) {
-        prompt.pop();
-    }
+    let prompt = decode_prompt(&st.tok, &req.text, st.cfg.seq);
     let (session, out) = st
         .backend
         .decode_prefill(&spec, &st.params, &prompt, req.alpha, req_id as u32)
@@ -2578,5 +2733,64 @@ mod tests {
         // at least one step between refreshes
         let (_, r) = unpack_knobs(pack_knobs(0.4, 0));
         assert_eq!(r, 1);
+    }
+
+    #[test]
+    fn knob_word_boundary_round_trips() {
+        // Exhaustive boundary audit of the packed knob word: every α bit
+        // pattern the controller could ever publish (including the ones a
+        // buggy controller might — NaN, ±0, infinities, subnormals) must
+        // survive the u64 round-trip bit-exactly, and the refresh word
+        // must clamp to [1, u32::MAX] without ever corrupting the α half.
+        let alphas = [
+            0.0f32,
+            -0.0,
+            f32::MIN_POSITIVE,
+            f32::MIN_POSITIVE / 2.0, // subnormal
+            0.05,
+            0.5,
+            1.0,
+            f32::MAX,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            f32::from_bits(0x7fc0_dead), // non-canonical NaN payload
+        ];
+        let refreshes = [
+            0u64,
+            1,
+            2,
+            u32::MAX as u64 - 1,
+            u32::MAX as u64,
+            u32::MAX as u64 + 1,
+            u64::MAX,
+        ];
+        for &alpha in &alphas {
+            for &refresh in &refreshes {
+                let (a, r) = unpack_knobs(pack_knobs(alpha, refresh));
+                // α: bit-exact, even for NaN payloads — a corrupted knob
+                // read would silently change every decode step's precision.
+                assert_eq!(
+                    a.to_bits(),
+                    alpha.to_bits(),
+                    "alpha bits corrupted for alpha={alpha} refresh={refresh}"
+                );
+                // refresh: clamped into [1, u32::MAX], never 0 (a zero
+                // interval would force-exact every step) and never spills
+                // into the α half.
+                assert_eq!(
+                    r,
+                    refresh.clamp(1, u32::MAX as u64),
+                    "refresh corrupted for alpha={alpha} refresh={refresh}"
+                );
+            }
+        }
+        // The two halves are independent: flipping every refresh bit
+        // leaves α untouched and vice versa.
+        let base = pack_knobs(0.4, 8);
+        let (a_hi, _) = unpack_knobs(base | 0xffff_ffff);
+        assert_eq!(a_hi.to_bits(), 0.4f32.to_bits());
+        let (_, r_lo) = unpack_knobs(base & 0xffff_ffff);
+        assert_eq!(r_lo, 8);
     }
 }

@@ -1,0 +1,759 @@
+//! Length-prefixed binary wire protocol between the fleet front-end and
+//! `mca worker` replica processes — the serialization seam a real
+//! multi-process deployment needs. Each frame is a little-endian `u32`
+//! payload length followed by a tagged payload; the codec is hand-rolled
+//! LE bytes (no serde in-tree) and every numeric field round-trips
+//! bit-exactly, NaN payloads included (α and logits travel as raw bits).
+//!
+//! Frame flow (one worker connection, stdin/stdout of the child):
+//!
+//! ```text
+//!   worker -> FE   Hello     once at startup: version, model, checkpoint
+//!                            fingerprint (FNV-1a over the file bytes) —
+//!                            the FE refuses replicas serving a different
+//!                            checkpoint than the rest of the fleet
+//!   FE -> worker   Submit    one request (batch, ε-budget or decode)
+//!   worker -> FE   Response  exactly one per Submit (shed included)
+//!   FE -> worker   Ping      health probe, echoed nonce
+//!   worker -> FE   Pong      nonce + the replica's Eq.-9 load signal
+//!                            (queued cost + decode-ledger cost) — what
+//!                            cost-aware routing ranks replicas by
+//!   FE -> worker   Drain     stop admitting (new Submits are shed);
+//!                            in-flight requests still complete
+//!   FE -> worker   Shutdown  graceful exit after the drain
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Budget, DecodeParams, Request, Response};
+use crate::tensor::Precision;
+
+/// Protocol version, bumped on any frame-layout change. `Hello` carries
+/// it; a front-end refuses a replica speaking a different version instead
+/// of mis-parsing its frames.
+pub const WIRE_VERSION: u32 = 1;
+
+/// Hard ceiling on one frame's payload size. Far above any real frame
+/// (responses carry a handful of logits and a token-latency trace), it
+/// exists so a corrupted or adversarial length prefix cannot make the
+/// reader allocate gigabytes.
+pub const MAX_FRAME: u32 = 16 << 20;
+
+/// A request as it travels the wire: the client-facing fields of
+/// [`Request`] (resolved server-side state like `quantized` stays out —
+/// the replica's own admission ladder owns it).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRequest {
+    /// fleet-level request id (echoed in the response)
+    pub id: u64,
+    /// whitespace-tokenized input text
+    pub text: String,
+    /// requested α (ignored for budget requests)
+    pub alpha: f32,
+    /// "mca" or "exact"
+    pub mode: String,
+    /// requested compute precision
+    pub precision: Precision,
+    /// `Some((ε, δ))` for Theorem-2 budget requests
+    pub budget: Option<(f64, Option<f64>)>,
+    /// `Some(max_new)` for autoregressive decode requests
+    pub decode: Option<usize>,
+}
+
+/// A response as it travels the wire: everything [`Response`] reports,
+/// with the latency flattened to integer microseconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireResponse {
+    /// id of the request this answers
+    pub id: u64,
+    /// argmax class (-1 when shed)
+    pub pred_class: i32,
+    /// raw classifier logits (empty when shed)
+    pub logits: Vec<f32>,
+    /// measured FLOPs-reduction factor
+    pub flops_reduction: f64,
+    /// Σ_layers Σ_tokens r_i
+    pub r_sum: f64,
+    /// real token count (0 when shed)
+    pub n_eff: u64,
+    /// replica-side submit-to-response latency in µs
+    pub latency_us: u64,
+    /// executed batch size
+    pub batch_size: u64,
+    /// α the batch executed at
+    pub alpha: f32,
+    /// mode actually executed
+    pub mode: String,
+    /// true for ε-budget requests
+    pub budget: bool,
+    /// compute precision actually served
+    pub precision: Precision,
+    /// rerouted to int8 by the replica's admission ladder
+    pub quantized: bool,
+    /// served at its budget ceiling under brownout
+    pub degraded: bool,
+    /// rejected by admission control
+    pub shed: bool,
+    /// generated tokens (decode requests)
+    pub decode_tokens: u64,
+    /// per-token decode latencies in ms
+    pub token_ms: Vec<f64>,
+}
+
+/// One replica's point-in-time load + health report (the `Pong` body).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LoadReport {
+    /// Σ Eq.-9 row cost of the replica's queued client requests
+    pub queued_cost: f64,
+    /// Σ Eq.-9 row cost held by its live decode sessions
+    pub decode_cost: f64,
+    /// worker threads still alive inside the replica
+    pub alive_workers: u64,
+    /// requests the replica has served
+    pub served: u64,
+    /// requests it has shed
+    pub shed: u64,
+}
+
+/// One protocol frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Worker startup banner: protocol version, served model, checkpoint
+    /// fingerprint, serving sequence length and in-process worker count.
+    Hello {
+        /// [`WIRE_VERSION`] of the worker binary
+        version: u32,
+        /// model name the replica serves
+        model: String,
+        /// FNV-1a fingerprint of the checkpoint file bytes
+        fingerprint: u64,
+        /// serving sequence length
+        seq: u64,
+        /// in-process worker threads behind this replica
+        workers: u64,
+    },
+    /// FE → worker: submit one request.
+    Submit(WireRequest),
+    /// Worker → FE: the request's single response.
+    Response(WireResponse),
+    /// FE → worker: health probe.
+    Ping {
+        /// echoed in the matching `Pong`
+        nonce: u64,
+    },
+    /// Worker → FE: probe reply carrying the routing load signal.
+    Pong {
+        /// nonce of the `Ping` this answers
+        nonce: u64,
+        /// the replica's current load
+        load: LoadReport,
+    },
+    /// FE → worker: stop admitting; in-flight requests still complete.
+    Drain,
+    /// FE → worker: exit after draining.
+    Shutdown,
+}
+
+// ---------------------------------------------------------------------------
+// LE byte codec
+// ---------------------------------------------------------------------------
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new(tag: u8) -> Enc {
+        Enc { buf: vec![tag] }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    /// f32 as raw bits: NaN payloads survive the trip.
+    fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn vec_f32(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.f32(x);
+        }
+    }
+    fn vec_f64(&mut self, v: &[f64]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.f64(x);
+        }
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated frame: wanted {n} bytes at {}, have {}", self.pos, self.buf.len());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(std::str::from_utf8(self.take(n)?).context("non-UTF-8 string field")?.to_string())
+    }
+    fn vec_f32(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        // Bound by the remaining payload, so a corrupted count cannot
+        // pre-allocate past the frame.
+        if n * 4 > self.buf.len() - self.pos {
+            bail!("f32 vec length {n} exceeds frame");
+        }
+        (0..n).map(|_| self.f32()).collect()
+    }
+    fn vec_f64(&mut self) -> Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        if n * 8 > self.buf.len() - self.pos {
+            bail!("f64 vec length {n} exceeds frame");
+        }
+        (0..n).map(|_| self.f64()).collect()
+    }
+    fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("{} trailing bytes after frame", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+fn enc_precision(e: &mut Enc, p: Precision) {
+    e.str(p.as_str());
+}
+
+fn dec_precision(d: &mut Dec) -> Result<Precision> {
+    let s = d.str()?;
+    Precision::parse(&s).with_context(|| format!("unknown precision {s:?} on the wire"))
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_SUBMIT: u8 = 2;
+const TAG_RESPONSE: u8 = 3;
+const TAG_PING: u8 = 4;
+const TAG_PONG: u8 = 5;
+const TAG_DRAIN: u8 = 6;
+const TAG_SHUTDOWN: u8 = 7;
+
+impl Frame {
+    /// Encode to a payload (tag + body, without the length prefix).
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Frame::Hello { version, model, fingerprint, seq, workers } => {
+                let mut e = Enc::new(TAG_HELLO);
+                e.u32(*version);
+                e.str(model);
+                e.u64(*fingerprint);
+                e.u64(*seq);
+                e.u64(*workers);
+                e.buf
+            }
+            Frame::Submit(r) => {
+                let mut e = Enc::new(TAG_SUBMIT);
+                e.u64(r.id);
+                e.str(&r.text);
+                e.f32(r.alpha);
+                e.str(&r.mode);
+                enc_precision(&mut e, r.precision);
+                match &r.budget {
+                    None => e.u8(0),
+                    Some((eps, delta)) => {
+                        e.u8(1);
+                        e.f64(*eps);
+                        match delta {
+                            None => e.u8(0),
+                            Some(d) => {
+                                e.u8(1);
+                                e.f64(*d);
+                            }
+                        }
+                    }
+                }
+                match r.decode {
+                    None => e.u8(0),
+                    Some(max_new) => {
+                        e.u8(1);
+                        e.u64(max_new as u64);
+                    }
+                }
+                e.buf
+            }
+            Frame::Response(r) => {
+                let mut e = Enc::new(TAG_RESPONSE);
+                e.u64(r.id);
+                e.i32(r.pred_class);
+                e.vec_f32(&r.logits);
+                e.f64(r.flops_reduction);
+                e.f64(r.r_sum);
+                e.u64(r.n_eff);
+                e.u64(r.latency_us);
+                e.u64(r.batch_size);
+                e.f32(r.alpha);
+                e.str(&r.mode);
+                e.u8(r.budget as u8);
+                enc_precision(&mut e, r.precision);
+                e.u8(r.quantized as u8);
+                e.u8(r.degraded as u8);
+                e.u8(r.shed as u8);
+                e.u64(r.decode_tokens);
+                e.vec_f64(&r.token_ms);
+                e.buf
+            }
+            Frame::Ping { nonce } => {
+                let mut e = Enc::new(TAG_PING);
+                e.u64(*nonce);
+                e.buf
+            }
+            Frame::Pong { nonce, load } => {
+                let mut e = Enc::new(TAG_PONG);
+                e.u64(*nonce);
+                e.f64(load.queued_cost);
+                e.f64(load.decode_cost);
+                e.u64(load.alive_workers);
+                e.u64(load.served);
+                e.u64(load.shed);
+                e.buf
+            }
+            Frame::Drain => Enc::new(TAG_DRAIN).buf,
+            Frame::Shutdown => Enc::new(TAG_SHUTDOWN).buf,
+        }
+    }
+
+    /// Decode a payload (as produced by [`Frame::encode`]). Rejects
+    /// unknown tags, truncated bodies and trailing garbage.
+    pub fn decode(payload: &[u8]) -> Result<Frame> {
+        let mut d = Dec::new(payload);
+        let tag = d.u8()?;
+        let frame = match tag {
+            TAG_HELLO => Frame::Hello {
+                version: d.u32()?,
+                model: d.str()?,
+                fingerprint: d.u64()?,
+                seq: d.u64()?,
+                workers: d.u64()?,
+            },
+            TAG_SUBMIT => {
+                let id = d.u64()?;
+                let text = d.str()?;
+                let alpha = d.f32()?;
+                let mode = d.str()?;
+                let precision = dec_precision(&mut d)?;
+                let budget = if d.u8()? != 0 {
+                    let eps = d.f64()?;
+                    let delta = if d.u8()? != 0 { Some(d.f64()?) } else { None };
+                    Some((eps, delta))
+                } else {
+                    None
+                };
+                let decode = if d.u8()? != 0 { Some(d.u64()? as usize) } else { None };
+                Frame::Submit(WireRequest { id, text, alpha, mode, precision, budget, decode })
+            }
+            TAG_RESPONSE => Frame::Response(WireResponse {
+                id: d.u64()?,
+                pred_class: d.i32()?,
+                logits: d.vec_f32()?,
+                flops_reduction: d.f64()?,
+                r_sum: d.f64()?,
+                n_eff: d.u64()?,
+                latency_us: d.u64()?,
+                batch_size: d.u64()?,
+                alpha: d.f32()?,
+                mode: d.str()?,
+                budget: d.u8()? != 0,
+                precision: dec_precision(&mut d)?,
+                quantized: d.u8()? != 0,
+                degraded: d.u8()? != 0,
+                shed: d.u8()? != 0,
+                decode_tokens: d.u64()?,
+                token_ms: d.vec_f64()?,
+            }),
+            TAG_PING => Frame::Ping { nonce: d.u64()? },
+            TAG_PONG => Frame::Pong {
+                nonce: d.u64()?,
+                load: LoadReport {
+                    queued_cost: d.f64()?,
+                    decode_cost: d.f64()?,
+                    alive_workers: d.u64()?,
+                    served: d.u64()?,
+                    shed: d.u64()?,
+                },
+            },
+            TAG_DRAIN => Frame::Drain,
+            TAG_SHUTDOWN => Frame::Shutdown,
+            other => bail!("unknown frame tag {other}"),
+        };
+        d.finish()?;
+        Ok(frame)
+    }
+}
+
+/// Write one length-prefixed frame and flush (a replica conversation is
+/// latency-bound, not throughput-bound: every frame must leave the pipe
+/// now, not on some buffer boundary).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<()> {
+    let payload = frame.encode();
+    let len = payload.len() as u32;
+    if len > MAX_FRAME {
+        bail!("frame of {len} bytes exceeds MAX_FRAME");
+    }
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(&payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame. `Ok(None)` on clean EOF (the peer
+/// closed the pipe between frames — the normal end of a conversation);
+/// an EOF mid-frame is an error.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>> {
+    let mut len_buf = [0u8; 4];
+    // Read the prefix byte-by-byte-tolerant: a clean EOF before any
+    // prefix byte is end-of-conversation, a partial prefix is corruption.
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len_buf[got..])? {
+            0 if got == 0 => return Ok(None),
+            0 => bail!("EOF inside frame length prefix"),
+            n => got += n,
+        }
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len > MAX_FRAME {
+        bail!("incoming frame of {len} bytes exceeds MAX_FRAME");
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).context("EOF inside frame payload")?;
+    Ok(Some(Frame::decode(&payload)?))
+}
+
+/// FNV-1a over a checkpoint file's bytes: the fleet-level identity of the
+/// served weights. Every replica of one fleet must report the same
+/// fingerprint in its `Hello` — a replica that loaded different weights
+/// would silently serve different logits behind the same front-end.
+pub fn checkpoint_fingerprint(path: &Path) -> Result<u64> {
+    let bytes = std::fs::read(path).with_context(|| format!("fingerprinting {path:?}"))?;
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in &bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    Ok(h)
+}
+
+impl WireRequest {
+    /// Client-side view of a [`Request`] (drops server-resolved state).
+    pub fn from_request(req: &Request) -> WireRequest {
+        WireRequest {
+            id: req.id,
+            text: req.text.clone(),
+            alpha: req.alpha,
+            mode: req.mode.clone(),
+            precision: req.precision,
+            budget: req.budget.as_ref().map(|b| (b.epsilon, b.delta)),
+            decode: req.decode.as_ref().map(|d| d.max_new),
+        }
+    }
+
+    /// Rebuild the replica-side [`Request`] (budget α re-resolves there).
+    pub fn into_request(self) -> Request {
+        Request {
+            id: self.id,
+            text: self.text,
+            alpha: self.alpha,
+            mode: self.mode,
+            precision: self.precision,
+            quantized: false,
+            budget: self
+                .budget
+                .map(|(epsilon, delta)| Budget { epsilon, delta, alpha_max: 1.0, degraded: false }),
+            decode: self.decode.map(|max_new| DecodeParams { max_new }),
+        }
+    }
+}
+
+impl WireResponse {
+    /// Flatten a replica-side [`Response`] for the wire.
+    pub fn from_response(r: &Response) -> WireResponse {
+        WireResponse {
+            id: r.id,
+            pred_class: r.pred_class,
+            logits: r.logits.clone(),
+            flops_reduction: r.flops_reduction,
+            r_sum: r.r_sum,
+            n_eff: r.n_eff as u64,
+            latency_us: r.latency.as_micros() as u64,
+            batch_size: r.batch_size as u64,
+            alpha: r.alpha,
+            mode: r.mode.clone(),
+            budget: r.budget,
+            precision: r.precision,
+            quantized: r.quantized,
+            degraded: r.degraded,
+            shed: r.shed,
+            decode_tokens: r.decode_tokens as u64,
+            token_ms: r.token_ms.clone(),
+        }
+    }
+
+    /// Rebuild the client-facing [`Response`].
+    pub fn into_response(self) -> Response {
+        Response {
+            id: self.id,
+            pred_class: self.pred_class,
+            logits: self.logits,
+            flops_reduction: self.flops_reduction,
+            r_sum: self.r_sum,
+            n_eff: self.n_eff as usize,
+            latency: Duration::from_micros(self.latency_us),
+            batch_size: self.batch_size as usize,
+            alpha: self.alpha,
+            mode: self.mode,
+            budget: self.budget,
+            precision: self.precision,
+            quantized: self.quantized,
+            degraded: self.degraded,
+            shed: self.shed,
+            decode_tokens: self.decode_tokens as usize,
+            token_ms: self.token_ms,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn sample_request() -> WireRequest {
+        WireRequest {
+            id: 42,
+            text: "the quick brown fox".to_string(),
+            alpha: 0.4,
+            mode: "mca".to_string(),
+            precision: Precision::Bf16,
+            budget: Some((0.25, Some(0.05))),
+            decode: Some(16),
+        }
+    }
+
+    fn sample_response() -> WireResponse {
+        WireResponse {
+            id: 42,
+            pred_class: 1,
+            logits: vec![0.1, -2.5, f32::NAN, f32::INFINITY],
+            flops_reduction: 2.75,
+            r_sum: 123.5,
+            n_eff: 37,
+            latency_us: 12_345,
+            batch_size: 8,
+            alpha: 0.6,
+            mode: "mca".to_string(),
+            budget: true,
+            precision: Precision::Int8,
+            quantized: true,
+            degraded: false,
+            shed: false,
+            decode_tokens: 9,
+            token_ms: vec![0.5, 1.25, f64::MAX],
+        }
+    }
+
+    /// PartialEq on NaN-bearing floats is useless; compare via bits.
+    fn assert_f32_bits(a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn every_frame_round_trips() {
+        let frames = vec![
+            Frame::Hello {
+                version: WIRE_VERSION,
+                model: "distil_sim".to_string(),
+                fingerprint: 0xdead_beef_1234_5678,
+                seq: 64,
+                workers: 2,
+            },
+            Frame::Submit(sample_request()),
+            Frame::Submit(WireRequest {
+                id: 0,
+                text: String::new(),
+                alpha: 0.0,
+                mode: "exact".to_string(),
+                precision: Precision::F32,
+                budget: None,
+                decode: None,
+            }),
+            Frame::Ping { nonce: u64::MAX },
+            Frame::Pong {
+                nonce: 7,
+                load: LoadReport {
+                    queued_cost: 12.25,
+                    decode_cost: 3.5,
+                    alive_workers: 2,
+                    served: 100,
+                    shed: 3,
+                },
+            },
+            Frame::Drain,
+            Frame::Shutdown,
+        ];
+        for f in frames {
+            let back = Frame::decode(&f.encode()).unwrap();
+            assert_eq!(back, f, "frame did not round-trip");
+        }
+        // The NaN-bearing response round-trips bit-exactly (PartialEq
+        // would call NaN != NaN, so compare bits field-by-field).
+        let r = sample_response();
+        let Frame::Response(back) = Frame::decode(&Frame::Response(r.clone()).encode()).unwrap()
+        else {
+            panic!("wrong variant");
+        };
+        assert_eq!(back.id, r.id);
+        assert_f32_bits(&back.logits, &r.logits);
+        assert_eq!(back.alpha.to_bits(), r.alpha.to_bits());
+        assert_eq!(back.precision, r.precision);
+        assert_eq!(back.token_ms.len(), r.token_ms.len());
+        assert_eq!(back.decode_tokens, r.decode_tokens);
+    }
+
+    #[test]
+    fn stream_round_trips_multiple_frames() {
+        let mut buf = Vec::new();
+        let frames =
+            vec![Frame::Ping { nonce: 1 }, Frame::Submit(sample_request()), Frame::Shutdown];
+        for f in &frames {
+            write_frame(&mut buf, f).unwrap();
+        }
+        let mut cur = Cursor::new(buf);
+        for f in &frames {
+            assert_eq!(&read_frame(&mut cur).unwrap().unwrap(), f);
+        }
+        // clean EOF after the last frame
+        assert!(read_frame(&mut cur).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_and_corrupt_frames_error() {
+        // EOF inside the length prefix
+        let mut cur = Cursor::new(vec![1u8, 0]);
+        assert!(read_frame(&mut cur).is_err());
+        // EOF inside the payload
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Ping { nonce: 9 }).unwrap();
+        buf.truncate(buf.len() - 2);
+        let mut cur = Cursor::new(buf);
+        assert!(read_frame(&mut cur).is_err());
+        // oversized length prefix is rejected before allocating
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        let mut cur = Cursor::new(huge);
+        assert!(read_frame(&mut cur).is_err());
+        // unknown tag
+        assert!(Frame::decode(&[99u8]).is_err());
+        // trailing garbage
+        let mut p = Frame::Drain.encode();
+        p.push(0);
+        assert!(Frame::decode(&p).is_err());
+        // truncated body
+        let p = Frame::Ping { nonce: 1 }.encode();
+        assert!(Frame::decode(&p[..p.len() - 1]).is_err());
+        // corrupted vec length cannot over-allocate
+        let mut resp = Frame::Response(sample_response()).encode();
+        // logits length field sits right after tag+u64+i32
+        let off = 1 + 8 + 4;
+        resp[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Frame::decode(&resp).is_err());
+    }
+
+    #[test]
+    fn request_and_response_conversions_round_trip() {
+        let wr = sample_request();
+        let req = wr.clone().into_request();
+        assert_eq!(req.id, 42);
+        assert_eq!(req.budget.as_ref().unwrap().epsilon, 0.25);
+        assert_eq!(req.budget.as_ref().unwrap().delta, Some(0.05));
+        assert_eq!(req.decode.as_ref().unwrap().max_new, 16);
+        assert!(!req.quantized, "server-side state must not travel");
+        assert_eq!(WireRequest::from_request(&req), wr);
+
+        let resp = sample_response().into_response();
+        assert_eq!(resp.latency, Duration::from_micros(12_345));
+        assert_eq!(resp.n_eff, 37);
+        let back = WireResponse::from_response(&resp);
+        assert_eq!(back.latency_us, 12_345);
+        assert_f32_bits(&back.logits, &sample_response().logits);
+    }
+
+    #[test]
+    fn fingerprint_tracks_content() {
+        let dir = std::env::temp_dir();
+        let a = dir.join("mca_wire_fp_a.bin");
+        let b = dir.join("mca_wire_fp_b.bin");
+        std::fs::write(&a, b"checkpoint-one").unwrap();
+        std::fs::write(&b, b"checkpoint-two").unwrap();
+        let fa = checkpoint_fingerprint(&a).unwrap();
+        let fb = checkpoint_fingerprint(&b).unwrap();
+        assert_ne!(fa, fb);
+        // stable across reads
+        assert_eq!(fa, checkpoint_fingerprint(&a).unwrap());
+        // missing file is an error, not a zero fingerprint
+        assert!(checkpoint_fingerprint(&dir.join("mca_wire_fp_missing.bin")).is_err());
+        let _ = std::fs::remove_file(&a);
+        let _ = std::fs::remove_file(&b);
+    }
+}

@@ -61,7 +61,14 @@ fn print_help() {
                        --canary-rate drive the adaptive-precision loop)\n\
            loadtest    open-loop Poisson load sweep against the worker pool\n\
                        (sweeps --workers, mixes --error-budget workloads,\n\
-                       writes BENCH_serving.json incl. brownout counters)\n\
+                       writes BENCH_serving.json incl. brownout counters);\n\
+                       --replicas adds a trace-driven multi-process fleet\n\
+                       stage (diurnal + flash-crowd arrivals, Zipf mixes,\n\
+                       cost-aware vs round-robin routing, --kill-replica\n\
+                       chaos) with scaling-efficiency entries\n\
+           worker      fleet replica process: serves a worker pool over\n\
+                       length-prefixed frames on stdin/stdout (spawned by\n\
+                       the fleet front-end; not for interactive use)\n\
            eval        accuracy-vs-FLOPs Pareto sweep through the serving\n\
                        pool: exact baseline + α grid + Theorem-2 ε budgets\n\
                        per (model, task), Eq.-9 FLOPs accounting, writes\n\
@@ -470,12 +477,58 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
                 .opt("canary-rate", "0", "fraction of MCA batches replayed exactly as canaries")
                 .opt("quality-floor", "0.5", "canary margin-drift quality floor")
                 .opt("json", "BENCH_serving.json", "machine-readable results (empty to skip)")
+                .opt(
+                    "replicas",
+                    "",
+                    "fleet sizes for the multi-process trace stage (comma list; empty = skip): \
+                     spawns that many `mca worker` child processes behind the cost-aware \
+                     front-end and replays the seeded trace against each size",
+                )
+                .opt("replica-workers", "2", "in-process worker threads per fleet replica")
+                .opt("trace-secs", "3", "fleet trace length (diurnal + flash-crowd window)")
+                .opt("trace-rate", "120", "fleet trace baseline offered rate (req/s)")
+                .flag(
+                    "kill-replica",
+                    "chaos: SIGKILL replica 0 a third of the way through each multi-replica \
+                     trace and require a respawn with zero lost responses",
+                )
                 .parse(rest)?;
             if args.get_flag("help-cmd") {
                 eprint!("{}", args.usage(cmd));
                 return Ok(());
             }
             loadtest(&args)
+        }
+        "worker" => {
+            // Fleet replica: a full serving pool behind the wire protocol.
+            // Spawned by the fleet front-end (`mca loadtest --replicas` or
+            // coordinator::fleet::Fleet); stdout carries frames only.
+            let args = common(Args::new())
+                .opt("model", "bert_sim", "model config")
+                .opt("task", "sst2_sim", "task checkpoint to serve")
+                .opt(
+                    "checkpoint",
+                    "",
+                    "explicit checkpoint path (default: <checkpoints>/<model>_<task>); must \
+                     already exist — replicas never train, the front-end does that once",
+                )
+                .opt("seq", "64", "serving sequence length")
+                .opt("max-wait-ms", "10", "batching window")
+                .opt("workers", "2", "in-process worker threads behind this replica")
+                .opt("queue-cap", "512", "admission cap in Eq.-9 cost units (overflow is shed)")
+                .opt(
+                    "brownout-watermark",
+                    "0",
+                    "queue depth that triggers precision brownout (0 = disabled)",
+                )
+                .opt("canary-rate", "0", "fraction of MCA batches replayed exactly as canaries")
+                .opt("quality-floor", "0.5", "canary margin-drift quality floor")
+                .parse(rest)?;
+            if args.get_flag("help-cmd") {
+                eprint!("{}", args.usage(cmd));
+                return Ok(());
+            }
+            worker_cmd(&args)
         }
         "--help" | "-h" | "help" => {
             print_help();
@@ -648,6 +701,183 @@ fn eval_cmd(args: &Args) -> Result<()> {
     emit(args, &report::render_eval_report(&rep))
 }
 
+/// `mca worker`: one fleet replica. Starts a full serving pool, then
+/// speaks the length-prefixed wire protocol — `Hello` banner on stdout,
+/// `Submit`/`Ping`/`Drain`/`Shutdown` frames on stdin, responses and
+/// pongs back on stdout. stdout carries frames ONLY; logs go to stderr.
+fn worker_cmd(args: &Args) -> Result<()> {
+    use mca::coordinator::wire::{self, Frame, LoadReport, WireResponse, WIRE_VERSION};
+    use mca::coordinator::{Server, ServerConfig};
+    use std::io::Write as _;
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    let model = args.get("model");
+    let task = args.get("task");
+    let p = pipeline(args)?;
+    let ckpt = {
+        let c = args.get("checkpoint");
+        if c.is_empty() {
+            mca::model::checkpoint_path(&p.ckpt_root, &model, &task)
+        } else {
+            PathBuf::from(c)
+        }
+    };
+    if !ckpt.exists() {
+        bail!(
+            "worker: checkpoint {ckpt:?} does not exist — replicas never train; \
+             the fleet front-end trains it once before spawning"
+        );
+    }
+    // The fingerprint in the Hello is the serialization seam's identity
+    // check: the front-end refuses replicas whose checkpoint bytes differ.
+    let fingerprint = wire::checkpoint_fingerprint(&ckpt)?;
+    let seq = args.get_usize("seq")?;
+    let workers = args.get_usize("workers")?;
+    let server = Server::start(
+        p.backend.clone(),
+        ServerConfig {
+            model: model.clone(),
+            checkpoint: ckpt,
+            max_wait: Duration::from_millis(args.get_u64("max-wait-ms")?),
+            seq,
+            workers,
+            queue_cap: args.get_usize("queue-cap")?,
+            brownout_watermark: args.get_usize("brownout-watermark")?,
+            canary_rate: args.get_f64("canary-rate")?,
+            quality_floor: args.get_f64("quality-floor")?,
+        },
+    )?;
+
+    // One writer thread owns stdout: Hello, responses (from per-request
+    // forwarder threads) and pongs all serialize through this channel so
+    // frame bytes never interleave.
+    let (out_tx, out_rx) = mpsc::channel::<Frame>();
+    let writer = std::thread::spawn(move || {
+        let stdout = std::io::stdout();
+        let mut out = stdout.lock();
+        for frame in out_rx {
+            if wire::write_frame(&mut out, &frame).is_err() {
+                return; // front-end is gone; the stdin loop sees EOF too
+            }
+            let _ = out.flush();
+        }
+    });
+    let _ = out_tx.send(Frame::Hello {
+        version: WIRE_VERSION,
+        model: model.clone(),
+        fingerprint,
+        seq: seq as u64,
+        workers: workers as u64,
+    });
+
+    // A request that cannot reach the pool (draining, or the pool died
+    // mid-flight) still gets exactly one response: a shed.
+    let shed_frame = |wr: &wire::WireRequest| {
+        Frame::Response(WireResponse {
+            id: wr.id,
+            pred_class: -1,
+            logits: Vec::new(),
+            flops_reduction: 1.0,
+            r_sum: 0.0,
+            n_eff: 0,
+            latency_us: 0,
+            batch_size: 0,
+            alpha: wr.alpha,
+            mode: wr.mode.clone(),
+            budget: wr.budget.is_some(),
+            precision: wr.precision,
+            quantized: false,
+            degraded: false,
+            shed: true,
+            decode_tokens: 0,
+            token_ms: Vec::new(),
+        })
+    };
+
+    let stdin = std::io::stdin();
+    let mut input = stdin.lock();
+    let mut draining = false;
+    let mut forwarders: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    loop {
+        let frame = match wire::read_frame(&mut input) {
+            Ok(Some(f)) => f,
+            Ok(None) => break, // clean EOF: front-end closed our stdin
+            Err(e) => {
+                eprintln!("[worker] protocol error on stdin: {e:#}");
+                break;
+            }
+        };
+        match frame {
+            Frame::Submit(wr) => {
+                if draining {
+                    let _ = out_tx.send(shed_frame(&wr));
+                    continue;
+                }
+                let rx = if let Some(max_new) = wr.decode {
+                    server.submit_decode(&wr.text, wr.alpha, &wr.mode, wr.precision, max_new)
+                } else if let Some((eps, delta)) = wr.budget {
+                    server
+                        .submitter()
+                        .submit_budget_with_precision(&wr.text, eps, delta, wr.precision)
+                } else {
+                    server.submitter().submit_with_precision(
+                        &wr.text,
+                        wr.alpha,
+                        &wr.mode,
+                        wr.precision,
+                    )
+                };
+                let tx = out_tx.clone();
+                forwarders.push(std::thread::spawn(move || {
+                    let frame = match rx.recv() {
+                        Ok(resp) => {
+                            // The pool assigns its own internal ids; the wire
+                            // id is the fleet's — echo that one.
+                            let mut w = WireResponse::from_response(&resp);
+                            w.id = wr.id;
+                            Frame::Response(w)
+                        }
+                        Err(_) => shed_frame(&wr),
+                    };
+                    let _ = tx.send(frame);
+                }));
+            }
+            Frame::Ping { nonce } => match server.stats() {
+                Ok(st) => {
+                    let load = LoadReport {
+                        queued_cost: st.queued_cost,
+                        decode_cost: st.decode_cost,
+                        alive_workers: st.alive_workers as u64,
+                        served: st.served as u64,
+                        shed: st.shed as u64,
+                    };
+                    let _ = out_tx.send(Frame::Pong { nonce, load });
+                }
+                Err(e) => {
+                    eprintln!("[worker] pool is gone: {e:#}");
+                    break;
+                }
+            },
+            Frame::Drain => draining = true,
+            Frame::Shutdown => break,
+            // FE-direction-only frames arriving here are protocol errors.
+            Frame::Hello { .. } | Frame::Response(_) | Frame::Pong { .. } => {
+                eprintln!("[worker] unexpected frame from front-end; ignoring");
+            }
+        }
+    }
+    // Drain the pool (every admitted request resolves), let the forwarders
+    // flush their responses, then close stdout.
+    server.shutdown()?;
+    for f in forwarders {
+        let _ = f.join();
+    }
+    drop(out_tx);
+    let _ = writer.join();
+    Ok(())
+}
+
 fn loadtest(args: &Args) -> Result<()> {
     use mca::coordinator::loadgen::{
         run_decode, run_load, run_replay, write_bench_json, LoadResult, Workload,
@@ -776,6 +1006,145 @@ fn loadtest(args: &Args) -> Result<()> {
         last_stats = Some(server.stats()?);
         server.shutdown()?;
     }
+
+    // ---- multi-process fleet stage (trace-driven) ------------------------
+    let replica_counts = args.get_usize_list("replicas")?;
+    if !replica_counts.is_empty() {
+        use mca::coordinator::fleet::{Fleet, FleetConfig, ReplicaState, Routing};
+        use mca::coordinator::loadgen::{run_trace, FleetCounters, TraceCfg};
+
+        let worker_bin = std::env::current_exe()?;
+        let worker_args: Vec<String> = vec![
+            "--model".into(),
+            model.clone(),
+            "--task".into(),
+            task.clone(),
+            "--backend".into(),
+            args.get("backend"),
+            "--checkpoints".into(),
+            args.get("checkpoints"),
+            "--workers".into(),
+            args.get("replica-workers"),
+            "--seq".into(),
+            "64".into(),
+            "--max-wait-ms".into(),
+            args.get("max-wait-ms"),
+            "--queue-cap".into(),
+            args.get("queue-cap"),
+            "--brownout-watermark".into(),
+            args.get("brownout-watermark"),
+        ];
+        let trace = TraceCfg {
+            duration: Duration::from_secs(args.get_u64("trace-secs")?),
+            base_rate: args.get_f64("trace-rate")?,
+            decode_frac: 0.25,
+            budget_frac,
+            alpha_mix: alpha_mix.clone(),
+            epsilon_mix: epsilon_mix.clone(),
+            max_new: decode_max_new,
+            seed,
+            ..TraceCfg::default()
+        };
+        let kill = args.get_flag("kill-replica");
+        let mut base_achieved: Option<f64> = None;
+        for &m in &replica_counts {
+            // The same seeded trace drives every (size, policy) cell, so
+            // scaling efficiency and routing deltas are workload-identical.
+            for routing in [Routing::CostAware, Routing::RoundRobin] {
+                let policy = match routing {
+                    Routing::CostAware => "cost",
+                    Routing::RoundRobin => "rr",
+                };
+                // Round-robin is the experimental control: one size is
+                // enough for the comparison, so skip it elsewhere.
+                if routing == Routing::RoundRobin && Some(&m) != replica_counts.last() {
+                    continue;
+                }
+                let fleet = Fleet::start(FleetConfig {
+                    worker_bin: worker_bin.clone(),
+                    worker_args: worker_args.clone(),
+                    replicas: m,
+                    routing,
+                    ..FleetConfig::default()
+                })?;
+                fleet.wait_ready(m, Duration::from_secs(180))?;
+                let chaos = kill && m > 1 && routing == Routing::CostAware;
+                if chaos {
+                    let ks = fleet.kill_switch(0);
+                    let delay = trace.duration / 3;
+                    std::thread::spawn(move || {
+                        std::thread::sleep(delay);
+                        ks.fire();
+                    });
+                }
+                let mut r = run_trace(&fleet, &texts, &trace)?;
+                let st = fleet.stats()?;
+                if r.lost > 0 {
+                    bail!(
+                        "fleet({m},{policy}): {} requests got NO response — the \
+                         exactly-one-response contract is broken",
+                        r.lost
+                    );
+                }
+                if chaos && st.respawns == 0 {
+                    bail!("fleet({m},{policy}): replica 0 was killed but never respawned");
+                }
+                let total_cost: f64 =
+                    st.replicas.iter().map(|x| x.routed_cost_total).sum::<f64>().max(1e-9);
+                let shares: Vec<f64> =
+                    st.replicas.iter().map(|x| x.routed_cost_total / total_cost).collect();
+                let imbalance = shares.iter().cloned().fold(0.0, f64::max)
+                    - shares.iter().cloned().fold(1.0, f64::min);
+                let eff = match (m, base_achieved) {
+                    (1, _) => 1.0,
+                    (_, Some(base)) if base > 0.0 => r.achieved / (m as f64 * base),
+                    _ => 0.0,
+                };
+                if m == 1 && routing == Routing::CostAware {
+                    base_achieved = Some(r.achieved);
+                }
+                r.fleet = Some(FleetCounters {
+                    replicas: m,
+                    respawns: st.respawns,
+                    rerouted: st.rerouted,
+                    fleet_shed: st.fleet_shed,
+                    scaling_efficiency: eff,
+                    cost_imbalance: imbalance,
+                });
+                eprintln!(
+                    "[loadtest] fleet m={m} {policy}: {:.1} req/s (eff {:.2}), lost {}, \
+                     shed {}+{} fleet, rerouted {}, respawns {}, imbalance {:.3}",
+                    r.achieved, eff, r.lost, r.shed, st.fleet_shed, st.rerouted, st.respawns,
+                    imbalance
+                );
+                for rep in &st.replicas {
+                    eprintln!(
+                        "[loadtest]   replica {}: {} served, state {}, advertised cost {:.1}+{:.1}",
+                        rep.slot,
+                        rep.served,
+                        rep.state.as_str(),
+                        rep.load.queued_cost,
+                        rep.load.decode_cost
+                    );
+                }
+                let states: Vec<ReplicaState> =
+                    st.replicas.iter().map(|x| x.state).collect();
+                if chaos && !states.contains(&ReplicaState::Ready) {
+                    bail!("fleet({m},{policy}): no Ready replica survived the chaos run");
+                }
+                text.push_str(&format!(
+                    "| fleet {m} ({policy}) | {:.0} | {:.1} | {} | {:.1} | {:.1} | {:.1} | {:.2}× | {:.2} |\n",
+                    r.offered, r.achieved, r.shed, r.mean_ms, r.p50_ms, r.p99_ms,
+                    r.mean_flops_reduction, r.mean_resolved_alpha
+                ));
+                let kind =
+                    if policy == "cost" { "fleet_trace" } else { "fleet_trace_rr" };
+                entries.push((m, kind.to_string(), r));
+                fleet.shutdown()?;
+            }
+        }
+    }
+
     let json_path = args.get("json");
     if !json_path.is_empty() {
         write_bench_json(std::path::Path::new(&json_path), &model, &entries, last_stats.as_ref())?;

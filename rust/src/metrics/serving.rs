@@ -376,7 +376,9 @@ mod tests {
         assert_eq!(a02.count, 3);
         let a06 = alphas.iter().find(|a| (a.alpha - 0.6).abs() < 1e-6).unwrap();
         assert_eq!(a06.count, 1);
-        assert!((a06.p50_ms - 30.0).abs() < 1e-9);
+        // quantiles are log-bucketed: agree with the sample to within
+        // half a bucket width at that value
+        assert!((a06.p50_ms - 30.0).abs() <= LatencyStats::resolution_ms(30.0) / 2.0);
 
         let all = m.total_lat();
         assert_eq!(all.count(), 4);

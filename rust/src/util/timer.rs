@@ -31,52 +31,129 @@ impl Timer {
     }
 }
 
-/// Streaming latency statistics: count/mean plus exact percentiles over the
-/// recorded samples (we keep all samples; serving runs here are bounded).
+/// Sub-bucket resolution: each power-of-two octave is split into
+/// `2^SUB_BITS` linear sub-buckets, so every bucket's width is at most
+/// `1/2^SUB_BITS` (6.25%) of its lower bound.
+const SUB_BITS: u32 = 4;
+/// Number of linear 1-µs buckets (and sub-buckets per octave).
+const LIN: usize = 1 << SUB_BITS;
+
+/// Log-bucketed latency histogram (HDR-style). Samples below `2^SUB_BITS`
+/// µs land in exact 1-µs buckets; above that, each power-of-two octave is
+/// split into `2^SUB_BITS` linear sub-buckets, bounding relative quantile
+/// error by half a bucket width (≤ 1/32 of the value).
+///
+/// The histogram form is what makes multi-worker (and multi-replica)
+/// aggregation honest: [`LatencyStats::merge`] adds bucket counts, and
+/// because bucketing is monotone, a nearest-rank quantile of the merged
+/// histogram lands in the *same* bucket as the quantile of the pooled raw
+/// samples — they agree to within one bucket width (pinned by the
+/// `merged_quantiles_match_pooled_samples` property test). The mean stays
+/// exact via a running sum.
 #[derive(Debug, Default, Clone)]
 pub struct LatencyStats {
-    samples_us: Vec<u64>,
+    /// Bucket counts, grown lazily up to the highest occupied index.
+    counts: Vec<u64>,
+    /// Total number of recorded samples.
+    total: u64,
+    /// Exact sum of all samples in µs (mean is not bucket-quantized).
+    sum_us: u128,
+}
+
+/// Bucket index for a sample of `v` µs.
+fn bucket_index(v: u64) -> usize {
+    if v < LIN as u64 {
+        v as usize
+    } else {
+        let o = 63 - v.leading_zeros(); // 2^o <= v < 2^(o+1), o >= SUB_BITS
+        let shift = o - SUB_BITS;
+        ((shift as usize + 1) << SUB_BITS) + ((v >> shift) as usize & (LIN - 1))
+    }
+}
+
+/// (lower bound in µs, width in µs) of bucket `i`.
+fn bucket_bounds(i: usize) -> (u64, u64) {
+    if i < LIN {
+        (i as u64, 1)
+    } else {
+        let shift = (i / LIN - 1) as u32;
+        let sub = (i % LIN) as u64;
+        ((LIN as u64 + sub) << shift, 1u64 << shift)
+    }
+}
+
+/// Representative value (bucket midpoint) reported for bucket `i`, in µs.
+fn representative_us(i: usize) -> f64 {
+    let (lo, w) = bucket_bounds(i);
+    lo as f64 + (w - 1) as f64 / 2.0
 }
 
 impl LatencyStats {
+    fn record_us(&mut self, us: u64) {
+        let idx = bucket_index(us);
+        if idx >= self.counts.len() {
+            self.counts.resize(idx + 1, 0);
+        }
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum_us += us as u128;
+    }
+
     /// Record one latency sample.
     pub fn record(&mut self, d: Duration) {
-        self.samples_us.push(d.as_micros() as u64);
+        self.record_us(d.as_micros() as u64);
     }
 
     /// Record one latency sample given in milliseconds.
     pub fn record_ms(&mut self, ms: f64) {
-        self.samples_us.push((ms * 1e3) as u64);
+        self.record_us((ms * 1e3) as u64);
     }
 
     /// Number of recorded samples.
     pub fn count(&self) -> usize {
-        self.samples_us.len()
+        self.total as usize
     }
 
-    /// Fold another histogram's samples into this one (per-worker →
-    /// aggregate rollup in the serving metrics).
+    /// Fold another histogram into this one (per-worker → aggregate, and
+    /// per-replica → fleet, rollups in the serving metrics). Bucket counts
+    /// add exactly, so merge order never changes any reported quantile.
     pub fn merge(&mut self, other: &LatencyStats) {
-        self.samples_us.extend_from_slice(&other.samples_us);
+        if other.counts.len() > self.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (i, c) in other.counts.iter().enumerate() {
+            self.counts[i] += c;
+        }
+        self.total += other.total;
+        self.sum_us += other.sum_us;
     }
 
-    /// Mean latency in milliseconds (0 when empty).
+    /// Mean latency in milliseconds (0 when empty). Exact — computed from
+    /// the running sample sum, not from bucket midpoints.
     pub fn mean_ms(&self) -> f64 {
-        if self.samples_us.is_empty() {
+        if self.total == 0 {
             return 0.0;
         }
-        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64 / 1e3
+        self.sum_us as f64 / self.total as f64 / 1e3
     }
 
-    /// Exact percentile (nearest-rank) in milliseconds.
+    /// Nearest-rank percentile in milliseconds, reported as the midpoint
+    /// of the bucket holding the rank-th smallest sample (error ≤ half the
+    /// bucket width at that value — see [`LatencyStats::resolution_ms`]).
     pub fn percentile_ms(&self, p: f64) -> f64 {
-        if self.samples_us.is_empty() {
+        if self.total == 0 {
             return 0.0;
         }
-        let mut v = self.samples_us.clone();
-        v.sort_unstable();
-        let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
-        v[rank.clamp(1, v.len()) - 1] as f64 / 1e3
+        let rank = (((p / 100.0) * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return representative_us(i) / 1e3;
+            }
+        }
+        // Unreachable when counts are consistent with `total`.
+        representative_us(self.counts.len().saturating_sub(1)) / 1e3
     }
 
     /// Median latency in milliseconds.
@@ -88,23 +165,75 @@ impl LatencyStats {
     pub fn p99_ms(&self) -> f64 {
         self.percentile_ms(99.0)
     }
+
+    /// Width (in ms) of the histogram bucket containing `ms` — the
+    /// granularity at which quantiles near that value are reported.
+    /// Reported quantiles sit within half this width of the true
+    /// nearest-rank sample value; tests use it as their tolerance.
+    pub fn resolution_ms(ms: f64) -> f64 {
+        bucket_bounds(bucket_index((ms * 1e3) as u64)).1 as f64 / 1e3
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop;
 
     #[test]
-    fn percentiles_exact() {
+    fn bucket_layout_is_monotone_and_tight() {
+        // Every sample maps into a bucket whose [lower, lower+width) range
+        // contains it, indices are non-decreasing in the value (monotone
+        // bucketing is what makes rank-walking sound), and the relative
+        // width never exceeds 2^-SUB_BITS.
+        let mut prev = 0usize;
+        for v in 0u64..4096 {
+            let i = bucket_index(v);
+            let (lo, w) = bucket_bounds(i);
+            assert!(lo <= v && v < lo + w, "v={v} outside bucket {i} [{lo},{})", lo + w);
+            assert!(i >= prev, "index not monotone at v={v}");
+            if v >= LIN as u64 {
+                assert!(w as f64 / lo as f64 <= 1.0 / LIN as f64 + 1e-12, "bucket {i} too wide");
+            } else {
+                assert_eq!(w, 1, "linear range must be exact");
+            }
+            prev = i;
+        }
+        // Octave edges stay containment-correct far beyond the dense scan.
+        for s in 1..=40 {
+            for v in [(1u64 << s) - 1, 1u64 << s, (1u64 << s) + 1] {
+                let (lo, w) = bucket_bounds(bucket_index(v));
+                assert!(lo <= v && v < lo + w, "v={v} outside its bucket");
+            }
+        }
+    }
+
+    #[test]
+    fn percentiles_within_bucket_resolution() {
         let mut s = LatencyStats::default();
         for ms in 1..=100 {
             s.record_ms(ms as f64);
         }
         assert_eq!(s.count(), 100);
-        assert!((s.p50_ms() - 50.0).abs() < 1e-9);
-        assert!((s.p99_ms() - 99.0).abs() < 1e-9);
-        assert!((s.percentile_ms(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.p50_ms() - 50.0).abs() <= LatencyStats::resolution_ms(50.0) / 2.0);
+        assert!((s.p99_ms() - 99.0).abs() <= LatencyStats::resolution_ms(99.0) / 2.0);
+        assert!(
+            (s.percentile_ms(100.0) - 100.0).abs() <= LatencyStats::resolution_ms(100.0) / 2.0
+        );
+        // The mean is exact — it comes from the running sum, not buckets.
         assert!((s.mean_ms() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sub_linear_samples_are_exact() {
+        // Values below 2^SUB_BITS µs occupy width-1 buckets: reported
+        // quantiles are exact.
+        let mut s = LatencyStats::default();
+        for us in [3u64, 7, 7, 11] {
+            s.record(Duration::from_micros(us));
+        }
+        assert!((s.p50_ms() - 0.007).abs() < 1e-12);
+        assert!((s.percentile_ms(100.0) - 0.011).abs() < 1e-12);
     }
 
     #[test]
@@ -119,8 +248,72 @@ mod tests {
         }
         a.merge(&b);
         assert_eq!(a.count(), 100);
-        assert!((a.p50_ms() - 50.0).abs() < 1e-9);
+        assert!((a.p50_ms() - 50.0).abs() <= LatencyStats::resolution_ms(50.0) / 2.0);
         assert!((a.mean_ms() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merged_quantiles_match_pooled_samples() {
+        // The satellite-3 contract: quantiles reported after merging
+        // ragged per-worker histograms agree with the nearest-rank
+        // quantile of the pooled raw samples to within one bucket width.
+        prop::check(200, |g| {
+            let workers = g.usize(1..6);
+            let mut merged = LatencyStats::default();
+            let mut pooled: Vec<u64> = Vec::new();
+            for _ in 0..workers {
+                let mut w = LatencyStats::default();
+                let n = g.usize(0..40);
+                // Mixed scales: sub-µs noise through multi-second tails.
+                let scale = *g.choose(&[10u64, 300, 20_000, 900_000]);
+                for _ in 0..n {
+                    let us = g.u64(0..scale + 1);
+                    w.record(Duration::from_micros(us));
+                    pooled.push(us);
+                }
+                merged.merge(&w);
+            }
+            if pooled.is_empty() {
+                if merged.p50_ms() != 0.0 {
+                    return Err("empty merge must report 0".into());
+                }
+                return Ok(());
+            }
+            pooled.sort_unstable();
+            for p in [10.0, 50.0, 90.0, 99.0, 100.0] {
+                let rank = (((p / 100.0) * pooled.len() as f64).ceil() as usize)
+                    .clamp(1, pooled.len());
+                let truth = pooled[rank - 1] as f64 / 1e3;
+                let got = merged.percentile_ms(p);
+                let tol = LatencyStats::resolution_ms(truth);
+                prop::close(got, truth, tol, &format!("p{p} (n={})", pooled.len()))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_order_is_irrelevant() {
+        let mut parts = Vec::new();
+        for k in 0..4u64 {
+            let mut s = LatencyStats::default();
+            for i in 0..20 {
+                s.record_ms((k * 37 + i * 13 + 1) as f64 * 0.83);
+            }
+            parts.push(s);
+        }
+        let mut fwd = LatencyStats::default();
+        let mut rev = LatencyStats::default();
+        for s in &parts {
+            fwd.merge(s);
+        }
+        for s in parts.iter().rev() {
+            rev.merge(s);
+        }
+        for p in [1.0, 25.0, 50.0, 75.0, 99.0] {
+            assert_eq!(fwd.percentile_ms(p), rev.percentile_ms(p));
+        }
+        assert_eq!(fwd.mean_ms(), rev.mean_ms());
     }
 
     #[test]

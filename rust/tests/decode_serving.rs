@@ -8,6 +8,7 @@
 mod common;
 
 use std::collections::HashSet;
+use std::sync::mpsc;
 use std::time::Duration;
 
 use mca::coordinator::{Server, ServerConfig};
@@ -117,6 +118,126 @@ fn decode_and_batch_traffic_share_the_pool() {
     assert_eq!(stats.decode_requests, 6);
     assert_eq!(stats.decode_tokens, decode_tokens);
     assert_eq!(stats.served, 12, "six decode sessions + six batch requests");
+    server.shutdown().expect("shutdown");
+}
+
+#[test]
+fn killing_a_worker_mid_decode_releases_its_ledger_cost() {
+    // Regression: a worker killed mid-decode used to strand its live
+    // sessions' Eq.-9 cost in the decode ledger forever — admission
+    // headroom leaked away one crash at a time. The dispatcher now
+    // retires the dead worker's ledger entries, so headroom recovers.
+    let backend = BackendSpec::Native;
+    let (ckpt, _) = common::make_checkpoint(&backend, "distil_sim", "decode_killworker");
+    let server = Server::start(backend, config(ckpt, 2)).expect("server start");
+
+    let mut rxs = Vec::new();
+    for _ in 0..8 {
+        rxs.push(server.submit_decode("n0 v1 n2", 0.4, "mca", Precision::F32, 24));
+    }
+    server.kill_worker(0);
+
+    // kill_worker and stats ride the same dispatcher channel, so this
+    // snapshot already reflects the retirement.
+    let st = server.stats().expect("stats");
+    assert_eq!(st.alive_workers, 1, "killed worker still counted alive");
+
+    // The dead worker's sessions lose their response channels (the crash
+    // being simulated); the survivor's complete normally. Nothing hangs.
+    let mut answered = 0usize;
+    let mut dropped = 0usize;
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(120)) {
+            Ok(r) => {
+                assert!(!r.shed, "well under the cap, nothing should shed");
+                answered += 1;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => dropped += 1,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                panic!("decode session hung after the worker kill")
+            }
+        }
+    }
+    assert_eq!(answered + dropped, 8, "a session vanished without resolving");
+
+    // The leak check: every ledger entry — the survivor's via DecodeDone,
+    // the victim's via the retirement — must release. DecodeDone can
+    // trail the response channel, so poll.
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    loop {
+        let st = server.stats().expect("stats");
+        if st.decode_cost.abs() < 1e-9 && st.queued_cost.abs() < 1e-9 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "decode ledger never drained: decode_cost={}, queued_cost={}",
+            st.decode_cost,
+            st.queued_cost
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // Recovered headroom is usable: a fresh session admits and completes
+    // on the surviving worker.
+    let r = server
+        .submit_decode("n1 v2 n3", 0.4, "mca", Precision::F32, 4)
+        .recv_timeout(Duration::from_secs(120))
+        .expect("fresh decode after the kill");
+    assert!(!r.shed, "recovered headroom rejected a fresh session");
+    assert_eq!(r.decode_tokens, 4);
+    server.shutdown().expect("shutdown");
+}
+
+#[test]
+fn decode_admission_rejects_full_prompts_at_the_boundary() {
+    // Regression: a prompt that already fills the KV cache could never
+    // emit a token, but admission used to accept it — charging the client
+    // and holding headroom for a prefill that produced nothing. Both
+    // sides of the boundary: `prompt == max_len` sheds, `== max_len − 1`
+    // admits with exactly one token of headroom.
+    let backend = BackendSpec::Native;
+    let (ckpt, _) = common::make_checkpoint(&backend, "distil_sim", "decode_boundary");
+    let mut cfg = config(ckpt, 2);
+    cfg.seq = 64; // serve at the model's full KV capacity (max_len = 64)
+    let server = Server::start(backend, cfg).expect("server start");
+
+    // n words tokenize to [CLS] + n + [SEP] = n + 2 prompt positions.
+    let words = |n: usize| {
+        (0..n).map(|i| ["n0", "v1", "n2", "v3"][i % 4]).collect::<Vec<_>>().join(" ")
+    };
+
+    // 62 words → prompt length 64 == max_len: zero headroom, shed.
+    let r = server
+        .submit_decode(&words(62), 0.4, "mca", Precision::F32, 8)
+        .recv_timeout(Duration::from_secs(120))
+        .expect("boundary response");
+    assert!(r.shed, "full prompt (== max_len) must shed at admission");
+    assert_eq!(r.decode_tokens, 0);
+    assert!(r.token_ms.is_empty());
+
+    // 200 words truncate to the same 64-position prompt: still shed —
+    // truncation must not smuggle an over-long prompt past the check.
+    let r = server
+        .submit_decode(&words(200), 0.4, "mca", Precision::F32, 8)
+        .recv_timeout(Duration::from_secs(120))
+        .expect("truncated response");
+    assert!(r.shed, "truncated-to-full prompt must shed too");
+
+    // 61 words → prompt length 63 == max_len − 1: admitted, and the one
+    // position of headroom yields exactly one token despite max_new = 8.
+    let r = server
+        .submit_decode(&words(61), 0.4, "mca", Precision::F32, 8)
+        .recv_timeout(Duration::from_secs(120))
+        .expect("one-below-boundary response");
+    assert!(!r.shed, "max_len − 1 prompt must admit");
+    assert_eq!(r.decode_tokens, 1, "one position of headroom → one token");
+    assert_eq!(r.token_ms.len(), 1);
+
+    let stats = server.stats().expect("stats");
+    assert_eq!(stats.shed, 2, "both full prompts count as shed");
+    assert_eq!(stats.decode_requests, 1, "only the admitted session served");
+    assert!(stats.decode_cost.abs() < 1e-9, "shed prompts must not hold ledger cost");
     server.shutdown().expect("shutdown");
 }
 

@@ -1,0 +1,166 @@
+//! Fleet-level serving tests: a front-end routing over real `mca worker`
+//! child processes through the length-prefixed wire protocol. The chaos
+//! test kills a replica mid-flight and demands the exactly-one-response
+//! contract plus a respawn; the routing test shows cost-aware placement
+//! balancing Eq.-9 cost where round-robin provably cannot.
+
+mod common;
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use mca::coordinator::fleet::{Fleet, FleetConfig, ReplicaState, Routing};
+use mca::runtime::BackendSpec;
+use mca::tensor::Precision;
+
+fn fleet_config(ckpt: &PathBuf, replicas: usize, routing: Routing) -> FleetConfig {
+    FleetConfig {
+        worker_bin: PathBuf::from(env!("CARGO_BIN_EXE_mca")),
+        worker_args: vec![
+            "--model".into(),
+            "distil_sim".into(),
+            "--backend".into(),
+            "native".into(),
+            "--checkpoint".into(),
+            ckpt.display().to_string(),
+            "--seq".into(),
+            "32".into(),
+            "--workers".into(),
+            "2".into(),
+            "--max-wait-ms".into(),
+            "2".into(),
+        ],
+        replicas,
+        routing,
+        heartbeat: Duration::from_millis(100),
+        heartbeat_timeout: Duration::from_secs(10),
+        warmup_timeout: Duration::from_secs(120),
+        respawn: true,
+    }
+}
+
+#[test]
+fn killed_replica_loses_no_responses_and_respawns() {
+    let backend = BackendSpec::Native;
+    let (ckpt, _) = common::make_checkpoint(&backend, "distil_sim", "fleet_chaos");
+    let fleet =
+        Fleet::start(fleet_config(&ckpt, 2, Routing::CostAware)).expect("fleet start");
+    fleet.wait_ready(2, Duration::from_secs(120)).expect("both replicas ready");
+
+    // Mixed burst across all three request kinds, with decode sessions
+    // pinned by affinity keys, then a SIGKILL on slot 0 while the burst
+    // is in flight.
+    let mut rxs = Vec::new();
+    for i in 0..12u64 {
+        rxs.push(fleet.submit("n0 v1 n2 v3", 0.4, "mca"));
+        rxs.push(fleet.submit_budget("n1 v2 n3", 0.05, None));
+        rxs.push(fleet.submit_decode(
+            "n2 v3",
+            0.4,
+            "mca",
+            Precision::F32,
+            3,
+            i % 4, // four sessions, shared affinity
+        ));
+    }
+    fleet.kill_replica(0);
+
+    // Exactly one response per request: re-routed, answered by the
+    // survivor, or shed — but never silently dropped.
+    let mut answered = 0usize;
+    let mut shed = 0usize;
+    for rx in &rxs {
+        let r = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("request lost its response across the replica kill");
+        if r.shed {
+            shed += 1;
+        } else {
+            answered += 1;
+            assert!(r.pred_class >= 0, "non-shed response without a prediction");
+        }
+    }
+    assert_eq!(answered + shed, rxs.len(), "exactly one response per request");
+    assert!(answered > 0, "the surviving replica answered nothing");
+
+    // The killed slot respawns and warms back to Ready.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let st = fleet.stats().expect("stats");
+        let ready =
+            st.replicas.iter().filter(|r| r.state == ReplicaState::Ready).count();
+        if st.respawns >= 1 && ready == 2 {
+            assert_ne!(st.fingerprint, 0, "fleet never learned its checkpoint identity");
+            assert_eq!(st.model, "distil_sim");
+            assert!(st.served >= rxs.len() as u64, "served counter missed deliveries");
+            assert_eq!(st.rejected_hellos, 0, "same checkpoint must be accepted");
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "killed replica never respawned to Ready: respawns={}, states={:?}",
+            st.respawns,
+            st.replicas.iter().map(|r| r.state.as_str()).collect::<Vec<_>>()
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    fleet.shutdown().expect("shutdown");
+}
+
+/// Drive one 2-replica fleet with an alternating exact / mca-α=1.0 burst
+/// and return the per-slot shares of cumulative routed Eq.-9 cost
+/// (max, min). Exact rows cost 1.0, mca α=1.0 rows 0.25 — round-robin
+/// alternates slots in lockstep with the alternating kinds, so one slot
+/// collects all the expensive rows (~4× the other's cost); cost-aware
+/// placement sees the in-flight cost and balances it.
+fn routed_cost_shares(ckpt: &PathBuf, routing: Routing) -> (f64, f64) {
+    let fleet = Fleet::start(fleet_config(ckpt, 2, routing)).expect("fleet start");
+    fleet.wait_ready(2, Duration::from_secs(120)).expect("both replicas ready");
+    let mut rxs = Vec::new();
+    for _ in 0..30 {
+        rxs.push(fleet.submit("n0 v1 n2 v3 n0 v1", 0.4, "exact"));
+        rxs.push(fleet.submit("n0 v1 n2 v3 n0 v1", 1.0, "mca"));
+    }
+    for rx in &rxs {
+        let r = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        assert!(!r.shed, "burst well under the admission cap was shed");
+    }
+    let st = fleet.stats().expect("stats");
+    let total: f64 = st.replicas.iter().map(|r| r.routed_cost_total).sum();
+    assert!(total > 0.0, "no cost was ever routed");
+    let shares: Vec<f64> =
+        st.replicas.iter().map(|r| r.routed_cost_total / total).collect();
+    fleet.shutdown().expect("shutdown");
+    let max = shares.iter().cloned().fold(0.0, f64::max);
+    let min = shares.iter().cloned().fold(1.0, f64::min);
+    (max, min)
+}
+
+#[test]
+fn cost_aware_routing_balances_eq9_cost_where_round_robin_cannot() {
+    let backend = BackendSpec::Native;
+    let (ckpt, _) = common::make_checkpoint(&backend, "distil_sim", "fleet_routing");
+
+    // Round-robin on the alternating burst: slots alternate in lockstep
+    // with the request kinds, so one slot owns (almost) all the exact
+    // rows — 20 / 25 of the total cost, i.e. a ~0.6 share gap.
+    let (rr_max, rr_min) = routed_cost_shares(&ckpt, Routing::RoundRobin);
+    assert!(
+        rr_max - rr_min > 0.4,
+        "round-robin unexpectedly balanced cost: shares ({rr_max:.3}, {rr_min:.3})"
+    );
+
+    // Cost-aware on the identical burst tracks in-flight Eq.-9 cost and
+    // keeps the slots close (generous slack for response-timing jitter).
+    let (ca_max, ca_min) = routed_cost_shares(&ckpt, Routing::CostAware);
+    assert!(
+        ca_max - ca_min < 0.3,
+        "cost-aware routing left the fleet imbalanced: shares ({ca_max:.3}, {ca_min:.3})"
+    );
+    assert!(
+        ca_max - ca_min < rr_max - rr_min,
+        "cost-aware did not beat round-robin: {:.3} vs {:.3}",
+        ca_max - ca_min,
+        rr_max - rr_min
+    );
+}

@@ -59,6 +59,12 @@ TOLERANCES = {
     "tokens_per_s": ("down", 0.45),
     "token_p50_ms": ("up", 0.75),
     "token_p99_ms": ("up", 0.90),
+    # fleet serving (the loadtest's multi-replica trace): achieved
+    # throughput per replica relative to the 1-replica baseline. A
+    # collapse here means routing or the wire hop stopped scaling; the
+    # tolerance is loose because CI runners share cores with the replica
+    # processes themselves.
+    "scaling_efficiency": ("down", 0.25),
     # quality / accounting (BENCH_eval.json) — these are seeded-determinism
     # metrics, so the tolerances are tight
     "accuracy": ("down", 0.08),
@@ -300,6 +306,36 @@ def self_test():
     n, _ = run_serving(jitter_decode, dbase)
     check(n == 0, f"sub-tolerance decode jitter flagged ({n} regressions)")
 
+    # fleet trace entries gate on scaling efficiency: a scaling collapse
+    # (replicas stopped helping) must be caught, and sub-tolerance
+    # efficiency jitter — plus the informational fleet counters moving —
+    # must pass
+    fbase = {
+        "bench": "serving",
+        "entries": [
+            {
+                "replicas": 2,
+                "kind": "fleet_trace",
+                "achieved_rps": 220.0,
+                "scaling_efficiency": 0.85,
+                "cost_imbalance": 0.05,
+                "respawns": 1,
+                "lost": 0,
+            }
+        ],
+    }
+    stall = copy.deepcopy(fbase)
+    stall["entries"][0]["scaling_efficiency"] = 0.45
+    n, _ = run_serving(stall, fbase)
+    check(n >= 1, "fleet scaling-efficiency collapse not caught")
+
+    fjitter = copy.deepcopy(fbase)
+    fjitter["entries"][0]["scaling_efficiency"] *= 0.85
+    fjitter["entries"][0]["cost_imbalance"] = 0.2  # informational, never gates
+    fjitter["entries"][0]["respawns"] = 3
+    n, _ = run_serving(fjitter, fbase)
+    check(n == 0, f"sub-tolerance fleet jitter flagged ({n} regressions)")
+
     # an eval accuracy drop beyond tolerance is caught; matching is by
     # (model, task, knob, alpha, epsilon, precision) — the fresh file
     # carries the precision field, the pre-precision baseline does not,
@@ -368,7 +404,7 @@ def self_test():
         for f in failures:
             print(f"  - {f}")
         return 1
-    print("bench_gate self-test ok (12 scenarios)")
+    print("bench_gate self-test ok (14 scenarios)")
     return 0
 
 
