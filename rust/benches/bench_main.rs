@@ -59,8 +59,10 @@ fn main() {
                     alpha: alphas[i % 3],
                     mode: "mca".into(),
                     budget: None,
+                    decode: None,
                     precision: Precision::F32,
                     quantized: false,
+                    score_frac: 1.0,
                 },
                 arrived: now,
             })

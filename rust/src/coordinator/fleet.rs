@@ -284,6 +284,7 @@ fn wire_shed(wire: &WireRequest) -> Response {
         latency: Duration::ZERO,
         batch_size: 0,
         alpha: wire.alpha,
+        score_frac: wire.score_frac,
         mode: wire.mode.clone(),
         budget: wire.budget.is_some(),
         precision: wire.precision,
@@ -804,6 +805,9 @@ impl Fleet {
                 id,
                 text: text.to_string(),
                 alpha,
+                // 1.0 defers to each replica's configured score_frac
+                // default at admission.
+                score_frac: 1.0,
                 mode: mode.to_string(),
                 precision,
                 budget: None,
@@ -826,6 +830,7 @@ impl Fleet {
                 id,
                 text: text.to_string(),
                 alpha: 1.0,
+                score_frac: 1.0,
                 mode: "mca".to_string(),
                 precision: Precision::F32,
                 budget: Some((epsilon, delta)),
@@ -854,6 +859,7 @@ impl Fleet {
                 id,
                 text: text.to_string(),
                 alpha,
+                score_frac: 1.0,
                 mode: mode.to_string(),
                 precision,
                 budget: None,
@@ -965,6 +971,7 @@ mod tests {
             id: 0,
             text: String::new(),
             alpha,
+            score_frac: 1.0,
             mode: mode.to_string(),
             precision,
             budget: None,
@@ -990,6 +997,7 @@ mod tests {
             id: 99,
             text: "x".to_string(),
             alpha: 0.6,
+            score_frac: 0.5,
             mode: "mca".to_string(),
             precision: Precision::Bf16,
             budget: Some((0.5, None)),
@@ -1001,5 +1009,6 @@ mod tests {
         assert!(resp.budget);
         assert_eq!(resp.pred_class, -1);
         assert_eq!(resp.precision, Precision::Bf16);
+        assert_eq!(resp.score_frac, 0.5);
     }
 }

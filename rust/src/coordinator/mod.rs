@@ -43,7 +43,8 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::mca::adaptive::{
-    alpha_for_error_budget, alpha_for_tail_budget, quantize_alpha, AlphaController, ALPHA_GRID,
+    alpha_for_error_budget, alpha_for_tail_budget, quantize_alpha, split_budget_for_score,
+    AlphaController, ALPHA_GRID,
 };
 use crate::mca::flops::{self, AttnDims};
 use crate::metrics::serving::{AlphaSummary, ServingMetrics, WorkerSnapshot};
@@ -113,6 +114,15 @@ pub struct Request {
     /// present iff this is an autoregressive decode request (prefill +
     /// per-token KV-cached steps instead of one batched forward)
     pub decode: Option<DecodeParams>,
+    /// sampled-score fraction this request is served at (DESIGN.md §3):
+    /// `ceil(score_frac · n)` attention score rows run the exact fused
+    /// kernel, the rest are reconstructed from the sampled subspace. 1.0
+    /// (the default) is the exact score path; fractions < 1 are
+    /// encoder-only, so decode requests always carry 1.0, and the exact
+    /// mode ignores the field. ε-budget requests with a fraction < 1
+    /// reserve part of ε for the score-side error before resolving α
+    /// (`split_budget_for_score`).
+    pub score_frac: f32,
 }
 
 /// What every submitted request eventually receives, exactly once.
@@ -162,6 +172,10 @@ pub struct Response {
     /// per-token decode-step latencies in milliseconds (empty for batch
     /// requests) — the inter-token latency trace
     pub token_ms: Vec<f64>,
+    /// sampled-score fraction this request actually ran at (1.0 whenever
+    /// the batch executed on the exact path — including an ε budget whose
+    /// score reservation was infeasible and fell back to exact scores)
+    pub score_frac: f32,
 }
 
 // ---------------------------------------------------------------------------
@@ -186,10 +200,10 @@ pub struct BatchPlan {
     pub bucket: usize,
 }
 
-/// Group compatible requests (same mode + α bits + compute precision)
-/// into the largest available bucket; smaller groups ride a padded bucket
-/// when their oldest member has waited past `max_wait`, otherwise stay
-/// queued.
+/// Group compatible requests (same mode + α bits + compute precision +
+/// score-fraction bits) into the largest available bucket; smaller groups
+/// ride a padded bucket when their oldest member has waited past
+/// `max_wait`, otherwise stay queued.
 ///
 /// A group that is not yet ready does NOT block the scan: later groups
 /// that are full or timed out are still planned (no head-of-line blocking
@@ -197,8 +211,8 @@ pub struct BatchPlan {
 ///
 /// Invariants (property-tested): every index appears in at most one batch;
 /// batch size <= bucket; all requests in a batch share (mode, alpha,
-/// precision); indices within a batch are in queue (FIFO) order; no ready
-/// group is left unplanned.
+/// precision, score_frac); indices within a batch are in queue (FIFO)
+/// order; no ready group is left unplanned.
 pub fn plan_batches(
     queue: &[Pending],
     buckets: &[usize],
@@ -218,6 +232,7 @@ pub fn plan_batches(
             queue[head].req.mode.clone(),
             queue[head].req.alpha.to_bits(),
             queue[head].req.precision,
+            queue[head].req.score_frac.to_bits(),
         );
         let group: Vec<usize> = (head..queue.len())
             .filter(|&i| {
@@ -226,6 +241,7 @@ pub fn plan_batches(
                     && queue[i].req.mode == key.0
                     && queue[i].req.alpha.to_bits() == key.1
                     && queue[i].req.precision == key.2
+                    && queue[i].req.score_frac.to_bits() == key.3
             })
             .take(max_bucket)
             .collect();
@@ -394,6 +410,12 @@ pub struct ServerConfig {
     pub canary_rate: f64,
     /// quality floor for the canary margin-drift proxy
     pub quality_floor: f64,
+    /// server-wide sampled-score fraction (DESIGN.md §3), applied at
+    /// admission to MCA batch requests that did not ask for a fraction
+    /// themselves (`submit_sampled`/`submit_budget_sampled` win). 1.0 —
+    /// the default — serves exact scores; decode and exact-mode traffic
+    /// ignore the knob.
+    pub score_frac: f32,
 }
 
 impl Default for ServerConfig {
@@ -408,6 +430,7 @@ impl Default for ServerConfig {
             brownout_watermark: 0,
             canary_rate: 0.0,
             quality_floor: 0.5,
+            score_frac: 1.0,
         }
     }
 }
@@ -602,6 +625,16 @@ pub struct Submitter {
     next_id: Arc<AtomicU64>,
 }
 
+/// Sanitize a client score fraction: anything outside (0, 1) — including
+/// NaN/∞ — means "exact scores".
+fn clean_score_frac(frac: f32) -> f32 {
+    if frac.is_finite() && frac > 0.0 && frac < 1.0 {
+        frac
+    } else {
+        1.0
+    }
+}
+
 impl Submitter {
     fn send(&self, req: Request) -> mpsc::Receiver<Response> {
         let (rtx, rrx) = mpsc::channel();
@@ -629,7 +662,25 @@ impl Submitter {
         mode: &str,
         precision: Precision,
     ) -> mpsc::Receiver<Response> {
+        self.submit_sampled(text, alpha, mode, precision, 1.0)
+    }
+
+    /// [`Submitter::submit_with_precision`] with an explicit sampled-score
+    /// fraction (DESIGN.md §3): the request batches only with
+    /// same-fraction traffic and runs `ceil(frac · n)` exact score rows
+    /// per head, reconstructing the rest. Fractions outside (0, 1) — NaN
+    /// included — are served as 1.0 (exact scores), as is every request
+    /// in `"exact"` mode.
+    pub fn submit_sampled(
+        &self,
+        text: &str,
+        alpha: f32,
+        mode: &str,
+        precision: Precision,
+        score_frac: f32,
+    ) -> mpsc::Receiver<Response> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let score_frac = if mode == "exact" { 1.0 } else { clean_score_frac(score_frac) };
         self.send(Request {
             id,
             text: text.to_string(),
@@ -639,6 +690,7 @@ impl Submitter {
             quantized: false,
             budget: None,
             decode: None,
+            score_frac,
         })
     }
 
@@ -668,6 +720,8 @@ impl Submitter {
             quantized: false,
             budget: None,
             decode: Some(DecodeParams { max_new: max_new.max(1) }),
+            // Sampled scores are encoder-only; decode always runs exact.
+            score_frac: 1.0,
         })
     }
 
@@ -692,6 +746,24 @@ impl Submitter {
         delta: Option<f64>,
         precision: Precision,
     ) -> mpsc::Receiver<Response> {
+        self.submit_budget_sampled(text, epsilon, delta, precision, 1.0)
+    }
+
+    /// [`Submitter::submit_budget_with_precision`] with an explicit
+    /// sampled-score fraction: the server reserves the score-side error
+    /// `(1 − frac)·β·‖W‖_F` out of ε and resolves α against the
+    /// remainder, so one ε covers the combined score + value error
+    /// end-to-end. A fraction whose reservation exhausts ε falls back to
+    /// exact scores with the full ε (the response echoes `score_frac`
+    /// 1.0). Fractions outside (0, 1) are served as 1.0.
+    pub fn submit_budget_sampled(
+        &self,
+        text: &str,
+        epsilon: f64,
+        delta: Option<f64>,
+        precision: Precision,
+        score_frac: f32,
+    ) -> mpsc::Receiver<Response> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.send(Request {
             id,
@@ -702,6 +774,7 @@ impl Submitter {
             quantized: false,
             budget: Some(Budget { epsilon, delta, alpha_max: 1.0, degraded: false }),
             decode: None,
+            score_frac: clean_score_frac(score_frac),
         })
     }
 }
@@ -1184,6 +1257,12 @@ impl Dispatcher {
             let _ = rtx.send(shed_response(&p));
             return;
         }
+        // Server-wide sampled-score default: MCA batch requests that did
+        // not pick a fraction themselves inherit the config knob (decode
+        // and exact traffic always run exact scores).
+        if p.req.score_frac >= 1.0 && p.req.decode.is_none() && p.req.mode == "mca" {
+            p.req.score_frac = clean_score_frac(self.cfg.score_frac);
+        }
         self.resolve(&mut p);
         let cap = self.cfg.queue_cap.max(1) as f64;
         // Whether the ladder's quantized rung fired for THIS request:
@@ -1284,14 +1363,41 @@ impl Dispatcher {
     /// capped by the canary controller's target unless brownout is on.
     /// Budgets below the grid floor — and any budget against degenerate
     /// statistics — run on the exact path (zero error honors every ε).
+    ///
+    /// A request carrying `score_frac < 1` first reserves the score-side
+    /// error (`(1 − frac)·β·‖W‖_F`, the same scale Theorem 2 bounds the
+    /// value side with) out of ε, then resolves α against the remainder —
+    /// one end-to-end budget covering both approximations. When the
+    /// reservation alone exhausts ε the fraction is infeasible: the
+    /// request falls back to exact scores (`score_frac = 1`) with the
+    /// full ε for the value side. The tail-δ sharpening applies to the
+    /// value remainder only — the score term is a deterministic bound,
+    /// not a variance.
     fn resolve(&mut self, p: &mut Pending) {
         let Some(b) = p.req.budget.as_mut() else { return };
+        let value_eps = if p.req.score_frac < 1.0 {
+            match split_budget_for_score(
+                b.epsilon,
+                p.req.score_frac,
+                self.stats.beta,
+                self.stats.w_frob,
+            ) {
+                Some(rest) => rest,
+                None => {
+                    // Infeasible fraction: exact scores, full ε for values.
+                    p.req.score_frac = 1.0;
+                    b.epsilon
+                }
+            }
+        } else {
+            b.epsilon
+        };
         let raw = if self.stats.usable() {
             match b.delta {
                 Some(delta) => {
-                    alpha_for_tail_budget(b.epsilon, delta, self.stats.beta, self.stats.w_frob)
+                    alpha_for_tail_budget(value_eps, delta, self.stats.beta, self.stats.w_frob)
                 }
-                None => alpha_for_error_budget(b.epsilon, self.stats.beta, self.stats.w_frob),
+                None => alpha_for_error_budget(value_eps, self.stats.beta, self.stats.w_frob),
             }
         } else {
             0.0
@@ -1312,6 +1418,9 @@ impl Dispatcher {
                 p.req.mode = "exact".to_string();
                 p.req.alpha = 1.0;
                 b.alpha_max = 1.0;
+                // The exact path always runs exact scores; pin the echo
+                // (and the batching key) to match.
+                p.req.score_frac = 1.0;
             }
         }
     }
@@ -1476,6 +1585,7 @@ impl Dispatcher {
             quantized: false,
             budget: None,
             decode: None,
+            score_frac: 1.0,
         };
         self.queue.push_back((Pending { req, arrived: Instant::now() }, ctx));
         self.canaries.push((crx, sample));
@@ -1655,6 +1765,7 @@ fn shed_response(p: &Pending) -> Response {
         shed: true,
         decode_tokens: 0,
         token_ms: Vec::new(),
+        score_frac: p.req.score_frac,
     }
 }
 
@@ -2049,6 +2160,7 @@ fn decode_round(
                 shed: false,
                 decode_tokens: ld.produced,
                 token_ms: ld.token_lat.iter().map(|d| d.as_secs_f64() * 1e3).collect(),
+                score_frac: 1.0, // decode is always exact-score
             };
             let _ = ld.rtx.send(resp);
         }
@@ -2108,6 +2220,10 @@ fn execute_job(st: &mut WorkerState, job: Job) -> (BatchReport, Deliveries) {
             mode = "mca".to_string();
         }
     }
+    // The batch shares one score fraction (the batcher keys on it); the
+    // exact mode always runs exact scores regardless of the request knob.
+    let score_frac = if mode == "exact" { 1.0 } else { first.score_frac };
+    spec.score_frac = score_frac;
     let t0 = Instant::now();
     let fwd = match st.backend.forward(&spec, &st.params, &ids_hv, alpha, first_id as u32) {
         Ok(f) => f,
@@ -2147,10 +2263,23 @@ fn execute_job(st: &mut WorkerState, job: Job) -> (BatchReport, Deliveries) {
         let pred = argmax_logit(row);
         let reduction = if mode == "exact" || fwd.n_eff[slot] == 0.0 {
             1.0
+        } else if score_frac < 1.0 {
+            // Sampled-score rows use the end-to-end accounting (score +
+            // value terms on both sides of the ratio, Eq. 9 extended) —
+            // the honest comparison for the long-context path.
+            flops::reduction_factor_scored(
+                &[(fwd.n_eff[slot] as usize, fwd.r_sum[slot] as u64)],
+                st.n_layers,
+                st.dims,
+                precision_cost_factor(pending.req.precision),
+                score_frac,
+            )
         } else {
             // Fold the compute precision into the per-request accounting:
             // an int8 row costs half an f32 row, so the quantized rung's
-            // savings show up in the reported reduction.
+            // savings show up in the reported reduction. Value-only rows
+            // keep the historical Eq.-9 factor (no score term) so served
+            // numbers stay comparable across releases.
             flops::reduction_factor_prec(
                 &[(fwd.n_eff[slot] as usize, fwd.r_sum[slot] as u64)],
                 st.n_layers,
@@ -2179,6 +2308,7 @@ fn execute_job(st: &mut WorkerState, job: Job) -> (BatchReport, Deliveries) {
             shed: false,
             decode_tokens: 0,
             token_ms: Vec::new(),
+            score_frac,
         };
         deliveries.push((rtx, resp));
     }
@@ -2212,6 +2342,19 @@ mod tests {
         age_ms: u64,
         now: Instant,
     ) -> Pending {
+        pending_f(id, alpha, mode, precision, 1.0, age_ms, now)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn pending_f(
+        id: u64,
+        alpha: f32,
+        mode: &str,
+        precision: Precision,
+        score_frac: f32,
+        age_ms: u64,
+        now: Instant,
+    ) -> Pending {
         Pending {
             req: Request {
                 id,
@@ -2222,6 +2365,7 @@ mod tests {
                 quantized: false,
                 budget: None,
                 decode: None,
+                score_frac,
             },
             arrived: now - Duration::from_millis(age_ms),
         }
@@ -2300,6 +2444,37 @@ mod tests {
                 plan.indices.iter().map(|&i| q[i].req.precision).collect();
             assert_eq!(precs.len(), 1);
         }
+    }
+
+    #[test]
+    fn mixed_score_fracs_do_not_share_batches() {
+        // A batch executes at one ForwardSpec, so requests asking for
+        // different sampled-score fractions must never ride together.
+        let now = Instant::now();
+        let mut q = Vec::new();
+        for i in 0..4 {
+            q.push(pending_f(i, 0.4, "mca", Precision::F32, 1.0, 500, now));
+        }
+        for i in 4..8 {
+            q.push(pending_f(i, 0.4, "mca", Precision::F32, 0.5, 500, now));
+        }
+        let plans = plan_batches(&q, &[1, 8], Duration::from_millis(100), now);
+        assert_eq!(plans.len(), 2);
+        for plan in &plans {
+            let fracs: std::collections::HashSet<u32> =
+                plan.indices.iter().map(|&i| q[i].req.score_frac.to_bits()).collect();
+            assert_eq!(fracs.len(), 1, "plan mixes score fractions");
+            assert_eq!(plan.indices.len(), 4);
+        }
+    }
+
+    #[test]
+    fn score_frac_sanitizer_rejects_junk() {
+        for bad in [0.0f32, -0.5, 1.5, f32::NAN, f32::INFINITY] {
+            assert_eq!(clean_score_frac(bad), 1.0, "{bad} should sanitize to exact");
+        }
+        assert_eq!(clean_score_frac(0.25), 0.25);
+        assert_eq!(clean_score_frac(1.0), 1.0);
     }
 
     #[test]
@@ -2512,6 +2687,7 @@ mod tests {
                 quantized: false,
                 budget: None,
                 decode: None,
+                score_frac: 1.0,
             };
             assert!((row_cost(&req) - 1.0).abs() < 1e-12, "alpha {alpha}");
         }
@@ -2525,6 +2701,7 @@ mod tests {
             quantized: false,
             budget: None,
             decode: None,
+            score_frac: 1.0,
         };
         assert!((row_cost(&cheap) - 0.25).abs() < 1e-12);
     }
@@ -2540,6 +2717,7 @@ mod tests {
             quantized: false,
             budget: None,
             decode: None,
+            score_frac: 1.0,
         };
         assert!((row_cost(&mk(Precision::F32)) - 1.0).abs() < 1e-12);
         assert!((row_cost(&mk(Precision::Bf16)) - 0.75).abs() < 1e-12);
@@ -2557,6 +2735,7 @@ mod tests {
             quantized: false,
             budget: None,
             decode: None,
+            score_frac: 1.0,
         };
         // exact requests keep their bit-exact f32 contract
         let mut ex = mk("exact", Precision::F32);
@@ -2588,6 +2767,7 @@ mod tests {
             quantized: false,
             budget,
             decode: None,
+            score_frac: 1.0,
         };
         // raw-α request: untouched
         let mut raw = mk(0.2, "mca", None);
@@ -2662,6 +2842,7 @@ mod tests {
             quantized: false,
             budget,
             decode: None,
+            score_frac: 1.0,
         };
         // exact: neither rung applies — the ladder cannot help
         assert!(!ladder_can_reduce(&mk(1.0, "exact", Precision::F32, None)));
@@ -2695,6 +2876,7 @@ mod tests {
             quantized: false,
             budget,
             decode: Some(DecodeParams { max_new: 4 }),
+            score_frac: 1.0,
         };
         // raw-α requests pin their requested α regardless of the knob
         assert_eq!(step_alpha(&mk(0.4, "mca", None), 0.9), 0.4);

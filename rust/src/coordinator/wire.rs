@@ -34,8 +34,9 @@ use crate::tensor::Precision;
 
 /// Protocol version, bumped on any frame-layout change. `Hello` carries
 /// it; a front-end refuses a replica speaking a different version instead
-/// of mis-parsing its frames.
-pub const WIRE_VERSION: u32 = 1;
+/// of mis-parsing its frames. v2 added the sampled-score fraction to
+/// `Submit` and `Response`.
+pub const WIRE_VERSION: u32 = 2;
 
 /// Hard ceiling on one frame's payload size. Far above any real frame
 /// (responses carry a handful of logits and a token-latency trace), it
@@ -54,6 +55,8 @@ pub struct WireRequest {
     pub text: String,
     /// requested α (ignored for budget requests)
     pub alpha: f32,
+    /// requested sampled-score fraction (1.0 = exact score rows)
+    pub score_frac: f32,
     /// "mca" or "exact"
     pub mode: String,
     /// requested compute precision
@@ -86,6 +89,8 @@ pub struct WireResponse {
     pub batch_size: u64,
     /// α the batch executed at
     pub alpha: f32,
+    /// sampled-score fraction the batch executed at
+    pub score_frac: f32,
     /// mode actually executed
     pub mode: String,
     /// true for ε-budget requests
@@ -305,6 +310,7 @@ impl Frame {
                 e.u64(r.id);
                 e.str(&r.text);
                 e.f32(r.alpha);
+                e.f32(r.score_frac);
                 e.str(&r.mode);
                 enc_precision(&mut e, r.precision);
                 match &r.budget {
@@ -341,6 +347,7 @@ impl Frame {
                 e.u64(r.latency_us);
                 e.u64(r.batch_size);
                 e.f32(r.alpha);
+                e.f32(r.score_frac);
                 e.str(&r.mode);
                 e.u8(r.budget as u8);
                 enc_precision(&mut e, r.precision);
@@ -388,6 +395,7 @@ impl Frame {
                 let id = d.u64()?;
                 let text = d.str()?;
                 let alpha = d.f32()?;
+                let score_frac = d.f32()?;
                 let mode = d.str()?;
                 let precision = dec_precision(&mut d)?;
                 let budget = if d.u8()? != 0 {
@@ -398,7 +406,16 @@ impl Frame {
                     None
                 };
                 let decode = if d.u8()? != 0 { Some(d.u64()? as usize) } else { None };
-                Frame::Submit(WireRequest { id, text, alpha, mode, precision, budget, decode })
+                Frame::Submit(WireRequest {
+                    id,
+                    text,
+                    alpha,
+                    score_frac,
+                    mode,
+                    precision,
+                    budget,
+                    decode,
+                })
             }
             TAG_RESPONSE => Frame::Response(WireResponse {
                 id: d.u64()?,
@@ -410,6 +427,7 @@ impl Frame {
                 latency_us: d.u64()?,
                 batch_size: d.u64()?,
                 alpha: d.f32()?,
+                score_frac: d.f32()?,
                 mode: d.str()?,
                 budget: d.u8()? != 0,
                 precision: dec_precision(&mut d)?,
@@ -499,6 +517,7 @@ impl WireRequest {
             id: req.id,
             text: req.text.clone(),
             alpha: req.alpha,
+            score_frac: req.score_frac,
             mode: req.mode.clone(),
             precision: req.precision,
             budget: req.budget.as_ref().map(|b| (b.epsilon, b.delta)),
@@ -512,6 +531,7 @@ impl WireRequest {
             id: self.id,
             text: self.text,
             alpha: self.alpha,
+            score_frac: self.score_frac,
             mode: self.mode,
             precision: self.precision,
             quantized: false,
@@ -536,6 +556,7 @@ impl WireResponse {
             latency_us: r.latency.as_micros() as u64,
             batch_size: r.batch_size as u64,
             alpha: r.alpha,
+            score_frac: r.score_frac,
             mode: r.mode.clone(),
             budget: r.budget,
             precision: r.precision,
@@ -559,6 +580,7 @@ impl WireResponse {
             latency: Duration::from_micros(self.latency_us),
             batch_size: self.batch_size as usize,
             alpha: self.alpha,
+            score_frac: self.score_frac,
             mode: self.mode,
             budget: self.budget,
             precision: self.precision,
@@ -581,6 +603,7 @@ mod tests {
             id: 42,
             text: "the quick brown fox".to_string(),
             alpha: 0.4,
+            score_frac: 0.5,
             mode: "mca".to_string(),
             precision: Precision::Bf16,
             budget: Some((0.25, Some(0.05))),
@@ -599,6 +622,7 @@ mod tests {
             latency_us: 12_345,
             batch_size: 8,
             alpha: 0.6,
+            score_frac: 0.75,
             mode: "mca".to_string(),
             budget: true,
             precision: Precision::Int8,
@@ -633,6 +657,7 @@ mod tests {
                 id: 0,
                 text: String::new(),
                 alpha: 0.0,
+                score_frac: 1.0,
                 mode: "exact".to_string(),
                 precision: Precision::F32,
                 budget: None,

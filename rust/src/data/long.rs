@@ -1,0 +1,222 @@
+//! Long-sequence planted-signal tasks for the sampled-score attention
+//! path (DESIGN.md §3): the 2k–16k analog of the GLUE/doc suite. Two
+//! families:
+//!
+//! * **needle retrieval** (`needle_*_sim`): a handful of "needle" tokens
+//!   from one topic band of the noun class are planted at random
+//!   positions in a long body of non-noun distractors (filler / verb /
+//!   adjective tokens). The label is the needle topic — recoverable only
+//!   by attending to the planted positions, and by construction invariant
+//!   under any permutation of the distractors. Needle density scales with
+//!   length (`max(2, len/64)` planted tokens) so the signal stays
+//!   learnable while staying sparse (≤ ~1.6% of tokens).
+//! * **long topic** (`topic_long_sim`): the `topic_sim` recipe stretched
+//!   to 2k tokens — a strict majority of the (sparse) nouns come from the
+//!   label topic, diluted with off-topic nouns and filler. The dense-ish
+//!   counterpart on the attention-skew axis.
+//!
+//! Lengths follow the task's `max_len`: bodies fill 3/4 to all of the
+//! budget, so the 2k task really exercises 2k-token attention. The 8k and
+//! 16k needle tasks are data-layer citizens only (no builtin model serves
+//! them); they pin tokenizer/batcher round-trips at those lengths.
+
+use super::{Example, Label, TaskSpec};
+use crate::rng::Pcg64;
+use crate::tokenizer::{class_base, WordClass, CLASS_SIZE, CLS_ID, SEP_ID};
+
+/// Number of needle topics (= the task's class count).
+pub const NEEDLE_TOPICS: i32 = 3;
+
+/// A noun from topic band `t` (the noun class split into
+/// [`NEEDLE_TOPICS`] disjoint thirds, as in `glue::gen_topic`).
+fn topic_noun(t: i32, rng: &mut Pcg64) -> i32 {
+    let slice = CLASS_SIZE / NEEDLE_TOPICS;
+    class_base(WordClass::Noun) + t * slice + rng.gen_range(0, slice as usize) as i32
+}
+
+/// A distractor token: anything but a noun, so the planted nouns are the
+/// only label-bearing content.
+fn distractor(rng: &mut Pcg64) -> i32 {
+    let class = match rng.gen_range(0, 3) {
+        0 => WordClass::Verb,
+        1 => WordClass::Adjective,
+        _ => WordClass::Filler,
+    };
+    class_base(class) + rng.gen_range(0, CLASS_SIZE as usize) as i32
+}
+
+fn wrap(body: Vec<i32>) -> Vec<i32> {
+    let mut ids = Vec::with_capacity(body.len() + 2);
+    ids.push(CLS_ID);
+    ids.extend(body);
+    ids.push(SEP_ID);
+    ids
+}
+
+/// Body length for a long task: fill 3/4 to all of the `max_len` budget
+/// (minus CLS/SEP).
+fn body_len(spec: &TaskSpec, rng: &mut Pcg64) -> usize {
+    let cap = spec.max_len - 2;
+    rng.gen_range(cap - cap / 4, cap + 1)
+}
+
+/// How many needles a body of `len` tokens carries.
+pub fn needle_count(len: usize) -> usize {
+    (len / 64).max(2)
+}
+
+/// Needle retrieval: plant same-topic nouns at random positions among
+/// non-noun distractors; label = the topic. Used at every `needle_*_sim`
+/// length — the spec's `max_len` sets the scale.
+pub fn gen_needle(spec: &TaskSpec, rng: &mut Pcg64, count: usize) -> Vec<Example> {
+    (0..count)
+        .map(|_| {
+            let topic = rng.gen_range(0, NEEDLE_TOPICS as usize) as i32;
+            let len = body_len(spec, rng);
+            let mut body: Vec<i32> = (0..len).map(|_| distractor(rng)).collect();
+            // Distinct random positions via a partial Fisher-Yates: plant
+            // the needles first, then shuffling spreads them uniformly.
+            let n_needles = needle_count(len).min(len);
+            for slot in body.iter_mut().take(n_needles) {
+                *slot = topic_noun(topic, rng);
+            }
+            rng.shuffle(&mut body);
+            Example { ids: wrap(body), label: Label::Class(topic) }
+        })
+        .collect()
+}
+
+/// Long topic classification: nouns are ~1/8 of the body; a strict
+/// majority of them come from the label topic, the rest are off-topic —
+/// `topic_sim` stretched to the long-context regime.
+pub fn gen_topic_long(spec: &TaskSpec, rng: &mut Pcg64, count: usize) -> Vec<Example> {
+    let n_topics = spec.n_classes.max(2);
+    let slice = CLASS_SIZE / n_topics;
+    let any_topic_noun = |t: i32, rng: &mut Pcg64| {
+        class_base(WordClass::Noun) + t * slice + rng.gen_range(0, slice as usize) as i32
+    };
+    (0..count)
+        .map(|_| {
+            let topic = rng.gen_range(0, n_topics as usize) as i32;
+            let len = body_len(spec, rng);
+            let n_nouns = (len / 8).max(3);
+            // Strict majority by construction.
+            let on = n_nouns / 2 + 1;
+            let mut body: Vec<i32> = (0..len - n_nouns).map(|_| distractor(rng)).collect();
+            for _ in 0..on {
+                body.push(any_topic_noun(topic, rng));
+            }
+            for _ in on..n_nouns {
+                let off = (topic + 1 + rng.gen_range(0, (n_topics - 1) as usize) as i32) % n_topics;
+                body.push(any_topic_noun(off, rng));
+            }
+            rng.shuffle(&mut body);
+            Example { ids: wrap(body), label: Label::Class(topic) }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, task_by_name};
+    use crate::tokenizer::{class_of, Tokenizer};
+
+    /// The needle topic of an example, recomputed from its tokens — the
+    /// planted nouns are the only noun-class content.
+    fn recovered_topic(ids: &[i32]) -> Option<i32> {
+        let slice = CLASS_SIZE / NEEDLE_TOPICS;
+        let mut topics: Vec<i32> = ids
+            .iter()
+            .filter(|&&w| class_of(w) == Some(WordClass::Noun))
+            .map(|&w| ((w - class_base(WordClass::Noun)) / slice).min(NEEDLE_TOPICS - 1))
+            .collect();
+        topics.dedup();
+        match topics[..] {
+            [t] => Some(t),
+            _ => None,
+        }
+    }
+
+    #[test]
+    fn planted_needles_determine_the_label() {
+        for name in ["needle_64_sim", "needle_2k_sim", "needle_8k_sim", "needle_16k_sim"] {
+            let spec = task_by_name(name).unwrap();
+            let ds = generate(&spec, 11);
+            for ex in ds.train.iter().chain(&ds.dev) {
+                let needles = ex
+                    .ids
+                    .iter()
+                    .filter(|&&w| class_of(w) == Some(WordClass::Noun))
+                    .count();
+                assert!(needles >= 2, "{name}: only {needles} needles");
+                assert!(
+                    needles <= ex.ids.len() / 32 + 3,
+                    "{name}: needle density too high ({needles} in {})",
+                    ex.ids.len()
+                );
+                assert_eq!(
+                    recovered_topic(&ex.ids),
+                    Some(ex.label.class()),
+                    "{name}: needle topic disagrees with label"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn labels_are_invariant_under_distractor_permutation() {
+        let spec = task_by_name("needle_2k_sim").unwrap();
+        let ds = generate(&spec, 13);
+        let mut rng = Pcg64::new(99);
+        for ex in ds.dev.iter().take(16) {
+            // Shuffle the whole body (CLS/SEP fixed): every distractor and
+            // needle moves, the recovered label must not.
+            let mut ids = ex.ids.clone();
+            let n = ids.len();
+            rng.shuffle(&mut ids[1..n - 1]);
+            assert_eq!(recovered_topic(&ids), Some(ex.label.class()));
+        }
+    }
+
+    #[test]
+    fn long_lengths_fill_their_budget_and_roundtrip_the_tokenizer() {
+        let tok = Tokenizer::new();
+        for (name, max_len) in
+            [("needle_2k_sim", 2048), ("needle_8k_sim", 8192), ("needle_16k_sim", 16384)]
+        {
+            let spec = task_by_name(name).unwrap();
+            assert_eq!(spec.max_len, max_len, "{name}");
+            let ds = generate(&spec, 17);
+            for ex in ds.dev.iter().take(4) {
+                assert!(ex.ids.len() <= max_len, "{name}: overlong example");
+                assert!(ex.ids.len() >= max_len * 3 / 4, "{name}: body does not fill budget");
+                // decode -> encode at the task length is lossless: no
+                // truncation, no UNK, CLS/SEP preserved.
+                let text = tok.decode(&ex.ids[1..ex.ids.len() - 1]);
+                let back = tok.encode(&text, max_len);
+                assert_eq!(back, ex.ids, "{name}: tokenizer round-trip truncated or mangled");
+            }
+        }
+    }
+
+    #[test]
+    fn topic_long_majority_matches_label() {
+        let spec = task_by_name("topic_long_sim").unwrap();
+        let slice = CLASS_SIZE / spec.n_classes;
+        let ds = generate(&spec, 19);
+        for ex in ds.dev.iter().take(16) {
+            let mut counts = vec![0usize; spec.n_classes as usize];
+            for &w in &ex.ids[1..ex.ids.len() - 1] {
+                if class_of(w) == Some(WordClass::Noun) {
+                    let t = ((w - class_base(WordClass::Noun)) / slice).min(spec.n_classes - 1);
+                    counts[t as usize] += 1;
+                }
+            }
+            let best = (0..counts.len()).max_by_key(|&i| counts[i]).unwrap() as i32;
+            assert_eq!(best, ex.label.class());
+            let total: usize = counts.iter().sum();
+            assert!(counts[best as usize] * 2 > total, "not a strict majority");
+        }
+    }
+}

@@ -8,6 +8,7 @@
 pub mod docs;
 pub mod glue;
 pub mod lm;
+pub mod long;
 
 use crate::rng::Pcg64;
 
@@ -132,6 +133,10 @@ pub fn generate(spec: &TaskSpec, seed: u64) -> Dataset {
         "hnd_sim" => docs::gen_hnd,
         "imdb_sim" => docs::gen_imdb,
         "lm_sim" => lm::gen_lm,
+        "needle_64_sim" | "needle_2k_sim" | "needle_8k_sim" | "needle_16k_sim" => {
+            long::gen_needle
+        }
+        "topic_long_sim" => long::gen_topic_long,
         other => panic!("unknown task {other}"),
     };
     let train = gen(spec, &mut rng, spec.train_size);
@@ -252,6 +257,31 @@ pub fn lm_tasks() -> Vec<TaskSpec> {
     }]
 }
 
+/// The long-context task family of the sampled-score path (DESIGN.md §3,
+/// [`long`]): needle retrieval at 64 tokens (the seeded accuracy-floor
+/// anchor) and at 2k/8k/16k, plus the 2k topic task. Only the ≤2k tasks
+/// have a builtin host model (`longbert_sim`); the 8k/16k specs exist to
+/// pin the data/tokenizer layer at those lengths.
+pub fn long_tasks() -> Vec<TaskSpec> {
+    use Metric::*;
+    let t = |name, max_len, train_size, dev_size| TaskSpec {
+        name,
+        kind: TaskKind::Classification,
+        n_classes: long::NEEDLE_TOPICS,
+        metrics: &[Accuracy][..],
+        max_len,
+        train_size,
+        dev_size,
+    };
+    vec![
+        t("needle_64_sim", 64, 2000, 384),
+        t("needle_2k_sim", 2048, 64, 48),
+        t("needle_8k_sim", 8192, 6, 6),
+        t("needle_16k_sim", 16384, 4, 4),
+        t("topic_long_sim", 2048, 64, 48),
+    ]
+}
+
 /// The default `mca eval` harness inventory: sst2_sim (the paper's anchor
 /// task) plus the [`extra_tasks`].
 pub fn harness_tasks() -> Vec<TaskSpec> {
@@ -268,6 +298,7 @@ pub fn task_by_name(name: &str) -> Option<TaskSpec> {
         .chain(doc_tasks())
         .chain(extra_tasks())
         .chain(lm_tasks())
+        .chain(long_tasks())
         .find(|t| t.name == name)
 }
 
@@ -306,6 +337,7 @@ mod tests {
             .chain(doc_tasks().iter())
             .chain(extra_tasks().iter())
             .chain(lm_tasks().iter())
+            .chain(long_tasks().iter())
         {
             check_dataset(spec);
         }

@@ -14,12 +14,23 @@
 //!   grid α ([`Knob::Epsilon`]; the point records the mean α actually
 //!   served, including brownout degradations).
 //!
+//! Every α/ε knob additionally runs once per **sampled-score fraction**
+//! ([`HarnessOptions::score_fracs`], DESIGN.md §3): fractions < 1 route
+//! the pass through the sampled-score attention path, which is what puts
+//! long-sequence tasks (`needle_2k_sim` and friends) on the frontier.
+//! Pairs that cannot serve honestly are skipped ([`pair_fits`]): a task
+//! longer than the model's positional table, or a long-context model on a
+//! short task it would mostly pad.
+//!
 //! Each point records the task metric, exact-vs-MCA agreement, the
-//! measured Σrᵢ and the Eq.-9 FLOPs-reduction factor (via
-//! [`crate::mca::flops::reduction_factor_prec`] with the coordinator's
-//! precision cost factor folded in — the same accounting the paper's
-//! tables use, extended along the precision axis). Per model, the knob
-//! points are macro-averaged
+//! measured Σrᵢ, the serving sequence length, and the FLOPs-reduction
+//! factor via [`crate::mca::flops::reduction_factor_scored`] with the
+//! coordinator's precision cost factor folded in — the Eq.-9 accounting
+//! extended with the QKᵀ score term on both sides, so value-only and
+//! sampled-score passes are compared under one consistent convention
+//! (serving responses keep the historical value-only factor at fraction
+//! 1; the sweep recomputes from the measured Σrᵢ and served fractions).
+//! Per model, the knob points are macro-averaged
 //! across tasks and reduced to the accuracy-vs-FLOPs **Pareto frontier**
 //! ([`pareto_indices`]): along the frontier, accuracy is non-increasing as
 //! the FLOPs budget shrinks — the trade-off curve of the paper's Figure 1,
@@ -68,6 +79,11 @@ pub struct HarnessOptions {
     /// from the kernel's quantized GEMM paths too. The exact baseline
     /// always runs at f32.
     pub precisions: Vec<String>,
+    /// sampled-score fractions to sweep (DESIGN.md §3): every α/ε knob
+    /// runs once per fraction. 1.0 serves exact score rows; fractions in
+    /// (0, 1) route through the sampled-score path. The exact baseline
+    /// always serves exact scores.
+    pub score_fracs: Vec<f64>,
     /// serving pool size per (model, task)
     pub workers: usize,
     /// admission cap in Eq.-9 cost units; 0 sizes it to the dev slice so
@@ -99,6 +115,7 @@ impl Default for HarnessOptions {
             alphas: vec![0.2, 0.4, 0.6, 1.0],
             epsilons: vec![8.0, 32.0],
             precisions: vec!["f32".to_string()],
+            score_fracs: vec![1.0],
             workers: 2,
             queue_cap: 0,
             brownout_watermark: 0,
@@ -114,16 +131,25 @@ impl Default for HarnessOptions {
 }
 
 impl HarnessOptions {
-    /// The CI smoke profile behind `mca eval --quick`: one model, two
-    /// tasks, a 2-point α grid, one ε budget, a short dev slice and quick
-    /// fine-tuning — small enough for a per-push CI job while still
-    /// crossing the brownout watermark and firing canaries.
+    /// The CI smoke profile behind `mca eval --quick`: two models (the
+    /// short-context anchor plus the 2k-token `longbert_sim`), three
+    /// tasks, a 2-point α grid, one ε budget, two score fractions, a
+    /// short dev slice and quick fine-tuning — small enough for a
+    /// per-push CI job while still crossing the brownout watermark,
+    /// firing canaries, and exercising the sampled-score path at 2k
+    /// tokens ([`pair_fits`] keeps each model on the tasks it serves
+    /// honestly).
     pub fn quick() -> HarnessOptions {
         HarnessOptions {
-            models: vec!["distil_sim".to_string()],
-            tasks: vec!["sst2_sim".to_string(), "paws_sim".to_string()],
+            models: vec!["distil_sim".to_string(), "longbert_sim".to_string()],
+            tasks: vec![
+                "sst2_sim".to_string(),
+                "paws_sim".to_string(),
+                "needle_2k_sim".to_string(),
+            ],
             alphas: vec![0.3, 1.0],
             epsilons: vec![16.0],
+            score_fracs: vec![1.0, 0.5],
             canary_rate: 0.2,
             brownout_watermark: 48,
             dev_limit: 96,
@@ -171,6 +197,11 @@ pub struct SweepPoint {
     pub knob: Knob,
     /// compute precision this pass ran at ("f32" | "bf16" | "int8")
     pub precision: String,
+    /// requested sampled-score fraction of this pass (1.0 = exact scores)
+    pub score_frac: f64,
+    /// serving sequence length of this pass
+    /// (`min(model max_len, task max_len)`)
+    pub seq: usize,
     /// primary-metric value of this pass (shed requests count as wrong)
     pub accuracy: f64,
     /// primary-metric value of the exact baseline pass
@@ -203,6 +234,8 @@ pub struct FrontierPoint {
     pub knob: Knob,
     /// compute precision of the pass behind this point
     pub precision: String,
+    /// requested sampled-score fraction of the pass behind this point
+    pub score_frac: f64,
     /// macro-averaged Eq.-9 FLOPs-reduction factor
     pub flops_reduction: f64,
     /// macro-averaged primary-metric value
@@ -283,31 +316,36 @@ pub fn pareto_indices(points: &[(f64, f64)]) -> Vec<usize> {
     out
 }
 
-/// Macro-average the sweep points of one model per (knob, precision) and
-/// reduce them to the Pareto frontier. Settings keep their
-/// first-appearance order before the frontier sort; settings with no
-/// completed requests are skipped.
+/// Macro-average the sweep points of one model per (knob, precision,
+/// score fraction) and reduce them to the Pareto frontier. Settings keep
+/// their first-appearance order before the frontier sort; settings with
+/// no completed requests are skipped.
 pub fn model_frontier(points: &[SweepPoint], model: &str) -> Vec<FrontierPoint> {
     let mine: Vec<&SweepPoint> =
         points.iter().filter(|p| p.model == model && p.completed > 0).collect();
-    let mut settings: Vec<(Knob, String)> = Vec::new();
+    let mut settings: Vec<(Knob, String, u64)> = Vec::new();
     for p in &mine {
-        let s = (p.knob, p.precision.clone());
+        let s = (p.knob, p.precision.clone(), p.score_frac.to_bits());
         if !settings.contains(&s) {
             settings.push(s);
         }
     }
     let cands: Vec<FrontierPoint> = settings
         .iter()
-        .map(|(knob, prec)| {
+        .map(|(knob, prec, frac_bits)| {
             let of_knob: Vec<&&SweepPoint> = mine
                 .iter()
-                .filter(|p| p.knob == *knob && p.precision == *prec)
+                .filter(|p| {
+                    p.knob == *knob
+                        && p.precision == *prec
+                        && p.score_frac.to_bits() == *frac_bits
+                })
                 .collect();
             let n = of_knob.len() as f64;
             FrontierPoint {
                 knob: *knob,
                 precision: prec.clone(),
+                score_frac: f64::from_bits(*frac_bits),
                 flops_reduction: of_knob.iter().map(|p| p.flops_reduction).sum::<f64>() / n,
                 accuracy: of_knob.iter().map(|p| p.accuracy).sum::<f64>() / n,
             }
@@ -322,8 +360,20 @@ pub fn model_frontier(points: &[SweepPoint], model: &str) -> Vec<FrontierPoint> 
 // The sweep
 // ---------------------------------------------------------------------------
 
-/// Run the full sweep: every (model, task) pair through the serving pool,
-/// one lockstep-replay pass per knob, Pareto frontiers per model.
+/// Whether a (model, task) pair serves honestly. Two mismatches are
+/// skipped rather than swept: a task longer than the model's positional
+/// table (its examples would be truncated past the planted signal), and a
+/// long-context model (`max_len > 256`) on a short task (`max_len ≤ 256`)
+/// — the pass would measure mostly padding at 8–32× the cost of the
+/// short-context models that own those rows.
+pub fn pair_fits(model_max_len: usize, task_max_len: usize) -> bool {
+    task_max_len <= model_max_len && !(model_max_len > 256 && task_max_len <= 256)
+}
+
+/// Run the full sweep: every fitting (model, task) pair through the
+/// serving pool, one lockstep-replay pass per knob, Pareto frontiers per
+/// model. Non-fitting pairs ([`pair_fits`]) are logged and skipped; a
+/// sweep where nothing fits is an error.
 pub fn run_sweep(backend: &BackendSpec, opts: &HarnessOptions) -> Result<HarnessReport> {
     if opts.models.is_empty() || opts.tasks.is_empty() {
         bail!("eval sweep needs at least one model and one task");
@@ -331,16 +381,32 @@ pub fn run_sweep(backend: &BackendSpec, opts: &HarnessOptions) -> Result<Harness
     let mut points = Vec::new();
     let mut pools = Vec::new();
     for model in &opts.models {
+        let info = {
+            let mut be = open_backend(backend)?;
+            be.model(model)?
+        };
         for task in &opts.tasks {
             let spec = data::task_by_name(task)
                 .with_context(|| format!("unknown task {task:?}"))?;
             if spec.kind != TaskKind::Classification {
                 bail!("eval sweep serves classification heads only; {task} is regression");
             }
+            if !pair_fits(info.max_len, spec.max_len) {
+                if opts.verbose {
+                    eprintln!(
+                        "[eval] skipping {model}/{task}: model serves {} tokens, task needs {}",
+                        info.max_len, spec.max_len
+                    );
+                }
+                continue;
+            }
             let (pts, counters) = sweep_pair(backend, opts, model, &spec)?;
             points.extend(pts);
             pools.push(counters);
         }
+    }
+    if points.is_empty() {
+        bail!("no (model, task) pair fits: every combination was skipped");
     }
     let frontiers = opts
         .models
@@ -389,6 +455,8 @@ fn sweep_pair(
             brownout_watermark: opts.brownout_watermark,
             canary_rate: opts.canary_rate,
             quality_floor: 0.5,
+            // Fractions are requested per pass, not defaulted pool-wide.
+            score_frac: 1.0,
         },
     )?;
 
@@ -417,31 +485,42 @@ fn sweep_pair(
         bail!("eval sweep needs at least one precision");
     }
 
+    let score_fracs = if opts.score_fracs.is_empty() { vec![1.0] } else { opts.score_fracs.clone() };
+    for &f in &score_fracs {
+        if !(f > 0.0 && f <= 1.0) {
+            bail!("sweep score fraction {f} must lie in (0, 1]");
+        }
+    }
+
     // The exact f32 pass is the agreement baseline for every precision.
-    let exact = run_point(&server, &texts, Knob::Exact, Precision::F32)?;
+    let exact = run_point(&server, &texts, Knob::Exact, Precision::F32, 1.0)?;
     let exact_preds: Vec<i32> =
         exact.iter().map(|r| if r.shed { -1 } else { r.pred_class }).collect();
 
-    let mut settings = vec![(Knob::Exact, Precision::F32)];
+    let mut settings = vec![(Knob::Exact, Precision::F32, 1.0f64)];
     for &prec in &precisions {
-        settings.extend(opts.alphas.iter().map(|&a| (Knob::Alpha(a), prec)));
-        settings.extend(opts.epsilons.iter().map(|&e| (Knob::Epsilon(e), prec)));
+        for &frac in &score_fracs {
+            settings.extend(opts.alphas.iter().map(|&a| (Knob::Alpha(a), prec, frac)));
+            settings.extend(opts.epsilons.iter().map(|&e| (Knob::Epsilon(e), prec, frac)));
+        }
     }
 
     let mut points = Vec::with_capacity(settings.len());
-    for (knob, prec) in settings {
+    for (knob, prec, frac) in settings {
         let outcomes = match knob {
             Knob::Exact => exact.clone(),
-            _ => run_point(&server, &texts, knob, prec)?,
+            _ => run_point(&server, &texts, knob, prec, frac)?,
         };
-        let point =
-            summarize(model_name, spec, knob, prec, &outcomes, &exact_preds, &dev, &info)?;
+        let point = summarize(
+            model_name, spec, knob, prec, frac, seq, &outcomes, &exact_preds, &dev, &info,
+        )?;
         if opts.verbose {
             eprintln!(
-                "[eval {model_name}/{}] {}@{}: {} {:.2} | agree {:.3} | {:.2}x FLOPs | shed {}",
+                "[eval {model_name}/{}] {}@{} f={}: {} {:.2} | agree {:.3} | {:.2}x FLOPs | shed {}",
                 spec.name,
                 point.knob,
                 point.precision,
+                point.score_frac,
                 point.metric,
                 100.0 * point.accuracy,
                 point.agreement,
@@ -477,15 +556,17 @@ fn run_point(
     texts: &[String],
     knob: Knob,
     precision: Precision,
+    score_frac: f64,
 ) -> Result<Vec<Response>> {
     let sub = server.submitter();
+    let frac = score_frac as f32;
     server.pause();
     let mut rxs = Vec::with_capacity(texts.len());
     for t in texts {
         rxs.push(match knob {
             Knob::Exact => sub.submit_with_precision(t, 1.0, "exact", precision),
-            Knob::Alpha(a) => sub.submit_with_precision(t, a as f32, "mca", precision),
-            Knob::Epsilon(e) => sub.submit_budget_with_precision(t, e, None, precision),
+            Knob::Alpha(a) => sub.submit_sampled(t, a as f32, "mca", precision, frac),
+            Knob::Epsilon(e) => sub.submit_budget_sampled(t, e, None, precision, frac),
         });
     }
     server.resume();
@@ -503,6 +584,8 @@ fn summarize(
     spec: &TaskSpec,
     knob: Knob,
     precision: Precision,
+    score_frac: f64,
+    seq: usize,
     outcomes: &[Response],
     exact_preds: &[i32],
     dev: &[Example],
@@ -514,6 +597,8 @@ fn summarize(
     let mut r_sum_total = 0.0f64;
     let (mut completed, mut shed, mut degraded) = (0usize, 0usize, 0usize);
     let mut alpha_sum = 0.0f64;
+    let mut frac_sum = 0.0f64;
+    let mut frac_n = 0usize;
     for r in outcomes {
         if r.shed {
             shed += 1;
@@ -527,6 +612,11 @@ fn summarize(
             degraded += 1;
         }
         if knob != Knob::Exact && r.n_eff > 0 {
+            // The fraction actually served: infeasible ε splits fall back
+            // to exact scores per request, and the accounting must charge
+            // what ran, not what was asked for.
+            frac_sum += r.score_frac as f64;
+            frac_n += 1;
             // A budget resolved to the exact path charges the full encode
             // budget (n·d per layer), keeping Eq. 9 honest: its factor
             // contribution is exactly 1.
@@ -545,12 +635,17 @@ fn summarize(
         // The exact baseline is always the f32 forward; the approximate
         // pass's rows cost `precision_cost_factor` each (int8 rows are
         // half-price), including budget rows that resolved to the exact
-        // path — those still ran on the reduced-precision GEMMs.
-        flops::reduction_factor_prec(
+        // path — those still ran on the reduced-precision GEMMs. All
+        // passes use the score-extended accounting (QKᵀ charged on both
+        // sides) at the mean fraction actually served, so value-only and
+        // sampled-score rows land on one comparable axis.
+        let served_frac = if frac_n > 0 { frac_sum / frac_n as f64 } else { 1.0 };
+        flops::reduction_factor_scored(
             &per_seq,
             info.n_layers,
             dims,
             crate::coordinator::precision_cost_factor(precision),
+            served_frac,
         )
     };
 
@@ -584,6 +679,8 @@ fn summarize(
         metric: metric.short().to_string(),
         knob,
         precision: precision.as_str().to_string(),
+        score_frac,
+        seq,
         accuracy,
         baseline,
         agreement,
@@ -634,6 +731,23 @@ fn precision_from_json(j: &Json) -> Result<String> {
     }
 }
 
+/// The entry's `"score_frac"` field; 1.0 when absent (documents written
+/// before the sampled-score axis existed served exact scores throughout).
+fn score_frac_from_json(j: &Json) -> Result<f64> {
+    match j.get("score_frac") {
+        Ok(v) => v.as_f64(),
+        Err(_) => Ok(1.0),
+    }
+}
+
+/// The entry's `"seq"` field; 0 ("unrecorded") when absent.
+fn seq_from_json(j: &Json) -> Result<usize> {
+    match j.get("seq") {
+        Ok(v) => v.as_usize(),
+        Err(_) => Ok(0),
+    }
+}
+
 /// Serialize a [`HarnessReport`] to the `BENCH_eval.json` value (schema in
 /// BENCHMARKS.md §4).
 pub fn bench_eval_to_json(rep: &HarnessReport) -> Json {
@@ -648,6 +762,8 @@ pub fn bench_eval_to_json(rep: &HarnessReport) -> Json {
             m.insert("metric".to_string(), Json::Str(p.metric.clone()));
             knob_to_json(p.knob, &mut m);
             m.insert("precision".to_string(), Json::Str(p.precision.clone()));
+            m.insert("score_frac".to_string(), Json::Num(p.score_frac));
+            m.insert("seq".to_string(), Json::Num(p.seq as f64));
             m.insert("accuracy".to_string(), Json::Num(p.accuracy));
             m.insert("baseline".to_string(), Json::Num(p.baseline));
             m.insert("agreement".to_string(), Json::Num(p.agreement));
@@ -671,6 +787,7 @@ pub fn bench_eval_to_json(rep: &HarnessReport) -> Json {
                     let mut m: BTreeMap<String, Json> = BTreeMap::new();
                     knob_to_json(p.knob, &mut m);
                     m.insert("precision".to_string(), Json::Str(p.precision.clone()));
+                    m.insert("score_frac".to_string(), Json::Num(p.score_frac));
                     m.insert("flops_reduction".to_string(), Json::Num(p.flops_reduction));
                     m.insert("accuracy".to_string(), Json::Num(p.accuracy));
                     Json::Obj(m)
@@ -727,6 +844,8 @@ pub fn bench_eval_from_json(j: &Json) -> Result<HarnessReport> {
             metric: e.get("metric")?.as_str()?.to_string(),
             knob: knob_from_json(e)?,
             precision: precision_from_json(e)?,
+            score_frac: score_frac_from_json(e)?,
+            seq: seq_from_json(e)?,
             accuracy: e.get("accuracy")?.as_f64()?,
             baseline: e.get("baseline")?.as_f64()?,
             agreement: e.get("agreement")?.as_f64()?,
@@ -745,6 +864,7 @@ pub fn bench_eval_from_json(j: &Json) -> Result<HarnessReport> {
             pts.push(FrontierPoint {
                 knob: knob_from_json(p)?,
                 precision: precision_from_json(p)?,
+                score_frac: score_frac_from_json(p)?,
                 flops_reduction: p.get("flops_reduction")?.as_f64()?,
                 accuracy: p.get("accuracy")?.as_f64()?,
             });
@@ -794,6 +914,8 @@ mod tests {
             metric: "Acc.".to_string(),
             knob,
             precision: "f32".to_string(),
+            score_frac: 1.0,
+            seq: 64,
             accuracy: acc,
             baseline: 0.9,
             agreement: 0.95,
@@ -891,6 +1013,47 @@ mod tests {
     }
 
     #[test]
+    fn score_frac_and_seq_default_for_old_documents() {
+        // Documents written before the sampled-score axis carry neither
+        // field: they served exact scores and did not record the length.
+        let j = Json::parse(r#"{"knob": "exact"}"#).unwrap();
+        assert_eq!(score_frac_from_json(&j).unwrap(), 1.0);
+        assert_eq!(seq_from_json(&j).unwrap(), 0);
+        let j = Json::parse(r#"{"knob": "exact", "score_frac": 0.5, "seq": 2048}"#).unwrap();
+        assert_eq!(score_frac_from_json(&j).unwrap(), 0.5);
+        assert_eq!(seq_from_json(&j).unwrap(), 2048);
+    }
+
+    #[test]
+    fn pair_fit_rules() {
+        // task fits model
+        assert!(pair_fits(64, 64));
+        assert!(pair_fits(256, 256));
+        assert!(pair_fits(2048, 2048));
+        // task longer than the model's positional table
+        assert!(!pair_fits(64, 2048));
+        assert!(!pair_fits(256, 2048));
+        // long-context model on a short task: mostly padding
+        assert!(!pair_fits(2048, 64));
+        assert!(!pair_fits(2048, 256));
+        // a mid-length model still serves short tasks
+        assert!(pair_fits(256, 64));
+    }
+
+    #[test]
+    fn model_frontier_separates_score_fractions() {
+        let a = pt("m", "t1", Knob::Alpha(0.4), 0.8, 3.0);
+        let mut b = pt("m", "t1", Knob::Alpha(0.4), 0.75, 6.0);
+        b.score_frac = 0.5;
+        // same knob and precision, different fraction: two candidates,
+        // neither dominated (higher accuracy vs higher reduction)
+        let f = model_frontier(&[a, b], "m");
+        assert_eq!(f.len(), 2);
+        assert!(f.iter().any(|p| p.score_frac == 1.0));
+        assert!(f.iter().any(|p| p.score_frac == 0.5));
+    }
+
+    #[test]
     fn bench_eval_json_round_trips() {
         let rep = HarnessReport {
             points: vec![
@@ -904,12 +1067,14 @@ mod tests {
                     FrontierPoint {
                         knob: Knob::Exact,
                         precision: "f32".to_string(),
+                        score_frac: 1.0,
                         flops_reduction: 1.0,
                         accuracy: 0.91,
                     },
                     FrontierPoint {
                         knob: Knob::Epsilon(16.0),
                         precision: "int8".to_string(),
+                        score_frac: 0.5,
                         flops_reduction: 4.5,
                         accuracy: 0.87,
                     },

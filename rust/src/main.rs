@@ -417,6 +417,11 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
                     &d.precisions.join(","),
                     "compute precisions to sweep (comma list of f32|bf16|int8)",
                 )
+                .opt(
+                    "score-frac",
+                    &join_f64(&d.score_fracs),
+                    "sampled-score fractions to sweep (comma list in (0,1]; 1 = exact scores)",
+                )
                 .opt("workers", &d.workers.to_string(), "serving pool size per (model, task)")
                 .opt(
                     "queue-cap",
@@ -436,7 +441,11 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
                 .opt("dev-limit", &d.dev_limit.to_string(), "dev examples per task")
                 .opt("max-wait-ms", &d.max_wait_ms.to_string(), "batching window")
                 .opt("json", "BENCH_eval.json", "machine-readable sweep output (empty to skip)")
-                .flag("quick", "CI smoke profile: distil_sim, 2 tasks, small grids, 40 train steps")
+                .flag(
+                    "quick",
+                    "CI smoke profile: distil_sim + longbert_sim, 3 tasks (incl. needle_2k_sim), \
+                     small grids, 40 train steps",
+                )
                 .parse(rest)?;
             if args.get_flag("help-cmd") {
                 eprint!("{}", args.usage(cmd));
@@ -655,6 +664,9 @@ fn eval_cmd(args: &Args) -> Result<()> {
     if args.was_set("precision") || !quick {
         opts.precisions = args.get_str_list("precision");
     }
+    if args.was_set("score-frac") || !quick {
+        opts.score_fracs = args.get_f64_list("score-frac")?;
+    }
     if args.was_set("workers") || !quick {
         opts.workers = args.get_usize("workers")?;
     }
@@ -681,12 +693,13 @@ fn eval_cmd(args: &Args) -> Result<()> {
     }
     if opts.verbose {
         eprintln!(
-            "[eval] sweep: {:?} × {:?} | α {:?} | ε {:?} | prec {:?} | {} workers{}",
+            "[eval] sweep: {:?} × {:?} | α {:?} | ε {:?} | prec {:?} | frac {:?} | {} workers{}",
             opts.models,
             opts.tasks,
             opts.alphas,
             opts.epsilons,
             opts.precisions,
+            opts.score_fracs,
             opts.workers,
             if quick { " (quick profile)" } else { "" }
         );
@@ -784,6 +797,7 @@ fn worker_cmd(args: &Args) -> Result<()> {
             latency_us: 0,
             batch_size: 0,
             alpha: wr.alpha,
+            score_frac: wr.score_frac,
             mode: wr.mode.clone(),
             budget: wr.budget.is_some(),
             precision: wr.precision,
@@ -817,15 +831,20 @@ fn worker_cmd(args: &Args) -> Result<()> {
                 let rx = if let Some(max_new) = wr.decode {
                     server.submit_decode(&wr.text, wr.alpha, &wr.mode, wr.precision, max_new)
                 } else if let Some((eps, delta)) = wr.budget {
-                    server
-                        .submitter()
-                        .submit_budget_with_precision(&wr.text, eps, delta, wr.precision)
+                    server.submitter().submit_budget_sampled(
+                        &wr.text,
+                        eps,
+                        delta,
+                        wr.precision,
+                        wr.score_frac,
+                    )
                 } else {
-                    server.submitter().submit_with_precision(
+                    server.submitter().submit_sampled(
                         &wr.text,
                         wr.alpha,
                         &wr.mode,
                         wr.precision,
+                        wr.score_frac,
                     )
                 };
                 let tx = out_tx.clone();
@@ -938,6 +957,7 @@ fn loadtest(args: &Args) -> Result<()> {
                 brownout_watermark: args.get_usize("brownout-watermark")?,
                 canary_rate: args.get_f64("canary-rate")?,
                 quality_floor: args.get_f64("quality-floor")?,
+                score_frac: 1.0,
             },
         )?;
         let wl_base = Workload {
@@ -1188,6 +1208,7 @@ fn serve_demo(args: &Args) -> Result<()> {
             brownout_watermark: args.get_usize("brownout-watermark")?,
             canary_rate: args.get_f64("canary-rate")?,
             quality_floor: args.get_f64("quality-floor")?,
+            score_frac: 1.0,
         },
     )?;
 

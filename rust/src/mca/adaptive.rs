@@ -1,8 +1,13 @@
 //! Adaptive α control — the "simple dynamic control of performance-resource
 //! trade-off" the paper's intro promises, made into a first-class feature.
 //!
-//! Three pieces:
+//! Four pieces:
 //!
+//! * [`score_error_bound`] / [`split_budget_for_score`] — the combined
+//!   budget split for sampled-score serving: a single end-to-end ε first
+//!   reserves the deterministic score-side share for the configured
+//!   `score_frac`, and the remainder resolves the value-side α below, so
+//!   `submit_budget` requests honor one ε across both estimators.
 //! * [`alpha_for_error_budget`] / [`alpha_for_tail_budget`] — invert
 //!   Theorem 2: given a per-token error budget ε (and the model statistics
 //!   β, ‖W‖_F that the checkpoint fixes), the α that guarantees
@@ -109,6 +114,61 @@ pub fn alpha_for_tail_budget(epsilon: f64, delta: f64, beta: f64, w_frob: f64) -
         return alpha_for_error_budget(f64::NAN, beta, w_frob);
     }
     alpha_for_error_budget(epsilon * delta.clamp(0.0, 1.0), beta, w_frob)
+}
+
+/// Planning model for the sampled-score error share of a combined budget:
+/// serving at score fraction `f` reserves `(1 − f)·β·‖W‖_F` of the ε a
+/// budget request carries (0 at fraction 1, the full Theorem-2 scale as
+/// f → 0). The same β·‖W‖_F scale as the value side because both errors
+/// land in the same output space: a score row off by δ in ℓ1 moves the
+/// token's output by at most δ·maxⱼ‖Hⱼ‖ ~ β·‖W‖_F. This is the serving
+/// *planner* — the per-request a-posteriori certificate lives in
+/// [`super::score`] and the end-to-end calibration in
+/// `tests/score_estimator_contract.rs`. Degenerate statistics reserve 0
+/// (matching [`alpha_for_error_budget`], which disables its inversion on
+/// the same inputs); degenerate fractions clamp to [0, 1] with NaN
+/// reserving the full scale — garbage must not be served cheap.
+pub fn score_error_bound(score_frac: f64, beta: f64, w_frob: f64) -> f64 {
+    if !(beta > 0.0 && beta.is_finite() && w_frob > 0.0 && w_frob.is_finite()) {
+        return 0.0;
+    }
+    let f = if score_frac.is_finite() { score_frac.clamp(0.0, 1.0) } else { 0.0 };
+    let scale = beta * w_frob;
+    if !scale.is_finite() {
+        return 0.0;
+    }
+    (1.0 - f) * scale
+}
+
+/// Split a single end-to-end ε between the score and value estimators:
+/// returns the value-side budget left after reserving
+/// [`score_error_bound`] for serving at `score_frac`, or `None` when the
+/// fraction is too coarse for this ε (score share ≥ ε) — the caller must
+/// fall back to exact scores (fraction 1) and retry with the full ε.
+/// The score share is a deterministic worst-case reservation, so tail-δ
+/// budgets apply δ only to the value remainder
+/// ([`alpha_for_tail_budget`] on the returned ε). Non-finite or
+/// non-positive ε returns `None` for fractions below 1 (an unbounded +∞
+/// budget needs no split and resolves through the fraction-1 path).
+pub fn split_budget_for_score(
+    epsilon: f64,
+    score_frac: f64,
+    beta: f64,
+    w_frob: f64,
+) -> Option<f64> {
+    if score_frac >= 1.0 {
+        return Some(epsilon);
+    }
+    if !epsilon.is_finite() || epsilon <= 0.0 {
+        return None;
+    }
+    let reserved = score_error_bound(score_frac, beta, w_frob);
+    let rest = epsilon - reserved;
+    if rest > 0.0 {
+        Some(rest)
+    } else {
+        None
+    }
 }
 
 /// AIMD controller on α: additive increase while the quality proxy holds,
@@ -307,6 +367,63 @@ mod tests {
                         "alpha {a} escaped for eps={eps} delta={delta} beta={beta} w={w}"
                     ));
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn score_budget_split_reserves_monotonically() {
+        let (beta, w) = (2.0, 3.0);
+        // fraction 1 reserves nothing: the whole ε stays on the value side
+        assert_eq!(split_budget_for_score(1.2, 1.0, beta, w), Some(1.2));
+        assert_eq!(score_error_bound(1.0, beta, w), 0.0);
+        // smaller fractions reserve more, so the value remainder shrinks
+        let mut prev = f64::INFINITY;
+        for f in [0.8, 0.6, 0.4, 0.2] {
+            let rest = split_budget_for_score(8.0, f, beta, w).unwrap();
+            assert!(rest < prev, "remainder did not shrink at frac {f}");
+            assert!(
+                (rest + score_error_bound(f, beta, w) - 8.0).abs() < 1e-12,
+                "split does not conserve ε at frac {f}"
+            );
+            prev = rest;
+        }
+        // an ε tighter than the score reservation is infeasible at that
+        // fraction — the caller must retry at fraction 1
+        assert_eq!(split_budget_for_score(1.0, 0.5, beta, w), None);
+        assert_eq!(split_budget_for_score(3.0, 0.5, beta, w), None); // == reserved
+        assert!(split_budget_for_score(3.01, 0.5, beta, w).is_some());
+    }
+
+    #[test]
+    fn score_budget_split_survives_degenerate_inputs() {
+        // Degenerate statistics reserve nothing (the value side resolves
+        // α = 1 on the same inputs — exact-ish either way).
+        assert_eq!(score_error_bound(0.5, 0.0, 3.0), 0.0);
+        assert_eq!(score_error_bound(0.5, f64::NAN, 3.0), 0.0);
+        assert_eq!(score_error_bound(0.5, 2.0, f64::INFINITY), 0.0);
+        // NaN fraction reserves the full scale; out-of-range clamps.
+        assert_eq!(score_error_bound(f64::NAN, 2.0, 3.0), 6.0);
+        assert_eq!(score_error_bound(-1.0, 2.0, 3.0), 6.0);
+        assert_eq!(score_error_bound(7.0, 2.0, 3.0), 0.0);
+        // Degenerate budgets refuse to split below fraction 1.
+        assert_eq!(split_budget_for_score(f64::NAN, 0.5, 2.0, 3.0), None);
+        assert_eq!(split_budget_for_score(f64::INFINITY, 0.5, 2.0, 3.0), None);
+        assert_eq!(split_budget_for_score(0.0, 0.5, 2.0, 3.0), None);
+        assert_eq!(split_budget_for_score(-2.0, 0.5, 2.0, 3.0), None);
+        // ...but pass any ε through untouched at fraction 1.
+        assert_eq!(split_budget_for_score(f64::NAN, 1.0, 2.0, 3.0).map(|x| x.is_nan()), Some(true));
+        // The composed resolution is always finite and in range.
+        prop::check(200, |g| {
+            let eps = g.f64(0.001..20.0);
+            let f = g.f64(0.0..1.2);
+            let beta = g.f64(0.1..10.0);
+            let w = g.f64(0.1..50.0);
+            let value_eps = split_budget_for_score(eps, f, beta, w).unwrap_or(eps);
+            let a = alpha_for_error_budget(value_eps, beta, w);
+            if !a.is_finite() || !(MIN_RESOLVED_ALPHA..=1.0).contains(&a) {
+                return Err(format!("alpha {a} escaped for eps={eps} frac={f}"));
             }
             Ok(())
         });

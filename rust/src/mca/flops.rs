@@ -11,6 +11,13 @@
 //!
 //! The MCA Σr_i is *measured in-graph* (the forward artifact returns it),
 //! so reported reductions use the true sampled cost, not an estimate.
+//!
+//! The sampled-score path extends the accounting with the QKᵀ score term
+//! ([`score_pairs`] / [`reduction_factor_scored`]): the paper's Eq.-9
+//! convention omits the score cost because the exact and MCA paths pay it
+//! identically, but once score rows are sampled the two sides differ and
+//! both must charge it — that is what keeps the reduction factor from
+//! plateauing as sequence length grows.
 
 /// Static per-layer description needed for accounting.
 #[derive(Debug, Clone, Copy)]
@@ -102,6 +109,51 @@ pub fn reduction_factor_prec(
         return 0.0;
     }
     exact as f64 / (mca as f64 * prec_factor)
+}
+
+/// Effective (query, key) score pairs charged to the sampled-score path
+/// at `score_frac`: the `m = ceil(frac·n)` exactly-computed rows cost
+/// their full share of [`attn_pairs`]; each reconstructed row costs
+/// `rank/dh ≈ frac` of an exact row (`rank·n` multiplies instead of
+/// `dh·n` — see [`super::score::reconstruction_rank`]). Folding both in:
+/// `score_pairs = attn_pairs · frac·(2 − frac)`, equal to [`attn_pairs`]
+/// at fraction 1 and vanishing as the fraction does. Degenerate fractions
+/// clamp to [0, 1] (NaN charges full cost — garbage must not look cheap).
+pub fn score_pairs(n_eff: usize, dims: AttnDims, score_frac: f64) -> u64 {
+    let f = if score_frac.is_finite() { score_frac.clamp(0.0, 1.0) } else { 1.0 };
+    let pairs = attn_pairs(n_eff, dims) as f64;
+    (pairs * f * (2.0 - f)).ceil() as u64
+}
+
+/// [`reduction_factor_prec`] extended with the QKᵀ score-side term of the
+/// sampled-score path. Both sides gain their score cost per layer — the
+/// exact baseline `2·attn_pairs·d` (QKᵀ summed across heads), the
+/// approximate side `2·score_pairs·d` — on top of the Eq.-9 encode and
+/// weighted-sum terms. At `score_frac = 1` the two score terms are equal,
+/// so the factor degrades gracefully toward (but does not equal) the
+/// value-only accounting; as n grows the value-side win is amortized away
+/// by the n² terms while the score-side win scales *with* them, which is
+/// why this factor no longer plateaus at 1 for long sequences.
+pub fn reduction_factor_scored(
+    per_seq: &[(usize, u64)],
+    n_layers: usize,
+    dims: AttnDims,
+    prec_factor: f64,
+    score_frac: f64,
+) -> f64 {
+    let mut exact = 0u64;
+    let mut approx = 0u64;
+    let d = dims.d_model as u64;
+    for &(n_eff, r_sum_all_layers) in per_seq {
+        let pairs = attn_pairs(n_eff, dims);
+        let spairs = score_pairs(n_eff, dims, score_frac);
+        exact += n_layers as u64 * (exact_layer_flops(n_eff, dims) + 2 * pairs * d);
+        approx += 2 * r_sum_all_layers * d + n_layers as u64 * 2 * (pairs + spairs) * d;
+    }
+    if approx == 0 || prec_factor <= 0.0 {
+        return 0.0;
+    }
+    exact as f64 / (approx as f64 * prec_factor)
 }
 
 /// Project a reduction factor measured at one feature dimension to another
@@ -225,6 +277,55 @@ mod tests {
         assert_eq!(a, b);
         // degenerate factors don't divide by zero
         assert_eq!(reduction_factor_prec(&per_seq, 4, DENSE, 0.0), 0.0);
+    }
+
+    #[test]
+    fn score_pairs_tracks_the_fraction() {
+        // frac 1 charges the full score matrix; smaller fractions charge
+        // frac·(2−frac) of it, monotone in frac; degenerate inputs clamp.
+        assert_eq!(score_pairs(64, DENSE, 1.0), attn_pairs(64, DENSE));
+        let full = attn_pairs(64, DENSE) as f64;
+        assert_eq!(score_pairs(64, DENSE, 0.5), (full * 0.75).ceil() as u64);
+        let mut prev = 0u64;
+        for f in [0.1, 0.25, 0.5, 0.75, 1.0] {
+            let p = score_pairs(64, DENSE, f);
+            assert!(p >= prev, "score_pairs not monotone at frac {f}");
+            prev = p;
+        }
+        assert_eq!(score_pairs(64, DENSE, f64::NAN), attn_pairs(64, DENSE));
+        assert_eq!(score_pairs(64, DENSE, -3.0), 0);
+        // windowed dims charge the windowed pair count
+        let wdims = AttnDims { d_model: 128, window: Some(8) };
+        assert!(score_pairs(256, wdims, 0.5) < score_pairs(256, DENSE, 0.5));
+    }
+
+    #[test]
+    fn scored_reduction_is_one_at_the_saturated_exact_point() {
+        // r_sum saturated and frac 1: both sides charge identical FLOPs.
+        let per_seq: Vec<(usize, u64)> = vec![(32, 32 * 128 * 4)];
+        let f = reduction_factor_scored(&per_seq, 4, DENSE, 1.0, 1.0);
+        assert!((f - 1.0).abs() < 1e-9, "{f}");
+        // and the precision factor still scales the approximate side only
+        let f_int8 = reduction_factor_scored(&per_seq, 4, DENSE, 0.5, 1.0);
+        assert!((f_int8 - 2.0).abs() < 1e-9, "{f_int8}");
+    }
+
+    #[test]
+    fn score_sampling_beats_value_only_at_long_sequences() {
+        // The plateau the tentpole removes: with r̄ fixed at 8 rows per
+        // token, the value-only factor decays toward 1 as n grows (the n²
+        // terms swamp the encode win), while frac 0.25 score sampling
+        // holds a floor set by the score-side win itself.
+        for n in [256usize, 1024, 4096] {
+            let per_seq: Vec<(usize, u64)> = vec![(n, (n * 8 * 2) as u64)];
+            let value_only = reduction_factor_scored(&per_seq, 2, DENSE, 1.0, 1.0);
+            let sampled = reduction_factor_scored(&per_seq, 2, DENSE, 1.0, 0.25);
+            assert!(sampled > value_only, "n={n}: {sampled} <= {value_only}");
+            if n == 4096 {
+                assert!(value_only < 1.1, "value-only should plateau: {value_only}");
+                assert!(sampled > 1.3, "sampled-score should not: {sampled}");
+            }
+        }
     }
 
     #[test]

@@ -25,6 +25,7 @@
 
 pub mod adaptive;
 pub mod flops;
+pub mod score;
 
 use crate::rng::{AliasTable, Pcg64};
 use crate::tensor::{self, kernel, Tensor};

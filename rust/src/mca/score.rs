@@ -1,0 +1,380 @@
+//! Sampled-score attention — the score-matrix half of the approximation.
+//!
+//! MCA (Eq. 5/6/9) approximates only the value encoding `X·W_v`; the
+//! quadratic `QKᵀ`/softmax cost is untouched and dominates as sequences
+//! grow. Following the Eigen-Analysis observation that attention score
+//! matrices are low-rank (rank ≤ head dim, and effectively much lower),
+//! this module computes an importance-sampled subset of score *rows*
+//! exactly — through the same fused scale+mask+softmax kernel epilogue as
+//! the exact path — and reconstructs the remaining rows by projecting
+//! their queries onto an orthonormal basis of the sampled query subspace.
+//! Scores are linear in the query, so the reconstruction happens in
+//! **logit space**: each reconstructed row then applies its *own*
+//! scale+mask+softmax ([`crate::tensor::kernel::masked_softmax_row`]),
+//! which keeps the windowed/causal/padding visibility rule exact — the
+//! approximation can blur *where* a query looks, never *what it is
+//! allowed to see*.
+//!
+//! The knob is `score_frac ∈ (0, 1]`: the fraction of rows computed
+//! exactly AND the fraction of the head dimension kept as reconstruction
+//! rank. At `score_frac = 1.0` every row is exact and the path is
+//! bit-identical to the exact forward (no reconstruction runs at all).
+//!
+//! Error contract (verified by `tests/score_estimator_contract.rs`): for
+//! a reconstructed row `i` with projection residual
+//! `resᵢ = ‖qᵢ − BᵀBqᵢ‖₂` and keys of norm ≤ `maxⱼ‖kⱼ‖₂`,
+//!
+//! * logits:  `‖sᵢ − ŝᵢ‖_∞ ≤ resᵢ · maxⱼ‖kⱼ‖₂`            ([`recon_linf_bound`])
+//! * softmax: `‖Aᵢ − Âᵢ‖₁ ≤ exp(2·scale·‖sᵢ−ŝᵢ‖_∞) − 1`   ([`softmax_l1_bound`])
+//! * output:  `‖yᵢ − ŷᵢ‖₂ ≤ ‖Aᵢ − Âᵢ‖₁ · maxⱼ‖Hⱼ‖₂`
+//!
+//! a deterministic a-posteriori chain that composes with the Theorem-2
+//! value-side bound by the triangle inequality — the combined budget the
+//! coordinator splits in [`super::adaptive`].
+
+use crate::tensor::{kernel, Tensor};
+
+/// The importance-ordered exact-row sample: the `ceil(frac · n)` rows of
+/// highest importance (ties broken by ascending index, NaNs compare
+/// equal), in descending-importance order — the order the reconstruction
+/// basis is built in, so nested fractions yield nested samples and
+/// prefix-nested bases (the monotone-in-fraction error contract).
+///
+/// `frac` outside (0, 1] is clamped; at least one row is always sampled.
+/// Callers force-include anchor rows (the global-CLS row) by assigning
+/// them infinite importance.
+pub fn sampled_rows(importance: &[f32], frac: f32) -> Vec<usize> {
+    let n = importance.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let f = if frac.is_finite() { frac.clamp(0.0, 1.0) } else { 1.0 };
+    let m = ((f as f64 * n as f64).ceil() as usize).clamp(1, n);
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| {
+        importance[b]
+            .partial_cmp(&importance[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx.truncate(m);
+    idx
+}
+
+/// Split `0..n` into (sampled, rest), both ascending. `sampled` is the
+/// (unordered-ok) exact-row set from [`sampled_rows`].
+pub fn partition_rows(sampled: &[usize], n: usize) -> (Vec<usize>, Vec<usize>) {
+    let mut is_sampled = vec![false; n];
+    for &r in sampled {
+        is_sampled[r] = true;
+    }
+    let (mut s, mut rest) = (Vec::new(), Vec::new());
+    for (i, &flag) in is_sampled.iter().enumerate() {
+        if flag {
+            s.push(i);
+        } else {
+            rest.push(i);
+        }
+    }
+    (s, rest)
+}
+
+/// Reconstruction rank for head dimension `dh` with `m` sampled rows:
+/// `ceil(frac · dh)` clamped to `[1, min(m, dh)]`. Tying the rank to the
+/// same fraction as the row sample is what makes the reconstructed-row
+/// cost `rank·n` (not `dh·n`) — the source of the score-side FLOPs
+/// reduction charged by [`super::flops::score_pairs`].
+pub fn reconstruction_rank(frac: f32, dh: usize, m: usize) -> usize {
+    let f = if frac.is_finite() { frac.clamp(0.0, 1.0) } else { 1.0 };
+    let cap = m.min(dh).max(1);
+    ((f as f64 * dh as f64).ceil() as usize).clamp(1, cap)
+}
+
+/// Orthonormal basis of the span of the listed query rows, built by
+/// modified Gram-Schmidt (two re-orthogonalization passes) in the given
+/// order, truncated at `rank_cap` vectors. Rows that are numerically
+/// inside the span so far are skipped, so the returned rank can be lower
+/// than `rank_cap` (and is 0 when every listed row is ~zero, e.g. an
+/// all-padding head). Shape: `(rank, dh)`.
+pub fn orthonormal_basis(q: &Tensor, order: &[usize], rank_cap: usize) -> Tensor {
+    let dh = q.shape()[1];
+    let mut basis: Vec<f32> = Vec::new();
+    let mut rank = 0usize;
+    for &ri in order {
+        if rank >= rank_cap {
+            break;
+        }
+        let row = q.row(ri);
+        let orig = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let mut v = row.to_vec();
+        for _ in 0..2 {
+            for b in 0..rank {
+                let brow = &basis[b * dh..(b + 1) * dh];
+                let dot: f32 = v.iter().zip(brow).map(|(x, y)| x * y).sum();
+                for (x, y) in v.iter_mut().zip(brow) {
+                    *x -= dot * *y;
+                }
+            }
+        }
+        let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if norm > (orig * 1e-4).max(1e-12) {
+            for x in v.iter_mut() {
+                *x /= norm;
+            }
+            basis.extend_from_slice(&v);
+            rank += 1;
+        }
+    }
+    Tensor::new(&[rank, dh], basis).expect("basis shape")
+}
+
+/// A batch of reconstructed raw score rows plus their per-row projection
+/// residuals (the a-posteriori error certificates).
+#[derive(Debug)]
+pub struct ScoreRecon {
+    /// `(out_rows.len(), n)` raw reconstructed logit rows `ŝᵢ = (BᵀBqᵢ)Kᵀ`
+    pub logits: Tensor,
+    /// per-row projection residual `‖qᵢ − BᵀBqᵢ‖₂`
+    pub residuals: Vec<f32>,
+    /// basis vectors actually used (≤ the requested rank cap)
+    pub rank: usize,
+}
+
+/// Reconstruct the raw score rows `out_rows` of one head from the sampled
+/// query subspace: basis B from `sampled_order` (importance-descending,
+/// from [`sampled_rows`]) capped at `rank_cap`, then
+/// `ŝ = (Q_out Bᵀ)(B Kᵀ)` — per reconstructed row `rank·n` multiplies
+/// instead of the exact `dh·n`. The caller applies each row's own
+/// scale+mask+softmax afterwards.
+pub fn reconstruct_rows(
+    q: &Tensor,
+    keys: &Tensor,
+    sampled_order: &[usize],
+    out_rows: &[usize],
+    rank_cap: usize,
+    threads: usize,
+) -> ScoreRecon {
+    let n = keys.shape()[0];
+    let dh = q.shape()[1];
+    if out_rows.is_empty() {
+        return ScoreRecon { logits: Tensor::zeros(&[0, n]), residuals: Vec::new(), rank: 0 };
+    }
+    let basis = orthonormal_basis(q, sampled_order, rank_cap);
+    let rank = basis.shape()[0];
+    if rank == 0 {
+        let residuals = out_rows.iter().map(|&r| q.row_norm(r)).collect();
+        return ScoreRecon { logits: Tensor::zeros(&[out_rows.len(), n]), residuals, rank };
+    }
+    let mut qo = Tensor::zeros(&[out_rows.len(), dh]);
+    for (i, &r) in out_rows.iter().enumerate() {
+        qo.row_mut(i).copy_from_slice(q.row(r));
+    }
+    // coefficients tᵢ = B qᵢ, shared key projection B Kᵀ, then ŝ = T (BKᵀ)
+    let coeffs = kernel::matmul_nt(&qo, &basis, threads).expect("coeff shapes");
+    let bk = kernel::matmul_nt(&basis, keys, threads).expect("key-projection shapes");
+    let logits = kernel::matmul(&coeffs, &bk, threads).expect("reconstruction shapes");
+    let residuals = out_rows
+        .iter()
+        .enumerate()
+        .map(|(i, &r)| {
+            // B orthonormal ⇒ ‖qᵢ − BᵀBqᵢ‖² = ‖qᵢ‖² − ‖Bqᵢ‖²
+            let q2: f32 = q.row(r).iter().map(|x| x * x).sum();
+            let t2: f32 = coeffs.row(i).iter().map(|x| x * x).sum();
+            (q2 - t2).max(0.0).sqrt()
+        })
+        .collect();
+    ScoreRecon { logits, residuals, rank }
+}
+
+/// ℓ∞ bound on one reconstructed logit row: `|sᵢⱼ − ŝᵢⱼ| =
+/// |((I−BᵀB)qᵢ)·kⱼ| ≤ resᵢ·‖kⱼ‖₂ ≤ resᵢ·maxⱼ‖kⱼ‖₂` (Cauchy-Schwarz).
+pub fn recon_linf_bound(residual: f32, key_max_norm: f32) -> f32 {
+    residual * key_max_norm
+}
+
+/// ℓ1 bound between softmax rows whose logits differ by ≤ `linf` after
+/// scaling: pointwise `p ≤ q·e^{2ε}` gives `‖p − q‖₁ ≤ e^{2ε} − 1`,
+/// capped at 2 (the diameter of the probability simplex in ℓ1).
+pub fn softmax_l1_bound(linf: f32) -> f32 {
+    if !linf.is_finite() {
+        return 2.0;
+    }
+    ((2.0 * linf as f64).exp_m1() as f32).clamp(0.0, 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn rand_tensor(g: &mut prop::Gen, shape: &[usize]) -> Tensor {
+        Tensor::from_fn(shape, |_| g.f32(-2.0..2.0))
+    }
+
+    #[test]
+    fn sampled_rows_are_nested_and_importance_ordered() {
+        let imp = [0.5f32, f32::INFINITY, 0.1, 0.9, 0.7];
+        assert_eq!(sampled_rows(&imp, 0.2), vec![1]);
+        assert_eq!(sampled_rows(&imp, 0.4), vec![1, 3]);
+        assert_eq!(sampled_rows(&imp, 0.8), vec![1, 3, 4, 0]);
+        assert_eq!(sampled_rows(&imp, 1.0), vec![1, 3, 4, 0, 2]);
+        // Nested: each fraction's sample is a prefix of the next.
+        let a = sampled_rows(&imp, 0.4);
+        let b = sampled_rows(&imp, 0.8);
+        assert_eq!(&b[..a.len()], &a[..]);
+        // Degenerate fractions stay total.
+        assert_eq!(sampled_rows(&imp, 0.0).len(), 1);
+        assert_eq!(sampled_rows(&imp, f32::NAN).len(), imp.len());
+        assert!(sampled_rows(&[], 0.5).is_empty());
+    }
+
+    #[test]
+    fn partition_rows_covers_exactly_once() {
+        let (s, rest) = partition_rows(&[3, 0, 1], 5);
+        assert_eq!(s, vec![0, 1, 3]);
+        assert_eq!(rest, vec![2, 4]);
+    }
+
+    #[test]
+    fn reconstruction_rank_tracks_fraction_and_caps() {
+        assert_eq!(reconstruction_rank(1.0, 32, 100), 32);
+        assert_eq!(reconstruction_rank(0.5, 32, 100), 16);
+        assert_eq!(reconstruction_rank(0.25, 32, 4), 4); // capped by m
+        assert_eq!(reconstruction_rank(0.01, 32, 100), 1);
+        assert_eq!(reconstruction_rank(f32::NAN, 32, 100), 32);
+    }
+
+    #[test]
+    fn basis_is_orthonormal_and_skips_dependent_rows() {
+        prop::check(40, |g| {
+            let n = g.usize(2..12);
+            let dh = g.usize(2..8);
+            let mut q = rand_tensor(g, &[n, dh]);
+            // Make the last row a copy of the first: must not inflate rank.
+            let first = q.row(0).to_vec();
+            q.row_mut(n - 1).copy_from_slice(&first);
+            let order: Vec<usize> = (0..n).collect();
+            let b = orthonormal_basis(&q, &order, dh);
+            let rank = b.shape()[0];
+            if rank > dh.min(n - 1) {
+                return Err(format!("rank {rank} exceeds span bound"));
+            }
+            for i in 0..rank {
+                for j in 0..rank {
+                    let dot: f32 = b.row(i).iter().zip(b.row(j)).map(|(x, y)| x * y).sum();
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    if (dot - want).abs() > 1e-4 {
+                        return Err(format!("B B^T[{i}][{j}] = {dot}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn reconstruction_is_near_exact_at_full_rank() {
+        // With the sample spanning the head dimension and rank_cap = dh,
+        // every query lies in the basis span: residuals ~0 and the
+        // reconstructed logits match Q Kᵀ to fp tolerance.
+        prop::check(30, |g| {
+            let dh = g.usize(2..6);
+            let n = dh + g.usize(2..8);
+            let q = rand_tensor(g, &[n, dh]);
+            let k = rand_tensor(g, &[n, dh]);
+            let order: Vec<usize> = (0..n).collect();
+            let out: Vec<usize> = (0..n).collect();
+            let rec = reconstruct_rows(&q, &k, &order, &out, dh, 1);
+            let exact = q.matmul_nt(&k).unwrap();
+            let key_max = (0..n).map(|j| k.row_norm(j)).fold(0.0f32, f32::max);
+            for (i, &res) in rec.residuals.iter().enumerate() {
+                let bound = recon_linf_bound(res, key_max) * 1.05 + 1e-3;
+                for j in 0..n {
+                    let d = (rec.logits.at(&[i, j]) - exact.at(&[i, j])).abs();
+                    if d > bound {
+                        return Err(format!("row {i} col {j}: |Δ| {d} > bound {bound}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn residual_certificate_bounds_the_logit_error() {
+        // The a-posteriori chain at *partial* rank: reconstruction error
+        // on every row/column stays inside resᵢ · maxⱼ‖kⱼ‖ (Cauchy-
+        // Schwarz, so slack only covers fp rounding).
+        prop::check(40, |g| {
+            let dh = g.usize(3..8);
+            let n = dh + g.usize(4..12);
+            let q = rand_tensor(g, &[n, dh]);
+            let k = rand_tensor(g, &[n, dh]);
+            let imp: Vec<f32> = (0..n).map(|i| q.row_norm(i)).collect();
+            let order = sampled_rows(&imp, 0.5);
+            let (_, rest) = partition_rows(&order, n);
+            let rank = reconstruction_rank(0.5, dh, order.len());
+            let rec = reconstruct_rows(&q, &k, &order, &rest, rank, 1);
+            let exact = q.matmul_nt(&k).unwrap();
+            let key_max = (0..n).map(|j| k.row_norm(j)).fold(0.0f32, f32::max);
+            for (i, &r) in rest.iter().enumerate() {
+                let bound = recon_linf_bound(rec.residuals[i], key_max) * 1.05 + 1e-4;
+                for j in 0..n {
+                    let d = (rec.logits.at(&[i, j]) - exact.at(&[r, j])).abs();
+                    if d > bound {
+                        return Err(format!("row {r}: |Δ| {d} > certificate {bound}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn residuals_shrink_as_the_fraction_grows() {
+        // Nested samples + prefix-nested bases ⇒ the projection residual
+        // of any fixed row is non-increasing in the fraction.
+        prop::check(30, |g| {
+            let dh = g.usize(4..8);
+            let n = 4 * dh;
+            let q = rand_tensor(g, &[n, dh]);
+            let k = rand_tensor(g, &[n, dh]);
+            let imp: Vec<f32> = (0..n).map(|i| q.row_norm(i)).collect();
+            let mut prev: Option<f64> = None;
+            for frac in [0.25f32, 0.5, 0.75, 1.0] {
+                let order = sampled_rows(&imp, frac);
+                let out: Vec<usize> = (0..n).collect();
+                let rank = reconstruction_rank(frac, dh, order.len());
+                let rec = reconstruct_rows(&q, &k, &order, &out, rank, 1);
+                let mean =
+                    rec.residuals.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+                if let Some(p) = prev {
+                    if mean > p + 1e-5 {
+                        return Err(format!("residual rose {p} -> {mean} at frac {frac}"));
+                    }
+                }
+                prev = Some(mean);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn degenerate_inputs_stay_total() {
+        // All-zero queries: rank 0, zero logits, residuals = key-free norms.
+        let q = Tensor::zeros(&[4, 3]);
+        let k = Tensor::zeros(&[4, 3]);
+        let rec = reconstruct_rows(&q, &k, &[0, 1], &[2, 3], 2, 1);
+        assert_eq!(rec.rank, 0);
+        assert!(rec.logits.data().iter().all(|&x| x == 0.0));
+        assert!(rec.residuals.iter().all(|&x| x == 0.0));
+        // Empty out set.
+        let rec = reconstruct_rows(&q, &k, &[0], &[], 1, 1);
+        assert_eq!(rec.logits.shape(), &[0, 4]);
+        // softmax ℓ1 bound is total and capped.
+        assert_eq!(softmax_l1_bound(f32::INFINITY), 2.0);
+        assert_eq!(softmax_l1_bound(f32::NAN), 2.0);
+        assert_eq!(softmax_l1_bound(0.0), 0.0);
+        assert!(softmax_l1_bound(10.0) <= 2.0);
+    }
+}

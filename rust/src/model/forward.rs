@@ -62,6 +62,14 @@ pub struct ForwardCfg {
     /// is the full-sequence twin of the incremental decode path
     /// ([`decode_prefill`]/[`decode_step`]) — the two are bit-identical.
     pub causal: bool,
+    /// sampled-score fraction in (0, 1]: the share of score rows computed
+    /// exactly per head (and of the head dimension kept as reconstruction
+    /// rank) by the [`crate::mca::score`] path. 1.0 (the default) takes
+    /// the exact score path bit-for-bit — no reconstruction code runs.
+    /// Encoder attention only: [`forward_batch_packed`] rejects
+    /// `score_frac < 1` combined with `causal`, because reconstructed
+    /// prefix rows would break the decode-prefix equivalence contract.
+    pub score_frac: f32,
 }
 
 impl ForwardCfg {
@@ -87,7 +95,13 @@ impl ForwardCfg {
         let prec = Precision::parse(compute_dtype).with_context(|| {
             format!("unknown compute_dtype {compute_dtype:?} (f32|bf16|int8)")
         })?;
-        Ok(ForwardCfg { mode, r_strategy, uniform_p, prec, causal: false })
+        Ok(ForwardCfg { mode, r_strategy, uniform_p, prec, causal: false, score_frac: 1.0 })
+    }
+
+    /// Whether this config takes the sampled-score path (any fraction
+    /// strictly below 1; degenerate values are rejected upstream).
+    pub fn samples_scores(&self) -> bool {
+        self.score_frac < 1.0
     }
 }
 
@@ -406,6 +420,9 @@ const NEG_BIAS: f32 = -1e9;
 /// per-head attention matrices plus q/k (with bias added), which the
 /// backward pass reuses. The scale, visibility mask and row softmax are
 /// fused into the score GEMM's epilogue ([`kernel::attn_scores_softmax`]).
+/// At `score_frac < 1` (encoder attention only) each head routes through
+/// [`sampled_head_probs`] instead — exact sampled rows, reconstructed
+/// rest.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn attention_probs(
     xn: &Tensor,
@@ -416,6 +433,7 @@ pub(crate) fn attention_probs(
     causal: bool,
     n_heads: usize,
     prec: Precision,
+    score_frac: f32,
     threads: usize,
 ) -> (Vec<Tensor>, Tensor, Tensor) {
     let d = xn.shape()[1];
@@ -435,11 +453,80 @@ pub(crate) fn attention_probs(
     for hh in 0..n_heads {
         let qh = q.col_block(hh * dh, dh);
         let kh = k.col_block(hh * dh, dh);
-        let probs = kernel::attn_scores_softmax(&qh, &kh, inv, NEG_BIAS, &allowed, threads)
-            .expect("head shapes match");
+        // Any fraction ≥ 1 (and every causal pass — the decode contract)
+        // takes the exact kernel path; the sampled path never runs.
+        let probs = if score_frac >= 1.0 || causal {
+            kernel::attn_scores_softmax(&qh, &kh, inv, NEG_BIAS, &allowed, threads)
+                .expect("head shapes match")
+        } else {
+            sampled_head_probs(&qh, &kh, inv, &allowed, mask, score_frac, threads)
+        };
         attn.push(probs);
     }
     (attn, q, k)
+}
+
+/// One head's attention matrix on the sampled-score path
+/// ([`crate::mca::score`], DESIGN.md §3): the `ceil(frac·n)` most
+/// important query rows (row norm over real tokens; the global-CLS row 0
+/// is force-sampled, padding rows never are) go through the same fused
+/// scale+mask+softmax kernel epilogue as the exact path, so their
+/// probabilities are exact. The remaining rows reconstruct their raw
+/// logits from a rank-`ceil(frac·dh)` orthonormal basis of the sampled
+/// queries, then apply their *own* scale+mask+softmax
+/// ([`kernel::masked_softmax_row`]) — the visibility rule is never
+/// approximated, and a row the window ∧ sampling composition fully masks
+/// degrades to the uniform distribution, not NaN.
+fn sampled_head_probs<F>(
+    qh: &Tensor,
+    kh: &Tensor,
+    inv: f32,
+    allowed: &F,
+    mask: &[bool],
+    score_frac: f32,
+    threads: usize,
+) -> Tensor
+where
+    F: Fn(usize, usize) -> bool + Sync,
+{
+    let n = qh.shape()[0];
+    let dh = qh.shape()[1];
+    let imp: Vec<f32> = (0..n)
+        .map(|i| {
+            if i == 0 {
+                f32::INFINITY
+            } else if mask[i] {
+                qh.row_norm(i)
+            } else {
+                f32::NEG_INFINITY
+            }
+        })
+        .collect();
+    let order = mca::score::sampled_rows(&imp, score_frac);
+    let (sampled, rest) = mca::score::partition_rows(&order, n);
+    if rest.is_empty() {
+        return kernel::attn_scores_softmax(qh, kh, inv, NEG_BIAS, allowed, threads)
+            .expect("head shapes match");
+    }
+    let mut qs = Tensor::zeros(&[sampled.len(), dh]);
+    for (si, &r) in sampled.iter().enumerate() {
+        qs.row_mut(si).copy_from_slice(qh.row(r));
+    }
+    let sampled_allowed = |si: usize, ki: usize| allowed(sampled[si], ki);
+    let exact_rows = kernel::attn_scores_softmax(&qs, kh, inv, NEG_BIAS, &sampled_allowed, threads)
+        .expect("head shapes match");
+    let rank = mca::score::reconstruction_rank(score_frac, dh, order.len());
+    let recon = mca::score::reconstruct_rows(qh, kh, &order, &rest, rank, threads);
+    let mut probs = Tensor::zeros(&[n, n]);
+    for (si, &r) in sampled.iter().enumerate() {
+        probs.row_mut(r).copy_from_slice(exact_rows.row(si));
+    }
+    for (oi, &r) in rest.iter().enumerate() {
+        let row = probs.row_mut(r);
+        row.copy_from_slice(recon.logits.row(oi));
+        kernel::masked_softmax_row(row, r, inv, NEG_BIAS, allowed);
+    }
+    probs
 }
 
 // ---------------------------------------------------------------------------
@@ -580,8 +667,18 @@ pub(crate) fn forward_one(
     for (li, lw) in w.layers.iter().enumerate() {
         let pl = packed.map(|p| &p.layers[li]);
         let xn = layer_norm(&x, &lw.ln1_scale, &lw.ln1_bias);
-        let (attn, _q, k) =
-            attention_probs(&xn, lw, pl, &mask, model.window, cfg.causal, h, cfg.prec, threads);
+        let (attn, _q, k) = attention_probs(
+            &xn,
+            lw,
+            pl,
+            &mask,
+            model.window,
+            cfg.causal,
+            h,
+            cfg.prec,
+            cfg.score_frac,
+            threads,
+        );
 
         // Value encoding: the operation MCA approximates (paper §Background).
         let mut v = match (cfg.mode, mca_ctx) {
@@ -718,6 +815,12 @@ pub(crate) fn forward_batch_packed(
             bail!("prepacked weights are {} but the request wants {}", p.prec, cfg.prec);
         }
     }
+    if !(cfg.score_frac > 0.0 && cfg.score_frac <= 1.0) {
+        bail!("score_frac {} must lie in (0, 1]", cfg.score_frac);
+    }
+    if cfg.samples_scores() && cfg.causal {
+        bail!("score_frac {} < 1 is encoder-only: causal attention must stay exact", cfg.score_frac);
+    }
     let w = Weights::unpack(model, params)?;
     let mca_ctx = match cfg.mode {
         AttnMode::Mca => Some(mca_contexts(&w, cfg, seed, packed.is_none())),
@@ -847,6 +950,12 @@ pub(crate) fn decode_prefill_packed(
         if p.prec != cfg.prec {
             bail!("prepacked weights are {} but the request wants {}", p.prec, cfg.prec);
         }
+    }
+    if cfg.score_frac != 1.0 {
+        bail!(
+            "score_frac {} is encoder-only: decode prefill must stay exact (score_frac 1)",
+            cfg.score_frac
+        );
     }
     let mut cfg = cfg.clone();
     cfg.causal = true;
@@ -1117,8 +1226,18 @@ mod tests {
         let w = Weights::unpack(&m, &p).unwrap();
         let (x, _) = embed(&m, &w, &[1, 5, 6, 7, 8, 2]);
         let xn = layer_norm(&x, &w.layers[0].ln1_scale, &w.layers[0].ln1_bias);
-        let (attn, _, _) =
-            attention_probs(&xn, &w.layers[0], None, &mask, m.window, false, 2, Precision::F32, 1);
+        let (attn, _, _) = attention_probs(
+            &xn,
+            &w.layers[0],
+            None,
+            &mask,
+            m.window,
+            false,
+            2,
+            Precision::F32,
+            1.0,
+            1,
+        );
         for head in &attn {
             // query 3 cannot see key 5 (|3-5| > 1, neither is CLS)
             assert!(head.at(&[3, 5]) < 1e-6);
@@ -1205,8 +1324,18 @@ mod tests {
         let w = Weights::unpack(&m, &p).unwrap();
         let (x, _) = embed(&m, &w, &[1, 5, 6, 7, 8, 2]);
         let xn = layer_norm(&x, &w.layers[0].ln1_scale, &w.layers[0].ln1_bias);
-        let (attn, _, _) =
-            attention_probs(&xn, &w.layers[0], None, &mask, None, true, 2, Precision::F32, 1);
+        let (attn, _, _) = attention_probs(
+            &xn,
+            &w.layers[0],
+            None,
+            &mask,
+            None,
+            true,
+            2,
+            Precision::F32,
+            1.0,
+            1,
+        );
         for head in &attn {
             for qi in 0..6 {
                 for ki in 0..6 {
@@ -1218,6 +1347,149 @@ mod tests {
                 assert!((s - 1.0).abs() < 1e-4, "row {qi} not a distribution");
             }
         }
+    }
+
+    #[test]
+    fn score_frac_saturating_fractions_stay_bit_exact() {
+        // Fractions that round up to the full row count must fall back to
+        // the exact kernel path bit-for-bit: ceil(0.95 * 6) == 6 leaves no
+        // rows to reconstruct. Checked dense and windowed.
+        let (m, p) = tiny_params(12);
+        let ids = vec![1, 5, 6, 7, 8, 2];
+        let exact = ForwardCfg::parse("exact", "max", "norm", "f32").unwrap();
+        let mut sat = exact.clone();
+        sat.score_frac = 0.95;
+        assert!(sat.samples_scores());
+        let e = forward_batch(&m, &p, &ids, 1, 6, 1.0, 0, &exact, 1).unwrap();
+        let s = forward_batch(&m, &p, &ids, 1, 6, 1.0, 0, &sat, 1).unwrap();
+        assert_eq!(e.logits, s.logits, "saturated fraction diverged from exact");
+
+        let mut wm = tiny_model();
+        wm.window = Some(1);
+        let mut rng = Pcg64::new(13);
+        let wp = Params::init(&wm, &mut rng);
+        let e = forward_batch(&wm, &wp, &ids, 1, 6, 1.0, 0, &exact, 1).unwrap();
+        let s = forward_batch(&wm, &wp, &ids, 1, 6, 1.0, 0, &sat, 1).unwrap();
+        assert_eq!(e.logits, s.logits, "windowed saturated fraction diverged");
+    }
+
+    #[test]
+    fn sampled_rows_stay_exact_and_reconstructed_rows_respect_masks() {
+        // frac 0.5 on a windowed head: sampled rows (always including the
+        // force-sampled CLS row 0) reproduce the exact kernel bit-for-bit,
+        // reconstructed rows are finite distributions that never leak
+        // probability onto masked pairs, and the whole path is
+        // deterministic.
+        let mut m = tiny_model();
+        m.window = Some(1);
+        let mut rng = Pcg64::new(14);
+        let p = Params::init(&m, &mut rng);
+        let mask = vec![true; 6];
+        let w = Weights::unpack(&m, &p).unwrap();
+        let (x, _) = embed(&m, &w, &[1, 5, 6, 7, 8, 2]);
+        let xn = layer_norm(&x, &w.layers[0].ln1_scale, &w.layers[0].ln1_bias);
+        let call = |frac: f32| {
+            attention_probs(
+                &xn,
+                &w.layers[0],
+                None,
+                &mask,
+                m.window,
+                false,
+                2,
+                Precision::F32,
+                frac,
+                1,
+            )
+        };
+        let (exact, q, _) = call(1.0);
+        let (attn, _, _) = call(0.5);
+        let (attn2, _, _) = call(0.5);
+        let dh = q.shape()[1] / 2;
+        for (h, (head, eh)) in attn.iter().zip(&exact).enumerate() {
+            assert_eq!(head.data(), attn2[h].data(), "head {h} not deterministic");
+            // CLS has infinite importance: always sampled, hence exact.
+            assert_eq!(head.row(0), eh.row(0), "head {h} CLS row not exact");
+            // Recompute the sampled set the same way the path does and
+            // check every sampled row against the exact kernel.
+            let qh = q.col_block(h * dh, dh);
+            let imp: Vec<f32> = (0..6)
+                .map(|i| if i == 0 { f32::INFINITY } else { qh.row_norm(i) })
+                .collect();
+            let order = mca::score::sampled_rows(&imp, 0.5);
+            assert_eq!(order.len(), 3);
+            for &r in &order {
+                assert_eq!(head.row(r), eh.row(r), "head {h} sampled row {r} not exact");
+            }
+            for qi in 0..6 {
+                let mut sum = 0.0f32;
+                for ki in 0..6 {
+                    let v = head.at(&[qi, ki]);
+                    assert!(v.is_finite() && v >= 0.0, "head {h} [{qi},{ki}] = {v}");
+                    if !attn_allowed(&mask, m.window, qi, ki) {
+                        assert!(v < 1e-6, "head {h} leaked {v} onto masked [{qi},{ki}]");
+                    }
+                    sum += v;
+                }
+                assert!((sum - 1.0).abs() < 1e-4, "head {h} row {qi} sums to {sum}");
+            }
+        }
+    }
+
+    #[test]
+    fn sampling_only_padded_rows_reproduces_exact_logits() {
+        // ceil(0.7 * 6) = 5 sampled rows cover all four real tokens (the
+        // padding rows carry -inf importance, so they are picked last):
+        // every real row is exact, pooling reads only real rows, so the
+        // logits must be bit-identical to the exact forward.
+        let (m, p) = tiny_params(15);
+        let ids = vec![1, 5, 6, 2, 0, 0];
+        let exact = ForwardCfg::parse("exact", "max", "norm", "f32").unwrap();
+        let mut sampled = exact.clone();
+        sampled.score_frac = 0.7;
+        let e = forward_batch(&m, &p, &ids, 1, 6, 1.0, 0, &exact, 1).unwrap();
+        let s = forward_batch(&m, &p, &ids, 1, 6, 1.0, 0, &sampled, 1).unwrap();
+        assert_eq!(e.logits, s.logits, "padded-row reconstruction leaked into real rows");
+        assert_eq!(e.n_eff, s.n_eff);
+    }
+
+    #[test]
+    fn sampled_forward_is_finite_and_composes_with_mca_values() {
+        // frac 0.5 with real reconstruction work: outputs stay finite and
+        // deterministic, both in exact-value mode and composed with MCA
+        // value encoding at a mid-range alpha.
+        let (m, p) = tiny_params(16);
+        let ids = vec![1, 5, 6, 7, 8, 2];
+        for mode in ["exact", "mca"] {
+            let mut cfg = ForwardCfg::parse(mode, "max", "norm", "f32").unwrap();
+            cfg.score_frac = 0.5;
+            let a = forward_batch(&m, &p, &ids, 1, 6, 0.4, 9, &cfg, 1).unwrap();
+            let b = forward_batch(&m, &p, &ids, 1, 6, 0.4, 9, &cfg, 1).unwrap();
+            assert_eq!(a.logits, b.logits, "{mode} sampled forward not deterministic");
+            assert!(a.logits.iter().all(|x| x.is_finite()), "{mode} non-finite logits");
+        }
+    }
+
+    #[test]
+    fn sampled_scores_reject_causal_decode_and_bad_fractions() {
+        let (m, p) = tiny_params(17);
+        let ids = vec![1, 5, 6, 7, 8, 2];
+        let base = ForwardCfg::parse("exact", "max", "norm", "f32").unwrap();
+        for bad in [0.0f32, -0.25, 1.5, f32::NAN] {
+            let mut cfg = base.clone();
+            cfg.score_frac = bad;
+            assert!(
+                forward_batch(&m, &p, &ids, 1, 6, 1.0, 0, &cfg, 1).is_err(),
+                "score_frac {bad} accepted"
+            );
+        }
+        let mut causal = base.clone();
+        causal.causal = true;
+        causal.score_frac = 0.5;
+        assert!(forward_batch(&m, &p, &ids, 1, 6, 1.0, 0, &causal, 1).is_err());
+        let mut dec = base.clone();
+        dec.score_frac = 0.5;
+        assert!(decode_prefill(&m, &p, &ids, 1.0, 0, &dec, 1).is_err());
     }
 
     #[test]

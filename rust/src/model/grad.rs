@@ -175,8 +175,18 @@ fn example_loss_grad(
     let mut caches: Vec<LayerCache> = Vec::with_capacity(model.n_layers);
     for lw in &w.layers {
         let (xn, mu1, istd1) = layer_norm_stats(&x, &lw.ln1_scale, &lw.ln1_bias);
-        let (attn, q, k) =
-            attention_probs(&xn, lw, None, &mask, model.window, false, h, Precision::F32, 1);
+        let (attn, q, k) = attention_probs(
+            &xn,
+            lw,
+            None,
+            &mask,
+            model.window,
+            false,
+            h,
+            Precision::F32,
+            1.0,
+            1,
+        );
         let mut v = mm(&xn, WeightRef::Plain(&lw.wv), Precision::F32, 1);
         v.add_row_inplace(&lw.bv);
         let mut ctx_m = Tensor::zeros(&[n, d]);

@@ -81,6 +81,10 @@ pub fn builtin_models() -> Vec<ModelInfo> {
         make_builtin("bert_sim", 4, 64, None),
         make_builtin("distil_sim", 2, 64, None),
         make_builtin("longformer_sim", 4, 256, Some(32)),
+        // Long-context host for the sampled-score path (DESIGN.md §3):
+        // shallow so 2k-token attention stays affordable, windowed so the
+        // exact mask rule composes with score sampling in every sweep.
+        make_builtin("longbert_sim", 2, 2048, Some(64)),
     ]
 }
 

@@ -72,9 +72,10 @@ pub fn render_csv(rows: &[TaskRow]) -> String {
 
 /// Render the `mca eval` harness sweep as a Table-1-style markdown
 /// report: one table per model (rows = tasks, one accuracy/agreement +
-/// FLOPs column pair per sweep knob), followed by the model's
-/// accuracy-vs-FLOPs Pareto frontier and the serving-pool counters the
-/// sweep accumulated (batching/brownout/canary evidence).
+/// FLOPs column pair per (knob, precision, score-fraction) sweep
+/// setting), followed by the model's accuracy-vs-FLOPs Pareto frontier
+/// and the serving-pool counters the sweep accumulated
+/// (batching/brownout/canary evidence).
 pub fn render_eval_report(rep: &crate::eval::harness::HarnessReport) -> String {
     use crate::eval::harness::Knob;
 
@@ -87,11 +88,12 @@ pub fn render_eval_report(rep: &crate::eval::harness::HarnessReport) -> String {
     }
     for model in models {
         let mine: Vec<_> = rep.points.iter().filter(|p| p.model == model).collect();
-        // one column per (knob, precision) setting; f32 columns keep the
-        // bare knob label so single-precision reports look as before
-        let mut knobs: Vec<(Knob, &str)> = Vec::new();
+        // one column per (knob, precision, score_frac) setting; f32 /
+        // exact-score columns keep the bare knob label so reports that
+        // sweep neither axis look as before
+        let mut knobs: Vec<(Knob, &str, u64)> = Vec::new();
         for p in &mine {
-            let setting = (p.knob, p.precision.as_str());
+            let setting = (p.knob, p.precision.as_str(), p.score_frac.to_bits());
             if p.knob != Knob::Exact && !knobs.contains(&setting) {
                 knobs.push(setting);
             }
@@ -106,12 +108,16 @@ pub fn render_eval_report(rep: &crate::eval::harness::HarnessReport) -> String {
         let _ = writeln!(s, "\n### {model}\n");
         let mut header = String::from("| Task | Metric | Baseline |");
         let mut rule = String::from("|---|---|---|");
-        for (k, prec) in &knobs {
-            if *prec == "f32" {
-                let _ = write!(header, " {k} | FLOPS |");
-            } else {
-                let _ = write!(header, " {k} [{prec}] | FLOPS |");
+        for (k, prec, frac_bits) in &knobs {
+            let mut label = k.to_string();
+            if *prec != "f32" {
+                let _ = write!(label, " [{prec}]");
             }
+            let frac = f64::from_bits(*frac_bits);
+            if frac != 1.0 {
+                let _ = write!(label, " s={frac}");
+            }
+            let _ = write!(header, " {label} | FLOPS |");
             rule.push_str("---|---|");
         }
         let _ = writeln!(s, "{header}");
@@ -127,11 +133,13 @@ pub fn render_eval_report(rep: &crate::eval::harness::HarnessReport) -> String {
                 base.metric,
                 100.0 * base.baseline
             );
-            for (k, prec) in &knobs {
-                match mine
-                    .iter()
-                    .find(|p| p.task == *task && p.knob == *k && p.precision == *prec)
-                {
+            for (k, prec, frac_bits) in &knobs {
+                match mine.iter().find(|p| {
+                    p.task == *task
+                        && p.knob == *k
+                        && p.precision == *prec
+                        && p.score_frac.to_bits() == *frac_bits
+                }) {
                     Some(p) => {
                         let _ = write!(
                             line,
@@ -149,14 +157,15 @@ pub fn render_eval_report(rep: &crate::eval::harness::HarnessReport) -> String {
 
         if let Some(f) = rep.frontiers.iter().find(|f| f.model == model) {
             let _ = writeln!(s, "\nPareto frontier (macro-averaged over tasks):\n");
-            let _ = writeln!(s, "| Knob | Precision | FLOPS reduction | Accuracy |");
-            let _ = writeln!(s, "|---|---|---|---|");
+            let _ = writeln!(s, "| Knob | Precision | Score frac | FLOPS reduction | Accuracy |");
+            let _ = writeln!(s, "|---|---|---|---|---|");
             for p in &f.points {
                 let _ = writeln!(
                     s,
-                    "| {} | {} | {:.2}× | {:.2} |",
+                    "| {} | {} | {:.2} | {:.2}× | {:.2} |",
                     p.knob,
                     p.precision,
+                    p.score_frac,
                     p.flops_reduction,
                     100.0 * p.accuracy
                 );
@@ -310,6 +319,8 @@ mod tests {
             metric: "Acc.".into(),
             knob,
             precision: "f32".into(),
+            score_frac: 1.0,
+            seq: 64,
             accuracy: acc,
             baseline: 0.92,
             agreement: if knob == Knob::Exact { 1.0 } else { 0.97 },
@@ -331,6 +342,7 @@ mod tests {
                 points: vec![FrontierPoint {
                     knob: Knob::Alpha(0.3),
                     precision: "f32".into(),
+                    score_frac: 1.0,
                     flops_reduction: 3.5,
                     accuracy: 0.9,
                 }],
@@ -359,5 +371,44 @@ mod tests {
         assert!(s.contains("Pareto frontier"));
         assert!(s.contains("Serving-pool counters"));
         assert!(s.contains("| 384 | 1 | 20 | 5 (0) | 1 | 3 | 2 | 0.60 |"));
+    }
+
+    #[test]
+    fn eval_report_splits_sampled_score_columns() {
+        use crate::eval::harness::{HarnessReport, Knob, SweepPoint};
+        let pt = |frac: f64, knob: Knob, acc: f64, red: f64| SweepPoint {
+            model: "longbert_sim".into(),
+            task: "needle_2k_sim".into(),
+            metric: "Acc.".into(),
+            knob,
+            precision: "f32".into(),
+            score_frac: frac,
+            seq: 2048,
+            accuracy: acc,
+            baseline: 0.9,
+            agreement: if knob == Knob::Exact { 1.0 } else { 0.95 },
+            resolved_alpha: 0.4,
+            r_sum: 4096,
+            flops_reduction: red,
+            completed: 96,
+            shed: 0,
+            degraded: 0,
+        };
+        let rep = HarnessReport {
+            points: vec![
+                pt(1.0, Knob::Exact, 0.9, 1.0),
+                pt(1.0, Knob::Alpha(0.4), 0.88, 2.5),
+                pt(0.5, Knob::Alpha(0.4), 0.86, 3.25),
+            ],
+            frontiers: vec![],
+            pools: vec![],
+        };
+        let s = render_eval_report(&rep);
+        // the two α=0.4 passes must land in DISTINCT columns, keyed on
+        // the sampled-score fraction — not silently collapse into one
+        assert!(s.contains("α=0.4 |"), "exact-score column lost its bare label:\n{s}");
+        assert!(s.contains("α=0.4 s=0.5 |"), "sampled-score column missing:\n{s}");
+        assert!(s.contains("2.50×"), "frac-1.0 FLOPs cell missing:\n{s}");
+        assert!(s.contains("3.25×"), "frac-0.5 FLOPs cell missing:\n{s}");
     }
 }

@@ -43,7 +43,7 @@ use crate::rng::Pcg64;
 
 /// Everything that identifies *which* forward computation to run — the
 /// backend-independent form of what used to be a PJRT artifact name.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ForwardSpec {
     /// model name (must be in the backend's inventory)
     pub model: String,
@@ -66,6 +66,14 @@ pub struct ForwardSpec {
     /// twin of the incremental decode path (`decode_prefill`/
     /// `decode_step`); encoder classification uses `false`.
     pub causal: bool,
+    /// fraction of score rows computed exactly on the sampled-score path
+    /// (DESIGN.md §3): `ceil(score_frac · n)` importance-sampled query
+    /// rows run the fused exact kernel, the rest reconstruct their logits
+    /// from a rank-`ceil(score_frac · dh)` basis of the sampled queries.
+    /// `1.0` (the default) is the exact path, pinned bit-identical by
+    /// tests; must lie in `(0, 1]`, and fractions `< 1` are encoder-only
+    /// (rejected when combined with `causal` or decode).
+    pub score_frac: f32,
 }
 
 impl ForwardSpec {
@@ -80,6 +88,7 @@ impl ForwardSpec {
             p_strategy: "norm".to_string(),
             compute_dtype: "f32".to_string(),
             causal: false,
+            score_frac: 1.0,
         }
     }
 }
@@ -469,6 +478,10 @@ mod tests {
         assert!(models.contains(&"bert_sim".to_string()));
         assert!(models.contains(&"distil_sim".to_string()));
         assert!(models.contains(&"longformer_sim".to_string()));
+        assert!(models.contains(&"longbert_sim".to_string()));
+        let m = be.model("longbert_sim").unwrap();
+        assert_eq!(m.max_len, 2048);
+        assert_eq!(m.window, Some(64));
         let m = be.model("bert_sim").unwrap();
         assert_eq!(m.d_model, 128);
         assert_eq!(m.n_layers, 4);

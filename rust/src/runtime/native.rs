@@ -164,6 +164,12 @@ impl Backend for NativeBackend {
             bail!("seq {} exceeds model {} max_len {}", spec.seq, spec.model, info.max_len);
         }
         ForwardCfg::parse(&spec.mode, &spec.r_strategy, &spec.p_strategy, &spec.compute_dtype)?;
+        if !(spec.score_frac > 0.0 && spec.score_frac <= 1.0) {
+            bail!("score_frac {} must lie in (0, 1]", spec.score_frac);
+        }
+        if spec.score_frac < 1.0 && spec.causal {
+            bail!("score_frac {} < 1 is encoder-only (spec is causal)", spec.score_frac);
+        }
         Ok(EVAL_BATCH)
     }
 
@@ -179,6 +185,7 @@ impl Backend for NativeBackend {
         let mut cfg =
             ForwardCfg::parse(&spec.mode, &spec.r_strategy, &spec.p_strategy, &spec.compute_dtype)?;
         cfg.causal = spec.causal;
+        cfg.score_frac = spec.score_frac;
         if ids.shape() != &[spec.batch, spec.seq][..] {
             bail!(
                 "ids shape {:?} != spec batch/seq ({}, {})",
@@ -212,8 +219,11 @@ impl Backend for NativeBackend {
         seed: u32,
     ) -> Result<(u64, ForwardOutput)> {
         let info = self.model(&spec.model)?;
-        let cfg =
+        let mut cfg =
             ForwardCfg::parse(&spec.mode, &spec.r_strategy, &spec.p_strategy, &spec.compute_dtype)?;
+        // Propagated so `decode_prefill_packed` can reject fractions < 1:
+        // sampled scores are encoder-only, decode stays exact.
+        cfg.score_frac = spec.score_frac;
         let workers = self.workers;
         let prec = cfg.prec;
         let packed = self.ensure_packed(&info, params, prec)?;
@@ -251,7 +261,9 @@ impl Backend for NativeBackend {
     fn train_shape(&self, model: &str, _kind: TaskKind) -> Result<(usize, usize)> {
         let info = self.model(model)?;
         // Long-sequence models train at a smaller batch (attention is n²).
-        if info.max_len > 64 {
+        if info.max_len > 256 {
+            Ok((2, info.max_len))
+        } else if info.max_len > 64 {
             Ok((8, info.max_len))
         } else {
             Ok((32, info.max_len))
@@ -344,6 +356,16 @@ mod tests {
         let mut spec = ForwardSpec::new("bert_sim", "mca", 1, 8);
         spec.compute_dtype = "fp64".into();
         assert!(be.max_batch(&spec).is_err());
+        // score fraction outside (0, 1], or < 1 on a causal spec
+        for bad in [0.0f32, -1.0, 1.5, f32::NAN] {
+            let mut spec = ForwardSpec::new("bert_sim", "mca", 1, 8);
+            spec.score_frac = bad;
+            assert!(be.max_batch(&spec).is_err(), "score_frac {bad} accepted");
+        }
+        let mut spec = ForwardSpec::new("bert_sim", "mca", 1, 8);
+        spec.causal = true;
+        spec.score_frac = 0.5;
+        assert!(be.max_batch(&spec).is_err());
         // shape mismatch caught before compute
         let info = be.model("bert_sim").unwrap();
         let mut rng = Pcg64::new(1);
@@ -391,6 +413,10 @@ mod tests {
         assert!(be.decode_prefill(&spec, &params, &[1, 5, 2], 0.4, 0).is_err());
         let spec = ForwardSpec::new("no_such_model", "mca", 1, 4);
         assert!(be.decode_prefill(&spec, &params, &[1, 5, 2], 0.4, 0).is_err());
+        // sampled scores are encoder-only: decode prefill must stay exact
+        let mut spec = ForwardSpec::new("distil_sim", "mca", 1, 4);
+        spec.score_frac = 0.5;
+        assert!(be.decode_prefill(&spec, &params, &[1, 5, 2], 0.4, 0).is_err());
     }
 
     #[test]
@@ -398,5 +424,6 @@ mod tests {
         let be = NativeBackend::with_workers(1);
         assert_eq!(be.train_shape("bert_sim", TaskKind::Classification).unwrap(), (32, 64));
         assert_eq!(be.train_shape("longformer_sim", TaskKind::Classification).unwrap(), (8, 256));
+        assert_eq!(be.train_shape("longbert_sim", TaskKind::Classification).unwrap(), (2, 2048));
     }
 }

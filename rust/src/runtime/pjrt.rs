@@ -127,6 +127,12 @@ impl Runtime {
         if spec.causal {
             bail!("the PJRT artifact inventory has no causal (LM) forwards — use the native backend");
         }
+        if spec.score_frac != 1.0 {
+            bail!(
+                "the PJRT artifact inventory has no sampled-score (score_frac {}) forwards — use the native backend",
+                spec.score_frac
+            );
+        }
         self.manifest
             .artifacts
             .values()

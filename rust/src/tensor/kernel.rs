@@ -233,6 +233,51 @@ where
     Tensor::new(&[m, n], out)
 }
 
+/// One row of the fused scale+mask+softmax epilogue, in place:
+/// `row = softmax(scale · row + mask)`, where entry `ki` gets `mask_bias`
+/// added when `!allowed(qi, ki)`. This is the exact op order of the
+/// [`attn_scores_softmax`] epilogue — callers that materialize score rows
+/// outside the GEMM (the sampled-score reconstruction path) normalize
+/// through this same function, so a row they feed the *exact* logits is
+/// bit-identical to the fused kernel's row.
+///
+/// A row with no allowed key has no attention target at all; it degrades
+/// to the deterministic uniform distribution 1/n (NaN-free, finite)
+/// instead of a softmax over forbidden keys. At long sequences the
+/// windowed ∧ causal ∧ sampled mask composition makes such rows
+/// reachable, so this is contract, not a defensive fallback.
+pub fn masked_softmax_row<F>(row: &mut [f32], qi: usize, scale: f32, mask_bias: f32, allowed: &F)
+where
+    F: Fn(usize, usize) -> bool,
+{
+    let mut any_allowed = false;
+    for (ki, x) in row.iter_mut().enumerate() {
+        *x *= scale;
+        if allowed(qi, ki) {
+            any_allowed = true;
+        } else {
+            *x += mask_bias;
+        }
+    }
+    if !any_allowed {
+        let u = 1.0 / row.len() as f32;
+        for x in row.iter_mut() {
+            *x = u;
+        }
+        return;
+    }
+    // Same op order as Tensor::softmax_rows (bit parity).
+    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for x in row.iter_mut() {
+        *x = (*x - mx).exp();
+        sum += *x;
+    }
+    for x in row.iter_mut() {
+        *x /= sum;
+    }
+}
+
 /// Blocked `acc += A^T @ B`; A is `(r,m)`, B is `(r,n)`, `acc` a flat
 /// row-major `(m,n)` slice — the weight-gradient accumulator form.
 /// Bit-identical to [`super::reference::accumulate_tn`] (ascending-r
@@ -1120,22 +1165,7 @@ fn apply_epilogue<F>(
             for i in lr0..lr1 {
                 let qi = chunk_base + i;
                 let row = &mut c[i * n..(i + 1) * n];
-                for (ki, x) in row.iter_mut().enumerate() {
-                    *x *= scale;
-                    if !allowed(qi, ki) {
-                        *x += mask_bias;
-                    }
-                }
-                // Same op order as Tensor::softmax_rows (bit parity).
-                let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                let mut sum = 0.0;
-                for x in row.iter_mut() {
-                    *x = (*x - mx).exp();
-                    sum += *x;
-                }
-                for x in row.iter_mut() {
-                    *x /= sum;
-                }
+                masked_softmax_row(row, qi, *scale, *mask_bias, allowed);
             }
         }
     }
@@ -1296,6 +1326,69 @@ mod tests {
             let got = attn_scores_softmax(&q, &k, scale, -1e9, &allowed, 1).unwrap();
             if got.data() != want.data() {
                 return Err("fused softmax mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fully_masked_rows_degrade_to_uniform_at_kc_boundaries() {
+        // windowed ∧ causal ∧ sampled-column composition: key ki is
+        // visible to query qi only when causal (ki ≤ qi), inside a
+        // width-1 window, AND in the sampled column set {3, 7, 11, ...}.
+        // Rows with qi mod 4 ∈ {0, 1, 2} (except those adjacent to a
+        // sampled column) see nothing at all — the all-masked edge.
+        for n in [1usize, KC, KC + 1] {
+            let dh = 8;
+            let mut g = prop::Gen::new(41, n as u64);
+            let q = rand_tensor(&mut g, &[n, dh]);
+            let k = rand_tensor(&mut g, &[n, dh]);
+            let allowed = |qi: usize, ki: usize| ki <= qi && qi - ki <= 1 && ki % 4 == 3;
+            let scale = 1.0 / (dh as f32).sqrt();
+            let probs = attn_scores_softmax(&q, &k, scale, -1e9, &allowed, 1).unwrap();
+            let uniform = 1.0 / n as f32;
+            for qi in 0..n {
+                let row = probs.row(qi);
+                assert!(row.iter().all(|x| x.is_finite()), "n={n} row {qi} not finite");
+                let sum: f32 = row.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-5, "n={n} row {qi} sums to {sum}");
+                if (0..n).all(|ki| !allowed(qi, ki)) {
+                    // A fully-masked row is the deterministic uniform
+                    // distribution — bit-exactly, not approximately.
+                    assert!(
+                        row.iter().all(|&x| x == uniform),
+                        "n={n} fully-masked row {qi} is not uniform"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn masked_softmax_row_matches_the_fused_epilogue_bit_for_bit() {
+        // The public row helper IS the epilogue: reconstructed score rows
+        // normalized through it must be indistinguishable from rows the
+        // fused kernel produced — including fully-masked rows. This is
+        // the bit-exactness anchor of the sampled-score path at
+        // score_frac = 1.0.
+        prop::check(60, |g| {
+            let n = g.usize(1..24);
+            let dh = g.usize(1..10);
+            let q = rand_tensor(g, &[n, dh]);
+            let k = rand_tensor(g, &[n, dh]);
+            let scale = 1.0 / (dh as f32).sqrt();
+            let w = g.usize(0..4);
+            let stride = g.usize(1..5);
+            // Banded ∧ sampled-column mask; stride > 1 makes some rows
+            // fully masked.
+            let allowed = |qi: usize, ki: usize| qi.abs_diff(ki) <= w && ki % stride == 0;
+            let fused = attn_scores_softmax(&q, &k, scale, -1e9, &allowed, 1).unwrap();
+            let mut unfused = matmul_nt(&q, &k, 1).unwrap();
+            for qi in 0..n {
+                masked_softmax_row(unfused.row_mut(qi), qi, scale, -1e9, &allowed);
+            }
+            if fused.data() != unfused.data() {
+                return Err("masked_softmax_row diverged from the fused epilogue".into());
             }
             Ok(())
         });

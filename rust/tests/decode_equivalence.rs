@@ -108,6 +108,54 @@ fn quantized_decode_matches_its_own_full_forward_and_stays_near_f32() {
 }
 
 #[test]
+fn sampled_score_fractions_pin_exact_at_one_and_reject_causal_decode() {
+    // The sampled-score knob meets the decode contract at the Backend
+    // seam: an explicit `score_frac = 1.0` is byte-identical to the
+    // default spec at every precision (frac 1 must stay THE exact path,
+    // never a reconstruction that happens to round the same), sampled
+    // fractions stay deterministic within each precision envelope, and
+    // the causal/decode paths refuse fractions below 1 outright.
+    let mut be = open_backend(&BackendSpec::Native).unwrap();
+    let info = be.model("distil_sim").unwrap();
+    let params = Params::init(&info, &mut Pcg64::new(34));
+    let ids: Vec<i32> = vec![1, 7, 9, 11, 13, 2];
+    let hv = HostValue::I32 { shape: vec![1, ids.len()], data: ids.clone() };
+    for dtype in ["f32", "bf16", "int8"] {
+        let mut spec = ForwardSpec::new("distil_sim", "mca", 1, ids.len());
+        spec.compute_dtype = dtype.to_string();
+        let base = be.forward(&spec, &params, &hv, 0.4, 3).unwrap();
+        spec.score_frac = 1.0;
+        let pinned = be.forward(&spec, &params, &hv, 0.4, 3).unwrap();
+        assert_eq!(base.logits, pinned.logits, "{dtype}: explicit frac 1.0 diverged");
+        assert_eq!(base.r_sum, pinned.r_sum, "{dtype}: frac 1.0 budget accounting diverged");
+        spec.score_frac = 0.5;
+        let a = be.forward(&spec, &params, &hv, 0.4, 3).unwrap();
+        let b = be.forward(&spec, &params, &hv, 0.4, 3).unwrap();
+        assert_eq!(a.logits, b.logits, "{dtype}: sampled scores not deterministic");
+        assert!(a.logits.iter().all(|x| x.is_finite()), "{dtype}: non-finite logits");
+    }
+
+    // Causal forwards and decode sessions must refuse partial fractions:
+    // reconstructed rows blur *where* a query looks, which a causal
+    // prefix is not allowed to tolerate.
+    let mut causal = causal_spec("distil_sim", "f32", ids.len());
+    causal.score_frac = 0.5;
+    assert!(be.forward(&causal, &params, &hv, 0.4, 3).is_err(), "causal frac < 1 accepted");
+    assert!(
+        be.decode_prefill(&causal, &params, &ids[..4], 0.4, 3).is_err(),
+        "decode prefill frac < 1 accepted"
+    );
+
+    // ...while an explicit frac 1.0 decode is the ordinary decode,
+    // bit-identical to the full causal forward.
+    causal.score_frac = 1.0;
+    let (sid, prefill) = be.decode_prefill(&causal, &params, &ids[..4], 0.4, 3).unwrap();
+    let full = full_causal(&mut be, "distil_sim", "f32", &params, &ids[..4], 0.4, 3);
+    assert_eq!(prefill.logits, full.logits, "frac 1.0 prefill diverged");
+    be.decode_finish(sid);
+}
+
+#[test]
 fn longformer_cache_grows_to_max_len_across_the_kc_block() {
     let mut be = open_backend(&BackendSpec::Native).unwrap();
     let info = be.model("longformer_sim").unwrap();

@@ -46,6 +46,7 @@ fn run_small_sweep(
         alphas,
         epsilons,
         precisions,
+        score_fracs: vec![1.0],
         workers: 2,
         queue_cap: 0, // sized to the dev slice: lockstep passes never shed
         brownout_watermark: 0,
@@ -183,6 +184,66 @@ fn int8_points_report_the_precision_scaled_reduction() {
             .expect("exact point");
         assert_eq!(exact.flops_reduction, 1.0);
     }
+}
+
+#[test]
+fn trained_model_clears_the_needle_accuracy_floor() {
+    // The planted-signal satellite: a *trained* (not random) checkpoint
+    // must actually recover the needle topic well above the 3-class
+    // chance level, at frac 1.0 and under sampled scores. Uses the
+    // short 64-token needle task so train-on-miss stays test-sized; the
+    // 2k+ lengths ride the same generator (`data::long` pins their
+    // invariances) and are exercised by the eval sweep itself.
+    let backend = BackendSpec::Native;
+    let root = std::env::temp_dir().join("mca_eval_harness_needle");
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let opts = HarnessOptions {
+        models: vec!["distil_sim".to_string()],
+        tasks: vec!["needle_64_sim".to_string()],
+        alphas: vec![0.4],
+        epsilons: vec![],
+        precisions: vec!["f32".to_string()],
+        score_fracs: vec![1.0, 0.5],
+        workers: 2,
+        queue_cap: 0,
+        brownout_watermark: 0,
+        canary_rate: 0.0,
+        max_wait_ms: 5,
+        dev_limit: 96,
+        ckpt_root: root.clone(),
+        train_cfg: TrainConfig { steps: 80, ..TrainConfig::default() },
+        data_seed: 4242,
+        verbose: false,
+    };
+    let rep = harness::run_sweep(&backend, &opts).unwrap();
+    // exact + α0.4×{frac 1.0, frac 0.5}
+    assert_eq!(rep.points.len(), 3, "{:?}", rep.points);
+    let exact = rep.points.iter().find(|p| p.knob == Knob::Exact).unwrap();
+    assert!(
+        exact.accuracy >= 0.5,
+        "trained needle accuracy {} below the seeded floor (chance = 1/3)",
+        exact.accuracy
+    );
+    assert_eq!(exact.seq, 64);
+
+    // At matched α, sampling score rows must charge strictly fewer
+    // Eq.-9 FLOPs-equivalents than the value-only pass.
+    let at_frac = |f: f64| {
+        rep.points
+            .iter()
+            .find(|p| p.knob == Knob::Alpha(0.4) && p.score_frac == f)
+            .unwrap_or_else(|| panic!("missing α=0.4 point at frac {f}"))
+    };
+    let value_only = at_frac(1.0);
+    let sampled = at_frac(0.5);
+    assert!(
+        sampled.flops_reduction > value_only.flops_reduction,
+        "sampled scores did not add reduction: frac 0.5 {} vs frac 1.0 {}",
+        sampled.flops_reduction,
+        value_only.flops_reduction
+    );
+    let _ = std::fs::remove_dir_all(&root);
 }
 
 #[test]

@@ -1,0 +1,293 @@
+//! Statistical contract of the sampled-score attention path, pinned as an
+//! integration battery so score-path refactors can't silently break the
+//! error chain (`mca::score` module docs): seeded attention blocks where
+//! an importance-sampled subset of score rows stays exact and the rest
+//! are reconstructed from the sampled query subspace, checked against
+//!
+//! * the a-posteriori certificate per reconstructed softmax row
+//!   (`softmax_l1_bound(scale · resᵢ · maxⱼ‖kⱼ‖)`), with empirical error
+//!   quantiles tightening as the sampled fraction grows;
+//! * the combined score+value error against exact replays — the
+//!   deterministic score certificate plus the Theorem-2 value bound
+//!   (`α·β·‖W‖_F`, tail `/δ` via Markov on the random value side);
+//! * the serving planner's reservation (`adaptive::score_error_bound`),
+//!   which must cover the measured score-side share it plans for;
+//! * the end-to-end forward: fraction 1.0 bit-identical to the exact
+//!   path, partial fractions degrading monotonically at the head logits
+//!   and composing deterministically with MCA value encoding.
+
+use mca::mca as mcacore;
+use mca::mca::adaptive;
+use mca::mca::score;
+use mca::mca::RStrategy;
+use mca::model::forward::{forward_batch, ForwardCfg};
+use mca::model::{builtin_model, Params};
+use mca::rng::Pcg64;
+use mca::runtime::ForwardOutput;
+use mca::tensor::Tensor;
+
+fn randn(rng: &mut Pcg64, shape: &[usize], std: f32) -> Tensor {
+    Tensor::from_fn(shape, |_| std * rng.gen_normal() as f32)
+}
+
+fn row_err(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| ((x - y) * (x - y)) as f64).sum::<f64>().sqrt()
+}
+
+/// Empirical quantile of a sorted sample.
+fn quantile(sorted: &[f64], frac: f64) -> f64 {
+    sorted[((frac * (sorted.len() - 1) as f64) as usize).min(sorted.len() - 1)]
+}
+
+/// Softmax of one logit row after temperature scaling — the same
+/// max-subtracted form as the kernel epilogue, visibility-free because
+/// these blocks have no padding or window.
+fn softmax_scaled(logits: &[f32], scale: f32) -> Vec<f32> {
+    let m = logits.iter().map(|&x| x * scale).fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&x| (x * scale - m).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.iter().map(|e| e / sum).collect()
+}
+
+/// One seeded attention block: exact probs per row, served probs per row
+/// (sampled rows exact, rest reconstructed), and the per-row deterministic
+/// ℓ1 certificates (0 for sampled rows).
+fn served_attention(
+    q: &Tensor,
+    k: &Tensor,
+    frac: f32,
+    scale: f32,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<f64>) {
+    let n = q.shape()[0];
+    let dh = q.shape()[1];
+    let exact_logits = q.matmul_nt(k).unwrap();
+    let a: Vec<Vec<f32>> = (0..n).map(|i| softmax_scaled(exact_logits.row(i), scale)).collect();
+    let imp: Vec<f32> = (0..n).map(|i| q.row_norm(i)).collect();
+    let order = score::sampled_rows(&imp, frac);
+    let (_, rest) = score::partition_rows(&order, n);
+    let rank = score::reconstruction_rank(frac, dh, order.len());
+    let rec = score::reconstruct_rows(q, k, &order, &rest, rank, 1);
+    let key_max = (0..n).map(|j| k.row_norm(j)).fold(0.0f32, f32::max);
+    let mut ahat = a.clone();
+    let mut certs = vec![0.0f64; n];
+    for (i, &r) in rest.iter().enumerate() {
+        ahat[r] = softmax_scaled(rec.logits.row(i), scale);
+        let linf = score::recon_linf_bound(rec.residuals[i], key_max);
+        certs[r] = score::softmax_l1_bound(scale * linf) as f64;
+    }
+    (a, ahat, certs)
+}
+
+#[test]
+fn reconstructed_rows_honor_the_certificate_and_tighten_with_fraction() {
+    let (n, dh) = (24usize, 8usize);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let fracs = [0.25f32, 0.5, 0.75];
+    let mut pooled: Vec<Vec<f64>> = vec![Vec::new(); fracs.len()];
+    for seed in 0..40u64 {
+        let mut rng = Pcg64::new(100 + seed);
+        let q = randn(&mut rng, &[n, dh], 0.3);
+        let k = randn(&mut rng, &[n, dh], 0.3);
+        for (fi, &frac) in fracs.iter().enumerate() {
+            let (a, ahat, certs) = served_attention(&q, &k, frac, scale);
+            for i in 0..n {
+                if certs[i] == 0.0 {
+                    // Sampled row: exact by construction on this path.
+                    assert_eq!(a[i], ahat[i], "seed {seed} frac {frac}: sampled row {i} drifted");
+                    continue;
+                }
+                let l1: f64 =
+                    a[i].iter().zip(&ahat[i]).map(|(x, y)| (x - y).abs() as f64).sum();
+                // The certificate chain is deterministic math (Cauchy-
+                // Schwarz + pointwise exp ratio); slack covers fp only.
+                assert!(
+                    l1 <= certs[i] * 1.01 + 1e-5,
+                    "seed {seed} frac {frac} row {i}: l1 {l1} > certificate {}",
+                    certs[i]
+                );
+                pooled[fi].push(l1);
+            }
+        }
+    }
+    for errs in pooled.iter_mut() {
+        assert!(!errs.is_empty());
+        errs.sort_by(|a, b| a.total_cmp(b));
+    }
+    // Error quantiles tighten as the fraction grows: more exact rows and
+    // a higher reconstruction rank for what remains.
+    for fi in 1..fracs.len() {
+        for q_at in [0.5f64, 0.9] {
+            let lo = quantile(&pooled[fi], q_at);
+            let hi = quantile(&pooled[fi - 1], q_at);
+            assert!(
+                lo <= hi + 1e-4,
+                "q{q_at} rose from {hi} (frac {}) to {lo} (frac {})",
+                fracs[fi - 1],
+                fracs[fi]
+            );
+        }
+    }
+}
+
+#[test]
+fn combined_score_value_bound_holds_end_to_end() {
+    // The full serving composition at frac 0.5: sampled-score attention
+    // probs (deterministic) applied to MCA-encoded values (random), vs an
+    // exact replay. Per token the error splits by the triangle inequality
+    // into the deterministic score certificate (ℓ1 × maxⱼ‖Hⱼ‖) plus the
+    // Theorem-2 value term — mean α·β·‖W‖_F, tail /δ by Markov (the
+    // score share carries no δ inflation, exactly how
+    // `adaptive::split_budget_for_score` treats it).
+    let (n, d, dh) = (16usize, 24usize, 8usize);
+    let (frac, alpha, delta) = (0.5f32, 0.4f64, 0.1f64);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut rng = Pcg64::new(777);
+    let x = randn(&mut rng, &[n, d], 1.0);
+    let w = randn(&mut rng, &[d, d], 1.0);
+    let q = randn(&mut rng, &[n, dh], 0.3);
+    let k = randn(&mut rng, &[n, dh], 0.3);
+
+    let h = x.matmul(&w).unwrap();
+    let (a, ahat, certs) = served_attention(&q, &k, frac, scale);
+    let amat = Tensor::from_fn(&[n, n], |i| a[i / n][i % n]);
+    let ahat_mat = Tensor::from_fn(&[n, n], |i| ahat[i / n][i % n]);
+    let y_exact = amat.matmul(&h).unwrap();
+    let h_max = (0..n).map(|j| h.row_norm(j)).fold(0.0f32, f32::max) as f64;
+    let score_term: Vec<f64> = certs.iter().map(|&c| c * h_max).collect();
+
+    // Value budgets derive from the *served* attention probs, like the
+    // forward path: Max pooling keeps Âᵢⱼ ≤ impⱼ, which is what makes
+    // the Theorem-2 telescoping hold under Â as well as A.
+    let mask = vec![true; n];
+    let imp = mcacore::token_importance(std::slice::from_ref(&ahat_mat), &mask, RStrategy::Max);
+    let r = mcacore::sample_counts(&imp, &mask, alpha, d);
+    let p = mcacore::sampling_probs(&w);
+    let w_frob = w.frob_norm() as f64;
+
+    let runs = 500usize;
+    let mut errs: Vec<Vec<f64>> = vec![Vec::with_capacity(runs); n];
+    for s in 0..runs {
+        let mut rs = Pcg64::new(60_000 + s as u64);
+        let ht = mcacore::mca_encode(&mut rs, &x, &w, &r, &p);
+        let y = ahat_mat.matmul(&ht).unwrap();
+        for i in 0..n {
+            errs[i].push(row_err(y.row(i), y_exact.row(i)));
+        }
+    }
+
+    let v_mean = mcacore::theorem2_bound(&x, w_frob, alpha);
+    let v_tail = mcacore::theorem2_tail_bound(&x, w_frob, alpha, delta);
+    assert!(v_tail > v_mean);
+    for i in 0..n {
+        errs[i].sort_by(|a, b| a.total_cmp(b));
+        let mean = errs[i].iter().sum::<f64>() / runs as f64;
+        let mean_bound = v_mean + score_term[i];
+        assert!(
+            mean <= mean_bound,
+            "token {i}: mean err {mean} > combined bound {mean_bound} \
+             (value {v_mean} + score {})",
+            score_term[i]
+        );
+        let q90 = quantile(&errs[i], 1.0 - delta);
+        let tail_bound = v_tail + score_term[i];
+        assert!(q90 <= tail_bound, "token {i}: q90 {q90} > combined tail {tail_bound}");
+    }
+}
+
+#[test]
+fn planner_reservation_covers_the_measured_score_share() {
+    // `adaptive::score_error_bound` is what the coordinator *reserves*
+    // out of a combined ε before resolving the value-side α — if the
+    // measured score-side output error ever exceeded it, budget requests
+    // served at frac < 1 would break their ε contract. Calibrate the
+    // planning model against measured errors on seeded blocks.
+    let (n, d, dh) = (16usize, 24usize, 8usize);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut measured = Vec::new();
+    for &frac in &[0.25f32, 0.5, 0.75] {
+        let mut total = 0.0f64;
+        let mut count = 0usize;
+        let mut reservation = f64::INFINITY;
+        for seed in 0..10u64 {
+            let mut rng = Pcg64::new(9_000 + seed);
+            let x = randn(&mut rng, &[n, d], 1.0);
+            let w = randn(&mut rng, &[d, d], 1.0);
+            let q = randn(&mut rng, &[n, dh], 0.3);
+            let k = randn(&mut rng, &[n, dh], 0.3);
+            let h = x.matmul(&w).unwrap();
+            let (a, ahat, _) = served_attention(&q, &k, frac, scale);
+            // score-only error: exact values, served vs exact probs
+            for i in 0..n {
+                let yi: Vec<f32> = (0..d)
+                    .map(|c| (0..n).map(|j| a[i][j] * h.at(&[j, c])).sum())
+                    .collect();
+                let yhat: Vec<f32> = (0..d)
+                    .map(|c| (0..n).map(|j| ahat[i][j] * h.at(&[j, c])).sum())
+                    .collect();
+                total += row_err(&yhat, &yi);
+                count += 1;
+            }
+            let beta = (0..n).map(|i| x.row_norm(i) as f64).sum::<f64>() / n as f64;
+            let res = adaptive::score_error_bound(frac as f64, beta, w.frob_norm() as f64);
+            reservation = reservation.min(res);
+        }
+        let mean = total / count as f64;
+        assert!(
+            mean <= reservation,
+            "frac {frac}: measured score share {mean} exceeds planner reservation {reservation}"
+        );
+        measured.push(mean);
+    }
+    // The measured share shrinks as the fraction grows, like the
+    // reservation it must stay under.
+    for w in measured.windows(2) {
+        assert!(w[1] <= w[0] + 1e-9, "score share not monotone: {measured:?}");
+    }
+}
+
+#[test]
+fn full_fraction_reproduces_the_exact_forward_bit_for_bit() {
+    // End-to-end replays through the real model forward (builtin
+    // distil_sim, dense attention, 2 layers): frac 1.0 IS the exact path
+    // (same kernel, no reconstruction), partial fractions degrade
+    // monotonically at the head logits, and the path composes
+    // deterministically with MCA value encoding.
+    let m = builtin_model("distil_sim").unwrap();
+    let mut rng = Pcg64::new(31);
+    let p = Params::init(&m, &mut rng);
+    let (batch, seq) = (8usize, 48usize);
+    let ids: Vec<i32> =
+        (0..batch * seq).map(|_| 1 + rng.gen_range(0, m.vocab - 1) as i32).collect();
+
+    let exact_cfg = ForwardCfg::parse("exact", "max", "norm", "f32").unwrap();
+    let base = forward_batch(&m, &p, &ids, batch, seq, 1.0, 0, &exact_cfg, 2).unwrap();
+    let run = |mode: &str, alpha: f32, frac: f32| -> ForwardOutput {
+        let mut cfg = ForwardCfg::parse(mode, "max", "norm", "f32").unwrap();
+        cfg.score_frac = frac;
+        forward_batch(&m, &p, &ids, batch, seq, alpha, 0, &cfg, 2).unwrap()
+    };
+
+    let full = run("exact", 1.0, 1.0);
+    assert_eq!(base.logits, full.logits, "frac 1.0 is not the exact path");
+
+    let mean_err = |o: &ForwardOutput| -> f64 {
+        o.logits
+            .iter()
+            .zip(&base.logits)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum::<f64>()
+            / base.logits.len() as f64
+    };
+    let coarse = mean_err(&run("exact", 1.0, 0.25));
+    let fine = mean_err(&run("exact", 1.0, 0.75));
+    assert!(coarse > 0.0, "frac 0.25 did not perturb the head logits");
+    assert!(
+        fine <= coarse,
+        "head-logit error rose with the fraction: frac 0.75 {fine} vs frac 0.25 {coarse}"
+    );
+
+    let once = run("mca", 0.4, 0.5);
+    let twice = run("mca", 0.4, 0.5);
+    assert_eq!(once.logits, twice.logits, "sampled scores + MCA values not deterministic");
+    assert!(once.logits.iter().all(|x| x.is_finite()));
+}

@@ -82,9 +82,12 @@ def entry_key(bench_kind, entry, ordinal):
         # identity is (workers, kind, per-group ordinal).
         return (entry.get("workers"), entry.get("kind"), ordinal)
     if bench_kind == "eval":
-        # precision is a first-class sweep axis; pre-precision baselines
-        # carry no field, which normalizes to the f32 rung so their
-        # entries keep matching fresh f32 rows.
+        # precision, score_frac and seq are first-class sweep axes; older
+        # baselines carry no field, which normalizes to the f32 / exact-
+        # score / 64-token rung (the whole pre-long-seq inventory) so
+        # their entries keep matching fresh rows. Keying per seq length
+        # makes the accuracy and FLOPs-factor ratchets apply to every
+        # sequence-length row of the long-seq sweep independently.
         return (
             entry.get("model"),
             entry.get("task"),
@@ -92,6 +95,8 @@ def entry_key(bench_kind, entry, ordinal):
             entry.get("alpha"),
             entry.get("epsilon"),
             entry.get("precision", "f32"),
+            entry.get("score_frac", 1.0),
+            entry.get("seq", 64),
         )
     return (ordinal,)
 
@@ -369,6 +374,91 @@ def self_test():
         n = gate_file(fp, bdir, update=False, report=report)
         check(n >= 1, "eval accuracy drop not caught")
 
+    # per-seq-length eval rows: (score_frac, seq) are part of the entry
+    # identity, so same-knob rows at different sequence lengths /
+    # fractions gate independently — an accuracy drop on the long-seq
+    # sampled-score row and a FLOPs-factor collapse on it must both be
+    # caught even when the short-seq exact rows are untouched
+    lbase = {
+        "bench": "eval",
+        "entries": [
+            {
+                "model": "longbert_sim",
+                "task": "needle_2k_sim",
+                "knob": "alpha",
+                "alpha": 0.3,
+                "precision": "f32",
+                "score_frac": 1.0,
+                "seq": 2048,
+                "accuracy": 0.88,
+                "agreement": 0.95,
+                "flops_reduction": 3.0,
+            },
+            {
+                "model": "longbert_sim",
+                "task": "needle_2k_sim",
+                "knob": "alpha",
+                "alpha": 0.3,
+                "precision": "f32",
+                "score_frac": 0.5,
+                "seq": 2048,
+                "accuracy": 0.86,
+                "agreement": 0.93,
+                "flops_reduction": 5.5,
+            },
+        ],
+    }
+
+    def run_eval(fresh_doc, base_doc):
+        with tempfile.TemporaryDirectory() as d:
+            bdir = os.path.join(d, "baselines")
+            os.makedirs(bdir)
+            fp = os.path.join(d, "BENCH_eval.json")
+            with open(fp, "w") as f:
+                json.dump(fresh_doc, f)
+            with open(os.path.join(bdir, "BENCH_eval.json"), "w") as f:
+                json.dump(base_doc, f)
+            report = []
+            return gate_file(fp, bdir, update=False, report=report), report
+
+    n, _ = run_eval(copy.deepcopy(lbase), lbase)
+    check(n == 0, f"identical per-seq eval rows flagged ({n} regressions)")
+
+    ldrop = copy.deepcopy(lbase)
+    ldrop["entries"][1]["accuracy"] = 0.60  # only the frac-0.5 row drops
+    n, _ = run_eval(ldrop, lbase)
+    check(n >= 1, "long-seq sampled-score accuracy drop not caught")
+
+    lflops = copy.deepcopy(lbase)
+    lflops["entries"][1]["flops_reduction"] = 2.0  # score-side gain lost
+    n, _ = run_eval(lflops, lbase)
+    check(n >= 1, "long-seq FLOPs-factor collapse not caught")
+
+    # schema migration: a pre-long-seq baseline row (no score_frac/seq)
+    # still matches a fresh row that carries the new fields at the
+    # normalized rung (frac 1.0, seq 64)
+    oldbase = {
+        "bench": "eval",
+        "entries": [
+            {
+                "model": "distil_sim",
+                "task": "sst2_sim",
+                "knob": "alpha",
+                "alpha": 0.3,
+                "accuracy": 0.90,
+                "flops_reduction": 3.2,
+            }
+        ],
+    }
+    migrated = copy.deepcopy(oldbase)
+    migrated["entries"][0].update(precision="f32", score_frac=1.0, seq=64)
+    n, report = run_eval(migrated, oldbase)
+    check(n == 0, f"pre-long-seq baseline stopped matching migrated rows ({n})")
+    check(
+        not any("missing from fresh" in line for line in report),
+        "migrated row reported as a disappeared entry",
+    )
+
     # seeding: a missing baseline is copied and passes
     with tempfile.TemporaryDirectory() as d:
         bdir = os.path.join(d, "baselines")
@@ -404,7 +494,7 @@ def self_test():
         for f in failures:
             print(f"  - {f}")
         return 1
-    print("bench_gate self-test ok (14 scenarios)")
+    print("bench_gate self-test ok (18 scenarios)")
     return 0
 
 
