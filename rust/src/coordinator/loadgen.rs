@@ -753,6 +753,15 @@ pub fn write_bench_json(
         s.insert("token_mean_ms".to_string(), Json::Num(st.token_mean_ms));
         s.insert("token_p50_ms".to_string(), Json::Num(st.token_p50_ms));
         s.insert("token_p99_ms".to_string(), Json::Num(st.token_p99_ms));
+        // Per-mode routing histogram (admitted requests by the attention
+        // mode actually served) and the linear-rung reroute count.
+        let routed = |mode: &str| {
+            st.mode_routed.iter().find(|(m, _)| m == mode).map(|&(_, n)| n).unwrap_or(0)
+        };
+        s.insert("routed_exact".to_string(), Json::Num(routed("exact") as f64));
+        s.insert("routed_mca".to_string(), Json::Num(routed("mca") as f64));
+        s.insert("routed_linear".to_string(), Json::Num(routed("linear") as f64));
+        s.insert("linear_rerouted".to_string(), Json::Num(st.linear_rerouted as f64));
         top.insert("server".to_string(), Json::Obj(s));
     }
     std::fs::write(path, Json::Obj(top).to_string())?;
@@ -947,6 +956,8 @@ mod tests {
         st.decode_requests = 4;
         st.decode_tokens = 48;
         st.token_p50_ms = 1.5;
+        st.mode_routed = vec![("linear".to_string(), 11), ("mca".to_string(), 80)];
+        st.linear_rerouted = 6;
         let path = std::env::temp_dir().join("mca_test_bench_serving.json");
         let entries =
             vec![(1usize, "open_loop".to_string(), r1), (4usize, "replay".to_string(), r4)];
@@ -990,6 +1001,12 @@ mod tests {
         assert_eq!(server.get("decode_requests").unwrap().as_usize().unwrap(), 4);
         assert_eq!(server.get("decode_tokens").unwrap().as_usize().unwrap(), 48);
         assert!((server.get("token_p50_ms").unwrap().as_f64().unwrap() - 1.5).abs() < 1e-9);
+        // Per-mode routing counters: modes never routed report 0, not a
+        // missing key — bench_gate keys on all three.
+        assert_eq!(server.get("routed_exact").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(server.get("routed_mca").unwrap().as_usize().unwrap(), 80);
+        assert_eq!(server.get("routed_linear").unwrap().as_usize().unwrap(), 11);
+        assert_eq!(server.get("linear_rerouted").unwrap().as_usize().unwrap(), 6);
         let _ = std::fs::remove_file(&path);
     }
 

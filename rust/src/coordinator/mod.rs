@@ -47,6 +47,7 @@ use crate::mca::adaptive::{
     AlphaController, ALPHA_GRID,
 };
 use crate::mca::flops::{self, AttnDims};
+use crate::mca::linear::{quantize_rf, relative_cost, rf_for_error_budget, DEFAULT_RF_DIM};
 use crate::metrics::serving::{AlphaSummary, ServingMetrics, WorkerSnapshot};
 use crate::model::Params;
 use crate::runtime::{
@@ -98,10 +99,16 @@ pub struct Request {
     /// whitespace-tokenized input text
     pub text: String,
     /// effective precision knob: the requested α for raw-α requests, the
-    /// resolved grid α for ε-budget requests
+    /// resolved grid α for ε-budget requests (1.0 for "linear" traffic,
+    /// whose knob is `rf_dim` instead)
     pub alpha: f32,
-    /// "mca" (default) or "exact"
+    /// "mca" (default), "exact", or "linear" (randomized linear attention)
     pub mode: String,
+    /// random-feature count for `"linear"` requests (0 everywhere else;
+    /// admission substitutes [`DEFAULT_RF_DIM`] for a linear request that
+    /// arrives with 0). Part of the batching key: a batch executes at one
+    /// feature count.
+    pub rf_dim: u32,
     /// compute precision the request is served at (the kernel's
     /// f32/bf16/int8 GEMM paths); the admission ladder's quantized rung
     /// may lower this to [`Precision::Int8`] instead of shedding
@@ -176,6 +183,9 @@ pub struct Response {
     /// the batch executed on the exact path — including an ε budget whose
     /// score reservation was infeasible and fell back to exact scores)
     pub score_frac: f32,
+    /// random-feature count this request was served at (0 unless the
+    /// batch executed on the "linear" path)
+    pub rf_dim: u32,
 }
 
 // ---------------------------------------------------------------------------
@@ -201,7 +211,7 @@ pub struct BatchPlan {
 }
 
 /// Group compatible requests (same mode + α bits + compute precision +
-/// score-fraction bits) into the largest available bucket; smaller groups
+/// score-fraction bits + feature count) into the largest available bucket; smaller groups
 /// ride a padded bucket when their oldest member has waited past
 /// `max_wait`, otherwise stay queued.
 ///
@@ -211,8 +221,8 @@ pub struct BatchPlan {
 ///
 /// Invariants (property-tested): every index appears in at most one batch;
 /// batch size <= bucket; all requests in a batch share (mode, alpha,
-/// precision, score_frac); indices within a batch are in queue (FIFO)
-/// order; no ready group is left unplanned.
+/// precision, score_frac, rf_dim); indices within a batch are in queue
+/// (FIFO) order; no ready group is left unplanned.
 pub fn plan_batches(
     queue: &[Pending],
     buckets: &[usize],
@@ -233,6 +243,7 @@ pub fn plan_batches(
             queue[head].req.alpha.to_bits(),
             queue[head].req.precision,
             queue[head].req.score_frac.to_bits(),
+            queue[head].req.rf_dim,
         );
         let group: Vec<usize> = (head..queue.len())
             .filter(|&i| {
@@ -242,6 +253,7 @@ pub fn plan_batches(
                     && queue[i].req.alpha.to_bits() == key.1
                     && queue[i].req.precision == key.2
                     && queue[i].req.score_frac.to_bits() == key.3
+                    && queue[i].req.rf_dim == key.4
             })
             .take(max_bucket)
             .collect();
@@ -285,6 +297,8 @@ const OVERDUE_WINDOWS: u32 = 4;
 /// 1 each; Monte-Carlo rows scale as (0.5/α)² clamped to 1 — Eq. 9 makes
 /// r_i ∝ 1/α², so a high-α batch runs proportionally fewer samples and
 /// should overtake an expensive exact batch when a worker frees up.
+/// Linear-mode rows are costed by [`relative_cost`] instead (their knob
+/// is the feature count, not α) — see [`row_cost`].
 pub fn batch_cost(mode: &str, alpha: f32, rows: usize) -> f64 {
     let per_row = if mode == "exact" || alpha <= 0.0 {
         1.0
@@ -293,6 +307,16 @@ pub fn batch_cost(mode: &str, alpha: f32, rows: usize) -> f64 {
         (a * a).min(1.0)
     };
     rows as f64 * per_row
+}
+
+/// The feature count a linear request actually runs at: 0 is the
+/// "backend default" sentinel.
+fn effective_rf(rf_dim: u32) -> usize {
+    if rf_dim == 0 {
+        DEFAULT_RF_DIM
+    } else {
+        rf_dim as usize
+    }
 }
 
 /// Relative cost multiplier of a compute precision. The quantized kernel
@@ -314,18 +338,97 @@ pub fn precision_cost_factor(prec: Precision) -> f64 {
 /// brownout its headroom: degrading queued budget requests toward their
 /// α ceiling shrinks the queue's cost without dropping anything. Quantized
 /// precisions scale the cost down by [`precision_cost_factor`].
-pub fn row_cost(req: &Request) -> f64 {
-    batch_cost(&req.mode, req.alpha, 1) * precision_cost_factor(req.precision)
+///
+/// Linear-mode rows cost [`relative_cost`]`(rf_dim, d_model, seq)`, which
+/// needs the served model's width and the serving sequence length — on a
+/// short sequence a dense feature map genuinely costs *more* than the
+/// exact kernel, and the router must see that.
+pub fn row_cost(req: &Request, d_model: usize, seq: usize) -> f64 {
+    let per_row = if req.mode == "linear" {
+        relative_cost(effective_rf(req.rf_dim), d_model, seq)
+    } else {
+        batch_cost(&req.mode, req.alpha, 1)
+    };
+    per_row * precision_cost_factor(req.precision)
+}
+
+/// Which approximation path an ε budget is served on, with its resolved
+/// knob — the per-request routing decision, kept pure so the
+/// never-costlier-than-cheapest-feasible invariant is property-testable.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Route {
+    /// bit-exact softmax attention (zero error honors every ε)
+    Exact,
+    /// Monte-Carlo value approximation at the resolved grid α ceiling
+    Mca {
+        /// cheapest grid α whose Theorem-2 bound stays within ε
+        alpha: f32,
+    },
+    /// randomized linear attention at the resolved grid feature count
+    Linear {
+        /// smallest grid `rf_dim` whose a-priori bound stays within ε
+        rf_dim: usize,
+    },
+}
+
+/// Resolve an ε budget to the cheapest feasible approximation path.
+///
+/// Candidates and their Eq.-9 per-row costs:
+/// * exact — always feasible, cost 1;
+/// * mca at the cheapest grid α within `eps_mca` (the value-side budget
+///   after any sampled-score reservation) — cost `((0.5/α)²).min(1)`;
+/// * linear at the smallest grid feature count within `eps_linear` (the
+///   full budget: the linear path has no score stage to reserve for) —
+///   cost [`relative_cost`]. Skipped for tail budgets (`delta`): the
+///   linear a-priori bound is a mean bound with no (1−δ) sharpening.
+///
+/// Ties prefer mca (the paper's headline path), then exact. Degenerate
+/// model statistics route exact, like the pre-routing resolver did.
+pub fn route_budget(
+    eps_mca: f64,
+    eps_linear: f64,
+    delta: Option<f64>,
+    stats: &ModelStats,
+    d_model: usize,
+    seq: usize,
+) -> Route {
+    if !stats.usable() {
+        return Route::Exact;
+    }
+    let mca = {
+        let raw = match delta {
+            Some(dl) => alpha_for_tail_budget(eps_mca, dl, stats.beta, stats.w_frob),
+            None => alpha_for_error_budget(eps_mca, stats.beta, stats.w_frob),
+        };
+        quantize_alpha(raw)
+    };
+    let linear = if delta.is_none() {
+        quantize_rf(rf_for_error_budget(eps_linear, stats.beta, stats.w_frob))
+    } else {
+        None
+    };
+    let mca_cost = mca.map(|a| batch_cost("mca", a, 1)).unwrap_or(f64::INFINITY);
+    let lin_cost = linear.map(|rf| relative_cost(rf, d_model, seq)).unwrap_or(f64::INFINITY);
+    if mca_cost <= lin_cost && mca_cost <= 1.0 {
+        Route::Mca { alpha: mca.expect("finite cost implies Some") }
+    } else if lin_cost < mca_cost && lin_cost < 1.0 {
+        Route::Linear { rf_dim: linear.expect("finite cost implies Some") }
+    } else {
+        Route::Exact
+    }
 }
 
 /// Dispatch priority over ready plans: overdue batches first (longest
-/// wait first), then cheaper batches first ([`batch_cost`]), ties broken
-/// toward the longer waiter. Returns plan indices in dispatch order.
+/// wait first), then cheaper batches first (per-mode [`row_cost`] ×
+/// rows), ties broken toward the longer waiter. Returns plan indices in
+/// dispatch order. `d_model`/`seq` feed the linear-mode cost model.
 pub fn rank_plans(
     queue: &[Pending],
     plans: &[BatchPlan],
     max_wait: Duration,
     now: Instant,
+    d_model: usize,
+    seq: usize,
 ) -> Vec<usize> {
     let overdue_after = max_wait * OVERDUE_WINDOWS;
     let mut keyed: Vec<(bool, f64, Duration, usize)> = plans
@@ -335,8 +438,7 @@ pub fn rank_plans(
             let head = &queue[plan.indices[0]].req;
             let oldest = plan.indices.iter().map(|&i| queue[i].arrived).min().expect("nonempty");
             let waited = now.saturating_duration_since(oldest);
-            let cost = batch_cost(&head.mode, head.alpha, plan.indices.len())
-                * precision_cost_factor(head.precision);
+            let cost = row_cost(head, d_model, seq) * plan.indices.len() as f64;
             (waited >= overdue_after, cost, waited, k)
         })
         .collect();
@@ -611,6 +713,13 @@ pub struct ServerStats {
     pub token_p50_ms: f64,
     /// 99th-percentile per-token decode-step latency
     pub token_p99_ms: f64,
+    /// (mode, count) of admitted requests per attention mode actually
+    /// routed — "exact" / "mca" / "linear" after ε resolution and the
+    /// admission ladder
+    pub mode_routed: Vec<(String, usize)>,
+    /// requests the admission ladder's linear rung rerouted from mca to
+    /// randomized linear attention instead of shedding
+    pub linear_rerouted: usize,
     /// per-worker breakdowns
     pub workers: Vec<WorkerSnapshot>,
     /// per-α latency summaries
@@ -670,7 +779,7 @@ impl Submitter {
     /// same-fraction traffic and runs `ceil(frac · n)` exact score rows
     /// per head, reconstructing the rest. Fractions outside (0, 1) — NaN
     /// included — are served as 1.0 (exact scores), as is every request
-    /// in `"exact"` mode.
+    /// in `"exact"` or `"linear"` mode (sampled scores are MCA-only).
     pub fn submit_sampled(
         &self,
         text: &str,
@@ -680,17 +789,44 @@ impl Submitter {
         score_frac: f32,
     ) -> mpsc::Receiver<Response> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let score_frac = if mode == "exact" { 1.0 } else { clean_score_frac(score_frac) };
+        let score_frac = if mode == "mca" { clean_score_frac(score_frac) } else { 1.0 };
         self.send(Request {
             id,
             text: text.to_string(),
             alpha,
             mode: mode.to_string(),
+            rf_dim: 0,
             precision,
             quantized: false,
             budget: None,
             decode: None,
             score_frac,
+        })
+    }
+
+    /// Submit a randomized linear-attention request with an explicit
+    /// feature count. `rf_dim` 0 means "backend default"
+    /// ([`crate::mca::linear::DEFAULT_RF_DIM`]); admission normalizes it
+    /// onto [2, 4096]. Linear requests batch only with same-`rf_dim`
+    /// traffic and are encoder-only (no decode variant exists).
+    pub fn submit_linear(
+        &self,
+        text: &str,
+        rf_dim: u32,
+        precision: Precision,
+    ) -> mpsc::Receiver<Response> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.send(Request {
+            id,
+            text: text.to_string(),
+            alpha: 1.0,
+            mode: "linear".to_string(),
+            rf_dim,
+            precision,
+            quantized: false,
+            budget: None,
+            decode: None,
+            score_frac: 1.0,
         })
     }
 
@@ -716,6 +852,7 @@ impl Submitter {
             text: text.to_string(),
             alpha,
             mode: mode.to_string(),
+            rf_dim: 0,
             precision,
             quantized: false,
             budget: None,
@@ -770,6 +907,7 @@ impl Submitter {
             text: text.to_string(),
             alpha: 1.0,
             mode: "mca".to_string(),
+            rf_dim: 0,
             precision,
             quantized: false,
             budget: Some(Budget { epsilon, delta, alpha_max: 1.0, degraded: false }),
@@ -810,7 +948,7 @@ impl Server {
         let mut handles = Vec::with_capacity(n_workers);
         for id in 0..n_workers {
             let (jtx, jrx) = mpsc::channel::<WorkerMsg>();
-            let (rtx, rrx) = mpsc::channel::<Result<(Vec<usize>, ModelStats, usize)>>();
+            let (rtx, rrx) = mpsc::channel::<Result<(Vec<usize>, ModelStats, usize, usize)>>();
             let spec = backend.clone();
             let wcfg = cfg.clone();
             let events = tx.clone();
@@ -826,12 +964,14 @@ impl Server {
         let mut buckets = Vec::new();
         let mut stats = ModelStats { beta: 0.0, w_frob: 0.0 };
         let mut max_len = 0usize;
+        let mut d_model = 0usize;
         for (id, rrx) in ready_rxs.into_iter().enumerate() {
             match rrx.recv() {
-                Ok(Ok((b, st, ml))) => {
+                Ok(Ok((b, st, ml, dm))) => {
                     buckets = b;
                     stats = st;
                     max_len = ml;
+                    d_model = dm;
                 }
                 Ok(Err(e)) => {
                     drop(job_txs); // surviving workers exit on channel close
@@ -853,7 +993,9 @@ impl Server {
         let dknobs = knobs;
         let dabort = abort;
         let handle = std::thread::spawn(move || {
-            dispatcher_loop(dcfg, buckets, stats, max_len, rx, job_txs, handles, dknobs, dabort)
+            dispatcher_loop(
+                dcfg, buckets, stats, max_len, d_model, rx, job_txs, handles, dknobs, dabort,
+            )
         });
         Ok(Server {
             sub: Submitter { tx, next_id: Arc::new(AtomicU64::new(1)) },
@@ -988,6 +1130,9 @@ struct Dispatcher {
     /// could never emit a token, so charging + prefilling it would bill
     /// the client for nothing.
     max_len: usize,
+    /// Width of the served model (from the workers) — with `cfg.seq`,
+    /// everything the linear-mode cost model needs.
+    d_model: usize,
     /// Dispatcher-side tokenizer for the admission-time prompt-length
     /// check; shares `decode_prompt` with the worker prefill so the
     /// length admission measures is exactly the length prefill uses.
@@ -1031,6 +1176,7 @@ fn dispatcher_loop(
     buckets: Vec<usize>,
     stats: ModelStats,
     max_len: usize,
+    d_model: usize,
     rx: mpsc::Receiver<Msg>,
     job_txs: Vec<mpsc::Sender<WorkerMsg>>,
     worker_handles: Vec<JoinHandle<()>>,
@@ -1048,6 +1194,7 @@ fn dispatcher_loop(
         alive: n_workers,
         dead: vec![false; n_workers],
         max_len,
+        d_model,
         tok: Tokenizer::new(),
         paused: false,
         brownout: false,
@@ -1232,18 +1379,43 @@ impl Dispatcher {
         }
     }
 
-    /// Admission ladder: resolve any ε budget, then admit within the cost
-    /// cap; at the cap, try the precision-brownout stage (degrade queued
-    /// budget requests to their α ceiling), then the quantized rung
-    /// (reroute the arriving request to the int8 GEMM path at half the
-    /// row cost), before shedding. Live decode sessions hold their row
-    /// cost against the same cap, so batch and decode traffic share one
-    /// admission budget.
+    /// Eq.-9 row cost of a request under this server's model/seq — the
+    /// unit every admission decision below is made in.
+    fn cost(&self, req: &Request) -> f64 {
+        row_cost(req, self.d_model, self.cfg.seq)
+    }
+
+    /// Admission ladder: resolve any ε budget (routing it to the cheapest
+    /// feasible mode), then admit within the cost cap; at the cap, try
+    /// the precision-brownout stage (degrade queued budget requests to
+    /// their α ceiling), then the quantized rung (reroute the arriving
+    /// request to the int8 GEMM path at half the row cost), then the
+    /// linear rung (reroute to randomized linear attention when that is
+    /// strictly cheaper at an equivalent error), before shedding. Live
+    /// decode sessions hold their row cost against the same cap, so batch
+    /// and decode traffic share one admission budget.
     fn admit(&mut self, mut p: Pending, rtx: mpsc::Sender<Response>) {
         if self.draining {
             self.metrics.on_shed();
             let _ = rtx.send(shed_response(&p));
             return;
+        }
+        if p.req.decode.is_some() && p.req.mode == "linear" {
+            // Linear attention is encoder-only: a decode session could
+            // never run it, so reject up front rather than failing the
+            // prefill on a worker.
+            self.metrics.on_shed();
+            let _ = rtx.send(shed_response(&p));
+            return;
+        }
+        // Normalize the feature-count knob: only linear requests carry
+        // one, and a linear request that did not pick gets the default.
+        if p.req.mode == "linear" {
+            p.req.rf_dim = effective_rf(p.req.rf_dim).clamp(2, 4096) as u32;
+            // The linear path has no QKᵀ scores to sample.
+            p.req.score_frac = 1.0;
+        } else {
+            p.req.rf_dim = 0;
         }
         if p.req.decode.is_some()
             && decode_prompt(&self.tok, &p.req.text, self.cfg.seq).len() >= self.max_len
@@ -1270,20 +1442,27 @@ impl Dispatcher {
         // a quantized-then-shed arrival must not inflate the `quantized`
         // stat (it was shed, not served on the int8 path).
         let mut quantized_now = false;
-        if self.queued_cost + self.decode_cost + row_cost(&p.req) > cap + COST_EPS {
-            // Ladder steps 2–3, only when the brownout stage is enabled
-            // AND degrading/quantizing can actually shrink this arrival:
-            // an over-cap exact (or already-quantized budgetless) request
-            // gains nothing from the ladder, so entering brownout for it
-            // would only flap the queue-wide degrade pass.
-            if self.cfg.brownout_watermark > 0 && ladder_can_reduce(&p.req) {
+        if self.queued_cost + self.decode_cost + self.cost(&p.req) > cap + COST_EPS {
+            // Ladder steps 2–4, only when the brownout stage is enabled
+            // AND degrading/quantizing/rerouting can actually shrink this
+            // arrival: an over-cap exact (or already fully degraded)
+            // request gains nothing from the ladder, so entering brownout
+            // for it would only flap the queue-wide degrade pass.
+            if self.cfg.brownout_watermark > 0
+                && ladder_can_reduce(&p.req, &self.stats, self.d_model, self.cfg.seq)
+            {
                 self.enter_brownout();
                 degrade_to_ceiling(&mut p.req);
-                if self.queued_cost + self.decode_cost + row_cost(&p.req) > cap + COST_EPS {
+                if self.queued_cost + self.decode_cost + self.cost(&p.req) > cap + COST_EPS {
                     quantized_now = quantize_to_int8(&mut p.req);
                 }
+                if self.queued_cost + self.decode_cost + self.cost(&p.req) > cap + COST_EPS
+                    && reroute_to_linear(&mut p.req, &self.stats, self.d_model, self.cfg.seq)
+                {
+                    self.metrics.on_linear_reroute();
+                }
             }
-            if self.queued_cost + self.decode_cost + row_cost(&p.req) > cap + COST_EPS {
+            if self.queued_cost + self.decode_cost + self.cost(&p.req) > cap + COST_EPS {
                 self.metrics.on_shed();
                 let _ = rtx.send(shed_response(&p));
                 return;
@@ -1302,11 +1481,14 @@ impl Dispatcher {
         if was_degraded {
             self.metrics.on_degraded(1);
         }
+        // Per-mode routing counter: every admitted request, keyed by the
+        // mode it will actually execute in after resolution + ladder.
+        self.metrics.on_mode_routed(&p.req.mode);
         if p.req.decode.is_some() {
             self.admit_decode(p, rtx);
             return;
         }
-        self.queued_cost += row_cost(&p.req);
+        self.queued_cost += self.cost(&p.req);
         self.client_depth += 1;
         self.queue.push_back((p, rtx));
         self.metrics.on_queue_depth(self.client_depth);
@@ -1327,7 +1509,7 @@ impl Dispatcher {
     /// re-routes; with no live worker left the request is shed — every
     /// admitted request still resolves to exactly one outcome.
     fn admit_decode(&mut self, p: Pending, rtx: mpsc::Sender<Response>) {
-        let cost = row_cost(&p.req);
+        let cost = self.cost(&p.req);
         let id = p.req.id;
         let mut job = DecodeJob { pending: p, rtx };
         loop {
@@ -1357,22 +1539,25 @@ impl Dispatcher {
         }
     }
 
-    /// Resolve an ε budget against the model statistics onto the serving
-    /// α grid. The request's ceiling (`alpha_max`) is the cheapest grid α
-    /// whose Theorem-2 bound stays within ε; the α actually served is
-    /// capped by the canary controller's target unless brownout is on.
-    /// Budgets below the grid floor — and any budget against degenerate
-    /// statistics — run on the exact path (zero error honors every ε).
+    /// Resolve an ε budget against the model statistics — and *route* it
+    /// to the cheapest feasible approximation path ([`route_budget`]):
+    /// the Monte-Carlo grid α whose Theorem-2 bound honors ε, the linear
+    /// path's grid feature count whose a-priori bound honors ε, or exact
+    /// when neither approximation is both feasible and cheaper. For the
+    /// mca route the α actually served is capped by the canary
+    /// controller's target unless brownout is on; the linear route is
+    /// already served at its cheapest feasible knob (`quantize_rf` snaps
+    /// *up*), so there is nothing further to degrade.
     ///
     /// A request carrying `score_frac < 1` first reserves the score-side
     /// error (`(1 − frac)·β·‖W‖_F`, the same scale Theorem 2 bounds the
-    /// value side with) out of ε, then resolves α against the remainder —
-    /// one end-to-end budget covering both approximations. When the
-    /// reservation alone exhausts ε the fraction is infeasible: the
-    /// request falls back to exact scores (`score_frac = 1`) with the
-    /// full ε for the value side. The tail-δ sharpening applies to the
-    /// value remainder only — the score term is a deterministic bound,
-    /// not a variance.
+    /// value side with) out of ε, then resolves the mca α against the
+    /// remainder — one end-to-end budget covering both approximations.
+    /// When the reservation alone exhausts ε the fraction is infeasible:
+    /// the request falls back to exact scores (`score_frac = 1`) with the
+    /// full ε for the value side. The linear candidate always sees the
+    /// full ε (it replaces the score path entirely), and decode requests
+    /// never route linear (encoder-only).
     fn resolve(&mut self, p: &mut Pending) {
         let Some(b) = p.req.budget.as_mut() else { return };
         let value_eps = if p.req.score_frac < 1.0 {
@@ -1392,19 +1577,18 @@ impl Dispatcher {
         } else {
             b.epsilon
         };
-        let raw = if self.stats.usable() {
-            match b.delta {
-                Some(delta) => {
-                    alpha_for_tail_budget(value_eps, delta, self.stats.beta, self.stats.w_frob)
-                }
-                None => alpha_for_error_budget(value_eps, self.stats.beta, self.stats.w_frob),
-            }
-        } else {
-            0.0
-        };
-        match quantize_alpha(raw) {
-            Some(ceiling) => {
+        let mut route =
+            route_budget(value_eps, b.epsilon, b.delta, &self.stats, self.d_model, self.cfg.seq);
+        if p.req.decode.is_some() && matches!(route, Route::Linear { .. }) {
+            // Encoder-only: a decode budget falls back to the mca/exact
+            // pair (re-route with the linear candidate masked off).
+            route = route_budget(value_eps, f64::NAN, b.delta, &self.stats, 0, 0);
+        }
+        match route {
+            Route::Mca { alpha: ceiling } => {
                 b.alpha_max = ceiling;
+                p.req.mode = "mca".to_string();
+                p.req.rf_dim = 0;
                 let target = quantize_alpha(self.controller.alpha).unwrap_or(ALPHA_GRID[0]);
                 let normal = if ceiling < target { ceiling } else { target };
                 if self.brownout && normal.to_bits() != ceiling.to_bits() {
@@ -1414,9 +1598,19 @@ impl Dispatcher {
                     p.req.alpha = normal;
                 }
             }
-            None => {
+            Route::Linear { rf_dim } => {
+                p.req.mode = "linear".to_string();
+                p.req.rf_dim = rf_dim as u32;
+                // α does not apply on this path; pin it (and the score
+                // fraction) so the batching key is deterministic.
+                p.req.alpha = 1.0;
+                b.alpha_max = 1.0;
+                p.req.score_frac = 1.0;
+            }
+            Route::Exact => {
                 p.req.mode = "exact".to_string();
                 p.req.alpha = 1.0;
+                p.req.rf_dim = 0;
                 b.alpha_max = 1.0;
                 // The exact path always runs exact scores; pin the echo
                 // (and the batching key) to match.
@@ -1452,7 +1646,7 @@ impl Dispatcher {
             .queue
             .iter()
             .filter(|(p, _)| !is_canary(&p.req))
-            .map(|(p, _)| row_cost(&p.req))
+            .map(|(p, _)| row_cost(&p.req, self.d_model, self.cfg.seq))
             .sum();
         true
     }
@@ -1494,7 +1688,8 @@ impl Dispatcher {
             if plans.is_empty() {
                 return;
             }
-            let order = rank_plans(&pendings, &plans, self.cfg.max_wait, now);
+            let order =
+                rank_plans(&pendings, &plans, self.cfg.max_wait, now, self.d_model, self.cfg.seq);
             let take = order.len().min(self.idle.len());
             let chosen: Vec<&BatchPlan> = order[..take].iter().map(|&k| &plans[k]).collect();
             // Extract every chosen entry in one pass: the plans are
@@ -1512,7 +1707,7 @@ impl Dispatcher {
             for (i, slot) in flat {
                 let entry = self.queue.remove(i).expect("planned index in range");
                 if !is_canary(&entry.0.req) {
-                    self.queued_cost -= row_cost(&entry.0.req);
+                    self.queued_cost -= self.cost(&entry.0.req);
                     self.client_depth -= 1;
                 }
                 per_plan[slot].push(entry);
@@ -1538,7 +1733,7 @@ impl Dispatcher {
                     let WorkerMsg::Job(job) = msg else { unreachable!("sent a Job") };
                     for entry in job.entries.into_iter().rev() {
                         if !is_canary(&entry.0.req) {
-                            self.queued_cost += row_cost(&entry.0.req);
+                            self.queued_cost += self.cost(&entry.0.req);
                             self.client_depth += 1;
                         }
                         self.queue.push_front(entry);
@@ -1553,7 +1748,8 @@ impl Dispatcher {
     /// Deterministic canary pacing: accumulate `canary_rate` per
     /// dispatched MCA batch, fire on overflow. Suppressed under brownout
     /// (the canary would amplify the overload it is meant to survive)
-    /// and while draining.
+    /// and while draining. Linear batches never seed a canary: the AIMD
+    /// controller's target is an α, which the linear path does not serve.
     fn mark_canary(&mut self, head: &Request) -> bool {
         if self.cfg.canary_rate <= 0.0 || self.brownout || self.draining || head.mode != "mca" {
             return false;
@@ -1581,6 +1777,7 @@ impl Dispatcher {
             text: sample.text.clone(),
             alpha: 1.0,
             mode: "exact".to_string(),
+            rf_dim: 0,
             precision: Precision::F32,
             quantized: false,
             budget: None,
@@ -1698,37 +1895,73 @@ impl Dispatcher {
             token_mean_ms: m.token_lat().mean_ms(),
             token_p50_ms: m.token_lat().p50_ms(),
             token_p99_ms: m.token_lat().p99_ms(),
+            mode_routed: m.mode_routed_counts(),
+            linear_rerouted: m.linear_rerouted,
             workers: m.worker_snapshots(),
             per_alpha: m.alpha_summaries(),
         }
     }
 }
 
-/// Whether the admission ladder's degrade/quantize rungs can shrink this
-/// request's row cost at all. Probed on a clone before entering brownout:
-/// an exact request (bit-exact contract), or an MCA request already at
-/// its α ceiling on the int8 path, cannot be made cheaper — shedding it
-/// without flapping the queue-wide brownout degrade pass is the right
-/// call.
-fn ladder_can_reduce(req: &Request) -> bool {
-    let before = row_cost(req);
+/// Whether the admission ladder's degrade/quantize/linear-reroute rungs
+/// can shrink this request's row cost at all. Probed on a clone before
+/// entering brownout: an exact request (bit-exact contract), or an MCA
+/// request already at its α ceiling on the int8 path with no cheaper
+/// linear equivalent, cannot be made cheaper — shedding it without
+/// flapping the queue-wide brownout degrade pass is the right call.
+fn ladder_can_reduce(req: &Request, stats: &ModelStats, d_model: usize, seq: usize) -> bool {
+    let before = row_cost(req, d_model, seq);
     let mut probe = req.clone();
     degrade_to_ceiling(&mut probe);
     quantize_to_int8(&mut probe);
-    row_cost(&probe) < before - COST_EPS
+    reroute_to_linear(&mut probe, stats, d_model, seq);
+    row_cost(&probe, d_model, seq) < before - COST_EPS
 }
 
-/// Ladder step 3: reroute an MCA request still over the cost cap to the
-/// int8 GEMM path — the quantized rung between degrade and shed. Exact
-/// requests are never rerouted (exact means bit-exact f32 logits).
-/// Returns whether the precision changed.
+/// Ladder step 3: reroute an approximate (mca or linear) request still
+/// over the cost cap to the int8 GEMM path — the quantized rung between
+/// degrade and shed. Exact requests are never rerouted (exact means
+/// bit-exact f32 logits). Returns whether the precision changed.
 fn quantize_to_int8(req: &mut Request) -> bool {
-    if req.mode != "mca" || req.precision == Precision::Int8 {
+    if (req.mode != "mca" && req.mode != "linear") || req.precision == Precision::Int8 {
         return false;
     }
     req.precision = Precision::Int8;
     req.quantized = true;
     true
+}
+
+/// Ladder step 4 — the last rung before shedding: reroute an over-cap
+/// encoder MCA request to randomized linear attention at an *equivalent
+/// error*, when that path is strictly cheaper here. The equivalent ε is
+/// the request's own budget when it has one, else the Theorem-2 bound its
+/// α knob implies (`ε = α·β·‖W‖_F`); [`quantize_rf`] snaps the inverted
+/// feature count up onto the grid so the bound still holds. Tail budgets
+/// (δ) stay on the mca path — the linear bound has no (1−δ) sharpening.
+/// Returns whether the request was rerouted.
+fn reroute_to_linear(req: &mut Request, stats: &ModelStats, d_model: usize, seq: usize) -> bool {
+    if req.mode != "mca" || req.decode.is_some() || !stats.usable() {
+        return false;
+    }
+    let eps = match req.budget.as_ref() {
+        Some(b) if b.delta.is_some() => return false,
+        Some(b) => b.epsilon,
+        None => req.alpha as f64 * stats.beta * stats.w_frob,
+    };
+    let Some(rf) = quantize_rf(rf_for_error_budget(eps, stats.beta, stats.w_frob)) else {
+        return false;
+    };
+    let mut probe = req.clone();
+    probe.mode = "linear".to_string();
+    probe.rf_dim = rf as u32;
+    probe.alpha = 1.0;
+    probe.score_frac = 1.0;
+    if row_cost(&probe, d_model, seq) < row_cost(req, d_model, seq) - COST_EPS {
+        *req = probe;
+        true
+    } else {
+        false
+    }
 }
 
 /// Raise an ε-budget MCA request to its resolved α ceiling (the cheapest
@@ -1766,6 +1999,7 @@ fn shed_response(p: &Pending) -> Response {
         decode_tokens: 0,
         token_ms: Vec::new(),
         score_frac: p.req.score_frac,
+        rf_dim: p.req.rf_dim,
     }
 }
 
@@ -1826,7 +2060,7 @@ fn worker_loop(
     intra_threads: usize,
     jobs: mpsc::Receiver<WorkerMsg>,
     events: mpsc::Sender<Msg>,
-    ready: mpsc::Sender<Result<(Vec<usize>, ModelStats, usize)>>,
+    ready: mpsc::Sender<Result<(Vec<usize>, ModelStats, usize, usize)>>,
     knobs: Arc<AtomicU64>,
     abort: Arc<AtomicBool>,
 ) {
@@ -1858,7 +2092,7 @@ fn worker_loop(
 
     let mut st = match init {
         Ok((st, stats)) => {
-            let _ = ready.send(Ok((st.buckets.clone(), stats, st.max_len)));
+            let _ = ready.send(Ok((st.buckets.clone(), stats, st.max_len, st.dims.d_model)));
             st
         }
         Err(e) => {
@@ -2161,6 +2395,7 @@ fn decode_round(
                 decode_tokens: ld.produced,
                 token_ms: ld.token_lat.iter().map(|d| d.as_secs_f64() * 1e3).collect(),
                 score_frac: 1.0, // decode is always exact-score
+                rf_dim: 0,       // ...and never linear (encoder-only)
             };
             let _ = ld.rtx.send(resp);
         }
@@ -2204,6 +2439,9 @@ fn execute_job(st: &mut WorkerState, job: Job) -> (BatchReport, Deliveries) {
     // The batcher never mixes precisions, so the head request's
     // precision is the batch's: it selects the backend's GEMM path.
     spec.compute_dtype = first.precision.as_str().to_string();
+    // Likewise the feature count: the batcher keys on rf_dim, so the
+    // head's knob is the batch's (0 for non-linear modes).
+    spec.rf_dim = first.rf_dim;
     // A backend may lack this (mode, batch) combination — e.g. exact
     // artifacts are only compiled at some batch sizes. `warmup` is the
     // resolution probe (it compiles the exact shape on PJRT, a no-op on
@@ -2263,6 +2501,17 @@ fn execute_job(st: &mut WorkerState, job: Job) -> (BatchReport, Deliveries) {
         let pred = argmax_logit(row);
         let reduction = if mode == "exact" || fwd.n_eff[slot] == 0.0 {
             1.0
+        } else if mode == "linear" {
+            // Linear rows report r_sum 0 (no per-token sample budgets);
+            // Eq.-9 accounting charges the feature maps + prefix
+            // accumulators instead.
+            flops::reduction_factor_linear(
+                &[(fwd.n_eff[slot] as usize, 0)],
+                st.n_layers,
+                st.dims,
+                precision_cost_factor(pending.req.precision),
+                effective_rf(first.rf_dim),
+            )
         } else if score_frac < 1.0 {
             // Sampled-score rows use the end-to-end accounting (score +
             // value terms on both sides of the ratio, Eq. 9 extended) —
@@ -2309,6 +2558,7 @@ fn execute_job(st: &mut WorkerState, job: Job) -> (BatchReport, Deliveries) {
             decode_tokens: 0,
             token_ms: Vec::new(),
             score_frac,
+            rf_dim: if mode == "linear" { first.rf_dim } else { 0 },
         };
         deliveries.push((rtx, resp));
     }
@@ -2361,6 +2611,7 @@ mod tests {
                 text: String::new(),
                 alpha,
                 mode: mode.into(),
+                rf_dim: 0,
                 precision,
                 quantized: false,
                 budget: None,
@@ -2370,6 +2621,14 @@ mod tests {
             arrived: now - Duration::from_millis(age_ms),
         }
     }
+
+    /// Dims every policy test prices costs at: DistilBERT-sim width on the
+    /// serving default sequence (`relative_cost(8, 128, 64)` = 0.625).
+    const D_MODEL: usize = 128;
+    const SEQ: usize = 64;
+
+    /// Non-degenerate Theorem-2 stats for routing tests: β·‖W‖_F = 6.
+    const STATS: ModelStats = ModelStats { beta: 2.0, w_frob: 3.0 };
 
     #[test]
     fn full_bucket_batches_immediately() {
@@ -2683,13 +2942,14 @@ mod tests {
                 text: String::new(),
                 alpha,
                 mode: mode.into(),
+                rf_dim: 0,
                 precision: Precision::F32,
                 quantized: false,
                 budget: None,
                 decode: None,
                 score_frac: 1.0,
             };
-            assert!((row_cost(&req) - 1.0).abs() < 1e-12, "alpha {alpha}");
+            assert!((row_cost(&req, D_MODEL, SEQ) - 1.0).abs() < 1e-12, "alpha {alpha}");
         }
         // ...and give headroom above it.
         let cheap = Request {
@@ -2697,13 +2957,43 @@ mod tests {
             text: String::new(),
             alpha: 1.0,
             mode: "mca".into(),
+            rf_dim: 0,
             precision: Precision::F32,
             quantized: false,
             budget: None,
             decode: None,
             score_frac: 1.0,
         };
-        assert!((row_cost(&cheap) - 0.25).abs() < 1e-12);
+        assert!((row_cost(&cheap, D_MODEL, SEQ) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_cost_linear_follows_the_feature_count() {
+        let mk = |rf_dim: u32| Request {
+            id: 0,
+            text: String::new(),
+            alpha: 1.0,
+            mode: "linear".into(),
+            rf_dim,
+            precision: Precision::F32,
+            quantized: false,
+            budget: None,
+            decode: None,
+            score_frac: 1.0,
+        };
+        // rf 8 at (d=128, n=64): (128 + 32) / (128 + 128) = 0.625
+        assert!((row_cost(&mk(8), D_MODEL, SEQ) - 0.625).abs() < 1e-12);
+        // rf 32 lands exactly on the exact-kernel cost at n = 64
+        assert!((row_cost(&mk(32), D_MODEL, SEQ) - 1.0).abs() < 1e-12);
+        // rf_dim 0 prices at the backend default (DEFAULT_RF_DIM = 32)
+        assert!(
+            (row_cost(&mk(0), D_MODEL, SEQ) - row_cost(&mk(32), D_MODEL, SEQ)).abs() < 1e-12
+        );
+        // a dense map on a short sequence costs MORE than exact — the cost
+        // model must not hide that from the router
+        assert!(row_cost(&mk(128), D_MODEL, SEQ) > 1.0);
+        // longer sequences amortize the map: same rf, lower relative cost
+        assert!(row_cost(&mk(32), D_MODEL, 512) < row_cost(&mk(32), D_MODEL, SEQ));
     }
 
     #[test]
@@ -2713,15 +3003,16 @@ mod tests {
             text: String::new(),
             alpha: 0.4,
             mode: "mca".into(),
+            rf_dim: 0,
             precision,
             quantized: false,
             budget: None,
             decode: None,
             score_frac: 1.0,
         };
-        assert!((row_cost(&mk(Precision::F32)) - 1.0).abs() < 1e-12);
-        assert!((row_cost(&mk(Precision::Bf16)) - 0.75).abs() < 1e-12);
-        assert!((row_cost(&mk(Precision::Int8)) - 0.5).abs() < 1e-12);
+        assert!((row_cost(&mk(Precision::F32), D_MODEL, SEQ) - 1.0).abs() < 1e-12);
+        assert!((row_cost(&mk(Precision::Bf16), D_MODEL, SEQ) - 0.75).abs() < 1e-12);
+        assert!((row_cost(&mk(Precision::Int8), D_MODEL, SEQ) - 0.5).abs() < 1e-12);
     }
 
     #[test]
@@ -2731,6 +3022,7 @@ mod tests {
             text: String::new(),
             alpha: 0.4,
             mode: mode.into(),
+            rf_dim: if mode == "linear" { 32 } else { 0 },
             precision,
             quantized: false,
             budget: None,
@@ -2742,14 +3034,17 @@ mod tests {
         assert!(!quantize_to_int8(&mut ex));
         assert_eq!(ex.precision, Precision::F32);
         assert!(!ex.quantized);
-        // mca f32 (and bf16) reroute to the int8 rung, halving row cost
-        for start in [Precision::F32, Precision::Bf16] {
-            let mut q = mk("mca", start);
-            let before = row_cost(&q);
-            assert!(quantize_to_int8(&mut q));
-            assert_eq!(q.precision, Precision::Int8);
-            assert!(q.quantized);
-            assert!(row_cost(&q) < before);
+        // mca and linear f32 (and bf16) reroute to the int8 rung,
+        // halving row cost
+        for mode in ["mca", "linear"] {
+            for start in [Precision::F32, Precision::Bf16] {
+                let mut q = mk(mode, start);
+                let before = row_cost(&q, D_MODEL, SEQ);
+                assert!(quantize_to_int8(&mut q), "{mode}/{start:?}");
+                assert_eq!(q.precision, Precision::Int8);
+                assert!(q.quantized);
+                assert!(row_cost(&q, D_MODEL, SEQ) < before);
+            }
         }
         // already int8: a second pass is a no-op
         let mut q = mk("mca", Precision::Int8);
@@ -2763,6 +3058,7 @@ mod tests {
             text: String::new(),
             alpha,
             mode: mode.into(),
+            rf_dim: 0,
             precision: Precision::F32,
             quantized: false,
             budget,
@@ -2806,7 +3102,7 @@ mod tests {
         }
         let plans = plan_batches(&q, &[1, 8], max_wait, now);
         assert_eq!(plans.len(), 2);
-        let order = rank_plans(&q, &plans, max_wait, now);
+        let order = rank_plans(&q, &plans, max_wait, now, D_MODEL, SEQ);
         // the cheap high-α MCA batch dispatches before the exact batch
         let first = &plans[order[0]];
         assert_eq!(q[first.indices[0]].req.mode, "mca");
@@ -2826,7 +3122,7 @@ mod tests {
         }
         let plans = plan_batches(&q, &[1, 8], max_wait, now);
         assert_eq!(plans.len(), 2);
-        let order = rank_plans(&q, &plans, max_wait, now);
+        let order = rank_plans(&q, &plans, max_wait, now, D_MODEL, SEQ);
         let first = &plans[order[0]];
         assert_eq!(q[first.indices[0]].req.mode, "exact");
     }
@@ -2838,31 +3134,176 @@ mod tests {
             text: String::new(),
             alpha,
             mode: mode.into(),
+            rf_dim: 0,
             precision,
             quantized: false,
             budget,
             decode: None,
             score_frac: 1.0,
         };
-        // exact: neither rung applies — the ladder cannot help
-        assert!(!ladder_can_reduce(&mk(1.0, "exact", Precision::F32, None)));
+        // exact: no rung applies — the ladder cannot help
+        assert!(!ladder_can_reduce(&mk(1.0, "exact", Precision::F32, None), &STATS, D_MODEL, SEQ));
         // raw-α mca f32: the quantized rung halves the row cost
-        assert!(ladder_can_reduce(&mk(0.4, "mca", Precision::F32, None)));
-        // mca already on int8 with no budget: fully degraded, nothing left
-        assert!(!ladder_can_reduce(&mk(0.4, "mca", Precision::Int8, None)));
+        assert!(ladder_can_reduce(&mk(0.4, "mca", Precision::F32, None), &STATS, D_MODEL, SEQ));
+        // mca int8 α=0.4, no budget: quantize is exhausted but the linear
+        // rung still helps — equivalent ε = 0.4·6 = 2.4 resolves rf 8,
+        // 0.625·0.5 = 0.3125 < the 0.5 int8 mca row
+        assert!(ladder_can_reduce(&mk(0.4, "mca", Precision::Int8, None), &STATS, D_MODEL, SEQ));
+        // ...but with degenerate stats the linear rung cannot resolve an
+        // rf, and the fully-quantized request really is stuck
+        let dead = ModelStats { beta: 0.0, w_frob: 0.0 };
+        assert!(!ladder_can_reduce(&mk(0.4, "mca", Precision::Int8, None), &dead, D_MODEL, SEQ));
         // int8 budget request below its ceiling: degrade still helps
         let b = Budget { epsilon: 5.0, delta: None, alpha_max: 1.0, degraded: false };
-        assert!(ladder_can_reduce(&mk(0.4, "mca", Precision::Int8, Some(b.clone()))));
-        // ...but not once it already sits at the ceiling
+        assert!(ladder_can_reduce(
+            &mk(0.4, "mca", Precision::Int8, Some(b.clone())),
+            &STATS,
+            D_MODEL,
+            SEQ
+        ));
+        // at the ceiling on int8, the linear candidate (rf 8 → 0.3125) is
+        // costlier than the α=1 int8 row (0.125): nothing left
         let mut at_ceiling = mk(1.0, "mca", Precision::Int8, Some(b));
         at_ceiling.budget.as_mut().unwrap().degraded = true;
-        assert!(!ladder_can_reduce(&at_ceiling));
+        assert!(!ladder_can_reduce(&at_ceiling, &STATS, D_MODEL, SEQ));
         // probing must not mutate the candidate
         let probe = mk(0.4, "mca", Precision::F32, None);
         let before = probe.clone();
-        let _ = ladder_can_reduce(&probe);
+        let _ = ladder_can_reduce(&probe, &STATS, D_MODEL, SEQ);
         assert_eq!(probe.precision, before.precision);
         assert_eq!(probe.alpha, before.alpha);
+        assert_eq!(probe.mode, before.mode);
+    }
+
+    #[test]
+    fn route_budget_picks_the_cheapest_feasible_mode() {
+        // β·w = 6 throughout; costs at (d=128, n=64).
+        // Loose ε: α ceiling 1.0 (cost 0.25) beats linear rf 8 (0.625).
+        assert_eq!(
+            route_budget(6.0, 6.0, None, &STATS, D_MODEL, SEQ),
+            Route::Mca { alpha: 1.0 }
+        );
+        // Mid ε: α ceiling 0.4 prices at 1.0 (the min(1) clamp), linear
+        // rf 8 at 0.625 — the router must cross over.
+        let eps = 0.4 * 6.0;
+        assert_eq!(route_budget(eps, eps, None, &STATS, D_MODEL, SEQ), Route::Linear { rf_dim: 8 });
+        // Tight ε below the α grid floor and past the rf grid ceiling:
+        // only exact is feasible.
+        assert_eq!(route_budget(1e-6, 1e-6, None, &STATS, D_MODEL, SEQ), Route::Exact);
+        // Tail budgets mask the linear candidate (mean bound only).
+        match route_budget(6.0, 6.0, Some(0.1), &STATS, D_MODEL, SEQ) {
+            Route::Linear { .. } => panic!("tail budget routed linear"),
+            _ => {}
+        }
+        // Degenerate stats: exact, like the pre-routing resolver.
+        let dead = ModelStats { beta: 0.0, w_frob: 0.0 };
+        assert_eq!(route_budget(0.5, 0.5, None, &dead, D_MODEL, SEQ), Route::Exact);
+    }
+
+    #[test]
+    fn route_budget_never_beats_the_cheapest_feasible_cost() {
+        // Satellite invariant, pinned as a property: whatever the router
+        // picks must cost no more than the cheapest feasible candidate.
+        prop::check(500, |g| {
+            let eps = 10f64.powf(g.f64(-4.0..1.5));
+            let delta = if g.bool() { Some(0.1) } else { None };
+            let seq = *g.choose(&[16usize, 64, 256, 1024]);
+            let route = route_budget(eps, eps, delta, &STATS, D_MODEL, seq);
+            let mca_cost = match delta {
+                Some(dl) => quantize_alpha(alpha_for_tail_budget(eps, dl, STATS.beta, STATS.w_frob)),
+                None => quantize_alpha(alpha_for_error_budget(eps, STATS.beta, STATS.w_frob)),
+            }
+            .map(|a| batch_cost("mca", a, 1))
+            .unwrap_or(f64::INFINITY);
+            let lin_cost = if delta.is_none() {
+                quantize_rf(rf_for_error_budget(eps, STATS.beta, STATS.w_frob))
+                    .map(|rf| relative_cost(rf, D_MODEL, seq))
+                    .unwrap_or(f64::INFINITY)
+            } else {
+                f64::INFINITY
+            };
+            let cheapest = mca_cost.min(lin_cost).min(1.0);
+            let picked = match route {
+                Route::Exact => 1.0,
+                Route::Mca { alpha } => batch_cost("mca", alpha, 1),
+                Route::Linear { rf_dim } => relative_cost(rf_dim, D_MODEL, seq),
+            };
+            if picked > cheapest + 1e-12 {
+                return Err(format!(
+                    "eps {eps:.4} delta {delta:?} seq {seq}: picked {route:?} at {picked:.4}, cheapest feasible {cheapest:.4}"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn reroute_to_linear_only_fires_when_it_is_cheaper() {
+        let mk = |alpha: f32, budget: Option<Budget>| Request {
+            id: 7,
+            text: String::new(),
+            alpha,
+            mode: "mca".into(),
+            rf_dim: 0,
+            precision: Precision::F32,
+            quantized: false,
+            budget,
+            decode: None,
+            score_frac: 1.0,
+        };
+        // α 0.4 raw request: equivalent ε = 2.4 → rf 8 at 0.625 < 1.0 —
+        // rerouted, with the knobs normalized for the linear path
+        let mut r = mk(0.4, None);
+        assert!(reroute_to_linear(&mut r, &STATS, D_MODEL, SEQ));
+        assert_eq!(r.mode, "linear");
+        assert_eq!(r.rf_dim, 8);
+        assert_eq!(r.alpha, 1.0);
+        assert_eq!(r.score_frac, 1.0);
+        // a second pass is a no-op (already linear)
+        assert!(!reroute_to_linear(&mut r, &STATS, D_MODEL, SEQ));
+        // α 1.0 raw request already costs 0.25 — linear cannot help
+        let mut cheap = mk(1.0, None);
+        assert!(!reroute_to_linear(&mut cheap, &STATS, D_MODEL, SEQ));
+        assert_eq!(cheap.mode, "mca");
+        // tail budgets never reroute: the linear bound is mean-only
+        let mut tail = mk(
+            0.4,
+            Some(Budget { epsilon: 2.4, delta: Some(0.05), alpha_max: 0.4, degraded: false }),
+        );
+        assert!(!reroute_to_linear(&mut tail, &STATS, D_MODEL, SEQ));
+        // decode sessions are encoder-only for linear
+        let mut dec = mk(0.4, None);
+        dec.decode = Some(DecodeParams { max_new: 4 });
+        assert!(!reroute_to_linear(&mut dec, &STATS, D_MODEL, SEQ));
+        // degenerate stats: no equivalent ε to resolve
+        let mut nostats = mk(0.4, None);
+        assert!(!reroute_to_linear(&mut nostats, &ModelStats { beta: 0.0, w_frob: 0.0 }, D_MODEL, SEQ));
+    }
+
+    #[test]
+    fn mixed_rf_dims_do_not_share_batches() {
+        // A batch executes at one ForwardSpec, so linear requests with
+        // different feature counts must never ride together.
+        let now = Instant::now();
+        let mut q = Vec::new();
+        for i in 0..4u64 {
+            let mut p = pending(i, 1.0, "linear", 500, now);
+            p.req.rf_dim = 16;
+            q.push(p);
+        }
+        for i in 4..8u64 {
+            let mut p = pending(i, 1.0, "linear", 500, now);
+            p.req.rf_dim = 64;
+            q.push(p);
+        }
+        let plans = plan_batches(&q, &[1, 8], Duration::from_millis(100), now);
+        assert_eq!(plans.len(), 2);
+        for plan in &plans {
+            let rfs: std::collections::HashSet<u32> =
+                plan.indices.iter().map(|&i| q[i].req.rf_dim).collect();
+            assert_eq!(rfs.len(), 1, "plan mixes rf_dims");
+            assert_eq!(plan.indices.len(), 4);
+        }
     }
 
     #[test]
@@ -2872,6 +3313,7 @@ mod tests {
             text: String::new(),
             alpha,
             mode: mode.into(),
+            rf_dim: 0,
             precision: Precision::F32,
             quantized: false,
             budget,

@@ -35,8 +35,9 @@ use crate::tensor::Precision;
 /// Protocol version, bumped on any frame-layout change. `Hello` carries
 /// it; a front-end refuses a replica speaking a different version instead
 /// of mis-parsing its frames. v2 added the sampled-score fraction to
-/// `Submit` and `Response`.
-pub const WIRE_VERSION: u32 = 2;
+/// `Submit` and `Response`; v3 added the randomized-linear-attention
+/// feature count `rf_dim` to both (appended at the end of each body).
+pub const WIRE_VERSION: u32 = 3;
 
 /// Hard ceiling on one frame's payload size. Far above any real frame
 /// (responses carry a handful of logits and a token-latency trace), it
@@ -57,7 +58,7 @@ pub struct WireRequest {
     pub alpha: f32,
     /// requested sampled-score fraction (1.0 = exact score rows)
     pub score_frac: f32,
-    /// "mca" or "exact"
+    /// "mca", "exact" or "linear"
     pub mode: String,
     /// requested compute precision
     pub precision: Precision,
@@ -65,6 +66,9 @@ pub struct WireRequest {
     pub budget: Option<(f64, Option<f64>)>,
     /// `Some(max_new)` for autoregressive decode requests
     pub decode: Option<usize>,
+    /// requested random-feature count for "linear" mode (0 = replica
+    /// default; ignored for other modes)
+    pub rf_dim: u32,
 }
 
 /// A response as it travels the wire: everything [`Response`] reports,
@@ -107,6 +111,8 @@ pub struct WireResponse {
     pub decode_tokens: u64,
     /// per-token decode latencies in ms
     pub token_ms: Vec<f64>,
+    /// random-feature count served (0 unless the batch executed "linear")
+    pub rf_dim: u32,
 }
 
 /// One replica's point-in-time load + health report (the `Pong` body).
@@ -334,6 +340,7 @@ impl Frame {
                         e.u64(max_new as u64);
                     }
                 }
+                e.u32(r.rf_dim);
                 e.buf
             }
             Frame::Response(r) => {
@@ -356,6 +363,7 @@ impl Frame {
                 e.u8(r.shed as u8);
                 e.u64(r.decode_tokens);
                 e.vec_f64(&r.token_ms);
+                e.u32(r.rf_dim);
                 e.buf
             }
             Frame::Ping { nonce } => {
@@ -406,6 +414,7 @@ impl Frame {
                     None
                 };
                 let decode = if d.u8()? != 0 { Some(d.u64()? as usize) } else { None };
+                let rf_dim = d.u32()?;
                 Frame::Submit(WireRequest {
                     id,
                     text,
@@ -415,6 +424,7 @@ impl Frame {
                     precision,
                     budget,
                     decode,
+                    rf_dim,
                 })
             }
             TAG_RESPONSE => Frame::Response(WireResponse {
@@ -436,6 +446,7 @@ impl Frame {
                 shed: d.u8()? != 0,
                 decode_tokens: d.u64()?,
                 token_ms: d.vec_f64()?,
+                rf_dim: d.u32()?,
             }),
             TAG_PING => Frame::Ping { nonce: d.u64()? },
             TAG_PONG => Frame::Pong {
@@ -522,6 +533,7 @@ impl WireRequest {
             precision: req.precision,
             budget: req.budget.as_ref().map(|b| (b.epsilon, b.delta)),
             decode: req.decode.as_ref().map(|d| d.max_new),
+            rf_dim: req.rf_dim,
         }
     }
 
@@ -539,6 +551,7 @@ impl WireRequest {
                 .budget
                 .map(|(epsilon, delta)| Budget { epsilon, delta, alpha_max: 1.0, degraded: false }),
             decode: self.decode.map(|max_new| DecodeParams { max_new }),
+            rf_dim: self.rf_dim,
         }
     }
 }
@@ -565,6 +578,7 @@ impl WireResponse {
             shed: r.shed,
             decode_tokens: r.decode_tokens as u64,
             token_ms: r.token_ms.clone(),
+            rf_dim: r.rf_dim,
         }
     }
 
@@ -589,6 +603,7 @@ impl WireResponse {
             shed: self.shed,
             decode_tokens: self.decode_tokens as usize,
             token_ms: self.token_ms,
+            rf_dim: self.rf_dim,
         }
     }
 }
@@ -608,6 +623,7 @@ mod tests {
             precision: Precision::Bf16,
             budget: Some((0.25, Some(0.05))),
             decode: Some(16),
+            rf_dim: 0,
         }
     }
 
@@ -631,6 +647,7 @@ mod tests {
             shed: false,
             decode_tokens: 9,
             token_ms: vec![0.5, 1.25, f64::MAX],
+            rf_dim: 32,
         }
     }
 
@@ -662,6 +679,18 @@ mod tests {
                 precision: Precision::F32,
                 budget: None,
                 decode: None,
+                rf_dim: 0,
+            }),
+            Frame::Submit(WireRequest {
+                id: 7,
+                text: "linear path".to_string(),
+                alpha: 1.0,
+                score_frac: 1.0,
+                mode: "linear".to_string(),
+                precision: Precision::F32,
+                budget: None,
+                decode: None,
+                rf_dim: 64,
             }),
             Frame::Ping { nonce: u64::MAX },
             Frame::Pong {
@@ -694,6 +723,7 @@ mod tests {
         assert_eq!(back.precision, r.precision);
         assert_eq!(back.token_ms.len(), r.token_ms.len());
         assert_eq!(back.decode_tokens, r.decode_tokens);
+        assert_eq!(back.rf_dim, r.rf_dim);
     }
 
     #[test]
@@ -759,8 +789,10 @@ mod tests {
         let resp = sample_response().into_response();
         assert_eq!(resp.latency, Duration::from_micros(12_345));
         assert_eq!(resp.n_eff, 37);
+        assert_eq!(resp.rf_dim, 32);
         let back = WireResponse::from_response(&resp);
         assert_eq!(back.latency_us, 12_345);
+        assert_eq!(back.rf_dim, 32);
         assert_f32_bits(&back.logits, &sample_response().logits);
     }
 

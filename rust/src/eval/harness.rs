@@ -70,10 +70,19 @@ pub struct HarnessOptions {
     pub models: Vec<String>,
     /// task names (must be classification tasks with a serving head)
     pub tasks: Vec<String>,
+    /// attention modes to sweep ("exact" | "mca" | "linear"): "exact"
+    /// contributes the baseline point, "mca" the α/ε knobs, "linear" the
+    /// `rf_dims` knobs — `mca eval --attn-mode exact,mca,linear` puts all
+    /// three on one Pareto frontier. The exact baseline pass always runs
+    /// (agreement needs it) even when "exact" is not listed; listing it
+    /// only controls whether the point appears in the report.
+    pub attn_modes: Vec<String>,
     /// raw-α sweep points
     pub alphas: Vec<f64>,
     /// Theorem-2 ε budgets to sweep (empty skips the budget pass)
     pub epsilons: Vec<f64>,
+    /// random-feature counts to sweep when "linear" is in `attn_modes`
+    pub rf_dims: Vec<usize>,
     /// compute precisions to sweep ("f32" | "bf16" | "int8"): every α/ε
     /// knob runs once per precision, so the Pareto frontier gets points
     /// from the kernel's quantized GEMM paths too. The exact baseline
@@ -112,8 +121,10 @@ impl Default for HarnessOptions {
         HarnessOptions {
             models: vec!["bert_sim".to_string(), "distil_sim".to_string()],
             tasks: data::harness_tasks().iter().map(|t| t.name.to_string()).collect(),
+            attn_modes: vec!["exact".to_string(), "mca".to_string()],
             alphas: vec![0.2, 0.4, 0.6, 1.0],
             epsilons: vec![8.0, 32.0],
+            rf_dims: vec![8, 32, 128],
             precisions: vec!["f32".to_string()],
             score_fracs: vec![1.0],
             workers: 2,
@@ -149,6 +160,7 @@ impl HarnessOptions {
             ],
             alphas: vec![0.3, 1.0],
             epsilons: vec![16.0],
+            rf_dims: vec![8, 32],
             score_fracs: vec![1.0, 0.5],
             canary_rate: 0.2,
             brownout_watermark: 48,
@@ -170,8 +182,26 @@ pub enum Knob {
     Exact,
     /// a raw-α MCA pass
     Alpha(f64),
-    /// a Theorem-2 ε-budget pass (the server resolves ε → α)
+    /// a Theorem-2 ε-budget pass (the server routes ε to the cheapest
+    /// feasible mode per request — mca, linear, or exact)
     Epsilon(f64),
+    /// a randomized linear-attention pass at a fixed feature count
+    Rf(usize),
+}
+
+impl Knob {
+    /// The attention-mode axis this knob sweeps ("exact" | "mca" |
+    /// "linear"). ε knobs are labeled "mca" (the paper's headline path)
+    /// even though the dispatcher may route individual requests to
+    /// linear or exact by cost; the per-response modes feed the FLOPs
+    /// accounting either way.
+    pub fn attn_mode(&self) -> &'static str {
+        match self {
+            Knob::Exact => "exact",
+            Knob::Alpha(_) | Knob::Epsilon(_) => "mca",
+            Knob::Rf(_) => "linear",
+        }
+    }
 }
 
 impl std::fmt::Display for Knob {
@@ -180,6 +210,7 @@ impl std::fmt::Display for Knob {
             Knob::Exact => write!(f, "exact"),
             Knob::Alpha(a) => write!(f, "α={a}"),
             Knob::Epsilon(e) => write!(f, "ε={e}"),
+            Knob::Rf(r) => write!(f, "rf={r}"),
         }
     }
 }
@@ -195,6 +226,10 @@ pub struct SweepPoint {
     pub metric: String,
     /// the precision knob of this pass
     pub knob: Knob,
+    /// attention-mode axis of the knob ("exact" | "mca" | "linear")
+    pub attn_mode: String,
+    /// feature count of a linear pass (0 for exact/mca knobs)
+    pub rf_dim: usize,
     /// compute precision this pass ran at ("f32" | "bf16" | "int8")
     pub precision: String,
     /// requested sampled-score fraction of this pass (1.0 = exact scores)
@@ -232,6 +267,8 @@ pub struct SweepPoint {
 pub struct FrontierPoint {
     /// the knob this frontier point came from
     pub knob: Knob,
+    /// attention-mode axis of the knob ("exact" | "mca" | "linear")
+    pub attn_mode: String,
     /// compute precision of the pass behind this point
     pub precision: String,
     /// requested sampled-score fraction of the pass behind this point
@@ -344,6 +381,7 @@ pub fn model_frontier(points: &[SweepPoint], model: &str) -> Vec<FrontierPoint> 
             let n = of_knob.len() as f64;
             FrontierPoint {
                 knob: *knob,
+                attn_mode: knob.attn_mode().to_string(),
                 precision: prec.clone(),
                 score_frac: f64::from_bits(*frac_bits),
                 flops_reduction: of_knob.iter().map(|p| p.flops_reduction).sum::<f64>() / n,
@@ -370,6 +408,22 @@ pub fn pair_fits(model_max_len: usize, task_max_len: usize) -> bool {
     task_max_len <= model_max_len && !(model_max_len > 256 && task_max_len <= 256)
 }
 
+/// The sweep's attention-mode axis, normalized: an empty list means the
+/// pre-linear default ("exact" + "mca"); unknown names are an error.
+fn sweep_modes(opts: &HarnessOptions) -> Result<Vec<String>> {
+    let modes = if opts.attn_modes.is_empty() {
+        vec!["exact".to_string(), "mca".to_string()]
+    } else {
+        opts.attn_modes.clone()
+    };
+    for m in &modes {
+        if !matches!(m.as_str(), "exact" | "mca" | "linear") {
+            bail!("unknown attention mode {m:?} (exact|mca|linear)");
+        }
+    }
+    Ok(modes)
+}
+
 /// Run the full sweep: every fitting (model, task) pair through the
 /// serving pool, one lockstep-replay pass per knob, Pareto frontiers per
 /// model. Non-fitting pairs ([`pair_fits`]) are logged and skipped; a
@@ -378,6 +432,8 @@ pub fn run_sweep(backend: &BackendSpec, opts: &HarnessOptions) -> Result<Harness
     if opts.models.is_empty() || opts.tasks.is_empty() {
         bail!("eval sweep needs at least one model and one task");
     }
+    // Fail on a bad --attn-mode before any training happens.
+    sweep_modes(opts)?;
     let mut points = Vec::new();
     let mut pools = Vec::new();
     for model in &opts.models {
@@ -492,17 +548,41 @@ fn sweep_pair(
         }
     }
 
+    let modes = sweep_modes(opts)?;
+    let want = |m: &str| modes.iter().any(|x| x == m);
+    for &rf in &opts.rf_dims {
+        if !(2..=4096).contains(&rf) {
+            bail!("sweep rf_dim {rf} must lie in [2, 4096]");
+        }
+    }
+    if want("linear") && opts.rf_dims.is_empty() {
+        bail!("the linear attention sweep needs at least one rf_dim");
+    }
+
     // The exact f32 pass is the agreement baseline for every precision.
     let exact = run_point(&server, &texts, Knob::Exact, Precision::F32, 1.0)?;
     let exact_preds: Vec<i32> =
         exact.iter().map(|r| if r.shed { -1 } else { r.pred_class }).collect();
 
-    let mut settings = vec![(Knob::Exact, Precision::F32, 1.0f64)];
+    let mut settings: Vec<(Knob, Precision, f64)> = Vec::new();
+    if want("exact") {
+        settings.push((Knob::Exact, Precision::F32, 1.0f64));
+    }
     for &prec in &precisions {
-        for &frac in &score_fracs {
-            settings.extend(opts.alphas.iter().map(|&a| (Knob::Alpha(a), prec, frac)));
-            settings.extend(opts.epsilons.iter().map(|&e| (Knob::Epsilon(e), prec, frac)));
+        if want("mca") {
+            for &frac in &score_fracs {
+                settings.extend(opts.alphas.iter().map(|&a| (Knob::Alpha(a), prec, frac)));
+                settings.extend(opts.epsilons.iter().map(|&e| (Knob::Epsilon(e), prec, frac)));
+            }
         }
+        if want("linear") {
+            // The φ-map replaces the score matrix wholesale, so the
+            // score-fraction axis does not apply: linear knobs run at 1.0.
+            settings.extend(opts.rf_dims.iter().map(|&r| (Knob::Rf(r), prec, 1.0f64)));
+        }
+    }
+    if settings.is_empty() {
+        bail!("the sweep has no knobs to run: check --attn-mode against the alpha/epsilon/rf axes");
     }
 
     let mut points = Vec::with_capacity(settings.len());
@@ -567,6 +647,7 @@ fn run_point(
             Knob::Exact => sub.submit_with_precision(t, 1.0, "exact", precision),
             Knob::Alpha(a) => sub.submit_sampled(t, a as f32, "mca", precision, frac),
             Knob::Epsilon(e) => sub.submit_budget_sampled(t, e, None, precision, frac),
+            Knob::Rf(r) => sub.submit_linear(t, r as u32, precision),
         });
     }
     server.resume();
@@ -594,6 +675,11 @@ fn summarize(
     let dims = AttnDims { d_model: info.d_model, window: info.window };
     let mut pred_cls = Vec::with_capacity(outcomes.len());
     let mut per_seq: Vec<(usize, u64)> = Vec::new();
+    // Linear-served rows bucketed by the feature count that actually ran:
+    // rf knobs fill one bucket; ε knobs can fill several when the
+    // dispatcher routes individual requests to the linear path.
+    let mut linear_seq: std::collections::BTreeMap<u32, Vec<(usize, u64)>> =
+        std::collections::BTreeMap::new();
     let mut r_sum_total = 0.0f64;
     let (mut completed, mut shed, mut degraded) = (0usize, 0usize, 0usize);
     let mut alpha_sum = 0.0f64;
@@ -612,41 +698,71 @@ fn summarize(
             degraded += 1;
         }
         if knob != Knob::Exact && r.n_eff > 0 {
-            // The fraction actually served: infeasible ε splits fall back
-            // to exact scores per request, and the accounting must charge
-            // what ran, not what was asked for.
-            frac_sum += r.score_frac as f64;
-            frac_n += 1;
-            // A budget resolved to the exact path charges the full encode
-            // budget (n·d per layer), keeping Eq. 9 honest: its factor
-            // contribution is exactly 1.
-            let r_rows = if r.mode == "exact" {
-                (r.n_eff * info.d_model * info.n_layers) as u64
+            if r.mode == "linear" {
+                // Linear rows sample no value rows (r_sum = 0); their cost
+                // is set by the feature count, accounted per bucket below.
+                // The score-fraction axis does not apply to them (the
+                // φ-map replaces the score matrix), so they stay out of
+                // the served-fraction mean too.
+                linear_seq.entry(r.rf_dim).or_default().push((r.n_eff, 0));
             } else {
-                r.r_sum.round() as u64
-            };
-            per_seq.push((r.n_eff, r_rows));
-            r_sum_total += r.r_sum;
+                // The fraction actually served: infeasible ε splits fall
+                // back to exact scores per request, and the accounting
+                // must charge what ran, not what was asked for.
+                frac_sum += r.score_frac as f64;
+                frac_n += 1;
+                // A budget resolved to the exact path charges the full
+                // encode budget (n·d per layer), keeping Eq. 9 honest: its
+                // factor contribution is exactly 1.
+                let r_rows = if r.mode == "exact" {
+                    (r.n_eff * info.d_model * info.n_layers) as u64
+                } else {
+                    r.r_sum.round() as u64
+                };
+                per_seq.push((r.n_eff, r_rows));
+                r_sum_total += r.r_sum;
+            }
         }
     }
-    let flops_reduction = if knob == Knob::Exact || per_seq.is_empty() {
+    let flops_reduction = if knob == Knob::Exact || (per_seq.is_empty() && linear_seq.is_empty())
+    {
         1.0
     } else {
         // The exact baseline is always the f32 forward; the approximate
         // pass's rows cost `precision_cost_factor` each (int8 rows are
         // half-price), including budget rows that resolved to the exact
-        // path — those still ran on the reduced-precision GEMMs. All
-        // passes use the score-extended accounting (QKᵀ charged on both
-        // sides) at the mean fraction actually served, so value-only and
-        // sampled-score rows land on one comparable axis.
+        // path — those still ran on the reduced-precision GEMMs. Scored
+        // rows use the score-extended accounting (QKᵀ charged on both
+        // sides) at the mean fraction actually served; linear rows use the
+        // accumulate-then-normalize accounting per feature-count bucket.
+        // Both factors share the same exact-side baseline, so subsets
+        // combine exactly by FLOPs: exact_total / Σ (exact_s / factor_s).
         let served_frac = if frac_n > 0 { frac_sum / frac_n as f64 } else { 1.0 };
-        flops::reduction_factor_scored(
-            &per_seq,
-            info.n_layers,
-            dims,
-            crate::coordinator::precision_cost_factor(precision),
-            served_frac,
-        )
+        let prec = crate::coordinator::precision_cost_factor(precision);
+        let exact_side = |rows: &[(usize, u64)]| -> f64 {
+            rows.iter()
+                .map(|&(n, _)| {
+                    info.n_layers as f64
+                        * (flops::exact_layer_flops(n, dims) as f64
+                            + 2.0 * flops::attn_pairs(n, dims) as f64 * info.d_model as f64)
+                })
+                .sum()
+        };
+        let mut exact_total = 0.0f64;
+        let mut approx_total = 0.0f64;
+        if !per_seq.is_empty() {
+            let e = exact_side(&per_seq);
+            let f = flops::reduction_factor_scored(&per_seq, info.n_layers, dims, prec, served_frac);
+            exact_total += e;
+            approx_total += if f > 0.0 { e / f } else { e };
+        }
+        for (&rf, rows) in &linear_seq {
+            let e = exact_side(rows);
+            let f = flops::reduction_factor_linear(rows, info.n_layers, dims, prec, rf as usize);
+            exact_total += e;
+            approx_total += if f > 0.0 { e / f } else { e };
+        }
+        if approx_total > 0.0 { exact_total / approx_total } else { 0.0 }
     };
 
     // Agreement over examples where neither this pass nor the baseline
@@ -678,6 +794,8 @@ fn summarize(
         task: spec.name.to_string(),
         metric: metric.short().to_string(),
         knob,
+        attn_mode: knob.attn_mode().to_string(),
+        rf_dim: if let Knob::Rf(r) = knob { r } else { 0 },
         precision: precision.as_str().to_string(),
         score_frac,
         seq,
@@ -710,6 +828,10 @@ fn knob_to_json(knob: Knob, m: &mut std::collections::BTreeMap<String, Json>) {
             m.insert("knob".to_string(), Json::Str("epsilon".to_string()));
             m.insert("epsilon".to_string(), Json::Num(e));
         }
+        Knob::Rf(r) => {
+            m.insert("knob".to_string(), Json::Str("rf".to_string()));
+            m.insert("rf_dim".to_string(), Json::Num(r as f64));
+        }
     }
 }
 
@@ -718,8 +840,19 @@ fn knob_from_json(j: &Json) -> Result<Knob> {
         "exact" => Knob::Exact,
         "alpha" => Knob::Alpha(j.get("alpha")?.as_f64()?),
         "epsilon" => Knob::Epsilon(j.get("epsilon")?.as_f64()?),
+        "rf" => Knob::Rf(j.get("rf_dim")?.as_f64()? as usize),
         other => bail!("unknown knob kind {other:?}"),
     })
+}
+
+/// The entry's `"attn_mode"` field; derived from the knob when absent
+/// (documents written before the linear mode existed have only exact and
+/// mca knobs).
+fn attn_mode_from_json(j: &Json, knob: Knob) -> Result<String> {
+    match j.get("attn_mode") {
+        Ok(m) => Ok(m.as_str()?.to_string()),
+        Err(_) => Ok(knob.attn_mode().to_string()),
+    }
 }
 
 /// The entry's `"precision"` field; `"f32"` when absent (documents written
@@ -761,6 +894,8 @@ pub fn bench_eval_to_json(rep: &HarnessReport) -> Json {
             m.insert("task".to_string(), Json::Str(p.task.clone()));
             m.insert("metric".to_string(), Json::Str(p.metric.clone()));
             knob_to_json(p.knob, &mut m);
+            m.insert("attn_mode".to_string(), Json::Str(p.attn_mode.clone()));
+            m.insert("rf_dim".to_string(), Json::Num(p.rf_dim as f64));
             m.insert("precision".to_string(), Json::Str(p.precision.clone()));
             m.insert("score_frac".to_string(), Json::Num(p.score_frac));
             m.insert("seq".to_string(), Json::Num(p.seq as f64));
@@ -786,6 +921,7 @@ pub fn bench_eval_to_json(rep: &HarnessReport) -> Json {
                 .map(|p| {
                     let mut m: BTreeMap<String, Json> = BTreeMap::new();
                     knob_to_json(p.knob, &mut m);
+                    m.insert("attn_mode".to_string(), Json::Str(p.attn_mode.clone()));
                     m.insert("precision".to_string(), Json::Str(p.precision.clone()));
                     m.insert("score_frac".to_string(), Json::Num(p.score_frac));
                     m.insert("flops_reduction".to_string(), Json::Num(p.flops_reduction));
@@ -843,6 +979,11 @@ pub fn bench_eval_from_json(j: &Json) -> Result<HarnessReport> {
             task: e.get("task")?.as_str()?.to_string(),
             metric: e.get("metric")?.as_str()?.to_string(),
             knob: knob_from_json(e)?,
+            attn_mode: attn_mode_from_json(e, knob_from_json(e)?)?,
+            rf_dim: match e.get("rf_dim") {
+                Ok(v) => v.as_usize()?,
+                Err(_) => 0,
+            },
             precision: precision_from_json(e)?,
             score_frac: score_frac_from_json(e)?,
             seq: seq_from_json(e)?,
@@ -863,6 +1004,7 @@ pub fn bench_eval_from_json(j: &Json) -> Result<HarnessReport> {
         for p in f.get("points")?.as_arr()? {
             pts.push(FrontierPoint {
                 knob: knob_from_json(p)?,
+                attn_mode: attn_mode_from_json(p, knob_from_json(p)?)?,
                 precision: precision_from_json(p)?,
                 score_frac: score_frac_from_json(p)?,
                 flops_reduction: p.get("flops_reduction")?.as_f64()?,
@@ -913,6 +1055,8 @@ mod tests {
             task: task.to_string(),
             metric: "Acc.".to_string(),
             knob,
+            attn_mode: knob.attn_mode().to_string(),
+            rf_dim: if let Knob::Rf(r) = knob { r } else { 0 },
             precision: "f32".to_string(),
             score_frac: 1.0,
             seq: 64,
@@ -1060,12 +1204,14 @@ mod tests {
                 pt("m", "t1", Knob::Exact, 0.91, 1.0),
                 pt("m", "t1", Knob::Alpha(0.3), 0.885, 3.25),
                 pt("m", "t1", Knob::Epsilon(16.0), 0.87, 4.5),
+                pt("m", "t1", Knob::Rf(32), 0.86, 5.5),
             ],
             frontiers: vec![ModelFrontier {
                 model: "m".to_string(),
                 points: vec![
                     FrontierPoint {
                         knob: Knob::Exact,
+                        attn_mode: "exact".to_string(),
                         precision: "f32".to_string(),
                         score_frac: 1.0,
                         flops_reduction: 1.0,
@@ -1073,10 +1219,19 @@ mod tests {
                     },
                     FrontierPoint {
                         knob: Knob::Epsilon(16.0),
+                        attn_mode: "mca".to_string(),
                         precision: "int8".to_string(),
                         score_frac: 0.5,
                         flops_reduction: 4.5,
                         accuracy: 0.87,
+                    },
+                    FrontierPoint {
+                        knob: Knob::Rf(8),
+                        attn_mode: "linear".to_string(),
+                        precision: "f32".to_string(),
+                        score_frac: 1.0,
+                        flops_reduction: 5.5,
+                        accuracy: 0.86,
                     },
                 ],
             }],
@@ -1100,7 +1255,53 @@ mod tests {
         // and the document self-identifies for the bench gate
         let j = Json::parse(&text).unwrap();
         assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "eval");
-        assert_eq!(j.get("entries").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(j.get("entries").unwrap().as_arr().unwrap().len(), 4);
+        // every entry carries the mode-keying fields the bench gate uses
+        for e in j.get("entries").unwrap().as_arr().unwrap() {
+            e.get("attn_mode").unwrap().as_str().unwrap();
+            e.get("rf_dim").unwrap().as_usize().unwrap();
+        }
+    }
+
+    #[test]
+    fn attn_mode_and_rf_dim_default_for_old_documents() {
+        // Pre-linear documents carry neither field; the mode derives from
+        // the knob kind (exact stays exact, sampled knobs were all mca).
+        let j = Json::parse(r#"{"knob": "exact"}"#).unwrap();
+        assert_eq!(attn_mode_from_json(&j, Knob::Exact).unwrap(), "exact");
+        let j = Json::parse(r#"{"knob": "alpha", "alpha": 0.4}"#).unwrap();
+        assert_eq!(attn_mode_from_json(&j, Knob::Alpha(0.4)).unwrap(), "mca");
+        let j = Json::parse(r#"{"knob": "epsilon", "epsilon": 16.0}"#).unwrap();
+        assert_eq!(attn_mode_from_json(&j, Knob::Epsilon(16.0)).unwrap(), "mca");
+        // an explicit field wins over the derivation
+        let j = Json::parse(r#"{"knob": "rf", "rf_dim": 32, "attn_mode": "linear"}"#).unwrap();
+        assert_eq!(attn_mode_from_json(&j, Knob::Rf(32)).unwrap(), "linear");
+        assert_eq!(knob_from_json(&j).unwrap(), Knob::Rf(32));
+    }
+
+    #[test]
+    fn model_frontier_separates_attention_modes() {
+        let a = pt("m", "t1", Knob::Alpha(0.4), 0.8, 3.0);
+        let b = pt("m", "t1", Knob::Rf(8), 0.75, 6.0);
+        // an mca knob and a linear knob at the same precision: two
+        // candidates, neither dominated (higher accuracy vs higher
+        // reduction) — the three-way frontier keeps both modes
+        let f = model_frontier(&[a, b], "m");
+        assert_eq!(f.len(), 2);
+        assert!(f.iter().any(|p| p.attn_mode == "mca"));
+        assert!(f.iter().any(|p| p.attn_mode == "linear"));
+    }
+
+    #[test]
+    fn sweep_modes_validates_and_defaults() {
+        let mut opts = HarnessOptions::default();
+        assert_eq!(sweep_modes(&opts).unwrap(), vec!["exact", "mca"]);
+        opts.attn_modes.clear();
+        assert_eq!(sweep_modes(&opts).unwrap(), vec!["exact", "mca"]);
+        opts.attn_modes = vec!["exact".into(), "mca".into(), "linear".into()];
+        assert_eq!(sweep_modes(&opts).unwrap().len(), 3);
+        opts.attn_modes = vec!["performer".into()];
+        assert!(sweep_modes(&opts).is_err());
     }
 
     #[test]
@@ -1108,6 +1309,8 @@ mod tests {
         assert_eq!(Knob::Exact.to_string(), "exact");
         assert_eq!(Knob::Alpha(0.3).to_string(), "α=0.3");
         assert_eq!(Knob::Epsilon(16.0).to_string(), "ε=16");
+        assert_eq!(Knob::Rf(64).to_string(), "rf=64");
+        assert_eq!(Knob::Rf(64).attn_mode(), "linear");
         let j = Json::parse(r#"{"knob": "nope"}"#).unwrap();
         assert!(knob_from_json(&j).is_err());
         let j = Json::parse(r#"{"bench": "kernels"}"#).unwrap();

@@ -71,9 +71,10 @@ fn print_help() {
                        the fleet front-end; not for interactive use)\n\
            eval        accuracy-vs-FLOPs Pareto sweep through the serving\n\
                        pool: exact baseline + α grid + Theorem-2 ε budgets\n\
-                       per (model, task), Eq.-9 FLOPs accounting, writes\n\
-                       BENCH_eval.json + a Table-1-style report\n\
-                       (--quick = the CI smoke profile)\n\
+                       + randomized linear attention (--attn-mode\n\
+                       exact,mca,linear with --rf-dims) per (model, task),\n\
+                       Eq.-9 FLOPs accounting, writes BENCH_eval.json + a\n\
+                       Table-1-style report (--quick = the CI smoke profile)\n\
            bounds      Lemma-1 / Theorem-2 bound-tightness table\n\
            project     project measured FLOPs reductions to the paper's d\n\
            validate    compile every artifact (pjrt builds only)\n\
@@ -404,13 +405,26 @@ fn run(cmd: &str, rest: &[String]) -> Result<()> {
             let d = mca::eval::harness::HarnessOptions::default();
             let join_f64 =
                 |v: &[f64]| v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",");
+            let join_usize =
+                |v: &[usize]| v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",");
             let args = common(Args::new())
                 .opt("models", &d.models.join(","), "comma list of models to sweep")
                 .opt("tasks", "", "comma list of tasks (default: the harness inventory)")
                 .opt(
+                    "attn-mode",
+                    &d.attn_modes.join(","),
+                    "attention modes to sweep (comma list of exact|mca|linear): \
+                     exact,mca,linear puts all three on one Pareto frontier",
+                )
+                .opt(
                     "error-budget",
                     &join_f64(&d.epsilons),
                     "Theorem-2 ε budgets to sweep (empty to skip the budget pass)",
+                )
+                .opt(
+                    "rf-dims",
+                    &join_usize(&d.rf_dims),
+                    "random-feature counts for the linear mode (comma list in [2,4096])",
                 )
                 .opt(
                     "precision",
@@ -655,11 +669,17 @@ fn eval_cmd(args: &Args) -> Result<()> {
     if args.was_set("tasks") {
         opts.tasks = args.get_str_list("tasks");
     }
+    if args.was_set("attn-mode") || !quick {
+        opts.attn_modes = args.get_str_list("attn-mode");
+    }
     if args.was_set("alphas") || !quick {
         opts.alphas = args.get_f64_list("alphas")?;
     }
     if args.was_set("error-budget") || !quick {
         opts.epsilons = args.get_f64_list("error-budget")?;
+    }
+    if args.was_set("rf-dims") || !quick {
+        opts.rf_dims = args.get_usize_list("rf-dims")?;
     }
     if args.was_set("precision") || !quick {
         opts.precisions = args.get_str_list("precision");
@@ -693,11 +713,13 @@ fn eval_cmd(args: &Args) -> Result<()> {
     }
     if opts.verbose {
         eprintln!(
-            "[eval] sweep: {:?} × {:?} | α {:?} | ε {:?} | prec {:?} | frac {:?} | {} workers{}",
+            "[eval] sweep: {:?} × {:?} | modes {:?} | α {:?} | ε {:?} | rf {:?} | prec {:?} | frac {:?} | {} workers{}",
             opts.models,
             opts.tasks,
+            opts.attn_modes,
             opts.alphas,
             opts.epsilons,
+            opts.rf_dims,
             opts.precisions,
             opts.score_fracs,
             opts.workers,
@@ -759,6 +781,8 @@ fn worker_cmd(args: &Args) -> Result<()> {
             brownout_watermark: args.get_usize("brownout-watermark")?,
             canary_rate: args.get_f64("canary-rate")?,
             quality_floor: args.get_f64("quality-floor")?,
+            // Fractions arrive per request over the wire, not pool-wide.
+            score_frac: 1.0,
         },
     )?;
 
@@ -806,6 +830,7 @@ fn worker_cmd(args: &Args) -> Result<()> {
             shed: true,
             decode_tokens: 0,
             token_ms: Vec::new(),
+            rf_dim: wr.rf_dim,
         })
     };
 
@@ -838,6 +863,8 @@ fn worker_cmd(args: &Args) -> Result<()> {
                         wr.precision,
                         wr.score_frac,
                     )
+                } else if wr.mode == "linear" {
+                    server.submitter().submit_linear(&wr.text, wr.rf_dim, wr.precision)
                 } else {
                     server.submitter().submit_sampled(
                         &wr.text,

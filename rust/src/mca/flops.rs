@@ -156,6 +156,44 @@ pub fn reduction_factor_scored(
     exact as f64 / (approx as f64 * prec_factor)
 }
 
+/// Eq.-9-style accounting for the randomized linear-attention mode
+/// ([`super::linear`]). The exact baseline is the same as
+/// [`reduction_factor_scored`]'s — `exact_layer_flops + 2·attn_pairs·d`
+/// per layer (encode + weighted sum + QKᵀ scores) — so the two
+/// approximation modes land on one comparable frontier. The linear side
+/// replaces every n²-term with the accumulate-then-normalize cost:
+/// `2·n·d²` for the (exact) value encode plus `≈ 8·n·r_f·d` for the two
+/// feature maps, the moment-matrix accumulation, and the per-query
+/// normalization — linear in n, which is the whole point. `per_seq`
+/// reuses the (n_eff, Σr_i) shape of the other factors; the r_sum slot is
+/// ignored (the linear mode samples no value rows and reports r_sum = 0).
+/// Degenerate `rf_dim` (0) charges the full [`RF_GRID`]-ceiling cost —
+/// garbage must not look cheap.
+///
+/// [`RF_GRID`]: super::linear::RF_GRID
+pub fn reduction_factor_linear(
+    per_seq: &[(usize, u64)],
+    n_layers: usize,
+    dims: AttnDims,
+    prec_factor: f64,
+    rf_dim: usize,
+) -> f64 {
+    let d = dims.d_model as u64;
+    let rf = if rf_dim == 0 { *super::linear::RF_GRID.last().unwrap() } else { rf_dim } as u64;
+    let mut exact = 0u64;
+    let mut approx = 0u64;
+    for &(n_eff, _r_sum) in per_seq {
+        let n = n_eff as u64;
+        let pairs = attn_pairs(n_eff, dims);
+        exact += n_layers as u64 * (exact_layer_flops(n_eff, dims) + 2 * pairs * d);
+        approx += n_layers as u64 * (2 * n * d * d + 8 * n * rf * d);
+    }
+    if approx == 0 || prec_factor <= 0.0 {
+        return 0.0;
+    }
+    exact as f64 / (approx as f64 * prec_factor)
+}
+
 /// Project a reduction factor measured at one feature dimension to another
 /// (the `mca project` scale mapping). From f = (d + n̄)/(r̄ + n̄) we recover
 /// the (d-independent) mean sample count r̄ = (d_from + n̄)/f − n̄ and
@@ -326,6 +364,32 @@ mod tests {
                 assert!(sampled > 1.3, "sampled-score should not: {sampled}");
             }
         }
+    }
+
+    #[test]
+    fn linear_reduction_scales_with_sequence_length() {
+        // Short dense sequences gain little (or lose — the router's job
+        // to notice); long sequences win big because the linear side has
+        // no n² term. Shares the scored-baseline, so factors compare.
+        let short = reduction_factor_linear(&[(64, 0)], 2, DENSE, 1.0, 32);
+        let long = reduction_factor_linear(&[(4096, 0)], 2, DENSE, 1.0, 32);
+        assert!(long > 4.0 * short, "long {long} vs short {short}");
+        // More features cost more (smaller factor), monotone.
+        let mut prev = f64::INFINITY;
+        for rf in [8usize, 16, 32, 64, 128] {
+            let f = reduction_factor_linear(&[(1024, 0)], 2, DENSE, 1.0, rf);
+            assert!(f < prev, "factor not monotone in rf at {rf}");
+            prev = f;
+        }
+        // rf 0 charges the grid ceiling, and the precision factor scales
+        // the approximate side only.
+        let f0 = reduction_factor_linear(&[(1024, 0)], 2, DENSE, 1.0, 0);
+        let f128 = reduction_factor_linear(&[(1024, 0)], 2, DENSE, 1.0, 128);
+        assert_eq!(f0, f128);
+        let fq = reduction_factor_linear(&[(1024, 0)], 2, DENSE, 0.5, 32);
+        let ff = reduction_factor_linear(&[(1024, 0)], 2, DENSE, 1.0, 32);
+        assert!((fq - 2.0 * ff).abs() < 1e-9);
+        assert_eq!(reduction_factor_linear(&[], 2, DENSE, 1.0, 32), 0.0);
     }
 
     #[test]

@@ -1,0 +1,828 @@
+//! Randomized linear attention (RFA/LARA-style, PAPERS.md) — the second
+//! approximation mode behind the `ForwardSpec`/`Backend` seam, racing MCA
+//! on the same accuracy-vs-FLOPs frontier.
+//!
+//! Where MCA keeps the exact softmax and Monte-Carlo-samples the *value
+//! encoding* (per-token budgets r_i, paper Eq. 9), this module replaces
+//! the QKᵀ/softmax score path itself with positive random features of the
+//! softmax kernel (Performer/RFA):
+//!
+//! ```text
+//! φ(x)_f = exp(ω_fᵀ x̂ − ‖x̂‖²/2) / √r_f,   ω_f ~ N(0, I),
+//! x̂ = x / dh^(1/4)   so that   E[φ(q)ᵀφ(k)] = exp(qᵀk / √dh).
+//! ```
+//!
+//! Attention then factors into an accumulate-then-normalize form,
+//!
+//! ```text
+//! ŷ_i = φ(q_i)ᵀ S / (φ(q_i)ᵀ z),   S = Σ_j φ(k_j) v_jᵀ,  z = Σ_j φ(k_j),
+//! ```
+//!
+//! which costs O(n · r_f · dh) per head instead of O(n² · dh). The
+//! feature count `r_f` (`rf_dim` on the wire) is the mode's error knob —
+//! the analogue of MCA's α and the sampled-score `score_frac`.
+//!
+//! The error chain mirrors `mca::score`:
+//!
+//! * **A-priori planning model** — [`linear_error_bound`] maps `r_f` into
+//!   the same Theorem-2 output scale as α: per-token error ~
+//!   `β·‖W‖_F / √r_f` (Monte-Carlo 1/√r_f contraction on the checkpoint's
+//!   error scale). [`rf_for_error_budget`] inverts it for budget-carrying
+//!   requests, and [`quantize_rf`] snaps *up* onto [`RF_GRID`] (more
+//!   features only shrink the bound) so budget requests still batch.
+//! * **A-posteriori certificate** — [`linear_attention_certified`] splits
+//!   the feature pool in half and reports `κ·‖ŷ^A − ŷ^B‖₂` per token
+//!   (the analogue of `score::softmax_l1_bound`): two independent
+//!   half-estimates that agree tightly bound the full estimate's error
+//!   with high probability. Calibrated end-to-end in
+//!   `tests/linear_estimator_contract.rs`.
+//!
+//! Mask semantics are *inherited exactly* from the dense path
+//! ([`crate::model::forward::attn_allowed`]): padding keys contribute
+//! nothing, windowed models stream the band with ±-edge updates on a
+//! running prefix (plus the global-CLS key-0 term, and query 0 attends
+//! over the full sequence). Causal/decode attention is rejected upstream
+//! — the running-prefix form exists for it, but the decode-prefix
+//! equivalence contract is out of scope for this mode initially.
+//!
+//! Every resolution entry point is total over degenerate inputs
+//! (NaN/∞ budgets, non-positive statistics), mirroring
+//! [`super::adaptive`]: garbage must fail to *more* features, never
+//! fewer.
+
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+
+/// The serving feature-count ladder. Budget resolution snaps *up* onto
+/// this grid ([`quantize_rf`]) so budget-carrying linear requests batch
+/// together; `RF_GRID[4]` is the ceiling past which the budget is tighter
+/// than the linear path can honor and the caller must route elsewhere.
+pub const RF_GRID: [usize; 5] = [8, 16, 32, 64, 128];
+
+/// Feature count used when a linear-mode request does not pin one
+/// (`rf_dim = 0` on the wire / in a `ForwardSpec`).
+pub const DEFAULT_RF_DIM: usize = 32;
+
+/// Safety multiplier of the half-split disagreement certificate: the
+/// full-pool estimate averages the two half-estimates, so its deviation
+/// is ~½ their disagreement; κ = 2 leaves a ~4× margin at the mean,
+/// which holds the q90 contract comfortably (calibrated in
+/// `tests/linear_estimator_contract.rs`).
+pub const CERT_KAPPA: f32 = 2.0;
+
+/// Draw the seeded random-feature matrix ω (`rf_dim` × `dh`) for one
+/// (request seed, layer, head). Streams are disjoint per (layer, head)
+/// — mirroring `mca_contexts`' per-layer fold-in — so results are
+/// deterministic in the request seed and independent of batch
+/// composition.
+pub fn feature_matrix(rf_dim: usize, dh: usize, seed: u32, layer: usize, head: usize) -> Tensor {
+    let stream = 0x4C52_4600_0000u64 + ((layer as u64) << 8) + head as u64;
+    let mut rng = Pcg64::with_stream(seed as u64, stream);
+    Tensor::from_fn(&[rf_dim, dh], |_| rng.gen_normal() as f32)
+}
+
+/// The raw (unshifted) positive feature map: φ(X)[i, f] =
+/// `exp(ω_fᵀ x_i − ‖x_i‖²/2) / √r_f`. This is the estimator whose
+/// kernel expectation `E[φ(q)ᵀφ(k)] = exp(qᵀk)` the contract battery
+/// verifies; the attention path uses the max-shifted variant below
+/// (the shift cancels in the normalize step).
+pub fn feature_map_unshifted(x: &Tensor, omega: &Tensor) -> Tensor {
+    let exps = feature_exponents(x, omega);
+    let rf = omega.shape()[0];
+    let inv_sqrt = 1.0 / (rf as f32).sqrt();
+    let (n, _) = (exps.shape()[0], exps.shape()[1]);
+    let mut out = Tensor::zeros(&[n, rf]);
+    for i in 0..n {
+        let e = exps.row(i);
+        let o = out.row_mut(i);
+        for f in 0..rf {
+            o[f] = e[f].exp() * inv_sqrt;
+        }
+    }
+    out
+}
+
+/// Exponent matrix e[i, f] = ω_fᵀ x_i − ‖x_i‖²/2 shared by both feature
+/// maps.
+fn feature_exponents(x: &Tensor, omega: &Tensor) -> Tensor {
+    let n = x.shape()[0];
+    let dh = x.shape()[1];
+    assert_eq!(omega.shape()[1], dh, "feature matrix width must match head dim");
+    let rf = omega.shape()[0];
+    let mut out = Tensor::zeros(&[n, rf]);
+    for i in 0..n {
+        let xi = x.row(i);
+        let half_sq = 0.5 * xi.iter().map(|&v| v * v).sum::<f32>();
+        let o = out.row_mut(i);
+        for f in 0..rf {
+            let w = omega.row(f);
+            let mut dot = 0.0f32;
+            for c in 0..dh {
+                dot += w[c] * xi[c];
+            }
+            o[f] = dot - half_sq;
+        }
+    }
+    out
+}
+
+/// Numerically-stable feature map for the attention path: exponents are
+/// shifted by their maximum over the *unmasked* rows before
+/// exponentiating (a per-matrix constant, which cancels between the
+/// numerator and denominator of the normalize step), and masked rows
+/// come out identically zero so padding keys contribute nothing to the
+/// running sums. The 1/√r_f normalization also cancels and is omitted.
+fn feature_map_masked(x: &Tensor, omega: &Tensor, mask: &[bool]) -> Tensor {
+    let exps = feature_exponents(x, omega);
+    let n = exps.shape()[0];
+    let rf = exps.shape()[1];
+    let mut shift = f32::NEG_INFINITY;
+    for i in 0..n {
+        if !mask[i] {
+            continue;
+        }
+        for &e in exps.row(i) {
+            shift = shift.max(e);
+        }
+    }
+    if !shift.is_finite() {
+        shift = 0.0; // all rows masked (or exponents degenerate)
+    }
+    let mut out = Tensor::zeros(&[n, rf]);
+    for i in 0..n {
+        if !mask[i] {
+            continue;
+        }
+        let e = exps.row(i);
+        let o = out.row_mut(i);
+        for f in 0..rf {
+            o[f] = (e[f] - shift).exp();
+        }
+    }
+    out
+}
+
+/// Running prefix of the accumulate-then-normalize form for one head:
+/// `s` is the r_f × dh moment matrix Σ φ(k_j) v_jᵀ, `z` the r_f-vector
+/// Σ φ(k_j). Keys enter and leave via ± updates, which is what makes
+/// the windowed band streamable in O(r_f · dh) per edge event.
+struct Prefix {
+    s: Vec<f32>,
+    z: Vec<f32>,
+    rf: usize,
+    dh: usize,
+}
+
+impl Prefix {
+    fn new(rf: usize, dh: usize) -> Prefix {
+        Prefix { s: vec![0.0; rf * dh], z: vec![0.0; rf], rf, dh }
+    }
+
+    fn axpy(&mut self, pk_row: &[f32], v_row: &[f32], sign: f32) {
+        for f in 0..self.rf {
+            let w = sign * pk_row[f];
+            if w == 0.0 {
+                continue;
+            }
+            self.z[f] += w;
+            let srow = &mut self.s[f * self.dh..(f + 1) * self.dh];
+            for c in 0..self.dh {
+                srow[c] += w * v_row[c];
+            }
+        }
+    }
+}
+
+/// Normalize one query against a prefix, optionally adding a detached
+/// single-key term (the global-CLS key-0 column when it sits outside the
+/// band — its rank-1 contribution folds into a scalar: φ(q)ᵀφ(k₀) times
+/// v₀). Writes the full-pool estimate into `out`; when `cert` is `Some`,
+/// also forms the two half-pool estimates and stores
+/// `κ·‖ŷ^A − ŷ^B‖₂` — their disagreement — as this token's certificate.
+/// A query whose visible set is empty (or fully underflowed) emits zeros
+/// rather than NaN, matching the sampled-score path's degrade-not-poison
+/// rule.
+fn emit_row(
+    pq_row: &[f32],
+    pre: &Prefix,
+    extra: Option<(&[f32], &[f32])>,
+    out: &mut [f32],
+    cert: Option<&mut f32>,
+) {
+    let (rf, dh) = (pre.rf, pre.dh);
+    let half = rf / 2;
+    // Split accumulation: [0, half) and [half, rf) form the two
+    // independent half-pools; the full pool is their sum.
+    let mut num = vec![0.0f32; 2 * dh];
+    let mut den = [0.0f32; 2];
+    for f in 0..rf {
+        let w = pq_row[f];
+        if w == 0.0 {
+            continue;
+        }
+        let part = usize::from(f >= half);
+        den[part] += w * pre.z[f];
+        let srow = &pre.s[f * dh..(f + 1) * dh];
+        let nrow = &mut num[part * dh..(part + 1) * dh];
+        for c in 0..dh {
+            nrow[c] += w * srow[c];
+        }
+    }
+    if let Some((pk0, v0)) = extra {
+        for part in 0..2 {
+            let range = if part == 0 { 0..half } else { half..rf };
+            let mut kq = 0.0f32;
+            for f in range {
+                kq += pq_row[f] * pk0[f];
+            }
+            den[part] += kq;
+            let nrow = &mut num[part * dh..(part + 1) * dh];
+            for c in 0..dh {
+                nrow[c] += kq * v0[c];
+            }
+        }
+    }
+    let den_full = den[0] + den[1];
+    if den_full > 0.0 {
+        for c in 0..dh {
+            out[c] = (num[c] + num[dh + c]) / den_full;
+        }
+    } else {
+        out.fill(0.0);
+    }
+    if let Some(cert) = cert {
+        let mut dist_sq = 0.0f32;
+        if den[0] > 0.0 && den[1] > 0.0 {
+            for c in 0..dh {
+                let diff = num[c] / den[0] - num[dh + c] / den[1];
+                dist_sq += diff * diff;
+            }
+            *cert = CERT_KAPPA * dist_sq.sqrt();
+        } else {
+            // One half-pool saw nothing: no agreement evidence, so the
+            // certificate is vacuous-conservative (the full output scale).
+            let scale = out.iter().map(|&v| v * v).sum::<f32>().sqrt();
+            *cert = CERT_KAPPA * 2.0 * scale.max(1.0);
+        }
+    }
+}
+
+/// One head of randomized linear attention: `softmax(q kᵀ/√dh) v`
+/// approximated in O(n · r_f · dh) with the feature matrix `omega`
+/// ([`feature_matrix`]). Visibility matches the dense rule
+/// bit-for-bit in *structure* (who may attend to whom): padding keys are
+/// invisible, `window = Some(w)` streams the ±w band with the
+/// global-CLS key-0 column added for queries whose band excludes it, and
+/// query 0 attends over the whole sequence. Masked query rows emit
+/// zeros.
+pub fn linear_attention(
+    qh: &Tensor,
+    kh: &Tensor,
+    vh: &Tensor,
+    omega: &Tensor,
+    mask: &[bool],
+    window: Option<usize>,
+) -> Tensor {
+    attention_impl(qh, kh, vh, omega, mask, window, false).0
+}
+
+/// [`linear_attention`] plus the per-token a-posteriori certificate
+/// `κ·‖ŷ^A − ŷ^B‖₂` (half-split disagreement; masked rows report 0).
+pub fn linear_attention_certified(
+    qh: &Tensor,
+    kh: &Tensor,
+    vh: &Tensor,
+    omega: &Tensor,
+    mask: &[bool],
+    window: Option<usize>,
+) -> (Tensor, Vec<f32>) {
+    let (out, cert) = attention_impl(qh, kh, vh, omega, mask, window, true);
+    (out, cert.expect("certified path returns certificates"))
+}
+
+fn attention_impl(
+    qh: &Tensor,
+    kh: &Tensor,
+    vh: &Tensor,
+    omega: &Tensor,
+    mask: &[bool],
+    window: Option<usize>,
+    want_cert: bool,
+) -> (Tensor, Option<Vec<f32>>) {
+    let n = qh.shape()[0];
+    let dh = qh.shape()[1];
+    let rf = omega.shape()[0];
+    assert_eq!(kh.shape(), qh.shape(), "q/k head shapes must match");
+    assert_eq!(vh.shape(), qh.shape(), "v head shape must match");
+    assert_eq!(mask.len(), n, "mask length must match sequence");
+    assert!(rf >= 2, "rf_dim must be at least 2 for the half-split pools");
+
+    // Pre-scale so φ(q)ᵀφ(k) estimates exp(qᵀk/√dh) — the dense path's
+    // scaled logits.
+    let s = 1.0 / (dh as f32).sqrt().sqrt();
+    let scale = |t: &Tensor| {
+        Tensor::new(&[n, dh], t.data().iter().map(|&v| v * s).collect::<Vec<_>>())
+            .expect("scaled copy")
+    };
+    let pq = feature_map_masked(&scale(qh), omega, mask);
+    let pk = feature_map_masked(&scale(kh), omega, mask);
+
+    let mut out = Tensor::zeros(&[n, dh]);
+    let mut certs = if want_cert { Some(vec![0.0f32; n]) } else { None };
+
+    // Full-range prefix: used by every query under `window = None`, and
+    // by the global-CLS query 0 under a window.
+    let mut full = Prefix::new(rf, dh);
+    for j in 0..n {
+        if mask[j] {
+            full.axpy(pk.row(j), vh.row(j), 1.0);
+        }
+    }
+
+    match window {
+        None => {
+            for i in 0..n {
+                if !mask[i] {
+                    continue;
+                }
+                let cref = certs.as_mut().map(|c| &mut c[i]);
+                emit_row(pq.row(i), &full, None, out.row_mut(i), cref);
+            }
+        }
+        Some(w) => {
+            if n > 0 && mask[0] {
+                let cref = certs.as_mut().map(|c| &mut c[0]);
+                emit_row(pq.row(0), &full, None, out.row_mut(0), cref);
+            }
+            // Stream the band [i−w, i+w] with ± edge events on a running
+            // prefix; the detached key-0 term covers the global-CLS
+            // column whenever the band has moved past it.
+            let mut band = Prefix::new(rf, dh);
+            let (mut lo, mut hi) = (0usize, 0usize); // current range [lo, hi)
+            for i in 1..n {
+                let new_lo = i.saturating_sub(w);
+                let new_hi = (i + w + 1).min(n);
+                while hi < new_hi {
+                    if mask[hi] {
+                        band.axpy(pk.row(hi), vh.row(hi), 1.0);
+                    }
+                    hi += 1;
+                }
+                while lo < new_lo {
+                    if mask[lo] {
+                        band.axpy(pk.row(lo), vh.row(lo), -1.0);
+                    }
+                    lo += 1;
+                }
+                if !mask[i] {
+                    continue;
+                }
+                let extra = if new_lo > 0 && mask[0] {
+                    Some((pk.row(0), vh.row(0)))
+                } else {
+                    None
+                };
+                let cref = certs.as_mut().map(|c| &mut c[i]);
+                emit_row(pq.row(i), &band, extra, out.row_mut(i), cref);
+            }
+        }
+    }
+    (out, certs)
+}
+
+// ---------------------------------------------------------------------------
+// ε → r_f resolution (the Theorem-2 machinery's third knob)
+// ---------------------------------------------------------------------------
+
+/// A-priori planning bound for the linear path: per-token error
+/// ~ `β·‖W‖_F / √r_f` — the Monte-Carlo 1/√r_f contraction applied to
+/// the same checkpoint error scale Theorem 2 uses for α, so one ε
+/// compares both modes. Degenerate statistics return 0 (the inversion
+/// disables itself on the same inputs, matching
+/// [`super::adaptive::alpha_for_error_budget`]); a non-positive or
+/// non-finite `rf_dim` is treated as the most conservative single
+/// feature.
+pub fn linear_error_bound(rf_dim: usize, beta: f64, w_frob: f64) -> f64 {
+    if !(beta > 0.0 && beta.is_finite() && w_frob > 0.0 && w_frob.is_finite()) {
+        return 0.0;
+    }
+    let scale = beta * w_frob;
+    if !scale.is_finite() {
+        return 0.0;
+    }
+    scale / (rf_dim.max(1) as f64).sqrt()
+}
+
+/// Invert [`linear_error_bound`]: the (unquantized) feature count that
+/// brings the planning bound down to ε is `r_f = (β·‖W‖_F / ε)²`.
+/// Returns a finite count clamped to `[1, RF_GRID.last()² ]`-ish range
+/// `[1, 1e9]` for the quantizer to judge feasibility. Degenerate
+/// statistics disable the inversion and return the cheapest count (the
+/// α-side resolves 1.0 — cheapest — on the same inputs); a NaN or −∞
+/// budget fails to the *largest* count (garbage must not be served
+/// cheap), +∞ is an unbounded budget and runs cheapest.
+///
+/// ```
+/// use mca::mca::linear::{rf_for_error_budget, quantize_rf};
+///
+/// // Checkpoint statistics: β = 2, ‖W_v‖_F = 3.
+/// let rf = rf_for_error_budget(1.2, 2.0, 3.0);
+/// assert!((rf - 25.0).abs() < 1e-9); // (β‖W‖_F / ε)² = 5² = 25
+/// assert_eq!(quantize_rf(rf), Some(32)); // snap *up*: grid r_f honoring ε
+///
+/// // A budget tighter than the densest grid point can honor is
+/// // infeasible for this mode — the caller routes to MCA or exact.
+/// assert_eq!(quantize_rf(rf_for_error_budget(0.1, 2.0, 3.0)), None);
+/// ```
+pub fn rf_for_error_budget(epsilon: f64, beta: f64, w_frob: f64) -> f64 {
+    const MAX_RF: f64 = 1e9;
+    if !(beta > 0.0 && beta.is_finite() && w_frob > 0.0 && w_frob.is_finite()) {
+        return 1.0;
+    }
+    if !epsilon.is_finite() {
+        return if epsilon == f64::INFINITY { 1.0 } else { MAX_RF };
+    }
+    if epsilon <= 0.0 {
+        return MAX_RF;
+    }
+    let scale = beta * w_frob;
+    if !scale.is_finite() || scale == 0.0 {
+        return 1.0;
+    }
+    let root = scale / epsilon;
+    (root * root).clamp(1.0, MAX_RF)
+}
+
+/// Snap a resolved feature count *up* onto [`RF_GRID`] (more features
+/// only shrink the planning bound, so the quantized r_f still honors the
+/// ε that produced it; a 1e-6 slack absorbs rounding). `None` when the
+/// count exceeds the grid ceiling: the budget is tighter than the linear
+/// path can honor and the caller must route the request to another mode.
+pub fn quantize_rf(rf: f64) -> Option<usize> {
+    if !rf.is_finite() {
+        return None;
+    }
+    RF_GRID.iter().copied().find(|&g| g as f64 >= rf - 1e-6)
+}
+
+/// Relative per-row cost of serving one request on the linear path
+/// versus the exact dense path, from the Eq.-9-style FLOPs accounting
+/// ([`super::flops::reduction_factor_linear`]'s per-layer shape): exact
+/// attention costs ~`2d² + 4·n·d` per row, the linear path
+/// ~`2d² + 8·r_f·d`, so the ratio is `(d + 4·r_f) / (d + 2·n)`. Unlike
+/// MCA's per-row cost this is *not* capped at 1 — a dense feature map on
+/// a short sequence genuinely costs more than exact, and the router must
+/// see that. Degenerate dimensions cost 1 (no signal → no discount).
+pub fn relative_cost(rf_dim: usize, d_model: usize, n: usize) -> f64 {
+    if d_model == 0 || n == 0 || rf_dim == 0 {
+        return 1.0;
+    }
+    let num = d_model as f64 + 4.0 * rf_dim as f64;
+    let den = d_model as f64 + 2.0 * n as f64;
+    (num / den).clamp(1e-6, 64.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn randn(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
+        Tensor::from_fn(shape, |_| 0.5 * rng.gen_normal() as f32)
+    }
+
+    /// Dense reference: softmax(q kᵀ/√dh) v under the same visibility
+    /// rule as `model::forward::attn_allowed`.
+    fn dense_reference(
+        qh: &Tensor,
+        kh: &Tensor,
+        vh: &Tensor,
+        mask: &[bool],
+        window: Option<usize>,
+    ) -> Tensor {
+        let n = qh.shape()[0];
+        let dh = qh.shape()[1];
+        let inv = 1.0 / (dh as f32).sqrt();
+        let allowed = |qi: usize, ki: usize| {
+            mask[ki]
+                && match window {
+                    None => true,
+                    Some(w) => qi.abs_diff(ki) <= w || qi == 0 || ki == 0,
+                }
+        };
+        let mut out = Tensor::zeros(&[n, dh]);
+        for i in 0..n {
+            if !mask[i] {
+                continue;
+            }
+            let mut logits = vec![f32::NEG_INFINITY; n];
+            let mut any = false;
+            for j in 0..n {
+                if !allowed(i, j) {
+                    continue;
+                }
+                any = true;
+                let mut dot = 0.0f32;
+                for c in 0..dh {
+                    dot += qh.row(i)[c] * kh.row(j)[c];
+                }
+                logits[j] = dot * inv;
+            }
+            if !any {
+                continue;
+            }
+            let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut den = 0.0f32;
+            let mut num = vec![0.0f32; dh];
+            for j in 0..n {
+                if logits[j] == f32::NEG_INFINITY {
+                    continue;
+                }
+                let w = (logits[j] - m).exp();
+                den += w;
+                for c in 0..dh {
+                    num[c] += w * vh.row(j)[c];
+                }
+            }
+            let o = out.row_mut(i);
+            for c in 0..dh {
+                o[c] = num[c] / den;
+            }
+        }
+        out
+    }
+
+    fn mean_row_err(a: &Tensor, b: &Tensor, mask: &[bool]) -> f64 {
+        let n = a.shape()[0];
+        let dh = a.shape()[1];
+        let mut tot = 0.0f64;
+        let mut cnt = 0usize;
+        for i in 0..n {
+            if !mask[i] {
+                continue;
+            }
+            let mut d = 0.0f64;
+            for c in 0..dh {
+                let diff = (a.row(i)[c] - b.row(i)[c]) as f64;
+                d += diff * diff;
+            }
+            tot += d.sqrt();
+            cnt += 1;
+        }
+        tot / cnt.max(1) as f64
+    }
+
+    #[test]
+    fn kernel_estimator_is_unbiased() {
+        // E_ω[φ(q)ᵀφ(k)] = exp(qᵀk): average the estimate over many
+        // independent feature draws and compare to the closed form.
+        let mut rng = Pcg64::new(11);
+        let q = randn(&mut rng, &[1, 6]);
+        let k = randn(&mut rng, &[1, 6]);
+        let exact: f32 =
+            (q.row(0).iter().zip(k.row(0)).map(|(a, b)| a * b).sum::<f32>()).exp();
+        let mut mean = 0.0f64;
+        let trials = 3000usize;
+        for t in 0..trials {
+            let omega = feature_matrix(8, 6, t as u32, 0, 0);
+            let pq = feature_map_unshifted(&q, &omega);
+            let pk = feature_map_unshifted(&k, &omega);
+            let est: f32 = pq.row(0).iter().zip(pk.row(0)).map(|(a, b)| a * b).sum();
+            mean += est as f64 / trials as f64;
+        }
+        let rel = (mean - exact as f64).abs() / exact as f64;
+        assert!(rel < 0.06, "kernel estimate mean {mean} vs exact {exact} (rel {rel})");
+    }
+
+    #[test]
+    fn dense_case_tracks_the_exact_softmax() {
+        // With a saturated feature count the estimate must sit well
+        // within the exact output's scale (loose envelope — this is an
+        // approximation, the tight calibration lives in the contract
+        // battery).
+        let mut rng = Pcg64::new(5);
+        let (n, dh) = (12, 8);
+        let qh = randn(&mut rng, &[n, dh]);
+        let kh = randn(&mut rng, &[n, dh]);
+        let vh = randn(&mut rng, &[n, dh]);
+        let mask = vec![true; n];
+        let exact = dense_reference(&qh, &kh, &vh, &mask, None);
+        let mut errs = Vec::new();
+        for seed in 0..8u32 {
+            let omega = feature_matrix(256, dh, seed, 0, 0);
+            let approx = linear_attention(&qh, &kh, &vh, &omega, &mask, None);
+            errs.push(mean_row_err(&approx, &exact, &mask));
+        }
+        let mean = errs.iter().sum::<f64>() / errs.len() as f64;
+        let scale = (0..n).map(|i| exact.row_norm(i) as f64).sum::<f64>() / n as f64;
+        assert!(mean < 0.35 * scale, "mean err {mean} vs output scale {scale}");
+    }
+
+    #[test]
+    fn error_is_monotone_decreasing_in_rf_dim() {
+        let mut rng = Pcg64::new(7);
+        let (n, dh) = (10, 8);
+        let qh = randn(&mut rng, &[n, dh]);
+        let kh = randn(&mut rng, &[n, dh]);
+        let vh = randn(&mut rng, &[n, dh]);
+        let mask = vec![true; n];
+        let exact = dense_reference(&qh, &kh, &vh, &mask, None);
+        let mean_err_at = |rf: usize| {
+            let mut tot = 0.0f64;
+            let seeds = 24u32;
+            for seed in 0..seeds {
+                let omega = feature_matrix(rf, dh, seed, 0, 0);
+                let approx = linear_attention(&qh, &kh, &vh, &omega, &mask, None);
+                tot += mean_row_err(&approx, &exact, &mask);
+            }
+            tot / seeds as f64
+        };
+        let coarse = mean_err_at(8);
+        let fine = mean_err_at(128);
+        assert!(
+            fine < coarse * 0.8,
+            "rf 128 err {fine} not clearly below rf 8 err {coarse}"
+        );
+    }
+
+    #[test]
+    fn windowed_band_and_cls_terms_match_the_dense_rule() {
+        // The streaming band implementation must equal a from-scratch
+        // evaluation of the same feature estimator restricted to each
+        // query's visible set — checked against an O(n²) oracle built
+        // from the identical φ rows.
+        let mut rng = Pcg64::new(19);
+        let (n, dh, w) = (17, 6, 3);
+        let qh = randn(&mut rng, &[n, dh]);
+        let kh = randn(&mut rng, &[n, dh]);
+        let vh = randn(&mut rng, &[n, dh]);
+        let mut mask = vec![true; n];
+        mask[n - 2] = false; // padding inside the band
+        mask[n - 1] = false;
+        let omega = feature_matrix(16, dh, 3, 0, 0);
+        let fast = linear_attention(&qh, &kh, &vh, &omega, &mask, Some(w));
+
+        // Oracle: per query, brute-force the visible set.
+        let s = 1.0 / (dh as f32).sqrt().sqrt();
+        let scaled = |t: &Tensor| {
+            Tensor::new(&[n, dh], t.data().iter().map(|&v| v * s).collect::<Vec<_>>()).unwrap()
+        };
+        let pq = feature_map_masked(&scaled(&qh), &omega, &mask);
+        let pk = feature_map_masked(&scaled(&kh), &omega, &mask);
+        let rf = omega.shape()[0];
+        for i in 0..n {
+            if !mask[i] {
+                for &v in fast.row(i) {
+                    assert_eq!(v, 0.0, "masked query row {i} must be zero");
+                }
+                continue;
+            }
+            let mut num = vec![0.0f64; dh];
+            let mut den = 0.0f64;
+            for j in 0..n {
+                let visible = mask[j] && (i.abs_diff(j) <= w || i == 0 || j == 0);
+                if !visible {
+                    continue;
+                }
+                let mut kq = 0.0f64;
+                for f in 0..rf {
+                    kq += pq.row(i)[f] as f64 * pk.row(j)[f] as f64;
+                }
+                den += kq;
+                for c in 0..dh {
+                    num[c] += kq * vh.row(j)[c] as f64;
+                }
+            }
+            for c in 0..dh {
+                let want = if den > 0.0 { num[c] / den } else { 0.0 };
+                let got = fast.row(i)[c] as f64;
+                assert!(
+                    (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+                    "row {i} col {c}: streaming {got} vs oracle {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn certificate_bounds_the_true_error_at_q90() {
+        // Small-scale version of the contract battery's q90 check: over
+        // seeds × tokens, the half-split disagreement certificate must
+        // cover the true error for ≥ 90% of tokens.
+        let mut rng = Pcg64::new(23);
+        let (n, dh) = (10, 8);
+        let qh = randn(&mut rng, &[n, dh]);
+        let kh = randn(&mut rng, &[n, dh]);
+        let vh = randn(&mut rng, &[n, dh]);
+        let mask = vec![true; n];
+        let exact = dense_reference(&qh, &kh, &vh, &mask, None);
+        let (mut covered, mut total) = (0usize, 0usize);
+        for seed in 0..20u32 {
+            let omega = feature_matrix(32, dh, seed, 0, 0);
+            let (approx, cert) =
+                linear_attention_certified(&qh, &kh, &vh, &omega, &mask, None);
+            for i in 0..n {
+                let mut err = 0.0f32;
+                for c in 0..dh {
+                    let d = approx.row(i)[c] - exact.row(i)[c];
+                    err += d * d;
+                }
+                total += 1;
+                if err.sqrt() <= cert[i] {
+                    covered += 1;
+                }
+            }
+        }
+        let frac = covered as f64 / total as f64;
+        assert!(frac >= 0.9, "certificate covered only {frac} of tokens");
+    }
+
+    #[test]
+    fn budget_inversion_roundtrips_through_the_bound() {
+        prop::check(200, |g| {
+            let beta = g.f64(0.1..10.0);
+            let w = g.f64(0.1..50.0);
+            let eps = g.f64(0.05..20.0);
+            let rf = rf_for_error_budget(eps, beta, w);
+            if let Some(q) = quantize_rf(rf) {
+                let bound = linear_error_bound(q, beta, w);
+                if bound > eps * (1.0 + 1e-6) {
+                    return Err(format!(
+                        "grid rf {q} bound {bound} violates eps {eps} (β={beta}, w={w})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn resolution_is_total_over_degenerate_inputs() {
+        // Mirrors adaptive.rs: garbage budgets must fail to more
+        // features (or infeasible), never fewer; degenerate statistics
+        // disable the inversion entirely.
+        assert_eq!(rf_for_error_budget(0.5, 0.0, 3.0), 1.0);
+        assert_eq!(rf_for_error_budget(0.5, f64::NAN, 3.0), 1.0);
+        assert_eq!(rf_for_error_budget(0.5, 2.0, f64::INFINITY), 1.0);
+        assert_eq!(rf_for_error_budget(f64::INFINITY, 2.0, 3.0), 1.0);
+        assert_eq!(quantize_rf(rf_for_error_budget(f64::NAN, 2.0, 3.0)), None);
+        assert_eq!(quantize_rf(rf_for_error_budget(0.0, 2.0, 3.0)), None);
+        assert_eq!(quantize_rf(rf_for_error_budget(-3.0, 2.0, 3.0)), None);
+        assert_eq!(quantize_rf(f64::NAN), None);
+        assert_eq!(quantize_rf(f64::INFINITY), None);
+        // Grid points survive quantization; just-above snaps up.
+        for &g in RF_GRID.iter() {
+            assert_eq!(quantize_rf(g as f64), Some(g));
+        }
+        assert_eq!(quantize_rf(8.5), Some(16));
+        assert_eq!(quantize_rf(0.2), Some(8));
+        assert_eq!(quantize_rf(129.0), None);
+        prop::check(300, |g| {
+            let specials = [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 0.0, -1.0, 1e300];
+            let pick = |g: &mut prop::Gen| -> f64 {
+                if g.bool() {
+                    *g.choose(&specials)
+                } else {
+                    g.f64(-10.0..100.0)
+                }
+            };
+            let (eps, beta, w) = (pick(g), pick(g), pick(g));
+            let rf = rf_for_error_budget(eps, beta, w);
+            if !rf.is_finite() || rf < 1.0 {
+                return Err(format!("rf {rf} escaped for eps={eps} beta={beta} w={w}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn relative_cost_orders_modes_sensibly() {
+        // Long contexts make the linear path cheap; dense feature maps
+        // on short sequences cost more than exact.
+        let long = relative_cost(32, 128, 2048);
+        let short = relative_cost(32, 128, 64);
+        assert!(long < 0.1, "long-context linear cost {long} should be tiny");
+        assert!(short >= 1.0, "rf 32 at seq 64 should not undercut exact, got {short}");
+        assert!(relative_cost(8, 128, 64) < 1.0);
+        // More features always cost more; longer sequences always less.
+        prop::check(200, |g| {
+            let d = g.usize(8..512);
+            let n = g.usize(4..4096);
+            let rf = g.usize(2..128);
+            let c1 = relative_cost(rf, d, n);
+            let c2 = relative_cost(rf * 2, d, n);
+            let c3 = relative_cost(rf, d, n * 2);
+            if c2 < c1 {
+                return Err(format!("cost fell with more features: {c1} -> {c2}"));
+            }
+            if c3 > c1 {
+                return Err(format!("cost rose with longer context: {c1} -> {c3}"));
+            }
+            Ok(())
+        });
+        // Degenerate dims cost exactly 1 (no discount on no signal).
+        assert_eq!(relative_cost(0, 128, 64), 1.0);
+        assert_eq!(relative_cost(32, 0, 64), 1.0);
+        assert_eq!(relative_cost(32, 128, 0), 1.0);
+    }
+}

@@ -25,6 +25,7 @@
 
 pub mod adaptive;
 pub mod flops;
+pub mod linear;
 pub mod score;
 
 use crate::rng::{AliasTable, Pcg64};

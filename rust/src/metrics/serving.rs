@@ -107,9 +107,11 @@ pub struct ServingMetrics {
     pub brownout_exits: usize,
     /// Requests whose α was raised to their budget ceiling by brownout.
     pub degraded: usize,
-    /// Requests routed to the quantized (int8) precision rung — the
-    /// brownout ladder's last stop before shedding.
+    /// Requests routed to the quantized (int8) precision rung.
     pub quantized: usize,
+    /// Requests the admission ladder's linear rung rerouted from mca to
+    /// randomized linear attention — the last stop before shedding.
+    pub linear_rerouted: usize,
     /// Admitted ε-budget requests.
     pub budget_requests: usize,
     /// Budgets below the α-grid floor, resolved to the exact path.
@@ -134,6 +136,9 @@ pub struct ServingMetrics {
     /// Per-α-resolution counts for admitted ε-budget requests (keyed by
     /// the α actually served; exact resolutions count under α = 1.0).
     resolved_alpha: BTreeMap<u32, usize>,
+    /// Admitted requests per attention mode actually routed ("exact",
+    /// "mca", "linear") — after ε resolution and the admission ladder.
+    mode_routed: BTreeMap<String, usize>,
 }
 
 impl ServingMetrics {
@@ -171,6 +176,23 @@ impl ServingMetrics {
     /// of being shed.
     pub fn on_quantized(&mut self) {
         self.quantized += 1;
+    }
+
+    /// Record one request the ladder's linear rung rerouted from mca to
+    /// randomized linear attention instead of shedding.
+    pub fn on_linear_reroute(&mut self) {
+        self.linear_rerouted += 1;
+    }
+
+    /// Record one admitted request under the attention mode it was
+    /// actually routed to ("exact" / "mca" / "linear").
+    pub fn on_mode_routed(&mut self, mode: &str) {
+        *self.mode_routed.entry(mode.to_string()).or_default() += 1;
+    }
+
+    /// (mode, count) rows of the routing histogram, ascending by mode.
+    pub fn mode_routed_counts(&self) -> Vec<(String, usize)> {
+        self.mode_routed.iter().map(|(m, &n)| (m.clone(), n)).collect()
     }
 
     /// Record one admitted ε-budget request: `alpha` is the α it will be
@@ -431,6 +453,25 @@ mod tests {
         assert_eq!(m.canaries, 2);
         assert_eq!(m.canary_violations, 1);
         assert!((m.controller_alpha - 0.225).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mode_routing_counters_accumulate_per_mode() {
+        let mut m = ServingMetrics::new(1);
+        for _ in 0..3 {
+            m.on_mode_routed("mca");
+        }
+        m.on_mode_routed("linear");
+        m.on_mode_routed("linear");
+        m.on_mode_routed("exact");
+        m.on_linear_reroute();
+        assert_eq!(
+            m.mode_routed_counts(),
+            vec![("exact".to_string(), 1), ("linear".to_string(), 2), ("mca".to_string(), 3)]
+        );
+        assert_eq!(m.linear_rerouted, 1);
+        // a mode never routed simply has no row
+        assert!(ServingMetrics::new(1).mode_routed_counts().is_empty());
     }
 
     #[test]

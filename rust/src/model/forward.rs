@@ -42,6 +42,11 @@ pub enum AttnMode {
     Exact,
     /// Monte-Carlo value encoding (paper Eq. 5/6/9).
     Mca,
+    /// Randomized linear attention ([`crate::mca::linear`]): the
+    /// QKᵀ/softmax path itself is replaced by a seeded positive
+    /// random-feature factorization, O(n·r_f·dh) per head. Encoder-only:
+    /// causal passes and decode reject this mode.
+    Linear,
 }
 
 /// Validated, backend-native form of a [`crate::runtime::ForwardSpec`].
@@ -70,6 +75,12 @@ pub struct ForwardCfg {
     /// `score_frac < 1` combined with `causal`, because reconstructed
     /// prefix rows would break the decode-prefix equivalence contract.
     pub score_frac: f32,
+    /// Random-feature count of the linear-attention mode (the mode's
+    /// error knob, analogous to α and `score_frac`). Ignored unless
+    /// `mode == AttnMode::Linear`; [`ForwardCfg::parse`] seeds it with
+    /// [`crate::mca::linear::DEFAULT_RF_DIM`] and the runtime overrides
+    /// it from the `ForwardSpec`.
+    pub rf_dim: usize,
 }
 
 impl ForwardCfg {
@@ -83,7 +94,8 @@ impl ForwardCfg {
         let mode = match mode {
             "exact" => AttnMode::Exact,
             "mca" => AttnMode::Mca,
-            other => bail!("unknown mode {other:?} (exact|mca)"),
+            "linear" => AttnMode::Linear,
+            other => bail!("unknown mode {other:?} (exact|mca|linear)"),
         };
         let r_strategy = RStrategy::parse(r_strategy)
             .with_context(|| format!("unknown r_strategy {r_strategy:?}"))?;
@@ -95,7 +107,15 @@ impl ForwardCfg {
         let prec = Precision::parse(compute_dtype).with_context(|| {
             format!("unknown compute_dtype {compute_dtype:?} (f32|bf16|int8)")
         })?;
-        Ok(ForwardCfg { mode, r_strategy, uniform_p, prec, causal: false, score_frac: 1.0 })
+        Ok(ForwardCfg {
+            mode,
+            r_strategy,
+            uniform_p,
+            prec,
+            causal: false,
+            score_frac: 1.0,
+            rf_dim: mca::linear::DEFAULT_RF_DIM,
+        })
     }
 
     /// Whether this config takes the sampled-score path (any fraction
@@ -575,6 +595,22 @@ pub(crate) fn mca_contexts(
         .collect()
 }
 
+/// Per-(layer, head) random-feature matrices for the linear-attention
+/// mode, drawn once per batched call from the request seed (disjoint
+/// streams per layer and head, mirroring [`mca_contexts`]'s fold-in) —
+/// per-request results are deterministic in `seed` and independent of
+/// batch composition.
+pub(crate) fn linear_contexts(model: &ModelInfo, cfg: &ForwardCfg, seed: u32) -> Vec<Vec<Tensor>> {
+    let dh = model.d_model / model.n_heads;
+    (0..model.n_layers)
+        .map(|li| {
+            (0..model.n_heads)
+                .map(|hh| mca::linear::feature_matrix(cfg.rf_dim, dh, seed, li, hh))
+                .collect()
+        })
+        .collect()
+}
+
 // ---------------------------------------------------------------------------
 // Causal Eq.-9 budgets (shared by the causal prefill and decode steps)
 // ---------------------------------------------------------------------------
@@ -652,6 +688,7 @@ pub(crate) fn forward_one(
     ids: &[i32],
     alpha: f32,
     mca_ctx: Option<&[McaLayerCtx]>,
+    lin_ctx: Option<&[Vec<Tensor>]>,
     cfg: &ForwardCfg,
     threads: usize,
     mut kv_out: Option<&mut Vec<LayerKV>>,
@@ -667,6 +704,44 @@ pub(crate) fn forward_one(
     for (li, lw) in w.layers.iter().enumerate() {
         let pl = packed.map(|p| &p.layers[li]);
         let xn = layer_norm(&x, &lw.ln1_scale, &lw.ln1_bias);
+
+        // Linear mode bypasses the QKᵀ/softmax machinery entirely: each
+        // head runs the accumulate-then-normalize feature estimator
+        // ([`mca::linear`]) over the same visibility pattern, then the
+        // block rejoins the shared output-projection + FFN tail. No
+        // value rows are sampled, so r_sum stays 0 (the FLOPs side is
+        // charged analytically via `flops::reduction_factor_linear`).
+        if let (AttnMode::Linear, Some(omegas)) = (cfg.mode, lin_ctx) {
+            let q = mm_bias(&xn, wref(&lw.wq, pl.map(|p| &p.wq)), &lw.bq, cfg.prec, threads);
+            let k = mm_bias(&xn, wref(&lw.wk, pl.map(|p| &p.wk)), &lw.bk, cfg.prec, threads);
+            let mut v = mm(&xn, wref(&lw.wv, pl.map(|p| &p.wv)), cfg.prec, threads);
+            v.add_row_inplace(&lw.bv);
+            let mut ctx_m = Tensor::zeros(&[n, d]);
+            for hh in 0..h {
+                let qh = q.col_block(hh * dh, dh);
+                let kh = k.col_block(hh * dh, dh);
+                let vh = v.col_block(hh * dh, dh);
+                let ch = mca::linear::linear_attention(
+                    &qh,
+                    &kh,
+                    &vh,
+                    &omegas[li][hh],
+                    &mask,
+                    model.window,
+                );
+                ctx_m.add_col_block(hh * dh, &ch);
+            }
+            let proj =
+                mm_bias(&ctx_m, wref(&lw.wo, pl.map(|p| &p.wo)), &lw.bo, cfg.prec, threads);
+            x.add_inplace(&proj);
+            let xn2 = layer_norm(&x, &lw.ln2_scale, &lw.ln2_bias);
+            let hmid =
+                mm_bias_gelu(&xn2, wref(&lw.w1, pl.map(|p| &p.w1)), &lw.b1, cfg.prec, threads);
+            let ff = mm_bias(&hmid, wref(&lw.w2, pl.map(|p| &p.w2)), &lw.b2, cfg.prec, threads);
+            x.add_inplace(&ff);
+            continue;
+        }
+
         let (attn, _q, k) = attention_probs(
             &xn,
             lw,
@@ -821,10 +896,22 @@ pub(crate) fn forward_batch_packed(
     if cfg.samples_scores() && cfg.causal {
         bail!("score_frac {} < 1 is encoder-only: causal attention must stay exact", cfg.score_frac);
     }
+    if cfg.mode == AttnMode::Linear {
+        if cfg.causal {
+            bail!("linear attention is encoder-only: causal passes must use exact or mca");
+        }
+        if cfg.rf_dim < 2 || cfg.rf_dim > 4096 {
+            bail!("rf_dim {} out of range [2, 4096]", cfg.rf_dim);
+        }
+    }
     let w = Weights::unpack(model, params)?;
     let mca_ctx = match cfg.mode {
         AttnMode::Mca => Some(mca_contexts(&w, cfg, seed, packed.is_none())),
-        AttnMode::Exact => None,
+        AttnMode::Exact | AttnMode::Linear => None,
+    };
+    let lin_ctx = match cfg.mode {
+        AttnMode::Linear => Some(linear_contexts(model, cfg, seed)),
+        AttnMode::Exact | AttnMode::Mca => None,
     };
 
     let rows: Vec<Vec<i32>> = ids.chunks_exact(seq).map(|c| c.to_vec()).collect();
@@ -837,7 +924,7 @@ pub(crate) fn forward_batch_packed(
     let fanout = workers.max(1).min(rows.len().max(1));
     let intra = (workers.max(1) / fanout).max(1);
     let results = threadpool::parallel_map(rows, fanout, |row: &Vec<i32>| {
-        forward_one(model, &w, packed, row, alpha, mca_ctx.as_deref(), cfg, intra, None)
+        forward_one(model, &w, packed, row, alpha, mca_ctx.as_deref(), lin_ctx.as_deref(), cfg, intra, None)
     });
 
     let ncl = model.n_classes;
@@ -957,16 +1044,19 @@ pub(crate) fn decode_prefill_packed(
             cfg.score_frac
         );
     }
+    if cfg.mode == AttnMode::Linear {
+        bail!("linear attention is encoder-only: decode must use exact or mca");
+    }
     let mut cfg = cfg.clone();
     cfg.causal = true;
     let w = Weights::unpack(model, params)?;
     let ctx = match cfg.mode {
         AttnMode::Mca => Some(mca_contexts(&w, &cfg, seed, packed.is_none())),
-        AttnMode::Exact => None,
+        AttnMode::Exact | AttnMode::Linear => None,
     };
     let mut kv = Vec::with_capacity(model.n_layers);
     let (logits, r_sum, n_eff) =
-        forward_one(model, &w, packed, ids, alpha, ctx.as_deref(), &cfg, threads, Some(&mut kv));
+        forward_one(model, &w, packed, ids, alpha, ctx.as_deref(), None, &cfg, threads, Some(&mut kv));
     let out = ForwardOutput {
         logits,
         n_classes: model.n_classes,
@@ -1572,5 +1662,90 @@ mod tests {
         // precision mismatch between session and prepacked cache
         let packed = PackedWeights::build(&m, &p, Precision::Int8).unwrap();
         assert!(decode_prefill_packed(&m, &p, Some(&packed), &[1, 5], 1.0, 0, &cfg, 1).is_err());
+    }
+
+    #[test]
+    fn linear_forward_is_deterministic_and_reports_zero_rsum() {
+        let (m, p) = tiny_params(20);
+        let mut cfg = ForwardCfg::parse("linear", "max", "norm", "f32").unwrap();
+        cfg.rf_dim = 16;
+        let ids = vec![1, 5, 6, 2, 0, 0, 1, 7, 2, 0, 0, 0];
+        let a = forward_batch(&m, &p, &ids, 2, 6, 1.0, 4, &cfg, 2).unwrap();
+        assert_eq!(a.logits.len(), 6);
+        assert!(a.logits.iter().all(|x| x.is_finite()));
+        assert_eq!(a.r_sum, vec![0.0, 0.0], "linear mode samples no value rows");
+        assert_eq!(a.n_eff, vec![4.0, 3.0]);
+        // Deterministic in (seed, inputs), independent of worker count...
+        let b = forward_batch(&m, &p, &ids, 2, 6, 1.0, 4, &cfg, 1).unwrap();
+        assert_eq!(a.logits, b.logits);
+        // ...but a different seed draws different features.
+        let c = forward_batch(&m, &p, &ids, 2, 6, 1.0, 5, &cfg, 1).unwrap();
+        assert_ne!(a.logits, c.logits, "feature draw ignored the seed");
+        // The prepacked-weight route is a pure perf change here too.
+        let packed = PackedWeights::build(&m, &p, cfg.prec).unwrap();
+        let d = forward_batch_packed(&m, &p, Some(&packed), &ids, 2, 6, 1.0, 4, &cfg, 2).unwrap();
+        assert_eq!(a.logits, d.logits, "cached linear forward diverged");
+    }
+
+    #[test]
+    fn linear_tracks_exact_logits_at_saturated_feature_counts() {
+        // rf_dim far above dh: the kernel estimate concentrates, so the
+        // linear forward's logits must land near (not bit-equal to) the
+        // exact forward's — the dh-saturation envelope the contract
+        // battery pins more tightly.
+        let (m, p) = tiny_params(21);
+        let ids = vec![1, 5, 6, 7, 8, 2];
+        let exact = ForwardCfg::parse("exact", "max", "norm", "f32").unwrap();
+        let e = forward_batch(&m, &p, &ids, 1, 6, 1.0, 3, &exact, 1).unwrap();
+        let scale = e.logits.iter().map(|x| x.abs()).fold(0.0f32, f32::max).max(1.0);
+        let mut lin = ForwardCfg::parse("linear", "max", "norm", "f32").unwrap();
+        lin.rf_dim = 512;
+        let mut best = f32::INFINITY;
+        for seed in 0..4u32 {
+            let l = forward_batch(&m, &p, &ids, 1, 6, 1.0, seed, &lin, 1).unwrap();
+            let max_err = e
+                .logits
+                .iter()
+                .zip(&l.logits)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            best = best.min(max_err / scale);
+        }
+        assert!(best < 0.75, "saturated linear mode too far from exact: rel err {best}");
+    }
+
+    #[test]
+    fn linear_windowed_forward_is_finite_and_seed_stable() {
+        let mut m = tiny_model();
+        m.window = Some(1);
+        let mut rng = Pcg64::new(22);
+        let p = Params::init(&m, &mut rng);
+        let mut cfg = ForwardCfg::parse("linear", "max", "norm", "f32").unwrap();
+        cfg.rf_dim = 8;
+        let ids = vec![1, 5, 6, 7, 2, 0];
+        let a = forward_batch(&m, &p, &ids, 1, 6, 1.0, 9, &cfg, 1).unwrap();
+        let b = forward_batch(&m, &p, &ids, 1, 6, 1.0, 9, &cfg, 2).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert!(a.logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn linear_rejects_causal_decode_and_bad_feature_counts() {
+        let (m, p) = tiny_params(23);
+        let ids = vec![1, 5, 6, 7, 8, 2];
+        let base = ForwardCfg::parse("linear", "max", "norm", "f32").unwrap();
+        let mut causal = base.clone();
+        causal.causal = true;
+        assert!(forward_batch(&m, &p, &ids, 1, 6, 1.0, 0, &causal, 1).is_err());
+        assert!(decode_prefill(&m, &p, &ids, 1.0, 0, &base, 1).is_err());
+        for bad_rf in [0usize, 1, 5000] {
+            let mut cfg = base.clone();
+            cfg.rf_dim = bad_rf;
+            assert!(
+                forward_batch(&m, &p, &ids, 1, 6, 1.0, 0, &cfg, 1).is_err(),
+                "rf_dim {bad_rf} accepted"
+            );
+        }
+        assert!(ForwardCfg::parse("bogus", "max", "norm", "f32").is_err());
     }
 }

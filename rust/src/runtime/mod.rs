@@ -47,7 +47,7 @@ use crate::rng::Pcg64;
 pub struct ForwardSpec {
     /// model name (must be in the backend's inventory)
     pub model: String,
-    /// "exact" | "mca"
+    /// "exact" | "mca" | "linear"
     pub mode: String,
     /// batch bucket (rows in `ids`)
     pub batch: usize,
@@ -74,6 +74,13 @@ pub struct ForwardSpec {
     /// tests; must lie in `(0, 1]`, and fractions `< 1` are encoder-only
     /// (rejected when combined with `causal` or decode).
     pub score_frac: f32,
+    /// random-feature count of the linear-attention mode
+    /// (`crate::mca::linear`): the mode's error knob, snapped onto
+    /// `RF_GRID` by the ε→r_f resolution. `0` (the default) lets the
+    /// backend substitute `DEFAULT_RF_DIM`; ignored unless
+    /// `mode == "linear"`, which is encoder-only (rejected with `causal`
+    /// or decode).
+    pub rf_dim: u32,
 }
 
 impl ForwardSpec {
@@ -89,6 +96,7 @@ impl ForwardSpec {
             compute_dtype: "f32".to_string(),
             causal: false,
             score_frac: 1.0,
+            rf_dim: 0,
         }
     }
 }

@@ -170,6 +170,14 @@ impl Backend for NativeBackend {
         if spec.score_frac < 1.0 && spec.causal {
             bail!("score_frac {} < 1 is encoder-only (spec is causal)", spec.score_frac);
         }
+        if spec.mode == "linear" {
+            if spec.causal {
+                bail!("linear attention is encoder-only (spec is causal)");
+            }
+            if spec.rf_dim != 0 && !(2..=4096).contains(&spec.rf_dim) {
+                bail!("rf_dim {} out of range: 0 (backend default) or [2, 4096]", spec.rf_dim);
+            }
+        }
         Ok(EVAL_BATCH)
     }
 
@@ -186,6 +194,9 @@ impl Backend for NativeBackend {
             ForwardCfg::parse(&spec.mode, &spec.r_strategy, &spec.p_strategy, &spec.compute_dtype)?;
         cfg.causal = spec.causal;
         cfg.score_frac = spec.score_frac;
+        if spec.rf_dim != 0 {
+            cfg.rf_dim = spec.rf_dim as usize;
+        }
         if ids.shape() != &[spec.batch, spec.seq][..] {
             bail!(
                 "ids shape {:?} != spec batch/seq ({}, {})",
@@ -221,8 +232,8 @@ impl Backend for NativeBackend {
         let info = self.model(&spec.model)?;
         let mut cfg =
             ForwardCfg::parse(&spec.mode, &spec.r_strategy, &spec.p_strategy, &spec.compute_dtype)?;
-        // Propagated so `decode_prefill_packed` can reject fractions < 1:
-        // sampled scores are encoder-only, decode stays exact.
+        // Propagated so `decode_prefill_packed` can reject fractions < 1 and
+        // linear mode: both are encoder-only, decode stays exact/mca.
         cfg.score_frac = spec.score_frac;
         let workers = self.workers;
         let prec = cfg.prec;
@@ -366,6 +377,20 @@ mod tests {
         spec.causal = true;
         spec.score_frac = 0.5;
         assert!(be.max_batch(&spec).is_err());
+        // linear mode: causal rejected, feature counts outside 0 ∪ [2, 4096]
+        let mut spec = ForwardSpec::new("bert_sim", "linear", 1, 8);
+        spec.causal = true;
+        assert!(be.max_batch(&spec).is_err());
+        for bad in [1u32, 4097] {
+            let mut spec = ForwardSpec::new("bert_sim", "linear", 1, 8);
+            spec.rf_dim = bad;
+            assert!(be.max_batch(&spec).is_err(), "rf_dim {bad} accepted");
+        }
+        for ok in [0u32, 2, 32, 4096] {
+            let mut spec = ForwardSpec::new("bert_sim", "linear", 1, 8);
+            spec.rf_dim = ok;
+            assert!(be.max_batch(&spec).is_ok(), "rf_dim {ok} rejected");
+        }
         // shape mismatch caught before compute
         let info = be.model("bert_sim").unwrap();
         let mut rng = Pcg64::new(1);

@@ -133,6 +133,11 @@ impl Runtime {
                 spec.score_frac
             );
         }
+        if spec.mode == "linear" {
+            bail!(
+                "the PJRT artifact inventory has no randomized linear-attention forwards — use the native backend"
+            );
+        }
         self.manifest
             .artifacts
             .values()

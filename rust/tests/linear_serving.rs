@@ -1,0 +1,206 @@
+//! Integration tests for per-request approximation routing: a seeded
+//! mixed-ε workload must come back with both mca and linear admissions
+//! (each request on the cheapest feasible path for its budget), tail
+//! budgets must never ride the linear path (its a-priori bound is a mean
+//! bound), and the admission ladder's linear rung must reroute — not
+//! shed — an over-cap MCA arrival while still delivering exactly one
+//! response per request. The pure cost-optimality property of
+//! `route_budget` is pinned by unit tests in `coordinator`; these tests
+//! drive the full submit → resolve → admit → batch → forward → response
+//! path on the native backend.
+
+mod common;
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use mca::coordinator::{Server, ServerConfig};
+use mca::runtime::{BackendSpec, ModelStats};
+use mca::tensor::Precision;
+
+/// Fresh random checkpoint plus the Theorem-2 statistics the serving
+/// workers will recompute from it — the test uses β·‖W‖_F to place its
+/// ε budgets in known routing regions.
+fn make_checkpoint(backend: &BackendSpec, model: &str, tag: &str) -> (PathBuf, ModelStats) {
+    common::make_checkpoint(backend, model, tag)
+}
+
+fn config(model: &str, ckpt: PathBuf, max_wait_ms: u64, workers: usize) -> ServerConfig {
+    ServerConfig {
+        model: model.into(),
+        checkpoint: ckpt,
+        max_wait: Duration::from_millis(max_wait_ms),
+        seq: 32,
+        workers,
+        queue_cap: 4096,
+        ..ServerConfig::default()
+    }
+}
+
+fn mode_count(stats: &[(String, usize)], mode: &str) -> usize {
+    stats.iter().find(|(m, _)| m == mode).map(|&(_, c)| c).unwrap_or(0)
+}
+
+#[test]
+fn mixed_epsilon_workload_routes_both_mca_and_linear() {
+    // ε budgets are placed relative to the model's own bound scale
+    // u = ε / (β·‖W‖_F). At seq 32 / d_model 128 the linear rf=8 row
+    // costs (128+32)/(128+64) = 5/6, so the routing regions are:
+    //   u = 4.0  → mca α=1.0 (cost 0.25, far below 5/6)
+    //   u = 0.45 → linear rf=8 (mca would need α ≤ 0.4 → cost 1.0)
+    //   u = 0.01 → exact (α below the grid floor, rf above the ceiling)
+    // and u = 0.45 with a tail δ must stay off the linear path: its
+    // a-priori bound is a mean bound with no (1−δ) sharpening.
+    let backend = BackendSpec::Native;
+    let (ckpt, stats) = make_checkpoint(&backend, "distil_sim", "native_route");
+    let scale = stats.beta * stats.w_frob;
+    let server =
+        Server::start(backend, config("distil_sim", ckpt, 3, 2)).expect("server start");
+
+    #[derive(Clone, Copy, PartialEq, Debug)]
+    enum Expect {
+        Mca,
+        Linear,
+        Exact,
+        NotLinear, // tail budget: mca or exact, never linear
+    }
+    let plan: [(f64, Option<f64>, Expect, usize); 4] = [
+        (4.0, None, Expect::Mca, 12),
+        (0.45, None, Expect::Linear, 12),
+        (0.01, None, Expect::Exact, 6),
+        (0.45, Some(0.1), Expect::NotLinear, 6),
+    ];
+
+    // Interleave the four budget classes so mixed traffic shares the
+    // queue — the batcher must still keep (mode, knob) homogeneous.
+    let sub = server.submitter();
+    let mut rxs = Vec::new();
+    let mut remaining: Vec<(f64, Option<f64>, Expect, usize)> = plan.to_vec();
+    let mut spun = true;
+    while spun {
+        spun = false;
+        for entry in remaining.iter_mut() {
+            if entry.3 == 0 {
+                continue;
+            }
+            entry.3 -= 1;
+            spun = true;
+            let eps = entry.0 * scale;
+            rxs.push((entry.2, sub.submit_budget("n0 v1 n2 v3 a4", eps, entry.1)));
+        }
+    }
+    let total: usize = plan.iter().map(|p| p.3).sum();
+    assert_eq!(rxs.len(), total);
+
+    let mut ids = std::collections::HashSet::new();
+    let mut linear_served = 0usize;
+    for (expect, rx) in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        assert!(!r.shed, "nothing sheds below a 4096 cap");
+        assert!(ids.insert(r.id), "duplicate response id {}", r.id);
+        assert!(r.budget, "every request in this workload is an ε budget");
+        match expect {
+            Expect::Mca => assert_eq!(r.mode, "mca", "loose budget stays on the mca path"),
+            Expect::Linear => {
+                assert_eq!(r.mode, "linear", "mid budget must route linear at seq 32");
+                assert_eq!(r.rf_dim, 8, "u=0.45 inverts to rf 4.9, snapped up to grid 8");
+                assert_eq!(r.alpha, 1.0, "α does not apply on the linear path");
+                assert_eq!(r.score_frac, 1.0, "no QKᵀ scores to sample on the linear path");
+                assert_eq!(r.r_sum, 0.0, "no per-token sample budgets on the linear path");
+                linear_served += 1;
+            }
+            Expect::Exact => {
+                assert_eq!(r.mode, "exact", "infeasible budget falls back to exact");
+                assert_eq!(r.flops_reduction, 1.0);
+            }
+            Expect::NotLinear => assert_ne!(
+                r.mode, "linear",
+                "tail budgets must never route linear (mean bound only)"
+            ),
+        }
+        if r.mode != "linear" {
+            assert_eq!(r.rf_dim, 0, "feature count echoes 0 off the linear path");
+        }
+        assert!(r.pred_class >= 0 && r.pred_class < 3);
+        assert!(r.batch_size >= 1);
+    }
+    assert_eq!(ids.len(), total);
+    assert_eq!(linear_served, 12);
+
+    let stats = server.stats().expect("stats");
+    assert_eq!(stats.served, total);
+    assert_eq!(stats.shed, 0);
+    // The per-mode routing counters agree with the responses: both
+    // approximation paths demonstrably served traffic from one workload.
+    assert_eq!(mode_count(&stats.mode_routed, "linear"), 12);
+    assert!(
+        mode_count(&stats.mode_routed, "mca") >= 12,
+        "loose budgets route mca: {:?}",
+        stats.mode_routed
+    );
+    assert!(
+        mode_count(&stats.mode_routed, "exact") >= 6,
+        "tight budgets route exact: {:?}",
+        stats.mode_routed
+    );
+    let routed: usize = stats.mode_routed.iter().map(|&(_, c)| c).sum();
+    assert_eq!(routed, total, "every admitted request is counted exactly once");
+    assert_eq!(stats.linear_rerouted, 0, "no ladder pressure in this test");
+    assert_eq!(stats.budget_requests, total);
+    server.shutdown().expect("shutdown");
+}
+
+#[test]
+fn ladder_linear_rung_reroutes_over_cap_mca_with_exactly_one_response() {
+    // Admission arithmetic at seq 32 / d_model 128 with queue cap 1:
+    //   r1: mca α=1.0 f32 → cost 0.25          (admitted outright)
+    //   r2: mca α=0.9 f32 → cost ≈ 0.3086       (admitted, total ≈ 0.5586)
+    //   r3: mca α=0.4 f32 → cost 1.0, over cap:
+    //       int8 rung halves it to 0.5 → still over (≈ 1.0586);
+    //       linear rung: ε = 0.4·β·‖W‖ inverts to rf 6.25 → grid 8,
+    //       cost (5/6)·0.5 ≈ 0.4167 < 0.5 → reroute fires, total ≈ 0.975
+    //       → admitted as a linear int8 serve instead of shedding.
+    let backend = BackendSpec::Native;
+    let (ckpt, _) = make_checkpoint(&backend, "distil_sim", "native_lrung");
+    let mut cfg = config("distil_sim", ckpt, 2, 2);
+    cfg.queue_cap = 1;
+    cfg.brownout_watermark = 100; // ladder enabled; depth never triggers
+    let server = Server::start(backend, cfg).expect("server start");
+    server.pause();
+    let sub = server.submitter();
+    let r1 = sub.submit("n0 v1", 1.0, "mca");
+    let r2 = sub.submit("n0 v1", 0.9, "mca");
+    let r3 = sub.submit("n0 v1", 0.4, "mca");
+    server.resume();
+
+    let a = r1.recv_timeout(Duration::from_secs(120)).expect("response");
+    let b = r2.recv_timeout(Duration::from_secs(120)).expect("response");
+    let c = r3.recv_timeout(Duration::from_secs(120)).expect("response");
+    assert!(!a.shed && a.mode == "mca");
+    assert!(!b.shed && b.mode == "mca");
+    assert!(!c.shed, "the linear rung must admit what int8 alone could not");
+    assert_eq!(c.mode, "linear", "over-cap mca rerouted to randomized linear attention");
+    assert_eq!(c.rf_dim, 8, "α=0.4 inverts to rf 6.25, snapped up to grid 8");
+    assert_eq!(c.precision, Precision::Int8, "the int8 rung fired first");
+    assert!(c.quantized, "the reroute keeps the quantized-rung flag");
+    assert_eq!(c.score_frac, 1.0);
+
+    // Exactly one response per request, reroutes included: the channels
+    // must be empty (and eventually disconnected) after the first recv.
+    for rx in [r1, r2, r3] {
+        assert!(
+            rx.recv_timeout(Duration::from_millis(200)).is_err(),
+            "a request must never receive a second response"
+        );
+    }
+
+    let stats = server.stats().expect("stats");
+    assert_eq!(stats.served, 3);
+    assert_eq!(stats.shed, 0);
+    assert_eq!(stats.linear_rerouted, 1, "the linear rung fired exactly once");
+    assert_eq!(stats.quantized, 1, "the rerouted serve still counts as quantized");
+    assert_eq!(stats.brownout_entries, 1, "one reducible over-cap arrival");
+    assert_eq!(mode_count(&stats.mode_routed, "mca"), 2);
+    assert_eq!(mode_count(&stats.mode_routed, "linear"), 1);
+    server.shutdown().expect("shutdown");
+}

@@ -22,6 +22,12 @@ Behavior:
   (see TOLERANCES): latency-like metrics fail when the fresh value is
   too far *above* baseline, throughput/quality-like metrics when too far
   *below*. Unlisted metrics are informational and never gate.
+* Eval entries key on (..., attn_mode, rf_dim) so exact / mca / linear
+  rows of one sweep ratchet independently; legacy baselines without the
+  fields normalize by knob kind ("exact" knob -> attn_mode "exact",
+  everything else -> "mca", rf_dim 0).
+* The serving artifact's per-mode routing counters (server.routed_*,
+  server.linear_rerouted) are reported on every run but never gate.
 * --update rewrites every baseline from the fresh files (the documented
   refresh procedure after an intentional perf change).
 * --self-test runs the built-in unit test (no files needed): identical
@@ -72,6 +78,15 @@ TOLERANCES = {
     "flops_reduction": ("down", 0.25),
 }
 
+# Per-mode routing counters from the serving run's top-level "server"
+# block: how many admitted requests the dispatcher routed down each
+# attention mode, plus the admission ladder's linear-rung reroutes.
+# These are workload-shape dependent, so they report informationally and
+# never gate — but their movement is always printed, because a silent
+# swing here (e.g. the router abandoning the linear path entirely) is
+# the first symptom of a cost-model regression.
+ROUTING_COUNTERS = ("routed_exact", "routed_mca", "routed_linear", "linear_rerouted")
+
 
 def entry_key(bench_kind, entry, ordinal):
     """Stable identity of one entry within its artifact."""
@@ -88,6 +103,13 @@ def entry_key(bench_kind, entry, ordinal):
         # their entries keep matching fresh rows. Keying per seq length
         # makes the accuracy and FLOPs-factor ratchets apply to every
         # sequence-length row of the long-seq sweep independently.
+        # attn_mode and rf_dim joined the identity with the randomized
+        # linear-attention backend: rows of different modes must never
+        # compare against each other (a knob silently migrating between
+        # modes shows up as a disappeared entry, not a masked diff).
+        # Legacy baselines predate the fields and normalize by knob kind:
+        # the exact knob was always the exact path, every other knob was
+        # the mca path, and no legacy row ran with random features.
         return (
             entry.get("model"),
             entry.get("task"),
@@ -97,6 +119,8 @@ def entry_key(bench_kind, entry, ordinal):
             entry.get("precision", "f32"),
             entry.get("score_frac", 1.0),
             entry.get("seq", 64),
+            entry.get("attn_mode", "exact" if entry.get("knob") == "exact" else "mca"),
+            entry.get("rf_dim", 0),
         )
     return (ordinal,)
 
@@ -140,12 +164,30 @@ def compare_entry(key, base, fresh, rows):
     return regressions
 
 
+def report_routing(base_doc, fresh_doc, report):
+    """Append informational rows for the serving run's per-mode routing
+    counters (top-level "server" block). Never contributes regressions:
+    the counters track workload shape, not performance — the gate's job
+    here is visibility, not a ratchet."""
+    base_server = base_doc.get("server")
+    fresh_server = fresh_doc.get("server")
+    if not isinstance(base_server, dict) or not isinstance(fresh_server, dict):
+        return
+    for counter in ROUTING_COUNTERS:
+        if counter not in base_server and counter not in fresh_server:
+            continue
+        b = base_server.get(counter, "—")
+        f = fresh_server.get(counter, "—")
+        report.append(f"  server.{counter:<17} {b} -> {f}  (info, never gates)")
+
+
 def gate_file(fresh_path, baseline_dir, update, report):
     """Gate one artifact; returns the number of regressions."""
     name = os.path.basename(fresh_path)
     base_path = os.path.join(baseline_dir, name)
     with open(fresh_path) as f:
-        fresh_kind, fresh = load_entries(json.load(f))
+        fresh_doc = json.load(f)
+    fresh_kind, fresh = load_entries(fresh_doc)
 
     if update or not os.path.exists(base_path):
         os.makedirs(baseline_dir, exist_ok=True)
@@ -156,7 +198,8 @@ def gate_file(fresh_path, baseline_dir, update, report):
 
     try:
         with open(base_path) as f:
-            base_kind, base = load_entries(json.load(f))
+            base_doc = json.load(f)
+        base_kind, base = load_entries(base_doc)
     except (ValueError, json.JSONDecodeError) as e:
         # A baseline that exists but is empty/unparseable must fail loudly:
         # silently reseeding it would disarm the gate on every later run.
@@ -179,6 +222,8 @@ def gate_file(fresh_path, baseline_dir, update, report):
     added = [k for k in fresh if k not in base]
 
     report.append(f"{name}: {len(base)} baseline entries, {len(added)} new (informational)")
+    if fresh_kind == "serving":
+        report_routing(base_doc, fresh_doc, report)
     width = max((len(str(k)) for k, *_ in rows), default=10)
     for key, metric, b, f, delta, verdict in rows:
         if b is None:
@@ -459,6 +504,122 @@ def self_test():
         "migrated row reported as a disappeared entry",
     )
 
+    # attention-mode keying: (attn_mode, rf_dim) are part of the eval
+    # entry identity, so a row silently migrating between modes (same
+    # knob fields, different attn_mode) must NOT compare as the same
+    # entry — the baseline row surfaces as disappeared instead of its
+    # accuracy diff being masked by a mode swap
+    mbase = {
+        "bench": "eval",
+        "entries": [
+            {
+                "model": "distil_sim",
+                "task": "sst2_sim",
+                "knob": "epsilon",
+                "epsilon": 2.0,
+                "attn_mode": "mca",
+                "rf_dim": 0,
+                "accuracy": 0.90,
+                "flops_reduction": 3.0,
+            }
+        ],
+    }
+    migrated_mode = copy.deepcopy(mbase)
+    migrated_mode["entries"][0].update(attn_mode="linear", rf_dim=32, accuracy=0.55)
+    n, report = run_eval(migrated_mode, mbase)
+    check(n >= 1, "mode migration silently compared as the same entry")
+    check(
+        any("missing from fresh" in line for line in report),
+        "mode migration not reported as a disappeared entry",
+    )
+
+    # linear-mode rows gate independently: an accuracy drop on the
+    # rf-knob (attn_mode "linear") row is caught even with the mca row
+    # of the same sweep untouched — and identical mixed-mode rows pass
+    linbase = {
+        "bench": "eval",
+        "entries": [
+            {
+                "model": "distil_sim",
+                "task": "sst2_sim",
+                "knob": "alpha",
+                "alpha": 0.3,
+                "attn_mode": "mca",
+                "rf_dim": 0,
+                "accuracy": 0.90,
+                "flops_reduction": 3.2,
+            },
+            {
+                "model": "distil_sim",
+                "task": "sst2_sim",
+                "knob": "rf",
+                "attn_mode": "linear",
+                "rf_dim": 32,
+                "accuracy": 0.87,
+                "flops_reduction": 2.4,
+            },
+        ],
+    }
+    n, _ = run_eval(copy.deepcopy(linbase), linbase)
+    check(n == 0, f"identical mixed-mode eval rows flagged ({n} regressions)")
+    lindrop = copy.deepcopy(linbase)
+    lindrop["entries"][1]["accuracy"] = 0.60
+    n, _ = run_eval(lindrop, linbase)
+    check(n >= 1, "linear-mode accuracy drop not caught")
+
+    # legacy normalization: a pre-routing baseline row (no attn_mode /
+    # rf_dim) still matches a fresh row carrying the new fields — the
+    # exact knob normalizes to attn_mode "exact", every other knob to
+    # "mca", rf_dim to 0
+    legacy = {
+        "bench": "eval",
+        "entries": [
+            {
+                "model": "distil_sim",
+                "task": "sst2_sim",
+                "knob": "alpha",
+                "alpha": 0.3,
+                "accuracy": 0.90,
+                "flops_reduction": 3.2,
+            },
+            {
+                "model": "distil_sim",
+                "task": "sst2_sim",
+                "knob": "exact",
+                "accuracy": 0.92,
+                "flops_reduction": 1.0,
+            },
+        ],
+    }
+    modern = copy.deepcopy(legacy)
+    modern["entries"][0].update(attn_mode="mca", rf_dim=0)
+    modern["entries"][1].update(attn_mode="exact", rf_dim=0)
+    n, report = run_eval(modern, legacy)
+    check(n == 0, f"legacy attn_mode normalization broke matching ({n} regressions)")
+    check(
+        not any("missing from fresh" in line for line in report),
+        "legacy rows reported as disappeared entries",
+    )
+
+    # per-mode routing counters (the serving artifact's "server" block)
+    # report informationally and never gate, even on a collapse-shaped
+    # swing — but the movement must land in the report
+    rbase = copy.deepcopy(dbase)
+    rbase["server"] = {
+        "routed_exact": 10,
+        "routed_mca": 80,
+        "routed_linear": 11,
+        "linear_rerouted": 6,
+    }
+    rfresh = copy.deepcopy(rbase)
+    rfresh["server"].update(routed_mca=30, routed_linear=61, linear_rerouted=0)
+    n, report = run_serving(rfresh, rbase)
+    check(n == 0, f"routing counters must never gate ({n} regressions)")
+    check(
+        any("routed_linear" in line for line in report),
+        "routing-counter movement not reported",
+    )
+
     # seeding: a missing baseline is copied and passes
     with tempfile.TemporaryDirectory() as d:
         bdir = os.path.join(d, "baselines")
@@ -494,7 +655,7 @@ def self_test():
         for f in failures:
             print(f"  - {f}")
         return 1
-    print("bench_gate self-test ok (18 scenarios)")
+    print("bench_gate self-test ok (23 scenarios)")
     return 0
 
 
